@@ -1,0 +1,127 @@
+//! Multi-right-hand-side power iteration via fused SpMM-SpMM — the
+//! paper's scientific-computing motivation (§1: "sparse iterative linear
+//! solvers with multiple right-hand side", block methods [1, 22]).
+//!
+//! Each iteration applies Â twice to a block of vectors: `X ← Â (Â X)`,
+//! i.e. exactly the SpMM-SpMM pair (Listing 3), then re-orthonormalizes.
+//! Converges to the dominant invariant subspace of Â; the residual curve
+//! proves numerical health, the timing compares fused vs unfused.
+//!
+//! ```bash
+//! cargo run --release --offline --example spmm_chain_solver [grid] [rhs]
+//! ```
+
+use std::time::Instant;
+use tile_fusion::gnn::ops::matmul_at_b;
+use tile_fusion::prelude::*;
+
+/// Gram–Schmidt re-orthonormalization of the columns of X (in place).
+fn orthonormalize(x: &mut Dense<f64>) {
+    let (n, k) = (x.rows, x.cols);
+    for j in 0..k {
+        for prev in 0..j {
+            let mut dot = 0.0;
+            for i in 0..n {
+                dot += x.get(i, j) * x.get(i, prev);
+            }
+            for i in 0..n {
+                let v = x.get(i, j) - dot * x.get(i, prev);
+                x.set(i, j, v);
+            }
+        }
+        let mut norm = 0.0;
+        for i in 0..n {
+            norm += x.get(i, j) * x.get(i, j);
+        }
+        let norm = norm.sqrt().max(1e-300);
+        for i in 0..n {
+            let v = x.get(i, j) / norm;
+            x.set(i, j, v);
+        }
+    }
+}
+
+/// ‖Â²X − XΛ‖F with Λ the Rayleigh quotients — subspace residual.
+fn residual(a2x: &Dense<f64>, x: &Dense<f64>) -> f64 {
+    let k = x.cols;
+    let mut lambda = Dense::<f64>::zeros(k, k);
+    matmul_at_b(x, a2x, &mut lambda);
+    let mut res = 0.0;
+    for i in 0..x.rows {
+        for j in 0..k {
+            let mut pred = 0.0;
+            for l in 0..k {
+                pred += x.get(i, l) * lambda.get(l, j);
+            }
+            let d = a2x.get(i, j) - pred;
+            res += d * d;
+        }
+    }
+    res.sqrt()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let grid: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(96);
+    let rhs: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(32);
+    let iters = 30usize;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // SPD-style operator: symmetric-normalized 5-point Laplacian graph.
+    let a = gen::gcn_normalize::<f64>(&gen::poisson2d(grid, grid));
+    let n = a.rows();
+    println!("== block power iteration: Â from poisson2d({grid}x{grid}), n={n}, {rhs} RHS ==");
+
+    let params = SchedulerParams { n_cores: threads, ..Default::default() };
+    let plan = Scheduler::new(params).schedule_sparse(&a.pattern, &a.pattern, rhs);
+    println!(
+        "schedule: fused ratio {:.3}, tiles {:?}",
+        plan.stats.fused_ratio, plan.stats.n_tiles
+    );
+
+    let pool = ThreadPool::new(threads);
+    let op = PairOp::spmm_spmm(&a, &a);
+    let mut fused = Fused::new(op, &plan);
+    let mut unfused = Unfused::new(op);
+
+    // --- fused solve ----------------------------------------------------
+    let mut x = Dense::<f64>::randn(n, rhs, 42);
+    orthonormalize(&mut x);
+    let mut y = Dense::<f64>::zeros(n, rhs);
+    let t0 = Instant::now();
+    let mut final_res = f64::INFINITY;
+    for it in 0..iters {
+        fused.run(&pool, &x, &mut y); // y = Â(ÂX)
+        final_res = residual(&y, &x);
+        std::mem::swap(&mut x, &mut y);
+        orthonormalize(&mut x);
+        if it % 5 == 0 || it + 1 == iters {
+            println!("iter {it:>3}: subspace residual {final_res:.3e}");
+        }
+    }
+    let fused_time = t0.elapsed();
+
+    // --- unfused solve (same math) ---------------------------------------
+    let mut xu = Dense::<f64>::randn(n, rhs, 42);
+    orthonormalize(&mut xu);
+    let mut yu = Dense::<f64>::zeros(n, rhs);
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        unfused.run(&pool, &xu, &mut yu);
+        std::mem::swap(&mut xu, &mut yu);
+        orthonormalize(&mut xu);
+    }
+    let unfused_time = t1.elapsed();
+
+    let x_diff = x.max_abs_diff(&xu);
+    println!(
+        "fused {iters} iters: {:.3} s | unfused: {:.3} s | speedup {:.2}x | basis diff {:.1e}",
+        fused_time.as_secs_f64(),
+        unfused_time.as_secs_f64(),
+        unfused_time.as_secs_f64() / fused_time.as_secs_f64(),
+        x_diff
+    );
+    assert!(x_diff < 1e-8, "fused and unfused solves diverged");
+    assert!(final_res.is_finite());
+    println!("OK");
+}

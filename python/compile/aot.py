@@ -1,0 +1,89 @@
+"""AOT lowering: JAX → HLO **text** artifacts the Rust runtime loads.
+
+HLO text, NOT ``lowered.compile().serialize()``: the image's
+xla_extension 0.5.1 rejects jax ≥ 0.5 protos with 64-bit instruction ids;
+the text parser reassigns ids and round-trips cleanly (DESIGN.md §9,
+/opt/xla-example/README.md).
+
+Artifacts (all shapes fixed at lowering):
+
+- ``gcn_layer.hlo.txt`` — one fused GCN layer (relu(Â (X W))).
+- ``gcn2.hlo.txt``      — two-layer GCN forward (logits).
+- ``meta.txt``          — the shape/config header the Rust side asserts
+  against (n, tm, k_slots, feat, hidden, classes).
+
+Run via ``make artifacts`` (no-op when inputs are newer than outputs).
+Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.ell import dense_to_blocked_ell, min_k_slots
+from .model import gcn2, gcn_layer_tuple, gcn_normalize, poisson2d_adjacency
+
+# Artifact configuration — mirrored by rust (examples/xla_gcn.rs asserts
+# against meta.txt).
+NX, NY = 64, 32          # poisson grid -> n = 2048 nodes
+TM = 16                  # row-block size
+FEAT, HIDDEN, CLASSES = 32, 32, 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    n = NX * NY
+    a_hat = gcn_normalize(poisson2d_adjacency(NX, NY))
+    k_slots = min_k_slots(a_hat, TM)
+    idx, vals = dense_to_blocked_ell(a_hat, TM, k_slots)
+    nb = n // TM
+
+    spec = jax.ShapeDtypeStruct
+    idx_s = spec((nb, k_slots), np.int32)
+    vals_s = spec((nb, k_slots, TM, TM), np.float32)
+    x_s = spec((n, FEAT), np.float32)
+    w1_s = spec((FEAT, HIDDEN), np.float32)
+    w2_s = spec((HIDDEN, CLASSES), np.float32)
+
+    outputs = {
+        "gcn_layer.hlo.txt": jax.jit(gcn_layer_tuple).lower(idx_s, vals_s, x_s, w1_s),
+        "gcn2.hlo.txt": jax.jit(gcn2).lower(idx_s, vals_s, x_s, w1_s, w2_s),
+    }
+    for name, lowered in outputs.items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = os.path.join(out_dir, "meta.txt")
+    with open(meta, "w") as f:
+        f.write(
+            f"nx={NX}\nny={NY}\nn={n}\ntm={TM}\nk_slots={k_slots}\n"
+            f"feat={FEAT}\nhidden={HIDDEN}\nclasses={CLASSES}\n"
+        )
+    print(f"wrote {meta} (k_slots={k_slots})")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = parser.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

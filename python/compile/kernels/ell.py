@@ -1,0 +1,76 @@
+"""Blocked-ELL format: the TPU-friendly sparse layout of the L1 kernel.
+
+The paper's fused tile keeps a bounded working set in fast memory. On a
+TPU the fast memory is VMEM and its footprint must be *static*, so `A`
+is stored as row-blocks of ``tm`` rows, each holding exactly ``k_slots``
+dense ``tm x tm`` column blocks (zero-padded). The Rust runtime performs
+the same conversion (``rust/src/sparse/ell.rs``); both sides order a
+row-block's column blocks ascending so artifacts are interchangeable.
+
+See DESIGN.md §Hardware-Adaptation for the full mapping.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class EllOverflow(ValueError):
+    """A row-block touches more distinct column blocks than k_slots."""
+
+
+def dense_to_blocked_ell(a: np.ndarray, tm: int, k_slots: int):
+    """Convert a dense (n, n) matrix to blocked-ELL.
+
+    Returns (idx, vals) with shapes (nb, k_slots) int32 and
+    (nb, k_slots, tm, tm) float32, where nb = n // tm. Unused slots have
+    idx 0 and all-zero vals (a zero block contributes nothing).
+    """
+    n, m = a.shape
+    if n != m:
+        raise ValueError(f"square matrices only, got {a.shape}")
+    if n % tm != 0:
+        raise ValueError(f"n={n} not divisible by tm={tm}")
+    nb = n // tm
+    idx = np.zeros((nb, k_slots), dtype=np.int32)
+    vals = np.zeros((nb, k_slots, tm, tm), dtype=np.float32)
+    for ib in range(nb):
+        rows = a[ib * tm : (ib + 1) * tm]
+        nz_cols = np.nonzero(rows.any(axis=0))[0]
+        blocks = np.unique(nz_cols // tm)
+        if len(blocks) > k_slots:
+            raise EllOverflow(
+                f"row-block {ib} touches {len(blocks)} column blocks > k_slots={k_slots}"
+            )
+        for s, jb in enumerate(sorted(int(b) for b in blocks)):
+            idx[ib, s] = jb
+            vals[ib, s] = rows[:, jb * tm : (jb + 1) * tm]
+    return idx, vals
+
+
+def blocked_ell_to_dense(idx: np.ndarray, vals: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`dense_to_blocked_ell` (for testing)."""
+    nb, k_slots = idx.shape
+    tm = vals.shape[2]
+    n = nb * tm
+    out = np.zeros((n, n), dtype=vals.dtype)
+    for ib in range(nb):
+        for s in range(k_slots):
+            jb = int(idx[ib, s])
+            blk = vals[ib, s]
+            if not blk.any():
+                continue
+            out[ib * tm : (ib + 1) * tm, jb * tm : (jb + 1) * tm] += blk
+    return out
+
+
+def min_k_slots(a: np.ndarray, tm: int) -> int:
+    """Smallest k_slots that fits `a` (helper for artifact sizing)."""
+    n = a.shape[0]
+    nb = n // tm
+    best = 1
+    for ib in range(nb):
+        rows = a[ib * tm : (ib + 1) * tm]
+        nz_cols = np.nonzero(rows.any(axis=0))[0]
+        best = max(best, len(np.unique(nz_cols // tm)))
+    return best

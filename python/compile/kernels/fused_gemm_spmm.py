@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: the paper's fused tile as a TPU kernel.
+
+CPU→TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper fuses a
+producer GeMM tile with the SpMM rows that consume it so the intermediate
+``D1`` stays in cache. On TPU there is no cross-grid-step synchronization
+inside a kernel, so the sparse-tiling/atomics option is unavailable; the
+right trade is the *communication-avoiding* one, bounded by the
+blocked-ELL budget: each grid step owns one ``tm``-row block of ``D``
+and, for each of its ``k_slots`` column blocks, (re)computes the needed
+``D1`` block **in VMEM** with an MXU matmul (`B_blk @ C`) and immediately
+consumes it (`A_blk @ D1_blk`). ``D1`` never exists in HBM — the fusion
+payoff — and all matmuls are dense ``tm×*`` MXU shapes instead of the
+per-nonzero GeMVs tensor compilers emit (§1).
+
+VMEM budget per grid step (f32): ``A`` slots ``k·tm²``, ``B`` (full,
+pinned) ``n·bcol``, ``C`` (pinned) ``bcol·ccol``, accumulator ``tm·ccol``
+— sized in `vmem_bytes` and asserted ≤ 16 MiB at trace time.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* from the footprint and
+MXU shapes in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+VMEM_LIMIT_BYTES = 16 * 1024 * 1024
+
+
+def vmem_bytes(n: int, tm: int, k_slots: int, bcol: int, ccol: int, elem: int = 4) -> int:
+    """Static per-grid-step VMEM footprint of the fused kernel."""
+    a_blk = k_slots * tm * tm * elem
+    b_full = n * bcol * elem
+    c_full = bcol * ccol * elem
+    acc = tm * ccol * elem
+    d1_blk = tm * ccol * elem
+    return a_blk + b_full + c_full + acc + d1_blk
+
+
+def _kernel(idx_ref, vals_ref, b_ref, c_ref, o_ref, *, tm: int, k_slots: int):
+    """One fused tile: D[ib] = Σ_s vals[ib,s] @ (B[idx[ib,s]] @ C)."""
+    ccol = o_ref.shape[-1]
+    acc = jnp.zeros((tm, ccol), dtype=o_ref.dtype)
+    for s in range(k_slots):  # static unroll: k_slots is a compile-time budget
+        jb = idx_ref[0, s]
+        # Producer (GeMM) block, computed where it is consumed: B_blk @ C.
+        b_blk = b_ref[pl.dslice(jb * tm, tm), :]
+        d1_blk = jnp.dot(b_blk, c_ref[...], preferred_element_type=o_ref.dtype)
+        # Consumer (SpMM as dense block matmul on the MXU).
+        acc = acc + jnp.dot(vals_ref[0, s], d1_blk, preferred_element_type=o_ref.dtype)
+    o_ref[...] = acc
+
+
+def fused_gemm_spmm(idx, vals, b, c, *, interpret: bool = True):
+    """D = A (B C) with A in blocked-ELL (idx (nb,K) i32, vals
+    (nb,K,tm,tm)); B (n,bcol), C (bcol,ccol) dense."""
+    nb, k_slots = idx.shape
+    tm = vals.shape[2]
+    n, bcol = b.shape
+    ccol = c.shape[1]
+    assert vals.shape == (nb, k_slots, tm, tm), vals.shape
+    assert c.shape[0] == bcol
+    assert nb * tm == n, f"A row-blocks ({nb}x{tm}) must cover B rows ({n})"
+    footprint = vmem_bytes(n, tm, k_slots, bcol, ccol)
+    assert footprint <= VMEM_LIMIT_BYTES, f"VMEM budget exceeded: {footprint}"
+
+    kernel = functools.partial(_kernel, tm=tm, k_slots=k_slots)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, k_slots), lambda i: (i, 0)),            # idx row
+            pl.BlockSpec((1, k_slots, tm, tm), lambda i: (i, 0, 0, 0)),  # A blocks
+            pl.BlockSpec((n, bcol), lambda i: (0, 0)),               # B pinned
+            pl.BlockSpec((bcol, ccol), lambda i: (0, 0)),            # C pinned
+        ],
+        out_specs=pl.BlockSpec((tm, ccol), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ccol), c.dtype),
+        interpret=interpret,
+    )(idx, vals, b, c)

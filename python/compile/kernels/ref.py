@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Everything here is straight-line jax.numpy with no Pallas, no tiling and
+no cleverness: the pytest suite asserts the kernels match these within
+dtype tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_spmm_ref(a_dense, b, c):
+    """D = A (B C) with dense everything — the ground-truth pair."""
+    return a_dense @ (b @ c)
+
+
+def blocked_ell_matmul_ref(idx, vals, x):
+    """y = A @ x with A in blocked-ELL form (idx: (nb, K), vals:
+    (nb, K, tm, tm)), evaluated block-by-block."""
+    nb, k_slots = idx.shape
+    tm = vals.shape[2]
+    outs = []
+    for ib in range(nb):
+        acc = jnp.zeros((tm, x.shape[1]), x.dtype)
+        for s in range(k_slots):
+            jb = idx[ib, s]
+            xb = jax.lax.dynamic_slice(x, (jb * tm, 0), (tm, x.shape[1]))
+            acc = acc + vals[ib, s] @ xb
+        outs.append(acc)
+    return jnp.concatenate(outs, axis=0)
+
+
+def fused_gemm_spmm_ref(idx, vals, b, c):
+    """D = A (B C) with A in blocked-ELL — the fused-kernel oracle."""
+    d1 = b @ c
+    return blocked_ell_matmul_ref(idx, vals, d1)
+
+
+def gcn_layer_ref(idx, vals, x, w, relu=True):
+    """One GCN layer: σ(Â (X W))."""
+    z = fused_gemm_spmm_ref(idx, vals, x, w)
+    return jnp.maximum(z, 0.0) if relu else z
+
+
+def gcn2_ref(idx, vals, x, w1, w2):
+    """Two-layer GCN forward (logits)."""
+    h = gcn_layer_ref(idx, vals, x, w1, relu=True)
+    return gcn_layer_ref(idx, vals, h, w2, relu=False)

@@ -1,0 +1,68 @@
+"""L2: the JAX model — GCN forward built on the L1 fused kernel.
+
+The paper's motivating application (§1): a GCN layer is exactly
+``D = Â (H W)`` — GeMM then SpMM. Each layer calls the Pallas fused
+kernel so the pair lowers into a single HLO module with no HBM-visible
+``D1``. Build-time only; the Rust runtime executes the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.fused_gemm_spmm import fused_gemm_spmm
+
+
+def gcn_layer(idx, vals, x, w, *, relu: bool = True, interpret: bool = True):
+    """One GCN layer σ(Â (X W)) via the fused Pallas kernel."""
+    z = fused_gemm_spmm(idx, vals, x, w, interpret=interpret)
+    return jnp.maximum(z, 0.0) if relu else z
+
+
+def gcn2(idx, vals, x, w1, w2, *, interpret: bool = True):
+    """Two-layer GCN forward returning logits (the AOT artifact).
+
+    Lowered once by aot.py with fixed shapes; returns a 1-tuple so the
+    HLO root is a tuple (the xla-crate loader unwraps tuples).
+    """
+    h = gcn_layer(idx, vals, x, w1, relu=True, interpret=interpret)
+    logits = gcn_layer(idx, vals, h, w2, relu=False, interpret=interpret)
+    return (logits,)
+
+
+def gcn_layer_tuple(idx, vals, x, w, *, interpret: bool = True):
+    """Single-layer artifact entry point (1-tuple output)."""
+    return (gcn_layer(idx, vals, x, w, relu=True, interpret=interpret),)
+
+
+# ---------------------------------------------------------------------------
+# Build-time graph construction (numpy; mirrors rust/src/sparse/gen.rs)
+# ---------------------------------------------------------------------------
+
+
+def poisson2d_adjacency(nx: int, ny: int) -> np.ndarray:
+    """Dense 5-point-stencil *adjacency* (pattern of gen::poisson2d),
+    including the diagonal — the artifact-sized demo graph."""
+    n = nx * ny
+    a = np.zeros((n, n), dtype=np.float32)
+    for y in range(ny):
+        for x in range(nx):
+            i = y * nx + x
+            a[i, i] = 1.0
+            if x > 0:
+                a[i, i - 1] = 1.0
+            if x + 1 < nx:
+                a[i, i + 1] = 1.0
+            if y > 0:
+                a[i, i - nx] = 1.0
+            if y + 1 < ny:
+                a[i, i + nx] = 1.0
+    return a
+
+
+def gcn_normalize(a: np.ndarray) -> np.ndarray:
+    """Â = D^{-1/2} A D^{-1/2} (A already includes self-loops)."""
+    deg = a.sum(axis=1)
+    dinv = 1.0 / np.sqrt(np.maximum(deg, 1e-12))
+    return (a * dinv[:, None]) * dinv[None, :]

@@ -1,0 +1,128 @@
+"""L1 kernel correctness: Pallas fused kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/densities; fixed cases pin the artifact config.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ell import (
+    EllOverflow,
+    blocked_ell_to_dense,
+    dense_to_blocked_ell,
+    min_k_slots,
+)
+from compile.kernels.fused_gemm_spmm import fused_gemm_spmm, vmem_bytes
+from compile.kernels.ref import fused_gemm_spmm_ref, gemm_spmm_ref
+
+
+def random_sparse(n: int, density: float, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, n)).astype(np.float32)
+    mask = rng.random((n, n)) < density
+    np.fill_diagonal(mask, True)  # keep the GCN-style diagonal
+    return (a * mask).astype(np.float32)
+
+
+class TestEll:
+    def test_roundtrip_identity(self):
+        a = np.eye(32, dtype=np.float32)
+        idx, vals = dense_to_blocked_ell(a, 8, 2)
+        assert np.allclose(blocked_ell_to_dense(idx, vals), a)
+
+    def test_roundtrip_random(self):
+        a = random_sparse(64, 0.1, 0)
+        k = min_k_slots(a, 16)
+        idx, vals = dense_to_blocked_ell(a, 16, k)
+        assert np.allclose(blocked_ell_to_dense(idx, vals), a)
+
+    def test_overflow_raises(self):
+        a = np.ones((32, 32), dtype=np.float32)  # every block populated
+        with pytest.raises(EllOverflow):
+            dense_to_blocked_ell(a, 8, 2)
+
+    def test_slots_sorted_ascending(self):
+        a = random_sparse(64, 0.2, 1)
+        k = min_k_slots(a, 16)
+        idx, vals = dense_to_blocked_ell(a, 16, k + 2)
+        for ib in range(idx.shape[0]):
+            used = [idx[ib, s] for s in range(idx.shape[1]) if vals[ib, s].any()]
+            assert used == sorted(used)
+
+    @given(
+        n=st.sampled_from([16, 32, 48]),
+        tm=st.sampled_from([4, 8, 16]),
+        density=st.floats(0.02, 0.4),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_roundtrip_property(self, n, tm, density, seed):
+        if n % tm:
+            return
+        a = random_sparse(n, density, seed)
+        k = min_k_slots(a, tm)
+        idx, vals = dense_to_blocked_ell(a, tm, k)
+        assert np.allclose(blocked_ell_to_dense(idx, vals), a)
+
+
+class TestFusedKernel:
+    def check(self, n, tm, density, bcol, ccol, seed, rtol=2e-4):
+        a = random_sparse(n, density, seed)
+        k = min_k_slots(a, tm)
+        idx, vals = dense_to_blocked_ell(a, tm, k)
+        rng = np.random.default_rng(seed + 1)
+        b = rng.normal(size=(n, bcol)).astype(np.float32)
+        c = rng.normal(size=(bcol, ccol)).astype(np.float32)
+        got = np.asarray(fused_gemm_spmm(idx, vals, b, c))
+        ref = np.asarray(fused_gemm_spmm_ref(idx, vals, b, c))
+        dense = np.asarray(gemm_spmm_ref(a, b, c))
+        np.testing.assert_allclose(got, ref, rtol=rtol, atol=1e-4)
+        np.testing.assert_allclose(got, dense, rtol=rtol, atol=1e-4)
+
+    def test_small_dense_block(self):
+        self.check(n=16, tm=4, density=0.5, bcol=8, ccol=8, seed=0)
+
+    def test_artifact_like_shape(self):
+        self.check(n=128, tm=16, density=0.05, bcol=32, ccol=16, seed=1)
+
+    def test_rectangular_bc(self):
+        self.check(n=32, tm=8, density=0.2, bcol=24, ccol=40, seed=2)
+
+    def test_single_block(self):
+        self.check(n=8, tm=8, density=0.9, bcol=4, ccol=4, seed=3)
+
+    @given(
+        nb=st.integers(1, 6),
+        tm=st.sampled_from([4, 8]),
+        bcol=st.sampled_from([4, 8, 16, 32]),
+        ccol=st.sampled_from([4, 8, 16, 32]),
+        density=st.floats(0.05, 0.5),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_matches_oracle_property(self, nb, tm, bcol, ccol, density, seed):
+        self.check(n=nb * tm, tm=tm, density=density, bcol=bcol, ccol=ccol, seed=seed)
+
+    def test_zero_matrix_gives_zero(self):
+        n, tm = 16, 4
+        idx = np.zeros((4, 1), dtype=np.int32)
+        vals = np.zeros((4, 1, tm, tm), dtype=np.float32)
+        b = np.ones((n, 8), dtype=np.float32)
+        c = np.ones((8, 8), dtype=np.float32)
+        out = np.asarray(fused_gemm_spmm(idx, vals, b, c))
+        assert np.all(out == 0.0)
+
+    def test_vmem_budget_enforced(self):
+        with pytest.raises(AssertionError, match="VMEM"):
+            # Absurd size: B alone exceeds the 16 MiB budget.
+            n, tm = 1 << 16, 16
+            idx = np.zeros((n // tm, 1), dtype=np.int32)
+            vals = np.zeros((n // tm, 1, tm, tm), dtype=np.float32)
+            b = np.zeros((n, 128), dtype=np.float32)
+            c = np.zeros((128, 128), dtype=np.float32)
+            fused_gemm_spmm(idx, vals, b, c)
+
+    def test_vmem_accounting(self):
+        # The artifact configuration must fit the 16 MiB VMEM budget.
+        assert vmem_bytes(n=2048, tm=16, k_slots=10, bcol=32, ccol=32) < 16 * 1024 * 1024

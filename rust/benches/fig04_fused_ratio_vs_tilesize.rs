@@ -1,0 +1,59 @@
+//! Figure 4: fused ratio (Eq. 2) versus coarse tile size, averaged over
+//! the suite — the heuristic justification for ctSize = 2048.
+//!
+//! Expected shape: monotone increase with a knee; improvements slow
+//! beyond ~2048 while larger tiles erode the tile count per wavefront
+//! (load balance), matching §3.1.1.
+
+use tile_fusion::harness::{print_table, write_csv, BenchEnv};
+use tile_fusion::prelude::*;
+use tile_fusion::profiling::mean;
+use tile_fusion::sparse::gen::suite;
+
+fn main() {
+    let env = BenchEnv::from_env();
+    let tile_sizes = [16usize, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192];
+    let matrices = suite(env.scale);
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut prev = 0.0;
+    for &ct in &tile_sizes {
+        let params = SchedulerParams {
+            ct_size: ct,
+            n_cores: env.threads,
+            cache_bytes: usize::MAX, // isolate step 1, like the figure
+            ..Default::default()
+        };
+        let sched = Scheduler::new(params);
+        let ratios: Vec<f64> = matrices
+            .iter()
+            .map(|m| sched.schedule(&m.pattern, 32, 32).stats.fused_ratio)
+            .collect();
+        let avg = mean(&ratios);
+        let min_tiles = matrices
+            .iter()
+            .map(|m| {
+                let p = sched.schedule(&m.pattern, 32, 32);
+                p.wavefronts[0].len()
+            })
+            .min()
+            .unwrap_or(0);
+        rows.push(vec![
+            ct.to_string(),
+            format!("{avg:.4}"),
+            format!("{:+.4}", avg - prev),
+            min_tiles.to_string(),
+        ]);
+        csv.push(format!("{ct},{avg:.5},{min_tiles}"));
+        prev = avg;
+    }
+
+    print_table(
+        "Figure 4 — fused ratio vs coarse tile size",
+        &["ctSize", "avg fused ratio", "delta", "min wf0 tiles"],
+        &rows,
+    );
+    println!("expected: deltas shrink past ctSize≈2048 while tile count keeps falling");
+    write_csv("fig04_fused_ratio_vs_tilesize", "ct_size,avg_fused_ratio,min_wf0_tiles", &csv);
+}

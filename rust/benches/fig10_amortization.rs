@@ -1,0 +1,76 @@
+//! Figure 10: number of fused-code executions needed to amortize the
+//! scheduler — `scheduler_time / (baseline_time − fused_time)`.
+//!
+//! Paper: under 100 runs for most matrices (GNN training runs the pair
+//! hundreds to thousands of times). Negative values mean fusion did not
+//! beat the baseline on that matrix (no amortization possible).
+
+use tile_fusion::exec::{PairExec, PairOp, ThreadPool, Unfused};
+use tile_fusion::harness::{print_table, time_strategy, write_csv, BenchEnv, Strat};
+use tile_fusion::prelude::*;
+use tile_fusion::profiling::measure;
+use tile_fusion::sparse::gen::suite;
+
+fn main() {
+    let env = BenchEnv::from_env();
+    let bcol = 32;
+    let pool = ThreadPool::new(env.threads);
+    let params = SchedulerParams { n_cores: env.threads, elem_bytes: 4, ..Default::default() };
+
+    let mut table = Vec::new();
+    let mut csv = Vec::new();
+    let mut amortized_under_100 = 0usize;
+    let mut positive = 0usize;
+    let mut total = 0usize;
+    for m in suite(env.scale) {
+        let name = m.name;
+        let a = Csr::<f32>::with_random_values(m.pattern, 1, -1.0, 1.0);
+        let b = Dense::<f32>::randn(a.cols(), bcol, 2);
+        let c = Dense::<f32>::randn(bcol, bcol, 3);
+        let op = PairOp::gemm_spmm(&a, &b);
+
+        // Median scheduler time (the inspector runs once per pattern).
+        let sched = Scheduler::new(params);
+        let fop = op.fusion_op(&c);
+        let t_sched = measure(1, env.reps, || {
+            std::hint::black_box(sched.schedule_op(&fop));
+        });
+
+        let mut d = Dense::zeros(a.rows(), bcol);
+        let mut unf = Unfused::new(op);
+        let t_base = measure(1, env.reps, || unf.run(&pool, &c, &mut d));
+        let t_fused = time_strategy(Strat::Fused, &op, &pool, &c, env.reps);
+
+        let gain = t_base.as_secs_f64() - t_fused.as_secs_f64();
+        let runs = if gain > 0.0 { t_sched.as_secs_f64() / gain } else { f64::NAN };
+        total += 1;
+        if gain > 0.0 {
+            positive += 1;
+            if runs <= 100.0 {
+                amortized_under_100 += 1;
+            }
+        }
+        table.push(vec![
+            name.to_string(),
+            format!("{:.3}", t_sched.as_secs_f64() * 1e3),
+            format!("{:.3}", t_base.as_secs_f64() * 1e3),
+            format!("{:.3}", t_fused.as_secs_f64() * 1e3),
+            if runs.is_nan() { "n/a".into() } else { format!("{runs:.1}") },
+        ]);
+        csv.push(format!(
+            "{name},{:.6},{:.6},{:.6},{runs:.2}",
+            t_sched.as_secs_f64(),
+            t_base.as_secs_f64(),
+            t_fused.as_secs_f64()
+        ));
+    }
+    print_table(
+        "Figure 10 — runs to amortize the scheduler (bcol=32, SP)",
+        &["matrix", "scheduler (ms)", "unfused (ms)", "fused (ms)", "runs to amortize"],
+        &table,
+    );
+    println!(
+        "amortized within 100 runs on {amortized_under_100}/{positive} fusion-winning matrices ({total} total; paper: <100 runs)"
+    );
+    write_csv("fig10_amortization", "matrix,t_scheduler,t_unfused,t_fused,runs_to_amortize", &csv);
+}

@@ -1,0 +1,126 @@
+//! Schedule cache: one inspection per (sparsity pattern, operand shape).
+
+use crate::scheduler::{FusedSchedule, FusionOp, Scheduler, SchedulerParams};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Cache key: everything the schedule depends on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ScheduleKey {
+    /// `Pattern::structure_hash` of `A`.
+    pub a_hash: u64,
+    /// `Pattern::structure_hash` of sparse `B`, or `bcol` for dense `B`.
+    pub b_key: u64,
+    /// True when `B` is sparse (SpMM-SpMM).
+    pub b_sparse: bool,
+    pub ccol: usize,
+    /// Element width in bytes (the cost model depends on it).
+    pub elem_bytes: usize,
+}
+
+impl ScheduleKey {
+    pub fn for_op(op: &FusionOp, elem_bytes: usize) -> Self {
+        let (b_key, b_sparse) = match op.b {
+            crate::scheduler::BSide::Dense { bcol } => (bcol as u64, false),
+            crate::scheduler::BSide::Sparse(bp) => (bp.structure_hash(), true),
+        };
+        Self { a_hash: op.a.structure_hash(), b_key, b_sparse, ccol: op.ccol, elem_bytes }
+    }
+}
+
+/// Pattern-keyed cache of built schedules.
+pub struct ScheduleCache {
+    params: SchedulerParams,
+    map: HashMap<ScheduleKey, Arc<FusedSchedule>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ScheduleCache {
+    pub fn new(params: SchedulerParams) -> Self {
+        Self { params, map: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    pub fn params(&self) -> SchedulerParams {
+        self.params
+    }
+
+    /// Return the cached schedule for `op`, building it on first sight.
+    pub fn get_or_build(&mut self, op: &FusionOp) -> Arc<FusedSchedule> {
+        let mut params = self.params;
+        params.elem_bytes = params.elem_bytes.max(1);
+        let key = ScheduleKey::for_op(op, params.elem_bytes);
+        if let Some(plan) = self.map.get(&key) {
+            self.hits += 1;
+            return Arc::clone(plan);
+        }
+        self.misses += 1;
+        let plan = Arc::new(Scheduler::new(params).schedule_op(op));
+        self.map.insert(key, Arc::clone(&plan));
+        plan
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Drop every cached schedule (e.g. after a repattern).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::BSide;
+    use crate::sparse::gen;
+
+    #[test]
+    fn second_lookup_hits() {
+        let a = gen::poisson2d(16, 16);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 32 }, ccol: 32 };
+        let mut cache = ScheduleCache::new(SchedulerParams::default());
+        let p1 = cache.get_or_build(&op);
+        let p2 = cache.get_or_build(&op);
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+        assert!(Arc::ptr_eq(&p1, &p2));
+    }
+
+    #[test]
+    fn different_shape_is_different_entry() {
+        let a = gen::poisson2d(16, 16);
+        let mut cache = ScheduleCache::new(SchedulerParams::default());
+        cache.get_or_build(&FusionOp { a: &a, b: BSide::Dense { bcol: 32 }, ccol: 32 });
+        cache.get_or_build(&FusionOp { a: &a, b: BSide::Dense { bcol: 64 }, ccol: 32 });
+        cache.get_or_build(&FusionOp { a: &a, b: BSide::Dense { bcol: 32 }, ccol: 64 });
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.misses, 3);
+    }
+
+    #[test]
+    fn same_pattern_different_object_hits() {
+        let a1 = gen::banded(128, &[1, 3]);
+        let a2 = gen::banded(128, &[1, 3]); // identical structure, new alloc
+        let mut cache = ScheduleCache::new(SchedulerParams::default());
+        cache.get_or_build(&FusionOp { a: &a1, b: BSide::Dense { bcol: 8 }, ccol: 8 });
+        cache.get_or_build(&FusionOp { a: &a2, b: BSide::Dense { bcol: 8 }, ccol: 8 });
+        assert_eq!(cache.hits, 1);
+    }
+
+    #[test]
+    fn sparse_b_keyed_by_structure() {
+        let a = gen::banded(64, &[1]);
+        let mut cache = ScheduleCache::new(SchedulerParams::default());
+        cache.get_or_build(&FusionOp { a: &a, b: BSide::Sparse(&a), ccol: 16 });
+        cache.get_or_build(&FusionOp { a: &a, b: BSide::Dense { bcol: 64 }, ccol: 16 });
+        assert_eq!(cache.len(), 2, "sparse and dense B must not collide");
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+}

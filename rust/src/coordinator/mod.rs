@@ -1,0 +1,19 @@
+//! Coordinator — the service layer that makes tile fusion deployable.
+//!
+//! The paper's scheduler pays off because "the created schedule will be
+//! computed once based on [the] sparsity [pattern] and reused for the
+//! rest of the computation" (§3) — GNN training calls the same pair
+//! hundreds of times (Fig. 10). The coordinator operationalizes that:
+//!
+//! - a [`ScheduleCache`] keyed by `(pattern hash, B kind, bcol, ccol,
+//!   precision)` so repeated requests amortize inspection;
+//! - a matrix registry (named sparse operands);
+//! - request execution with per-request strategy selection and batching
+//!   of multi-`C` requests over one schedule;
+//! - [`Metrics`] for ops/latency/cache behaviour.
+
+pub mod cache;
+pub mod service;
+
+pub use cache::{ScheduleCache, ScheduleKey};
+pub use service::{Coordinator, Metrics, PairKind, Request, Response, Strategy};

@@ -1,0 +1,340 @@
+//! Request-level service: named operands, strategy selection, batching,
+//! metrics. This is the long-running process a GNN trainer or iterative
+//! solver talks to; the hot path is pure Rust (Python only ever ran at
+//! artifact-build time).
+
+use super::cache::ScheduleCache;
+use crate::core::{Dense, Scalar};
+use crate::exec::{
+    AtomicTiling, Fused, Overlapped, PairExec, PairOp, TensorStyle, ThreadPool, Unfused,
+};
+use crate::scheduler::SchedulerParams;
+use crate::sparse::Csr;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Which executor answers a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    TileFusion,
+    Unfused,
+    AtomicTiling,
+    OverlappedTiling,
+    TensorStyle,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::TileFusion => "tile_fusion",
+            Strategy::Unfused => "unfused",
+            Strategy::AtomicTiling => "atomic_tiling",
+            Strategy::OverlappedTiling => "overlapped_tiling",
+            Strategy::TensorStyle => "tensor_compiler",
+        }
+    }
+}
+
+/// Operation pair kind of a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairKind {
+    GemmSpmm,
+    SpmmSpmm,
+}
+
+/// One request: `D = A (B C_r)` for each `C_r` in the batch.
+pub struct Request<T> {
+    /// Registered name of `A`.
+    pub a: String,
+    /// Dense `B` (GeMM-SpMM) — or name of sparse `B` (SpMM-SpMM).
+    pub b_dense: Option<Dense<T>>,
+    pub b_sparse: Option<String>,
+    /// Batched right-hand sides (≥ 1); one schedule serves all.
+    pub cs: Vec<Dense<T>>,
+    pub strategy: Strategy,
+}
+
+/// Response: outputs plus timing.
+#[derive(Debug)]
+pub struct Response<T> {
+    pub ds: Vec<Dense<T>>,
+    pub elapsed: Duration,
+    pub strategy: Strategy,
+}
+
+/// Rolling service metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub matrices_registered: u64,
+    pub total_exec: Duration,
+    pub total_schedule_builds: u64,
+    pub schedule_cache_hits: u64,
+}
+
+/// The coordinator service.
+pub struct Coordinator<T> {
+    pool: ThreadPool,
+    cache: ScheduleCache,
+    matrices: HashMap<String, Arc<Csr<T>>>,
+    metrics: Metrics,
+}
+
+impl<T: Scalar> Coordinator<T> {
+    pub fn new(n_threads: usize, mut params: SchedulerParams) -> Self {
+        params.n_cores = n_threads.max(1);
+        params.elem_bytes = T::BYTES;
+        Self {
+            pool: ThreadPool::new(n_threads),
+            cache: ScheduleCache::new(params),
+            matrices: HashMap::new(),
+            metrics: Metrics::default(),
+        }
+    }
+
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// Register (or replace) a named sparse operand.
+    pub fn register_matrix(&mut self, name: impl Into<String>, a: Csr<T>) {
+        self.metrics.matrices_registered += 1;
+        self.matrices.insert(name.into(), Arc::new(a));
+    }
+
+    pub fn matrix(&self, name: &str) -> Option<&Arc<Csr<T>>> {
+        self.matrices.get(name)
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Execute one request (all batched `C`s through one schedule).
+    pub fn submit(&mut self, req: &Request<T>) -> Result<Response<T>> {
+        let a = Arc::clone(
+            self.matrices.get(&req.a).ok_or_else(|| anyhow!("unknown matrix {:?}", req.a))?,
+        );
+        if req.cs.is_empty() {
+            bail!("empty batch");
+        }
+        let b_sparse = match &req.b_sparse {
+            Some(name) => Some(Arc::clone(
+                self.matrices.get(name).ok_or_else(|| anyhow!("unknown matrix {name:?}"))?,
+            )),
+            None => None,
+        };
+        let op = match (&req.b_dense, &b_sparse) {
+            (Some(b), None) => PairOp::gemm_spmm(&a, b),
+            (None, Some(b)) => PairOp::spmm_spmm(&a, b),
+            _ => bail!("exactly one of b_dense / b_sparse must be set"),
+        };
+        let ccol = op.layout.ccol(&req.cs[0]);
+        for c in &req.cs {
+            if op.layout.ccol(c) != ccol {
+                bail!("batched C shapes must agree");
+            }
+        }
+
+        let t0 = Instant::now();
+        let mut ds: Vec<Dense<T>> =
+            req.cs.iter().map(|_| Dense::zeros(op.n_second(), ccol)).collect();
+
+        match req.strategy {
+            Strategy::TileFusion => {
+                let fusion_op = op.fusion_op(&req.cs[0]);
+                let hits0 = self.cache.hits;
+                let plan = self.cache.get_or_build(&fusion_op);
+                if self.cache.hits == hits0 {
+                    self.metrics.total_schedule_builds += 1;
+                } else {
+                    self.metrics.schedule_cache_hits += 1;
+                }
+                let mut ex = Fused::new(op, &plan);
+                for (c, d) in req.cs.iter().zip(&mut ds) {
+                    ex.run(&self.pool, c, d);
+                }
+            }
+            Strategy::Unfused => {
+                let mut ex = Unfused::new(op);
+                for (c, d) in req.cs.iter().zip(&mut ds) {
+                    ex.run(&self.pool, c, d);
+                }
+            }
+            Strategy::AtomicTiling => {
+                let mut ex = AtomicTiling::new(op, self.pool.n_threads() * 4);
+                for (c, d) in req.cs.iter().zip(&mut ds) {
+                    ex.run(&self.pool, c, d);
+                }
+            }
+            Strategy::OverlappedTiling => {
+                let mut ex =
+                    Overlapped::new(op, self.pool.n_threads() * 4, self.pool.n_threads());
+                for (c, d) in req.cs.iter().zip(&mut ds) {
+                    ex.run(&self.pool, c, d);
+                }
+            }
+            Strategy::TensorStyle => {
+                let mut ex = TensorStyle::new(op, self.pool.n_threads());
+                for (c, d) in req.cs.iter().zip(&mut ds) {
+                    ex.run(&self.pool, c, d);
+                }
+            }
+        }
+
+        let elapsed = t0.elapsed();
+        self.metrics.requests += 1;
+        self.metrics.total_exec += elapsed;
+        Ok(Response { ds, elapsed, strategy: req.strategy })
+    }
+
+    /// Cache state (entries, hits, misses) for observability.
+    pub fn cache_stats(&self) -> (usize, u64, u64) {
+        (self.cache.len(), self.cache.hits, self.cache.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::reference::reference;
+    use crate::sparse::gen;
+
+    fn coord() -> Coordinator<f64> {
+        Coordinator::new(2, SchedulerParams { ct_size: 64, ..Default::default() })
+    }
+
+    fn register_demo(c: &mut Coordinator<f64>) -> Csr<f64> {
+        let a = Csr::<f64>::with_random_values(gen::poisson2d(16, 16), 1, -1.0, 1.0);
+        c.register_matrix("A", a.clone());
+        a
+    }
+
+    #[test]
+    fn gemm_spmm_request_round_trip() {
+        let mut coord = coord();
+        let a = register_demo(&mut coord);
+        let b = Dense::<f64>::randn(256, 16, 2);
+        let c = Dense::<f64>::randn(16, 8, 3);
+        let expect = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        let resp = coord
+            .submit(&Request {
+                a: "A".into(),
+                b_dense: Some(b),
+                b_sparse: None,
+                cs: vec![c],
+                strategy: Strategy::TileFusion,
+            })
+            .unwrap();
+        assert_eq!(resp.ds.len(), 1);
+        assert!(resp.ds[0].max_abs_diff(&expect) < 1e-10);
+    }
+
+    #[test]
+    fn schedule_reused_across_requests() {
+        let mut coord = coord();
+        register_demo(&mut coord);
+        for i in 0..5 {
+            let b = Dense::<f64>::randn(256, 16, i);
+            let c = Dense::<f64>::randn(16, 8, i + 10);
+            coord
+                .submit(&Request {
+                    a: "A".into(),
+                    b_dense: Some(b),
+                    b_sparse: None,
+                    cs: vec![c],
+                    strategy: Strategy::TileFusion,
+                })
+                .unwrap();
+        }
+        let (entries, hits, misses) = coord.cache_stats();
+        assert_eq!(entries, 1);
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 4);
+    }
+
+    #[test]
+    fn batched_cs_one_schedule() {
+        let mut coord = coord();
+        let a = register_demo(&mut coord);
+        let b = Dense::<f64>::randn(256, 8, 5);
+        let cs: Vec<_> = (0..4).map(|i| Dense::<f64>::randn(8, 4, i)).collect();
+        let expects: Vec<_> =
+            cs.iter().map(|c| reference(&PairOp::gemm_spmm(&a, &b), c)).collect();
+        let resp = coord
+            .submit(&Request {
+                a: "A".into(),
+                b_dense: Some(b),
+                b_sparse: None,
+                cs,
+                strategy: Strategy::TileFusion,
+            })
+            .unwrap();
+        for (d, e) in resp.ds.iter().zip(&expects) {
+            assert!(d.max_abs_diff(e) < 1e-10);
+        }
+        assert_eq!(coord.cache_stats().0, 1);
+    }
+
+    #[test]
+    fn spmm_spmm_via_names() {
+        let mut coord = coord();
+        let a = register_demo(&mut coord);
+        let c = Dense::<f64>::randn(256, 8, 7);
+        let expect = reference(&PairOp::spmm_spmm(&a, &a), &c);
+        let resp = coord
+            .submit(&Request {
+                a: "A".into(),
+                b_dense: None,
+                b_sparse: Some("A".into()),
+                cs: vec![c],
+                strategy: Strategy::TileFusion,
+            })
+            .unwrap();
+        assert!(resp.ds[0].max_abs_diff(&expect) < 1e-10);
+    }
+
+    #[test]
+    fn all_strategies_agree() {
+        let mut coord = coord();
+        let a = register_demo(&mut coord);
+        let b = Dense::<f64>::randn(256, 8, 9);
+        let c = Dense::<f64>::randn(8, 4, 10);
+        let expect = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        for strat in [
+            Strategy::TileFusion,
+            Strategy::Unfused,
+            Strategy::AtomicTiling,
+            Strategy::OverlappedTiling,
+            Strategy::TensorStyle,
+        ] {
+            let resp = coord
+                .submit(&Request {
+                    a: "A".into(),
+                    b_dense: Some(b.clone()),
+                    b_sparse: None,
+                    cs: vec![c.clone()],
+                    strategy: strat,
+                })
+                .unwrap();
+            assert!(resp.ds[0].max_abs_diff(&expect) < 1e-10, "{}", strat.name());
+        }
+    }
+
+    #[test]
+    fn unknown_matrix_errors() {
+        let mut coord = coord();
+        let err = coord
+            .submit(&Request {
+                a: "missing".into(),
+                b_dense: Some(Dense::<f64>::zeros(1, 1)),
+                b_sparse: None,
+                cs: vec![Dense::<f64>::zeros(1, 1)],
+                strategy: Strategy::Unfused,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown matrix"));
+    }
+}

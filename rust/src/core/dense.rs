@@ -1,0 +1,157 @@
+//! Row-major dense matrix. Backs `B`, `C`, the intermediate `D1 = BC`
+//! and the output `D = A·D1` in every executor.
+
+use super::Scalar;
+use crate::testing::rng::XorShift64;
+
+/// Row-major dense matrix with contiguous storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense<T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Scalar> Dense<T> {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![T::ZERO; rows * cols] }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, v: T) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Deterministic pseudo-normal entries (sum of 4 uniforms, centered).
+    /// Used by benches and tests; reproducible across runs via `seed`.
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = XorShift64::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+        let data = (0..rows * cols)
+            .map(|_| {
+                let s: f64 = (0..4).map(|_| rng.next_f64()).sum::<f64>() - 2.0;
+                T::from_f64(s)
+            })
+            .collect();
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Reset to zero without reallocating (hot-loop friendly).
+    pub fn fill_zero(&mut self) {
+        self.data.iter_mut().for_each(|v| *v = T::ZERO);
+    }
+
+    /// Max |a - b| over all entries; panics on shape mismatch.
+    pub fn max_abs_diff(&self, other: &Self) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a.to_f64() - b.to_f64()).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Relative Frobenius-norm difference ‖a−b‖F / max(‖b‖F, 1).
+    pub fn rel_fro_diff(&self, other: &Self) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "shape mismatch");
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = a.to_f64() - b.to_f64();
+            num += d * d;
+            den += b.to_f64() * b.to_f64();
+        }
+        num.sqrt() / den.sqrt().max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_fill() {
+        let mut m = Dense::<f32>::zeros(3, 4);
+        assert_eq!(m.data.len(), 12);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        m.fill_zero();
+        assert!(m.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn randn_is_deterministic() {
+        let a = Dense::<f64>::randn(5, 5, 42);
+        let b = Dense::<f64>::randn(5, 5, 42);
+        let c = Dense::<f64>::randn(5, 5, 43);
+        assert_eq!(a, b);
+        assert!(a.max_abs_diff(&c) > 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Dense::<f64>::randn(4, 7, 3);
+        let t = a.transpose();
+        assert_eq!((t.rows, t.cols), (7, 4));
+        assert_eq!(a, t.transpose());
+        assert_eq!(a.get(2, 5), t.get(5, 2));
+    }
+
+    #[test]
+    fn row_accessors() {
+        let m = Dense::<f32>::from_fn(3, 2, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.row(1), &[10.0, 11.0]);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Dense::<f64>::full(2, 2, 1.0);
+        let mut b = a.clone();
+        b.set(0, 0, 1.5);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-12);
+        assert!(a.rel_fro_diff(&a) == 0.0);
+    }
+}

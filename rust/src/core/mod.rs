@@ -1,0 +1,9 @@
+//! Core numeric types: the [`Scalar`] trait abstracting f32/f64 (the
+//! paper's single/double precision axis) and the row-major [`Dense`]
+//! matrix used for `B`, `C`, `D1` and `D`.
+
+mod dense;
+mod scalar;
+
+pub use dense::Dense;
+pub use scalar::Scalar;

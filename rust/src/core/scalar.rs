@@ -1,0 +1,209 @@
+//! Floating-point scalar abstraction.
+//!
+//! The paper evaluates every experiment for single precision (machine
+//! learning) and double precision (scientific computing); all kernels,
+//! executors and the cost model are generic over [`Scalar`] so each bench
+//! sweeps both. `atomic_add` backs the *atomic tiling* baseline (sparse
+//! tiling resolves cross-tile races on `D` with atomics).
+
+use std::fmt::{Debug, Display};
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// A real scalar (f32 or f64) usable from all executors.
+pub trait Scalar:
+    Copy
+    + Default
+    + Debug
+    + Display
+    + PartialOrd
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Size in bytes; feeds the cache-capacity side of the cost model.
+    const BYTES: usize;
+    /// Short name used in bench table rows ("sp" / "dp").
+    const PRECISION: &'static str;
+
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn max(self, other: Self) -> Self;
+
+    /// Atomically `*ptr += v` via compare-exchange on the bit pattern.
+    ///
+    /// # Safety
+    /// `ptr` must be valid, properly aligned, and only accessed atomically
+    /// (or by this function) for the duration of the parallel region.
+    unsafe fn atomic_add(ptr: *mut Self, v: Self);
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const BYTES: usize = 4;
+    const PRECISION: &'static str = "sp";
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline(always)]
+    fn exp(self) -> Self {
+        f32::exp(self)
+    }
+    #[inline(always)]
+    fn ln(self) -> Self {
+        f32::ln(self)
+    }
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+
+    #[inline]
+    unsafe fn atomic_add(ptr: *mut Self, v: Self) {
+        let atom = &*(ptr as *const AtomicU32);
+        let mut cur = atom.load(Ordering::Relaxed);
+        loop {
+            let next = (f32::from_bits(cur) + v).to_bits();
+            match atom.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const BYTES: usize = 8;
+    const PRECISION: &'static str = "dp";
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline(always)]
+    fn exp(self) -> Self {
+        f64::exp(self)
+    }
+    #[inline(always)]
+    fn ln(self) -> Self {
+        f64::ln(self)
+    }
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+
+    #[inline]
+    unsafe fn atomic_add(ptr: *mut Self, v: Self) {
+        let atom = &*(ptr as *const AtomicU64);
+        let mut cur = atom.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match atom.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        assert_eq!(f32::from_f64(1.5).to_f64(), 1.5);
+        assert_eq!(f32::BYTES, 4);
+        assert_eq!(f32::PRECISION, "sp");
+    }
+
+    #[test]
+    fn roundtrip_f64() {
+        assert_eq!(f64::from_f64(-2.25), -2.25);
+        assert_eq!(f64::BYTES, 8);
+        assert_eq!(f64::PRECISION, "dp");
+    }
+
+    #[test]
+    fn atomic_add_accumulates_f32() {
+        let mut x = 0f32;
+        for _ in 0..100 {
+            unsafe { f32::atomic_add(&mut x, 0.5) };
+        }
+        assert_eq!(x, 50.0);
+    }
+
+    #[test]
+    fn atomic_add_accumulates_f64() {
+        let mut x = 1f64;
+        unsafe { f64::atomic_add(&mut x, 2.0) };
+        assert_eq!(x, 3.0);
+    }
+
+    #[test]
+    fn atomic_add_concurrent() {
+        use std::sync::Arc;
+        let x = Arc::new(std::sync::Mutex::new(vec![0f64; 1]));
+        // Hammer one location from 4 threads through raw pointers.
+        let buf = Arc::new(vec![0f64; 1]);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let buf = Arc::clone(&buf);
+                std::thread::spawn(move || {
+                    let p = buf.as_ptr() as *mut f64;
+                    for _ in 0..1000 {
+                        unsafe { f64::atomic_add(p, 1.0) };
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(buf[0], 4000.0);
+        drop(x);
+    }
+}

@@ -1,0 +1,109 @@
+//! Iteration-dependence DAG between the two fused operations (Figure 2c
+//! of the paper).
+//!
+//! For `D = A(BC)` the outermost loop of the first operation produces
+//! row `i` of `D1 = BC`, and iteration `j` of the second operation reads
+//! the `D1` rows named by the column indices of `A`'s row `j`. So the
+//! DAG *is* the sparsity pattern of `A`: `G[i, j] = 1 ⇔ A[j, i] ≠ 0`.
+//! No materialized graph is ever built — [`IterDag`] is a zero-cost view.
+
+use crate::sparse::Pattern;
+
+/// Dependence view over `A`'s pattern.
+///
+/// Vertices `0..n_first()` are iterations of the first operation (GeMM or
+/// SpMM-1); vertices `0..n_second()` are iterations of the second (SpMM).
+#[derive(Clone, Copy)]
+pub struct IterDag<'a> {
+    a: &'a Pattern,
+}
+
+impl<'a> IterDag<'a> {
+    pub fn new(a: &'a Pattern) -> Self {
+        Self { a }
+    }
+
+    /// Number of first-operation iterations (rows of `D1` = cols of `A`).
+    #[inline(always)]
+    pub fn n_first(&self) -> usize {
+        self.a.cols
+    }
+
+    /// Number of second-operation iterations (rows of `D` = rows of `A`).
+    #[inline(always)]
+    pub fn n_second(&self) -> usize {
+        self.a.rows
+    }
+
+    /// Incoming edges of second-op iteration `j`: the first-op iterations
+    /// it depends on (`inEdges(G, j)` in Algorithm 1).
+    #[inline(always)]
+    pub fn in_edges(&self, j: usize) -> &'a [u32] {
+        self.a.row(j)
+    }
+
+    /// Number of dependencies of `j` (== nnz of `A`'s row `j`).
+    #[inline(always)]
+    pub fn in_degree(&self, j: usize) -> usize {
+        self.a.row_nnz(j)
+    }
+
+    /// Total edges (== nnz of `A`).
+    #[inline(always)]
+    pub fn n_edges(&self) -> usize {
+        self.a.nnz()
+    }
+
+    /// The Algorithm-1 line-9 test: do *all* dependencies of `j` fall in
+    /// `[lo, hi)`? Rows are sorted, so first/last suffice.
+    #[inline(always)]
+    pub fn deps_within(&self, j: usize, lo: usize, hi: usize) -> bool {
+        let deps = self.in_edges(j);
+        match (deps.first(), deps.last()) {
+            (Some(&f), Some(&l)) => lo <= f as usize && (l as usize) < hi,
+            _ => true, // no dependencies: free to fuse anywhere
+        }
+    }
+
+    /// Underlying pattern (for cost-model nnz queries).
+    #[inline(always)]
+    pub fn pattern(&self) -> &'a Pattern {
+        self.a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn dims_follow_pattern() {
+        let p = Pattern::new(3, 4, vec![0, 1, 2, 3], vec![0, 3, 2]);
+        let g = IterDag::new(&p);
+        assert_eq!(g.n_first(), 4);
+        assert_eq!(g.n_second(), 3);
+        assert_eq!(g.in_edges(1), &[3]);
+        assert_eq!(g.n_edges(), 3);
+    }
+
+    #[test]
+    fn deps_within_sorted_rows() {
+        let p = Pattern::new(2, 8, vec![0, 3, 3], vec![1, 4, 6]);
+        let g = IterDag::new(&p);
+        assert!(g.deps_within(0, 1, 7));
+        assert!(g.deps_within(0, 0, 8));
+        assert!(!g.deps_within(0, 2, 7)); // first dep 1 < lo
+        assert!(!g.deps_within(0, 1, 6)); // last dep 6 >= hi
+        assert!(g.deps_within(1, 5, 5)); // empty row fuses anywhere
+    }
+
+    #[test]
+    fn banded_rows_fuse_locally() {
+        let p = gen::banded(64, &[1]);
+        let g = IterDag::new(&p);
+        // Interior row i depends on i-1..=i+1.
+        assert!(g.deps_within(10, 9, 12));
+        assert!(!g.deps_within(10, 10, 12));
+    }
+}

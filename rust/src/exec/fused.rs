@@ -1,0 +1,187 @@
+//! **Tile fusion** executor — the fused code of Listings 1 and 3.
+//!
+//! Executes a [`FusedSchedule`]: wavefront 0 runs each fused tile's
+//! first-operation rows immediately followed by the second-operation rows
+//! whose data those produced (the reuse-to-temporal-locality conversion
+//! of §3.2); one barrier; wavefront 1 finishes the leftover second-op
+//! rows. No atomics, no redundant computation.
+
+use super::{Dense, PairExec, PairOp, Scalar, SendPtr, ThreadPool};
+use crate::kernels;
+use crate::scheduler::FusedSchedule;
+
+/// Tile-fusion executor bound to a pair and its schedule.
+pub struct Fused<'a, T> {
+    pub op: PairOp<'a, T>,
+    pub plan: &'a FusedSchedule,
+    d1: Dense<T>,
+}
+
+impl<'a, T: Scalar> Fused<'a, T> {
+    /// Bind an executor. `plan` must have been built from `op.a.pattern`
+    /// (and `B`'s pattern for SpMM-SpMM) — checked by dimension here,
+    /// by content in debug builds via `validate`.
+    pub fn new(op: PairOp<'a, T>, plan: &'a FusedSchedule) -> Self {
+        assert_eq!(plan.n_first, op.n_first(), "schedule/first-op dim mismatch");
+        assert_eq!(plan.n_second, op.n_second(), "schedule/second-op dim mismatch");
+        Self { op, plan, d1: Dense::zeros(0, 0) }
+    }
+
+    fn ensure_ws(&mut self, ccol: usize) {
+        if self.d1.rows != self.op.n_first() || self.d1.cols != ccol {
+            self.d1 = Dense::zeros(self.op.n_first(), ccol);
+        }
+    }
+
+    /// Intermediate `D1` from the last `run` (the GNN backward pass
+    /// reuses it).
+    pub fn d1(&self) -> &Dense<T> {
+        &self.d1
+    }
+}
+
+/// Run the fused schedule with a caller-owned `D1` workspace (resized if
+/// needed). This is the allocation-free entry point long-lived callers
+/// (GCN layers, the coordinator) use; [`Fused::run`] wraps it.
+pub fn run_fused<T: Scalar>(
+    op: &PairOp<'_, T>,
+    plan: &FusedSchedule,
+    pool: &ThreadPool,
+    c: &Dense<T>,
+    d1: &mut Dense<T>,
+    d: &mut Dense<T>,
+) {
+    let ccol = op.layout.ccol(c);
+    if d1.rows != op.n_first() || d1.cols != ccol {
+        *d1 = Dense::zeros(op.n_first(), ccol);
+    }
+    assert_eq!(d.rows, op.n_second());
+    assert_eq!(d.cols, ccol);
+
+    let d1_ptr = SendPtr(d1.data.as_mut_ptr());
+    let d_ptr = SendPtr(d.data.as_mut_ptr());
+
+    // Wavefront 0: fused tiles — produce D1 rows, immediately consume
+    // them for the tile's own second-op rows (temporal locality).
+    let wf0 = &plan.wavefronts[0];
+    pool.parallel_for(wf0.len(), |ti, _| {
+        let tile = &wf0[ti];
+        unsafe {
+            // First operation over the tile's contiguous i range.
+            let d1 = d1_ptr.get();
+            for i in tile.i_begin as usize..tile.i_end as usize {
+                let out = std::slice::from_raw_parts_mut(d1.add(i * ccol), ccol);
+                op.first.compute_row(i, c, op.layout, out);
+            }
+            // Fused second-operation rows (all deps in-tile, still hot).
+            kernels::spmm_rows(op.a, &tile.j_rows, d1_ptr.get(), d_ptr.get(), ccol);
+        }
+    });
+
+    // One barrier (implicit in parallel_for), then wavefront 1.
+    let wf1 = &plan.wavefronts[1];
+    pool.parallel_for(wf1.len(), |ti, _| {
+        let tile = &wf1[ti];
+        unsafe {
+            kernels::spmm_rows(op.a, &tile.j_rows, d1_ptr.get() as *const T, d_ptr.get(), ccol);
+        }
+    });
+}
+
+impl<T: Scalar> PairExec<T> for Fused<'_, T> {
+    fn name(&self) -> &'static str {
+        "tile_fusion"
+    }
+
+    fn run(&mut self, pool: &ThreadPool, c: &Dense<T>, d: &mut Dense<T>) {
+        let ccol = self.op.layout.ccol(c);
+        self.ensure_ws(ccol);
+        let mut d1 = std::mem::replace(&mut self.d1, Dense::zeros(0, 0));
+        run_fused(&self.op, self.plan, pool, c, &mut d1, d);
+        self.d1 = d1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::reference::reference;
+    use crate::scheduler::{Scheduler, SchedulerParams};
+    use crate::sparse::{gen, Csr};
+
+    fn small_params() -> SchedulerParams {
+        SchedulerParams { n_cores: 3, cache_bytes: 64 * 1024, elem_bytes: 8, ct_size: 32, max_split_depth: 24 }
+    }
+
+    #[test]
+    fn matches_reference_gemm_spmm() {
+        for (pat, seed) in [
+            (gen::poisson2d(16, 16), 1u64),
+            (gen::rmat(256, 8, gen::RmatKind::Graph500, 2), 2),
+            (gen::banded(200, &[1, 5]), 3),
+        ] {
+            let a = Csr::<f64>::with_random_values(pat, seed, -1.0, 1.0);
+            let b = Dense::<f64>::randn(a.cols(), 16, seed + 10);
+            let c = Dense::<f64>::randn(16, 8, seed + 20);
+            let op = PairOp::gemm_spmm(&a, &b);
+            let plan = Scheduler::new(small_params()).schedule(&a.pattern, 16, 8);
+            plan.validate(&a.pattern);
+            let expect = reference(&op, &c);
+            for threads in [1, 4] {
+                let pool = ThreadPool::new(threads);
+                let mut ex = Fused::new(op, &plan);
+                let mut d = Dense::zeros(a.rows(), 8);
+                ex.run(&pool, &c, &mut d);
+                assert!(d.max_abs_diff(&expect) < 1e-10, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_reference_spmm_spmm() {
+        let pat = gen::rmat(128, 6, gen::RmatKind::Mild, 7);
+        let a = Csr::<f64>::with_random_values(pat, 4, -1.0, 1.0);
+        let c = Dense::<f64>::randn(128, 12, 5);
+        let op = PairOp::spmm_spmm(&a, &a);
+        let plan = Scheduler::new(small_params()).schedule_sparse(&a.pattern, &a.pattern, 12);
+        let expect = reference(&op, &c);
+        let pool = ThreadPool::new(4);
+        let mut ex = Fused::new(op, &plan);
+        let mut d = Dense::zeros(128, 12);
+        ex.run(&pool, &c, &mut d);
+        assert!(d.max_abs_diff(&expect) < 1e-10);
+    }
+
+    #[test]
+    fn transpose_c_variant() {
+        let pat = gen::poisson2d(10, 10);
+        let a = Csr::<f64>::with_random_values(pat, 6, -1.0, 1.0);
+        let b = Dense::<f64>::randn(100, 8, 7);
+        let c = Dense::<f64>::randn(8, 6, 8);
+        let ct = c.transpose();
+        let plan = Scheduler::new(small_params()).schedule(&a.pattern, 8, 6);
+        let expect = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        let pool = ThreadPool::new(2);
+        let mut ex = Fused::new(PairOp::gemm_spmm_ct(&a, &b), &plan);
+        let mut d = Dense::zeros(100, 6);
+        ex.run(&pool, &ct, &mut d);
+        assert!(d.max_abs_diff(&expect) < 1e-10);
+    }
+
+    #[test]
+    fn reusable_across_runs() {
+        let pat = gen::banded(64, &[1]);
+        let a = Csr::<f64>::with_random_values(pat, 9, -1.0, 1.0);
+        let b = Dense::<f64>::randn(64, 4, 1);
+        let plan = Scheduler::new(small_params()).schedule(&a.pattern, 4, 4);
+        let pool = ThreadPool::new(2);
+        let op = PairOp::gemm_spmm(&a, &b);
+        let mut ex = Fused::new(op, &plan);
+        let mut d = Dense::zeros(64, 4);
+        for seed in 0..5 {
+            let c = Dense::<f64>::randn(4, 4, seed);
+            ex.run(&pool, &c, &mut d);
+            assert!(d.max_abs_diff(&reference(&op, &c)) < 1e-12, "run {seed}");
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Executors for the fused pair `D = A (B C)`.
+//!
+//! Five strategies, mirroring §4.1.3 of the paper:
+//!
+//! | module            | strategy                | sync               | redundant work |
+//! |-------------------|-------------------------|--------------------|----------------|
+//! | [`fused`]         | **tile fusion** (ours)  | 1 barrier          | none           |
+//! | [`unfused`]       | two parallel ops        | 1 barrier          | none (no reuse)|
+//! | [`atomic_tiling`] | sparse tiling [17]      | atomics            | none           |
+//! | [`overlapped`]    | communication-avoiding [11] | none           | replicated deps|
+//! | [`tensor_style`]  | TACO/SparseLNR codegen  | none               | GeMV per nnz   |
+//!
+//! All strategies call the same row kernels ([`crate::kernels`]) so
+//! measured differences isolate scheduling and locality.
+//!
+//! [`PairOp`] abstracts over the first operand (`B` dense ⇒ GeMM-SpMM,
+//! `B` sparse ⇒ SpMM-SpMM) and the §4.2.1 transpose-C variant, so each
+//! strategy is written once and serves both operation pairs.
+
+pub mod atomic_tiling;
+pub mod fused;
+pub mod overlapped;
+pub mod pool;
+pub mod reference;
+pub mod tensor_style;
+pub mod unfused;
+
+pub use atomic_tiling::AtomicTiling;
+pub use fused::Fused;
+pub use overlapped::Overlapped;
+pub use pool::ThreadPool;
+pub use tensor_style::TensorStyle;
+pub use unfused::Unfused;
+
+use crate::core::{Dense, Scalar};
+use crate::kernels;
+use crate::sparse::Csr;
+
+/// How `C` is stored (§4.2.1 transpose support): `Normal` = `bcol × ccol`
+/// row-major; `Transposed` = `ccol × bcol` (each output is a dot product).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CLayout {
+    Normal,
+    Transposed,
+}
+
+impl CLayout {
+    /// Output column count of `D1`/`D` given the stored `C`.
+    #[inline]
+    pub fn ccol<T: Scalar>(self, c: &Dense<T>) -> usize {
+        match self {
+            CLayout::Normal => c.cols,
+            CLayout::Transposed => c.rows,
+        }
+    }
+}
+
+/// First operation of the pair: `D1 = B · C`.
+#[derive(Clone, Copy)]
+pub enum FirstOp<'a, T> {
+    /// GeMM: `B` dense `n_first × bcol`.
+    Dense(&'a Dense<T>),
+    /// SpMM: `B` sparse (CSR).
+    Sparse(&'a Csr<T>),
+}
+
+impl<'a, T: Scalar> FirstOp<'a, T> {
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        match self {
+            FirstOp::Dense(b) => b.rows,
+            FirstOp::Sparse(b) => b.rows(),
+        }
+    }
+
+    /// Compute one `D1` row into `out` (overwrites).
+    #[inline]
+    pub fn compute_row(&self, i: usize, c: &Dense<T>, layout: CLayout, out: &mut [T]) {
+        out.iter_mut().for_each(|v| *v = T::ZERO);
+        match (self, layout) {
+            (FirstOp::Dense(b), CLayout::Normal) => kernels::gemm_row(b.row(i), c, out),
+            (FirstOp::Dense(b), CLayout::Transposed) => kernels::gemm_row_ct(b.row(i), c, out),
+            (FirstOp::Sparse(b), CLayout::Normal) => {
+                let (cols, vals) = b.row(i);
+                for (&k, &v) in cols.iter().zip(vals) {
+                    let src = c.row(k as usize);
+                    for (o, &s) in out.iter_mut().zip(src) {
+                        *o += v * s;
+                    }
+                }
+            }
+            (FirstOp::Sparse(b), CLayout::Transposed) => {
+                // Dot-product form: out[j] = Σ_k b[i,k]·C[j,k].
+                let (cols, vals) = b.row(i);
+                for (j, o) in out.iter_mut().enumerate() {
+                    let cj = c.row(j);
+                    let mut acc = T::ZERO;
+                    for (&k, &v) in cols.iter().zip(vals) {
+                        acc += v * cj[k as usize];
+                    }
+                    *o += acc;
+                }
+            }
+        }
+    }
+}
+
+/// A bound fusion pair: `D = A · (B · C)`.
+#[derive(Clone, Copy)]
+pub struct PairOp<'a, T> {
+    pub a: &'a Csr<T>,
+    pub first: FirstOp<'a, T>,
+    pub layout: CLayout,
+}
+
+impl<'a, T: Scalar> PairOp<'a, T> {
+    /// GeMM-SpMM with `C` in natural layout.
+    pub fn gemm_spmm(a: &'a Csr<T>, b: &'a Dense<T>) -> Self {
+        Self { a, first: FirstOp::Dense(b), layout: CLayout::Normal }
+    }
+
+    /// GeMM-SpMM computing `D = A (B Cᵀ)` with `C` stored `ccol × bcol`.
+    pub fn gemm_spmm_ct(a: &'a Csr<T>, b: &'a Dense<T>) -> Self {
+        Self { a, first: FirstOp::Dense(b), layout: CLayout::Transposed }
+    }
+
+    /// SpMM-SpMM (`B` sparse; the paper's Listing 2 uses `B = A`).
+    pub fn spmm_spmm(a: &'a Csr<T>, b: &'a Csr<T>) -> Self {
+        Self { a, first: FirstOp::Sparse(b), layout: CLayout::Normal }
+    }
+
+    #[inline]
+    pub fn n_first(&self) -> usize {
+        self.first.n_rows()
+    }
+
+    #[inline]
+    pub fn n_second(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Allocate the intermediate `D1` for a given `C`.
+    pub fn alloc_d1(&self, c: &Dense<T>) -> Dense<T> {
+        Dense::zeros(self.n_first(), self.layout.ccol(c))
+    }
+
+    /// Scheduler-facing view of this pair.
+    pub fn fusion_op(&self, c: &Dense<T>) -> crate::scheduler::FusionOp<'a> {
+        let ccol = self.layout.ccol(c);
+        match self.first {
+            FirstOp::Dense(b) => crate::scheduler::FusionOp {
+                a: &self.a.pattern,
+                b: crate::scheduler::BSide::Dense { bcol: b.cols },
+                ccol,
+            },
+            FirstOp::Sparse(b) => crate::scheduler::FusionOp {
+                a: &self.a.pattern,
+                b: crate::scheduler::BSide::Sparse(&b.pattern),
+                ccol,
+            },
+        }
+    }
+}
+
+/// An executor for one strategy over a bound [`PairOp`].
+///
+/// `run` computes `D` given `C`, reusing internal workspaces across calls
+/// (the paper amortizes the schedule over hundreds of GNN iterations —
+/// executors must be similarly reusable without allocation).
+pub trait PairExec<T: Scalar> {
+    fn name(&self) -> &'static str;
+    fn run(&mut self, pool: &ThreadPool, c: &Dense<T>, d: &mut Dense<T>);
+}
+
+/// Raw pointer that may cross thread boundaries. Every use site
+/// guarantees disjoint row access (schedule invariant 1–2).
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    #[inline(always)]
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}

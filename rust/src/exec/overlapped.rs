@@ -1,0 +1,222 @@
+//! **Overlapped tiling** baseline — the communication-avoiding [11]
+//! adaptation of §4.1.3 / Figure 2e.
+//!
+//! Second-operation iterations are partitioned equally; every tile
+//! *replicates* the first-operation iterations its rows depend on into a
+//! tile-local scratch, so all tiles are independent and run with **zero
+//! synchronization** — at the price of redundant computation wherever a
+//! `D1` row is needed by more than one tile. Redundancy grows with
+//! `bCol`/`cCol` (each replicated iteration is a full `B`-row × `C`
+//! multiply), which is why tile fusion beats it by 3.5× (Fig. 6).
+
+use super::{Dense, PairExec, PairOp, Scalar, SendPtr, ThreadPool};
+use std::cell::UnsafeCell;
+
+/// One overlapped tile: its second-op rows plus the (replicated) sorted
+/// unique list of first-op rows they depend on.
+struct TilePlan {
+    j_begin: usize,
+    j_end: usize,
+    deps: Vec<u32>,
+}
+
+/// Per-worker scratch: replicated `D1` rows plus the global-row →
+/// scratch-row map (epoch-stamped so it clears in O(1)).
+struct WorkerWs<T> {
+    scratch: Vec<T>,
+    map: Vec<u32>,
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+/// Per-worker scratch slots; each index is touched by exactly one thread
+/// per `parallel_for`, justifying the `Sync` assertion.
+struct WorkerSlots<T>(Vec<UnsafeCell<WorkerWs<T>>>);
+unsafe impl<T: Send> Sync for WorkerSlots<T> {}
+
+/// CA-style executor with replicated dependencies.
+pub struct Overlapped<'a, T> {
+    pub op: PairOp<'a, T>,
+    tiles: Vec<TilePlan>,
+    workers: WorkerSlots<T>,
+}
+
+impl<'a, T: Scalar> Overlapped<'a, T> {
+    /// Partition the second operation into `n_tiles` equal-row chunks
+    /// and precompute each tile's replicated dependency list.
+    pub fn new(op: PairOp<'a, T>, n_tiles: usize, n_workers: usize) -> Self {
+        let n_second = op.n_second();
+        let n_tiles = n_tiles.clamp(1, n_second.max(1));
+        let t = n_second.div_ceil(n_tiles).max(1);
+        let mut tiles = Vec::with_capacity(n_tiles);
+        let mut seen = vec![0u32; op.n_first()];
+        let mut epoch = 0u32;
+        let mut lo = 0;
+        while lo < n_second {
+            let hi = (lo + t).min(n_second);
+            epoch += 1;
+            let mut deps = Vec::new();
+            for j in lo..hi {
+                for &k in op.a.pattern.row(j) {
+                    if seen[k as usize] != epoch {
+                        seen[k as usize] = epoch;
+                        deps.push(k);
+                    }
+                }
+            }
+            deps.sort_unstable();
+            tiles.push(TilePlan { j_begin: lo, j_end: hi, deps });
+            lo = hi;
+        }
+        let workers = WorkerSlots(
+            (0..n_workers.max(1))
+                .map(|_| {
+                    UnsafeCell::new(WorkerWs {
+                        scratch: Vec::new(),
+                        map: vec![0; op.n_first()],
+                        stamp: vec![0; op.n_first()],
+                        epoch: 0,
+                    })
+                })
+                .collect(),
+        );
+        Self { op, tiles, workers }
+    }
+
+    /// Total replicated first-op iterations minus the unavoidable ones —
+    /// the paper's "redundant iterations" metric (§4.3: G2_circuit has
+    /// 126 487 redundant iterations for 150 102 rows).
+    pub fn redundant_iterations(&self) -> usize {
+        let total: usize = self.tiles.iter().map(|t| t.deps.len()).sum();
+        // Rows needed at least once:
+        let mut needed = vec![false; self.op.n_first()];
+        for t in &self.tiles {
+            for &k in &t.deps {
+                needed[k as usize] = true;
+            }
+        }
+        total - needed.iter().filter(|&&b| b).count()
+    }
+}
+
+impl<T: Scalar> PairExec<T> for Overlapped<'_, T> {
+    fn name(&self) -> &'static str {
+        "overlapped_tiling"
+    }
+
+    fn run(&mut self, pool: &ThreadPool, c: &Dense<T>, d: &mut Dense<T>) {
+        let ccol = self.op.layout.ccol(c);
+        assert_eq!(d.rows, self.op.n_second());
+        assert_eq!(d.cols, ccol);
+        assert!(pool.n_threads() <= self.workers.0.len(), "pool wider than worker scratch");
+
+        let d_ptr = SendPtr(d.data.as_mut_ptr());
+        let op = &self.op;
+        let tiles = &self.tiles;
+        let workers = &self.workers;
+
+        // Single wavefront, zero synchronization: every tile is closed.
+        pool.parallel_for(tiles.len(), |ti, wid| {
+            let tile = &tiles[ti];
+            let ws = unsafe { &mut *workers.0[wid].get() };
+            // Replicate dependencies into local scratch.
+            ws.epoch = ws.epoch.wrapping_add(1);
+            if ws.epoch == 0 {
+                ws.stamp.iter_mut().for_each(|s| *s = 0);
+                ws.epoch = 1;
+            }
+            let need = tile.deps.len() * ccol;
+            if ws.scratch.len() < need {
+                ws.scratch.resize(need, T::ZERO);
+            }
+            for (r, &k) in tile.deps.iter().enumerate() {
+                ws.map[k as usize] = r as u32;
+                ws.stamp[k as usize] = ws.epoch;
+                let out = &mut ws.scratch[r * ccol..(r + 1) * ccol];
+                op.first.compute_row(k as usize, c, op.layout, out);
+            }
+            // Second-op rows straight from scratch.
+            unsafe {
+                let d = d_ptr.get();
+                for j in tile.j_begin..tile.j_end {
+                    let out = std::slice::from_raw_parts_mut(d.add(j * ccol), ccol);
+                    out.iter_mut().for_each(|v| *v = T::ZERO);
+                    let (cols, vals) = op.a.row(j);
+                    for (&k, &v) in cols.iter().zip(vals) {
+                        debug_assert_eq!(ws.stamp[k as usize], ws.epoch, "dep not replicated");
+                        let r = ws.map[k as usize] as usize;
+                        let src = &ws.scratch[r * ccol..(r + 1) * ccol];
+                        for x in 0..ccol {
+                            out[x] += v * src[x];
+                        }
+                    }
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::reference::reference;
+    use crate::sparse::{gen, Csr};
+
+    #[test]
+    fn matches_reference_gemm_spmm() {
+        let pat = gen::rmat(128, 8, gen::RmatKind::Graph500, 21);
+        let a = Csr::<f64>::with_random_values(pat, 1, -1.0, 1.0);
+        let b = Dense::<f64>::randn(128, 8, 2);
+        let c = Dense::<f64>::randn(8, 4, 3);
+        let op = PairOp::gemm_spmm(&a, &b);
+        let expect = reference(&op, &c);
+        for (threads, n_tiles) in [(1, 4), (4, 16), (2, 128)] {
+            let pool = ThreadPool::new(threads);
+            let mut ex = Overlapped::new(op, n_tiles, threads);
+            let mut d = Dense::zeros(128, 4);
+            ex.run(&pool, &c, &mut d);
+            assert!(d.max_abs_diff(&expect) < 1e-10, "threads={threads} tiles={n_tiles}");
+        }
+    }
+
+    #[test]
+    fn matches_reference_spmm_spmm() {
+        let pat = gen::banded(200, &[1, 7]);
+        let a = Csr::<f64>::with_random_values(pat, 4, -1.0, 1.0);
+        let c = Dense::<f64>::randn(200, 6, 5);
+        let op = PairOp::spmm_spmm(&a, &a);
+        let expect = reference(&op, &c);
+        let pool = ThreadPool::new(4);
+        let mut ex = Overlapped::new(op, 16, 4);
+        let mut d = Dense::zeros(200, 6);
+        ex.run(&pool, &c, &mut d);
+        assert!(d.max_abs_diff(&expect) < 1e-10);
+    }
+
+    #[test]
+    fn redundancy_grows_with_tile_count() {
+        let pat = gen::poisson2d(32, 32);
+        let a = Csr::<f64>::from_pattern(pat, 1.0);
+        let b = Dense::<f64>::randn(1024, 4, 1);
+        let op = PairOp::gemm_spmm(&a, &b);
+        let few = Overlapped::new(op, 4, 1).redundant_iterations();
+        let many = Overlapped::new(op, 64, 1).redundant_iterations();
+        assert!(many > few, "few={few} many={many}");
+    }
+
+    #[test]
+    fn workspace_reuse_many_runs() {
+        let pat = gen::poisson2d(10, 10);
+        let a = Csr::<f64>::with_random_values(pat, 7, -1.0, 1.0);
+        let b = Dense::<f64>::randn(100, 4, 8);
+        let op = PairOp::gemm_spmm(&a, &b);
+        let pool = ThreadPool::new(2);
+        let mut ex = Overlapped::new(op, 8, 2);
+        let mut d = Dense::zeros(100, 4);
+        for s in 0..4 {
+            let c = Dense::<f64>::randn(4, 4, s);
+            ex.run(&pool, &c, &mut d);
+            assert!(d.max_abs_diff(&reference(&op, &c)) < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Persistent work-stealing-free thread pool with dynamic self-scheduling
+//! — the OpenMP `parallel for schedule(dynamic)` substitute (the offline
+//! crate set has no rayon; DESIGN.md §9).
+//!
+//! A pool of `n - 1` background workers plus the calling thread execute
+//! `parallel_for(n_items, f)`: items are claimed with an atomic counter
+//! (dynamic scheduling — the paper maps tiles to threads with the "omp
+//! scheduler", Listing 1 line 2). `parallel_for` returns only when every
+//! item finished, so two consecutive calls give exactly the one
+//! synchronization barrier the schedule requires between wavefronts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased parallel job: `f(item_index, worker_id)`.
+type Job = Arc<JobInner>;
+
+struct JobInner {
+    n_items: usize,
+    next: AtomicUsize,
+    // 'static is a lie told to the type system: `parallel_for` blocks
+    // until all workers finished the job, so borrows in `f` stay alive.
+    f: Box<dyn Fn(usize, usize) + Send + Sync + 'static>,
+}
+
+struct Slot {
+    generation: u64,
+    job: Option<Job>,
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    new_job: Condvar,
+    job_done: Condvar,
+}
+
+/// Persistent thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `n_threads` total executors (including the caller of
+    /// `parallel_for`); `n_threads = 1` runs everything inline.
+    pub fn new(n_threads: usize) -> Self {
+        let n_threads = n_threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot { generation: 0, job: None, active: 0, shutdown: false }),
+            new_job: Condvar::new(),
+            job_done: Condvar::new(),
+        });
+        let workers = (1..n_threads)
+            .map(|wid| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("tf-worker-{wid}"))
+                    .spawn(move || worker_loop(shared, wid))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers, n_threads }
+    }
+
+    /// Total executor count (callers should size schedules with this).
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Run `f(item, worker)` for every `item in 0..n_items`, blocking
+    /// until all complete. Items are claimed dynamically. Worker ids are
+    /// in `0..n_threads` (0 = the caller).
+    pub fn parallel_for<F>(&self, n_items: usize, f: F)
+    where
+        F: Fn(usize, usize) + Send + Sync,
+    {
+        if n_items == 0 {
+            return;
+        }
+        if self.n_threads == 1 || n_items == 1 {
+            for i in 0..n_items {
+                f(i, 0);
+            }
+            return;
+        }
+        // Erase the closure lifetime; safety argument at `JobInner::f`.
+        let boxed: Box<dyn Fn(usize, usize) + Send + Sync> = Box::new(f);
+        let boxed: Box<dyn Fn(usize, usize) + Send + Sync + 'static> =
+            unsafe { std::mem::transmute(boxed) };
+        let job: Job = Arc::new(JobInner { n_items, next: AtomicUsize::new(0), f: boxed });
+
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            debug_assert!(slot.job.is_none(), "parallel_for is not reentrant");
+            slot.generation += 1;
+            slot.job = Some(Arc::clone(&job));
+            slot.active = self.workers.len();
+            self.shared.new_job.notify_all();
+        }
+
+        // The caller participates as worker 0.
+        run_job(&job, 0);
+
+        // Barrier: wait for background workers to drain the counter.
+        let mut slot = self.shared.slot.lock().unwrap();
+        while slot.active > 0 {
+            slot = self.shared.job_done.wait(slot).unwrap();
+        }
+        slot.job = None;
+    }
+
+    /// `parallel_for` over chunks: `f(chunk_range, worker)` with chunks
+    /// of `chunk` items (the unfused executors' row-block scheduling).
+    pub fn parallel_for_chunks<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>, usize) + Send + Sync,
+    {
+        let chunk = chunk.max(1);
+        let n_chunks = n.div_ceil(chunk);
+        self.parallel_for(n_chunks, |c, w| {
+            let lo = c * chunk;
+            f(lo..(lo + chunk).min(n), w);
+        });
+    }
+}
+
+fn run_job(job: &JobInner, worker: usize) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n_items {
+            return;
+        }
+        (job.f)(i, worker);
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, wid: usize) {
+    let mut seen_gen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.generation != seen_gen {
+                    seen_gen = slot.generation;
+                    break Arc::clone(slot.job.as_ref().expect("generation bumped with job"));
+                }
+                slot = shared.new_job.wait(slot).unwrap();
+            }
+        };
+        run_job(&job, wid);
+        let mut slot = shared.slot.lock().unwrap();
+        slot.active -= 1;
+        if slot.active == 0 {
+            shared.job_done.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+            self.shared.new_job.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_item_exactly_once() {
+        for threads in [1, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let n = 10_000;
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.parallel_for(n, |i, _| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn barrier_between_calls() {
+        // Phase 2 must observe every phase-1 write.
+        let pool = ThreadPool::new(4);
+        let n = 4096;
+        let data: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(n, |i, _| data[i].store(1, Ordering::Relaxed));
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(n, |i, _| {
+            sum.fetch_add(data[i].load(Ordering::Relaxed), Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), n as u64);
+    }
+
+    #[test]
+    fn borrows_stay_valid() {
+        let pool = ThreadPool::new(3);
+        let input = vec![2u64; 1000];
+        let out: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(1000, |i, _| out[i].store(input[i] * 3, Ordering::Relaxed));
+        assert!(out.iter().all(|v| v.load(Ordering::Relaxed) == 6));
+    }
+
+    #[test]
+    fn worker_ids_in_range() {
+        let pool = ThreadPool::new(4);
+        let bad = AtomicU64::new(0);
+        pool.parallel_for(5000, |_, w| {
+            if w >= 4 {
+                bad.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(bad.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn reusable_across_many_rounds() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicU64::new(0);
+        for _ in 0..100 {
+            pool.parallel_for(64, |_, _| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 6400);
+    }
+
+    #[test]
+    fn chunked_covers_range() {
+        let pool = ThreadPool::new(2);
+        let n = 1003;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for_chunks(n, 64, |r, _| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_, _| panic!("should not run"));
+    }
+}

@@ -1,0 +1,105 @@
+//! Serial reference executor — the numerical oracle for every other
+//! strategy. Deliberately simple (no tiling, no pointers, no threads):
+//! correctness tests compare all parallel executors against this, and
+//! this against dense naive matmul on tiny sizes.
+
+use super::{Dense, PairOp, Scalar};
+use crate::kernels;
+
+/// Compute `D = A (B C)` serially. Allocates; test/oracle use only.
+pub fn reference<T: Scalar>(op: &PairOp<T>, c: &Dense<T>) -> Dense<T> {
+    let ccol = op.layout.ccol(c);
+    let mut d1 = Dense::zeros(op.n_first(), ccol);
+    for i in 0..op.n_first() {
+        op.first.compute_row(i, c, op.layout, d1.row_mut(i));
+    }
+    let mut d = Dense::zeros(op.n_second(), ccol);
+    for j in 0..op.n_second() {
+        kernels::spmm_row(op.a, j, &d1, d.row_mut(j));
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Csr};
+
+    /// Oracle-of-the-oracle: dense naive computation of A(BC).
+    fn dense_oracle(a: &Csr<f64>, b: &Dense<f64>, c: &Dense<f64>) -> Dense<f64> {
+        let ad = a.to_dense();
+        let mut d1 = Dense::<f64>::zeros(b.rows, c.cols);
+        for i in 0..b.rows {
+            for k in 0..b.cols {
+                for j in 0..c.cols {
+                    let v = d1.get(i, j) + b.get(i, k) * c.get(k, j);
+                    d1.set(i, j, v);
+                }
+            }
+        }
+        let mut d = Dense::zeros(a.rows(), c.cols);
+        for i in 0..a.rows() {
+            for k in 0..a.cols() {
+                for j in 0..c.cols {
+                    let v = d.get(i, j) + ad.get(i, k) * d1.get(k, j);
+                    d.set(i, j, v);
+                }
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn gemm_spmm_matches_dense_oracle() {
+        let p = gen::rmat(32, 4, gen::RmatKind::Graph500, 1);
+        let a = Csr::<f64>::with_random_values(p, 2, -1.0, 1.0);
+        let b = Dense::<f64>::randn(32, 8, 3);
+        let c = Dense::<f64>::randn(8, 5, 4);
+        let got = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        assert!(got.max_abs_diff(&dense_oracle(&a, &b, &c)) < 1e-10);
+    }
+
+    #[test]
+    fn transpose_c_matches() {
+        let p = gen::poisson2d(6, 5);
+        let a = Csr::<f64>::with_random_values(p, 5, -1.0, 1.0);
+        let b = Dense::<f64>::randn(30, 8, 6);
+        let c = Dense::<f64>::randn(8, 7, 7);
+        let ct = c.transpose(); // stored ccol × bcol
+        let normal = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        let transposed = reference(&PairOp::gemm_spmm_ct(&a, &b), &ct);
+        assert!(normal.max_abs_diff(&transposed) < 1e-10);
+    }
+
+    #[test]
+    fn spmm_spmm_matches_dense_oracle() {
+        let p = gen::banded(24, &[1, 3]);
+        let a = Csr::<f64>::with_random_values(p, 8, -1.0, 1.0);
+        let c = Dense::<f64>::randn(24, 6, 9);
+        let got = reference(&PairOp::spmm_spmm(&a, &a), &c);
+        // dense oracle via dense B = dense(A)
+        let bd = a.to_dense();
+        let expect = {
+            let mut d1 = Dense::<f64>::zeros(24, 6);
+            for i in 0..24 {
+                for k in 0..24 {
+                    for j in 0..6 {
+                        let v = d1.get(i, j) + bd.get(i, k) * c.get(k, j);
+                        d1.set(i, j, v);
+                    }
+                }
+            }
+            let mut d = Dense::zeros(24, 6);
+            for i in 0..24 {
+                for k in 0..24 {
+                    for j in 0..6 {
+                        let v = d.get(i, j) + bd.get(i, k) * d1.get(k, j);
+                        d.set(i, j, v);
+                    }
+                }
+            }
+            d
+        };
+        assert!(got.max_abs_diff(&expect) < 1e-10);
+    }
+}

@@ -1,0 +1,16 @@
+//! Graph Convolutional Network built on the fused ops — the paper's
+//! motivating application (§1: "in a layer of graph convolution network,
+//! either case happens") and the end-to-end validation workload.
+//!
+//! One layer computes `H' = σ(Â (H W))`: `H W` is the GeMM, `Â ·` the
+//! SpMM — precisely the pair tile fusion accelerates. Backward is again
+//! SpMM/GeMM chains (`Âᵀ = Â` for the symmetric-normalized adjacency),
+//! so training exercises the fused executor on every step.
+
+pub mod data;
+pub mod model;
+pub mod ops;
+
+pub use data::{planted_labels, SyntheticGraph};
+pub use model::{Gcn, GcnLayer, TrainStats};
+pub use ops::{matmul_at_b, matmul_a_bt, relu, relu_grad_mask, softmax_xent, spmm_parallel};

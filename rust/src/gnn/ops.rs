@@ -1,0 +1,207 @@
+//! Dense/sparse helper ops for GCN forward/backward.
+
+use crate::core::{Dense, Scalar};
+use crate::exec::{SendPtr, ThreadPool};
+use crate::kernels;
+use crate::sparse::Csr;
+
+/// In-place ReLU.
+pub fn relu<T: Scalar>(x: &mut Dense<T>) {
+    for v in &mut x.data {
+        if *v < T::ZERO {
+            *v = T::ZERO;
+        }
+    }
+}
+
+/// Zero `grad` entries where the pre-activation was ≤ 0.
+pub fn relu_grad_mask<T: Scalar>(pre: &Dense<T>, grad: &mut Dense<T>) {
+    assert_eq!(pre.data.len(), grad.data.len());
+    for (g, &z) in grad.data.iter_mut().zip(&pre.data) {
+        if z <= T::ZERO {
+            *g = T::ZERO;
+        }
+    }
+}
+
+/// `out = Aᵀ · B` for row-major dense `A (n×f)`, `B (n×h)` → `f×h`.
+/// Accumulates rank-1 updates row by row (cache-friendly for tall A/B).
+pub fn matmul_at_b<T: Scalar>(a: &Dense<T>, b: &Dense<T>, out: &mut Dense<T>) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!((out.rows, out.cols), (a.cols, b.cols));
+    out.fill_zero();
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let br = b.row(i);
+        for (k, &av) in ar.iter().enumerate() {
+            let o = out.row_mut(k);
+            for (x, &bv) in br.iter().enumerate() {
+                o[x] += av * bv;
+            }
+        }
+    }
+}
+
+/// `out = A · Bᵀ` for `A (n×h)`, `B (f×h)` → `n×f` (dot-product form).
+pub fn matmul_a_bt<T: Scalar>(a: &Dense<T>, b: &Dense<T>, out: &mut Dense<T>) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((out.rows, out.cols), (a.rows, b.rows));
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let o = out.row_mut(i);
+        for (j, ov) in o.iter_mut().enumerate() {
+            let br = b.row(j);
+            let mut acc = T::ZERO;
+            for (x, &av) in ar.iter().enumerate() {
+                acc += av * br[x];
+            }
+            *ov = acc;
+        }
+    }
+}
+
+/// Parallel single SpMM `out = A · X` (the backward pass needs a lone
+/// SpMM for `Âᵀ dZ`).
+pub fn spmm_parallel<T: Scalar>(a: &Csr<T>, x: &Dense<T>, pool: &ThreadPool, out: &mut Dense<T>) {
+    assert_eq!(a.cols(), x.rows);
+    assert_eq!((out.rows, out.cols), (a.rows(), x.cols));
+    let ccol = x.cols;
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    let x_ptr = x.data.as_ptr() as usize;
+    pool.parallel_for_chunks(a.rows(), 64, |r, _| unsafe {
+        let xp = x_ptr as *const T;
+        let op = out_ptr.get();
+        for j in r {
+            let row = std::slice::from_raw_parts_mut(op.add(j * ccol), ccol);
+            kernels::spmm_row_ptr(a, j, xp, ccol, row);
+        }
+    });
+}
+
+/// Softmax cross-entropy over rows of `logits` against integer labels.
+/// Returns mean loss and writes `dlogits = (softmax - onehot)/n`.
+pub fn softmax_xent<T: Scalar>(logits: &Dense<T>, labels: &[u32], dlogits: &mut Dense<T>) -> f64 {
+    assert_eq!(logits.rows, labels.len());
+    assert_eq!((dlogits.rows, dlogits.cols), (logits.rows, logits.cols));
+    let n = logits.rows as f64;
+    let mut loss = 0.0;
+    for i in 0..logits.rows {
+        let row = logits.row(i);
+        let y = labels[i] as usize;
+        let mut maxv = row[0];
+        for &v in row {
+            maxv = maxv.max(v);
+        }
+        let mut denom = 0.0f64;
+        for &v in row {
+            denom += (v - maxv).to_f64().exp();
+        }
+        let logp_y = (row[y] - maxv).to_f64() - denom.ln();
+        loss -= logp_y;
+        let drow = dlogits.row_mut(i);
+        for (x, dv) in drow.iter_mut().enumerate() {
+            let p = (row[x] - maxv).to_f64().exp() / denom;
+            let target = if x == y { 1.0 } else { 0.0 };
+            *dv = T::from_f64((p - target) / n);
+        }
+    }
+    loss / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn relu_and_mask() {
+        let mut x = Dense::<f64>::from_fn(2, 2, |i, j| if (i + j) % 2 == 0 { -1.0 } else { 2.0 });
+        let pre = x.clone();
+        relu(&mut x);
+        assert_eq!(x.data, vec![0.0, 2.0, 2.0, 0.0]);
+        let mut g = Dense::<f64>::full(2, 2, 1.0);
+        relu_grad_mask(&pre, &mut g);
+        assert_eq!(g.data, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn at_b_matches_naive() {
+        let a = Dense::<f64>::randn(7, 3, 1);
+        let b = Dense::<f64>::randn(7, 4, 2);
+        let mut out = Dense::zeros(3, 4);
+        matmul_at_b(&a, &b, &mut out);
+        let at = a.transpose();
+        for i in 0..3 {
+            for j in 0..4 {
+                let mut acc = 0.0;
+                for k in 0..7 {
+                    acc += at.get(i, k) * b.get(k, j);
+                }
+                assert!((out.get(i, j) - acc).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn a_bt_matches_naive() {
+        let a = Dense::<f64>::randn(5, 3, 3);
+        let b = Dense::<f64>::randn(4, 3, 4);
+        let mut out = Dense::zeros(5, 4);
+        matmul_a_bt(&a, &b, &mut out);
+        let bt = b.transpose();
+        for i in 0..5 {
+            for j in 0..4 {
+                let mut acc = 0.0;
+                for k in 0..3 {
+                    acc += a.get(i, k) * bt.get(k, j);
+                }
+                assert!((out.get(i, j) - acc).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_parallel_matches_serial() {
+        let a = Csr::<f64>::with_random_values(gen::poisson2d(8, 8), 1, -1.0, 1.0);
+        let x = Dense::<f64>::randn(64, 6, 2);
+        let pool = ThreadPool::new(3);
+        let mut par = Dense::zeros(64, 6);
+        spmm_parallel(&a, &x, &pool, &mut par);
+        let mut ser = Dense::zeros(64, 6);
+        for j in 0..64 {
+            kernels::spmm_row(&a, j, &x, ser.row_mut(j));
+        }
+        assert!(par.max_abs_diff(&ser) < 1e-12);
+    }
+
+    #[test]
+    fn xent_gradient_numerically() {
+        let logits = Dense::<f64>::randn(3, 4, 5);
+        let labels = vec![0u32, 2, 3];
+        let mut g = Dense::zeros(3, 4);
+        let l0 = softmax_xent(&logits, &labels, &mut g);
+        assert!(l0 > 0.0);
+        // finite differences
+        let eps = 1e-6;
+        for i in 0..3 {
+            for j in 0..4 {
+                let mut lp = logits.clone();
+                lp.set(i, j, lp.get(i, j) + eps);
+                let mut scratch = Dense::zeros(3, 4);
+                let l1 = softmax_xent(&lp, &labels, &mut scratch);
+                let num = (l1 - l0) / eps;
+                assert!((num - g.get(i, j)).abs() < 1e-4, "({i},{j}): {num} vs {}", g.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn xent_perfect_prediction_low_loss() {
+        let mut logits = Dense::<f64>::zeros(2, 3);
+        logits.set(0, 1, 20.0);
+        logits.set(1, 2, 20.0);
+        let mut g = Dense::zeros(2, 3);
+        let l = softmax_xent(&logits, &[1, 2], &mut g);
+        assert!(l < 1e-6);
+    }
+}

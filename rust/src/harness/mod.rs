@@ -1,0 +1,274 @@
+//! Experiment harness shared by every `benches/` target.
+//!
+//! The offline crate set has no criterion (DESIGN.md §9), so this module
+//! is the bench framework: median-of-N timing (the paper's §4.1.1
+//! protocol), executor construction/strategy dispatch, the suite sweep
+//! drivers behind Figs. 5/6/11/12 and Tables 2/3, and table/CSV emission
+//! (`bench_results/*.csv` next to stdout markdown).
+
+use crate::core::{Dense, Scalar};
+use crate::exec::{
+    AtomicTiling, Fused, Overlapped, PairExec, PairOp, TensorStyle, ThreadPool, Unfused,
+};
+use crate::profiling;
+use crate::scheduler::{Scheduler, SchedulerParams};
+use crate::sparse::gen::{suite, MatrixClass, SuiteScale};
+use crate::sparse::Csr;
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Executor strategy id used across benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strat {
+    Fused,
+    FusedStep1Only,
+    Unfused,
+    Atomic,
+    Overlapped,
+    TensorStyle,
+}
+
+impl Strat {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strat::Fused => "tile_fusion",
+            Strat::FusedStep1Only => "tile_fusion_step1",
+            Strat::Unfused => "unfused",
+            Strat::Atomic => "atomic_tiling",
+            Strat::Overlapped => "overlapped_tiling",
+            Strat::TensorStyle => "tensor_compiler",
+        }
+    }
+}
+
+/// Bench environment knobs (so `cargo bench` stays tractable on small
+/// boxes): `TF_BENCH_SCALE=small|bench`, `TF_BENCH_REPS=n`,
+/// `TF_BENCH_THREADS=n`.
+pub struct BenchEnv {
+    pub scale: SuiteScale,
+    pub reps: usize,
+    pub threads: usize,
+}
+
+impl BenchEnv {
+    pub fn from_env() -> Self {
+        let scale = match std::env::var("TF_BENCH_SCALE").as_deref() {
+            Ok("small") => SuiteScale::Small,
+            _ => SuiteScale::Bench,
+        };
+        let reps = std::env::var("TF_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+        let threads = std::env::var("TF_BENCH_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        Self { scale, reps, threads }
+    }
+}
+
+/// Scheduler parameters used by benches (paper §4.1.1: cacheSize =
+/// L1 + L2 + L3/cores on the CascadeLake row of Table 1).
+pub fn bench_params<T: Scalar>(threads: usize) -> SchedulerParams {
+    SchedulerParams {
+        n_cores: threads,
+        elem_bytes: T::BYTES,
+        ..SchedulerParams::default()
+    }
+}
+
+/// Median time of `reps` runs of one strategy (executor constructed
+/// once; inspection/construction excluded, like the paper which reports
+/// "only the fused code execution time" and amortizes the scheduler in
+/// Fig. 10).
+pub fn time_strategy<T: Scalar>(
+    strat: Strat,
+    op: &PairOp<'_, T>,
+    pool: &ThreadPool,
+    c: &Dense<T>,
+    reps: usize,
+) -> Duration {
+    let ccol = op.layout.ccol(c);
+    let mut d = Dense::zeros(op.n_second(), ccol);
+    let params = bench_params::<T>(pool.n_threads());
+    match strat {
+        Strat::Fused => {
+            let plan = Scheduler::new(params).schedule_op(&op.fusion_op(c));
+            let mut ex = Fused::new(*op, &plan);
+            profiling::measure(1, reps, || ex.run(pool, c, &mut d))
+        }
+        Strat::FusedStep1Only => {
+            let plan = Scheduler::new(params).schedule_step1_only(&op.fusion_op(c));
+            let mut ex = Fused::new(*op, &plan);
+            profiling::measure(1, reps, || ex.run(pool, c, &mut d))
+        }
+        Strat::Unfused => {
+            let mut ex = Unfused::new(*op);
+            profiling::measure(1, reps, || ex.run(pool, c, &mut d))
+        }
+        Strat::Atomic => {
+            let mut ex = AtomicTiling::new(*op, pool.n_threads() * 4);
+            profiling::measure(1, reps, || ex.run(pool, c, &mut d))
+        }
+        Strat::Overlapped => {
+            let mut ex = Overlapped::new(*op, pool.n_threads() * 4, pool.n_threads());
+            profiling::measure(1, reps, || ex.run(pool, c, &mut d))
+        }
+        Strat::TensorStyle => {
+            let mut ex = TensorStyle::new(*op, pool.n_threads());
+            profiling::measure(1, reps, || ex.run(pool, c, &mut d))
+        }
+    }
+}
+
+/// One suite-matrix measurement row.
+pub struct PairTimes {
+    pub matrix: &'static str,
+    pub class: MatrixClass,
+    pub rows: usize,
+    pub nnz: usize,
+    pub bcol: usize,
+    pub flops: usize,
+    /// (strategy name, median seconds)
+    pub times: Vec<(&'static str, f64)>,
+}
+
+impl PairTimes {
+    pub fn secs(&self, name: &str) -> Option<f64> {
+        self.times.iter().find(|(n, _)| *n == name).map(|(_, t)| *t)
+    }
+
+    /// Speedup of tile fusion over `baseline`.
+    pub fn speedup_over(&self, baseline: &str) -> Option<f64> {
+        Some(self.secs(baseline)? / self.secs("tile_fusion")?)
+    }
+
+    pub fn gflops(&self, name: &str) -> Option<f64> {
+        Some(self.flops as f64 / self.secs(name)? / 1e9)
+    }
+}
+
+/// Which pair a sweep runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairSel {
+    GemmSpmm,
+    SpmmSpmm,
+}
+
+/// Sweep the synthetic suite: `matrices × bcols × strategies` for one
+/// precision. `ccol = bcol` (the paper's Tables set bCol = cCol).
+pub fn sweep<T: Scalar>(
+    pair: PairSel,
+    env: &BenchEnv,
+    bcols: &[usize],
+    strats: &[Strat],
+    class_filter: Option<MatrixClass>,
+) -> Vec<PairTimes> {
+    let pool = ThreadPool::new(env.threads);
+    let mut out = Vec::new();
+    for m in suite(env.scale) {
+        if let Some(cf) = class_filter {
+            if m.class != cf {
+                continue;
+            }
+        }
+        let a = Csr::<T>::with_random_values(m.pattern, 1, -1.0, 1.0);
+        for &bcol in bcols {
+            let ccol = bcol;
+            let (b_dense, c);
+            let op = match pair {
+                PairSel::GemmSpmm => {
+                    b_dense = Dense::<T>::randn(a.cols(), bcol, 2);
+                    c = Dense::<T>::randn(bcol, ccol, 3);
+                    PairOp::gemm_spmm(&a, &b_dense)
+                }
+                PairSel::SpmmSpmm => {
+                    c = Dense::<T>::randn(a.cols(), ccol, 3);
+                    PairOp::spmm_spmm(&a, &a)
+                }
+            };
+            let flops = op.fusion_op(&c).flops();
+            let times = strats
+                .iter()
+                .filter(|&&s| !(s == Strat::TensorStyle && pair == PairSel::SpmmSpmm))
+                .map(|&s| (s.name(), time_strategy(s, &op, &pool, &c, env.reps).as_secs_f64()))
+                .collect();
+            out.push(PairTimes {
+                matrix: m.name,
+                class: m.class,
+                rows: a.rows(),
+                nnz: a.nnz(),
+                bcol,
+                flops,
+                times,
+            });
+        }
+    }
+    out
+}
+
+/// Results directory (`bench_results/` at the repo root).
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write a CSV artifact for a figure/table.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) {
+    let path = results_dir().join(format!("{name}.csv"));
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path).expect("create csv"));
+    writeln!(f, "{header}").unwrap();
+    for r in rows {
+        writeln!(f, "{r}").unwrap();
+    }
+    eprintln!("  -> wrote {}", path.display());
+}
+
+/// Pretty-print a markdown table to stdout.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {title}\n");
+    println!("| {} |", headers.join(" | "));
+    println!("|{}|", headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_defaults() {
+        let env = BenchEnv::from_env();
+        assert!(env.reps >= 1);
+        assert!(env.threads >= 1);
+    }
+
+    #[test]
+    fn time_strategy_smoke_all() {
+        let a = Csr::<f64>::with_random_values(crate::sparse::gen::poisson2d(12, 12), 1, -1.0, 1.0);
+        let b = Dense::<f64>::randn(144, 8, 2);
+        let c = Dense::<f64>::randn(8, 8, 3);
+        let op = PairOp::gemm_spmm(&a, &b);
+        let pool = ThreadPool::new(2);
+        for s in [Strat::Fused, Strat::FusedStep1Only, Strat::Unfused, Strat::Atomic, Strat::Overlapped, Strat::TensorStyle] {
+            let t = time_strategy(s, &op, &pool, &c, 1);
+            assert!(t.as_nanos() > 0, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn sweep_small_produces_rows() {
+        let env = BenchEnv { scale: SuiteScale::Small, reps: 1, threads: 1 };
+        let rows = sweep::<f32>(PairSel::GemmSpmm, &env, &[8], &[Strat::Fused, Strat::Unfused], Some(MatrixClass::Graph));
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.speedup_over("unfused").is_some());
+            assert!(r.gflops("tile_fusion").unwrap() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Innermost compute kernels shared by every executor.
+//!
+//! The paper's fused code keeps "all fine-grain parallelism opportunities
+//! such as vectorization that exist in the unfused code" (§3.2): the
+//! fused and unfused executors call the *same* row kernels here, so any
+//! measured difference is attributable to scheduling/locality, not kernel
+//! quality. That mirrors §4.1.3 ("an unfused parallel implementation ...
+//! with the same set of optimizations").
+//!
+//! Kernels operate on raw row slices; executors own the (possibly
+//! concurrent) row decomposition.
+
+pub mod gemm;
+pub mod spmm;
+
+pub use gemm::{gemm_row, gemm_row_ct, gemm_rows};
+pub use spmm::{spmm_row, spmm_row_ptr, spmm_rows};

@@ -1,0 +1,136 @@
+//! CSR SpMM row kernel: `D[j, :] = Σ_k A[j, k] · D1[k, :]`.
+//!
+//! One row of the second operation (lines 8–11 of Listing 1 / 3). The
+//! inner `ccol` axpy is contiguous and auto-vectorized; the row gather
+//! over `A.i[j2]` is the irregular access that tile fusion turns into a
+//! cache hit by keeping the producing `D1` rows resident.
+
+use crate::core::{Dense, Scalar};
+use crate::sparse::Csr;
+
+/// Output-register block width (mirrors `kernels::gemm`).
+const JB: usize = 32;
+
+/// `d_row = Σ a[j,k] · d1[k, :]` (overwrites `d_row`).
+#[inline]
+pub fn spmm_row<T: Scalar>(a: &Csr<T>, j: usize, d1: &Dense<T>, d_row: &mut [T]) {
+    unsafe { spmm_row_ptr(a, j, d1.data.as_ptr(), d1.cols, d_row) }
+}
+
+/// Same, but `D1` is read through a raw pointer (the fused executor
+/// reads rows another tile of the *same* wavefront never writes).
+///
+/// Register-blocked like `gemm_row`: `JB`-wide output accumulators live
+/// in vector registers across the whole nonzero gather, so `d_row` is
+/// stored exactly once (§Perf log #5).
+///
+/// # Safety
+/// `d1` must point at an `n × ccol` row-major buffer whose rows named by
+/// `A`'s row `j` are fully written and no longer mutated.
+#[inline]
+pub unsafe fn spmm_row_ptr<T: Scalar>(a: &Csr<T>, j: usize, d1: *const T, ccol: usize, d_row: &mut [T]) {
+    debug_assert_eq!(d_row.len(), ccol);
+    let (cols, vals) = a.row(j);
+    let mut x0 = 0;
+    while x0 + JB <= ccol {
+        let mut acc = [T::ZERO; JB];
+        for (&k, &v) in cols.iter().zip(vals) {
+            let src = std::slice::from_raw_parts(d1.add(k as usize * ccol + x0), JB);
+            for x in 0..JB {
+                acc[x] += v * src[x];
+            }
+        }
+        d_row[x0..x0 + JB].copy_from_slice(&acc);
+        x0 += JB;
+    }
+    if x0 < ccol {
+        let rem = ccol - x0;
+        for v in &mut d_row[x0..] {
+            *v = T::ZERO;
+        }
+        for (&k, &v) in cols.iter().zip(vals) {
+            let src = std::slice::from_raw_parts(d1.add(k as usize * ccol + x0), rem);
+            for x in 0..rem {
+                d_row[x0 + x] += v * src[x];
+            }
+        }
+    }
+}
+
+/// Row-list form writing through a raw pointer to `D` (rows disjoint
+/// across concurrent callers).
+///
+/// # Safety
+/// As [`spmm_row_ptr`]; additionally `d` must be valid for writes to the
+/// listed rows with no concurrent access.
+#[inline]
+pub unsafe fn spmm_rows<T: Scalar>(
+    a: &Csr<T>,
+    rows: &[u32],
+    d1: *const T,
+    d: *mut T,
+    ccol: usize,
+) {
+    for &j in rows {
+        let out = std::slice::from_raw_parts_mut(d.add(j as usize * ccol), ccol);
+        spmm_row_ptr(a, j as usize, d1, ccol, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Pattern};
+
+    fn naive_spmm(a: &Csr<f64>, d1: &Dense<f64>) -> Dense<f64> {
+        let ad = a.to_dense();
+        let mut d = Dense::zeros(a.rows(), d1.cols);
+        for i in 0..a.rows() {
+            for k in 0..a.cols() {
+                for j in 0..d1.cols {
+                    let v = d.get(i, j) + ad.get(i, k) * d1.get(k, j);
+                    d.set(i, j, v);
+                }
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn spmm_row_matches_naive() {
+        let p = gen::poisson2d(5, 4);
+        let a = Csr::<f64>::with_random_values(p, 1, -1.0, 1.0);
+        let d1 = Dense::<f64>::randn(a.cols(), 7, 2);
+        let expect = naive_spmm(&a, &d1);
+        let mut got = Dense::zeros(a.rows(), 7);
+        for j in 0..a.rows() {
+            spmm_row(&a, j, &d1, got.row_mut(j));
+        }
+        assert!(got.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn ptr_variants_match_safe() {
+        let p = gen::rmat(64, 6, gen::RmatKind::Graph500, 4);
+        let a = Csr::<f64>::with_random_values(p, 2, -1.0, 1.0);
+        let d1 = Dense::<f64>::randn(64, 16, 3);
+        let mut safe = Dense::zeros(64, 16);
+        for j in 0..64 {
+            spmm_row(&a, j, &d1, safe.row_mut(j));
+        }
+        let mut raw = Dense::full(64, 16, 7.0);
+        let rows: Vec<u32> = (0..64).collect();
+        unsafe { spmm_rows(&a, &rows, d1.data.as_ptr(), raw.data.as_mut_ptr(), 16) };
+        assert_eq!(safe, raw);
+    }
+
+    #[test]
+    fn empty_row_zeroes_output() {
+        let p = Pattern::empty(2, 2);
+        let a = Csr::<f32>::from_pattern(p, 1.0);
+        let d1 = Dense::<f32>::randn(2, 3, 5);
+        let mut out = vec![9.0f32; 3];
+        spmm_row(&a, 0, &d1, &mut out);
+        assert_eq!(out, vec![0.0; 3]);
+    }
+}

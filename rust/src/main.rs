@@ -1,0 +1,283 @@
+//! `tilefusion` — CLI for the tile-fusion library.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline crate set):
+//!
+//! ```text
+//! tilefusion suite                         list the synthetic matrix suite
+//! tilefusion gen      --kind rmat --n 4096 --deg 8 --out a.mtx
+//! tilefusion schedule --matrix <name|path.mtx> --bcol 32 --ccol 32
+//! tilefusion run      --matrix <name|path.mtx> --pair gemm-spmm
+//!                     --strategy tile_fusion --bcol 32 --ccol 32 [--verify]
+//! tilefusion gcn      --nodes 4096 --epochs 30 --hidden 32
+//! tilefusion xla      --artifact artifacts/gcn_layer.hlo.txt
+//! tilefusion bench    --matrix poisson2d_m --bcol 32     (quick sanity bench)
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use tile_fusion::coordinator::{Coordinator, Request, Strategy};
+use tile_fusion::exec::{reference::reference, PairOp, ThreadPool};
+use tile_fusion::gnn::model::GcnMode;
+use tile_fusion::gnn::{Gcn, SyntheticGraph};
+use tile_fusion::prelude::*;
+use tile_fusion::profiling;
+use tile_fusion::runtime::XlaRuntime;
+use tile_fusion::sparse::mm_io;
+
+/// Minimal `--key value` flag parser.
+struct Flags {
+    map: HashMap<String, String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut map = HashMap::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            let key = a.strip_prefix("--").ok_or_else(|| anyhow!("expected --flag, got {a:?}"))?;
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(),
+            };
+            map.insert(key.to_string(), val);
+        }
+        Ok(Self { map })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    fn bool(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+}
+
+fn load_matrix(spec: &str, seed: u64) -> Result<Csr<f64>> {
+    if spec.ends_with(".mtx") {
+        return mm_io::read_matrix_market(Path::new(spec));
+    }
+    for m in gen::suite(gen::SuiteScale::Small) {
+        if m.name == spec {
+            return Ok(Csr::with_random_values(m.pattern, seed, -1.0, 1.0));
+        }
+    }
+    bail!("unknown matrix {spec:?}: pass a suite name (see `tilefusion suite`) or a .mtx path")
+}
+
+fn threads_flag(flags: &Flags) -> Result<usize> {
+    flags.usize("threads", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+fn cmd_suite() -> Result<()> {
+    println!("{:<14} {:>10} {:>12} {:<10}", "name", "rows", "nnz", "class");
+    for m in gen::suite(gen::SuiteScale::Small) {
+        println!("{:<14} {:>10} {:>12} {:<10?}", m.name, m.pattern.rows, m.pattern.nnz(), m.class);
+    }
+    println!("\n(Bench-scale versions of the same suite are used by `cargo bench`.)");
+    Ok(())
+}
+
+fn cmd_gen(flags: &Flags) -> Result<()> {
+    let kind = flags.get("kind").unwrap_or("rmat");
+    let n = flags.usize("n", 4096)?;
+    let deg = flags.usize("deg", 8)?;
+    let seed = flags.usize("seed", 1)? as u64;
+    let out = flags.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let pattern = match kind {
+        "rmat" => gen::rmat(n.next_power_of_two(), deg, RmatKind::Graph500, seed),
+        "er" => gen::erdos_renyi(n, deg, seed),
+        "poisson2d" => {
+            let side = (n as f64).sqrt() as usize;
+            gen::poisson2d(side, side)
+        }
+        "poisson3d" => gen::poisson3d((n as f64).cbrt() as usize),
+        "banded" => gen::banded(n, &[1, 2, 3, deg]),
+        other => bail!("unknown kind {other:?}"),
+    };
+    let a = Csr::<f64>::with_random_values(pattern, seed, -1.0, 1.0);
+    mm_io::write_matrix_market(Path::new(out), &a)?;
+    println!("wrote {} ({} rows, {} nnz)", out, a.rows(), a.nnz());
+    Ok(())
+}
+
+fn cmd_schedule(flags: &Flags) -> Result<()> {
+    let a = load_matrix(flags.get("matrix").ok_or_else(|| anyhow!("--matrix required"))?, 1)?;
+    let bcol = flags.usize("bcol", 32)?;
+    let ccol = flags.usize("ccol", bcol)?;
+    let threads = threads_flag(flags)?;
+    let params = SchedulerParams { n_cores: threads, ..Default::default() };
+    let plan = Scheduler::new(params).schedule(&a.pattern, bcol, ccol);
+    let s = &plan.stats;
+    println!("matrix: {} rows, {} nnz", a.rows(), a.nnz());
+    println!("coarse tile size t = {}", s.coarse_tile_size);
+    println!("wavefront tiles   = {:?}", s.n_tiles);
+    println!("fused ratio       = {:.4} (Eq. 2)", s.fused_ratio);
+    println!("fused FLOP ratio  = {:.4} (Fig. 1 metric)", s.fused_flop_ratio);
+    println!("max tile cost     = {} bytes (cacheSize {})", s.max_tile_cost, params.cache_bytes);
+    println!("demoted by split  = {}", s.demoted_by_split);
+    println!("scheduler time    = {:.3} ms", s.build_ns as f64 / 1e6);
+    Ok(())
+}
+
+fn cmd_run(flags: &Flags) -> Result<()> {
+    let a = load_matrix(flags.get("matrix").ok_or_else(|| anyhow!("--matrix required"))?, 1)?;
+    let bcol = flags.usize("bcol", 32)?;
+    let ccol = flags.usize("ccol", bcol)?;
+    let reps = flags.usize("reps", 7)?;
+    let threads = threads_flag(flags)?;
+    let pair = flags.get("pair").unwrap_or("gemm-spmm");
+    let strategy = match flags.get("strategy").unwrap_or("tile_fusion") {
+        "tile_fusion" => Strategy::TileFusion,
+        "unfused" => Strategy::Unfused,
+        "atomic_tiling" => Strategy::AtomicTiling,
+        "overlapped_tiling" => Strategy::OverlappedTiling,
+        "tensor_compiler" => Strategy::TensorStyle,
+        other => bail!("unknown strategy {other:?}"),
+    };
+
+    let mut coord: Coordinator<f64> = Coordinator::new(threads, SchedulerParams::default());
+    coord.register_matrix("A", a.clone());
+    let (b_dense, b_sparse, c) = match pair {
+        "gemm-spmm" => (
+            Some(Dense::<f64>::randn(a.cols(), bcol, 2)),
+            None,
+            Dense::<f64>::randn(bcol, ccol, 3),
+        ),
+        "spmm-spmm" => (None, Some("A".to_string()), Dense::<f64>::randn(a.cols(), ccol, 3)),
+        other => bail!("unknown pair {other:?}"),
+    };
+
+    let flops = match &b_dense {
+        Some(_) => 2 * a.cols() * bcol * ccol + 2 * a.nnz() * ccol,
+        None => 4 * a.nnz() * ccol,
+    };
+
+    let mut last = None;
+    let mut times = Vec::new();
+    for _ in 0..reps {
+        let resp = coord.submit(&Request {
+            a: "A".into(),
+            b_dense: b_dense.clone(),
+            b_sparse: b_sparse.clone(),
+            cs: vec![c.clone()],
+            strategy,
+        })?;
+        times.push(resp.elapsed.as_secs_f64());
+        last = Some(resp);
+    }
+    times.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let median = times[times.len() / 2];
+    println!(
+        "{} {}: median {:.3} ms over {} runs, {:.2} GFLOP/s ({} threads)",
+        pair,
+        strategy.name(),
+        median * 1e3,
+        reps,
+        flops as f64 / median / 1e9,
+        threads
+    );
+
+    if flags.bool("verify") {
+        let resp = last.unwrap();
+        let expect = match &b_dense {
+            Some(b) => reference(&PairOp::gemm_spmm(&a, b), &c),
+            None => reference(&PairOp::spmm_spmm(&a, &a), &c),
+        };
+        let diff = resp.ds[0].rel_fro_diff(&expect);
+        println!("verify: rel Frobenius diff vs serial reference = {diff:.3e}");
+        if diff > 1e-10 {
+            bail!("verification FAILED");
+        }
+        println!("verify: OK");
+    }
+    let (entries, hits, misses) = coord.cache_stats();
+    println!("schedule cache: {entries} entries, {hits} hits, {misses} misses");
+    Ok(())
+}
+
+fn cmd_gcn(flags: &Flags) -> Result<()> {
+    let nodes = flags.usize("nodes", 4096)?.next_power_of_two();
+    let epochs = flags.usize("epochs", 30)?;
+    let hidden = flags.usize("hidden", 32)?;
+    let feat = flags.usize("features", 32)?;
+    let classes = flags.usize("classes", 8)?;
+    let threads = threads_flag(flags)?;
+    let pool = ThreadPool::new(threads);
+
+    println!("generating RMAT graph: {nodes} nodes ...");
+    let g = SyntheticGraph::<f64>::rmat(nodes, 8, feat, classes, 7);
+    println!("nnz(Â) = {}", g.a_hat.nnz());
+    let a = Arc::new(g.a_hat.clone());
+    let mut model = Gcn::new(a, &[feat, hidden, classes], 3, GcnMode::Fused);
+    let t0 = std::time::Instant::now();
+    for e in 0..epochs {
+        let stats = model.train_step(&pool, &g.features, &g.labels, 0.5);
+        if e % 5 == 0 || e + 1 == epochs {
+            println!("epoch {e:>4}: loss {:.4}, train acc {:.3}", stats.loss, stats.accuracy);
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{epochs} epochs in {:.2} s ({:.1} ms/epoch), schedule cache (hits, misses) = {:?}",
+        dt.as_secs_f64(),
+        dt.as_secs_f64() * 1e3 / epochs as f64,
+        model.cache_stats()
+    );
+    Ok(())
+}
+
+fn cmd_xla(flags: &Flags) -> Result<()> {
+    let path = flags.get("artifact").unwrap_or("artifacts/gcn_layer.hlo.txt");
+    let rt = XlaRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let module = rt.load_hlo_text(Path::new(path))?;
+    println!("loaded + compiled {path} as {:?}", module.name);
+    Ok(())
+}
+
+fn cmd_bench_quick(flags: &Flags) -> Result<()> {
+    let threads = threads_flag(flags)?;
+    let a = load_matrix(flags.get("matrix").unwrap_or("poisson2d_m"), 1)?;
+    let bcol = flags.usize("bcol", 32)?;
+    let b = Dense::<f64>::randn(a.cols(), bcol, 2);
+    let c = Dense::<f64>::randn(bcol, bcol, 3);
+    let op = PairOp::gemm_spmm(&a, &b);
+    let pool = ThreadPool::new(threads);
+    use tile_fusion::harness::{time_strategy, Strat};
+    println!("matrix {} rows ({} nnz), bcol=ccol={bcol}, {threads} threads", a.rows(), a.nnz());
+    for s in [Strat::Fused, Strat::Unfused, Strat::Atomic, Strat::Overlapped, Strat::TensorStyle] {
+        let t = time_strategy(s, &op, &pool, &c, 5);
+        let gf = profiling::gflops(op.fusion_op(&c).flops(), t);
+        println!("  {:<20} {:>9.3} ms  {:>7.2} GFLOP/s", s.name(), t.as_secs_f64() * 1e3, gf);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("usage: tilefusion <suite|gen|schedule|run|gcn|xla|bench> [--flags]");
+        std::process::exit(2);
+    };
+    let flags = Flags::parse(rest)?;
+    match cmd.as_str() {
+        "suite" => cmd_suite(),
+        "gen" => cmd_gen(&flags),
+        "schedule" => cmd_schedule(&flags),
+        "run" => cmd_run(&flags),
+        "gcn" => cmd_gcn(&flags),
+        "xla" => cmd_xla(&flags),
+        "bench" => cmd_bench_quick(&flags),
+        other => bail!("unknown subcommand {other:?}"),
+    }
+}

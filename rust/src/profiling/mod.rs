@@ -1,0 +1,110 @@
+//! Measurement utilities: median-of-N timing (the paper reports the
+//! median of 7 runs, §4.1.1), GFLOP/s accounting against *theoretical
+//! unfused FLOPs* (also §4.1.1), and summary statistics (geometric mean —
+//! every headline number in the paper is a gmean of speedups).
+
+use std::time::{Duration, Instant};
+
+/// Median wall time of `reps` timed runs after `warmup` untimed runs.
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Duration {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    times.sort_unstable();
+    times[times.len() / 2]
+}
+
+/// The paper's protocol: median of 7 after 2 warmups.
+pub fn measure_paper<F: FnMut()>(f: F) -> Duration {
+    measure(2, 7, f)
+}
+
+/// GFLOP/s given theoretical FLOPs and a wall time.
+pub fn gflops(flops: usize, t: Duration) -> f64 {
+    flops as f64 / t.as_secs_f64() / 1e9
+}
+
+/// Geometric mean of positive values (1.0 for empty input).
+pub fn gmean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = values.iter().map(|v| v.ln()).sum();
+    (s / values.len() as f64).exp()
+}
+
+/// Arithmetic mean (0.0 for empty input).
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+/// p-th percentile (0 ≤ p ≤ 100) by nearest-rank on a copy.
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    assert!(!values.is_empty());
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Fraction of values strictly greater than 1.0 (the paper's "faster
+/// than baseline for X% of matrices" statements).
+pub fn frac_above_one(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().filter(|&&v| v > 1.0).count() as f64 / values.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gmean_basics() {
+        assert!((gmean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((gmean(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(gmean(&[]), 1.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+    }
+
+    #[test]
+    fn measure_returns_positive() {
+        let mut x = 0u64;
+        let t = measure(1, 3, || {
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert!(t.as_nanos() > 0);
+        assert!(x > 0 || x == 0); // keep side effect alive
+    }
+
+    #[test]
+    fn gflops_scale() {
+        let t = Duration::from_secs(1);
+        assert!((gflops(2_000_000_000, t) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frac_above_one_counts() {
+        assert_eq!(frac_above_one(&[0.5, 1.5, 2.0, 0.9]), 0.5);
+    }
+}

@@ -1,0 +1,99 @@
+//! PJRT/XLA runtime — loads AOT artifacts produced by the Python build
+//! path (`python/compile/aot.py`) and executes them from Rust.
+//!
+//! Interchange is **HLO text** (not serialized `HloModuleProto`): the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 protos with 64-bit
+//! instruction ids, while the text parser reassigns ids (see
+//! DESIGN.md §9 and /opt/xla-example/load_hlo).
+//!
+//! Python never runs at request time: once `artifacts/*.hlo.txt` exist,
+//! the Rust binary is self-contained.
+
+use crate::core::Dense;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client plus the modules it compiled.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled executable (an AOT-lowered JAX function).
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl XlaRuntime {
+    /// CPU PJRT client (the only backend in this image).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModule> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        Ok(LoadedModule {
+            exe,
+            name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+
+    /// Execute with mixed i32/f32 dense inputs; returns every tuple
+    /// element as a flattened f32 vector (artifacts are lowered with
+    /// `return_tuple=True`).
+    pub fn run(&self, module: &LoadedModule, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| {
+                let (lit, dims) = match inp {
+                    Input::F32(data, dims) => (xla::Literal::vec1(*data), *dims),
+                    Input::I32(data, dims) => (xla::Literal::vec1(*data), *dims),
+                };
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).context("reshape input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = module.exe.execute::<xla::Literal>(&literals).context("execute")?;
+        let out = result[0][0].to_literal_sync().context("fetch result")?;
+        // Artifacts are lowered with return_tuple=True.
+        let tuple = out.to_tuple().context("decompose tuple")?;
+        tuple
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("read f32 output"))
+            .collect()
+    }
+}
+
+/// Borrowed typed input: flat data + dims.
+pub enum Input<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl<'a> Input<'a> {
+    pub fn dense(m: &'a Dense<f32>, dims: &'a [usize; 2]) -> Self {
+        Input::F32(&m.data, dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full artifact round-trips are exercised by `tests/runtime_artifacts.rs`
+    // (they need `make artifacts`). Here: client creation only.
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+}

@@ -1,0 +1,193 @@
+//! Step 1 of Algorithm 1 — *coarse tile fusion*.
+//!
+//! Uniform coarse tiles of `t` consecutive first-op iterations are
+//! formed (`t = ctSize` if that still leaves ≥ p tiles per wavefront,
+//! else `⌈|I|/p⌉`); a second-op iteration `j` inside a tile's index range
+//! joins the tile iff **all** its incoming DAG edges fall inside the
+//! tile (line 9); everything else is deferred to wavefront 1, which is
+//! evenly re-balanced by nnz weight (`balance`, line 15).
+
+use crate::dag::IterDag;
+use crate::scheduler::schedule::Tile;
+
+/// Output of step 1: wavefront-0 coarse tiles, the leftover second-op
+/// iterations for wavefront 1, and the chosen uniform tile size `t`.
+pub struct CoarseFusion {
+    pub wf0: Vec<Tile>,
+    pub leftover_j: Vec<u32>,
+    pub tile_size: usize,
+}
+
+/// Line 3 of Algorithm 1: pick the uniform tile size.
+pub fn choose_tile_size(n_first: usize, p: usize, ct_size: usize) -> usize {
+    let p = p.max(1);
+    let ct_size = ct_size.max(1);
+    if n_first.div_ceil(ct_size) >= p {
+        ct_size
+    } else {
+        n_first.div_ceil(p).max(1)
+    }
+}
+
+/// Run step 1 over the dependence DAG.
+pub fn coarse_fuse(g: &IterDag, p: usize, ct_size: usize) -> CoarseFusion {
+    let n_first = g.n_first();
+    let n_second = g.n_second();
+    let t = choose_tile_size(n_first, p, ct_size);
+
+    let mut wf0 = Vec::with_capacity(n_first.div_ceil(t.max(1)).max(1));
+    let mut leftover_j = Vec::new();
+
+    let mut lo = 0usize;
+    while lo < n_first {
+        let hi = (lo + t).min(n_first);
+        let mut j_rows = Vec::new();
+        // Candidate second-op iterations share the tile's index range
+        // (line 8) — the "consecutive iterations" choice that removes
+        // per-iteration tile lookups in the fused code (§3.2).
+        let j_hi = hi.min(n_second);
+        for j in lo..j_hi {
+            if g.deps_within(j, lo, hi) {
+                j_rows.push(j as u32);
+            } else {
+                leftover_j.push(j as u32);
+            }
+        }
+        wf0.push(Tile::new(lo, hi, j_rows));
+        lo = hi;
+    }
+    if wf0.is_empty() {
+        wf0.push(Tile::new(0, 0, Vec::new()));
+    }
+    // Second-op iterations beyond |I| (non-square A) can never be fused
+    // into an index-aligned tile; they belong to wavefront 1.
+    for j in n_first.min(n_second)..n_second {
+        leftover_j.push(j as u32);
+    }
+
+    CoarseFusion { wf0, leftover_j, tile_size: t }
+}
+
+/// Line 15: distribute leftover second-op iterations into wavefront-1
+/// tiles with near-equal *work* (1 + row nnz per iteration), keeping at
+/// least `p` tiles so every core has a workload.
+pub fn balance(g: &IterDag, leftover_j: Vec<u32>, tile_size: usize, p: usize) -> Vec<Tile> {
+    if leftover_j.is_empty() {
+        return Vec::new();
+    }
+    let n_tiles = (leftover_j.len().div_ceil(tile_size.max(1))).max(p.max(1));
+    let total_work: usize = leftover_j.iter().map(|&j| 1 + g.in_degree(j as usize)).sum();
+    let target = (total_work as f64 / n_tiles as f64).max(1.0);
+
+    let mut tiles = Vec::with_capacity(n_tiles);
+    let mut cur = Vec::new();
+    let mut acc = 0usize;
+    let mut remaining_tiles = n_tiles;
+    for (k, &j) in leftover_j.iter().enumerate() {
+        cur.push(j);
+        acc += 1 + g.in_degree(j as usize);
+        let remaining_iters = leftover_j.len() - k - 1;
+        // Close the chunk when it reaches target, but never strand more
+        // tiles than iterations left.
+        if acc as f64 >= target && remaining_tiles > 1 && remaining_iters >= remaining_tiles - 1 {
+            tiles.push(Tile::j_only(std::mem::take(&mut cur)));
+            remaining_tiles -= 1;
+            acc = 0;
+        }
+    }
+    if !cur.is_empty() {
+        tiles.push(Tile::j_only(cur));
+    }
+    tiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Pattern};
+
+    #[test]
+    fn tile_size_prefers_ctsize() {
+        assert_eq!(choose_tile_size(100_000, 8, 2048), 2048); // 49 tiles >= 8
+        assert_eq!(choose_tile_size(1000, 8, 2048), 125); // else ceil(|I|/p)
+        assert_eq!(choose_tile_size(7, 8, 2048), 1);
+        assert_eq!(choose_tile_size(0, 8, 2048), 1);
+    }
+
+    #[test]
+    fn diagonal_fuses_everything() {
+        let a = Pattern::eye(64);
+        let g = IterDag::new(&a);
+        let cf = coarse_fuse(&g, 4, 16);
+        assert_eq!(cf.tile_size, 16);
+        assert_eq!(cf.wf0.len(), 4);
+        assert!(cf.leftover_j.is_empty());
+        let fused: usize = cf.wf0.iter().map(|t| t.j_len()).sum();
+        assert_eq!(fused, 64);
+    }
+
+    #[test]
+    fn banded_leaves_boundary_rows() {
+        // Tridiagonal: row j depends on j-1, j, j+1. Rows at tile borders
+        // cannot fuse.
+        let a = gen::banded(64, &[1]);
+        let g = IterDag::new(&a);
+        let cf = coarse_fuse(&g, 2, 16);
+        assert_eq!(cf.wf0.len(), 4);
+        // Each interior border contributes 2 unfusable rows (last of one
+        // tile, first of next); first row of tile 0 and last of tile 3 fuse.
+        assert_eq!(cf.leftover_j.len(), 6);
+        for t in &cf.wf0 {
+            for &j in &t.j_rows {
+                assert!(g.deps_within(j as usize, t.i_begin as usize, t.i_end as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn rectangular_a_defers_trailing_j() {
+        // A is 6x4: j=4,5 exceed |I| and must end up leftover.
+        let a = Pattern::new(6, 4, vec![0, 1, 2, 3, 4, 5, 6], vec![0, 1, 2, 3, 0, 1]);
+        let g = IterDag::new(&a);
+        let cf = coarse_fuse(&g, 1, 4);
+        assert!(cf.leftover_j.contains(&4));
+        assert!(cf.leftover_j.contains(&5));
+        let fused: usize = cf.wf0.iter().map(|t| t.j_len()).sum();
+        assert_eq!(fused + cf.leftover_j.len(), 6);
+    }
+
+    #[test]
+    fn balance_splits_by_work() {
+        let a = gen::uniform_random(128, 128, 8, 3);
+        let g = IterDag::new(&a);
+        let leftover: Vec<u32> = (0..128).collect();
+        let tiles = balance(&g, leftover, 16, 4);
+        assert!(tiles.len() >= 4);
+        let works: Vec<usize> = tiles
+            .iter()
+            .map(|t| t.j_rows.iter().map(|&j| 1 + g.in_degree(j as usize)).sum())
+            .collect();
+        let &max = works.iter().max().unwrap();
+        let &min = works.iter().min().unwrap();
+        assert!(max <= 3 * min.max(1), "imbalanced: {works:?}");
+        let total: usize = tiles.iter().map(|t| t.j_len()).sum();
+        assert_eq!(total, 128);
+    }
+
+    #[test]
+    fn balance_empty_is_empty() {
+        let a = Pattern::eye(4);
+        let g = IterDag::new(&a);
+        assert!(balance(&g, vec![], 16, 4).is_empty());
+    }
+
+    #[test]
+    fn balance_fewer_iters_than_cores() {
+        let a = Pattern::eye(16);
+        let g = IterDag::new(&a);
+        let tiles = balance(&g, vec![1, 2], 4, 8);
+        let total: usize = tiles.iter().map(|t| t.j_len()).sum();
+        assert_eq!(total, 2);
+        assert!(tiles.iter().all(|t| t.j_len() > 0));
+    }
+}

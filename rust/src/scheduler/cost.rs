@@ -1,0 +1,167 @@
+//! Data-movement cost model — Eq. 3 of the paper:
+//!
+//! ```text
+//! cost(T, bCol, cCol) = (nz(T) + uc(T) + t + |J|) · cCol + idx
+//! ```
+//!
+//! - `nz(T)`  — nonzeros the tile touches from `A` and `B`; when `B` is
+//!   dense its `t × bCol` block is charged instead,
+//! - `uc(T)`  — nonzeros with unique column indices in the tile (the
+//!   distinct `C`/`D1` rows the tile pulls in),
+//! - `t`      — first-op iterations (the produced `D1` rows),
+//! - `|J|`    — fused second-op iterations (the produced `D` rows),
+//! - `idx`    — index traffic (CSR `indptr`/`indices`) when `A`/`B` are
+//!   sparse.
+//!
+//! The returned unit is **bytes** so it compares directly against
+//! `cacheSize` (`L1 + L2 + L3/cores`, §4.1.1).
+
+use super::FusionOp;
+use crate::scheduler::schedule::Tile;
+
+/// Reusable cost evaluator; the stamp array makes `uc` O(nnz in tile)
+/// across arbitrarily many queries without reallocation.
+pub struct CostModel<'a> {
+    op: &'a FusionOp<'a>,
+    elem_bytes: usize,
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+const IDX_BYTES: usize = 4; // u32 column indices
+
+impl<'a> CostModel<'a> {
+    pub fn new(op: &'a FusionOp<'a>, elem_bytes: usize) -> Self {
+        let stamp_len = op.a.cols.max(op.b_cols_dim());
+        Self { op, elem_bytes, stamp: vec![0; stamp_len], epoch: 0 }
+    }
+
+    /// Eq. 3 in bytes for one tile.
+    pub fn tile_cost(&mut self, tile: &Tile) -> usize {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        }
+        let a = self.op.a;
+        let t_len = tile.i_len();
+        let j_len = tile.j_len();
+        let ccol = self.op.ccol;
+
+        // nz from A rows fused into the tile, counting unique columns.
+        let mut nz_a = 0usize;
+        let mut uc = 0usize;
+        for &j in &tile.j_rows {
+            for &c in a.row(j as usize) {
+                nz_a += 1;
+                let s = &mut self.stamp[c as usize];
+                if *s != self.epoch {
+                    *s = self.epoch;
+                    uc += 1;
+                }
+            }
+        }
+
+        // nz and index traffic from the first operation's B rows.
+        let (nz_b, idx_b) = match &self.op.b {
+            super::BSide::Dense { bcol } => (t_len * bcol, 0),
+            super::BSide::Sparse(bp) => {
+                let lo = tile.i_begin as usize;
+                let hi = tile.i_end as usize;
+                let nnz = bp.range_nnz(lo, hi);
+                (nnz, nnz + t_len + 1)
+            }
+        };
+
+        let idx_a = nz_a + j_len + 1;
+        let elems = (nz_a + nz_b + uc + t_len + j_len) * ccol;
+        elems * self.elem_bytes + (idx_a + idx_b) * IDX_BYTES
+    }
+
+    /// Unique columns referenced by a set of `A` rows (exposed for the
+    /// cache-simulator's working-set reports).
+    pub fn unique_cols(&mut self, j_rows: &[u32]) -> usize {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        }
+        let mut uc = 0;
+        for &j in j_rows {
+            for &c in self.op.a.row(j as usize) {
+                let s = &mut self.stamp[c as usize];
+                if *s != self.epoch {
+                    *s = self.epoch;
+                    uc += 1;
+                }
+            }
+        }
+        uc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{BSide, FusionOp};
+    use crate::sparse::Pattern;
+
+    fn op_dense(a: &Pattern, bcol: usize, ccol: usize) -> FusionOp<'_> {
+        FusionOp { a, b: BSide::Dense { bcol }, ccol }
+    }
+
+    #[test]
+    fn dense_b_cost_components() {
+        // A = eye(4); tile covering everything.
+        let a = Pattern::eye(4);
+        let op = op_dense(&a, 8, 2);
+        let mut cm = CostModel::new(&op, 8);
+        let tile = Tile::new(0, 4, vec![0, 1, 2, 3]);
+        // nz_a=4, uc=4, nz_b=4*8=32, t=4, |J|=4 -> elems=(4+32+4+4+4)*2=96
+        // idx_a = 4+4+1 = 9 -> bytes = 96*8 + 9*4 = 804
+        assert_eq!(cm.tile_cost(&tile), 804);
+    }
+
+    #[test]
+    fn sparse_b_adds_index_traffic() {
+        let a = Pattern::eye(4);
+        let op = FusionOp { a: &a, b: BSide::Sparse(&a), ccol: 1 };
+        let mut cm = CostModel::new(&op, 4);
+        let tile = Tile::new(0, 4, vec![0, 1, 2, 3]);
+        // nz_a=4, uc=4, nz_b=4, t=4, j=4 -> elems=20; idx_a=9, idx_b=4+4+1=9
+        assert_eq!(cm.tile_cost(&tile), 20 * 4 + 18 * 4);
+    }
+
+    #[test]
+    fn uc_counts_shared_columns_once() {
+        // Two rows hitting the same column.
+        let a = Pattern::new(2, 4, vec![0, 2, 4], vec![0, 1, 1, 2]);
+        let op = op_dense(&a, 1, 1);
+        let mut cm = CostModel::new(&op, 8);
+        assert_eq!(cm.unique_cols(&[0, 1]), 3); // {0,1,2}
+        assert_eq!(cm.unique_cols(&[0]), 2);
+        assert_eq!(cm.unique_cols(&[1]), 2);
+    }
+
+    #[test]
+    fn cost_monotone_in_tile_size() {
+        let a = crate::sparse::gen::poisson2d(16, 16);
+        let op = op_dense(&a, 32, 32);
+        let mut cm = CostModel::new(&op, 8);
+        let small = Tile::new(0, 32, (0..16).collect());
+        let big = Tile::new(0, 128, (0..96).collect());
+        assert!(cm.tile_cost(&big) > cm.tile_cost(&small));
+    }
+
+    #[test]
+    fn epoch_reset_is_safe() {
+        let a = Pattern::eye(2);
+        let op = op_dense(&a, 1, 1);
+        let mut cm = CostModel::new(&op, 8);
+        let tile = Tile::new(0, 2, vec![0, 1]);
+        let c0 = cm.tile_cost(&tile);
+        for _ in 0..1000 {
+            assert_eq!(cm.tile_cost(&tile), c0);
+        }
+    }
+}

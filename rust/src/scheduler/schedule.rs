@@ -1,0 +1,204 @@
+//! Schedule data model: [`Tile`], the two-wavefront [`FusedSchedule`],
+//! and schedule statistics (fused ratio, Eq. 2 of the paper).
+
+use crate::sparse::Pattern;
+
+/// One fused tile `T_{w,v}`.
+///
+/// `i_begin..i_end` are the *first*-operation iterations owned by this
+/// tile (contiguous — the scheduler fuses consecutive iterations to keep
+/// spatial locality and avoid per-iteration bound checks, §3.2).
+/// `j_rows` are the *second*-operation iterations whose dependencies all
+/// fall inside `i_begin..i_end` (wavefront 0) or leftovers (wavefront 1,
+/// where `i_begin == i_end`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tile {
+    pub i_begin: u32,
+    pub i_end: u32,
+    pub j_rows: Vec<u32>,
+}
+
+impl Tile {
+    pub fn new(i_begin: usize, i_end: usize, j_rows: Vec<u32>) -> Self {
+        debug_assert!(i_begin <= i_end);
+        Self { i_begin: i_begin as u32, i_end: i_end as u32, j_rows }
+    }
+
+    /// A second-wavefront tile: no first-op iterations.
+    pub fn j_only(j_rows: Vec<u32>) -> Self {
+        Self { i_begin: 0, i_end: 0, j_rows }
+    }
+
+    #[inline(always)]
+    pub fn i_len(&self) -> usize {
+        (self.i_end - self.i_begin) as usize
+    }
+
+    #[inline(always)]
+    pub fn j_len(&self) -> usize {
+        self.j_rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.i_len() == 0 && self.j_len() == 0
+    }
+}
+
+/// Statistics of a built schedule.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleStats {
+    /// Eq. 2: fused second-op iterations over all iterations.
+    pub fused_ratio: f64,
+    /// The Fig. 1 metric: share of total FLOPs that *reuse data across
+    /// the operations* inside fused tiles — fused second-op FLOPs plus
+    /// the first-op FLOPs whose `D1` row is consumed in-tile.
+    pub fused_flop_ratio: f64,
+    /// Tiles per wavefront after splitting.
+    pub n_tiles: [usize; 2],
+    /// The uniform coarse tile size `t` chosen by step 1.
+    pub coarse_tile_size: usize,
+    /// Largest post-split tile cost in bytes (cost model units).
+    pub max_tile_cost: usize,
+    /// Iterations demoted from wavefront 0 by step-2 splitting.
+    pub demoted_by_split: usize,
+    /// Scheduler wall time in nanoseconds (Fig. 10 numerator).
+    pub build_ns: u64,
+}
+
+/// The two-wavefront fused schedule (output `T` of Algorithm 1).
+///
+/// Invariants (checked by [`FusedSchedule::validate`]):
+/// 1. wavefront-0 `i` ranges partition `0..n_first` (disjoint, complete);
+/// 2. every `j ∈ 0..n_second` appears in exactly one tile;
+/// 3. each wavefront-0 tile's `j_rows` depend only on its own `i` range;
+/// 4. at most two wavefronts ⇒ exactly one barrier.
+#[derive(Clone, Debug)]
+pub struct FusedSchedule {
+    pub wavefronts: [Vec<Tile>; 2],
+    pub n_first: usize,
+    pub n_second: usize,
+    pub stats: ScheduleStats,
+}
+
+impl FusedSchedule {
+    /// Eq. 2 recomputed from the tiles (stats carries the cached value).
+    pub fn fused_ratio(&self) -> f64 {
+        let fused: usize = self.wavefronts[0].iter().map(|t| t.j_len()).sum();
+        fused as f64 / (self.n_first + self.n_second) as f64
+    }
+
+    /// Total tiles across both wavefronts.
+    pub fn n_tiles(&self) -> usize {
+        self.wavefronts[0].len() + self.wavefronts[1].len()
+    }
+
+    /// Verify every schedule invariant against the pattern that produced
+    /// it. Panics with a description on violation. Test/debug aid — the
+    /// property suite runs this over random matrices.
+    pub fn validate(&self, a: &Pattern) {
+        assert_eq!(self.n_first, a.cols, "n_first mismatch");
+        assert_eq!(self.n_second, a.rows, "n_second mismatch");
+
+        // (1) i-ranges partition 0..n_first.
+        let mut i_seen = vec![false; self.n_first];
+        for t in &self.wavefronts[0] {
+            for i in t.i_begin..t.i_end {
+                assert!(!i_seen[i as usize], "i={i} in two tiles");
+                i_seen[i as usize] = true;
+            }
+        }
+        for t in &self.wavefronts[1] {
+            assert_eq!(t.i_len(), 0, "wavefront 1 must be j-only");
+        }
+        assert!(i_seen.iter().all(|&s| s), "some first-op iteration unscheduled");
+
+        // (2) j partition.
+        let mut j_seen = vec![false; self.n_second];
+        for wf in &self.wavefronts {
+            for t in wf {
+                for &j in &t.j_rows {
+                    assert!(!j_seen[j as usize], "j={j} in two tiles");
+                    j_seen[j as usize] = true;
+                }
+            }
+        }
+        assert!(j_seen.iter().all(|&s| s), "some second-op iteration unscheduled");
+
+        // (3) dependence closure of wavefront-0 tiles.
+        for t in &self.wavefronts[0] {
+            for &j in &t.j_rows {
+                for &dep in a.row(j as usize) {
+                    assert!(
+                        t.i_begin <= dep && dep < t.i_end,
+                        "tile [{}, {}) fused j={} with out-of-tile dep {}",
+                        t.i_begin,
+                        t.i_end,
+                        j,
+                        dep
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_lengths() {
+        let t = Tile::new(4, 8, vec![5, 6]);
+        assert_eq!(t.i_len(), 4);
+        assert_eq!(t.j_len(), 2);
+        assert!(!t.is_empty());
+        assert!(Tile::j_only(vec![]).is_empty());
+    }
+
+    #[test]
+    fn validate_accepts_manual_schedule() {
+        // A = eye(4): each j depends only on i=j.
+        let a = Pattern::eye(4);
+        let s = FusedSchedule {
+            wavefronts: [
+                vec![Tile::new(0, 2, vec![0, 1]), Tile::new(2, 4, vec![2])],
+                vec![Tile::j_only(vec![3])],
+            ],
+            n_first: 4,
+            n_second: 4,
+            stats: ScheduleStats::default(),
+        };
+        s.validate(&a);
+        assert!((s.fused_ratio() - 3.0 / 8.0).abs() < 1e-12);
+        assert_eq!(s.n_tiles(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-tile dep")]
+    fn validate_rejects_dependence_violation() {
+        let a = Pattern::new(2, 2, vec![0, 1, 2], vec![1, 0]); // anti-diagonal
+        let s = FusedSchedule {
+            wavefronts: [
+                vec![Tile::new(0, 1, vec![0]), Tile::new(1, 2, vec![1])],
+                vec![],
+            ],
+            n_first: 2,
+            n_second: 2,
+            stats: ScheduleStats::default(),
+        };
+        s.validate(&a);
+    }
+
+    #[test]
+    #[should_panic(expected = "unscheduled")]
+    fn validate_rejects_missing_iteration() {
+        let a = Pattern::eye(2);
+        let s = FusedSchedule {
+            wavefronts: [vec![Tile::new(0, 2, vec![0])], vec![]],
+            n_first: 2,
+            n_second: 2,
+            stats: ScheduleStats::default(),
+        };
+        s.validate(&a);
+    }
+}

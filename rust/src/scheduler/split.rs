@@ -1,0 +1,191 @@
+//! Step 2 of Algorithm 1 — *fused tile splitting*.
+//!
+//! Tiles whose Eq.-3 data movement exceeds `cacheSize` are split
+//! recursively (binary, on the first-op range for fused tiles and on the
+//! iteration list for j-only tiles) until every tile fits in fast memory.
+//!
+//! One refinement the paper leaves implicit: when a fused tile's `i`
+//! range splits in half, a fused `j` whose dependencies span *both*
+//! halves has no valid sub-tile (tiles of one wavefront must stay
+//! independent), so it is **demoted** to wavefront 1 — trading a little
+//! fused ratio for the locality constraint, never correctness.
+
+use crate::dag::IterDag;
+use crate::scheduler::cost::CostModel;
+use crate::scheduler::schedule::Tile;
+
+/// Result of splitting one wavefront-0 tile.
+pub struct SplitOutcome {
+    pub tiles: Vec<Tile>,
+    pub demoted_j: Vec<u32>,
+}
+
+/// Split a fused (wavefront-0) tile until each piece costs ≤ `budget`
+/// bytes. `max_depth` bounds pathological recursion.
+pub fn split_fused(
+    g: &IterDag,
+    cm: &mut CostModel,
+    tile: Tile,
+    budget: usize,
+    max_depth: u32,
+) -> SplitOutcome {
+    let mut out = SplitOutcome { tiles: Vec::new(), demoted_j: Vec::new() };
+    split_fused_rec(g, cm, tile, budget, max_depth, &mut out);
+    out
+}
+
+fn split_fused_rec(
+    g: &IterDag,
+    cm: &mut CostModel,
+    tile: Tile,
+    budget: usize,
+    depth: u32,
+    out: &mut SplitOutcome,
+) {
+    if cm.tile_cost(&tile) <= budget || depth == 0 {
+        out.tiles.push(tile);
+        return;
+    }
+    let i_len = tile.i_len();
+    if i_len <= 1 {
+        // Cannot halve the i range. The residual cost comes from the
+        // fused j rows: keep the first-op iteration (plus any j fitting
+        // with it) and demote the rest — they run after the barrier.
+        let mut kept = Vec::new();
+        let mut probe = Tile::new(tile.i_begin as usize, tile.i_end as usize, Vec::new());
+        for &j in &tile.j_rows {
+            probe.j_rows.push(j);
+            if cm.tile_cost(&probe) <= budget {
+                kept.push(j);
+            } else {
+                probe.j_rows.pop();
+                out.demoted_j.push(j);
+            }
+        }
+        out.tiles.push(Tile::new(tile.i_begin as usize, tile.i_end as usize, kept));
+        return;
+    }
+
+    let mid = tile.i_begin as usize + i_len / 2;
+    let (lo, hi) = (tile.i_begin as usize, tile.i_end as usize);
+    let mut j_lo = Vec::new();
+    let mut j_hi = Vec::new();
+    for &j in &tile.j_rows {
+        if g.deps_within(j as usize, lo, mid) {
+            j_lo.push(j);
+        } else if g.deps_within(j as usize, mid, hi) {
+            j_hi.push(j);
+        } else {
+            // Dependencies span the cut: no independent sub-tile can own
+            // this iteration — demote to wavefront 1.
+            out.demoted_j.push(j);
+        }
+    }
+    split_fused_rec(g, cm, Tile::new(lo, mid, j_lo), budget, depth - 1, out);
+    split_fused_rec(g, cm, Tile::new(mid, hi, j_hi), budget, depth - 1, out);
+}
+
+/// Split a j-only (wavefront-1) tile by halving its iteration list.
+pub fn split_j_only(cm: &mut CostModel, tile: Tile, budget: usize, max_depth: u32) -> Vec<Tile> {
+    let mut out = Vec::new();
+    split_j_only_rec(cm, tile, budget, max_depth, &mut out);
+    out
+}
+
+fn split_j_only_rec(cm: &mut CostModel, tile: Tile, budget: usize, depth: u32, out: &mut Vec<Tile>) {
+    if cm.tile_cost(&tile) <= budget || depth == 0 || tile.j_len() <= 1 {
+        if !tile.is_empty() {
+            out.push(tile);
+        }
+        return;
+    }
+    let mid = tile.j_len() / 2;
+    let mut j_rows = tile.j_rows;
+    let tail = j_rows.split_off(mid);
+    split_j_only_rec(cm, Tile::j_only(j_rows), budget, depth - 1, out);
+    split_j_only_rec(cm, Tile::j_only(tail), budget, depth - 1, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{BSide, FusionOp};
+    use crate::sparse::{gen, Pattern};
+
+    #[test]
+    fn within_budget_untouched() {
+        let a = Pattern::eye(32);
+        let g = IterDag::new(&a);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol: 4 };
+        let mut cm = CostModel::new(&op, 8);
+        let tile = Tile::new(0, 32, (0..32).collect());
+        let res = split_fused(&g, &mut cm, tile.clone(), usize::MAX, 32);
+        assert_eq!(res.tiles, vec![tile]);
+        assert!(res.demoted_j.is_empty());
+    }
+
+    #[test]
+    fn splits_until_budget_met() {
+        let a = Pattern::eye(256);
+        let g = IterDag::new(&a);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 16 }, ccol: 16 };
+        let mut cm = CostModel::new(&op, 8);
+        let whole = Tile::new(0, 256, (0..256).collect());
+        let budget = cm.tile_cost(&Tile::new(0, 32, (0..32).collect()));
+        let res = split_fused(&g, &mut cm, whole, budget, 32);
+        assert!(res.tiles.len() >= 8);
+        for t in &res.tiles {
+            assert!(cm.tile_cost(t) <= budget, "tile over budget");
+        }
+        // Diagonal pattern: nothing spans a cut, nothing demoted.
+        assert!(res.demoted_j.is_empty());
+        let total_i: usize = res.tiles.iter().map(|t| t.i_len()).sum();
+        assert_eq!(total_i, 256);
+    }
+
+    #[test]
+    fn spanning_j_demoted() {
+        // Tridiagonal: j at the cut midpoint spans both halves.
+        let a = gen::banded(64, &[1]);
+        let g = IterDag::new(&a);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 64 }, ccol: 64 };
+        let mut cm = CostModel::new(&op, 8);
+        let j_rows: Vec<u32> = (1..63).collect(); // interior fusable rows
+        let whole = Tile::new(0, 64, j_rows);
+        let budget = cm.tile_cost(&Tile::new(0, 16, (1..15).collect()));
+        let res = split_fused(&g, &mut cm, whole, budget, 32);
+        assert!(!res.demoted_j.is_empty());
+        // All demotions + kept = original
+        let kept: usize = res.tiles.iter().map(|t| t.j_len()).sum();
+        assert_eq!(kept + res.demoted_j.len(), 62);
+        // Dependence closure still holds per tile.
+        for t in &res.tiles {
+            for &j in &t.j_rows {
+                assert!(g.deps_within(j as usize, t.i_begin as usize, t.i_end as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn j_only_split_partitions() {
+        let a = gen::uniform_random(128, 128, 8, 1);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 32 }, ccol: 32 };
+        let mut cm = CostModel::new(&op, 8);
+        let tile = Tile::j_only((0..128).collect());
+        let budget = cm.tile_cost(&Tile::j_only((0..16).collect()));
+        let tiles = split_j_only(&mut cm, tile, budget, 32);
+        assert!(tiles.len() > 1);
+        let total: usize = tiles.iter().map(|t| t.j_len()).sum();
+        assert_eq!(total, 128);
+    }
+
+    #[test]
+    fn single_iteration_never_lost() {
+        let a = gen::uniform_random(4, 4, 4, 2);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 8 }, ccol: 8 };
+        let mut cm = CostModel::new(&op, 8);
+        let tiles = split_j_only(&mut cm, Tile::j_only(vec![2]), 1, 32);
+        assert_eq!(tiles.len(), 1);
+        assert_eq!(tiles[0].j_rows, vec![2]);
+    }
+}

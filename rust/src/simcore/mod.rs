@@ -1,0 +1,250 @@
+//! Multicore execution model — the parallel-hardware substitute
+//! (DESIGN.md §2: this box has one core; the paper's Fig. 8 load-balance
+//! and 40/64-core scalability claims are *modelled* here).
+//!
+//! Each tile is charged `max(compute, memory)` cycles under a roofline
+//! core model; tiles of one wavefront are list-scheduled onto `p` cores
+//! in schedule order (greedy earliest-finishing core — the behaviour of
+//! the dynamic OpenMP scheduler the fused code uses); wavefronts are
+//! separated by barriers. Potential gain is the paper's metric: the mean
+//! difference between the slowest thread and every other thread.
+
+use crate::scheduler::{cost::CostModel, BSide, FusedSchedule, FusionOp, Tile};
+
+/// Roofline-style core description.
+#[derive(Clone, Copy, Debug)]
+pub struct MachineModel {
+    pub n_cores: usize,
+    /// Peak FLOPs per cycle per core (e.g. 16 for AVX-512 f64 FMA).
+    pub flops_per_cycle: f64,
+    /// Sustained bytes per cycle per core from the next level down.
+    pub bytes_per_cycle: f64,
+}
+
+impl MachineModel {
+    /// CascadeLake-ish: 2×20 cores, AVX-512, ~4 B/cycle/core sustained.
+    pub fn cascadelake() -> Self {
+        Self { n_cores: 40, flops_per_cycle: 16.0, bytes_per_cycle: 4.0 }
+    }
+
+    /// EPYC-ish: 2×32 cores, AVX2, larger L3 → 5 B/cycle/core.
+    pub fn epyc() -> Self {
+        Self { n_cores: 64, flops_per_cycle: 8.0, bytes_per_cycle: 5.0 }
+    }
+
+    fn tile_cycles(&self, w: &TileWork) -> f64 {
+        (w.flops / self.flops_per_cycle).max(w.bytes / self.bytes_per_cycle)
+    }
+}
+
+/// Work of one tile in model units.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TileWork {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// Result of simulating one schedule on the machine model.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub makespan_cycles: f64,
+    /// Busy cycles per core, summed across wavefronts.
+    pub per_core_cycles: Vec<f64>,
+    /// Paper Fig. 8 metric: mean over threads of (max − tᵢ), cycles.
+    pub potential_gain_cycles: f64,
+    /// PG normalized by makespan (0 = perfectly balanced).
+    pub potential_gain_ratio: f64,
+    pub n_wavefronts: usize,
+}
+
+/// List-schedule wavefronts of tile works onto `m.n_cores` cores.
+pub fn simulate(wavefronts: &[Vec<TileWork>], m: &MachineModel) -> SimReport {
+    let p = m.n_cores.max(1);
+    let mut per_core = vec![0.0f64; p];
+    let mut makespan = 0.0;
+    let mut pg_total = 0.0;
+    let mut n_wf = 0;
+    for wf in wavefronts {
+        if wf.is_empty() {
+            continue;
+        }
+        n_wf += 1;
+        let mut load = vec![0.0f64; p];
+        for w in wf {
+            // Earliest-finishing core takes the next tile (dynamic omp).
+            let (idx, _) = load
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            load[idx] += m.tile_cycles(w);
+        }
+        let max = load.iter().cloned().fold(0.0, f64::max);
+        let pg = load.iter().map(|&t| max - t).sum::<f64>() / p as f64;
+        pg_total += pg;
+        makespan += max;
+        for (c, l) in per_core.iter_mut().zip(&load) {
+            *c += l;
+        }
+    }
+    SimReport {
+        makespan_cycles: makespan,
+        per_core_cycles: per_core,
+        potential_gain_cycles: pg_total,
+        potential_gain_ratio: if makespan > 0.0 { pg_total / makespan } else { 0.0 },
+        n_wavefronts: n_wf,
+    }
+}
+
+fn tile_flops(tile: &Tile, op: &FusionOp) -> f64 {
+    let first: usize = match op.b {
+        BSide::Dense { bcol } => 2 * tile.i_len() * bcol * op.ccol,
+        BSide::Sparse(bp) => {
+            2 * bp.range_nnz(tile.i_begin as usize, tile.i_end as usize) * op.ccol
+        }
+    };
+    let second: usize =
+        tile.j_rows.iter().map(|&j| 2 * op.a.row_nnz(j as usize) * op.ccol).sum();
+    (first + second) as f64
+}
+
+/// Extract per-tile works from a fused schedule (bytes via Eq. 3).
+pub fn workloads_fused(plan: &FusedSchedule, op: &FusionOp, elem_bytes: usize) -> Vec<Vec<TileWork>> {
+    let mut cm = CostModel::new(op, elem_bytes);
+    plan.wavefronts
+        .iter()
+        .map(|wf| {
+            wf.iter()
+                .map(|t| TileWork { flops: tile_flops(t, op), bytes: cm.tile_cost(t) as f64 })
+                .collect()
+        })
+        .collect()
+}
+
+/// Extract works for the unfused pair: both operations chunked by
+/// `chunk` rows, two wavefronts (the library-call barrier).
+pub fn workloads_unfused(op: &FusionOp, chunk: usize, elem_bytes: usize) -> Vec<Vec<TileWork>> {
+    let chunk = chunk.max(1);
+    let n_first = op.a.cols;
+    let n_second = op.a.rows;
+    let eb = elem_bytes as f64;
+    let mut wf0 = Vec::new();
+    let mut lo = 0;
+    while lo < n_first {
+        let hi = (lo + chunk).min(n_first);
+        let (flops, bytes) = match op.b {
+            BSide::Dense { bcol } => (
+                (2 * (hi - lo) * bcol * op.ccol) as f64,
+                ((hi - lo) * bcol + (hi - lo) * op.ccol) as f64 * eb,
+            ),
+            BSide::Sparse(bp) => {
+                let nnz = bp.range_nnz(lo, hi);
+                ((2 * nnz * op.ccol) as f64, (nnz * op.ccol + (hi - lo) * op.ccol) as f64 * eb)
+            }
+        };
+        wf0.push(TileWork { flops, bytes });
+        lo = hi;
+    }
+    let mut wf1 = Vec::new();
+    let mut lo = 0;
+    while lo < n_second {
+        let hi = (lo + chunk).min(n_second);
+        let nnz = op.a.range_nnz(lo, hi);
+        // Unfused second op re-reads D1 rows from memory: nnz gathers.
+        wf1.push(TileWork {
+            flops: (2 * nnz * op.ccol) as f64,
+            bytes: (nnz * op.ccol + (hi - lo) * op.ccol) as f64 * eb + (nnz * 4) as f64,
+        });
+        lo = hi;
+    }
+    vec![wf0, wf1]
+}
+
+/// Makespans over a core sweep (the scalability claim: "scalable to 40
+/// and 64 cores").
+pub fn scalability_curve(
+    wavefronts: &[Vec<TileWork>],
+    base: &MachineModel,
+    cores: &[usize],
+) -> Vec<(usize, f64)> {
+    cores
+        .iter()
+        .map(|&p| {
+            let m = MachineModel { n_cores: p, ..*base };
+            (p, simulate(wavefronts, &m).makespan_cycles)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{Scheduler, SchedulerParams};
+    use crate::sparse::gen;
+
+    fn mm(p: usize) -> MachineModel {
+        MachineModel { n_cores: p, flops_per_cycle: 16.0, bytes_per_cycle: 4.0 }
+    }
+
+    #[test]
+    fn equal_tiles_balance_perfectly() {
+        let wf = vec![vec![TileWork { flops: 100.0, bytes: 10.0 }; 8]];
+        let r = simulate(&wf, &mm(4));
+        assert!(r.potential_gain_cycles < 1e-9);
+        assert!((r.makespan_cycles - 2.0 * 100.0 / 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn one_giant_tile_causes_imbalance() {
+        let mut tiles = vec![TileWork { flops: 10.0, bytes: 0.0 }; 7];
+        tiles.push(TileWork { flops: 10_000.0, bytes: 0.0 });
+        let r = simulate(&[tiles], &mm(4));
+        assert!(r.potential_gain_ratio > 0.5, "pg={}", r.potential_gain_ratio);
+    }
+
+    #[test]
+    fn memory_bound_tiles_use_bandwidth_term() {
+        let wf = vec![vec![TileWork { flops: 1.0, bytes: 4000.0 }]];
+        let r = simulate(&wf, &mm(1));
+        assert!((r.makespan_cycles - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fused_schedule_balances_on_suite_matrix() {
+        let a = gen::rmat(4096, 8, gen::RmatKind::Graph500, 5);
+        let params = SchedulerParams { n_cores: 20, ct_size: 256, ..Default::default() };
+        let plan = Scheduler::new(params).schedule(&a, 32, 32);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 32 }, ccol: 32 };
+        let works = workloads_fused(&plan, &op, 8);
+        let r = simulate(&works, &mm(20));
+        // Paper Fig. 8: tile fusion PG close to unfused, modest ratio.
+        assert!(r.potential_gain_ratio < 0.5, "pg ratio {}", r.potential_gain_ratio);
+        assert_eq!(r.n_wavefronts, 2);
+    }
+
+    #[test]
+    fn scalability_is_monotone() {
+        let a = gen::poisson2d(64, 64);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 64 }, ccol: 64 };
+        let params = SchedulerParams { n_cores: 8, ct_size: 256, ..Default::default() };
+        let plan = Scheduler::new(params).schedule(&a, 64, 64);
+        let works = workloads_fused(&plan, &op, 8);
+        let curve = scalability_curve(&works, &mm(1), &[1, 2, 4, 8, 16]);
+        for w in curve.windows(2) {
+            assert!(w[1].1 <= w[0].1 * 1.001, "not scaling: {curve:?}");
+        }
+        // Meaningful speedup 1 → 16 cores.
+        assert!(curve[0].1 / curve.last().unwrap().1 > 4.0);
+    }
+
+    #[test]
+    fn unfused_has_two_wavefronts() {
+        let a = gen::banded(1024, &[1, 4]);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 32 }, ccol: 32 };
+        let works = workloads_unfused(&op, 64, 8);
+        assert_eq!(works.len(), 2);
+        let r = simulate(&works, &mm(8));
+        assert_eq!(r.n_wavefronts, 2);
+        assert!(r.makespan_cycles > 0.0);
+    }
+}

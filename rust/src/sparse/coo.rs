@@ -1,0 +1,122 @@
+//! Coordinate-format builder: accumulate triplets in any order, then
+//! compress to CSR (sorting rows/columns, summing duplicates).
+
+use super::csr::{Csr, Pattern};
+use crate::core::Scalar;
+
+/// Triplet (COO) accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    entries: Vec<(u32, u32)>,
+    values: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, entries: Vec::new(), values: Vec::new() }
+    }
+
+    /// Add `v` at (i, j); duplicates are summed at compression time.
+    #[inline]
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols, "({i},{j}) out of {}x{}", self.rows, self.cols);
+        self.entries.push((i as u32, j as u32));
+        self.values.push(v);
+    }
+
+    /// Add both (i, j) and (j, i) — symmetric assembly.
+    #[inline]
+    pub fn push_sym(&mut self, i: usize, j: usize, v: f64) {
+        self.push(i, j, v);
+        if i != j {
+            self.push(j, i, v);
+        }
+    }
+
+    pub fn nnz_upper_bound(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Compress to CSR with values, summing duplicate coordinates.
+    pub fn to_csr<T: Scalar>(&self) -> Csr<T> {
+        let mut order: Vec<u32> = (0..self.entries.len() as u32).collect();
+        order.sort_unstable_by_key(|&k| self.entries[k as usize]);
+
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices: Vec<u32> = Vec::with_capacity(order.len());
+        let mut data: Vec<T> = Vec::with_capacity(order.len());
+
+        let mut prev: Option<(u32, u32)> = None;
+        for &k in &order {
+            let (i, j) = self.entries[k as usize];
+            let v = self.values[k as usize];
+            if prev == Some((i, j)) {
+                let last = data.last_mut().unwrap();
+                *last += T::from_f64(v);
+            } else {
+                indices.push(j);
+                data.push(T::from_f64(v));
+                indptr[i as usize + 1] += 1;
+                prev = Some((i, j));
+            }
+        }
+        for i in 0..self.rows {
+            indptr[i + 1] += indptr[i];
+        }
+        Csr::new(Pattern::new(self.rows, self.cols, indptr, indices), data)
+    }
+
+    /// Compress to a value-free pattern (duplicates collapse).
+    pub fn to_pattern(&self) -> Pattern {
+        self.to_csr::<f64>().pattern
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_sorted_csr() {
+        let mut c = Coo::new(3, 3);
+        c.push(2, 1, 1.0);
+        c.push(0, 2, 2.0);
+        c.push(0, 0, 3.0);
+        let a: Csr<f64> = c.to_csr();
+        assert_eq!(a.pattern.row(0), &[0, 2]);
+        assert_eq!(a.row(0).1, &[3.0, 2.0]);
+        assert_eq!(a.pattern.row(1), &[] as &[u32]);
+        assert_eq!(a.pattern.row(2), &[1]);
+    }
+
+    #[test]
+    fn sums_duplicates() {
+        let mut c = Coo::new(2, 2);
+        c.push(0, 0, 1.0);
+        c.push(0, 0, 2.5);
+        c.push(1, 1, 1.0);
+        let a: Csr<f64> = c.to_csr();
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.row(0).1, &[3.5]);
+    }
+
+    #[test]
+    fn symmetric_push() {
+        let mut c = Coo::new(3, 3);
+        c.push_sym(0, 2, 4.0);
+        c.push_sym(1, 1, 5.0);
+        let a: Csr<f64> = c.to_csr();
+        assert_eq!(a.nnz(), 3);
+        assert!(a.pattern.is_structurally_symmetric());
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let c = Coo::new(4, 4);
+        let p = c.to_pattern();
+        assert_eq!(p.nnz(), 0);
+        assert_eq!(p.indptr, vec![0; 5]);
+    }
+}

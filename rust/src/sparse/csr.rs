@@ -1,0 +1,304 @@
+//! Compressed Sparse Row storage: [`Pattern`] (structure only — what the
+//! scheduler sees) and [`Csr`] (structure + values — what executors run).
+
+use crate::core::Scalar;
+
+/// Value-free CSR structure of a sparse matrix.
+///
+/// `indices[indptr[i]..indptr[i+1]]` are the (sorted, unique) column
+/// indices of row `i`. Columns are `u32` — every matrix in scope has
+/// far fewer than 2^32 columns and halving index bytes matters for the
+/// cost model and the cache footprint.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pattern {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+}
+
+impl Pattern {
+    /// Build from parts, validating the CSR invariants.
+    pub fn new(rows: usize, cols: usize, indptr: Vec<usize>, indices: Vec<u32>) -> Self {
+        assert_eq!(indptr.len(), rows + 1, "indptr length must be rows+1");
+        assert_eq!(*indptr.last().unwrap(), indices.len(), "indptr[-1] must equal nnz");
+        debug_assert!(indptr.windows(2).all(|w| w[0] <= w[1]), "indptr must be monotone");
+        debug_assert!(indices.iter().all(|&c| (c as usize) < cols), "column out of bounds");
+        Self { rows, cols, indptr, indices }
+    }
+
+    /// Empty pattern (no nonzeros).
+    pub fn empty(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, indptr: vec![0; rows + 1], indices: Vec::new() }
+    }
+
+    /// Identity pattern (diagonal).
+    pub fn eye(n: usize) -> Self {
+        Self {
+            rows: n,
+            cols: n,
+            indptr: (0..=n).collect(),
+            indices: (0..n as u32).collect(),
+        }
+    }
+
+    #[inline(always)]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Column indices of row `i`.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.indices[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    #[inline(always)]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// nnz of a contiguous row range (O(1)).
+    #[inline(always)]
+    pub fn range_nnz(&self, lo: usize, hi: usize) -> usize {
+        self.indptr[hi] - self.indptr[lo]
+    }
+
+    /// Average nonzeros per row.
+    pub fn avg_row_nnz(&self) -> f64 {
+        self.nnz() as f64 / self.rows.max(1) as f64
+    }
+
+    /// Structural transpose (CSR of Aᵀ).
+    pub fn transpose(&self) -> Pattern {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; self.nnz()];
+        for i in 0..self.rows {
+            for &c in self.row(i) {
+                indices[cursor[c as usize]] = i as u32;
+                cursor[c as usize] += 1;
+            }
+        }
+        Pattern::new(self.cols, self.rows, indptr, indices)
+    }
+
+    /// Structural symmetry check (pattern equals its transpose).
+    pub fn is_structurally_symmetric(&self) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        let t = self.transpose();
+        self.indptr == t.indptr && self.indices == t.indices
+    }
+
+    /// A stable 64-bit hash of the structure. The coordinator keys its
+    /// schedule cache on this (same pattern ⇒ same schedule, §3).
+    pub fn structure_hash(&self) -> u64 {
+        // FNV-1a over dims, indptr and indices.
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        };
+        eat(self.rows as u64);
+        eat(self.cols as u64);
+        for &p in &self.indptr {
+            eat(p as u64);
+        }
+        for &c in &self.indices {
+            eat(c as u64);
+        }
+        h
+    }
+}
+
+/// CSR matrix with values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr<T> {
+    pub pattern: Pattern,
+    pub data: Vec<T>,
+}
+
+impl<T: Scalar> Csr<T> {
+    pub fn new(pattern: Pattern, data: Vec<T>) -> Self {
+        assert_eq!(pattern.nnz(), data.len(), "values must match nnz");
+        Self { pattern, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Self::new(Pattern::eye(n), vec![T::ONE; n])
+    }
+
+    /// Pattern with all values set to `v`.
+    pub fn from_pattern(pattern: Pattern, v: T) -> Self {
+        let nnz = pattern.nnz();
+        Self::new(pattern, vec![v; nnz])
+    }
+
+    /// Pattern with deterministic pseudo-random values in (lo, hi).
+    pub fn with_random_values(pattern: Pattern, seed: u64, lo: f64, hi: f64) -> Self {
+        let mut rng = crate::testing::rng::XorShift64::new(seed);
+        let data = (0..pattern.nnz())
+            .map(|_| T::from_f64(lo + (hi - lo) * rng.next_f64()))
+            .collect();
+        Self::new(pattern, data)
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.pattern.rows
+    }
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.pattern.cols
+    }
+    #[inline(always)]
+    pub fn nnz(&self) -> usize {
+        self.pattern.nnz()
+    }
+
+    /// (column indices, values) of row `i`.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> (&[u32], &[T]) {
+        let lo = self.pattern.indptr[i];
+        let hi = self.pattern.indptr[i + 1];
+        (&self.pattern.indices[lo..hi], &self.data[lo..hi])
+    }
+
+    /// Numeric transpose.
+    pub fn transpose(&self) -> Csr<T> {
+        let p = &self.pattern;
+        let mut counts = vec![0usize; p.cols + 1];
+        for &c in &p.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..p.cols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; p.nnz()];
+        let mut data = vec![T::ZERO; p.nnz()];
+        for i in 0..p.rows {
+            for (k, &c) in p.row(i).iter().enumerate() {
+                let pos = cursor[c as usize];
+                indices[pos] = i as u32;
+                data[pos] = self.data[p.indptr[i] + k];
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr::new(Pattern::new(p.cols, p.rows, indptr, indices), data)
+    }
+
+    /// Dense copy (tests / tiny matrices only).
+    pub fn to_dense(&self) -> crate::core::Dense<T> {
+        let mut d = crate::core::Dense::zeros(self.rows(), self.cols());
+        for i in 0..self.rows() {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let cur = d.get(i, c as usize);
+                d.set(i, c as usize, cur + v);
+            }
+        }
+        d
+    }
+
+    /// Cast values to another scalar type (e.g. f64 suite → f32 runs).
+    pub fn cast<U: Scalar>(&self) -> Csr<U> {
+        Csr::new(self.pattern.clone(), self.data.iter().map(|v| U::from_f64(v.to_f64())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Pattern {
+        // [[x . x], [. x .], [x x x]]
+        Pattern::new(3, 3, vec![0, 2, 3, 6], vec![0, 2, 1, 0, 1, 2])
+    }
+
+    #[test]
+    fn row_access() {
+        let p = small();
+        assert_eq!(p.row(0), &[0, 2]);
+        assert_eq!(p.row(1), &[1]);
+        assert_eq!(p.row_nnz(2), 3);
+        assert_eq!(p.range_nnz(0, 2), 3);
+        assert_eq!(p.nnz(), 6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let p = small();
+        assert_eq!(p.transpose().transpose(), p);
+    }
+
+    #[test]
+    fn transpose_correct() {
+        let p = small();
+        let t = p.transpose();
+        // col 0 of p has rows 0 and 2
+        assert_eq!(t.row(0), &[0, 2]);
+        assert_eq!(t.row(1), &[1, 2]);
+        assert_eq!(t.row(2), &[0, 2]);
+    }
+
+    #[test]
+    fn symmetry_detection() {
+        assert!(Pattern::eye(5).is_structurally_symmetric());
+        let asym = Pattern::new(2, 2, vec![0, 1, 1], vec![1]);
+        assert!(!asym.is_structurally_symmetric());
+    }
+
+    #[test]
+    fn structure_hash_distinguishes() {
+        let a = small();
+        let b = Pattern::eye(3);
+        assert_ne!(a.structure_hash(), b.structure_hash());
+        assert_eq!(a.structure_hash(), small().structure_hash());
+    }
+
+    #[test]
+    fn csr_numeric_transpose() {
+        let p = small();
+        let a = Csr::<f64>::with_random_values(p, 1, -1.0, 1.0);
+        let t = a.transpose();
+        let ad = a.to_dense();
+        let td = t.to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(ad.get(i, j), td.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn eye_dense() {
+        let e = Csr::<f32>::eye(3).to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(e.get(i, j), if i == j { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn cast_preserves_structure() {
+        let a = Csr::<f64>::with_random_values(small(), 2, 0.0, 1.0);
+        let b: Csr<f32> = a.cast();
+        assert_eq!(a.pattern, b.pattern);
+        assert!((a.data[0] - b.data[0] as f64).abs() < 1e-7);
+    }
+}

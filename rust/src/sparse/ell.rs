@@ -1,0 +1,176 @@
+//! Blocked-ELL conversion — the Rust mirror of
+//! `python/compile/kernels/ell.py`.
+//!
+//! The AOT artifacts take `A` as `(idx: i32[nb, K], vals: f32[nb, K, tm,
+//! tm])`; this module converts a [`Csr`] into exactly the layout the
+//! Python side produced at lowering time (slots ascending by column
+//! block, zero-padded), so Rust-built graphs feed the compiled HLO.
+
+use super::csr::Csr;
+use crate::core::Scalar;
+use anyhow::{bail, Result};
+
+/// Blocked-ELL operand ready for the XLA runtime.
+#[derive(Clone, Debug)]
+pub struct BlockedEll {
+    pub n: usize,
+    pub tm: usize,
+    pub k_slots: usize,
+    /// `(nb, k_slots)` row-major.
+    pub idx: Vec<i32>,
+    /// `(nb, k_slots, tm, tm)` row-major.
+    pub vals: Vec<f32>,
+}
+
+impl BlockedEll {
+    pub fn nb(&self) -> usize {
+        self.n / self.tm
+    }
+
+    pub fn idx_dims(&self) -> [usize; 2] {
+        [self.nb(), self.k_slots]
+    }
+
+    pub fn vals_dims(&self) -> [usize; 4] {
+        [self.nb(), self.k_slots, self.tm, self.tm]
+    }
+
+    /// Dense reconstruction (tests).
+    pub fn to_dense(&self) -> crate::core::Dense<f32> {
+        let mut out = crate::core::Dense::<f32>::zeros(self.n, self.n);
+        let (nb, k, tm) = (self.nb(), self.k_slots, self.tm);
+        for ib in 0..nb {
+            for s in 0..k {
+                let jb = self.idx[ib * k + s] as usize;
+                let base = ((ib * k + s) * tm) * tm;
+                let blk = &self.vals[base..base + tm * tm];
+                if blk.iter().all(|&v| v == 0.0) {
+                    continue;
+                }
+                for r in 0..tm {
+                    for c in 0..tm {
+                        let cur = out.get(ib * tm + r, jb * tm + c);
+                        out.set(ib * tm + r, jb * tm + c, cur + blk[r * tm + c]);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Smallest `k_slots` that fits `a` for row-blocks of `tm`.
+pub fn min_k_slots<T: Scalar>(a: &Csr<T>, tm: usize) -> usize {
+    let nb = a.rows() / tm;
+    let mut best = 1;
+    let mut blocks = Vec::new();
+    for ib in 0..nb {
+        blocks.clear();
+        for r in ib * tm..(ib + 1) * tm {
+            for &c in a.pattern.row(r) {
+                blocks.push(c as usize / tm);
+            }
+        }
+        blocks.sort_unstable();
+        blocks.dedup();
+        best = best.max(blocks.len());
+    }
+    best
+}
+
+/// Convert CSR → blocked-ELL with exactly `k_slots` slots per row-block.
+pub fn csr_to_blocked_ell<T: Scalar>(a: &Csr<T>, tm: usize, k_slots: usize) -> Result<BlockedEll> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("square matrices only, got {}x{}", n, a.cols());
+    }
+    if n % tm != 0 {
+        bail!("n={n} not divisible by tm={tm}");
+    }
+    let nb = n / tm;
+    let mut idx = vec![0i32; nb * k_slots];
+    let mut vals = vec![0f32; nb * k_slots * tm * tm];
+    let mut blocks: Vec<usize> = Vec::new();
+    for ib in 0..nb {
+        blocks.clear();
+        for r in ib * tm..(ib + 1) * tm {
+            for &c in a.pattern.row(r) {
+                blocks.push(c as usize / tm);
+            }
+        }
+        blocks.sort_unstable();
+        blocks.dedup();
+        if blocks.len() > k_slots {
+            bail!("row-block {ib} touches {} column blocks > k_slots={k_slots}", blocks.len());
+        }
+        for (s, &jb) in blocks.iter().enumerate() {
+            idx[ib * k_slots + s] = jb as i32;
+            // Fill the tm×tm block from CSR rows.
+            for r in 0..tm {
+                let (cols, data) = a.row(ib * tm + r);
+                for (&c, &v) in cols.iter().zip(data) {
+                    let c = c as usize;
+                    if c / tm == jb {
+                        let base = ((ib * k_slots + s) * tm + r) * tm;
+                        vals[base + (c - jb * tm)] = v.to_f64() as f32;
+                    }
+                }
+            }
+        }
+    }
+    Ok(BlockedEll { n, tm, k_slots, idx, vals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn roundtrip_poisson() {
+        let a = gen::gcn_normalize::<f32>(&gen::poisson2d(8, 4));
+        let k = min_k_slots(&a, 4);
+        let ell = csr_to_blocked_ell(&a, 4, k).unwrap();
+        let dense = ell.to_dense();
+        let orig = a.to_dense();
+        assert!(dense.max_abs_diff(&orig) < 1e-6);
+    }
+
+    #[test]
+    fn slots_ascending_matches_python_convention() {
+        let a = gen::gcn_normalize::<f32>(&gen::banded(32, &[1, 8]));
+        let k = min_k_slots(&a, 8);
+        let ell = csr_to_blocked_ell(&a, 8, k + 1).unwrap();
+        for ib in 0..ell.nb() {
+            let row = &ell.idx[ib * ell.k_slots..(ib + 1) * ell.k_slots];
+            let used: Vec<i32> = row
+                .iter()
+                .enumerate()
+                .filter(|(s, _)| {
+                    let base = ((ib * ell.k_slots + s) * ell.tm) * ell.tm;
+                    ell.vals[base..base + ell.tm * ell.tm].iter().any(|&v| v != 0.0)
+                })
+                .map(|(_, &j)| j)
+                .collect();
+            let mut sorted = used.clone();
+            sorted.sort_unstable();
+            assert_eq!(used, sorted);
+        }
+    }
+
+    #[test]
+    fn overflow_is_error() {
+        let a = crate::sparse::Csr::<f32>::from_pattern(gen::uniform_random(32, 32, 16, 1), 1.0);
+        assert!(csr_to_blocked_ell(&a, 4, 1).is_err());
+    }
+
+    #[test]
+    fn min_k_slots_sufficient() {
+        let a = crate::sparse::Csr::<f32>::from_pattern(gen::rmat(64, 6, gen::RmatKind::Mild, 2), 1.0);
+        let k = min_k_slots(&a, 8);
+        assert!(csr_to_blocked_ell(&a, 8, k).is_ok());
+        if k > 1 {
+            assert!(csr_to_blocked_ell(&a, 8, k - 1).is_err());
+        }
+    }
+}

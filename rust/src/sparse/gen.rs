@@ -1,0 +1,368 @@
+//! Synthetic matrix suite — the offline stand-in for SuiteSparse
+//! (DESIGN.md §2).
+//!
+//! The paper's dataset has two families whose *structure* drives every
+//! reported trend:
+//!
+//! 1. **Scientific / SPD** (132 matrices): mesh-like, banded, strong
+//!    diagonal locality ⇒ high fused ratio (≈ 2× the graph family).
+//!    Modelled by Poisson 2D/3D stencils, banded and block-diagonal
+//!    matrices.
+//! 2. **Graph** (111 matrices): power-law degree, scattered columns ⇒
+//!    low fused ratio. Modelled by R-MAT (Graph500 parameters) and
+//!    Erdős–Rényi graphs.
+//!
+//! All generators are deterministic in their seed.
+
+use super::coo::Coo;
+use super::csr::{Csr, Pattern};
+use crate::core::Scalar;
+use crate::testing::rng::XorShift64;
+
+/// R-MAT quadrant probabilities.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RmatKind {
+    /// Graph500 reference parameters (a,b,c) = (0.57, 0.19, 0.19).
+    Graph500,
+    /// Milder skew (0.45, 0.22, 0.22) — closer to road-like networks.
+    Mild,
+}
+
+impl RmatKind {
+    fn abc(self) -> (f64, f64, f64) {
+        match self {
+            RmatKind::Graph500 => (0.57, 0.19, 0.19),
+            RmatKind::Mild => (0.45, 0.22, 0.22),
+        }
+    }
+}
+
+/// 5-point Poisson stencil on an `nx × ny` grid (SPD, pentadiagonal).
+pub fn poisson2d(nx: usize, ny: usize) -> Pattern {
+    let n = nx * ny;
+    let mut coo = Coo::new(n, n);
+    for y in 0..ny {
+        for x in 0..nx {
+            let i = y * nx + x;
+            coo.push(i, i, 4.0);
+            if x > 0 {
+                coo.push(i, i - 1, -1.0);
+            }
+            if x + 1 < nx {
+                coo.push(i, i + 1, -1.0);
+            }
+            if y > 0 {
+                coo.push(i, i - nx, -1.0);
+            }
+            if y + 1 < ny {
+                coo.push(i, i + nx, -1.0);
+            }
+        }
+    }
+    coo.to_pattern()
+}
+
+/// 7-point Poisson stencil on an `n × n × n` grid.
+pub fn poisson3d(n: usize) -> Pattern {
+    let total = n * n * n;
+    let mut coo = Coo::new(total, total);
+    let idx = |x: usize, y: usize, z: usize| (z * n + y) * n + x;
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let i = idx(x, y, z);
+                coo.push(i, i, 6.0);
+                if x > 0 {
+                    coo.push(i, idx(x - 1, y, z), -1.0);
+                }
+                if x + 1 < n {
+                    coo.push(i, idx(x + 1, y, z), -1.0);
+                }
+                if y > 0 {
+                    coo.push(i, idx(x, y - 1, z), -1.0);
+                }
+                if y + 1 < n {
+                    coo.push(i, idx(x, y + 1, z), -1.0);
+                }
+                if z > 0 {
+                    coo.push(i, idx(x, y, z - 1), -1.0);
+                }
+                if z + 1 < n {
+                    coo.push(i, idx(x, y, z + 1), -1.0);
+                }
+            }
+        }
+    }
+    coo.to_pattern()
+}
+
+/// Symmetric banded matrix: diagonal plus `bands` off-diagonals at the
+/// given offsets on both sides.
+pub fn banded(n: usize, offsets: &[usize]) -> Pattern {
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 1.0);
+        for &o in offsets {
+            if o == 0 {
+                continue;
+            }
+            if i + o < n {
+                coo.push(i, i + o, 1.0);
+                coo.push(i + o, i, 1.0);
+            }
+        }
+    }
+    coo.to_pattern()
+}
+
+/// R-MAT power-law graph with ~`n * avg_deg` directed edges, made
+/// structurally symmetric (undirected) with self-loops on the diagonal
+/// (the GCN Â = A + I convention keeps the DAG diagonal-anchored).
+pub fn rmat(n: usize, avg_deg: usize, kind: RmatKind, seed: u64) -> Pattern {
+    assert!(n.is_power_of_two(), "rmat size must be a power of two");
+    let (a, b, c) = kind.abc();
+    let levels = n.trailing_zeros();
+    let mut rng = XorShift64::new(seed);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 1.0); // self loop
+    }
+    let edges = n * avg_deg / 2;
+    for _ in 0..edges {
+        let (mut x, mut y) = (0usize, 0usize);
+        for _ in 0..levels {
+            let r = rng.next_f64();
+            let (dx, dy) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            x = (x << 1) | dx;
+            y = (y << 1) | dy;
+        }
+        coo.push_sym(x, y, 1.0);
+    }
+    coo.to_pattern()
+}
+
+/// Erdős–Rényi graph with expected degree `avg_deg`, symmetric, with
+/// diagonal.
+pub fn erdos_renyi(n: usize, avg_deg: usize, seed: u64) -> Pattern {
+    let mut rng = XorShift64::new(seed);
+    let mut coo = Coo::new(n, n);
+    let edges = n * avg_deg / 2;
+    for i in 0..n {
+        coo.push(i, i, 1.0);
+    }
+    for _ in 0..edges {
+        let i = rng.next_range(n);
+        let j = rng.next_range(n);
+        coo.push_sym(i, j, 1.0);
+    }
+    coo.to_pattern()
+}
+
+/// Block-diagonal matrix with dense-ish blocks — the best case for tile
+/// fusion (fused ratio → 1 when tiles align with blocks).
+pub fn block_diag(nblocks: usize, bsize: usize, density: f64, seed: u64) -> Pattern {
+    let n = nblocks * bsize;
+    let mut rng = XorShift64::new(seed);
+    let mut coo = Coo::new(n, n);
+    for b in 0..nblocks {
+        let base = b * bsize;
+        for i in 0..bsize {
+            coo.push(base + i, base + i, 1.0);
+            for j in 0..bsize {
+                if i != j && rng.next_bool(density) {
+                    coo.push(base + i, base + j, 1.0);
+                }
+            }
+        }
+    }
+    coo.to_pattern()
+}
+
+/// Random uniform sparse matrix (not necessarily symmetric); the worst
+/// case for fusion — dependencies scatter everywhere.
+pub fn uniform_random(rows: usize, cols: usize, avg_deg: usize, seed: u64) -> Pattern {
+    let mut rng = XorShift64::new(seed);
+    let mut coo = Coo::new(rows, cols);
+    for i in 0..rows {
+        coo.push(i, rng.next_range(cols), 1.0);
+        for _ in 1..avg_deg {
+            coo.push(i, rng.next_range(cols), 1.0);
+        }
+    }
+    coo.to_pattern()
+}
+
+/// Symmetric-normalized GCN adjacency Â = D^{-1/2} (A + I) D^{-1/2}
+/// over an (assumed symmetric, diagonal-included) pattern.
+pub fn gcn_normalize<T: Scalar>(p: &Pattern) -> Csr<T> {
+    let deg: Vec<f64> = (0..p.rows).map(|i| p.row_nnz(i) as f64).collect();
+    let nnz = p.nnz();
+    let mut data = Vec::with_capacity(nnz);
+    for i in 0..p.rows {
+        for &c in p.row(i) {
+            let v = 1.0 / (deg[i].sqrt() * deg[c as usize].sqrt());
+            data.push(T::from_f64(v));
+        }
+    }
+    Csr::new(p.clone(), data)
+}
+
+/// Matrix class in the suite (mirrors the paper's two dataset groups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatrixClass {
+    /// SPD / scientific-computing-like (paper group I).
+    Scientific,
+    /// Graph-application matrices (paper group II).
+    Graph,
+}
+
+/// One named matrix of the synthetic benchmark suite.
+pub struct SuiteMatrix {
+    pub name: &'static str,
+    pub class: MatrixClass,
+    pub pattern: Pattern,
+}
+
+/// Suite size knob: `Small` for tests/CI, `Bench` for the paper-style
+/// sweeps (sized so a full bench finishes on this single-core box).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SuiteScale {
+    Small,
+    Bench,
+}
+
+/// Build the full synthetic suite. Deterministic.
+pub fn suite(scale: SuiteScale) -> Vec<SuiteMatrix> {
+    use MatrixClass::*;
+    // Bench scale is sized so the full table/figure sweeps finish on a
+    // single-core box; TF_BENCH_SCALE=small shrinks further for CI.
+    let k = match scale {
+        SuiteScale::Small => 1usize,
+        SuiteScale::Bench => 2usize,
+    };
+    let mut out = Vec::new();
+    // -- Scientific / SPD family --
+    out.push(SuiteMatrix { name: "poisson2d_s", class: Scientific, pattern: poisson2d(32 * k, 32 * k) });
+    out.push(SuiteMatrix { name: "poisson2d_m", class: Scientific, pattern: poisson2d(64 * k, 64 * k) });
+    out.push(SuiteMatrix { name: "poisson2d_l", class: Scientific, pattern: poisson2d(128 * k, 96 * k) });
+    out.push(SuiteMatrix { name: "poisson3d_s", class: Scientific, pattern: poisson3d(10 * k) });
+    out.push(SuiteMatrix { name: "poisson3d_m", class: Scientific, pattern: poisson3d(16 * k) });
+    out.push(SuiteMatrix { name: "banded_near", class: Scientific, pattern: banded(4096 * k, &[1, 2, 3, 4, 5, 6]) });
+    out.push(SuiteMatrix { name: "banded_far", class: Scientific, pattern: banded(4096 * k, &[1, 64, 512, 2048]) });
+    out.push(SuiteMatrix { name: "blockdiag_d", class: Scientific, pattern: block_diag(32 * k, 128, 0.30, 101) });
+    out.push(SuiteMatrix { name: "blockdiag_s", class: Scientific, pattern: block_diag(128 * k, 64, 0.15, 102) });
+    // -- Graph family --
+    out.push(SuiteMatrix { name: "rmat_g500_s", class: Graph, pattern: rmat(4096 * k.next_power_of_two(), 8, RmatKind::Graph500, 201) });
+    out.push(SuiteMatrix { name: "rmat_g500_m", class: Graph, pattern: rmat(8192 * k.next_power_of_two(), 12, RmatKind::Graph500, 202) });
+    out.push(SuiteMatrix { name: "rmat_mild_m", class: Graph, pattern: rmat(8192 * k.next_power_of_two(), 8, RmatKind::Mild, 203) });
+    out.push(SuiteMatrix { name: "er_sparse", class: Graph, pattern: erdos_renyi(4096 * k, 6, 204) });
+    out.push(SuiteMatrix { name: "er_dense", class: Graph, pattern: erdos_renyi(4096 * k, 16, 205) });
+    out.push(SuiteMatrix { name: "uniform_rand", class: Graph, pattern: uniform_random(4096 * k, 4096 * k, 8, 206) });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson2d_structure() {
+        let p = poisson2d(4, 3);
+        assert_eq!(p.rows, 12);
+        assert!(p.is_structurally_symmetric());
+        // interior point has 5 nonzeros
+        assert_eq!(p.row_nnz(5), 5);
+        // corner has 3
+        assert_eq!(p.row_nnz(0), 3);
+    }
+
+    #[test]
+    fn poisson3d_structure() {
+        let p = poisson3d(4);
+        assert_eq!(p.rows, 64);
+        assert!(p.is_structurally_symmetric());
+        assert_eq!(p.nnz(), 64 + 2 * 3 * (3 * 4 * 4)); // diag + 6 faces
+    }
+
+    #[test]
+    fn banded_is_symmetric() {
+        let p = banded(100, &[1, 7]);
+        assert!(p.is_structurally_symmetric());
+        assert_eq!(p.row_nnz(50), 5);
+    }
+
+    #[test]
+    fn rmat_symmetric_with_diagonal() {
+        let p = rmat(256, 8, RmatKind::Graph500, 7);
+        assert!(p.is_structurally_symmetric());
+        for i in 0..256 {
+            assert!(p.row(i).contains(&(i as u32)), "row {i} missing diagonal");
+        }
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        // Graph500 parameters concentrate edges on low ids.
+        let p = rmat(1024, 16, RmatKind::Graph500, 3);
+        let lo: usize = (0..256).map(|i| p.row_nnz(i)).sum();
+        let hi: usize = (768..1024).map(|i| p.row_nnz(i)).sum();
+        assert!(lo > 2 * hi, "expected skew, lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn erdos_renyi_degree() {
+        let p = erdos_renyi(2048, 10, 5);
+        let avg = p.avg_row_nnz();
+        assert!(avg > 8.0 && avg < 13.0, "avg={avg}");
+    }
+
+    #[test]
+    fn block_diag_no_cross_block() {
+        let bsize = 16;
+        let p = block_diag(8, bsize, 0.5, 1);
+        for i in 0..p.rows {
+            let b = i / bsize;
+            for &c in p.row(i) {
+                assert_eq!(c as usize / bsize, b);
+            }
+        }
+    }
+
+    #[test]
+    fn gcn_normalize_rowsums() {
+        // For a regular graph, Â rows sum to 1.
+        let p = banded(64, &[1]); // path graph + diag: interior degree 3
+        let a = gcn_normalize::<f64>(&p);
+        let d = a.to_dense();
+        let mid: f64 = (0..64).map(|j| d.get(32, j)).sum();
+        assert!((mid - 1.0).abs() < 1e-9, "row sum {mid}");
+    }
+
+    #[test]
+    fn suite_small_is_complete() {
+        let s = suite(SuiteScale::Small);
+        assert!(s.len() >= 12);
+        assert!(s.iter().any(|m| m.class == MatrixClass::Scientific));
+        assert!(s.iter().any(|m| m.class == MatrixClass::Graph));
+        for m in &s {
+            assert!(m.pattern.nnz() > 0, "{} empty", m.name);
+            assert_eq!(m.pattern.rows, m.pattern.cols, "{} not square", m.name);
+        }
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = rmat(512, 8, RmatKind::Graph500, 42);
+        let b = rmat(512, 8, RmatKind::Graph500, 42);
+        assert_eq!(a, b);
+        assert_ne!(a, rmat(512, 8, RmatKind::Graph500, 43));
+    }
+}

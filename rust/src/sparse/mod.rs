@@ -1,0 +1,19 @@
+//! Sparse matrix substrate: formats ([`Pattern`], [`Csr`], [`Coo`]),
+//! Matrix Market I/O ([`mm_io`]) and the synthetic matrix suite
+//! ([`gen`]) standing in for SuiteSparse (DESIGN.md §2).
+//!
+//! The tile-fusion scheduler only ever consumes a [`Pattern`] — the
+//! value-free CSR structure of `A` — because the fused schedule depends
+//! exclusively on the sparsity pattern (§3 of the paper: "the created
+//! schedule will be computed once based on their sparsity and reused").
+
+pub mod coo;
+pub mod csr;
+pub mod ell;
+pub mod gen;
+pub mod mm_io;
+pub mod rcm;
+
+pub use coo::Coo;
+pub use csr::{Csr, Pattern};
+pub use ell::{csr_to_blocked_ell, BlockedEll};

@@ -1,0 +1,178 @@
+//! Reverse Cuthill–McKee reordering — a fusion-enhancing preprocessing
+//! pass (extension beyond the paper).
+//!
+//! Tile fusion fuses a second-op iteration only when *all* its
+//! dependencies fall inside one coarse tile of consecutive indices, so
+//! the fused ratio is governed by `A`'s bandwidth. RCM permutes a
+//! structurally-symmetric matrix to minimize bandwidth, directly raising
+//! the fused ratio of scattered graphs before scheduling (checked by
+//! `rcm_raises_fused_ratio` below and usable via
+//! `Scheduler::schedule(&rcm::permute(&a, &perm).pattern, ...)`).
+
+use super::csr::{Csr, Pattern};
+use crate::core::Scalar;
+
+/// Compute the RCM permutation of a structurally symmetric pattern.
+/// `perm[new] = old`. Disconnected components are each ordered from a
+/// minimum-degree seed.
+pub fn rcm_order(p: &Pattern) -> Vec<u32> {
+    assert_eq!(p.rows, p.cols, "RCM needs a square (symmetric) pattern");
+    let n = p.rows;
+    let mut visited = vec![false; n];
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut frontier: std::collections::VecDeque<u32> = std::collections::VecDeque::new();
+
+    // Nodes by ascending degree for seed selection.
+    let mut by_degree: Vec<u32> = (0..n as u32).collect();
+    by_degree.sort_by_key(|&v| p.row_nnz(v as usize));
+
+    let mut neigh: Vec<u32> = Vec::new();
+    for &seed in &by_degree {
+        if visited[seed as usize] {
+            continue;
+        }
+        visited[seed as usize] = true;
+        frontier.push_back(seed);
+        while let Some(v) = frontier.pop_front() {
+            order.push(v);
+            neigh.clear();
+            for &u in p.row(v as usize) {
+                if !visited[u as usize] {
+                    visited[u as usize] = true;
+                    neigh.push(u);
+                }
+            }
+            // Cuthill–McKee visits neighbours in ascending degree.
+            neigh.sort_by_key(|&u| p.row_nnz(u as usize));
+            for &u in &neigh {
+                frontier.push_back(u);
+            }
+        }
+    }
+    order.reverse(); // the "reverse" in RCM
+    order
+}
+
+/// Apply a symmetric permutation: `B = P A Pᵀ` with `perm[new] = old`.
+pub fn permute<T: Scalar>(a: &Csr<T>, perm: &[u32]) -> Csr<T> {
+    let n = a.rows();
+    assert_eq!(perm.len(), n);
+    assert_eq!(a.cols(), n, "symmetric permutation needs a square matrix");
+    let mut inv = vec![0u32; n];
+    for (new, &old) in perm.iter().enumerate() {
+        inv[old as usize] = new as u32;
+    }
+    let mut indptr = vec![0usize; n + 1];
+    for new in 0..n {
+        indptr[new + 1] = indptr[new] + a.pattern.row_nnz(perm[new] as usize);
+    }
+    let nnz = a.nnz();
+    let mut indices = vec![0u32; nnz];
+    let mut data = vec![T::ZERO; nnz];
+    for new in 0..n {
+        let (cols, vals) = a.row(perm[new] as usize);
+        let base = indptr[new];
+        // Remap columns, then sort the row by new column index.
+        let mut row: Vec<(u32, T)> =
+            cols.iter().zip(vals).map(|(&c, &v)| (inv[c as usize], v)).collect();
+        row.sort_unstable_by_key(|&(c, _)| c);
+        for (k, (c, v)) in row.into_iter().enumerate() {
+            indices[base + k] = c;
+            data[base + k] = v;
+        }
+    }
+    Csr::new(Pattern::new(n, n, indptr, indices), data)
+}
+
+/// Matrix bandwidth: max |i - j| over nonzeros.
+pub fn bandwidth(p: &Pattern) -> usize {
+    let mut bw = 0usize;
+    for i in 0..p.rows {
+        for &c in p.row(i) {
+            bw = bw.max(i.abs_diff(c as usize));
+        }
+    }
+    bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{Scheduler, SchedulerParams};
+    use crate::sparse::gen;
+
+    fn params() -> SchedulerParams {
+        SchedulerParams { n_cores: 2, ct_size: 64, cache_bytes: usize::MAX, elem_bytes: 8, max_split_depth: 8 }
+    }
+
+    #[test]
+    fn perm_is_a_permutation() {
+        let p = gen::rmat(256, 6, gen::RmatKind::Graph500, 3);
+        let mut perm = rcm_order(&p);
+        assert_eq!(perm.len(), 256);
+        perm.sort_unstable();
+        assert!(perm.iter().enumerate().all(|(i, &v)| i as u32 == v));
+    }
+
+    #[test]
+    fn permute_preserves_values_up_to_relabeling() {
+        let pat = gen::erdos_renyi(64, 4, 5);
+        let a = Csr::<f64>::with_random_values(pat, 7, -1.0, 1.0);
+        let perm = rcm_order(&a.pattern);
+        let b = permute(&a, &perm);
+        assert_eq!(a.nnz(), b.nnz());
+        let ad = a.to_dense();
+        let bd = b.to_dense();
+        for new_i in 0..64 {
+            for new_j in 0..64 {
+                let (oi, oj) = (perm[new_i] as usize, perm[new_j] as usize);
+                assert_eq!(bd.get(new_i, new_j), ad.get(oi, oj));
+            }
+        }
+    }
+
+    #[test]
+    fn rcm_reduces_bandwidth_on_shuffled_band() {
+        // A banded matrix with rows randomly relabeled: RCM should
+        // recover a small bandwidth.
+        let band = gen::banded(256, &[1, 2]);
+        let mut shuffle: Vec<u32> = (0..256).collect();
+        crate::testing::rng::XorShift64::new(3).shuffle(&mut shuffle);
+        let shuffled = permute(&Csr::<f64>::from_pattern(band, 1.0), &shuffle);
+        let bw_before = bandwidth(&shuffled.pattern);
+        let rcm = permute(&shuffled, &rcm_order(&shuffled.pattern));
+        let bw_after = bandwidth(&rcm.pattern);
+        assert!(bw_after * 4 < bw_before, "bandwidth {bw_before} -> {bw_after}");
+    }
+
+    #[test]
+    fn rcm_raises_fused_ratio() {
+        // Scattered labeling of a mesh: fusion is poor before RCM and
+        // recovers after.
+        let mesh = gen::poisson2d(20, 20);
+        let mut shuffle: Vec<u32> = (0..400).collect();
+        crate::testing::rng::XorShift64::new(9).shuffle(&mut shuffle);
+        let scattered = permute(&Csr::<f64>::from_pattern(mesh, 1.0), &shuffle);
+        let before =
+            Scheduler::new(params()).schedule(&scattered.pattern, 8, 8).stats.fused_ratio;
+        let reordered = permute(&scattered, &rcm_order(&scattered.pattern));
+        let plan = Scheduler::new(params()).schedule(&reordered.pattern, 8, 8);
+        plan.validate(&reordered.pattern);
+        assert!(
+            plan.stats.fused_ratio > before * 2.0,
+            "fused ratio {before:.3} -> {:.3}",
+            plan.stats.fused_ratio
+        );
+    }
+
+    #[test]
+    fn disconnected_components_all_ordered() {
+        let p = gen::block_diag(4, 16, 0.3, 11);
+        let perm = rcm_order(&p);
+        assert_eq!(perm.len(), 64);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 64);
+    }
+}

@@ -1,0 +1,13 @@
+//! Deterministic randomness and a miniature property-testing harness.
+//!
+//! The offline crate set has neither `rand` nor `proptest` (see
+//! DESIGN.md §9), so the repo carries its own xorshift64* generator and a
+//! small fixed-iteration property harness. Properties are checked over a
+//! deterministic seed sweep — no shrinking, but failures print the seed so
+//! a case replays exactly.
+
+pub mod prop;
+pub mod rng;
+
+pub use prop::check_prop;
+pub use rng::XorShift64;

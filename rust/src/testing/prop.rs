@@ -1,0 +1,56 @@
+//! Minimal property-testing harness (offline substitute for `proptest`,
+//! see DESIGN.md §9).
+//!
+//! [`check_prop`] runs a property over `iters` deterministic seeds. On
+//! failure it panics with the failing seed so the exact case replays with
+//! a one-liner. No shrinking — generators here are small enough that raw
+//! failing cases are debuggable.
+
+use super::rng::XorShift64;
+
+/// Run `prop(rng)` for `iters` deterministically-derived seeds.
+///
+/// `prop` should panic (e.g. via `assert!`) on violation; this wrapper
+/// adds the seed to the panic payload by printing it before re-raising.
+pub fn check_prop(name: &str, iters: u64, mut prop: impl FnMut(&mut XorShift64)) {
+    for i in 0..iters {
+        let seed = 0xdead_beef_0000_0000u64 ^ (i.wrapping_mul(0x9e37_79b9_7f4a_7c15)) ^ i;
+        let mut rng = XorShift64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(payload) = result {
+            eprintln!("property `{name}` FAILED at iter {i} (seed {seed:#x})");
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0;
+        check_prop("trivial", 25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        let mut iter = 0;
+        check_prop("fails-late", 10, |_| {
+            iter += 1;
+            assert!(iter < 6, "deterministic failure at iter 6");
+        });
+    }
+
+    #[test]
+    fn seeds_differ_across_iters() {
+        let mut seen = Vec::new();
+        check_prop("seeds", 5, |rng| seen.push(rng.next_u64()));
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 5);
+    }
+}

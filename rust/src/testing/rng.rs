@@ -1,0 +1,127 @@
+//! xorshift64* pseudo-random generator: tiny, fast, deterministic, and
+//! good enough for matrix generation and property sweeps.
+
+/// xorshift64* PRNG (Vigna). Never yields the zero state.
+#[derive(Clone, Debug)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Seeded constructor; a zero seed is remapped to a fixed constant.
+    pub fn new(seed: u64) -> Self {
+        Self { state: if seed == 0 { 0x853c_49e6_748f_ea9b } else { seed } }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n). `n` must be > 0.
+    #[inline]
+    pub fn next_range(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn next_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct values from [0, n) (k <= n), sorted.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k * 3 > n {
+            // dense case: shuffle a full index vector
+            let mut idx: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut idx);
+            idx.truncate(k);
+            idx.sort_unstable();
+            idx
+        } else {
+            // sparse case: rejection sample
+            let mut set = std::collections::BTreeSet::new();
+            while set.len() < k {
+                set.insert(self.next_range(n));
+            }
+            set.into_iter().collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShift64::new(7);
+        let mut b = XorShift64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_ok() {
+        let mut r = XorShift64::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = XorShift64::new(3);
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = XorShift64::new(9);
+        for _ in 0..10_000 {
+            assert!(r.next_range(17) < 17);
+        }
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut r = XorShift64::new(11);
+        for &(n, k) in &[(10, 3), (10, 9), (100, 50), (5, 5), (1000, 10)] {
+            let s = r.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted+distinct");
+            assert!(s.iter().all(|&v| v < n));
+        }
+    }
+
+    #[test]
+    fn mean_roughly_half() {
+        let mut r = XorShift64::new(5);
+        let mean: f64 = (0..100_000).map(|_| r.next_f64()).sum::<f64>() / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+}

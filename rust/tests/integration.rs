@@ -1,0 +1,138 @@
+//! Cross-module integration: coordinator over the suite, GCN training
+//! end-to-end, Matrix Market persistence, cache-simulator AMT direction,
+//! and the harness sweep machinery.
+
+use std::sync::Arc;
+use tile_fusion::cachesim::{trace_fused, trace_unfused, CacheConfig, CacheSim};
+use tile_fusion::coordinator::{Coordinator, Request, Strategy};
+use tile_fusion::exec::reference::reference;
+use tile_fusion::gnn::model::GcnMode;
+use tile_fusion::gnn::{Gcn, SyntheticGraph};
+use tile_fusion::harness::{sweep, BenchEnv, PairSel, Strat};
+use tile_fusion::prelude::*;
+use tile_fusion::simcore::{self, MachineModel};
+use tile_fusion::sparse::gen::SuiteScale;
+use tile_fusion::sparse::mm_io;
+
+#[test]
+fn coordinator_runs_whole_small_suite() {
+    let mut coord: Coordinator<f64> = Coordinator::new(2, SchedulerParams::default());
+    for m in gen::suite(SuiteScale::Small) {
+        let a = Csr::<f64>::with_random_values(m.pattern, 1, -1.0, 1.0);
+        let n = a.cols();
+        coord.register_matrix(m.name, a.clone());
+        let b = Dense::<f64>::randn(n, 16, 2);
+        let c = Dense::<f64>::randn(16, 8, 3);
+        let expect = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        let resp = coord
+            .submit(&Request {
+                a: m.name.into(),
+                b_dense: Some(b),
+                b_sparse: None,
+                cs: vec![c],
+                strategy: Strategy::TileFusion,
+            })
+            .unwrap();
+        assert!(resp.ds[0].max_abs_diff(&expect) < 1e-9, "{}", m.name);
+    }
+    assert_eq!(coord.metrics().requests, gen::suite(SuiteScale::Small).len() as u64);
+}
+
+#[test]
+fn gcn_end_to_end_loss_falls_and_paths_agree() {
+    let g = SyntheticGraph::<f64>::rmat(512, 8, 16, 4, 21);
+    let a = Arc::new(g.a_hat.clone());
+    let pool = ThreadPool::new(2);
+
+    let mut fused = Gcn::new(Arc::clone(&a), &[16, 32, 4], 5, GcnMode::Fused);
+    let mut unfused = Gcn::new(a, &[16, 32, 4], 5, GcnMode::Unfused);
+
+    let mut losses = Vec::new();
+    for _ in 0..60 {
+        let sf = fused.train_step(&pool, &g.features, &g.labels, 1.0);
+        let su = unfused.train_step(&pool, &g.features, &g.labels, 1.0);
+        assert!((sf.loss - su.loss).abs() < 1e-6, "fused/unfused training diverged");
+        losses.push(sf.loss);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.9),
+        "loss did not fall: {:?}",
+        (losses.first(), losses.last())
+    );
+}
+
+#[test]
+fn matrix_market_round_trip_through_scheduler() {
+    let dir = std::env::temp_dir().join("tf_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g.mtx");
+    let a = Csr::<f64>::with_random_values(gen::rmat(256, 6, RmatKind::Mild, 3), 1, -1.0, 1.0);
+    mm_io::write_matrix_market(&path, &a).unwrap();
+    let b: Csr<f64> = mm_io::read_matrix_market(&path).unwrap();
+    assert_eq!(a.pattern, b.pattern);
+    let plan_a = Scheduler::new(SchedulerParams::default()).schedule(&a.pattern, 32, 32);
+    let plan_b = Scheduler::new(SchedulerParams::default()).schedule(&b.pattern, 32, 32);
+    assert_eq!(plan_a.wavefronts, plan_b.wavefronts, "schedule must be pattern-determined");
+}
+
+#[test]
+fn amt_improves_for_banded_large_matrix() {
+    // The Fig. 7 direction on a D1-exceeds-cache matrix.
+    let a = gen::banded(30_000, &[1, 2]);
+    let params = SchedulerParams::default();
+    let plan = Scheduler::new(params).schedule(&a, 32, 32);
+    let mut s1 = CacheSim::new(CacheConfig::cascadelake());
+    let fused = trace_fused(&mut s1, &plan, &a, BSide::Dense { bcol: 32 }, 32);
+    let mut s2 = CacheSim::new(CacheConfig::cascadelake());
+    let unfused = trace_unfused(&mut s2, &a, BSide::Dense { bcol: 32 }, 32);
+    let ratio = unfused.amt_cycles / fused.amt_cycles;
+    assert!(ratio > 1.05, "AMT ratio {ratio} not > 1.05");
+}
+
+#[test]
+fn simulated_scaling_reaches_paper_core_counts() {
+    let a = gen::rmat(8192, 8, RmatKind::Graph500, 9);
+    let params = SchedulerParams { n_cores: 64, ct_size: 128, ..Default::default() };
+    let plan = Scheduler::new(params).schedule(&a, 32, 32);
+    let op = FusionOp { a: &a, b: BSide::Dense { bcol: 32 }, ccol: 32 };
+    let works = simcore::workloads_fused(&plan, &op, 8);
+    let curve = simcore::scalability_curve(&works, &MachineModel::cascadelake(), &[1, 8, 40, 64]);
+    let speedup_40 = curve[0].1 / curve[2].1;
+    assert!(speedup_40 > 8.0, "40-core model speedup only {speedup_40}");
+}
+
+#[test]
+fn harness_sweep_shapes() {
+    let env = BenchEnv { scale: SuiteScale::Small, reps: 1, threads: 1 };
+    let rows = sweep::<f32>(PairSel::SpmmSpmm, &env, &[8], &[Strat::Fused, Strat::Unfused], None);
+    assert!(rows.len() >= 10);
+    for r in &rows {
+        assert!(r.secs("tile_fusion").unwrap() > 0.0);
+        assert!(r.secs("unfused").unwrap() > 0.0);
+        // tensor style must be skipped for SpMM-SpMM
+        assert!(r.secs("tensor_compiler").is_none());
+    }
+}
+
+#[test]
+fn schedule_cache_amortizes_in_coordinator() {
+    let mut coord: Coordinator<f32> = Coordinator::new(1, SchedulerParams::default());
+    let a = Csr::<f32>::with_random_values(gen::poisson2d(32, 32), 1, -1.0, 1.0);
+    coord.register_matrix("A", a);
+    for i in 0..10 {
+        let b = Dense::<f32>::randn(1024, 8, i);
+        let c = Dense::<f32>::randn(8, 8, i);
+        coord
+            .submit(&Request {
+                a: "A".into(),
+                b_dense: Some(b),
+                b_sparse: None,
+                cs: vec![c],
+                strategy: Strategy::TileFusion,
+            })
+            .unwrap();
+    }
+    let (entries, hits, misses) = coord.cache_stats();
+    assert_eq!((entries, misses), (1, 1));
+    assert_eq!(hits, 9);
+}

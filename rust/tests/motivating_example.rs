@@ -1,0 +1,124 @@
+//! Reproduction of the paper's motivating example (§2, Figures 2–3).
+//!
+//! An 8-iteration GeMM feeding an 8-iteration SpMM, scheduled with
+//! `ctSize = 4` on a 2-core machine: the coarse step must produce the
+//! Figure-3 shape — two fused tiles over consecutive index ranges, with
+//! exactly the boundary-crossing second-op iterations deferred to
+//! wavefront 1.
+
+use tile_fusion::exec::reference::reference;
+use tile_fusion::prelude::*;
+
+/// The Figure-2a-style dependence structure (0-indexed):
+/// row j of `A` lists the GeMM iterations SpMM iteration j needs.
+fn example_pattern() -> Pattern {
+    let deps: [&[u32]; 8] = [
+        &[0],    // j0 — inside tile 0
+        &[0, 1], // j1 — inside tile 0
+        &[1, 2], // j2 — inside tile 0
+        &[2, 4], // j3 — SPANS tiles 0 and 1
+        &[3, 4], // j4 — SPANS tiles 0 and 1 (the Fig. 2 race row)
+        &[4, 5], // j5 — inside tile 1
+        &[5, 6], // j6 — inside tile 1
+        &[6, 7], // j7 — inside tile 1
+    ];
+    let mut coo = Coo::new(8, 8);
+    for (j, row) in deps.iter().enumerate() {
+        for &i in row.iter() {
+            coo.push(j, i as usize, 1.0);
+        }
+    }
+    coo.to_pattern()
+}
+
+fn params() -> SchedulerParams {
+    SchedulerParams {
+        n_cores: 2,
+        ct_size: 4,
+        cache_bytes: usize::MAX, // no step-2 splitting: isolate step 1
+        elem_bytes: 8,
+        max_split_depth: 8,
+    }
+}
+
+#[test]
+fn step1_produces_figure3_tiles() {
+    let a = example_pattern();
+    let plan = Scheduler::new(params()).schedule(&a, 1, 1);
+    plan.validate(&a);
+
+    // Two coarse fused tiles over [0,4) and [4,8).
+    assert_eq!(plan.wavefronts[0].len(), 2);
+    let t0 = &plan.wavefronts[0][0];
+    let t1 = &plan.wavefronts[0][1];
+    assert_eq!((t0.i_begin, t0.i_end), (0, 4));
+    assert_eq!((t1.i_begin, t1.i_end), (4, 8));
+
+    // In-tile second-op iterations fused; the two spanning rows deferred.
+    assert_eq!(t0.j_rows, vec![0, 1, 2]);
+    assert_eq!(t1.j_rows, vec![5, 6, 7]);
+    let mut wf1: Vec<u32> =
+        plan.wavefronts[1].iter().flat_map(|t| t.j_rows.iter().copied()).collect();
+    wf1.sort_unstable();
+    assert_eq!(wf1, vec![3, 4]);
+
+    // Eq. 2: 6 fused of 16 total iterations.
+    assert!((plan.stats.fused_ratio - 6.0 / 16.0).abs() < 1e-12);
+}
+
+#[test]
+fn exactly_one_barrier() {
+    let a = example_pattern();
+    let plan = Scheduler::new(params()).schedule(&a, 1, 1);
+    // Two wavefronts = one synchronization barrier between them (§3:
+    // "its synchronizations are always 2 [wavefronts]").
+    assert_eq!(plan.wavefronts.len(), 2);
+    assert!(!plan.wavefronts[0].is_empty());
+    assert!(!plan.wavefronts[1].is_empty());
+}
+
+#[test]
+fn fused_execution_matches_reference_on_example() {
+    let a = Csr::<f64>::with_random_values(example_pattern(), 3, -1.0, 1.0);
+    let b = Dense::<f64>::randn(8, 4, 1);
+    let c = Dense::<f64>::randn(4, 3, 2);
+    let plan = Scheduler::new(params()).schedule(&a.pattern, 4, 3);
+    let op = PairOp::gemm_spmm(&a, &b);
+    let expect = reference(&op, &c);
+    for threads in [1, 2, 3] {
+        let pool = ThreadPool::new(threads);
+        let mut ex = Fused::new(op, &plan);
+        let mut d = Dense::zeros(8, 3);
+        ex.run(&pool, &c, &mut d);
+        assert!(d.max_abs_diff(&expect) < 1e-12, "threads={threads}");
+    }
+}
+
+#[test]
+fn atomic_tiling_has_contention_on_spanning_rows() {
+    // The dotted-red-line race of Fig. 2d: rows 3 and 4 span partitions.
+    let a = Csr::<f64>::with_random_values(example_pattern(), 3, -1.0, 1.0);
+    let b = Dense::<f64>::randn(8, 2, 1);
+    let ex = AtomicTiling::new(PairOp::gemm_spmm(&a, &b), 2);
+    assert_eq!(ex.contended_rows(), 2);
+}
+
+#[test]
+fn overlapped_tiling_replicates_boundary_iterations() {
+    // Fig. 2e: the red replicated vertices. With 2 tiles over J, the
+    // boundary D1 rows are computed twice.
+    let a = Csr::<f64>::with_random_values(example_pattern(), 3, -1.0, 1.0);
+    let b = Dense::<f64>::randn(8, 2, 1);
+    let ex = Overlapped::new(PairOp::gemm_spmm(&a, &b), 2, 1);
+    assert!(ex.redundant_iterations() > 0);
+}
+
+#[test]
+fn splitting_respects_cache_budget_on_example() {
+    let a = example_pattern();
+    let mut p = params();
+    p.cache_bytes = 200; // force step 2 to split (Figure 2f: T_{0,1} split)
+    let plan = Scheduler::new(p).schedule(&a, 1, 1);
+    plan.validate(&a);
+    assert!(plan.stats.max_tile_cost <= 200 || plan.stats.n_tiles[0] > 2);
+}

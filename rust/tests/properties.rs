@@ -1,0 +1,222 @@
+//! Property-based tests over random matrices and parameters
+//! (deterministic seed sweep via `testing::check_prop` — the offline
+//! proptest substitute, DESIGN.md §9).
+
+use tile_fusion::cachesim::{trace_fused, trace_unfused, CacheConfig, CacheSim};
+use tile_fusion::exec::reference::reference;
+use tile_fusion::prelude::*;
+use tile_fusion::testing::{check_prop, XorShift64};
+
+/// Random square pattern with diagonal (keeps GCN-style structure).
+fn random_pattern(rng: &mut XorShift64) -> Pattern {
+    let n = 16 + rng.next_range(200);
+    let avg = 1 + rng.next_range(8);
+    match rng.next_range(4) {
+        0 => gen::erdos_renyi(n, avg, rng.next_u64()),
+        1 => gen::rmat((n.max(16)).next_power_of_two(), avg, RmatKind::Graph500, rng.next_u64()),
+        2 => gen::banded(n, &[1, 1 + rng.next_range(7)]),
+        _ => gen::uniform_random(n, n, avg, rng.next_u64()),
+    }
+}
+
+fn random_params(rng: &mut XorShift64) -> SchedulerParams {
+    SchedulerParams {
+        n_cores: 1 + rng.next_range(8),
+        cache_bytes: 1 << (10 + rng.next_range(12)),
+        elem_bytes: if rng.next_bool(0.5) { 4 } else { 8 },
+        ct_size: 1 << (2 + rng.next_range(8)),
+        max_split_depth: 24,
+    }
+}
+
+#[test]
+fn prop_schedule_is_always_valid() {
+    check_prop("schedule-valid", 60, |rng| {
+        let a = random_pattern(rng);
+        let params = random_params(rng);
+        let bcol = 1 + rng.next_range(64);
+        let ccol = 1 + rng.next_range(64);
+        let plan = Scheduler::new(params).schedule(&a, bcol, ccol);
+        plan.validate(&a);
+        // ≤ 2 wavefronts by construction; fused ratio within bounds.
+        assert!(plan.stats.fused_ratio <= 0.5 + 1e-9);
+    });
+}
+
+#[test]
+fn prop_spmm_spmm_schedule_is_valid() {
+    check_prop("schedule-valid-sparse-b", 30, |rng| {
+        let a = random_pattern(rng);
+        let plan = Scheduler::new(random_params(rng)).schedule_sparse(&a, &a, 1 + rng.next_range(64));
+        plan.validate(&a);
+    });
+}
+
+#[test]
+fn prop_load_balance_constraint() {
+    // When |I| is large enough relative to ctSize, each wavefront must
+    // hold at least p tiles (the Algorithm-1 line-3 guarantee).
+    check_prop("load-balance", 30, |rng| {
+        let a = gen::erdos_renyi(512 + rng.next_range(1024), 4, rng.next_u64());
+        let mut params = random_params(rng);
+        params.ct_size = 32;
+        let plan = Scheduler::new(params).schedule(&a, 8, 8);
+        assert!(
+            plan.wavefronts[0].len() >= params.n_cores,
+            "wf0 {} < p {}",
+            plan.wavefronts[0].len(),
+            params.n_cores
+        );
+    });
+}
+
+#[test]
+fn prop_all_executors_agree_f64() {
+    check_prop("executors-agree-f64", 25, |rng| {
+        let pat = random_pattern(rng);
+        let a = Csr::<f64>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+        let bcol = 1 + rng.next_range(24);
+        let ccol = 1 + rng.next_range(24);
+        let b = Dense::<f64>::randn(a.cols(), bcol, rng.next_u64());
+        let c = Dense::<f64>::randn(bcol, ccol, rng.next_u64());
+        let op = PairOp::gemm_spmm(&a, &b);
+        let expect = reference(&op, &c);
+        let threads = 1 + rng.next_range(4);
+        let pool = ThreadPool::new(threads);
+        let plan = Scheduler::new(random_params(rng)).schedule(&a.pattern, bcol, ccol);
+
+        let mut d = Dense::zeros(a.rows(), ccol);
+        let mut check = |name: &str, ex: &mut dyn PairExec<f64>| {
+            d.fill_zero();
+            ex.run(&pool, &c, &mut d);
+            assert!(d.max_abs_diff(&expect) < 1e-9, "{name} diverged");
+        };
+        check("fused", &mut Fused::new(op, &plan));
+        check("unfused", &mut Unfused::new(op));
+        check("atomic", &mut AtomicTiling::new(op, 1 + rng.next_range(16)));
+        check("overlapped", &mut Overlapped::new(op, 1 + rng.next_range(16), threads));
+        check("tensor", &mut TensorStyle::new(op, threads));
+    });
+}
+
+#[test]
+fn prop_all_executors_agree_f32() {
+    check_prop("executors-agree-f32", 15, |rng| {
+        let pat = random_pattern(rng);
+        let a = Csr::<f32>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+        let bcol = 1 + rng.next_range(16);
+        let ccol = 1 + rng.next_range(16);
+        let b = Dense::<f32>::randn(a.cols(), bcol, rng.next_u64());
+        let c = Dense::<f32>::randn(bcol, ccol, rng.next_u64());
+        let op = PairOp::gemm_spmm(&a, &b);
+        let expect = reference(&op, &c);
+        let pool = ThreadPool::new(2);
+        let plan = Scheduler::new(random_params(rng)).schedule(&a.pattern, bcol, ccol);
+        let mut d = Dense::zeros(a.rows(), ccol);
+        let mut fused = Fused::new(op, &plan);
+        fused.run(&pool, &c, &mut d);
+        // f32 tolerance scaled by reduction depth.
+        let tol = 1e-4 * (1.0 + a.pattern.avg_row_nnz() * bcol as f64).sqrt();
+        assert!(d.max_abs_diff(&expect) < tol, "diff {} > {tol}", d.max_abs_diff(&expect));
+    });
+}
+
+#[test]
+fn prop_spmm_spmm_executors_agree() {
+    check_prop("spmm-executors-agree", 20, |rng| {
+        let pat = random_pattern(rng);
+        let a = Csr::<f64>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+        let ccol = 1 + rng.next_range(24);
+        let c = Dense::<f64>::randn(a.cols(), ccol, rng.next_u64());
+        let op = PairOp::spmm_spmm(&a, &a);
+        let expect = reference(&op, &c);
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+        let plan =
+            Scheduler::new(random_params(rng)).schedule_sparse(&a.pattern, &a.pattern, ccol);
+        let mut d = Dense::zeros(a.rows(), ccol);
+        for (name, ex) in [
+            ("fused", &mut Fused::new(op, &plan) as &mut dyn PairExec<f64>),
+            ("unfused", &mut Unfused::new(op)),
+            ("atomic", &mut AtomicTiling::new(op, 8)),
+            ("overlapped", &mut Overlapped::new(op, 8, 5)),
+        ] {
+            d.fill_zero();
+            ex.run(&pool, &c, &mut d);
+            assert!(d.max_abs_diff(&expect) < 1e-9, "{name} diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_locality_constraint_after_split() {
+    // Every splittable tile respects the budget; unsplittable singleton
+    // tiles are the only permitted overflow.
+    check_prop("locality-constraint", 30, |rng| {
+        let a = random_pattern(rng);
+        let mut params = random_params(rng);
+        params.cache_bytes = 16 * 1024;
+        let bcol = 8 + rng.next_range(32);
+        let plan = Scheduler::new(params).schedule(&a, bcol, bcol);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol }, ccol: bcol };
+        let mut cm = tile_fusion::scheduler::cost::CostModel::new(&op, params.elem_bytes);
+        for wf in &plan.wavefronts {
+            for t in wf {
+                let cost = cm.tile_cost(t);
+                let splittable = t.i_len() > 1 || t.j_len() > 1;
+                assert!(
+                    cost <= params.cache_bytes || !splittable,
+                    "splittable tile over budget: {cost}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_transpose_c_equals_normal() {
+    check_prop("transpose-c", 15, |rng| {
+        let pat = random_pattern(rng);
+        let a = Csr::<f64>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+        let bcol = 1 + rng.next_range(16);
+        let ccol = 1 + rng.next_range(16);
+        let b = Dense::<f64>::randn(a.cols(), bcol, rng.next_u64());
+        let c = Dense::<f64>::randn(bcol, ccol, rng.next_u64());
+        let ct = c.transpose();
+        let expect = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        let plan = Scheduler::new(random_params(rng)).schedule(&a.pattern, bcol, ccol);
+        let pool = ThreadPool::new(2);
+        let mut ex = Fused::new(PairOp::gemm_spmm_ct(&a, &b), &plan);
+        let mut d = Dense::zeros(a.rows(), ccol);
+        ex.run(&pool, &ct, &mut d);
+        assert!(d.max_abs_diff(&expect) < 1e-9);
+    });
+}
+
+#[test]
+fn prop_trace_access_counts_equal() {
+    // Tile fusion reorders accesses but performs the same work: the L1
+    // access count must match unfused exactly.
+    check_prop("trace-conservation", 10, |rng| {
+        let a = random_pattern(rng);
+        let bcol = 4 + rng.next_range(16);
+        let plan = Scheduler::new(random_params(rng)).schedule(&a, bcol, bcol);
+        let mut s1 = CacheSim::new(CacheConfig::cascadelake());
+        let f = trace_fused(&mut s1, &plan, &a, BSide::Dense { bcol }, bcol);
+        let mut s2 = CacheSim::new(CacheConfig::cascadelake());
+        let u = trace_unfused(&mut s2, &a, BSide::Dense { bcol }, bcol);
+        assert_eq!(f.total_accesses, u.total_accesses);
+    });
+}
+
+#[test]
+fn prop_ell_roundtrip() {
+    check_prop("ell-roundtrip", 20, |rng| {
+        let n = (16 + rng.next_range(100)).next_multiple_of(8);
+        let pat = gen::erdos_renyi(n, 1 + rng.next_range(4), rng.next_u64());
+        let a = Csr::<f32>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+        let tm = [4, 8][rng.next_range(2)];
+        let k = tile_fusion::sparse::ell::min_k_slots(&a, tm);
+        let ell = tile_fusion::sparse::csr_to_blocked_ell(&a, tm, k).unwrap();
+        assert!(ell.to_dense().max_abs_diff(&a.to_dense()) < 1e-6);
+    });
+}

@@ -1,0 +1,133 @@
+//! AOT artifact round-trip: load the JAX/Pallas-lowered HLO from Rust,
+//! execute on PJRT CPU, and check against the pure-Rust GCN forward on
+//! identical inputs.
+//!
+//! Requires `make artifacts`; tests self-skip (with a loud message) when
+//! the artifacts directory is absent so `cargo test` works pre-build.
+
+use std::path::{Path, PathBuf};
+use tile_fusion::core::Dense;
+use tile_fusion::exec::{PairExec, PairOp, ThreadPool, Unfused};
+use tile_fusion::gnn::ops::relu;
+use tile_fusion::runtime::{Input, XlaRuntime};
+use tile_fusion::sparse::ell::{csr_to_blocked_ell, min_k_slots};
+use tile_fusion::sparse::{gen, Csr};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("gcn2.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+fn meta(dir: &Path) -> std::collections::HashMap<String, usize> {
+    std::fs::read_to_string(dir.join("meta.txt"))
+        .expect("meta.txt")
+        .lines()
+        .filter_map(|l| {
+            let (k, v) = l.split_once('=')?;
+            Some((k.to_string(), v.trim().parse().ok()?))
+        })
+        .collect()
+}
+
+/// The artifact's graph, rebuilt in Rust: poisson2d(nx, ny) normalized.
+fn artifact_graph(nx: usize, ny: usize) -> Csr<f32> {
+    gen::gcn_normalize::<f32>(&gen::poisson2d(nx, ny))
+}
+
+#[test]
+fn gcn2_artifact_matches_rust_forward() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = meta(&dir);
+    let (nx, ny, tm, k_slots) = (m["nx"], m["ny"], m["tm"], m["k_slots"]);
+    let (n, feat, hidden, classes) = (m["n"], m["feat"], m["hidden"], m["classes"]);
+    assert_eq!(n, nx * ny);
+
+    let a = artifact_graph(nx, ny);
+    assert!(min_k_slots(&a, tm) <= k_slots, "rust graph needs more slots than artifact");
+    let ell = csr_to_blocked_ell(&a, tm, k_slots).unwrap();
+
+    let x = Dense::<f32>::randn(n, feat, 11);
+    let w1 = Dense::<f32>::randn(feat, hidden, 12);
+    let w2 = Dense::<f32>::randn(hidden, classes, 13);
+
+    // --- XLA path -------------------------------------------------------
+    let rt = XlaRuntime::cpu().expect("PJRT client");
+    let module = rt.load_hlo_text(&dir.join("gcn2.hlo.txt")).expect("load artifact");
+    let idx_dims = [ell.nb(), ell.k_slots];
+    let vals_dims = [ell.nb(), ell.k_slots, tm, tm];
+    let outputs = rt
+        .run(
+            &module,
+            &[
+                Input::I32(&ell.idx, &idx_dims),
+                Input::F32(&ell.vals, &vals_dims),
+                Input::F32(&x.data, &[n, feat]),
+                Input::F32(&w1.data, &[feat, hidden]),
+                Input::F32(&w2.data, &[hidden, classes]),
+            ],
+        )
+        .expect("execute artifact");
+    assert_eq!(outputs.len(), 1);
+    let xla_logits = &outputs[0];
+    assert_eq!(xla_logits.len(), n * classes);
+
+    // --- Rust path (same math: relu(Â(XW1)) then Â(HW2)) ----------------
+    let pool = ThreadPool::new(1);
+    let mut h = Dense::<f32>::zeros(n, hidden);
+    Unfused::new(PairOp::gemm_spmm(&a, &x)).run(&pool, &w1, &mut h);
+    relu(&mut h);
+    let mut logits = Dense::<f32>::zeros(n, classes);
+    Unfused::new(PairOp::gemm_spmm(&a, &h)).run(&pool, &w2, &mut logits);
+
+    let mut max_diff = 0f32;
+    for (i, (&xv, &rv)) in xla_logits.iter().zip(&logits.data).enumerate() {
+        let d = (xv - rv).abs();
+        if d > max_diff {
+            max_diff = d;
+        }
+        assert!(d < 2e-3, "element {i}: xla {xv} vs rust {rv}");
+    }
+    eprintln!("gcn2 artifact vs rust forward: max |diff| = {max_diff:.3e}");
+}
+
+#[test]
+fn gcn_layer_artifact_matches_rust_layer() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = meta(&dir);
+    let (nx, ny, tm, k_slots) = (m["nx"], m["ny"], m["tm"], m["k_slots"]);
+    let (n, feat, hidden) = (m["n"], m["feat"], m["hidden"]);
+
+    let a = artifact_graph(nx, ny);
+    let ell = csr_to_blocked_ell(&a, tm, k_slots).unwrap();
+    let x = Dense::<f32>::randn(n, feat, 21);
+    let w = Dense::<f32>::randn(feat, hidden, 22);
+
+    let rt = XlaRuntime::cpu().expect("PJRT client");
+    let module = rt.load_hlo_text(&dir.join("gcn_layer.hlo.txt")).expect("load artifact");
+    let idx_dims = [ell.nb(), ell.k_slots];
+    let vals_dims = [ell.nb(), ell.k_slots, tm, tm];
+    let out = rt
+        .run(
+            &module,
+            &[
+                Input::I32(&ell.idx, &idx_dims),
+                Input::F32(&ell.vals, &vals_dims),
+                Input::F32(&x.data, &[n, feat]),
+                Input::F32(&w.data, &[feat, hidden]),
+            ],
+        )
+        .expect("execute");
+
+    let pool = ThreadPool::new(1);
+    let mut h = Dense::<f32>::zeros(n, hidden);
+    Unfused::new(PairOp::gemm_spmm(&a, &x)).run(&pool, &w, &mut h);
+    relu(&mut h);
+    for (&xv, &rv) in out[0].iter().zip(&h.data) {
+        assert!((xv - rv).abs() < 1e-3, "xla {xv} vs rust {rv}");
+    }
+}
