@@ -1,14 +1,16 @@
 //! Coordinator service demo: register several graphs, stream batched
-//! `D = A(BC)` requests at them, and report throughput / latency /
-//! schedule-cache behaviour — the deployment shape of a GNN inference
-//! service where the graph is static and requests carry features.
+//! `D = A(BC)` requests at them, then stream whole-chain requests
+//! (2-layer GCN forwards as one `ChainRequest`), and report throughput /
+//! latency / schedule-cache behaviour — the deployment shape of a GNN
+//! inference service where the graph is static and requests carry
+//! features.
 //!
 //! ```bash
 //! cargo run --release --offline --example serve [requests]
 //! ```
 
 use std::time::Instant;
-use tile_fusion::coordinator::{Coordinator, Request, Strategy};
+use tile_fusion::coordinator::{ChainRequest, ChainStepRequest, Coordinator, Request, Strategy};
 use tile_fusion::prelude::*;
 use tile_fusion::testing::XorShift64;
 
@@ -60,12 +62,65 @@ fn main() {
     latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let p = |q: f64| latencies_ms[((latencies_ms.len() - 1) as f64 * q) as usize];
     let (entries, hits, misses) = coord.cache_stats();
-    println!("\n== service report ==");
+    println!("\n== pair-request report ==");
     println!("requests          : {requests} in {wall:.2} s  ({:.1} req/s)", requests as f64 / wall);
     println!("latency p50/p90/p99: {:.2} / {:.2} / {:.2} ms", p(0.5), p(0.9), p(0.99));
     println!("sustained compute : {:.2} GFLOP/s", total_flops / wall / 1e9);
     println!("schedule cache    : {entries} entries, {hits} hits, {misses} builds");
     println!("exec time total   : {:.2} s", coord.metrics().total_exec.as_secs_f64());
     assert_eq!(misses as usize, graphs.len(), "one schedule build per graph");
+
+    // --- chain phase: 2-layer GCN forwards as single requests ----------
+    // Step 0 has the same (pattern, bcol, ccol) key as the pair phase, so
+    // the chain's first schedule is served from the cache the pair
+    // requests already warmed; only the second layer's shape builds anew.
+    let hidden = ccol; // layer widths: bcol -> ccol -> classes
+    let classes = 16;
+    let mut chain_lat_ms = Vec::new();
+    for round in 0..2usize {
+        for (gi, (name, p)) in graphs.iter().enumerate() {
+            let n = p.rows;
+            let x = Dense::<f32>::randn(n, bcol, (round * 100 + gi) as u64);
+            let w1 = Dense::<f32>::randn(bcol, hidden, gi as u64 + 7);
+            let w2 = Dense::<f32>::randn(hidden, classes, gi as u64 + 8);
+            let step = |w: Dense<f32>| ChainStepRequest {
+                a: name.to_string(),
+                w: Some(w),
+                b_dense: None,
+                b_sparse: None,
+                strategy: None,
+            };
+            let resp = coord
+                .submit_chain(ChainRequest {
+                    steps: vec![step(w1), step(w2)],
+                    xs: vec![x],
+                    strategy: Strategy::TileFusion,
+                })
+                .expect("chain request failed");
+            assert_eq!(resp.ds[0].rows, n);
+            assert_eq!(resp.ds[0].cols, classes);
+            chain_lat_ms.push(resp.elapsed.as_secs_f64() * 1e3);
+        }
+    }
+    chain_lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (entries2, hits2, misses2) = coord.cache_stats();
+    println!("\n== chain-request report ==");
+    println!(
+        "chain requests    : {} (2 layers each), median latency {:.2} ms",
+        chain_lat_ms.len(),
+        chain_lat_ms[chain_lat_ms.len() / 2]
+    );
+    println!("schedule cache    : {entries2} entries, {hits2} hits, {misses2} builds");
+    println!(
+        "chain metrics     : {} chain requests, {} chain steps",
+        coord.metrics().chain_requests,
+        coord.metrics().chain_steps
+    );
+    // Layer 1 reused the pair-phase schedules; only layer 2 built anew.
+    assert_eq!(
+        misses2 as usize,
+        2 * graphs.len(),
+        "chains must reuse pair-phase schedules for layer 1"
+    );
     println!("OK");
 }

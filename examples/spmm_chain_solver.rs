@@ -5,12 +5,16 @@
 //! Each iteration applies Â twice to a block of vectors: `X ← Â (Â X)`,
 //! i.e. exactly the SpMM-SpMM pair (Listing 3), then re-orthonormalizes.
 //! Converges to the dominant invariant subspace of Â; the residual curve
-//! proves numerical health, the timing compares fused vs unfused.
+//! proves numerical health, the timing compares fused vs unfused, and a
+//! final section runs the same math through the chain executor
+//! (`ChainExec`, two fused pairs per call with one deduplicated
+//! schedule) and verifies it against back-to-back pair calls.
 //!
 //! ```bash
 //! cargo run --release --offline --example spmm_chain_solver [grid] [rhs]
 //! ```
 
+use std::sync::Arc;
 use std::time::Instant;
 use tile_fusion::gnn::ops::matmul_at_b;
 use tile_fusion::prelude::*;
@@ -68,7 +72,7 @@ fn main() {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
     // SPD-style operator: symmetric-normalized 5-point Laplacian graph.
-    let a = gen::gcn_normalize::<f64>(&gen::poisson2d(grid, grid));
+    let a = Arc::new(gen::gcn_normalize::<f64>(&gen::poisson2d(grid, grid)));
     let n = a.rows();
     println!("== block power iteration: Â from poisson2d({grid}x{grid}), n={n}, {rhs} RHS ==");
 
@@ -123,5 +127,43 @@ fn main() {
     );
     assert!(x_diff < 1e-8, "fused and unfused solves diverged");
     assert!(final_res.is_finite());
+
+    // --- chain executor: two pairs per call, one deduplicated schedule --
+    let pairs_per_call = 2usize;
+    let ops: Vec<ChainStepOp<f64>> = (0..pairs_per_call)
+        .map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+        .collect();
+    let mut chain = ChainExec::plan_and_build(ops, n, rhs, params).expect("bind solver chain");
+    let xc = Dense::<f64>::randn(n, rhs, 42);
+    let mut yc = Dense::<f64>::zeros(n, rhs);
+    chain.run(&pool, &xc, &mut yc); // yc = Â(Â(Â(Â xc)))
+
+    // Same math through back-to-back pair calls must agree exactly.
+    let (mut t1, mut t2) = (Dense::<f64>::zeros(n, rhs), Dense::<f64>::zeros(n, rhs));
+    fused.run(&pool, &xc, &mut t1);
+    fused.run(&pool, &t1, &mut t2);
+    let chain_diff = yc.max_abs_diff(&t2);
+    assert!(chain_diff < 1e-12, "chain and pair-by-pair applications diverged: {chain_diff:e}");
+
+    let reps = 10;
+    let t2b = Instant::now();
+    for _ in 0..reps {
+        chain.run(&pool, &xc, &mut yc);
+    }
+    let chain_time = t2b.elapsed();
+    let t3 = Instant::now();
+    for _ in 0..reps {
+        fused.run(&pool, &xc, &mut t1);
+        fused.run(&pool, &t1, &mut t2);
+    }
+    let pair_time = t3.elapsed();
+    println!(
+        "chain exec ({pairs_per_call} pairs/call): {:.3} ms/call vs pair-by-pair {:.3} ms/call \
+         ({:.2}x) | pair-vs-chain diff {:.1e}",
+        chain_time.as_secs_f64() * 1e3 / reps as f64,
+        pair_time.as_secs_f64() * 1e3 / reps as f64,
+        pair_time.as_secs_f64() / chain_time.as_secs_f64(),
+        chain_diff
+    );
     println!("OK");
 }

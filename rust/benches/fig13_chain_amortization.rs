@@ -1,0 +1,82 @@
+//! Figure 13 (repo extension): chain-fusion amortization — a whole
+//! multiplication chain (`X ← Â(ÂX)` applied `len` times, the block
+//! solver / multi-layer pattern) executed as one fused [`ChainExec`]
+//! versus per-pair library calls versus an unfused chain.
+//!
+//! The fused chain keeps one persistent pool, one deduplicated schedule
+//! and ping-pong intermediates; the per-pair arm pays pool spin-up and
+//! workspace allocation on every step (the schedule itself is cached in
+//! both, so the gap isolates runtime overheads, not inspection).
+//!
+//! Expectation (acceptance): fused-chain ≥ per-pair-call throughput on
+//! the banded and R-MAT suite inputs.
+
+use std::sync::Arc;
+use tile_fusion::harness::{
+    print_table, spmm_chain_flops, time_spmm_chain, write_csv, BenchEnv, ChainStrat,
+};
+use tile_fusion::prelude::*;
+use tile_fusion::profiling;
+use tile_fusion::sparse::gen::suite;
+
+fn main() {
+    let env = BenchEnv::from_env();
+    let rhs = 32;
+    let lens = [2usize, 4, 8];
+    let pool = ThreadPool::new(env.threads);
+    let arms = [ChainStrat::FusedChain, ChainStrat::PerPairCall, ChainStrat::UnfusedChain];
+
+    let mut table = Vec::new();
+    let mut csv = Vec::new();
+    let mut speedup_vs_pair = Vec::new();
+    let mut speedup_vs_unfused = Vec::new();
+    for m in suite(env.scale) {
+        let a = Arc::new(Csr::<f32>::with_random_values(m.pattern, 1, -1.0, 1.0));
+        for &len in &lens {
+            let flops = spmm_chain_flops(&a, len, rhs);
+            let secs: Vec<f64> = arms
+                .iter()
+                .map(|&s| time_spmm_chain(s, &a, len, rhs, &pool, env.reps).as_secs_f64())
+                .collect();
+            let (fused, pair, unfused) = (secs[0], secs[1], secs[2]);
+            speedup_vs_pair.push(pair / fused);
+            speedup_vs_unfused.push(unfused / fused);
+            table.push(vec![
+                m.name.to_string(),
+                len.to_string(),
+                format!("{:.2}", flops as f64 / fused / 1e9),
+                format!("{:.2}", flops as f64 / pair / 1e9),
+                format!("{:.2}", flops as f64 / unfused / 1e9),
+                format!("{:.2}", pair / fused),
+                format!("{:.2}", unfused / fused),
+            ]);
+            csv.push(format!(
+                "{},{len},{rhs},{fused:.6},{pair:.6},{unfused:.6}",
+                m.name
+            ));
+        }
+    }
+    print_table(
+        "Figure 13 — chain fusion amortization (SpMM-SpMM chains, rhs=32, SP)",
+        &[
+            "matrix",
+            "chain len",
+            "fused_chain GF/s",
+            "per_pair GF/s",
+            "unfused_chain GF/s",
+            "vs per-pair",
+            "vs unfused",
+        ],
+        &table,
+    );
+    println!(
+        "gmean speedup: fused chain {:.2}x over per-pair calls, {:.2}x over unfused chain",
+        profiling::gmean(&speedup_vs_pair),
+        profiling::gmean(&speedup_vs_unfused)
+    );
+    write_csv(
+        "fig13_chain_amortization",
+        "matrix,chain_len,rhs,t_fused_chain,t_per_pair_call,t_unfused_chain",
+        &csv,
+    );
+}

@@ -10,10 +10,18 @@
 //! - a matrix registry (named sparse operands);
 //! - request execution with per-request strategy selection and batching
 //!   of multi-`C` requests over one schedule;
+//! - whole-chain requests ([`ChainRequest`]): an arbitrary-length
+//!   multiplication chain planned once (per-step schedules served from
+//!   the same cache, deduplicated across steps) and executed on the
+//!   persistent pool with per-step strategy overrides and batched
+//!   inputs;
 //! - [`Metrics`] for ops/latency/cache behaviour.
 
 pub mod cache;
 pub mod service;
 
 pub use cache::{ScheduleCache, ScheduleKey};
-pub use service::{Coordinator, Metrics, PairKind, Request, Response, Strategy};
+pub use service::{
+    ChainRequest, ChainResponse, ChainStepRequest, Coordinator, Metrics, PairKind, Request,
+    Response, Strategy,
+};

@@ -5,9 +5,11 @@
 
 use super::cache::ScheduleCache;
 use crate::core::{Dense, Scalar};
+use crate::exec::chain::{chain_specs, ChainExec, ChainStepOp, StepStrategy};
 use crate::exec::{
     AtomicTiling, Fused, Overlapped, PairExec, PairOp, TensorStyle, ThreadPool, Unfused,
 };
+use crate::scheduler::chain::{unfused_schedule, ChainPlanner, ChainStats};
 use crate::scheduler::SchedulerParams;
 use crate::sparse::Csr;
 use anyhow::{anyhow, bail, Result};
@@ -64,6 +66,43 @@ pub struct Response<T> {
     pub strategy: Strategy,
 }
 
+/// One step of a [`ChainRequest`]: `out = A (B C)` where the chain value
+/// flows through `B` (GCN-style, stationary weights `w`) or through `C`
+/// (solver-style, stationary dense `b_dense` or named sparse `b_sparse`).
+/// Exactly one of `w` / `b_dense` / `b_sparse` must be set.
+pub struct ChainStepRequest<T> {
+    /// Registered name of this step's sparse `A`.
+    pub a: String,
+    /// Stationary weights (flowing `B`): `out = A ((chain) · w)`.
+    pub w: Option<Dense<T>>,
+    /// Stationary dense `B` (flowing `C`): `out = A (b · (chain))`.
+    pub b_dense: Option<Dense<T>>,
+    /// Name of a stationary sparse `B` (flowing `C`).
+    pub b_sparse: Option<String>,
+    /// Per-step strategy override (`None` ⇒ the request default).
+    pub strategy: Option<Strategy>,
+}
+
+/// A whole multiplication chain as one request: planned once (schedules
+/// served from the coordinator's [`ScheduleCache`], deduplicated across
+/// steps), executed on the persistent pool for every batched input.
+pub struct ChainRequest<T> {
+    pub steps: Vec<ChainStepRequest<T>>,
+    /// Batched chain inputs (≥ 1); one plan and one executor serve all.
+    pub xs: Vec<Dense<T>>,
+    /// Default step strategy ([`Strategy::TileFusion`] or
+    /// [`Strategy::Unfused`]; others are pair-only).
+    pub strategy: Strategy,
+}
+
+/// Chain response: one output per batched input, plus plan statistics.
+#[derive(Debug)]
+pub struct ChainResponse<T> {
+    pub ds: Vec<Dense<T>>,
+    pub elapsed: Duration,
+    pub stats: ChainStats,
+}
+
 /// Rolling service metrics.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -72,6 +111,10 @@ pub struct Metrics {
     pub total_exec: Duration,
     pub total_schedule_builds: u64,
     pub schedule_cache_hits: u64,
+    /// Chain requests served (also counted in `requests`).
+    pub chain_requests: u64,
+    /// Chain steps executed across all chain requests and batch inputs.
+    pub chain_steps: u64,
 }
 
 /// The coordinator service.
@@ -188,6 +231,100 @@ impl<T: Scalar> Coordinator<T> {
         self.metrics.requests += 1;
         self.metrics.total_exec += elapsed;
         Ok(Response { ds, elapsed, strategy: req.strategy })
+    }
+
+    /// Execute a whole multiplication chain as one request: resolve
+    /// named operands, plan every step (schedules come from the shared
+    /// [`ScheduleCache`], so repeated patterns — across steps *and*
+    /// across past pair requests — reuse their inspection), bind one
+    /// [`ChainExec`], and run it for each batched input on the
+    /// persistent pool.
+    pub fn submit_chain(&mut self, req: ChainRequest<T>) -> Result<ChainResponse<T>> {
+        let ChainRequest { steps, xs, strategy } = req;
+        if steps.is_empty() {
+            bail!("empty chain");
+        }
+        if xs.is_empty() {
+            bail!("empty batch");
+        }
+        let (in_rows, in_cols) = (xs[0].rows, xs[0].cols);
+        for x in &xs {
+            if (x.rows, x.cols) != (in_rows, in_cols) {
+                bail!("batched chain inputs must share one shape");
+            }
+        }
+
+        let mut ops = Vec::with_capacity(steps.len());
+        let mut strategies = Vec::with_capacity(steps.len());
+        for (s, step) in steps.into_iter().enumerate() {
+            let a = Arc::clone(
+                self.matrices
+                    .get(&step.a)
+                    .ok_or_else(|| anyhow!("unknown matrix {:?}", step.a))?,
+            );
+            let op = match (step.w, step.b_dense, step.b_sparse) {
+                (Some(w), None, None) => ChainStepOp::GemmFlowB { a, w },
+                (None, Some(b), None) => ChainStepOp::GemmFlowC { a, b },
+                (None, None, Some(name)) => ChainStepOp::SpmmFlowC {
+                    a,
+                    b: Arc::clone(
+                        self.matrices
+                            .get(&name)
+                            .ok_or_else(|| anyhow!("unknown matrix {name:?}"))?,
+                    ),
+                },
+                _ => bail!("chain step {s}: exactly one of w / b_dense / b_sparse must be set"),
+            };
+            strategies.push(match step.strategy.unwrap_or(strategy) {
+                Strategy::TileFusion => StepStrategy::Fused,
+                Strategy::Unfused => StepStrategy::Unfused,
+                other => bail!(
+                    "chain step {s}: strategy {:?} is pair-only (chains support TileFusion / Unfused)",
+                    other
+                ),
+            });
+            ops.push(op);
+        }
+
+        let t0 = Instant::now();
+        let (hits0, miss0) = (self.cache.hits, self.cache.misses);
+        let plan = {
+            let specs = chain_specs(&ops, in_rows, in_cols)?;
+            // Only steps that will actually run fused pay Algorithm 1's
+            // inspection (through the shared cache); unfused steps get a
+            // trivial no-fusion schedule, deduplicated locally, that the
+            // executor's geometry checks accept but never consult.
+            let n_cores = self.cache.params().n_cores;
+            let mut trivial: HashMap<u64, Arc<crate::scheduler::FusedSchedule>> = HashMap::new();
+            ChainPlanner::new(self.cache.params()).plan_with(in_rows, in_cols, &specs, |s, op| {
+                match strategies[s] {
+                    StepStrategy::Fused => self.cache.get_or_build(op),
+                    StepStrategy::Unfused => Arc::clone(
+                        trivial
+                            .entry(op.a.structure_hash())
+                            .or_insert_with(|| Arc::new(unfused_schedule(op.a, n_cores))),
+                    ),
+                }
+            })?
+        };
+        self.metrics.schedule_cache_hits += self.cache.hits - hits0;
+        self.metrics.total_schedule_builds += self.cache.misses - miss0;
+
+        let mut exec = ChainExec::new(ops, &plan)?;
+        exec.set_strategies(&strategies);
+        let (out_rows, out_cols) = exec.out_dims();
+        let mut ds: Vec<Dense<T>> =
+            xs.iter().map(|_| Dense::zeros(out_rows, out_cols)).collect();
+        for (x, d) in xs.iter().zip(&mut ds) {
+            exec.run(&self.pool, x, d);
+        }
+
+        let elapsed = t0.elapsed();
+        self.metrics.requests += 1;
+        self.metrics.chain_requests += 1;
+        self.metrics.chain_steps += (plan.len() * xs.len()) as u64;
+        self.metrics.total_exec += elapsed;
+        Ok(ChainResponse { ds, elapsed, stats: plan.stats.clone() })
     }
 
     /// Cache state (entries, hits, misses) for observability.
@@ -321,6 +458,182 @@ mod tests {
                 .unwrap();
             assert!(resp.ds[0].max_abs_diff(&expect) < 1e-10, "{}", strat.name());
         }
+    }
+
+    fn gcn_chain_request(ws: Vec<Dense<f64>>, xs: Vec<Dense<f64>>) -> ChainRequest<f64> {
+        ChainRequest {
+            steps: ws
+                .into_iter()
+                .map(|w| ChainStepRequest {
+                    a: "A".into(),
+                    w: Some(w),
+                    b_dense: None,
+                    b_sparse: None,
+                    strategy: None,
+                })
+                .collect(),
+            xs,
+            strategy: Strategy::TileFusion,
+        }
+    }
+
+    #[test]
+    fn chain_request_matches_composed_reference() {
+        let mut coord = coord();
+        let a = register_demo(&mut coord);
+        let (w1, w2) = (Dense::<f64>::randn(8, 16, 1), Dense::<f64>::randn(16, 4, 2));
+        let x = Dense::<f64>::randn(256, 8, 3);
+        let h = reference(&PairOp::gemm_spmm(&a, &x), &w1);
+        let expect = reference(&PairOp::gemm_spmm(&a, &h), &w2);
+        let resp = coord.submit_chain(gcn_chain_request(vec![w1, w2], vec![x])).unwrap();
+        assert_eq!(resp.ds.len(), 1);
+        assert!(resp.ds[0].max_abs_diff(&expect) < 1e-10);
+        assert_eq!(resp.stats.n_steps, 2);
+        assert_eq!(coord.metrics().chain_requests, 1);
+        assert_eq!(coord.metrics().chain_steps, 2);
+    }
+
+    #[test]
+    fn solver_chain_dedups_schedules_and_hits_cache_on_repeat() {
+        let mut coord = coord();
+        register_demo(&mut coord);
+        let mk = || ChainRequest {
+            steps: (0..4)
+                .map(|_| ChainStepRequest {
+                    a: "A".into(),
+                    w: None,
+                    b_dense: None,
+                    b_sparse: Some("A".into()),
+                    strategy: None,
+                })
+                .collect(),
+            xs: vec![Dense::<f64>::randn(256, 8, 9)],
+            strategy: Strategy::TileFusion,
+        };
+        let resp = coord.submit_chain(mk()).unwrap();
+        assert_eq!(resp.stats.unique_schedules, 1, "identical steps share one schedule");
+        assert_eq!(resp.stats.dedup_hits, 3);
+        let (entries, hits, misses) = coord.cache_stats();
+        assert_eq!((entries, misses), (1, 1));
+        assert_eq!(hits, 3);
+
+        coord.submit_chain(mk()).unwrap();
+        let (entries, hits, misses) = coord.cache_stats();
+        assert_eq!((entries, misses), (1, 1), "repeat chain builds nothing new");
+        assert_eq!(hits, 7);
+    }
+
+    #[test]
+    fn chain_steps_reuse_pair_request_schedules() {
+        let mut coord = coord();
+        register_demo(&mut coord);
+        // Pair request with (bcol, ccol) = (16, 8)...
+        coord
+            .submit(&Request {
+                a: "A".into(),
+                b_dense: Some(Dense::<f64>::randn(256, 16, 1)),
+                b_sparse: None,
+                cs: vec![Dense::<f64>::randn(16, 8, 2)],
+                strategy: Strategy::TileFusion,
+            })
+            .unwrap();
+        assert_eq!(coord.cache_stats().0, 1);
+        // ...then a one-step chain with the same shape: no new build.
+        let x = Dense::<f64>::randn(256, 16, 3);
+        coord
+            .submit_chain(gcn_chain_request(vec![Dense::<f64>::randn(16, 8, 4)], vec![x]))
+            .unwrap();
+        let (entries, hits, misses) = coord.cache_stats();
+        assert_eq!((entries, misses), (1, 1), "chain reused the pair-phase schedule");
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn chain_batched_inputs_one_plan() {
+        let mut coord = coord();
+        let a = register_demo(&mut coord);
+        let w = Dense::<f64>::randn(8, 4, 5);
+        let xs: Vec<_> = (0..3).map(|i| Dense::<f64>::randn(256, 8, 20 + i)).collect();
+        let expects: Vec<_> =
+            xs.iter().map(|x| reference(&PairOp::gemm_spmm(&a, x), &w)).collect();
+        let resp = coord.submit_chain(gcn_chain_request(vec![w], xs)).unwrap();
+        assert_eq!(resp.ds.len(), 3);
+        for (d, e) in resp.ds.iter().zip(&expects) {
+            assert!(d.max_abs_diff(e) < 1e-10);
+        }
+        assert_eq!(coord.cache_stats().0, 1);
+        assert_eq!(coord.metrics().chain_steps, 3);
+    }
+
+    #[test]
+    fn unfused_chain_skips_schedule_inspection() {
+        let mut coord = coord();
+        let a = register_demo(&mut coord);
+        let w = Dense::<f64>::randn(8, 4, 3);
+        let x = Dense::<f64>::randn(256, 8, 4);
+        let expect = reference(&PairOp::gemm_spmm(&a, &x), &w);
+        let mut req = gcn_chain_request(vec![w], vec![x]);
+        req.strategy = Strategy::Unfused;
+        let resp = coord.submit_chain(req).unwrap();
+        assert!(resp.ds[0].max_abs_diff(&expect) < 1e-10);
+        let (entries, hits, misses) = coord.cache_stats();
+        assert_eq!(
+            (entries, hits, misses),
+            (0, 0, 0),
+            "an all-unfused chain must not build or fetch fused schedules"
+        );
+        assert_eq!(coord.metrics().total_schedule_builds, 0);
+    }
+
+    #[test]
+    fn chain_per_step_strategy_override_agrees() {
+        let mut coord = coord();
+        let a = register_demo(&mut coord);
+        let (w1, w2) = (Dense::<f64>::randn(8, 8, 6), Dense::<f64>::randn(8, 4, 7));
+        let x = Dense::<f64>::randn(256, 8, 8);
+        let h = reference(&PairOp::gemm_spmm(&a, &x), &w1);
+        let expect = reference(&PairOp::gemm_spmm(&a, &h), &w2);
+        let mut req = gcn_chain_request(vec![w1, w2], vec![x]);
+        req.steps[1].strategy = Some(Strategy::Unfused);
+        let resp = coord.submit_chain(req).unwrap();
+        assert!(resp.ds[0].max_abs_diff(&expect) < 1e-10);
+    }
+
+    #[test]
+    fn chain_request_errors() {
+        let mut coord = coord();
+        register_demo(&mut coord);
+        // Pair-only strategy is rejected.
+        let mut req = gcn_chain_request(
+            vec![Dense::<f64>::randn(8, 4, 1)],
+            vec![Dense::<f64>::randn(256, 8, 2)],
+        );
+        req.strategy = Strategy::AtomicTiling;
+        let err = coord.submit_chain(req).unwrap_err();
+        assert!(err.to_string().contains("pair-only"), "{err}");
+
+        // Over-specified step operands are rejected.
+        let req = ChainRequest {
+            steps: vec![ChainStepRequest {
+                a: "A".into(),
+                w: Some(Dense::<f64>::randn(8, 4, 1)),
+                b_dense: None,
+                b_sparse: Some("A".into()),
+                strategy: None,
+            }],
+            xs: vec![Dense::<f64>::randn(256, 8, 2)],
+            strategy: Strategy::TileFusion,
+        };
+        let err = coord.submit_chain(req).unwrap_err();
+        assert!(err.to_string().contains("exactly one"), "{err}");
+
+        // Dimension mismatches surface as errors, not panics.
+        let req = gcn_chain_request(
+            vec![Dense::<f64>::randn(9, 4, 1)],
+            vec![Dense::<f64>::randn(256, 8, 2)],
+        );
+        let err = coord.submit_chain(req).unwrap_err();
+        assert!(err.to_string().contains("chain error"), "{err}");
     }
 
     #[test]

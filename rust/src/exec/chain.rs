@@ -1,0 +1,606 @@
+//! Chain executor — runs a planned multiplication chain end-to-end on
+//! one persistent [`ThreadPool`].
+//!
+//! [`ChainExec`] binds operands ([`ChainStepOp`]) to a
+//! [`ChainPlan`](crate::scheduler::chain::ChainPlan) and applies the
+//! whole chain per [`ChainExec::run`] call:
+//!
+//! - **one pool** for every step — no per-step pool spin-up;
+//! - **ping-pong intermediate buffers** allocated once at bind time (two
+//!   buffers sized to the largest intermediate, reused alternately);
+//! - per-step `D1` workspaces allocated once — no per-step allocation on
+//!   the run path;
+//! - per-step strategy override ([`StepStrategy`]): tile fusion (default)
+//!   or the unfused baseline, both through the same workspaces;
+//! - still exactly one barrier per wavefront, as in the single-pair
+//!   executors.
+//!
+//! [`ChainExec::run_with`] additionally exposes each step's output for
+//! in-place post-processing (the GCN forward applies ReLU between layers
+//! and snapshots activations for backprop through this hook).
+
+use super::fused::run_fused;
+use super::unfused::run_unfused;
+use super::{Dense, PairOp, Scalar, ThreadPool};
+use crate::scheduler::chain::{ChainError, ChainFlow, ChainPlan, ChainStepSpec};
+use crate::scheduler::{BSide, FusedSchedule, FusionOp, SchedulerParams};
+use crate::sparse::Csr;
+use std::sync::Arc;
+
+/// Row-block grain for unfused chain steps (matches `Unfused::new`).
+const UNFUSED_CHUNK: usize = 64;
+
+/// One chain step's operands: `out = A (B C)` where exactly one of `B`,
+/// `C` is the flowing chain value and the rest are bound here.
+pub enum ChainStepOp<T> {
+    /// GeMM-SpMM with flowing `B` (a GCN layer): `out = A ((chain) · W)`.
+    GemmFlowB { a: Arc<Csr<T>>, w: Dense<T> },
+    /// GeMM-SpMM with flowing `C`: `out = A (B · (chain))`, dense `B`.
+    GemmFlowC { a: Arc<Csr<T>>, b: Dense<T> },
+    /// SpMM-SpMM with flowing `C` (a solver step): `out = A (B · (chain))`.
+    SpmmFlowC { a: Arc<Csr<T>>, b: Arc<Csr<T>> },
+}
+
+impl<T: Scalar> ChainStepOp<T> {
+    /// Which operand the chain value feeds.
+    pub fn flow(&self) -> ChainFlow {
+        match self {
+            ChainStepOp::GemmFlowB { .. } => ChainFlow::B,
+            ChainStepOp::GemmFlowC { .. } | ChainStepOp::SpmmFlowC { .. } => ChainFlow::C,
+        }
+    }
+
+    /// The step's sparse `A`.
+    pub fn a(&self) -> &Arc<Csr<T>> {
+        match self {
+            ChainStepOp::GemmFlowB { a, .. }
+            | ChainStepOp::GemmFlowC { a, .. }
+            | ChainStepOp::SpmmFlowC { a, .. } => a,
+        }
+    }
+}
+
+/// Executor strategy of one chain step.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StepStrategy {
+    /// Tile fusion over the step's `FusedSchedule` (the default).
+    #[default]
+    Fused,
+    /// Unfused baseline (two parallel loops) on the same pool/workspaces.
+    Unfused,
+}
+
+/// Build planner-facing [`ChainStepSpec`]s for bound operands,
+/// propagating the flowing shape from `in_rows × in_cols` and checking
+/// the value-level dimensions the (pattern-only) planner cannot see.
+pub fn chain_specs<'a, T: Scalar>(
+    ops: &'a [ChainStepOp<T>],
+    in_rows: usize,
+    in_cols: usize,
+) -> Result<Vec<ChainStepSpec<'a>>, ChainError> {
+    if ops.is_empty() {
+        return Err(ChainError::new("empty chain"));
+    }
+    let _ = in_rows; // rows conformance is the planner's job (per-step)
+    let mut cur_c = in_cols;
+    let mut specs = Vec::with_capacity(ops.len());
+    for (s, op) in ops.iter().enumerate() {
+        let spec = match op {
+            ChainStepOp::GemmFlowB { a, w } => {
+                if w.rows != cur_c {
+                    return Err(ChainError::new(format!(
+                        "step {s}: weights are {}x{} but the flowing value has {cur_c} cols",
+                        w.rows, w.cols
+                    )));
+                }
+                ChainStepSpec {
+                    op: FusionOp {
+                        a: &a.pattern,
+                        b: BSide::Dense { bcol: cur_c },
+                        ccol: w.cols,
+                    },
+                    flow: ChainFlow::B,
+                }
+            }
+            ChainStepOp::GemmFlowC { a, b } => {
+                if b.rows != a.cols() {
+                    return Err(ChainError::new(format!(
+                        "step {s}: stationary B has {} rows but A has {} cols",
+                        b.rows,
+                        a.cols()
+                    )));
+                }
+                ChainStepSpec {
+                    op: FusionOp {
+                        a: &a.pattern,
+                        b: BSide::Dense { bcol: b.cols },
+                        ccol: cur_c,
+                    },
+                    flow: ChainFlow::C,
+                }
+            }
+            ChainStepOp::SpmmFlowC { a, b } => ChainStepSpec {
+                op: FusionOp { a: &a.pattern, b: BSide::Sparse(&b.pattern), ccol: cur_c },
+                flow: ChainFlow::C,
+            },
+        };
+        cur_c = match spec.flow {
+            ChainFlow::B => spec.op.ccol,
+            ChainFlow::C => cur_c,
+        };
+        specs.push(spec);
+    }
+    Ok(specs)
+}
+
+struct ChainStepExec<T> {
+    op: ChainStepOp<T>,
+    schedule: Arc<FusedSchedule>,
+    strategy: StepStrategy,
+    /// Per-step `D1` workspace, allocated once at bind time.
+    d1: Dense<T>,
+    out_rows: usize,
+    out_cols: usize,
+}
+
+/// A bound, reusable chain executor. Bind once, `run` many times.
+pub struct ChainExec<T> {
+    steps: Vec<ChainStepExec<T>>,
+    /// Ping-pong intermediates, allocated once to the max intermediate
+    /// area and reshaped (never reallocated) per step.
+    inter: [Dense<T>; 2],
+    in_rows: usize,
+    in_cols: usize,
+    out_rows: usize,
+    out_cols: usize,
+}
+
+impl<T: Scalar> ChainExec<T> {
+    /// Bind operands to a plan built from the same patterns/shapes
+    /// (checked by dimension here; by content in the planner).
+    pub fn new(ops: Vec<ChainStepOp<T>>, plan: &ChainPlan) -> Result<Self, ChainError> {
+        if plan.steps.is_empty() {
+            return Err(ChainError::new("empty chain"));
+        }
+        if ops.len() != plan.steps.len() {
+            return Err(ChainError::new(format!(
+                "{} operand steps but the plan has {}",
+                ops.len(),
+                plan.steps.len()
+            )));
+        }
+        let mut steps = Vec::with_capacity(ops.len());
+        // Incoming (flowing) shape of each step, per the plan.
+        let (mut in_r, mut in_c) = (plan.in_rows, plan.in_cols);
+        for (s, (op, sp)) in ops.into_iter().zip(&plan.steps).enumerate() {
+            if op.flow() != sp.flow {
+                return Err(ChainError::new(format!("step {s}: operand/plan flow mismatch")));
+            }
+            let (ar, ac) = (op.a().rows(), op.a().cols());
+            if ar != sp.out_rows || ac != sp.d1_rows {
+                return Err(ChainError::new(format!(
+                    "step {s}: A is {ar}x{ac} but the plan expects {}x{}",
+                    sp.out_rows, sp.d1_rows
+                )));
+            }
+            if sp.schedule.n_first != ac || sp.schedule.n_second != ar {
+                return Err(ChainError::new(format!(
+                    "step {s}: schedule was built for a {}x{} pattern, A is {ar}x{ac}",
+                    sp.schedule.n_second, sp.schedule.n_first
+                )));
+            }
+            match &op {
+                ChainStepOp::GemmFlowB { w, .. } => {
+                    if w.rows != in_c || w.cols != sp.out_cols {
+                        return Err(ChainError::new(format!(
+                            "step {s}: weights are {}x{} but the plan expects {in_c}x{}",
+                            w.rows, w.cols, sp.out_cols
+                        )));
+                    }
+                }
+                ChainStepOp::GemmFlowC { b, .. } => {
+                    if b.rows != ac || b.cols != in_r {
+                        return Err(ChainError::new(format!(
+                            "step {s}: stationary B is {}x{} but the plan expects {ac}x{in_r}",
+                            b.rows, b.cols
+                        )));
+                    }
+                }
+                ChainStepOp::SpmmFlowC { b, .. } => {
+                    if b.rows() != ac || b.cols() != in_r {
+                        return Err(ChainError::new(format!(
+                            "step {s}: stationary B is {}x{} but the plan expects {ac}x{in_r}",
+                            b.rows(),
+                            b.cols()
+                        )));
+                    }
+                }
+            }
+            (in_r, in_c) = (sp.out_rows, sp.out_cols);
+            steps.push(ChainStepExec {
+                op,
+                schedule: Arc::clone(&sp.schedule),
+                strategy: StepStrategy::Fused,
+                d1: Dense::zeros(sp.d1_rows, sp.out_cols),
+                out_rows: sp.out_rows,
+                out_cols: sp.out_cols,
+            });
+        }
+        let max_area = plan.steps[..plan.steps.len() - 1]
+            .iter()
+            .map(|p| p.out_rows * p.out_cols)
+            .max()
+            .unwrap_or(0);
+        let mk = || Dense { rows: 0, cols: 0, data: Vec::with_capacity(max_area) };
+        let (out_rows, out_cols) = plan.out_dims();
+        Ok(Self {
+            steps,
+            inter: [mk(), mk()],
+            in_rows: plan.in_rows,
+            in_cols: plan.in_cols,
+            out_rows,
+            out_cols,
+        })
+    }
+
+    /// Plan (with a private dedup map) and bind in one call. The element
+    /// width of `params` is forced to `T`'s.
+    pub fn plan_and_build(
+        ops: Vec<ChainStepOp<T>>,
+        in_rows: usize,
+        in_cols: usize,
+        mut params: SchedulerParams,
+    ) -> Result<Self, ChainError> {
+        params.elem_bytes = T::BYTES;
+        let plan = {
+            let specs = chain_specs(&ops, in_rows, in_cols)?;
+            crate::scheduler::chain::ChainPlanner::new(params).plan(in_rows, in_cols, &specs)?
+        };
+        Self::new(ops, &plan)
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn in_dims(&self) -> (usize, usize) {
+        (self.in_rows, self.in_cols)
+    }
+
+    pub fn out_dims(&self) -> (usize, usize) {
+        (self.out_rows, self.out_cols)
+    }
+
+    /// Override one step's executor strategy.
+    pub fn set_strategy(&mut self, step: usize, strategy: StepStrategy) {
+        self.steps[step].strategy = strategy;
+    }
+
+    /// Override every step's strategy at once.
+    pub fn set_strategies(&mut self, strategies: &[StepStrategy]) {
+        assert_eq!(strategies.len(), self.steps.len(), "one strategy per step");
+        for (step, &s) in self.steps.iter_mut().zip(strategies) {
+            step.strategy = s;
+        }
+    }
+
+    /// Copy fresh weights into a [`ChainStepOp::GemmFlowB`] step (same
+    /// shape) — how a training loop updates parameters without rebinding
+    /// the chain. Panics if the step has no stationary weights.
+    pub fn set_weight(&mut self, step: usize, w: &Dense<T>) {
+        match &mut self.steps[step].op {
+            ChainStepOp::GemmFlowB { w: slot, .. } => {
+                assert_eq!(
+                    (slot.rows, slot.cols),
+                    (w.rows, w.cols),
+                    "weight shape changed; rebuild the chain"
+                );
+                slot.data.copy_from_slice(&w.data);
+            }
+            _ => panic!("chain step {step} has no stationary weights (not GemmFlowB)"),
+        }
+    }
+
+    /// Apply the whole chain: `out = step_{n-1}(... step_0(x) ...)`.
+    pub fn run(&mut self, pool: &ThreadPool, x: &Dense<T>, out: &mut Dense<T>) {
+        self.run_with(pool, x, out, |_, _| {});
+    }
+
+    /// [`ChainExec::run`] with a per-step tap: after step `s` writes its
+    /// output, `tap(s, buf)` may post-process it **in place** (e.g. an
+    /// activation) before it flows into step `s + 1`. The tap must not
+    /// change the buffer's shape — enforced with a panic, because later
+    /// steps execute bound schedules through raw pointers sized to the
+    /// planned shape.
+    pub fn run_with(
+        &mut self,
+        pool: &ThreadPool,
+        x: &Dense<T>,
+        out: &mut Dense<T>,
+        mut tap: impl FnMut(usize, &mut Dense<T>),
+    ) {
+        assert_eq!((x.rows, x.cols), (self.in_rows, self.in_cols), "chain input shape");
+        assert_eq!((out.rows, out.cols), (self.out_rows, self.out_cols), "chain output shape");
+        let n = self.steps.len();
+        let steps = &mut self.steps;
+        let inter = &mut self.inter;
+        let mut tap_checked = |s: usize, buf: &mut Dense<T>, rows: usize, cols: usize| {
+            tap(s, buf);
+            assert_eq!(
+                (buf.rows, buf.cols),
+                (rows, cols),
+                "tap must not change the step-{s} output shape"
+            );
+        };
+
+        // Step 0 reads the caller's input.
+        {
+            let step = &mut steps[0];
+            if n == 1 {
+                run_step(step, pool, x, out);
+                tap_checked(0, out, step.out_rows, step.out_cols);
+                return;
+            }
+            let dst = &mut inter[0];
+            shape_to(dst, step.out_rows, step.out_cols);
+            run_step(step, pool, x, dst);
+            tap_checked(0, dst, step.out_rows, step.out_cols);
+        }
+
+        // Steps 1..n ping-pong between the two intermediates; the last
+        // one writes straight into the caller's output.
+        for s in 1..n {
+            let step = &mut steps[s];
+            let (lo, hi) = inter.split_at_mut(1);
+            let (src, dst) = if s % 2 == 1 { (&lo[0], &mut hi[0]) } else { (&hi[0], &mut lo[0]) };
+            if s + 1 == n {
+                run_step(step, pool, src, out);
+                tap_checked(s, out, step.out_rows, step.out_cols);
+            } else {
+                shape_to(dst, step.out_rows, step.out_cols);
+                run_step(step, pool, src, dst);
+                tap_checked(s, dst, step.out_rows, step.out_cols);
+            }
+        }
+    }
+}
+
+/// Reshape a pre-capacitated buffer without reallocating (capacity was
+/// fixed to the chain's max intermediate area at bind time).
+fn shape_to<T: Scalar>(buf: &mut Dense<T>, rows: usize, cols: usize) {
+    if buf.rows != rows || buf.cols != cols {
+        buf.rows = rows;
+        buf.cols = cols;
+        buf.data.resize(rows * cols, T::ZERO);
+    }
+}
+
+/// Execute one step: bind the flowing value into a [`PairOp`] and run it
+/// with the step's strategy on the shared pool and workspaces.
+fn run_step<T: Scalar>(
+    step: &mut ChainStepExec<T>,
+    pool: &ThreadPool,
+    input: &Dense<T>,
+    out: &mut Dense<T>,
+) {
+    let strategy = step.strategy;
+    let d1 = &mut step.d1;
+    let schedule = &step.schedule;
+    match &step.op {
+        ChainStepOp::GemmFlowB { a, w } => {
+            let pair = PairOp::gemm_spmm(a, input);
+            match strategy {
+                StepStrategy::Fused => run_fused(&pair, schedule, pool, w, d1, out),
+                StepStrategy::Unfused => run_unfused(&pair, pool, w, d1, out, UNFUSED_CHUNK),
+            }
+        }
+        ChainStepOp::GemmFlowC { a, b } => {
+            let pair = PairOp::gemm_spmm(a, b);
+            match strategy {
+                StepStrategy::Fused => run_fused(&pair, schedule, pool, input, d1, out),
+                StepStrategy::Unfused => run_unfused(&pair, pool, input, d1, out, UNFUSED_CHUNK),
+            }
+        }
+        ChainStepOp::SpmmFlowC { a, b } => {
+            let pair = PairOp::spmm_spmm(a, b);
+            match strategy {
+                StepStrategy::Fused => run_fused(&pair, schedule, pool, input, d1, out),
+                StepStrategy::Unfused => run_unfused(&pair, pool, input, d1, out, UNFUSED_CHUNK),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::reference::reference;
+    use crate::sparse::gen;
+
+    fn params_small() -> SchedulerParams {
+        SchedulerParams {
+            n_cores: 3,
+            cache_bytes: 128 * 1024,
+            elem_bytes: 8,
+            ct_size: 32,
+            max_split_depth: 24,
+        }
+    }
+
+    /// Reference composition: apply each step's pair serially.
+    fn chain_reference<T: Scalar>(ops: &[ChainStepOp<T>], x: &Dense<T>) -> Dense<T> {
+        let mut cur = x.clone();
+        for op in ops {
+            cur = match op {
+                ChainStepOp::GemmFlowB { a, w } => reference(&PairOp::gemm_spmm(a, &cur), w),
+                ChainStepOp::GemmFlowC { a, b } => reference(&PairOp::gemm_spmm(a, b), &cur),
+                ChainStepOp::SpmmFlowC { a, b } => reference(&PairOp::spmm_spmm(a, b), &cur),
+            };
+        }
+        cur
+    }
+
+    #[test]
+    fn solver_chain_matches_composed_reference() {
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::poisson2d(12, 12), 1, -1.0, 1.0));
+        for len in [1usize, 2, 3, 5] {
+            let ops: Vec<ChainStepOp<f64>> = (0..len)
+                .map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+                .collect();
+            let x = Dense::<f64>::randn(a.rows(), 8, 3);
+            let expect = chain_reference(&ops, &x);
+            let mut chain =
+                ChainExec::plan_and_build(ops, a.rows(), 8, params_small()).unwrap();
+            let pool = ThreadPool::new(3);
+            let mut y = Dense::zeros(a.rows(), 8);
+            chain.run(&pool, &x, &mut y);
+            assert!(y.max_abs_diff(&expect) < 1e-9, "len={len}");
+        }
+    }
+
+    #[test]
+    fn gcn_chain_matches_composed_reference() {
+        let a = Arc::new(Csr::<f64>::with_random_values(
+            gen::rmat(128, 6, gen::RmatKind::Graph500, 5),
+            2,
+            -1.0,
+            1.0,
+        ));
+        let widths = [8usize, 16, 16, 4];
+        let ops: Vec<ChainStepOp<f64>> = widths
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| ChainStepOp::GemmFlowB {
+                a: Arc::clone(&a),
+                w: Dense::<f64>::randn(w[0], w[1], 10 + i as u64),
+            })
+            .collect();
+        let x = Dense::<f64>::randn(128, widths[0], 4);
+        let expect = chain_reference(&ops, &x);
+        let mut chain = ChainExec::plan_and_build(ops, 128, widths[0], params_small()).unwrap();
+        let pool = ThreadPool::new(2);
+        let mut y = Dense::zeros(128, *widths.last().unwrap());
+        chain.run(&pool, &x, &mut y);
+        assert!(y.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn mixed_step_kinds_and_strategies() {
+        // x (30x6) -> GemmFlowC (A1 30x20, B 20x30) -> (30x6)
+        //          -> SpmmFlowC (A2 30x30)           -> (30x6)
+        //          -> GemmFlowB (w 6x5)              -> (30x5)
+        let a1 = Arc::new(Csr::<f64>::with_random_values(
+            gen::uniform_random(30, 20, 4, 7),
+            3,
+            -1.0,
+            1.0,
+        ));
+        let b1 = Dense::<f64>::randn(20, 30, 8);
+        let a2 = Arc::new(Csr::<f64>::with_random_values(gen::banded(30, &[1, 3]), 4, -1.0, 1.0));
+        let a3 = Arc::new(Csr::<f64>::with_random_values(
+            gen::erdos_renyi(30, 3, 11),
+            5,
+            -1.0,
+            1.0,
+        ));
+        let w = Dense::<f64>::randn(6, 5, 9);
+        let ops = vec![
+            ChainStepOp::GemmFlowC { a: Arc::clone(&a1), b: b1 },
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a2), b: Arc::clone(&a2) },
+            ChainStepOp::GemmFlowB { a: Arc::clone(&a3), w },
+        ];
+        let x = Dense::<f64>::randn(30, 6, 12);
+        let expect = chain_reference(&ops, &x);
+        let mut chain = ChainExec::plan_and_build(ops, 30, 6, params_small()).unwrap();
+        chain.set_strategies(&[StepStrategy::Fused, StepStrategy::Unfused, StepStrategy::Fused]);
+        let pool = ThreadPool::new(2);
+        let mut y = Dense::zeros(30, 5);
+        chain.run(&pool, &x, &mut y);
+        assert!(y.max_abs_diff(&expect) < 1e-9);
+        assert_eq!(chain.out_dims(), (30, 5));
+        assert_eq!(chain.n_steps(), 3);
+    }
+
+    #[test]
+    fn reusable_across_runs_and_weight_updates() {
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(40, &[1]), 6, -1.0, 1.0));
+        let ops = vec![ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Dense::zeros(4, 3) }];
+        let mut chain = ChainExec::plan_and_build(ops, 40, 4, params_small()).unwrap();
+        let pool = ThreadPool::new(2);
+        let mut y = Dense::zeros(40, 3);
+        for seed in 0..4 {
+            let w = Dense::<f64>::randn(4, 3, seed);
+            chain.set_weight(0, &w);
+            let x = Dense::<f64>::randn(40, 4, seed + 100);
+            chain.run(&pool, &x, &mut y);
+            let expect = reference(&PairOp::gemm_spmm(&a, &x), &w);
+            assert!(y.max_abs_diff(&expect) < 1e-11, "run {seed}");
+        }
+    }
+
+    #[test]
+    fn run_with_tap_transforms_between_steps() {
+        // Apply ReLU between two identity-ish steps and check the tap is
+        // what makes the difference.
+        let a = Arc::new(Csr::<f64>::eye(16));
+        let ops = vec![
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+        ];
+        let x = Dense::<f64>::randn(16, 4, 1);
+        let mut chain = ChainExec::plan_and_build(ops, 16, 4, params_small()).unwrap();
+        let pool = ThreadPool::new(1);
+        let mut y = Dense::zeros(16, 4);
+        let mut taps = Vec::new();
+        chain.run_with(&pool, &x, &mut y, |s, buf| {
+            taps.push(s);
+            if s == 0 {
+                crate::gnn::ops::relu(buf);
+            }
+        });
+        assert_eq!(taps, vec![0, 1]);
+        let mut expect = x.clone();
+        crate::gnn::ops::relu(&mut expect);
+        assert!(y.max_abs_diff(&expect) < 1e-12, "identity chain + tap == relu(x)");
+    }
+
+    #[test]
+    fn bad_dims_are_rejected() {
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(10, &[1]), 1, -1.0, 1.0));
+        // weights expect a 6-col flow but the input has 5 cols.
+        let ops = vec![ChainStepOp::GemmFlowB { a, w: Dense::zeros(6, 3) }];
+        let err = ChainExec::plan_and_build(ops, 10, 5, params_small()).unwrap_err();
+        assert!(err.to_string().contains("flowing value"), "{err}");
+    }
+
+    #[test]
+    fn bind_rejects_operands_that_mismatch_the_plan() {
+        // Plan for a 4-wide flow, then try to bind 5-row weights: the
+        // constructor must fail with a ChainError, not panic mid-run.
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(10, &[1]), 1, -1.0, 1.0));
+        let good = vec![ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Dense::zeros(4, 3) }];
+        let plan = {
+            let specs = chain_specs(&good, 10, 4).unwrap();
+            crate::scheduler::chain::ChainPlanner::new(params_small())
+                .plan(10, 4, &specs)
+                .unwrap()
+        };
+        let bad = vec![ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Dense::zeros(5, 3) }];
+        let err = ChainExec::new(bad, &plan).unwrap_err();
+        assert!(err.to_string().contains("weights are 5x3"), "{err}");
+
+        // Same for a stationary sparse B whose shape disagrees.
+        let b_bad = Arc::new(Csr::<f64>::with_random_values(gen::banded(9, &[1]), 2, -1.0, 1.0));
+        let good_spmm =
+            vec![ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) }];
+        let plan = {
+            let specs = chain_specs(&good_spmm, 10, 4).unwrap();
+            crate::scheduler::chain::ChainPlanner::new(params_small())
+                .plan(10, 4, &specs)
+                .unwrap()
+        };
+        let err = ChainExec::new(vec![ChainStepOp::SpmmFlowC { a, b: b_bad }], &plan)
+            .unwrap_err();
+        assert!(err.to_string().contains("stationary B is 9x9"), "{err}");
+    }
+}

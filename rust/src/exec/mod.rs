@@ -16,8 +16,13 @@
 //! [`PairOp`] abstracts over the first operand (`B` dense ⇒ GeMM-SpMM,
 //! `B` sparse ⇒ SpMM-SpMM) and the §4.2.1 transpose-C variant, so each
 //! strategy is written once and serves both operation pairs.
+//!
+//! [`chain`] runs whole multiplication *chains* (GCN stacks, solver
+//! iterations) through one executor: one persistent pool, ping-pong
+//! intermediates, per-step fused/unfused strategy.
 
 pub mod atomic_tiling;
+pub mod chain;
 pub mod fused;
 pub mod overlapped;
 pub mod pool;
@@ -26,6 +31,7 @@ pub mod tensor_style;
 pub mod unfused;
 
 pub use atomic_tiling::AtomicTiling;
+pub use chain::{chain_specs, ChainExec, ChainStepOp, StepStrategy};
 pub use fused::Fused;
 pub use overlapped::Overlapped;
 pub use pool::ThreadPool;

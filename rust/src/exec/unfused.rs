@@ -29,12 +29,47 @@ impl<'a, T: Scalar> Unfused<'a, T> {
     pub fn d1(&self) -> &Dense<T> {
         &self.d1
     }
+}
 
-    fn ensure_ws(&mut self, ccol: usize) {
-        if self.d1.rows != self.op.n_first() || self.d1.cols != ccol {
-            self.d1 = Dense::zeros(self.op.n_first(), ccol);
-        }
+/// Run the unfused pair with a caller-owned `D1` workspace (resized if
+/// needed) — the allocation-free entry point the chain executor uses for
+/// per-step strategy overrides; [`Unfused::run`] wraps it.
+pub fn run_unfused<T: Scalar>(
+    op: &PairOp<'_, T>,
+    pool: &ThreadPool,
+    c: &Dense<T>,
+    d1: &mut Dense<T>,
+    d: &mut Dense<T>,
+    row_chunk: usize,
+) {
+    let ccol = op.layout.ccol(c);
+    if d1.rows != op.n_first() || d1.cols != ccol {
+        *d1 = Dense::zeros(op.n_first(), ccol);
     }
+    assert_eq!(d.rows, op.n_second());
+    assert_eq!(d.cols, ccol);
+
+    let d1_ptr = SendPtr(d1.data.as_mut_ptr());
+    let d_ptr = SendPtr(d.data.as_mut_ptr());
+
+    // Op 1: D1 = B · C over row blocks.
+    pool.parallel_for_chunks(op.n_first(), row_chunk, |r, _| unsafe {
+        let d1 = d1_ptr.get();
+        for i in r {
+            let out = std::slice::from_raw_parts_mut(d1.add(i * ccol), ccol);
+            op.first.compute_row(i, c, op.layout, out);
+        }
+    });
+
+    // Barrier, then op 2: D = A · D1 over row blocks.
+    pool.parallel_for_chunks(op.n_second(), row_chunk, |r, _| unsafe {
+        let d1 = d1_ptr.get() as *const T;
+        let d = d_ptr.get();
+        for j in r {
+            let out = std::slice::from_raw_parts_mut(d.add(j * ccol), ccol);
+            kernels::spmm_row_ptr(op.a, j, d1, ccol, out);
+        }
+    });
 }
 
 impl<T: Scalar> PairExec<T> for Unfused<'_, T> {
@@ -43,33 +78,11 @@ impl<T: Scalar> PairExec<T> for Unfused<'_, T> {
     }
 
     fn run(&mut self, pool: &ThreadPool, c: &Dense<T>, d: &mut Dense<T>) {
-        let ccol = self.op.layout.ccol(c);
-        self.ensure_ws(ccol);
-        assert_eq!(d.rows, self.op.n_second());
-        assert_eq!(d.cols, ccol);
-
-        let d1_ptr = SendPtr(self.d1.data.as_mut_ptr());
-        let d_ptr = SendPtr(d.data.as_mut_ptr());
-        let op = &self.op;
-
-        // Op 1: D1 = B · C over row blocks.
-        pool.parallel_for_chunks(op.n_first(), self.row_chunk, |r, _| unsafe {
-            let d1 = d1_ptr.get();
-            for i in r {
-                let out = std::slice::from_raw_parts_mut(d1.add(i * ccol), ccol);
-                op.first.compute_row(i, c, op.layout, out);
-            }
-        });
-
-        // Barrier, then op 2: D = A · D1 over row blocks.
-        pool.parallel_for_chunks(op.n_second(), self.row_chunk, |r, _| unsafe {
-            let d1 = d1_ptr.get() as *const T;
-            let d = d_ptr.get();
-            for j in r {
-                let out = std::slice::from_raw_parts_mut(d.add(j * ccol), ccol);
-                kernels::spmm_row_ptr(op.a, j, d1, ccol, out);
-            }
-        });
+        // run_unfused (re)sizes the workspace; swapping it out and back
+        // keeps the allocation across calls.
+        let mut d1 = std::mem::replace(&mut self.d1, Dense::zeros(0, 0));
+        run_unfused(&self.op, pool, c, &mut d1, d, self.row_chunk);
+        self.d1 = d1;
     }
 }
 

@@ -1,23 +1,23 @@
-//! Multi-layer GCN with manual backprop, forward via the tile-fused
-//! executor, backward via fused-op building blocks.
+//! Multi-layer GCN with manual backprop, forward via the chain-fused
+//! executor (one [`ChainExec`] over the whole layer stack), backward via
+//! fused-op building blocks.
 
 use super::ops;
 use crate::core::{Dense, Scalar};
 use crate::coordinator::ScheduleCache;
-use crate::exec::fused::run_fused;
-use crate::exec::{PairOp, ThreadPool, Unfused, PairExec};
+use crate::exec::chain::{chain_specs, ChainExec, ChainStepOp};
+use crate::exec::{PairExec, PairOp, ThreadPool, Unfused};
+use crate::scheduler::chain::ChainPlanner;
 use crate::sparse::Csr;
 use std::sync::Arc;
 
-/// One GCN layer's parameters and workspaces.
+/// One GCN layer's parameters and cached activations.
 pub struct GcnLayer<T> {
     pub w: Dense<T>,
     /// Pre-activation `Z = Â H W` of the last forward (backprop input).
     z: Dense<T>,
     /// Input activations of the last forward.
     h_in: Dense<T>,
-    d1_ws: Dense<T>,
-    plan: Option<Arc<crate::scheduler::FusedSchedule>>,
 }
 
 impl<T: Scalar> GcnLayer<T> {
@@ -28,7 +28,7 @@ impl<T: Scalar> GcnLayer<T> {
         for v in &mut w.data {
             *v = T::from_f64(v.to_f64() * scale);
         }
-        Self { w, z: Dense::zeros(0, 0), h_in: Dense::zeros(0, 0), d1_ws: Dense::zeros(0, 0), plan: None }
+        Self { w, z: Dense::zeros(0, 0), h_in: Dense::zeros(0, 0) }
     }
 }
 
@@ -53,6 +53,9 @@ pub struct Gcn<T> {
     pub layers: Vec<GcnLayer<T>>,
     pub mode: GcnMode,
     cache: ScheduleCache,
+    /// One chain executor over the whole layer stack (fused mode), built
+    /// lazily on the first forward and reused every epoch.
+    chain: Option<ChainExec<T>>,
     // backward scratch
     grad_z: Dense<T>,
     grad_h: Dense<T>,
@@ -75,6 +78,7 @@ impl<T: Scalar> Gcn<T> {
             layers,
             mode,
             cache: ScheduleCache::new(params),
+            chain: None,
             grad_z: Dense::zeros(0, 0),
             grad_h: Dense::zeros(0, 0),
             grad_g: Dense::zeros(0, 0),
@@ -84,6 +88,62 @@ impl<T: Scalar> Gcn<T> {
     /// Forward pass; returns logits. Caches per-layer activations for a
     /// following `backward`.
     pub fn forward(&mut self, pool: &ThreadPool, x: &Dense<T>) -> Dense<T> {
+        match self.mode {
+            GcnMode::Fused => self.forward_chain(pool, x),
+            GcnMode::Unfused => self.forward_unfused(pool, x),
+        }
+    }
+
+    /// Fused forward: the whole layer stack is one [`ChainExec`] of
+    /// `GemmFlowB` steps — one persistent set of workspaces, per-step
+    /// schedules deduplicated by (pattern, width) through the model's
+    /// [`ScheduleCache`]. ReLU and activation snapshots for backprop run
+    /// through the chain's per-step tap. Feature width is fixed after
+    /// the first forward (the chain is pattern- and shape-bound).
+    fn forward_chain(&mut self, pool: &ThreadPool, x: &Dense<T>) -> Dense<T> {
+        if self.chain.is_none() {
+            let ops_vec: Vec<ChainStepOp<T>> = self
+                .layers
+                .iter()
+                .map(|l| ChainStepOp::GemmFlowB {
+                    a: Arc::clone(&self.a_hat),
+                    w: Dense::zeros(l.w.rows, l.w.cols),
+                })
+                .collect();
+            let plan = {
+                let specs = chain_specs(&ops_vec, x.rows, x.cols).expect("GCN chain dims");
+                let planner = ChainPlanner::new(self.cache.params());
+                let cache = &mut self.cache;
+                planner
+                    .plan_with(x.rows, x.cols, &specs, |_, op| cache.get_or_build(op))
+                    .expect("GCN chain plan")
+            };
+            self.chain = Some(ChainExec::new(ops_vec, &plan).expect("bind GCN chain"));
+        }
+        let chain = self.chain.as_mut().expect("chain just built");
+        // Unconditional copy: `layer.w` is a public field callers mutate
+        // directly (SGD, tests), so no dirty flag can be trusted; the
+        // copy is O(f_in·f_out), negligible next to the n-row SpMMs.
+        for (li, layer) in self.layers.iter().enumerate() {
+            chain.set_weight(li, &layer.w);
+        }
+        let (out_rows, out_cols) = chain.out_dims();
+        let mut logits = Dense::zeros(out_rows, out_cols);
+        let n_layers = self.layers.len();
+        let layers = &mut self.layers;
+        layers[0].h_in = x.clone();
+        chain.run_with(pool, x, &mut logits, |s, z| {
+            layers[s].z = z.clone();
+            if s + 1 < n_layers {
+                ops::relu(z);
+                layers[s + 1].h_in = z.clone();
+            }
+        });
+        logits
+    }
+
+    /// Unfused baseline forward (identical math, library-call pattern).
+    fn forward_unfused(&mut self, pool: &ThreadPool, x: &Dense<T>) -> Dense<T> {
         let n = self.a_hat.rows();
         let mut h = x.clone();
         let n_layers = self.layers.len();
@@ -91,23 +151,8 @@ impl<T: Scalar> Gcn<T> {
             layer.h_in = h.clone();
             let mut z = Dense::zeros(n, layer.w.cols);
             let op = PairOp::gemm_spmm(&self.a_hat, &layer.h_in);
-            match self.mode {
-                GcnMode::Fused => {
-                    let plan = match &layer.plan {
-                        Some(p) => Arc::clone(p),
-                        None => {
-                            let p = self.cache.get_or_build(&op.fusion_op(&layer.w));
-                            layer.plan = Some(Arc::clone(&p));
-                            p
-                        }
-                    };
-                    run_fused(&op, &plan, pool, &layer.w, &mut layer.d1_ws, &mut z);
-                }
-                GcnMode::Unfused => {
-                    let mut ex = Unfused::new(op);
-                    ex.run(pool, &layer.w, &mut z);
-                }
-            }
+            let mut ex = Unfused::new(op);
+            ex.run(pool, &layer.w, &mut z);
             layer.z = z.clone();
             if li + 1 < n_layers {
                 ops::relu(&mut z);

@@ -3,19 +3,23 @@
 //! The offline crate set has no criterion (DESIGN.md §9), so this module
 //! is the bench framework: median-of-N timing (the paper's §4.1.1
 //! protocol), executor construction/strategy dispatch, the suite sweep
-//! drivers behind Figs. 5/6/11/12 and Tables 2/3, and table/CSV emission
+//! drivers behind Figs. 5/6/11/12 and Tables 2/3, the chain-fusion arms
+//! behind Fig. 13 ([`time_spmm_chain`]), and table/CSV emission
 //! (`bench_results/*.csv` next to stdout markdown).
 
 use crate::core::{Dense, Scalar};
+use crate::exec::chain::{chain_specs, ChainExec, ChainStepOp, StepStrategy};
 use crate::exec::{
     AtomicTiling, Fused, Overlapped, PairExec, PairOp, TensorStyle, ThreadPool, Unfused,
 };
 use crate::profiling;
+use crate::scheduler::chain::{unfused_schedule, ChainPlanner};
 use crate::scheduler::{Scheduler, SchedulerParams};
 use crate::sparse::gen::{suite, MatrixClass, SuiteScale};
 use crate::sparse::Csr;
 use std::io::Write;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Executor strategy id used across benches.
@@ -208,6 +212,101 @@ pub fn sweep<T: Scalar>(
     out
 }
 
+/// Chain-bench arm (Fig. 13): how a length-`len` SpMM-SpMM chain
+/// (`X ← Â(ÂX)` applied `len` times) is executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChainStrat {
+    /// One bound [`ChainExec`], all steps tile-fused: one persistent
+    /// pool, one deduplicated schedule, ping-pong intermediates.
+    FusedChain,
+    /// The library-call pattern: each step is an independent pair call —
+    /// fresh pool spin-up, fresh executor (fresh `D1`), fresh output
+    /// allocation — with the schedule itself prebuilt (cached), so the
+    /// gap measured is runtime overhead, not inspection.
+    PerPairCall,
+    /// One bound [`ChainExec`], all steps unfused (shared pool and
+    /// workspaces, but `D1` round-trips through memory each step).
+    UnfusedChain,
+}
+
+impl ChainStrat {
+    pub fn name(self) -> &'static str {
+        match self {
+            ChainStrat::FusedChain => "fused_chain",
+            ChainStrat::PerPairCall => "per_pair_call",
+            ChainStrat::UnfusedChain => "unfused_chain",
+        }
+    }
+}
+
+/// Theoretical unfused FLOPs of one length-`len` SpMM-SpMM chain pass.
+pub fn spmm_chain_flops<T: Scalar>(a: &Csr<T>, len: usize, rhs: usize) -> usize {
+    len * 4 * a.nnz() * rhs
+}
+
+/// Median time of one full chain application (`len` SpMM-SpMM steps,
+/// i.e. `Â` applied `2·len` times to an `n × rhs` block) under one
+/// [`ChainStrat`]. Construction/planning is excluded for the bound-chain
+/// arms, mirroring [`time_strategy`]; the per-pair-call arm pays its
+/// per-step pool and workspace costs inside the timed region because
+/// they recur on every call — that is the measured difference.
+pub fn time_spmm_chain<T: Scalar>(
+    strat: ChainStrat,
+    a: &Arc<Csr<T>>,
+    len: usize,
+    rhs: usize,
+    pool: &ThreadPool,
+    reps: usize,
+) -> Duration {
+    let n = a.rows();
+    let x = Dense::<T>::randn(n, rhs, 7);
+    let params = bench_params::<T>(pool.n_threads());
+    match strat {
+        ChainStrat::FusedChain | ChainStrat::UnfusedChain => {
+            let ops: Vec<ChainStepOp<T>> = (0..len)
+                .map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(a), b: Arc::clone(a) })
+                .collect();
+            let plan = {
+                let specs = chain_specs(&ops, n, rhs).expect("chain dims");
+                let planner = ChainPlanner::new(params);
+                if strat == ChainStrat::FusedChain {
+                    planner.plan(n, rhs, &specs).expect("chain plan")
+                } else {
+                    // Unfused steps never consult their schedule — skip
+                    // Algorithm 1's inspection entirely.
+                    let trivial = Arc::new(unfused_schedule(&a.pattern, pool.n_threads()));
+                    planner
+                        .plan_with(n, rhs, &specs, |_, _| Arc::clone(&trivial))
+                        .expect("chain plan")
+                }
+            };
+            let mut ex = ChainExec::new(ops, &plan).expect("bind chain");
+            if strat == ChainStrat::UnfusedChain {
+                ex.set_strategies(&vec![StepStrategy::Unfused; len]);
+            }
+            let mut d = Dense::zeros(n, rhs);
+            profiling::measure(1, reps, || ex.run(pool, &x, &mut d))
+        }
+        ChainStrat::PerPairCall => {
+            let plan = Scheduler::new(params).schedule_sparse(&a.pattern, &a.pattern, rhs);
+            let threads = pool.n_threads();
+            profiling::measure(1, reps, || {
+                let mut cur = Dense::zeros(n, rhs);
+                let mut out = Dense::zeros(n, rhs);
+                for step in 0..len {
+                    let step_pool = ThreadPool::new(threads);
+                    let op = PairOp::spmm_spmm(a, a);
+                    let mut ex = Fused::new(op, &plan);
+                    let src = if step == 0 { &x } else { &cur };
+                    ex.run(&step_pool, src, &mut out);
+                    std::mem::swap(&mut cur, &mut out);
+                }
+                std::hint::black_box(&cur);
+            })
+        }
+    }
+}
+
 /// Results directory (`bench_results/` at the repo root).
 pub fn results_dir() -> PathBuf {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
@@ -259,6 +358,28 @@ mod tests {
             let t = time_strategy(s, &op, &pool, &c, 1);
             assert!(t.as_nanos() > 0, "{}", s.name());
         }
+    }
+
+    #[test]
+    fn time_spmm_chain_smoke_all_arms() {
+        let a = Arc::new(Csr::<f64>::with_random_values(
+            crate::sparse::gen::banded(128, &[1, 2]),
+            1,
+            -1.0,
+            1.0,
+        ));
+        let pool = ThreadPool::new(2);
+        for strat in [ChainStrat::FusedChain, ChainStrat::PerPairCall, ChainStrat::UnfusedChain] {
+            let t = time_spmm_chain(strat, &a, 3, 8, &pool, 1);
+            assert!(t.as_nanos() > 0, "{}", strat.name());
+        }
+        // Cross-check against the independent §4.1.1 pair accounting.
+        let pair = crate::scheduler::FusionOp {
+            a: &a.pattern,
+            b: crate::scheduler::BSide::Sparse(&a.pattern),
+            ccol: 8,
+        };
+        assert_eq!(spmm_chain_flops(&a, 3, 8), 3 * pair.flops());
     }
 
     #[test]

@@ -27,20 +27,28 @@
 //! - [`sparse`]   — CSR/CSC/COO, Matrix Market I/O, synthetic matrix suite
 //!                  (the SuiteSparse substitute).
 //! - [`dag`]      — iteration-dependence view of `A`'s pattern.
-//! - [`scheduler`]— Algorithm 1: coarse fusion, cost model, splitting.
+//! - [`scheduler`]— Algorithm 1: coarse fusion, cost model, splitting;
+//!                  [`scheduler::chain`] plans whole multiplication
+//!                  chains with pattern-deduplicated schedules.
 //! - [`kernels`]  — blocked GeMM microkernel and CSR SpMM row kernels.
-//! - [`exec`]     — thread pool + the five executors: tile-fused, unfused,
-//!                  atomic tiling, overlapped tiling, tensor-compiler style.
+//! - [`exec`]     — thread pool + the five pair executors (tile-fused,
+//!                  unfused, atomic tiling, overlapped tiling,
+//!                  tensor-compiler style) and [`exec::chain`]: the
+//!                  chain executor (one pool, ping-pong intermediates,
+//!                  per-step strategy).
 //! - [`cachesim`] — set-associative LRU cache-hierarchy simulator (the
 //!                  PAPI substitute) for the AMT study.
 //! - [`simcore`]  — multicore execution model (potential gain, scaling).
 //! - [`profiling`]— FLOP accounting, timers, statistics.
 //! - [`coordinator`] — service layer: schedule cache keyed by sparsity
-//!                  pattern, request batching, metrics.
+//!                  pattern, pair and whole-chain requests
+//!                  (`ChainRequest`), batching, metrics.
 //! - [`runtime`]  — PJRT/XLA loader for AOT artifacts (the JAX/Pallas GCN).
-//! - [`gnn`]      — GCN forward/backward built on fused ops (end-to-end).
+//! - [`gnn`]      — GCN forward/backward; the forward runs the whole
+//!                  layer stack as one fused chain.
 //! - [`harness`]  — experiment drivers shared by `benches/`.
-//! - [`testing`]  — deterministic RNG + mini property-test harness.
+//! - [`testing`]  — deterministic RNG + mini property-test harness with
+//!                  `TF_PROP_SEED` single-case replay.
 //!
 //! ## Quickstart
 //!
@@ -62,6 +70,35 @@
 //! let mut d = Dense::zeros(a.rows(), ccol);
 //! exec.run(&pool, &c, &mut d);
 //! ```
+//!
+//! ## Chains
+//!
+//! Multi-layer GCNs and block solvers apply such pairs in sequence; the
+//! chain API plans and runs the whole sequence at once (schedules
+//! deduplicated by pattern, one pool, intermediates allocated once):
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use tile_fusion::prelude::*;
+//!
+//! let a = Arc::new(gen::gcn_normalize::<f64>(&gen::poisson2d(64, 64)));
+//! let rhs = 32;
+//! // X ← Â(ÂX) twice per call — two fused SpMM-SpMM steps.
+//! let ops = vec![
+//!     ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+//!     ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+//! ];
+//! let mut chain =
+//!     ChainExec::plan_and_build(ops, a.rows(), rhs, SchedulerParams::default()).unwrap();
+//! let pool = ThreadPool::new(4);
+//! let x = Dense::<f64>::randn(a.rows(), rhs, 1);
+//! let mut y = Dense::zeros(a.rows(), rhs);
+//! chain.run(&pool, &x, &mut y);
+//! ```
+//!
+//! Long-running services submit chains through
+//! [`coordinator::Coordinator::submit_chain`] instead, which serves the
+//! per-step schedules from its shared cache.
 
 pub mod cachesim;
 pub mod coordinator;
@@ -82,10 +119,13 @@ pub mod testing;
 pub mod prelude {
     pub use crate::core::{Dense, Scalar};
     pub use crate::exec::{
-        AtomicTiling, CLayout, FirstOp, Fused, Overlapped, PairExec, PairOp, TensorStyle,
-        ThreadPool, Unfused,
+        chain_specs, AtomicTiling, CLayout, ChainExec, ChainStepOp, FirstOp, Fused, Overlapped,
+        PairExec, PairOp, StepStrategy, TensorStyle, ThreadPool, Unfused,
     };
-    pub use crate::scheduler::{BSide, FusedSchedule, FusionOp, Scheduler, SchedulerParams};
+    pub use crate::scheduler::{
+        BSide, ChainFlow, ChainPlan, ChainPlanner, ChainStepSpec, FusedSchedule, FusionOp,
+        Scheduler, SchedulerParams,
+    };
     pub use crate::sparse::gen::{self, RmatKind};
     pub use crate::sparse::{Coo, Csr, Pattern};
 }

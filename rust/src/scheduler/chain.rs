@@ -1,0 +1,439 @@
+//! Chain-fusion planning — the one-pair scheduler (Algorithm 1)
+//! generalized to arbitrary-length multiplication chains.
+//!
+//! The paper's motivating workloads are not single pairs: a multi-layer
+//! GCN forward is `H_{l+1} = σ(Â (H_l W_l))` repeated per layer, and a
+//! block iterative solver applies `X ← Â(ÂX)` every iteration
+//! (`examples/spmm_chain_solver.rs`). Each link of such a chain is
+//! exactly the fused pair `D = A (B C)`, with the output of one link
+//! flowing into the next. A [`ChainPlan`] schedules the whole chain at
+//! once: one [`FusedSchedule`] per step, **deduplicated by sparsity
+//! pattern and operand shape** — repeated patterns (every solver step,
+//! every same-width GCN layer) share one `Arc`'d schedule, taking the
+//! Fig. 10 amortization story to its logical end.
+//!
+//! Planning is value-free (patterns and shapes only), like the rest of
+//! [`crate::scheduler`]; binding values and running the chain is
+//! [`crate::exec::chain`]'s job.
+
+use super::{BSide, FusedSchedule, FusionOp, Scheduler, SchedulerParams};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Which dense operand of a step receives the flowing chain value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChainFlow {
+    /// The chain value is `B` — a GCN layer `out = A ((chain) · W)`
+    /// with stationary weights `W` as `C`.
+    B,
+    /// The chain value is `C` — a solver step `out = A (B · (chain))`
+    /// with stationary (dense or sparse) `B`.
+    C,
+}
+
+/// One chain step as the planner sees it: a fusion problem plus which
+/// operand flows.
+#[derive(Clone, Copy)]
+pub struct ChainStepSpec<'a> {
+    pub op: FusionOp<'a>,
+    pub flow: ChainFlow,
+}
+
+/// Chain validation / planning error (dimension non-conformance, empty
+/// chains, plan/operand mismatches).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainError(pub String);
+
+impl ChainError {
+    pub(crate) fn new(msg: impl Into<String>) -> Self {
+        ChainError(msg.into())
+    }
+}
+
+impl fmt::Display for ChainError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "chain error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ChainError {}
+
+/// One planned step: the (possibly shared) schedule plus output geometry.
+#[derive(Clone)]
+pub struct ChainStepPlan {
+    pub schedule: Arc<FusedSchedule>,
+    pub flow: ChainFlow,
+    /// Rows of this step's output (= rows of its `A`).
+    pub out_rows: usize,
+    /// Columns of this step's output.
+    pub out_cols: usize,
+    /// Rows of this step's intermediate `D1` (= cols of its `A`).
+    pub d1_rows: usize,
+    /// Theoretical unfused FLOPs of this step (§4.1.1 accounting).
+    pub flops: usize,
+}
+
+/// Statistics of a built chain plan.
+#[derive(Clone, Debug, Default)]
+pub struct ChainStats {
+    pub n_steps: usize,
+    /// Distinct `FusedSchedule`s actually built/fetched.
+    pub unique_schedules: usize,
+    /// Steps that reused an earlier step's schedule (`n_steps - unique`).
+    pub dedup_hits: usize,
+    /// Wall time of planning (schedule builds included) in nanoseconds.
+    pub build_ns: u64,
+    /// Total theoretical unfused FLOPs of one chain application.
+    pub total_flops: usize,
+}
+
+/// A planned multiplication chain: per-step schedules (deduplicated by
+/// pattern identity) plus the validated shape flow.
+pub struct ChainPlan {
+    pub steps: Vec<ChainStepPlan>,
+    /// Shape of the flowing chain input.
+    pub in_rows: usize,
+    pub in_cols: usize,
+    pub stats: ChainStats,
+}
+
+impl ChainPlan {
+    /// Shape of the chain output.
+    pub fn out_dims(&self) -> (usize, usize) {
+        let last = self.steps.last().expect("chain plans are never empty");
+        (last.out_rows, last.out_cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+/// Schedule identity — mirrors the coordinator's `ScheduleKey` without
+/// depending on the service layer: same pattern + operand shape + element
+/// width ⇒ same schedule.
+fn schedule_key(op: &FusionOp, elem_bytes: usize) -> (u64, u64, bool, usize, usize) {
+    match op.b {
+        BSide::Dense { bcol } => (op.a.structure_hash(), bcol as u64, false, op.ccol, elem_bytes),
+        BSide::Sparse(bp) => (op.a.structure_hash(), bp.structure_hash(), true, op.ccol, elem_bytes),
+    }
+}
+
+/// A valid but inspection-free schedule: no fused iterations — every
+/// first-op iteration in wavefront-0 row blocks, every second-op
+/// iteration in wavefront-1 blocks. Callers that will execute a step
+/// *unfused* use this to satisfy the per-step schedule slot without
+/// paying Algorithm 1's pattern inspection.
+pub fn unfused_schedule(a: &crate::sparse::Pattern, n_cores: usize) -> FusedSchedule {
+    let t0 = Instant::now();
+    let p = n_cores.max(1);
+    let chunks = |n: usize| -> Vec<(usize, usize)> {
+        let step = n.div_ceil(p).max(1);
+        (0..n.div_ceil(step)).map(|k| (k * step, ((k + 1) * step).min(n))).collect()
+    };
+    let wf0: Vec<crate::scheduler::Tile> = chunks(a.cols)
+        .into_iter()
+        .map(|(lo, hi)| crate::scheduler::Tile::new(lo, hi, Vec::new()))
+        .collect();
+    let wf1: Vec<crate::scheduler::Tile> = chunks(a.rows)
+        .into_iter()
+        .map(|(lo, hi)| crate::scheduler::Tile::j_only((lo as u32..hi as u32).collect()))
+        .collect();
+    let stats = crate::scheduler::ScheduleStats {
+        n_tiles: [wf0.len(), wf1.len()],
+        build_ns: t0.elapsed().as_nanos() as u64,
+        ..Default::default()
+    };
+    FusedSchedule { wavefronts: [wf0, wf1], n_first: a.cols, n_second: a.rows, stats }
+}
+
+/// Plans chains with one scheduler parameterization.
+pub struct ChainPlanner {
+    pub params: SchedulerParams,
+}
+
+impl ChainPlanner {
+    pub fn new(params: SchedulerParams) -> Self {
+        Self { params }
+    }
+
+    /// Plan a chain with an internal dedup map: each distinct
+    /// (pattern, shape) builds its schedule exactly once.
+    pub fn plan(
+        &self,
+        in_rows: usize,
+        in_cols: usize,
+        specs: &[ChainStepSpec<'_>],
+    ) -> Result<ChainPlan, ChainError> {
+        let mut built: HashMap<(u64, u64, bool, usize, usize), Arc<FusedSchedule>> =
+            HashMap::new();
+        let sched = Scheduler::new(self.params);
+        let elem_bytes = self.params.elem_bytes;
+        self.plan_with(in_rows, in_cols, specs, |_, op| {
+            Arc::clone(
+                built
+                    .entry(schedule_key(op, elem_bytes))
+                    .or_insert_with(|| Arc::new(sched.schedule_op(op))),
+            )
+        })
+    }
+
+    /// Plan a chain, fetching each step's schedule through
+    /// `get(step_index, op)` — the hook long-running callers use to
+    /// serve chains from an existing schedule cache
+    /// (`coordinator::ScheduleCache::get_or_build`) or to substitute
+    /// trivial schedules for steps they will execute unfused. `get` is
+    /// called exactly once per step, in step order (part of the
+    /// contract — callers key per-step decisions on the index). Dedup
+    /// composes with whatever the hook returns.
+    pub fn plan_with(
+        &self,
+        in_rows: usize,
+        in_cols: usize,
+        specs: &[ChainStepSpec<'_>],
+        mut get: impl FnMut(usize, &FusionOp) -> Arc<FusedSchedule>,
+    ) -> Result<ChainPlan, ChainError> {
+        if specs.is_empty() {
+            return Err(ChainError::new("empty chain"));
+        }
+        let t0 = Instant::now();
+        let mut steps = Vec::with_capacity(specs.len());
+        let mut total_flops = 0usize;
+        let (mut cur_r, mut cur_c) = (in_rows, in_cols);
+        for (s, spec) in specs.iter().enumerate() {
+            let a = spec.op.a;
+            validate_step(s, spec, cur_r, cur_c)?;
+            let schedule = get(s, &spec.op);
+            if schedule.n_first != a.cols || schedule.n_second != a.rows {
+                return Err(ChainError::new(format!(
+                    "step {s}: fetched schedule is {}x{} but A is {}x{}",
+                    schedule.n_second, schedule.n_first, a.rows, a.cols
+                )));
+            }
+            let out_cols = match spec.flow {
+                ChainFlow::B => spec.op.ccol,
+                ChainFlow::C => cur_c,
+            };
+            let flops = spec.op.flops();
+            total_flops += flops;
+            steps.push(ChainStepPlan {
+                schedule,
+                flow: spec.flow,
+                out_rows: a.rows,
+                out_cols,
+                d1_rows: a.cols,
+                flops,
+            });
+            cur_r = a.rows;
+            cur_c = out_cols;
+        }
+
+        let mut seen = std::collections::HashSet::new();
+        for st in &steps {
+            seen.insert(Arc::as_ptr(&st.schedule) as usize);
+        }
+        let unique_schedules = seen.len();
+        let stats = ChainStats {
+            n_steps: steps.len(),
+            unique_schedules,
+            dedup_hits: steps.len() - unique_schedules,
+            build_ns: t0.elapsed().as_nanos() as u64,
+            total_flops,
+        };
+        Ok(ChainPlan { steps, in_rows, in_cols, stats })
+    }
+}
+
+/// Check step `s` conforms to the flowing value of shape `cur_r × cur_c`.
+fn validate_step(
+    s: usize,
+    spec: &ChainStepSpec<'_>,
+    cur_r: usize,
+    cur_c: usize,
+) -> Result<(), ChainError> {
+    let a = spec.op.a;
+    match spec.flow {
+        ChainFlow::B => {
+            let BSide::Dense { bcol } = spec.op.b else {
+                return Err(ChainError::new(format!(
+                    "step {s}: flow-B steps must have dense B (GeMM-SpMM)"
+                )));
+            };
+            if a.cols != cur_r {
+                return Err(ChainError::new(format!(
+                    "step {s}: A has {} cols but the flowing B has {cur_r} rows",
+                    a.cols
+                )));
+            }
+            if bcol != cur_c {
+                return Err(ChainError::new(format!(
+                    "step {s}: spec says bcol={bcol} but the flowing B has {cur_c} cols"
+                )));
+            }
+        }
+        ChainFlow::C => {
+            if spec.op.ccol != cur_c {
+                return Err(ChainError::new(format!(
+                    "step {s}: spec says ccol={} but the flowing C has {cur_c} cols",
+                    spec.op.ccol
+                )));
+            }
+            match spec.op.b {
+                BSide::Dense { bcol } => {
+                    if bcol != cur_r {
+                        return Err(ChainError::new(format!(
+                            "step {s}: stationary B has {bcol} cols but the flowing C has {cur_r} rows"
+                        )));
+                    }
+                }
+                BSide::Sparse(bp) => {
+                    if bp.rows != a.cols {
+                        return Err(ChainError::new(format!(
+                            "step {s}: B ({}x{}) does not conform to A ({}x{}) in A·(B·C)",
+                            bp.rows, bp.cols, a.rows, a.cols
+                        )));
+                    }
+                    if bp.cols != cur_r {
+                        return Err(ChainError::new(format!(
+                            "step {s}: stationary B has {} cols but the flowing C has {cur_r} rows",
+                            bp.cols
+                        )));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    fn params_small() -> SchedulerParams {
+        SchedulerParams {
+            n_cores: 2,
+            cache_bytes: 256 * 1024,
+            elem_bytes: 8,
+            ct_size: 64,
+            max_split_depth: 24,
+        }
+    }
+
+    #[test]
+    fn solver_chain_dedups_to_one_schedule() {
+        let a = gen::poisson2d(24, 24);
+        let specs: Vec<ChainStepSpec> = (0..4)
+            .map(|_| ChainStepSpec {
+                op: FusionOp { a: &a, b: BSide::Sparse(&a), ccol: 16 },
+                flow: ChainFlow::C,
+            })
+            .collect();
+        let plan = ChainPlanner::new(params_small()).plan(a.rows, 16, &specs).unwrap();
+        assert_eq!(plan.stats.n_steps, 4);
+        assert_eq!(plan.stats.unique_schedules, 1);
+        assert_eq!(plan.stats.dedup_hits, 3);
+        for st in &plan.steps[1..] {
+            assert!(Arc::ptr_eq(&st.schedule, &plan.steps[0].schedule));
+        }
+        assert_eq!(plan.out_dims(), (a.rows, 16));
+        plan.steps[0].schedule.validate(&a);
+    }
+
+    #[test]
+    fn gcn_chain_shapes_flow() {
+        let a = gen::banded(100, &[1, 2]);
+        // widths 8 -> 16 -> 4 over a 100-node graph.
+        let specs = vec![
+            ChainStepSpec {
+                op: FusionOp { a: &a, b: BSide::Dense { bcol: 8 }, ccol: 16 },
+                flow: ChainFlow::B,
+            },
+            ChainStepSpec {
+                op: FusionOp { a: &a, b: BSide::Dense { bcol: 16 }, ccol: 4 },
+                flow: ChainFlow::B,
+            },
+        ];
+        let plan = ChainPlanner::new(params_small()).plan(100, 8, &specs).unwrap();
+        assert_eq!(plan.out_dims(), (100, 4));
+        assert_eq!(plan.stats.unique_schedules, 2, "distinct shapes build distinct schedules");
+        assert_eq!(plan.stats.total_flops, specs[0].op.flops() + specs[1].op.flops());
+    }
+
+    #[test]
+    fn same_shape_layers_share_schedule() {
+        let a = gen::banded(64, &[1]);
+        let spec = ChainStepSpec {
+            op: FusionOp { a: &a, b: BSide::Dense { bcol: 8 }, ccol: 8 },
+            flow: ChainFlow::B,
+        };
+        let plan = ChainPlanner::new(params_small()).plan(64, 8, &[spec, spec]).unwrap();
+        assert_eq!(plan.stats.unique_schedules, 1);
+        assert!(Arc::ptr_eq(&plan.steps[0].schedule, &plan.steps[1].schedule));
+    }
+
+    #[test]
+    fn dimension_mismatch_is_rejected() {
+        let a = gen::banded(64, &[1]);
+        // flowing C has 8 cols but the spec claims ccol = 9.
+        let bad = ChainStepSpec {
+            op: FusionOp { a: &a, b: BSide::Sparse(&a), ccol: 9 },
+            flow: ChainFlow::C,
+        };
+        let err = ChainPlanner::new(params_small()).plan(64, 8, &[bad]).unwrap_err();
+        assert!(err.to_string().contains("ccol"), "{err}");
+
+        // flow-B steps must be GeMM-SpMM.
+        let bad = ChainStepSpec {
+            op: FusionOp { a: &a, b: BSide::Sparse(&a), ccol: 8 },
+            flow: ChainFlow::B,
+        };
+        let err = ChainPlanner::new(params_small()).plan(64, 8, &[bad]).unwrap_err();
+        assert!(err.to_string().contains("dense B"), "{err}");
+    }
+
+    #[test]
+    fn empty_chain_is_rejected() {
+        let err = ChainPlanner::new(params_small()).plan(4, 4, &[]).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn unfused_schedule_is_valid_and_inspection_free() {
+        for (rows, cols) in [(16usize, 16usize), (10, 7), (1, 5), (64, 64)] {
+            let a = gen::uniform_random(rows, cols, 3, 9);
+            let s = unfused_schedule(&a, 4);
+            s.validate(&a);
+            assert_eq!(s.fused_ratio(), 0.0, "no iterations may be fused");
+            assert!(s.wavefronts[0].iter().all(|t| t.j_len() == 0));
+        }
+    }
+
+    #[test]
+    fn plan_with_external_cache_hook() {
+        let a = gen::poisson2d(16, 16);
+        let specs: Vec<ChainStepSpec> = (0..3)
+            .map(|_| ChainStepSpec {
+                op: FusionOp { a: &a, b: BSide::Sparse(&a), ccol: 8 },
+                flow: ChainFlow::C,
+            })
+            .collect();
+        let mut seen_steps = Vec::new();
+        let shared = Arc::new(Scheduler::new(params_small()).schedule_op(&specs[0].op));
+        let plan = ChainPlanner::new(params_small())
+            .plan_with(a.rows, 8, &specs, |s, _| {
+                seen_steps.push(s);
+                Arc::clone(&shared)
+            })
+            .unwrap();
+        assert_eq!(seen_steps, vec![0, 1, 2], "hook runs once per step, in order");
+        assert_eq!(plan.stats.unique_schedules, 1);
+    }
+}

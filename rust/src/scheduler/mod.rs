@@ -6,12 +6,20 @@
 //! (Eq. 2) under the load-balance constraint (≥ p tiles per wavefront,
 //! exactly one barrier) and the locality constraint (per-tile Eq.-3 cost
 //! below `cacheSize`).
+//!
+//! [`chain`] lifts the one-pair scheduler to arbitrary-length
+//! multiplication chains: a [`ChainPlan`] holds one schedule per chain
+//! step, deduplicated by sparsity pattern and operand shape.
 
+pub mod chain;
 pub mod coarse;
 pub mod cost;
 pub mod schedule;
 pub mod split;
 
+pub use chain::{
+    ChainError, ChainFlow, ChainPlan, ChainPlanner, ChainStats, ChainStepPlan, ChainStepSpec,
+};
 pub use schedule::{FusedSchedule, ScheduleStats, Tile};
 
 use crate::dag::IterDag;

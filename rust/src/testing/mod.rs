@@ -3,11 +3,12 @@
 //! The offline crate set has neither `rand` nor `proptest` (see
 //! DESIGN.md §9), so the repo carries its own xorshift64* generator and a
 //! small fixed-iteration property harness. Properties are checked over a
-//! deterministic seed sweep — no shrinking, but failures print the seed so
-//! a case replays exactly.
+//! deterministic seed sweep — no shrinking, but failures print the seed
+//! and a `TF_PROP_SEED=<seed> cargo test -q` one-liner that replays
+//! exactly that case.
 
 pub mod prop;
 pub mod rng;
 
-pub use prop::check_prop;
+pub use prop::{check_prop, check_prop_with, parse_seed};
 pub use rng::XorShift64;

@@ -2,25 +2,68 @@
 //! see DESIGN.md §9).
 //!
 //! [`check_prop`] runs a property over `iters` deterministic seeds. On
-//! failure it panics with the failing seed so the exact case replays with
-//! a one-liner. No shrinking — generators here are small enough that raw
-//! failing cases are debuggable.
+//! failure it reports the exact failing seed plus a one-line replay
+//! command; setting `TF_PROP_SEED=<seed>` (decimal or `0x`-hex) makes
+//! every `check_prop` in the process run **only** that seed, so a CI
+//! property failure reproduces in a single command. No shrinking —
+//! generators here are small enough that raw failing cases are
+//! debuggable.
 
 use super::rng::XorShift64;
 
-/// Run `prop(rng)` for `iters` deterministically-derived seeds.
+/// Run `prop(rng)` for `iters` deterministically-derived seeds, or — if
+/// `TF_PROP_SEED` is set — replay exactly that one seed.
 ///
 /// `prop` should panic (e.g. via `assert!`) on violation; this wrapper
-/// adds the seed to the panic payload by printing it before re-raising.
-pub fn check_prop(name: &str, iters: u64, mut prop: impl FnMut(&mut XorShift64)) {
+/// reports the failing seed and replay command before re-raising.
+pub fn check_prop(name: &str, iters: u64, prop: impl FnMut(&mut XorShift64)) {
+    let replay = std::env::var("TF_PROP_SEED").ok().map(|v| {
+        parse_seed(&v).unwrap_or_else(|| {
+            panic!("TF_PROP_SEED must be a decimal or 0x-prefixed hex u64, got {v:?}")
+        })
+    });
+    check_prop_with(name, iters, replay, prop)
+}
+
+/// [`check_prop`] with an explicit replay seed instead of the
+/// environment lookup (`None` ⇒ full sweep). Exposed so the replay path
+/// itself is testable without process-global env mutation.
+pub fn check_prop_with(
+    name: &str,
+    iters: u64,
+    replay: Option<u64>,
+    mut prop: impl FnMut(&mut XorShift64),
+) {
+    if let Some(seed) = replay {
+        eprintln!("property `{name}`: replaying single case with seed {seed:#x}");
+        let mut rng = XorShift64::new(seed);
+        prop(&mut rng);
+        return;
+    }
     for i in 0..iters {
-        let seed = 0xdead_beef_0000_0000u64 ^ (i.wrapping_mul(0x9e37_79b9_7f4a_7c15)) ^ i;
+        let seed = derive_seed(i);
         let mut rng = XorShift64::new(seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
         if let Err(payload) = result {
             eprintln!("property `{name}` FAILED at iter {i} (seed {seed:#x})");
+            eprintln!("  replay just this case with: TF_PROP_SEED={seed:#x} cargo test -q");
             std::panic::resume_unwind(payload);
         }
+    }
+}
+
+/// The per-iteration seed derivation (stable across releases: replay
+/// commands recorded in CI logs must keep meaning the same case).
+fn derive_seed(i: u64) -> u64 {
+    0xdead_beef_0000_0000u64 ^ (i.wrapping_mul(0x9e37_79b9_7f4a_7c15)) ^ i
+}
+
+/// Parse a `TF_PROP_SEED` value: decimal or `0x`/`0X`-prefixed hex.
+pub fn parse_seed(v: &str) -> Option<u64> {
+    let v = v.trim();
+    match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => v.parse().ok(),
     }
 }
 
@@ -52,5 +95,41 @@ mod tests {
         seen.sort_unstable();
         seen.dedup();
         assert_eq!(seen.len(), 5);
+    }
+
+    #[test]
+    fn replay_runs_exactly_one_case_with_that_seed() {
+        // The sweep's iter-3 seed must replay to the identical rng stream.
+        let target = derive_seed(3);
+        let mut sweep_draw = None;
+        let mut i = 0u64;
+        check_prop_with("sweep", 5, None, |rng| {
+            if i == 3 {
+                sweep_draw = Some(rng.next_u64());
+            }
+            i += 1;
+        });
+        let mut replay_draws = Vec::new();
+        check_prop_with("replay", 5, Some(target), |rng| replay_draws.push(rng.next_u64()));
+        assert_eq!(replay_draws.len(), 1, "replay must run a single case");
+        assert_eq!(Some(replay_draws[0]), sweep_draw, "replay reproduces the sweep case");
+    }
+
+    #[test]
+    #[should_panic(expected = "replayed failure")]
+    fn replay_failure_propagates() {
+        check_prop_with("replay-fail", 10, Some(derive_seed(0)), |_| {
+            panic!("replayed failure");
+        });
+    }
+
+    #[test]
+    fn parse_seed_accepts_decimal_and_hex() {
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed("0x2a"), Some(42));
+        assert_eq!(parse_seed("0X2A"), Some(42));
+        assert_eq!(parse_seed(" 7 "), Some(7));
+        assert_eq!(parse_seed("zzz"), None);
+        assert_eq!(parse_seed("0xdead_beef"), None, "underscores are not accepted");
     }
 }

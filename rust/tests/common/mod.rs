@@ -1,0 +1,37 @@
+//! Shared random-case generators for the integration-test suites
+//! (`properties.rs`, `conformance.rs`): the pattern/param grid every
+//! property and conformance check sweeps.
+#![allow(dead_code)] // not every test binary uses every generator
+
+use tile_fusion::prelude::*;
+use tile_fusion::testing::XorShift64;
+
+/// Random square pattern with diagonal (keeps GCN-style structure):
+/// Erdős–Rényi, R-MAT, banded, or uniform-random.
+pub fn random_pattern(rng: &mut XorShift64) -> Pattern {
+    let n = 16 + rng.next_range(200);
+    let avg = 1 + rng.next_range(8);
+    match rng.next_range(4) {
+        0 => gen::erdos_renyi(n, avg, rng.next_u64()),
+        1 => gen::rmat((n.max(16)).next_power_of_two(), avg, RmatKind::Graph500, rng.next_u64()),
+        2 => gen::banded(n, &[1, 1 + rng.next_range(7)]),
+        _ => gen::uniform_random(n, n, avg, rng.next_u64()),
+    }
+}
+
+/// Random scheduler parameterization (cores, cache budget, element
+/// width, coarse tile size).
+pub fn random_params(rng: &mut XorShift64) -> SchedulerParams {
+    SchedulerParams {
+        n_cores: 1 + rng.next_range(8),
+        cache_bytes: 1 << (10 + rng.next_range(12)),
+        elem_bytes: if rng.next_bool(0.5) { 4 } else { 8 },
+        ct_size: 1 << (2 + rng.next_range(8)),
+        max_split_depth: 24,
+    }
+}
+
+/// f32 agreement tolerance scaled by reduction depth (avg nnz × width).
+pub fn f32_tol(a: &Pattern, width: usize) -> f64 {
+    1e-4 * (1.0 + a.avg_row_nnz() * width as f64).sqrt()
+}

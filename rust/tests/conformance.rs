@@ -1,0 +1,253 @@
+//! Executor-conformance suite: every executor — the five single-pair
+//! strategies *and* the chain executor — is differential-tested against
+//! the serial `exec::reference` oracle over the random pattern/param
+//! grid (Erdős–Rényi, R-MAT, banded, uniform; f32 and f64), asserting
+//! elementwise agreement within a scalar-appropriate tolerance.
+//!
+//! A failure prints the exact case seed; replay it alone with
+//! `TF_PROP_SEED=<seed> cargo test -q --test conformance`.
+
+mod common;
+
+use common::{f32_tol, random_params, random_pattern};
+use std::sync::Arc;
+use tile_fusion::exec::chain::{ChainExec, ChainStepOp};
+use tile_fusion::exec::reference::reference;
+use tile_fusion::prelude::*;
+use tile_fusion::testing::{check_prop, XorShift64};
+
+/// Build every pair executor for `op` and check it against `expect`.
+fn check_pair_executors<T: Scalar>(
+    rng: &mut XorShift64,
+    op: PairOp<'_, T>,
+    plan: &tile_fusion::scheduler::FusedSchedule,
+    c: &Dense<T>,
+    expect: &Dense<T>,
+    tol: f64,
+    include_tensor_style: bool,
+) {
+    let threads = 1 + rng.next_range(4);
+    let pool = ThreadPool::new(threads);
+    let ccol = op.layout.ccol(c);
+    let mut d = Dense::zeros(op.n_second(), ccol);
+    let mut check = |name: &str, ex: &mut dyn PairExec<T>| {
+        d.fill_zero();
+        ex.run(&pool, c, &mut d);
+        let diff = d.max_abs_diff(expect);
+        assert!(diff < tol, "{name} diverged: max |diff| = {diff:.3e} > {tol:.3e}");
+    };
+    check("tile_fusion", &mut Fused::new(op, plan));
+    check("unfused", &mut Unfused::new(op));
+    check("atomic_tiling", &mut AtomicTiling::new(op, 1 + rng.next_range(16)));
+    check("overlapped_tiling", &mut Overlapped::new(op, 1 + rng.next_range(16), threads));
+    if include_tensor_style {
+        check("tensor_compiler", &mut TensorStyle::new(op, threads));
+    }
+}
+
+#[test]
+fn conformance_gemm_spmm_f64() {
+    check_prop("conformance-gemm-spmm-f64", 25, |rng| {
+        let pat = random_pattern(rng);
+        let a = Csr::<f64>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+        let bcol = 1 + rng.next_range(24);
+        let ccol = 1 + rng.next_range(24);
+        let b = Dense::<f64>::randn(a.cols(), bcol, rng.next_u64());
+        let c = Dense::<f64>::randn(bcol, ccol, rng.next_u64());
+        let op = PairOp::gemm_spmm(&a, &b);
+        let expect = reference(&op, &c);
+        let plan = Scheduler::new(random_params(rng)).schedule(&a.pattern, bcol, ccol);
+        check_pair_executors(rng, op, &plan, &c, &expect, 1e-9, true);
+    });
+}
+
+#[test]
+fn conformance_gemm_spmm_f32() {
+    check_prop("conformance-gemm-spmm-f32", 15, |rng| {
+        let pat = random_pattern(rng);
+        let a = Csr::<f32>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+        let bcol = 1 + rng.next_range(16);
+        let ccol = 1 + rng.next_range(16);
+        let b = Dense::<f32>::randn(a.cols(), bcol, rng.next_u64());
+        let c = Dense::<f32>::randn(bcol, ccol, rng.next_u64());
+        let op = PairOp::gemm_spmm(&a, &b);
+        let expect = reference(&op, &c);
+        let plan = Scheduler::new(random_params(rng)).schedule(&a.pattern, bcol, ccol);
+        let tol = f32_tol(&a.pattern, bcol);
+        check_pair_executors(rng, op, &plan, &c, &expect, tol, true);
+    });
+}
+
+#[test]
+fn conformance_spmm_spmm_f64() {
+    check_prop("conformance-spmm-spmm-f64", 20, |rng| {
+        let pat = random_pattern(rng);
+        let a = Csr::<f64>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+        let ccol = 1 + rng.next_range(24);
+        let c = Dense::<f64>::randn(a.cols(), ccol, rng.next_u64());
+        let op = PairOp::spmm_spmm(&a, &a);
+        let expect = reference(&op, &c);
+        let plan =
+            Scheduler::new(random_params(rng)).schedule_sparse(&a.pattern, &a.pattern, ccol);
+        // TensorStyle is GeMM-SpMM-only (matches the sweep drivers).
+        check_pair_executors(rng, op, &plan, &c, &expect, 1e-9, false);
+    });
+}
+
+#[test]
+fn conformance_spmm_spmm_f32() {
+    check_prop("conformance-spmm-spmm-f32", 12, |rng| {
+        let pat = random_pattern(rng);
+        let a = Csr::<f32>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+        let ccol = 1 + rng.next_range(16);
+        let c = Dense::<f32>::randn(a.cols(), ccol, rng.next_u64());
+        let op = PairOp::spmm_spmm(&a, &a);
+        let expect = reference(&op, &c);
+        let plan =
+            Scheduler::new(random_params(rng)).schedule_sparse(&a.pattern, &a.pattern, ccol);
+        // Two chained reductions (B then A): scale the tolerance by both.
+        let tol = f32_tol(&a.pattern, a.pattern.avg_row_nnz().ceil() as usize + 1) * 10.0;
+        check_pair_executors(rng, op, &plan, &c, &expect, tol, false);
+    });
+}
+
+/// Random chain of 1–4 steps, mixing the three step kinds wherever the
+/// flowing shape allows. Returns the operands plus random per-step
+/// fused/unfused strategies.
+fn random_chain_case(
+    rng: &mut XorShift64,
+    in_rows: usize,
+    in_cols: usize,
+) -> (Vec<ChainStepOp<f64>>, Vec<tile_fusion::exec::chain::StepStrategy>) {
+    use tile_fusion::exec::chain::StepStrategy;
+    let len = 1 + rng.next_range(4);
+    let mut ops: Vec<ChainStepOp<f64>> = Vec::with_capacity(len);
+    let mut strategies = Vec::with_capacity(len);
+    let (mut cur_r, mut cur_c) = (in_rows, in_cols);
+    for _ in 0..len {
+        let out_rows = 8 + rng.next_range(48);
+        let kind = rng.next_range(3);
+        let op = match kind {
+            0 => {
+                // GemmFlowB: A (out_rows × cur_r), W (cur_c × new_c).
+                let a = Arc::new(Csr::<f64>::with_random_values(
+                    gen::uniform_random(out_rows, cur_r, 1 + rng.next_range(4), rng.next_u64()),
+                    rng.next_u64(),
+                    -1.0,
+                    1.0,
+                ));
+                let new_c = 1 + rng.next_range(16);
+                let w = Dense::<f64>::randn(cur_c, new_c, rng.next_u64());
+                cur_c = new_c;
+                ChainStepOp::GemmFlowB { a, w }
+            }
+            1 => {
+                // GemmFlowC: A (out_rows × k), dense B (k × cur_r).
+                let k = 4 + rng.next_range(32);
+                let a = Arc::new(Csr::<f64>::with_random_values(
+                    gen::uniform_random(out_rows, k, 1 + rng.next_range(4), rng.next_u64()),
+                    rng.next_u64(),
+                    -1.0,
+                    1.0,
+                ));
+                let b = Dense::<f64>::randn(k, cur_r, rng.next_u64());
+                ChainStepOp::GemmFlowC { a, b }
+            }
+            _ => {
+                // SpmmFlowC: A (out_rows × k), sparse B (k × cur_r).
+                let k = 4 + rng.next_range(32);
+                let a = Arc::new(Csr::<f64>::with_random_values(
+                    gen::uniform_random(out_rows, k, 1 + rng.next_range(4), rng.next_u64()),
+                    rng.next_u64(),
+                    -1.0,
+                    1.0,
+                ));
+                let b = Arc::new(Csr::<f64>::with_random_values(
+                    gen::uniform_random(k, cur_r, 1 + rng.next_range(4), rng.next_u64()),
+                    rng.next_u64(),
+                    -1.0,
+                    1.0,
+                ));
+                ChainStepOp::SpmmFlowC { a, b }
+            }
+        };
+        cur_r = out_rows;
+        strategies.push(if rng.next_bool(0.5) { StepStrategy::Fused } else { StepStrategy::Unfused });
+        ops.push(op);
+    }
+    (ops, strategies)
+}
+
+/// Serial composition of the chain through the pair oracle.
+fn chain_reference(ops: &[ChainStepOp<f64>], x: &Dense<f64>) -> Dense<f64> {
+    let mut cur = x.clone();
+    for op in ops {
+        cur = match op {
+            ChainStepOp::GemmFlowB { a, w } => reference(&PairOp::gemm_spmm(a, &cur), w),
+            ChainStepOp::GemmFlowC { a, b } => reference(&PairOp::gemm_spmm(a, b), &cur),
+            ChainStepOp::SpmmFlowC { a, b } => reference(&PairOp::spmm_spmm(a, b), &cur),
+        };
+    }
+    cur
+}
+
+#[test]
+fn conformance_chain_exec_vs_composed_reference() {
+    check_prop("conformance-chain-exec", 20, |rng| {
+        let in_rows = 8 + rng.next_range(48);
+        let in_cols = 1 + rng.next_range(16);
+        let (ops, strategies) = random_chain_case(rng, in_rows, in_cols);
+        let x = Dense::<f64>::randn(in_rows, in_cols, rng.next_u64());
+        let expect = chain_reference(&ops, &x);
+
+        let mut params = random_params(rng);
+        params.elem_bytes = 8;
+        let mut chain = ChainExec::plan_and_build(ops, in_rows, in_cols, params)
+            .expect("random chain must bind");
+        chain.set_strategies(&strategies);
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+        let (out_rows, out_cols) = chain.out_dims();
+        assert_eq!((out_rows, out_cols), (expect.rows, expect.cols));
+        let mut d = Dense::zeros(out_rows, out_cols);
+        // Run twice: bound chains must be reusable without drift.
+        for run in 0..2 {
+            chain.run(&pool, &x, &mut d);
+            let diff = d.max_abs_diff(&expect);
+            assert!(diff < 1e-9, "chain diverged on run {run}: {diff:.3e}");
+        }
+    });
+}
+
+#[test]
+fn conformance_chain_exec_f32() {
+    check_prop("conformance-chain-exec-f32", 10, |rng| {
+        // Solver-style f32 chain over one shared pattern.
+        let pat = random_pattern(rng);
+        let a = Arc::new(Csr::<f32>::with_random_values(pat, rng.next_u64(), -0.5, 0.5));
+        let len = 1 + rng.next_range(3);
+        let rhs = 1 + rng.next_range(12);
+        let ops: Vec<ChainStepOp<f32>> = (0..len)
+            .map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+            .collect();
+        let x = Dense::<f32>::randn(a.rows(), rhs, rng.next_u64());
+        let expect = {
+            let mut cur = x.clone();
+            for _ in 0..len {
+                cur = reference(&PairOp::spmm_spmm(&a, &a), &cur);
+            }
+            cur
+        };
+        let mut params = random_params(rng);
+        params.elem_bytes = 4;
+        let mut chain =
+            ChainExec::plan_and_build(ops, a.rows(), rhs, params).expect("bind f32 chain");
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+        let mut d = Dense::zeros(a.rows(), rhs);
+        chain.run(&pool, &x, &mut d);
+        // 2·len chained reductions; scale tolerance accordingly.
+        let depth = (1.0 + a.pattern.avg_row_nnz()).powi(2 * len as i32);
+        let tol = 1e-5 * depth.sqrt().max(1.0);
+        let diff = d.max_abs_diff(&expect);
+        assert!(diff < tol, "f32 chain diverged: {diff:.3e} > {tol:.3e}");
+    });
+}

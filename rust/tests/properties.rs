@@ -1,33 +1,18 @@
 //! Property-based tests over random matrices and parameters
 //! (deterministic seed sweep via `testing::check_prop` — the offline
-//! proptest substitute, DESIGN.md §9).
+//! proptest substitute, DESIGN.md §9). Failures print the case seed;
+//! replay one with `TF_PROP_SEED=<seed> cargo test -q --test properties`.
 
+mod common;
+
+use common::{random_params, random_pattern};
+use std::sync::Arc;
 use tile_fusion::cachesim::{trace_fused, trace_unfused, CacheConfig, CacheSim};
+use tile_fusion::dag::IterDag;
 use tile_fusion::exec::reference::reference;
 use tile_fusion::prelude::*;
-use tile_fusion::testing::{check_prop, XorShift64};
-
-/// Random square pattern with diagonal (keeps GCN-style structure).
-fn random_pattern(rng: &mut XorShift64) -> Pattern {
-    let n = 16 + rng.next_range(200);
-    let avg = 1 + rng.next_range(8);
-    match rng.next_range(4) {
-        0 => gen::erdos_renyi(n, avg, rng.next_u64()),
-        1 => gen::rmat((n.max(16)).next_power_of_two(), avg, RmatKind::Graph500, rng.next_u64()),
-        2 => gen::banded(n, &[1, 1 + rng.next_range(7)]),
-        _ => gen::uniform_random(n, n, avg, rng.next_u64()),
-    }
-}
-
-fn random_params(rng: &mut XorShift64) -> SchedulerParams {
-    SchedulerParams {
-        n_cores: 1 + rng.next_range(8),
-        cache_bytes: 1 << (10 + rng.next_range(12)),
-        elem_bytes: if rng.next_bool(0.5) { 4 } else { 8 },
-        ct_size: 1 << (2 + rng.next_range(8)),
-        max_split_depth: 24,
-    }
-}
+use tile_fusion::scheduler::chain::{ChainFlow, ChainPlanner, ChainStepSpec};
+use tile_fusion::testing::check_prop;
 
 #[test]
 fn prop_schedule_is_always_valid() {
@@ -205,6 +190,78 @@ fn prop_trace_access_counts_equal() {
         let mut s2 = CacheSim::new(CacheConfig::cascadelake());
         let u = trace_unfused(&mut s2, &a, BSide::Dense { bcol }, bcol);
         assert_eq!(f.total_accesses, u.total_accesses);
+    });
+}
+
+#[test]
+fn prop_chain_plan_invariants() {
+    // Per the chain-fusion contract: every second-op iteration of every
+    // step is scheduled exactly once (schedule validation), wavefront-0
+    // tiles only fuse iterations whose dependencies are in-tile
+    // (IterDag::deps_within), and repeated (pattern, shape) steps get
+    // the identical Arc'd schedule.
+    check_prop("chain-plan-invariants", 20, |rng| {
+        let a = random_pattern(rng);
+        let len = 1 + rng.next_range(4);
+        let rhs = 1 + rng.next_range(32);
+        let specs: Vec<ChainStepSpec> = (0..len)
+            .map(|_| ChainStepSpec {
+                op: FusionOp { a: &a, b: BSide::Sparse(&a), ccol: rhs },
+                flow: ChainFlow::C,
+            })
+            .collect();
+        let plan = ChainPlanner::new(random_params(rng)).plan(a.rows, rhs, &specs).unwrap();
+        assert_eq!(plan.stats.n_steps, len);
+        assert_eq!(plan.stats.unique_schedules, 1, "identical steps must dedup");
+        assert_eq!(plan.stats.dedup_hits, len - 1);
+        let g = IterDag::new(&a);
+        for st in &plan.steps {
+            assert!(
+                Arc::ptr_eq(&st.schedule, &plan.steps[0].schedule),
+                "dedup must return the identical Arc"
+            );
+            // (1)+(2): every i and j scheduled exactly once, wavefront 1
+            // j-only — the full FusedSchedule invariant set.
+            st.schedule.validate(&a);
+            // (3): wavefront-0 dependence closure, re-checked through
+            // the DAG view the scheduler consumed.
+            for t in &st.schedule.wavefronts[0] {
+                for &j in &t.j_rows {
+                    assert!(
+                        g.deps_within(j as usize, t.i_begin as usize, t.i_end as usize),
+                        "fused j={j} escapes tile [{}, {})",
+                        t.i_begin,
+                        t.i_end
+                    );
+                }
+            }
+            assert_eq!((st.out_rows, st.out_cols), (a.rows, rhs));
+        }
+        assert_eq!(plan.out_dims(), (a.rows, rhs));
+    });
+}
+
+#[test]
+fn prop_chain_plan_dedup_keyed_by_shape() {
+    // GCN-style chains: layers with equal (bcol, ccol) share a schedule,
+    // distinct widths build distinct ones — dedup is (pattern, shape).
+    check_prop("chain-plan-dedup-by-shape", 15, |rng| {
+        let a = random_pattern(rng);
+        let n = a.rows;
+        let w1 = 1 + rng.next_range(16);
+        let w2 = 1 + rng.next_range(16);
+        let spec = |bcol: usize, ccol: usize| ChainStepSpec {
+            op: FusionOp { a: &a, b: BSide::Dense { bcol }, ccol },
+            flow: ChainFlow::B,
+        };
+        // widths w1 -> w1 -> w1 -> w2: two (bcol, ccol) shapes unless
+        // w1 == w2 collapses them.
+        let specs = vec![spec(w1, w1), spec(w1, w1), spec(w1, w2)];
+        let plan = ChainPlanner::new(random_params(rng)).plan(n, w1, &specs).unwrap();
+        let expect_unique = if w1 == w2 { 1 } else { 2 };
+        assert_eq!(plan.stats.unique_schedules, expect_unique);
+        assert!(Arc::ptr_eq(&plan.steps[0].schedule, &plan.steps[1].schedule));
+        assert_eq!(plan.out_dims(), (n, w2));
     });
 }
 
