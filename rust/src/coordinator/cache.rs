@@ -1,5 +1,8 @@
-//! Schedule cache: one inspection per (sparsity pattern, operand shape).
+//! Schedule cache: one inspection per (sparsity pattern, operand shape),
+//! bounded by an LRU capacity, with the autotuner's strip-width pick
+//! riding in the same entry as the schedule it tunes.
 
+use crate::exec::StripMode;
 use crate::scheduler::{FusedSchedule, FusionOp, Scheduler, SchedulerParams};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -28,36 +31,117 @@ impl ScheduleKey {
     }
 }
 
-/// Pattern-keyed cache of built schedules.
+/// Entries the cache defaults to holding before evicting. Each entry is
+/// one built schedule (tiles ∝ pattern rows), so a few hundred bounds
+/// memory at tens of MB for realistic patterns while never evicting in
+/// single-tenant use.
+pub const DEFAULT_CAPACITY: usize = 256;
+
+struct Entry {
+    schedule: Arc<FusedSchedule>,
+    /// The autotuner's strip pick for this (pattern, shape, precision),
+    /// `None` until the first execution tunes it.
+    tuned_strip: Option<StripMode>,
+    /// LRU stamp: the cache clock at last touch.
+    last_used: u64,
+}
+
+/// Pattern-keyed cache of built schedules (LRU-bounded).
 pub struct ScheduleCache {
     params: SchedulerParams,
-    map: HashMap<ScheduleKey, Arc<FusedSchedule>>,
+    map: HashMap<ScheduleKey, Entry>,
+    capacity: usize,
+    clock: u64,
     pub hits: u64,
     pub misses: u64,
+    /// Entries dropped by the capacity bound (a Metrics counter).
+    pub evictions: u64,
 }
 
 impl ScheduleCache {
     pub fn new(params: SchedulerParams) -> Self {
-        Self { params, map: HashMap::new(), hits: 0, misses: 0 }
+        Self::with_capacity(params, DEFAULT_CAPACITY)
+    }
+
+    /// Cache bounded to `capacity` entries (≥ 1); inserting beyond it
+    /// evicts the least-recently-used entry, dropping its schedule and
+    /// any tuned strip pick with it.
+    pub fn with_capacity(params: SchedulerParams, capacity: usize) -> Self {
+        Self {
+            params,
+            map: HashMap::new(),
+            capacity: capacity.max(1),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
     }
 
     pub fn params(&self) -> SchedulerParams {
         self.params
     }
 
-    /// Return the cached schedule for `op`, building it on first sight.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn key_for(&self, op: &FusionOp) -> ScheduleKey {
+        ScheduleKey::for_op(op, self.params.elem_bytes.max(1))
+    }
+
+    /// Return the cached schedule for `op`, building it on first sight
+    /// (evicting the LRU entry when at capacity).
     pub fn get_or_build(&mut self, op: &FusionOp) -> Arc<FusedSchedule> {
         let mut params = self.params;
         params.elem_bytes = params.elem_bytes.max(1);
-        let key = ScheduleKey::for_op(op, params.elem_bytes);
-        if let Some(plan) = self.map.get(&key) {
+        let key = self.key_for(op);
+        self.clock += 1;
+        if let Some(entry) = self.map.get_mut(&key) {
+            entry.last_used = self.clock;
             self.hits += 1;
-            return Arc::clone(plan);
+            return Arc::clone(&entry.schedule);
         }
         self.misses += 1;
+        if self.map.len() >= self.capacity {
+            if let Some(lru) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            {
+                self.map.remove(&lru);
+                self.evictions += 1;
+            }
+        }
         let plan = Arc::new(Scheduler::new(params).schedule_op(op));
-        self.map.insert(key, Arc::clone(&plan));
+        self.map.insert(
+            key,
+            Entry { schedule: Arc::clone(&plan), tuned_strip: None, last_used: self.clock },
+        );
         plan
+    }
+
+    /// The autotuned strip pick cached for `op`, if any (touches the
+    /// entry's recency).
+    pub fn tuned_strip(&mut self, op: &FusionOp) -> Option<StripMode> {
+        let key = self.key_for(op);
+        self.clock += 1;
+        let entry = self.map.get_mut(&key)?;
+        entry.last_used = self.clock;
+        entry.tuned_strip
+    }
+
+    /// Record the autotuner's pick alongside `op`'s schedule. No-op when
+    /// the entry has been evicted in the meantime (the next request
+    /// rebuilds and retunes).
+    pub fn set_tuned_strip(&mut self, op: &FusionOp, strip: StripMode) {
+        let key = self.key_for(op);
+        self.clock += 1;
+        if let Some(entry) = self.map.get_mut(&key) {
+            entry.last_used = self.clock;
+            entry.tuned_strip = Some(strip);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -122,5 +206,49 @@ mod tests {
         assert_eq!(cache.len(), 2, "sparse and dense B must not collide");
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let a = gen::banded(32, &[1]);
+        let op_at = |ccol: usize| FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol };
+        let mut cache = ScheduleCache::with_capacity(SchedulerParams::default(), 2);
+        assert_eq!(cache.capacity(), 2);
+        cache.get_or_build(&op_at(1));
+        cache.get_or_build(&op_at(2));
+        // Touch ccol=1 so ccol=2 becomes the LRU victim.
+        cache.get_or_build(&op_at(1));
+        cache.get_or_build(&op_at(3));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions, 1);
+        // ccol=1 survived (hit), ccol=2 was evicted (miss + eviction).
+        let (h0, m0) = (cache.hits, cache.misses);
+        cache.get_or_build(&op_at(1));
+        assert_eq!((cache.hits, cache.misses), (h0 + 1, m0));
+        cache.get_or_build(&op_at(2));
+        assert_eq!(cache.misses, m0 + 1, "evicted entry rebuilds");
+        assert_eq!(cache.evictions, 2);
+    }
+
+    #[test]
+    fn tuned_strip_rides_the_entry() {
+        use crate::exec::StripMode;
+        let a = gen::banded(32, &[1]);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol: 8 };
+        let mut cache = ScheduleCache::with_capacity(SchedulerParams::default(), 1);
+        assert_eq!(cache.tuned_strip(&op), None, "no entry yet");
+        cache.get_or_build(&op);
+        assert_eq!(cache.tuned_strip(&op), None, "entry untuned");
+        cache.set_tuned_strip(&op, StripMode::Width(32));
+        assert_eq!(cache.tuned_strip(&op), Some(StripMode::Width(32)));
+        // Eviction drops the pick with the entry.
+        let other = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol: 16 };
+        cache.get_or_build(&other);
+        assert_eq!(cache.evictions, 1);
+        cache.get_or_build(&op);
+        assert_eq!(cache.tuned_strip(&op), None, "retune after eviction");
+        // Recording against a missing entry is a no-op.
+        cache.set_tuned_strip(&other, StripMode::Full);
+        assert_eq!(cache.tuned_strip(&other), None);
     }
 }

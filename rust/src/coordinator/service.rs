@@ -7,11 +7,13 @@ use super::cache::ScheduleCache;
 use crate::core::{Dense, Scalar};
 use crate::exec::chain::{chain_specs, ChainExec, ChainStepOp, StepStrategy};
 use crate::exec::{
-    AtomicTiling, Fused, Overlapped, PairExec, PairOp, TensorStyle, ThreadPool, Unfused,
+    AtomicTiling, Fused, Overlapped, PairExec, PairOp, StripMode, TensorStyle, ThreadPool,
+    Unfused,
 };
 use crate::scheduler::chain::{unfused_schedule, ChainPlanner, ChainStats};
 use crate::scheduler::SchedulerParams;
 use crate::sparse::Csr;
+use crate::tuning::{strip_candidates, StripTuner};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -115,6 +117,12 @@ pub struct Metrics {
     pub chain_requests: u64,
     /// Chain steps executed across all chain requests and batch inputs.
     pub chain_steps: u64,
+    /// Strip-width autotuner runs (first execution of a key whose model
+    /// pick had alternatives worth timing).
+    pub strip_tunes: u64,
+    /// Schedules evicted from the bounded cache (mirrors
+    /// `ScheduleCache::evictions`).
+    pub schedule_cache_evictions: u64,
 }
 
 /// The coordinator service.
@@ -195,7 +203,31 @@ impl<T: Scalar> Coordinator<T> {
                 } else {
                     self.metrics.schedule_cache_hits += 1;
                 }
-                let mut ex = Fused::new(op, &plan);
+                // First sight of this (pattern, shape, precision): time
+                // the candidate strip widths around the model's pick on
+                // the real input and cache the winner alongside the
+                // schedule. Later requests replay it for free.
+                let strip = match self.cache.tuned_strip(&fusion_op) {
+                    Some(tuned) => tuned,
+                    None => {
+                        let cands = strip_candidates(plan.strip_width, ccol);
+                        let picked = if cands.len() == 1 {
+                            cands[0]
+                        } else {
+                            self.metrics.strip_tunes += 1;
+                            let pool = &self.pool;
+                            let mut ex = Fused::new(op, &plan);
+                            let mut scratch = Dense::zeros(op.n_second(), ccol);
+                            StripTuner::default().pick(&cands, |mode| {
+                                ex.set_strip(*mode);
+                                ex.run(pool, &req.cs[0], &mut scratch);
+                            })
+                        };
+                        self.cache.set_tuned_strip(&fusion_op, picked);
+                        picked
+                    }
+                };
+                let mut ex = Fused::new(op, &plan).with_strip(strip);
                 for (c, d) in req.cs.iter().zip(&mut ds) {
                     ex.run(&self.pool, c, d);
                 }
@@ -230,6 +262,7 @@ impl<T: Scalar> Coordinator<T> {
         let elapsed = t0.elapsed();
         self.metrics.requests += 1;
         self.metrics.total_exec += elapsed;
+        self.metrics.schedule_cache_evictions = self.cache.evictions;
         Ok(Response { ds, elapsed, strategy: req.strategy })
     }
 
@@ -288,7 +321,7 @@ impl<T: Scalar> Coordinator<T> {
 
         let t0 = Instant::now();
         let (hits0, miss0) = (self.cache.hits, self.cache.misses);
-        let plan = {
+        let (plan, tuned) = {
             let specs = chain_specs(&ops, in_rows, in_cols)?;
             // Only steps that will actually run fused pay Algorithm 1's
             // inspection (through the shared cache); unfused steps get a
@@ -296,22 +329,43 @@ impl<T: Scalar> Coordinator<T> {
             // executor's geometry checks accept but never consult.
             let n_cores = self.cache.params().n_cores;
             let mut trivial: HashMap<u64, Arc<crate::scheduler::FusedSchedule>> = HashMap::new();
-            ChainPlanner::new(self.cache.params()).plan_with(in_rows, in_cols, &specs, |s, op| {
-                match strategies[s] {
+            let plan = ChainPlanner::new(self.cache.params()).plan_with(
+                in_rows,
+                in_cols,
+                &specs,
+                |s, op| match strategies[s] {
                     StepStrategy::Fused => self.cache.get_or_build(op),
                     StepStrategy::Unfused => Arc::clone(
                         trivial
                             .entry(op.a.structure_hash())
                             .or_insert_with(|| Arc::new(unfused_schedule(op.a, n_cores))),
                     ),
-                }
-            })?
+                },
+            )?;
+            // Fused steps whose (pattern, shape) a pair request already
+            // autotuned replay the tuned strip pick; untuned steps stay
+            // on the schedule's model pick (chains never time candidates
+            // themselves — tuning happens on the pair path).
+            let tuned: Vec<Option<StripMode>> = specs
+                .iter()
+                .zip(&strategies)
+                .map(|(spec, st)| match st {
+                    StepStrategy::Fused => self.cache.tuned_strip(&spec.op),
+                    StepStrategy::Unfused => None,
+                })
+                .collect();
+            (plan, tuned)
         };
         self.metrics.schedule_cache_hits += self.cache.hits - hits0;
         self.metrics.total_schedule_builds += self.cache.misses - miss0;
 
         let mut exec = ChainExec::new(ops, &plan)?;
         exec.set_strategies(&strategies);
+        for (s, t) in tuned.iter().enumerate() {
+            if let Some(mode) = t {
+                exec.set_strip(s, *mode);
+            }
+        }
         let (out_rows, out_cols) = exec.out_dims();
         let mut ds: Vec<Dense<T>> =
             xs.iter().map(|_| Dense::zeros(out_rows, out_cols)).collect();
@@ -324,6 +378,7 @@ impl<T: Scalar> Coordinator<T> {
         self.metrics.chain_requests += 1;
         self.metrics.chain_steps += (plan.len() * xs.len()) as u64;
         self.metrics.total_exec += elapsed;
+        self.metrics.schedule_cache_evictions = self.cache.evictions;
         Ok(ChainResponse { ds, elapsed, stats: plan.stats.clone() })
     }
 
@@ -634,6 +689,64 @@ mod tests {
         );
         let err = coord.submit_chain(req).unwrap_err();
         assert!(err.to_string().contains("chain error"), "{err}");
+    }
+
+    #[test]
+    fn strip_tuner_runs_once_then_replays_cached_pick() {
+        use crate::kernels::JB;
+        // Small cache budget so GNN-scale ccol forces a strip schedule
+        // with real candidates to time.
+        let params = SchedulerParams {
+            n_cores: 2,
+            cache_bytes: 64 * 1024,
+            elem_bytes: 8,
+            ct_size: 64,
+            max_split_depth: 24,
+        };
+        let mut coord = Coordinator::<f64>::new(2, params);
+        let a = Csr::<f64>::with_random_values(gen::poisson2d(16, 16), 1, -1.0, 1.0);
+        coord.register_matrix("A", a.clone());
+        let ccol = 4 * JB;
+        let b = Dense::<f64>::randn(a.cols(), 32, 2);
+        let c = Dense::<f64>::randn(32, ccol, 3);
+        let expect = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        let mk = || Request {
+            a: "A".into(),
+            b_dense: Some(b.clone()),
+            b_sparse: None,
+            cs: vec![c.clone()],
+            strategy: Strategy::TileFusion,
+        };
+        let r1 = coord.submit(&mk()).unwrap();
+        assert!(r1.ds[0].max_abs_diff(&expect) < 1e-10);
+        assert_eq!(coord.metrics().strip_tunes, 1, "first sight of the key tunes");
+        let r2 = coord.submit(&mk()).unwrap();
+        assert!(r2.ds[0].max_abs_diff(&expect) < 1e-10);
+        assert_eq!(coord.metrics().strip_tunes, 1, "cached pick replays, no retune");
+
+        // Chain steps at strip-triggering widths execute their strip
+        // schedules correctly and never run the tuner themselves (a
+        // step whose (pattern, shape) a pair request already tuned
+        // would ride that pick from the shared cache).
+        let x = Dense::<f64>::randn(a.rows(), ccol, 4);
+        let h = reference(&PairOp::spmm_spmm(&a, &a), &x);
+        let step = || ChainStepRequest {
+            a: "A".into(),
+            w: None,
+            b_dense: None,
+            b_sparse: Some("A".into()),
+            strategy: None,
+        };
+        let resp = coord
+            .submit_chain(ChainRequest {
+                steps: vec![step(), step()],
+                xs: vec![x],
+                strategy: Strategy::TileFusion,
+            })
+            .unwrap();
+        let expect2 = reference(&PairOp::spmm_spmm(&a, &a), &h);
+        assert!(resp.ds[0].max_abs_diff(&expect2) < 1e-9);
+        assert_eq!(coord.metrics().strip_tunes, 1, "chains never tune");
     }
 
     #[test]

@@ -19,8 +19,9 @@
 //! in-place post-processing (the GCN forward applies ReLU between layers
 //! and snapshots activations for backprop through this hook).
 
-use super::fused::run_fused;
-use super::unfused::run_unfused;
+use super::fused::run_fused_striped;
+use super::strip::{StripMode, StripWs};
+use super::unfused::run_unfused_striped;
 use super::{Dense, PairOp, Scalar, ThreadPool};
 use crate::scheduler::chain::{ChainError, ChainFlow, ChainPlan, ChainStepSpec};
 use crate::scheduler::{BSide, FusedSchedule, FusionOp, SchedulerParams};
@@ -137,6 +138,10 @@ struct ChainStepExec<T> {
     op: ChainStepOp<T>,
     schedule: Arc<FusedSchedule>,
     strategy: StepStrategy,
+    /// Column-strip mode: `Auto` follows the step schedule's cost-model
+    /// pick, so strip widths thread through the ping-pong intermediates
+    /// per step without rebinding.
+    strip: StripMode,
     /// Per-step `D1` workspace, allocated once at bind time.
     d1: Dense<T>,
     out_rows: usize,
@@ -149,6 +154,9 @@ pub struct ChainExec<T> {
     /// Ping-pong intermediates, allocated once to the max intermediate
     /// area and reshaped (never reallocated) per step.
     inter: [Dense<T>; 2],
+    /// Per-thread strip workspaces shared by every step (sized lazily
+    /// to the largest strip requirement seen).
+    strips: StripWs<T>,
     in_rows: usize,
     in_cols: usize,
     out_rows: usize,
@@ -221,6 +229,7 @@ impl<T: Scalar> ChainExec<T> {
                 op,
                 schedule: Arc::clone(&sp.schedule),
                 strategy: StepStrategy::Fused,
+                strip: StripMode::Auto,
                 d1: Dense::zeros(sp.d1_rows, sp.out_cols),
                 out_rows: sp.out_rows,
                 out_cols: sp.out_cols,
@@ -236,6 +245,7 @@ impl<T: Scalar> ChainExec<T> {
         Ok(Self {
             steps,
             inter: [mk(), mk()],
+            strips: StripWs::new(),
             in_rows: plan.in_rows,
             in_cols: plan.in_cols,
             out_rows,
@@ -284,6 +294,14 @@ impl<T: Scalar> ChainExec<T> {
         }
     }
 
+    /// Override one step's column-strip mode (default [`StripMode::Auto`]
+    /// — follow that step's schedule). The coordinator applies tuned
+    /// picks here when the autotuner has already timed the step's
+    /// (pattern, shape, precision).
+    pub fn set_strip(&mut self, step: usize, strip: StripMode) {
+        self.steps[step].strip = strip;
+    }
+
     /// Copy fresh weights into a [`ChainStepOp::GemmFlowB`] step (same
     /// shape) — how a training loop updates parameters without rebinding
     /// the chain. Panics if the step has no stationary weights.
@@ -324,6 +342,7 @@ impl<T: Scalar> ChainExec<T> {
         let n = self.steps.len();
         let steps = &mut self.steps;
         let inter = &mut self.inter;
+        let strips = &mut self.strips;
         let mut tap_checked = |s: usize, buf: &mut Dense<T>, rows: usize, cols: usize| {
             tap(s, buf);
             assert_eq!(
@@ -337,13 +356,13 @@ impl<T: Scalar> ChainExec<T> {
         {
             let step = &mut steps[0];
             if n == 1 {
-                run_step(step, pool, x, out);
+                run_step(step, strips, pool, x, out);
                 tap_checked(0, out, step.out_rows, step.out_cols);
                 return;
             }
             let dst = &mut inter[0];
             shape_to(dst, step.out_rows, step.out_cols);
-            run_step(step, pool, x, dst);
+            run_step(step, strips, pool, x, dst);
             tap_checked(0, dst, step.out_rows, step.out_cols);
         }
 
@@ -354,11 +373,11 @@ impl<T: Scalar> ChainExec<T> {
             let (lo, hi) = inter.split_at_mut(1);
             let (src, dst) = if s % 2 == 1 { (&lo[0], &mut hi[0]) } else { (&hi[0], &mut lo[0]) };
             if s + 1 == n {
-                run_step(step, pool, src, out);
+                run_step(step, strips, pool, src, out);
                 tap_checked(s, out, step.out_rows, step.out_cols);
             } else {
                 shape_to(dst, step.out_rows, step.out_cols);
-                run_step(step, pool, src, dst);
+                run_step(step, strips, pool, src, dst);
                 tap_checked(s, dst, step.out_rows, step.out_cols);
             }
         }
@@ -376,37 +395,29 @@ fn shape_to<T: Scalar>(buf: &mut Dense<T>, rows: usize, cols: usize) {
 }
 
 /// Execute one step: bind the flowing value into a [`PairOp`] and run it
-/// with the step's strategy on the shared pool and workspaces.
+/// with the step's strategy and strip mode on the shared pool and
+/// workspaces (`ws` holds the per-thread strip buffers every step
+/// shares).
 fn run_step<T: Scalar>(
     step: &mut ChainStepExec<T>,
+    ws: &mut StripWs<T>,
     pool: &ThreadPool,
     input: &Dense<T>,
     out: &mut Dense<T>,
 ) {
     let strategy = step.strategy;
+    let strip = step.strip;
     let d1 = &mut step.d1;
     let schedule = &step.schedule;
-    match &step.op {
-        ChainStepOp::GemmFlowB { a, w } => {
-            let pair = PairOp::gemm_spmm(a, input);
-            match strategy {
-                StepStrategy::Fused => run_fused(&pair, schedule, pool, w, d1, out),
-                StepStrategy::Unfused => run_unfused(&pair, pool, w, d1, out, UNFUSED_CHUNK),
-            }
-        }
-        ChainStepOp::GemmFlowC { a, b } => {
-            let pair = PairOp::gemm_spmm(a, b);
-            match strategy {
-                StepStrategy::Fused => run_fused(&pair, schedule, pool, input, d1, out),
-                StepStrategy::Unfused => run_unfused(&pair, pool, input, d1, out, UNFUSED_CHUNK),
-            }
-        }
-        ChainStepOp::SpmmFlowC { a, b } => {
-            let pair = PairOp::spmm_spmm(a, b);
-            match strategy {
-                StepStrategy::Fused => run_fused(&pair, schedule, pool, input, d1, out),
-                StepStrategy::Unfused => run_unfused(&pair, pool, input, d1, out, UNFUSED_CHUNK),
-            }
+    let (pair, c) = match &step.op {
+        ChainStepOp::GemmFlowB { a, w } => (PairOp::gemm_spmm(a, input), w),
+        ChainStepOp::GemmFlowC { a, b } => (PairOp::gemm_spmm(a, b), input),
+        ChainStepOp::SpmmFlowC { a, b } => (PairOp::spmm_spmm(a, b), input),
+    };
+    match strategy {
+        StepStrategy::Fused => run_fused_striped(&pair, schedule, pool, c, d1, out, ws, strip),
+        StepStrategy::Unfused => {
+            run_unfused_striped(&pair, pool, c, d1, out, UNFUSED_CHUNK, strip)
         }
     }
 }

@@ -5,7 +5,20 @@
 //! whose data those produced (the reuse-to-temporal-locality conversion
 //! of §3.2); one barrier; wavefront 1 finishes the leftover second-op
 //! rows. No atomics, no redundant computation.
+//!
+//! When the schedule carries a strip width (or the caller forces one via
+//! [`StripMode`]), wavefront 0 runs **column-strip execution**: each tile
+//! iterates the dense columns in strips, producing the tile's `D1` rows
+//! one strip at a time into a per-thread workspace and consuming them
+//! immediately — the strip working set (`t · strip` plus the packed `C`
+//! panel) is what the scheduler sized to the cache, so the produced rows
+//! are still resident when the fused SpMM gathers them even at GNN-scale
+//! `ccol`. Each strip is written back to the full-width `D1` for
+//! wavefront 1 (and the GNN backward pass), which runs full-width as
+//! before. Still exactly one barrier: strips iterate *inside* the
+//! per-tile closure.
 
+use super::strip::{StripMode, StripWs};
 use super::{Dense, PairExec, PairOp, Scalar, SendPtr, ThreadPool};
 use crate::kernels;
 use crate::scheduler::FusedSchedule;
@@ -15,16 +28,30 @@ pub struct Fused<'a, T> {
     pub op: PairOp<'a, T>,
     pub plan: &'a FusedSchedule,
     d1: Dense<T>,
+    strip: StripMode,
+    ws: StripWs<T>,
 }
 
 impl<'a, T: Scalar> Fused<'a, T> {
     /// Bind an executor. `plan` must have been built from `op.a.pattern`
     /// (and `B`'s pattern for SpMM-SpMM) — checked by dimension here,
-    /// by content in debug builds via `validate`.
+    /// by content in debug builds via `validate`. Strip width follows
+    /// the schedule ([`StripMode::Auto`]) unless overridden.
     pub fn new(op: PairOp<'a, T>, plan: &'a FusedSchedule) -> Self {
         assert_eq!(plan.n_first, op.n_first(), "schedule/first-op dim mismatch");
         assert_eq!(plan.n_second, op.n_second(), "schedule/second-op dim mismatch");
-        Self { op, plan, d1: Dense::zeros(0, 0) }
+        Self { op, plan, d1: Dense::zeros(0, 0), strip: StripMode::Auto, ws: StripWs::new() }
+    }
+
+    /// Builder-style strip override (the autotuner's pick, bench arms).
+    pub fn with_strip(mut self, strip: StripMode) -> Self {
+        self.strip = strip;
+        self
+    }
+
+    /// Override the strip mode in place.
+    pub fn set_strip(&mut self, strip: StripMode) {
+        self.strip = strip;
     }
 
     fn ensure_ws(&mut self, ccol: usize) {
@@ -34,15 +61,21 @@ impl<'a, T: Scalar> Fused<'a, T> {
     }
 
     /// Intermediate `D1` from the last `run` (the GNN backward pass
-    /// reuses it).
+    /// reuses it). Complete in every mode: strip execution writes each
+    /// strip back to the full-width buffer.
     pub fn d1(&self) -> &Dense<T> {
         &self.d1
     }
 }
 
 /// Run the fused schedule with a caller-owned `D1` workspace (resized if
-/// needed). This is the allocation-free entry point long-lived callers
-/// (GCN layers, the coordinator) use; [`Fused::run`] wraps it.
+/// needed), always **full-width** — the pre-strip contract, still
+/// allocation-free beyond `d1` (the full-width path never touches strip
+/// workspaces). Callers that want the schedule's strip width hold a
+/// [`StripWs`] and call [`run_fused_striped`] with [`StripMode::Auto`]
+/// (what [`Fused`], the chain executor, and the coordinator do), so the
+/// per-thread buffers amortize across runs instead of reallocating per
+/// call.
 pub fn run_fused<T: Scalar>(
     op: &PairOp<'_, T>,
     plan: &FusedSchedule,
@@ -50,6 +83,26 @@ pub fn run_fused<T: Scalar>(
     c: &Dense<T>,
     d1: &mut Dense<T>,
     d: &mut Dense<T>,
+) {
+    let mut ws = StripWs::new();
+    run_fused_striped(op, plan, pool, c, d1, d, &mut ws, StripMode::Full);
+}
+
+/// Run the fused schedule with caller-owned workspaces: the full-width
+/// `D1` (resized if needed) plus the per-thread strip workspaces `ws`
+/// (touched only when the resolved strip width is narrower than the
+/// dense width). The allocation-free entry point — workspaces grow on
+/// first use and are reused across calls.
+#[allow(clippy::too_many_arguments)] // the executor state tuple, spelled out
+pub fn run_fused_striped<T: Scalar>(
+    op: &PairOp<'_, T>,
+    plan: &FusedSchedule,
+    pool: &ThreadPool,
+    c: &Dense<T>,
+    d1: &mut Dense<T>,
+    d: &mut Dense<T>,
+    ws: &mut StripWs<T>,
+    strip: StripMode,
 ) {
     let ccol = op.layout.ccol(c);
     if d1.rows != op.n_first() || d1.cols != ccol {
@@ -60,25 +113,91 @@ pub fn run_fused<T: Scalar>(
 
     let d1_ptr = SendPtr(d1.data.as_mut_ptr());
     let d_ptr = SendPtr(d.data.as_mut_ptr());
-
-    // Wavefront 0: fused tiles — produce D1 rows, immediately consume
-    // them for the tile's own second-op rows (temporal locality).
     let wf0 = &plan.wavefronts[0];
-    pool.parallel_for(wf0.len(), |ti, _| {
-        let tile = &wf0[ti];
-        unsafe {
-            // First operation over the tile's contiguous i range.
-            let d1 = d1_ptr.get();
-            for i in tile.i_begin as usize..tile.i_end as usize {
-                let out = std::slice::from_raw_parts_mut(d1.add(i * ccol), ccol);
-                op.first.compute_row(i, c, op.layout, out);
-            }
-            // Fused second-operation rows (all deps in-tile, still hot).
-            kernels::spmm_rows(op.a, &tile.j_rows, d1_ptr.get(), d_ptr.get(), ccol);
-        }
-    });
 
-    // One barrier (implicit in parallel_for), then wavefront 1.
+    match strip.resolve(plan.strip_width, ccol) {
+        None => {
+            // Wavefront 0, full width: produce D1 rows, immediately
+            // consume them for the tile's own second-op rows.
+            pool.parallel_for(wf0.len(), |ti, _| {
+                let tile = &wf0[ti];
+                unsafe {
+                    // First operation over the tile's contiguous i range.
+                    let d1 = d1_ptr.get();
+                    for i in tile.i_begin as usize..tile.i_end as usize {
+                        let out = std::slice::from_raw_parts_mut(d1.add(i * ccol), ccol);
+                        op.first.compute_row(i, c, op.layout, out);
+                    }
+                    // Fused second-operation rows (deps in-tile, still hot).
+                    kernels::spmm_rows(op.a, &tile.j_rows, d1_ptr.get(), d_ptr.get(), ccol);
+                }
+            });
+        }
+        Some(w) => {
+            // Wavefront 0, strip-by-strip inside each tile (no extra
+            // barriers). The packed C panels depend only on (C, strip
+            // grid), so they are packed ONCE per run into the shared
+            // buffer — strip-major, the strip at j0 occupying elements
+            // `panel_rows·j0 .. panel_rows·(j0+wl)` — and every tile
+            // reads them; per-worker scratch holds just the tile's D1
+            // strip.
+            let max_rows = wf0.iter().map(|t| t.i_len()).max().unwrap_or(0);
+            let panel_rows = if op.first.packs_panel(op.layout) { c.rows } else { 0 };
+            let (panel_all, scratch) =
+                ws.prepare(pool.n_threads(), max_rows * w, panel_rows * ccol);
+            let mut j0 = 0;
+            while j0 < ccol && panel_rows > 0 {
+                let wl = w.min(ccol - j0);
+                kernels::pack_panel(c, j0, wl, &mut panel_all[panel_rows * j0..]);
+                j0 += wl;
+            }
+            let panel_all: &[T] = panel_all;
+            pool.parallel_for(wf0.len(), |ti, wid| {
+                let tile = &wf0[ti];
+                let i0 = tile.i_begin as usize;
+                let i1 = tile.i_end as usize;
+                unsafe {
+                    let tile_ws = scratch.get(wid);
+                    let mut j0 = 0;
+                    while j0 < ccol {
+                        let wl = w.min(ccol - j0);
+                        let panel = &panel_all[panel_rows * j0..panel_rows * (j0 + wl)];
+                        // Produce the tile's D1 rows for this strip.
+                        for i in i0..i1 {
+                            let out = &mut tile_ws[(i - i0) * wl..(i - i0) * wl + wl];
+                            op.first.compute_row_strip(i, c, op.layout, j0, panel, out);
+                        }
+                        // Consume them while strip-resident.
+                        for &j in &tile.j_rows {
+                            let out = std::slice::from_raw_parts_mut(
+                                d_ptr.get().add(j as usize * ccol + j0),
+                                wl,
+                            );
+                            kernels::spmm_row_strip(
+                                op.a,
+                                j as usize,
+                                tile_ws.as_ptr(),
+                                wl,
+                                i0,
+                                out,
+                            );
+                        }
+                        // Write back for wavefront 1 / D1 consumers.
+                        let d1 = d1_ptr.get();
+                        for i in i0..i1 {
+                            let src = &tile_ws[(i - i0) * wl..(i - i0) * wl + wl];
+                            std::slice::from_raw_parts_mut(d1.add(i * ccol + j0), wl)
+                                .copy_from_slice(src);
+                        }
+                        j0 += wl;
+                    }
+                }
+            });
+        }
+    }
+
+    // One barrier (implicit in parallel_for), then wavefront 1 —
+    // full-width: its gathers span tiles, so no strip stays resident.
     let wf1 = &plan.wavefronts[1];
     pool.parallel_for(wf1.len(), |ti, _| {
         let tile = &wf1[ti];
@@ -97,7 +216,8 @@ impl<T: Scalar> PairExec<T> for Fused<'_, T> {
         let ccol = self.op.layout.ccol(c);
         self.ensure_ws(ccol);
         let mut d1 = std::mem::replace(&mut self.d1, Dense::zeros(0, 0));
-        run_fused(&self.op, self.plan, pool, c, &mut d1, d);
+        let op = self.op;
+        run_fused_striped(&op, self.plan, pool, c, &mut d1, d, &mut self.ws, self.strip);
         self.d1 = d1;
     }
 }
@@ -164,6 +284,78 @@ mod tests {
         let pool = ThreadPool::new(2);
         let mut ex = Fused::new(PairOp::gemm_spmm_ct(&a, &b), &plan);
         let mut d = Dense::zeros(100, 6);
+        ex.run(&pool, &ct, &mut d);
+        assert!(d.max_abs_diff(&expect) < 1e-10);
+    }
+
+    #[test]
+    fn strip_modes_match_reference_and_fill_d1() {
+        use crate::kernels::JB;
+        // ccol crosses JB so strips have interior blocks and a tail.
+        let (bcol, ccol) = (12, JB + 9);
+        let pat = gen::rmat(128, 6, gen::RmatKind::Graph500, 3);
+        let a = Csr::<f64>::with_random_values(pat, 5, -1.0, 1.0);
+        let b = Dense::<f64>::randn(a.cols(), bcol, 6);
+        let c = Dense::<f64>::randn(bcol, ccol, 7);
+        let op = PairOp::gemm_spmm(&a, &b);
+        let plan = Scheduler::new(small_params()).schedule(&a.pattern, bcol, ccol);
+        let expect = reference(&op, &c);
+        let mut d1_expect = Dense::zeros(a.cols(), ccol);
+        for i in 0..a.cols() {
+            op.first.compute_row(i, &c, op.layout, d1_expect.row_mut(i));
+        }
+        for threads in [1, 4] {
+            let pool = ThreadPool::new(threads);
+            for mode in [
+                StripMode::Full,
+                StripMode::Width(1),
+                StripMode::Width(JB),
+                StripMode::Width(JB + 1),
+                StripMode::Width(ccol),
+            ] {
+                let mut ex = Fused::new(op, &plan).with_strip(mode);
+                let mut d = Dense::zeros(a.rows(), ccol);
+                // Two runs: workspaces must be reusable without drift.
+                for _ in 0..2 {
+                    ex.run(&pool, &c, &mut d);
+                }
+                assert!(d.max_abs_diff(&expect) < 1e-10, "{mode:?} threads={threads}");
+                // Strip execution must still materialize the whole D1.
+                assert!(
+                    ex.d1().max_abs_diff(&d1_expect) < 1e-10,
+                    "{mode:?}: D1 write-back incomplete"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn strip_spmm_spmm_and_transpose_c() {
+        use crate::kernels::JB;
+        let ccol = JB + 5;
+        let pat = gen::poisson2d(12, 12);
+        let a = Csr::<f64>::with_random_values(pat, 8, -1.0, 1.0);
+        let pool = ThreadPool::new(3);
+
+        // SpMM-SpMM (sparse first op reads the C strip directly).
+        let cs = Dense::<f64>::randn(a.cols(), ccol, 9);
+        let op = PairOp::spmm_spmm(&a, &a);
+        let plan = Scheduler::new(small_params()).schedule_sparse(&a.pattern, &a.pattern, ccol);
+        let expect = reference(&op, &cs);
+        let mut ex = Fused::new(op, &plan).with_strip(StripMode::Width(JB));
+        let mut d = Dense::zeros(a.rows(), ccol);
+        ex.run(&pool, &cs, &mut d);
+        assert!(d.max_abs_diff(&expect) < 1e-10);
+
+        // Transpose-C (strip = row window of the stored Cᵀ, no panel).
+        let b = Dense::<f64>::randn(a.cols(), 8, 10);
+        let c = Dense::<f64>::randn(8, ccol, 11);
+        let ct = c.transpose();
+        let plan = Scheduler::new(small_params()).schedule(&a.pattern, 8, ccol);
+        let expect = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        let mut ex =
+            Fused::new(PairOp::gemm_spmm_ct(&a, &b), &plan).with_strip(StripMode::Width(JB));
+        let mut d = Dense::zeros(a.rows(), ccol);
         ex.run(&pool, &ct, &mut d);
         assert!(d.max_abs_diff(&expect) < 1e-10);
     }

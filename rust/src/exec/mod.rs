@@ -27,6 +27,7 @@ pub mod fused;
 pub mod overlapped;
 pub mod pool;
 pub mod reference;
+pub mod strip;
 pub mod tensor_style;
 pub mod unfused;
 
@@ -34,7 +35,8 @@ pub use atomic_tiling::AtomicTiling;
 pub use chain::{chain_specs, ChainExec, ChainStepOp, StepStrategy};
 pub use fused::Fused;
 pub use overlapped::Overlapped;
-pub use pool::ThreadPool;
+pub use pool::{ThreadPool, WorkerScratch};
+pub use strip::{StripMode, StripWs};
 pub use tensor_style::TensorStyle;
 pub use unfused::Unfused;
 
@@ -100,6 +102,61 @@ impl<'a, T: Scalar> FirstOp<'a, T> {
                 let (cols, vals) = b.row(i);
                 for (j, o) in out.iter_mut().enumerate() {
                     let cj = c.row(j);
+                    let mut acc = T::ZERO;
+                    for (&k, &v) in cols.iter().zip(vals) {
+                        acc += v * cj[k as usize];
+                    }
+                    *o += acc;
+                }
+            }
+        }
+    }
+
+    /// True when strip execution packs a `C`-column panel for this
+    /// first op (dense `B` against natural-layout `C`: the k-loop then
+    /// reads unit-stride memory instead of `ccol`-strided rows).
+    #[inline]
+    pub fn packs_panel(&self, layout: CLayout) -> bool {
+        matches!(self, FirstOp::Dense(_)) && layout == CLayout::Normal
+    }
+
+    /// Compute columns `j0..j0 + out.len()` of `D1` row `i` into `out`
+    /// (overwrites). When [`FirstOp::packs_panel`] holds, `panel` must
+    /// be the packed column window of `C`
+    /// ([`kernels::pack_panel`](crate::kernels::pack_panel) for
+    /// `j0..j0 + out.len()`); it is ignored otherwise.
+    #[inline]
+    pub fn compute_row_strip(
+        &self,
+        i: usize,
+        c: &Dense<T>,
+        layout: CLayout,
+        j0: usize,
+        panel: &[T],
+        out: &mut [T],
+    ) {
+        out.iter_mut().for_each(|v| *v = T::ZERO);
+        let w = out.len();
+        match (self, layout) {
+            (FirstOp::Dense(b), CLayout::Normal) => {
+                kernels::gemm_row_strip(b.row(i), panel, w, out)
+            }
+            (FirstOp::Dense(b), CLayout::Transposed) => {
+                kernels::gemm_row_ct_strip(b.row(i), c, j0, out)
+            }
+            (FirstOp::Sparse(b), CLayout::Normal) => {
+                let (cols, vals) = b.row(i);
+                for (&k, &v) in cols.iter().zip(vals) {
+                    let src = &c.row(k as usize)[j0..j0 + w];
+                    for (o, &s) in out.iter_mut().zip(src) {
+                        *o += v * s;
+                    }
+                }
+            }
+            (FirstOp::Sparse(b), CLayout::Transposed) => {
+                let (cols, vals) = b.row(i);
+                for (x, o) in out.iter_mut().enumerate() {
+                    let cj = c.row(j0 + x);
                     let mut acc = T::ZERO;
                     for (&k, &v) in cols.iter().zip(vals) {
                         acc += v * cj[k as usize];

@@ -9,9 +9,63 @@
 //! item finished, so two consecutive calls give exactly the one
 //! synchronization barrier the schedule requires between wavefronts.
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// Per-worker scratch buffers, one slot per pool executor, indexed by
+/// the worker id `parallel_for` hands each closure — the storage behind
+/// the strip executors' per-thread tile workspaces. Worker `w` only
+/// ever touches slot `w`, which is what makes the interior mutability
+/// race-free: a worker runs one item at a time, so at most one `get(w)`
+/// borrow is live per slot.
+pub struct WorkerScratch<T> {
+    slots: Vec<UnsafeCell<Vec<T>>>,
+}
+
+// Safety: slot `w` is only accessed from the single thread currently
+// acting as worker `w` (documented contract of `get`).
+unsafe impl<T: Send> Sync for WorkerScratch<T> {}
+
+impl<T: Clone + Default> WorkerScratch<T> {
+    /// One empty slot per executor of `pool`.
+    pub fn new(pool: &ThreadPool) -> Self {
+        Self::for_threads(pool.n_threads())
+    }
+
+    /// One empty slot per worker id in `0..n`.
+    pub fn for_threads(n: usize) -> Self {
+        Self { slots: (0..n.max(1)).map(|_| UnsafeCell::new(Vec::new())).collect() }
+    }
+
+    /// Number of worker slots.
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Grow every slot to at least `len` elements. Call before the
+    /// parallel region (requires `&mut self`, so no workers are live).
+    pub fn ensure(&mut self, len: usize) {
+        for s in &mut self.slots {
+            let v = s.get_mut();
+            if v.len() < len {
+                v.resize(len, T::default());
+            }
+        }
+    }
+
+    /// Mutable view of worker `w`'s slot.
+    ///
+    /// # Safety
+    /// Must only be called from the thread currently acting as worker
+    /// `w`, with at most one returned borrow live at a time (the
+    /// `parallel_for` closure discipline: take it once per item).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get(&self, w: usize) -> &mut [T] {
+        (*self.slots[w].get()).as_mut_slice()
+    }
+}
 
 /// Type-erased parallel job: `f(item_index, worker_id)`.
 type Job = Arc<JobInner>;
@@ -258,5 +312,28 @@ mod tests {
     fn zero_items_is_noop() {
         let pool = ThreadPool::new(2);
         pool.parallel_for(0, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn worker_scratch_is_private_per_worker() {
+        let pool = ThreadPool::new(4);
+        let mut scratch = WorkerScratch::<u64>::new(&pool);
+        assert_eq!(scratch.n_slots(), 4);
+        scratch.ensure(8);
+        // Each item stamps its worker id into that worker's slot; no
+        // slot may ever hold another worker's id.
+        pool.parallel_for(10_000, |_, w| unsafe {
+            let buf = scratch.get(w);
+            assert_eq!(buf.len(), 8);
+            for v in buf.iter_mut() {
+                *v = w as u64 + 1;
+            }
+            for v in buf.iter() {
+                assert_eq!(*v, w as u64 + 1, "cross-worker scribble");
+            }
+        });
+        // ensure() never shrinks.
+        scratch.ensure(4);
+        unsafe { assert_eq!(scratch.get(0).len(), 8) };
     }
 }

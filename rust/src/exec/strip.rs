@@ -1,0 +1,134 @@
+//! Column-strip execution support.
+//!
+//! The Eq.-3 cost model charges every tile `(nz + uc + t + |J|) · cCol`
+//! bytes; at GNN-scale dense widths (`ccol ≥ 256`) even a few fused
+//! rows overflow the fast-memory budget, and the full-width executors
+//! evict a tile's `D1` rows before the consuming SpMM reads them —
+//! exactly the regime Fig. 4 warns about. Strip execution splits the
+//! dense column dimension into cache-sized strips and runs each fused
+//! tile strip-by-strip: the tile's `D1` rows are only `strip` wide, live
+//! in a per-thread workspace ([`WorkerScratch`]), and stay L2-resident
+//! between the producing GeMM/SpMM rows and the consuming SpMM rows.
+//!
+//! The scheduler picks the widest strip whose tile cost fits
+//! `cacheSize` (stored on
+//! [`FusedSchedule::strip_width`](crate::scheduler::FusedSchedule));
+//! executors follow it by default ([`StripMode::Auto`]) and can be
+//! overridden per run — how the [`tuning`](crate::tuning) autotuner
+//! times candidate widths and how benches pin arms.
+
+use super::pool::WorkerScratch;
+use crate::core::Scalar;
+
+/// How an executor chooses its column-strip width.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StripMode {
+    /// Follow the schedule's cost-model pick (full width when the
+    /// schedule carries none — e.g. every pre-strip schedule).
+    #[default]
+    Auto,
+    /// Force full-width execution regardless of the schedule.
+    Full,
+    /// Force a specific strip width (clamped to the dense width; widths
+    /// `>= ccol` or `0` degenerate to full-width execution).
+    Width(usize),
+}
+
+impl StripMode {
+    /// Effective strip width for a run over `ccol` dense columns:
+    /// `Some(w)` with `0 < w < ccol` when strip execution is active,
+    /// `None` for the full-width path.
+    #[inline]
+    pub fn resolve(self, plan_width: Option<usize>, ccol: usize) -> Option<usize> {
+        let w = match self {
+            StripMode::Auto => plan_width?,
+            StripMode::Full => return None,
+            StripMode::Width(w) => w,
+        };
+        (w > 0 && w < ccol).then_some(w)
+    }
+}
+
+/// Lazily sized strip workspaces an executor owns across runs: one
+/// scratch slot per pool worker (the tile `D1` strips) plus one shared
+/// packed-panel buffer (`C` packed strip-major once per run — the panel
+/// depends only on `C` and the strip grid, never on the tile, so
+/// packing it per tile would duplicate traffic proportional to the tile
+/// count). Buffers grow and are never shrunk; the scratch is
+/// re-initialized only when a run arrives on a pool with more workers
+/// than seen before — steady-state runs are allocation-free.
+pub struct StripWs<T> {
+    scratch: Option<WorkerScratch<T>>,
+    panel: Vec<T>,
+}
+
+impl<T: Scalar> StripWs<T> {
+    pub fn new() -> Self {
+        Self { scratch: None, panel: Vec::new() }
+    }
+
+    /// Workspaces for one run: the shared panel buffer sized to
+    /// `panel_len` elements and per-worker slots of at least `slot_len`
+    /// elements for `workers` worker ids.
+    pub(crate) fn prepare(
+        &mut self,
+        workers: usize,
+        slot_len: usize,
+        panel_len: usize,
+    ) -> (&mut [T], &WorkerScratch<T>) {
+        if self.panel.len() < panel_len {
+            self.panel.resize(panel_len, T::ZERO);
+        }
+        let need_new = match &self.scratch {
+            Some(s) => s.n_slots() < workers,
+            None => true,
+        };
+        if need_new {
+            self.scratch = Some(WorkerScratch::for_threads(workers));
+        }
+        let s = self.scratch.as_mut().expect("just ensured");
+        s.ensure(slot_len);
+        (&mut self.panel[..panel_len], self.scratch.as_ref().expect("just ensured"))
+    }
+}
+
+impl<T: Scalar> Default for StripWs<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_modes() {
+        assert_eq!(StripMode::Auto.resolve(None, 100), None);
+        assert_eq!(StripMode::Auto.resolve(Some(32), 100), Some(32));
+        assert_eq!(StripMode::Auto.resolve(Some(100), 100), None, "plan width == ccol is full");
+        assert_eq!(StripMode::Full.resolve(Some(32), 100), None);
+        assert_eq!(StripMode::Width(32).resolve(None, 100), Some(32));
+        assert_eq!(StripMode::Width(200).resolve(None, 100), None);
+        assert_eq!(StripMode::Width(0).resolve(Some(32), 100), None);
+        assert_eq!(StripMode::default(), StripMode::Auto);
+    }
+
+    #[test]
+    fn ws_grows_to_pool_and_len() {
+        let mut ws = StripWs::<f64>::new();
+        let (panel, s) = ws.prepare(3, 16, 12);
+        assert_eq!(panel.len(), 12);
+        assert_eq!(s.n_slots(), 3);
+        unsafe { assert_eq!(s.get(2).len(), 16) };
+        // Larger pool re-initializes; larger lens grow in place; a
+        // smaller panel request just narrows the returned view.
+        let (panel, s) = ws.prepare(5, 8, 4);
+        assert_eq!(panel.len(), 4);
+        assert_eq!(s.n_slots(), 5);
+        let (panel, s) = ws.prepare(4, 32, 40);
+        assert_eq!(panel.len(), 40);
+        assert_eq!(s.n_slots(), 5, "never shrinks the slot count");
+        unsafe { assert_eq!(s.get(0).len(), 32) };
+    }
+}

@@ -4,6 +4,7 @@
 //! the fused executor; the *only* difference is that `D1` makes a full
 //! round trip through memory between the operations.
 
+use super::strip::StripMode;
 use super::{Dense, PairExec, PairOp, Scalar, SendPtr, ThreadPool};
 use crate::kernels;
 
@@ -13,16 +14,26 @@ pub struct Unfused<'a, T> {
     pub op: PairOp<'a, T>,
     /// Row-block grain for the dynamic scheduler.
     pub row_chunk: usize,
+    /// Column-strip mode for the second op's gathers. `Auto` resolves
+    /// to full width (there is no schedule to follow); strips must be
+    /// requested explicitly.
+    pub strip: StripMode,
     d1: Dense<T>,
 }
 
 impl<'a, T: Scalar> Unfused<'a, T> {
     pub fn new(op: PairOp<'a, T>) -> Self {
-        Self { op, row_chunk: 64, d1: Dense::zeros(0, 0) }
+        Self { op, row_chunk: 64, strip: StripMode::Auto, d1: Dense::zeros(0, 0) }
     }
 
     pub fn with_chunk(mut self, chunk: usize) -> Self {
         self.row_chunk = chunk.max(1);
+        self
+    }
+
+    /// Builder-style strip override for the second-op gathers.
+    pub fn with_strip(mut self, strip: StripMode) -> Self {
+        self.strip = strip;
         self
     }
 
@@ -32,8 +43,7 @@ impl<'a, T: Scalar> Unfused<'a, T> {
 }
 
 /// Run the unfused pair with a caller-owned `D1` workspace (resized if
-/// needed) — the allocation-free entry point the chain executor uses for
-/// per-step strategy overrides; [`Unfused::run`] wraps it.
+/// needed), full-width — [`run_unfused_striped`] with no strip.
 pub fn run_unfused<T: Scalar>(
     op: &PairOp<'_, T>,
     pool: &ThreadPool,
@@ -41,6 +51,25 @@ pub fn run_unfused<T: Scalar>(
     d1: &mut Dense<T>,
     d: &mut Dense<T>,
     row_chunk: usize,
+) {
+    run_unfused_striped(op, pool, c, d1, d, row_chunk, StripMode::Full);
+}
+
+/// Run the unfused pair with a caller-owned `D1` workspace — the
+/// allocation-free entry point the chain executor uses for per-step
+/// strategy overrides. The first op always runs full-width (its output
+/// must materialize whole for the barrier anyway); a strip width
+/// (`strip` resolved against no plan) blocks the second op's gathers
+/// into column windows of `D1`, so the rows a block of `A` rows gathers
+/// stay cache-resident across that block at large `ccol`.
+pub fn run_unfused_striped<T: Scalar>(
+    op: &PairOp<'_, T>,
+    pool: &ThreadPool,
+    c: &Dense<T>,
+    d1: &mut Dense<T>,
+    d: &mut Dense<T>,
+    row_chunk: usize,
+    strip: StripMode,
 ) {
     let ccol = op.layout.ccol(c);
     if d1.rows != op.n_first() || d1.cols != ccol {
@@ -62,14 +91,29 @@ pub fn run_unfused<T: Scalar>(
     });
 
     // Barrier, then op 2: D = A · D1 over row blocks.
-    pool.parallel_for_chunks(op.n_second(), row_chunk, |r, _| unsafe {
-        let d1 = d1_ptr.get() as *const T;
-        let d = d_ptr.get();
-        for j in r {
-            let out = std::slice::from_raw_parts_mut(d.add(j * ccol), ccol);
-            kernels::spmm_row_ptr(op.a, j, d1, ccol, out);
-        }
-    });
+    match strip.resolve(None, ccol) {
+        None => pool.parallel_for_chunks(op.n_second(), row_chunk, |r, _| unsafe {
+            let d1 = d1_ptr.get() as *const T;
+            let d = d_ptr.get();
+            for j in r {
+                let out = std::slice::from_raw_parts_mut(d.add(j * ccol), ccol);
+                kernels::spmm_row_ptr(op.a, j, d1, ccol, out);
+            }
+        }),
+        Some(w) => pool.parallel_for_chunks(op.n_second(), row_chunk, |r, _| unsafe {
+            let d1 = d1_ptr.get() as *const T;
+            let d = d_ptr.get();
+            let mut j0 = 0;
+            while j0 < ccol {
+                let wl = w.min(ccol - j0);
+                for j in r.clone() {
+                    let out = std::slice::from_raw_parts_mut(d.add(j * ccol + j0), wl);
+                    kernels::spmm_row_strip(op.a, j, d1.add(j0), ccol, 0, out);
+                }
+                j0 += wl;
+            }
+        }),
+    }
 }
 
 impl<T: Scalar> PairExec<T> for Unfused<'_, T> {
@@ -78,10 +122,10 @@ impl<T: Scalar> PairExec<T> for Unfused<'_, T> {
     }
 
     fn run(&mut self, pool: &ThreadPool, c: &Dense<T>, d: &mut Dense<T>) {
-        // run_unfused (re)sizes the workspace; swapping it out and back
-        // keeps the allocation across calls.
+        // run_unfused_striped (re)sizes the workspace; swapping it out
+        // and back keeps the allocation across calls.
         let mut d1 = std::mem::replace(&mut self.d1, Dense::zeros(0, 0));
-        run_unfused(&self.op, pool, c, &mut d1, d, self.row_chunk);
+        run_unfused_striped(&self.op, pool, c, &mut d1, d, self.row_chunk, self.strip);
         self.d1 = d1;
     }
 }
@@ -112,6 +156,28 @@ mod tests {
         let mut d2 = Dense::zeros(128, 8);
         ex2.run(&pool, &cs, &mut d2);
         assert!(d2.max_abs_diff(&reference(&spmm_op, &cs)) < 1e-10);
+    }
+
+    #[test]
+    fn strip_modes_do_not_change_result() {
+        use crate::exec::strip::StripMode;
+        use crate::kernels::JB;
+        let ccol = JB + 11;
+        let pat = gen::rmat(128, 6, gen::RmatKind::Mild, 9);
+        let a = Csr::<f64>::with_random_values(pat, 2, -1.0, 1.0);
+        let b = Dense::<f64>::randn(128, 8, 3);
+        let c = Dense::<f64>::randn(8, ccol, 4);
+        let op = PairOp::gemm_spmm(&a, &b);
+        let expect = reference(&op, &c);
+        let pool = ThreadPool::new(3);
+        let modes =
+            [StripMode::Full, StripMode::Width(1), StripMode::Width(JB), StripMode::Width(ccol + 1)];
+        for mode in modes {
+            let mut ex = Unfused::new(op).with_strip(mode);
+            let mut d = Dense::zeros(128, ccol);
+            ex.run(&pool, &c, &mut d);
+            assert!(d.max_abs_diff(&expect) < 1e-10, "{mode:?}");
+        }
     }
 
     #[test]

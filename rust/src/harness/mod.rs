@@ -10,11 +10,12 @@
 use crate::core::{Dense, Scalar};
 use crate::exec::chain::{chain_specs, ChainExec, ChainStepOp, StepStrategy};
 use crate::exec::{
-    AtomicTiling, Fused, Overlapped, PairExec, PairOp, TensorStyle, ThreadPool, Unfused,
+    AtomicTiling, Fused, Overlapped, PairExec, PairOp, StripMode, TensorStyle, ThreadPool,
+    Unfused,
 };
 use crate::profiling;
 use crate::scheduler::chain::{unfused_schedule, ChainPlanner};
-use crate::scheduler::{Scheduler, SchedulerParams};
+use crate::scheduler::{FusedSchedule, Scheduler, SchedulerParams};
 use crate::sparse::gen::{suite, MatrixClass, SuiteScale};
 use crate::sparse::Csr;
 use std::io::Write;
@@ -124,6 +125,24 @@ pub fn time_strategy<T: Scalar>(
             profiling::measure(1, reps, || ex.run(pool, c, &mut d))
         }
     }
+}
+
+/// Median time of the tile-fusion executor pinned to one strip mode
+/// over a prebuilt schedule — the `fig14` arms (`Auto` follows the
+/// schedule's model pick, `Full` is the pre-strip baseline, `Width` is
+/// what the autotuner times).
+pub fn time_fused_with_strip<T: Scalar>(
+    op: &PairOp<'_, T>,
+    plan: &FusedSchedule,
+    pool: &ThreadPool,
+    c: &Dense<T>,
+    reps: usize,
+    strip: StripMode,
+) -> Duration {
+    let ccol = op.layout.ccol(c);
+    let mut d = Dense::zeros(op.n_second(), ccol);
+    let mut ex = Fused::new(*op, plan).with_strip(strip);
+    profiling::measure(1, reps, || ex.run(pool, c, &mut d))
 }
 
 /// One suite-matrix measurement row.
@@ -357,6 +376,20 @@ mod tests {
         for s in [Strat::Fused, Strat::FusedStep1Only, Strat::Unfused, Strat::Atomic, Strat::Overlapped, Strat::TensorStyle] {
             let t = time_strategy(s, &op, &pool, &c, 1);
             assert!(t.as_nanos() > 0, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn time_fused_with_strip_smoke() {
+        let a = Csr::<f64>::with_random_values(crate::sparse::gen::poisson2d(10, 10), 1, -1.0, 1.0);
+        let b = Dense::<f64>::randn(100, 8, 2);
+        let c = Dense::<f64>::randn(8, 40, 3);
+        let op = PairOp::gemm_spmm(&a, &b);
+        let plan = Scheduler::new(bench_params::<f64>(2)).schedule_op(&op.fusion_op(&c));
+        let pool = ThreadPool::new(2);
+        for mode in [StripMode::Auto, StripMode::Full, StripMode::Width(32)] {
+            let t = time_fused_with_strip(&op, &plan, &pool, &c, 1, mode);
+            assert!(t.as_nanos() > 0, "{mode:?}");
         }
     }
 

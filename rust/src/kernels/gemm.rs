@@ -6,11 +6,8 @@
 //! is the "highly optimized GeMM BLAS" role of line 4–7 in Listing 1 —
 //! shared verbatim by fused and unfused executors.
 
+use super::JB;
 use crate::core::{Dense, Scalar};
-
-/// Output-register block width: 32 scalars = 4 AVX2 f64 / 8 SSE f32
-/// vectors — small enough to live in registers across the whole k-loop.
-const JB: usize = 32;
 
 /// `d1_row += b_row · C` for one row (accumulating; caller zeroes).
 ///
@@ -66,12 +63,45 @@ pub fn gemm_row<T: Scalar>(b_row: &[T], c: &Dense<T>, d1_row: &mut [T]) {
 
 /// Transpose-C variant (§4.2.1): `d1_row[j] = b_row · Cᵀ[:, j] = b_row · C[j, :]`
 /// — a dot-product per output, with `C` stored `ccol × bcol`.
+///
+/// Register-blocked with the same [`JB`]-wide accumulator scheme as
+/// [`gemm_row`]: each block streams `b_row` **once** for `JB` outputs
+/// (instead of once per output) with all `JB` partial dot products held
+/// in registers across the reduction (§Perf log #6 — the former 2-wide
+/// dot re-read `b_row` `ccol` times).
 #[inline]
 pub fn gemm_row_ct<T: Scalar>(b_row: &[T], c_t: &Dense<T>, d1_row: &mut [T]) {
-    debug_assert_eq!(b_row.len(), c_t.cols);
     debug_assert_eq!(d1_row.len(), c_t.rows);
-    for (j, out) in d1_row.iter_mut().enumerate() {
-        let cj = c_t.row(j);
+    gemm_row_ct_strip(b_row, c_t, 0, d1_row);
+}
+
+/// Window form of [`gemm_row_ct`]: outputs `j0..j0 + out.len()` only
+/// (reading rows `j0..` of the stored `ccol × bcol` matrix). Strip
+/// execution calls this per column strip; `gemm_row_ct` is the
+/// full-width instance (`j0 = 0`).
+#[inline]
+pub fn gemm_row_ct_strip<T: Scalar>(b_row: &[T], c_t: &Dense<T>, j0: usize, out: &mut [T]) {
+    debug_assert_eq!(b_row.len(), c_t.cols);
+    debug_assert!(j0 + out.len() <= c_t.rows);
+    let bcol = c_t.cols;
+    let w = out.len();
+    let mut j = 0;
+    while j + JB <= w {
+        let mut acc = [T::ZERO; JB];
+        let base = (j0 + j) * bcol;
+        for (k, &bk) in b_row.iter().enumerate() {
+            for x in 0..JB {
+                acc[x] += bk * c_t.data[base + x * bcol + k];
+            }
+        }
+        for x in 0..JB {
+            out[j + x] += acc[x];
+        }
+        j += JB;
+    }
+    // Remainder outputs: 2-wide unrolled dot products (tails are < JB).
+    for (x, o) in out[j..].iter_mut().enumerate() {
+        let cj = c_t.row(j0 + j + x);
         let mut acc0 = T::ZERO;
         let mut acc1 = T::ZERO;
         let mut k = 0;
@@ -83,7 +113,54 @@ pub fn gemm_row_ct<T: Scalar>(b_row: &[T], c_t: &Dense<T>, d1_row: &mut [T]) {
         if k < b_row.len() {
             acc0 += b_row[k] * cj[k];
         }
-        *out += acc0 + acc1;
+        *o += acc0 + acc1;
+    }
+}
+
+/// Pack columns `j0..j0 + w` of row-major `c` into a contiguous
+/// `c.rows × w` panel (`panel[k·w + x] = c[k][j0 + x]`), so a strip
+/// k-loop reads unit-stride memory — the BLIS-style B-panel buffer of
+/// column-strip execution.
+#[inline]
+pub fn pack_panel<T: Scalar>(c: &Dense<T>, j0: usize, w: usize, panel: &mut [T]) {
+    debug_assert!(j0 + w <= c.cols);
+    debug_assert!(panel.len() >= c.rows * w);
+    for k in 0..c.rows {
+        panel[k * w..(k + 1) * w].copy_from_slice(&c.row(k)[j0..j0 + w]);
+    }
+}
+
+/// Strip form of [`gemm_row`]: `out += b_row · panel`, where `panel` is
+/// the packed `b_row.len() × w` column window of `C` ([`pack_panel`]).
+/// Accumulating; caller zeroes. Same [`JB`] register blocking as the
+/// full-width kernel.
+#[inline]
+pub fn gemm_row_strip<T: Scalar>(b_row: &[T], panel: &[T], w: usize, out: &mut [T]) {
+    debug_assert!(panel.len() >= b_row.len() * w);
+    debug_assert_eq!(out.len(), w);
+    let mut j = 0;
+    while j + JB <= w {
+        let mut acc = [T::ZERO; JB];
+        for (k, &bk) in b_row.iter().enumerate() {
+            let ck = &panel[k * w + j..k * w + j + JB];
+            for x in 0..JB {
+                acc[x] += bk * ck[x];
+            }
+        }
+        let o = &mut out[j..j + JB];
+        for x in 0..JB {
+            o[x] += acc[x];
+        }
+        j += JB;
+    }
+    if j < w {
+        let rem = w - j;
+        for (k, &bk) in b_row.iter().enumerate() {
+            let ck = &panel[k * w + j..k * w + j + rem];
+            for x in 0..rem {
+                out[j + x] += bk * ck[x];
+            }
+        }
     }
 }
 
@@ -155,6 +232,48 @@ mod tests {
             gemm_row_ct(b.row(i), &ct, got.row_mut(i));
         }
         assert!(got.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn ct_register_block_path_matches() {
+        // ccol > JB so the JB-wide accumulator block runs (plus a tail).
+        let (bcol, ccol) = (13, JB + 7);
+        let b = Dense::<f64>::randn(3, bcol, 11);
+        let c = Dense::<f64>::randn(bcol, ccol, 12);
+        let ct = c.transpose();
+        let expect = naive(&b, &c);
+        let mut got = Dense::zeros(3, ccol);
+        for i in 0..3 {
+            gemm_row_ct(b.row(i), &ct, got.row_mut(i));
+        }
+        assert!(got.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn strip_kernels_match_full_width() {
+        let (bcol, ccol) = (9, 2 * JB + 5);
+        let b = Dense::<f64>::randn(4, bcol, 13);
+        let c = Dense::<f64>::randn(bcol, ccol, 14);
+        let ct = c.transpose();
+        let expect = naive(&b, &c);
+        for w in [1, JB - 1, JB, JB + 3, ccol, ccol + 10] {
+            let mut got = Dense::zeros(4, ccol);
+            let mut got_ct = Dense::zeros(4, ccol);
+            let mut panel = vec![0.0f64; bcol * w];
+            let mut j0 = 0;
+            while j0 < ccol {
+                let wl = w.min(ccol - j0);
+                pack_panel(&c, j0, wl, &mut panel);
+                for i in 0..4 {
+                    let out = &mut got.row_mut(i)[j0..j0 + wl];
+                    gemm_row_strip(b.row(i), &panel[..bcol * wl], wl, out);
+                    gemm_row_ct_strip(b.row(i), &ct, j0, &mut got_ct.row_mut(i)[j0..j0 + wl]);
+                }
+                j0 += wl;
+            }
+            assert!(got.max_abs_diff(&expect) < 1e-12, "w={w}");
+            assert!(got_ct.max_abs_diff(&expect) < 1e-12, "ct w={w}");
+        }
     }
 
     #[test]

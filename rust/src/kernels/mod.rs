@@ -8,10 +8,21 @@
 //! with the same set of optimizations").
 //!
 //! Kernels operate on raw row slices; executors own the (possibly
-//! concurrent) row decomposition.
+//! concurrent) row decomposition. Every kernel also has a *strip* form
+//! operating on a column window of the dense dimension — the building
+//! block of column-strip execution (`exec::strip`), where a tile's `D1`
+//! rows are only one strip wide and stay cache-resident between the
+//! producing and consuming operations.
 
 pub mod gemm;
 pub mod spmm;
 
-pub use gemm::{gemm_row, gemm_row_ct, gemm_rows};
-pub use spmm::{spmm_row, spmm_row_ptr, spmm_rows};
+pub use gemm::{gemm_row, gemm_row_ct, gemm_row_ct_strip, gemm_row_strip, gemm_rows, pack_panel};
+pub use spmm::{spmm_row, spmm_row_ptr, spmm_row_strip, spmm_rows};
+
+/// Output-register block width shared by every kernel: 32 scalars = 4
+/// AVX2 f64 / 8 SSE f32 vectors — small enough that a block of output
+/// accumulators lives in vector registers across an entire reduction.
+/// Column-strip widths are multiples of this so strip kernels never run
+/// on a sub-register-block tail except the final `ccol` remainder.
+pub const JB: usize = 32;

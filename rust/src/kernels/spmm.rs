@@ -5,11 +5,9 @@
 //! over `A.i[j2]` is the irregular access that tile fusion turns into a
 //! cache hit by keeping the producing `D1` rows resident.
 
+use super::JB;
 use crate::core::{Dense, Scalar};
 use crate::sparse::Csr;
-
-/// Output-register block width (mirrors `kernels::gemm`).
-const JB: usize = 32;
 
 /// `d_row = Σ a[j,k] · d1[k, :]` (overwrites `d_row`).
 #[inline]
@@ -30,28 +28,61 @@ pub fn spmm_row<T: Scalar>(a: &Csr<T>, j: usize, d1: &Dense<T>, d_row: &mut [T])
 #[inline]
 pub unsafe fn spmm_row_ptr<T: Scalar>(a: &Csr<T>, j: usize, d1: *const T, ccol: usize, d_row: &mut [T]) {
     debug_assert_eq!(d_row.len(), ccol);
+    spmm_row_strip(a, j, d1, ccol, 0, d_row);
+}
+
+/// Strip gather: `out[x] = Σ_k a[j, k] · d1[(k − i_base)·stride + x]`
+/// (overwrites `out`). One kernel serves every `D1` view the executors
+/// use:
+///
+/// - the full-width buffer ([`spmm_row_ptr`]: `stride = ccol`,
+///   `i_base = 0`, `out` a whole `D` row);
+/// - a column window of the full-width buffer (unfused strip execution:
+///   `stride = ccol`, `d1` pre-offset to the window, `out` a `D` row
+///   strip);
+/// - a per-thread tile strip workspace (fused strip execution:
+///   `stride = ` strip width, `i_base = tile.i_begin`, so workspace row
+///   0 is the tile's first `D1` row).
+///
+/// # Safety
+/// Every nonzero column `k` of `A`'s row `j` must satisfy
+/// `k >= i_base`, and `d1` must be valid for reads of
+/// `(k − i_base)·stride .. +out.len()` for each such `k`, with those
+/// elements fully written and no longer mutated.
+#[inline]
+pub unsafe fn spmm_row_strip<T: Scalar>(
+    a: &Csr<T>,
+    j: usize,
+    d1: *const T,
+    stride: usize,
+    i_base: usize,
+    out: &mut [T],
+) {
+    let w = out.len();
     let (cols, vals) = a.row(j);
     let mut x0 = 0;
-    while x0 + JB <= ccol {
+    while x0 + JB <= w {
         let mut acc = [T::ZERO; JB];
         for (&k, &v) in cols.iter().zip(vals) {
-            let src = std::slice::from_raw_parts(d1.add(k as usize * ccol + x0), JB);
+            let src =
+                std::slice::from_raw_parts(d1.add((k as usize - i_base) * stride + x0), JB);
             for x in 0..JB {
                 acc[x] += v * src[x];
             }
         }
-        d_row[x0..x0 + JB].copy_from_slice(&acc);
+        out[x0..x0 + JB].copy_from_slice(&acc);
         x0 += JB;
     }
-    if x0 < ccol {
-        let rem = ccol - x0;
-        for v in &mut d_row[x0..] {
+    if x0 < w {
+        let rem = w - x0;
+        for v in &mut out[x0..] {
             *v = T::ZERO;
         }
         for (&k, &v) in cols.iter().zip(vals) {
-            let src = std::slice::from_raw_parts(d1.add(k as usize * ccol + x0), rem);
+            let src =
+                std::slice::from_raw_parts(d1.add((k as usize - i_base) * stride + x0), rem);
             for x in 0..rem {
-                d_row[x0 + x] += v * src[x];
+                out[x0 + x] += v * src[x];
             }
         }
     }
@@ -122,6 +153,66 @@ mod tests {
         let rows: Vec<u32> = (0..64).collect();
         unsafe { spmm_rows(&a, &rows, d1.data.as_ptr(), raw.data.as_mut_ptr(), 16) };
         assert_eq!(safe, raw);
+    }
+
+    #[test]
+    fn strip_gather_matches_full_width() {
+        // Strips of the full-width D1 (stride = ccol, window offset)
+        // reassemble to the full-width kernel's output.
+        let ccol = 2 * JB + 9;
+        let p = gen::rmat(64, 6, gen::RmatKind::Graph500, 7);
+        let a = Csr::<f64>::with_random_values(p, 3, -1.0, 1.0);
+        let d1 = Dense::<f64>::randn(64, ccol, 8);
+        let mut full = Dense::zeros(64, ccol);
+        for j in 0..64 {
+            spmm_row(&a, j, &d1, full.row_mut(j));
+        }
+        for w in [1, JB, JB + 5, ccol] {
+            let mut got = Dense::zeros(64, ccol);
+            for j in 0..64 {
+                let mut j0 = 0;
+                while j0 < ccol {
+                    let wl = w.min(ccol - j0);
+                    unsafe {
+                        spmm_row_strip(
+                            &a,
+                            j,
+                            d1.data.as_ptr().add(j0),
+                            ccol,
+                            0,
+                            &mut got.row_mut(j)[j0..j0 + wl],
+                        );
+                    }
+                    j0 += wl;
+                }
+            }
+            assert_eq!(got, full, "w={w}");
+        }
+    }
+
+    #[test]
+    fn strip_gather_rebased_workspace() {
+        // Tile-workspace view: rows re-indexed from i_base with the
+        // strip width as the stride.
+        let p = gen::banded(16, &[1]);
+        let a = Csr::<f64>::with_random_values(p, 5, -1.0, 1.0);
+        let w = 3;
+        // "Workspace" holding rows 4..12 of a virtual D1, strip width 3.
+        let (lo, hi) = (4usize, 12usize);
+        let ws: Vec<f64> = (0..(hi - lo) * w).map(|x| x as f64 * 0.25 - 1.0).collect();
+        // Row j=8 of banded(16,[1]) depends on rows 7..=9, all in 4..12.
+        let mut out = vec![0.0; w];
+        unsafe { spmm_row_strip(&a, 8, ws.as_ptr(), w, lo, &mut out) };
+        let (cols, vals) = a.row(8);
+        let mut expect = vec![0.0; w];
+        for (&k, &v) in cols.iter().zip(vals) {
+            for x in 0..w {
+                expect[x] += v * ws[(k as usize - lo) * w + x];
+            }
+        }
+        for x in 0..w {
+            assert!((out[x] - expect[x]).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -27,21 +27,34 @@
 //! - [`sparse`]   — CSR/CSC/COO, Matrix Market I/O, synthetic matrix suite
 //!                  (the SuiteSparse substitute).
 //! - [`dag`]      — iteration-dependence view of `A`'s pattern.
-//! - [`scheduler`]— Algorithm 1: coarse fusion, cost model, splitting;
+//! - [`scheduler`]— Algorithm 1: coarse fusion, cost model, splitting —
+//!                  plus column-strip selection: at GNN-scale dense
+//!                  widths the cost model picks the widest cache-fitting
+//!                  strip (`FusedSchedule::strip_width`) and sizes tiles
+//!                  for it instead of demoting fused rows;
 //!                  [`scheduler::chain`] plans whole multiplication
 //!                  chains with pattern-deduplicated schedules.
-//! - [`kernels`]  — blocked GeMM microkernel and CSR SpMM row kernels.
+//! - [`kernels`]  — blocked GeMM microkernel and CSR SpMM row kernels,
+//!                  each with a column-strip form ([`kernels::JB`] is
+//!                  the shared register-block width strips align to).
 //! - [`exec`]     — thread pool + the five pair executors (tile-fused,
 //!                  unfused, atomic tiling, overlapped tiling,
 //!                  tensor-compiler style) and [`exec::chain`]: the
 //!                  chain executor (one pool, ping-pong intermediates,
-//!                  per-step strategy).
+//!                  per-step strategy). [`exec::strip`] runs fused tiles
+//!                  strip-by-strip through per-thread workspaces
+//!                  ([`StripMode`](exec::StripMode) selects the width).
+//! - [`tuning`]   — runtime strip-width autotuner: times 2–3 candidate
+//!                  widths around the model's pick on first execution of
+//!                  a (pattern, shape, precision) key; the coordinator
+//!                  caches the winner alongside the schedule.
 //! - [`cachesim`] — set-associative LRU cache-hierarchy simulator (the
 //!                  PAPI substitute) for the AMT study.
 //! - [`simcore`]  — multicore execution model (potential gain, scaling).
 //! - [`profiling`]— FLOP accounting, timers, statistics.
-//! - [`coordinator`] — service layer: schedule cache keyed by sparsity
-//!                  pattern, pair and whole-chain requests
+//! - [`coordinator`] — service layer: LRU-bounded schedule cache keyed
+//!                  by sparsity pattern (tuned strip widths ride each
+//!                  entry), pair and whole-chain requests
 //!                  (`ChainRequest`), batching, metrics.
 //! - [`runtime`]  — PJRT/XLA loader for AOT artifacts (the JAX/Pallas GCN).
 //! - [`gnn`]      — GCN forward/backward; the forward runs the whole
@@ -70,6 +83,16 @@
 //! let mut d = Dense::zeros(a.rows(), ccol);
 //! exec.run(&pool, &c, &mut d);
 //! ```
+//!
+//! At GNN-scale dense widths the schedule carries a column-strip width
+//! (`plan.strip_width`) and the executor follows it automatically
+//! ([`StripMode::Auto`](exec::StripMode)); force an arm explicitly with
+//! `Fused::new(op, &plan).with_strip(StripMode::Full)` (the pre-strip
+//! baseline) or `StripMode::Width(w)` (what the
+//! [`tuning::StripTuner`] does while timing candidates). Requests
+//! through the [`coordinator`] get this for free: the first execution
+//! of a (pattern, shape, precision) key autotunes the strip width and
+//! caches the pick alongside the schedule.
 //!
 //! ## Chains
 //!
@@ -114,13 +137,14 @@ pub mod scheduler;
 pub mod simcore;
 pub mod sparse;
 pub mod testing;
+pub mod tuning;
 
 /// Convenience re-exports for the common flows.
 pub mod prelude {
     pub use crate::core::{Dense, Scalar};
     pub use crate::exec::{
         chain_specs, AtomicTiling, CLayout, ChainExec, ChainStepOp, FirstOp, Fused, Overlapped,
-        PairExec, PairOp, StepStrategy, TensorStyle, ThreadPool, Unfused,
+        PairExec, PairOp, StepStrategy, StripMode, TensorStyle, ThreadPool, Unfused,
     };
     pub use crate::scheduler::{
         BSide, ChainFlow, ChainPlan, ChainPlanner, ChainStepSpec, FusedSchedule, FusionOp,

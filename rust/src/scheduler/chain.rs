@@ -150,7 +150,13 @@ pub fn unfused_schedule(a: &crate::sparse::Pattern, n_cores: usize) -> FusedSche
         build_ns: t0.elapsed().as_nanos() as u64,
         ..Default::default()
     };
-    FusedSchedule { wavefronts: [wf0, wf1], n_first: a.cols, n_second: a.rows, stats }
+    FusedSchedule {
+        wavefronts: [wf0, wf1],
+        n_first: a.cols,
+        n_second: a.rows,
+        strip_width: None,
+        stats,
+    }
 }
 
 /// Plans chains with one scheduler parameterization.

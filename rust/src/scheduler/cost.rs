@@ -21,11 +21,19 @@ use crate::scheduler::schedule::Tile;
 
 /// Reusable cost evaluator; the stamp array makes `uc` O(nnz in tile)
 /// across arbitrarily many queries without reallocation.
+///
+/// The evaluator carries an *evaluation width* (`set_eval_width`): when
+/// the executor will run `w`-column strips, a tile's working set is the
+/// Eq.-3 element count times `w` instead of the full `ccol` — the strip
+/// residency the column-strip executors provide. Index traffic is
+/// width-independent (each strip re-walks the CSR structure, but the
+/// per-strip resident set still only holds it once).
 pub struct CostModel<'a> {
     op: &'a FusionOp<'a>,
     elem_bytes: usize,
     stamp: Vec<u32>,
     epoch: u32,
+    eval_width: Option<usize>,
 }
 
 const IDX_BYTES: usize = 4; // u32 column indices
@@ -33,11 +41,33 @@ const IDX_BYTES: usize = 4; // u32 column indices
 impl<'a> CostModel<'a> {
     pub fn new(op: &'a FusionOp<'a>, elem_bytes: usize) -> Self {
         let stamp_len = op.a.cols.max(op.b_cols_dim());
-        Self { op, elem_bytes, stamp: vec![0; stamp_len], epoch: 0 }
+        Self { op, elem_bytes, stamp: vec![0; stamp_len], epoch: 0, eval_width: None }
     }
 
-    /// Eq. 3 in bytes for one tile.
+    /// Evaluate subsequent [`CostModel::tile_cost`] calls at a strip
+    /// width (`None` = full `ccol`, the default).
+    pub fn set_eval_width(&mut self, width: Option<usize>) {
+        self.eval_width = width;
+    }
+
+    /// Eq. 3 in bytes for one tile, at the current evaluation width.
     pub fn tile_cost(&mut self, tile: &Tile) -> usize {
+        let w = self.eval_width.unwrap_or(self.op.ccol).min(self.op.ccol);
+        self.tile_cost_at(tile, w)
+    }
+
+    /// Eq. 3 in bytes for one tile as if executed at dense width
+    /// `width` (ignores the ambient evaluation width).
+    pub fn tile_cost_at(&mut self, tile: &Tile, width: usize) -> usize {
+        let (elems, idx_bytes) = self.tile_cost_parts(tile);
+        elems * width * self.elem_bytes + idx_bytes
+    }
+
+    /// Eq. 3 split into its width-affine parts: `(element units that
+    /// scale with the dense column width, index bytes that do not)` —
+    /// `cost(w) = elems · w · elem_bytes + idx_bytes`. The strip picker
+    /// evaluates many candidate widths from one traversal.
+    pub fn tile_cost_parts(&mut self, tile: &Tile) -> (usize, usize) {
         self.epoch = self.epoch.wrapping_add(1);
         if self.epoch == 0 {
             self.stamp.iter_mut().for_each(|s| *s = 0);
@@ -46,7 +76,6 @@ impl<'a> CostModel<'a> {
         let a = self.op.a;
         let t_len = tile.i_len();
         let j_len = tile.j_len();
-        let ccol = self.op.ccol;
 
         // nz from A rows fused into the tile, counting unique columns.
         let mut nz_a = 0usize;
@@ -74,8 +103,7 @@ impl<'a> CostModel<'a> {
         };
 
         let idx_a = nz_a + j_len + 1;
-        let elems = (nz_a + nz_b + uc + t_len + j_len) * ccol;
-        elems * self.elem_bytes + (idx_a + idx_b) * IDX_BYTES
+        (nz_a + nz_b + uc + t_len + j_len, (idx_a + idx_b) * IDX_BYTES)
     }
 
     /// Unique columns referenced by a set of `A` rows (exposed for the
@@ -141,6 +169,27 @@ mod tests {
         assert_eq!(cm.unique_cols(&[0, 1]), 3); // {0,1,2}
         assert_eq!(cm.unique_cols(&[0]), 2);
         assert_eq!(cm.unique_cols(&[1]), 2);
+    }
+
+    #[test]
+    fn eval_width_scales_element_term_only() {
+        let a = Pattern::eye(4);
+        let op = op_dense(&a, 8, 2);
+        let mut cm = CostModel::new(&op, 8);
+        let tile = Tile::new(0, 4, vec![0, 1, 2, 3]);
+        // Full width (2): elems=48 units -> 96 scaled; see
+        // dense_b_cost_components. At width 1 the element term halves,
+        // the index term does not.
+        assert_eq!(cm.tile_cost_at(&tile, 2), 804);
+        assert_eq!(cm.tile_cost_at(&tile, 1), 48 * 8 + 9 * 4);
+        let (elems, idx) = cm.tile_cost_parts(&tile);
+        assert_eq!((elems, idx), (48, 36));
+        cm.set_eval_width(Some(1));
+        assert_eq!(cm.tile_cost(&tile), 48 * 8 + 36);
+        cm.set_eval_width(Some(100)); // clamped to ccol
+        assert_eq!(cm.tile_cost(&tile), 804);
+        cm.set_eval_width(None);
+        assert_eq!(cm.tile_cost(&tile), 804);
     }
 
     #[test]

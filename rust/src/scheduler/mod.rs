@@ -166,9 +166,22 @@ impl Scheduler {
         self.schedule_op(&FusionOp { a, b: BSide::Sparse(b), ccol })
     }
 
-    /// Full Algorithm 1: step 1 (coarse fusion) then step 2 (cost-model
-    /// splitting), returning the validated two-wavefront schedule.
+    /// Full Algorithm 1: step 1 (coarse fusion), strip-width selection,
+    /// then step 2 (cost-model splitting at the execution width),
+    /// returning the validated two-wavefront schedule.
     pub fn schedule_op(&self, op: &FusionOp) -> FusedSchedule {
+        self.schedule_op_impl(op, true)
+    }
+
+    /// Algorithm 1 with strip selection disabled — the pre-strip
+    /// baseline (the `fused_full` bench arm): wavefront-0 tiles split
+    /// and demote to fit `cacheSize` at the full dense width, and
+    /// `strip_width` is always `None`.
+    pub fn schedule_op_full_width(&self, op: &FusionOp) -> FusedSchedule {
+        self.schedule_op_impl(op, false)
+    }
+
+    fn schedule_op_impl(&self, op: &FusionOp, allow_strips: bool) -> FusedSchedule {
         let t0 = Instant::now();
         let p = self.params;
         let g = IterDag::new(op.a);
@@ -176,9 +189,22 @@ impl Scheduler {
         // -- Step 1: coarse tile fusion --------------------------------
         let cf = coarse::coarse_fuse(&g, p.n_cores, p.ct_size);
 
-        // -- Step 2: fused tile splitting ------------------------------
+        // -- Strip selection -------------------------------------------
+        // Pick the widest column strip whose worst *coarse* tile fits
+        // the budget, before splitting: at GNN-scale ccol, splitting at
+        // full width can only demote (a single first-op row already
+        // overflows), while strip execution keeps those rows fused.
         let mut cm = cost::CostModel::new(op, p.elem_bytes);
         let budget = p.cache_bytes;
+        let strip = if allow_strips {
+            pick_strip_width(&mut cm, &cf.wf0, op.ccol, budget, p.elem_bytes)
+        } else {
+            None
+        };
+
+        // -- Step 2: fused tile splitting ------------------------------
+        // Wavefront 0 executes at the strip width; split to fit there.
+        cm.set_eval_width(strip);
         let mut wf0 = Vec::with_capacity(cf.wf0.len());
         let mut leftover = cf.leftover_j;
         let mut demoted = 0usize;
@@ -192,6 +218,9 @@ impl Scheduler {
         // (The paper balances inside step 1; doing it after step-2
         // demotion keeps the second wavefront balanced *including* the
         // demoted iterations — same constraint, strictly better balance.)
+        // Wavefront-1 gathers span tiles, so it executes — and is
+        // costed — at full width.
+        cm.set_eval_width(None);
         leftover.sort_unstable();
         let wf1_coarse = coarse::balance(&g, leftover, cf.tile_size, p.n_cores);
         let mut wf1 = Vec::with_capacity(wf1_coarse.len());
@@ -200,18 +229,18 @@ impl Scheduler {
         }
 
         // -- Statistics -------------------------------------------------
-        let max_tile_cost = wf0
-            .iter()
-            .chain(wf1.iter())
-            .map(|t| cm.tile_cost(t))
-            .max()
-            .unwrap_or(0);
+        // max_tile_cost is the *execution* working set: wavefront 0 at
+        // the strip width, wavefront 1 at full width.
+        cm.set_eval_width(strip);
+        let max_wf0 = wf0.iter().map(|t| cm.tile_cost(t)).max().unwrap_or(0);
+        cm.set_eval_width(None);
+        let max_wf1 = wf1.iter().map(|t| cm.tile_cost(t)).max().unwrap_or(0);
         let stats = ScheduleStats {
             fused_ratio: fused_iter_ratio(&wf0, &g),
             fused_flop_ratio: reuse_flop_ratio(&wf0, op),
             n_tiles: [wf0.len(), wf1.len()],
             coarse_tile_size: cf.tile_size,
-            max_tile_cost,
+            max_tile_cost: max_wf0.max(max_wf1),
             demoted_by_split: demoted,
             build_ns: t0.elapsed().as_nanos() as u64,
         };
@@ -220,6 +249,7 @@ impl Scheduler {
             wavefronts: [wf0, wf1],
             n_first: g.n_first(),
             n_second: g.n_second(),
+            strip_width: strip,
             stats,
         }
     }
@@ -248,9 +278,49 @@ impl Scheduler {
             wavefronts: [wf0, wf1],
             n_first: g.n_first(),
             n_second: g.n_second(),
+            // Step-1-only is the no-cost-model ablation arm (Fig. 9):
+            // no strip selection either, or the arm stops isolating
+            // step 2.
+            strip_width: None,
             stats,
         }
     }
+}
+
+/// Largest execution strip width (a multiple of [`crate::kernels::JB`])
+/// whose worst coarse-tile Eq.-3 cost fits `budget` — or `None` when
+/// full width already fits (no striping needed) or the dense width is
+/// at most one register block (nothing to strip). Falls back to one
+/// register block when even that overflows: narrower strips would
+/// defeat vectorization, and step-2 splitting picks up the rest.
+///
+/// Cost is affine in the width (`elems · w · elem_bytes + idx`), so one
+/// `tile_cost_parts` traversal per tile serves every candidate width.
+fn pick_strip_width(
+    cm: &mut cost::CostModel,
+    coarse_wf0: &[Tile],
+    ccol: usize,
+    budget: usize,
+    elem_bytes: usize,
+) -> Option<usize> {
+    use crate::kernels::JB;
+    if ccol <= JB {
+        return None;
+    }
+    let parts: Vec<(usize, usize)> = coarse_wf0.iter().map(|t| cm.tile_cost_parts(t)).collect();
+    let fits = |w: usize| parts.iter().all(|&(elems, idx)| elems * w * elem_bytes + idx <= budget);
+    if fits(ccol) {
+        return None;
+    }
+    // Widest JB multiple strictly below ccol, descending.
+    let mut w = (ccol - 1) / JB * JB;
+    while w > JB {
+        if fits(w) {
+            return Some(w);
+        }
+        w -= JB;
+    }
+    Some(JB)
 }
 
 /// Eq. 2 over a wavefront-0 tile set.
@@ -387,6 +457,66 @@ mod tests {
             prev = s.stats.fused_ratio;
         }
         assert!(prev > 0.45);
+    }
+
+    #[test]
+    fn strip_selection_regimes() {
+        use crate::kernels::JB;
+        let a = gen::poisson2d(32, 32);
+        let mut p = params_small();
+
+        // Narrow dense width: nothing to strip.
+        let s = Scheduler::new(p).schedule(&a, 32, JB);
+        assert_eq!(s.strip_width, None);
+
+        // Huge cache: full width fits, no striping.
+        p.cache_bytes = usize::MAX;
+        let s = Scheduler::new(p).schedule(&a, 64, 4 * JB);
+        assert_eq!(s.strip_width, None);
+
+        // GNN-scale ccol with a small budget: strips activate, width a
+        // JB multiple below ccol, and the execution working set
+        // (stats.max_tile_cost) respects the budget.
+        p.cache_bytes = 256 * 1024;
+        let ccol = 8 * JB;
+        let s = Scheduler::new(p).schedule(&a, 64, ccol);
+        s.validate(&a);
+        let w = s.strip_width.expect("large ccol must trigger strips");
+        assert!(w >= JB && w < ccol && w % JB == 0, "w={w}");
+        assert!(
+            s.stats.max_tile_cost <= p.cache_bytes,
+            "execution cost {} exceeds budget",
+            s.stats.max_tile_cost
+        );
+    }
+
+    #[test]
+    fn strips_preserve_fusion_where_full_width_demotes() {
+        // At large ccol, full-width splitting can only demote fused
+        // rows (even one first-op row overflows); strip scheduling
+        // keeps them fused. This is the Fig. 4 regime the strip layer
+        // targets.
+        let a = gen::banded(2048, &[1, 2]);
+        let p = SchedulerParams {
+            n_cores: 4,
+            cache_bytes: 128 * 1024,
+            elem_bytes: 8,
+            ct_size: 256,
+            max_split_depth: 24,
+        };
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 32 }, ccol: 256 };
+        let striped = Scheduler::new(p).schedule_op(&op);
+        let full = Scheduler::new(p).schedule_op_full_width(&op);
+        striped.validate(&a);
+        full.validate(&a);
+        assert!(striped.strip_width.is_some());
+        assert_eq!(full.strip_width, None);
+        assert!(
+            striped.stats.fused_ratio > full.stats.fused_ratio,
+            "striped {} vs full {}",
+            striped.stats.fused_ratio,
+            full.stats.fused_ratio
+        );
     }
 
     #[test]

@@ -77,6 +77,13 @@ pub struct FusedSchedule {
     pub wavefronts: [Vec<Tile>; 2],
     pub n_first: usize,
     pub n_second: usize,
+    /// Column-strip width the cost model sized wavefront-0 tiles for:
+    /// `Some(w)` when full-width tiles overflow `cacheSize` but
+    /// `w`-column strips fit (a multiple of `kernels::JB`), `None` for
+    /// full-width execution. Executors follow it under
+    /// `StripMode::Auto`; the wavefront-0 splitting that produced the
+    /// tiles evaluated Eq. 3 at this width.
+    pub strip_width: Option<usize>,
     pub stats: ScheduleStats,
 }
 
@@ -166,6 +173,7 @@ mod tests {
             ],
             n_first: 4,
             n_second: 4,
+            strip_width: None,
             stats: ScheduleStats::default(),
         };
         s.validate(&a);
@@ -184,6 +192,7 @@ mod tests {
             ],
             n_first: 2,
             n_second: 2,
+            strip_width: None,
             stats: ScheduleStats::default(),
         };
         s.validate(&a);
@@ -197,6 +206,7 @@ mod tests {
             wavefronts: [vec![Tile::new(0, 2, vec![0])], vec![]],
             n_first: 2,
             n_second: 2,
+            strip_width: None,
             stats: ScheduleStats::default(),
         };
         s.validate(&a);

@@ -1,0 +1,174 @@
+//! Runtime strip-width autotuning.
+//!
+//! The Eq.-3 cost model picks a strip width analytically
+//! (`scheduler::cost`), but the model deliberately simplifies — it
+//! scales every term by the dense width, while the real executor
+//! re-reads `B` rows per strip and re-walks CSR indices per strip — so
+//! the best width on a given machine can sit a step away from the
+//! model's pick. The [`StripTuner`] closes that gap empirically: on
+//! first execution of a (pattern, shape, element-width) key the
+//! coordinator times the 2–3 [`strip_candidates`] around the model's
+//! pick and caches the winner in its `ScheduleCache` alongside the
+//! schedule, so every later request (pair or chain step) replays the
+//! tuned pick with zero additional timing.
+//!
+//! Determinism: candidate enumeration is a pure function of the model
+//! pick, tie-breaks go to the earlier candidate, and the measurement
+//! hook is injectable ([`StripTuner::pick_with`]) — under a
+//! deterministic measure the winner replays identically, which the
+//! `TF_PROP_SEED` property suite pins down.
+
+use crate::exec::StripMode;
+use crate::kernels::JB;
+use std::time::{Duration, Instant};
+
+/// The 2–3 candidate strip widths around the cost model's pick: the
+/// pick itself, one narrower step (half, rounded down to a [`JB`]
+/// multiple), and one wider step (double, or full width when doubling
+/// leaves the strip regime). A full-width model pick returns just
+/// `[Full]` — the model found the whole working set cache-resident, so
+/// there is nothing to time (and the tuner selects full width at small
+/// `ccol` by construction).
+pub fn strip_candidates(model_pick: Option<usize>, ccol: usize) -> Vec<StripMode> {
+    let Some(w) = model_pick else {
+        return vec![StripMode::Full];
+    };
+    let w = w.min(ccol);
+    let mut out = vec![StripMode::Width(w)];
+    let half = w / 2 / JB * JB;
+    if half >= JB && half < w {
+        out.push(StripMode::Width(half));
+    }
+    let twice = 2 * w;
+    if twice < ccol {
+        out.push(StripMode::Width(twice));
+    } else {
+        out.push(StripMode::Full);
+    }
+    out
+}
+
+/// Everything a tuning run observed, for logs and tests.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub winner: StripMode,
+    /// `(candidate, measured time)` in candidate order.
+    pub timings: Vec<(StripMode, Duration)>,
+}
+
+/// Times strip-width candidates and picks the fastest.
+#[derive(Clone, Copy, Debug)]
+pub struct StripTuner {
+    /// Timed repetitions per candidate (after one warm-up run of the
+    /// first candidate to fault in workspaces).
+    pub reps: usize,
+}
+
+impl Default for StripTuner {
+    fn default() -> Self {
+        Self { reps: 2 }
+    }
+}
+
+impl StripTuner {
+    /// Time every candidate by wall clock (`run` executes the pair once
+    /// at the given mode) and return the fastest mode.
+    pub fn pick(&self, candidates: &[StripMode], mut run: impl FnMut(&StripMode)) -> StripMode {
+        if candidates.len() == 1 {
+            return candidates[0];
+        }
+        let reps = self.reps.max(1);
+        self.pick_with(candidates, |mode| {
+            // Per-candidate warm-up: workspaces are sized per strip
+            // width, so every candidate (not just the first) must fault
+            // in its own buffers outside the timed window or wider
+            // widths get charged first-touch costs and lose unfairly.
+            run(mode);
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                run(mode);
+            }
+            t0.elapsed()
+        })
+        .winner
+    }
+
+    /// Core selection with an injectable measurement (tests substitute
+    /// a deterministic one). Ties resolve to the earliest candidate, so
+    /// identical measurements always replay the identical winner.
+    pub fn pick_with(
+        &self,
+        candidates: &[StripMode],
+        mut measure: impl FnMut(&StripMode) -> Duration,
+    ) -> TuneOutcome {
+        assert!(!candidates.is_empty(), "tuner needs at least one candidate");
+        let timings: Vec<(StripMode, Duration)> =
+            candidates.iter().map(|m| (*m, measure(m))).collect();
+        let winner = timings
+            .iter()
+            .min_by_key(|(_, t)| *t)
+            .map(|(m, _)| *m)
+            .expect("non-empty timings");
+        TuneOutcome { winner, timings }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_full_pick_is_singleton() {
+        assert_eq!(strip_candidates(None, 1024), vec![StripMode::Full]);
+        assert_eq!(strip_candidates(None, 8), vec![StripMode::Full]);
+    }
+
+    #[test]
+    fn candidates_bracket_the_model_pick() {
+        // Interior pick: narrower and wider steps both present.
+        let c = strip_candidates(Some(2 * JB), 8 * JB);
+        assert_eq!(
+            c,
+            vec![StripMode::Width(2 * JB), StripMode::Width(JB), StripMode::Width(4 * JB)]
+        );
+        // Minimal pick: no narrower step.
+        let c = strip_candidates(Some(JB), 8 * JB);
+        assert_eq!(c, vec![StripMode::Width(JB), StripMode::Width(2 * JB)]);
+        // Pick near full: the wider step is Full.
+        let c = strip_candidates(Some(4 * JB), 8 * JB);
+        assert_eq!(
+            c,
+            vec![StripMode::Width(4 * JB), StripMode::Width(2 * JB), StripMode::Full]
+        );
+        assert!((2..=3).contains(&strip_candidates(Some(3 * JB), 1000).len()));
+    }
+
+    #[test]
+    fn pick_with_selects_fastest_and_breaks_ties_first() {
+        let cands = strip_candidates(Some(2 * JB), 8 * JB);
+        let tuner = StripTuner::default();
+        let out = tuner.pick_with(&cands, |m| match m {
+            StripMode::Width(w) if *w == JB => Duration::from_micros(5),
+            _ => Duration::from_micros(9),
+        });
+        assert_eq!(out.winner, StripMode::Width(JB));
+        assert_eq!(out.timings.len(), cands.len());
+        // All-equal timings: the first candidate (the model pick) wins.
+        let out = tuner.pick_with(&cands, |_| Duration::from_micros(7));
+        assert_eq!(out.winner, cands[0]);
+    }
+
+    #[test]
+    fn pick_runs_every_candidate() {
+        let cands = strip_candidates(Some(2 * JB), 8 * JB);
+        let mut seen = Vec::new();
+        let winner = StripTuner { reps: 1 }.pick(&cands, |m| seen.push(*m));
+        // One warm-up + one timed rep per candidate.
+        assert_eq!(seen.len(), 2 * cands.len());
+        assert!(cands.contains(&winner));
+        // Single candidate short-circuits without running at all.
+        let mut calls = 0;
+        let w = StripTuner::default().pick(&[StripMode::Full], |_| calls += 1);
+        assert_eq!((w, calls), (StripMode::Full, 0));
+    }
+}

@@ -13,6 +13,7 @@ use common::{f32_tol, random_params, random_pattern};
 use std::sync::Arc;
 use tile_fusion::exec::chain::{ChainExec, ChainStepOp};
 use tile_fusion::exec::reference::reference;
+use tile_fusion::kernels::JB;
 use tile_fusion::prelude::*;
 use tile_fusion::testing::{check_prop, XorShift64};
 
@@ -108,6 +109,113 @@ fn conformance_spmm_spmm_f32() {
         // Two chained reductions (B then A): scale the tolerance by both.
         let tol = f32_tol(&a.pattern, a.pattern.avg_row_nnz().ceil() as usize + 1) * 10.0;
         check_pair_executors(rng, op, &plan, &c, &expect, tol, false);
+    });
+}
+
+/// The strip-capable executors (tile fusion, unfused, and — below —
+/// the chain executor) swept across strip ∈ {JB, 2·JB, full} against
+/// the oracle. `ccol` straddles multiple strips with a non-JB-multiple
+/// tail, and the schedule's own `strip_width` pick (whatever the random
+/// cache budget produced) rides along via `StripMode::Auto`.
+fn check_strip_sweep<T: Scalar>(
+    rng: &mut XorShift64,
+    op: PairOp<'_, T>,
+    plan: &tile_fusion::scheduler::FusedSchedule,
+    c: &Dense<T>,
+    expect: &Dense<T>,
+    tol: f64,
+) {
+    let pool = ThreadPool::new(1 + rng.next_range(4));
+    let ccol = op.layout.ccol(c);
+    let mut d = Dense::zeros(op.n_second(), ccol);
+    for mode in [StripMode::Width(JB), StripMode::Width(2 * JB), StripMode::Full, StripMode::Auto]
+    {
+        d.fill_zero();
+        let mut fused = Fused::new(op, plan).with_strip(mode);
+        fused.run(&pool, c, &mut d);
+        let diff = d.max_abs_diff(expect);
+        assert!(diff < tol, "tile_fusion {mode:?} diverged: {diff:.3e} > {tol:.3e}");
+
+        d.fill_zero();
+        let mut unfused = Unfused::new(op).with_strip(mode);
+        unfused.run(&pool, c, &mut d);
+        let diff = d.max_abs_diff(expect);
+        assert!(diff < tol, "unfused {mode:?} diverged: {diff:.3e} > {tol:.3e}");
+    }
+}
+
+#[test]
+fn conformance_strip_width_sweep_f64() {
+    check_prop("conformance-strip-sweep-f64", 12, |rng| {
+        let pat = random_pattern(rng);
+        let a = Csr::<f64>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+        let bcol = 1 + rng.next_range(16);
+        let ccol = JB + 1 + rng.next_range(2 * JB + 8);
+        let params = random_params(rng);
+        // GeMM-SpMM.
+        let b = Dense::<f64>::randn(a.cols(), bcol, rng.next_u64());
+        let c = Dense::<f64>::randn(bcol, ccol, rng.next_u64());
+        let op = PairOp::gemm_spmm(&a, &b);
+        let plan = Scheduler::new(params).schedule(&a.pattern, bcol, ccol);
+        check_strip_sweep(rng, op, &plan, &c, &reference(&op, &c), 1e-9);
+        // SpMM-SpMM.
+        let cs = Dense::<f64>::randn(a.cols(), ccol, rng.next_u64());
+        let op = PairOp::spmm_spmm(&a, &a);
+        let plan = Scheduler::new(params).schedule_sparse(&a.pattern, &a.pattern, ccol);
+        check_strip_sweep(rng, op, &plan, &cs, &reference(&op, &cs), 1e-9);
+    });
+}
+
+#[test]
+fn conformance_strip_width_sweep_f32() {
+    check_prop("conformance-strip-sweep-f32", 8, |rng| {
+        let pat = random_pattern(rng);
+        let a = Csr::<f32>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+        let bcol = 1 + rng.next_range(12);
+        let ccol = JB + 1 + rng.next_range(2 * JB);
+        let b = Dense::<f32>::randn(a.cols(), bcol, rng.next_u64());
+        let c = Dense::<f32>::randn(bcol, ccol, rng.next_u64());
+        let op = PairOp::gemm_spmm(&a, &b);
+        let plan = Scheduler::new(random_params(rng)).schedule(&a.pattern, bcol, ccol);
+        let tol = f32_tol(&a.pattern, bcol);
+        check_strip_sweep(rng, op, &plan, &c, &reference(&op, &c), tol);
+    });
+}
+
+#[test]
+fn conformance_chain_strip_width_sweep() {
+    check_prop("conformance-chain-strip-sweep", 8, |rng| {
+        use tile_fusion::exec::chain::StepStrategy;
+        // Solver-style chain at a strip-exercising width; every step
+        // pinned to each strip mode in turn (fused and unfused steps).
+        let pat = random_pattern(rng);
+        let a = Arc::new(Csr::<f64>::with_random_values(pat, rng.next_u64(), -1.0, 1.0));
+        let len = 1 + rng.next_range(3);
+        let rhs = JB + 1 + rng.next_range(2 * JB);
+        let mk_ops = || -> Vec<ChainStepOp<f64>> {
+            (0..len)
+                .map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+                .collect()
+        };
+        let x = Dense::<f64>::randn(a.rows(), rhs, rng.next_u64());
+        let expect = chain_reference(&mk_ops(), &x);
+        let mut params = random_params(rng);
+        params.elem_bytes = 8;
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+        for mode in [StripMode::Width(JB), StripMode::Width(2 * JB), StripMode::Full] {
+            let mut chain = ChainExec::plan_and_build(mk_ops(), a.rows(), rhs, params)
+                .expect("chain must bind");
+            for s in 0..len {
+                chain.set_strip(s, mode);
+                if rng.next_bool(0.3) {
+                    chain.set_strategy(s, StepStrategy::Unfused);
+                }
+            }
+            let mut d = Dense::zeros(a.rows(), rhs);
+            chain.run(&pool, &x, &mut d);
+            let diff = d.max_abs_diff(&expect);
+            assert!(diff < 1e-9, "chain {mode:?} diverged: {diff:.3e}");
+        }
     });
 }
 

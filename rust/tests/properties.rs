@@ -134,7 +134,9 @@ fn prop_spmm_spmm_executors_agree() {
 
 #[test]
 fn prop_locality_constraint_after_split() {
-    // Every splittable tile respects the budget; unsplittable singleton
+    // Every splittable tile respects the budget *at its execution
+    // width* — wavefront 0 runs at the schedule's strip width (full
+    // when none), wavefront 1 always full-width; unsplittable singleton
     // tiles are the only permitted overflow.
     check_prop("locality-constraint", 30, |rng| {
         let a = random_pattern(rng);
@@ -144,13 +146,14 @@ fn prop_locality_constraint_after_split() {
         let plan = Scheduler::new(params).schedule(&a, bcol, bcol);
         let op = FusionOp { a: &a, b: BSide::Dense { bcol }, ccol: bcol };
         let mut cm = tile_fusion::scheduler::cost::CostModel::new(&op, params.elem_bytes);
-        for wf in &plan.wavefronts {
+        for (wi, wf) in plan.wavefronts.iter().enumerate() {
+            cm.set_eval_width(if wi == 0 { plan.strip_width } else { None });
             for t in wf {
                 let cost = cm.tile_cost(t);
                 let splittable = t.i_len() > 1 || t.j_len() > 1;
                 assert!(
                     cost <= params.cache_bytes || !splittable,
-                    "splittable tile over budget: {cost}"
+                    "splittable wf{wi} tile over budget: {cost}"
                 );
             }
         }
@@ -262,6 +265,77 @@ fn prop_chain_plan_dedup_keyed_by_shape() {
         assert_eq!(plan.stats.unique_schedules, expect_unique);
         assert!(Arc::ptr_eq(&plan.steps[0].schedule, &plan.steps[1].schedule));
         assert_eq!(plan.out_dims(), (n, w2));
+    });
+}
+
+#[test]
+fn prop_strip_schedule_invariants() {
+    // Strip widths are JB multiples strictly inside (0, ccol); the
+    // full-width variant of the same problem never carries one; both
+    // validate; and when strips are active the striped schedule keeps
+    // wavefront-0 tiles at least as coarse as the full-width split
+    // (its Eq.-3 costs are pointwise smaller, so recursion stops no
+    // later on the identical split tree).
+    check_prop("strip-schedule-invariants", 25, |rng| {
+        use tile_fusion::kernels::JB;
+        let a = random_pattern(rng);
+        let mut params = random_params(rng);
+        params.cache_bytes = 1 << (12 + rng.next_range(8));
+        let bcol = 1 + rng.next_range(64);
+        let ccol = 1 + rng.next_range(10 * JB);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol }, ccol };
+        let striped = Scheduler::new(params).schedule_op(&op);
+        let full = Scheduler::new(params).schedule_op_full_width(&op);
+        striped.validate(&a);
+        full.validate(&a);
+        assert_eq!(full.strip_width, None);
+        if let Some(w) = striped.strip_width {
+            assert!(w >= JB && w < ccol && w % JB == 0, "bad strip width {w} for ccol {ccol}");
+        } else {
+            // No strip ⇒ both ran the identical full-width algorithm.
+            assert_eq!(striped.wavefronts, full.wavefronts);
+        }
+        assert!(
+            striped.wavefronts[0].len() <= full.wavefronts[0].len(),
+            "striping must not split wavefront 0 finer: {} > {}",
+            striped.wavefronts[0].len(),
+            full.wavefronts[0].len()
+        );
+    });
+}
+
+#[test]
+fn prop_autotuner_pick_replays_deterministically() {
+    // The tuner's winner is a pure function of (candidates, measured
+    // times): under TF_PROP_SEED replay the same seed drives the same
+    // fake timings and must reproduce the identical pick, and a repeat
+    // pick over the same timings is identical (ties break to the
+    // earlier candidate).
+    check_prop("autotuner-determinism", 25, |rng| {
+        use std::time::Duration;
+        use tile_fusion::exec::StripMode;
+        use tile_fusion::kernels::JB;
+        use tile_fusion::testing::XorShift64;
+        use tile_fusion::tuning::{strip_candidates, StripTuner};
+
+        let ccol = 1 + rng.next_range(16 * JB);
+        let pick = if rng.next_bool(0.3) { None } else { Some(JB * (1 + rng.next_range(8))) };
+        let cands = strip_candidates(pick, ccol);
+        assert!(!cands.is_empty() && cands.len() <= 3, "1-3 candidates, got {}", cands.len());
+        if pick.is_none() {
+            assert_eq!(cands, vec![StripMode::Full], "full model pick skips timing");
+        }
+
+        let seed = rng.next_u64();
+        let run = |seed: u64| {
+            let mut fake = XorShift64::new(seed);
+            StripTuner::default()
+                .pick_with(&cands, |_| Duration::from_nanos(1 + fake.next_range(1000) as u64))
+                .winner
+        };
+        let first = run(seed);
+        assert_eq!(first, run(seed), "same seed must replay the same winner");
+        assert!(cands.contains(&first));
     });
 }
 
