@@ -5,7 +5,7 @@
 use crate::exec::StripMode;
 use crate::scheduler::{FusedSchedule, FusionOp, Scheduler, SchedulerParams};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Cache key: everything the schedule depends on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -37,11 +37,50 @@ impl ScheduleKey {
 /// single-tenant use.
 pub const DEFAULT_CAPACITY: usize = 256;
 
+/// Per-entry autotune slot: the strip pick for one
+/// (pattern, shape, precision) key behind its **own** lock, shared out
+/// of the cache as an `Arc` so a tuning run never holds the cache-wide
+/// lock. A dispatcher tuning key X times candidate widths while holding
+/// only X's slot; tenants on unrelated keys read schedules and tuned
+/// picks from the cache concurrently, and a second tenant arriving at X
+/// queues on the slot (then finds the pick recorded) instead of
+/// retuning. Eviction drops the slot with its entry — the next request
+/// rebuilds and retunes.
+pub struct TuneCell {
+    pick: Mutex<Option<StripMode>>,
+}
+
+impl TuneCell {
+    fn new() -> Arc<Self> {
+        Arc::new(Self { pick: Mutex::new(None) })
+    }
+
+    /// The recorded pick, if any (brief per-key lock).
+    pub fn get(&self) -> Option<StripMode> {
+        *self.pick.lock().unwrap()
+    }
+
+    /// Record the pick (last write wins — benign: any recorded pick is
+    /// a timed winner for this key).
+    pub fn set(&self, mode: StripMode) {
+        *self.pick.lock().unwrap() = Some(mode);
+    }
+
+    /// Hold the slot across a tuning run: lock, re-check the pick is
+    /// still `None`, time candidates, write through the guard. Same-key
+    /// contenders block here; every other key is untouched.
+    pub fn lock(&self) -> MutexGuard<'_, Option<StripMode>> {
+        self.pick.lock().unwrap()
+    }
+}
+
 struct Entry {
     schedule: Arc<FusedSchedule>,
-    /// The autotuner's strip pick for this (pattern, shape, precision),
-    /// `None` until the first execution tunes it.
-    tuned_strip: Option<StripMode>,
+    /// The autotuner's strip pick for this (pattern, shape, precision)
+    /// — empty until the first execution tunes it. Behind a per-key
+    /// lock ([`TuneCell`]) so recording a pick through the dispatcher
+    /// never blocks tenants on unrelated keys.
+    tune: Arc<TuneCell>,
     /// LRU stamp: the cache clock at last touch.
     last_used: u64,
 }
@@ -117,7 +156,7 @@ impl ScheduleCache {
         let plan = Arc::new(Scheduler::new(params).schedule_op(op));
         self.map.insert(
             key,
-            Entry { schedule: Arc::clone(&plan), tuned_strip: None, last_used: self.clock },
+            Entry { schedule: Arc::clone(&plan), tune: TuneCell::new(), last_used: self.clock },
         );
         plan
     }
@@ -129,7 +168,7 @@ impl ScheduleCache {
         self.clock += 1;
         let entry = self.map.get_mut(&key)?;
         entry.last_used = self.clock;
-        entry.tuned_strip
+        entry.tune.get()
     }
 
     /// Record the autotuner's pick alongside `op`'s schedule. No-op when
@@ -140,8 +179,21 @@ impl ScheduleCache {
         self.clock += 1;
         if let Some(entry) = self.map.get_mut(&key) {
             entry.last_used = self.clock;
-            entry.tuned_strip = Some(strip);
+            entry.tune.set(strip);
         }
+    }
+
+    /// The per-key autotune slot for `op`'s entry (`None` until
+    /// [`ScheduleCache::get_or_build`] created one). Callers that tune
+    /// through a shared cache clone this `Arc`, **release the cache
+    /// lock**, and run the timing while holding only the slot — see
+    /// [`TuneCell`].
+    pub fn tune_cell(&mut self, op: &FusionOp) -> Option<Arc<TuneCell>> {
+        let key = self.key_for(op);
+        self.clock += 1;
+        let entry = self.map.get_mut(&key)?;
+        entry.last_used = self.clock;
+        Some(Arc::clone(&entry.tune))
     }
 
     pub fn len(&self) -> usize {
@@ -250,5 +302,32 @@ mod tests {
         // Recording against a missing entry is a no-op.
         cache.set_tuned_strip(&other, StripMode::Full);
         assert_eq!(cache.tuned_strip(&other), None);
+    }
+
+    #[test]
+    fn tune_cell_locking_is_per_key() {
+        use crate::exec::StripMode;
+        let a = gen::banded(32, &[1]);
+        let op_x = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol: 8 };
+        let op_y = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol: 16 };
+        let mut cache = ScheduleCache::new(SchedulerParams::default());
+        assert!(cache.tune_cell(&op_x).is_none(), "no entry, no slot");
+        cache.get_or_build(&op_x);
+        cache.get_or_build(&op_y);
+        let cell_x = cache.tune_cell(&op_x).unwrap();
+        let cell_y = cache.tune_cell(&op_y).unwrap();
+
+        // Hold X's slot as a tuning run would: Y's slot and the cache
+        // itself stay fully usable — the lock is per key.
+        let mut guard_x = cell_x.lock();
+        assert!(guard_x.is_none());
+        cell_y.set(StripMode::Width(32));
+        assert_eq!(cache.tuned_strip(&op_y), Some(StripMode::Width(32)));
+        *guard_x = Some(StripMode::Full);
+        drop(guard_x);
+        assert_eq!(cache.tuned_strip(&op_x), Some(StripMode::Full));
+
+        // The slot is the entry's: a fresh lookup sees the same cell.
+        assert!(Arc::ptr_eq(&cell_x, &cache.tune_cell(&op_x).unwrap()));
     }
 }

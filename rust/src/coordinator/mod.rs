@@ -15,13 +15,28 @@
 //!   the same cache, deduplicated across steps) and executed on the
 //!   persistent pool with per-step strategy overrides and batched
 //!   inputs;
-//! - [`Metrics`] for ops/latency/cache behaviour.
+//! - [`Metrics`] for ops/latency/cache behaviour;
+//! - an async **service front-end** ([`server`]): tenants enqueue
+//!   requests onto a bounded two-tier queue ([`queue`]) and get
+//!   [`Ticket`]s back ([`ticket`]); a dispatcher thread coalesces
+//!   same-key requests into batched executions, applies admission
+//!   control (queue bound, per-tenant in-flight caps, `Busy`
+//!   backpressure), and lets latency-sensitive pairs overtake bulk
+//!   chains at step boundaries. The synchronous [`Coordinator`] stays
+//!   as the single-caller engine; both share workers through
+//!   [`SharedPool`](crate::exec::SharedPool) leases.
 
 pub mod cache;
+pub mod queue;
+pub mod server;
 pub mod service;
+pub mod ticket;
 
-pub use cache::{ScheduleCache, ScheduleKey};
+pub use cache::{ScheduleCache, ScheduleKey, TuneCell};
+pub use queue::{BoundedQueue, Priority};
+pub use server::{ServeReply, Server, ServerConfig};
 pub use service::{
     ChainRequest, ChainResponse, ChainStepRequest, Coordinator, Metrics, PairKind, Request,
     Response, Strategy,
 };
+pub use ticket::{ServiceError, Ticket};

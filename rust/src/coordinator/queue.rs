@@ -1,0 +1,306 @@
+//! Bounded two-tier MPSC queue feeding the service dispatcher.
+//!
+//! Tenants (many producers) enqueue jobs; the dispatcher (one consumer)
+//! drains them. Three properties the service layer leans on:
+//!
+//! - **Bounded depth** — admission control's first line: `try_push`
+//!   refuses when full (the `Busy` path), `push` blocks (backpressure).
+//! - **Two priority tiers** — [`Priority::Latency`] jobs are always
+//!   popped before [`Priority::Bulk`] ones; order *within* a tier is
+//!   FIFO. The dispatcher additionally polls the latency tier between
+//!   chain steps ([`BoundedQueue::drain_latency_matching`]) so short
+//!   pair requests overtake long bulk chains without ever interrupting
+//!   a barrier.
+//! - **Coalescing support** — [`BoundedQueue::drain_matching`] pulls
+//!   every queued job that shares a schedule key with the one just
+//!   popped, so the dispatcher can batch them into one execution.
+//!
+//! Plain `Mutex` + `Condvar` (the offline crate set has no crossbeam),
+//! mirroring the pool's synchronization style.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Scheduling tier of a queued job.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-sensitive: popped before every bulk job, and served at
+    /// chain-step boundaries while a bulk chain is in flight.
+    Latency,
+    /// Throughput-oriented (the default): FIFO behind other bulk jobs.
+    #[default]
+    Bulk,
+}
+
+/// Why a push was refused; carries the job back to the caller.
+#[derive(Debug)]
+pub enum PushError<J> {
+    /// At capacity (admission control): try again later or block via
+    /// [`BoundedQueue::push`].
+    Full(J),
+    /// The queue was closed (service shutdown).
+    Closed(J),
+}
+
+struct State<J> {
+    latency: VecDeque<J>,
+    bulk: VecDeque<J>,
+    closed: bool,
+}
+
+impl<J> State<J> {
+    fn len(&self) -> usize {
+        self.latency.len() + self.bulk.len()
+    }
+
+    fn tier(&mut self, pri: Priority) -> &mut VecDeque<J> {
+        match pri {
+            Priority::Latency => &mut self.latency,
+            Priority::Bulk => &mut self.bulk,
+        }
+    }
+}
+
+/// The bounded two-tier queue. Shared by `Arc` between tenants and the
+/// dispatcher.
+pub struct BoundedQueue<J> {
+    cap: usize,
+    state: Mutex<State<J>>,
+    /// Signalled on push and close (wakes the dispatcher).
+    not_empty: Condvar,
+    /// Signalled on pop and close (wakes blocked producers).
+    not_full: Condvar,
+}
+
+impl<J> BoundedQueue<J> {
+    /// Queue bounded to `cap` jobs (≥ 1) across both tiers.
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            state: Mutex::new(State {
+                latency: VecDeque::new(),
+                bulk: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Jobs currently queued (both tiers).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking enqueue: `Err(Full)` at capacity, `Err(Closed)`
+    /// after [`BoundedQueue::close`]. The admission-control entry.
+    pub fn try_push(&self, pri: Priority, job: J) -> Result<(), PushError<J>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed(job));
+        }
+        if st.len() >= self.cap {
+            return Err(PushError::Full(job));
+        }
+        st.tier(pri).push_back(job);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking enqueue (backpressure): waits for space, `Err(job)`
+    /// only when the queue closes while waiting (or was closed).
+    pub fn push(&self, pri: Priority, job: J) -> Result<(), J> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(job);
+            }
+            if st.len() < self.cap {
+                st.tier(pri).push_back(job);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking dequeue: latency tier first, FIFO within a tier. `None`
+    /// once the queue is closed **and** drained — the dispatcher's loop
+    /// condition, which is what makes shutdown graceful by default.
+    pub fn pop(&self) -> Option<(Priority, J)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(j) = st.latency.pop_front() {
+                self.not_full.notify_all();
+                return Some((Priority::Latency, j));
+            }
+            if let Some(j) = st.bulk.pop_front() {
+                self.not_full.notify_all();
+                return Some((Priority::Bulk, j));
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Pull every queued job of tier `pri` matching `pred`, up to
+    /// `max`, preserving FIFO order among the pulled jobs — the
+    /// coalescing scan. Non-matching jobs keep their positions.
+    pub fn drain_matching(
+        &self,
+        pri: Priority,
+        max: usize,
+        mut pred: impl FnMut(&J) -> bool,
+    ) -> Vec<J> {
+        let mut st = self.state.lock().unwrap();
+        let tier = st.tier(pri);
+        let mut out = Vec::new();
+        let mut keep = VecDeque::with_capacity(tier.len());
+        while let Some(j) = tier.pop_front() {
+            if out.len() < max && pred(&j) {
+                out.push(j);
+            } else {
+                keep.push_back(j);
+            }
+        }
+        *tier = keep;
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// [`BoundedQueue::drain_matching`] on the latency tier — what the
+    /// dispatcher calls at chain-step boundaries to let short jobs
+    /// overtake a bulk chain.
+    pub fn drain_latency_matching(&self, max: usize, pred: impl FnMut(&J) -> bool) -> Vec<J> {
+        self.drain_matching(Priority::Latency, max, pred)
+    }
+
+    /// Close the queue: producers fail fast, the dispatcher drains what
+    /// is left and then sees `None`. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// True after [`BoundedQueue::close`].
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_within_tier_latency_first() {
+        let q = BoundedQueue::new(8);
+        q.try_push(Priority::Bulk, 10).unwrap();
+        q.try_push(Priority::Bulk, 11).unwrap();
+        q.try_push(Priority::Latency, 1).unwrap();
+        q.try_push(Priority::Latency, 2).unwrap();
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.pop(), Some((Priority::Latency, 1)));
+        assert_eq!(q.pop(), Some((Priority::Latency, 2)));
+        assert_eq!(q.pop(), Some((Priority::Bulk, 10)));
+        assert_eq!(q.pop(), Some((Priority::Bulk, 11)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn try_push_full_then_closed() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        q.try_push(Priority::Bulk, 1).unwrap();
+        q.try_push(Priority::Latency, 2).unwrap();
+        match q.try_push(Priority::Bulk, 3) {
+            Err(PushError::Full(j)) => assert_eq!(j, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        q.close();
+        assert!(q.is_closed());
+        match q.try_push(Priority::Bulk, 4) {
+            Err(PushError::Closed(j)) => assert_eq!(j, 4),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // Drain-after-close still yields the queued jobs, then None.
+        assert_eq!(q.pop(), Some((Priority::Latency, 2)));
+        assert_eq!(q.pop(), Some((Priority::Bulk, 1)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn blocking_push_applies_backpressure() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(Priority::Bulk, 0).unwrap();
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.push(Priority::Bulk, 1).is_ok())
+        };
+        // Give the producer a moment to block, then make room.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.pop(), Some((Priority::Bulk, 0)));
+        assert!(producer.join().unwrap());
+        assert_eq!(q.pop(), Some((Priority::Bulk, 1)));
+    }
+
+    #[test]
+    fn blocking_push_fails_on_close() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(Priority::Bulk, 0).unwrap();
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.push(Priority::Bulk, 1))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(producer.join().unwrap(), Err(1));
+    }
+
+    #[test]
+    fn drain_matching_pulls_in_order_and_respects_max() {
+        let q = BoundedQueue::new(16);
+        for v in [1, 2, 3, 4, 5, 6] {
+            q.try_push(Priority::Bulk, v).unwrap();
+        }
+        let evens = q.drain_matching(Priority::Bulk, 2, |v| v % 2 == 0);
+        assert_eq!(evens, vec![2, 4]);
+        // Non-matching (and beyond-max) jobs kept their FIFO order.
+        assert_eq!(q.pop(), Some((Priority::Bulk, 1)));
+        assert_eq!(q.pop(), Some((Priority::Bulk, 3)));
+        assert_eq!(q.pop(), Some((Priority::Bulk, 5)));
+        assert_eq!(q.pop(), Some((Priority::Bulk, 6)));
+        // Latency drain helper only touches the latency tier.
+        q.try_push(Priority::Bulk, 7).unwrap();
+        q.try_push(Priority::Latency, 8).unwrap();
+        assert_eq!(q.drain_latency_matching(usize::MAX, |_| true), vec![8]);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn pop_wakes_on_late_push() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.pop())
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.try_push(Priority::Latency, 42).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some((Priority::Latency, 42)));
+    }
+}

@@ -1,0 +1,1394 @@
+//! Async service front-end: queue-and-dispatch over the coordinator's
+//! engine.
+//!
+//! The synchronous [`Coordinator`](super::Coordinator) serves one caller
+//! at a time: `submit_chain` blocks, so concurrent tenants serialize on
+//! the caller side and the pool idles between their requests — the
+//! under-utilization the paper's "sufficient workload for cores"
+//! guideline warns about. The [`Server`] converts that call-and-block
+//! shape into queue-and-dispatch:
+//!
+//! - tenants enqueue [`PairRequest`]/[`ChainRequest`]s onto a bounded
+//!   two-tier queue ([`super::queue`]) and get a [`Ticket`] back;
+//! - **admission control**: `try_submit_*` refuses with
+//!   [`ServiceError::BusyQueue`] at capacity and
+//!   [`ServiceError::BusyTenant`] past the per-tenant in-flight cap;
+//!   `submit_*` blocks instead (backpressure);
+//! - a **dispatcher thread** drains the queue and **coalesces** requests
+//!   that share a (pattern, shape, elem-width) schedule key into one
+//!   batched execution, amortizing schedule fetch, tuned-strip lookup,
+//!   and executor bind across tenants;
+//! - **priority**: latency-tier jobs are popped first, and while a bulk
+//!   chain is in flight the dispatcher serves latency pairs at chain
+//!   **step boundaries** ([`ChainExec::run_controlled`]) — overtaking
+//!   between barriers, never mid-barrier;
+//! - the pool is a [`SharedPool`]: the dispatcher and any synchronous
+//!   `Coordinator` built over the same handle share workers through
+//!   leases.
+//!
+//! Stationary operands (sparse matrices, dense `B`s, layer weights) are
+//! **registered by name** — that is what makes the coalesce key a cheap
+//! string/shape compare instead of a value compare. The flowing data
+//! (`cs` / `xs`) rides in each request.
+//!
+//! Coalescing guarantee: a coalesced batch runs the identical schedule,
+//! strip pick, and executor code as the same requests submitted alone,
+//! so results are bitwise identical for the deterministic strategies
+//! (tile fusion, unfused) — pinned down in `tests/properties.rs`.
+
+use super::cache::{ScheduleCache, TuneCell};
+use super::queue::{BoundedQueue, Priority, PushError};
+use super::service::{execute_pair_batch, Metrics, Strategy};
+use super::ticket::{ticket, ServiceError, Ticket, TicketTx};
+use crate::core::{Dense, Scalar};
+use crate::exec::chain::{chain_specs, ChainExec, ChainStepOp, StepControl, StepStrategy};
+use crate::exec::{Fused, PairExec, PairOp, SharedPool, StripMode, ThreadPool};
+use crate::scheduler::chain::{unfused_schedule, ChainPlanner};
+use crate::scheduler::{FusedSchedule, SchedulerParams};
+use crate::sparse::Csr;
+use crate::tuning::{strip_candidates, StripTuner};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Admission / dispatch knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Submission-queue bound across both tiers (≥ 1).
+    pub queue_capacity: usize,
+    /// Per-tenant in-flight cap (queued + executing); `try_submit_*`
+    /// past it returns [`ServiceError::BusyTenant`].
+    pub tenant_inflight_cap: usize,
+    /// Merge same-key requests into one batched execution.
+    pub coalesce: bool,
+    /// Most requests one batch may serve (bounds tail latency of the
+    /// batch head).
+    pub max_coalesce: usize,
+    /// Bound chain executors kept warm by the dispatcher (keyed by the
+    /// chain's named operands + shapes; re-registering any operand
+    /// invalidates). 0 disables reuse.
+    pub exec_cache_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            queue_capacity: 64,
+            tenant_inflight_cap: 8,
+            coalesce: true,
+            max_coalesce: 16,
+            exec_cache_capacity: 8,
+        }
+    }
+}
+
+/// Dense or sparse stationary `B` of a pair request, by registered name.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BRef {
+    /// Registered dense `B` ([`Server::register_dense`]) — GeMM-SpMM.
+    Dense(String),
+    /// Registered sparse `B` ([`Server::register_matrix`]) — SpMM-SpMM.
+    Sparse(String),
+}
+
+/// One queued pair request: `D = A (B C)` for every `C` in `cs`.
+pub struct PairRequest<T> {
+    /// Registered sparse `A`.
+    pub a: String,
+    pub b: BRef,
+    /// Batched right-hand sides (≥ 1); one executor serves all.
+    pub cs: Vec<Dense<T>>,
+    pub strategy: Strategy,
+}
+
+/// Stationary operand of one chain step, by registered name.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StepOperand {
+    /// Registered dense weights, flowing `B`: `out = A ((chain) · w)`.
+    Weights(String),
+    /// Registered dense `B`, flowing `C`: `out = A (b · (chain))`.
+    Dense(String),
+    /// Registered sparse `B`, flowing `C`.
+    Sparse(String),
+}
+
+/// One step of a queued [`ChainRequest`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChainStepReq {
+    /// Registered sparse `A` of this step.
+    pub a: String,
+    pub operand: StepOperand,
+    /// Per-step strategy override (`None` ⇒ the request default).
+    pub strategy: Option<Strategy>,
+}
+
+/// One queued chain request: the whole multiplication chain applied to
+/// every input in `xs`.
+pub struct ChainRequest<T> {
+    pub steps: Vec<ChainStepReq>,
+    /// Batched chain inputs (≥ 1, one shape).
+    pub xs: Vec<Dense<T>>,
+    /// Default step strategy (TileFusion / Unfused).
+    pub strategy: Strategy,
+}
+
+/// What a resolved ticket carries back.
+#[derive(Debug)]
+pub struct ServeReply<T> {
+    /// One output per submitted `C` (pair) or `x` (chain).
+    pub ds: Vec<Dense<T>>,
+    /// Time spent queued before the dispatcher picked the request up.
+    pub wait: Duration,
+    /// Execution time of the whole (possibly coalesced) batch.
+    pub service: Duration,
+    /// Requests the executed batch served (1 ⇒ ran alone).
+    pub batch_requests: usize,
+    /// Dispatch sequence number of the batch — monotone in dispatch
+    /// order, which is FIFO within a priority tier.
+    pub order: u64,
+}
+
+enum JobKind<T> {
+    Pair(PairRequest<T>, TicketTx<ServeReply<T>>),
+    Chain(ChainRequest<T>, TicketTx<ServeReply<T>>),
+}
+
+struct Job<T> {
+    tenant: u64,
+    enqueued: Instant,
+    kind: JobKind<T>,
+}
+
+struct Shared<T> {
+    pool: SharedPool,
+    params: SchedulerParams,
+    cfg: ServerConfig,
+    cache: Mutex<ScheduleCache>,
+    matrices: RwLock<HashMap<String, Arc<Csr<T>>>>,
+    denses: RwLock<HashMap<String, Arc<Dense<T>>>>,
+    /// Bumped on every registration; cached bound executors embed the
+    /// generation they were built under, so re-registering an operand
+    /// invalidates them.
+    registry_gen: AtomicU64,
+    inflight: Mutex<HashMap<u64, usize>>,
+    metrics: Mutex<Metrics>,
+    /// Drop-triggered: cancel queued work and abandon chains at the
+    /// next step boundary instead of draining gracefully.
+    aborting: AtomicBool,
+}
+
+impl<T: Scalar> Shared<T> {
+    fn admit(&self, tenant: u64) -> Result<(), ServiceError> {
+        let mut inflight = self.inflight.lock().unwrap();
+        let n = inflight.entry(tenant).or_insert(0);
+        if *n >= self.cfg.tenant_inflight_cap {
+            self.metrics.lock().unwrap().rejected_tenant_cap += 1;
+            return Err(ServiceError::BusyTenant);
+        }
+        *n += 1;
+        Ok(())
+    }
+
+    fn release(&self, tenant: u64) {
+        let mut inflight = self.inflight.lock().unwrap();
+        if let Some(n) = inflight.get_mut(&tenant) {
+            *n -= 1;
+            if *n == 0 {
+                inflight.remove(&tenant);
+            }
+        }
+    }
+
+    fn matrix(&self, name: &str) -> Result<Arc<Csr<T>>, ServiceError> {
+        self.matrices
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| ServiceError::Rejected(format!("unknown matrix {name:?}")))
+    }
+
+    fn dense(&self, name: &str) -> Result<Arc<Dense<T>>, ServiceError> {
+        self.denses
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| ServiceError::Rejected(format!("unknown dense operand {name:?}")))
+    }
+}
+
+/// The async multi-tenant front-end. See the module docs for the
+/// dispatch model; construction spawns the dispatcher thread, dropping
+/// the server aborts it (cancelling queued work), and
+/// [`Server::shutdown`] drains gracefully instead.
+pub struct Server<T: Scalar> {
+    shared: Arc<Shared<T>>,
+    queue: Arc<BoundedQueue<Job<T>>>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl<T: Scalar> Server<T> {
+    /// Server over a fresh pool of `n_threads` executors with default
+    /// [`ServerConfig`].
+    pub fn new(n_threads: usize, params: SchedulerParams) -> Self {
+        Self::with_config(SharedPool::new(n_threads), params, ServerConfig::default())
+    }
+
+    /// Server over an existing shared pool (pass a clone of a
+    /// [`Coordinator`](super::Coordinator)'s handle to share workers
+    /// with the synchronous path) and explicit knobs.
+    pub fn with_config(pool: SharedPool, mut params: SchedulerParams, cfg: ServerConfig) -> Self {
+        params.n_cores = pool.n_threads();
+        params.elem_bytes = T::BYTES;
+        let shared = Arc::new(Shared {
+            pool,
+            params,
+            cfg,
+            cache: Mutex::new(ScheduleCache::new(params)),
+            matrices: RwLock::new(HashMap::new()),
+            denses: RwLock::new(HashMap::new()),
+            registry_gen: AtomicU64::new(0),
+            inflight: Mutex::new(HashMap::new()),
+            metrics: Mutex::new(Metrics::default()),
+            aborting: AtomicBool::new(false),
+        });
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            let queue = Arc::clone(&queue);
+            std::thread::Builder::new()
+                .name("tf-dispatcher".into())
+                .spawn(move || {
+                    Dispatcher {
+                        shared,
+                        queue,
+                        seq: std::cell::Cell::new(0),
+                        execs: Vec::new(),
+                    }
+                    .run()
+                })
+                .expect("spawn dispatcher")
+        };
+        Self { shared, queue, dispatcher: Some(dispatcher) }
+    }
+
+    /// Register (or replace) a named sparse operand. Replacement bumps
+    /// the registry generation, invalidating cached bound executors.
+    pub fn register_matrix(&self, name: impl Into<String>, a: Csr<T>) {
+        self.shared.matrices.write().unwrap().insert(name.into(), Arc::new(a));
+        self.shared.registry_gen.fetch_add(1, Ordering::SeqCst);
+        self.shared.metrics.lock().unwrap().matrices_registered += 1;
+    }
+
+    /// Register (or replace) a named dense operand (pair `B`s, chain
+    /// weights / stationary `B`s).
+    pub fn register_dense(&self, name: impl Into<String>, b: Dense<T>) {
+        self.shared.denses.write().unwrap().insert(name.into(), Arc::new(b));
+        self.shared.registry_gen.fetch_add(1, Ordering::SeqCst);
+        self.shared.metrics.lock().unwrap().denses_registered += 1;
+    }
+
+    /// Non-blocking submission: a [`Ticket`] on admission,
+    /// [`ServiceError::BusyQueue`] / [`ServiceError::BusyTenant`] when
+    /// admission control refuses.
+    pub fn try_submit_pair(
+        &self,
+        tenant: u64,
+        pri: Priority,
+        req: PairRequest<T>,
+    ) -> Result<Ticket<ServeReply<T>>, ServiceError> {
+        self.submit_job(tenant, pri, JobCtor::Pair(req), false)
+    }
+
+    /// Blocking submission (backpressure): waits for queue space; fails
+    /// only on [`ServiceError::BusyTenant`] or shutdown.
+    pub fn submit_pair(
+        &self,
+        tenant: u64,
+        pri: Priority,
+        req: PairRequest<T>,
+    ) -> Result<Ticket<ServeReply<T>>, ServiceError> {
+        self.submit_job(tenant, pri, JobCtor::Pair(req), true)
+    }
+
+    /// Non-blocking chain submission.
+    pub fn try_submit_chain(
+        &self,
+        tenant: u64,
+        pri: Priority,
+        req: ChainRequest<T>,
+    ) -> Result<Ticket<ServeReply<T>>, ServiceError> {
+        self.submit_job(tenant, pri, JobCtor::Chain(req), false)
+    }
+
+    /// Blocking chain submission (backpressure).
+    pub fn submit_chain(
+        &self,
+        tenant: u64,
+        pri: Priority,
+        req: ChainRequest<T>,
+    ) -> Result<Ticket<ServeReply<T>>, ServiceError> {
+        self.submit_job(tenant, pri, JobCtor::Chain(req), true)
+    }
+
+    /// Submit-and-wait: the synchronous API as a thin wrapper over the
+    /// queue.
+    pub fn pair_blocking(
+        &self,
+        tenant: u64,
+        pri: Priority,
+        req: PairRequest<T>,
+    ) -> Result<ServeReply<T>, ServiceError> {
+        self.submit_pair(tenant, pri, req)?.wait()
+    }
+
+    /// Submit-and-wait for chains.
+    pub fn chain_blocking(
+        &self,
+        tenant: u64,
+        pri: Priority,
+        req: ChainRequest<T>,
+    ) -> Result<ServeReply<T>, ServiceError> {
+        self.submit_chain(tenant, pri, req)?.wait()
+    }
+
+    fn submit_job(
+        &self,
+        tenant: u64,
+        pri: Priority,
+        ctor: JobCtor<T>,
+        blocking: bool,
+    ) -> Result<Ticket<ServeReply<T>>, ServiceError> {
+        self.shared.admit(tenant)?;
+        let (tkt, tx) = ticket();
+        let kind = match ctor {
+            JobCtor::Pair(req) => JobKind::Pair(req, tx),
+            JobCtor::Chain(req) => JobKind::Chain(req, tx),
+        };
+        let job = Job { tenant, enqueued: Instant::now(), kind };
+        let pushed = if blocking {
+            self.queue.push(pri, job).map_err(|_| ServiceError::Cancelled)
+        } else {
+            self.queue.try_push(pri, job).map_err(|e| match e {
+                PushError::Full(_) => ServiceError::BusyQueue,
+                PushError::Closed(_) => ServiceError::Cancelled,
+            })
+        };
+        match pushed {
+            Ok(()) => {
+                self.shared.metrics.lock().unwrap().queued += 1;
+                Ok(tkt)
+            }
+            Err(e) => {
+                // The refused job (and its resolver) dropped inside
+                // map_err, so the ticket is already cancelled; report
+                // the admission verdict and undo the in-flight charge.
+                self.shared.release(tenant);
+                if e == ServiceError::BusyQueue {
+                    self.shared.metrics.lock().unwrap().rejected_queue_full += 1;
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Rolling metrics snapshot (includes the dispatcher's counters).
+    pub fn metrics(&self) -> Metrics {
+        self.shared.metrics.lock().unwrap().clone()
+    }
+
+    /// Schedule-cache state (entries, hits, misses).
+    pub fn cache_stats(&self) -> (usize, u64, u64) {
+        let cache = self.shared.cache.lock().unwrap();
+        (cache.len(), cache.hits, cache.misses)
+    }
+
+    /// Jobs currently queued.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Clone of the shared pool handle (build a synchronous
+    /// [`Coordinator`](super::Coordinator) over it to share workers).
+    pub fn pool(&self) -> SharedPool {
+        self.shared.pool.clone()
+    }
+
+    /// Graceful shutdown: stop intake, let the dispatcher drain every
+    /// queued job, join it, and return the final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        self.queue.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        self.shared.metrics.lock().unwrap().clone()
+    }
+}
+
+impl<T: Scalar> Drop for Server<T> {
+    /// Abort: queued jobs resolve [`ServiceError::Cancelled`], an
+    /// in-flight chain stops at its next step boundary. (Use
+    /// [`Server::shutdown`] for a graceful drain.)
+    fn drop(&mut self) {
+        self.shared.aborting.store(true, Ordering::SeqCst);
+        self.queue.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+enum JobCtor<T> {
+    Pair(PairRequest<T>),
+    Chain(ChainRequest<T>),
+}
+
+/// Phase-1 output of the pair-batch engine: operands resolved, shapes
+/// checked, schedule (and per-key tune slot) fetched — everything that
+/// needs no pool workers, so it is produced before the lease is taken.
+struct PreparedPair<T> {
+    a: Arc<Csr<T>>,
+    b_dense: Option<Arc<Dense<T>>>,
+    b_sparse: Option<Arc<Csr<T>>>,
+    /// `Some` for the fused strategy: cached schedule + autotune slot.
+    plan: Option<(Arc<FusedSchedule>, Arc<TuneCell>)>,
+    ccol: usize,
+}
+
+/// Rebuild the borrowed [`PairOp`] view of a prepared batch's operands
+/// (exactly one `B` side is resolved by construction).
+fn pair_op<'a, T: Scalar>(
+    a: &'a Arc<Csr<T>>,
+    b_dense: &'a Option<Arc<Dense<T>>>,
+    b_sparse: &'a Option<Arc<Csr<T>>>,
+) -> PairOp<'a, T> {
+    match (b_dense, b_sparse) {
+        (Some(b), _) => PairOp::gemm_spmm(a, b),
+        (_, Some(b)) => PairOp::spmm_spmm(a, b),
+        _ => unreachable!("exactly one B side resolved"),
+    }
+}
+
+/// A bound chain executor kept warm across batches, with the key that
+/// must match exactly for reuse.
+struct CachedExec<T> {
+    key: ChainKey,
+    exec: ChainExec<T>,
+    last_used: u64,
+}
+
+#[derive(Clone, PartialEq, Eq)]
+struct ChainKey {
+    steps: Vec<ChainStepReq>,
+    strategy: Strategy,
+    in_rows: usize,
+    in_cols: usize,
+    gen: u64,
+}
+
+struct Dispatcher<T: Scalar> {
+    shared: Arc<Shared<T>>,
+    queue: Arc<BoundedQueue<Job<T>>>,
+    /// Dispatch sequence — `Cell` because preempted pairs are served
+    /// through `&self` mid-chain and must share the same monotone
+    /// counter (the dispatcher is single-threaded).
+    seq: std::cell::Cell<u64>,
+    execs: Vec<CachedExec<T>>,
+}
+
+impl<T: Scalar> Dispatcher<T> {
+    fn next_seq(&self) -> u64 {
+        let s = self.seq.get() + 1;
+        self.seq.set(s);
+        s
+    }
+    fn run(mut self) {
+        // No pool lease here: validation, coalescing, operand
+        // resolution, and schedule building need no workers, so a sync
+        // `Coordinator` sharing the pool is never stalled behind the
+        // dispatcher's planning — only behind actual executions.
+        while let Some((pri, job)) = self.queue.pop() {
+            self.shared.metrics.lock().unwrap().queue_depth_last = self.queue.len() as u64;
+            if self.shared.aborting.load(Ordering::SeqCst) {
+                self.cancel(job);
+                continue;
+            }
+            match job.kind {
+                JobKind::Pair(..) => {
+                    let batch = self.coalesce_pairs(pri, job);
+                    self.run_pair_batch(batch);
+                }
+                JobKind::Chain(..) => {
+                    let batch = self.coalesce_chains(pri, job);
+                    self.run_chain_batch(pri, batch);
+                }
+            }
+        }
+    }
+
+    fn cancel(&self, job: Job<T>) {
+        let (tenant, tx) = match job.kind {
+            JobKind::Pair(_, tx) => (job.tenant, tx),
+            JobKind::Chain(_, tx) => (job.tenant, tx),
+        };
+        tx.resolve(Err(ServiceError::Cancelled));
+        self.shared.release(tenant);
+        self.shared.metrics.lock().unwrap().cancelled += 1;
+    }
+
+    /// Pull every queued same-tier pair request sharing `head`'s
+    /// coalesce key (registered operands, strategy, dense width).
+    fn coalesce_pairs(&self, pri: Priority, head: Job<T>) -> Vec<Job<T>> {
+        let mut batch = vec![head];
+        let cfg = &self.shared.cfg;
+        if !cfg.coalesce || cfg.max_coalesce <= 1 {
+            return batch;
+        }
+        let key = match &batch[0].kind {
+            JobKind::Pair(r, _) => pair_key(r),
+            _ => unreachable!("coalesce_pairs on a non-pair head"),
+        };
+        let more = self.queue.drain_matching(pri, cfg.max_coalesce - 1, |j| match &j.kind {
+            JobKind::Pair(r, _) => pair_key(r) == key,
+            _ => false,
+        });
+        batch.extend(more);
+        batch
+    }
+
+    fn coalesce_chains(&self, pri: Priority, head: Job<T>) -> Vec<Job<T>> {
+        let mut batch = vec![head];
+        let cfg = &self.shared.cfg;
+        if !cfg.coalesce || cfg.max_coalesce <= 1 {
+            return batch;
+        }
+        let key = match &batch[0].kind {
+            JobKind::Chain(r, _) => chain_req_key(r),
+            _ => unreachable!("coalesce_chains on a non-chain head"),
+        };
+        let more = self.queue.drain_matching(pri, cfg.max_coalesce - 1, |j| match &j.kind {
+            JobKind::Chain(r, _) => chain_req_key(r) == key,
+            _ => false,
+        });
+        batch.extend(more);
+        batch
+    }
+
+    /// Reject a single admitted request (its own malformed shapes must
+    /// never poison the same-key requests it coalesced with): resolve
+    /// the ticket, release the tenant, count it.
+    fn reject_one(&self, tenant: u64, tx: TicketTx<ServeReply<T>>, err: ServiceError) {
+        tx.resolve(Err(err));
+        self.shared.release(tenant);
+        self.shared.metrics.lock().unwrap().requests += 1;
+    }
+
+    /// Internal-consistency check of one pair request: a batch head's
+    /// shape agreement across requests is already guaranteed by the
+    /// coalesce key, so after this per-request check, every remaining
+    /// failure mode (unknown operand, B/A mismatch) is key-determined
+    /// and genuinely shared by the whole batch.
+    fn validate_pair(req: &PairRequest<T>) -> Result<(), ServiceError> {
+        let Some(first) = req.cs.first() else {
+            return Err(ServiceError::Rejected("empty batch".into()));
+        };
+        for c in &req.cs {
+            if (c.rows, c.cols) != (first.rows, first.cols) {
+                return Err(ServiceError::Rejected("batched C shapes must agree".into()));
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_chain(req: &ChainRequest<T>) -> Result<(), ServiceError> {
+        if req.steps.is_empty() {
+            return Err(ServiceError::Rejected("empty chain".into()));
+        }
+        let Some(first) = req.xs.first() else {
+            return Err(ServiceError::Rejected("empty batch".into()));
+        };
+        for x in &req.xs {
+            if (x.rows, x.cols) != (first.rows, first.cols) {
+                return Err(ServiceError::Rejected(
+                    "batched chain inputs must share one shape".into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve, (maybe) tune, and execute one pair batch; resolve every
+    /// ticket and release every tenant charge. The pool lease is taken
+    /// only around the execution phase.
+    fn run_pair_batch(&mut self, batch: Vec<Job<T>>) {
+        let t0 = Instant::now();
+        let order = self.next_seq();
+        let mut tenants = Vec::with_capacity(batch.len());
+        let mut waits = Vec::with_capacity(batch.len());
+        let mut reqs = Vec::with_capacity(batch.len());
+        let mut txs = Vec::with_capacity(batch.len());
+        for job in batch {
+            let (r, tx) = match job.kind {
+                JobKind::Pair(r, tx) => (r, tx),
+                JobKind::Chain(..) => unreachable!("pair batch holds only pairs"),
+            };
+            if let Err(e) = Self::validate_pair(&r) {
+                self.reject_one(job.tenant, tx, e);
+                continue;
+            }
+            tenants.push(job.tenant);
+            waits.push(t0.saturating_duration_since(job.enqueued));
+            reqs.push(r);
+            txs.push(tx);
+        }
+        if reqs.is_empty() {
+            return;
+        }
+        let n_reqs = reqs.len();
+
+        let outcome = self.prepare_pairs(&reqs).map(|prep| {
+            let shared = Arc::clone(&self.shared);
+            let pool = shared.pool.lease();
+            self.run_prepared(&pool, &prep, &reqs)
+        });
+        let service = t0.elapsed();
+        {
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.batches += 1;
+            m.requests += n_reqs as u64;
+            m.coalesced_requests += n_reqs as u64 - 1;
+            m.total_service += service;
+            m.total_exec += service;
+            for w in &waits {
+                m.total_wait += *w;
+            }
+        }
+        match outcome {
+            Ok(mut per_req) => {
+                // Resolve in reverse so pop() hands each request its own
+                // outputs without index juggling.
+                for (tx, wait) in txs.into_iter().zip(waits).rev() {
+                    let ds = per_req.pop().expect("one output set per request");
+                    tx.resolve(Ok(ServeReply {
+                        ds,
+                        wait,
+                        service,
+                        batch_requests: n_reqs,
+                        order,
+                    }));
+                }
+            }
+            Err(err) => {
+                for tx in txs {
+                    tx.resolve(Err(err.clone()));
+                }
+            }
+        }
+        for t in tenants {
+            self.shared.release(t);
+        }
+    }
+
+    /// Phase 1 of the pair-batch engine — everything that needs **no
+    /// workers**: operand resolution, cross-operand shape checks, and
+    /// the schedule fetch (brief cache-wide lock). Runs without the
+    /// pool lease so a sync `Coordinator` sharing the pool is never
+    /// blocked behind planning. Per-request shapes were validated at
+    /// batch assembly and the coalesce key pins one head shape across
+    /// the batch, so every failure here is shared by construction —
+    /// rejecting the whole batch never punishes an innocent request.
+    fn prepare_pairs(&self, reqs: &[PairRequest<T>]) -> Result<PreparedPair<T>, ServiceError> {
+        let head = &reqs[0];
+        let a = self.shared.matrix(&head.a)?;
+        let (b_dense, b_sparse) = match &head.b {
+            BRef::Dense(name) => (Some(self.shared.dense(name)?), None),
+            BRef::Sparse(name) => (None, Some(self.shared.matrix(name)?)),
+        };
+        let (b_rows, b_cols) = match (&b_dense, &b_sparse) {
+            (Some(b), _) => (b.rows, b.cols),
+            (_, Some(b)) => (b.rows(), b.cols()),
+            _ => unreachable!("exactly one B side resolved"),
+        };
+        if b_rows != a.cols() {
+            return Err(ServiceError::Rejected(format!(
+                "B is {b_rows}x{b_cols} but A has {} cols",
+                a.cols()
+            )));
+        }
+        let ccol = head.cs[0].cols;
+        if head.cs[0].rows != b_cols {
+            return Err(ServiceError::Rejected(format!(
+                "C is {}x{ccol} but B has {b_cols} cols",
+                head.cs[0].rows
+            )));
+        }
+        let plan = if head.strategy == Strategy::TileFusion {
+            let op = pair_op(&a, &b_dense, &b_sparse);
+            let fusion_op = op.fusion_op(&head.cs[0]);
+            let mut cache = self.shared.cache.lock().unwrap();
+            let (h0, m0) = (cache.hits, cache.misses);
+            let p = cache.get_or_build(&fusion_op);
+            let cell = cache.tune_cell(&fusion_op).expect("entry just built");
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.schedule_cache_hits += cache.hits - h0;
+            m.total_schedule_builds += cache.misses - m0;
+            m.schedule_cache_evictions = cache.evictions;
+            Some((p, cell))
+        } else {
+            None
+        };
+        Ok(PreparedPair { a, b_dense, b_sparse, plan, ccol })
+    }
+
+    /// Phase 2 — executed while holding the pool lease: the tuned-strip
+    /// decision (timing runs behind the per-key slot, so tenants on
+    /// other keys are never blocked behind it) and one executor serving
+    /// every request's `cs`.
+    fn run_prepared(
+        &self,
+        pool: &ThreadPool,
+        prep: &PreparedPair<T>,
+        reqs: &[PairRequest<T>],
+    ) -> Vec<Vec<Dense<T>>> {
+        let head = &reqs[0];
+        let op = pair_op(&prep.a, &prep.b_dense, &prep.b_sparse);
+        let ccol = prep.ccol;
+        let (schedule, strip) = match &prep.plan {
+            Some((p, cell)) => {
+                let strip = match cell.get() {
+                    Some(tuned) => tuned,
+                    None => {
+                        // Hold only this key's slot across the timing.
+                        let mut slot = cell.lock();
+                        match *slot {
+                            Some(tuned) => tuned, // same-key contender tuned first
+                            None => {
+                                let cands = strip_candidates(p.strip_width, ccol);
+                                let picked = if cands.len() == 1 {
+                                    cands[0]
+                                } else {
+                                    self.shared.metrics.lock().unwrap().strip_tunes += 1;
+                                    let mut ex = Fused::new(op, p);
+                                    let mut scratch = Dense::zeros(op.n_second(), ccol);
+                                    StripTuner::default().pick(&cands, |mode| {
+                                        ex.set_strip(*mode);
+                                        ex.run(pool, &head.cs[0], &mut scratch);
+                                    })
+                                };
+                                *slot = Some(picked);
+                                picked
+                            }
+                        }
+                    }
+                };
+                (Some(&**p), strip)
+            }
+            None => (None, StripMode::Auto),
+        };
+
+        // One flat batch through one executor, then hand the outputs
+        // back out per request.
+        let cs: Vec<&Dense<T>> = reqs.iter().flat_map(|r| r.cs.iter()).collect();
+        let mut flat: Vec<Dense<T>> =
+            cs.iter().map(|_| Dense::zeros(op.n_second(), ccol)).collect();
+        execute_pair_batch(pool, op, head.strategy, schedule, strip, &cs, &mut flat);
+        let mut it = flat.into_iter();
+        reqs.iter()
+            .map(|r| (0..r.cs.len()).map(|_| it.next().expect("output per C")).collect())
+            .collect()
+    }
+
+    /// Resolve (or reuse) a bound chain executor and run every request's
+    /// inputs through it; latency pairs are served at step boundaries
+    /// of bulk chains.
+    fn run_chain_batch(&mut self, pri: Priority, batch: Vec<Job<T>>) {
+        let t0 = Instant::now();
+        let order = self.next_seq();
+        let mut tenants = Vec::with_capacity(batch.len());
+        let mut waits = Vec::with_capacity(batch.len());
+        let mut reqs = Vec::with_capacity(batch.len());
+        let mut txs = Vec::with_capacity(batch.len());
+        for job in batch {
+            let (r, tx) = match job.kind {
+                JobKind::Chain(r, tx) => (r, tx),
+                JobKind::Pair(..) => unreachable!("chain batch holds only chains"),
+            };
+            if let Err(e) = Self::validate_chain(&r) {
+                self.reject_one(job.tenant, tx, e);
+                continue;
+            }
+            tenants.push(job.tenant);
+            waits.push(t0.saturating_duration_since(job.enqueued));
+            reqs.push(r);
+            txs.push(tx);
+        }
+        if reqs.is_empty() {
+            return;
+        }
+        let n_reqs = reqs.len();
+
+        let outcome = self.execute_chains(pri, &reqs);
+        let service = t0.elapsed();
+        {
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.batches += 1;
+            m.requests += n_reqs as u64;
+            m.chain_requests += n_reqs as u64;
+            m.coalesced_requests += n_reqs as u64 - 1;
+            m.total_service += service;
+            m.total_exec += service;
+            for w in &waits {
+                m.total_wait += *w;
+            }
+        }
+        match outcome {
+            Ok(mut per_req) => {
+                for (tx, wait) in txs.into_iter().zip(waits).rev() {
+                    let ds = per_req.pop().expect("one output set per request");
+                    tx.resolve(Ok(ServeReply {
+                        ds,
+                        wait,
+                        service,
+                        batch_requests: n_reqs,
+                        order,
+                    }));
+                }
+            }
+            Err(err) => {
+                if err == ServiceError::Cancelled {
+                    self.shared.metrics.lock().unwrap().cancelled += n_reqs as u64;
+                }
+                for tx in txs {
+                    tx.resolve(Err(err.clone()));
+                }
+            }
+        }
+        for t in tenants {
+            self.shared.release(t);
+        }
+    }
+
+    fn execute_chains(
+        &mut self,
+        pri: Priority,
+        reqs: &[ChainRequest<T>],
+    ) -> Result<Vec<Vec<Dense<T>>>, ServiceError> {
+        // Per-request validation ran at batch assembly; the coalesce key
+        // pins step structure and input shape across the batch.
+        let head = &reqs[0];
+        let (in_rows, in_cols) = (head.xs[0].rows, head.xs[0].cols);
+
+        let key = ChainKey {
+            steps: head.steps.clone(),
+            strategy: head.strategy,
+            in_rows,
+            in_cols,
+            gen: self.shared.registry_gen.load(Ordering::SeqCst),
+        };
+        // Resolution, planning, and binding need no workers — the pool
+        // lease is taken only for the runs below.
+        let mut exec = match self.take_exec(&key) {
+            Some(exec) => exec,
+            None => self.bind_chain(head, in_rows, in_cols)?,
+        };
+
+        let (out_rows, out_cols) = exec.out_dims();
+        let chain_steps = exec.n_steps();
+        let mut outputs: Vec<Vec<Dense<T>>> = Vec::with_capacity(reqs.len());
+        let shared = Arc::clone(&self.shared);
+        let pool = shared.pool.lease();
+        let mut cancelled = false;
+        'all: for r in reqs {
+            let mut ds = Vec::with_capacity(r.xs.len());
+            for x in &r.xs {
+                let mut d = Dense::zeros(out_rows, out_cols);
+                let done = exec.run_controlled(
+                    &pool,
+                    x,
+                    &mut d,
+                    |step| {
+                        if shared.aborting.load(Ordering::SeqCst) {
+                            return StepControl::Cancel;
+                        }
+                        // Between barriers of a bulk chain: serve any
+                        // queued latency pairs before the next step.
+                        if pri == Priority::Bulk && step > 0 {
+                            self.preempt_latency_pairs(&pool);
+                        }
+                        StepControl::Continue
+                    },
+                    |_, _| {},
+                );
+                if !done {
+                    cancelled = true;
+                    break 'all;
+                }
+                ds.push(d);
+            }
+            outputs.push(ds);
+        }
+        if !cancelled {
+            self.shared.metrics.lock().unwrap().chain_steps +=
+                (chain_steps * reqs.iter().map(|r| r.xs.len()).sum::<usize>()) as u64;
+            self.put_exec(key, exec);
+            Ok(outputs)
+        } else {
+            // Keep the executor (it stays bound and reusable), but the
+            // batch's tickets all cancel.
+            self.put_exec(key, exec);
+            Err(ServiceError::Cancelled)
+        }
+    }
+
+    /// Serve queued latency-tier pair jobs, one at a time, on the
+    /// already-leased pool — called between chain steps, where the pool
+    /// is idle. Bounded per boundary (`max_coalesce` jobs) so a
+    /// sustained latency stream delays a bulk chain, but can never
+    /// starve it outright: the chain always advances a step between
+    /// drains.
+    fn preempt_latency_pairs(&self, pool: &ThreadPool) {
+        for _ in 0..self.shared.cfg.max_coalesce.max(1) {
+            let mut jobs = self
+                .queue
+                .drain_latency_matching(1, |j| matches!(&j.kind, JobKind::Pair(..)));
+            let Some(job) = jobs.pop() else { break };
+            self.shared.metrics.lock().unwrap().preempted_pairs += 1;
+            self.run_preempted_pair(pool, job);
+        }
+    }
+
+    /// A single preempted pair: the non-coalescing, non-reentrant slice
+    /// of `run_pair_batch` (no `&mut self` available mid-chain).
+    fn run_preempted_pair(&self, pool: &ThreadPool, job: Job<T>) {
+        let t0 = Instant::now();
+        let order = self.next_seq();
+        let wait = t0.saturating_duration_since(job.enqueued);
+        let tenant = job.tenant;
+        let (req, tx) = match job.kind {
+            JobKind::Pair(r, tx) => (r, tx),
+            JobKind::Chain(..) => unreachable!("preemption only drains pairs"),
+        };
+        if let Err(e) = Self::validate_pair(&req) {
+            self.reject_one(tenant, tx, e);
+            return;
+        }
+        // The chain's lease is already held on this thread — reuse it,
+        // never re-lease (the pool mutex is not reentrant).
+        let outcome = self
+            .prepare_pairs(std::slice::from_ref(&req))
+            .map(|prep| self.run_prepared(pool, &prep, std::slice::from_ref(&req)));
+        let service = t0.elapsed();
+        {
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.batches += 1;
+            m.requests += 1;
+            m.total_service += service;
+            m.total_exec += service;
+            m.total_wait += wait;
+        }
+        match outcome {
+            Ok(mut per_req) => {
+                let ds = per_req.pop().expect("one output set");
+                tx.resolve(Ok(ServeReply { ds, wait, service, batch_requests: 1, order }));
+            }
+            Err(err) => tx.resolve(Err(err)),
+        }
+        self.shared.release(tenant);
+    }
+
+    /// Resolve named operands and bind a fresh chain executor (plan
+    /// served from the shared schedule cache, unfused steps on trivial
+    /// schedules, tuned strips replayed where a pair request already
+    /// timed the key).
+    fn bind_chain(
+        &self,
+        head: &ChainRequest<T>,
+        in_rows: usize,
+        in_cols: usize,
+    ) -> Result<ChainExec<T>, ServiceError> {
+        let mut ops = Vec::with_capacity(head.steps.len());
+        let mut strategies = Vec::with_capacity(head.steps.len());
+        for (s, step) in head.steps.iter().enumerate() {
+            let a = self.shared.matrix(&step.a)?;
+            let op = match &step.operand {
+                StepOperand::Weights(name) => {
+                    ChainStepOp::GemmFlowB { a, w: (*self.shared.dense(name)?).clone() }
+                }
+                StepOperand::Dense(name) => {
+                    ChainStepOp::GemmFlowC { a, b: (*self.shared.dense(name)?).clone() }
+                }
+                StepOperand::Sparse(name) => {
+                    ChainStepOp::SpmmFlowC { a, b: self.shared.matrix(name)? }
+                }
+            };
+            strategies.push(match step.strategy.unwrap_or(head.strategy) {
+                Strategy::TileFusion => StepStrategy::Fused,
+                Strategy::Unfused => StepStrategy::Unfused,
+                other => {
+                    return Err(ServiceError::Rejected(format!(
+                        "chain step {s}: strategy {other:?} is pair-only"
+                    )))
+                }
+            });
+            ops.push(op);
+        }
+
+        let reject = |e: crate::scheduler::chain::ChainError| {
+            ServiceError::Rejected(e.to_string())
+        };
+        let (plan, tuned) = {
+            let specs = chain_specs(&ops, in_rows, in_cols).map_err(reject)?;
+            let mut cache = self.shared.cache.lock().unwrap();
+            let (h0, m0) = (cache.hits, cache.misses);
+            let n_cores = self.shared.params.n_cores;
+            let mut trivial: HashMap<u64, Arc<FusedSchedule>> = HashMap::new();
+            let plan = ChainPlanner::new(self.shared.params)
+                .plan_with(in_rows, in_cols, &specs, |s, op| match strategies[s] {
+                    StepStrategy::Fused => cache.get_or_build(op),
+                    StepStrategy::Unfused => Arc::clone(
+                        trivial
+                            .entry(op.a.structure_hash())
+                            .or_insert_with(|| Arc::new(unfused_schedule(op.a, n_cores))),
+                    ),
+                })
+                .map_err(reject)?;
+            let tuned: Vec<Option<StripMode>> = specs
+                .iter()
+                .zip(&strategies)
+                .map(|(spec, st)| match st {
+                    StepStrategy::Fused => cache.tuned_strip(&spec.op),
+                    StepStrategy::Unfused => None,
+                })
+                .collect();
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.schedule_cache_hits += cache.hits - h0;
+            m.total_schedule_builds += cache.misses - m0;
+            m.schedule_cache_evictions = cache.evictions;
+            (plan, tuned)
+        };
+
+        let mut exec = ChainExec::new(ops, &plan).map_err(reject)?;
+        exec.set_strategies(&strategies);
+        for (s, t) in tuned.iter().enumerate() {
+            if let Some(mode) = t {
+                exec.set_strip(s, *mode);
+            }
+        }
+        Ok(exec)
+    }
+
+    fn take_exec(&mut self, key: &ChainKey) -> Option<ChainExec<T>> {
+        let idx = self.execs.iter().position(|c| &c.key == key)?;
+        Some(self.execs.swap_remove(idx).exec)
+    }
+
+    fn put_exec(&mut self, key: ChainKey, exec: ChainExec<T>) {
+        let cap = self.shared.cfg.exec_cache_capacity;
+        if cap == 0 {
+            return;
+        }
+        // Purge executors stranded by a re-registration: their gen can
+        // never match again, so they would otherwise pin large bound
+        // buffers until capacity eviction got around to them.
+        let gen = self.shared.registry_gen.load(Ordering::SeqCst);
+        self.execs.retain(|c| c.key.gen == gen);
+        if key.gen != gen {
+            return;
+        }
+        if self.execs.len() >= cap {
+            if let Some(idx) = self
+                .execs
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, c)| c.last_used)
+                .map(|(i, _)| i)
+            {
+                self.execs.swap_remove(idx);
+            }
+        }
+        self.execs.push(CachedExec { key, exec, last_used: self.seq.get() });
+    }
+}
+
+/// Coalesce key of a pair request: same registered operands, same
+/// strategy, same flowing shape ⇒ same schedule-cache key ⇒ one batch
+/// (rows included so a shape-mismatched request can never ride — and
+/// poison — another request's batch).
+fn pair_key<T>(r: &PairRequest<T>) -> (&str, &BRef, Strategy, Option<(usize, usize)>) {
+    (&r.a, &r.b, r.strategy, r.cs.first().map(|c| (c.rows, c.cols)))
+}
+
+type ChainReqKey<'a> = (&'a [ChainStepReq], Strategy, Option<(usize, usize)>);
+
+/// Coalesce key of a chain request: identical named step structure,
+/// same default strategy, same input shape.
+fn chain_req_key<T>(r: &ChainRequest<T>) -> ChainReqKey<'_> {
+    (&r.steps, r.strategy, r.xs.first().map(|x| (x.rows, x.cols)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::reference::reference;
+    use crate::sparse::gen;
+
+    fn server() -> Server<f64> {
+        Server::new(2, SchedulerParams { ct_size: 64, ..Default::default() })
+    }
+
+    fn register_demo(s: &Server<f64>) -> Csr<f64> {
+        let a = Csr::<f64>::with_random_values(gen::poisson2d(16, 16), 1, -1.0, 1.0);
+        s.register_matrix("A", a.clone());
+        a
+    }
+
+    fn pair_req(cs: Vec<Dense<f64>>) -> PairRequest<f64> {
+        PairRequest {
+            a: "A".into(),
+            b: BRef::Dense("B".into()),
+            cs,
+            strategy: Strategy::TileFusion,
+        }
+    }
+
+    #[test]
+    fn pair_round_trip_through_the_queue() {
+        let srv = server();
+        let a = register_demo(&srv);
+        let b = Dense::<f64>::randn(256, 16, 2);
+        srv.register_dense("B", b.clone());
+        let c = Dense::<f64>::randn(16, 8, 3);
+        let expect = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        let reply = srv.pair_blocking(1, Priority::Latency, pair_req(vec![c])).unwrap();
+        assert_eq!(reply.ds.len(), 1);
+        assert!(reply.ds[0].max_abs_diff(&expect) < 1e-10);
+        assert_eq!(reply.batch_requests, 1);
+        let m = srv.metrics();
+        assert_eq!((m.queued, m.requests, m.batches), (1, 1, 1));
+    }
+
+    #[test]
+    fn chain_round_trip_and_exec_reuse() {
+        let srv = server();
+        let a = register_demo(&srv);
+        let w1 = Dense::<f64>::randn(8, 16, 1);
+        let w2 = Dense::<f64>::randn(16, 4, 2);
+        srv.register_dense("w1", w1.clone());
+        srv.register_dense("w2", w2.clone());
+        let x = Dense::<f64>::randn(256, 8, 3);
+        let h = reference(&PairOp::gemm_spmm(&a, &x), &w1);
+        let expect = reference(&PairOp::gemm_spmm(&a, &h), &w2);
+        let step = |w: &str| ChainStepReq {
+            a: "A".into(),
+            operand: StepOperand::Weights(w.into()),
+            strategy: None,
+        };
+        let mk = || ChainRequest {
+            steps: vec![step("w1"), step("w2")],
+            xs: vec![x.clone()],
+            strategy: Strategy::TileFusion,
+        };
+        let r1 = srv.chain_blocking(7, Priority::Bulk, mk()).unwrap();
+        assert!(r1.ds[0].max_abs_diff(&expect) < 1e-10);
+        // Second submission reuses the warm bound executor: no new
+        // schedule activity at all.
+        let (_, hits1, misses1) = srv.cache_stats();
+        let r2 = srv.chain_blocking(7, Priority::Bulk, mk()).unwrap();
+        assert!(r2.ds[0].max_abs_diff(&expect) < 1e-10);
+        let (_, hits2, misses2) = srv.cache_stats();
+        assert_eq!((hits2, misses2), (hits1, misses1), "warm exec skips the cache");
+        assert_eq!(srv.metrics().chain_requests, 2);
+    }
+
+    #[test]
+    fn coalescing_batches_same_key_requests() {
+        let srv = server();
+        let a = register_demo(&srv);
+        let b = Dense::<f64>::randn(256, 8, 5);
+        srv.register_dense("B", b.clone());
+        // Saturate the dispatcher with one slow-ish head job, then pile
+        // same-key jobs behind it so the drain finds them queued.
+        let tickets: Vec<_> = (0..6)
+            .map(|i| {
+                let c = Dense::<f64>::randn(8, 4, 10 + i);
+                srv.submit_pair(i as u64, Priority::Bulk, pair_req(vec![c])).unwrap()
+            })
+            .collect();
+        let mut total_batched = 0;
+        for (i, t) in tickets.into_iter().enumerate() {
+            let reply = t.wait().unwrap();
+            let c = Dense::<f64>::randn(8, 4, 10 + i as u64);
+            let expect = reference(&PairOp::gemm_spmm(&a, &b), &c);
+            assert!(reply.ds[0].max_abs_diff(&expect) < 1e-10, "request {i}");
+            total_batched = total_batched.max(reply.batch_requests);
+        }
+        let m = srv.metrics();
+        assert_eq!(m.requests, 6);
+        assert_eq!(
+            m.coalesced_requests,
+            6 - m.batches,
+            "every request beyond each batch head coalesced"
+        );
+        assert!(total_batched >= 1);
+    }
+
+    #[test]
+    fn admission_control_tenant_cap_and_queue_bound() {
+        let a = Csr::<f64>::with_random_values(gen::poisson2d(16, 16), 1, -1.0, 1.0);
+        let cfg = ServerConfig {
+            queue_capacity: 2,
+            tenant_inflight_cap: 1,
+            coalesce: false,
+            ..Default::default()
+        };
+        let srv: Server<f64> =
+            Server::with_config(SharedPool::new(2), SchedulerParams::default(), cfg);
+        srv.register_matrix("A", a);
+        srv.register_dense("B", Dense::<f64>::randn(256, 8, 1));
+        // Big-enough work that jobs stay queued while we probe.
+        let mk = || pair_req(vec![Dense::<f64>::randn(8, 64, 2)]);
+        let t1 = srv.try_submit_pair(1, Priority::Bulk, mk()).unwrap();
+        // Tenant 1 is at its cap.
+        match srv.try_submit_pair(1, Priority::Bulk, mk()) {
+            Err(ServiceError::BusyTenant) => {}
+            other => panic!("expected BusyTenant, got {:?}", other.is_ok()),
+        }
+        // Other tenants keep filling until the queue bound trips; the
+        // dispatcher is draining concurrently, so accept either a
+        // successful admit or BusyQueue — but the queue must refuse at
+        // some depth ≤ capacity.
+        let mut saw_busy = false;
+        let mut extra = Vec::new();
+        for t in 2..40u64 {
+            match srv.try_submit_pair(t, Priority::Bulk, mk()) {
+                Ok(tk) => extra.push(tk),
+                Err(ServiceError::BusyQueue) => {
+                    saw_busy = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(saw_busy, "bounded queue must reject under load");
+        let m = srv.metrics();
+        assert!(m.rejected_tenant_cap >= 1);
+        assert!(m.rejected_queue_full >= 1);
+        // Everything admitted still resolves.
+        t1.wait().unwrap();
+        for t in extra {
+            t.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_operands_reject_not_panic() {
+        let srv = server();
+        register_demo(&srv);
+        let err = srv
+            .pair_blocking(
+                1,
+                Priority::Latency,
+                PairRequest {
+                    a: "A".into(),
+                    b: BRef::Dense("missing".into()),
+                    cs: vec![Dense::<f64>::zeros(4, 4)],
+                    strategy: Strategy::Unfused,
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::Rejected(ref m) if m.contains("missing")), "{err}");
+        // Shape mismatch rejects too (no dispatcher panic).
+        srv.register_dense("B", Dense::<f64>::randn(256, 8, 1));
+        let err = srv
+            .pair_blocking(
+                1,
+                Priority::Latency,
+                pair_req(vec![Dense::<f64>::zeros(9, 4)]),
+            )
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::Rejected(_)), "{err}");
+        // The server survives: a good request still works.
+        let c = Dense::<f64>::randn(8, 4, 2);
+        assert!(srv.pair_blocking(1, Priority::Latency, pair_req(vec![c])).is_ok());
+    }
+
+    #[test]
+    fn graceful_shutdown_drains_queued_work() {
+        let srv = server();
+        register_demo(&srv);
+        srv.register_dense("B", Dense::<f64>::randn(256, 8, 1));
+        let tickets: Vec<_> = (0..4)
+            .map(|i| {
+                srv.submit_pair(
+                    i,
+                    Priority::Bulk,
+                    pair_req(vec![Dense::<f64>::randn(8, 8, i)]),
+                )
+                .unwrap()
+            })
+            .collect();
+        let metrics = srv.shutdown();
+        assert_eq!(metrics.requests, 4, "graceful shutdown runs everything queued");
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn drop_aborts_and_cancels() {
+        let srv = server();
+        register_demo(&srv);
+        srv.register_dense("B", Dense::<f64>::randn(256, 8, 1));
+        let tickets: Vec<_> = (0..8)
+            .map(|i| {
+                srv.submit_pair(
+                    i,
+                    Priority::Bulk,
+                    pair_req(vec![Dense::<f64>::randn(8, 32, i)]),
+                )
+                .unwrap()
+            })
+            .collect();
+        drop(srv);
+        // Every ticket resolves exactly once — completed or cancelled,
+        // never stranded.
+        for t in tickets {
+            match t.wait() {
+                Ok(_) | Err(ServiceError::Cancelled) => {}
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn server_shares_pool_with_sync_coordinator() {
+        use super::super::service::{Coordinator, Request};
+        let srv = server();
+        let a = register_demo(&srv);
+        srv.register_dense("B", Dense::<f64>::randn(256, 8, 1));
+        let mut coord: Coordinator<f64> =
+            Coordinator::with_pool(srv.pool(), SchedulerParams::default());
+        coord.register_matrix("A", a.clone());
+        // Interleave sync and queued requests over the same workers.
+        let b = Dense::<f64>::randn(256, 8, 1);
+        for i in 0..3 {
+            let c = Dense::<f64>::randn(8, 4, 40 + i);
+            let expect = reference(&PairOp::gemm_spmm(&a, &b), &c);
+            let tk = srv.submit_pair(0, Priority::Bulk, pair_req(vec![c.clone()])).unwrap();
+            let sync = coord
+                .submit(&Request {
+                    a: "A".into(),
+                    b_dense: Some(b.clone()),
+                    b_sparse: None,
+                    cs: vec![c],
+                    strategy: Strategy::TileFusion,
+                })
+                .unwrap();
+            assert!(sync.ds[0].max_abs_diff(&expect) < 1e-10);
+            assert!(tk.wait().unwrap().ds[0].max_abs_diff(&expect) < 1e-10);
+        }
+    }
+}

@@ -7,11 +7,11 @@ use super::cache::ScheduleCache;
 use crate::core::{Dense, Scalar};
 use crate::exec::chain::{chain_specs, ChainExec, ChainStepOp, StepStrategy};
 use crate::exec::{
-    AtomicTiling, Fused, Overlapped, PairExec, PairOp, StripMode, TensorStyle, ThreadPool,
-    Unfused,
+    AtomicTiling, Fused, Overlapped, PairExec, PairOp, SharedPool, StripMode, TensorStyle,
+    ThreadPool, Unfused,
 };
 use crate::scheduler::chain::{unfused_schedule, ChainPlanner, ChainStats};
-use crate::scheduler::SchedulerParams;
+use crate::scheduler::{FusedSchedule, SchedulerParams};
 use crate::sparse::Csr;
 use crate::tuning::{strip_candidates, StripTuner};
 use anyhow::{anyhow, bail, Result};
@@ -110,6 +110,9 @@ pub struct ChainResponse<T> {
 pub struct Metrics {
     pub requests: u64,
     pub matrices_registered: u64,
+    /// Dense operands registered (server registry; sparse operands
+    /// count under `matrices_registered`).
+    pub denses_registered: u64,
     pub total_exec: Duration,
     pub total_schedule_builds: u64,
     pub schedule_cache_hits: u64,
@@ -123,29 +126,66 @@ pub struct Metrics {
     /// Schedules evicted from the bounded cache (mirrors
     /// `ScheduleCache::evictions`).
     pub schedule_cache_evictions: u64,
+    // --- async service (coordinator::server) counters; stay zero on
+    // --- the synchronous Coordinator path.
+    /// Requests admitted to the submission queue.
+    pub queued: u64,
+    /// Batched executions the dispatcher issued (each serves ≥ 1
+    /// requests).
+    pub batches: u64,
+    /// Requests that rode a coalesced batch another request headed —
+    /// schedule fetch, tuned-strip lookup, and executor bind amortized.
+    pub coalesced_requests: u64,
+    /// `try_submit` rejections: queue at capacity.
+    pub rejected_queue_full: u64,
+    /// `try_submit` rejections: tenant at its in-flight cap.
+    pub rejected_tenant_cap: u64,
+    /// Tickets resolved `Cancelled` (shutdown/abort before execution).
+    pub cancelled: u64,
+    /// Latency-tier pair requests served at a bulk chain's step
+    /// boundaries (the between-steps preemption point).
+    pub preempted_pairs: u64,
+    /// Queue depth sampled when the dispatcher picked up the most
+    /// recent job.
+    pub queue_depth_last: u64,
+    /// Total time requests spent queued before dispatch.
+    pub total_wait: Duration,
+    /// Total dispatcher execution time across batches (resolve + plan +
+    /// run; the per-request share of a coalesced batch is its whole
+    /// batch's service time).
+    pub total_service: Duration,
 }
 
 /// The coordinator service.
 pub struct Coordinator<T> {
-    pool: ThreadPool,
+    pool: SharedPool,
     cache: ScheduleCache,
     matrices: HashMap<String, Arc<Csr<T>>>,
     metrics: Metrics,
 }
 
 impl<T: Scalar> Coordinator<T> {
-    pub fn new(n_threads: usize, mut params: SchedulerParams) -> Self {
-        params.n_cores = n_threads.max(1);
+    pub fn new(n_threads: usize, params: SchedulerParams) -> Self {
+        Self::with_pool(SharedPool::new(n_threads), params)
+    }
+
+    /// Build over an existing shared pool — how a synchronous
+    /// `Coordinator` and an async [`Server`](super::Server) run side by
+    /// side on one set of workers (leases serialize their executions).
+    pub fn with_pool(pool: SharedPool, mut params: SchedulerParams) -> Self {
+        params.n_cores = pool.n_threads();
         params.elem_bytes = T::BYTES;
         Self {
-            pool: ThreadPool::new(n_threads),
+            pool,
             cache: ScheduleCache::new(params),
             matrices: HashMap::new(),
             metrics: Metrics::default(),
         }
     }
 
-    pub fn pool(&self) -> &ThreadPool {
+    /// The shared pool handle (clone it to share workers with a server
+    /// or another coordinator; executions take leases internally).
+    pub fn pool(&self) -> &SharedPool {
         &self.pool
     }
 
@@ -193,7 +233,10 @@ impl<T: Scalar> Coordinator<T> {
         let mut ds: Vec<Dense<T>> =
             req.cs.iter().map(|_| Dense::zeros(op.n_second(), ccol)).collect();
 
-        match req.strategy {
+        // The schedule fetch/build needs no workers — the lease is
+        // taken only around executions (tuning runs, batched runs) so a
+        // dispatcher sharing this pool is not stalled behind planning.
+        let plan = match req.strategy {
             Strategy::TileFusion => {
                 let fusion_op = op.fusion_op(&req.cs[0]);
                 let hits0 = self.cache.hits;
@@ -215,49 +258,30 @@ impl<T: Scalar> Coordinator<T> {
                             cands[0]
                         } else {
                             self.metrics.strip_tunes += 1;
-                            let pool = &self.pool;
+                            let pool = self.pool.lease();
                             let mut ex = Fused::new(op, &plan);
                             let mut scratch = Dense::zeros(op.n_second(), ccol);
                             StripTuner::default().pick(&cands, |mode| {
                                 ex.set_strip(*mode);
-                                ex.run(pool, &req.cs[0], &mut scratch);
+                                ex.run(&pool, &req.cs[0], &mut scratch);
                             })
                         };
                         self.cache.set_tuned_strip(&fusion_op, picked);
                         picked
                     }
                 };
-                let mut ex = Fused::new(op, &plan).with_strip(strip);
-                for (c, d) in req.cs.iter().zip(&mut ds) {
-                    ex.run(&self.pool, c, d);
-                }
+                Some((plan, strip))
             }
-            Strategy::Unfused => {
-                let mut ex = Unfused::new(op);
-                for (c, d) in req.cs.iter().zip(&mut ds) {
-                    ex.run(&self.pool, c, d);
-                }
-            }
-            Strategy::AtomicTiling => {
-                let mut ex = AtomicTiling::new(op, self.pool.n_threads() * 4);
-                for (c, d) in req.cs.iter().zip(&mut ds) {
-                    ex.run(&self.pool, c, d);
-                }
-            }
-            Strategy::OverlappedTiling => {
-                let mut ex =
-                    Overlapped::new(op, self.pool.n_threads() * 4, self.pool.n_threads());
-                for (c, d) in req.cs.iter().zip(&mut ds) {
-                    ex.run(&self.pool, c, d);
-                }
-            }
-            Strategy::TensorStyle => {
-                let mut ex = TensorStyle::new(op, self.pool.n_threads());
-                for (c, d) in req.cs.iter().zip(&mut ds) {
-                    ex.run(&self.pool, c, d);
-                }
-            }
-        }
+            _ => None,
+        };
+        let cs: Vec<&Dense<T>> = req.cs.iter().collect();
+        let (schedule, strip) = match &plan {
+            Some((p, s)) => (Some(&**p), *s),
+            None => (None, StripMode::Auto),
+        };
+        let pool = self.pool.lease();
+        execute_pair_batch(&pool, op, req.strategy, schedule, strip, &cs, &mut ds);
+        drop(pool);
 
         let elapsed = t0.elapsed();
         self.metrics.requests += 1;
@@ -369,9 +393,11 @@ impl<T: Scalar> Coordinator<T> {
         let (out_rows, out_cols) = exec.out_dims();
         let mut ds: Vec<Dense<T>> =
             xs.iter().map(|_| Dense::zeros(out_rows, out_cols)).collect();
+        let pool = self.pool.lease();
         for (x, d) in xs.iter().zip(&mut ds) {
-            exec.run(&self.pool, x, d);
+            exec.run(&pool, x, d);
         }
+        drop(pool);
 
         let elapsed = t0.elapsed();
         self.metrics.requests += 1;
@@ -385,6 +411,58 @@ impl<T: Scalar> Coordinator<T> {
     /// Cache state (entries, hits, misses) for observability.
     pub fn cache_stats(&self) -> (usize, u64, u64) {
         (self.cache.len(), self.cache.hits, self.cache.misses)
+    }
+}
+
+/// Execute one strategy over a bound pair for a batch of `C`s — the
+/// strategy dispatch shared by the synchronous [`Coordinator::submit`]
+/// path and the async server's (possibly coalesced) batches. One
+/// executor serves the whole batch, so bind cost and workspaces
+/// amortize across every `C`. `plan` must be `Some` for
+/// [`Strategy::TileFusion`] (ignored otherwise); `strip` is the tuned
+/// or model pick for the fused arm.
+pub(crate) fn execute_pair_batch<'a, T: Scalar>(
+    pool: &ThreadPool,
+    op: PairOp<'a, T>,
+    strategy: Strategy,
+    plan: Option<&'a FusedSchedule>,
+    strip: StripMode,
+    cs: &[&Dense<T>],
+    ds: &mut [Dense<T>],
+) {
+    assert_eq!(cs.len(), ds.len(), "one output per batched C");
+    match strategy {
+        Strategy::TileFusion => {
+            let plan = plan.expect("TileFusion batch needs a schedule");
+            let mut ex = Fused::new(op, plan).with_strip(strip);
+            for (c, d) in cs.iter().zip(ds) {
+                ex.run(pool, c, d);
+            }
+        }
+        Strategy::Unfused => {
+            let mut ex = Unfused::new(op);
+            for (c, d) in cs.iter().zip(ds) {
+                ex.run(pool, c, d);
+            }
+        }
+        Strategy::AtomicTiling => {
+            let mut ex = AtomicTiling::new(op, pool.n_threads() * 4);
+            for (c, d) in cs.iter().zip(ds) {
+                ex.run(pool, c, d);
+            }
+        }
+        Strategy::OverlappedTiling => {
+            let mut ex = Overlapped::new(op, pool.n_threads() * 4, pool.n_threads());
+            for (c, d) in cs.iter().zip(ds) {
+                ex.run(pool, c, d);
+            }
+        }
+        Strategy::TensorStyle => {
+            let mut ex = TensorStyle::new(op, pool.n_threads());
+            for (c, d) in cs.iter().zip(ds) {
+                ex.run(pool, c, d);
+            }
+        }
     }
 }
 

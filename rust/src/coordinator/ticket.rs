@@ -1,0 +1,200 @@
+//! One-shot completion tickets — the "future" half of queue-and-dispatch.
+//!
+//! Submitting to the [`server`](super::server) returns a [`Ticket`]; the
+//! dispatcher resolves it through the matching [`TicketTx`] exactly once
+//! with the result, a rejection, or a cancellation. The resolve-once
+//! guarantee is structural: `TicketTx` is not clonable, resolving
+//! consumes it, and dropping an unresolved `TicketTx` (dispatcher
+//! panic, shutdown discarding queued work) resolves the ticket with
+//! [`ServiceError::Cancelled`] so no tenant ever blocks forever.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Why the service refused or abandoned a request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Admission control: the submission queue is at capacity. Retry,
+    /// back off, or use the blocking `submit_*` path.
+    BusyQueue,
+    /// Admission control: this tenant is at its in-flight cap.
+    BusyTenant,
+    /// The server shut down (or aborted) before the request ran.
+    Cancelled,
+    /// The request itself was invalid (unknown operand, bad shapes, …).
+    Rejected(String),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::BusyQueue => write!(f, "busy: submission queue full"),
+            ServiceError::BusyTenant => write!(f, "busy: tenant in-flight cap reached"),
+            ServiceError::Cancelled => write!(f, "cancelled before execution"),
+            ServiceError::Rejected(msg) => write!(f, "rejected: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+enum TicketState<R> {
+    Pending,
+    Done(Result<R, ServiceError>),
+    /// Result already handed out (resolve and take are both once-only).
+    Taken,
+}
+
+struct Cell<R> {
+    state: Mutex<TicketState<R>>,
+    done: Condvar,
+}
+
+/// The tenant's handle to a queued request. Wait (blocking), poll, or
+/// drop it — dropping never blocks the dispatcher.
+pub struct Ticket<R> {
+    cell: Arc<Cell<R>>,
+}
+
+/// The dispatcher's resolve-once handle. Not clonable; dropping it
+/// unresolved cancels the ticket.
+pub struct TicketTx<R> {
+    cell: Option<Arc<Cell<R>>>,
+}
+
+/// A connected (ticket, resolver) pair.
+pub fn ticket<R>() -> (Ticket<R>, TicketTx<R>) {
+    let cell =
+        Arc::new(Cell { state: Mutex::new(TicketState::Pending), done: Condvar::new() });
+    (Ticket { cell: Arc::clone(&cell) }, TicketTx { cell: Some(cell) })
+}
+
+impl<R> Ticket<R> {
+    /// Block until the dispatcher resolves this ticket and take the
+    /// result. Consumes the ticket — results are delivered exactly once.
+    pub fn wait(self) -> Result<R, ServiceError> {
+        let mut st = self.cell.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, TicketState::Taken) {
+                TicketState::Done(r) => return r,
+                TicketState::Pending => {
+                    *st = TicketState::Pending;
+                    st = self.cell.done.wait(st).unwrap();
+                }
+                TicketState::Taken => unreachable!("ticket result taken twice"),
+            }
+        }
+    }
+
+    /// [`Ticket::wait`] with a timeout: `Ok(result)` when resolved in
+    /// time, `Err(self)` (the still-live ticket) on timeout — the soak
+    /// driver's deadlock detector.
+    pub fn wait_timeout(self, dur: Duration) -> Result<Result<R, ServiceError>, Self> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut st = self.cell.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, TicketState::Taken) {
+                TicketState::Done(r) => return Ok(r),
+                TicketState::Pending => {
+                    *st = TicketState::Pending;
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        drop(st);
+                        return Err(self);
+                    }
+                    let (g, _) = self.cell.done.wait_timeout(st, deadline - now).unwrap();
+                    st = g;
+                }
+                TicketState::Taken => unreachable!("ticket result taken twice"),
+            }
+        }
+    }
+
+    /// True once the dispatcher resolved the ticket (non-blocking).
+    pub fn is_done(&self) -> bool {
+        !matches!(*self.cell.state.lock().unwrap(), TicketState::Pending)
+    }
+}
+
+impl<R> TicketTx<R> {
+    /// Resolve the ticket (consumes the resolver; exactly-once by
+    /// construction) and wake the waiter.
+    pub fn resolve(mut self, result: Result<R, ServiceError>) {
+        let cell = self.cell.take().expect("TicketTx resolved twice");
+        Self::deliver(&cell, result);
+    }
+
+    fn deliver(cell: &Cell<R>, result: Result<R, ServiceError>) {
+        let mut st = cell.state.lock().unwrap();
+        debug_assert!(
+            matches!(*st, TicketState::Pending),
+            "ticket resolved more than once"
+        );
+        *st = TicketState::Done(result);
+        cell.done.notify_all();
+    }
+}
+
+impl<R> Drop for TicketTx<R> {
+    fn drop(&mut self) {
+        // Safety net: an unresolved resolver (dispatcher panic, queue
+        // discarded at shutdown) cancels rather than strands the waiter.
+        if let Some(cell) = self.cell.take() {
+            Self::deliver(&cell, Err(ServiceError::Cancelled));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_then_wait() {
+        let (t, tx) = ticket::<u32>();
+        assert!(!t.is_done());
+        tx.resolve(Ok(7));
+        assert!(t.is_done());
+        assert_eq!(t.wait(), Ok(7));
+    }
+
+    #[test]
+    fn wait_blocks_until_resolved_from_another_thread() {
+        let (t, tx) = ticket::<u32>();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx.resolve(Err(ServiceError::Rejected("nope".into())));
+        });
+        assert_eq!(t.wait(), Err(ServiceError::Rejected("nope".into())));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_tx_cancels() {
+        let (t, tx) = ticket::<u32>();
+        drop(tx);
+        assert_eq!(t.wait(), Err(ServiceError::Cancelled));
+    }
+
+    #[test]
+    fn wait_timeout_returns_ticket_then_result() {
+        let (t, tx) = ticket::<u32>();
+        let t = match t.wait_timeout(Duration::from_millis(10)) {
+            Err(t) => t,
+            Ok(_) => panic!("unresolved ticket must time out"),
+        };
+        tx.resolve(Ok(3));
+        match t.wait_timeout(Duration::from_secs(5)) {
+            Ok(r) => assert_eq!(r, Ok(3)),
+            Err(_) => panic!("resolved ticket must not time out"),
+        }
+    }
+
+    #[test]
+    fn error_display() {
+        assert!(ServiceError::BusyQueue.to_string().contains("queue full"));
+        assert!(ServiceError::BusyTenant.to_string().contains("in-flight cap"));
+        assert!(ServiceError::Cancelled.to_string().contains("cancelled"));
+        assert!(ServiceError::Rejected("x".into()).to_string().contains("x"));
+    }
+}

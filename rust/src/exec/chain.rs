@@ -61,6 +61,24 @@ impl<T: Scalar> ChainStepOp<T> {
     }
 }
 
+/// What the inter-step hook of [`ChainExec::run_controlled`] tells the
+/// executor to do next. The hook fires only **between** steps — after
+/// the previous step's barrier completed and before the next step's
+/// first wavefront is issued — so acting on it never interrupts a
+/// parallel region mid-barrier: the pool is idle at every control
+/// point. This is where the service dispatcher preempts a bulk chain
+/// to serve latency-sensitive pair requests, and where shutdown
+/// cancels in-flight chains.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StepControl {
+    /// Proceed with the next step.
+    #[default]
+    Continue,
+    /// Abandon the remaining steps; `run_controlled` returns `false`
+    /// and the output buffer holds no meaningful result.
+    Cancel,
+}
+
 /// Executor strategy of one chain step.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum StepStrategy {
@@ -337,6 +355,28 @@ impl<T: Scalar> ChainExec<T> {
         out: &mut Dense<T>,
         mut tap: impl FnMut(usize, &mut Dense<T>),
     ) {
+        let done = self.run_controlled(pool, x, out, |_| StepControl::Continue, &mut tap);
+        debug_assert!(done, "unconditional Continue cannot cancel");
+    }
+
+    /// [`ChainExec::run_with`] plus an inter-step control point: before
+    /// each step `s` (including step 0), `ctrl(s)` decides whether the
+    /// chain proceeds. Control points sit between barriers — the pool is
+    /// idle when `ctrl` runs, so the hook may drive *other* work on the
+    /// same pool (how the dispatcher lets latency-sensitive pairs
+    /// overtake a bulk chain) or return [`StepControl::Cancel`] to
+    /// abandon the chain (shutdown). Returns `true` when every step ran
+    /// and `out` holds the chain's result, `false` on cancellation (the
+    /// output and intermediate buffers are then unspecified but the
+    /// executor stays bound and reusable).
+    pub fn run_controlled(
+        &mut self,
+        pool: &ThreadPool,
+        x: &Dense<T>,
+        out: &mut Dense<T>,
+        mut ctrl: impl FnMut(usize) -> StepControl,
+        mut tap: impl FnMut(usize, &mut Dense<T>),
+    ) -> bool {
         assert_eq!((x.rows, x.cols), (self.in_rows, self.in_cols), "chain input shape");
         assert_eq!((out.rows, out.cols), (self.out_rows, self.out_cols), "chain output shape");
         let n = self.steps.len();
@@ -354,11 +394,14 @@ impl<T: Scalar> ChainExec<T> {
 
         // Step 0 reads the caller's input.
         {
+            if ctrl(0) == StepControl::Cancel {
+                return false;
+            }
             let step = &mut steps[0];
             if n == 1 {
                 run_step(step, strips, pool, x, out);
                 tap_checked(0, out, step.out_rows, step.out_cols);
-                return;
+                return true;
             }
             let dst = &mut inter[0];
             shape_to(dst, step.out_rows, step.out_cols);
@@ -369,6 +412,9 @@ impl<T: Scalar> ChainExec<T> {
         // Steps 1..n ping-pong between the two intermediates; the last
         // one writes straight into the caller's output.
         for s in 1..n {
+            if ctrl(s) == StepControl::Cancel {
+                return false;
+            }
             let step = &mut steps[s];
             let (lo, hi) = inter.split_at_mut(1);
             let (src, dst) = if s % 2 == 1 { (&lo[0], &mut hi[0]) } else { (&hi[0], &mut lo[0]) };
@@ -381,6 +427,7 @@ impl<T: Scalar> ChainExec<T> {
                 tap_checked(s, dst, step.out_rows, step.out_cols);
             }
         }
+        true
     }
 }
 
@@ -573,6 +620,48 @@ mod tests {
         let mut expect = x.clone();
         crate::gnn::ops::relu(&mut expect);
         assert!(y.max_abs_diff(&expect) < 1e-12, "identity chain + tap == relu(x)");
+    }
+
+    #[test]
+    fn run_controlled_cancels_between_steps_and_stays_reusable() {
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(24, &[1]), 2, -1.0, 1.0));
+        let ops = vec![
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+        ];
+        let x = Dense::<f64>::randn(24, 4, 7);
+        let expect = chain_reference(&ops, &x);
+        let mut chain = ChainExec::plan_and_build(ops, 24, 4, params_small()).unwrap();
+        let pool = ThreadPool::new(2);
+        let mut y = Dense::zeros(24, 4);
+
+        // Cancel before step 2: the run reports failure and ran exactly
+        // steps 0 and 1. The control hook may drive other work on the
+        // same (idle-at-this-point) pool.
+        let mut control_points = Vec::new();
+        let done = chain.run_controlled(
+            &pool,
+            &x,
+            &mut y,
+            |s| {
+                control_points.push(s);
+                pool.parallel_for(8, |_, _| {}); // pool is free between steps
+                if s == 2 {
+                    StepControl::Cancel
+                } else {
+                    StepControl::Continue
+                }
+            },
+            |_, _| {},
+        );
+        assert!(!done);
+        assert_eq!(control_points, vec![0, 1, 2]);
+
+        // The executor survives cancellation: a plain run still agrees
+        // with the composed reference.
+        chain.run(&pool, &x, &mut y);
+        assert!(y.max_abs_diff(&expect) < 1e-9);
     }
 
     #[test]

@@ -32,10 +32,10 @@ pub mod tensor_style;
 pub mod unfused;
 
 pub use atomic_tiling::AtomicTiling;
-pub use chain::{chain_specs, ChainExec, ChainStepOp, StepStrategy};
+pub use chain::{chain_specs, ChainExec, ChainStepOp, StepControl, StepStrategy};
 pub use fused::Fused;
 pub use overlapped::Overlapped;
-pub use pool::{ThreadPool, WorkerScratch};
+pub use pool::{PoolLease, SharedPool, ThreadPool, WorkerScratch};
 pub use strip::{StripMode, StripWs};
 pub use tensor_style::TensorStyle;
 pub use unfused::Unfused;

@@ -11,7 +11,7 @@
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 /// Per-worker scratch buffers, one slot per pool executor, indexed by
@@ -182,6 +182,61 @@ impl ThreadPool {
     }
 }
 
+/// A shareable handle to one persistent [`ThreadPool`]: clones refer to
+/// the same workers, and [`SharedPool::lease`] grants exclusive use for
+/// the duration of a run. `parallel_for` is not reentrant — two drivers
+/// issuing jobs to the same pool concurrently would corrupt the job slot
+/// — so everything that executes on a shared pool (the coordinator's
+/// synchronous `submit` path, the server's dispatcher thread, the
+/// autotuner) first takes a lease and holds it across the whole
+/// execution. The lease is a mutex guard: contending drivers queue on
+/// it, which is exactly the "one execution at a time, many submitters"
+/// discipline the service layer wants.
+pub struct SharedPool {
+    inner: Arc<Mutex<ThreadPool>>,
+    n_threads: usize,
+}
+
+impl Clone for SharedPool {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner), n_threads: self.n_threads }
+    }
+}
+
+impl SharedPool {
+    /// Wrap a fresh pool of `n_threads` executors (see [`ThreadPool::new`]).
+    pub fn new(n_threads: usize) -> Self {
+        let n_threads = n_threads.max(1);
+        Self { inner: Arc::new(Mutex::new(ThreadPool::new(n_threads))), n_threads }
+    }
+
+    /// Total executor count (stable across leases, readable without one).
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Exclusive use of the pool until the returned lease drops. Blocks
+    /// while another driver holds it.
+    pub fn lease(&self) -> PoolLease<'_> {
+        PoolLease { guard: self.inner.lock().unwrap() }
+    }
+}
+
+/// Exclusive access to a [`SharedPool`]'s workers; derefs to the
+/// underlying [`ThreadPool`] so executors take it wherever a
+/// `&ThreadPool` is expected.
+pub struct PoolLease<'a> {
+    guard: MutexGuard<'a, ThreadPool>,
+}
+
+impl std::ops::Deref for PoolLease<'_> {
+    type Target = ThreadPool;
+
+    fn deref(&self) -> &ThreadPool {
+        &self.guard
+    }
+}
+
 fn run_job(job: &JobInner, worker: usize) {
     loop {
         let i = job.next.fetch_add(1, Ordering::Relaxed);
@@ -312,6 +367,33 @@ mod tests {
     fn zero_items_is_noop() {
         let pool = ThreadPool::new(2);
         pool.parallel_for(0, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn shared_pool_serializes_drivers() {
+        // Two threads hammer the same shared pool; leases serialize the
+        // parallel_for calls, so every item of every round is covered.
+        let shared = SharedPool::new(3);
+        assert_eq!(shared.n_threads(), 3);
+        let counter = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let shared = shared.clone();
+                let counter = Arc::clone(&counter);
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        let pool = shared.lease();
+                        pool.parallel_for(64, |_, _| {
+                            counter.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 2 * 50 * 64);
     }
 
     #[test]

@@ -54,8 +54,12 @@
 //! - [`profiling`]— FLOP accounting, timers, statistics.
 //! - [`coordinator`] — service layer: LRU-bounded schedule cache keyed
 //!                  by sparsity pattern (tuned strip widths ride each
-//!                  entry), pair and whole-chain requests
-//!                  (`ChainRequest`), batching, metrics.
+//!                  entry behind per-key locks), pair and whole-chain
+//!                  requests (`ChainRequest`), batching, metrics — plus
+//!                  the async front-end ([`coordinator::server`]):
+//!                  bounded two-tier submission queue, tickets,
+//!                  admission control, and a dispatcher that coalesces
+//!                  same-key requests across tenants.
 //! - [`runtime`]  — PJRT/XLA loader for AOT artifacts (the JAX/Pallas GCN).
 //! - [`gnn`]      — GCN forward/backward; the forward runs the whole
 //!                  layer stack as one fused chain.
@@ -122,6 +126,55 @@
 //! Long-running services submit chains through
 //! [`coordinator::Coordinator::submit_chain`] instead, which serves the
 //! per-step schedules from its shared cache.
+//!
+//! ## Serving
+//!
+//! Concurrent tenants talk to the async front-end instead of the
+//! blocking `Coordinator`: a [`coordinator::Server`] owns a bounded
+//! two-tier queue and a dispatcher thread. Register stationary operands
+//! by name, submit, hold the ticket:
+//!
+//! ```no_run
+//! use tile_fusion::coordinator::{server, Priority, Server, Strategy};
+//! use tile_fusion::prelude::*;
+//!
+//! let srv: Server<f32> = Server::new(8, SchedulerParams::default());
+//! let a = gen::gcn_normalize::<f32>(&gen::poisson2d(64, 64));
+//! srv.register_matrix("graph", a);
+//! srv.register_dense("feats", Dense::<f32>::randn(4096, 64, 1));
+//!
+//! let req = server::PairRequest {
+//!     a: "graph".into(),
+//!     b: server::BRef::Dense("feats".into()),
+//!     cs: vec![Dense::<f32>::randn(64, 32, 2)],
+//!     strategy: Strategy::TileFusion,
+//! };
+//! let ticket = srv.submit_pair(/*tenant*/ 1, Priority::Latency, req).unwrap();
+//! let reply = ticket.wait().unwrap();
+//! # let _ = reply;
+//! ```
+//!
+//! Semantics tenants can rely on:
+//!
+//! - **submit vs try_submit** — `submit_*` blocks while the queue is
+//!   full (backpressure); `try_submit_*` never blocks and returns
+//!   [`ServiceError::BusyQueue`](coordinator::ServiceError) /
+//!   [`ServiceError::BusyTenant`](coordinator::ServiceError) when
+//!   admission control refuses (bounded queue depth, per-tenant
+//!   in-flight cap).
+//! - **Tickets resolve exactly once** — with the result, a `Rejected`
+//!   (invalid request), or `Cancelled` (shutdown/abort); a dropped
+//!   server never strands a waiter.
+//! - **Coalescing** — requests sharing a (pattern, shape, elem-width)
+//!   schedule key are merged into one batched execution that runs the
+//!   identical schedule, strip pick, and executor code, so results are
+//!   bitwise identical to solo submission for the deterministic
+//!   strategies; only schedule fetch, tuned-strip lookup, and executor
+//!   bind are amortized.
+//! - **Priority** — [`Priority::Latency`](coordinator::Priority) jobs
+//!   are dispatched before bulk ones and overtake an in-flight bulk
+//!   chain at step boundaries (between barriers, never mid-barrier);
+//!   FIFO order holds within a tier.
 
 pub mod cachesim;
 pub mod coordinator;
@@ -144,7 +197,8 @@ pub mod prelude {
     pub use crate::core::{Dense, Scalar};
     pub use crate::exec::{
         chain_specs, AtomicTiling, CLayout, ChainExec, ChainStepOp, FirstOp, Fused, Overlapped,
-        PairExec, PairOp, StepStrategy, StripMode, TensorStyle, ThreadPool, Unfused,
+        PairExec, PairOp, SharedPool, StepControl, StepStrategy, StripMode, TensorStyle,
+        ThreadPool, Unfused,
     };
     pub use crate::scheduler::{
         BSide, ChainFlow, ChainPlan, ChainPlanner, ChainStepSpec, FusedSchedule, FusionOp,
