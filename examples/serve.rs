@@ -229,6 +229,7 @@ fn main() {
                         let req = ChainRequest {
                             steps: vec![step(format!("w1_{gi}")), step(format!("w2_{gi}"))],
                             xs: vec![x.clone()],
+                            xs_sparse: Vec::new(),
                             strategy: Strategy::TileFusion,
                         };
                         let ticket =

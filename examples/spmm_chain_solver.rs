@@ -165,5 +165,29 @@ fn main() {
         pair_time.as_secs_f64() / chain_time.as_secs_f64(),
         chain_diff
     );
+
+    // --- SpGEMM chain: the same Â²X, reassociated as (Â·Â)·X with the
+    // --- intermediate S = Â·Â materialized per the planner's
+    // --- output-format decision (sparse at Laplacian densities).
+    use tile_fusion::scheduler::chain::StepOutputMode;
+    let xs = Arc::new(xc.clone());
+    let spgemm_ops = vec![
+        ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::Auto },
+        ChainStepOp::FlowAMulB { b: Arc::clone(&xs) },
+    ];
+    let mut spgemm_chain = ChainExec::plan_and_build_sparse(spgemm_ops, n, n, a.nnz(), params)
+        .expect("bind spgemm chain");
+    let mut ys = Dense::<f64>::zeros(n, rhs);
+    spgemm_chain.run_sparse(&pool, &a, &mut ys); // ys = (Â·Â)·xs
+    fused.run(&pool, &xs, &mut t1); // t1 = Â(Â·xs) — same product, dense route
+    let spgemm_diff = ys.max_abs_diff(&t1);
+    assert!(
+        spgemm_diff < 1e-10,
+        "sparse-intermediate and fused-pair Â²X diverged: {spgemm_diff:e}"
+    );
+    println!(
+        "spgemm chain ((Â·Â)·X, S kept {:?}): matches the fused pair within {spgemm_diff:.1e}",
+        spgemm_chain.step_output(0)
+    );
     println!("OK");
 }

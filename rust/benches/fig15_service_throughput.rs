@@ -33,14 +33,12 @@ fn sync_req(n: usize, ccol: usize, seed: u64) -> SyncChainRequest<f32> {
         steps: (0..STEPS)
             .map(|_| ChainStepRequest {
                 a: "A".into(),
-                w: None,
-                b_dense: None,
                 b_sparse: Some("A".into()),
-                strategy: None,
+                ..Default::default()
             })
             .collect(),
         xs: vec![Dense::<f32>::randn(n, ccol, seed)],
-        strategy: Strategy::TileFusion,
+        ..Default::default()
     }
 }
 
@@ -54,6 +52,7 @@ fn queued_req(n: usize, ccol: usize, seed: u64) -> ChainRequest<f32> {
             })
             .collect(),
         xs: vec![Dense::<f32>::randn(n, ccol, seed)],
+        xs_sparse: Vec::new(),
         strategy: Strategy::TileFusion,
     }
 }

@@ -1,0 +1,95 @@
+//! Figure 16 (repo extension): SpGEMM chain steps — the `Â²X` chain
+//! (one sparse-sparse product feeding one SpMM) with the intermediate
+//! `S = Â·Â` materialized **sparse** (CSR, the new SpGEMM subsystem)
+//! versus **dense** (the pre-SpGEMM world: every intermediate is a
+//! dense `n × n` block) versus **per-pair library calls** (sparse
+//! intermediates, but fresh pool/scratch/allocations per product),
+//! swept across matrix density.
+//!
+//! Expectation (acceptance): at full scale the sparse-intermediate
+//! chain beats the dense-intermediate chain wherever density ≤ 1e-2 —
+//! the dense arm pays `n²` writes for a mostly-zero block and a dense
+//! `n² · rhs` consumption pass, while the sparse arm's merge + SpMM
+//! touch only the product's actual nonzeros.
+//!
+//! `--smoke` runs a tiny shape for CI bitrot checks (no assertions).
+
+use std::sync::Arc;
+use tile_fusion::harness::{
+    print_table, time_spgemm_chain, write_csv, BenchEnv, SpgemmChainStrat,
+};
+use tile_fusion::prelude::*;
+use tile_fusion::sparse::gen::SuiteScale;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let env = BenchEnv::from_env();
+    let (n, rhs) = if smoke {
+        (256usize, 16usize)
+    } else {
+        match env.scale {
+            SuiteScale::Small => (1024, 32),
+            SuiteScale::Bench => (4096, 64),
+        }
+    };
+    let densities = [1e-4f64, 1e-3, 1e-2, 1e-1];
+    let pool = ThreadPool::new(env.threads);
+    let arms = [
+        SpgemmChainStrat::SparseIntermediate,
+        SpgemmChainStrat::DenseIntermediate,
+        SpgemmChainStrat::PerPairCall,
+    ];
+
+    let mut table = Vec::new();
+    let mut csv = Vec::new();
+    for (di, &d) in densities.iter().enumerate() {
+        let avg = ((d * n as f64).round() as usize).max(1);
+        let a = Arc::new(Csr::<f32>::with_random_values(
+            gen::erdos_renyi(n, avg, 16 + di as u64),
+            1,
+            -1.0,
+            1.0,
+        ));
+        let actual_d = a.nnz() as f64 / (n * n) as f64;
+        let secs: Vec<f64> = arms
+            .iter()
+            .map(|&s| time_spgemm_chain(s, &a, rhs, &pool, env.reps).as_secs_f64())
+            .collect();
+        let (sparse, dense, pair) = (secs[0], secs[1], secs[2]);
+        table.push(vec![
+            format!("{actual_d:.1e}"),
+            a.nnz().to_string(),
+            format!("{:.3}", sparse * 1e3),
+            format!("{:.3}", dense * 1e3),
+            format!("{:.3}", pair * 1e3),
+            format!("{:.2}", dense / sparse),
+            format!("{:.2}", pair / sparse),
+        ]);
+        csv.push(format!("{actual_d:.6e},{n},{rhs},{sparse:.6},{dense:.6},{pair:.6}"));
+        if !smoke && actual_d <= 1e-2 {
+            assert!(
+                sparse < dense,
+                "sparse-intermediate chain must beat dense intermediates at density \
+                 {actual_d:.1e}: {sparse:.4}s vs {dense:.4}s"
+            );
+        }
+    }
+    print_table(
+        &format!("Figure 16 — SpGEMM chain intermediates (Â²X, n={n}, rhs={rhs}, SP)"),
+        &[
+            "density",
+            "nnz(A)",
+            "sparse ms",
+            "dense ms",
+            "per-pair ms",
+            "dense/sparse",
+            "pair/sparse",
+        ],
+        &table,
+    );
+    write_csv(
+        "fig16_spgemm_chain",
+        "density,n,rhs,t_sparse_intermediate,t_dense_intermediate,t_per_pair_call",
+        &csv,
+    );
+}

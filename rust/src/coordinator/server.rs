@@ -41,9 +41,13 @@ use super::queue::{BoundedQueue, Priority, PushError};
 use super::service::{execute_pair_batch, Metrics, Strategy};
 use super::ticket::{ticket, ServiceError, Ticket, TicketTx};
 use crate::core::{Dense, Scalar};
-use crate::exec::chain::{chain_specs, ChainExec, ChainStepOp, StepControl, StepStrategy};
+use crate::exec::chain::{
+    chain_specs, ChainExec, ChainIn, ChainOut, ChainStepOp, StepControl, StepStrategy,
+};
 use crate::exec::{Fused, PairExec, PairOp, SharedPool, StripMode, ThreadPool};
-use crate::scheduler::chain::{unfused_schedule, ChainPlanner};
+use crate::scheduler::chain::{
+    unfused_schedule, ChainInputMeta, ChainPlanner, ChainStepSpec, StepOutput, StepOutputMode,
+};
 use crate::scheduler::{FusedSchedule, SchedulerParams};
 use crate::sparse::Csr;
 use crate::tuning::{strip_candidates, StripTuner};
@@ -112,12 +116,20 @@ pub enum StepOperand {
     Dense(String),
     /// Registered sparse `B`, flowing `C`.
     Sparse(String),
+    /// Sparse-flow SpGEMM step `out = A · (chain)` — no stationary
+    /// operand beyond `A`; the mode overrides the output-format
+    /// decision.
+    SpgemmFlow(StepOutputMode),
+    /// Registered dense `B` consumed as `out = (chain) · B` (the step's
+    /// `a` is unused for this kind; leave it empty).
+    FlowADense(String),
 }
 
 /// One step of a queued [`ChainRequest`].
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ChainStepReq {
-    /// Registered sparse `A` of this step.
+    /// Registered sparse `A` of this step (unused — conventionally
+    /// empty — for [`StepOperand::FlowADense`] steps).
     pub a: String,
     pub operand: StepOperand,
     /// Per-step strategy override (`None` ⇒ the request default).
@@ -125,11 +137,16 @@ pub struct ChainStepReq {
 }
 
 /// One queued chain request: the whole multiplication chain applied to
-/// every input in `xs`.
+/// every input in `xs` (dense) or `xs_sparse` (sparse — SpGEMM chains);
+/// exactly one of the two must be non-empty. Chains must end in a
+/// dense output on the service path.
 pub struct ChainRequest<T> {
     pub steps: Vec<ChainStepReq>,
-    /// Batched chain inputs (≥ 1, one shape).
+    /// Batched dense chain inputs (one shape).
     pub xs: Vec<Dense<T>>,
+    /// Batched sparse chain inputs (one shape; patterns may differ —
+    /// the symbolic phase re-runs per input).
+    pub xs_sparse: Vec<Csr<T>>,
     /// Default step strategy (TileFusion / Unfused).
     pub strategy: Strategy,
 }
@@ -486,6 +503,17 @@ struct ChainKey {
     strategy: Strategy,
     in_rows: usize,
     in_cols: usize,
+    /// Whether the flowing input is sparse (SpGEMM chains bind to a
+    /// different input format; patterns may still vary per run — the
+    /// symbolic phase re-runs, so shape is the right granularity for
+    /// correctness).
+    in_sparse: bool,
+    /// Nonzeros of the sparse input (0 for dense): the planner's Auto
+    /// output-format decision is a pure function of (steps, shape,
+    /// density), so density must be part of executor identity — two
+    /// same-shape requests with different densities may legitimately
+    /// decide different formats.
+    in_nnz: usize,
     gen: u64,
 }
 
@@ -607,11 +635,24 @@ impl<T: Scalar> Dispatcher<T> {
         if req.steps.is_empty() {
             return Err(ServiceError::Rejected("empty chain".into()));
         }
-        let Some(first) = req.xs.first() else {
+        if req.xs.is_empty() && req.xs_sparse.is_empty() {
             return Err(ServiceError::Rejected("empty batch".into()));
-        };
+        }
+        if !req.xs.is_empty() && !req.xs_sparse.is_empty() {
+            return Err(ServiceError::Rejected(
+                "exactly one of xs / xs_sparse may be non-empty".into(),
+            ));
+        }
+        let first = chain_in_dims(req).expect("non-empty batch checked above");
         for x in &req.xs {
-            if (x.rows, x.cols) != (first.rows, first.cols) {
+            if (x.rows, x.cols) != first {
+                return Err(ServiceError::Rejected(
+                    "batched chain inputs must share one shape".into(),
+                ));
+            }
+        }
+        for x in &req.xs_sparse {
+            if (x.rows(), x.cols()) != first {
                 return Err(ServiceError::Rejected(
                     "batched chain inputs must share one shape".into(),
                 ));
@@ -877,15 +918,18 @@ impl<T: Scalar> Dispatcher<T> {
         reqs: &[ChainRequest<T>],
     ) -> Result<Vec<Vec<Dense<T>>>, ServiceError> {
         // Per-request validation ran at batch assembly; the coalesce key
-        // pins step structure and input shape across the batch.
+        // pins step structure and input format/shape across the batch.
         let head = &reqs[0];
-        let (in_rows, in_cols) = (head.xs[0].rows, head.xs[0].cols);
+        let in_sparse = !head.xs_sparse.is_empty();
+        let (in_rows, in_cols) = chain_in_dims(head).expect("validated non-empty batch");
 
         let key = ChainKey {
             steps: head.steps.clone(),
             strategy: head.strategy,
             in_rows,
             in_cols,
+            in_sparse,
+            in_nnz: chain_in_nnz(head),
             gen: self.shared.registry_gen.load(Ordering::SeqCst),
         };
         // Resolution, planning, and binding need no workers — the pool
@@ -902,13 +946,18 @@ impl<T: Scalar> Dispatcher<T> {
         let pool = shared.pool.lease();
         let mut cancelled = false;
         'all: for r in reqs {
-            let mut ds = Vec::with_capacity(r.xs.len());
-            for x in &r.xs {
+            let inputs: Vec<ChainIn<'_, T>> = if in_sparse {
+                r.xs_sparse.iter().map(ChainIn::Sparse).collect()
+            } else {
+                r.xs.iter().map(ChainIn::Dense).collect()
+            };
+            let mut ds = Vec::with_capacity(inputs.len());
+            for x in inputs {
                 let mut d = Dense::zeros(out_rows, out_cols);
-                let done = exec.run_controlled(
+                let done = exec.run_controlled_io(
                     &pool,
                     x,
-                    &mut d,
+                    ChainOut::Dense(&mut d),
                     |step| {
                         if shared.aborting.load(Ordering::SeqCst) {
                             return StepControl::Cancel;
@@ -931,8 +980,9 @@ impl<T: Scalar> Dispatcher<T> {
             outputs.push(ds);
         }
         if !cancelled {
-            self.shared.metrics.lock().unwrap().chain_steps +=
-                (chain_steps * reqs.iter().map(|r| r.xs.len()).sum::<usize>()) as u64;
+            self.shared.metrics.lock().unwrap().chain_steps += (chain_steps
+                * reqs.iter().map(|r| r.xs.len() + r.xs_sparse.len()).sum::<usize>())
+                as u64;
             self.put_exec(key, exec);
             Ok(outputs)
         } else {
@@ -1012,16 +1062,27 @@ impl<T: Scalar> Dispatcher<T> {
         let mut ops = Vec::with_capacity(head.steps.len());
         let mut strategies = Vec::with_capacity(head.steps.len());
         for (s, step) in head.steps.iter().enumerate() {
-            let a = self.shared.matrix(&step.a)?;
+            // Registered operands bind by `Arc` — a cold server bind
+            // never deep-copies a registered matrix or dense operand.
             let op = match &step.operand {
-                StepOperand::Weights(name) => {
-                    ChainStepOp::GemmFlowB { a, w: (*self.shared.dense(name)?).clone() }
-                }
-                StepOperand::Dense(name) => {
-                    ChainStepOp::GemmFlowC { a, b: (*self.shared.dense(name)?).clone() }
-                }
-                StepOperand::Sparse(name) => {
-                    ChainStepOp::SpmmFlowC { a, b: self.shared.matrix(name)? }
+                StepOperand::Weights(name) => ChainStepOp::GemmFlowB {
+                    a: self.shared.matrix(&step.a)?,
+                    w: self.shared.dense(name)?,
+                },
+                StepOperand::Dense(name) => ChainStepOp::GemmFlowC {
+                    a: self.shared.matrix(&step.a)?,
+                    b: self.shared.dense(name)?,
+                },
+                StepOperand::Sparse(name) => ChainStepOp::SpmmFlowC {
+                    a: self.shared.matrix(&step.a)?,
+                    b: self.shared.matrix(name)?,
+                },
+                StepOperand::SpgemmFlow(mode) => ChainStepOp::SpgemmFlow {
+                    a: self.shared.matrix(&step.a)?,
+                    output: *mode,
+                },
+                StepOperand::FlowADense(name) => {
+                    ChainStepOp::FlowAMulB { b: self.shared.dense(name)? }
                 }
             };
             strategies.push(match step.strategy.unwrap_or(head.strategy) {
@@ -1036,6 +1097,11 @@ impl<T: Scalar> Dispatcher<T> {
             ops.push(op);
         }
 
+        let input_meta = if let Some(x) = head.xs_sparse.first() {
+            ChainInputMeta::sparse(in_rows, in_cols, x.nnz())
+        } else {
+            ChainInputMeta::dense(in_rows, in_cols)
+        };
         let reject = |e: crate::scheduler::chain::ChainError| {
             ServiceError::Rejected(e.to_string())
         };
@@ -1046,7 +1112,7 @@ impl<T: Scalar> Dispatcher<T> {
             let n_cores = self.shared.params.n_cores;
             let mut trivial: HashMap<u64, Arc<FusedSchedule>> = HashMap::new();
             let plan = ChainPlanner::new(self.shared.params)
-                .plan_with(in_rows, in_cols, &specs, |s, op| match strategies[s] {
+                .plan_with_input(input_meta, &specs, |s, op| match strategies[s] {
                     StepStrategy::Fused => cache.get_or_build(op),
                     StepStrategy::Unfused => Arc::clone(
                         trivial
@@ -1058,9 +1124,11 @@ impl<T: Scalar> Dispatcher<T> {
             let tuned: Vec<Option<StripMode>> = specs
                 .iter()
                 .zip(&strategies)
-                .map(|(spec, st)| match st {
-                    StepStrategy::Fused => cache.tuned_strip(&spec.op),
-                    StepStrategy::Unfused => None,
+                .map(|(spec, st)| match (spec, st) {
+                    (ChainStepSpec::Pair { op, .. }, StepStrategy::Fused) => {
+                        cache.tuned_strip(op)
+                    }
+                    _ => None,
                 })
                 .collect();
             let mut m = self.shared.metrics.lock().unwrap();
@@ -1069,6 +1137,13 @@ impl<T: Scalar> Dispatcher<T> {
             m.schedule_cache_evictions = cache.evictions;
             (plan, tuned)
         };
+        if plan.out_format() != StepOutput::Dense {
+            return Err(ServiceError::Rejected(
+                "chain must end in a dense output on the service path (force the last SpGEMM \
+                 step's output to Dense or append a FlowADense step)"
+                    .into(),
+            ));
+        }
 
         let mut exec = ChainExec::new(ops, &plan).map_err(reject)?;
         exec.set_strategies(&strategies);
@@ -1121,12 +1196,29 @@ fn pair_key<T>(r: &PairRequest<T>) -> (&str, &BRef, Strategy, Option<(usize, usi
     (&r.a, &r.b, r.strategy, r.cs.first().map(|c| (c.rows, c.cols)))
 }
 
-type ChainReqKey<'a> = (&'a [ChainStepReq], Strategy, Option<(usize, usize)>);
+type ChainReqKey<'a> = (&'a [ChainStepReq], Strategy, bool, Option<(usize, usize)>, usize);
 
 /// Coalesce key of a chain request: identical named step structure,
-/// same default strategy, same input shape.
-fn chain_req_key<T>(r: &ChainRequest<T>) -> ChainReqKey<'_> {
-    (&r.steps, r.strategy, r.xs.first().map(|x| (x.rows, x.cols)))
+/// same default strategy, same input format, shape **and nnz** — nnz
+/// because the planner's Auto output-format (and the dense-final-output
+/// accept/reject verdict) is a function of input density, so requests
+/// whose densities differ must never ride one batch head's decision.
+fn chain_req_key<T: Scalar>(r: &ChainRequest<T>) -> ChainReqKey<'_> {
+    (&r.steps, r.strategy, !r.xs_sparse.is_empty(), chain_in_dims(r), chain_in_nnz(r))
+}
+
+/// Shape of a chain request's flowing input (whichever batch is set).
+fn chain_in_dims<T: Scalar>(r: &ChainRequest<T>) -> Option<(usize, usize)> {
+    if let Some(x) = r.xs_sparse.first() {
+        Some((x.rows(), x.cols()))
+    } else {
+        r.xs.first().map(|x| (x.rows, x.cols))
+    }
+}
+
+/// Nonzeros of a chain request's sparse input (0 for dense inputs).
+fn chain_in_nnz<T: Scalar>(r: &ChainRequest<T>) -> usize {
+    r.xs_sparse.first().map(|x| x.nnz()).unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -1189,6 +1281,7 @@ mod tests {
         let mk = || ChainRequest {
             steps: vec![step("w1"), step("w2")],
             xs: vec![x.clone()],
+            xs_sparse: Vec::new(),
             strategy: Strategy::TileFusion,
         };
         let r1 = srv.chain_blocking(7, Priority::Bulk, mk()).unwrap();
@@ -1201,6 +1294,59 @@ mod tests {
         let (_, hits2, misses2) = srv.cache_stats();
         assert_eq!((hits2, misses2), (hits1, misses1), "warm exec skips the cache");
         assert_eq!(srv.metrics().chain_requests, 2);
+    }
+
+    #[test]
+    fn spgemm_chain_through_the_queue() {
+        use crate::kernels::spgemm;
+        let srv = server();
+        let a = register_demo(&srv);
+        let x = Dense::<f64>::randn(a.rows(), 8, 21);
+        srv.register_dense("X", x.clone());
+        let mk = || ChainRequest {
+            steps: vec![
+                ChainStepReq {
+                    a: "A".into(),
+                    operand: StepOperand::SpgemmFlow(StepOutputMode::SparseCsr),
+                    strategy: None,
+                },
+                ChainStepReq {
+                    a: String::new(),
+                    operand: StepOperand::FlowADense("X".into()),
+                    strategy: None,
+                },
+            ],
+            xs: Vec::new(),
+            xs_sparse: vec![a.clone()],
+            strategy: Strategy::TileFusion,
+        };
+        let s2 = spgemm(&a, &a, 0.0);
+        let mut expect = Dense::zeros(a.rows(), 8);
+        crate::exec::spgemm::run_sparse_times_dense(&ThreadPool::new(1), &s2, &x, &mut expect);
+        // Twice: the second ride reuses the warm bound executor (keyed
+        // on the sparse input format + shape).
+        for round in 0..2 {
+            let reply = srv.chain_blocking(3, Priority::Bulk, mk()).unwrap();
+            assert_eq!(reply.ds.len(), 1, "round {round}");
+            assert!(reply.ds[0].max_abs_diff(&expect) < 1e-10, "round {round}");
+        }
+        // A chain ending sparse rejects, and the server survives it.
+        let bad = ChainRequest {
+            steps: vec![ChainStepReq {
+                a: "A".into(),
+                operand: StepOperand::SpgemmFlow(StepOutputMode::SparseCsr),
+                strategy: None,
+            }],
+            xs: Vec::new(),
+            xs_sparse: vec![a.clone()],
+            strategy: Strategy::TileFusion,
+        };
+        let err = srv.chain_blocking(3, Priority::Bulk, bad).unwrap_err();
+        assert!(
+            matches!(err, ServiceError::Rejected(ref m) if m.contains("dense output")),
+            "{err}"
+        );
+        assert!(srv.chain_blocking(3, Priority::Bulk, mk()).is_ok());
     }
 
     #[test]

@@ -10,7 +10,10 @@ use crate::exec::{
     AtomicTiling, Fused, Overlapped, PairExec, PairOp, SharedPool, StripMode, TensorStyle,
     ThreadPool, Unfused,
 };
-use crate::scheduler::chain::{unfused_schedule, ChainPlanner, ChainStats};
+use crate::scheduler::chain::{
+    unfused_schedule, ChainInputMeta, ChainPlanner, ChainStats, ChainStepSpec, StepOutput,
+    StepOutputMode,
+};
 use crate::scheduler::{FusedSchedule, SchedulerParams};
 use crate::sparse::Csr;
 use crate::tuning::{strip_candidates, StripTuner};
@@ -68,12 +71,21 @@ pub struct Response<T> {
     pub strategy: Strategy,
 }
 
-/// One step of a [`ChainRequest`]: `out = A (B C)` where the chain value
-/// flows through `B` (GCN-style, stationary weights `w`) or through `C`
-/// (solver-style, stationary dense `b_dense` or named sparse `b_sparse`).
-/// Exactly one of `w` / `b_dense` / `b_sparse` must be set.
+/// One step of a [`ChainRequest`]. Exactly one of `w` / `b_dense` /
+/// `b_sparse` / `spgemm` / `flow_a_dense` must be set:
+///
+/// - `w` — pair step, flowing `B` (GCN-style): `out = A ((chain) · w)`;
+/// - `b_dense` / `b_sparse` — pair step, flowing `C` (solver-style):
+///   `out = A (b · (chain))`;
+/// - `spgemm` — sparse-flow SpGEMM step `out = A · (chain)` with the
+///   given output-format override ([`StepOutputMode::Auto`] lets the
+///   planner's cost estimate pick sparse vs dense materialization);
+/// - `flow_a_dense` — `out = (chain) · b` against a stationary dense
+///   operand (`a` is unused for this kind; leave it empty).
+#[derive(Default)]
 pub struct ChainStepRequest<T> {
-    /// Registered name of this step's sparse `A`.
+    /// Registered name of this step's sparse `A` (unused for
+    /// `flow_a_dense` steps).
     pub a: String,
     /// Stationary weights (flowing `B`): `out = A ((chain) · w)`.
     pub w: Option<Dense<T>>,
@@ -81,20 +93,42 @@ pub struct ChainStepRequest<T> {
     pub b_dense: Option<Dense<T>>,
     /// Name of a stationary sparse `B` (flowing `C`).
     pub b_sparse: Option<String>,
-    /// Per-step strategy override (`None` ⇒ the request default).
+    /// Sparse-flow SpGEMM step with this output-format override.
+    pub spgemm: Option<StepOutputMode>,
+    /// Sparse- or dense-flow `out = (chain) · b` step.
+    pub flow_a_dense: Option<Dense<T>>,
+    /// Per-step strategy override (`None` ⇒ the request default; pair
+    /// steps only — sparse-flow steps have one execution path).
     pub strategy: Option<Strategy>,
 }
 
 /// A whole multiplication chain as one request: planned once (schedules
 /// served from the coordinator's [`ScheduleCache`], deduplicated across
 /// steps), executed on the persistent pool for every batched input.
+/// Exactly one of `xs` (dense inputs) / `xs_sparse` (sparse inputs —
+/// SpGEMM chains) must be non-empty. The chain must end in a **dense**
+/// output on this path (force the last SpGEMM step's output to
+/// [`StepOutputMode::Dense`] or append a `flow_a_dense` step).
 pub struct ChainRequest<T> {
     pub steps: Vec<ChainStepRequest<T>>,
-    /// Batched chain inputs (≥ 1); one plan and one executor serve all.
+    /// Batched dense chain inputs; one plan and one executor serve all.
     pub xs: Vec<Dense<T>>,
+    /// Batched sparse chain inputs (the flowing value of SpGEMM chains).
+    pub xs_sparse: Vec<Csr<T>>,
     /// Default step strategy ([`Strategy::TileFusion`] or
     /// [`Strategy::Unfused`]; others are pair-only).
     pub strategy: Strategy,
+}
+
+impl<T> Default for ChainRequest<T> {
+    fn default() -> Self {
+        Self {
+            steps: Vec::new(),
+            xs: Vec::new(),
+            xs_sparse: Vec::new(),
+            strategy: Strategy::TileFusion,
+        }
+    }
 }
 
 /// Chain response: one output per batched input, plus plan statistics.
@@ -297,16 +331,29 @@ impl<T: Scalar> Coordinator<T> {
     /// [`ChainExec`], and run it for each batched input on the
     /// persistent pool.
     pub fn submit_chain(&mut self, req: ChainRequest<T>) -> Result<ChainResponse<T>> {
-        let ChainRequest { steps, xs, strategy } = req;
+        let ChainRequest { steps, xs, xs_sparse, strategy } = req;
         if steps.is_empty() {
             bail!("empty chain");
         }
-        if xs.is_empty() {
+        if xs.is_empty() && xs_sparse.is_empty() {
             bail!("empty batch");
         }
-        let (in_rows, in_cols) = (xs[0].rows, xs[0].cols);
+        if !xs.is_empty() && !xs_sparse.is_empty() {
+            bail!("exactly one of xs / xs_sparse may be non-empty");
+        }
+        let sparse_input = !xs_sparse.is_empty();
+        let (in_rows, in_cols) = if sparse_input {
+            (xs_sparse[0].rows(), xs_sparse[0].cols())
+        } else {
+            (xs[0].rows, xs[0].cols)
+        };
         for x in &xs {
             if (x.rows, x.cols) != (in_rows, in_cols) {
+                bail!("batched chain inputs must share one shape");
+            }
+        }
+        for x in &xs_sparse {
+            if (x.rows(), x.cols()) != (in_rows, in_cols) {
                 bail!("batched chain inputs must share one shape");
             }
         }
@@ -314,25 +361,37 @@ impl<T: Scalar> Coordinator<T> {
         let mut ops = Vec::with_capacity(steps.len());
         let mut strategies = Vec::with_capacity(steps.len());
         for (s, step) in steps.into_iter().enumerate() {
-            let a = Arc::clone(
-                self.matrices
-                    .get(&step.a)
-                    .ok_or_else(|| anyhow!("unknown matrix {:?}", step.a))?,
-            );
-            let op = match (step.w, step.b_dense, step.b_sparse) {
-                (Some(w), None, None) => ChainStepOp::GemmFlowB { a, w },
-                (None, Some(b), None) => ChainStepOp::GemmFlowC { a, b },
-                (None, None, Some(name)) => ChainStepOp::SpmmFlowC {
-                    a,
-                    b: Arc::clone(
-                        self.matrices
-                            .get(&name)
-                            .ok_or_else(|| anyhow!("unknown matrix {name:?}"))?,
-                    ),
-                },
-                _ => bail!("chain step {s}: exactly one of w / b_dense / b_sparse must be set"),
+            let ChainStepRequest { a, w, b_dense, b_sparse, spgemm, flow_a_dense, strategy: st } =
+                step;
+            let matrix = |name: &str, matrices: &HashMap<String, Arc<Csr<T>>>| {
+                matrices
+                    .get(name)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("unknown matrix {name:?}"))
             };
-            strategies.push(match step.strategy.unwrap_or(strategy) {
+            let op = match (w, b_dense, b_sparse, spgemm, flow_a_dense) {
+                (Some(w), None, None, None, None) => {
+                    ChainStepOp::GemmFlowB { a: matrix(&a, &self.matrices)?, w: Arc::new(w) }
+                }
+                (None, Some(b), None, None, None) => {
+                    ChainStepOp::GemmFlowC { a: matrix(&a, &self.matrices)?, b: Arc::new(b) }
+                }
+                (None, None, Some(name), None, None) => ChainStepOp::SpmmFlowC {
+                    a: matrix(&a, &self.matrices)?,
+                    b: matrix(&name, &self.matrices)?,
+                },
+                (None, None, None, Some(mode), None) => {
+                    ChainStepOp::SpgemmFlow { a: matrix(&a, &self.matrices)?, output: mode }
+                }
+                (None, None, None, None, Some(b)) => {
+                    ChainStepOp::FlowAMulB { b: Arc::new(b) }
+                }
+                _ => bail!(
+                    "chain step {s}: exactly one of w / b_dense / b_sparse / spgemm / \
+                     flow_a_dense must be set"
+                ),
+            };
+            strategies.push(match st.unwrap_or(strategy) {
                 Strategy::TileFusion => StepStrategy::Fused,
                 Strategy::Unfused => StepStrategy::Unfused,
                 other => bail!(
@@ -345,17 +404,23 @@ impl<T: Scalar> Coordinator<T> {
 
         let t0 = Instant::now();
         let (hits0, miss0) = (self.cache.hits, self.cache.misses);
+        let input_meta = if sparse_input {
+            ChainInputMeta::sparse(in_rows, in_cols, xs_sparse[0].nnz())
+        } else {
+            ChainInputMeta::dense(in_rows, in_cols)
+        };
         let (plan, tuned) = {
             let specs = chain_specs(&ops, in_rows, in_cols)?;
-            // Only steps that will actually run fused pay Algorithm 1's
-            // inspection (through the shared cache); unfused steps get a
-            // trivial no-fusion schedule, deduplicated locally, that the
-            // executor's geometry checks accept but never consult.
+            // Only pair steps that will actually run fused pay Algorithm
+            // 1's inspection (through the shared cache); unfused pair
+            // steps get a trivial no-fusion schedule, deduplicated
+            // locally, that the executor's geometry checks accept but
+            // never consult. Sparse-flow steps never reach the hook —
+            // they have no pattern to inspect before run time.
             let n_cores = self.cache.params().n_cores;
             let mut trivial: HashMap<u64, Arc<crate::scheduler::FusedSchedule>> = HashMap::new();
-            let plan = ChainPlanner::new(self.cache.params()).plan_with(
-                in_rows,
-                in_cols,
+            let plan = ChainPlanner::new(self.cache.params()).plan_with_input(
+                input_meta,
                 &specs,
                 |s, op| match strategies[s] {
                     StepStrategy::Fused => self.cache.get_or_build(op),
@@ -366,22 +431,30 @@ impl<T: Scalar> Coordinator<T> {
                     ),
                 },
             )?;
-            // Fused steps whose (pattern, shape) a pair request already
-            // autotuned replay the tuned strip pick; untuned steps stay
-            // on the schedule's model pick (chains never time candidates
-            // themselves — tuning happens on the pair path).
+            // Fused pair steps whose (pattern, shape) a pair request
+            // already autotuned replay the tuned strip pick; untuned
+            // steps stay on the schedule's model pick (chains never time
+            // candidates themselves — tuning happens on the pair path).
             let tuned: Vec<Option<StripMode>> = specs
                 .iter()
                 .zip(&strategies)
-                .map(|(spec, st)| match st {
-                    StepStrategy::Fused => self.cache.tuned_strip(&spec.op),
-                    StepStrategy::Unfused => None,
+                .map(|(spec, st)| match (spec, st) {
+                    (ChainStepSpec::Pair { op, .. }, StepStrategy::Fused) => {
+                        self.cache.tuned_strip(op)
+                    }
+                    _ => None,
                 })
                 .collect();
             (plan, tuned)
         };
         self.metrics.schedule_cache_hits += self.cache.hits - hits0;
         self.metrics.total_schedule_builds += self.cache.misses - miss0;
+        if plan.out_format() != StepOutput::Dense {
+            bail!(
+                "chain must end in a dense output on the service path (force the last SpGEMM \
+                 step's output to Dense or append a flow_a_dense step)"
+            );
+        }
 
         let mut exec = ChainExec::new(ops, &plan)?;
         exec.set_strategies(&strategies);
@@ -391,18 +464,25 @@ impl<T: Scalar> Coordinator<T> {
             }
         }
         let (out_rows, out_cols) = exec.out_dims();
+        let n_inputs = if sparse_input { xs_sparse.len() } else { xs.len() };
         let mut ds: Vec<Dense<T>> =
-            xs.iter().map(|_| Dense::zeros(out_rows, out_cols)).collect();
+            (0..n_inputs).map(|_| Dense::zeros(out_rows, out_cols)).collect();
         let pool = self.pool.lease();
-        for (x, d) in xs.iter().zip(&mut ds) {
-            exec.run(&pool, x, d);
+        if sparse_input {
+            for (x, d) in xs_sparse.iter().zip(&mut ds) {
+                exec.run_sparse(&pool, x, d);
+            }
+        } else {
+            for (x, d) in xs.iter().zip(&mut ds) {
+                exec.run(&pool, x, d);
+            }
         }
         drop(pool);
 
         let elapsed = t0.elapsed();
         self.metrics.requests += 1;
         self.metrics.chain_requests += 1;
-        self.metrics.chain_steps += (plan.len() * xs.len()) as u64;
+        self.metrics.chain_steps += (plan.len() * n_inputs) as u64;
         self.metrics.total_exec += elapsed;
         self.metrics.schedule_cache_evictions = self.cache.evictions;
         Ok(ChainResponse { ds, elapsed, stats: plan.stats.clone() })
@@ -600,13 +680,11 @@ mod tests {
                 .map(|w| ChainStepRequest {
                     a: "A".into(),
                     w: Some(w),
-                    b_dense: None,
-                    b_sparse: None,
-                    strategy: None,
+                    ..Default::default()
                 })
                 .collect(),
             xs,
-            strategy: Strategy::TileFusion,
+            ..Default::default()
         }
     }
 
@@ -634,14 +712,12 @@ mod tests {
             steps: (0..4)
                 .map(|_| ChainStepRequest {
                     a: "A".into(),
-                    w: None,
-                    b_dense: None,
                     b_sparse: Some("A".into()),
-                    strategy: None,
+                    ..Default::default()
                 })
                 .collect(),
             xs: vec![Dense::<f64>::randn(256, 8, 9)],
-            strategy: Strategy::TileFusion,
+            ..Default::default()
         };
         let resp = coord.submit_chain(mk()).unwrap();
         assert_eq!(resp.stats.unique_schedules, 1, "identical steps share one schedule");
@@ -750,12 +826,11 @@ mod tests {
             steps: vec![ChainStepRequest {
                 a: "A".into(),
                 w: Some(Dense::<f64>::randn(8, 4, 1)),
-                b_dense: None,
                 b_sparse: Some("A".into()),
-                strategy: None,
+                ..Default::default()
             }],
             xs: vec![Dense::<f64>::randn(256, 8, 2)],
-            strategy: Strategy::TileFusion,
+            ..Default::default()
         };
         let err = coord.submit_chain(req).unwrap_err();
         assert!(err.to_string().contains("exactly one"), "{err}");
@@ -810,21 +885,82 @@ mod tests {
         let h = reference(&PairOp::spmm_spmm(&a, &a), &x);
         let step = || ChainStepRequest {
             a: "A".into(),
-            w: None,
-            b_dense: None,
             b_sparse: Some("A".into()),
-            strategy: None,
+            ..Default::default()
         };
         let resp = coord
             .submit_chain(ChainRequest {
                 steps: vec![step(), step()],
                 xs: vec![x],
-                strategy: Strategy::TileFusion,
+                ..Default::default()
             })
             .unwrap();
         let expect2 = reference(&PairOp::spmm_spmm(&a, &a), &h);
         assert!(resp.ds[0].max_abs_diff(&expect2) < 1e-9);
         assert_eq!(coord.metrics().strip_tunes, 1, "chains never tune");
+    }
+
+    #[test]
+    fn spgemm_chain_request_round_trip() {
+        use crate::kernels::spgemm;
+        let mut coord = coord();
+        let a = register_demo(&mut coord);
+        // Â²X through the queue-facing API: sparse input Â, SpGEMM step
+        // (sparse intermediate), flow-A consumer against stationary X.
+        let x = Dense::<f64>::randn(a.rows(), 8, 11);
+        let req = ChainRequest {
+            steps: vec![
+                ChainStepRequest {
+                    a: "A".into(),
+                    spgemm: Some(StepOutputMode::SparseCsr),
+                    ..Default::default()
+                },
+                ChainStepRequest { flow_a_dense: Some(x.clone()), ..Default::default() },
+            ],
+            xs_sparse: vec![a.clone()],
+            ..Default::default()
+        };
+        let resp = coord.submit_chain(req).unwrap();
+        assert_eq!(resp.ds.len(), 1);
+        assert_eq!(resp.stats.sparse_outputs, 1);
+        let s2 = spgemm(&a, &a, 0.0);
+        let mut expect = Dense::zeros(a.rows(), 8);
+        crate::exec::spgemm::run_sparse_times_dense(
+            &crate::exec::ThreadPool::new(1),
+            &s2,
+            &x,
+            &mut expect,
+        );
+        assert!(resp.ds[0].max_abs_diff(&expect) < 1e-10);
+        // No fused schedules were built or fetched for sparse-flow steps.
+        assert_eq!(coord.cache_stats().0, 0);
+
+        // A chain ending sparse is rejected on the service path.
+        let req = ChainRequest {
+            steps: vec![ChainStepRequest {
+                a: "A".into(),
+                spgemm: Some(StepOutputMode::SparseCsr),
+                ..Default::default()
+            }],
+            xs_sparse: vec![a.clone()],
+            ..Default::default()
+        };
+        let err = coord.submit_chain(req).unwrap_err();
+        assert!(err.to_string().contains("dense output"), "{err}");
+
+        // Mixed dense+sparse input batches are rejected.
+        let req = ChainRequest {
+            steps: vec![ChainStepRequest {
+                a: "A".into(),
+                spgemm: Some(StepOutputMode::Dense),
+                ..Default::default()
+            }],
+            xs: vec![Dense::<f64>::zeros(1, 1)],
+            xs_sparse: vec![a.clone()],
+            ..Default::default()
+        };
+        let err = coord.submit_chain(req).unwrap_err();
+        assert!(err.to_string().contains("exactly one of xs"), "{err}");
     }
 
     #[test]

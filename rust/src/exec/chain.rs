@@ -6,24 +6,43 @@
 //! whole chain per [`ChainExec::run`] call:
 //!
 //! - **one pool** for every step — no per-step pool spin-up;
-//! - **ping-pong intermediate buffers** allocated once at bind time (two
-//!   buffers sized to the largest intermediate, reused alternately);
+//! - **ping-pong intermediate buffers** allocated once at bind time and
+//!   able to hold **either format** — row-major dense or sparse CSR —
+//!   per the plan's per-step output decision: sparse→sparse chains
+//!   (SpGEMM feeding SpGEMM), sparse→dense (an SpGEMM product consumed
+//!   back into the dense world), and the original dense-consuming pair
+//!   steps are all legal, in any planned order;
 //! - per-step `D1` workspaces allocated once — no per-step allocation on
 //!   the run path;
 //! - per-step strategy override ([`StepStrategy`]): tile fusion (default)
-//!   or the unfused baseline, both through the same workspaces;
-//! - still exactly one barrier per wavefront, as in the single-pair
+//!   or the unfused baseline, both through the same workspaces — and
+//!   column-strip modes preserved on dense pair steps ([`StripMode`]);
+//! - still exactly one barrier per parallel phase, as in the single-pair
 //!   executors.
+//!
+//! Sparse-flow steps ([`ChainStepOp::SpgemmFlow`],
+//! [`ChainStepOp::FlowAMulB`]) execute through the row-merge SpGEMM
+//! drivers ([`crate::exec::spgemm`]); their per-thread merge scratch
+//! ([`SpgemmWs`]) is owned here and shared by every step, like the strip
+//! workspaces.
 //!
 //! [`ChainExec::run_with`] additionally exposes each step's output for
 //! in-place post-processing (the GCN forward applies ReLU between layers
-//! and snapshots activations for backprop through this hook).
+//! and snapshots activations for backprop through this hook). Taps fire
+//! after **dense-output** steps only — a sparse intermediate has no
+//! activation use case and its structure is owned by the executor.
 
 use super::fused::run_fused_striped;
+use super::spgemm::{
+    run_dense_times_dense, run_sparse_times_dense, run_spgemm, run_spgemm_dense, SpgemmWs,
+};
 use super::strip::{StripMode, StripWs};
 use super::unfused::run_unfused_striped;
 use super::{Dense, PairOp, Scalar, ThreadPool};
-use crate::scheduler::chain::{ChainError, ChainFlow, ChainPlan, ChainStepSpec};
+use crate::scheduler::chain::{
+    ChainError, ChainFlow, ChainInputMeta, ChainPlan, ChainStepPlan, ChainStepSpec, PlannedStep,
+    StepOutput, StepOutputMode,
+};
 use crate::scheduler::{BSide, FusedSchedule, FusionOp, SchedulerParams};
 use crate::sparse::Csr;
 use std::sync::Arc;
@@ -31,32 +50,38 @@ use std::sync::Arc;
 /// Row-block grain for unfused chain steps (matches `Unfused::new`).
 const UNFUSED_CHUNK: usize = 64;
 
-/// One chain step's operands: `out = A (B C)` where exactly one of `B`,
-/// `C` is the flowing chain value and the rest are bound here.
+/// One chain step's operands: the stationary side of the step, with the
+/// flowing chain value filling the remaining slot. Stationary operands
+/// are `Arc`'d — binding a chain never deep-copies a registered matrix
+/// (the service layer hands out clones of its registry `Arc`s).
 pub enum ChainStepOp<T> {
     /// GeMM-SpMM with flowing `B` (a GCN layer): `out = A ((chain) · W)`.
-    GemmFlowB { a: Arc<Csr<T>>, w: Dense<T> },
+    GemmFlowB { a: Arc<Csr<T>>, w: Arc<Dense<T>> },
     /// GeMM-SpMM with flowing `C`: `out = A (B · (chain))`, dense `B`.
-    GemmFlowC { a: Arc<Csr<T>>, b: Dense<T> },
+    GemmFlowC { a: Arc<Csr<T>>, b: Arc<Dense<T>> },
     /// SpMM-SpMM with flowing `C` (a solver step): `out = A (B · (chain))`.
     SpmmFlowC { a: Arc<Csr<T>>, b: Arc<Csr<T>> },
+    /// Row-merge SpGEMM with a **sparse** flowing value:
+    /// `out = A · (chain)`. `output` overrides the planner's
+    /// output-format decision ([`StepOutputMode::Auto`] lets the cost
+    /// model choose sparse-vs-dense materialization).
+    SpgemmFlow { a: Arc<Csr<T>>, output: StepOutputMode },
+    /// `out = (chain) · B` with stationary dense `B`: the consumer that
+    /// brings a sparse flow back to dense (CSR SpMM), or a plain GeMM
+    /// when the flow was densified upstream.
+    FlowAMulB { b: Arc<Dense<T>> },
 }
 
 impl<T: Scalar> ChainStepOp<T> {
-    /// Which operand the chain value feeds.
-    pub fn flow(&self) -> ChainFlow {
+    /// The planner-step kind these operands bind to.
+    pub fn kind(&self) -> PlannedStep {
         match self {
-            ChainStepOp::GemmFlowB { .. } => ChainFlow::B,
-            ChainStepOp::GemmFlowC { .. } | ChainStepOp::SpmmFlowC { .. } => ChainFlow::C,
-        }
-    }
-
-    /// The step's sparse `A`.
-    pub fn a(&self) -> &Arc<Csr<T>> {
-        match self {
-            ChainStepOp::GemmFlowB { a, .. }
-            | ChainStepOp::GemmFlowC { a, .. }
-            | ChainStepOp::SpmmFlowC { a, .. } => a,
+            ChainStepOp::GemmFlowB { .. } => PlannedStep::Pair(ChainFlow::B),
+            ChainStepOp::GemmFlowC { .. } | ChainStepOp::SpmmFlowC { .. } => {
+                PlannedStep::Pair(ChainFlow::C)
+            }
+            ChainStepOp::SpgemmFlow { .. } => PlannedStep::Spgemm,
+            ChainStepOp::FlowAMulB { .. } => PlannedStep::FlowAMulB,
         }
     }
 }
@@ -79,7 +104,9 @@ pub enum StepControl {
     Cancel,
 }
 
-/// Executor strategy of one chain step.
+/// Executor strategy of one chain step. Meaningful for pair steps;
+/// sparse-flow steps have a single (row-merge) execution path and
+/// ignore it.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum StepStrategy {
     /// Tile fusion over the step's `FusedSchedule` (the default).
@@ -89,9 +116,52 @@ pub enum StepStrategy {
     Unfused,
 }
 
+/// Borrowed flowing value handed to [`ChainExec::run_io`] /
+/// [`ChainExec::run_controlled_io`].
+#[derive(Clone, Copy)]
+pub enum ChainIn<'a, T> {
+    Dense(&'a Dense<T>),
+    Sparse(&'a Csr<T>),
+}
+
+impl<T: Scalar> ChainIn<'_, T> {
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            ChainIn::Dense(d) => (d.rows, d.cols),
+            ChainIn::Sparse(c) => (c.rows(), c.cols()),
+        }
+    }
+
+    pub fn format(&self) -> StepOutput {
+        match self {
+            ChainIn::Dense(_) => StepOutput::Dense,
+            ChainIn::Sparse(_) => StepOutput::SparseCsr,
+        }
+    }
+}
+
+/// Mutable destination for the chain's final output. A dense
+/// destination must be pre-shaped to [`ChainExec::out_dims`]; a sparse
+/// destination is rebuilt in place (allocation-reusing), so any CSR —
+/// e.g. [`Csr::empty`] — works.
+pub enum ChainOut<'a, T> {
+    Dense(&'a mut Dense<T>),
+    Sparse(&'a mut Csr<T>),
+}
+
+impl<T: Scalar> ChainOut<'_, T> {
+    pub fn format(&self) -> StepOutput {
+        match self {
+            ChainOut::Dense(_) => StepOutput::Dense,
+            ChainOut::Sparse(_) => StepOutput::SparseCsr,
+        }
+    }
+}
+
 /// Build planner-facing [`ChainStepSpec`]s for bound operands,
-/// propagating the flowing shape from `in_rows × in_cols` and checking
-/// the value-level dimensions the (pattern-only) planner cannot see.
+/// propagating the flowing column count from `in_cols` and checking the
+/// value-level dimensions the (pattern-only) planner cannot see. Row
+/// and format conformance stay the planner's job.
 pub fn chain_specs<'a, T: Scalar>(
     ops: &'a [ChainStepOp<T>],
     in_rows: usize,
@@ -100,7 +170,7 @@ pub fn chain_specs<'a, T: Scalar>(
     if ops.is_empty() {
         return Err(ChainError::new("empty chain"));
     }
-    let _ = in_rows; // rows conformance is the planner's job (per-step)
+    let _ = in_rows; // rows/format conformance is the planner's job (per-step)
     let mut cur_c = in_cols;
     let mut specs = Vec::with_capacity(ops.len());
     for (s, op) in ops.iter().enumerate() {
@@ -112,7 +182,7 @@ pub fn chain_specs<'a, T: Scalar>(
                         w.rows, w.cols
                     )));
                 }
-                ChainStepSpec {
+                ChainStepSpec::Pair {
                     op: FusionOp {
                         a: &a.pattern,
                         b: BSide::Dense { bcol: cur_c },
@@ -129,7 +199,7 @@ pub fn chain_specs<'a, T: Scalar>(
                         a.cols()
                     )));
                 }
-                ChainStepSpec {
+                ChainStepSpec::Pair {
                     op: FusionOp {
                         a: &a.pattern,
                         b: BSide::Dense { bcol: b.cols },
@@ -138,14 +208,30 @@ pub fn chain_specs<'a, T: Scalar>(
                     flow: ChainFlow::C,
                 }
             }
-            ChainStepOp::SpmmFlowC { a, b } => ChainStepSpec {
+            ChainStepOp::SpmmFlowC { a, b } => ChainStepSpec::Pair {
                 op: FusionOp { a: &a.pattern, b: BSide::Sparse(&b.pattern), ccol: cur_c },
                 flow: ChainFlow::C,
             },
+            ChainStepOp::SpgemmFlow { a, output } => {
+                ChainStepSpec::Spgemm { a: &a.pattern, output: *output }
+            }
+            ChainStepOp::FlowAMulB { b } => {
+                if b.rows != cur_c {
+                    return Err(ChainError::new(format!(
+                        "step {s}: stationary B has {} rows but the flowing value has {cur_c} cols",
+                        b.rows
+                    )));
+                }
+                ChainStepSpec::FlowAMulB { bcol: b.cols }
+            }
         };
-        cur_c = match spec.flow {
-            ChainFlow::B => spec.op.ccol,
-            ChainFlow::C => cur_c,
+        cur_c = match &spec {
+            ChainStepSpec::Pair { op, flow } => match flow {
+                ChainFlow::B => op.ccol,
+                ChainFlow::C => cur_c,
+            },
+            ChainStepSpec::Spgemm { .. } => cur_c,
+            ChainStepSpec::FlowAMulB { bcol } => *bcol,
         };
         specs.push(spec);
     }
@@ -154,31 +240,95 @@ pub fn chain_specs<'a, T: Scalar>(
 
 struct ChainStepExec<T> {
     op: ChainStepOp<T>,
-    schedule: Arc<FusedSchedule>,
+    /// Fused schedule (pair steps only — sparse-flow steps have no
+    /// pattern to inspect before run time).
+    schedule: Option<Arc<FusedSchedule>>,
+    kind: PlannedStep,
+    /// Format this step materializes its output in (per the plan).
+    output: StepOutput,
     strategy: StepStrategy,
     /// Column-strip mode: `Auto` follows the step schedule's cost-model
     /// pick, so strip widths thread through the ping-pong intermediates
-    /// per step without rebinding.
+    /// per step without rebinding. Pair steps only.
     strip: StripMode,
-    /// Per-step `D1` workspace, allocated once at bind time.
+    /// Per-step `D1` workspace, allocated once at bind time (pair steps).
     d1: Dense<T>,
     out_rows: usize,
     out_cols: usize,
 }
 
+/// One ping-pong intermediate slot, able to hold either format without
+/// surrendering the other's allocation: the dense buffer keeps its
+/// bind-time capacity, the sparse buffer's `indptr`/`indices`/`data`
+/// grow on first use and are reused thereafter.
+struct InterBuf<T> {
+    fmt: StepOutput,
+    dense: Dense<T>,
+    sparse: Csr<T>,
+}
+
+impl<T: Scalar> InterBuf<T> {
+    fn with_dense_capacity(cap: usize) -> Self {
+        Self {
+            fmt: StepOutput::Dense,
+            dense: Dense { rows: 0, cols: 0, data: Vec::with_capacity(cap) },
+            sparse: Csr::empty(0, 0),
+        }
+    }
+
+    fn as_in(&self) -> ChainIn<'_, T> {
+        match self.fmt {
+            StepOutput::Dense => ChainIn::Dense(&self.dense),
+            StepOutput::SparseCsr => ChainIn::Sparse(&self.sparse),
+        }
+    }
+}
+
 /// A bound, reusable chain executor. Bind once, `run` many times.
 pub struct ChainExec<T> {
     steps: Vec<ChainStepExec<T>>,
-    /// Ping-pong intermediates, allocated once to the max intermediate
-    /// area and reshaped (never reallocated) per step.
-    inter: [Dense<T>; 2],
-    /// Per-thread strip workspaces shared by every step (sized lazily
-    /// to the largest strip requirement seen).
+    /// Ping-pong intermediates (dense part allocated once to the max
+    /// dense intermediate area and reshaped, never reallocated, per
+    /// step; sparse part capacity-reusing).
+    inter: [InterBuf<T>; 2],
+    /// Per-thread strip workspaces shared by every pair step (sized
+    /// lazily to the largest strip requirement seen).
     strips: StripWs<T>,
+    /// Per-thread SpGEMM merge scratch shared by every sparse-flow step.
+    spgemm: SpgemmWs<T>,
     in_rows: usize,
     in_cols: usize,
+    in_format: StepOutput,
     out_rows: usize,
     out_cols: usize,
+    out_format: StepOutput,
+}
+
+/// Pair-step geometry checks shared by every `ChainStepOp` with a
+/// sparse `A` operand bound to a fused schedule.
+fn check_pair_a<T: Scalar>(
+    s: usize,
+    a: &Csr<T>,
+    sp: &ChainStepPlan,
+) -> Result<(), ChainError> {
+    let (ar, ac) = (a.rows(), a.cols());
+    if ar != sp.out_rows || ac != sp.d1_rows {
+        return Err(ChainError::new(format!(
+            "step {s}: A is {ar}x{ac} but the plan expects {}x{}",
+            sp.out_rows, sp.d1_rows
+        )));
+    }
+    let sched = sp
+        .schedule
+        .as_ref()
+        .ok_or_else(|| ChainError::new(format!("step {s}: plan pair step lacks a schedule")))?;
+    if sched.n_first != ac || sched.n_second != ar {
+        return Err(ChainError::new(format!(
+            "step {s}: schedule was built for a {}x{} pattern, A is {ar}x{ac}",
+            sched.n_second, sched.n_first
+        )));
+    }
+    Ok(())
 }
 
 impl<T: Scalar> ChainExec<T> {
@@ -199,24 +349,14 @@ impl<T: Scalar> ChainExec<T> {
         // Incoming (flowing) shape of each step, per the plan.
         let (mut in_r, mut in_c) = (plan.in_rows, plan.in_cols);
         for (s, (op, sp)) in ops.into_iter().zip(&plan.steps).enumerate() {
-            if op.flow() != sp.flow {
-                return Err(ChainError::new(format!("step {s}: operand/plan flow mismatch")));
-            }
-            let (ar, ac) = (op.a().rows(), op.a().cols());
-            if ar != sp.out_rows || ac != sp.d1_rows {
+            if op.kind() != sp.kind {
                 return Err(ChainError::new(format!(
-                    "step {s}: A is {ar}x{ac} but the plan expects {}x{}",
-                    sp.out_rows, sp.d1_rows
-                )));
-            }
-            if sp.schedule.n_first != ac || sp.schedule.n_second != ar {
-                return Err(ChainError::new(format!(
-                    "step {s}: schedule was built for a {}x{} pattern, A is {ar}x{ac}",
-                    sp.schedule.n_second, sp.schedule.n_first
+                    "step {s}: operand/plan step-kind mismatch"
                 )));
             }
             match &op {
-                ChainStepOp::GemmFlowB { w, .. } => {
+                ChainStepOp::GemmFlowB { a, w } => {
+                    check_pair_a(s, a, sp)?;
                     if w.rows != in_c || w.cols != sp.out_cols {
                         return Err(ChainError::new(format!(
                             "step {s}: weights are {}x{} but the plan expects {in_c}x{}",
@@ -224,20 +364,43 @@ impl<T: Scalar> ChainExec<T> {
                         )));
                     }
                 }
-                ChainStepOp::GemmFlowC { b, .. } => {
-                    if b.rows != ac || b.cols != in_r {
+                ChainStepOp::GemmFlowC { a, b } => {
+                    check_pair_a(s, a, sp)?;
+                    if b.rows != a.cols() || b.cols != in_r {
                         return Err(ChainError::new(format!(
-                            "step {s}: stationary B is {}x{} but the plan expects {ac}x{in_r}",
-                            b.rows, b.cols
+                            "step {s}: stationary B is {}x{} but the plan expects {}x{in_r}",
+                            b.rows,
+                            b.cols,
+                            a.cols()
                         )));
                     }
                 }
-                ChainStepOp::SpmmFlowC { b, .. } => {
-                    if b.rows() != ac || b.cols() != in_r {
+                ChainStepOp::SpmmFlowC { a, b } => {
+                    check_pair_a(s, a, sp)?;
+                    if b.rows() != a.cols() || b.cols() != in_r {
                         return Err(ChainError::new(format!(
-                            "step {s}: stationary B is {}x{} but the plan expects {ac}x{in_r}",
+                            "step {s}: stationary B is {}x{} but the plan expects {}x{in_r}",
                             b.rows(),
-                            b.cols()
+                            b.cols(),
+                            a.cols()
+                        )));
+                    }
+                }
+                ChainStepOp::SpgemmFlow { a, .. } => {
+                    if a.rows() != sp.out_rows || a.cols() != in_r {
+                        return Err(ChainError::new(format!(
+                            "step {s}: A is {}x{} but the plan expects {}x{in_r}",
+                            a.rows(),
+                            a.cols(),
+                            sp.out_rows
+                        )));
+                    }
+                }
+                ChainStepOp::FlowAMulB { b } => {
+                    if b.rows != in_c || b.cols != sp.out_cols {
+                        return Err(ChainError::new(format!(
+                            "step {s}: stationary B is {}x{} but the plan expects {in_c}x{}",
+                            b.rows, b.cols, sp.out_cols
                         )));
                     }
                 }
@@ -245,34 +408,47 @@ impl<T: Scalar> ChainExec<T> {
             (in_r, in_c) = (sp.out_rows, sp.out_cols);
             steps.push(ChainStepExec {
                 op,
-                schedule: Arc::clone(&sp.schedule),
+                schedule: sp.schedule.clone(),
+                kind: sp.kind,
+                output: sp.output,
                 strategy: StepStrategy::Fused,
                 strip: StripMode::Auto,
-                d1: Dense::zeros(sp.d1_rows, sp.out_cols),
+                d1: if matches!(sp.kind, PlannedStep::Pair(_)) {
+                    Dense::zeros(sp.d1_rows, sp.out_cols)
+                } else {
+                    Dense::zeros(0, 0)
+                },
                 out_rows: sp.out_rows,
                 out_cols: sp.out_cols,
             });
         }
         let max_area = plan.steps[..plan.steps.len() - 1]
             .iter()
+            .filter(|p| p.output == StepOutput::Dense)
             .map(|p| p.out_rows * p.out_cols)
             .max()
             .unwrap_or(0);
-        let mk = || Dense { rows: 0, cols: 0, data: Vec::with_capacity(max_area) };
         let (out_rows, out_cols) = plan.out_dims();
         Ok(Self {
             steps,
-            inter: [mk(), mk()],
+            inter: [
+                InterBuf::with_dense_capacity(max_area),
+                InterBuf::with_dense_capacity(max_area),
+            ],
             strips: StripWs::new(),
+            spgemm: SpgemmWs::new(),
             in_rows: plan.in_rows,
             in_cols: plan.in_cols,
+            in_format: plan.in_format,
             out_rows,
             out_cols,
+            out_format: plan.out_format(),
         })
     }
 
-    /// Plan (with a private dedup map) and bind in one call. The element
-    /// width of `params` is forced to `T`'s.
+    /// Plan (with a private dedup map) and bind in one call, for a
+    /// **dense** chain input. The element width of `params` is forced
+    /// to `T`'s.
     pub fn plan_and_build(
         ops: Vec<ChainStepOp<T>>,
         in_rows: usize,
@@ -283,6 +459,25 @@ impl<T: Scalar> ChainExec<T> {
         let plan = {
             let specs = chain_specs(&ops, in_rows, in_cols)?;
             crate::scheduler::chain::ChainPlanner::new(params).plan(in_rows, in_cols, &specs)?
+        };
+        Self::new(ops, &plan)
+    }
+
+    /// [`ChainExec::plan_and_build`] for a **sparse** chain input (the
+    /// SpGEMM chains): `in_nnz` seeds the planner's density estimate —
+    /// pass a representative input's nonzero count.
+    pub fn plan_and_build_sparse(
+        ops: Vec<ChainStepOp<T>>,
+        in_rows: usize,
+        in_cols: usize,
+        in_nnz: usize,
+        mut params: SchedulerParams,
+    ) -> Result<Self, ChainError> {
+        params.elem_bytes = T::BYTES;
+        let plan = {
+            let specs = chain_specs(&ops, in_rows, in_cols)?;
+            crate::scheduler::chain::ChainPlanner::new(params)
+                .plan_input(ChainInputMeta::sparse(in_rows, in_cols, in_nnz), &specs)?
         };
         Self::new(ops, &plan)
     }
@@ -299,7 +494,36 @@ impl<T: Scalar> ChainExec<T> {
         (self.out_rows, self.out_cols)
     }
 
-    /// Override one step's executor strategy.
+    /// Format of the flowing input this chain was planned for.
+    pub fn in_format(&self) -> StepOutput {
+        self.in_format
+    }
+
+    /// Format of the chain's final output.
+    pub fn out_format(&self) -> StepOutput {
+        self.out_format
+    }
+
+    /// The planned output format of step `step` (which the planner's
+    /// cost decision or a [`StepOutputMode`] override fixed at plan
+    /// time).
+    pub fn step_output(&self, step: usize) -> StepOutput {
+        self.steps[step].output
+    }
+
+    /// The planner-step kind of step `step`.
+    pub fn step_kind(&self, step: usize) -> PlannedStep {
+        self.steps[step].kind
+    }
+
+    /// The bound operands of step `step` (tests assert `Arc` identity —
+    /// binding never deep-copies stationary operands).
+    pub fn step_op(&self, step: usize) -> &ChainStepOp<T> {
+        &self.steps[step].op
+    }
+
+    /// Override one step's executor strategy (pair steps; sparse-flow
+    /// steps ignore it).
     pub fn set_strategy(&mut self, step: usize, strategy: StepStrategy) {
         self.steps[step].strategy = strategy;
     }
@@ -315,14 +539,18 @@ impl<T: Scalar> ChainExec<T> {
     /// Override one step's column-strip mode (default [`StripMode::Auto`]
     /// — follow that step's schedule). The coordinator applies tuned
     /// picks here when the autotuner has already timed the step's
-    /// (pattern, shape, precision).
+    /// (pattern, shape, precision). Pair steps only; sparse-flow steps
+    /// ignore it.
     pub fn set_strip(&mut self, step: usize, strip: StripMode) {
         self.steps[step].strip = strip;
     }
 
     /// Copy fresh weights into a [`ChainStepOp::GemmFlowB`] step (same
     /// shape) — how a training loop updates parameters without rebinding
-    /// the chain. Panics if the step has no stationary weights.
+    /// the chain. Copy-on-write through [`Arc::make_mut`]: a weight
+    /// `Arc` shared with a registry or another chain is cloned once on
+    /// first update, never mutated in place under a sharer. Panics if
+    /// the step has no stationary weights.
     pub fn set_weight(&mut self, step: usize, w: &Dense<T>) {
         match &mut self.steps[step].op {
             ChainStepOp::GemmFlowB { w: slot, .. } => {
@@ -331,23 +559,37 @@ impl<T: Scalar> ChainExec<T> {
                     (w.rows, w.cols),
                     "weight shape changed; rebuild the chain"
                 );
-                slot.data.copy_from_slice(&w.data);
+                Arc::make_mut(slot).data.copy_from_slice(&w.data);
             }
             _ => panic!("chain step {step} has no stationary weights (not GemmFlowB)"),
         }
     }
 
-    /// Apply the whole chain: `out = step_{n-1}(... step_0(x) ...)`.
+    /// Apply the whole chain: `out = step_{n-1}(... step_0(x) ...)`
+    /// (dense input, dense output — the pre-SpGEMM signature).
     pub fn run(&mut self, pool: &ThreadPool, x: &Dense<T>, out: &mut Dense<T>) {
         self.run_with(pool, x, out, |_, _| {});
     }
 
+    /// Apply the chain to a **sparse** input, producing a dense output
+    /// (e.g. `Â²X`: SpGEMM steps then a flow-A consumer).
+    pub fn run_sparse(&mut self, pool: &ThreadPool, x: &Csr<T>, out: &mut Dense<T>) {
+        self.run_io(pool, ChainIn::Sparse(x), ChainOut::Dense(out));
+    }
+
+    /// Apply the chain for any planned input/output format combination.
+    pub fn run_io(&mut self, pool: &ThreadPool, x: ChainIn<'_, T>, out: ChainOut<'_, T>) {
+        let done =
+            self.run_controlled_io(pool, x, out, |_| StepControl::Continue, |_, _| {});
+        debug_assert!(done, "unconditional Continue cannot cancel");
+    }
+
     /// [`ChainExec::run`] with a per-step tap: after step `s` writes its
-    /// output, `tap(s, buf)` may post-process it **in place** (e.g. an
-    /// activation) before it flows into step `s + 1`. The tap must not
-    /// change the buffer's shape — enforced with a panic, because later
-    /// steps execute bound schedules through raw pointers sized to the
-    /// planned shape.
+    /// (dense) output, `tap(s, buf)` may post-process it **in place**
+    /// (e.g. an activation) before it flows into step `s + 1`. The tap
+    /// must not change the buffer's shape — enforced with a panic,
+    /// because later steps execute bound schedules through raw pointers
+    /// sized to the planned shape. Sparse-output steps are not tapped.
     pub fn run_with(
         &mut self,
         pool: &ThreadPool,
@@ -374,15 +616,33 @@ impl<T: Scalar> ChainExec<T> {
         pool: &ThreadPool,
         x: &Dense<T>,
         out: &mut Dense<T>,
+        ctrl: impl FnMut(usize) -> StepControl,
+        tap: impl FnMut(usize, &mut Dense<T>),
+    ) -> bool {
+        self.run_controlled_io(pool, ChainIn::Dense(x), ChainOut::Dense(out), ctrl, tap)
+    }
+
+    /// The general form of [`ChainExec::run_controlled`]: dense or
+    /// sparse input and output, per the plan's formats (asserted).
+    pub fn run_controlled_io(
+        &mut self,
+        pool: &ThreadPool,
+        x: ChainIn<'_, T>,
+        out: ChainOut<'_, T>,
         mut ctrl: impl FnMut(usize) -> StepControl,
         mut tap: impl FnMut(usize, &mut Dense<T>),
     ) -> bool {
-        assert_eq!((x.rows, x.cols), (self.in_rows, self.in_cols), "chain input shape");
-        assert_eq!((out.rows, out.cols), (self.out_rows, self.out_cols), "chain output shape");
+        assert_eq!(x.format(), self.in_format, "chain input format");
+        assert_eq!(x.dims(), (self.in_rows, self.in_cols), "chain input shape");
+        assert_eq!(out.format(), self.out_format, "chain output format");
+        if let ChainOut::Dense(d) = &out {
+            assert_eq!((d.rows, d.cols), (self.out_rows, self.out_cols), "chain output shape");
+        }
         let n = self.steps.len();
         let steps = &mut self.steps;
         let inter = &mut self.inter;
         let strips = &mut self.strips;
+        let spgemm_ws = &mut self.spgemm;
         let mut tap_checked = |s: usize, buf: &mut Dense<T>, rows: usize, cols: usize| {
             tap(s, buf);
             assert_eq!(
@@ -391,6 +651,7 @@ impl<T: Scalar> ChainExec<T> {
                 "tap must not change the step-{s} output shape"
             );
         };
+        let mut out = Some(out);
 
         // Step 0 reads the caller's input.
         {
@@ -399,14 +660,29 @@ impl<T: Scalar> ChainExec<T> {
             }
             let step = &mut steps[0];
             if n == 1 {
-                run_step(step, strips, pool, x, out);
-                tap_checked(0, out, step.out_rows, step.out_cols);
+                match out.take().expect("output present") {
+                    ChainOut::Dense(d) => {
+                        run_step(step, strips, spgemm_ws, pool, x, ChainOut::Dense(&mut *d));
+                        tap_checked(0, d, step.out_rows, step.out_cols);
+                    }
+                    ChainOut::Sparse(c) => {
+                        run_step(step, strips, spgemm_ws, pool, x, ChainOut::Sparse(c));
+                    }
+                }
                 return true;
             }
             let dst = &mut inter[0];
-            shape_to(dst, step.out_rows, step.out_cols);
-            run_step(step, strips, pool, x, dst);
-            tap_checked(0, dst, step.out_rows, step.out_cols);
+            dst.fmt = step.output;
+            match step.output {
+                StepOutput::Dense => {
+                    shape_to(&mut dst.dense, step.out_rows, step.out_cols);
+                    run_step(step, strips, spgemm_ws, pool, x, ChainOut::Dense(&mut dst.dense));
+                    tap_checked(0, &mut dst.dense, step.out_rows, step.out_cols);
+                }
+                StepOutput::SparseCsr => {
+                    run_step(step, strips, spgemm_ws, pool, x, ChainOut::Sparse(&mut dst.sparse));
+                }
+            }
         }
 
         // Steps 1..n ping-pong between the two intermediates; the last
@@ -418,13 +694,43 @@ impl<T: Scalar> ChainExec<T> {
             let step = &mut steps[s];
             let (lo, hi) = inter.split_at_mut(1);
             let (src, dst) = if s % 2 == 1 { (&lo[0], &mut hi[0]) } else { (&hi[0], &mut lo[0]) };
+            let src_in = src.as_in();
             if s + 1 == n {
-                run_step(step, strips, pool, src, out);
-                tap_checked(s, out, step.out_rows, step.out_cols);
+                match out.take().expect("output present") {
+                    ChainOut::Dense(d) => {
+                        run_step(step, strips, spgemm_ws, pool, src_in, ChainOut::Dense(&mut *d));
+                        tap_checked(s, d, step.out_rows, step.out_cols);
+                    }
+                    ChainOut::Sparse(c) => {
+                        run_step(step, strips, spgemm_ws, pool, src_in, ChainOut::Sparse(c));
+                    }
+                }
             } else {
-                shape_to(dst, step.out_rows, step.out_cols);
-                run_step(step, strips, pool, src, dst);
-                tap_checked(s, dst, step.out_rows, step.out_cols);
+                dst.fmt = step.output;
+                match step.output {
+                    StepOutput::Dense => {
+                        shape_to(&mut dst.dense, step.out_rows, step.out_cols);
+                        run_step(
+                            step,
+                            strips,
+                            spgemm_ws,
+                            pool,
+                            src_in,
+                            ChainOut::Dense(&mut dst.dense),
+                        );
+                        tap_checked(s, &mut dst.dense, step.out_rows, step.out_cols);
+                    }
+                    StepOutput::SparseCsr => {
+                        run_step(
+                            step,
+                            strips,
+                            spgemm_ws,
+                            pool,
+                            src_in,
+                            ChainOut::Sparse(&mut dst.sparse),
+                        );
+                    }
+                }
             }
         }
         true
@@ -432,7 +738,7 @@ impl<T: Scalar> ChainExec<T> {
 }
 
 /// Reshape a pre-capacitated buffer without reallocating (capacity was
-/// fixed to the chain's max intermediate area at bind time).
+/// fixed to the chain's max dense intermediate area at bind time).
 fn shape_to<T: Scalar>(buf: &mut Dense<T>, rows: usize, cols: usize) {
     if buf.rows != rows || buf.cols != cols {
         buf.rows = rows;
@@ -441,31 +747,73 @@ fn shape_to<T: Scalar>(buf: &mut Dense<T>, rows: usize, cols: usize) {
     }
 }
 
-/// Execute one step: bind the flowing value into a [`PairOp`] and run it
-/// with the step's strategy and strip mode on the shared pool and
-/// workspaces (`ws` holds the per-thread strip buffers every step
-/// shares).
+/// Execute one pair step with the shared strip workspaces.
+#[allow(clippy::too_many_arguments)]
+fn run_pair<T: Scalar>(
+    pair: &PairOp<'_, T>,
+    c: &Dense<T>,
+    schedule: Option<&FusedSchedule>,
+    strategy: StepStrategy,
+    strip: StripMode,
+    d1: &mut Dense<T>,
+    pool: &ThreadPool,
+    ws: &mut StripWs<T>,
+    out: &mut Dense<T>,
+) {
+    match strategy {
+        StepStrategy::Fused => run_fused_striped(
+            pair,
+            schedule.expect("pair steps carry schedules"),
+            pool,
+            c,
+            d1,
+            out,
+            ws,
+            strip,
+        ),
+        StepStrategy::Unfused => run_unfused_striped(pair, pool, c, d1, out, UNFUSED_CHUNK, strip),
+    }
+}
+
+/// Execute one step: bind the flowing value into the step's operation
+/// and run it with the step's strategy and strip mode on the shared
+/// pool and workspaces. The (operand kind, flow format, output format)
+/// combination was validated at bind time against the plan.
 fn run_step<T: Scalar>(
     step: &mut ChainStepExec<T>,
     ws: &mut StripWs<T>,
+    sws: &mut SpgemmWs<T>,
     pool: &ThreadPool,
-    input: &Dense<T>,
-    out: &mut Dense<T>,
+    input: ChainIn<'_, T>,
+    dst: ChainOut<'_, T>,
 ) {
     let strategy = step.strategy;
     let strip = step.strip;
+    let schedule = step.schedule.as_deref();
     let d1 = &mut step.d1;
-    let schedule = &step.schedule;
-    let (pair, c) = match &step.op {
-        ChainStepOp::GemmFlowB { a, w } => (PairOp::gemm_spmm(a, input), w),
-        ChainStepOp::GemmFlowC { a, b } => (PairOp::gemm_spmm(a, b), input),
-        ChainStepOp::SpmmFlowC { a, b } => (PairOp::spmm_spmm(a, b), input),
-    };
-    match strategy {
-        StepStrategy::Fused => run_fused_striped(&pair, schedule, pool, c, d1, out, ws, strip),
-        StepStrategy::Unfused => {
-            run_unfused_striped(&pair, pool, c, d1, out, UNFUSED_CHUNK, strip)
+    match (&step.op, input, dst) {
+        (ChainStepOp::GemmFlowB { a, w }, ChainIn::Dense(x), ChainOut::Dense(out)) => {
+            run_pair(&PairOp::gemm_spmm(a, x), w, schedule, strategy, strip, d1, pool, ws, out)
         }
+        (ChainStepOp::GemmFlowC { a, b }, ChainIn::Dense(x), ChainOut::Dense(out)) => {
+            run_pair(&PairOp::gemm_spmm(a, b), x, schedule, strategy, strip, d1, pool, ws, out)
+        }
+        (ChainStepOp::SpmmFlowC { a, b }, ChainIn::Dense(x), ChainOut::Dense(out)) => {
+            run_pair(&PairOp::spmm_spmm(a, b), x, schedule, strategy, strip, d1, pool, ws, out)
+        }
+        (ChainStepOp::SpgemmFlow { a, .. }, ChainIn::Sparse(v), ChainOut::Sparse(out)) => {
+            run_spgemm(pool, a, v, sws, out)
+        }
+        (ChainStepOp::SpgemmFlow { a, .. }, ChainIn::Sparse(v), ChainOut::Dense(out)) => {
+            run_spgemm_dense(pool, a, v, out)
+        }
+        (ChainStepOp::FlowAMulB { b }, ChainIn::Sparse(v), ChainOut::Dense(out)) => {
+            run_sparse_times_dense(pool, v, b, out)
+        }
+        (ChainStepOp::FlowAMulB { b }, ChainIn::Dense(v), ChainOut::Dense(out)) => {
+            run_dense_times_dense(pool, v, b, out)
+        }
+        _ => unreachable!("step kind / flow format mismatch survived bind validation"),
     }
 }
 
@@ -473,6 +821,7 @@ fn run_step<T: Scalar>(
 mod tests {
     use super::*;
     use crate::exec::reference::reference;
+    use crate::kernels::spgemm;
     use crate::sparse::gen;
 
     fn params_small() -> SchedulerParams {
@@ -485,7 +834,8 @@ mod tests {
         }
     }
 
-    /// Reference composition: apply each step's pair serially.
+    /// Reference composition: apply each step's pair serially (dense
+    /// flows only).
     fn chain_reference<T: Scalar>(ops: &[ChainStepOp<T>], x: &Dense<T>) -> Dense<T> {
         let mut cur = x.clone();
         for op in ops {
@@ -493,6 +843,7 @@ mod tests {
                 ChainStepOp::GemmFlowB { a, w } => reference(&PairOp::gemm_spmm(a, &cur), w),
                 ChainStepOp::GemmFlowC { a, b } => reference(&PairOp::gemm_spmm(a, b), &cur),
                 ChainStepOp::SpmmFlowC { a, b } => reference(&PairOp::spmm_spmm(a, b), &cur),
+                _ => panic!("dense chain_reference cannot run sparse-flow steps"),
             };
         }
         cur
@@ -530,7 +881,7 @@ mod tests {
             .enumerate()
             .map(|(i, w)| ChainStepOp::GemmFlowB {
                 a: Arc::clone(&a),
-                w: Dense::<f64>::randn(w[0], w[1], 10 + i as u64),
+                w: Arc::new(Dense::<f64>::randn(w[0], w[1], 10 + i as u64)),
             })
             .collect();
         let x = Dense::<f64>::randn(128, widths[0], 4);
@@ -553,7 +904,7 @@ mod tests {
             -1.0,
             1.0,
         ));
-        let b1 = Dense::<f64>::randn(20, 30, 8);
+        let b1 = Arc::new(Dense::<f64>::randn(20, 30, 8));
         let a2 = Arc::new(Csr::<f64>::with_random_values(gen::banded(30, &[1, 3]), 4, -1.0, 1.0));
         let a3 = Arc::new(Csr::<f64>::with_random_values(
             gen::erdos_renyi(30, 3, 11),
@@ -561,7 +912,7 @@ mod tests {
             -1.0,
             1.0,
         ));
-        let w = Dense::<f64>::randn(6, 5, 9);
+        let w = Arc::new(Dense::<f64>::randn(6, 5, 9));
         let ops = vec![
             ChainStepOp::GemmFlowC { a: Arc::clone(&a1), b: b1 },
             ChainStepOp::SpmmFlowC { a: Arc::clone(&a2), b: Arc::clone(&a2) },
@@ -582,7 +933,10 @@ mod tests {
     #[test]
     fn reusable_across_runs_and_weight_updates() {
         let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(40, &[1]), 6, -1.0, 1.0));
-        let ops = vec![ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Dense::zeros(4, 3) }];
+        let ops = vec![ChainStepOp::GemmFlowB {
+            a: Arc::clone(&a),
+            w: Arc::new(Dense::zeros(4, 3)),
+        }];
         let mut chain = ChainExec::plan_and_build(ops, 40, 4, params_small()).unwrap();
         let pool = ThreadPool::new(2);
         let mut y = Dense::zeros(40, 3);
@@ -594,6 +948,133 @@ mod tests {
             let expect = reference(&PairOp::gemm_spmm(&a, &x), &w);
             assert!(y.max_abs_diff(&expect) < 1e-11, "run {seed}");
         }
+    }
+
+    #[test]
+    fn arc_operands_are_shared_not_copied_on_bind() {
+        // The Arc-ify satellite: binding a chain must hand the executor
+        // the *same* allocation the caller (or a server registry)
+        // holds — no deep copy of stationary operands on a cold bind.
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(20, &[1]), 1, -1.0, 1.0));
+        let w = Arc::new(Dense::<f64>::randn(4, 3, 2));
+        let b = Arc::new(Dense::<f64>::randn(20, 20, 3));
+        let ops = vec![
+            ChainStepOp::GemmFlowC { a: Arc::clone(&a), b: Arc::clone(&b) },
+            ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Arc::clone(&w) },
+        ];
+        let chain = ChainExec::plan_and_build(ops, 20, 4, params_small()).unwrap();
+        match chain.step_op(0) {
+            ChainStepOp::GemmFlowC { a: sa, b: sb } => {
+                assert!(Arc::ptr_eq(sa, &a), "A deep-copied on bind");
+                assert!(Arc::ptr_eq(sb, &b), "stationary B deep-copied on bind");
+            }
+            _ => panic!("step 0 kind"),
+        }
+        match chain.step_op(1) {
+            ChainStepOp::GemmFlowB { w: sw, .. } => {
+                assert!(Arc::ptr_eq(sw, &w), "weights deep-copied on bind");
+            }
+            _ => panic!("step 1 kind"),
+        }
+    }
+
+    #[test]
+    fn set_weight_is_copy_on_write_under_sharing() {
+        // Two chains share one weight Arc; updating one must not be
+        // visible through the other (Arc::make_mut clones on first
+        // write instead of mutating under the sharer).
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(16, &[1]), 1, -1.0, 1.0));
+        let w = Arc::new(Dense::<f64>::randn(4, 3, 5));
+        let mk = || {
+            ChainExec::plan_and_build(
+                vec![ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Arc::clone(&w) }],
+                16,
+                4,
+                params_small(),
+            )
+            .unwrap()
+        };
+        let mut c1 = mk();
+        let c2 = mk();
+        c1.set_weight(0, &Dense::<f64>::full(4, 3, 9.0));
+        match (c1.step_op(0), c2.step_op(0)) {
+            (ChainStepOp::GemmFlowB { w: w1, .. }, ChainStepOp::GemmFlowB { w: w2, .. }) => {
+                assert!(!Arc::ptr_eq(w1, w2), "set_weight must unshare, not mutate in place");
+                assert!(Arc::ptr_eq(w2, &w), "the untouched chain still shares the original");
+                assert_eq!(w1.data[0], 9.0);
+                assert_eq!(w2.data[0], w.data[0]);
+            }
+            _ => panic!("step kinds"),
+        }
+    }
+
+    #[test]
+    fn spgemm_chain_sparse_input_to_dense_output() {
+        // Â² X as a chain: sparse input Â, one SpGEMM step (stays
+        // sparse), then the flow-A consumer against stationary X.
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::erdos_renyi(60, 2, 9), 3, -1.0, 1.0));
+        let x = Arc::new(Dense::<f64>::randn(60, 8, 4));
+        let ops = vec![
+            ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::SparseCsr },
+            ChainStepOp::FlowAMulB { b: Arc::clone(&x) },
+        ];
+        let mut chain =
+            ChainExec::plan_and_build_sparse(ops, a.rows(), a.cols(), a.nnz(), params_small())
+                .unwrap();
+        assert_eq!(chain.in_format(), StepOutput::SparseCsr);
+        assert_eq!(chain.out_format(), StepOutput::Dense);
+        assert_eq!(chain.step_output(0), StepOutput::SparseCsr);
+        let pool = ThreadPool::new(3);
+        let mut y = Dense::zeros(60, 8);
+        // Two runs: the sparse intermediate buffer must be reusable.
+        for run in 0..2 {
+            chain.run_sparse(&pool, &a, &mut y);
+            let s = spgemm(&a, &a, 0.0);
+            let expect = reference(&PairOp::spmm_spmm(&Csr::<f64>::eye(60), &s), &x);
+            assert!(y.max_abs_diff(&expect) < 1e-9, "run {run}");
+        }
+    }
+
+    #[test]
+    fn spgemm_densified_intermediate_feeds_pair_step() {
+        // Force the SpGEMM output dense; the (dense) flow then feeds an
+        // ordinary fused pair step.
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::erdos_renyi(40, 2, 5), 1, -1.0, 1.0));
+        let a2 = Arc::new(Csr::<f64>::with_random_values(gen::banded(40, &[1, 2]), 2, -1.0, 1.0));
+        let ops = vec![
+            ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::Dense },
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a2), b: Arc::clone(&a2) },
+        ];
+        let mut chain =
+            ChainExec::plan_and_build_sparse(ops, 40, 40, a.nnz(), params_small()).unwrap();
+        assert_eq!(chain.step_output(0), StepOutput::Dense);
+        assert_eq!(chain.step_kind(0), PlannedStep::Spgemm);
+        let pool = ThreadPool::new(2);
+        let mut y = Dense::zeros(40, 40);
+        chain.run_sparse(&pool, &a, &mut y);
+        let inter = spgemm(&a, &a, 0.0).to_dense();
+        let expect = reference(&PairOp::spmm_spmm(&a2, &a2), &inter);
+        assert!(y.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn spgemm_chain_with_sparse_final_output() {
+        // A 3-hop product Â³ kept sparse end to end, delivered through
+        // a sparse ChainOut.
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(32, &[1]), 7, -1.0, 1.0));
+        let ops = vec![
+            ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::SparseCsr },
+            ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::SparseCsr },
+        ];
+        let mut chain =
+            ChainExec::plan_and_build_sparse(ops, 32, 32, a.nnz(), params_small()).unwrap();
+        assert_eq!(chain.out_format(), StepOutput::SparseCsr);
+        let pool = ThreadPool::new(2);
+        let mut out = Csr::<f64>::empty(0, 0);
+        chain.run_io(&pool, ChainIn::Sparse(&a), ChainOut::Sparse(&mut out));
+        let expect = spgemm(&a, &spgemm(&a, &a, 0.0), 0.0);
+        assert_eq!(out, expect);
+        assert!(out.check_invariants());
     }
 
     #[test]
@@ -668,9 +1149,27 @@ mod tests {
     fn bad_dims_are_rejected() {
         let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(10, &[1]), 1, -1.0, 1.0));
         // weights expect a 6-col flow but the input has 5 cols.
-        let ops = vec![ChainStepOp::GemmFlowB { a, w: Dense::zeros(6, 3) }];
+        let ops = vec![ChainStepOp::GemmFlowB { a, w: Arc::new(Dense::zeros(6, 3)) }];
         let err = ChainExec::plan_and_build(ops, 10, 5, params_small()).unwrap_err();
         assert!(err.to_string().contains("flowing value"), "{err}");
+    }
+
+    #[test]
+    fn format_mismatches_are_rejected() {
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(12, &[1]), 1, -1.0, 1.0));
+        // An SpGEMM step planned against a dense input must fail.
+        let ops = vec![ChainStepOp::SpgemmFlow {
+            a: Arc::clone(&a),
+            output: StepOutputMode::Auto,
+        }];
+        let err = ChainExec::plan_and_build(ops, 12, 12, params_small()).unwrap_err();
+        assert!(err.to_string().contains("sparse flowing value"), "{err}");
+
+        // A pair step planned against a sparse input must fail.
+        let ops = vec![ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) }];
+        let err =
+            ChainExec::plan_and_build_sparse(ops, 12, 12, a.nnz(), params_small()).unwrap_err();
+        assert!(err.to_string().contains("dense flowing value"), "{err}");
     }
 
     #[test]
@@ -678,14 +1177,20 @@ mod tests {
         // Plan for a 4-wide flow, then try to bind 5-row weights: the
         // constructor must fail with a ChainError, not panic mid-run.
         let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(10, &[1]), 1, -1.0, 1.0));
-        let good = vec![ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Dense::zeros(4, 3) }];
+        let good = vec![ChainStepOp::GemmFlowB {
+            a: Arc::clone(&a),
+            w: Arc::new(Dense::zeros(4, 3)),
+        }];
         let plan = {
             let specs = chain_specs(&good, 10, 4).unwrap();
             crate::scheduler::chain::ChainPlanner::new(params_small())
                 .plan(10, 4, &specs)
                 .unwrap()
         };
-        let bad = vec![ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Dense::zeros(5, 3) }];
+        let bad = vec![ChainStepOp::GemmFlowB {
+            a: Arc::clone(&a),
+            w: Arc::new(Dense::zeros(5, 3)),
+        }];
         let err = ChainExec::new(bad, &plan).unwrap_err();
         assert!(err.to_string().contains("weights are 5x3"), "{err}");
 

@@ -27,15 +27,17 @@ pub mod fused;
 pub mod overlapped;
 pub mod pool;
 pub mod reference;
+pub mod spgemm;
 pub mod strip;
 pub mod tensor_style;
 pub mod unfused;
 
 pub use atomic_tiling::AtomicTiling;
-pub use chain::{chain_specs, ChainExec, ChainStepOp, StepControl, StepStrategy};
+pub use chain::{chain_specs, ChainExec, ChainIn, ChainOut, ChainStepOp, StepControl, StepStrategy};
 pub use fused::Fused;
 pub use overlapped::Overlapped;
 pub use pool::{PoolLease, SharedPool, ThreadPool, WorkerScratch};
+pub use spgemm::{run_spgemm, run_spgemm_dense, SpgemmWs};
 pub use strip::{StripMode, StripWs};
 pub use tensor_style::TensorStyle;
 pub use unfused::Unfused;

@@ -1,0 +1,303 @@
+//! Parallel two-phase row-merge SpGEMM — the executor behind chain
+//! steps that produce **sparse** intermediates (`out = A · V` with both
+//! operands CSR), plus the consuming kernels for sparse flows.
+//!
+//! Three row-parallel phases on one [`ThreadPool`], with exactly the
+//! barrier structure of the pair executors (each `parallel_for` is a
+//! barrier):
+//!
+//! 1. **symbolic** — every output row's unique-column count, rows
+//!    dynamically chunked across workers, merges through per-thread
+//!    mark/touched scratch ([`WorkerScratch`], restored to zero per row
+//!    so no epoch bookkeeping survives between rows or runs);
+//! 2. **shell** — a serial O(rows) prefix sum reshapes the output CSR
+//!    in place ([`Csr::reset_from_row_counts`]), reusing its
+//!    `indptr`/`indices`/`data` allocations across runs;
+//! 3. **numeric** — rows re-merge with values into their disjoint
+//!    `indptr[i]..indptr[i+1]` slots through raw pointers (no two
+//!    workers ever touch the same slot), emitting sorted, deduplicated
+//!    columns.
+//!
+//! The output structure is a run-time product of the *values'* pattern,
+//! which is exactly why SpGEMM steps carry no [`FusedSchedule`]
+//! (`crate::scheduler::FusedSchedule`): Algorithm 1 would need the
+//! intermediate's pattern before it exists. Row-chunked dynamic
+//! self-scheduling is the right degree of structure here, and the
+//! row-merge output order slots the result straight into the CSR the
+//! next chain step consumes.
+
+use super::pool::{ThreadPool, WorkerScratch};
+use super::SendPtr;
+use crate::core::{Dense, Scalar};
+use crate::kernels::{gemm_row, spgemm_row_dense, spgemm_row_numeric, spgemm_row_symbolic, spmm_row};
+use crate::sparse::Csr;
+
+/// Row-block grain for the row-parallel phases (matches the unfused
+/// executors' dynamic row chunking).
+const ROW_CHUNK: usize = 64;
+
+/// Lazily sized per-thread SpGEMM workspaces an executor owns across
+/// runs: column marks, touched-column lists and dense value
+/// accumulators (one slot per pool worker), plus the shared per-row
+/// symbolic counts. Buffers grow and are never shrunk; the scratch is
+/// re-initialized only when a run arrives on a pool with more workers
+/// than seen before — steady-state runs are allocation-free.
+pub struct SpgemmWs<T> {
+    marks: WorkerScratch<u32>,
+    touched: WorkerScratch<u32>,
+    acc: WorkerScratch<T>,
+    row_nnz: Vec<usize>,
+}
+
+impl<T: Scalar> SpgemmWs<T> {
+    pub fn new() -> Self {
+        Self {
+            marks: WorkerScratch::for_threads(1),
+            touched: WorkerScratch::for_threads(1),
+            acc: WorkerScratch::for_threads(1),
+            row_nnz: Vec::new(),
+        }
+    }
+
+    /// Size for one run: `workers` worker slots of at least `cols`
+    /// entries each, and `rows` symbolic-count slots.
+    fn prepare(&mut self, workers: usize, cols: usize, rows: usize) {
+        if self.marks.n_slots() < workers {
+            self.marks = WorkerScratch::for_threads(workers);
+            self.touched = WorkerScratch::for_threads(workers);
+            self.acc = WorkerScratch::for_threads(workers);
+        }
+        self.marks.ensure(cols);
+        self.touched.ensure(cols);
+        self.acc.ensure(cols);
+        self.row_nnz.clear();
+        self.row_nnz.resize(rows, 0);
+    }
+}
+
+impl<T: Scalar> Default for SpgemmWs<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// `out = A · V` with **sparse CSR output** (two-phase row merge).
+/// Deterministic: each output row is merged by exactly one worker in
+/// `A`-row order, so the result is identical to the serial
+/// [`crate::kernels::spgemm`] with `drop_tol = 0` — bit for bit,
+/// regardless of thread count.
+pub fn run_spgemm<T: Scalar>(
+    pool: &ThreadPool,
+    a: &Csr<T>,
+    v: &Csr<T>,
+    ws: &mut SpgemmWs<T>,
+    out: &mut Csr<T>,
+) {
+    assert_eq!(
+        a.cols(),
+        v.rows(),
+        "A ({}x{}) does not conform to V ({}x{})",
+        a.rows(),
+        a.cols(),
+        v.rows(),
+        v.cols()
+    );
+    let rows = a.rows();
+    let cols = v.cols();
+    ws.prepare(pool.n_threads(), cols, rows);
+
+    // Phase 1: symbolic row sizes (disjoint `row_nnz` slots per row).
+    {
+        let row_nnz = SendPtr(ws.row_nnz.as_mut_ptr());
+        let marks = &ws.marks;
+        let touched = &ws.touched;
+        pool.parallel_for_chunks(rows, ROW_CHUNK, |r, w| unsafe {
+            let marks = marks.get(w);
+            let touched = touched.get(w);
+            for i in r {
+                *row_nnz.get().add(i) =
+                    spgemm_row_symbolic(a.pattern.row(i), &v.pattern, marks, touched);
+            }
+        });
+    }
+
+    // Phase 2: prefix-sum the counts into the output shell (serial,
+    // O(rows), allocation-reusing).
+    out.reset_from_row_counts(rows, cols, &ws.row_nnz);
+
+    // Phase 3: numeric merge into the disjoint row slots.
+    {
+        let idx = SendPtr(out.pattern.indices.as_mut_ptr());
+        let val = SendPtr(out.data.as_mut_ptr());
+        let indptr = &out.pattern.indptr;
+        let marks = &ws.marks;
+        let touched = &ws.touched;
+        let acc = &ws.acc;
+        pool.parallel_for_chunks(rows, ROW_CHUNK, |r, w| unsafe {
+            let marks = marks.get(w);
+            let touched = touched.get(w);
+            let acc = acc.get(w);
+            for i in r {
+                let (lo, hi) = (indptr[i], indptr[i + 1]);
+                let oc = std::slice::from_raw_parts_mut(idx.get().add(lo), hi - lo);
+                let ov = std::slice::from_raw_parts_mut(val.get().add(lo), hi - lo);
+                let (ac, av) = a.row(i);
+                spgemm_row_numeric(ac, av, v, marks, touched, acc, oc, ov);
+            }
+        });
+    }
+    debug_assert!(out.check_invariants(), "SpGEMM output violates CSR invariants");
+}
+
+/// `out = A · V` with **dense output** — the densify arm of the chain's
+/// per-step output-format decision (one scatter-accumulate pass, no
+/// symbolic phase needed).
+pub fn run_spgemm_dense<T: Scalar>(
+    pool: &ThreadPool,
+    a: &Csr<T>,
+    v: &Csr<T>,
+    out: &mut Dense<T>,
+) {
+    assert_eq!(a.cols(), v.rows(), "A·V conformance");
+    assert_eq!((out.rows, out.cols), (a.rows(), v.cols()), "output shape");
+    let d = SendPtr(out.data.as_mut_ptr());
+    let cols = out.cols;
+    pool.parallel_for_chunks(a.rows(), ROW_CHUNK, |r, _| unsafe {
+        for i in r {
+            let row = std::slice::from_raw_parts_mut(d.get().add(i * cols), cols);
+            let (ac, av) = a.row(i);
+            spgemm_row_dense(ac, av, v, row);
+        }
+    });
+}
+
+/// `out = V · B` with a **sparse** flowing `V` and stationary dense `B`
+/// — how a sparse intermediate is consumed back into the dense world
+/// (plain CSR SpMM over `V`'s rows, same row kernel as every executor).
+pub fn run_sparse_times_dense<T: Scalar>(
+    pool: &ThreadPool,
+    v: &Csr<T>,
+    b: &Dense<T>,
+    out: &mut Dense<T>,
+) {
+    assert_eq!(v.cols(), b.rows, "V·B conformance");
+    assert_eq!((out.rows, out.cols), (v.rows(), b.cols), "output shape");
+    let d = SendPtr(out.data.as_mut_ptr());
+    let ccol = b.cols;
+    pool.parallel_for_chunks(v.rows(), ROW_CHUNK, |r, _| unsafe {
+        for j in r {
+            let row = std::slice::from_raw_parts_mut(d.get().add(j * ccol), ccol);
+            spmm_row(v, j, b, row);
+        }
+    });
+}
+
+/// `out = V · B` with a **dense** flowing `V` (a densified intermediate)
+/// and stationary dense `B` — row-blocked GeMM through the shared
+/// register-blocked row kernel.
+pub fn run_dense_times_dense<T: Scalar>(
+    pool: &ThreadPool,
+    v: &Dense<T>,
+    b: &Dense<T>,
+    out: &mut Dense<T>,
+) {
+    assert_eq!(v.cols, b.rows, "V·B conformance");
+    assert_eq!((out.rows, out.cols), (v.rows, b.cols), "output shape");
+    let d = SendPtr(out.data.as_mut_ptr());
+    let ccol = b.cols;
+    pool.parallel_for_chunks(v.rows, ROW_CHUNK, |r, _| unsafe {
+        for i in r {
+            let row = std::slice::from_raw_parts_mut(d.get().add(i * ccol), ccol);
+            row.iter_mut().for_each(|x| *x = T::ZERO);
+            gemm_row(v.row(i), b, row);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::spgemm;
+    use crate::sparse::gen;
+
+    #[test]
+    fn parallel_spgemm_matches_serial_bitwise() {
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut ws = SpgemmWs::<f64>::new();
+            let mut out = Csr::<f64>::empty(0, 0);
+            for (case, (ra, ca, cb)) in
+                [(30usize, 20usize, 25usize), (64, 64, 64), (1, 5, 3)].into_iter().enumerate()
+            {
+                let seed = case as u64;
+                let a = Csr::<f64>::with_random_values(
+                    gen::uniform_random(ra, ca, 3, seed + 10),
+                    seed,
+                    -1.0,
+                    1.0,
+                );
+                let v = Csr::<f64>::with_random_values(
+                    gen::uniform_random(ca, cb, 2, seed + 20),
+                    seed + 1,
+                    -1.0,
+                    1.0,
+                );
+                run_spgemm(&pool, &a, &v, &mut ws, &mut out);
+                let expect = spgemm(&a, &v, 0.0);
+                assert_eq!(out, expect, "threads={threads} case={seed}");
+                assert!(out.check_invariants());
+            }
+        }
+    }
+
+    #[test]
+    fn workspaces_reuse_across_shapes_and_runs() {
+        let pool = ThreadPool::new(3);
+        let mut ws = SpgemmWs::<f64>::new();
+        let mut out = Csr::<f64>::empty(0, 0);
+        let a1 = Csr::<f64>::with_random_values(gen::erdos_renyi(48, 3, 5), 7, -1.0, 1.0);
+        run_spgemm(&pool, &a1, &a1, &mut ws, &mut out);
+        assert_eq!(out, spgemm(&a1, &a1, 0.0));
+        // Smaller problem into the same (now oversized) buffers.
+        let a2 = Csr::<f64>::with_random_values(gen::banded(10, &[1]), 8, -1.0, 1.0);
+        run_spgemm(&pool, &a2, &a2, &mut ws, &mut out);
+        assert_eq!(out, spgemm(&a2, &a2, 0.0));
+        // And back up.
+        run_spgemm(&pool, &a1, &a1, &mut ws, &mut out);
+        assert_eq!(out, spgemm(&a1, &a1, 0.0));
+    }
+
+    #[test]
+    fn dense_output_matches_sparse_output_densified() {
+        let pool = ThreadPool::new(2);
+        let a = Csr::<f64>::with_random_values(gen::uniform_random(24, 16, 3, 1), 2, -1.0, 1.0);
+        let v = Csr::<f64>::with_random_values(gen::uniform_random(16, 20, 2, 3), 4, -1.0, 1.0);
+        let mut dense = Dense::zeros(24, 20);
+        run_spgemm_dense(&pool, &a, &v, &mut dense);
+        assert!(dense.max_abs_diff(&spgemm(&a, &v, 0.0).to_dense()) < 1e-12);
+    }
+
+    #[test]
+    fn sparse_and_dense_flow_consumers_agree() {
+        let pool = ThreadPool::new(2);
+        let v = Csr::<f64>::with_random_values(gen::uniform_random(20, 12, 3, 6), 5, -1.0, 1.0);
+        let b = Dense::<f64>::randn(12, 9, 7);
+        let mut from_sparse = Dense::zeros(20, 9);
+        run_sparse_times_dense(&pool, &v, &b, &mut from_sparse);
+        let vd = v.to_dense();
+        let mut from_dense = Dense::zeros(20, 9);
+        run_dense_times_dense(&pool, &vd, &b, &mut from_dense);
+        assert!(from_sparse.max_abs_diff(&from_dense) < 1e-12);
+        // Against the naive oracle.
+        let mut expect = Dense::zeros(20, 9);
+        for i in 0..20 {
+            for k in 0..12 {
+                for j in 0..9 {
+                    let x = expect.get(i, j) + vd.get(i, k) * b.get(k, j);
+                    expect.set(i, j, x);
+                }
+            }
+        }
+        assert!(from_sparse.max_abs_diff(&expect) < 1e-12);
+    }
+}

@@ -107,7 +107,7 @@ impl<T: Scalar> Gcn<T> {
                 .iter()
                 .map(|l| ChainStepOp::GemmFlowB {
                     a: Arc::clone(&self.a_hat),
-                    w: Dense::zeros(l.w.rows, l.w.cols),
+                    w: Arc::new(Dense::zeros(l.w.rows, l.w.cols)),
                 })
                 .collect();
             let plan = {

@@ -326,6 +326,89 @@ pub fn time_spmm_chain<T: Scalar>(
     }
 }
 
+/// Strategy arms of the Fig. 16 SpGEMM-chain study: `S = Â·Â` then
+/// `S·X`, with the intermediate `S` materialized sparse (CSR) or dense.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpgemmChainStrat {
+    /// One bound [`ChainExec`]: the SpGEMM step's output forced to
+    /// sparse CSR
+    /// ([`StepOutputMode::SparseCsr`](crate::scheduler::StepOutputMode))
+    /// — the intermediate stays sparse end-to-end.
+    SparseIntermediate,
+    /// One bound [`ChainExec`]: the SpGEMM step's output forced dense
+    /// ([`StepOutputMode::Dense`](crate::scheduler::StepOutputMode)) —
+    /// the pre-SpGEMM world, where every intermediate materializes as a
+    /// dense `n × n` block.
+    DenseIntermediate,
+    /// The library-call pattern: each product is an independent call —
+    /// fresh pool spin-up, fresh merge scratch, fresh output
+    /// allocation — with sparse intermediates.
+    PerPairCall,
+}
+
+impl SpgemmChainStrat {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpgemmChainStrat::SparseIntermediate => "sparse_intermediate",
+            SpgemmChainStrat::DenseIntermediate => "dense_intermediate",
+            SpgemmChainStrat::PerPairCall => "per_pair_call",
+        }
+    }
+}
+
+/// Median time of one `Â²X` application (one SpGEMM step producing the
+/// intermediate, one flow-A step consuming it against an `n × rhs`
+/// block) under one [`SpgemmChainStrat`]. Construction/planning is
+/// excluded for the bound-chain arms, mirroring [`time_spmm_chain`];
+/// the per-pair-call arm pays its per-step pool, scratch and
+/// allocation costs inside the timed region because they recur on
+/// every call.
+pub fn time_spgemm_chain<T: Scalar>(
+    strat: SpgemmChainStrat,
+    a: &Arc<Csr<T>>,
+    rhs: usize,
+    pool: &ThreadPool,
+    reps: usize,
+) -> Duration {
+    use crate::exec::spgemm::{run_spgemm, run_sparse_times_dense, SpgemmWs};
+    use crate::scheduler::chain::StepOutputMode;
+
+    let n = a.rows();
+    let x = Arc::new(Dense::<T>::randn(n, rhs, 7));
+    let params = bench_params::<T>(pool.n_threads());
+    match strat {
+        SpgemmChainStrat::SparseIntermediate | SpgemmChainStrat::DenseIntermediate => {
+            let mode = if strat == SpgemmChainStrat::SparseIntermediate {
+                StepOutputMode::SparseCsr
+            } else {
+                StepOutputMode::Dense
+            };
+            let ops = vec![
+                ChainStepOp::SpgemmFlow { a: Arc::clone(a), output: mode },
+                ChainStepOp::FlowAMulB { b: Arc::clone(&x) },
+            ];
+            let mut ex = ChainExec::plan_and_build_sparse(ops, n, n, a.nnz(), params)
+                .expect("bind spgemm chain");
+            let mut d = Dense::zeros(n, rhs);
+            profiling::measure(1, reps, || ex.run_sparse(pool, a, &mut d))
+        }
+        SpgemmChainStrat::PerPairCall => {
+            let threads = pool.n_threads();
+            profiling::measure(1, reps, || {
+                let step_pool = ThreadPool::new(threads);
+                let mut ws = SpgemmWs::new();
+                let mut s = Csr::empty(0, 0);
+                run_spgemm(&step_pool, a, a, &mut ws, &mut s);
+                drop(step_pool);
+                let step_pool = ThreadPool::new(threads);
+                let mut d = Dense::zeros(n, rhs);
+                run_sparse_times_dense(&step_pool, &s, &x, &mut d);
+                std::hint::black_box(&d);
+            })
+        }
+    }
+}
+
 /// Results directory (`bench_results/` at the repo root).
 pub fn results_dir() -> PathBuf {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
@@ -413,6 +496,25 @@ mod tests {
             ccol: 8,
         };
         assert_eq!(spmm_chain_flops(&a, 3, 8), 3 * pair.flops());
+    }
+
+    #[test]
+    fn time_spgemm_chain_smoke_all_arms() {
+        let a = Arc::new(Csr::<f64>::with_random_values(
+            crate::sparse::gen::erdos_renyi(96, 2, 3),
+            1,
+            -1.0,
+            1.0,
+        ));
+        let pool = ThreadPool::new(2);
+        for strat in [
+            SpgemmChainStrat::SparseIntermediate,
+            SpgemmChainStrat::DenseIntermediate,
+            SpgemmChainStrat::PerPairCall,
+        ] {
+            let t = time_spgemm_chain(strat, &a, 8, &pool, 1);
+            assert!(t.as_nanos() > 0, "{}", strat.name());
+        }
     }
 
     #[test]

@@ -12,12 +12,16 @@
 //! operating on a column window of the dense dimension — the building
 //! block of column-strip execution (`exec::strip`), where a tile's `D1`
 //! rows are only one strip wide and stay cache-resident between the
-//! producing and consuming operations.
+//! producing and consuming operations. [`spgemm`] adds the two-phase
+//! row-merge kernels for sparse-output multiplication (SpGEMM chain
+//! steps whose intermediates stay sparse).
 
 pub mod gemm;
+pub mod spgemm;
 pub mod spmm;
 
 pub use gemm::{gemm_row, gemm_row_ct, gemm_row_ct_strip, gemm_row_strip, gemm_rows, pack_panel};
+pub use spgemm::{spgemm, spgemm_row_dense, spgemm_row_numeric, spgemm_row_symbolic};
 pub use spmm::{spmm_row, spmm_row_ptr, spmm_row_strip, spmm_rows};
 
 /// Output-register block width shared by every kernel: 32 scalars = 4

@@ -1,0 +1,284 @@
+//! Row-merge SpGEMM kernels: `C = A · B` with **both** operands CSR and
+//! a sparse (or densified) output — the chain steps whose intermediates
+//! stay sparse (SpArch / binary-row-merging formulation, CPU flavour).
+//!
+//! Each output row `i` is the merge `Σ_k A[i,k] · B[k, :]` over the
+//! nonzero `k` of `A`'s row — a union of sorted index lists. The merge
+//! runs in two phases, mirroring every production CPU SpGEMM:
+//!
+//! 1. **symbolic** ([`spgemm_row_symbolic`]): count each output row's
+//!    unique columns, so the caller can prefix-sum row sizes into a CSR
+//!    shell and hand every row a disjoint slot;
+//! 2. **numeric** ([`spgemm_row_numeric`]): re-merge with values through
+//!    a dense accumulator, emitting each row's columns **sorted and
+//!    deduplicated**.
+//!
+//! Both phases mark visited columns in a caller-owned `marks` array and
+//! restore every touched mark to zero before returning, so the same
+//! scratch serves arbitrarily many rows (and arbitrarily many runs) with
+//! no epoch bookkeeping — the per-thread scratch discipline of
+//! [`crate::exec::pool::WorkerScratch`].
+//!
+//! Like the rest of [`crate::kernels`], these are row kernels: executors
+//! own the (possibly concurrent) row decomposition
+//! ([`crate::exec::spgemm`] is the two-phase parallel driver).
+
+use crate::core::Scalar;
+use crate::sparse::{Csr, Pattern};
+
+/// Symbolic merge of one output row of `A · B`: the number of unique
+/// columns in `∪_k B.row(k)` over `a_cols` (the nonzero columns of
+/// `A`'s row).
+///
+/// `marks` must be all-zero over every column of `B` at entry and is
+/// restored to all-zero before returning; `touched` needs at least
+/// `B.cols` slots (an output row can never exceed `B.cols` entries).
+#[inline]
+pub fn spgemm_row_symbolic(
+    a_cols: &[u32],
+    b: &Pattern,
+    marks: &mut [u32],
+    touched: &mut [u32],
+) -> usize {
+    let mut n = 0usize;
+    for &k in a_cols {
+        for &c in b.row(k as usize) {
+            let m = &mut marks[c as usize];
+            if *m == 0 {
+                *m = 1;
+                touched[n] = c;
+                n += 1;
+            }
+        }
+    }
+    for &c in &touched[..n] {
+        marks[c as usize] = 0;
+    }
+    n
+}
+
+/// Numeric merge of one output row of `A · B` into `(out_cols,
+/// out_vals)`, both exactly the row's symbolic size. Columns are emitted
+/// **sorted ascending and unique**; every structural entry is kept
+/// (dropping is a compaction concern of serial builders, not of the
+/// disjoint-slot parallel path).
+///
+/// `marks` follows the [`spgemm_row_symbolic`] contract; `acc` is a
+/// dense value accumulator of at least `B.cols` slots whose touched
+/// entries are fully overwritten before use (no zeroing needed).
+#[inline]
+#[allow(clippy::too_many_arguments)] // the merge-state tuple, spelled out
+pub fn spgemm_row_numeric<T: Scalar>(
+    a_cols: &[u32],
+    a_vals: &[T],
+    b: &Csr<T>,
+    marks: &mut [u32],
+    touched: &mut [u32],
+    acc: &mut [T],
+    out_cols: &mut [u32],
+    out_vals: &mut [T],
+) {
+    debug_assert_eq!(a_cols.len(), a_vals.len());
+    debug_assert_eq!(out_cols.len(), out_vals.len());
+    let mut n = 0usize;
+    for (&k, &av) in a_cols.iter().zip(a_vals) {
+        let (bc, bv) = b.row(k as usize);
+        for (&c, &v) in bc.iter().zip(bv) {
+            let ci = c as usize;
+            if marks[ci] == 0 {
+                marks[ci] = 1;
+                touched[n] = c;
+                n += 1;
+                acc[ci] = av * v;
+            } else {
+                acc[ci] += av * v;
+            }
+        }
+    }
+    debug_assert_eq!(n, out_cols.len(), "numeric row size must match the symbolic count");
+    let t = &mut touched[..n];
+    t.sort_unstable();
+    for (x, &c) in t.iter().enumerate() {
+        out_cols[x] = c;
+        out_vals[x] = acc[c as usize];
+        marks[c as usize] = 0;
+    }
+}
+
+/// One **dense** output row of `A · B` (the densify arm of the chain's
+/// per-step output-format decision): scatter-accumulate `B`'s rows into
+/// a zeroed dense row of `B.cols` entries. Overwrites `out`.
+#[inline]
+pub fn spgemm_row_dense<T: Scalar>(a_cols: &[u32], a_vals: &[T], b: &Csr<T>, out: &mut [T]) {
+    out.iter_mut().for_each(|v| *v = T::ZERO);
+    for (&k, &av) in a_cols.iter().zip(a_vals) {
+        let (bc, bv) = b.row(k as usize);
+        for (&c, &v) in bc.iter().zip(bv) {
+            out[c as usize] += av * v;
+        }
+    }
+}
+
+/// Serial two-phase row-merge SpGEMM — the oracle the parallel executor
+/// ([`crate::exec::spgemm::run_spgemm`]) is differential-tested against,
+/// and the one place numeric dropping lives: entries with
+/// `|v| <= drop_tol` are compacted out of the output (`drop_tol = 0.0`
+/// keeps every structural entry, so the output nnz equals the symbolic
+/// count exactly).
+pub fn spgemm<T: Scalar>(a: &Csr<T>, b: &Csr<T>, drop_tol: f64) -> Csr<T> {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "A ({}x{}) · B ({}x{})",
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols()
+    );
+    let bcols = b.cols();
+    let mut marks = vec![0u32; bcols];
+    let mut touched = vec![0u32; bcols];
+    let mut acc = vec![T::ZERO; bcols];
+    let mut row_cols: Vec<u32> = Vec::new();
+    let mut row_vals: Vec<T> = Vec::new();
+    let mut indptr = Vec::with_capacity(a.rows() + 1);
+    indptr.push(0usize);
+    let mut indices: Vec<u32> = Vec::new();
+    let mut data: Vec<T> = Vec::new();
+    for i in 0..a.rows() {
+        let (ac, av) = a.row(i);
+        let nnz = spgemm_row_symbolic(ac, &b.pattern, &mut marks, &mut touched);
+        row_cols.resize(nnz, 0);
+        row_vals.resize(nnz, T::ZERO);
+        spgemm_row_numeric(
+            ac,
+            av,
+            b,
+            &mut marks,
+            &mut touched,
+            &mut acc,
+            &mut row_cols,
+            &mut row_vals,
+        );
+        for (&c, &v) in row_cols.iter().zip(&row_vals) {
+            if drop_tol == 0.0 || v.to_f64().abs() > drop_tol {
+                indices.push(c);
+                data.push(v);
+            }
+        }
+        indptr.push(indices.len());
+    }
+    Csr::new(Pattern::new(a.rows(), bcols, indptr, indices), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Dense;
+    use crate::sparse::gen;
+
+    fn dense_matmul(a: &Dense<f64>, b: &Dense<f64>) -> Dense<f64> {
+        assert_eq!(a.cols, b.rows);
+        let mut out = Dense::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for k in 0..a.cols {
+                for j in 0..b.cols {
+                    let v = out.get(i, j) + a.get(i, k) * b.get(k, j);
+                    out.set(i, j, v);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn spgemm_matches_dense_oracle() {
+        let a = Csr::<f64>::with_random_values(gen::uniform_random(20, 15, 3, 1), 2, -1.0, 1.0);
+        let b = Csr::<f64>::with_random_values(gen::uniform_random(15, 18, 2, 3), 4, -1.0, 1.0);
+        let c = spgemm(&a, &b, 0.0);
+        assert_eq!((c.rows(), c.cols()), (20, 18));
+        let expect = dense_matmul(&a.to_dense(), &b.to_dense());
+        assert!(c.to_dense().max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn output_rows_sorted_unique_and_monotone() {
+        let a = Csr::<f64>::with_random_values(gen::erdos_renyi(64, 4, 7), 1, -1.0, 1.0);
+        let c = spgemm(&a, &a, 0.0);
+        assert!(c.pattern.indptr.windows(2).all(|w| w[0] <= w[1]));
+        for i in 0..c.rows() {
+            let cols = c.pattern.row(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i} not sorted/unique: {cols:?}");
+        }
+    }
+
+    #[test]
+    fn nnz_matches_symbolic_when_nothing_drops() {
+        let a =
+            Csr::<f64>::with_random_values(gen::rmat(64, 5, gen::RmatKind::Graph500, 3), 5, 0.5, 1.5);
+        let mut marks = vec![0u32; a.cols()];
+        let mut touched = vec![0u32; a.cols()];
+        let symbolic: usize = (0..a.rows())
+            .map(|i| spgemm_row_symbolic(a.pattern.row(i), &a.pattern, &mut marks, &mut touched))
+            .sum();
+        let c = spgemm(&a, &a, 0.0);
+        assert_eq!(c.nnz(), symbolic);
+    }
+
+    #[test]
+    fn drop_tolerance_compacts_small_entries() {
+        // A = [[1, -1], [0, 1]] against B = [[1, 0], [1, 0]]: output
+        // row 0 merges 1·1 + (−1)·1 = 0 into a structural entry whose
+        // value cancels exactly — kept at drop_tol 0, compacted at > 0.
+        let a =
+            Csr::<f64>::new(Pattern::new(2, 2, vec![0, 2, 3], vec![0, 1, 1]), vec![1.0, -1.0, 1.0]);
+        let b = Csr::<f64>::new(Pattern::new(2, 2, vec![0, 1, 2], vec![0, 0]), vec![1.0, 1.0]);
+        let kept = spgemm(&a, &b, 0.0);
+        assert_eq!(kept.nnz(), 2, "structural zeros kept at drop_tol 0");
+        assert_eq!(kept.data, vec![0.0, 1.0]);
+        let dropped = spgemm(&a, &b, 1e-12);
+        assert_eq!(dropped.nnz(), 1, "cancelled entry compacted out");
+        assert_eq!(dropped.pattern.row(1), &[0]);
+        assert!(dropped.to_dense().max_abs_diff(&kept.to_dense()) < 1e-15);
+    }
+
+    #[test]
+    fn marks_restored_between_rows_and_runs() {
+        let a = Csr::<f64>::with_random_values(gen::banded(32, &[1, 2]), 2, -1.0, 1.0);
+        let mut marks = vec![0u32; 32];
+        let mut touched = vec![0u32; 32];
+        for _ in 0..3 {
+            for i in 0..32 {
+                let _ = spgemm_row_symbolic(a.pattern.row(i), &a.pattern, &mut marks, &mut touched);
+                assert!(marks.iter().all(|&m| m == 0), "marks leaked after row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_and_identity() {
+        let e = Csr::<f32>::eye(5);
+        let empty = Csr::<f32>::from_pattern(Pattern::empty(5, 5), 0.0);
+        let c = spgemm(&e, &empty, 0.0);
+        assert_eq!(c.nnz(), 0);
+        let c = spgemm(&e, &e, 0.0);
+        assert_eq!(c.nnz(), 5);
+        assert!(c.to_dense().max_abs_diff(&e.to_dense()) < 1e-7);
+    }
+
+    #[test]
+    fn dense_row_matches_sparse_row() {
+        let a = Csr::<f64>::with_random_values(gen::uniform_random(10, 12, 3, 9), 1, -1.0, 1.0);
+        let b = Csr::<f64>::with_random_values(gen::uniform_random(12, 8, 2, 11), 2, -1.0, 1.0);
+        let c = spgemm(&a, &b, 0.0);
+        let cd = c.to_dense();
+        let mut row = vec![7.0f64; 8];
+        for i in 0..10 {
+            let (ac, av) = a.row(i);
+            spgemm_row_dense(ac, av, &b, &mut row);
+            for j in 0..8 {
+                assert!((row[j] - cd.get(i, j)).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+}

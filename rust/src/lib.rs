@@ -36,14 +36,19 @@
 //!                  chains with pattern-deduplicated schedules.
 //! - [`kernels`]  — blocked GeMM microkernel and CSR SpMM row kernels,
 //!                  each with a column-strip form ([`kernels::JB`] is
-//!                  the shared register-block width strips align to).
+//!                  the shared register-block width strips align to),
+//!                  plus [`kernels::spgemm`]: two-phase row-merge
+//!                  SpGEMM kernels for sparse-output multiplication.
 //! - [`exec`]     — thread pool + the five pair executors (tile-fused,
 //!                  unfused, atomic tiling, overlapped tiling,
 //!                  tensor-compiler style) and [`exec::chain`]: the
-//!                  chain executor (one pool, ping-pong intermediates,
-//!                  per-step strategy). [`exec::strip`] runs fused tiles
+//!                  chain executor (one pool, ping-pong intermediates —
+//!                  dense **or** sparse CSR per step — per-step
+//!                  strategy). [`exec::strip`] runs fused tiles
 //!                  strip-by-strip through per-thread workspaces
-//!                  ([`StripMode`](exec::StripMode) selects the width).
+//!                  ([`StripMode`](exec::StripMode) selects the width);
+//!                  [`exec::spgemm`] is the parallel row-merge SpGEMM
+//!                  driver behind sparse-intermediate chain steps.
 //! - [`tuning`]   — runtime strip-width autotuner: times 2–3 candidate
 //!                  widths around the model's pick on first execution of
 //!                  a (pattern, shape, precision) key; the coordinator
@@ -127,6 +132,55 @@
 //! [`coordinator::Coordinator::submit_chain`] instead, which serves the
 //! per-step schedules from its shared cache.
 //!
+//! ## Sparse intermediates
+//!
+//! Chains whose flowing value is itself sparse — multi-hop aggregation
+//! `Â²XW`, preconditioner products `A·A·B` — no longer force every
+//! intermediate dense: an SpGEMM step
+//! ([`ChainStepOp::SpgemmFlow`](exec::ChainStepOp)) computes
+//! `out = A · (chain)` by two-phase row merge, and a flow-A step
+//! ([`ChainStepOp::FlowAMulB`](exec::ChainStepOp)) consumes the sparse
+//! product back into the dense world:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use tile_fusion::prelude::*;
+//!
+//! let a = Arc::new(gen::gcn_normalize::<f64>(&gen::poisson2d(64, 64)));
+//! let x = Arc::new(Dense::<f64>::randn(a.rows(), 32, 1));
+//! // Â²X reassociated: S = Â·Â stays sparse, then S·X.
+//! let ops = vec![
+//!     ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::Auto },
+//!     ChainStepOp::FlowAMulB { b: Arc::clone(&x) },
+//! ];
+//! let mut chain = ChainExec::plan_and_build_sparse(
+//!     ops, a.rows(), a.cols(), a.nnz(), SchedulerParams::default(),
+//! ).unwrap();
+//! let pool = ThreadPool::new(4);
+//! let mut y = Dense::zeros(a.rows(), 32);
+//! chain.run_sparse(&pool, &a, &mut y);
+//! ```
+//!
+//! **The output-format decision.** Each SpGEMM step materializes its
+//! product as sparse CSR or dense, decided at *plan* time by a byte
+//! cost estimate (`scheduler::cost::estimate_spgemm` feeds
+//! [`scheduler::chain::decide_spgemm_output`]: stay sparse while the
+//! estimated CSR footprint — values plus u32 indices — undercuts the
+//! dense footprint). The decision is a pure function of (pattern,
+//! shape, input density), so identical keys always decide identically.
+//! Override it per step with the knob on the operand:
+//! [`StepOutputMode::Dense`](scheduler::StepOutputMode) forces dense
+//! materialization (the downstream step then consumes a dense flow),
+//! [`StepOutputMode::SparseCsr`](scheduler::StepOutputMode) forces CSR.
+//! Sparse-flow steps carry no fused schedule — the intermediate's
+//! pattern is a run-time product of the symbolic phase, so there is
+//! nothing for Algorithm 1 to inspect; they run as row-parallel merges
+//! through per-thread scratch. Pair steps keep their strip modes and
+//! fused/unfused strategies untouched. Chains ending sparse deliver
+//! through [`ChainExec::run_io`](exec::ChainExec::run_io) with a
+//! [`ChainOut::Sparse`](exec::ChainOut) destination; the service paths
+//! ([`coordinator`]) require a dense final output.
+//!
 //! ## Serving
 //!
 //! Concurrent tenants talk to the async front-end instead of the
@@ -196,13 +250,13 @@ pub mod tuning;
 pub mod prelude {
     pub use crate::core::{Dense, Scalar};
     pub use crate::exec::{
-        chain_specs, AtomicTiling, CLayout, ChainExec, ChainStepOp, FirstOp, Fused, Overlapped,
-        PairExec, PairOp, SharedPool, StepControl, StepStrategy, StripMode, TensorStyle,
-        ThreadPool, Unfused,
+        chain_specs, AtomicTiling, CLayout, ChainExec, ChainIn, ChainOut, ChainStepOp, FirstOp,
+        Fused, Overlapped, PairExec, PairOp, SharedPool, SpgemmWs, StepControl, StepStrategy,
+        StripMode, TensorStyle, ThreadPool, Unfused,
     };
     pub use crate::scheduler::{
-        BSide, ChainFlow, ChainPlan, ChainPlanner, ChainStepSpec, FusedSchedule, FusionOp,
-        Scheduler, SchedulerParams,
+        BSide, ChainFlow, ChainInputMeta, ChainPlan, ChainPlanner, ChainStepSpec, FusedSchedule,
+        FusionOp, PlannedStep, Scheduler, SchedulerParams, StepOutput, StepOutputMode,
     };
     pub use crate::sparse::gen::{self, RmatKind};
     pub use crate::sparse::{Coo, Csr, Pattern};

@@ -12,17 +12,36 @@
 //! every same-width GCN layer) share one `Arc`'d schedule, taking the
 //! Fig. 10 amortization story to its logical end.
 //!
-//! Planning is value-free (patterns and shapes only), like the rest of
-//! [`crate::scheduler`]; binding values and running the chain is
-//! [`crate::exec::chain`]'s job.
+//! ## Sparse intermediates
+//!
+//! Chains whose flowing value is itself sparse (multi-hop aggregation
+//! `Â²XW`, preconditioner products `A·A·B`) add two sparse-flow step
+//! kinds: [`ChainStepSpec::Spgemm`] (`out = A · V`, row-merge SpGEMM)
+//! and [`ChainStepSpec::FlowAMulB`] (`out = V · B`, the flowing value
+//! against a stationary dense operand). An SpGEMM step's output format
+//! — [`StepOutput::SparseCsr`] (stay sparse) or [`StepOutput::Dense`]
+//! (densify) — is **decided per step** by a byte-cost estimate
+//! ([`decide_spgemm_output`] over
+//! [`estimate_spgemm`](crate::scheduler::cost::estimate_spgemm)), with
+//! a manual override ([`StepOutputMode`]). Sparse-flow steps carry no
+//! [`FusedSchedule`]: the intermediate's pattern is a run-time product
+//! of the symbolic phase, so there is nothing for Algorithm 1 to
+//! inspect — they execute as row-parallel merges
+//! ([`crate::exec::spgemm`]).
+//!
+//! Planning is value-free (patterns, shapes and density summaries
+//! only), like the rest of [`crate::scheduler`]; binding values and
+//! running the chain is [`crate::exec::chain`]'s job.
 
+use super::cost::{estimate_spgemm, SpgemmEstimate};
 use super::{BSide, FusedSchedule, FusionOp, Scheduler, SchedulerParams};
+use crate::sparse::Pattern;
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// Which dense operand of a step receives the flowing chain value.
+/// Which dense operand of a pair step receives the flowing chain value.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ChainFlow {
     /// The chain value is `B` — a GCN layer `out = A ((chain) · W)`
@@ -33,16 +52,71 @@ pub enum ChainFlow {
     C,
 }
 
-/// One chain step as the planner sees it: a fusion problem plus which
-/// operand flows.
-#[derive(Clone, Copy)]
-pub struct ChainStepSpec<'a> {
-    pub op: FusionOp<'a>,
-    pub flow: ChainFlow,
+/// Storage format of a chain step's output (and so of the value flowing
+/// into the next step).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum StepOutput {
+    /// Row-major dense (every pre-SpGEMM step; the densify arm).
+    #[default]
+    Dense,
+    /// CSR — the intermediate stays sparse end-to-end.
+    SparseCsr,
 }
 
-/// Chain validation / planning error (dimension non-conformance, empty
-/// chains, plan/operand mismatches).
+/// Manual override of the per-step output-format decision.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum StepOutputMode {
+    /// Let the cost model decide ([`decide_spgemm_output`]).
+    #[default]
+    Auto,
+    /// Force dense materialization.
+    Dense,
+    /// Force a sparse CSR output.
+    SparseCsr,
+}
+
+/// The output-format decision for one SpGEMM step: stay sparse while
+/// the estimated CSR footprint (values + u32 column indices) undercuts
+/// the dense footprint — a bytes comparison, like Eq. 3. Deterministic
+/// in (pattern, shape, density): the estimate is a pure function of
+/// them.
+pub fn decide_spgemm_output(
+    est: &SpgemmEstimate,
+    elem_bytes: usize,
+    mode: StepOutputMode,
+) -> StepOutput {
+    match mode {
+        StepOutputMode::Dense => StepOutput::Dense,
+        StepOutputMode::SparseCsr => StepOutput::SparseCsr,
+        StepOutputMode::Auto => {
+            // 4 = u32 column index, mirroring the cost model's IDX_BYTES.
+            let sparse_bytes_per_slot = est.out_density * (elem_bytes + 4) as f64;
+            if sparse_bytes_per_slot < elem_bytes as f64 {
+                StepOutput::SparseCsr
+            } else {
+                StepOutput::Dense
+            }
+        }
+    }
+}
+
+/// One chain step as the planner sees it.
+#[derive(Clone, Copy)]
+pub enum ChainStepSpec<'a> {
+    /// Fused dense-flow pair `out = A (B · C)` (the original chain
+    /// step): a fusion problem plus which operand flows.
+    Pair { op: FusionOp<'a>, flow: ChainFlow },
+    /// Sparse-flow SpGEMM `out = A · V` (`V` = the flowing sparse
+    /// value); `output` overrides the format decision.
+    Spgemm { a: &'a Pattern, output: StepOutputMode },
+    /// `out = V · B` with a stationary dense `B` of `bcol` columns; the
+    /// flowing `V` may be sparse (CSR SpMM) or dense (GeMM). Output is
+    /// always dense.
+    FlowAMulB { bcol: usize },
+}
+
+/// Chain validation / planning error (dimension non-conformance, flow
+/// format mismatches, empty chains, plan/operand mismatches).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ChainError(pub String);
 
@@ -60,29 +134,51 @@ impl fmt::Display for ChainError {
 
 impl std::error::Error for ChainError {}
 
-/// One planned step: the (possibly shared) schedule plus output geometry.
+/// What kind of step a [`ChainStepPlan`] describes (mirrors
+/// [`ChainStepSpec`], minus the borrowed patterns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannedStep {
+    Pair(ChainFlow),
+    Spgemm,
+    FlowAMulB,
+}
+
+/// One planned step: the (possibly shared) schedule plus output
+/// geometry and format.
 #[derive(Clone)]
 pub struct ChainStepPlan {
-    pub schedule: Arc<FusedSchedule>,
-    pub flow: ChainFlow,
-    /// Rows of this step's output (= rows of its `A`).
+    /// Fused schedule — `Some` for pair steps only: sparse-flow steps
+    /// have no pattern to inspect before run time.
+    pub schedule: Option<Arc<FusedSchedule>>,
+    pub kind: PlannedStep,
+    /// Format this step's output materializes in (always
+    /// [`StepOutput::Dense`] for pair and flow-A steps).
+    pub output: StepOutput,
+    /// Rows of this step's output.
     pub out_rows: usize,
     /// Columns of this step's output.
     pub out_cols: usize,
-    /// Rows of this step's intermediate `D1` (= cols of its `A`).
+    /// Rows of this step's intermediate `D1` (pair steps; 0 otherwise).
     pub d1_rows: usize,
-    /// Theoretical unfused FLOPs of this step (§4.1.1 accounting).
+    /// Theoretical unfused FLOPs of this step (§4.1.1 accounting; an
+    /// expectation for sparse-flow steps, whose operand patterns are
+    /// run-time products).
     pub flops: usize,
+    /// Planner's density estimate of the step output (1.0 for dense
+    /// outputs).
+    pub est_density: f64,
 }
 
 /// Statistics of a built chain plan.
 #[derive(Clone, Debug, Default)]
 pub struct ChainStats {
     pub n_steps: usize,
-    /// Distinct `FusedSchedule`s actually built/fetched.
+    /// Distinct `FusedSchedule`s actually built/fetched (pair steps).
     pub unique_schedules: usize,
-    /// Steps that reused an earlier step's schedule (`n_steps - unique`).
+    /// Pair steps that reused an earlier step's schedule.
     pub dedup_hits: usize,
+    /// Steps planned to produce sparse CSR outputs.
+    pub sparse_outputs: usize,
     /// Wall time of planning (schedule builds included) in nanoseconds.
     pub build_ns: u64,
     /// Total theoretical unfused FLOPs of one chain application.
@@ -90,12 +186,14 @@ pub struct ChainStats {
 }
 
 /// A planned multiplication chain: per-step schedules (deduplicated by
-/// pattern identity) plus the validated shape flow.
+/// pattern identity) plus the validated shape/format flow.
 pub struct ChainPlan {
     pub steps: Vec<ChainStepPlan>,
     /// Shape of the flowing chain input.
     pub in_rows: usize,
     pub in_cols: usize,
+    /// Format of the flowing chain input.
+    pub in_format: StepOutput,
     pub stats: ChainStats,
 }
 
@@ -106,12 +204,49 @@ impl ChainPlan {
         (last.out_rows, last.out_cols)
     }
 
+    /// Format of the chain output.
+    pub fn out_format(&self) -> StepOutput {
+        self.steps.last().expect("chain plans are never empty").output
+    }
+
     pub fn len(&self) -> usize {
         self.steps.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.steps.is_empty()
+    }
+}
+
+/// Shape / format / density summary of the chain's flowing input — what
+/// value-free planning needs to track formats and estimate SpGEMM
+/// output densities.
+#[derive(Clone, Copy, Debug)]
+pub struct ChainInputMeta {
+    pub rows: usize,
+    pub cols: usize,
+    pub format: StepOutput,
+    /// Nonzeros of a representative sparse input (density-estimate
+    /// seed); ignored for dense inputs.
+    pub nnz: usize,
+}
+
+impl ChainInputMeta {
+    /// A dense flowing input (the pre-SpGEMM chains).
+    pub fn dense(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, format: StepOutput::Dense, nnz: rows * cols }
+    }
+
+    /// A sparse flowing input with `nnz` representative nonzeros.
+    pub fn sparse(rows: usize, cols: usize, nnz: usize) -> Self {
+        Self { rows, cols, format: StepOutput::SparseCsr, nnz }
+    }
+
+    fn density(&self) -> f64 {
+        match self.format {
+            StepOutput::Dense => 1.0,
+            StepOutput::SparseCsr => self.nnz as f64 / (self.rows * self.cols).max(1) as f64,
+        }
     }
 }
 
@@ -169,19 +304,28 @@ impl ChainPlanner {
         Self { params }
     }
 
-    /// Plan a chain with an internal dedup map: each distinct
-    /// (pattern, shape) builds its schedule exactly once.
+    /// Plan a dense-input chain with an internal dedup map: each
+    /// distinct (pattern, shape) builds its schedule exactly once.
     pub fn plan(
         &self,
         in_rows: usize,
         in_cols: usize,
         specs: &[ChainStepSpec<'_>],
     ) -> Result<ChainPlan, ChainError> {
+        self.plan_input(ChainInputMeta::dense(in_rows, in_cols), specs)
+    }
+
+    /// [`ChainPlanner::plan`] for an arbitrary (dense or sparse) input.
+    pub fn plan_input(
+        &self,
+        input: ChainInputMeta,
+        specs: &[ChainStepSpec<'_>],
+    ) -> Result<ChainPlan, ChainError> {
         let mut built: HashMap<(u64, u64, bool, usize, usize), Arc<FusedSchedule>> =
             HashMap::new();
         let sched = Scheduler::new(self.params);
         let elem_bytes = self.params.elem_bytes;
-        self.plan_with(in_rows, in_cols, specs, |_, op| {
+        self.plan_with_input(input, specs, |_, op| {
             Arc::clone(
                 built
                     .entry(schedule_key(op, elem_bytes))
@@ -190,18 +334,33 @@ impl ChainPlanner {
         })
     }
 
-    /// Plan a chain, fetching each step's schedule through
-    /// `get(step_index, op)` — the hook long-running callers use to
-    /// serve chains from an existing schedule cache
+    /// Plan a dense-input chain, fetching each pair step's schedule
+    /// through `get(step_index, op)` — the hook long-running callers
+    /// use to serve chains from an existing schedule cache
     /// (`coordinator::ScheduleCache::get_or_build`) or to substitute
     /// trivial schedules for steps they will execute unfused. `get` is
-    /// called exactly once per step, in step order (part of the
-    /// contract — callers key per-step decisions on the index). Dedup
-    /// composes with whatever the hook returns.
+    /// called exactly once per **pair** step, in step order (part of
+    /// the contract — callers key per-step decisions on the index;
+    /// sparse-flow steps have no schedule to fetch). Dedup composes
+    /// with whatever the hook returns.
     pub fn plan_with(
         &self,
         in_rows: usize,
         in_cols: usize,
+        specs: &[ChainStepSpec<'_>],
+        get: impl FnMut(usize, &FusionOp) -> Arc<FusedSchedule>,
+    ) -> Result<ChainPlan, ChainError> {
+        self.plan_with_input(ChainInputMeta::dense(in_rows, in_cols), specs, get)
+    }
+
+    /// [`ChainPlanner::plan_with`] for an arbitrary (dense or sparse)
+    /// input: validates the per-step flow **format** (pair steps need a
+    /// dense flow, SpGEMM steps a sparse one), threads a density
+    /// estimate through sparse intermediates, and decides each SpGEMM
+    /// step's output format.
+    pub fn plan_with_input(
+        &self,
+        input: ChainInputMeta,
         specs: &[ChainStepSpec<'_>],
         mut get: impl FnMut(usize, &FusionOp) -> Arc<FusedSchedule>,
     ) -> Result<ChainPlan, ChainError> {
@@ -209,64 +368,142 @@ impl ChainPlanner {
             return Err(ChainError::new("empty chain"));
         }
         let t0 = Instant::now();
-        let mut steps = Vec::with_capacity(specs.len());
+        let elem_bytes = self.params.elem_bytes;
+        let mut steps: Vec<ChainStepPlan> = Vec::with_capacity(specs.len());
         let mut total_flops = 0usize;
-        let (mut cur_r, mut cur_c) = (in_rows, in_cols);
+        let (mut cur_r, mut cur_c) = (input.rows, input.cols);
+        let mut cur_fmt = input.format;
+        let mut cur_density = input.density();
         for (s, spec) in specs.iter().enumerate() {
-            let a = spec.op.a;
-            validate_step(s, spec, cur_r, cur_c)?;
-            let schedule = get(s, &spec.op);
-            if schedule.n_first != a.cols || schedule.n_second != a.rows {
-                return Err(ChainError::new(format!(
-                    "step {s}: fetched schedule is {}x{} but A is {}x{}",
-                    schedule.n_second, schedule.n_first, a.rows, a.cols
-                )));
-            }
-            let out_cols = match spec.flow {
-                ChainFlow::B => spec.op.ccol,
-                ChainFlow::C => cur_c,
+            let step = match spec {
+                ChainStepSpec::Pair { op, flow } => {
+                    if cur_fmt != StepOutput::Dense {
+                        return Err(ChainError::new(format!(
+                            "step {s}: fused pair steps consume a dense flowing value but the \
+                             flow is sparse here (densify the producing SpGEMM step or use a \
+                             sparse-flow step)"
+                        )));
+                    }
+                    validate_pair_step(s, op, *flow, cur_r, cur_c)?;
+                    let a = op.a;
+                    let schedule = get(s, op);
+                    if schedule.n_first != a.cols || schedule.n_second != a.rows {
+                        return Err(ChainError::new(format!(
+                            "step {s}: fetched schedule is {}x{} but A is {}x{}",
+                            schedule.n_second, schedule.n_first, a.rows, a.cols
+                        )));
+                    }
+                    let out_cols = match flow {
+                        ChainFlow::B => op.ccol,
+                        ChainFlow::C => cur_c,
+                    };
+                    ChainStepPlan {
+                        schedule: Some(schedule),
+                        kind: PlannedStep::Pair(*flow),
+                        output: StepOutput::Dense,
+                        out_rows: a.rows,
+                        out_cols,
+                        d1_rows: a.cols,
+                        flops: op.flops(),
+                        est_density: 1.0,
+                    }
+                }
+                ChainStepSpec::Spgemm { a, output } => {
+                    if cur_fmt != StepOutput::SparseCsr {
+                        return Err(ChainError::new(format!(
+                            "step {s}: SpGEMM steps consume a sparse flowing value but the \
+                             flow is dense here"
+                        )));
+                    }
+                    if a.cols != cur_r {
+                        return Err(ChainError::new(format!(
+                            "step {s}: A has {} cols but the flowing value has {cur_r} rows",
+                            a.cols
+                        )));
+                    }
+                    let est = estimate_spgemm(a, cur_c, cur_density);
+                    let decided = decide_spgemm_output(&est, elem_bytes, *output);
+                    ChainStepPlan {
+                        schedule: None,
+                        kind: PlannedStep::Spgemm,
+                        output: decided,
+                        out_rows: a.rows,
+                        out_cols: cur_c,
+                        d1_rows: 0,
+                        flops: est.flops,
+                        est_density: if decided == StepOutput::SparseCsr {
+                            est.out_density
+                        } else {
+                            1.0
+                        },
+                    }
+                }
+                ChainStepSpec::FlowAMulB { bcol } => {
+                    let est_nnz = (cur_density * (cur_r * cur_c) as f64).ceil() as usize;
+                    ChainStepPlan {
+                        schedule: None,
+                        kind: PlannedStep::FlowAMulB,
+                        output: StepOutput::Dense,
+                        out_rows: cur_r,
+                        out_cols: *bcol,
+                        d1_rows: 0,
+                        flops: 2 * est_nnz * bcol,
+                        est_density: 1.0,
+                    }
+                }
             };
-            let flops = spec.op.flops();
-            total_flops += flops;
-            steps.push(ChainStepPlan {
-                schedule,
-                flow: spec.flow,
-                out_rows: a.rows,
-                out_cols,
-                d1_rows: a.cols,
-                flops,
-            });
-            cur_r = a.rows;
-            cur_c = out_cols;
+            total_flops += step.flops;
+            cur_r = step.out_rows;
+            cur_c = step.out_cols;
+            cur_fmt = step.output;
+            cur_density = step.est_density;
+            steps.push(step);
         }
 
         let mut seen = std::collections::HashSet::new();
+        let mut pair_steps = 0usize;
+        let mut sparse_outputs = 0usize;
         for st in &steps {
-            seen.insert(Arc::as_ptr(&st.schedule) as usize);
+            if let Some(sch) = &st.schedule {
+                pair_steps += 1;
+                seen.insert(Arc::as_ptr(sch) as usize);
+            }
+            if st.output == StepOutput::SparseCsr {
+                sparse_outputs += 1;
+            }
         }
         let unique_schedules = seen.len();
         let stats = ChainStats {
             n_steps: steps.len(),
             unique_schedules,
-            dedup_hits: steps.len() - unique_schedules,
+            dedup_hits: pair_steps - unique_schedules,
+            sparse_outputs,
             build_ns: t0.elapsed().as_nanos() as u64,
             total_flops,
         };
-        Ok(ChainPlan { steps, in_rows, in_cols, stats })
+        Ok(ChainPlan {
+            steps,
+            in_rows: input.rows,
+            in_cols: input.cols,
+            in_format: input.format,
+            stats,
+        })
     }
 }
 
-/// Check step `s` conforms to the flowing value of shape `cur_r × cur_c`.
-fn validate_step(
+/// Check a pair step conforms to the flowing value of shape
+/// `cur_r × cur_c`.
+fn validate_pair_step(
     s: usize,
-    spec: &ChainStepSpec<'_>,
+    op: &FusionOp<'_>,
+    flow: ChainFlow,
     cur_r: usize,
     cur_c: usize,
 ) -> Result<(), ChainError> {
-    let a = spec.op.a;
-    match spec.flow {
+    let a = op.a;
+    match flow {
         ChainFlow::B => {
-            let BSide::Dense { bcol } = spec.op.b else {
+            let BSide::Dense { bcol } = op.b else {
                 return Err(ChainError::new(format!(
                     "step {s}: flow-B steps must have dense B (GeMM-SpMM)"
                 )));
@@ -284,13 +521,13 @@ fn validate_step(
             }
         }
         ChainFlow::C => {
-            if spec.op.ccol != cur_c {
+            if op.ccol != cur_c {
                 return Err(ChainError::new(format!(
                     "step {s}: spec says ccol={} but the flowing C has {cur_c} cols",
-                    spec.op.ccol
+                    op.ccol
                 )));
             }
-            match spec.op.b {
+            match op.b {
                 BSide::Dense { bcol } => {
                     if bcol != cur_r {
                         return Err(ChainError::new(format!(
@@ -333,11 +570,15 @@ mod tests {
         }
     }
 
+    fn sched_of(st: &ChainStepPlan) -> &Arc<FusedSchedule> {
+        st.schedule.as_ref().expect("pair steps carry schedules")
+    }
+
     #[test]
     fn solver_chain_dedups_to_one_schedule() {
         let a = gen::poisson2d(24, 24);
         let specs: Vec<ChainStepSpec> = (0..4)
-            .map(|_| ChainStepSpec {
+            .map(|_| ChainStepSpec::Pair {
                 op: FusionOp { a: &a, b: BSide::Sparse(&a), ccol: 16 },
                 flow: ChainFlow::C,
             })
@@ -346,11 +587,13 @@ mod tests {
         assert_eq!(plan.stats.n_steps, 4);
         assert_eq!(plan.stats.unique_schedules, 1);
         assert_eq!(plan.stats.dedup_hits, 3);
+        assert_eq!(plan.stats.sparse_outputs, 0);
         for st in &plan.steps[1..] {
-            assert!(Arc::ptr_eq(&st.schedule, &plan.steps[0].schedule));
+            assert!(Arc::ptr_eq(sched_of(st), sched_of(&plan.steps[0])));
         }
         assert_eq!(plan.out_dims(), (a.rows, 16));
-        plan.steps[0].schedule.validate(&a);
+        assert_eq!(plan.out_format(), StepOutput::Dense);
+        sched_of(&plan.steps[0]).validate(&a);
     }
 
     #[test]
@@ -358,11 +601,11 @@ mod tests {
         let a = gen::banded(100, &[1, 2]);
         // widths 8 -> 16 -> 4 over a 100-node graph.
         let specs = vec![
-            ChainStepSpec {
+            ChainStepSpec::Pair {
                 op: FusionOp { a: &a, b: BSide::Dense { bcol: 8 }, ccol: 16 },
                 flow: ChainFlow::B,
             },
-            ChainStepSpec {
+            ChainStepSpec::Pair {
                 op: FusionOp { a: &a, b: BSide::Dense { bcol: 16 }, ccol: 4 },
                 flow: ChainFlow::B,
             },
@@ -370,26 +613,32 @@ mod tests {
         let plan = ChainPlanner::new(params_small()).plan(100, 8, &specs).unwrap();
         assert_eq!(plan.out_dims(), (100, 4));
         assert_eq!(plan.stats.unique_schedules, 2, "distinct shapes build distinct schedules");
-        assert_eq!(plan.stats.total_flops, specs[0].op.flops() + specs[1].op.flops());
+        let expect_flops = {
+            let f = |bcol: usize, ccol: usize| {
+                FusionOp { a: &a, b: BSide::Dense { bcol }, ccol }.flops()
+            };
+            f(8, 16) + f(16, 4)
+        };
+        assert_eq!(plan.stats.total_flops, expect_flops);
     }
 
     #[test]
     fn same_shape_layers_share_schedule() {
         let a = gen::banded(64, &[1]);
-        let spec = ChainStepSpec {
+        let spec = ChainStepSpec::Pair {
             op: FusionOp { a: &a, b: BSide::Dense { bcol: 8 }, ccol: 8 },
             flow: ChainFlow::B,
         };
         let plan = ChainPlanner::new(params_small()).plan(64, 8, &[spec, spec]).unwrap();
         assert_eq!(plan.stats.unique_schedules, 1);
-        assert!(Arc::ptr_eq(&plan.steps[0].schedule, &plan.steps[1].schedule));
+        assert!(Arc::ptr_eq(sched_of(&plan.steps[0]), sched_of(&plan.steps[1])));
     }
 
     #[test]
     fn dimension_mismatch_is_rejected() {
         let a = gen::banded(64, &[1]);
         // flowing C has 8 cols but the spec claims ccol = 9.
-        let bad = ChainStepSpec {
+        let bad = ChainStepSpec::Pair {
             op: FusionOp { a: &a, b: BSide::Sparse(&a), ccol: 9 },
             flow: ChainFlow::C,
         };
@@ -397,7 +646,7 @@ mod tests {
         assert!(err.to_string().contains("ccol"), "{err}");
 
         // flow-B steps must be GeMM-SpMM.
-        let bad = ChainStepSpec {
+        let bad = ChainStepSpec::Pair {
             op: FusionOp { a: &a, b: BSide::Sparse(&a), ccol: 8 },
             flow: ChainFlow::B,
         };
@@ -426,20 +675,128 @@ mod tests {
     fn plan_with_external_cache_hook() {
         let a = gen::poisson2d(16, 16);
         let specs: Vec<ChainStepSpec> = (0..3)
-            .map(|_| ChainStepSpec {
+            .map(|_| ChainStepSpec::Pair {
                 op: FusionOp { a: &a, b: BSide::Sparse(&a), ccol: 8 },
                 flow: ChainFlow::C,
             })
             .collect();
         let mut seen_steps = Vec::new();
-        let shared = Arc::new(Scheduler::new(params_small()).schedule_op(&specs[0].op));
+        let shared = Arc::new(Scheduler::new(params_small()).schedule_sparse(&a, &a, 8));
         let plan = ChainPlanner::new(params_small())
             .plan_with(a.rows, 8, &specs, |s, _| {
                 seen_steps.push(s);
                 Arc::clone(&shared)
             })
             .unwrap();
-        assert_eq!(seen_steps, vec![0, 1, 2], "hook runs once per step, in order");
+        assert_eq!(seen_steps, vec![0, 1, 2], "hook runs once per pair step, in order");
         assert_eq!(plan.stats.unique_schedules, 1);
+    }
+
+    #[test]
+    fn sparse_input_spgemm_chain_plans_and_formats_flow() {
+        // Â² X: sparse input, SpGEMM step (stays sparse at this
+        // density), then the flow-A consumer back to dense.
+        let a = gen::erdos_renyi(200, 2, 3);
+        let specs = vec![
+            ChainStepSpec::Spgemm { a: &a, output: StepOutputMode::Auto },
+            ChainStepSpec::FlowAMulB { bcol: 32 },
+        ];
+        let meta = ChainInputMeta::sparse(a.rows, a.cols, a.nnz());
+        let plan = ChainPlanner::new(params_small())
+            .plan_with_input(meta, &specs, |_, _| unreachable!("no pair steps here"))
+            .unwrap();
+        assert_eq!(plan.stats.n_steps, 2);
+        assert_eq!(plan.stats.unique_schedules, 0);
+        assert_eq!(plan.stats.sparse_outputs, 1, "low-density product stays sparse");
+        assert_eq!(plan.steps[0].kind, PlannedStep::Spgemm);
+        assert_eq!(plan.steps[0].output, StepOutput::SparseCsr);
+        assert!(plan.steps[0].schedule.is_none());
+        assert!(plan.steps[0].est_density < 1.0);
+        assert_eq!(plan.steps[1].kind, PlannedStep::FlowAMulB);
+        assert_eq!(plan.out_dims(), (200, 32));
+        assert_eq!(plan.out_format(), StepOutput::Dense);
+        assert!(plan.stats.total_flops > 0);
+    }
+
+    #[test]
+    fn output_override_and_densified_flow() {
+        // Forcing the SpGEMM output dense makes the next step consume a
+        // dense flow — a second Spgemm step must then be rejected, while
+        // FlowAMulB (dense GeMM arm) is fine.
+        let a = gen::erdos_renyi(64, 2, 5);
+        let meta = ChainInputMeta::sparse(a.rows, a.cols, a.nnz());
+        let ok = vec![
+            ChainStepSpec::Spgemm { a: &a, output: StepOutputMode::Dense },
+            ChainStepSpec::FlowAMulB { bcol: 8 },
+        ];
+        let plan =
+            ChainPlanner::new(params_small()).plan_input(meta, &ok).unwrap();
+        assert_eq!(plan.steps[0].output, StepOutput::Dense);
+        assert_eq!(plan.stats.sparse_outputs, 0);
+
+        let bad = vec![
+            ChainStepSpec::Spgemm { a: &a, output: StepOutputMode::Dense },
+            ChainStepSpec::Spgemm { a: &a, output: StepOutputMode::Auto },
+        ];
+        let err = ChainPlanner::new(params_small()).plan_input(meta, &bad).unwrap_err();
+        assert!(err.to_string().contains("sparse flowing value"), "{err}");
+    }
+
+    #[test]
+    fn flow_format_mismatches_are_rejected() {
+        let a = gen::banded(32, &[1]);
+        // SpGEMM step on a dense input flow.
+        let err = ChainPlanner::new(params_small())
+            .plan(32, 8, &[ChainStepSpec::Spgemm { a: &a, output: StepOutputMode::Auto }])
+            .unwrap_err();
+        assert!(err.to_string().contains("sparse flowing value"), "{err}");
+
+        // Pair step on a sparse input flow.
+        let err = ChainPlanner::new(params_small())
+            .plan_input(
+                ChainInputMeta::sparse(32, 32, a.nnz()),
+                &[ChainStepSpec::Pair {
+                    op: FusionOp { a: &a, b: BSide::Sparse(&a), ccol: 32 },
+                    flow: ChainFlow::C,
+                }],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("dense flowing value"), "{err}");
+
+        // SpGEMM dimension mismatch.
+        let err = ChainPlanner::new(params_small())
+            .plan_input(
+                ChainInputMeta::sparse(16, 16, 16),
+                &[ChainStepSpec::Spgemm { a: &a, output: StepOutputMode::Auto }],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("32 cols"), "{err}");
+    }
+
+    #[test]
+    fn format_decision_is_deterministic_and_threshold_sane() {
+        use crate::scheduler::cost::estimate_spgemm;
+        let a = gen::erdos_renyi(128, 3, 7);
+        let est = estimate_spgemm(&a, 64, 0.01);
+        for _ in 0..10 {
+            assert_eq!(
+                decide_spgemm_output(&est, 8, StepOutputMode::Auto),
+                decide_spgemm_output(&est, 8, StepOutputMode::Auto)
+            );
+        }
+        // Overrides always win.
+        assert_eq!(decide_spgemm_output(&est, 8, StepOutputMode::Dense), StepOutput::Dense);
+        assert_eq!(
+            decide_spgemm_output(&est, 8, StepOutputMode::SparseCsr),
+            StepOutput::SparseCsr
+        );
+        // A saturated estimate densifies; a near-empty one stays sparse.
+        let dense_est = SpgemmEstimate { flops: 0, out_density: 1.0, out_nnz: 0 };
+        assert_eq!(decide_spgemm_output(&dense_est, 8, StepOutputMode::Auto), StepOutput::Dense);
+        let sparse_est = SpgemmEstimate { flops: 0, out_density: 1e-3, out_nnz: 0 };
+        assert_eq!(
+            decide_spgemm_output(&sparse_est, 8, StepOutputMode::Auto),
+            StepOutput::SparseCsr
+        );
     }
 }

@@ -18,6 +18,7 @@
 
 use super::FusionOp;
 use crate::scheduler::schedule::Tile;
+use crate::sparse::Pattern;
 
 /// Reusable cost evaluator; the stamp array makes `uc` O(nnz in tile)
 /// across arbitrarily many queries without reallocation.
@@ -128,6 +129,47 @@ impl<'a> CostModel<'a> {
     }
 }
 
+/// Value-free estimate of an SpGEMM chain step `out = A · V` where only
+/// `V`'s shape and density are known — `V` is a chain *intermediate*
+/// whose pattern exists only at run time (the symbolic phase computes
+/// it), so unlike Eq. 3 this estimate cannot walk a structure. Under
+/// the independent-uniform model:
+///
+/// - `flops  = 2 · nnz(A) · d_V · V.cols` (one multiply-add per
+///   (A-nonzero, V-row-nonzero) pairing),
+/// - `P(out_ij ≠ 0) = 1 − (1 − d_A · d_V)^k` with `k = A.cols` (the
+///   contraction depth).
+///
+/// The planner's output-format decision thresholds on the resulting
+/// density; like Eq. 3 the comparison happens in **bytes**.
+#[derive(Clone, Copy, Debug)]
+pub struct SpgemmEstimate {
+    /// Expected multiply-add FLOPs of the merge.
+    pub flops: usize,
+    /// Expected density of the `A.rows × V.cols` output.
+    pub out_density: f64,
+    /// Expected output nonzeros (`out_density` times the output area).
+    pub out_nnz: usize,
+}
+
+/// Build the [`SpgemmEstimate`] for `out = A · V` from `A`'s pattern
+/// and `V`'s (shape, density) summary. Clamps degenerate inputs; a
+/// `v_density` of 1.0 describes a dense flowing value.
+pub fn estimate_spgemm(a: &Pattern, v_cols: usize, v_density: f64) -> SpgemmEstimate {
+    let v_density = v_density.clamp(0.0, 1.0);
+    let k = a.cols.max(1);
+    let v_row_nnz = v_density * v_cols as f64;
+    let flops = (2.0 * a.nnz() as f64 * v_row_nnz).ceil() as usize;
+    let p = (a.density() * v_density).clamp(0.0, 1.0);
+    let out_density = if p == 0.0 {
+        0.0
+    } else {
+        1.0 - (1.0 - p).powi(k.min(i32::MAX as usize) as i32)
+    };
+    let out_nnz = (out_density * (a.rows * v_cols) as f64).ceil() as usize;
+    SpgemmEstimate { flops, out_density, out_nnz }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +242,27 @@ mod tests {
         let small = Tile::new(0, 32, (0..16).collect());
         let big = Tile::new(0, 128, (0..96).collect());
         assert!(cm.tile_cost(&big) > cm.tile_cost(&small));
+    }
+
+    #[test]
+    fn spgemm_estimate_limits() {
+        // Identity A: output density equals V's density, flops = 2·n·row_nnz.
+        let e = estimate_spgemm(&Pattern::eye(100), 50, 0.1);
+        assert!((e.out_density - (1.0 - (1.0 - 0.1 / 100.0f64).powi(100))).abs() < 1e-12);
+        assert_eq!(e.flops, (2.0 * 100.0 * 0.1 * 50.0).ceil() as usize);
+        // Dense-ish A against dense V saturates.
+        let a = crate::sparse::gen::uniform_random(32, 32, 16, 3);
+        let e = estimate_spgemm(&a, 32, 1.0);
+        assert!(e.out_density > 0.99, "{}", e.out_density);
+        // Empty A produces nothing.
+        let e = estimate_spgemm(&Pattern::empty(8, 8), 8, 0.5);
+        assert_eq!((e.flops, e.out_nnz), (0, 0));
+        assert_eq!(e.out_density, 0.0);
+        // Monotone in v_density.
+        let a = crate::sparse::gen::erdos_renyi(64, 4, 1);
+        let lo = estimate_spgemm(&a, 64, 1e-3).out_density;
+        let hi = estimate_spgemm(&a, 64, 1e-1).out_density;
+        assert!(lo < hi);
     }
 
     #[test]

@@ -18,8 +18,10 @@ pub mod schedule;
 pub mod split;
 
 pub use chain::{
-    ChainError, ChainFlow, ChainPlan, ChainPlanner, ChainStats, ChainStepPlan, ChainStepSpec,
+    decide_spgemm_output, ChainError, ChainFlow, ChainInputMeta, ChainPlan, ChainPlanner,
+    ChainStats, ChainStepPlan, ChainStepSpec, PlannedStep, StepOutput, StepOutputMode,
 };
+pub use cost::{estimate_spgemm, SpgemmEstimate};
 pub use schedule::{FusedSchedule, ScheduleStats, Tile};
 
 use crate::dag::IterDag;

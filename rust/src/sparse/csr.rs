@@ -47,6 +47,12 @@ impl Pattern {
         self.indices.len()
     }
 
+    /// Fraction of slots occupied (`nnz / (rows · cols)`) — the quantity
+    /// the chain planner's output-format decision thresholds on.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
     /// Column indices of row `i`.
     #[inline(always)]
     pub fn row(&self, i: usize) -> &[u32] {
@@ -218,6 +224,83 @@ impl<T: Scalar> Csr<T> {
     pub fn cast<U: Scalar>(&self) -> Csr<U> {
         Csr::new(self.pattern.clone(), self.data.iter().map(|v| U::from_f64(v.to_f64())).collect())
     }
+
+    /// An empty (0 nnz) matrix — the uninitialized slot a sparse chain
+    /// intermediate starts from before its first
+    /// [`reset_from_row_counts`](Csr::reset_from_row_counts).
+    pub fn empty(rows: usize, cols: usize) -> Self {
+        Self::new(Pattern::empty(rows, cols), Vec::new())
+    }
+
+    /// The parallel row-wise assembly path: reshape this matrix **in
+    /// place** from per-row nnz counts (a symbolic SpGEMM pass), reusing
+    /// the existing `indptr`/`indices`/`data` allocations. `indptr`
+    /// becomes the prefix sum of `counts`; `indices` and `data` are
+    /// resized to the total — their contents are **unspecified** until
+    /// every row's slot `indptr[i]..indptr[i+1]` is filled. Slots are
+    /// pairwise disjoint, so concurrent writers (one row each, via raw
+    /// pointers) need no synchronization — the numeric-phase contract of
+    /// [`crate::exec::spgemm::run_spgemm`].
+    pub fn reset_from_row_counts(&mut self, rows: usize, cols: usize, counts: &[usize]) {
+        assert_eq!(counts.len(), rows, "one count per row");
+        self.pattern.rows = rows;
+        self.pattern.cols = cols;
+        self.pattern.indptr.clear();
+        self.pattern.indptr.reserve(rows + 1);
+        self.pattern.indptr.push(0);
+        let mut total = 0usize;
+        for &c in counts {
+            total += c;
+            self.pattern.indptr.push(total);
+        }
+        self.pattern.indices.resize(total, 0);
+        self.data.resize(total, T::ZERO);
+    }
+
+    /// Fresh zero-filled shell from per-row counts (see
+    /// [`reset_from_row_counts`](Csr::reset_from_row_counts)).
+    pub fn shell_from_row_counts(rows: usize, cols: usize, counts: &[usize]) -> Self {
+        let mut shell = Self::empty(0, 0);
+        shell.reset_from_row_counts(rows, cols, counts);
+        shell
+    }
+
+    /// One row's index/value slot, mutably — the serial counterpart of
+    /// the raw-pointer row fill (tests, single-threaded builders).
+    pub fn row_mut(&mut self, i: usize) -> (&mut [u32], &mut [T]) {
+        let lo = self.pattern.indptr[i];
+        let hi = self.pattern.indptr[i + 1];
+        (&mut self.pattern.indices[lo..hi], &mut self.data[lo..hi])
+    }
+
+    /// Debug-validate the CSR invariants the SpGEMM builders promise:
+    /// monotone `indptr`, in-bounds columns, and per-row sorted unique
+    /// columns. O(nnz); meant for `debug_assert!` call sites.
+    pub fn check_invariants(&self) -> bool {
+        let p = &self.pattern;
+        if p.indptr.len() != p.rows + 1 || *p.indptr.last().unwrap() != p.indices.len() {
+            return false;
+        }
+        if p.indptr[0] != 0 {
+            return false;
+        }
+        if p.indptr.windows(2).any(|w| w[0] > w[1]) {
+            return false;
+        }
+        if self.data.len() != p.indices.len() {
+            return false;
+        }
+        for i in 0..p.rows {
+            let row = p.row(i);
+            if row.iter().any(|&c| c as usize >= p.cols) {
+                return false;
+            }
+            if row.windows(2).any(|w| w[0] >= w[1]) {
+                return false;
+            }
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -292,6 +375,48 @@ mod tests {
                 assert_eq!(e.get(i, j), if i == j { 1.0 } else { 0.0 });
             }
         }
+    }
+
+    #[test]
+    fn shell_and_reset_reuse_capacity() {
+        let mut m = Csr::<f64>::shell_from_row_counts(3, 4, &[2, 0, 1]);
+        assert_eq!(m.pattern.indptr, vec![0, 2, 2, 3]);
+        assert_eq!(m.nnz(), 3);
+        {
+            let (cols, vals) = m.row_mut(0);
+            cols.copy_from_slice(&[1, 3]);
+            vals.copy_from_slice(&[0.5, -0.5]);
+        }
+        {
+            let (cols, vals) = m.row_mut(2);
+            cols[0] = 2;
+            vals[0] = 2.0;
+        }
+        assert!(m.check_invariants());
+        assert_eq!(m.row(0), (&[1u32, 3][..], &[0.5, -0.5][..]));
+        assert!((m.pattern.density() - 3.0 / 12.0).abs() < 1e-12);
+
+        // Shrinking reshape keeps the allocation.
+        let cap = m.pattern.indices.capacity();
+        m.reset_from_row_counts(2, 4, &[1, 0]);
+        assert_eq!(m.pattern.indptr, vec![0, 1, 1]);
+        assert_eq!(m.nnz(), 1);
+        assert!(m.pattern.indices.capacity() >= 1 && m.pattern.indices.capacity() <= cap.max(1));
+        // Growing reshape works too.
+        m.reset_from_row_counts(4, 4, &[1, 1, 1, 1]);
+        assert_eq!(m.nnz(), 4);
+    }
+
+    #[test]
+    fn check_invariants_catches_violations() {
+        let good = Csr::<f64>::with_random_values(small(), 3, -1.0, 1.0);
+        assert!(good.check_invariants());
+        let mut bad = good.clone();
+        bad.pattern.indices[0] = bad.pattern.indices[1]; // duplicate in row 0
+        assert!(!bad.check_invariants());
+        let mut bad = good;
+        bad.pattern.indices[0] = 99; // out of bounds
+        assert!(!bad.check_invariants());
     }
 
     #[test]

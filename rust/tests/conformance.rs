@@ -245,7 +245,7 @@ fn random_chain_case(
                     1.0,
                 ));
                 let new_c = 1 + rng.next_range(16);
-                let w = Dense::<f64>::randn(cur_c, new_c, rng.next_u64());
+                let w = Arc::new(Dense::<f64>::randn(cur_c, new_c, rng.next_u64()));
                 cur_c = new_c;
                 ChainStepOp::GemmFlowB { a, w }
             }
@@ -258,7 +258,7 @@ fn random_chain_case(
                     -1.0,
                     1.0,
                 ));
-                let b = Dense::<f64>::randn(k, cur_r, rng.next_u64());
+                let b = Arc::new(Dense::<f64>::randn(k, cur_r, rng.next_u64()));
                 ChainStepOp::GemmFlowC { a, b }
             }
             _ => {
@@ -286,7 +286,8 @@ fn random_chain_case(
     (ops, strategies)
 }
 
-/// Serial composition of the chain through the pair oracle.
+/// Serial composition of the chain through the pair oracle (dense
+/// flows only — the SpGEMM grid below has its own densified oracle).
 fn chain_reference(ops: &[ChainStepOp<f64>], x: &Dense<f64>) -> Dense<f64> {
     let mut cur = x.clone();
     for op in ops {
@@ -294,6 +295,7 @@ fn chain_reference(ops: &[ChainStepOp<f64>], x: &Dense<f64>) -> Dense<f64> {
             ChainStepOp::GemmFlowB { a, w } => reference(&PairOp::gemm_spmm(a, &cur), w),
             ChainStepOp::GemmFlowC { a, b } => reference(&PairOp::gemm_spmm(a, b), &cur),
             ChainStepOp::SpmmFlowC { a, b } => reference(&PairOp::spmm_spmm(a, b), &cur),
+            _ => panic!("dense chain_reference cannot run sparse-flow steps"),
         };
     }
     cur
@@ -322,6 +324,169 @@ fn conformance_chain_exec_vs_composed_reference() {
             chain.run(&pool, &x, &mut d);
             let diff = d.max_abs_diff(&expect);
             assert!(diff < 1e-9, "chain diverged on run {run}: {diff:.3e}");
+        }
+    });
+}
+
+/// Naive dense matmul — the oracle-of-the-oracle for the SpGEMM grid
+/// (everything densified, no sparse code path shared with the system
+/// under test).
+fn matmul<T: Scalar>(a: &Dense<T>, b: &Dense<T>) -> Dense<T> {
+    assert_eq!(a.cols, b.rows);
+    let mut out = Dense::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.get(i, k);
+            if av != T::ZERO {
+                for j in 0..b.cols {
+                    let v = out.get(i, j) + av * b.get(k, j);
+                    out.set(i, j, v);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One random SpGEMM-chain case of the conformance grid: a sparse
+/// input flowing through 1–3 SpGEMM steps (every per-step output
+/// configuration — forced SparseCsr, forced Dense, and Auto — is
+/// reachable), the flow-A consumer, and optionally a trailing fused or
+/// unfused pair step with a strip Auto/Full override — all checked
+/// against the fully densified naive oracle (pair steps through
+/// `exec::reference`) with a relative Frobenius tolerance.
+fn check_spgemm_chain_case<T: Scalar>(rng: &mut XorShift64, tol: f64) {
+    use tile_fusion::scheduler::chain::StepOutputMode;
+
+    let n = 16 + rng.next_range(40);
+    let rhs = 1 + rng.next_range(12);
+    let hops = 1 + rng.next_range(3);
+    let rand_sq = |rng: &mut XorShift64| {
+        Csr::<T>::with_random_values(
+            gen::uniform_random(n, n, 1 + rng.next_range(4), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        )
+    };
+    let v0 = rand_sq(rng);
+    let mut ops: Vec<ChainStepOp<T>> = Vec::new();
+    let mut expect = v0.to_dense();
+    for h in 0..hops {
+        let a = Arc::new(rand_sq(rng));
+        // Intermediate SpGEMM steps must keep the flow sparse (a dense
+        // flow cannot feed another SpGEMM step); the last hop sweeps
+        // every output mode.
+        let output = if h + 1 < hops {
+            StepOutputMode::SparseCsr
+        } else {
+            [StepOutputMode::Auto, StepOutputMode::SparseCsr, StepOutputMode::Dense]
+                [rng.next_range(3)]
+        };
+        expect = matmul(&a.to_dense(), &expect);
+        ops.push(ChainStepOp::SpgemmFlow { a, output });
+    }
+    let x = Arc::new(Dense::<T>::randn(n, rhs, rng.next_u64()));
+    expect = matmul(&expect, &x);
+    ops.push(ChainStepOp::FlowAMulB { b: Arc::clone(&x) });
+    // Optionally a trailing pair step over the (now dense) flow, with a
+    // strip-mode override.
+    let pair_step = rng.next_bool(0.5);
+    if pair_step {
+        let a = Arc::new(rand_sq(rng));
+        expect = reference(&PairOp::spmm_spmm(&a, &a), &expect);
+        ops.push(ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: a });
+    }
+
+    let params = random_params(rng);
+    let mut chain = ChainExec::plan_and_build_sparse(ops, n, n, v0.nnz(), params)
+        .expect("spgemm chain must bind");
+    if pair_step {
+        use tile_fusion::exec::chain::StepStrategy;
+        let last = chain.n_steps() - 1;
+        chain.set_strip(last, if rng.next_bool(0.5) { StripMode::Full } else { StripMode::Auto });
+        if rng.next_bool(0.3) {
+            chain.set_strategy(last, StepStrategy::Unfused);
+        }
+    }
+    let pool = ThreadPool::new(1 + rng.next_range(4));
+    let mut d = Dense::zeros(n, rhs);
+    // Twice: the sparse intermediate buffers must be reusable.
+    for run in 0..2 {
+        chain.run_sparse(&pool, &v0, &mut d);
+        let diff = d.rel_fro_diff(&expect);
+        assert!(
+            diff < tol,
+            "spgemm chain diverged on run {run}: rel {diff:.3e} >= {tol:.3e} \
+             (n={n} rhs={rhs} hops={hops} pair={pair_step})"
+        );
+    }
+}
+
+#[test]
+fn conformance_spgemm_chain_grid_f64() {
+    check_prop("conformance-spgemm-grid-f64", 15, |rng| {
+        check_spgemm_chain_case::<f64>(rng, 1e-9);
+    });
+}
+
+#[test]
+fn conformance_spgemm_chain_grid_f32() {
+    check_prop("conformance-spgemm-grid-f32", 10, |rng| {
+        check_spgemm_chain_case::<f32>(rng, 2e-3);
+    });
+}
+
+#[test]
+fn conformance_spgemm_sparse_final_output() {
+    // Chains ending sparse: the delivered CSR must match the serial
+    // row-merge kernel exactly (structure and values), across thread
+    // counts and repeated runs.
+    check_prop("conformance-spgemm-sparse-out", 10, |rng| {
+        use tile_fusion::kernels::spgemm;
+        use tile_fusion::scheduler::chain::StepOutputMode;
+
+        let n = 16 + rng.next_range(48);
+        let rand_sq = |rng: &mut XorShift64| {
+            Csr::<f64>::with_random_values(
+                gen::uniform_random(n, n, 1 + rng.next_range(4), rng.next_u64()),
+                rng.next_u64(),
+                -1.0,
+                1.0,
+            )
+        };
+        let v0 = rand_sq(rng);
+        let hops = 1 + rng.next_range(2);
+        let mats: Vec<_> = (0..hops).map(|_| Arc::new(rand_sq(rng))).collect();
+        let ops: Vec<ChainStepOp<f64>> = mats
+            .iter()
+            .map(|a| ChainStepOp::SpgemmFlow {
+                a: Arc::clone(a),
+                output: StepOutputMode::SparseCsr,
+            })
+            .collect();
+        let mut expect = v0.clone();
+        for a in &mats {
+            expect = spgemm(a, &expect, 0.0);
+        }
+        let mut chain = ChainExec::plan_and_build_sparse(
+            ops,
+            n,
+            n,
+            v0.nnz(),
+            random_params(rng),
+        )
+        .expect("sparse-out chain must bind");
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+        let mut out = Csr::<f64>::empty(0, 0);
+        for run in 0..2 {
+            chain.run_io(
+                &pool,
+                tile_fusion::exec::ChainIn::Sparse(&v0),
+                tile_fusion::exec::ChainOut::Sparse(&mut out),
+            );
+            assert_eq!(out, expect, "run {run}");
+            assert!(out.check_invariants());
         }
     });
 }

@@ -208,7 +208,7 @@ fn prop_chain_plan_invariants() {
         let len = 1 + rng.next_range(4);
         let rhs = 1 + rng.next_range(32);
         let specs: Vec<ChainStepSpec> = (0..len)
-            .map(|_| ChainStepSpec {
+            .map(|_| ChainStepSpec::Pair {
                 op: FusionOp { a: &a, b: BSide::Sparse(&a), ccol: rhs },
                 flow: ChainFlow::C,
             })
@@ -218,17 +218,16 @@ fn prop_chain_plan_invariants() {
         assert_eq!(plan.stats.unique_schedules, 1, "identical steps must dedup");
         assert_eq!(plan.stats.dedup_hits, len - 1);
         let g = IterDag::new(&a);
+        let sched0 = plan.steps[0].schedule.as_ref().expect("pair steps carry schedules");
         for st in &plan.steps {
-            assert!(
-                Arc::ptr_eq(&st.schedule, &plan.steps[0].schedule),
-                "dedup must return the identical Arc"
-            );
+            let sched = st.schedule.as_ref().expect("pair steps carry schedules");
+            assert!(Arc::ptr_eq(sched, sched0), "dedup must return the identical Arc");
             // (1)+(2): every i and j scheduled exactly once, wavefront 1
             // j-only — the full FusedSchedule invariant set.
-            st.schedule.validate(&a);
+            sched.validate(&a);
             // (3): wavefront-0 dependence closure, re-checked through
             // the DAG view the scheduler consumed.
-            for t in &st.schedule.wavefronts[0] {
+            for t in &sched.wavefronts[0] {
                 for &j in &t.j_rows {
                     assert!(
                         g.deps_within(j as usize, t.i_begin as usize, t.i_end as usize),
@@ -253,7 +252,7 @@ fn prop_chain_plan_dedup_keyed_by_shape() {
         let n = a.rows;
         let w1 = 1 + rng.next_range(16);
         let w2 = 1 + rng.next_range(16);
-        let spec = |bcol: usize, ccol: usize| ChainStepSpec {
+        let spec = |bcol: usize, ccol: usize| ChainStepSpec::Pair {
             op: FusionOp { a: &a, b: BSide::Dense { bcol }, ccol },
             flow: ChainFlow::B,
         };
@@ -263,7 +262,10 @@ fn prop_chain_plan_dedup_keyed_by_shape() {
         let plan = ChainPlanner::new(random_params(rng)).plan(n, w1, &specs).unwrap();
         let expect_unique = if w1 == w2 { 1 } else { 2 };
         assert_eq!(plan.stats.unique_schedules, expect_unique);
-        assert!(Arc::ptr_eq(&plan.steps[0].schedule, &plan.steps[1].schedule));
+        assert!(Arc::ptr_eq(
+            plan.steps[0].schedule.as_ref().unwrap(),
+            plan.steps[1].schedule.as_ref().unwrap()
+        ));
         assert_eq!(plan.out_dims(), (n, w2));
     });
 }
@@ -394,6 +396,7 @@ fn prop_server_tickets_resolve_exactly_once() {
                         strategy: None,
                     }],
                     xs: vec![Dense::<f64>::randn(n, 8, rng.next_u64())],
+                    xs_sparse: Vec::new(),
                     strategy: Strategy::TileFusion,
                 };
                 if rng.next_bool(0.5) {
@@ -542,6 +545,106 @@ fn prop_server_fifo_within_tier() {
         for w in orders.windows(2) {
             assert!(w[0] < w[1], "FIFO within tier violated: {orders:?}");
         }
+    });
+}
+
+#[test]
+fn prop_spgemm_output_csr_invariants() {
+    // The SpGEMM subsystem's output contract, over the random grid:
+    // monotone row_ptr, sorted + deduplicated column indices per row,
+    // nnz exactly matching the symbolic phase at drop_tol 0, no kept
+    // entry at or below a positive drop threshold, and the parallel
+    // executor bitwise-matching the serial kernel at any thread count.
+    check_prop("spgemm-csr-invariants", 20, |rng| {
+        use tile_fusion::exec::spgemm::{run_spgemm, SpgemmWs};
+        use tile_fusion::kernels::{spgemm, spgemm_row_symbolic};
+
+        let ra = 8 + rng.next_range(96);
+        let k = 8 + rng.next_range(96);
+        let cb = 8 + rng.next_range(96);
+        let a = Csr::<f64>::with_random_values(
+            gen::uniform_random(ra, k, 1 + rng.next_range(6), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        );
+        let b = Csr::<f64>::with_random_values(
+            gen::uniform_random(k, cb, 1 + rng.next_range(6), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        );
+
+        let c = spgemm(&a, &b, 0.0);
+        assert!(c.check_invariants(), "row_ptr monotone, cols sorted+unique, in bounds");
+        // nnz matches the symbolic phase exactly.
+        let mut marks = vec![0u32; cb];
+        let mut touched = vec![0u32; cb];
+        let symbolic: usize = (0..ra)
+            .map(|i| spgemm_row_symbolic(a.pattern.row(i), &b.pattern, &mut marks, &mut touched))
+            .sum();
+        assert_eq!(c.nnz(), symbolic, "numeric nnz must equal the symbolic count");
+
+        // A positive drop threshold keeps no entry at or below it and
+        // preserves the kept values bit for bit.
+        let tol = 0.05;
+        let dropped = spgemm(&a, &b, tol);
+        assert!(dropped.check_invariants());
+        assert!(dropped.data.iter().all(|v| v.abs() > tol), "explicit near-zeros must drop");
+        assert!(dropped.nnz() <= c.nnz());
+
+        // Parallel == serial, bitwise, at a random thread count.
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+        let mut ws = SpgemmWs::<f64>::new();
+        let mut par = tile_fusion::sparse::Csr::<f64>::empty(0, 0);
+        run_spgemm(&pool, &a, &b, &mut ws, &mut par);
+        assert_eq!(par, c, "parallel SpGEMM must match the serial kernel bitwise");
+    });
+}
+
+#[test]
+fn prop_spgemm_format_decision_deterministic() {
+    // The planner's output-format decision is a pure function of the
+    // (pattern, shape, density) key: re-planning the identical chain
+    // must reproduce the identical per-step formats, overrides always
+    // win, and the Auto rule flips from sparse to dense as the
+    // estimated product density saturates.
+    check_prop("spgemm-format-decision", 20, |rng| {
+        use tile_fusion::scheduler::chain::{ChainInputMeta, StepOutput, StepOutputMode};
+        use tile_fusion::scheduler::{decide_spgemm_output, estimate_spgemm};
+
+        let a = random_pattern(rng);
+        let hops = 1 + rng.next_range(3);
+        let specs: Vec<ChainStepSpec> = (0..hops)
+            .map(|_| ChainStepSpec::Spgemm { a: &a, output: StepOutputMode::Auto })
+            .collect();
+        let meta = ChainInputMeta::sparse(a.rows, a.cols, a.nnz());
+        let params = random_params(rng);
+        let plan = |params| {
+            ChainPlanner::new(params)
+                .plan_input(meta, &specs)
+                .map(|p| p.steps.iter().map(|s| s.output).collect::<Vec<_>>())
+        };
+        match (plan(params), plan(params)) {
+            (Ok(f1), Ok(f2)) => assert_eq!(f1, f2, "identical keys must decide identically"),
+            (Err(e1), Err(e2)) => assert_eq!(e1, e2, "identical keys must fail identically"),
+            (r1, r2) => panic!("nondeterministic planning: {:?} vs {:?}", r1.is_ok(), r2.is_ok()),
+        }
+
+        // The raw decision: deterministic, override-respecting, and
+        // monotone at the extremes.
+        let d = rng.next_f64().clamp(1e-4, 1.0);
+        let est = estimate_spgemm(&a, a.cols, d);
+        let eb = params.elem_bytes;
+        assert_eq!(
+            decide_spgemm_output(&est, eb, StepOutputMode::Auto),
+            decide_spgemm_output(&est, eb, StepOutputMode::Auto)
+        );
+        assert_eq!(decide_spgemm_output(&est, eb, StepOutputMode::Dense), StepOutput::Dense);
+        assert_eq!(
+            decide_spgemm_output(&est, eb, StepOutputMode::SparseCsr),
+            StepOutput::SparseCsr
+        );
     });
 }
 
