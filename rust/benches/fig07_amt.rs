@@ -25,6 +25,7 @@ fn main() {
         elem_bytes: 8,
         ct_size: 2048,
         max_split_depth: 24,
+        n_nodes: 1,
     };
     let sched = Scheduler::new(params);
 

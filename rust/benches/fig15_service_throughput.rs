@@ -109,6 +109,7 @@ fn run_server(
             coalesce,
             max_coalesce: 16,
             exec_cache_capacity: 8,
+            ..ServerConfig::default()
         },
     );
     srv.register_matrix("A", a.clone());

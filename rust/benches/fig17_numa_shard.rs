@@ -1,0 +1,267 @@
+//! Figure 17 (repo extension): topology-aware sharded dispatch.
+//!
+//! Two measurements under a (simulated or real) multi-node topology:
+//!
+//! 1. **Sharded vs single-dispatcher throughput** on independent-key
+//!    multi-tenant load: closed-loop tenants each hammer their own
+//!    registered matrix, so nothing coalesces across tenants and the
+//!    single dispatcher serializes every batch on one pool lease. The
+//!    sharded server homes keys on per-node dispatcher shards that
+//!    execute concurrently on node-local [`PoolShard`]s. Acceptance
+//!    (full scale): sharded ≥ 1.3× single-dispatcher aggregate
+//!    throughput at the largest tenant count.
+//! 2. **Node-local vs spanning execution latency** for one bound fused
+//!    pair: the same executor timed on a node-shard lease and on the
+//!    whole-pool lease, plus the wavefront-0 row-block partition the
+//!    placement layer would use — and whether this build pins workers
+//!    (`numa-pin`).
+//!
+//! `--smoke` runs tiny shapes for CI bitrot checks (seconds; asserts
+//! only that the sharded path agrees with the reference).
+
+use std::time::{Duration, Instant};
+use tile_fusion::coordinator::server::{BRef, PairRequest};
+use tile_fusion::coordinator::{Priority, Server, ServerConfig, Strategy};
+use tile_fusion::exec::reference::reference;
+use tile_fusion::harness::{print_table, write_csv, BenchEnv};
+use tile_fusion::prelude::*;
+use tile_fusion::scheduler::place::split_wavefront0;
+use tile_fusion::topology;
+
+/// Independent keys (registered matrices); enough that a hash split
+/// across two shards is lopsided only with negligible probability.
+const KEYS: usize = 8;
+
+/// The bench topology: honour `TF_TOPOLOGY` when it names a multi-node
+/// layout, otherwise simulate two nodes over the thread budget so the
+/// sharded arm exists on any machine.
+fn bench_topology(threads: usize) -> Topology {
+    let t = Topology::detect();
+    if t.n_nodes() > 1 {
+        t
+    } else {
+        Topology::simulated(2, (threads / 2).max(1))
+    }
+}
+
+fn matrices(n: usize) -> Vec<Csr<f32>> {
+    (0..KEYS)
+        .map(|k| {
+            Csr::<f32>::with_random_values(gen::banded(n, &[1, 2 + k]), k as u64 + 1, -1.0, 1.0)
+        })
+        .collect()
+}
+
+fn register(srv: &Server<f32>, mats: &[Csr<f32>], n: usize, bcol: usize) {
+    for (k, a) in mats.iter().enumerate() {
+        srv.register_matrix(format!("A{k}"), a.clone());
+    }
+    srv.register_dense("B", Dense::<f32>::randn(n, bcol, 7));
+}
+
+fn pair_req(k: usize, c: Dense<f32>) -> PairRequest<f32> {
+    PairRequest {
+        a: format!("A{k}"),
+        b: BRef::Dense("B".into()),
+        cs: vec![c],
+        strategy: Strategy::TileFusion,
+    }
+}
+
+/// Closed-loop tenants (tenant `t` owns key `t % KEYS`): total wall
+/// time for `tenants · per_tenant` requests. Coalescing is off in both
+/// arms so the measurement isolates dispatch concurrency, not batching.
+fn run_arm(
+    srv: &Server<f32>,
+    bcol: usize,
+    ccol: usize,
+    tenants: usize,
+    per_tenant: usize,
+) -> Duration {
+    // Warm every key's schedule + tuned pick outside the timed window.
+    for k in 0..KEYS {
+        let c = Dense::randn(bcol, ccol, 50 + k as u64);
+        srv.pair_blocking(10_000 + k as u64, Priority::Bulk, pair_req(k, c))
+            .expect("warm-up");
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..tenants {
+            let srv = &srv;
+            scope.spawn(move || {
+                let k = t % KEYS;
+                for r in 0..per_tenant {
+                    let c = Dense::<f32>::randn(bcol, ccol, (t * per_tenant + r) as u64 + 1);
+                    srv.pair_blocking(t as u64, Priority::Bulk, pair_req(k, c)).expect("pair");
+                }
+            });
+        }
+    });
+    t0.elapsed()
+}
+
+fn server_single(threads: usize, n: usize, bcol: usize, mats: &[Csr<f32>]) -> Server<f32> {
+    let srv = Server::with_config(
+        SharedPool::new(threads),
+        SchedulerParams::default(),
+        ServerConfig { coalesce: false, queue_capacity: 256, ..ServerConfig::default() },
+    );
+    register(&srv, mats, n, bcol);
+    srv
+}
+
+fn server_sharded(threads: usize, n: usize, bcol: usize, mats: &[Csr<f32>]) -> Server<f32> {
+    let srv = Server::with_config(
+        SharedPool::with_topology(threads, bench_topology(threads)),
+        SchedulerParams::default(),
+        ServerConfig { coalesce: false, queue_capacity: 256, ..ServerConfig::default() },
+    );
+    register(&srv, mats, n, bcol);
+    srv
+}
+
+/// Median of `reps` timed runs of a bound fused pair on one lease.
+fn median_run(
+    ex: &mut Fused<'_, f32>,
+    pool: &ThreadPool,
+    c: &Dense<f32>,
+    d: &mut Dense<f32>,
+    reps: usize,
+) -> Duration {
+    ex.run(pool, c, d); // warm workspaces on this pool
+    let mut times: Vec<Duration> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            ex.run(pool, c, d);
+            t0.elapsed()
+        })
+        .collect();
+    times.sort_unstable();
+    times[times.len() / 2]
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let env = BenchEnv::from_env();
+    let (n, bcol, ccol, per_tenant, tenant_counts): (usize, usize, usize, usize, &[usize]) =
+        if smoke {
+            (1024, 16, 8, 2, &[2])
+        } else {
+            (8192, 32, 16, 12, &[2, 4, 8])
+        };
+    let mats = matrices(n);
+    let topo = bench_topology(env.threads);
+    println!(
+        "topology: {} node(s) x {} cpus, pinning compiled: {}",
+        topo.n_nodes(),
+        topo.n_cpus() / topo.n_nodes().max(1),
+        topology::pinning_compiled()
+    );
+
+    // Smoke sanity: a sharded reply agrees with the reference.
+    if smoke {
+        let srv = server_sharded(env.threads, n, bcol, &mats);
+        let b = Dense::<f32>::randn(n, bcol, 7);
+        let c = Dense::<f32>::randn(bcol, ccol, 3);
+        let expect = reference(&PairOp::gemm_spmm(&mats[1], &b), &c);
+        let reply = srv.pair_blocking(0, Priority::Latency, pair_req(1, c)).unwrap();
+        let diff = reply.ds[0].max_abs_diff(&expect);
+        assert!(diff < 1e-3, "sharded reply diverged from reference: {diff}");
+        let m = srv.shutdown();
+        assert!(m.shard_dispatched.iter().sum::<u64>() >= 1);
+    }
+
+    // -- Measurement 1: sharded vs single-dispatcher throughput -------
+    let mut table = Vec::new();
+    let mut csv = Vec::new();
+    let mut at_max = 0.0f64;
+    for &tenants in tenant_counts {
+        let single = server_single(env.threads, n, bcol, &mats);
+        let t_single = run_arm(&single, bcol, ccol, tenants, per_tenant);
+        let m_single = single.shutdown();
+
+        let sharded = server_sharded(env.threads, n, bcol, &mats);
+        let t_sharded = run_arm(&sharded, bcol, ccol, tenants, per_tenant);
+        let m_sharded = sharded.shutdown();
+
+        let reqs = (tenants * per_tenant) as f64;
+        let rps_single = reqs / t_single.as_secs_f64();
+        let rps_sharded = reqs / t_sharded.as_secs_f64();
+        at_max = rps_sharded / rps_single;
+        table.push(vec![
+            tenants.to_string(),
+            format!("{rps_single:.1}"),
+            format!("{rps_sharded:.1}"),
+            format!("{}", m_sharded.shard_stolen.iter().sum::<u64>()),
+            format!("{}", m_sharded.remote_placements),
+            format!("{at_max:.2}"),
+        ]);
+        csv.push(format!(
+            "{tenants},{per_tenant},{:.6},{:.6},{},{},{}",
+            t_single.as_secs_f64(),
+            t_sharded.as_secs_f64(),
+            m_sharded.shard_stolen.iter().sum::<u64>(),
+            m_sharded.remote_placements,
+            m_single.batches,
+        ));
+    }
+    print_table(
+        &format!(
+            "Figure 17 — sharded vs single-dispatcher throughput (n={n}, {KEYS} keys, {} threads, {} shards)",
+            env.threads,
+            topo.n_nodes()
+        ),
+        &["tenants", "single req/s", "sharded req/s", "steals", "spread runs", "sharded/single"],
+        &table,
+    );
+    write_csv(
+        "fig17_numa_shard",
+        "tenants,per_tenant,t_single,t_sharded,steals,remote_placements,single_batches",
+        &csv,
+    );
+
+    // -- Measurement 2: node-local vs spanning lease latency ----------
+    let pool = SharedPool::with_topology(env.threads, topo.clone());
+    let a = &mats[0];
+    let b = Dense::<f32>::randn(n, bcol, 11);
+    let c = Dense::<f32>::randn(bcol, ccol, 12);
+    let params = SchedulerParams {
+        n_cores: pool.n_threads(),
+        elem_bytes: 4,
+        n_nodes: pool.n_nodes(),
+        ..SchedulerParams::default()
+    };
+    let plan = Scheduler::new(params).schedule(&a.pattern, bcol, ccol);
+    let op = PairOp::gemm_spmm(a, &b);
+    let mut d = Dense::zeros(a.rows(), ccol);
+    let reps = env.reps.max(3);
+    let t_node = {
+        let lease = pool.lease_shard(0);
+        let mut ex = Fused::new(op, &plan);
+        median_run(&mut ex, &lease, &c, &mut d, reps)
+    };
+    let t_all = {
+        let lease = pool.lease();
+        let mut ex = Fused::new(op, &plan);
+        median_run(&mut ex, &lease, &c, &mut d, reps)
+    };
+    let parts = split_wavefront0(&plan, pool.n_nodes());
+    println!(
+        "chain-step latency: node-local {:.1} us ({} workers) vs spanning {:.1} us ({} workers); \
+         wavefront-0 tile partition: {:?}",
+        t_node.as_secs_f64() * 1e6,
+        pool.shard(0).n_threads(),
+        t_all.as_secs_f64() * 1e6,
+        pool.n_threads(),
+        parts
+    );
+
+    if !smoke {
+        assert!(
+            at_max >= 1.3,
+            "sharded dispatch must reach 1.3x single-dispatcher throughput at {} tenants (got {at_max:.2}x)",
+            tenant_counts.last().unwrap()
+        );
+    }
+    println!("OK");
+}

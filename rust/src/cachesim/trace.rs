@@ -233,7 +233,14 @@ mod tests {
     use crate::sparse::gen;
 
     fn params() -> SchedulerParams {
-        SchedulerParams { n_cores: 4, cache_bytes: 1 << 20, elem_bytes: 8, ct_size: 256, max_split_depth: 24 }
+        SchedulerParams {
+            n_cores: 4,
+            cache_bytes: 1 << 20,
+            elem_bytes: 8,
+            ct_size: 256,
+            max_split_depth: 24,
+            n_nodes: 1,
+        }
     }
 
     #[test]
@@ -280,6 +287,7 @@ mod tests {
             elem_bytes: 8,
             ct_size: 256,
             max_split_depth: 24,
+            n_nodes: 1,
         };
         let op = crate::scheduler::FusionOp { a: &a, b: BSide::Dense { bcol }, ccol };
         let striped = Scheduler::new(p).schedule_op(&op);

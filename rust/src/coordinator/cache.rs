@@ -29,6 +29,34 @@ impl ScheduleKey {
         };
         Self { a_hash: op.a.structure_hash(), b_key, b_sparse, ccol: op.ccol, elem_bytes }
     }
+
+    /// The persistence key of a tuned pick for this schedule on a pool
+    /// of `n_threads` workers over `n_nodes` memory nodes
+    /// ([`crate::tuning::TuneKey`]).
+    pub fn tune_key(&self, n_threads: usize, n_nodes: usize) -> crate::tuning::TuneKey {
+        crate::tuning::TuneKey {
+            a_hash: self.a_hash,
+            b_key: self.b_key,
+            b_sparse: self.b_sparse,
+            ccol: self.ccol,
+            elem_bytes: self.elem_bytes,
+            n_threads,
+            n_nodes,
+        }
+    }
+
+    /// Back-conversion from a persisted [`crate::tuning::TuneKey`]
+    /// (thread and node counts are checked by the caller against its
+    /// pool).
+    pub fn from_tune_key(k: &crate::tuning::TuneKey) -> Self {
+        Self {
+            a_hash: k.a_hash,
+            b_key: k.b_key,
+            b_sparse: k.b_sparse,
+            ccol: k.ccol,
+            elem_bytes: k.elem_bytes,
+        }
+    }
 }
 
 /// Entries the cache defaults to holding before evicting. Each entry is
@@ -44,8 +72,10 @@ pub const DEFAULT_CAPACITY: usize = 256;
 /// only X's slot; tenants on unrelated keys read schedules and tuned
 /// picks from the cache concurrently, and a second tenant arriving at X
 /// queues on the slot (then finds the pick recorded) instead of
-/// retuning. Eviction drops the slot with its entry — the next request
-/// rebuilds and retunes.
+/// retuning. Eviction drops the slot with its entry, but picks recorded
+/// through [`ScheduleCache::set_tuned_strip`] (or seeded from a
+/// persisted sidecar) live in the cache's seed map and re-tune the
+/// rebuilt entry for free.
 pub struct TuneCell {
     pick: Mutex<Option<StripMode>>,
 }
@@ -89,6 +119,13 @@ struct Entry {
 pub struct ScheduleCache {
     params: SchedulerParams,
     map: HashMap<ScheduleKey, Entry>,
+    /// Tuned picks seeded from a persisted sidecar
+    /// ([`crate::tuning::TuneTable`]) before their entries exist; a
+    /// seeded key's entry is born already-tuned, so a restarted service
+    /// never re-times keys it had learned. Seeds survive eviction (the
+    /// rebuilt entry re-seeds) and are superseded by fresher in-process
+    /// picks in [`ScheduleCache::tuned_snapshot`].
+    seeds: HashMap<ScheduleKey, StripMode>,
     capacity: usize,
     clock: u64,
     pub hits: u64,
@@ -109,6 +146,7 @@ impl ScheduleCache {
         Self {
             params,
             map: HashMap::new(),
+            seeds: HashMap::new(),
             capacity: capacity.max(1),
             clock: 0,
             hits: 0,
@@ -154,11 +192,88 @@ impl ScheduleCache {
             }
         }
         let plan = Arc::new(Scheduler::new(params).schedule_op(op));
-        self.map.insert(
-            key,
-            Entry { schedule: Arc::clone(&plan), tune: TuneCell::new(), last_used: self.clock },
-        );
+        let tune = TuneCell::new();
+        if let Some(m) = self.seeds.get(&key) {
+            tune.set(*m);
+        }
+        self.map.insert(key, Entry { schedule: Arc::clone(&plan), tune, last_used: self.clock });
         plan
+    }
+
+    /// Seed a tuned strip pick for `key` before (or after) its entry
+    /// exists — the load-on-start path of tuned-pick persistence. An
+    /// already-live entry is updated in place.
+    pub fn seed_tuned(&mut self, key: ScheduleKey, mode: StripMode) {
+        self.seeds.insert(key, mode);
+        self.bound_seeds();
+        if let Some(entry) = self.map.get_mut(&key) {
+            entry.tune.set(mode);
+        }
+    }
+
+    /// Seeds are re-derivable timings, so they are bounded (a small
+    /// multiple of the entry capacity) rather than kept forever: an
+    /// unbounded stream of distinct keys must not grow memory or the
+    /// persisted sidecar without limit. Over the bound, arbitrary
+    /// entries are dropped — the worst case is re-timing a key once.
+    fn bound_seeds(&mut self) {
+        let cap = self.capacity.saturating_mul(4).max(16);
+        while self.seeds.len() > cap {
+            let k = *self.seeds.keys().next().expect("non-empty while over the bound");
+            self.seeds.remove(&k);
+        }
+    }
+
+    /// Seed every pick in `table` that was timed on a pool of
+    /// `n_threads` workers over `n_nodes` memory nodes (differently
+    /// shaped pools are not evidence about this one — the remote
+    /// penalty shifts the candidate landscape); returns how many were
+    /// loaded — the load-on-start half of tuned-pick persistence,
+    /// shared by the server and the sync coordinator.
+    pub fn seed_from_table(
+        &mut self,
+        table: &crate::tuning::TuneTable,
+        n_threads: usize,
+        n_nodes: usize,
+    ) -> usize {
+        let mut n = 0usize;
+        for (k, mode) in &table.entries {
+            if k.n_threads != n_threads || k.n_nodes != n_nodes {
+                continue;
+            }
+            self.seed_tuned(ScheduleKey::from_tune_key(k), *mode);
+            n += 1;
+        }
+        n
+    }
+
+    /// Export every tuned pick as a persistable table keyed for a pool
+    /// of `n_threads` workers over `n_nodes` nodes — the
+    /// write-on-shutdown half.
+    pub fn to_tune_table(&self, n_threads: usize, n_nodes: usize) -> crate::tuning::TuneTable {
+        let mut table = crate::tuning::TuneTable::default();
+        for (k, m) in self.tuned_snapshot() {
+            table.entries.insert(k.tune_key(n_threads, n_nodes), m);
+        }
+        table
+    }
+
+    /// Every tuned pick this cache knows: in-process winners of live
+    /// entries (freshest) plus loaded seeds whose entries were evicted
+    /// or never rebuilt — what write-on-shutdown persists.
+    pub fn tuned_snapshot(&self) -> Vec<(ScheduleKey, StripMode)> {
+        let mut out: Vec<(ScheduleKey, StripMode)> =
+            self.seeds.iter().map(|(k, m)| (*k, *m)).collect();
+        for (k, e) in &self.map {
+            if let Some(m) = e.tune.get() {
+                if let Some(slot) = out.iter_mut().find(|(ok, _)| ok == k) {
+                    slot.1 = m;
+                } else {
+                    out.push((*k, m));
+                }
+            }
+        }
+        out
     }
 
     /// The autotuned strip pick cached for `op`, if any (touches the
@@ -171,12 +286,17 @@ impl ScheduleCache {
         entry.tune.get()
     }
 
-    /// Record the autotuner's pick alongside `op`'s schedule. No-op when
-    /// the entry has been evicted in the meantime (the next request
-    /// rebuilds and retunes).
+    /// Record the autotuner's pick alongside `op`'s schedule — in the
+    /// live entry **and** in the persistent seed map, so the pick
+    /// survives LRU eviction (a rebuilt entry is born re-tuned) and
+    /// reaches [`ScheduleCache::tuned_snapshot`] even if the entry is
+    /// gone by shutdown. A pick is a pure function of (pattern, shape,
+    /// precision, workers), so outliving its entry is always sound.
     pub fn set_tuned_strip(&mut self, op: &FusionOp, strip: StripMode) {
         let key = self.key_for(op);
         self.clock += 1;
+        self.seeds.insert(key, strip);
+        self.bound_seeds();
         if let Some(entry) = self.map.get_mut(&key) {
             entry.last_used = self.clock;
             entry.tune.set(strip);
@@ -293,15 +413,51 @@ mod tests {
         assert_eq!(cache.tuned_strip(&op), None, "entry untuned");
         cache.set_tuned_strip(&op, StripMode::Width(32));
         assert_eq!(cache.tuned_strip(&op), Some(StripMode::Width(32)));
-        // Eviction drops the pick with the entry.
+        // Eviction drops the entry but not the pick: the rebuilt entry
+        // is born re-tuned (a pick is a pure function of its key, so
+        // re-timing it after eviction would be pure waste).
         let other = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol: 16 };
         cache.get_or_build(&other);
         assert_eq!(cache.evictions, 1);
         cache.get_or_build(&op);
-        assert_eq!(cache.tuned_strip(&op), None, "retune after eviction");
-        // Recording against a missing entry is a no-op.
+        assert_eq!(cache.tuned_strip(&op), Some(StripMode::Width(32)), "pick survives eviction");
+        // Recording against a missing entry seeds its future rebuild
+        // (tuned_strip itself still requires a live entry).
         cache.set_tuned_strip(&other, StripMode::Full);
-        assert_eq!(cache.tuned_strip(&other), None);
+        assert_eq!(cache.tuned_strip(&other), None, "other was just evicted");
+        cache.get_or_build(&other);
+        assert_eq!(cache.tuned_strip(&other), Some(StripMode::Full));
+        // Both picks reach the snapshot regardless of entry liveness.
+        let snap = cache.tuned_snapshot();
+        assert_eq!(snap.len(), 2);
+    }
+
+    #[test]
+    fn seeded_tuned_picks_survive_build_and_eviction() {
+        use crate::exec::StripMode;
+        let a = gen::banded(32, &[1]);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol: 8 };
+        let other = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol: 16 };
+        let mut cache = ScheduleCache::with_capacity(SchedulerParams::default(), 1);
+        let key = ScheduleKey::for_op(&op, cache.params().elem_bytes.max(1));
+        // Seed before the entry exists: the entry is born tuned.
+        cache.seed_tuned(key, StripMode::Width(64));
+        cache.get_or_build(&op);
+        assert_eq!(cache.tuned_strip(&op), Some(StripMode::Width(64)));
+        // Evict it; the rebuild re-seeds.
+        cache.get_or_build(&other);
+        cache.get_or_build(&op);
+        assert_eq!(cache.tuned_strip(&op), Some(StripMode::Width(64)), "seed survives eviction");
+        // A fresher in-process pick supersedes the seed in the snapshot.
+        cache.set_tuned_strip(&op, StripMode::Full);
+        let snap = cache.tuned_snapshot();
+        assert_eq!(
+            snap.iter().find(|(k, _)| *k == key).map(|(_, m)| *m),
+            Some(StripMode::Full)
+        );
+        // Seeding a live entry updates it in place.
+        cache.seed_tuned(key, StripMode::Width(96));
+        assert_eq!(cache.tuned_strip(&op), Some(StripMode::Width(96)));
     }
 
     #[test]

@@ -20,6 +20,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Scheduling tier of a queued job.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
@@ -30,6 +31,17 @@ pub enum Priority {
     /// Throughput-oriented (the default): FIFO behind other bulk jobs.
     #[default]
     Bulk,
+}
+
+/// Outcome of a bounded-wait pop ([`BoundedQueue::pop_timeout`]).
+#[derive(Debug)]
+pub enum PopWait<J> {
+    /// A job arrived (tier included, like [`BoundedQueue::pop`]).
+    Job(Priority, J),
+    /// The timeout elapsed with both tiers empty; the queue is open.
+    Empty,
+    /// Closed **and** drained — the dispatcher's exit signal.
+    Closed,
 }
 
 /// Why a push was refused; carries the job back to the caller.
@@ -150,6 +162,50 @@ impl<J> BoundedQueue<J> {
                 return None;
             }
             st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking [`BoundedQueue::pop`]: `None` when both tiers are
+    /// empty right now (closed or not) — the sharded dispatcher's
+    /// fast path before it looks at sibling queues.
+    pub fn try_pop(&self) -> Option<(Priority, J)> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(j) = st.latency.pop_front() {
+            self.not_full.notify_all();
+            return Some((Priority::Latency, j));
+        }
+        if let Some(j) = st.bulk.pop_front() {
+            self.not_full.notify_all();
+            return Some((Priority::Bulk, j));
+        }
+        None
+    }
+
+    /// [`BoundedQueue::pop`] bounded by `timeout`: a sharded dispatcher
+    /// must wake periodically to steal from sibling shards instead of
+    /// blocking on its own queue forever, and must still distinguish
+    /// "nothing yet" from "closed and drained".
+    pub fn pop_timeout(&self, timeout: Duration) -> PopWait<J> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(j) = st.latency.pop_front() {
+                self.not_full.notify_all();
+                return PopWait::Job(Priority::Latency, j);
+            }
+            if let Some(j) = st.bulk.pop_front() {
+                self.not_full.notify_all();
+                return PopWait::Job(Priority::Bulk, j);
+            }
+            if st.closed {
+                return PopWait::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopWait::Empty;
+            }
+            let (guard, _) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
         }
     }
 
@@ -290,6 +346,37 @@ mod tests {
         q.try_push(Priority::Latency, 8).unwrap();
         assert_eq!(q.drain_latency_matching(usize::MAX, |_| true), vec![8]);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn try_pop_and_pop_timeout_cover_the_three_outcomes() {
+        let q = BoundedQueue::new(4);
+        assert!(q.try_pop().is_none(), "empty open queue");
+        q.try_push(Priority::Bulk, 5).unwrap();
+        assert_eq!(q.try_pop(), Some((Priority::Bulk, 5)));
+        // Timeout on an open empty queue reports Empty (and waits).
+        let t0 = std::time::Instant::now();
+        match q.pop_timeout(Duration::from_millis(10)) {
+            PopWait::Empty => {}
+            other => panic!("expected Empty, got job={}", matches!(other, PopWait::Job(..))),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        // A queued job is returned immediately, latency first.
+        q.try_push(Priority::Bulk, 1).unwrap();
+        q.try_push(Priority::Latency, 2).unwrap();
+        match q.pop_timeout(Duration::from_millis(100)) {
+            PopWait::Job(Priority::Latency, 2) => {}
+            _ => panic!("expected the latency job"),
+        }
+        // Closed and drained reports Closed; drain-after-close still
+        // yields the leftover job first.
+        q.close();
+        match q.pop_timeout(Duration::from_millis(10)) {
+            PopWait::Job(Priority::Bulk, 1) => {}
+            _ => panic!("expected the leftover bulk job"),
+        }
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), PopWait::Closed));
+        assert!(q.try_pop().is_none());
     }
 
     #[test]

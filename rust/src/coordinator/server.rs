@@ -14,10 +14,26 @@
 //!   [`ServiceError::BusyQueue`] at capacity and
 //!   [`ServiceError::BusyTenant`] past the per-tenant in-flight cap;
 //!   `submit_*` blocks instead (backpressure);
-//! - a **dispatcher thread** drains the queue and **coalesces** requests
+//! - **dispatcher shards** drain the queues and **coalesce** requests
 //!   that share a (pattern, shape, elem-width) schedule key into one
 //!   batched execution, amortizing schedule fetch, tuned-strip lookup,
 //!   and executor bind across tenants;
+//! - **topology-aware sharding**: the server runs one dispatcher shard
+//!   per memory node of its [`SharedPool`] (`ServerConfig::shards`
+//!   overrides). Requests hash to a **home shard** by their coalesce
+//!   key — same-key requests always meet in one queue, so coalescing
+//!   is unaffected — and each shard executes node-locally on its own
+//!   [`PoolShard`](crate::exec::PoolShard), so independent keys stop
+//!   serializing on one pool lease. Idle shards **steal whole
+//!   requests** from sibling queues (never half a batch, never
+//!   mid-barrier; stolen requests run alone, without coalescing),
+//!   atomically reserving against the tenant's executing count first
+//!   so a stolen bulk chain can never exceed its tenant cap through
+//!   the stealing shard — the shutdown drain path included. Batches
+//!   whose
+//!   flowing working set exceeds the spread threshold
+//!   ([`crate::scheduler::place`]) take the whole pool instead
+//!   (counted as `remote_placements`);
 //! - **priority**: latency-tier jobs are popped first, and while a bulk
 //!   chain is in flight the dispatcher serves latency pairs at chain
 //!   **step boundaries** ([`ChainExec::run_controlled`]) — overtaking
@@ -37,25 +53,31 @@
 //! (tile fusion, unfused) — pinned down in `tests/properties.rs`.
 
 use super::cache::{ScheduleCache, TuneCell};
-use super::queue::{BoundedQueue, Priority, PushError};
+use super::queue::{BoundedQueue, PopWait, Priority, PushError};
 use super::service::{execute_pair_batch, Metrics, Strategy};
 use super::ticket::{ticket, ServiceError, Ticket, TicketTx};
 use crate::core::{Dense, Scalar};
 use crate::exec::chain::{
     chain_specs, ChainExec, ChainIn, ChainOut, ChainStepOp, StepControl, StepStrategy,
 };
-use crate::exec::{Fused, PairExec, PairOp, SharedPool, StripMode, ThreadPool};
+use crate::exec::{Fused, PairExec, PairOp, PoolLease, SharedPool, StripMode, ThreadPool};
 use crate::scheduler::chain::{
     unfused_schedule, ChainInputMeta, ChainPlanner, ChainStepSpec, StepOutput, StepOutputMode,
 };
+use crate::scheduler::place::{decide_placement, Placement, DEFAULT_SPREAD_MIN_BYTES};
 use crate::scheduler::{FusedSchedule, SchedulerParams};
 use crate::sparse::Csr;
-use crate::tuning::{strip_candidates, StripTuner};
+use crate::tuning::{strip_candidates, StripTuner, TuneTable};
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// How often an idle sharded dispatcher wakes from its own queue to
+/// look for stealable work on sibling shards.
+const STEAL_POLL: Duration = Duration::from_millis(2);
 
 /// Admission / dispatch knobs.
 #[derive(Clone, Copy, Debug)]
@@ -70,10 +92,25 @@ pub struct ServerConfig {
     /// Most requests one batch may serve (bounds tail latency of the
     /// batch head).
     pub max_coalesce: usize,
-    /// Bound chain executors kept warm by the dispatcher (keyed by the
-    /// chain's named operands + shapes; re-registering any operand
-    /// invalidates). 0 disables reuse.
+    /// Bound chain executors kept warm by each dispatcher shard (keyed
+    /// by the chain's named operands + shapes; re-registering any
+    /// operand invalidates). 0 disables reuse.
     pub exec_cache_capacity: usize,
+    /// Dispatcher shards: 0 (the default) runs one per memory node of
+    /// the pool's topology; an explicit value is clamped to
+    /// `1..=pool.n_shards()`. Each shard owns its node's
+    /// [`PoolShard`](crate::exec::PoolShard) and its own submission
+    /// queue (`queue_capacity` applies per shard). Running fewer
+    /// shards than the pool has nodes switches every execution to
+    /// whole-pool leases so no node's workers are stranded.
+    pub shards: usize,
+    /// Idle shards steal whole queued requests from sibling shards
+    /// (subject to the tenant's executing count — see the module docs).
+    pub steal: bool,
+    /// Flowing-working-set bytes above which a batch executes on the
+    /// whole pool (`Lease::All`) instead of the dispatching shard's
+    /// node ([`crate::scheduler::place::decide_placement`]).
+    pub spread_min_bytes: usize,
 }
 
 impl Default for ServerConfig {
@@ -84,12 +121,15 @@ impl Default for ServerConfig {
             coalesce: true,
             max_coalesce: 16,
             exec_cache_capacity: 8,
+            shards: 0,
+            steal: true,
+            spread_min_bytes: DEFAULT_SPREAD_MIN_BYTES,
         }
     }
 }
 
 /// Dense or sparse stationary `B` of a pair request, by registered name.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub enum BRef {
     /// Registered dense `B` ([`Server::register_dense`]) — GeMM-SpMM.
     Dense(String),
@@ -108,7 +148,7 @@ pub struct PairRequest<T> {
 }
 
 /// Stationary operand of one chain step, by registered name.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub enum StepOperand {
     /// Registered dense weights, flowing `B`: `out = A ((chain) · w)`.
     Weights(String),
@@ -126,7 +166,7 @@ pub enum StepOperand {
 }
 
 /// One step of a queued [`ChainRequest`].
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct ChainStepReq {
     /// Registered sparse `A` of this step (unused — conventionally
     /// empty — for [`StepOperand::FlowADense`] steps).
@@ -190,10 +230,19 @@ struct Shared<T> {
     /// invalidates them.
     registry_gen: AtomicU64,
     inflight: Mutex<HashMap<u64, usize>>,
+    /// Per-tenant requests currently **executing** on some shard
+    /// (distinct from `inflight`, which also counts queued work) — the
+    /// steal guard: a shard only steals a job whose tenant is below its
+    /// cap in executing requests, so a stolen bulk chain can never
+    /// exceed its tenant cap through the stealing shard.
+    executing: Mutex<HashMap<u64, usize>>,
     metrics: Mutex<Metrics>,
     /// Drop-triggered: cancel queued work and abandon chains at the
     /// next step boundary instead of draining gracefully.
     aborting: AtomicBool,
+    /// One submission queue per dispatcher shard; requests hash to a
+    /// home queue by coalesce key.
+    queues: Vec<Arc<BoundedQueue<Job<T>>>>,
 }
 
 impl<T: Scalar> Shared<T> {
@@ -218,6 +267,37 @@ impl<T: Scalar> Shared<T> {
         }
     }
 
+    fn begin_exec(&self, tenant: u64) {
+        *self.executing.lock().unwrap().entry(tenant).or_insert(0) += 1;
+    }
+
+    fn end_exec(&self, tenant: u64) {
+        let mut ex = self.executing.lock().unwrap();
+        if let Some(n) = ex.get_mut(&tenant) {
+            *n -= 1;
+            if *n == 0 {
+                ex.remove(&tenant);
+            }
+        }
+    }
+
+    /// Steal reservation: atomically check the tenant's executing count
+    /// against the cap **and** charge one slot under a single lock, so
+    /// two shards racing to steal the same tenant's work can never both
+    /// pass the check (a job's home shard never asks — admission
+    /// already charged the tenant's in-flight budget). The caller
+    /// releases the reservation with [`Shared::end_exec`] once the
+    /// stolen job finished (or was cancelled).
+    fn try_reserve_exec(&self, tenant: u64) -> bool {
+        let mut ex = self.executing.lock().unwrap();
+        let cur = ex.get(&tenant).copied().unwrap_or(0);
+        if cur >= self.cfg.tenant_inflight_cap {
+            return false;
+        }
+        ex.insert(tenant, cur + 1);
+        true
+    }
+
     fn matrix(&self, name: &str) -> Result<Arc<Csr<T>>, ServiceError> {
         self.matrices
             .read()
@@ -238,28 +318,41 @@ impl<T: Scalar> Shared<T> {
 }
 
 /// The async multi-tenant front-end. See the module docs for the
-/// dispatch model; construction spawns the dispatcher thread, dropping
-/// the server aborts it (cancelling queued work), and
-/// [`Server::shutdown`] drains gracefully instead.
+/// dispatch model; construction spawns one dispatcher shard per memory
+/// node of the pool (see [`ServerConfig::shards`]), dropping the server
+/// aborts them (cancelling queued work), and [`Server::shutdown`]
+/// drains gracefully instead.
 pub struct Server<T: Scalar> {
     shared: Arc<Shared<T>>,
-    queue: Arc<BoundedQueue<Job<T>>>,
-    dispatcher: Option<JoinHandle<()>>,
+    dispatchers: Vec<JoinHandle<()>>,
 }
 
 impl<T: Scalar> Server<T> {
-    /// Server over a fresh pool of `n_threads` executors with default
-    /// [`ServerConfig`].
+    /// Server over a fresh single-node pool of `n_threads` executors
+    /// with default [`ServerConfig`] (one dispatcher shard — the
+    /// pre-topology shape).
     pub fn new(n_threads: usize, params: SchedulerParams) -> Self {
         Self::with_config(SharedPool::new(n_threads), params, ServerConfig::default())
     }
 
     /// Server over an existing shared pool (pass a clone of a
     /// [`Coordinator`](super::Coordinator)'s handle to share workers
-    /// with the synchronous path) and explicit knobs.
+    /// with the synchronous path) and explicit knobs. A multi-node pool
+    /// ([`SharedPool::with_topology`]) gets one dispatcher shard per
+    /// node by default; `TF_TUNE_CACHE=<path>` seeds tuned strip picks
+    /// from that sidecar (and [`Server::shutdown`] / drop write what
+    /// this process learned back, best-effort).
     pub fn with_config(pool: SharedPool, mut params: SchedulerParams, cfg: ServerConfig) -> Self {
         params.n_cores = pool.n_threads();
         params.elem_bytes = T::BYTES;
+        params.n_nodes = pool.n_nodes();
+        let n_shards = if cfg.shards == 0 {
+            pool.n_shards()
+        } else {
+            cfg.shards.min(pool.n_shards()).max(1)
+        };
+        let queues: Vec<Arc<BoundedQueue<Job<T>>>> =
+            (0..n_shards).map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity))).collect();
         let shared = Arc::new(Shared {
             pool,
             params,
@@ -269,27 +362,77 @@ impl<T: Scalar> Server<T> {
             denses: RwLock::new(HashMap::new()),
             registry_gen: AtomicU64::new(0),
             inflight: Mutex::new(HashMap::new()),
+            executing: Mutex::new(HashMap::new()),
             metrics: Mutex::new(Metrics::default()),
             aborting: AtomicBool::new(false),
+            queues,
         });
-        let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
-        let dispatcher = {
-            let shared = Arc::clone(&shared);
-            let queue = Arc::clone(&queue);
-            std::thread::Builder::new()
-                .name("tf-dispatcher".into())
-                .spawn(move || {
-                    Dispatcher {
-                        shared,
-                        queue,
-                        seq: std::cell::Cell::new(0),
-                        execs: Vec::new(),
-                    }
-                    .run()
-                })
-                .expect("spawn dispatcher")
-        };
-        Self { shared, queue, dispatcher: Some(dispatcher) }
+        {
+            let mut m = shared.metrics.lock().unwrap();
+            m.shard_dispatched = vec![0; n_shards];
+            m.shard_stolen = vec![0; n_shards];
+            m.shard_queue_depth = vec![0; n_shards];
+        }
+        let dispatchers = (0..n_shards)
+            .map(|shard| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("tf-dispatch-{shard}"))
+                    .spawn(move || {
+                        Dispatcher {
+                            shared,
+                            shard,
+                            seq: std::cell::Cell::new(0),
+                            execs: Vec::new(),
+                        }
+                        .run()
+                    })
+                    .expect("spawn dispatcher")
+            })
+            .collect();
+        let srv = Self { shared, dispatchers };
+        if let Ok(p) = std::env::var("TF_TUNE_CACHE") {
+            if !p.is_empty() {
+                let _ = srv.load_tuned(Path::new(&p));
+            }
+        }
+        srv
+    }
+
+    /// Dispatcher shard count (1 on a single-node pool).
+    pub fn n_shards(&self) -> usize {
+        self.shared.queues.len()
+    }
+
+    /// Seed tuned strip picks from a persisted sidecar
+    /// ([`TuneTable`]); entries timed on a different worker count are
+    /// skipped. Returns how many picks were loaded. Called
+    /// automatically at construction when `TF_TUNE_CACHE` is set.
+    pub fn load_tuned(&self, path: &Path) -> std::io::Result<usize> {
+        let table = TuneTable::load(path)?;
+        let (threads, nodes) = (self.shared.pool.n_threads(), self.shared.pool.n_nodes());
+        let n = self.shared.cache.lock().unwrap().seed_from_table(&table, threads, nodes);
+        self.shared.metrics.lock().unwrap().tuned_loaded += n as u64;
+        Ok(n)
+    }
+
+    /// Persist every tuned pick this server knows (the write-on-shutdown
+    /// companion of [`Server::load_tuned`]; best-effort, temp + rename).
+    /// Merges with the sidecar's existing entries so picks recorded by
+    /// differently shaped pools survive. Returns how many entries the
+    /// written file holds.
+    pub fn save_tuned(&self, path: &Path) -> std::io::Result<usize> {
+        let (threads, nodes) = (self.shared.pool.n_threads(), self.shared.pool.n_nodes());
+        let table = self.shared.cache.lock().unwrap().to_tune_table(threads, nodes);
+        table.save_merged(path)
+    }
+
+    fn persist_tuned_best_effort(&self) {
+        if let Ok(p) = std::env::var("TF_TUNE_CACHE") {
+            if !p.is_empty() {
+                let _ = self.save_tuned(Path::new(&p));
+            }
+        }
     }
 
     /// Register (or replace) a named sparse operand. Replacement bumps
@@ -372,6 +515,32 @@ impl<T: Scalar> Server<T> {
         self.submit_chain(tenant, pri, req)?.wait()
     }
 
+    /// Home shard of a request: a deterministic hash of its **coalesce
+    /// key** (the exact `pair_key`/`chain_req_key` value), so same-key
+    /// requests always land in one queue by construction — coalescing
+    /// is shard-local and loses nothing, and a future key change
+    /// re-routes consistently without touching this function.
+    fn home_shard(&self, ctor: &JobCtor<T>) -> usize {
+        let n = self.shared.queues.len();
+        if n == 1 {
+            return 0;
+        }
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let mut h = DefaultHasher::new();
+        match ctor {
+            JobCtor::Pair(r) => {
+                0u8.hash(&mut h);
+                pair_key(r).hash(&mut h);
+            }
+            JobCtor::Chain(r) => {
+                1u8.hash(&mut h);
+                chain_req_key(r).hash(&mut h);
+            }
+        }
+        (h.finish() % n as u64) as usize
+    }
+
     fn submit_job(
         &self,
         tenant: u64,
@@ -380,16 +549,18 @@ impl<T: Scalar> Server<T> {
         blocking: bool,
     ) -> Result<Ticket<ServeReply<T>>, ServiceError> {
         self.shared.admit(tenant)?;
+        let home = self.home_shard(&ctor);
         let (tkt, tx) = ticket();
         let kind = match ctor {
             JobCtor::Pair(req) => JobKind::Pair(req, tx),
             JobCtor::Chain(req) => JobKind::Chain(req, tx),
         };
         let job = Job { tenant, enqueued: Instant::now(), kind };
+        let queue = &self.shared.queues[home];
         let pushed = if blocking {
-            self.queue.push(pri, job).map_err(|_| ServiceError::Cancelled)
+            queue.push(pri, job).map_err(|_| ServiceError::Cancelled)
         } else {
-            self.queue.try_push(pri, job).map_err(|e| match e {
+            queue.try_push(pri, job).map_err(|e| match e {
                 PushError::Full(_) => ServiceError::BusyQueue,
                 PushError::Closed(_) => ServiceError::Cancelled,
             })
@@ -423,9 +594,9 @@ impl<T: Scalar> Server<T> {
         (cache.len(), cache.hits, cache.misses)
     }
 
-    /// Jobs currently queued.
+    /// Jobs currently queued (summed across shard queues).
     pub fn queue_depth(&self) -> usize {
-        self.queue.len()
+        self.shared.queues.iter().map(|q| q.len()).sum()
     }
 
     /// Clone of the shared pool handle (build a synchronous
@@ -434,13 +605,19 @@ impl<T: Scalar> Server<T> {
         self.shared.pool.clone()
     }
 
-    /// Graceful shutdown: stop intake, let the dispatcher drain every
-    /// queued job, join it, and return the final metrics.
+    /// Graceful shutdown: stop intake, let every dispatcher shard drain
+    /// every queued job (idle shards keep stealing from siblings until
+    /// all queues are empty — with the tenant-cap steal guard still
+    /// applied), join them, persist tuned picks when `TF_TUNE_CACHE` is
+    /// set, and return the final metrics.
     pub fn shutdown(mut self) -> Metrics {
-        self.queue.close();
-        if let Some(h) = self.dispatcher.take() {
+        for q in &self.shared.queues {
+            q.close();
+        }
+        for h in self.dispatchers.drain(..) {
             let _ = h.join();
         }
+        self.persist_tuned_best_effort();
         self.shared.metrics.lock().unwrap().clone()
     }
 }
@@ -448,12 +625,20 @@ impl<T: Scalar> Server<T> {
 impl<T: Scalar> Drop for Server<T> {
     /// Abort: queued jobs resolve [`ServiceError::Cancelled`], an
     /// in-flight chain stops at its next step boundary. (Use
-    /// [`Server::shutdown`] for a graceful drain.)
+    /// [`Server::shutdown`] for a graceful drain.) Tuned picks still
+    /// persist best-effort — they are timings, valid regardless of how
+    /// the process ends.
     fn drop(&mut self) {
         self.shared.aborting.store(true, Ordering::SeqCst);
-        self.queue.close();
-        if let Some(h) = self.dispatcher.take() {
+        for q in &self.shared.queues {
+            q.close();
+        }
+        let had_dispatchers = !self.dispatchers.is_empty();
+        for h in self.dispatchers.drain(..) {
             let _ = h.join();
+        }
+        if had_dispatchers {
+            self.persist_tuned_best_effort();
         }
     }
 }
@@ -519,10 +704,13 @@ struct ChainKey {
 
 struct Dispatcher<T: Scalar> {
     shared: Arc<Shared<T>>,
-    queue: Arc<BoundedQueue<Job<T>>>,
+    /// This dispatcher's shard index: its home queue
+    /// (`shared.queues[shard]`) and its node's pool shard.
+    shard: usize,
     /// Dispatch sequence — `Cell` because preempted pairs are served
     /// through `&self` mid-chain and must share the same monotone
-    /// counter (the dispatcher is single-threaded).
+    /// counter (each dispatcher shard is single-threaded; `order` is
+    /// monotone per shard).
     seq: std::cell::Cell<u64>,
     execs: Vec<CachedExec<T>>,
 }
@@ -533,27 +721,150 @@ impl<T: Scalar> Dispatcher<T> {
         self.seq.set(s);
         s
     }
+
     fn run(mut self) {
         // No pool lease here: validation, coalescing, operand
         // resolution, and schedule building need no workers, so a sync
         // `Coordinator` sharing the pool is never stalled behind the
         // dispatcher's planning — only behind actual executions.
-        while let Some((pri, job)) = self.queue.pop() {
-            self.shared.metrics.lock().unwrap().queue_depth_last = self.queue.len() as u64;
-            if self.shared.aborting.load(Ordering::SeqCst) {
-                self.cancel(job);
+        let own = Arc::clone(&self.shared.queues[self.shard]);
+        if self.shared.queues.len() == 1 {
+            // Single shard: the pre-sharding loop — block on the one
+            // queue, nothing to steal, exit once closed and drained.
+            while let Some((pri, job)) = own.pop() {
+                self.dispatch(pri, job, self.shard, false);
+            }
+            return;
+        }
+        loop {
+            // Own work first (keys homed here coalesce best)...
+            if let Some((pri, job)) = own.try_pop() {
+                self.dispatch(pri, job, self.shard, false);
                 continue;
             }
+            // ...then steal a whole request from a sibling shard...
+            if self.shared.cfg.steal {
+                if let Some((pri, job, src)) = self.try_steal() {
+                    self.dispatch(pri, job, src, true);
+                    continue;
+                }
+            }
+            // ...then wait briefly on the home queue (bounded, so an
+            // idle shard keeps polling siblings).
+            match own.pop_timeout(STEAL_POLL) {
+                PopWait::Job(pri, job) => self.dispatch(pri, job, self.shard, false),
+                PopWait::Empty => {}
+                PopWait::Closed => {
+                    // Home queue closed and drained. Without stealing
+                    // this shard is done; with it, keep helping until
+                    // every queue is closed and drained so shutdown's
+                    // drain guarantee holds server-wide.
+                    if !self.shared.cfg.steal {
+                        break;
+                    }
+                    if let Some((pri, job, src)) = self.try_steal() {
+                        self.dispatch(pri, job, src, true);
+                        continue;
+                    }
+                    if self.shared.queues.iter().all(|q| q.is_closed() && q.is_empty()) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    /// Steal one whole queued request from a sibling shard's queue
+    /// (latency tier first, round-robin over victims) — never half a
+    /// batch, never mid-barrier. The drain predicate **reserves** the
+    /// tenant's executing slot atomically ([`Shared::try_reserve_exec`];
+    /// with `max = 1` the first job it accepts is exactly the job
+    /// drained), so the stolen request arrives holding its reservation
+    /// and [`Dispatcher::dispatch`] releases it after execution.
+    fn try_steal(&self) -> Option<(Priority, Job<T>, usize)> {
+        let queues = &self.shared.queues;
+        let n = queues.len();
+        for k in 1..n {
+            let victim = (self.shard + k) % n;
+            for pri in [Priority::Latency, Priority::Bulk] {
+                let shared = &self.shared;
+                let mut got =
+                    queues[victim].drain_matching(pri, 1, |j| shared.try_reserve_exec(j.tenant));
+                if let Some(job) = got.pop() {
+                    return Some((pri, job, victim));
+                }
+            }
+        }
+        None
+    }
+
+    /// Handle one popped/stolen job: account it to this shard, then
+    /// execute. Home jobs coalesce same-key work from the home queue;
+    /// a **stolen** job runs alone — coalescing riders onto it would
+    /// bypass the per-tenant reservation its steal just made.
+    fn dispatch(&mut self, pri: Priority, job: Job<T>, src: usize, stolen: bool) {
+        {
+            let mut m = self.shared.metrics.lock().unwrap();
+            if let Some(d) = m.shard_dispatched.get_mut(self.shard) {
+                *d += 1;
+            }
+            if stolen {
+                if let Some(s) = m.shard_stolen.get_mut(self.shard) {
+                    *s += 1;
+                }
+            }
+            let depth = self.shared.queues[self.shard].len() as u64;
+            if let Some(qd) = m.shard_queue_depth.get_mut(self.shard) {
+                *qd = depth;
+            }
+            m.queue_depth_last = self.shared.queues[src].len() as u64;
+        }
+        // A stolen job carries a steal-time executing reservation; the
+        // batch's own begin/end pair accounts the execution itself, so
+        // the reservation is released here afterwards. While it is
+        // held the tenant's count over-reports by one — conservative:
+        // sibling steals back off, the cap is never exceeded.
+        let reservation = if stolen { Some(job.tenant) } else { None };
+        if self.shared.aborting.load(Ordering::SeqCst) {
+            self.cancel(job);
+        } else {
             match job.kind {
                 JobKind::Pair(..) => {
-                    let batch = self.coalesce_pairs(pri, job);
+                    let batch = if stolen { vec![job] } else { self.coalesce_pairs(pri, job) };
                     self.run_pair_batch(batch);
                 }
                 JobKind::Chain(..) => {
-                    let batch = self.coalesce_chains(pri, job);
+                    let batch = if stolen { vec![job] } else { self.coalesce_chains(pri, job) };
                     self.run_chain_batch(pri, batch);
                 }
             }
+        }
+        if let Some(t) = reservation {
+            self.shared.end_exec(t);
+        }
+    }
+
+    /// Take the lease this batch's placement calls for: node-local on
+    /// this shard's [`PoolShard`](crate::exec::PoolShard) by default,
+    /// the whole pool when the flowing working set spreads (counted in
+    /// `Metrics::remote_placements`). On a single-node pool both arms
+    /// are the same lease. When the server runs **fewer dispatcher
+    /// shards than the pool has nodes** (an explicit
+    /// `ServerConfig::shards` override), node-local leases would
+    /// strand the trailing nodes' workers forever — those
+    /// configurations always execute whole-pool.
+    fn lease_for_flow<'p>(&self, pool: &'p SharedPool, flow_bytes: usize) -> PoolLease<'p> {
+        if self.shared.queues.len() < pool.n_shards() {
+            return pool.lease();
+        }
+        let spread = decide_placement(flow_bytes, pool.n_nodes(), self.shared.cfg.spread_min_bytes)
+            == Placement::Spread;
+        if spread {
+            self.shared.metrics.lock().unwrap().remote_placements += 1;
+            pool.lease()
+        } else {
+            pool.lease_shard(self.shard)
         }
     }
 
@@ -568,7 +879,9 @@ impl<T: Scalar> Dispatcher<T> {
     }
 
     /// Pull every queued same-tier pair request sharing `head`'s
-    /// coalesce key (registered operands, strategy, dense width).
+    /// coalesce key (registered operands, strategy, dense width) from
+    /// this shard's home queue — where every same-key request lives
+    /// (stolen heads never coalesce; see [`Dispatcher::dispatch`]).
     fn coalesce_pairs(&self, pri: Priority, head: Job<T>) -> Vec<Job<T>> {
         let mut batch = vec![head];
         let cfg = &self.shared.cfg;
@@ -579,10 +892,14 @@ impl<T: Scalar> Dispatcher<T> {
             JobKind::Pair(r, _) => pair_key(r),
             _ => unreachable!("coalesce_pairs on a non-pair head"),
         };
-        let more = self.queue.drain_matching(pri, cfg.max_coalesce - 1, |j| match &j.kind {
-            JobKind::Pair(r, _) => pair_key(r) == key,
-            _ => false,
-        });
+        let more = self.shared.queues[self.shard].drain_matching(
+            pri,
+            cfg.max_coalesce - 1,
+            |j| match &j.kind {
+                JobKind::Pair(r, _) => pair_key(r) == key,
+                _ => false,
+            },
+        );
         batch.extend(more);
         batch
     }
@@ -597,10 +914,14 @@ impl<T: Scalar> Dispatcher<T> {
             JobKind::Chain(r, _) => chain_req_key(r),
             _ => unreachable!("coalesce_chains on a non-chain head"),
         };
-        let more = self.queue.drain_matching(pri, cfg.max_coalesce - 1, |j| match &j.kind {
-            JobKind::Chain(r, _) => chain_req_key(r) == key,
-            _ => false,
-        });
+        let more = self.shared.queues[self.shard].drain_matching(
+            pri,
+            cfg.max_coalesce - 1,
+            |j| match &j.kind {
+                JobKind::Chain(r, _) => chain_req_key(r) == key,
+                _ => false,
+            },
+        );
         batch.extend(more);
         batch
     }
@@ -689,10 +1010,16 @@ impl<T: Scalar> Dispatcher<T> {
             return;
         }
         let n_reqs = reqs.len();
+        for &t in &tenants {
+            self.shared.begin_exec(t);
+        }
 
         let outcome = self.prepare_pairs(&reqs).map(|prep| {
             let shared = Arc::clone(&self.shared);
-            let pool = shared.pool.lease();
+            // Output + D1 rows ride the run; that working set decides
+            // node-local vs whole-pool placement.
+            let flow_bytes = (prep.a.rows() + prep.a.cols()) * prep.ccol * T::BYTES;
+            let pool = self.lease_for_flow(&shared.pool, flow_bytes);
             self.run_prepared(&pool, &prep, &reqs)
         });
         let service = t0.elapsed();
@@ -729,6 +1056,7 @@ impl<T: Scalar> Dispatcher<T> {
             }
         }
         for t in tenants {
+            self.shared.end_exec(t);
             self.shared.release(t);
         }
     }
@@ -799,6 +1127,7 @@ impl<T: Scalar> Dispatcher<T> {
         let ccol = prep.ccol;
         let (schedule, strip) = match &prep.plan {
             Some((p, cell)) => {
+                let mut newly_tuned = None;
                 let strip = match cell.get() {
                     Some(tuned) => tuned,
                     None => {
@@ -820,11 +1149,20 @@ impl<T: Scalar> Dispatcher<T> {
                                     })
                                 };
                                 *slot = Some(picked);
+                                newly_tuned = Some(picked);
                                 picked
                             }
                         }
                     }
                 };
+                if let Some(picked) = newly_tuned {
+                    // Mirror the fresh pick into the cache's seed map
+                    // (after the per-key slot is released — lock order
+                    // is cache → slot everywhere), so it survives entry
+                    // eviction into `tuned_snapshot` / `save_tuned`.
+                    let fusion_op = op.fusion_op(&head.cs[0]);
+                    self.shared.cache.lock().unwrap().set_tuned_strip(&fusion_op, picked);
+                }
                 (Some(&**p), strip)
             }
             None => (None, StripMode::Auto),
@@ -870,6 +1208,9 @@ impl<T: Scalar> Dispatcher<T> {
             return;
         }
         let n_reqs = reqs.len();
+        for &t in &tenants {
+            self.shared.begin_exec(t);
+        }
 
         let outcome = self.execute_chains(pri, &reqs);
         let service = t0.elapsed();
@@ -908,6 +1249,7 @@ impl<T: Scalar> Dispatcher<T> {
             }
         }
         for t in tenants {
+            self.shared.end_exec(t);
             self.shared.release(t);
         }
     }
@@ -943,7 +1285,10 @@ impl<T: Scalar> Dispatcher<T> {
         let chain_steps = exec.n_steps();
         let mut outputs: Vec<Vec<Dense<T>>> = Vec::with_capacity(reqs.len());
         let shared = Arc::clone(&self.shared);
-        let pool = shared.pool.lease();
+        // Flowing input + output working set decides node-local vs
+        // whole-pool placement for the chain's runs.
+        let flow_bytes = (in_rows * in_cols + out_rows * out_cols) * T::BYTES;
+        let pool = self.lease_for_flow(&shared.pool, flow_bytes);
         let mut cancelled = false;
         'all: for r in reqs {
             let inputs: Vec<ChainIn<'_, T>> = if in_sparse {
@@ -1001,8 +1346,7 @@ impl<T: Scalar> Dispatcher<T> {
     /// drains.
     fn preempt_latency_pairs(&self, pool: &ThreadPool) {
         for _ in 0..self.shared.cfg.max_coalesce.max(1) {
-            let mut jobs = self
-                .queue
+            let mut jobs = self.shared.queues[self.shard]
                 .drain_latency_matching(1, |j| matches!(&j.kind, JobKind::Pair(..)));
             let Some(job) = jobs.pop() else { break };
             self.shared.metrics.lock().unwrap().preempted_pairs += 1;
@@ -1025,6 +1369,7 @@ impl<T: Scalar> Dispatcher<T> {
             self.reject_one(tenant, tx, e);
             return;
         }
+        self.shared.begin_exec(tenant);
         // The chain's lease is already held on this thread — reuse it,
         // never re-lease (the pool mutex is not reentrant).
         let outcome = self
@@ -1046,6 +1391,7 @@ impl<T: Scalar> Dispatcher<T> {
             }
             Err(err) => tx.resolve(Err(err)),
         }
+        self.shared.end_exec(tenant);
         self.shared.release(tenant);
     }
 
@@ -1507,6 +1853,156 @@ mod tests {
                 Err(e) => panic!("unexpected {e}"),
             }
         }
+    }
+
+    #[test]
+    fn sharded_server_serves_independent_keys() {
+        use crate::topology::Topology;
+        let pool = SharedPool::with_topology(4, Topology::simulated(2, 2));
+        let srv: Server<f64> = Server::with_config(
+            pool,
+            SchedulerParams { ct_size: 64, ..Default::default() },
+            ServerConfig::default(),
+        );
+        assert_eq!(srv.n_shards(), 2);
+        let a0 = Csr::<f64>::with_random_values(gen::poisson2d(12, 12), 1, -1.0, 1.0);
+        let a1 = Csr::<f64>::with_random_values(gen::banded(144, &[1, 2]), 2, -1.0, 1.0);
+        srv.register_matrix("A0", a0.clone());
+        srv.register_matrix("A1", a1.clone());
+        let b = Dense::<f64>::randn(144, 8, 3);
+        srv.register_dense("B", b.clone());
+        // Interleaved requests across both keys from several tenants;
+        // keys hash to home shards, results must match solo reference
+        // regardless of which shard (home or stealing) served them.
+        let mut tickets = Vec::new();
+        for i in 0..12u64 {
+            let (aname, aref) = if i % 2 == 0 { ("A0", &a0) } else { ("A1", &a1) };
+            let c = Dense::<f64>::randn(8, 4, 100 + i);
+            let expect = reference(&PairOp::gemm_spmm(aref, &b), &c);
+            let t = srv
+                .submit_pair(
+                    i % 3,
+                    Priority::Bulk,
+                    PairRequest {
+                        a: aname.into(),
+                        b: BRef::Dense("B".into()),
+                        cs: vec![c],
+                        strategy: Strategy::TileFusion,
+                    },
+                )
+                .unwrap();
+            tickets.push((t, expect));
+        }
+        for (i, (t, expect)) in tickets.into_iter().enumerate() {
+            let reply = t.wait().unwrap();
+            assert!(reply.ds[0].max_abs_diff(&expect) < 1e-10, "request {i}");
+        }
+        let m = srv.shutdown();
+        assert_eq!(m.requests, 12);
+        assert_eq!(m.shard_dispatched.len(), 2);
+        assert_eq!(
+            m.shard_dispatched.iter().sum::<u64>(),
+            m.batches,
+            "every batch is accounted to exactly one shard"
+        );
+    }
+
+    #[test]
+    fn sharded_shutdown_drains_across_shards_with_steal() {
+        use crate::topology::Topology;
+        let pool = SharedPool::with_topology(4, Topology::simulated(2, 2));
+        let cfg = ServerConfig { tenant_inflight_cap: 1, queue_capacity: 64, ..Default::default() };
+        let srv: Server<f64> = Server::with_config(
+            pool,
+            SchedulerParams { ct_size: 64, ..Default::default() },
+            cfg,
+        );
+        let a = register_demo(&srv);
+        let w = Dense::<f64>::randn(8, 8, 1);
+        srv.register_dense("w", w.clone());
+        // All chains share one key, so they all home on one shard; the
+        // other shard's drain loop can only help by stealing whole
+        // requests — with the per-tenant executing re-check applied
+        // (tenant cap 1: a stolen bulk chain never runs concurrently
+        // with the same tenant's other work).
+        let mk = |seed: u64| ChainRequest {
+            steps: vec![ChainStepReq {
+                a: "A".into(),
+                operand: StepOperand::Weights("w".into()),
+                strategy: None,
+            }],
+            xs: vec![Dense::<f64>::randn(256, 8, seed)],
+            xs_sparse: Vec::new(),
+            strategy: Strategy::TileFusion,
+        };
+        let tickets: Vec<_> = (0..10u64)
+            .map(|i| srv.submit_chain(i, Priority::Bulk, mk(50 + i)).unwrap())
+            .collect();
+        let m = srv.shutdown();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let reply = t.wait().unwrap();
+            let x = Dense::<f64>::randn(256, 8, 50 + i as u64);
+            let expect = reference(&PairOp::gemm_spmm(&a, &x), &w);
+            assert!(reply.ds[0].max_abs_diff(&expect) < 1e-10, "chain {i}");
+        }
+        assert_eq!(m.requests, 10, "graceful shutdown drains every queued chain");
+    }
+
+    #[test]
+    fn tuned_picks_persist_across_server_restart() {
+        use crate::kernels::JB;
+        // Small cache budget so GNN-scale ccol forces a strip schedule
+        // with real candidates to time (mirrors the coordinator test).
+        let params = SchedulerParams {
+            n_cores: 2,
+            cache_bytes: 64 * 1024,
+            elem_bytes: 8,
+            ct_size: 64,
+            max_split_depth: 24,
+            n_nodes: 1,
+        };
+        let path = std::env::temp_dir()
+            .join(format!("tf_srv_tune_{}.tftune", std::process::id()));
+        let _ = std::fs::remove_file(&path); // stale sidecars would skew counts
+        let a = Csr::<f64>::with_random_values(gen::poisson2d(16, 16), 1, -1.0, 1.0);
+        let ccol = 4 * JB;
+        let b = Dense::<f64>::randn(a.cols(), 32, 2);
+        let c = Dense::<f64>::randn(32, ccol, 3);
+        let req = || PairRequest {
+            a: "A".into(),
+            b: BRef::Dense("B".into()),
+            cs: vec![c.clone()],
+            strategy: Strategy::TileFusion,
+        };
+
+        let srv: Server<f64> =
+            Server::with_config(SharedPool::new(2), params, ServerConfig::default());
+        srv.register_matrix("A", a.clone());
+        srv.register_dense("B", b.clone());
+        srv.pair_blocking(1, Priority::Bulk, req()).unwrap();
+        assert_eq!(srv.metrics().strip_tunes, 1, "first sight of the key tunes");
+        let saved = srv.save_tuned(&path).unwrap();
+        assert!(saved >= 1, "the tuned pick must persist");
+        srv.shutdown();
+
+        // A restarted server with the same pool size loads the sidecar
+        // and replays the pick with zero timing runs.
+        let srv2: Server<f64> =
+            Server::with_config(SharedPool::new(2), params, ServerConfig::default());
+        srv2.register_matrix("A", a);
+        srv2.register_dense("B", b);
+        assert_eq!(srv2.load_tuned(&path).unwrap(), saved);
+        assert!(srv2.metrics().tuned_loaded >= 1);
+        srv2.pair_blocking(1, Priority::Bulk, req()).unwrap();
+        assert_eq!(srv2.metrics().strip_tunes, 0, "seeded pick replays, no retune");
+        srv2.shutdown();
+
+        // A pool with a different worker count must not trust the pick.
+        let srv3: Server<f64> =
+            Server::with_config(SharedPool::new(3), params, ServerConfig::default());
+        assert_eq!(srv3.load_tuned(&path).unwrap(), 0, "thread count keys the table");
+        drop(srv3);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

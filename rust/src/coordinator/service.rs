@@ -23,7 +23,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Which executor answers a request.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Strategy {
     TileFusion,
     Unfused,
@@ -182,6 +182,21 @@ pub struct Metrics {
     /// Queue depth sampled when the dispatcher picked up the most
     /// recent job.
     pub queue_depth_last: u64,
+    /// Per-shard jobs dispatched (index = dispatcher shard; sized at
+    /// server construction, empty on the synchronous path).
+    pub shard_dispatched: Vec<u64>,
+    /// Per-shard whole requests stolen from a sibling shard's queue
+    /// (indexed by the **stealing** shard).
+    pub shard_stolen: Vec<u64>,
+    /// Per-shard home-queue depth sampled at that shard's most recent
+    /// dispatch.
+    pub shard_queue_depth: Vec<u64>,
+    /// Batches whose flowing working set exceeded the node-local spread
+    /// threshold and executed on the whole pool (`Lease::All`) instead
+    /// of the dispatching shard's node.
+    pub remote_placements: u64,
+    /// Tuned strip picks seeded from a persisted sidecar at startup.
+    pub tuned_loaded: u64,
     /// Total time requests spent queued before dispatch.
     pub total_wait: Duration,
     /// Total dispatcher execution time across batches (resolve + plan +
@@ -209,6 +224,7 @@ impl<T: Scalar> Coordinator<T> {
     pub fn with_pool(pool: SharedPool, mut params: SchedulerParams) -> Self {
         params.n_cores = pool.n_threads();
         params.elem_bytes = T::BYTES;
+        params.n_nodes = pool.n_nodes();
         Self {
             pool,
             cache: ScheduleCache::new(params),
@@ -491,6 +507,24 @@ impl<T: Scalar> Coordinator<T> {
     /// Cache state (entries, hits, misses) for observability.
     pub fn cache_stats(&self) -> (usize, u64, u64) {
         (self.cache.len(), self.cache.hits, self.cache.misses)
+    }
+
+    /// Seed tuned strip picks from a persisted sidecar
+    /// ([`crate::tuning::TuneTable`]); entries timed on a different
+    /// worker count are skipped. Returns how many picks were loaded.
+    pub fn load_tuned(&mut self, path: &std::path::Path) -> std::io::Result<usize> {
+        let table = crate::tuning::TuneTable::load(path)?;
+        Ok(self.cache.seed_from_table(&table, self.pool.n_threads(), self.pool.n_nodes()))
+    }
+
+    /// Persist every tuned pick this coordinator knows (best-effort
+    /// write-on-shutdown companion of [`Coordinator::load_tuned`]),
+    /// merging with the sidecar's existing entries so picks recorded by
+    /// differently shaped pools survive. Returns how many entries the
+    /// written file holds.
+    pub fn save_tuned(&self, path: &std::path::Path) -> std::io::Result<usize> {
+        let table = self.cache.to_tune_table(self.pool.n_threads(), self.pool.n_nodes());
+        table.save_merged(path)
     }
 }
 
@@ -855,6 +889,7 @@ mod tests {
             elem_bytes: 8,
             ct_size: 64,
             max_split_depth: 24,
+            n_nodes: 1,
         };
         let mut coord = Coordinator::<f64>::new(2, params);
         let a = Csr::<f64>::with_random_values(gen::poisson2d(16, 16), 1, -1.0, 1.0);

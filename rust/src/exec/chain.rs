@@ -251,6 +251,9 @@ struct ChainStepExec<T> {
     /// pick, so strip widths thread through the ping-pong intermediates
     /// per step without rebinding. Pair steps only.
     strip: StripMode,
+    /// Numeric drop tolerance of a sparse-output SpGEMM step (0.0 =
+    /// keep everything); see [`ChainExec::set_drop_tol`].
+    drop_tol: f64,
     /// Per-step `D1` workspace, allocated once at bind time (pair steps).
     d1: Dense<T>,
     out_rows: usize,
@@ -413,6 +416,7 @@ impl<T: Scalar> ChainExec<T> {
                 output: sp.output,
                 strategy: StepStrategy::Fused,
                 strip: StripMode::Auto,
+                drop_tol: 0.0,
                 d1: if matches!(sp.kind, PlannedStep::Pair(_)) {
                     Dense::zeros(sp.d1_rows, sp.out_cols)
                 } else {
@@ -543,6 +547,18 @@ impl<T: Scalar> ChainExec<T> {
     /// ignore it.
     pub fn set_strip(&mut self, step: usize, strip: StripMode) {
         self.steps[step].strip = strip;
+    }
+
+    /// Numeric drop tolerance of one sparse-output SpGEMM step (default
+    /// `0.0` — keep every structural entry): merged entries with
+    /// `|v| <= tol` are compacted out of the step's CSR intermediate,
+    /// serial-bitwise at any thread count
+    /// ([`run_spgemm`](crate::exec::spgemm::run_spgemm)). Only
+    /// [`ChainStepOp::SpgemmFlow`] steps materializing sparse output
+    /// consult it — a densified SpGEMM step keeps small values (there
+    /// is no storage to save).
+    pub fn set_drop_tol(&mut self, step: usize, tol: f64) {
+        self.steps[step].drop_tol = tol;
     }
 
     /// Copy fresh weights into a [`ChainStepOp::GemmFlowB`] step (same
@@ -789,6 +805,7 @@ fn run_step<T: Scalar>(
 ) {
     let strategy = step.strategy;
     let strip = step.strip;
+    let drop_tol = step.drop_tol;
     let schedule = step.schedule.as_deref();
     let d1 = &mut step.d1;
     match (&step.op, input, dst) {
@@ -802,7 +819,7 @@ fn run_step<T: Scalar>(
             run_pair(&PairOp::spmm_spmm(a, b), x, schedule, strategy, strip, d1, pool, ws, out)
         }
         (ChainStepOp::SpgemmFlow { a, .. }, ChainIn::Sparse(v), ChainOut::Sparse(out)) => {
-            run_spgemm(pool, a, v, sws, out)
+            run_spgemm(pool, a, v, sws, out, drop_tol)
         }
         (ChainStepOp::SpgemmFlow { a, .. }, ChainIn::Sparse(v), ChainOut::Dense(out)) => {
             run_spgemm_dense(pool, a, v, out)
@@ -831,6 +848,7 @@ mod tests {
             elem_bytes: 8,
             ct_size: 32,
             max_split_depth: 24,
+            n_nodes: 1,
         }
     }
 
@@ -1170,6 +1188,45 @@ mod tests {
         let err =
             ChainExec::plan_and_build_sparse(ops, 12, 12, a.nnz(), params_small()).unwrap_err();
         assert!(err.to_string().contains("dense flowing value"), "{err}");
+    }
+
+    #[test]
+    fn spgemm_step_drop_tol_matches_serial_kernel() {
+        // A sparse-output SpGEMM step with a drop tolerance compacts
+        // exactly what the serial kernel compacts — bitwise, at any
+        // thread count — and tol 0 keeps the full structural output.
+        let a = Arc::new(Csr::<f64>::with_random_values(
+            crate::sparse::gen::uniform_random(24, 24, 4, 9),
+            3,
+            -1.0,
+            1.0,
+        ));
+        let x = Csr::<f64>::with_random_values(
+            crate::sparse::gen::uniform_random(24, 20, 3, 11),
+            5,
+            -1.0,
+            1.0,
+        );
+        let ops = vec![ChainStepOp::SpgemmFlow {
+            a: Arc::clone(&a),
+            output: StepOutputMode::SparseCsr,
+        }];
+        let mut chain = ChainExec::plan_and_build_sparse(
+            ops,
+            x.rows(),
+            x.cols(),
+            x.nnz(),
+            params_small(),
+        )
+        .expect("bind spgemm chain");
+        let pool = ThreadPool::new(3);
+        for tol in [0.0, 0.05] {
+            chain.set_drop_tol(0, tol);
+            let mut out = Csr::<f64>::empty(0, 0);
+            chain.run_io(&pool, ChainIn::Sparse(&x), ChainOut::Sparse(&mut out));
+            let expect = crate::kernels::spgemm(&a, &x, tol);
+            assert_eq!(out, expect, "tol {tol}");
+        }
     }
 
     #[test]

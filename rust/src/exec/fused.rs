@@ -144,7 +144,7 @@ pub fn run_fused_striped<T: Scalar>(
             let max_rows = wf0.iter().map(|t| t.i_len()).max().unwrap_or(0);
             let panel_rows = if op.first.packs_panel(op.layout) { c.rows } else { 0 };
             let (panel_all, scratch) =
-                ws.prepare(pool.n_threads(), max_rows * w, panel_rows * ccol);
+                ws.prepare(pool, max_rows * w, panel_rows * ccol);
             let mut j0 = 0;
             while j0 < ccol && panel_rows > 0 {
                 let wl = w.min(ccol - j0);
@@ -230,7 +230,14 @@ mod tests {
     use crate::sparse::{gen, Csr};
 
     fn small_params() -> SchedulerParams {
-        SchedulerParams { n_cores: 3, cache_bytes: 64 * 1024, elem_bytes: 8, ct_size: 32, max_split_depth: 24 }
+        SchedulerParams {
+            n_cores: 3,
+            cache_bytes: 64 * 1024,
+            elem_bytes: 8,
+            ct_size: 32,
+            max_split_depth: 24,
+            n_nodes: 1,
+        }
     }
 
     #[test]

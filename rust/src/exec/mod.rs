@@ -36,7 +36,7 @@ pub use atomic_tiling::AtomicTiling;
 pub use chain::{chain_specs, ChainExec, ChainIn, ChainOut, ChainStepOp, StepControl, StepStrategy};
 pub use fused::Fused;
 pub use overlapped::Overlapped;
-pub use pool::{PoolLease, SharedPool, ThreadPool, WorkerScratch};
+pub use pool::{Lease, PoolLease, PoolShard, SharedPool, ThreadPool, WorkerScratch};
 pub use spgemm::{run_spgemm, run_spgemm_dense, SpgemmWs};
 pub use strip::{StripMode, StripWs};
 pub use tensor_style::TensorStyle;

@@ -8,7 +8,19 @@
 //! scheduler", Listing 1 line 2). `parallel_for` returns only when every
 //! item finished, so two consecutive calls give exactly the one
 //! synchronization barrier the schedule requires between wavefronts.
+//!
+//! **Topology awareness.** [`ThreadPool::with_topology`] assigns every
+//! worker a home node from a [`Topology`] and (best-effort, behind the
+//! `numa-pin` feature) pins the worker thread to that node's CPUs.
+//! [`WorkerScratch::ensure_local`] grows each worker's slot *on that
+//! worker* inside a [`ThreadPool::broadcast`] region, so first-touch
+//! places the pages on the worker's node — the strip workspaces, `D1`
+//! slices, and SpGEMM merge scratch all ride this. [`SharedPool`] adds
+//! per-node [`PoolShard`]s so node-local executions ([`Lease::Node`])
+//! run concurrently across nodes while whole-pool runs ([`Lease::All`])
+//! keep the existing one-barrier wavefront semantics.
 
+use crate::topology::Topology;
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -46,6 +58,9 @@ impl<T: Clone + Default> WorkerScratch<T> {
 
     /// Grow every slot to at least `len` elements. Call before the
     /// parallel region (requires `&mut self`, so no workers are live).
+    /// Pages are touched by the **calling** thread; prefer
+    /// [`WorkerScratch::ensure_local`] when a pool is at hand so each
+    /// slot first-touches on its owning worker's node.
     pub fn ensure(&mut self, len: usize) {
         for s in &mut self.slots {
             let v = s.get_mut();
@@ -67,12 +82,52 @@ impl<T: Clone + Default> WorkerScratch<T> {
     }
 }
 
+impl<T: Clone + Default + Send> WorkerScratch<T> {
+    /// [`WorkerScratch::ensure`] with node-local first-touch: each pool
+    /// worker grows **its own** slot inside a broadcast region, so on a
+    /// pinned multi-node pool the slot's pages land on the worker's
+    /// node. Requires `&mut self` (no outside borrows are live), slots
+    /// beyond the pool's worker count grow on the caller. The warm path
+    /// is free: when every slot already holds `len` elements (checked
+    /// through `&mut self`, no synchronization needed) no broadcast —
+    /// and so no pool barrier — is issued at all.
+    pub fn ensure_local(&mut self, pool: &ThreadPool, len: usize) {
+        let shared = self.slots.len().min(pool.n_threads());
+        let needs_grow = self.slots[..shared].iter_mut().any(|s| s.get_mut().len() < len);
+        if needs_grow {
+            let this: &Self = self;
+            pool.broadcast(|w| {
+                if w < shared {
+                    // Safety: worker `w` touches only slot `w`; the
+                    // `&mut self` receiver guarantees no other borrows.
+                    unsafe {
+                        let v = &mut *this.slots[w].get();
+                        if v.len() < len {
+                            v.resize(len, T::default());
+                        }
+                    }
+                }
+            });
+        }
+        for s in &mut self.slots[shared..] {
+            let v = s.get_mut();
+            if v.len() < len {
+                v.resize(len, T::default());
+            }
+        }
+    }
+}
+
 /// Type-erased parallel job: `f(item_index, worker_id)`.
 type Job = Arc<JobInner>;
 
 struct JobInner {
     n_items: usize,
     next: AtomicUsize,
+    /// Broadcast jobs run `f` exactly once per worker id (on that
+    /// worker) instead of claiming items dynamically — the first-touch
+    /// placement primitive.
+    broadcast: bool,
     // 'static is a lie told to the type system: `parallel_for` blocks
     // until all workers finished the job, so borrows in `f` stay alive.
     f: Box<dyn Fn(usize, usize) + Send + Sync + 'static>,
@@ -96,13 +151,30 @@ pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     n_threads: usize,
+    /// Home node of each worker id (worker 0 = the caller).
+    node_of: Arc<Vec<usize>>,
+    n_nodes: usize,
 }
 
 impl ThreadPool {
     /// Pool with `n_threads` total executors (including the caller of
-    /// `parallel_for`); `n_threads = 1` runs everything inline.
+    /// `parallel_for`); `n_threads = 1` runs everything inline. Uniform
+    /// memory — all workers on one node, no pinning.
     pub fn new(n_threads: usize) -> Self {
+        Self::with_topology(n_threads, &Topology::single(n_threads.max(1)))
+    }
+
+    /// Node-aware pool: workers are assigned contiguous per-node blocks
+    /// from `topo` ([`Topology::assign_workers`]) and — only when the
+    /// topology carries **real** CPU ids ([`Topology::pinnable`], i.e.
+    /// sysfs-discovered, never a fallback or `TF_TOPOLOGY` simulation)
+    /// — each background worker pins itself to its node's CPUs
+    /// (best-effort, a no-op without the `numa-pin` feature, and never
+    /// affecting results). Worker 0 is the calling thread and is never
+    /// pinned.
+    pub fn with_topology(n_threads: usize, topo: &Topology) -> Self {
         let n_threads = n_threads.max(1);
+        let node_of = Arc::new(topo.assign_workers(n_threads));
         let shared = Arc::new(Shared {
             slot: Mutex::new(Slot { generation: 0, job: None, active: 0, shutdown: false }),
             new_job: Condvar::new(),
@@ -111,18 +183,36 @@ impl ThreadPool {
         let workers = (1..n_threads)
             .map(|wid| {
                 let shared = Arc::clone(&shared);
+                let cpus = if topo.pinnable() {
+                    topo.node(node_of[wid]).cpus.clone()
+                } else {
+                    Vec::new() // pin_current_thread(&[]) is a no-op
+                };
                 std::thread::Builder::new()
                     .name(format!("tf-worker-{wid}"))
-                    .spawn(move || worker_loop(shared, wid))
+                    .spawn(move || {
+                        let _ = crate::topology::pin_current_thread(&cpus);
+                        worker_loop(shared, wid)
+                    })
                     .expect("spawn worker")
             })
             .collect();
-        Self { shared, workers, n_threads }
+        Self { shared, workers, n_threads, node_of, n_nodes: topo.n_nodes() }
     }
 
     /// Total executor count (callers should size schedules with this).
     pub fn n_threads(&self) -> usize {
         self.n_threads
+    }
+
+    /// Memory nodes this pool's workers span.
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Home node of worker `w` (0 for out-of-range ids).
+    pub fn worker_node(&self, w: usize) -> usize {
+        self.node_of.get(w).copied().unwrap_or(0)
     }
 
     /// Run `f(item, worker)` for every `item in 0..n_items`, blocking
@@ -141,11 +231,36 @@ impl ThreadPool {
             }
             return;
         }
+        self.run_erased(n_items, false, Box::new(f));
+    }
+
+    /// Run `f(worker_id)` exactly once on every executor (the caller
+    /// participates as worker 0), blocking until all complete — the
+    /// primitive behind node-local first-touch allocation
+    /// ([`WorkerScratch::ensure_local`]). Same barrier semantics as
+    /// [`ThreadPool::parallel_for`].
+    pub fn broadcast<F>(&self, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if self.n_threads == 1 {
+            f(0);
+            return;
+        }
+        self.run_erased(self.n_threads, true, Box::new(move |_i, w| f(w)));
+    }
+
+    fn run_erased(
+        &self,
+        n_items: usize,
+        broadcast: bool,
+        boxed: Box<dyn Fn(usize, usize) + Send + Sync + '_>,
+    ) {
         // Erase the closure lifetime; safety argument at `JobInner::f`.
-        let boxed: Box<dyn Fn(usize, usize) + Send + Sync> = Box::new(f);
         let boxed: Box<dyn Fn(usize, usize) + Send + Sync + 'static> =
             unsafe { std::mem::transmute(boxed) };
-        let job: Job = Arc::new(JobInner { n_items, next: AtomicUsize::new(0), f: boxed });
+        let job: Job =
+            Arc::new(JobInner { n_items, next: AtomicUsize::new(0), broadcast, f: boxed });
 
         {
             let mut slot = self.shared.slot.lock().unwrap();
@@ -182,43 +297,176 @@ impl ThreadPool {
     }
 }
 
+/// Which workers a [`SharedPool`] lease covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lease {
+    /// The whole pool — every worker across every node, the existing
+    /// one-barrier wavefront semantics (fused runs spanning nodes are
+    /// unchanged).
+    All,
+    /// One node's shard — that node's workers only; shards on different
+    /// nodes execute concurrently.
+    Node(usize),
+}
+
+/// One node's slice of a [`SharedPool`]: its own (pinned) workers behind
+/// its own lease mutex, so node-local executions on different nodes
+/// never serialize on each other. On a single-node pool the one shard
+/// *is* the whole pool (same workers, same mutex), preserving the
+/// pre-topology contention semantics exactly.
+pub struct PoolShard {
+    node: usize,
+    inner: Arc<Mutex<ThreadPool>>,
+    n_threads: usize,
+}
+
+impl Clone for PoolShard {
+    fn clone(&self) -> Self {
+        Self { node: self.node, inner: Arc::clone(&self.inner), n_threads: self.n_threads }
+    }
+}
+
+impl PoolShard {
+    /// The node this shard's workers live on.
+    pub fn node(&self) -> usize {
+        self.node
+    }
+
+    /// Executor count of this shard.
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Exclusive use of this shard's workers until the lease drops.
+    pub fn lease(&self) -> PoolLease<'_> {
+        PoolLease { guard: self.inner.lock().unwrap() }
+    }
+}
+
 /// A shareable handle to one persistent [`ThreadPool`]: clones refer to
 /// the same workers, and [`SharedPool::lease`] grants exclusive use for
 /// the duration of a run. `parallel_for` is not reentrant — two drivers
 /// issuing jobs to the same pool concurrently would corrupt the job slot
 /// — so everything that executes on a shared pool (the coordinator's
-/// synchronous `submit` path, the server's dispatcher thread, the
+/// synchronous `submit` path, the server's dispatcher shards, the
 /// autotuner) first takes a lease and holds it across the whole
 /// execution. The lease is a mutex guard: contending drivers queue on
 /// it, which is exactly the "one execution at a time, many submitters"
 /// discipline the service layer wants.
+///
+/// On a multi-node [`Topology`] the pool additionally carries one
+/// [`PoolShard`] per node (each with its own node-pinned workers and
+/// its own mutex): [`SharedPool::lease_shard`] grants a node-local
+/// execution that runs concurrently with other nodes' shards, while
+/// [`SharedPool::lease`] keeps the whole-pool semantics. A whole-pool
+/// lease and a node lease may overlap in CPU time (they are distinct
+/// worker sets) — that is a throughput trade, never a correctness one.
 pub struct SharedPool {
     inner: Arc<Mutex<ThreadPool>>,
+    shards: Vec<PoolShard>,
+    topo: Arc<Topology>,
     n_threads: usize,
 }
 
 impl Clone for SharedPool {
     fn clone(&self) -> Self {
-        Self { inner: Arc::clone(&self.inner), n_threads: self.n_threads }
+        Self {
+            inner: Arc::clone(&self.inner),
+            shards: self.shards.clone(),
+            topo: Arc::clone(&self.topo),
+            n_threads: self.n_threads,
+        }
     }
 }
 
 impl SharedPool {
-    /// Wrap a fresh pool of `n_threads` executors (see [`ThreadPool::new`]).
+    /// Wrap a fresh single-node pool of `n_threads` executors (see
+    /// [`ThreadPool::new`]).
     pub fn new(n_threads: usize) -> Self {
-        let n_threads = n_threads.max(1);
-        Self { inner: Arc::new(Mutex::new(ThreadPool::new(n_threads))), n_threads }
+        Self::with_topology(n_threads, Topology::single(n_threads.max(1)))
     }
 
-    /// Total executor count (stable across leases, readable without one).
+    /// Node-aware pool over `topo`: the whole-pool workers are
+    /// node-assigned and pinned ([`ThreadPool::with_topology`]), and on
+    /// a multi-node layout each node additionally gets its own
+    /// [`PoolShard`] (workers proportional to the node's CPU share,
+    /// each ≥ 1) for concurrent node-local executions.
+    ///
+    /// On a multi-node layout this deliberately keeps **two** worker
+    /// sets — the whole-pool threads plus the per-node shard threads.
+    /// Idle workers park on a condvar, so the unused set costs memory
+    /// (thread stacks), not CPU; only a whole-pool run overlapping a
+    /// shard run oversubscribes cores, which the server's placement
+    /// layer avoids by routing each batch to exactly one lease kind.
+    /// (Lazily building shards on first lease is the follow-on if the
+    /// thread count ever matters.)
+    pub fn with_topology(n_threads: usize, topo: Topology) -> Self {
+        let n_threads = n_threads.max(1);
+        let inner = Arc::new(Mutex::new(ThreadPool::with_topology(n_threads, &topo)));
+        let shards = if topo.n_nodes() <= 1 {
+            vec![PoolShard { node: 0, inner: Arc::clone(&inner), n_threads }]
+        } else {
+            let counts = topo.shard_thread_counts(n_threads);
+            counts
+                .into_iter()
+                .enumerate()
+                .map(|(node, tn)| PoolShard {
+                    node,
+                    inner: Arc::new(Mutex::new(ThreadPool::with_topology(
+                        tn,
+                        &topo.node_only(node),
+                    ))),
+                    n_threads: tn,
+                })
+                .collect()
+        };
+        Self { inner, shards, topo: Arc::new(topo), n_threads }
+    }
+
+    /// Total executor count of the whole pool (stable across leases,
+    /// readable without one).
     pub fn n_threads(&self) -> usize {
         self.n_threads
     }
 
-    /// Exclusive use of the pool until the returned lease drops. Blocks
-    /// while another driver holds it.
+    /// Nodes of the underlying topology.
+    pub fn n_nodes(&self) -> usize {
+        self.topo.n_nodes()
+    }
+
+    /// Per-node shards (1 on a single-node topology — the pool itself).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard for node `i` (wraps around, so any index is safe).
+    pub fn shard(&self, i: usize) -> &PoolShard {
+        &self.shards[i % self.shards.len()]
+    }
+
+    /// The topology this pool was built over.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Exclusive use of the whole pool until the returned lease drops
+    /// ([`Lease::All`]). Blocks while another whole-pool driver holds it.
     pub fn lease(&self) -> PoolLease<'_> {
         PoolLease { guard: self.inner.lock().unwrap() }
+    }
+
+    /// Exclusive use of node `i`'s shard ([`Lease::Node`]); on a
+    /// single-node pool this is the whole-pool lease.
+    pub fn lease_shard(&self, i: usize) -> PoolLease<'_> {
+        self.shard(i).lease()
+    }
+
+    /// Lease by placement decision.
+    pub fn lease_for(&self, l: Lease) -> PoolLease<'_> {
+        match l {
+            Lease::All => self.lease(),
+            Lease::Node(i) => self.lease_shard(i),
+        }
     }
 }
 
@@ -238,6 +486,12 @@ impl std::ops::Deref for PoolLease<'_> {
 }
 
 fn run_job(job: &JobInner, worker: usize) {
+    if job.broadcast {
+        if worker < job.n_items {
+            (job.f)(worker, worker);
+        }
+        return;
+    }
     loop {
         let i = job.next.fetch_add(1, Ordering::Relaxed);
         if i >= job.n_items {
@@ -370,11 +624,51 @@ mod tests {
     }
 
     #[test]
+    fn broadcast_runs_once_per_worker() {
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let hits: Vec<AtomicU64> = (0..threads).map(|_| AtomicU64::new(0)).collect();
+            pool.broadcast(|w| {
+                hits[w].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}: every worker exactly once"
+            );
+            // Interleaves with regular jobs and stays exactly-once.
+            pool.parallel_for(100, |_, _| {});
+            pool.broadcast(|w| {
+                hits[w].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 2));
+        }
+    }
+
+    #[test]
+    fn topology_pool_assigns_worker_nodes() {
+        let topo = Topology::simulated(2, 2);
+        let pool = ThreadPool::with_topology(4, &topo);
+        assert_eq!(pool.n_nodes(), 2);
+        assert_eq!(
+            (0..4).map(|w| pool.worker_node(w)).collect::<Vec<_>>(),
+            vec![0, 0, 1, 1]
+        );
+        assert_eq!(pool.worker_node(99), 0, "out of range defaults to node 0");
+        // Work still covers every item.
+        let counter = AtomicU64::new(0);
+        pool.parallel_for(1000, |_, _| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
     fn shared_pool_serializes_drivers() {
         // Two threads hammer the same shared pool; leases serialize the
         // parallel_for calls, so every item of every round is covered.
         let shared = SharedPool::new(3);
         assert_eq!(shared.n_threads(), 3);
+        assert_eq!(shared.n_shards(), 1, "single node: the shard is the pool");
         let counter = Arc::new(AtomicU64::new(0));
         let handles: Vec<_> = (0..2)
             .map(|_| {
@@ -394,6 +688,37 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(counter.load(Ordering::Relaxed), 2 * 50 * 64);
+    }
+
+    #[test]
+    fn multi_node_shards_run_concurrently() {
+        // Two shards of a 2-node pool execute under independent leases:
+        // shard 0 holds its lease while shard 1 completes a run, which
+        // would deadlock if node leases shared one mutex.
+        let shared = SharedPool::with_topology(4, Topology::simulated(2, 2));
+        assert_eq!(shared.n_shards(), 2);
+        assert_eq!(shared.shard(0).n_threads() + shared.shard(1).n_threads(), 4);
+        assert_eq!(shared.shard(1).node(), 1);
+        let held = shared.lease_shard(0);
+        let other = {
+            let shared = shared.clone();
+            std::thread::spawn(move || {
+                let pool = shared.lease_shard(1);
+                let counter = AtomicU64::new(0);
+                pool.parallel_for(256, |_, _| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+                counter.load(Ordering::Relaxed)
+            })
+        };
+        assert_eq!(other.join().unwrap(), 256);
+        // The held lease still works afterwards, as does Lease::All.
+        held.parallel_for(16, |_, _| {});
+        drop(held);
+        let all = shared.lease_for(Lease::All);
+        assert_eq!(all.n_threads(), 4);
+        let node = shared.lease_for(Lease::Node(1));
+        assert_eq!(node.n_threads(), shared.shard(1).n_threads());
     }
 
     #[test]
@@ -417,5 +742,29 @@ mod tests {
         // ensure() never shrinks.
         scratch.ensure(4);
         unsafe { assert_eq!(scratch.get(0).len(), 8) };
+    }
+
+    #[test]
+    fn ensure_local_first_touches_on_workers() {
+        for threads in [1usize, 3] {
+            let pool = ThreadPool::new(threads);
+            let mut scratch = WorkerScratch::<u64>::new(&pool);
+            scratch.ensure_local(&pool, 16);
+            for w in 0..threads {
+                unsafe { assert_eq!(scratch.get(w).len(), 16, "threads={threads}") };
+            }
+            // Never shrinks; grows in place.
+            scratch.ensure_local(&pool, 8);
+            unsafe { assert_eq!(scratch.get(0).len(), 16) };
+            scratch.ensure_local(&pool, 32);
+            unsafe { assert_eq!(scratch.get(0).len(), 32) };
+        }
+        // More slots than pool workers: the tail grows on the caller.
+        let pool = ThreadPool::new(2);
+        let mut scratch = WorkerScratch::<u64>::for_threads(4);
+        scratch.ensure_local(&pool, 5);
+        for w in 0..4 {
+            unsafe { assert_eq!(scratch.get(w).len(), 5) };
+        }
     }
 }

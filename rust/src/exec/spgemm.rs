@@ -29,7 +29,10 @@
 use super::pool::{ThreadPool, WorkerScratch};
 use super::SendPtr;
 use crate::core::{Dense, Scalar};
-use crate::kernels::{gemm_row, spgemm_row_dense, spgemm_row_numeric, spgemm_row_symbolic, spmm_row};
+use crate::kernels::{
+    gemm_row, spgemm_row_dense, spgemm_row_numeric, spgemm_row_numeric_tol, spgemm_row_symbolic,
+    spgemm_row_symbolic_tol, spmm_row,
+};
 use crate::sparse::Csr;
 
 /// Row-block grain for the row-parallel phases (matches the unfused
@@ -59,17 +62,20 @@ impl<T: Scalar> SpgemmWs<T> {
         }
     }
 
-    /// Size for one run: `workers` worker slots of at least `cols`
-    /// entries each, and `rows` symbolic-count slots.
-    fn prepare(&mut self, workers: usize, cols: usize, rows: usize) {
+    /// Size for one run on `pool`: one worker slot per pool executor of
+    /// at least `cols` entries each (grown **on the owning worker**, so
+    /// merge scratch first-touches node-local memory on a pinned
+    /// multi-node pool), and `rows` symbolic-count slots.
+    fn prepare(&mut self, pool: &ThreadPool, cols: usize, rows: usize) {
+        let workers = pool.n_threads();
         if self.marks.n_slots() < workers {
             self.marks = WorkerScratch::for_threads(workers);
             self.touched = WorkerScratch::for_threads(workers);
             self.acc = WorkerScratch::for_threads(workers);
         }
-        self.marks.ensure(cols);
-        self.touched.ensure(cols);
-        self.acc.ensure(cols);
+        self.marks.ensure_local(pool, cols);
+        self.touched.ensure_local(pool, cols);
+        self.acc.ensure_local(pool, cols);
         self.row_nnz.clear();
         self.row_nnz.resize(rows, 0);
     }
@@ -81,10 +87,14 @@ impl<T: Scalar> Default for SpgemmWs<T> {
     }
 }
 
-/// `out = A · V` with **sparse CSR output** (two-phase row merge).
+/// `out = A · V` with **sparse CSR output** (two-phase row merge) and a
+/// numeric drop tolerance: entries with `|v| <= drop_tol` are compacted
+/// out (`drop_tol = 0.0` keeps every structural entry — including exact
+/// cancellations — and skips the numeric work in the symbolic phase).
 /// Deterministic: each output row is merged by exactly one worker in
-/// `A`-row order, so the result is identical to the serial
-/// [`crate::kernels::spgemm`] with `drop_tol = 0` — bit for bit,
+/// `A`-row order with the serial kernel's accumulation order and keep
+/// predicate, so the result is identical to the serial
+/// [`crate::kernels::spgemm`] at the same tolerance — bit for bit,
 /// regardless of thread count.
 pub fn run_spgemm<T: Scalar>(
     pool: &ThreadPool,
@@ -92,6 +102,7 @@ pub fn run_spgemm<T: Scalar>(
     v: &Csr<T>,
     ws: &mut SpgemmWs<T>,
     out: &mut Csr<T>,
+    drop_tol: f64,
 ) {
     assert_eq!(
         a.cols(),
@@ -104,19 +115,32 @@ pub fn run_spgemm<T: Scalar>(
     );
     let rows = a.rows();
     let cols = v.cols();
-    ws.prepare(pool.n_threads(), cols, rows);
+    ws.prepare(pool, cols, rows);
 
     // Phase 1: symbolic row sizes (disjoint `row_nnz` slots per row).
+    // A nonzero tolerance must merge values to know what survives, so
+    // its symbolic phase runs the numeric merge into the per-thread
+    // accumulator; the zero-tolerance path stays value-free.
     {
         let row_nnz = SendPtr(ws.row_nnz.as_mut_ptr());
         let marks = &ws.marks;
         let touched = &ws.touched;
+        let acc = &ws.acc;
         pool.parallel_for_chunks(rows, ROW_CHUNK, |r, w| unsafe {
             let marks = marks.get(w);
             let touched = touched.get(w);
-            for i in r {
-                *row_nnz.get().add(i) =
-                    spgemm_row_symbolic(a.pattern.row(i), &v.pattern, marks, touched);
+            if drop_tol == 0.0 {
+                for i in r {
+                    *row_nnz.get().add(i) =
+                        spgemm_row_symbolic(a.pattern.row(i), &v.pattern, marks, touched);
+                }
+            } else {
+                let acc = acc.get(w);
+                for i in r {
+                    let (ac, av) = a.row(i);
+                    *row_nnz.get().add(i) =
+                        spgemm_row_symbolic_tol(ac, av, v, marks, touched, acc, drop_tol);
+                }
             }
         });
     }
@@ -142,7 +166,11 @@ pub fn run_spgemm<T: Scalar>(
                 let oc = std::slice::from_raw_parts_mut(idx.get().add(lo), hi - lo);
                 let ov = std::slice::from_raw_parts_mut(val.get().add(lo), hi - lo);
                 let (ac, av) = a.row(i);
-                spgemm_row_numeric(ac, av, v, marks, touched, acc, oc, ov);
+                if drop_tol == 0.0 {
+                    spgemm_row_numeric(ac, av, v, marks, touched, acc, oc, ov);
+                } else {
+                    spgemm_row_numeric_tol(ac, av, v, marks, touched, acc, oc, ov, drop_tol);
+                }
             }
         });
     }
@@ -242,7 +270,7 @@ mod tests {
                     -1.0,
                     1.0,
                 );
-                run_spgemm(&pool, &a, &v, &mut ws, &mut out);
+                run_spgemm(&pool, &a, &v, &mut ws, &mut out, 0.0);
                 let expect = spgemm(&a, &v, 0.0);
                 assert_eq!(out, expect, "threads={threads} case={seed}");
                 assert!(out.check_invariants());
@@ -256,15 +284,33 @@ mod tests {
         let mut ws = SpgemmWs::<f64>::new();
         let mut out = Csr::<f64>::empty(0, 0);
         let a1 = Csr::<f64>::with_random_values(gen::erdos_renyi(48, 3, 5), 7, -1.0, 1.0);
-        run_spgemm(&pool, &a1, &a1, &mut ws, &mut out);
+        run_spgemm(&pool, &a1, &a1, &mut ws, &mut out, 0.0);
         assert_eq!(out, spgemm(&a1, &a1, 0.0));
         // Smaller problem into the same (now oversized) buffers.
         let a2 = Csr::<f64>::with_random_values(gen::banded(10, &[1]), 8, -1.0, 1.0);
-        run_spgemm(&pool, &a2, &a2, &mut ws, &mut out);
+        run_spgemm(&pool, &a2, &a2, &mut ws, &mut out, 0.0);
         assert_eq!(out, spgemm(&a2, &a2, 0.0));
         // And back up.
-        run_spgemm(&pool, &a1, &a1, &mut ws, &mut out);
+        run_spgemm(&pool, &a1, &a1, &mut ws, &mut out, 0.0);
         assert_eq!(out, spgemm(&a1, &a1, 0.0));
+    }
+
+    #[test]
+    fn drop_tolerance_matches_serial_at_any_thread_count() {
+        let a = Csr::<f64>::with_random_values(gen::uniform_random(40, 32, 4, 2), 3, -1.0, 1.0);
+        let v = Csr::<f64>::with_random_values(gen::uniform_random(32, 28, 3, 4), 5, -1.0, 1.0);
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut ws = SpgemmWs::<f64>::new();
+            let mut out = Csr::<f64>::empty(0, 0);
+            for tol in [1e-9, 0.05, 0.3] {
+                run_spgemm(&pool, &a, &v, &mut ws, &mut out, tol);
+                let expect = spgemm(&a, &v, tol);
+                assert_eq!(out, expect, "threads={threads} tol={tol}");
+                assert!(out.check_invariants());
+                assert!(out.nnz() <= spgemm(&a, &v, 0.0).nnz());
+            }
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! overridden per run — how the [`tuning`](crate::tuning) autotuner
 //! times candidate widths and how benches pin arms.
 
-use super::pool::WorkerScratch;
+use super::pool::{ThreadPool, WorkerScratch};
 use crate::core::Scalar;
 
 /// How an executor chooses its column-strip width.
@@ -67,18 +67,22 @@ impl<T: Scalar> StripWs<T> {
         Self { scratch: None, panel: Vec::new() }
     }
 
-    /// Workspaces for one run: the shared panel buffer sized to
-    /// `panel_len` elements and per-worker slots of at least `slot_len`
-    /// elements for `workers` worker ids.
+    /// Workspaces for one run on `pool`: the shared panel buffer sized
+    /// to `panel_len` elements and per-worker slots of at least
+    /// `slot_len` elements, one per pool executor. Slots grow **on
+    /// their owning worker** ([`WorkerScratch::ensure_local`]), so on a
+    /// pinned multi-node pool each tile workspace first-touches
+    /// node-local memory.
     pub(crate) fn prepare(
         &mut self,
-        workers: usize,
+        pool: &ThreadPool,
         slot_len: usize,
         panel_len: usize,
     ) -> (&mut [T], &WorkerScratch<T>) {
         if self.panel.len() < panel_len {
             self.panel.resize(panel_len, T::ZERO);
         }
+        let workers = pool.n_threads();
         let need_new = match &self.scratch {
             Some(s) => s.n_slots() < workers,
             None => true,
@@ -86,8 +90,7 @@ impl<T: Scalar> StripWs<T> {
         if need_new {
             self.scratch = Some(WorkerScratch::for_threads(workers));
         }
-        let s = self.scratch.as_mut().expect("just ensured");
-        s.ensure(slot_len);
+        self.scratch.as_mut().expect("just ensured").ensure_local(pool, slot_len);
         (&mut self.panel[..panel_len], self.scratch.as_ref().expect("just ensured"))
     }
 }
@@ -116,17 +119,18 @@ mod tests {
 
     #[test]
     fn ws_grows_to_pool_and_len() {
+        let (p3, p5, p4) = (ThreadPool::new(3), ThreadPool::new(5), ThreadPool::new(4));
         let mut ws = StripWs::<f64>::new();
-        let (panel, s) = ws.prepare(3, 16, 12);
+        let (panel, s) = ws.prepare(&p3, 16, 12);
         assert_eq!(panel.len(), 12);
         assert_eq!(s.n_slots(), 3);
         unsafe { assert_eq!(s.get(2).len(), 16) };
         // Larger pool re-initializes; larger lens grow in place; a
         // smaller panel request just narrows the returned view.
-        let (panel, s) = ws.prepare(5, 8, 4);
+        let (panel, s) = ws.prepare(&p5, 8, 4);
         assert_eq!(panel.len(), 4);
         assert_eq!(s.n_slots(), 5);
-        let (panel, s) = ws.prepare(4, 32, 40);
+        let (panel, s) = ws.prepare(&p4, 32, 40);
         assert_eq!(panel.len(), 40);
         assert_eq!(s.n_slots(), 5, "never shrinks the slot count");
         unsafe { assert_eq!(s.get(0).len(), 32) };

@@ -398,7 +398,7 @@ pub fn time_spgemm_chain<T: Scalar>(
                 let step_pool = ThreadPool::new(threads);
                 let mut ws = SpgemmWs::new();
                 let mut s = Csr::empty(0, 0);
-                run_spgemm(&step_pool, a, a, &mut ws, &mut s);
+                run_spgemm(&step_pool, a, a, &mut ws, &mut s, 0.0);
                 drop(step_pool);
                 let step_pool = ThreadPool::new(threads);
                 let mut d = Dense::zeros(n, rhs);

@@ -21,7 +21,10 @@ pub mod spgemm;
 pub mod spmm;
 
 pub use gemm::{gemm_row, gemm_row_ct, gemm_row_ct_strip, gemm_row_strip, gemm_rows, pack_panel};
-pub use spgemm::{spgemm, spgemm_row_dense, spgemm_row_numeric, spgemm_row_symbolic};
+pub use spgemm::{
+    spgemm, spgemm_keeps, spgemm_row_dense, spgemm_row_numeric, spgemm_row_numeric_tol,
+    spgemm_row_symbolic, spgemm_row_symbolic_tol,
+};
 pub use spmm::{spmm_row, spmm_row_ptr, spmm_row_strip, spmm_rows};
 
 /// Output-register block width shared by every kernel: 32 scalars = 4

@@ -105,6 +105,110 @@ pub fn spgemm_row_numeric<T: Scalar>(
     }
 }
 
+/// The keep predicate numeric dropping uses everywhere — serial builder
+/// and parallel driver must agree exactly or they lose bitwise
+/// equality: `drop_tol = 0.0` keeps every structural entry (including
+/// exact cancellations), a positive tolerance keeps `|v| > drop_tol`.
+#[inline]
+pub fn spgemm_keeps<T: Scalar>(v: T, drop_tol: f64) -> bool {
+    drop_tol == 0.0 || v.to_f64().abs() > drop_tol
+}
+
+/// Symbolic phase **at a drop tolerance**: the number of merged entries
+/// of one output row of `A · B` whose value survives
+/// [`spgemm_keeps`]. Knowing what drops requires the merged values, so
+/// this runs the numeric merge (same accumulation order as
+/// [`spgemm_row_numeric`]) into `acc` — the caller pays that only on
+/// the `drop_tol > 0` path; at `drop_tol = 0` use the cheaper
+/// [`spgemm_row_symbolic`]. `marks`/`touched`/`acc` follow the same
+/// contracts as [`spgemm_row_numeric`].
+#[inline]
+pub fn spgemm_row_symbolic_tol<T: Scalar>(
+    a_cols: &[u32],
+    a_vals: &[T],
+    b: &Csr<T>,
+    marks: &mut [u32],
+    touched: &mut [u32],
+    acc: &mut [T],
+    drop_tol: f64,
+) -> usize {
+    debug_assert_eq!(a_cols.len(), a_vals.len());
+    let mut n = 0usize;
+    for (&k, &av) in a_cols.iter().zip(a_vals) {
+        let (bc, bv) = b.row(k as usize);
+        for (&c, &v) in bc.iter().zip(bv) {
+            let ci = c as usize;
+            if marks[ci] == 0 {
+                marks[ci] = 1;
+                touched[n] = c;
+                n += 1;
+                acc[ci] = av * v;
+            } else {
+                acc[ci] += av * v;
+            }
+        }
+    }
+    let mut kept = 0usize;
+    for &c in &touched[..n] {
+        if spgemm_keeps(acc[c as usize], drop_tol) {
+            kept += 1;
+        }
+        marks[c as usize] = 0;
+    }
+    kept
+}
+
+/// Numeric merge **at a drop tolerance** into `(out_cols, out_vals)`,
+/// both exactly the row's [`spgemm_row_symbolic_tol`] size at the same
+/// tolerance. Surviving columns are emitted sorted ascending and
+/// unique; the merge order and keep predicate match the serial
+/// [`spgemm`] exactly, so the kept values are bitwise-identical to the
+/// serial builder's at any thread count.
+#[inline]
+#[allow(clippy::too_many_arguments)] // the merge-state tuple, spelled out
+pub fn spgemm_row_numeric_tol<T: Scalar>(
+    a_cols: &[u32],
+    a_vals: &[T],
+    b: &Csr<T>,
+    marks: &mut [u32],
+    touched: &mut [u32],
+    acc: &mut [T],
+    out_cols: &mut [u32],
+    out_vals: &mut [T],
+    drop_tol: f64,
+) {
+    debug_assert_eq!(a_cols.len(), a_vals.len());
+    debug_assert_eq!(out_cols.len(), out_vals.len());
+    let mut n = 0usize;
+    for (&k, &av) in a_cols.iter().zip(a_vals) {
+        let (bc, bv) = b.row(k as usize);
+        for (&c, &v) in bc.iter().zip(bv) {
+            let ci = c as usize;
+            if marks[ci] == 0 {
+                marks[ci] = 1;
+                touched[n] = c;
+                n += 1;
+                acc[ci] = av * v;
+            } else {
+                acc[ci] += av * v;
+            }
+        }
+    }
+    let t = &mut touched[..n];
+    t.sort_unstable();
+    let mut x = 0usize;
+    for &c in t.iter() {
+        let v = acc[c as usize];
+        if spgemm_keeps(v, drop_tol) {
+            out_cols[x] = c;
+            out_vals[x] = v;
+            x += 1;
+        }
+        marks[c as usize] = 0;
+    }
+    debug_assert_eq!(x, out_cols.len(), "kept count must match the symbolic-tol count");
+}
+
 /// One **dense** output row of `A · B` (the densify arm of the chain's
 /// per-step output-format decision): scatter-accumulate `B`'s rows into
 /// a zeroed dense row of `B.cols` entries. Overwrites `out`.
@@ -161,7 +265,7 @@ pub fn spgemm<T: Scalar>(a: &Csr<T>, b: &Csr<T>, drop_tol: f64) -> Csr<T> {
             &mut row_vals,
         );
         for (&c, &v) in row_cols.iter().zip(&row_vals) {
-            if drop_tol == 0.0 || v.to_f64().abs() > drop_tol {
+            if spgemm_keeps(v, drop_tol) {
                 indices.push(c);
                 data.push(v);
             }
@@ -240,6 +344,38 @@ mod tests {
         assert_eq!(dropped.nnz(), 1, "cancelled entry compacted out");
         assert_eq!(dropped.pattern.row(1), &[0]);
         assert!(dropped.to_dense().max_abs_diff(&kept.to_dense()) < 1e-15);
+    }
+
+    #[test]
+    fn tol_row_kernels_match_the_serial_builder() {
+        let a = Csr::<f64>::with_random_values(gen::uniform_random(24, 18, 4, 5), 1, -1.0, 1.0);
+        let b = Csr::<f64>::with_random_values(gen::uniform_random(18, 20, 3, 6), 2, -1.0, 1.0);
+        for tol in [0.0, 1e-9, 0.05, 0.5] {
+            let expect = spgemm(&a, &b, tol);
+            let mut marks = vec![0u32; b.cols()];
+            let mut touched = vec![0u32; b.cols()];
+            let mut acc = vec![0.0f64; b.cols()];
+            for i in 0..a.rows() {
+                let (ac, av) = a.row(i);
+                let kept = spgemm_row_symbolic_tol(
+                    ac, av, &b, &mut marks, &mut touched, &mut acc, tol,
+                );
+                let (ec, ev) = expect.row(i);
+                assert_eq!(kept, ec.len(), "row {i} tol {tol}");
+                assert!(marks.iter().all(|&m| m == 0), "marks leaked (symbolic, row {i})");
+                let mut oc = vec![0u32; kept];
+                let mut ov = vec![0.0f64; kept];
+                spgemm_row_numeric_tol(
+                    ac, av, &b, &mut marks, &mut touched, &mut acc, &mut oc, &mut ov, tol,
+                );
+                assert_eq!(oc.as_slice(), ec, "row {i} tol {tol}");
+                assert!(
+                    ov.iter().zip(ev).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "row {i} tol {tol}: values must be bitwise-identical"
+                );
+                assert!(marks.iter().all(|&m| m == 0), "marks leaked (numeric, row {i})");
+            }
+        }
     }
 
     #[test]

@@ -49,10 +49,21 @@
 //!                  ([`StripMode`](exec::StripMode) selects the width);
 //!                  [`exec::spgemm`] is the parallel row-merge SpGEMM
 //!                  driver behind sparse-intermediate chain steps.
+//! - [`topology`] — sockets / NUMA nodes and their CPU lists: sysfs
+//!                  discovery, a deterministic single-node fallback,
+//!                  and the `TF_TOPOLOGY=NxM` simulation override. The
+//!                  pool pins workers per node (behind the `numa-pin`
+//!                  feature), the scheduler charges a remote-access
+//!                  penalty ([`scheduler::place`] decides node-local vs
+//!                  spread placement), and the server runs one
+//!                  dispatcher shard per node.
 //! - [`tuning`]   — runtime strip-width autotuner: times 2–3 candidate
 //!                  widths around the model's pick on first execution of
 //!                  a (pattern, shape, precision) key; the coordinator
-//!                  caches the winner alongside the schedule.
+//!                  caches the winner alongside the schedule, and
+//!                  [`tuning::persist`] round-trips the tuned-pick
+//!                  table through a versioned sidecar file keyed by
+//!                  (pattern, shape, element width, thread count).
 //! - [`cachesim`] — set-associative LRU cache-hierarchy simulator (the
 //!                  PAPI substitute) for the AMT study.
 //! - [`simcore`]  — multicore execution model (potential gain, scaling).
@@ -228,7 +239,67 @@
 //! - **Priority** — [`Priority::Latency`](coordinator::Priority) jobs
 //!   are dispatched before bulk ones and overtake an in-flight bulk
 //!   chain at step boundaries (between barriers, never mid-barrier);
-//!   FIFO order holds within a tier.
+//!   FIFO order holds within a tier (per dispatcher shard:
+//!   `ServeReply::order` is monotone per shard).
+//!
+//! ## Topology & placement
+//!
+//! On multi-socket machines a worker whose strip workspace or packed
+//! panel lives on the remote node loses exactly the locality tile
+//! fusion buys. The [`topology`] subsystem makes the runtime node-aware
+//! end to end:
+//!
+//! ```no_run
+//! use tile_fusion::coordinator::{Server, ServerConfig};
+//! use tile_fusion::prelude::*;
+//!
+//! // Discover the machine (or simulate one: TF_TOPOLOGY=2x8 makes any
+//! // box look like two nodes of eight CPUs — how CI exercises the
+//! // multi-node paths).
+//! let topo = Topology::detect();
+//! let pool = SharedPool::with_topology(8, topo);
+//!
+//! // One dispatcher shard per node: requests hash to a home shard by
+//! // coalesce key, execute on that node's workers (node-local strip
+//! // workspaces / D1 slices via first-touch), and idle shards steal
+//! // whole requests from sibling queues.
+//! let srv: Server<f32> = Server::with_config(
+//!     pool,
+//!     SchedulerParams::default(),
+//!     ServerConfig::default(),
+//! );
+//! # let _ = srv;
+//! ```
+//!
+//! Semantics worth knowing:
+//!
+//! - **Pinning is opt-in and best-effort** — build with `--features
+//!   numa-pin` to pin workers to their node's CPUs via
+//!   `sched_setaffinity`; without the feature (or off Linux) pinning is
+//!   a no-op. Results are bitwise-identical pinned or not: pinning
+//!   moves threads, never work.
+//! - **Leases** — [`Lease::All`](exec::Lease) (the whole pool) keeps
+//!   the existing one-barrier wavefront semantics, so fused runs
+//!   spanning nodes are unchanged; [`Lease::Node`](exec::Lease) grants
+//!   one node's shard, and shards on different nodes execute
+//!   concurrently. The server picks per batch via
+//!   [`scheduler::place::decide_placement`]: small flowing working
+//!   sets run node-local, large ones spread to the whole pool (counted
+//!   in `Metrics::remote_placements`).
+//! - **Scheduling** — `SchedulerParams::n_nodes` (set from the pool
+//!   automatically on the service paths) charges the Eq.-3 cost model
+//!   a remote-access penalty, so multi-node schedules split to working
+//!   sets that tolerate the expected remote fraction.
+//! - **Steal safety** — idle shards steal whole requests only (never
+//!   half a coalesced batch, never mid-barrier) and re-check the
+//!   tenant's executing count first, so a stolen bulk chain cannot
+//!   exceed its tenant cap through the stealing shard — including on
+//!   the shutdown drain path.
+//! - **Tuned-pick persistence** — set `TF_TUNE_CACHE=<path>` (or call
+//!   `Server::{load_tuned, save_tuned}`) to round-trip the strip
+//!   autotuner's winners through a versioned sidecar keyed by
+//!   (pattern, shape, element width, thread count): a restarted
+//!   service replays known keys with zero timing runs.
 
 pub mod cachesim;
 pub mod coordinator;
@@ -244,6 +315,7 @@ pub mod scheduler;
 pub mod simcore;
 pub mod sparse;
 pub mod testing;
+pub mod topology;
 pub mod tuning;
 
 /// Convenience re-exports for the common flows.
@@ -251,13 +323,14 @@ pub mod prelude {
     pub use crate::core::{Dense, Scalar};
     pub use crate::exec::{
         chain_specs, AtomicTiling, CLayout, ChainExec, ChainIn, ChainOut, ChainStepOp, FirstOp,
-        Fused, Overlapped, PairExec, PairOp, SharedPool, SpgemmWs, StepControl, StepStrategy,
-        StripMode, TensorStyle, ThreadPool, Unfused,
+        Fused, Lease, Overlapped, PairExec, PairOp, PoolShard, SharedPool, SpgemmWs, StepControl,
+        StepStrategy, StripMode, TensorStyle, ThreadPool, Unfused,
     };
     pub use crate::scheduler::{
         BSide, ChainFlow, ChainInputMeta, ChainPlan, ChainPlanner, ChainStepSpec, FusedSchedule,
-        FusionOp, PlannedStep, Scheduler, SchedulerParams, StepOutput, StepOutputMode,
+        FusionOp, Placement, PlannedStep, Scheduler, SchedulerParams, StepOutput, StepOutputMode,
     };
     pub use crate::sparse::gen::{self, RmatKind};
     pub use crate::sparse::{Coo, Csr, Pattern};
+    pub use crate::topology::Topology;
 }

@@ -567,6 +567,7 @@ mod tests {
             elem_bytes: 8,
             ct_size: 64,
             max_split_depth: 24,
+            n_nodes: 1,
         }
     }
 

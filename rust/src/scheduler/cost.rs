@@ -35,20 +35,59 @@ pub struct CostModel<'a> {
     stamp: Vec<u32>,
     epoch: u32,
     eval_width: Option<usize>,
+    /// Remote-access multiplier on the element traffic (1.0 = uniform
+    /// memory); see [`CostModel::set_nodes`].
+    node_penalty: f64,
 }
 
 const IDX_BYTES: usize = 4; // u32 column indices
 
+/// Weight of the remote-access penalty: with block row partitioning
+/// across `n` nodes, roughly `(n-1)/n` of a tile's gathered traffic
+/// (the stationary operand's rows and out-of-block `D1` gathers) is
+/// expected to cross the interconnect, and remote loads cost on the
+/// order of half again a local load on contemporary two-socket parts.
+pub const REMOTE_PENALTY_WEIGHT: f64 = 0.5;
+
+/// Expected element-traffic multiplier for an execution spanning
+/// `n_nodes` memory nodes: `1 + 0.5 · (1 − 1/n)`. Exactly 1.0 at one
+/// node, so single-node schedules are unchanged byte for byte.
+pub fn remote_penalty(n_nodes: usize) -> f64 {
+    if n_nodes <= 1 {
+        1.0
+    } else {
+        1.0 + REMOTE_PENALTY_WEIGHT * (1.0 - 1.0 / n_nodes as f64)
+    }
+}
+
 impl<'a> CostModel<'a> {
     pub fn new(op: &'a FusionOp<'a>, elem_bytes: usize) -> Self {
         let stamp_len = op.a.cols.max(op.b_cols_dim());
-        Self { op, elem_bytes, stamp: vec![0; stamp_len], epoch: 0, eval_width: None }
+        Self {
+            op,
+            elem_bytes,
+            stamp: vec![0; stamp_len],
+            epoch: 0,
+            eval_width: None,
+            node_penalty: 1.0,
+        }
     }
 
     /// Evaluate subsequent [`CostModel::tile_cost`] calls at a strip
     /// width (`None` = full `ccol`, the default).
     pub fn set_eval_width(&mut self, width: Option<usize>) {
         self.eval_width = width;
+    }
+
+    /// Charge element traffic as if the execution spans `n_nodes`
+    /// memory nodes ([`remote_penalty`]): multi-node runs see inflated
+    /// tile costs, so splitting produces smaller tiles whose working
+    /// sets tolerate the remote fraction. `n_nodes = 1` restores the
+    /// exact uniform-memory costs. Index traffic is not scaled — CSR
+    /// structure is read once per strip regardless of placement, and
+    /// keeping one term exact preserves the Eq.-3 calibration tests.
+    pub fn set_nodes(&mut self, n_nodes: usize) {
+        self.node_penalty = remote_penalty(n_nodes);
     }
 
     /// Eq. 3 in bytes for one tile, at the current evaluation width.
@@ -60,8 +99,22 @@ impl<'a> CostModel<'a> {
     /// Eq. 3 in bytes for one tile as if executed at dense width
     /// `width` (ignores the ambient evaluation width).
     pub fn tile_cost_at(&mut self, tile: &Tile, width: usize) -> usize {
-        let (elems, idx_bytes) = self.tile_cost_parts(tile);
-        elems * width * self.elem_bytes + idx_bytes
+        let parts = self.tile_cost_parts(tile);
+        self.cost_from_parts(parts, width)
+    }
+
+    /// Combine [`CostModel::tile_cost_parts`] output into bytes at a
+    /// width, applying the remote-access penalty — the one place the
+    /// `cost(w) = penalty · elems · w · elem_bytes + idx` formula
+    /// lives, so the strip picker and the splitters always agree.
+    pub fn cost_from_parts(&self, (elems, idx_bytes): (usize, usize), width: usize) -> usize {
+        let elem_traffic = elems * width * self.elem_bytes;
+        let scaled = if self.node_penalty > 1.0 {
+            (elem_traffic as f64 * self.node_penalty).ceil() as usize
+        } else {
+            elem_traffic
+        };
+        scaled + idx_bytes
     }
 
     /// Eq. 3 split into its width-affine parts: `(element units that
@@ -263,6 +316,30 @@ mod tests {
         let lo = estimate_spgemm(&a, 64, 1e-3).out_density;
         let hi = estimate_spgemm(&a, 64, 1e-1).out_density;
         assert!(lo < hi);
+    }
+
+    #[test]
+    fn remote_penalty_scales_element_traffic_only() {
+        // Penalty factors: exactly 1 at one node, monotone in nodes,
+        // bounded by 1 + weight.
+        assert_eq!(remote_penalty(1), 1.0);
+        assert!(remote_penalty(2) > 1.0);
+        assert!(remote_penalty(4) > remote_penalty(2));
+        assert!(remote_penalty(64) < 1.0 + REMOTE_PENALTY_WEIGHT + 1e-12);
+
+        let a = Pattern::eye(4);
+        let op = op_dense(&a, 8, 2);
+        let mut cm = CostModel::new(&op, 8);
+        let tile = Tile::new(0, 4, vec![0, 1, 2, 3]);
+        // Uniform memory: the calibrated Eq.-3 value, untouched.
+        assert_eq!(cm.tile_cost(&tile), 804);
+        // Two nodes: the element term (96 · 8 = 768 bytes) scales by
+        // 1.25, the index term (36 bytes) does not.
+        cm.set_nodes(2);
+        assert_eq!(cm.tile_cost(&tile), (768.0f64 * 1.25).ceil() as usize + 36);
+        // Back to one node restores the exact uniform cost.
+        cm.set_nodes(1);
+        assert_eq!(cm.tile_cost(&tile), 804);
     }
 
     #[test]

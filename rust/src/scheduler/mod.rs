@@ -14,6 +14,7 @@
 pub mod chain;
 pub mod coarse;
 pub mod cost;
+pub mod place;
 pub mod schedule;
 pub mod split;
 
@@ -21,7 +22,8 @@ pub use chain::{
     decide_spgemm_output, ChainError, ChainFlow, ChainInputMeta, ChainPlan, ChainPlanner,
     ChainStats, ChainStepPlan, ChainStepSpec, PlannedStep, StepOutput, StepOutputMode,
 };
-pub use cost::{estimate_spgemm, SpgemmEstimate};
+pub use cost::{estimate_spgemm, remote_penalty, SpgemmEstimate};
+pub use place::{decide_placement, Placement};
 pub use schedule::{FusedSchedule, ScheduleStats, Tile};
 
 use crate::dag::IterDag;
@@ -89,6 +91,12 @@ pub struct SchedulerParams {
     pub ct_size: usize,
     /// Recursion bound for step-2 splitting.
     pub max_split_depth: u32,
+    /// Memory nodes the execution spans (1 = uniform memory, the
+    /// paper's implicit assumption). Above 1 the cost model inflates
+    /// element traffic by the remote-access penalty
+    /// ([`cost::remote_penalty`]), so tiles split to working sets that
+    /// tolerate the expected remote fraction.
+    pub n_nodes: usize,
 }
 
 impl Default for SchedulerParams {
@@ -104,6 +112,7 @@ impl Default for SchedulerParams {
             elem_bytes: 8,
             ct_size: 2048,
             max_split_depth: 24,
+            n_nodes: 1,
         }
     }
 }
@@ -197,9 +206,10 @@ impl Scheduler {
         // full width can only demote (a single first-op row already
         // overflows), while strip execution keeps those rows fused.
         let mut cm = cost::CostModel::new(op, p.elem_bytes);
+        cm.set_nodes(p.n_nodes);
         let budget = p.cache_bytes;
         let strip = if allow_strips {
-            pick_strip_width(&mut cm, &cf.wf0, op.ccol, budget, p.elem_bytes)
+            pick_strip_width(&mut cm, &cf.wf0, op.ccol, budget)
         } else {
             None
         };
@@ -303,14 +313,16 @@ fn pick_strip_width(
     coarse_wf0: &[Tile],
     ccol: usize,
     budget: usize,
-    elem_bytes: usize,
 ) -> Option<usize> {
     use crate::kernels::JB;
     if ccol <= JB {
         return None;
     }
     let parts: Vec<(usize, usize)> = coarse_wf0.iter().map(|t| cm.tile_cost_parts(t)).collect();
-    let fits = |w: usize| parts.iter().all(|&(elems, idx)| elems * w * elem_bytes + idx <= budget);
+    // `cost_from_parts` applies the remote-access penalty, so the strip
+    // picker and the splitters agree on multi-node costs.
+    let cm = &*cm;
+    let fits = |w: usize| parts.iter().all(|&pt| cm.cost_from_parts(pt, w) <= budget);
     if fits(ccol) {
         return None;
     }
@@ -364,7 +376,14 @@ mod tests {
     use crate::sparse::gen;
 
     fn params_small() -> SchedulerParams {
-        SchedulerParams { n_cores: 4, cache_bytes: 256 * 1024, elem_bytes: 8, ct_size: 64, max_split_depth: 24 }
+        SchedulerParams {
+            n_cores: 4,
+            cache_bytes: 256 * 1024,
+            elem_bytes: 8,
+            ct_size: 64,
+            max_split_depth: 24,
+            n_nodes: 1,
+        }
     }
 
     #[test]
@@ -505,6 +524,7 @@ mod tests {
             elem_bytes: 8,
             ct_size: 256,
             max_split_depth: 24,
+            n_nodes: 1,
         };
         let op = FusionOp { a: &a, b: BSide::Dense { bcol: 32 }, ccol: 256 };
         let striped = Scheduler::new(p).schedule_op(&op);
@@ -519,6 +539,29 @@ mod tests {
             striped.stats.fused_ratio,
             full.stats.fused_ratio
         );
+    }
+
+    #[test]
+    fn multi_node_schedule_validates_and_respects_budget() {
+        // A 2-node schedule pays the remote penalty: it still validates
+        // and its execution working set still fits the budget under the
+        // *penalized* costs (so the reported max_tile_cost, which embeds
+        // the penalty, obeys cacheSize).
+        let a = gen::poisson2d(48, 48);
+        let p1 = params_small();
+        let p2 = SchedulerParams { n_nodes: 2, ..p1 };
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 64 }, ccol: 64 };
+        let s1 = Scheduler::new(p1).schedule_op(&op);
+        let s2 = Scheduler::new(p2).schedule_op(&op);
+        s1.validate(&a);
+        s2.validate(&a);
+        assert!(s2.stats.max_tile_cost <= p2.cache_bytes);
+        // n_nodes = 1 reproduces the uniform schedule exactly.
+        let s1b = Scheduler::new(SchedulerParams { n_nodes: 1, ..p1 }).schedule_op(&op);
+        assert_eq!(s1.wavefronts, s1b.wavefronts);
+        // Multi-node scheduling stays deterministic.
+        let s2b = Scheduler::new(p2).schedule_op(&op);
+        assert_eq!(s2.wavefronts, s2b.wavefronts);
     }
 
     #[test]

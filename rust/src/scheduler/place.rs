@@ -1,0 +1,184 @@
+//! Node placement of planned work: where a run should execute on a
+//! multi-node machine, and how wavefront-0 coarse tiles partition into
+//! per-node row blocks.
+//!
+//! The principle mirrors the paper's locality argument one level up the
+//! memory hierarchy: a fused tile wants its working set resident in a
+//! core-local cache; a *run* wants its flowing buffers resident on the
+//! executing node. Two regimes fall out:
+//!
+//! - **small shapes** stay node-local ([`Placement::Local`]): the whole
+//!   flowing working set fits comfortably on one node, so executing on
+//!   one node's shard costs nothing and buys exclusive-node bandwidth
+//!   plus concurrency with other shards;
+//! - **large shapes** spread ([`Placement::Spread`]): one node's
+//!   workers (and its memory bandwidth) would bottleneck, so the run
+//!   takes the whole pool and [`split_wavefront0`] partitions
+//!   wavefront-0 tiles into contiguous per-node row blocks — each
+//!   node's workers produce and consume their own block's `D1` slice,
+//!   which first-touch then places node-locally.
+//!
+//! The server's dispatcher shards consume [`decide_placement`] per
+//! batch; [`split_wavefront0`] / [`split_rows`] express the row-block
+//! partition (and back the fig17 bench's placement report).
+
+use super::schedule::FusedSchedule;
+use std::ops::Range;
+
+/// Where a run executes on a multi-node pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// One node's shard: the flowing working set is small enough that
+    /// node-local execution wins (and shards run concurrently).
+    Local,
+    /// The whole pool, wavefront rows partitioned across nodes.
+    Spread,
+}
+
+/// Default spread threshold in bytes of flowing working set (input +
+/// output + intermediate slices that ride a single run): below this a
+/// node's private bandwidth serves the run comfortably; above it the
+/// run wants every node's controllers. Order-of-L3-size, deliberately
+/// coarse — the placement decision only has to be right about the two
+/// extremes.
+pub const DEFAULT_SPREAD_MIN_BYTES: usize = 8 << 20;
+
+/// Decide where a run with `flow_bytes` of flowing working set executes
+/// on an `n_nodes` machine. Single-node machines (and degenerate
+/// thresholds) are always [`Placement::Local`] — the shard *is* the
+/// pool there, preserving pre-topology behavior exactly.
+pub fn decide_placement(flow_bytes: usize, n_nodes: usize, spread_min_bytes: usize) -> Placement {
+    if n_nodes <= 1 || flow_bytes < spread_min_bytes.max(1) {
+        Placement::Local
+    } else {
+        Placement::Spread
+    }
+}
+
+/// Partition `0..n_rows` into at most `n_nodes` contiguous near-equal
+/// blocks of at least `min_rows_per_node` rows each (fewer blocks when
+/// rows are scarce — small shapes fall back toward single-node
+/// placement; always ≥ 1 block). The returned ranges are disjoint,
+/// ascending, and cover `0..n_rows` exactly.
+pub fn split_rows(n_rows: usize, n_nodes: usize, min_rows_per_node: usize) -> Vec<Range<usize>> {
+    let min_rows = min_rows_per_node.max(1);
+    let nodes = if n_rows == 0 { 1 } else { (n_rows / min_rows).clamp(1, n_nodes.max(1)) };
+    let mut out = Vec::with_capacity(nodes);
+    let mut lo = 0usize;
+    for k in 0..nodes {
+        let hi = n_rows * (k + 1) / nodes;
+        out.push(lo..hi);
+        lo = hi;
+    }
+    out
+}
+
+/// Partition a schedule's wavefront-0 tiles into `n_nodes` contiguous
+/// index ranges with near-balanced work (weight = fused + first-op
+/// iterations per tile — the row blocks each node's workers own, whose
+/// `D1` slices then first-touch node-locally). Tiles are already
+/// ordered by their `i` ranges, so contiguous tile blocks are
+/// contiguous row blocks. Returns exactly one range per node (possibly
+/// empty trailing ranges when tiles are scarce); ranges are disjoint,
+/// ascending, and cover every tile.
+pub fn split_wavefront0(plan: &FusedSchedule, n_nodes: usize) -> Vec<Range<usize>> {
+    let n_nodes = n_nodes.max(1);
+    let tiles = &plan.wavefronts[0];
+    let weights: Vec<usize> = tiles.iter().map(|t| t.i_len() + t.j_len()).collect();
+    let total: usize = weights.iter().sum();
+    let mut out = Vec::with_capacity(n_nodes);
+    let mut lo = 0usize;
+    let mut acc = 0usize;
+    for k in 0..n_nodes {
+        let target = total * (k + 1) / n_nodes;
+        let mut hi = lo;
+        while hi < tiles.len() && (acc < target || k + 1 == n_nodes) {
+            acc += weights[hi];
+            hi += 1;
+        }
+        out.push(lo..hi);
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{BSide, FusionOp, Scheduler, SchedulerParams};
+    use crate::sparse::gen;
+
+    #[test]
+    fn placement_regimes() {
+        // Single node: always local.
+        assert_eq!(decide_placement(usize::MAX, 1, DEFAULT_SPREAD_MIN_BYTES), Placement::Local);
+        // Multi-node: small stays local, large spreads.
+        assert_eq!(decide_placement(1 << 10, 2, DEFAULT_SPREAD_MIN_BYTES), Placement::Local);
+        assert_eq!(decide_placement(1 << 30, 2, DEFAULT_SPREAD_MIN_BYTES), Placement::Spread);
+        // Threshold boundary: strictly-below stays local.
+        assert_eq!(decide_placement(99, 4, 100), Placement::Local);
+        assert_eq!(decide_placement(100, 4, 100), Placement::Spread);
+        // Degenerate zero threshold never divides by zero.
+        assert_eq!(decide_placement(0, 2, 0), Placement::Local);
+    }
+
+    #[test]
+    fn split_rows_covers_exactly() {
+        for (rows, nodes, min) in [(100, 4, 1), (100, 3, 40), (5, 8, 1), (0, 4, 16), (7, 2, 100)]
+        {
+            let parts = split_rows(rows, nodes, min);
+            assert!(!parts.is_empty());
+            assert!(parts.len() <= nodes.max(1));
+            assert_eq!(parts[0].start, 0);
+            assert_eq!(parts.last().unwrap().end, rows);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous cover");
+            }
+            let covered: usize = parts.iter().map(|r| r.len()).sum();
+            assert_eq!(covered, rows);
+        }
+        // Scarce rows fall back toward fewer nodes.
+        assert_eq!(split_rows(100, 4, 40).len(), 2);
+        assert_eq!(split_rows(30, 4, 40).len(), 1, "small shape: single-node fallback");
+        // Near-equal when unconstrained.
+        let parts = split_rows(100, 4, 1);
+        assert!(parts.iter().all(|r| r.len() == 25));
+    }
+
+    #[test]
+    fn split_wavefront0_partitions_and_balances() {
+        let a = gen::banded(2048, &[1, 2]);
+        let plan = Scheduler::new(SchedulerParams {
+            n_cores: 4,
+            cache_bytes: 256 * 1024,
+            elem_bytes: 8,
+            ct_size: 64,
+            max_split_depth: 24,
+            n_nodes: 2,
+        })
+        .schedule_op(&FusionOp { a: &a, b: BSide::Dense { bcol: 32 }, ccol: 32 });
+        let n_tiles = plan.wavefronts[0].len();
+        assert!(n_tiles >= 2);
+        for nodes in [1usize, 2, 3] {
+            let parts = split_wavefront0(&plan, nodes);
+            assert_eq!(parts.len(), nodes);
+            assert_eq!(parts[0].start, 0);
+            assert_eq!(parts.last().unwrap().end, n_tiles);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+        // 2-way split is reasonably balanced by iteration weight.
+        let parts = split_wavefront0(&plan, 2);
+        let weight = |r: &Range<usize>| -> usize {
+            plan.wavefronts[0][r.clone()].iter().map(|t| t.i_len() + t.j_len()).sum()
+        };
+        let (w0, w1) = (weight(&parts[0]), weight(&parts[1]));
+        let total = w0 + w1;
+        assert!(w0 > 0 && w1 > 0, "both nodes get work");
+        assert!(
+            w0 * 4 >= total && w1 * 4 >= total,
+            "split too lopsided: {w0} vs {w1}"
+        );
+    }
+}

@@ -102,7 +102,14 @@ mod tests {
     use crate::sparse::gen;
 
     fn params() -> SchedulerParams {
-        SchedulerParams { n_cores: 2, ct_size: 64, cache_bytes: usize::MAX, elem_bytes: 8, max_split_depth: 8 }
+        SchedulerParams {
+            n_cores: 2,
+            ct_size: 64,
+            cache_bytes: usize::MAX,
+            elem_bytes: 8,
+            max_split_depth: 8,
+            n_nodes: 1,
+        }
     }
 
     #[test]

@@ -1,0 +1,367 @@
+//! Machine topology: sockets / NUMA nodes and their CPU lists.
+//!
+//! Tile fusion's benefit is keeping a fused tile's working set resident
+//! in a core-local cache; on multi-socket machines that benefit is
+//! destroyed when a worker's strip workspace or packed panel lives on
+//! the remote node. Everything node-aware in the runtime hangs off this
+//! module's [`Topology`]:
+//!
+//! - the pool ([`crate::exec::pool`]) partitions workers into per-node
+//!   shards, pins threads to their node's CPUs (best-effort, behind the
+//!   `numa-pin` feature), and first-touches per-worker scratch on the
+//!   owning worker so buffers land node-local;
+//! - the scheduler charges a remote-access penalty when an execution
+//!   spans nodes ([`crate::scheduler::cost::CostModel::set_nodes`]) and
+//!   places work via [`crate::scheduler::place`];
+//! - the server ([`crate::coordinator::server`]) runs one dispatcher
+//!   shard per node.
+//!
+//! **Discovery** reads `/sys/devices/system/node/node*/cpulist` (every
+//! node id sorted ascending, so the layout is deterministic), falling
+//! back to a single node holding every available CPU when sysfs is
+//! absent. The `TF_TOPOLOGY` environment variable overrides discovery
+//! with a simulated layout — `TF_TOPOLOGY=2x8` means two nodes of eight
+//! CPUs — so tests, CI, and benches exercise multi-node code paths on
+//! any machine.
+
+use std::path::Path;
+
+/// One memory node (socket / NUMA node): its id and the CPUs local to it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeInfo {
+    /// Node index in `0..topology.n_nodes()` (dense, remapped from the
+    /// sysfs node numbers, which may have holes).
+    pub id: usize,
+    /// CPU ids local to this node, ascending.
+    pub cpus: Vec<usize>,
+}
+
+/// The machine layout the runtime plans against. Always holds ≥ 1 node
+/// and every node holds ≥ 1 CPU.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    nodes: Vec<NodeInfo>,
+    /// Whether the CPU ids are **real** (sysfs-discovered) — only then
+    /// may workers pin to them. Single-node fallbacks and `TF_TOPOLOGY`
+    /// simulations carry made-up block ids; pinning to those would
+    /// stack every pool onto the first few physical CPUs.
+    pinnable: bool,
+}
+
+impl Topology {
+    /// Uniform-memory fallback: one node with `n_cpus` CPUs (≥ 1).
+    pub fn single(n_cpus: usize) -> Self {
+        Self::simulated(1, n_cpus)
+    }
+
+    /// Simulated layout: `n_nodes` nodes of `cpus_per_node` CPUs each,
+    /// CPU ids assigned block-wise (node 0 gets `0..m`, node 1 gets
+    /// `m..2m`, ...). Deterministic — what `TF_TOPOLOGY=NxM` builds.
+    /// Simulated CPU ids are fictional, so simulated topologies are
+    /// never [`Topology::pinnable`].
+    pub fn simulated(n_nodes: usize, cpus_per_node: usize) -> Self {
+        let n_nodes = n_nodes.max(1);
+        let per = cpus_per_node.max(1);
+        let nodes = (0..n_nodes)
+            .map(|id| NodeInfo { id, cpus: (id * per..(id + 1) * per).collect() })
+            .collect();
+        Self { nodes, pinnable: false }
+    }
+
+    /// Discover the host layout: `TF_TOPOLOGY` override first, then
+    /// sysfs, then the single-node fallback sized to
+    /// `available_parallelism`.
+    pub fn detect() -> Self {
+        if let Ok(spec) = std::env::var("TF_TOPOLOGY") {
+            if let Some(t) = Self::from_spec(&spec) {
+                return t;
+            }
+        }
+        Self::from_sysfs(Path::new("/sys/devices/system/node")).unwrap_or_else(|| {
+            Self::single(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+        })
+    }
+
+    /// Parse a `TF_TOPOLOGY`-style spec: `NxM` = `N` nodes of `M` CPUs
+    /// (`2x8`, whitespace-tolerant, case-insensitive `x`). `None` when
+    /// malformed or zero-sized.
+    pub fn from_spec(spec: &str) -> Option<Self> {
+        let s = spec.trim().to_ascii_lowercase();
+        let (n, m) = s.split_once('x')?;
+        let n: usize = n.trim().parse().ok()?;
+        let m: usize = m.trim().parse().ok()?;
+        if n == 0 || m == 0 {
+            return None;
+        }
+        Some(Self::simulated(n, m))
+    }
+
+    /// Read `node*/cpulist` under `base`. `None` when the directory is
+    /// missing or holds no node with a readable, non-empty CPU list.
+    pub fn from_sysfs(base: &Path) -> Option<Self> {
+        let entries = std::fs::read_dir(base).ok()?;
+        let mut raw: Vec<(usize, Vec<usize>)> = Vec::new();
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            let Some(num) = name.strip_prefix("node") else { continue };
+            let Ok(num) = num.parse::<usize>() else { continue };
+            let Ok(list) = std::fs::read_to_string(e.path().join("cpulist")) else { continue };
+            let cpus = parse_cpulist(&list);
+            if !cpus.is_empty() {
+                raw.push((num, cpus));
+            }
+        }
+        if raw.is_empty() {
+            return None;
+        }
+        // Sort by sysfs node number, then remap ids densely.
+        raw.sort_by_key(|(num, _)| *num);
+        let nodes =
+            raw.into_iter().enumerate().map(|(id, (_, cpus))| NodeInfo { id, cpus }).collect();
+        Some(Self { nodes, pinnable: true })
+    }
+
+    /// Whether this layout's CPU ids are real physical ids workers may
+    /// pin to (sysfs discovery only; fallbacks and simulations are not).
+    pub fn pinnable(&self) -> bool {
+        self.pinnable
+    }
+
+    /// A single-node topology holding only node `node`'s CPUs — what a
+    /// per-node pool shard is built over (inherits pinnability).
+    pub fn node_only(&self, node: usize) -> Self {
+        let n = &self.nodes[node % self.nodes.len()];
+        Self { nodes: vec![NodeInfo { id: 0, cpus: n.cpus.clone() }], pinnable: self.pinnable }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Total CPU count across nodes.
+    pub fn n_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+
+    pub fn nodes(&self) -> &[NodeInfo] {
+        &self.nodes
+    }
+
+    pub fn node(&self, i: usize) -> &NodeInfo {
+        &self.nodes[i % self.nodes.len()]
+    }
+
+    /// Deterministic worker → node assignment for a pool of `n_threads`
+    /// executors: contiguous blocks, sized proportionally to each
+    /// node's CPU count (every worker gets a node; small pools may
+    /// leave trailing nodes unassigned).
+    pub fn assign_workers(&self, n_threads: usize) -> Vec<usize> {
+        let n_threads = n_threads.max(1);
+        let weights: Vec<usize> = self.nodes.iter().map(|n| n.cpus.len().max(1)).collect();
+        let total: usize = weights.iter().sum();
+        // bounds[k] = first worker id beyond node k's block (ceil of the
+        // proportional prefix), monotone and ending at n_threads.
+        let mut bounds = Vec::with_capacity(weights.len());
+        let mut acc = 0usize;
+        for w in &weights {
+            acc += *w;
+            bounds.push((n_threads * acc).div_ceil(total));
+        }
+        (0..n_threads)
+            .map(|w| bounds.iter().position(|&b| w < b).unwrap_or(self.nodes.len() - 1))
+            .collect()
+    }
+
+    /// Per-node thread counts for partitioning a pool of `n_threads`
+    /// into node shards: the [`Topology::assign_workers`] block sizes,
+    /// with empty blocks bumped to one thread so every shard can run.
+    pub fn shard_thread_counts(&self, n_threads: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_nodes()];
+        for node in self.assign_workers(n_threads) {
+            counts[node] += 1;
+        }
+        for c in counts.iter_mut() {
+            if *c == 0 {
+                *c = 1;
+            }
+        }
+        counts
+    }
+}
+
+/// Parse a sysfs CPU list (`"0-3,8,10-11"`) into ascending CPU ids.
+/// Malformed fragments are skipped (best-effort, like the kernel docs'
+/// readers do).
+pub fn parse_cpulist(list: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for part in list.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>()) {
+                if lo <= hi {
+                    cpus.extend(lo..=hi);
+                }
+            }
+        } else if let Ok(c) = part.parse::<usize>() {
+            cpus.push(c);
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    cpus
+}
+
+/// Pin the calling thread to `cpus` (best-effort). Returns whether the
+/// affinity call succeeded; always `false` (a no-op) off Linux or
+/// without the `numa-pin` feature, so unpinned builds behave exactly
+/// like the pre-topology runtime. Results are bitwise-identical either
+/// way — pinning moves threads, never work.
+#[cfg(all(target_os = "linux", feature = "numa-pin"))]
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    // Linux cpu_set_t is 1024 bits. The symbol comes from the libc every
+    // Rust binary on linux-gnu already links; no crate dependency.
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let mut mask = [0u64; 16];
+    let mut any = false;
+    for &c in cpus {
+        if c < 64 * mask.len() {
+            mask[c / 64] |= 1u64 << (c % 64);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+/// No-op fallback: off Linux or without the `numa-pin` feature.
+#[cfg(not(all(target_os = "linux", feature = "numa-pin")))]
+pub fn pin_current_thread(_cpus: &[usize]) -> bool {
+    false
+}
+
+/// Whether this build attempts thread pinning at all.
+pub fn pinning_compiled() -> bool {
+    cfg!(all(target_os = "linux", feature = "numa-pin"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_layout_is_blockwise() {
+        let t = Topology::simulated(2, 4);
+        assert_eq!(t.n_nodes(), 2);
+        assert_eq!(t.n_cpus(), 8);
+        assert_eq!(t.node(0).cpus, vec![0, 1, 2, 3]);
+        assert_eq!(t.node(1).cpus, vec![4, 5, 6, 7]);
+        // Degenerate sizes clamp to 1.
+        let t = Topology::simulated(0, 0);
+        assert_eq!((t.n_nodes(), t.n_cpus()), (1, 1));
+    }
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        assert_eq!(Topology::from_spec("2x8"), Some(Topology::simulated(2, 8)));
+        assert_eq!(Topology::from_spec(" 4 X 2 "), Some(Topology::simulated(4, 2)));
+        assert_eq!(Topology::from_spec("2x0"), None);
+        assert_eq!(Topology::from_spec("0x4"), None);
+        assert_eq!(Topology::from_spec("8"), None);
+        assert_eq!(Topology::from_spec("ax b"), None);
+        assert_eq!(Topology::from_spec(""), None);
+    }
+
+    #[test]
+    fn cpulist_parses_ranges_and_singletons() {
+        assert_eq!(parse_cpulist("0-3,8,10-11"), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist("3-3"), vec![3]);
+        assert_eq!(parse_cpulist(" 1 , 0 "), vec![0, 1]);
+        assert_eq!(parse_cpulist("junk,4,9-x"), vec![4]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        // Inverted ranges and duplicates collapse.
+        assert_eq!(parse_cpulist("7-5,2,2"), vec![2]);
+    }
+
+    #[test]
+    fn worker_assignment_is_proportional_and_monotone() {
+        let t = Topology::simulated(2, 4);
+        assert_eq!(t.assign_workers(8), vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        assert_eq!(t.assign_workers(4), vec![0, 0, 1, 1]);
+        assert_eq!(t.assign_workers(1), vec![0]);
+        assert_eq!(t.assign_workers(3), vec![0, 0, 1]);
+        // Monotone non-decreasing always (contiguous blocks).
+        for n in 1..20 {
+            let a = t.assign_workers(n);
+            assert_eq!(a.len(), n);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{a:?}");
+        }
+        // Uneven nodes weight the split.
+        let t = Topology {
+            nodes: vec![
+                NodeInfo { id: 0, cpus: vec![0] },
+                NodeInfo { id: 1, cpus: vec![1, 2, 3] },
+            ],
+            pinnable: false,
+        };
+        assert_eq!(t.assign_workers(4), vec![0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn shard_counts_cover_every_node() {
+        let t = Topology::simulated(2, 4);
+        assert_eq!(t.shard_thread_counts(8), vec![4, 4]);
+        assert_eq!(t.shard_thread_counts(1), vec![1, 1], "empty blocks bump to one thread");
+        let total: usize = t.shard_thread_counts(7).iter().sum();
+        assert!(total >= 7);
+    }
+
+    #[test]
+    fn node_only_restricts_cpus() {
+        let t = Topology::simulated(2, 3);
+        let n1 = t.node_only(1);
+        assert_eq!(n1.n_nodes(), 1);
+        assert_eq!(n1.node(0).cpus, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn detect_always_yields_a_usable_layout() {
+        let t = Topology::detect();
+        assert!(t.n_nodes() >= 1);
+        assert!(t.n_cpus() >= 1);
+        assert!(t.nodes().iter().all(|n| !n.cpus.is_empty()));
+    }
+
+    #[test]
+    fn only_sysfs_layouts_are_pinnable() {
+        // Fallbacks and simulations carry fictional CPU ids — pinning
+        // to them would stack pools onto the first physical CPUs.
+        assert!(!Topology::single(8).pinnable());
+        assert!(!Topology::simulated(2, 4).pinnable());
+        assert!(!Topology::from_spec("2x4").unwrap().pinnable());
+        assert!(!Topology::simulated(2, 4).node_only(1).pinnable());
+        if let Some(t) = Topology::from_sysfs(std::path::Path::new("/sys/devices/system/node"))
+        {
+            assert!(t.pinnable(), "sysfs discovery yields real CPU ids");
+            assert!(t.node_only(0).pinnable(), "shard topologies inherit pinnability");
+        }
+    }
+
+    #[test]
+    fn pinning_is_best_effort() {
+        // Must never panic; the unpinned build returns false.
+        let ok = pin_current_thread(&[0]);
+        if !pinning_compiled() {
+            assert!(!ok);
+        }
+        assert!(!pin_current_thread(&[]));
+    }
+}

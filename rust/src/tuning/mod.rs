@@ -18,6 +18,10 @@
 //! deterministic measure the winner replays identically, which the
 //! `TF_PROP_SEED` property suite pins down.
 
+pub mod persist;
+
+pub use persist::{TuneKey, TuneTable, TUNE_TABLE_VERSION};
+
 use crate::exec::StripMode;
 use crate::kernels::JB;
 use std::time::{Duration, Instant};

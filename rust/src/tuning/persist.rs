@@ -1,0 +1,293 @@
+//! Persisting [`StripTuner`](super::StripTuner) winners across process
+//! restarts.
+//!
+//! The tuner times candidate strip widths on the *first* execution of a
+//! (pattern, shape, element-width) key — cheap, but a freshly restarted
+//! service pays it again for every key it had already learned. The
+//! [`TuneTable`] is a versioned sidecar file of tuned picks, keyed by
+//! (pattern hash, operand shape, element width, **thread count**,
+//! **node count**): load-on-start seeds the schedule cache so known
+//! keys replay their winners with zero timing runs, best-effort
+//! write-on-shutdown saves what this process learned. Thread and node
+//! counts are part of the key because a pick timed on `p` workers over
+//! `n` memory nodes is not evidence about a differently shaped pool —
+//! a restarted service with a different pool retunes from scratch.
+//!
+//! The format is a line-oriented text table with a `tftune v<N>`
+//! header. Loading is best-effort by design: an unknown version yields
+//! an empty table (never an error — the file is a cache, not state),
+//! and malformed lines are skipped individually.
+
+use crate::exec::StripMode;
+use std::collections::HashMap;
+use std::io;
+use std::path::Path;
+
+/// Sidecar format version; bump on any layout change so stale files
+/// degrade to a cold (empty) table instead of misreads.
+pub const TUNE_TABLE_VERSION: u32 = 1;
+
+/// Everything a tuned pick's validity depends on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TuneKey {
+    /// `Pattern::structure_hash` of `A`.
+    pub a_hash: u64,
+    /// `Pattern::structure_hash` of sparse `B`, or `bcol` for dense `B`.
+    pub b_key: u64,
+    /// True when `B` is sparse (SpMM-SpMM).
+    pub b_sparse: bool,
+    /// Dense column count of the flowing operand.
+    pub ccol: usize,
+    /// Element width in bytes (4 = f32, 8 = f64).
+    pub elem_bytes: usize,
+    /// Worker count the pick was timed on.
+    pub n_threads: usize,
+    /// Memory nodes the pool spanned when timing: the remote-access
+    /// penalty shifts the model pick and the candidate set, so a pick
+    /// timed on a 1-node pool is stale on a 2-node pool of the same
+    /// thread count (perf-stale only — results are bitwise-identical
+    /// at any width).
+    pub n_nodes: usize,
+}
+
+/// The tuned-pick table a sidecar file round-trips.
+#[derive(Clone, Debug, Default)]
+pub struct TuneTable {
+    pub entries: HashMap<TuneKey, StripMode>,
+}
+
+fn mode_str(mode: StripMode) -> String {
+    match mode {
+        StripMode::Auto => "auto".into(),
+        StripMode::Full => "full".into(),
+        StripMode::Width(w) => w.to_string(),
+    }
+}
+
+fn parse_mode(s: &str) -> Option<StripMode> {
+    match s {
+        "auto" => Some(StripMode::Auto),
+        "full" => Some(StripMode::Full),
+        w => w.parse::<usize>().ok().map(StripMode::Width),
+    }
+}
+
+fn parse_line(line: &str) -> Option<(TuneKey, StripMode)> {
+    let mut it = line.split_whitespace();
+    let key = TuneKey {
+        a_hash: it.next()?.parse().ok()?,
+        b_key: it.next()?.parse().ok()?,
+        b_sparse: match it.next()? {
+            "0" => false,
+            "1" => true,
+            _ => return None,
+        },
+        ccol: it.next()?.parse().ok()?,
+        elem_bytes: it.next()?.parse().ok()?,
+        n_threads: it.next()?.parse().ok()?,
+        n_nodes: it.next()?.parse().ok()?,
+    };
+    let mode = parse_mode(it.next()?)?;
+    if it.next().is_some() {
+        return None; // trailing garbage: treat the line as corrupt
+    }
+    Some((key, mode))
+}
+
+impl TuneTable {
+    /// Parse a sidecar file. Wrong/unknown versions and malformed lines
+    /// degrade to fewer entries, never to errors; only I/O itself can
+    /// fail.
+    pub fn load(path: &Path) -> io::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text))
+    }
+
+    /// Parse sidecar text (the I/O-free core of [`TuneTable::load`]).
+    pub fn parse(text: &str) -> Self {
+        let mut table = Self::default();
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or("");
+        if header.trim() != format!("tftune v{TUNE_TABLE_VERSION}") {
+            return table;
+        }
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((key, mode)) = parse_line(line) {
+                table.entries.insert(key, mode);
+            }
+        }
+        table
+    }
+
+    /// Serialize to sidecar text (sorted, so writes are reproducible).
+    pub fn render(&self) -> String {
+        let mut entries: Vec<(&TuneKey, &StripMode)> = self.entries.iter().collect();
+        entries.sort_by_key(|(k, _)| {
+            (k.a_hash, k.b_key, k.b_sparse, k.ccol, k.elem_bytes, k.n_threads, k.n_nodes)
+        });
+        let mut out = format!("tftune v{TUNE_TABLE_VERSION}\n");
+        for (k, m) in entries {
+            out.push_str(&format!(
+                "{} {} {} {} {} {} {} {}\n",
+                k.a_hash,
+                k.b_key,
+                u8::from(k.b_sparse),
+                k.ccol,
+                k.elem_bytes,
+                k.n_threads,
+                k.n_nodes,
+                mode_str(*m)
+            ));
+        }
+        out
+    }
+
+    /// Write the table atomically-ish (temp file + rename, so a crashed
+    /// writer never leaves a torn sidecar for the next load).
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        let tmp = path.with_extension("tftune.tmp");
+        std::fs::write(&tmp, self.render())?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Merge-save: overlay this table's entries onto whatever the
+    /// sidecar already holds (this table wins on key collisions), then
+    /// write the union. Keys carry the pool shape, so one sidecar can
+    /// hold picks for several (thread-count, node-count) shapes — a
+    /// differently shaped process's shutdown must not erase them.
+    /// Returns how many entries the written file holds.
+    pub fn save_merged(&self, path: &Path) -> io::Result<usize> {
+        let mut merged = Self::load(path).unwrap_or_default();
+        for (k, m) in &self.entries {
+            merged.entries.insert(*k, *m);
+        }
+        merged.save(path)?;
+        Ok(merged.entries.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: u64) -> TuneKey {
+        TuneKey {
+            a_hash: n,
+            b_key: 10 + n,
+            b_sparse: n % 2 == 0,
+            ccol: 64,
+            elem_bytes: 8,
+            n_threads: 4,
+            n_nodes: 1,
+        }
+    }
+
+    #[test]
+    fn round_trips_every_mode() {
+        let mut t = TuneTable::default();
+        t.entries.insert(key(1), StripMode::Full);
+        t.entries.insert(key(2), StripMode::Auto);
+        t.entries.insert(key(3), StripMode::Width(96));
+        let back = TuneTable::parse(&t.render());
+        assert_eq!(back.entries.len(), 3);
+        assert_eq!(back.entries[&key(1)], StripMode::Full);
+        assert_eq!(back.entries[&key(2)], StripMode::Auto);
+        assert_eq!(back.entries[&key(3)], StripMode::Width(96));
+        // Rendering is stable (sorted): render(parse(render)) == render.
+        assert_eq!(TuneTable::parse(&t.render()).render(), t.render());
+    }
+
+    #[test]
+    fn unknown_version_degrades_to_empty() {
+        let mut t = TuneTable::default();
+        t.entries.insert(key(1), StripMode::Width(32));
+        let text = t.render().replacen("tftune v1", "tftune v999", 1);
+        assert!(TuneTable::parse(&text).entries.is_empty());
+        assert!(TuneTable::parse("").entries.is_empty());
+        assert!(TuneTable::parse("garbage\n1 2 0 4 8 2 1 full\n").entries.is_empty());
+    }
+
+    #[test]
+    fn malformed_lines_are_skipped_individually() {
+        let text = format!(
+            "tftune v{TUNE_TABLE_VERSION}\n\
+             # comment\n\
+             \n\
+             1 11 0 64 8 4 1 full\n\
+             not a line\n\
+             2 12 1 64 8 4 2 48\n\
+             3 13 2 64 8 4 1 full\n\
+             4 14 0 64 8 4 1 full extra\n\
+             5 15 0 64 8 4 1 maybe\n"
+        );
+        let t = TuneTable::parse(&text);
+        assert_eq!(t.entries.len(), 2, "only the two well-formed lines survive");
+        assert_eq!(
+            t.entries[&TuneKey {
+                a_hash: 2,
+                b_key: 12,
+                b_sparse: true,
+                ccol: 64,
+                elem_bytes: 8,
+                n_threads: 4,
+                n_nodes: 2
+            }],
+            StripMode::Width(48)
+        );
+    }
+
+    #[test]
+    fn save_merged_preserves_other_pool_shapes() {
+        let path = std::env::temp_dir().join(format!(
+            "tf_tune_merge_{}_{}.tftune",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        // Shape A writes its pick.
+        let ka = TuneKey { n_threads: 2, ..key(1) };
+        let mut ta = TuneTable::default();
+        ta.entries.insert(ka, StripMode::Width(32));
+        assert_eq!(ta.save_merged(&path).unwrap(), 1, "fresh file holds shape A");
+        // Shape B's shutdown must not erase shape A's entry.
+        let kb = TuneKey { n_threads: 8, ..key(1) };
+        let mut tb = TuneTable::default();
+        tb.entries.insert(kb, StripMode::Full);
+        assert_eq!(tb.save_merged(&path).unwrap(), 2, "union of both shapes");
+        let back = TuneTable::load(&path).unwrap();
+        assert_eq!(back.entries[&ka], StripMode::Width(32));
+        assert_eq!(back.entries[&kb], StripMode::Full);
+        // Collisions: the saving table wins.
+        let mut tc = TuneTable::default();
+        tc.entries.insert(ka, StripMode::Full);
+        assert_eq!(tc.save_merged(&path).unwrap(), 2);
+        assert_eq!(TuneTable::load(&path).unwrap().entries[&ka], StripMode::Full);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_and_load_via_file() {
+        let mut t = TuneTable::default();
+        t.entries.insert(key(7), StripMode::Width(128));
+        let path = std::env::temp_dir().join(format!(
+            "tf_tune_test_{}_{}.tftune",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        t.save(&path).expect("save sidecar");
+        let back = TuneTable::load(&path).expect("load sidecar");
+        assert_eq!(back.entries, t.entries);
+        let _ = std::fs::remove_file(&path);
+        // A missing file is an I/O error (callers treat it as cold).
+        assert!(TuneTable::load(Path::new("/nonexistent/tf.tftune")).is_err());
+    }
+}

@@ -20,7 +20,8 @@ pub fn random_pattern(rng: &mut XorShift64) -> Pattern {
 }
 
 /// Random scheduler parameterization (cores, cache budget, element
-/// width, coarse tile size).
+/// width, coarse tile size, node count — multi-node draws exercise the
+/// remote-access penalty across the whole property grid).
 pub fn random_params(rng: &mut XorShift64) -> SchedulerParams {
     SchedulerParams {
         n_cores: 1 + rng.next_range(8),
@@ -28,6 +29,7 @@ pub fn random_params(rng: &mut XorShift64) -> SchedulerParams {
         elem_bytes: if rng.next_bool(0.5) { 4 } else { 8 },
         ct_size: 1 << (2 + rng.next_range(8)),
         max_split_depth: 24,
+        n_nodes: 1 + rng.next_range(2),
     }
 }
 

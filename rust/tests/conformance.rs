@@ -524,3 +524,52 @@ fn conformance_chain_exec_f32() {
         assert!(diff < tol, "f32 chain diverged: {diff:.3e} > {tol:.3e}");
     });
 }
+
+#[test]
+fn conformance_topology_node_and_spanning_leases_bitwise() {
+    // Topology-aware execution must be invisible to results: the same
+    // bound executor run on a node-shard lease (any shard), on the
+    // whole-pool (spanning) lease, or on a single thread produces
+    // bitwise-identical output for the deterministic strategies —
+    // pinning on or off (the topology-sim CI job runs this under
+    // TF_TOPOLOGY=2x4, with and without the numa-pin feature).
+    let detected = Topology::detect(); // picks up TF_TOPOLOGY in CI
+    for topo in [Topology::simulated(2, 2), detected] {
+        let pool = SharedPool::with_topology(4, topo);
+        let mut rng = XorShift64::new(0x70b0);
+        for case in 0..3 {
+            let pat = random_pattern(&mut rng);
+            let a = Csr::<f64>::with_random_values(pat, rng.next_u64(), -1.0, 1.0);
+            let bcol = 1 + rng.next_range(16);
+            let ccol = 1 + rng.next_range(16);
+            let b = Dense::<f64>::randn(a.cols(), bcol, rng.next_u64());
+            let c = Dense::<f64>::randn(bcol, ccol, rng.next_u64());
+            let op = PairOp::gemm_spmm(&a, &b);
+            let mut params = random_params(&mut rng);
+            params.elem_bytes = 8;
+            params.n_nodes = pool.n_nodes();
+            let plan = Scheduler::new(params).schedule(&a.pattern, bcol, ccol);
+
+            // Single-thread baseline.
+            let single = ThreadPool::new(1);
+            let mut expect_f = Dense::zeros(a.rows(), ccol);
+            Fused::new(op, &plan).run(&single, &c, &mut expect_f);
+            let mut expect_u = Dense::zeros(a.rows(), ccol);
+            Unfused::new(op).run(&single, &c, &mut expect_u);
+
+            for shard in 0..pool.n_shards() {
+                let lease = pool.lease_shard(shard);
+                let mut d = Dense::zeros(a.rows(), ccol);
+                Fused::new(op, &plan).run(&lease, &c, &mut d);
+                assert_eq!(d.data, expect_f.data, "case {case} shard {shard} fused");
+                let mut d = Dense::zeros(a.rows(), ccol);
+                Unfused::new(op).run(&lease, &c, &mut d);
+                assert_eq!(d.data, expect_u.data, "case {case} shard {shard} unfused");
+            }
+            let all = pool.lease();
+            let mut d = Dense::zeros(a.rows(), ccol);
+            Fused::new(op, &plan).run(&all, &c, &mut d);
+            assert_eq!(d.data, expect_f.data, "case {case} spanning lease fused");
+        }
+    }
+}

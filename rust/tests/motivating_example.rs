@@ -38,6 +38,7 @@ fn params() -> SchedulerParams {
         cache_bytes: usize::MAX, // no step-2 splitting: isolate step 1
         elem_bytes: 8,
         max_split_depth: 8,
+        n_nodes: 1,
     }
 }
 

@@ -597,7 +597,7 @@ fn prop_spgemm_output_csr_invariants() {
         let pool = ThreadPool::new(1 + rng.next_range(4));
         let mut ws = SpgemmWs::<f64>::new();
         let mut par = tile_fusion::sparse::Csr::<f64>::empty(0, 0);
-        run_spgemm(&pool, &a, &b, &mut ws, &mut par);
+        run_spgemm(&pool, &a, &b, &mut ws, &mut par, 0.0);
         assert_eq!(par, c, "parallel SpGEMM must match the serial kernel bitwise");
     });
 }
@@ -645,6 +645,190 @@ fn prop_spgemm_format_decision_deterministic() {
             decide_spgemm_output(&est, eb, StepOutputMode::SparseCsr),
             StepOutput::SparseCsr
         );
+    });
+}
+
+#[test]
+fn prop_spgemm_drop_tol_parallel_matches_serial_bitwise() {
+    // The parallel three-phase SpGEMM driver honors a nonzero drop
+    // tolerance with the serial builder's accumulation order and keep
+    // predicate, so the result is bitwise-identical to the serial
+    // kernel at any thread count and any tolerance.
+    check_prop("spgemm-drop-tol", 20, |rng| {
+        use tile_fusion::exec::spgemm::{run_spgemm, SpgemmWs};
+        use tile_fusion::kernels::spgemm;
+
+        let ra = 8 + rng.next_range(64);
+        let k = 8 + rng.next_range(64);
+        let cb = 8 + rng.next_range(64);
+        let a = Csr::<f64>::with_random_values(
+            gen::uniform_random(ra, k, 1 + rng.next_range(6), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        );
+        let b = Csr::<f64>::with_random_values(
+            gen::uniform_random(k, cb, 1 + rng.next_range(6), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        );
+        let tol = [1e-6, 0.01, 0.1, 0.5][rng.next_range(4)];
+        let serial = spgemm(&a, &b, tol);
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+        let mut ws = SpgemmWs::<f64>::new();
+        let mut par = Csr::<f64>::empty(0, 0);
+        run_spgemm(&pool, &a, &b, &mut ws, &mut par, tol);
+        assert_eq!(par, serial, "parallel drop-tol SpGEMM must be bitwise-serial");
+        assert!(par.check_invariants());
+        assert!(par.data.iter().all(|v| v.abs() > tol), "no kept entry at or below tol");
+        // Reusing the same workspaces back at tol 0 still matches (no
+        // tolerance state leaks between runs).
+        run_spgemm(&pool, &a, &b, &mut ws, &mut par, 0.0);
+        assert_eq!(par, spgemm(&a, &b, 0.0));
+    });
+}
+
+#[test]
+fn prop_topology_spec_parse_and_worker_assignment() {
+    // TF_TOPOLOGY-style specs parse deterministically and worker
+    // assignment always yields contiguous in-range per-node blocks
+    // whose shard thread counts cover every node.
+    check_prop("topology-spec", 30, |rng| {
+        let nodes = 1 + rng.next_range(4);
+        let per = 1 + rng.next_range(8);
+        let t = Topology::from_spec(&format!("{nodes}x{per}")).expect("well-formed spec");
+        assert_eq!(t.n_nodes(), nodes);
+        assert_eq!(t.n_cpus(), nodes * per);
+        assert_eq!(Some(t.clone()), Topology::from_spec(&format!(" {nodes} X {per} ")));
+        let threads = 1 + rng.next_range(16);
+        let assign = t.assign_workers(threads);
+        assert_eq!(assign.len(), threads);
+        assert!(assign.windows(2).all(|w| w[0] <= w[1]), "contiguous blocks: {assign:?}");
+        assert!(assign.iter().all(|&n| n < nodes), "in range: {assign:?}");
+        let counts = t.shard_thread_counts(threads);
+        assert_eq!(counts.len(), nodes);
+        assert!(counts.iter().all(|&c| c >= 1), "every shard can run: {counts:?}");
+        assert!(counts.iter().sum::<usize>() >= threads);
+    });
+}
+
+#[test]
+fn prop_topology_node_leases_are_isolated() {
+    // Lease::Node isolation: two threads holding different node-shard
+    // leases of one SharedPool execute concurrently, and each result is
+    // bitwise-equal to a serial (1-thread) run — shard executions can
+    // never observe each other. TF_PROP_SEED-replayable like the rest
+    // of the suite.
+    check_prop("topology-node-lease-isolation", 6, |rng| {
+        let pool = SharedPool::with_topology(4, Topology::simulated(2, 2));
+        let n = 48 + rng.next_range(64);
+        let a =
+            Csr::<f64>::with_random_values(gen::banded(n, &[1, 2]), rng.next_u64(), -1.0, 1.0);
+        let b = Dense::<f64>::randn(n, 8, rng.next_u64());
+        let c0 = Dense::<f64>::randn(8, 6, rng.next_u64());
+        let c1 = Dense::<f64>::randn(8, 6, rng.next_u64());
+        let serial = |c: &Dense<f64>| {
+            let mut d = Dense::zeros(n, 6);
+            let mut ex = Unfused::new(PairOp::gemm_spmm(&a, &b));
+            ex.run(&ThreadPool::new(1), c, &mut d);
+            d
+        };
+        let (e0, e1) = (serial(&c0), serial(&c1));
+        let (d0, d1) = std::thread::scope(|s| {
+            let h0 = s.spawn(|| {
+                let lease = pool.lease_shard(0);
+                let mut d = Dense::zeros(n, 6);
+                let mut ex = Unfused::new(PairOp::gemm_spmm(&a, &b));
+                ex.run(&lease, &c0, &mut d);
+                d
+            });
+            let h1 = s.spawn(|| {
+                let lease = pool.lease_shard(1);
+                let mut d = Dense::zeros(n, 6);
+                let mut ex = Unfused::new(PairOp::gemm_spmm(&a, &b));
+                ex.run(&lease, &c1, &mut d);
+                d
+            });
+            (h0.join().unwrap(), h1.join().unwrap())
+        });
+        assert_eq!(d0.data, e0.data, "shard-0 run must be bitwise-serial");
+        assert_eq!(d1.data, e1.data, "shard-1 run must be bitwise-serial");
+    });
+}
+
+#[test]
+fn prop_topology_shard_isolation_bitwise() {
+    // Two dispatcher shards executing different keys concurrently must
+    // produce results bitwise-equal to solo (serial) submission — the
+    // sharded server's correctness contract, replayable via
+    // TF_PROP_SEED.
+    check_prop("topology-shard-isolation", 4, |rng| {
+        use tile_fusion::coordinator::server::{BRef, PairRequest};
+        use tile_fusion::coordinator::{Priority, Server, ServerConfig, Strategy};
+
+        let pool = SharedPool::with_topology(4, Topology::simulated(2, 2));
+        let srv: Server<f64> =
+            Server::with_config(pool, SchedulerParams::default(), ServerConfig::default());
+        assert_eq!(srv.n_shards(), 2);
+        let n = 64 + rng.next_range(64);
+        let a0 =
+            Csr::<f64>::with_random_values(gen::banded(n, &[1, 2]), rng.next_u64(), -1.0, 1.0);
+        let a1 = Csr::<f64>::with_random_values(
+            gen::erdos_renyi(n, 3, rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        );
+        srv.register_matrix("A0", a0.clone());
+        srv.register_matrix("A1", a1.clone());
+        let bcol = 8 + rng.next_range(16);
+        let ccol = 4 + rng.next_range(12);
+        let b = Dense::<f64>::randn(n, bcol, rng.next_u64());
+        srv.register_dense("B", b.clone());
+
+        // Solo expectation: Unfused is deterministic and schedule-free,
+        // so the solo result is the 1-thread run, bit for bit.
+        let cs: Vec<Dense<f64>> =
+            (0..8u64).map(|i| Dense::randn(bcol, ccol, rng.next_u64().wrapping_add(i))).collect();
+        let solo: Vec<Dense<f64>> = cs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let aref = if i % 2 == 0 { &a0 } else { &a1 };
+                let mut d = Dense::zeros(n, ccol);
+                let mut ex = Unfused::new(PairOp::gemm_spmm(aref, &b));
+                ex.run(&ThreadPool::new(1), c, &mut d);
+                d
+            })
+            .collect();
+
+        let tickets: Vec<_> = cs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                srv.submit_pair(
+                    (i % 2) as u64,
+                    Priority::Bulk,
+                    PairRequest {
+                        a: if i % 2 == 0 { "A0".into() } else { "A1".into() },
+                        b: BRef::Dense("B".into()),
+                        cs: vec![c.clone()],
+                        strategy: Strategy::Unfused,
+                    },
+                )
+                .unwrap()
+            })
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let reply = t.wait().unwrap();
+            assert_eq!(
+                reply.ds[0].data, solo[i].data,
+                "request {i}: sharded result must be bitwise-equal to solo"
+            );
+        }
+        let m = srv.shutdown();
+        assert_eq!(m.requests, 8);
     });
 }
 
