@@ -1,0 +1,100 @@
+//! Figure 18 (repo extension): cross-step pipelining vs per-step
+//! barriers across chain depth — the same bound `ChainExec` (solver
+//! chain, `len` SpMM-SpMM steps over one banded `A`) timed with every
+//! boundary forced to a barrier (the pre-DAG world: a whole-pool
+//! barrier drains each step before the next may start) versus the
+//! cross-step dependence DAG (`run_pipelined`: a step-`s+1` tile starts
+//! as soon as the step-`s` rows it reads are final).
+//!
+//! Expectation (acceptance): at full scale the pipelined run is at
+//! least 1.15× the barriered run at depth ≥ 3 — deeper chains expose
+//! more overlap per barrier removed — and the two arms are bitwise
+//! identical at every depth and thread count (asserted in both modes;
+//! the speedup bound only at full scale).
+//!
+//! `--smoke` runs a tiny shape for CI bitrot checks (equality still
+//! asserted, no speedup assertion).
+
+use std::sync::Arc;
+use tile_fusion::harness::{bench_params, print_table, write_csv, BenchEnv};
+use tile_fusion::prelude::*;
+use tile_fusion::profiling;
+use tile_fusion::sparse::gen::SuiteScale;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let env = BenchEnv::from_env();
+    let (n, rhs) = if smoke {
+        (256usize, 16usize)
+    } else {
+        match env.scale {
+            SuiteScale::Small => (2048, 32),
+            SuiteScale::Bench => (8192, 64),
+        }
+    };
+    let depths: &[usize] = if smoke { &[1, 2, 3] } else { &[1, 2, 3, 4, 6] };
+    let pool = ThreadPool::new(env.threads);
+    let params = bench_params::<f64>(env.threads);
+    // Banded A: cross-step row dependencies stay near the diagonal, so
+    // most DAG edges resolve tile-locally — the shape pipelining is for.
+    let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(n, &[1, 2, 3]), 1, -1.0, 1.0));
+    let x = Dense::<f64>::randn(n, rhs, 7);
+    let mk_ops = |len: usize| -> Vec<ChainStepOp<f64>> {
+        (0..len)
+            .map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+            .collect()
+    };
+
+    let mut table = Vec::new();
+    let mut csv = Vec::new();
+    for &depth in depths {
+        let mut barriered =
+            ChainExec::plan_and_build(mk_ops(depth), n, rhs, params).expect("bind chain");
+        barriered.force_barriers();
+        let mut pipelined =
+            ChainExec::plan_and_build(mk_ops(depth), n, rhs, params).expect("bind chain");
+        let overlap = pipelined.can_pipeline();
+
+        // Bitwise equality first (any scale): both arms run the same
+        // kernel sequence per output row, only ordered differently.
+        let mut d_bar = Dense::zeros(n, rhs);
+        let mut d_pipe = Dense::zeros(n, rhs);
+        barriered.run_pipelined(&pool, &x, &mut d_bar);
+        pipelined.run_pipelined(&pool, &x, &mut d_pipe);
+        assert_eq!(
+            d_bar.data, d_pipe.data,
+            "pipelined must be bitwise-equal to barriered at depth {depth}"
+        );
+
+        let t_bar =
+            profiling::measure(1, env.reps, || barriered.run_pipelined(&pool, &x, &mut d_bar))
+                .as_secs_f64();
+        let t_pipe =
+            profiling::measure(1, env.reps, || pipelined.run_pipelined(&pool, &x, &mut d_pipe))
+                .as_secs_f64();
+        let speedup = t_bar / t_pipe;
+        table.push(vec![
+            depth.to_string(),
+            if overlap { "yes" } else { "no" }.to_string(),
+            format!("{:.3}", t_bar * 1e3),
+            format!("{:.3}", t_pipe * 1e3),
+            format!("{speedup:.2}"),
+        ]);
+        csv.push(format!("{depth},{n},{rhs},{t_bar:.6},{t_pipe:.6}"));
+        if !smoke && depth >= 3 {
+            assert!(
+                speedup >= 1.15,
+                "pipelined must be ≥ 1.15× barriered at depth {depth}: \
+                 {t_pipe:.4}s vs {t_bar:.4}s ({speedup:.2}×)"
+            );
+        }
+    }
+    print_table(
+        &format!(
+            "Figure 18 — cross-step pipelining vs barriers (SpMM-SpMM chain, n={n}, rhs={rhs})"
+        ),
+        &["depth", "pipelines", "barrier ms", "pipelined ms", "speedup"],
+        &table,
+    );
+    write_csv("fig18_pipeline_depth", "depth,n,rhs,t_barriered,t_pipelined", &csv);
+}

@@ -330,6 +330,125 @@ impl ScheduleCache {
     }
 }
 
+/// [`ScheduleCache`] partitioned by coalesce-key hash — the sharded
+/// server's replacement for one cache-wide mutex. Each partition is an
+/// independent LRU'd `ScheduleCache` behind its own lock; a key's
+/// partition is picked by the same `DefaultHasher` the dispatcher uses
+/// to pick a request's home shard, so the common case — every
+/// dispatcher planning its own shard's keys — takes disjoint locks.
+/// Semantics per key (seed_tuned / tuned_snapshot / LRU bound) are
+/// exactly those of the partition that owns it; the whole-cache LRU
+/// bound becomes a per-partition bound, which only changes *which*
+/// entry is evicted under a skewed key distribution, never whether a
+/// rebuilt entry is re-seeded.
+pub struct ShardedScheduleCache {
+    params: SchedulerParams,
+    parts: Vec<Mutex<ScheduleCache>>,
+}
+
+impl ShardedScheduleCache {
+    /// `n_parts` partitions, splitting [`DEFAULT_CAPACITY`] between
+    /// them.
+    pub fn new(params: SchedulerParams, n_parts: usize) -> Self {
+        Self::with_capacity(params, n_parts, DEFAULT_CAPACITY)
+    }
+
+    /// `n_parts` partitions (≥ 1) holding `capacity` entries in total —
+    /// each partition gets the ceiling share so the summed bound never
+    /// undershoots the requested one.
+    pub fn with_capacity(params: SchedulerParams, n_parts: usize, capacity: usize) -> Self {
+        let n = n_parts.max(1);
+        let per = capacity.div_ceil(n).max(1);
+        Self {
+            params,
+            parts: (0..n).map(|_| Mutex::new(ScheduleCache::with_capacity(params, per))).collect(),
+        }
+    }
+
+    pub fn params(&self) -> SchedulerParams {
+        self.params
+    }
+
+    pub fn n_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Which partition owns `key` — `DefaultHasher` over the key, the
+    /// same family of hash the server's `home_shard` uses, so keys that
+    /// land on one dispatcher also land on one partition.
+    fn index(&self, key: &ScheduleKey) -> usize {
+        if self.parts.len() == 1 {
+            return 0;
+        }
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() % self.parts.len() as u64) as usize
+    }
+
+    /// Lock the partition that owns `op`'s key. Callers hold exactly
+    /// one partition at a time (never two — partition locks have no
+    /// order between them) and follow the same discipline as the old
+    /// cache-wide mutex: partition before metrics, partition before a
+    /// [`TuneCell`] slot.
+    pub fn lock_for(&self, op: &FusionOp) -> MutexGuard<'_, ScheduleCache> {
+        let key = ScheduleKey::for_op(op, self.params.elem_bytes.max(1));
+        self.parts[self.index(&key)].lock().unwrap()
+    }
+
+    /// Total (len, hits, misses) across partitions, locked one at a
+    /// time.
+    pub fn stats(&self) -> (usize, u64, u64) {
+        let mut out = (0usize, 0u64, 0u64);
+        for p in &self.parts {
+            let c = p.lock().unwrap();
+            out.0 += c.len();
+            out.1 += c.hits;
+            out.2 += c.misses;
+        }
+        out
+    }
+
+    /// Total evictions across partitions.
+    pub fn evictions(&self) -> u64 {
+        self.parts.iter().map(|p| p.lock().unwrap().evictions).sum()
+    }
+
+    /// Route every matching pick in `table` to its owning partition
+    /// (see [`ScheduleCache::seed_from_table`]); returns how many were
+    /// loaded.
+    pub fn seed_from_table(
+        &self,
+        table: &crate::tuning::TuneTable,
+        n_threads: usize,
+        n_nodes: usize,
+    ) -> usize {
+        let mut n = 0usize;
+        for (k, mode) in &table.entries {
+            if k.n_threads != n_threads || k.n_nodes != n_nodes {
+                continue;
+            }
+            let key = ScheduleKey::from_tune_key(k);
+            self.parts[self.index(&key)].lock().unwrap().seed_tuned(key, *mode);
+            n += 1;
+        }
+        n
+    }
+
+    /// Merge every partition's tuned snapshot into one persistable
+    /// table (partitions own disjoint keys, so the merge never
+    /// conflicts).
+    pub fn to_tune_table(&self, n_threads: usize, n_nodes: usize) -> crate::tuning::TuneTable {
+        let mut table = crate::tuning::TuneTable::default();
+        for p in &self.parts {
+            for (k, m) in p.lock().unwrap().tuned_snapshot() {
+                table.entries.insert(k.tune_key(n_threads, n_nodes), m);
+            }
+        }
+        table
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -485,5 +604,76 @@ mod tests {
 
         // The slot is the entry's: a fresh lookup sees the same cell.
         assert!(Arc::ptr_eq(&cell_x, &cache.tune_cell(&op_x).unwrap()));
+    }
+
+    #[test]
+    fn sharded_cache_routes_each_key_to_one_partition() {
+        let a = gen::poisson2d(16, 16);
+        let sharded = ShardedScheduleCache::with_capacity(SchedulerParams::default(), 4, 64);
+        assert_eq!(sharded.n_parts(), 4);
+        // Repeated lookups of one key must hit the same partition's
+        // entry: 1 miss then hits, never a rebuild elsewhere.
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 32 }, ccol: 32 };
+        let p1 = sharded.lock_for(&op).get_or_build(&op);
+        let p2 = sharded.lock_for(&op).get_or_build(&op);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        let (len, hits, misses) = sharded.stats();
+        assert_eq!((len, hits, misses), (1, 1, 1));
+        // Distinct shapes spread over partitions but each stays
+        // internally consistent: total len equals distinct keys.
+        for ccol in 1..=16usize {
+            let op = FusionOp { a: &a, b: BSide::Dense { bcol: 8 }, ccol };
+            sharded.lock_for(&op).get_or_build(&op);
+            sharded.lock_for(&op).get_or_build(&op);
+        }
+        let (len, hits, misses) = sharded.stats();
+        assert_eq!(len, 17);
+        assert_eq!(misses, 17);
+        assert_eq!(hits, 17);
+        assert_eq!(sharded.evictions(), 0);
+    }
+
+    #[test]
+    fn sharded_cache_bounds_each_partition() {
+        let a = gen::banded(32, &[1]);
+        // Total capacity 4 over 2 partitions → 2 per partition. Insert
+        // many distinct keys: every partition obeys its own bound, so
+        // total live entries never exceed parts × per-partition cap.
+        let sharded = ShardedScheduleCache::with_capacity(SchedulerParams::default(), 2, 4);
+        for ccol in 1..=32usize {
+            let op = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol };
+            sharded.lock_for(&op).get_or_build(&op);
+        }
+        let (len, _, misses) = sharded.stats();
+        assert!(len <= 4, "per-partition LRU bound holds: {len} live");
+        assert_eq!(misses, 32);
+        assert_eq!(sharded.evictions(), 32 - len as u64);
+    }
+
+    #[test]
+    fn sharded_cache_merges_tuned_snapshots() {
+        use crate::exec::StripMode;
+        let a = gen::banded(64, &[1, 2]);
+        let sharded = ShardedScheduleCache::with_capacity(SchedulerParams::default(), 4, 16);
+        let ops: Vec<FusionOp> = (1..=6usize)
+            .map(|ccol| FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol })
+            .collect();
+        for (i, op) in ops.iter().enumerate() {
+            let mut part = sharded.lock_for(op);
+            part.get_or_build(op);
+            part.set_tuned_strip(op, StripMode::Width(8 * (i + 1)));
+        }
+        // Round-trip through the persistence table: every pick lands in
+        // its owning partition again and replays.
+        let table = sharded.to_tune_table(3, 1);
+        assert_eq!(table.entries.len(), 6);
+        let reloaded = ShardedScheduleCache::with_capacity(SchedulerParams::default(), 4, 16);
+        assert_eq!(reloaded.seed_from_table(&table, 3, 1), 6);
+        assert_eq!(reloaded.seed_from_table(&table, 2, 1), 0, "pool-shape mismatch loads nothing");
+        for (i, op) in ops.iter().enumerate() {
+            let mut part = reloaded.lock_for(op);
+            part.get_or_build(op);
+            assert_eq!(part.tuned_strip(op), Some(StripMode::Width(8 * (i + 1))));
+        }
     }
 }

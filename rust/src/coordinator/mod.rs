@@ -22,7 +22,8 @@
 //!   same-key requests into batched executions, applies admission
 //!   control (queue bound, per-tenant in-flight caps, `Busy`
 //!   backpressure), and lets latency-sensitive pairs overtake bulk
-//!   chains at step boundaries. The synchronous [`Coordinator`] stays
+//!   chains at pipelined DAG drain points. The synchronous
+//!   [`Coordinator`] stays
 //!   as the single-caller engine; both share workers through
 //!   [`SharedPool`](crate::exec::SharedPool) leases.
 
@@ -32,7 +33,7 @@ pub mod server;
 pub mod service;
 pub mod ticket;
 
-pub use cache::{ScheduleCache, ScheduleKey, TuneCell};
+pub use cache::{ScheduleCache, ScheduleKey, ShardedScheduleCache, TuneCell};
 pub use queue::{BoundedQueue, Priority};
 pub use server::{ServeReply, Server, ServerConfig};
 pub use service::{

@@ -112,6 +112,15 @@ impl<J> BoundedQueue<J> {
         self.len() == 0
     }
 
+    /// Jobs currently queued on the latency tier only — the probe a
+    /// dispatcher running **stolen** bulk work uses at chain drain
+    /// points: yield to the home latency tier only when something is
+    /// actually waiting there, so stolen throughput work pays for the
+    /// check only when it matters.
+    pub fn latency_len(&self) -> usize {
+        self.state.lock().unwrap().latency.len()
+    }
+
     /// Non-blocking enqueue: `Err(Full)` at capacity, `Err(Closed)`
     /// after [`BoundedQueue::close`]. The admission-control entry.
     pub fn try_push(&self, pri: Priority, job: J) -> Result<(), PushError<J>> {
@@ -268,9 +277,11 @@ mod tests {
         let q = BoundedQueue::new(8);
         q.try_push(Priority::Bulk, 10).unwrap();
         q.try_push(Priority::Bulk, 11).unwrap();
+        assert_eq!(q.latency_len(), 0, "bulk jobs are invisible to the latency probe");
         q.try_push(Priority::Latency, 1).unwrap();
         q.try_push(Priority::Latency, 2).unwrap();
         assert_eq!(q.len(), 4);
+        assert_eq!(q.latency_len(), 2);
         assert_eq!(q.pop(), Some((Priority::Latency, 1)));
         assert_eq!(q.pop(), Some((Priority::Latency, 2)));
         assert_eq!(q.pop(), Some((Priority::Bulk, 10)));

@@ -24,20 +24,28 @@
 //!   key — same-key requests always meet in one queue, so coalescing
 //!   is unaffected — and each shard executes node-locally on its own
 //!   [`PoolShard`](crate::exec::PoolShard), so independent keys stop
-//!   serializing on one pool lease. Idle shards **steal whole
-//!   requests** from sibling queues (never half a batch, never
-//!   mid-barrier; stolen requests run alone, without coalescing),
-//!   atomically reserving against the tenant's executing count first
-//!   so a stolen bulk chain can never exceed its tenant cap through
-//!   the stealing shard — the shutdown drain path included. Batches
-//!   whose
-//!   flowing working set exceeds the spread threshold
-//!   ([`crate::scheduler::place`]) take the whole pool instead
-//!   (counted as `remote_placements`);
+//!   serializing on one pool lease (the schedule cache is likewise
+//!   partitioned by the same key hash — see
+//!   [`ShardedScheduleCache`](super::cache::ShardedScheduleCache) — so
+//!   dispatchers planning their own shards' keys take disjoint locks).
+//!   Idle shards **steal whole requests** from sibling queues (never
+//!   half a batch, never mid-parallel-region; stolen requests run
+//!   alone, without coalescing), atomically reserving against the
+//!   tenant's executing count first so a stolen bulk chain can never
+//!   exceed its tenant cap through the stealing shard — the shutdown
+//!   drain path included. A stolen **bulk chain** additionally yields
+//!   at its DAG drain points whenever the stealing shard's latency
+//!   tier is non-empty (`Metrics::stolen_chain_yields`), so stolen
+//!   throughput work can never hold that shard's latency requests
+//!   hostage to its full runtime. Batches whose flowing working set
+//!   exceeds the spread threshold ([`crate::scheduler::place`]) take
+//!   the whole pool instead (counted as `remote_placements`);
 //! - **priority**: latency-tier jobs are popped first, and while a bulk
-//!   chain is in flight the dispatcher serves latency pairs at chain
-//!   **step boundaries** ([`ChainExec::run_controlled`]) — overtaking
-//!   between barriers, never mid-barrier;
+//!   chain is in flight the dispatcher serves latency pairs at the
+//!   chain's **DAG drain points**
+//!   ([`ChainExec::run_pipelined_controlled_io`]: the pool is idle and
+//!   all steps before the control point have drained) — overtaking
+//!   between parallel regions, never inside one;
 //! - the pool is a [`SharedPool`]: the dispatcher and any synchronous
 //!   `Coordinator` built over the same handle share workers through
 //!   leases.
@@ -52,7 +60,7 @@
 //! so results are bitwise identical for the deterministic strategies
 //! (tile fusion, unfused) — pinned down in `tests/properties.rs`.
 
-use super::cache::{ScheduleCache, TuneCell};
+use super::cache::{ShardedScheduleCache, TuneCell};
 use super::queue::{BoundedQueue, PopWait, Priority, PushError};
 use super::service::{execute_pair_batch, Metrics, Strategy};
 use super::ticket::{ticket, ServiceError, Ticket, TicketTx};
@@ -222,7 +230,12 @@ struct Shared<T> {
     pool: SharedPool,
     params: SchedulerParams,
     cfg: ServerConfig,
-    cache: Mutex<ScheduleCache>,
+    /// Schedule + tuned-pick cache, partitioned by coalesce-key hash
+    /// (one partition per dispatcher shard) so dispatchers planning
+    /// their own shards' keys take disjoint locks instead of one
+    /// cache-wide mutex. Lock order: cache partition → metrics, cache
+    /// partition → [`TuneCell`] slot; never two partitions at once.
+    cache: ShardedScheduleCache,
     matrices: RwLock<HashMap<String, Arc<Csr<T>>>>,
     denses: RwLock<HashMap<String, Arc<Dense<T>>>>,
     /// Bumped on every registration; cached bound executors embed the
@@ -238,7 +251,7 @@ struct Shared<T> {
     executing: Mutex<HashMap<u64, usize>>,
     metrics: Mutex<Metrics>,
     /// Drop-triggered: cancel queued work and abandon chains at the
-    /// next step boundary instead of draining gracefully.
+    /// next DAG drain point instead of draining gracefully.
     aborting: AtomicBool,
     /// One submission queue per dispatcher shard; requests hash to a
     /// home queue by coalesce key.
@@ -357,7 +370,7 @@ impl<T: Scalar> Server<T> {
             pool,
             params,
             cfg,
-            cache: Mutex::new(ScheduleCache::new(params)),
+            cache: ShardedScheduleCache::new(params, n_shards),
             matrices: RwLock::new(HashMap::new()),
             denses: RwLock::new(HashMap::new()),
             registry_gen: AtomicU64::new(0),
@@ -411,7 +424,7 @@ impl<T: Scalar> Server<T> {
     pub fn load_tuned(&self, path: &Path) -> std::io::Result<usize> {
         let table = TuneTable::load(path)?;
         let (threads, nodes) = (self.shared.pool.n_threads(), self.shared.pool.n_nodes());
-        let n = self.shared.cache.lock().unwrap().seed_from_table(&table, threads, nodes);
+        let n = self.shared.cache.seed_from_table(&table, threads, nodes);
         self.shared.metrics.lock().unwrap().tuned_loaded += n as u64;
         Ok(n)
     }
@@ -423,7 +436,7 @@ impl<T: Scalar> Server<T> {
     /// written file holds.
     pub fn save_tuned(&self, path: &Path) -> std::io::Result<usize> {
         let (threads, nodes) = (self.shared.pool.n_threads(), self.shared.pool.n_nodes());
-        let table = self.shared.cache.lock().unwrap().to_tune_table(threads, nodes);
+        let table = self.shared.cache.to_tune_table(threads, nodes);
         table.save_merged(path)
     }
 
@@ -588,10 +601,10 @@ impl<T: Scalar> Server<T> {
         self.shared.metrics.lock().unwrap().clone()
     }
 
-    /// Schedule-cache state (entries, hits, misses).
+    /// Schedule-cache state (entries, hits, misses), summed over the
+    /// cache's shard partitions.
     pub fn cache_stats(&self) -> (usize, u64, u64) {
-        let cache = self.shared.cache.lock().unwrap();
-        (cache.len(), cache.hits, cache.misses)
+        self.shared.cache.stats()
     }
 
     /// Jobs currently queued (summed across shard queues).
@@ -624,7 +637,7 @@ impl<T: Scalar> Server<T> {
 
 impl<T: Scalar> Drop for Server<T> {
     /// Abort: queued jobs resolve [`ServiceError::Cancelled`], an
-    /// in-flight chain stops at its next step boundary. (Use
+    /// in-flight chain stops at its next DAG drain point. (Use
     /// [`Server::shutdown`] for a graceful drain.) Tuned picks still
     /// persist best-effort — they are timings, valid regardless of how
     /// the process ends.
@@ -836,7 +849,7 @@ impl<T: Scalar> Dispatcher<T> {
                 }
                 JobKind::Chain(..) => {
                     let batch = if stolen { vec![job] } else { self.coalesce_chains(pri, job) };
-                    self.run_chain_batch(pri, batch);
+                    self.run_chain_batch(pri, batch, stolen);
                 }
             }
         }
@@ -1097,14 +1110,23 @@ impl<T: Scalar> Dispatcher<T> {
         let plan = if head.strategy == Strategy::TileFusion {
             let op = pair_op(&a, &b_dense, &b_sparse);
             let fusion_op = op.fusion_op(&head.cs[0]);
-            let mut cache = self.shared.cache.lock().unwrap();
-            let (h0, m0) = (cache.hits, cache.misses);
-            let p = cache.get_or_build(&fusion_op);
-            let cell = cache.tune_cell(&fusion_op).expect("entry just built");
+            let (p, cell, dh, dm) = {
+                // Brief lock on the key's cache partition only — other
+                // shards' keys live behind other partitions.
+                let mut cache = self.shared.cache.lock_for(&fusion_op);
+                let (h0, m0) = (cache.hits, cache.misses);
+                let p = cache.get_or_build(&fusion_op);
+                let cell = cache.tune_cell(&fusion_op).expect("entry just built");
+                (p, cell, cache.hits - h0, cache.misses - m0)
+            };
+            // Evictions are summed across partitions, so total them
+            // outside any partition guard (lock order: partition →
+            // metrics, one partition at a time).
+            let ev = self.shared.cache.evictions();
             let mut m = self.shared.metrics.lock().unwrap();
-            m.schedule_cache_hits += cache.hits - h0;
-            m.total_schedule_builds += cache.misses - m0;
-            m.schedule_cache_evictions = cache.evictions;
+            m.schedule_cache_hits += dh;
+            m.total_schedule_builds += dm;
+            m.schedule_cache_evictions = ev;
             Some((p, cell))
         } else {
             None
@@ -1158,10 +1180,11 @@ impl<T: Scalar> Dispatcher<T> {
                 if let Some(picked) = newly_tuned {
                     // Mirror the fresh pick into the cache's seed map
                     // (after the per-key slot is released — lock order
-                    // is cache → slot everywhere), so it survives entry
-                    // eviction into `tuned_snapshot` / `save_tuned`.
+                    // is cache partition → slot everywhere), so it
+                    // survives entry eviction into `tuned_snapshot` /
+                    // `save_tuned`.
                     let fusion_op = op.fusion_op(&head.cs[0]);
-                    self.shared.cache.lock().unwrap().set_tuned_strip(&fusion_op, picked);
+                    self.shared.cache.lock_for(&fusion_op).set_tuned_strip(&fusion_op, picked);
                 }
                 (Some(&**p), strip)
             }
@@ -1181,9 +1204,10 @@ impl<T: Scalar> Dispatcher<T> {
     }
 
     /// Resolve (or reuse) a bound chain executor and run every request's
-    /// inputs through it; latency pairs are served at step boundaries
-    /// of bulk chains.
-    fn run_chain_batch(&mut self, pri: Priority, batch: Vec<Job<T>>) {
+    /// inputs through it; latency pairs are served at DAG drain points
+    /// of bulk chains (`stolen` marks a batch running on a shard that
+    /// stole it — see [`Dispatcher::execute_chains`]).
+    fn run_chain_batch(&mut self, pri: Priority, batch: Vec<Job<T>>, stolen: bool) {
         let t0 = Instant::now();
         let order = self.next_seq();
         let mut tenants = Vec::with_capacity(batch.len());
@@ -1212,7 +1236,7 @@ impl<T: Scalar> Dispatcher<T> {
             self.shared.begin_exec(t);
         }
 
-        let outcome = self.execute_chains(pri, &reqs);
+        let outcome = self.execute_chains(pri, &reqs, stolen);
         let service = t0.elapsed();
         {
             let mut m = self.shared.metrics.lock().unwrap();
@@ -1258,6 +1282,7 @@ impl<T: Scalar> Dispatcher<T> {
         &mut self,
         pri: Priority,
         reqs: &[ChainRequest<T>],
+        stolen: bool,
     ) -> Result<Vec<Vec<Dense<T>>>, ServiceError> {
         // Per-request validation ran at batch assembly; the coalesce key
         // pins step structure and input format/shape across the batch.
@@ -1299,7 +1324,13 @@ impl<T: Scalar> Dispatcher<T> {
             let mut ds = Vec::with_capacity(inputs.len());
             for x in inputs {
                 let mut d = Dense::zeros(out_rows, out_cols);
-                let done = exec.run_controlled_io(
+                // Cross-step pipelined execution: the control hook fires
+                // at DAG **drain points** (pool idle, steps `0..k`
+                // complete) instead of per-step barriers; chains whose
+                // plan has no pipelined boundary fall back to the
+                // barriered path inside the executor, with identical
+                // hook semantics.
+                let done = exec.run_pipelined_controlled_io(
                     &pool,
                     x,
                     ChainOut::Dense(&mut d),
@@ -1307,14 +1338,27 @@ impl<T: Scalar> Dispatcher<T> {
                         if shared.aborting.load(Ordering::SeqCst) {
                             return StepControl::Cancel;
                         }
-                        // Between barriers of a bulk chain: serve any
-                        // queued latency pairs before the next step.
+                        // At a drain point of a bulk chain: serve queued
+                        // latency pairs before the next segment. A
+                        // **stolen** bulk chain yields only when the
+                        // stealing shard's own latency tier is non-empty
+                        // — the steal-path inversion fix: stolen
+                        // throughput work must never hold this shard's
+                        // latency tier hostage to its full runtime, but
+                        // also should not pay drain overhead when nobody
+                        // is waiting.
                         if pri == Priority::Bulk && step > 0 {
-                            self.preempt_latency_pairs(&pool);
+                            if stolen {
+                                if shared.queues[self.shard].latency_len() > 0 {
+                                    shared.metrics.lock().unwrap().stolen_chain_yields += 1;
+                                    self.preempt_latency_pairs(&pool);
+                                }
+                            } else {
+                                self.preempt_latency_pairs(&pool);
+                            }
                         }
                         StepControl::Continue
                     },
-                    |_, _| {},
                 );
                 if !done {
                     cancelled = true;
@@ -1339,11 +1383,11 @@ impl<T: Scalar> Dispatcher<T> {
     }
 
     /// Serve queued latency-tier pair jobs, one at a time, on the
-    /// already-leased pool — called between chain steps, where the pool
-    /// is idle. Bounded per boundary (`max_coalesce` jobs) so a
-    /// sustained latency stream delays a bulk chain, but can never
-    /// starve it outright: the chain always advances a step between
-    /// drains.
+    /// already-leased pool — called at a bulk chain's DAG drain points,
+    /// where the pool is idle. Bounded per drain point (`max_coalesce`
+    /// jobs) so a sustained latency stream delays a bulk chain, but can
+    /// never starve it outright: the chain always advances a segment
+    /// between drains.
     fn preempt_latency_pairs(&self, pool: &ThreadPool) {
         for _ in 0..self.shared.cfg.max_coalesce.max(1) {
             let mut jobs = self.shared.queues[self.shard]
@@ -1451,15 +1495,27 @@ impl<T: Scalar> Dispatcher<T> {
         let reject = |e: crate::scheduler::chain::ChainError| {
             ServiceError::Rejected(e.to_string())
         };
-        let (plan, tuned) = {
-            let specs = chain_specs(&ops, in_rows, in_cols).map_err(reject)?;
-            let mut cache = self.shared.cache.lock().unwrap();
-            let (h0, m0) = (cache.hits, cache.misses);
+        let specs = chain_specs(&ops, in_rows, in_cols).map_err(reject)?;
+        let mut step_scheds: Vec<Option<Arc<FusedSchedule>>> = vec![None; specs.len()];
+        let (plan, mut tuned) = {
             let n_cores = self.shared.params.n_cores;
             let mut trivial: HashMap<u64, Arc<FusedSchedule>> = HashMap::new();
+            let (mut dh, mut dm) = (0u64, 0u64);
+            let cache = &self.shared.cache;
             let plan = ChainPlanner::new(self.shared.params)
                 .plan_with_input(input_meta, &specs, |s, op| match strategies[s] {
-                    StepStrategy::Fused => cache.get_or_build(op),
+                    StepStrategy::Fused => {
+                        // Lock only the key's cache partition, one step
+                        // at a time — planning never holds a cache-wide
+                        // lock across the whole chain any more.
+                        let mut part = cache.lock_for(op);
+                        let (h0, m0) = (part.hits, part.misses);
+                        let p = part.get_or_build(op);
+                        dh += part.hits - h0;
+                        dm += part.misses - m0;
+                        step_scheds[s] = Some(Arc::clone(&p));
+                        p
+                    }
                     StepStrategy::Unfused => Arc::clone(
                         trivial
                             .entry(op.a.structure_hash())
@@ -1472,15 +1528,18 @@ impl<T: Scalar> Dispatcher<T> {
                 .zip(&strategies)
                 .map(|(spec, st)| match (spec, st) {
                     (ChainStepSpec::Pair { op, .. }, StepStrategy::Fused) => {
-                        cache.tuned_strip(op)
+                        cache.lock_for(op).tuned_strip(op)
                     }
                     _ => None,
                 })
                 .collect();
+            // Evictions are totalled outside any partition guard (lock
+            // order: cache partition → metrics).
+            let ev = cache.evictions();
             let mut m = self.shared.metrics.lock().unwrap();
-            m.schedule_cache_hits += cache.hits - h0;
-            m.total_schedule_builds += cache.misses - m0;
-            m.schedule_cache_evictions = cache.evictions;
+            m.schedule_cache_hits += dh;
+            m.total_schedule_builds += dm;
+            m.schedule_cache_evictions = ev;
             (plan, tuned)
         };
         if plan.out_format() != StepOutput::Dense {
@@ -1490,6 +1549,113 @@ impl<T: Scalar> Dispatcher<T> {
                     .into(),
             ));
         }
+
+        // First sight of a key on the async chain path runs the same
+        // strip timing a pair batch would, behind the key's [`TuneCell`]
+        // slot (same-key contenders on other shards block there, then
+        // replay, instead of re-timing). A step's flowing operand does
+        // not exist until run time, so candidates are timed on a
+        // zero-filled stand-in of the step's true flowing shape — kernel
+        // cost depends on pattern and shape, never on values. Winners
+        // are mirrored into the cache's seed map so they survive
+        // eviction and persist through `save_tuned` / `TF_TUNE_CACHE`.
+        {
+            let (mut fr, mut fc) = (in_rows, in_cols);
+            for (s, spec) in specs.iter().enumerate() {
+                let flow_in = (fr, fc);
+                (fr, fc) = match &ops[s] {
+                    ChainStepOp::GemmFlowB { a, w } => (a.rows(), w.cols),
+                    ChainStepOp::GemmFlowC { a, .. }
+                    | ChainStepOp::SpmmFlowC { a, .. }
+                    | ChainStepOp::SpgemmFlow { a, .. } => (a.rows(), fc),
+                    ChainStepOp::FlowAMulB { b } => (fr, b.cols),
+                };
+                if tuned[s].is_some() {
+                    continue;
+                }
+                let (op, sched) = match (spec, strategies[s], &step_scheds[s]) {
+                    (ChainStepSpec::Pair { op, .. }, StepStrategy::Fused, Some(p)) => (op, p),
+                    _ => continue,
+                };
+                let Some(cell) = self.shared.cache.lock_for(op).tune_cell(op) else {
+                    // Entry evicted since planning — the model pick
+                    // stands for this bind; a later rebuild re-tunes.
+                    continue;
+                };
+                if let Some(t) = cell.get() {
+                    tuned[s] = Some(t);
+                    continue;
+                }
+                let cands = strip_candidates(sched.strip_width, op.ccol);
+                let mut newly = None;
+                let picked = {
+                    // Lock order matches the pair path (pool lease →
+                    // slot); `bind_chain` runs before `execute_chains`
+                    // takes its lease, so the brief tuning lease cannot
+                    // self-deadlock.
+                    let pool = (cands.len() > 1).then(|| self.shared.pool.lease());
+                    let mut slot = cell.lock();
+                    match *slot {
+                        Some(t) => t, // same-key contender tuned first
+                        None => {
+                            let p = if cands.len() == 1 {
+                                cands[0]
+                            } else {
+                                let pool = pool.as_ref().expect("leased for timing");
+                                self.shared.metrics.lock().unwrap().strip_tunes += 1;
+                                let (rows, cols) = flow_in;
+                                match &ops[s] {
+                                    ChainStepOp::GemmFlowB { a, w } => {
+                                        let flow = Dense::zeros(rows, cols);
+                                        let pair = PairOp::gemm_spmm(a, &flow);
+                                        let mut ex = Fused::new(pair, sched);
+                                        let mut scratch =
+                                            Dense::zeros(pair.n_second(), op.ccol);
+                                        StripTuner::default().pick(&cands, |mode| {
+                                            ex.set_strip(*mode);
+                                            ex.run(pool, w, &mut scratch);
+                                        })
+                                    }
+                                    ChainStepOp::GemmFlowC { a, b } => {
+                                        let flow = Dense::zeros(rows, cols);
+                                        let pair = PairOp::gemm_spmm(a, b);
+                                        let mut ex = Fused::new(pair, sched);
+                                        let mut scratch =
+                                            Dense::zeros(pair.n_second(), op.ccol);
+                                        StripTuner::default().pick(&cands, |mode| {
+                                            ex.set_strip(*mode);
+                                            ex.run(pool, &flow, &mut scratch);
+                                        })
+                                    }
+                                    ChainStepOp::SpmmFlowC { a, b } => {
+                                        let flow = Dense::zeros(rows, cols);
+                                        let pair = PairOp::spmm_spmm(a, b);
+                                        let mut ex = Fused::new(pair, sched);
+                                        let mut scratch =
+                                            Dense::zeros(pair.n_second(), op.ccol);
+                                        StripTuner::default().pick(&cands, |mode| {
+                                            ex.set_strip(*mode);
+                                            ex.run(pool, &flow, &mut scratch);
+                                        })
+                                    }
+                                    _ => unreachable!("pair spec implies a pair step op"),
+                                }
+                            };
+                            *slot = Some(p);
+                            newly = Some(p);
+                            p
+                        }
+                    }
+                };
+                if let Some(p) = newly {
+                    // Mirror after the slot guard dropped (lock order:
+                    // cache partition → slot, never the reverse).
+                    self.shared.cache.lock_for(op).set_tuned_strip(op, p);
+                }
+                tuned[s] = Some(picked);
+            }
+        }
+        drop(specs);
 
         let mut exec = ChainExec::new(ops, &plan).map_err(reject)?;
         exec.set_strategies(&strategies);
@@ -2003,6 +2169,198 @@ mod tests {
         assert_eq!(srv3.load_tuned(&path).unwrap(), 0, "thread count keys the table");
         drop(srv3);
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// Hand-built shared state (no dispatcher threads) so the steal
+    /// path can be driven deterministically through
+    /// [`Dispatcher::dispatch`] with `stolen = true`.
+    fn bare_shared(n_shards: usize) -> Arc<Shared<f64>> {
+        let pool = SharedPool::new(2);
+        let params = SchedulerParams {
+            n_cores: pool.n_threads(),
+            elem_bytes: 8,
+            n_nodes: pool.n_nodes(),
+            ct_size: 64,
+            ..Default::default()
+        };
+        let cfg = ServerConfig::default();
+        let queues = (0..n_shards).map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity))).collect();
+        let shared = Arc::new(Shared {
+            pool,
+            params,
+            cfg,
+            cache: ShardedScheduleCache::new(params, n_shards),
+            matrices: RwLock::new(HashMap::new()),
+            denses: RwLock::new(HashMap::new()),
+            registry_gen: AtomicU64::new(0),
+            inflight: Mutex::new(HashMap::new()),
+            executing: Mutex::new(HashMap::new()),
+            metrics: Mutex::new(Metrics::default()),
+            aborting: AtomicBool::new(false),
+            queues,
+        });
+        {
+            let mut m = shared.metrics.lock().unwrap();
+            m.shard_dispatched = vec![0; n_shards];
+            m.shard_stolen = vec![0; n_shards];
+            m.shard_queue_depth = vec![0; n_shards];
+        }
+        shared
+    }
+
+    #[test]
+    fn stolen_bulk_chain_yields_to_stealing_shards_latency_tier() {
+        // The steal-path latency-inversion regression: a latency pair
+        // queued on the stealing shard must be served at the stolen
+        // bulk chain's DAG drain points — never after the whole chain.
+        let shared = bare_shared(2);
+        let a = Csr::<f64>::with_random_values(gen::poisson2d(16, 16), 1, -1.0, 1.0);
+        let w = Dense::<f64>::randn(8, 8, 1);
+        let b = Dense::<f64>::randn(256, 8, 2);
+        shared.matrices.write().unwrap().insert("A".into(), Arc::new(a.clone()));
+        shared.denses.write().unwrap().insert("w".into(), Arc::new(w.clone()));
+        shared.denses.write().unwrap().insert("B".into(), Arc::new(b.clone()));
+        let mut d = Dispatcher {
+            shared: Arc::clone(&shared),
+            shard: 0,
+            seq: std::cell::Cell::new(0),
+            execs: Vec::new(),
+        };
+
+        // A latency pair waits on the stealing shard's (shard 0's) own
+        // queue while the stolen chain runs.
+        let c = Dense::<f64>::randn(8, 4, 3);
+        let expect_pair = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        let (pair_ticket, pair_tx) = ticket();
+        shared.queues[0]
+            .try_push(
+                Priority::Latency,
+                Job {
+                    tenant: 1,
+                    enqueued: Instant::now(),
+                    kind: JobKind::Pair(
+                        PairRequest {
+                            a: "A".into(),
+                            b: BRef::Dense("B".into()),
+                            cs: vec![c.clone()],
+                            strategy: Strategy::TileFusion,
+                        },
+                        pair_tx,
+                    ),
+                },
+            )
+            .map_err(|_| "queue full")
+            .expect("queue has room");
+
+        // A three-step bulk chain stolen from shard 1 — handed over
+        // exactly as `try_steal` would: reservation first, then
+        // `dispatch(…, stolen = true)`.
+        let x = Dense::<f64>::randn(256, 8, 4);
+        let h1 = reference(&PairOp::gemm_spmm(&a, &x), &w);
+        let h2 = reference(&PairOp::gemm_spmm(&a, &h1), &w);
+        let expect_chain = reference(&PairOp::gemm_spmm(&a, &h2), &w);
+        let step = || ChainStepReq {
+            a: "A".into(),
+            operand: StepOperand::Weights("w".into()),
+            strategy: None,
+        };
+        let (chain_ticket, chain_tx) = ticket();
+        let job = Job {
+            tenant: 2,
+            enqueued: Instant::now(),
+            kind: JobKind::Chain(
+                ChainRequest {
+                    steps: vec![step(), step(), step()],
+                    xs: vec![x.clone()],
+                    xs_sparse: Vec::new(),
+                    strategy: Strategy::TileFusion,
+                },
+                chain_tx,
+            ),
+        };
+        assert!(shared.try_reserve_exec(2));
+        d.dispatch(Priority::Bulk, job, 1, true);
+
+        // `preempted_pairs` can only move at a drain point inside the
+        // chain's execution, so together these prove the latency pair
+        // was served mid-chain, not behind it.
+        let m = shared.metrics.lock().unwrap().clone();
+        assert!(m.stolen_chain_yields >= 1, "stolen chain must yield to the latency tier");
+        assert_eq!(m.preempted_pairs, 1, "the waiting pair was served at a drain point");
+        assert!(shared.queues[0].is_empty(), "latency tier drained");
+        assert_eq!(shared.queues[0].latency_len(), 0);
+        let pr = pair_ticket.wait().unwrap();
+        assert!(pr.ds[0].max_abs_diff(&expect_pair) < 1e-10);
+        let cr = chain_ticket.wait().unwrap();
+        assert!(cr.ds[0].max_abs_diff(&expect_chain) < 1e-10);
+        assert_eq!(shared.executing.lock().unwrap().len(), 0, "reservations all released");
+    }
+
+    #[test]
+    fn home_bulk_chain_still_preempts_unconditionally() {
+        // The home-shard path keeps its pre-fix behaviour: every drain
+        // point serves queued latency pairs, with no stolen-yield
+        // accounting.
+        let shared = bare_shared(1);
+        let a = Csr::<f64>::with_random_values(gen::poisson2d(16, 16), 1, -1.0, 1.0);
+        let w = Dense::<f64>::randn(8, 8, 1);
+        let b = Dense::<f64>::randn(256, 8, 2);
+        shared.matrices.write().unwrap().insert("A".into(), Arc::new(a.clone()));
+        shared.denses.write().unwrap().insert("w".into(), Arc::new(w));
+        shared.denses.write().unwrap().insert("B".into(), Arc::new(b.clone()));
+        let mut d = Dispatcher {
+            shared: Arc::clone(&shared),
+            shard: 0,
+            seq: std::cell::Cell::new(0),
+            execs: Vec::new(),
+        };
+        let c = Dense::<f64>::randn(8, 4, 3);
+        let expect_pair = reference(&PairOp::gemm_spmm(&a, &b), &c);
+        let (pair_ticket, pair_tx) = ticket();
+        shared.queues[0]
+            .try_push(
+                Priority::Latency,
+                Job {
+                    tenant: 1,
+                    enqueued: Instant::now(),
+                    kind: JobKind::Pair(
+                        PairRequest {
+                            a: "A".into(),
+                            b: BRef::Dense("B".into()),
+                            cs: vec![c],
+                            strategy: Strategy::TileFusion,
+                        },
+                        pair_tx,
+                    ),
+                },
+            )
+            .map_err(|_| "queue full")
+            .expect("queue has room");
+        let step = || ChainStepReq {
+            a: "A".into(),
+            operand: StepOperand::Weights("w".into()),
+            strategy: None,
+        };
+        let (chain_ticket, chain_tx) = ticket();
+        let job = Job {
+            tenant: 2,
+            enqueued: Instant::now(),
+            kind: JobKind::Chain(
+                ChainRequest {
+                    steps: vec![step(), step()],
+                    xs: vec![Dense::<f64>::randn(256, 8, 4)],
+                    xs_sparse: Vec::new(),
+                    strategy: Strategy::TileFusion,
+                },
+                chain_tx,
+            ),
+        };
+        d.dispatch(Priority::Bulk, job, 0, false);
+        let m = shared.metrics.lock().unwrap().clone();
+        assert_eq!(m.preempted_pairs, 1);
+        assert_eq!(m.stolen_chain_yields, 0, "home chains don't count as stolen yields");
+        assert!(pair_ticket.wait().unwrap().ds[0].max_abs_diff(&expect_pair) < 1e-10);
+        assert!(chain_ticket.wait().is_ok());
     }
 
     #[test]

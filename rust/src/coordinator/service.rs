@@ -176,9 +176,15 @@ pub struct Metrics {
     pub rejected_tenant_cap: u64,
     /// Tickets resolved `Cancelled` (shutdown/abort before execution).
     pub cancelled: u64,
-    /// Latency-tier pair requests served at a bulk chain's step
-    /// boundaries (the between-steps preemption point).
+    /// Latency-tier pair requests served at a bulk chain's DAG drain
+    /// points (the pipelined successor of step-boundary preemption).
     pub preempted_pairs: u64,
+    /// Drain points at which a **stolen** bulk chain yielded to the
+    /// stealing shard's non-empty latency tier — the fix for the
+    /// steal-path latency inversion, where stolen bulk work used to
+    /// occupy the stealing shard end-to-end while its latency queue
+    /// stalled behind it.
+    pub stolen_chain_yields: u64,
     /// Queue depth sampled when the dispatcher picked up the most
     /// recent job.
     pub queue_depth_last: u64,
@@ -425,8 +431,8 @@ impl<T: Scalar> Coordinator<T> {
         } else {
             ChainInputMeta::dense(in_rows, in_cols)
         };
-        let (plan, tuned) = {
-            let specs = chain_specs(&ops, in_rows, in_cols)?;
+        let specs = chain_specs(&ops, in_rows, in_cols)?;
+        let (plan, mut tuned, step_scheds) = {
             // Only pair steps that will actually run fused pay Algorithm
             // 1's inspection (through the shared cache); unfused pair
             // steps get a trivial no-fusion schedule, deduplicated
@@ -435,11 +441,16 @@ impl<T: Scalar> Coordinator<T> {
             // they have no pattern to inspect before run time.
             let n_cores = self.cache.params().n_cores;
             let mut trivial: HashMap<u64, Arc<crate::scheduler::FusedSchedule>> = HashMap::new();
+            let mut step_scheds: Vec<Option<Arc<FusedSchedule>>> = vec![None; specs.len()];
             let plan = ChainPlanner::new(self.cache.params()).plan_with_input(
                 input_meta,
                 &specs,
                 |s, op| match strategies[s] {
-                    StepStrategy::Fused => self.cache.get_or_build(op),
+                    StepStrategy::Fused => {
+                        let p = self.cache.get_or_build(op);
+                        step_scheds[s] = Some(Arc::clone(&p));
+                        p
+                    }
                     StepStrategy::Unfused => Arc::clone(
                         trivial
                             .entry(op.a.structure_hash())
@@ -447,10 +458,9 @@ impl<T: Scalar> Coordinator<T> {
                     ),
                 },
             )?;
-            // Fused pair steps whose (pattern, shape) a pair request
-            // already autotuned replay the tuned strip pick; untuned
-            // steps stay on the schedule's model pick (chains never time
-            // candidates themselves — tuning happens on the pair path).
+            // Fused pair steps whose (pattern, shape) any earlier
+            // request — pair or chain — already autotuned replay the
+            // tuned strip pick for free.
             let tuned: Vec<Option<StripMode>> = specs
                 .iter()
                 .zip(&strategies)
@@ -461,7 +471,7 @@ impl<T: Scalar> Coordinator<T> {
                     _ => None,
                 })
                 .collect();
-            (plan, tuned)
+            (plan, tuned, step_scheds)
         };
         self.metrics.schedule_cache_hits += self.cache.hits - hits0;
         self.metrics.total_schedule_builds += self.cache.misses - miss0;
@@ -471,6 +481,86 @@ impl<T: Scalar> Coordinator<T> {
                  step's output to Dense or append a flow_a_dense step)"
             );
         }
+
+        // First sight of a key on the chain path runs the same strip
+        // timing a pair request would. A step's flowing operand does not
+        // exist until run time, so candidates are timed on a zero-filled
+        // stand-in of the step's true flowing shape — kernel cost
+        // depends on pattern and shape, never on values. Winners land in
+        // the shared cache exactly like pair-tuned picks, so they
+        // persist through `save_tuned` / `TF_TUNE_CACHE` and replay for
+        // every later request (pair or chain) on the key.
+        {
+            let (mut fr, mut fc) = (in_rows, in_cols);
+            for (s, spec) in specs.iter().enumerate() {
+                let flow_in = (fr, fc);
+                (fr, fc) = match &ops[s] {
+                    ChainStepOp::GemmFlowB { a, w } => (a.rows(), w.cols),
+                    ChainStepOp::GemmFlowC { a, .. }
+                    | ChainStepOp::SpmmFlowC { a, .. }
+                    | ChainStepOp::SpgemmFlow { a, .. } => (a.rows(), fc),
+                    ChainStepOp::FlowAMulB { b } => (fr, b.cols),
+                };
+                if tuned[s].is_some() {
+                    continue;
+                }
+                let (op, sched) = match (spec, strategies[s], &step_scheds[s]) {
+                    (ChainStepSpec::Pair { op, .. }, StepStrategy::Fused, Some(p)) => (op, p),
+                    _ => continue,
+                };
+                // An earlier identical step in this pass may have just
+                // recorded the key's pick.
+                if let Some(t) = self.cache.tuned_strip(op) {
+                    tuned[s] = Some(t);
+                    continue;
+                }
+                let ccol = op.ccol;
+                let cands = strip_candidates(sched.strip_width, ccol);
+                let picked = if cands.len() == 1 {
+                    cands[0]
+                } else {
+                    self.metrics.strip_tunes += 1;
+                    let pool = self.pool.lease();
+                    let (rows, cols) = flow_in;
+                    match &ops[s] {
+                        ChainStepOp::GemmFlowB { a, w } => {
+                            let flow = Dense::zeros(rows, cols);
+                            let pair = PairOp::gemm_spmm(a, &flow);
+                            let mut ex = Fused::new(pair, sched);
+                            let mut scratch = Dense::zeros(pair.n_second(), ccol);
+                            StripTuner::default().pick(&cands, |mode| {
+                                ex.set_strip(*mode);
+                                ex.run(&pool, w, &mut scratch);
+                            })
+                        }
+                        ChainStepOp::GemmFlowC { a, b } => {
+                            let flow = Dense::zeros(rows, cols);
+                            let pair = PairOp::gemm_spmm(a, b);
+                            let mut ex = Fused::new(pair, sched);
+                            let mut scratch = Dense::zeros(pair.n_second(), ccol);
+                            StripTuner::default().pick(&cands, |mode| {
+                                ex.set_strip(*mode);
+                                ex.run(&pool, &flow, &mut scratch);
+                            })
+                        }
+                        ChainStepOp::SpmmFlowC { a, b } => {
+                            let flow = Dense::zeros(rows, cols);
+                            let pair = PairOp::spmm_spmm(a, b);
+                            let mut ex = Fused::new(pair, sched);
+                            let mut scratch = Dense::zeros(pair.n_second(), ccol);
+                            StripTuner::default().pick(&cands, |mode| {
+                                ex.set_strip(*mode);
+                                ex.run(&pool, &flow, &mut scratch);
+                            })
+                        }
+                        _ => unreachable!("pair spec implies a pair step op"),
+                    }
+                };
+                self.cache.set_tuned_strip(op, picked);
+                tuned[s] = Some(picked);
+            }
+        }
+        drop(specs);
 
         let mut exec = ChainExec::new(ops, &plan)?;
         exec.set_strategies(&strategies);
@@ -912,10 +1002,11 @@ mod tests {
         assert!(r2.ds[0].max_abs_diff(&expect) < 1e-10);
         assert_eq!(coord.metrics().strip_tunes, 1, "cached pick replays, no retune");
 
-        // Chain steps at strip-triggering widths execute their strip
-        // schedules correctly and never run the tuner themselves (a
-        // step whose (pattern, shape) a pair request already tuned
-        // would ride that pick from the shared cache).
+        // Chain steps at strip-triggering widths tune on first sight
+        // exactly like pair requests. The two SpmmFlowC steps share one
+        // (pattern, shape) key — distinct from the pair request's — so
+        // the chain pays exactly one timing pass, and a repeat of the
+        // same chain replays the cached pick for free.
         let x = Dense::<f64>::randn(a.rows(), ccol, 4);
         let h = reference(&PairOp::spmm_spmm(&a, &a), &x);
         let step = || ChainStepRequest {
@@ -923,16 +1014,22 @@ mod tests {
             b_sparse: Some("A".into()),
             ..Default::default()
         };
-        let resp = coord
-            .submit_chain(ChainRequest {
-                steps: vec![step(), step()],
-                xs: vec![x],
-                ..Default::default()
-            })
-            .unwrap();
+        let chain = || ChainRequest {
+            steps: vec![step(), step()],
+            xs: vec![Dense::<f64>::randn(a.rows(), ccol, 4)],
+            ..Default::default()
+        };
+        let resp = coord.submit_chain(chain()).unwrap();
         let expect2 = reference(&PairOp::spmm_spmm(&a, &a), &h);
         assert!(resp.ds[0].max_abs_diff(&expect2) < 1e-9);
-        assert_eq!(coord.metrics().strip_tunes, 1, "chains never tune");
+        assert_eq!(
+            coord.metrics().strip_tunes,
+            2,
+            "first sight of the chain-step key tunes once (both steps share it)"
+        );
+        let resp = coord.submit_chain(chain()).unwrap();
+        assert!(resp.ds[0].max_abs_diff(&expect2) < 1e-9);
+        assert_eq!(coord.metrics().strip_tunes, 2, "repeat chain replays the pick, no retune");
     }
 
     #[test]

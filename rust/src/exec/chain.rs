@@ -31,20 +31,42 @@
 //! and snapshots activations for backprop through this hook). Taps fire
 //! after **dense-output** steps only — a sparse intermediate has no
 //! activation use case and its structure is owned by the executor.
+//!
+//! # Pipelined chains
+//!
+//! [`ChainExec::run_pipelined`] (and the `_io` / `_controlled_io`
+//! variants) replace the per-step whole-pool barrier with work-stealing
+//! execution over a cross-step dependence DAG
+//! ([`build_chain_dag`](crate::scheduler::chain::build_chain_dag)): a
+//! tile of step `s + 1` becomes runnable as soon as the step-`s` rows
+//! it reads are final, so step `s + 1` ramps up while step `s` drains
+//! its straggler tiles. Which steps may overlap is the planner's
+//! [`StepBoundary`] decision (queryable via [`ChainExec::boundary`],
+//! overridable via [`ChainExec::set_boundary`] /
+//! [`ChainExec::force_barriers`]); intermediates move through a 3-slot
+//! ring published per row block instead of the 2-slot ping-pong. The
+//! pipelined path is **bitwise-identical** to the barriered one at any
+//! thread count — each output row is produced by exactly one DAG node
+//! running the same kernel sequence.
 
-use super::fused::run_fused_striped;
+use super::fused::{fused_tile_full, fused_tile_strip, fused_tile_wf1, pack_panels_all, run_fused_striped};
+use super::pool::{run_dag_segment, DagRun, WorkerScratch};
 use super::spgemm::{
-    run_dense_times_dense, run_sparse_times_dense, run_spgemm, run_spgemm_dense, SpgemmWs,
+    gemm_dense_rows, run_dense_times_dense, run_sparse_times_dense, run_spgemm, run_spgemm_dense,
+    spgemm_dense_rows, spgemm_numeric_rows, spgemm_symbolic_rows, spmm_dense_rows, SpgemmWs,
+    ROW_CHUNK,
 };
 use super::strip::{StripMode, StripWs};
-use super::unfused::run_unfused_striped;
+use super::unfused::{run_unfused_striped, unfused_first_rows, unfused_second_rows};
 use super::{Dense, PairOp, Scalar, ThreadPool};
 use crate::scheduler::chain::{
-    ChainError, ChainFlow, ChainInputMeta, ChainPlan, ChainStepPlan, ChainStepSpec, PlannedStep,
+    build_chain_dag, ChainDag, ChainError, ChainFlow, ChainInputMeta, ChainPlan, ChainStepPlan,
+    ChainStepSpec, DagNode, DagReads, DagStepDesc, DagStepKind, PlannedStep, StepBoundary,
     StepOutput, StepOutputMode,
 };
 use crate::scheduler::{BSide, FusedSchedule, FusionOp, SchedulerParams};
 use crate::sparse::Csr;
+use std::sync::atomic::{AtomicPtr, Ordering};
 use std::sync::Arc;
 
 /// Row-block grain for unfused chain steps (matches `Unfused::new`).
@@ -287,6 +309,69 @@ impl<T: Scalar> InterBuf<T> {
     }
 }
 
+/// Executor-resolved per-step facts the cross-step DAG was built from
+/// (cached alongside it; see [`ChainExec::ensure_pipe_plan`]).
+struct PipeStepInfo {
+    /// Resolved strip width of a fused/unfused pair step (`None` =
+    /// full-width), exactly as the barriered executors resolve it.
+    strip_w: Option<usize>,
+    /// Rows of the packed-panel operand (0 ⇒ no pack node).
+    panel_rows: usize,
+    /// Per-worker tile-strip scratch this step needs
+    /// (`max_tile_rows · strip_w`; 0 off the fused strip path).
+    tile_slot: usize,
+}
+
+/// The cached cross-step pipeline plan: the dependence DAG plus the
+/// per-step execution facts it encodes. Invalidated by any setter that
+/// changes step structure (strategy, strip mode, boundary) and rebuilt
+/// lazily on the next pipelined run.
+struct PipePlan {
+    dag: ChainDag,
+    info: Vec<PipeStepInfo>,
+}
+
+/// Raw per-step pointers one pipelined run hands its DAG node bodies.
+/// All pointers target allocations that are pre-sized before the run
+/// starts and never reallocate mid-run; disjointness of concurrent
+/// writes is exactly the DAG's dependence discipline.
+struct PipeStepCtx<T> {
+    /// Flowing input of this step (step 0: the caller's input; else the
+    /// previous step's ring slot). Only the pointer matching
+    /// `src_is_sparse` is meaningful.
+    src_dense: *const Dense<T>,
+    src_sparse: *const Csr<T>,
+    src_is_sparse: bool,
+    /// Dense destination data (ring slot or the caller's output).
+    dst_dense: *mut T,
+    /// Sparse destination (ring slot or the caller's output).
+    dst_sparse: *mut Csr<T>,
+    /// This step's `D1` workspace data (pair steps).
+    d1: *mut T,
+    /// This step's packed-panel buffer (fused strip steps that pack).
+    panel: *mut T,
+    panel_len: usize,
+    panel_rows: usize,
+    strip_w: Option<usize>,
+    /// This step's symbolic row counts (sparse-output SpGEMM steps).
+    row_nnz: *mut usize,
+    out_rows: usize,
+    ccol: usize,
+    drop_tol: f64,
+    /// Output CSR array pointers, published by the step's `Shell` node
+    /// after it (re)sizes the arrays — `Numeric` nodes load them.
+    sp_indptr: AtomicPtr<usize>,
+    sp_idx: AtomicPtr<u32>,
+    sp_val: AtomicPtr<T>,
+}
+
+// Safety: the raw pointers are shared across pool workers by design;
+// every dereference is guarded by the DAG's dependence edges (writers
+// of a location complete before its readers start, and concurrent
+// writers touch disjoint ranges).
+unsafe impl<T: Send> Send for PipeStepCtx<T> {}
+unsafe impl<T: Sync> Sync for PipeStepCtx<T> {}
+
 /// A bound, reusable chain executor. Bind once, `run` many times.
 pub struct ChainExec<T> {
     steps: Vec<ChainStepExec<T>>,
@@ -299,6 +384,25 @@ pub struct ChainExec<T> {
     strips: StripWs<T>,
     /// Per-thread SpGEMM merge scratch shared by every sparse-flow step.
     spgemm: SpgemmWs<T>,
+    /// Per-step entry discipline (seeded from the plan; see
+    /// [`ChainExec::set_boundary`]).
+    boundaries: Vec<StepBoundary>,
+    /// Cached cross-step DAG (lazily built, invalidated by structural
+    /// setters).
+    pipe: Option<PipePlan>,
+    /// Three-slot intermediate ring of the pipelined path: step `s`
+    /// writes slot `s % 3` and reads slot `(s - 1) % 3`, so a step and
+    /// its successor never share a slot and the slot a step overwrites
+    /// was last read two steps ago — which the DAG's sentinel edges (and
+    /// the windowed segment loop) have already drained. Two slots would
+    /// re-serialize adjacent steps on a write-after-read hazard.
+    pipe_bufs: Vec<InterBuf<T>>,
+    /// Per-step packed panels (fused strip steps; the barriered path's
+    /// single shared panel cannot serve two steps in flight at once).
+    pipe_panels: Vec<Vec<T>>,
+    /// Per-step symbolic row counts (sparse-output SpGEMM steps; same
+    /// in-flight reasoning).
+    pipe_row_nnz: Vec<Vec<usize>>,
     in_rows: usize,
     in_cols: usize,
     in_format: StepOutput,
@@ -433,6 +537,7 @@ impl<T: Scalar> ChainExec<T> {
             .max()
             .unwrap_or(0);
         let (out_rows, out_cols) = plan.out_dims();
+        let n_ops = steps.len();
         Ok(Self {
             steps,
             inter: [
@@ -441,6 +546,15 @@ impl<T: Scalar> ChainExec<T> {
             ],
             strips: StripWs::new(),
             spgemm: SpgemmWs::new(),
+            boundaries: if plan.boundaries.len() == n_ops {
+                plan.boundaries.clone()
+            } else {
+                vec![StepBoundary::Barrier; n_ops]
+            },
+            pipe: None,
+            pipe_bufs: (0..3).map(|_| InterBuf::with_dense_capacity(0)).collect(),
+            pipe_panels: vec![Vec::new(); n_ops],
+            pipe_row_nnz: vec![Vec::new(); n_ops],
             in_rows: plan.in_rows,
             in_cols: plan.in_cols,
             in_format: plan.in_format,
@@ -530,6 +644,7 @@ impl<T: Scalar> ChainExec<T> {
     /// steps ignore it).
     pub fn set_strategy(&mut self, step: usize, strategy: StepStrategy) {
         self.steps[step].strategy = strategy;
+        self.pipe = None;
     }
 
     /// Override every step's strategy at once.
@@ -538,6 +653,7 @@ impl<T: Scalar> ChainExec<T> {
         for (step, &s) in self.steps.iter_mut().zip(strategies) {
             step.strategy = s;
         }
+        self.pipe = None;
     }
 
     /// Override one step's column-strip mode (default [`StripMode::Auto`]
@@ -547,6 +663,47 @@ impl<T: Scalar> ChainExec<T> {
     /// ignore it.
     pub fn set_strip(&mut self, step: usize, strip: StripMode) {
         self.steps[step].strip = strip;
+        self.pipe = None;
+    }
+
+    /// The entry discipline of step `step` as currently planned
+    /// ([`StepBoundary::Pipelined`] steps overlap with the previous
+    /// step's drain on the pipelined path).
+    pub fn boundary(&self, step: usize) -> StepBoundary {
+        self.boundaries[step]
+    }
+
+    /// Override one step's entry discipline — e.g. force
+    /// [`StepBoundary::Barrier`] to A/B the pipelined overlap, or
+    /// [`StepBoundary::Pipelined`] to overrule the planner. Step 0
+    /// always enters behind a barrier (nothing precedes it), and a
+    /// read-all step (dense-`B` flow-`C` pair) takes barrier edges
+    /// regardless of this setting.
+    pub fn set_boundary(&mut self, step: usize, boundary: StepBoundary) {
+        assert!(
+            step > 0 || boundary == StepBoundary::Barrier,
+            "step 0 always enters behind a barrier"
+        );
+        self.boundaries[step] = boundary;
+        self.pipe = None;
+    }
+
+    /// Force every step boundary to [`StepBoundary::Barrier`] — the
+    /// pipelined entry points then run step-at-a-time (the A/B baseline
+    /// of `benches/fig18_pipeline_depth`).
+    pub fn force_barriers(&mut self) {
+        for b in &mut self.boundaries {
+            *b = StepBoundary::Barrier;
+        }
+        self.pipe = None;
+    }
+
+    /// Whether a pipelined run would actually overlap steps: at least
+    /// two steps and at least one planned [`StepBoundary::Pipelined`]
+    /// entry. When false the pipelined entry points fall back to the
+    /// barriered path (identical results either way).
+    pub fn can_pipeline(&self) -> bool {
+        self.steps.len() >= 2 && self.boundaries.contains(&StepBoundary::Pipelined)
     }
 
     /// Numeric drop tolerance of one sparse-output SpGEMM step (default
@@ -750,6 +907,553 @@ impl<T: Scalar> ChainExec<T> {
             }
         }
         true
+    }
+
+    /// Build (or reuse) the cross-step dependence DAG and the
+    /// executor-resolved per-step facts it encodes: resolved strip
+    /// widths, packed-panel shapes, per-worker scratch requirements.
+    /// Resolution mirrors the barriered per-step executors exactly, so
+    /// both paths run the same kernel sequence per output row.
+    fn ensure_pipe_plan(&mut self) {
+        if self.pipe.is_some() {
+            return;
+        }
+        let (dag, info) = {
+            let mut descs: Vec<DagStepDesc<'_>> = Vec::with_capacity(self.steps.len());
+            let mut info = Vec::with_capacity(self.steps.len());
+            // Rows of the flowing value entering each step.
+            let mut fr = self.in_rows;
+            for (s, step) in self.steps.iter().enumerate() {
+                let boundary = self.boundaries[s];
+                let (kind, reads, strip_w, panel_rows, tile_slot) = match &step.op {
+                    ChainStepOp::GemmFlowB { .. }
+                    | ChainStepOp::GemmFlowC { .. }
+                    | ChainStepOp::SpmmFlowC { .. } => {
+                        let reads = match &step.op {
+                            ChainStepOp::GemmFlowB { .. } => DagReads::Identity,
+                            ChainStepOp::GemmFlowC { .. } => DagReads::All,
+                            ChainStepOp::SpmmFlowC { b, .. } => DagReads::Rows(&b.pattern),
+                            _ => unreachable!(),
+                        };
+                        match step.strategy {
+                            StepStrategy::Fused => {
+                                let sched = step
+                                    .schedule
+                                    .as_deref()
+                                    .expect("pair steps carry schedules");
+                                let strip_w =
+                                    step.strip.resolve(sched.strip_width, step.out_cols);
+                                // First-op C panel packing: only dense-C
+                                // first ops pack, and only on the strip
+                                // path (mirrors `packs_panel`).
+                                let panel_rows = match (&step.op, strip_w) {
+                                    (ChainStepOp::GemmFlowB { w, .. }, Some(_)) => w.rows,
+                                    (ChainStepOp::GemmFlowC { .. }, Some(_)) => fr,
+                                    _ => 0,
+                                };
+                                let max_rows = sched.wavefronts[0]
+                                    .iter()
+                                    .map(|t| t.i_len())
+                                    .max()
+                                    .unwrap_or(0);
+                                let tile_slot = strip_w.map_or(0, |w| max_rows * w);
+                                (
+                                    DagStepKind::Fused {
+                                        schedule: sched,
+                                        pack: panel_rows > 0,
+                                    },
+                                    reads,
+                                    strip_w,
+                                    panel_rows,
+                                    tile_slot,
+                                )
+                            }
+                            StepStrategy::Unfused => (
+                                DagStepKind::Unfused {
+                                    n_first: step.d1.rows,
+                                    n_second: step.out_rows,
+                                    chunk: UNFUSED_CHUNK,
+                                },
+                                reads,
+                                step.strip.resolve(None, step.out_cols),
+                                0,
+                                0,
+                            ),
+                        }
+                    }
+                    ChainStepOp::SpgemmFlow { a, .. } => {
+                        let kind = if step.output == StepOutput::SparseCsr {
+                            DagStepKind::SpgemmSparse {
+                                out_rows: step.out_rows,
+                                chunk: ROW_CHUNK,
+                            }
+                        } else {
+                            DagStepKind::RowBlocks {
+                                out_rows: step.out_rows,
+                                chunk: ROW_CHUNK,
+                            }
+                        };
+                        (kind, DagReads::Rows(&a.pattern), None, 0, 0)
+                    }
+                    ChainStepOp::FlowAMulB { .. } => (
+                        DagStepKind::RowBlocks { out_rows: step.out_rows, chunk: ROW_CHUNK },
+                        DagReads::Identity,
+                        None,
+                        0,
+                        0,
+                    ),
+                };
+                descs.push(DagStepDesc { kind, reads, boundary });
+                info.push(PipeStepInfo { strip_w, panel_rows, tile_slot });
+                fr = step.out_rows;
+            }
+            (build_chain_dag(&descs), info)
+        };
+        self.pipe = Some(PipePlan { dag, info });
+    }
+
+    /// [`ChainExec::run`] over the cross-step dependence DAG: a tile of
+    /// step `s + 1` starts as soon as the step-`s` rows it reads are
+    /// final, instead of waiting for step `s`'s whole-pool barrier.
+    /// Bitwise-identical to [`ChainExec::run`] at any thread count
+    /// (every output row is written by exactly one DAG node running the
+    /// same kernel sequence as the barriered path). Falls back to the
+    /// barriered path when [`ChainExec::can_pipeline`] is false.
+    pub fn run_pipelined(&mut self, pool: &ThreadPool, x: &Dense<T>, out: &mut Dense<T>) {
+        let done = self.run_pipelined_controlled_io(
+            pool,
+            ChainIn::Dense(x),
+            ChainOut::Dense(out),
+            |_| StepControl::Continue,
+        );
+        debug_assert!(done, "unconditional Continue cannot cancel");
+    }
+
+    /// [`ChainExec::run_pipelined`] for any planned input/output format
+    /// combination.
+    pub fn run_pipelined_io(&mut self, pool: &ThreadPool, x: ChainIn<'_, T>, out: ChainOut<'_, T>) {
+        let done = self.run_pipelined_controlled_io(pool, x, out, |_| StepControl::Continue);
+        debug_assert!(done, "unconditional Continue cannot cancel");
+    }
+
+    /// [`ChainExec::run_pipelined_io`] with the inter-segment control
+    /// hook of [`ChainExec::run_controlled_io`]. Control points keep
+    /// their count and order (`ctrl(0..n)`, pool idle at each), but
+    /// their meaning shifts with pipelining: at `ctrl(k)`, steps
+    /// `0..k-1` have fully drained while step `k` may be **partially
+    /// complete** (its tiles were allowed to start during step `k - 1`'s
+    /// drain). Cancellation semantics are unchanged: returning
+    /// [`StepControl::Cancel`] abandons the chain, the output is
+    /// unspecified, and the executor stays bound and reusable. There is
+    /// no tap — taps rewrite a whole intermediate between steps, which
+    /// is exactly the barrier this path removes; use
+    /// [`ChainExec::run_with`] for tapped chains.
+    pub fn run_pipelined_controlled_io(
+        &mut self,
+        pool: &ThreadPool,
+        x: ChainIn<'_, T>,
+        out: ChainOut<'_, T>,
+        mut ctrl: impl FnMut(usize) -> StepControl,
+    ) -> bool {
+        if !self.can_pipeline() {
+            return self.run_controlled_io(pool, x, out, ctrl, |_, _| {});
+        }
+        assert_eq!(x.format(), self.in_format, "chain input format");
+        assert_eq!(x.dims(), (self.in_rows, self.in_cols), "chain input shape");
+        assert_eq!(out.format(), self.out_format, "chain output format");
+        if let ChainOut::Dense(d) = &out {
+            assert_eq!((d.rows, d.cols), (self.out_rows, self.out_cols), "chain output shape");
+        }
+        self.ensure_pipe_plan();
+        let Self { steps, strips, spgemm, pipe, pipe_bufs, pipe_panels, pipe_row_nnz, .. } =
+            self;
+        let plan = pipe.as_ref().expect("ensure_pipe_plan ran");
+        let n = steps.len();
+
+        // ---- Workspace prep: every allocation is sized *before* any
+        // pointer is captured; nothing below reallocates mid-run. ----
+
+        // Shared SpGEMM merge scratch (sparse-output steps only; the
+        // dense-output SpGEMM rows accumulate in place).
+        if let Some(cols) = steps
+            .iter()
+            .filter(|st| {
+                matches!(st.op, ChainStepOp::SpgemmFlow { .. })
+                    && st.output == StepOutput::SparseCsr
+            })
+            .map(|st| st.out_cols)
+            .max()
+        {
+            spgemm.prepare_workers(pool, cols);
+        }
+
+        // Per-worker tile-strip scratch, sized to the largest strip
+        // tile of any step (workers interleave tiles of different
+        // steps). No shared panel — panels are per-step here.
+        let slot_len = plan.info.iter().map(|i| i.tile_slot).max().unwrap_or(0);
+        let (_, scratch) = strips.prepare(pool, slot_len, 0);
+
+        // Per-step packed panels and symbolic row counts.
+        for (s, step) in steps.iter().enumerate() {
+            let need = plan.info[s].panel_rows * step.out_cols;
+            if pipe_panels[s].len() < need {
+                pipe_panels[s].resize(need, T::ZERO);
+            }
+            if matches!(step.op, ChainStepOp::SpgemmFlow { .. })
+                && step.output == StepOutput::SparseCsr
+            {
+                pipe_row_nnz[s].clear();
+                pipe_row_nnz[s].resize(step.out_rows, 0);
+            }
+        }
+
+        // Ring-slot dense data, sized to the max area over the
+        // intermediate steps each slot serves. `Vec::resize` within
+        // capacity never moves the allocation, and all resizing happens
+        // here — before pointer capture.
+        for (j, buf) in pipe_bufs.iter_mut().enumerate() {
+            let need = steps[..n - 1]
+                .iter()
+                .enumerate()
+                .filter(|(s, st)| s % 3 == j && st.output == StepOutput::Dense)
+                .map(|(_, st)| st.out_rows * st.out_cols)
+                .max()
+                .unwrap_or(0);
+            if buf.dense.data.len() < need {
+                buf.dense.data.resize(need, T::ZERO);
+            }
+        }
+
+        // ---- Raw pointer capture. All ring-buffer access from here on
+        // goes through this one root pointer (shape updates at segment
+        // starts, transient reader/writer refs inside node bodies). ----
+        let bufs_ptr: *mut InterBuf<T> = pipe_bufs.as_mut_ptr();
+        let (x_dense_ptr, x_sparse_ptr, x_is_sparse): (*const Dense<T>, *const Csr<T>, bool) =
+            match x {
+                ChainIn::Dense(d) => (d as *const Dense<T>, std::ptr::null(), false),
+                ChainIn::Sparse(c) => (std::ptr::null(), c as *const Csr<T>, true),
+            };
+        let (out_dense_ptr, out_sparse_ptr): (*mut T, *mut Csr<T>) = match out {
+            ChainOut::Dense(d) => (d.data.as_mut_ptr(), std::ptr::null_mut()),
+            ChainOut::Sparse(c) => (std::ptr::null_mut(), c as *mut Csr<T>),
+        };
+        let outputs: Vec<StepOutput> = steps.iter().map(|st| st.output).collect();
+        let mut ctxs: Vec<PipeStepCtx<T>> = Vec::with_capacity(n);
+        for (s, step) in steps.iter_mut().enumerate() {
+            let inf = &plan.info[s];
+            let (src_dense, src_sparse, src_is_sparse) = if s == 0 {
+                (x_dense_ptr, x_sparse_ptr, x_is_sparse)
+            } else {
+                unsafe {
+                    let b = bufs_ptr.add((s - 1) % 3);
+                    (
+                        std::ptr::addr_of!((*b).dense),
+                        std::ptr::addr_of!((*b).sparse),
+                        outputs[s - 1] == StepOutput::SparseCsr,
+                    )
+                }
+            };
+            let (dst_dense, dst_sparse) = if s + 1 == n {
+                (out_dense_ptr, out_sparse_ptr)
+            } else {
+                unsafe {
+                    let b = bufs_ptr.add(s % 3);
+                    ((*b).dense.data.as_mut_ptr(), std::ptr::addr_of_mut!((*b).sparse))
+                }
+            };
+            ctxs.push(PipeStepCtx {
+                src_dense,
+                src_sparse,
+                src_is_sparse,
+                dst_dense,
+                dst_sparse,
+                d1: step.d1.data.as_mut_ptr(),
+                panel: pipe_panels[s].as_mut_ptr(),
+                panel_len: inf.panel_rows * step.out_cols,
+                panel_rows: inf.panel_rows,
+                strip_w: inf.strip_w,
+                row_nnz: pipe_row_nnz[s].as_mut_ptr(),
+                out_rows: step.out_rows,
+                ccol: step.out_cols,
+                drop_tol: step.drop_tol,
+                sp_indptr: AtomicPtr::new(std::ptr::null_mut()),
+                sp_idx: AtomicPtr::new(std::ptr::null_mut()),
+                sp_val: AtomicPtr::new(std::ptr::null_mut()),
+            });
+        }
+        let steps: &[ChainStepExec<T>] = steps;
+
+        // ---- DAG run state: queues per NUMA node, nodes of a segment
+        // spread round-robin across them so node-local workers pop
+        // their own shard first and steal across nodes last. ----
+        let spec = &plan.dag.spec;
+        let n_queues = pool.n_nodes().max(1);
+        let mut seg_count = vec![0u32; n];
+        for &seg in &spec.segment {
+            seg_count[seg as usize] += 1;
+        }
+        let mut seg_seen = vec![0u32; n];
+        let mut home = vec![0u32; spec.n_nodes()];
+        for (i, h) in home.iter_mut().enumerate() {
+            let seg = spec.segment[i] as usize;
+            *h = seg_seen[seg] * n_queues as u32 / seg_count[seg].max(1);
+            seg_seen[seg] += 1;
+        }
+        let run = DagRun::new(spec, n_queues, home);
+
+        let nodes = &plan.dag.nodes;
+        let ctxs_ref = &ctxs;
+        let sws: &SpgemmWs<T> = spgemm;
+        let body = move |nid: u32, w: usize| {
+            exec_node(&nodes[nid as usize], steps, ctxs_ref, scratch, sws, w);
+        };
+
+        // Segment k drains step k and issues through step k + 1. Ring
+        // slots are (re)shaped while the pool is idle, one segment
+        // before their writer step can first be issued.
+        for k in 0..n {
+            if ctrl(k) == StepControl::Cancel {
+                return false;
+            }
+            unsafe {
+                if k == 0 {
+                    shape_slot(bufs_ptr, steps, 0);
+                }
+                if k + 1 <= n - 2 {
+                    shape_slot(bufs_ptr, steps, k + 1);
+                }
+            }
+            run_dag_segment(pool, spec, &run, k as u32, ((k + 1).min(n - 1)) as u32, &body);
+        }
+        true
+    }
+}
+
+/// Reshape intermediate ring slot `s % 3` to hold step `s`'s output —
+/// called with the pool idle, before any node of step `s` can issue.
+/// The dense data was pre-sized at run start (its `len` may exceed
+/// `rows · cols`; kernels index `row · cols + col` and never read the
+/// tail), so this never reallocates; a sparse slot's CSR is rebuilt by
+/// the step's own `Shell` node.
+///
+/// # Safety
+/// `bufs` must point at the live 3-slot ring and no pool worker may be
+/// running (the slot is mutated without synchronization).
+unsafe fn shape_slot<T: Scalar>(bufs: *mut InterBuf<T>, steps: &[ChainStepExec<T>], s: usize) {
+    let b = &mut *bufs.add(s % 3);
+    let step = &steps[s];
+    b.fmt = step.output;
+    if step.output == StepOutput::Dense {
+        debug_assert!(b.dense.data.len() >= step.out_rows * step.out_cols);
+        b.dense.rows = step.out_rows;
+        b.dense.cols = step.out_cols;
+    }
+}
+
+/// Execute one cross-step DAG node. Each node runs the exact kernel the
+/// barriered path runs for the same rows/tile — pipelining changes
+/// *when* a node runs, never *what* it computes, which is what keeps
+/// the two paths bitwise-equal.
+fn exec_node<T: Scalar>(
+    node: &DagNode,
+    steps: &[ChainStepExec<T>],
+    ctxs: &[PipeStepCtx<T>],
+    scratch: &WorkerScratch<T>,
+    sws: &SpgemmWs<T>,
+    w: usize,
+) {
+    match *node {
+        DagNode::Mid { .. } | DagNode::Sentinel { .. } => {}
+        DagNode::Pack { step } => {
+            let s = step as usize;
+            let ctx = &ctxs[s];
+            let sw = ctx.strip_w.expect("pack node implies a strip width");
+            unsafe {
+                let c: &Dense<T> = match &steps[s].op {
+                    ChainStepOp::GemmFlowB { w: wt, .. } => wt,
+                    ChainStepOp::GemmFlowC { .. } => &*ctx.src_dense,
+                    _ => unreachable!("pack node on a non-packing step"),
+                };
+                let panel = std::slice::from_raw_parts_mut(ctx.panel, ctx.panel_len);
+                pack_panels_all(c, ctx.ccol, sw, ctx.panel_rows, panel);
+            }
+        }
+        DagNode::Wf0 { step, tile } => {
+            let s = step as usize;
+            let st = &steps[s];
+            let ctx = &ctxs[s];
+            let sched = st.schedule.as_deref().expect("pair steps carry schedules");
+            let t = &sched.wavefronts[0][tile as usize];
+            unsafe {
+                let x = &*ctx.src_dense;
+                let (op, c): (PairOp<'_, T>, &Dense<T>) = match &st.op {
+                    ChainStepOp::GemmFlowB { a, w: wt } => (PairOp::gemm_spmm(a, x), &**wt),
+                    ChainStepOp::GemmFlowC { a, b } => (PairOp::gemm_spmm(a, b), x),
+                    ChainStepOp::SpmmFlowC { a, b } => (PairOp::spmm_spmm(a, b), x),
+                    _ => unreachable!("wavefront node on a sparse-flow step"),
+                };
+                match ctx.strip_w {
+                    None => fused_tile_full(&op, t, c, ctx.ccol, ctx.d1, ctx.dst_dense),
+                    Some(sw) => fused_tile_strip(
+                        &op,
+                        t,
+                        c,
+                        ctx.ccol,
+                        sw,
+                        ctx.panel_rows,
+                        std::slice::from_raw_parts(ctx.panel, ctx.panel_len),
+                        scratch.get(w),
+                        ctx.d1,
+                        ctx.dst_dense,
+                    ),
+                }
+            }
+        }
+        DagNode::Wf1 { step, tile } => {
+            let s = step as usize;
+            let st = &steps[s];
+            let ctx = &ctxs[s];
+            let sched = st.schedule.as_deref().expect("pair steps carry schedules");
+            let t = &sched.wavefronts[1][tile as usize];
+            let a: &Csr<T> = match &st.op {
+                ChainStepOp::GemmFlowB { a, .. }
+                | ChainStepOp::GemmFlowC { a, .. }
+                | ChainStepOp::SpmmFlowC { a, .. } => a,
+                _ => unreachable!("wavefront node on a sparse-flow step"),
+            };
+            unsafe {
+                fused_tile_wf1(a, &t.j_rows, ctx.d1 as *const T, ctx.dst_dense, ctx.ccol);
+            }
+        }
+        DagNode::First { step, lo, hi } => {
+            let s = step as usize;
+            let st = &steps[s];
+            let ctx = &ctxs[s];
+            unsafe {
+                let x = &*ctx.src_dense;
+                let (op, c): (PairOp<'_, T>, &Dense<T>) = match &st.op {
+                    ChainStepOp::GemmFlowB { a, w: wt } => (PairOp::gemm_spmm(a, x), &**wt),
+                    ChainStepOp::GemmFlowC { a, b } => (PairOp::gemm_spmm(a, b), x),
+                    ChainStepOp::SpmmFlowC { a, b } => (PairOp::spmm_spmm(a, b), x),
+                    _ => unreachable!("first-op node on a sparse-flow step"),
+                };
+                unfused_first_rows(&op, c, ctx.ccol, lo as usize..hi as usize, ctx.d1);
+            }
+        }
+        DagNode::Second { step, lo, hi } => {
+            let s = step as usize;
+            let st = &steps[s];
+            let ctx = &ctxs[s];
+            unsafe {
+                let x = &*ctx.src_dense;
+                let op: PairOp<'_, T> = match &st.op {
+                    ChainStepOp::GemmFlowB { a, .. } => PairOp::gemm_spmm(a, x),
+                    ChainStepOp::GemmFlowC { a, b } => PairOp::gemm_spmm(a, b),
+                    ChainStepOp::SpmmFlowC { a, b } => PairOp::spmm_spmm(a, b),
+                    _ => unreachable!("second-op node on a sparse-flow step"),
+                };
+                unfused_second_rows(
+                    &op,
+                    ctx.ccol,
+                    ctx.strip_w,
+                    lo as usize..hi as usize,
+                    ctx.d1 as *const T,
+                    ctx.dst_dense,
+                );
+            }
+        }
+        DagNode::Symbolic { step, lo, hi } => {
+            let s = step as usize;
+            let ctx = &ctxs[s];
+            let a = match &steps[s].op {
+                ChainStepOp::SpgemmFlow { a, .. } => a,
+                _ => unreachable!("symbolic node on a non-SpGEMM step"),
+            };
+            unsafe {
+                let v = &*ctx.src_sparse;
+                let (marks, touched, acc) = sws.merge_slots(w);
+                spgemm_symbolic_rows(
+                    a,
+                    v,
+                    lo as usize..hi as usize,
+                    marks,
+                    touched,
+                    acc,
+                    ctx.drop_tol,
+                    ctx.row_nnz,
+                );
+            }
+        }
+        DagNode::Shell { step } => {
+            let s = step as usize;
+            let ctx = &ctxs[s];
+            unsafe {
+                let v = &*ctx.src_sparse;
+                // Sole owner while this node runs: every Symbolic node
+                // of the step is a dependency, every Numeric a
+                // dependent.
+                let out = &mut *ctx.dst_sparse;
+                let counts = std::slice::from_raw_parts(ctx.row_nnz as *const usize, ctx.out_rows);
+                out.reset_from_row_counts(ctx.out_rows, v.cols(), counts);
+                // Publish the (possibly reallocated) CSR arrays to the
+                // step's Numeric nodes without handing them `&mut`
+                // aliases of the whole Csr.
+                ctx.sp_indptr.store(out.pattern.indptr.as_mut_ptr(), Ordering::Release);
+                ctx.sp_idx.store(out.pattern.indices.as_mut_ptr(), Ordering::Release);
+                ctx.sp_val.store(out.data.as_mut_ptr(), Ordering::Release);
+            }
+        }
+        DagNode::Numeric { step, lo, hi } => {
+            let s = step as usize;
+            let ctx = &ctxs[s];
+            let a = match &steps[s].op {
+                ChainStepOp::SpgemmFlow { a, .. } => a,
+                _ => unreachable!("numeric node on a non-SpGEMM step"),
+            };
+            unsafe {
+                let v = &*ctx.src_sparse;
+                let (marks, touched, acc) = sws.merge_slots(w);
+                let indptr = std::slice::from_raw_parts(
+                    ctx.sp_indptr.load(Ordering::Acquire) as *const usize,
+                    ctx.out_rows + 1,
+                );
+                let idx = ctx.sp_idx.load(Ordering::Acquire);
+                let val = ctx.sp_val.load(Ordering::Acquire);
+                spgemm_numeric_rows(
+                    a,
+                    v,
+                    lo as usize..hi as usize,
+                    marks,
+                    touched,
+                    acc,
+                    ctx.drop_tol,
+                    indptr,
+                    idx,
+                    val,
+                );
+            }
+        }
+        DagNode::Rows { step, lo, hi } => {
+            let s = step as usize;
+            let ctx = &ctxs[s];
+            let r = lo as usize..hi as usize;
+            unsafe {
+                match &steps[s].op {
+                    ChainStepOp::SpgemmFlow { a, .. } => {
+                        spgemm_dense_rows(a, &*ctx.src_sparse, r, ctx.dst_dense, ctx.ccol);
+                    }
+                    ChainStepOp::FlowAMulB { b } => {
+                        if ctx.src_is_sparse {
+                            spmm_dense_rows(&*ctx.src_sparse, b, r, ctx.dst_dense);
+                        } else {
+                            let v = &*ctx.src_dense;
+                            gemm_dense_rows(v.data.as_ptr(), v.cols, b, r, ctx.dst_dense);
+                        }
+                    }
+                    _ => unreachable!("row-block node on a pair step"),
+                }
+            }
+        }
     }
 }
 
@@ -1227,6 +1931,236 @@ mod tests {
             let expect = crate::kernels::spgemm(&a, &x, tol);
             assert_eq!(out, expect, "tol {tol}");
         }
+    }
+
+    #[test]
+    fn planner_picks_pipelined_boundaries_and_run_matches_bitwise() {
+        // Solver chain: step 0 barriered (nothing precedes it), later
+        // steps pipelined; the pipelined run must agree with the
+        // barriered one bit for bit at several thread counts/depths.
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::poisson2d(12, 12), 1, -1.0, 1.0));
+        for len in [2usize, 3, 5] {
+            let ops: Vec<ChainStepOp<f64>> = (0..len)
+                .map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+                .collect();
+            let x = Dense::<f64>::randn(a.rows(), 8, 3);
+            let mut chain = ChainExec::plan_and_build(ops, a.rows(), 8, params_small()).unwrap();
+            assert_eq!(chain.boundary(0), StepBoundary::Barrier);
+            for s in 1..len {
+                assert_eq!(chain.boundary(s), StepBoundary::Pipelined, "step {s}");
+            }
+            assert!(chain.can_pipeline());
+            for threads in [1usize, 3] {
+                let pool = ThreadPool::new(threads);
+                let mut expect = Dense::zeros(a.rows(), 8);
+                chain.run(&pool, &x, &mut expect);
+                let mut got = Dense::zeros(a.rows(), 8);
+                chain.run_pipelined(&pool, &x, &mut got);
+                assert_eq!(got.data, expect.data, "len={len} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_gcn_chain_matches_barriered_bitwise() {
+        // GemmFlowB steps pack their (stationary) weight panels, so the
+        // fused strip path with Pack nodes is exercised; every boundary
+        // after step 0 is Pipelined (flow-B reads are row-identity).
+        let a = Arc::new(Csr::<f64>::with_random_values(
+            gen::rmat(128, 6, gen::RmatKind::Graph500, 5),
+            2,
+            -1.0,
+            1.0,
+        ));
+        let widths = [8usize, 16, 16, 4];
+        let ops: Vec<ChainStepOp<f64>> = widths
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| ChainStepOp::GemmFlowB {
+                a: Arc::clone(&a),
+                w: Arc::new(Dense::<f64>::randn(w[0], w[1], 10 + i as u64)),
+            })
+            .collect();
+        let x = Dense::<f64>::randn(128, widths[0], 4);
+        let mut chain = ChainExec::plan_and_build(ops, 128, widths[0], params_small()).unwrap();
+        for s in 1..chain.n_steps() {
+            assert_eq!(chain.boundary(s), StepBoundary::Pipelined, "step {s}");
+        }
+        let pool = ThreadPool::new(3);
+        let mut expect = Dense::zeros(128, *widths.last().unwrap());
+        chain.run(&pool, &x, &mut expect);
+        let mut got = Dense::zeros(128, *widths.last().unwrap());
+        chain.run_pipelined(&pool, &x, &mut got);
+        assert_eq!(got.data, expect.data);
+        // Reusable: a second pipelined run reproduces the same bits.
+        let mut again = Dense::zeros(128, *widths.last().unwrap());
+        chain.run_pipelined(&pool, &x, &mut again);
+        assert_eq!(again.data, expect.data);
+    }
+
+    #[test]
+    fn pipelined_mixed_chain_keeps_read_all_steps_barriered() {
+        // A dense-B flow-C step reads the whole flowing value — the
+        // planner must keep its entry barriered even mid-chain, and the
+        // mixed fused/unfused pipelined run must still match bitwise.
+        let a1 = Arc::new(Csr::<f64>::with_random_values(
+            gen::uniform_random(30, 20, 4, 7),
+            3,
+            -1.0,
+            1.0,
+        ));
+        let b1 = Arc::new(Dense::<f64>::randn(20, 30, 8));
+        let a2 = Arc::new(Csr::<f64>::with_random_values(gen::banded(30, &[1, 3]), 4, -1.0, 1.0));
+        let a3 = Arc::new(Csr::<f64>::with_random_values(
+            gen::erdos_renyi(30, 3, 11),
+            5,
+            -1.0,
+            1.0,
+        ));
+        let w = Arc::new(Dense::<f64>::randn(6, 5, 9));
+        let ops = vec![
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a2), b: Arc::clone(&a2) },
+            ChainStepOp::GemmFlowC { a: Arc::clone(&a1), b: b1 },
+            ChainStepOp::GemmFlowB { a: Arc::clone(&a3), w },
+        ];
+        let x = Dense::<f64>::randn(30, 6, 12);
+        let mut chain = ChainExec::plan_and_build(ops, 30, 6, params_small()).unwrap();
+        assert_eq!(chain.boundary(1), StepBoundary::Barrier, "read-all step stays barriered");
+        assert_eq!(chain.boundary(2), StepBoundary::Pipelined);
+        chain.set_strategies(&[StepStrategy::Unfused, StepStrategy::Fused, StepStrategy::Fused]);
+        let pool = ThreadPool::new(3);
+        let mut expect = Dense::zeros(30, 5);
+        chain.run(&pool, &x, &mut expect);
+        let mut got = Dense::zeros(30, 5);
+        chain.run_pipelined(&pool, &x, &mut got);
+        assert_eq!(got.data, expect.data);
+    }
+
+    #[test]
+    fn pipelined_spgemm_chain_matches_barriered_sparse_and_dense_out() {
+        // Sparse→sparse→dense chain: symbolic rows of step s + 1 start
+        // while step s drains; the final CSR (and a densified variant)
+        // must equal the barriered run exactly.
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::erdos_renyi(48, 3, 9), 3, -1.0, 1.0));
+        let ops = vec![
+            ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::SparseCsr },
+            ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::SparseCsr },
+        ];
+        let mut chain =
+            ChainExec::plan_and_build_sparse(ops, 48, 48, a.nnz(), params_small()).unwrap();
+        assert_eq!(chain.boundary(1), StepBoundary::Pipelined);
+        for threads in [1usize, 3] {
+            let pool = ThreadPool::new(threads);
+            let mut expect = Csr::<f64>::empty(0, 0);
+            chain.run_io(&pool, ChainIn::Sparse(&a), ChainOut::Sparse(&mut expect));
+            let mut got = Csr::<f64>::empty(0, 0);
+            chain.run_pipelined_io(&pool, ChainIn::Sparse(&a), ChainOut::Sparse(&mut got));
+            assert_eq!(got, expect, "threads={threads}");
+            assert!(got.check_invariants());
+        }
+
+        // Sparse → dense consumer (FlowAMulB) through the same DAG.
+        let xd = Arc::new(Dense::<f64>::randn(48, 8, 4));
+        let ops = vec![
+            ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::SparseCsr },
+            ChainStepOp::FlowAMulB { b: Arc::clone(&xd) },
+        ];
+        let mut chain =
+            ChainExec::plan_and_build_sparse(ops, 48, 48, a.nnz(), params_small()).unwrap();
+        let pool = ThreadPool::new(3);
+        let mut expect = Dense::zeros(48, 8);
+        chain.run_io(&pool, ChainIn::Sparse(&a), ChainOut::Dense(&mut expect));
+        let mut got = Dense::zeros(48, 8);
+        chain.run_pipelined_io(&pool, ChainIn::Sparse(&a), ChainOut::Dense(&mut got));
+        assert_eq!(got.data, expect.data);
+    }
+
+    #[test]
+    fn pipelined_controlled_cancels_at_drain_points_and_stays_reusable() {
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(24, &[1]), 2, -1.0, 1.0));
+        let ops = vec![
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+        ];
+        let x = Dense::<f64>::randn(24, 4, 7);
+        let mut chain = ChainExec::plan_and_build(ops, 24, 4, params_small()).unwrap();
+        let pool = ThreadPool::new(2);
+        let mut expect = Dense::zeros(24, 4);
+        chain.run(&pool, &x, &mut expect);
+
+        // Same control-point count/order as the barriered path; the
+        // pool is idle at each point (the hook drives other work), and
+        // Cancel abandons the chain.
+        let mut control_points = Vec::new();
+        let mut y = Dense::zeros(24, 4);
+        let done = chain.run_pipelined_controlled_io(
+            &pool,
+            ChainIn::Dense(&x),
+            ChainOut::Dense(&mut y),
+            |s| {
+                control_points.push(s);
+                pool.parallel_for(8, |_, _| {}); // pool free at drain points
+                if s == 2 {
+                    StepControl::Cancel
+                } else {
+                    StepControl::Continue
+                }
+            },
+        );
+        assert!(!done);
+        assert_eq!(control_points, vec![0, 1, 2]);
+
+        // Cancellation leaves the executor reusable, still bitwise.
+        let mut got = Dense::zeros(24, 4);
+        chain.run_pipelined(&pool, &x, &mut got);
+        assert_eq!(got.data, expect.data);
+    }
+
+    #[test]
+    fn boundary_overrides_and_fallback() {
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(20, &[1, 2]), 3, -1.0, 1.0));
+        let ops = vec![
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+        ];
+        let x = Dense::<f64>::randn(20, 4, 1);
+        let mut chain = ChainExec::plan_and_build(ops, 20, 4, params_small()).unwrap();
+        let pool = ThreadPool::new(2);
+        let mut expect = Dense::zeros(20, 4);
+        chain.run(&pool, &x, &mut expect);
+
+        // Forcing barriers everywhere drops can_pipeline; the pipelined
+        // entry point falls back to the barriered path, same result.
+        chain.force_barriers();
+        assert!(!chain.can_pipeline());
+        let mut got = Dense::zeros(20, 4);
+        chain.run_pipelined(&pool, &x, &mut got);
+        assert_eq!(got.data, expect.data);
+
+        // And back: re-enabling a pipelined entry rebuilds the DAG.
+        chain.set_boundary(1, StepBoundary::Pipelined);
+        assert!(chain.can_pipeline());
+        let mut got2 = Dense::zeros(20, 4);
+        chain.run_pipelined(&pool, &x, &mut got2);
+        assert_eq!(got2.data, expect.data);
+
+        // A single-step chain can never pipeline.
+        let one = vec![ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) }];
+        let single = ChainExec::plan_and_build(one, 20, 4, params_small()).unwrap();
+        assert!(!single.can_pipeline());
+    }
+
+    #[test]
+    #[should_panic(expected = "step 0 always enters behind a barrier")]
+    fn step_zero_cannot_be_pipelined() {
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(10, &[1]), 1, -1.0, 1.0));
+        let ops = vec![
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+            ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+        ];
+        let mut chain = ChainExec::plan_and_build(ops, 10, 4, params_small()).unwrap();
+        chain.set_boundary(0, StepBoundary::Pipelined);
     }
 
     #[test]

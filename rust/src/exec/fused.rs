@@ -21,7 +21,8 @@
 use super::strip::{StripMode, StripWs};
 use super::{Dense, PairExec, PairOp, Scalar, SendPtr, ThreadPool};
 use crate::kernels;
-use crate::scheduler::FusedSchedule;
+use crate::scheduler::{FusedSchedule, Tile};
+use crate::sparse::Csr;
 
 /// Tile-fusion executor bound to a pair and its schedule.
 pub struct Fused<'a, T> {
@@ -65,6 +66,110 @@ impl<'a, T: Scalar> Fused<'a, T> {
     /// strip back to the full-width buffer.
     pub fn d1(&self) -> &Dense<T> {
         &self.d1
+    }
+}
+
+/// One wavefront-0 tile, full width: produce the tile's `D1` rows, then
+/// immediately consume them for the tile's fused second-op rows. The
+/// per-tile unit of both the barriered executor and the cross-step DAG.
+///
+/// # Safety
+/// `d1` / `d` must point at `n_first × ccol` / `n_second × ccol`
+/// row-major buffers, with no concurrent writer of this tile's `D1`
+/// rows or of the `D` rows in `tile.j_rows` (schedule invariants 1–3).
+pub(crate) unsafe fn fused_tile_full<T: Scalar>(
+    op: &PairOp<'_, T>,
+    tile: &Tile,
+    c: &Dense<T>,
+    ccol: usize,
+    d1: *mut T,
+    d: *mut T,
+) {
+    for i in tile.i_begin as usize..tile.i_end as usize {
+        let out = std::slice::from_raw_parts_mut(d1.add(i * ccol), ccol);
+        op.first.compute_row(i, c, op.layout, out);
+    }
+    kernels::spmm_rows(op.a, &tile.j_rows, d1, d, ccol);
+}
+
+/// One wavefront-0 tile in strip mode: per column strip, produce the
+/// tile's `D1` rows into `tile_ws`, consume them for the fused rows,
+/// and write the strip back to the full-width `d1`. `panel_all` holds
+/// the step's packed `C` panels strip-major ([`pack_panels_all`]) —
+/// empty (with `panel_rows == 0`) when the first op reads `C` directly.
+///
+/// # Safety
+/// As [`fused_tile_full`]; `tile_ws` must hold `tile.i_len() * w`
+/// elements and be private to the calling worker.
+#[allow(clippy::too_many_arguments)] // the strip-tile state tuple, spelled out
+pub(crate) unsafe fn fused_tile_strip<T: Scalar>(
+    op: &PairOp<'_, T>,
+    tile: &Tile,
+    c: &Dense<T>,
+    ccol: usize,
+    w: usize,
+    panel_rows: usize,
+    panel_all: &[T],
+    tile_ws: &mut [T],
+    d1: *mut T,
+    d: *mut T,
+) {
+    let i0 = tile.i_begin as usize;
+    let i1 = tile.i_end as usize;
+    let mut j0 = 0;
+    while j0 < ccol {
+        let wl = w.min(ccol - j0);
+        let panel = &panel_all[panel_rows * j0..panel_rows * (j0 + wl)];
+        // Produce the tile's D1 rows for this strip.
+        for i in i0..i1 {
+            let out = &mut tile_ws[(i - i0) * wl..(i - i0) * wl + wl];
+            op.first.compute_row_strip(i, c, op.layout, j0, panel, out);
+        }
+        // Consume them while strip-resident.
+        for &j in &tile.j_rows {
+            let out = std::slice::from_raw_parts_mut(d.add(j as usize * ccol + j0), wl);
+            kernels::spmm_row_strip(op.a, j as usize, tile_ws.as_ptr(), wl, i0, out);
+        }
+        // Write back for wavefront 1 / D1 consumers.
+        for i in i0..i1 {
+            let src = &tile_ws[(i - i0) * wl..(i - i0) * wl + wl];
+            std::slice::from_raw_parts_mut(d1.add(i * ccol + j0), wl).copy_from_slice(src);
+        }
+        j0 += wl;
+    }
+}
+
+/// One wavefront-1 (j-only) tile: full-width gathers over the complete
+/// `D1`.
+///
+/// # Safety
+/// `d1` must hold every `D1` row the gathered rows reference (i.e. all
+/// of wavefront 0 finished); `d` rows in `j_rows` have no other writer.
+pub(crate) unsafe fn fused_tile_wf1<T: Scalar>(
+    a: &Csr<T>,
+    j_rows: &[u32],
+    d1: *const T,
+    d: *mut T,
+    ccol: usize,
+) {
+    kernels::spmm_rows(a, j_rows, d1, d, ccol);
+}
+
+/// Pack every `w`-column panel of `C` strip-major into `panel_all` (the
+/// strip at `j0` occupies `panel_rows·j0 .. panel_rows·(j0+wl)`). No-op
+/// when `panel_rows == 0` (first op reads `C` directly).
+pub(crate) fn pack_panels_all<T: Scalar>(
+    c: &Dense<T>,
+    ccol: usize,
+    w: usize,
+    panel_rows: usize,
+    panel_all: &mut [T],
+) {
+    let mut j0 = 0;
+    while j0 < ccol && panel_rows > 0 {
+        let wl = w.min(ccol - j0);
+        kernels::pack_panel(c, j0, wl, &mut panel_all[panel_rows * j0..]);
+        j0 += wl;
     }
 }
 
@@ -119,79 +224,35 @@ pub fn run_fused_striped<T: Scalar>(
         None => {
             // Wavefront 0, full width: produce D1 rows, immediately
             // consume them for the tile's own second-op rows.
-            pool.parallel_for(wf0.len(), |ti, _| {
-                let tile = &wf0[ti];
-                unsafe {
-                    // First operation over the tile's contiguous i range.
-                    let d1 = d1_ptr.get();
-                    for i in tile.i_begin as usize..tile.i_end as usize {
-                        let out = std::slice::from_raw_parts_mut(d1.add(i * ccol), ccol);
-                        op.first.compute_row(i, c, op.layout, out);
-                    }
-                    // Fused second-operation rows (deps in-tile, still hot).
-                    kernels::spmm_rows(op.a, &tile.j_rows, d1_ptr.get(), d_ptr.get(), ccol);
-                }
+            pool.parallel_for(wf0.len(), |ti, _| unsafe {
+                fused_tile_full(op, &wf0[ti], c, ccol, d1_ptr.get(), d_ptr.get());
             });
         }
         Some(w) => {
             // Wavefront 0, strip-by-strip inside each tile (no extra
             // barriers). The packed C panels depend only on (C, strip
             // grid), so they are packed ONCE per run into the shared
-            // buffer — strip-major, the strip at j0 occupying elements
-            // `panel_rows·j0 .. panel_rows·(j0+wl)` — and every tile
-            // reads them; per-worker scratch holds just the tile's D1
-            // strip.
+            // buffer and every tile reads them; per-worker scratch
+            // holds just the tile's D1 strip.
             let max_rows = wf0.iter().map(|t| t.i_len()).max().unwrap_or(0);
             let panel_rows = if op.first.packs_panel(op.layout) { c.rows } else { 0 };
             let (panel_all, scratch) =
                 ws.prepare(pool, max_rows * w, panel_rows * ccol);
-            let mut j0 = 0;
-            while j0 < ccol && panel_rows > 0 {
-                let wl = w.min(ccol - j0);
-                kernels::pack_panel(c, j0, wl, &mut panel_all[panel_rows * j0..]);
-                j0 += wl;
-            }
+            pack_panels_all(c, ccol, w, panel_rows, panel_all);
             let panel_all: &[T] = panel_all;
-            pool.parallel_for(wf0.len(), |ti, wid| {
-                let tile = &wf0[ti];
-                let i0 = tile.i_begin as usize;
-                let i1 = tile.i_end as usize;
-                unsafe {
-                    let tile_ws = scratch.get(wid);
-                    let mut j0 = 0;
-                    while j0 < ccol {
-                        let wl = w.min(ccol - j0);
-                        let panel = &panel_all[panel_rows * j0..panel_rows * (j0 + wl)];
-                        // Produce the tile's D1 rows for this strip.
-                        for i in i0..i1 {
-                            let out = &mut tile_ws[(i - i0) * wl..(i - i0) * wl + wl];
-                            op.first.compute_row_strip(i, c, op.layout, j0, panel, out);
-                        }
-                        // Consume them while strip-resident.
-                        for &j in &tile.j_rows {
-                            let out = std::slice::from_raw_parts_mut(
-                                d_ptr.get().add(j as usize * ccol + j0),
-                                wl,
-                            );
-                            kernels::spmm_row_strip(
-                                op.a,
-                                j as usize,
-                                tile_ws.as_ptr(),
-                                wl,
-                                i0,
-                                out,
-                            );
-                        }
-                        // Write back for wavefront 1 / D1 consumers.
-                        let d1 = d1_ptr.get();
-                        for i in i0..i1 {
-                            let src = &tile_ws[(i - i0) * wl..(i - i0) * wl + wl];
-                            std::slice::from_raw_parts_mut(d1.add(i * ccol + j0), wl)
-                                .copy_from_slice(src);
-                        }
-                        j0 += wl;
-                    }
-                }
+            pool.parallel_for(wf0.len(), |ti, wid| unsafe {
+                fused_tile_strip(
+                    op,
+                    &wf0[ti],
+                    c,
+                    ccol,
+                    w,
+                    panel_rows,
+                    panel_all,
+                    scratch.get(wid),
+                    d1_ptr.get(),
+                    d_ptr.get(),
+                );
             });
         }
     }
@@ -199,11 +260,8 @@ pub fn run_fused_striped<T: Scalar>(
     // One barrier (implicit in parallel_for), then wavefront 1 —
     // full-width: its gathers span tiles, so no strip stays resident.
     let wf1 = &plan.wavefronts[1];
-    pool.parallel_for(wf1.len(), |ti, _| {
-        let tile = &wf1[ti];
-        unsafe {
-            kernels::spmm_rows(op.a, &tile.j_rows, d1_ptr.get() as *const T, d_ptr.get(), ccol);
-        }
+    pool.parallel_for(wf1.len(), |ti, _| unsafe {
+        fused_tile_wf1(op.a, &wf1[ti].j_rows, d1_ptr.get() as *const T, d_ptr.get(), ccol);
     });
 }
 

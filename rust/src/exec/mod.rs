@@ -19,7 +19,9 @@
 //!
 //! [`chain`] runs whole multiplication *chains* (GCN stacks, solver
 //! iterations) through one executor: one persistent pool, ping-pong
-//! intermediates, per-step fused/unfused strategy.
+//! intermediates, per-step fused/unfused strategy — and, on the
+//! pipelined path, barrier-free cross-step execution over a dependence
+//! DAG ([`pool::run_dag_segment`]).
 
 pub mod atomic_tiling;
 pub mod chain;
@@ -36,7 +38,10 @@ pub use atomic_tiling::AtomicTiling;
 pub use chain::{chain_specs, ChainExec, ChainIn, ChainOut, ChainStepOp, StepControl, StepStrategy};
 pub use fused::Fused;
 pub use overlapped::Overlapped;
-pub use pool::{Lease, PoolLease, PoolShard, SharedPool, ThreadPool, WorkerScratch};
+pub use pool::{
+    run_dag_segment, DagRun, DagSpec, Lease, PoolLease, PoolShard, SharedPool, ThreadPool,
+    WorkerScratch,
+};
 pub use spgemm::{run_spgemm, run_spgemm_dense, SpgemmWs};
 pub use strip::{StripMode, StripWs};
 pub use tensor_style::TensorStyle;

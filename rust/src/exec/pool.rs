@@ -22,7 +22,8 @@
 
 use crate::topology::Topology;
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
@@ -295,6 +296,205 @@ impl ThreadPool {
             f(lo..(lo + chunk).min(n), w);
         });
     }
+}
+
+/// A dependence DAG in countdown form: per-node predecessor counts, a
+/// dependents CSR, and a *segment* per node (for chains: the step the
+/// node belongs to). The spec is pure structure — built once per chain
+/// shape ([`crate::scheduler::build_chain_dag`]) and shared by every
+/// run.
+///
+/// Invariant relied on by the windowed scheduler: every predecessor of
+/// a node lives in the node's own or an earlier segment.
+pub struct DagSpec {
+    /// Predecessor count of each node (the countdown seed).
+    pub dep_count: Vec<u32>,
+    /// CSR offsets into [`DagSpec::adj`].
+    pub adj_ptr: Vec<u32>,
+    /// Dependents (successors) of each node, grouped by producer.
+    pub adj: Vec<u32>,
+    /// Segment of each node.
+    pub segment: Vec<u32>,
+    pub n_segments: u32,
+}
+
+impl DagSpec {
+    pub fn n_nodes(&self) -> usize {
+        self.dep_count.len()
+    }
+
+    #[inline]
+    fn dependents(&self, n: u32) -> &[u32] {
+        let (lo, hi) = (self.adj_ptr[n as usize] as usize, self.adj_ptr[n as usize + 1] as usize);
+        &self.adj[lo..hi]
+    }
+}
+
+struct DagQueues {
+    /// One ready deque per memory node; owners pop their front, thieves
+    /// take other nodes' backs (coldest work first).
+    ready: Vec<VecDeque<u32>>,
+    /// Zero-dependence nodes whose segment lies beyond the issue window.
+    parked: Vec<u32>,
+    done: Vec<bool>,
+    /// Not-yet-done nodes with `segment <= drain` — the exit condition
+    /// of the current [`run_dag_segment`] call.
+    drain_left: usize,
+    drain: u32,
+    issue: u32,
+}
+
+/// Mutable execution state of one DAG traversal: atomic countdowns plus
+/// the node-sharded ready queues. One `DagRun` drives exactly one full
+/// traversal (countdowns are consumed); segments of the same traversal
+/// share it across [`run_dag_segment`] calls.
+pub struct DagRun {
+    deps: Vec<AtomicU32>,
+    state: Mutex<DagQueues>,
+    cv: Condvar,
+    /// Home ready-queue of each node (node-aware placement; any values
+    /// work, they are taken modulo the queue count).
+    home: Vec<u32>,
+    n_queues: usize,
+}
+
+impl DagRun {
+    pub fn new(spec: &DagSpec, n_queues: usize, home: Vec<u32>) -> Self {
+        let n = spec.n_nodes();
+        assert_eq!(home.len(), n, "one home queue per node");
+        let n_queues = n_queues.max(1);
+        // Roots start parked; the first segment's issue window admits them.
+        let parked: Vec<u32> =
+            (0..n as u32).filter(|&i| spec.dep_count[i as usize] == 0).collect();
+        Self {
+            deps: spec.dep_count.iter().map(|&c| AtomicU32::new(c)).collect(),
+            state: Mutex::new(DagQueues {
+                ready: (0..n_queues).map(|_| VecDeque::new()).collect(),
+                parked,
+                done: vec![false; n],
+                drain_left: 0,
+                drain: 0,
+                issue: 0,
+            }),
+            cv: Condvar::new(),
+            home,
+            n_queues,
+        }
+    }
+}
+
+/// Run one windowed slice of a DAG traversal: blocks until every node
+/// with `segment <= drain` has executed, while opportunistically
+/// executing any ready node with `segment <= issue` — the cross-step
+/// pipelining primitive. Dependence countdowns are per-node atomics;
+/// ready nodes sit in per-memory-node deques (seeded by `home`) and
+/// idle workers steal from other nodes' queues back-first.
+///
+/// The pool is quiescent when this returns (same barrier semantics as
+/// [`ThreadPool::parallel_for`]): in-flight `issue`-window nodes finish
+/// before the internal broadcast joins, and the remaining ready backlog
+/// carries over to the next segment call. Calls must present
+/// monotonically non-decreasing `drain`/`issue` over one [`DagRun`].
+///
+/// `body(node, worker)` executes one node; it must not recurse into the
+/// pool.
+pub fn run_dag_segment(
+    pool: &ThreadPool,
+    spec: &DagSpec,
+    run: &DagRun,
+    drain: u32,
+    issue: u32,
+    body: impl Fn(u32, usize) + Send + Sync,
+) {
+    {
+        let mut st = run.state.lock().unwrap();
+        st.drain = drain;
+        st.issue = issue;
+        // Admit parked roots that entered the issue window.
+        let mut i = 0;
+        while i < st.parked.len() {
+            let nid = st.parked[i];
+            if spec.segment[nid as usize] <= issue {
+                st.parked.swap_remove(i);
+                let q = run.home[nid as usize] as usize % run.n_queues;
+                st.ready[q].push_back(nid);
+            } else {
+                i += 1;
+            }
+        }
+        st.drain_left =
+            (0..spec.n_nodes()).filter(|&i| !st.done[i] && spec.segment[i] <= drain).count();
+        if st.drain_left == 0 {
+            return;
+        }
+    }
+    pool.broadcast(|w| dag_worker(spec, run, &body, pool.worker_node(w) % run.n_queues, w));
+}
+
+fn dag_worker(
+    spec: &DagSpec,
+    run: &DagRun,
+    body: &(impl Fn(u32, usize) + Send + Sync),
+    q: usize,
+    w: usize,
+) {
+    let mut newly: Vec<u32> = Vec::new();
+    loop {
+        let node = {
+            let mut st = run.state.lock().unwrap();
+            loop {
+                if st.drain_left == 0 {
+                    drop(st);
+                    // Unblock siblings still parked on the condvar.
+                    run.cv.notify_all();
+                    return;
+                }
+                if let Some(n) = pop_ready(&mut st, q, run.n_queues) {
+                    break n;
+                }
+                st = run.cv.wait(st).unwrap();
+            }
+        };
+        body(node, w);
+        newly.clear();
+        for &d in spec.dependents(node) {
+            // AcqRel chains producers: the thread taking the count to
+            // zero observes every earlier producer's writes, and the
+            // queue mutex publishes them to whichever worker pops `d`.
+            if run.deps[d as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                newly.push(d);
+            }
+        }
+        let mut st = run.state.lock().unwrap();
+        st.done[node as usize] = true;
+        if spec.segment[node as usize] <= st.drain {
+            st.drain_left -= 1;
+        }
+        for &d in &newly {
+            if spec.segment[d as usize] <= st.issue {
+                st.ready[run.home[d as usize] as usize % run.n_queues].push_back(d);
+            } else {
+                st.parked.push(d);
+            }
+        }
+        let wake = !newly.is_empty() || st.drain_left == 0;
+        drop(st);
+        if wake {
+            run.cv.notify_all();
+        }
+    }
+}
+
+fn pop_ready(st: &mut DagQueues, q: usize, nq: usize) -> Option<u32> {
+    if let Some(n) = st.ready[q].pop_front() {
+        return Some(n);
+    }
+    for k in 1..nq {
+        if let Some(n) = st.ready[(q + k) % nq].pop_back() {
+            return Some(n);
+        }
+    }
+    None
 }
 
 /// Which workers a [`SharedPool`] lease covers.
@@ -742,6 +942,79 @@ mod tests {
         // ensure() never shrinks.
         scratch.ensure(4);
         unsafe { assert_eq!(scratch.get(0).len(), 8) };
+    }
+
+    fn spec_from_preds(preds: &[Vec<u32>], segment: Vec<u32>, n_segments: u32) -> DagSpec {
+        let n = preds.len();
+        let mut dep_count = vec![0u32; n];
+        let mut out_deg = vec![0u32; n];
+        for (i, ps) in preds.iter().enumerate() {
+            dep_count[i] = ps.len() as u32;
+            for &p in ps {
+                out_deg[p as usize] += 1;
+            }
+        }
+        let mut adj_ptr = vec![0u32; n + 1];
+        for i in 0..n {
+            adj_ptr[i + 1] = adj_ptr[i] + out_deg[i];
+        }
+        let mut adj = vec![0u32; adj_ptr[n] as usize];
+        let mut cur = adj_ptr[..n].to_vec();
+        for (i, ps) in preds.iter().enumerate() {
+            for &p in ps {
+                adj[cur[p as usize] as usize] = i as u32;
+                cur[p as usize] += 1;
+            }
+        }
+        DagSpec { dep_count, adj_ptr, adj, segment, n_segments }
+    }
+
+    #[test]
+    fn dag_segments_run_every_node_respecting_deps() {
+        // 4 segments of 16 nodes; each node depends on two nodes of the
+        // previous segment. Windowed execution must (a) never run a node
+        // before a predecessor, (b) never run a node outside the issue
+        // window, (c) leave every drain-target node done per segment.
+        for threads in [1usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let (per, segs) = (16u32, 4u32);
+            let n = (per * segs) as usize;
+            let mut preds: Vec<Vec<u32>> = vec![Vec::new(); n];
+            let mut segment = vec![0u32; n];
+            for s in 0..segs {
+                for i in 0..per {
+                    let me = (s * per + i) as usize;
+                    segment[me] = s;
+                    if s > 0 {
+                        preds[me].push((s - 1) * per + i);
+                        preds[me].push((s - 1) * per + (i ^ 1));
+                    }
+                }
+            }
+            let spec = spec_from_preds(&preds, segment.clone(), segs);
+            let run = DagRun::new(&spec, pool.n_nodes(), vec![0u32; n]);
+            let done: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            for k in 0..segs {
+                let issue = (k + 1).min(segs - 1);
+                run_dag_segment(&pool, &spec, &run, k, issue, |nid, _| {
+                    assert!(segment[nid as usize] <= issue, "node ran outside issue window");
+                    for &p in &preds[nid as usize] {
+                        assert_eq!(done[p as usize].load(Ordering::Acquire), 1, "dep order");
+                    }
+                    done[nid as usize].store(1, Ordering::Release);
+                });
+                for i in 0..n {
+                    if segment[i] <= k {
+                        assert_eq!(
+                            done[i].load(Ordering::Relaxed),
+                            1,
+                            "threads={threads} k={k} node={i} not drained"
+                        );
+                    }
+                }
+            }
+            assert!(done.iter().all(|d| d.load(Ordering::Relaxed) == 1));
+        }
     }
 
     #[test]

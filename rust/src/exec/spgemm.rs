@@ -36,8 +36,9 @@ use crate::kernels::{
 use crate::sparse::Csr;
 
 /// Row-block grain for the row-parallel phases (matches the unfused
-/// executors' dynamic row chunking).
-const ROW_CHUNK: usize = 64;
+/// executors' dynamic row chunking; also the DAG node grain for
+/// sparse-flow chain steps).
+pub(crate) const ROW_CHUNK: usize = 64;
 
 /// Lazily sized per-thread SpGEMM workspaces an executor owns across
 /// runs: column marks, touched-column lists and dense value
@@ -67,6 +68,15 @@ impl<T: Scalar> SpgemmWs<T> {
     /// merge scratch first-touches node-local memory on a pinned
     /// multi-node pool), and `rows` symbolic-count slots.
     fn prepare(&mut self, pool: &ThreadPool, cols: usize, rows: usize) {
+        self.prepare_workers(pool, cols);
+        self.row_nnz.clear();
+        self.row_nnz.resize(rows, 0);
+    }
+
+    /// Size only the per-worker merge scratch (no symbolic-count slots).
+    /// The pipelined chain executor owns per-step count buffers itself
+    /// and calls this once per run with the widest sparse step.
+    pub(crate) fn prepare_workers(&mut self, pool: &ThreadPool, cols: usize) {
         let workers = pool.n_threads();
         if self.marks.n_slots() < workers {
             self.marks = WorkerScratch::for_threads(workers);
@@ -76,14 +86,148 @@ impl<T: Scalar> SpgemmWs<T> {
         self.marks.ensure_local(pool, cols);
         self.touched.ensure_local(pool, cols);
         self.acc.ensure_local(pool, cols);
-        self.row_nnz.clear();
-        self.row_nnz.resize(rows, 0);
+    }
+
+    /// Worker `w`'s merge scratch triple (marks, touched, accumulator).
+    ///
+    /// # Safety
+    /// Same contract as [`WorkerScratch::get`]: at most one caller per
+    /// slot at a time, and `prepare_workers` must have sized the slots.
+    pub(crate) unsafe fn merge_slots(&self, w: usize) -> (&mut [u32], &mut [u32], &mut [T]) {
+        (self.marks.get(w), self.touched.get(w), self.acc.get(w))
     }
 }
 
 impl<T: Scalar> Default for SpgemmWs<T> {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Symbolic phase over rows `r`: per-row unique-column (or
+/// tolerance-surviving) counts into `row_nnz[i]`. The per-chunk unit of
+/// both the barriered executor and the cross-step DAG.
+///
+/// # Safety
+/// `row_nnz` must point at (at least) `a.rows()` slots; rows `r` have
+/// no concurrent writer. `marks`/`touched`/`acc` are this worker's
+/// exclusive scratch, each at least `v.cols()` long, marks all zero.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn spgemm_symbolic_rows<T: Scalar>(
+    a: &Csr<T>,
+    v: &Csr<T>,
+    r: std::ops::Range<usize>,
+    marks: &mut [u32],
+    touched: &mut [u32],
+    acc: &mut [T],
+    drop_tol: f64,
+    row_nnz: *mut usize,
+) {
+    if drop_tol == 0.0 {
+        for i in r {
+            *row_nnz.add(i) = spgemm_row_symbolic(a.pattern.row(i), &v.pattern, marks, touched);
+        }
+    } else {
+        for i in r {
+            let (ac, av) = a.row(i);
+            *row_nnz.add(i) = spgemm_row_symbolic_tol(ac, av, v, marks, touched, acc, drop_tol);
+        }
+    }
+}
+
+/// Numeric phase over rows `r`: re-merge with values into the disjoint
+/// `indptr[i]..indptr[i+1]` slots of the output's column/value arrays.
+///
+/// # Safety
+/// `idx`/`val` point at the output's `indices`/`data` arrays, sized by
+/// the shell phase from the same counts the symbolic phase produced;
+/// rows `r` have no concurrent writer. Scratch contract as in
+/// [`spgemm_symbolic_rows`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn spgemm_numeric_rows<T: Scalar>(
+    a: &Csr<T>,
+    v: &Csr<T>,
+    r: std::ops::Range<usize>,
+    marks: &mut [u32],
+    touched: &mut [u32],
+    acc: &mut [T],
+    drop_tol: f64,
+    indptr: &[usize],
+    idx: *mut u32,
+    val: *mut T,
+) {
+    for i in r {
+        let (lo, hi) = (indptr[i], indptr[i + 1]);
+        let oc = std::slice::from_raw_parts_mut(idx.add(lo), hi - lo);
+        let ov = std::slice::from_raw_parts_mut(val.add(lo), hi - lo);
+        let (ac, av) = a.row(i);
+        if drop_tol == 0.0 {
+            spgemm_row_numeric(ac, av, v, marks, touched, acc, oc, ov);
+        } else {
+            spgemm_row_numeric_tol(ac, av, v, marks, touched, acc, oc, ov, drop_tol);
+        }
+    }
+}
+
+/// Densified SpGEMM rows `r`: `out[i] = (A · V)[i]` scattered into a
+/// dense row-major buffer (`spgemm_row_dense` zeroes each row itself).
+///
+/// # Safety
+/// `d` points at an `a.rows() × cols` row-major buffer; rows `r` have
+/// no concurrent writer.
+pub(crate) unsafe fn spgemm_dense_rows<T: Scalar>(
+    a: &Csr<T>,
+    v: &Csr<T>,
+    r: std::ops::Range<usize>,
+    d: *mut T,
+    cols: usize,
+) {
+    for i in r {
+        let row = std::slice::from_raw_parts_mut(d.add(i * cols), cols);
+        let (ac, av) = a.row(i);
+        spgemm_row_dense(ac, av, v, row);
+    }
+}
+
+/// Sparse-flow consumer rows `r`: `out[j] = (V · B)[j]` with sparse `V`,
+/// dense stationary `B`.
+///
+/// # Safety
+/// `d` points at a `v.rows() × b.cols` row-major buffer; rows `r` have
+/// no concurrent writer.
+pub(crate) unsafe fn spmm_dense_rows<T: Scalar>(
+    v: &Csr<T>,
+    b: &Dense<T>,
+    r: std::ops::Range<usize>,
+    d: *mut T,
+) {
+    let ccol = b.cols;
+    for j in r {
+        let row = std::slice::from_raw_parts_mut(d.add(j * ccol), ccol);
+        spmm_row(v, j, b, row);
+    }
+}
+
+/// Dense-flow consumer rows `r`: `out[i] = (V · B)[i]` with dense `V`
+/// (rows read through a raw base pointer so a pipelined caller can feed
+/// a buffer whose `Dense` header lags) and dense stationary `B`.
+///
+/// # Safety
+/// `v` points at a row-major `? × v_cols` buffer whose rows `r` are
+/// final; `d` points at a `? × b.cols` row-major buffer with no
+/// concurrent writer on rows `r`.
+pub(crate) unsafe fn gemm_dense_rows<T: Scalar>(
+    v: *const T,
+    v_cols: usize,
+    b: &Dense<T>,
+    r: std::ops::Range<usize>,
+    d: *mut T,
+) {
+    let ccol = b.cols;
+    for i in r {
+        let row = std::slice::from_raw_parts_mut(d.add(i * ccol), ccol);
+        row.iter_mut().for_each(|x| *x = T::ZERO);
+        gemm_row(std::slice::from_raw_parts(v.add(i * v_cols), v_cols), b, row);
     }
 }
 
@@ -123,25 +267,10 @@ pub fn run_spgemm<T: Scalar>(
     // accumulator; the zero-tolerance path stays value-free.
     {
         let row_nnz = SendPtr(ws.row_nnz.as_mut_ptr());
-        let marks = &ws.marks;
-        let touched = &ws.touched;
-        let acc = &ws.acc;
+        let ws = &*ws;
         pool.parallel_for_chunks(rows, ROW_CHUNK, |r, w| unsafe {
-            let marks = marks.get(w);
-            let touched = touched.get(w);
-            if drop_tol == 0.0 {
-                for i in r {
-                    *row_nnz.get().add(i) =
-                        spgemm_row_symbolic(a.pattern.row(i), &v.pattern, marks, touched);
-                }
-            } else {
-                let acc = acc.get(w);
-                for i in r {
-                    let (ac, av) = a.row(i);
-                    *row_nnz.get().add(i) =
-                        spgemm_row_symbolic_tol(ac, av, v, marks, touched, acc, drop_tol);
-                }
-            }
+            let (marks, touched, acc) = ws.merge_slots(w);
+            spgemm_symbolic_rows(a, v, r, marks, touched, acc, drop_tol, row_nnz.get());
         });
     }
 
@@ -154,24 +283,10 @@ pub fn run_spgemm<T: Scalar>(
         let idx = SendPtr(out.pattern.indices.as_mut_ptr());
         let val = SendPtr(out.data.as_mut_ptr());
         let indptr = &out.pattern.indptr;
-        let marks = &ws.marks;
-        let touched = &ws.touched;
-        let acc = &ws.acc;
+        let ws = &*ws;
         pool.parallel_for_chunks(rows, ROW_CHUNK, |r, w| unsafe {
-            let marks = marks.get(w);
-            let touched = touched.get(w);
-            let acc = acc.get(w);
-            for i in r {
-                let (lo, hi) = (indptr[i], indptr[i + 1]);
-                let oc = std::slice::from_raw_parts_mut(idx.get().add(lo), hi - lo);
-                let ov = std::slice::from_raw_parts_mut(val.get().add(lo), hi - lo);
-                let (ac, av) = a.row(i);
-                if drop_tol == 0.0 {
-                    spgemm_row_numeric(ac, av, v, marks, touched, acc, oc, ov);
-                } else {
-                    spgemm_row_numeric_tol(ac, av, v, marks, touched, acc, oc, ov, drop_tol);
-                }
-            }
+            let (marks, touched, acc) = ws.merge_slots(w);
+            spgemm_numeric_rows(a, v, r, marks, touched, acc, drop_tol, indptr, idx.get(), val.get());
         });
     }
     debug_assert!(out.check_invariants(), "SpGEMM output violates CSR invariants");
@@ -191,11 +306,7 @@ pub fn run_spgemm_dense<T: Scalar>(
     let d = SendPtr(out.data.as_mut_ptr());
     let cols = out.cols;
     pool.parallel_for_chunks(a.rows(), ROW_CHUNK, |r, _| unsafe {
-        for i in r {
-            let row = std::slice::from_raw_parts_mut(d.get().add(i * cols), cols);
-            let (ac, av) = a.row(i);
-            spgemm_row_dense(ac, av, v, row);
-        }
+        spgemm_dense_rows(a, v, r, d.get(), cols);
     });
 }
 
@@ -211,12 +322,8 @@ pub fn run_sparse_times_dense<T: Scalar>(
     assert_eq!(v.cols(), b.rows, "V·B conformance");
     assert_eq!((out.rows, out.cols), (v.rows(), b.cols), "output shape");
     let d = SendPtr(out.data.as_mut_ptr());
-    let ccol = b.cols;
     pool.parallel_for_chunks(v.rows(), ROW_CHUNK, |r, _| unsafe {
-        for j in r {
-            let row = std::slice::from_raw_parts_mut(d.get().add(j * ccol), ccol);
-            spmm_row(v, j, b, row);
-        }
+        spmm_dense_rows(v, b, r, d.get());
     });
 }
 
@@ -232,13 +339,9 @@ pub fn run_dense_times_dense<T: Scalar>(
     assert_eq!(v.cols, b.rows, "V·B conformance");
     assert_eq!((out.rows, out.cols), (v.rows, b.cols), "output shape");
     let d = SendPtr(out.data.as_mut_ptr());
-    let ccol = b.cols;
+    let vp = SendPtr(v.data.as_ptr() as *mut T);
     pool.parallel_for_chunks(v.rows, ROW_CHUNK, |r, _| unsafe {
-        for i in r {
-            let row = std::slice::from_raw_parts_mut(d.get().add(i * ccol), ccol);
-            row.iter_mut().for_each(|x| *x = T::ZERO);
-            gemm_row(v.row(i), b, row);
-        }
+        gemm_dense_rows(vp.get() as *const T, v.cols, b, r, d.get());
     });
 }
 

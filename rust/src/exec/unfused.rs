@@ -42,6 +42,61 @@ impl<'a, T: Scalar> Unfused<'a, T> {
     }
 }
 
+/// First-op rows `r` of the unfused pair: `D1[i] = (B · C)[i]`. The
+/// per-chunk unit of both the barriered executor and the cross-step
+/// DAG.
+///
+/// # Safety
+/// `d1` must point at an `n_first × ccol` row-major buffer; rows `r`
+/// have no concurrent writer.
+pub(crate) unsafe fn unfused_first_rows<T: Scalar>(
+    op: &PairOp<'_, T>,
+    c: &Dense<T>,
+    ccol: usize,
+    r: std::ops::Range<usize>,
+    d1: *mut T,
+) {
+    for i in r {
+        let out = std::slice::from_raw_parts_mut(d1.add(i * ccol), ccol);
+        op.first.compute_row(i, c, op.layout, out);
+    }
+}
+
+/// Second-op rows `r`: `D[j] = (A · D1)[j]`, full-width or in column
+/// strips of `w`.
+///
+/// # Safety
+/// `d1` must hold every `D1` row that rows `r` of `A` reference (the
+/// first op finished); `d` rows `r` have no concurrent writer.
+pub(crate) unsafe fn unfused_second_rows<T: Scalar>(
+    op: &PairOp<'_, T>,
+    ccol: usize,
+    strip_w: Option<usize>,
+    r: std::ops::Range<usize>,
+    d1: *const T,
+    d: *mut T,
+) {
+    match strip_w {
+        None => {
+            for j in r {
+                let out = std::slice::from_raw_parts_mut(d.add(j * ccol), ccol);
+                kernels::spmm_row_ptr(op.a, j, d1, ccol, out);
+            }
+        }
+        Some(w) => {
+            let mut j0 = 0;
+            while j0 < ccol {
+                let wl = w.min(ccol - j0);
+                for j in r.clone() {
+                    let out = std::slice::from_raw_parts_mut(d.add(j * ccol + j0), wl);
+                    kernels::spmm_row_strip(op.a, j, d1.add(j0), ccol, 0, out);
+                }
+                j0 += wl;
+            }
+        }
+    }
+}
+
 /// Run the unfused pair with a caller-owned `D1` workspace (resized if
 /// needed), full-width — [`run_unfused_striped`] with no strip.
 pub fn run_unfused<T: Scalar>(
@@ -83,37 +138,14 @@ pub fn run_unfused_striped<T: Scalar>(
 
     // Op 1: D1 = B · C over row blocks.
     pool.parallel_for_chunks(op.n_first(), row_chunk, |r, _| unsafe {
-        let d1 = d1_ptr.get();
-        for i in r {
-            let out = std::slice::from_raw_parts_mut(d1.add(i * ccol), ccol);
-            op.first.compute_row(i, c, op.layout, out);
-        }
+        unfused_first_rows(op, c, ccol, r, d1_ptr.get());
     });
 
     // Barrier, then op 2: D = A · D1 over row blocks.
-    match strip.resolve(None, ccol) {
-        None => pool.parallel_for_chunks(op.n_second(), row_chunk, |r, _| unsafe {
-            let d1 = d1_ptr.get() as *const T;
-            let d = d_ptr.get();
-            for j in r {
-                let out = std::slice::from_raw_parts_mut(d.add(j * ccol), ccol);
-                kernels::spmm_row_ptr(op.a, j, d1, ccol, out);
-            }
-        }),
-        Some(w) => pool.parallel_for_chunks(op.n_second(), row_chunk, |r, _| unsafe {
-            let d1 = d1_ptr.get() as *const T;
-            let d = d_ptr.get();
-            let mut j0 = 0;
-            while j0 < ccol {
-                let wl = w.min(ccol - j0);
-                for j in r.clone() {
-                    let out = std::slice::from_raw_parts_mut(d.add(j * ccol + j0), wl);
-                    kernels::spmm_row_strip(op.a, j, d1.add(j0), ccol, 0, out);
-                }
-                j0 += wl;
-            }
-        }),
-    }
+    let strip_w = strip.resolve(None, ccol);
+    pool.parallel_for_chunks(op.n_second(), row_chunk, |r, _| unsafe {
+        unfused_second_rows(op, ccol, strip_w, r, d1_ptr.get() as *const T, d_ptr.get());
+    });
 }
 
 impl<T: Scalar> PairExec<T> for Unfused<'_, T> {

@@ -44,7 +44,9 @@
 //!                  tensor-compiler style) and [`exec::chain`]: the
 //!                  chain executor (one pool, ping-pong intermediates —
 //!                  dense **or** sparse CSR per step — per-step
-//!                  strategy). [`exec::strip`] runs fused tiles
+//!                  strategy, and a cross-step dependence DAG so
+//!                  `run_pipelined` replaces per-step barriers with
+//!                  per-tile countdowns). [`exec::strip`] runs fused tiles
 //!                  strip-by-strip through per-thread workspaces
 //!                  ([`StripMode`](exec::StripMode) selects the width);
 //!                  [`exec::spgemm`] is the parallel row-merge SpGEMM
@@ -70,7 +72,9 @@
 //! - [`profiling`]— FLOP accounting, timers, statistics.
 //! - [`coordinator`] — service layer: LRU-bounded schedule cache keyed
 //!                  by sparsity pattern (tuned strip widths ride each
-//!                  entry behind per-key locks), pair and whole-chain
+//!                  entry behind per-key locks; the sharded server
+//!                  partitions it by coalesce-key hash so shards never
+//!                  serialize on one cache-wide mutex), pair and whole-chain
 //!                  requests (`ChainRequest`), batching, metrics — plus
 //!                  the async front-end ([`coordinator::server`]):
 //!                  bounded two-tier submission queue, tickets,
@@ -142,6 +146,44 @@
 //! Long-running services submit chains through
 //! [`coordinator::Coordinator::submit_chain`] instead, which serves the
 //! per-step schedules from its shared cache.
+//!
+//! ## Pipelined chains
+//!
+//! `run` drains the whole pool between steps. The planner additionally
+//! records which boundaries can overlap, and
+//! [`ChainExec::run_pipelined`](exec::ChainExec::run_pipelined) executes
+//! the cross-step dependence DAG instead: a tile of step `s + 1` starts
+//! as soon as the step-`s` rows it reads are final, with intermediates
+//! published per row block through the ping-pong buffers. The result is
+//! bitwise-identical to the barriered run at any thread count — every
+//! output row is produced by the same kernel sequence, only earlier:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use tile_fusion::prelude::*;
+//!
+//! let a = Arc::new(gen::gcn_normalize::<f64>(&gen::poisson2d(64, 64)));
+//! let ops: Vec<ChainStepOp<f64>> = (0..3)
+//!     .map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+//!     .collect();
+//! let mut chain =
+//!     ChainExec::plan_and_build(ops, a.rows(), 32, SchedulerParams::default()).unwrap();
+//! let pool = ThreadPool::new(4);
+//! let x = Dense::<f64>::randn(a.rows(), 32, 1);
+//! let mut y = Dense::zeros(a.rows(), 32);
+//! assert!(chain.can_pipeline()); // ≥ 2 steps, overlappable boundaries
+//! chain.run_pipelined(&pool, &x, &mut y);
+//! // A/B baseline: force every boundary back to a barrier.
+//! chain.force_barriers();
+//! chain.run_pipelined(&pool, &x, &mut y); // step-at-a-time, same bits
+//! ```
+//!
+//! [`ChainExec::can_pipeline`](exec::ChainExec::can_pipeline) reports
+//! whether any planned boundary actually overlaps — read-all steps
+//! (dense-`B` flow-`C` pairs) keep barrier edges regardless — and
+//! `benches/fig18_pipeline_depth` measures the win across chain depth.
+//! The service front-end runs bulk chains through this path and
+//! preempts them at DAG drain points (below).
 //!
 //! ## Sparse intermediates
 //!
@@ -238,9 +280,13 @@
 //!   bind are amortized.
 //! - **Priority** — [`Priority::Latency`](coordinator::Priority) jobs
 //!   are dispatched before bulk ones and overtake an in-flight bulk
-//!   chain at step boundaries (between barriers, never mid-barrier);
-//!   FIFO order holds within a tier (per dispatcher shard:
-//!   `ServeReply::order` is monotone per shard).
+//!   chain at pipelined DAG drain points (the pool is idle at each,
+//!   never mid-barrier); a **stolen** bulk chain yields at those same
+//!   points whenever the stealing shard's own latency tier is non-empty
+//!   (`Metrics::stolen_chain_yields`), so stealing can never delay a
+//!   shard's latency work behind a foreign chain. FIFO order holds
+//!   within a tier (per dispatcher shard: `ServeReply::order` is
+//!   monotone per shard).
 //!
 //! ## Topology & placement
 //!

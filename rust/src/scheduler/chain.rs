@@ -63,6 +63,31 @@ pub enum StepOutput {
     SparseCsr,
 }
 
+/// How execution enters a chain step: wait for the whole previous step
+/// (`Barrier`) or start tiles as soon as the previous-step rows they
+/// read are final (`Pipelined`).
+///
+/// The planner decides per step from the step's read structure — the
+/// same dependence information the cost model already inspects. A step
+/// whose every output row reads *every* row of the flowing value (a
+/// `ChainFlow::C` pair with a stationary **dense** `B`: each first-op
+/// row `d1[i] = Σ_k b[i,k]·c[k]` touches all of `C`) gains nothing from
+/// pipelining and is planned `Barrier`. Every other step kind reads a
+/// bounded row set per tile — row `i` for flow-B/GeMM steps, the
+/// pattern row for sparse-`B` pairs and SpGEMM steps — and is planned
+/// `Pipelined`. Step 0 is always `Barrier` (nothing precedes it).
+/// Callers can force either mode per step via
+/// [`crate::exec::ChainExec::set_boundary`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum StepBoundary {
+    /// Whole-pool barrier before the step (the pre-pipelining behavior).
+    #[default]
+    Barrier,
+    /// The step's tiles become runnable as their cross-step row
+    /// dependences resolve, overlapping with the previous step's drain.
+    Pipelined,
+}
+
 /// Manual override of the per-step output-format decision.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum StepOutputMode {
@@ -189,6 +214,9 @@ pub struct ChainStats {
 /// pattern identity) plus the validated shape/format flow.
 pub struct ChainPlan {
     pub steps: Vec<ChainStepPlan>,
+    /// Per-step entry discipline (`boundaries[s]` guards entry *into*
+    /// step `s`; `boundaries[0]` is always [`StepBoundary::Barrier`]).
+    pub boundaries: Vec<StepBoundary>,
     /// Shape of the flowing chain input.
     pub in_rows: usize,
     pub in_cols: usize,
@@ -294,6 +322,397 @@ pub fn unfused_schedule(a: &crate::sparse::Pattern, n_cores: usize) -> FusedSche
     }
 }
 
+/// One node of the cross-step chain DAG, tagged with the work it stands
+/// for. Node payloads reference plan-time structures only (tile/chunk
+/// indices); binding them to buffers is the executor's job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DagNode {
+    /// Serial panel pack of a fused strip-mode step (all strips).
+    Pack { step: u32 },
+    /// One wavefront-0 tile of a fused pair step.
+    Wf0 { step: u32, tile: u32 },
+    /// One wavefront-1 (j-only) tile of a fused pair step.
+    Wf1 { step: u32, tile: u32 },
+    /// First-op rows `lo..hi` of an unfused pair step.
+    First { step: u32, lo: u32, hi: u32 },
+    /// Second-op rows `lo..hi` of an unfused pair step.
+    Second { step: u32, lo: u32, hi: u32 },
+    /// Symbolic SpGEMM rows `lo..hi` (row nnz counts).
+    Symbolic { step: u32, lo: u32, hi: u32 },
+    /// Serial CSR shell build from the symbolic counts.
+    Shell { step: u32 },
+    /// Numeric SpGEMM rows `lo..hi` into the built shell.
+    Numeric { step: u32, lo: u32, hi: u32 },
+    /// Row block `lo..hi` of a row-parallel dense-output step.
+    Rows { step: u32, lo: u32, hi: u32 },
+    /// No-op intra-step barrier between the two wavefronts / ops of a
+    /// pair step (wavefront 1 reads arbitrary `D1` rows).
+    Mid { step: u32 },
+    /// No-op end-of-step marker; depends on every node of its step and
+    /// on the previous sentinel, so `Sentinel{s}` done ⇒ steps `0..=s`
+    /// fully drained.
+    Sentinel { step: u32 },
+}
+
+impl DagNode {
+    /// The chain step this node belongs to (= its DAG segment).
+    pub fn step(&self) -> u32 {
+        match *self {
+            DagNode::Pack { step }
+            | DagNode::Wf0 { step, .. }
+            | DagNode::Wf1 { step, .. }
+            | DagNode::First { step, .. }
+            | DagNode::Second { step, .. }
+            | DagNode::Symbolic { step, .. }
+            | DagNode::Shell { step }
+            | DagNode::Numeric { step, .. }
+            | DagNode::Rows { step, .. }
+            | DagNode::Mid { step }
+            | DagNode::Sentinel { step } => step,
+        }
+    }
+}
+
+/// How one chain step decomposes into DAG nodes — mirrors the
+/// executor's strategy/strip resolution, which is why the executor (not
+/// the planner) assembles these descriptors.
+pub enum DagStepKind<'a> {
+    /// Fused pair executor: optional serial pack, wavefront-0 tiles,
+    /// mid, wavefront-1 tiles.
+    Fused { schedule: &'a FusedSchedule, pack: bool },
+    /// Unfused pair executor: first-op chunks, mid, second-op chunks.
+    Unfused { n_first: usize, n_second: usize, chunk: usize },
+    /// Sparse-output SpGEMM: symbolic blocks, serial shell, numeric
+    /// blocks.
+    SpgemmSparse { out_rows: usize, chunk: usize },
+    /// Row-parallel dense-output step (densified SpGEMM, `V·B`).
+    RowBlocks { out_rows: usize, chunk: usize },
+}
+
+/// Which rows of the previous step's output one consumer iteration of
+/// this step reads — the cross-step dependence relation.
+pub enum DagReads<'a> {
+    /// Iteration `i` reads exactly the previous step's row `i`
+    /// (flow-`B` pairs, `V·B` steps).
+    Identity,
+    /// Iteration `i` reads rows `pattern.row(i)` (sparse-`B` flow-`C`
+    /// pairs read via `B`'s pattern, SpGEMM steps via `A`'s).
+    Rows(&'a Pattern),
+    /// Every iteration reads every row — the step takes a barrier edge
+    /// regardless of its planned [`StepBoundary`].
+    All,
+}
+
+/// Everything [`build_chain_dag`] needs to know about one step.
+pub struct DagStepDesc<'a> {
+    pub kind: DagStepKind<'a>,
+    pub reads: DagReads<'a>,
+    pub boundary: StepBoundary,
+}
+
+/// The built cross-step DAG: a generic countdown spec for
+/// [`crate::exec::pool::run_dag_segment`] plus the per-node work tags.
+pub struct ChainDag {
+    pub spec: crate::exec::pool::DagSpec,
+    pub nodes: Vec<DagNode>,
+}
+
+impl ChainDag {
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Append `node` with predecessor list `dep`, returning its id.
+fn push_node(nodes: &mut Vec<DagNode>, preds: &mut Vec<Vec<u32>>, node: DagNode, dep: Vec<u32>) -> u32 {
+    let id = nodes.len() as u32;
+    nodes.push(node);
+    preds.push(dep);
+    id
+}
+
+/// Deduplicated producer nodes of the previous-step rows that consumer
+/// iterations `lo..hi` read. `stamp`/`gen` implement an O(1) seen-set
+/// over node ids, reused across calls.
+fn cross_deps(
+    lo: usize,
+    hi: usize,
+    reads: &DagReads<'_>,
+    prev_producer: &[u32],
+    stamp: &mut Vec<u32>,
+    gen: &mut u32,
+    out: &mut Vec<u32>,
+) {
+    *gen += 1;
+    let g = *gen;
+    let mut push = |p: u32, stamp: &mut Vec<u32>, out: &mut Vec<u32>| {
+        let pi = p as usize;
+        if stamp.len() <= pi {
+            stamp.resize(pi + 1, 0);
+        }
+        if stamp[pi] != g {
+            stamp[pi] = g;
+            out.push(p);
+        }
+    };
+    match reads {
+        DagReads::Identity => {
+            for r in lo..hi.min(prev_producer.len()) {
+                push(prev_producer[r], stamp, out);
+            }
+        }
+        DagReads::Rows(p) => {
+            for i in lo..hi.min(p.rows) {
+                for &r in p.row(i) {
+                    push(prev_producer[r as usize], stamp, out);
+                }
+            }
+        }
+        DagReads::All => unreachable!("read-all steps take barrier edges"),
+    }
+}
+
+/// Build the cross-step dependence DAG for a chain.
+///
+/// Segment `s` = the nodes of step `s`. Edges:
+/// - **intra-step**: pack → every Wf0; every Wf0/First → Mid → every
+///   Wf1/Second; every Symbolic → Shell → every Numeric; every node →
+///   Sentinel; Sentinel(s-1) → Sentinel(s).
+/// - **cross-step, barrier entry** (step 0, planned `Barrier`, or
+///   [`DagReads::All`]): every root node of step `s` depends on
+///   `Sentinel(s-1)` alone.
+/// - **cross-step, pipelined entry**: each consumer node depends on the
+///   deduplicated producer nodes of the previous-step rows it reads,
+///   plus `Sentinel(s-2)` as a write-after-read guard — the buffer step
+///   `s` writes was last read by step `s-2` under the executor's
+///   three-slot ring (redundant under the windowed segment loop, kept
+///   for spec-level safety).
+///
+/// Every dependence of a node lies in the node's own or an earlier
+/// segment, which is what makes windowed issuance deadlock-free.
+pub fn build_chain_dag(steps: &[DagStepDesc<'_>]) -> ChainDag {
+    let mut nodes: Vec<DagNode> = Vec::new();
+    let mut preds: Vec<Vec<u32>> = Vec::new();
+    let mut stamp: Vec<u32> = Vec::new();
+    let mut gen: u32 = 0;
+
+    let mut prev_producer: Vec<u32> = Vec::new();
+    let mut prev_sentinel: Option<u32> = None;
+    let mut prev2_sentinel: Option<u32> = None;
+
+    for (s, d) in steps.iter().enumerate() {
+        let su = s as u32;
+        let barrier =
+            s == 0 || d.boundary == StepBoundary::Barrier || matches!(d.reads, DagReads::All);
+        let barrier_dep: Vec<u32> = prev_sentinel.into_iter().collect();
+        let war: Option<u32> = if barrier { None } else { prev2_sentinel };
+        // Cross-step predecessors of a consumer covering `lo..hi`.
+        let mut enter = |lo: usize,
+                         hi: usize,
+                         stamp: &mut Vec<u32>,
+                         gen: &mut u32|
+         -> Vec<u32> {
+            if barrier {
+                return barrier_dep.clone();
+            }
+            let mut v = Vec::new();
+            cross_deps(lo, hi, &d.reads, &prev_producer, stamp, gen, &mut v);
+            v.extend(war);
+            v
+        };
+
+        let mut producer: Vec<u32> = Vec::new();
+        let first_node = nodes.len() as u32;
+        match &d.kind {
+            DagStepKind::Fused { schedule, pack } => {
+                producer.resize(schedule.n_second, u32::MAX);
+                // The pack node copies a stationary (flow-B) or fully
+                // barriered (flow-C dense-B) operand: never a pipelined
+                // cross-step read, so barrier/WAR edges suffice.
+                let pack_id = pack.then(|| {
+                    let mut dep = barrier_dep.clone();
+                    dep.extend(war);
+                    push_node(&mut nodes, &mut preds, DagNode::Pack { step: su }, dep)
+                });
+                let mut wf0_ids = Vec::with_capacity(schedule.wavefronts[0].len());
+                for (t, tile) in schedule.wavefronts[0].iter().enumerate() {
+                    let mut dep =
+                        enter(tile.i_begin as usize, tile.i_end as usize, &mut stamp, &mut gen);
+                    dep.extend(pack_id);
+                    let id = push_node(
+                        &mut nodes,
+                        &mut preds,
+                        DagNode::Wf0 { step: su, tile: t as u32 },
+                        dep,
+                    );
+                    for &j in &tile.j_rows {
+                        producer[j as usize] = id;
+                    }
+                    wf0_ids.push(id);
+                }
+                let mut mid_dep = wf0_ids;
+                if mid_dep.is_empty() {
+                    mid_dep = barrier_dep.clone();
+                }
+                let mid = push_node(&mut nodes, &mut preds, DagNode::Mid { step: su }, mid_dep);
+                for (t, tile) in schedule.wavefronts[1].iter().enumerate() {
+                    let id = push_node(
+                        &mut nodes,
+                        &mut preds,
+                        DagNode::Wf1 { step: su, tile: t as u32 },
+                        vec![mid],
+                    );
+                    for &j in &tile.j_rows {
+                        producer[j as usize] = id;
+                    }
+                }
+            }
+            DagStepKind::Unfused { n_first, n_second, chunk } => {
+                producer.resize(*n_second, u32::MAX);
+                let chunk = (*chunk).max(1);
+                let mut first_ids = Vec::new();
+                let mut lo = 0usize;
+                while lo < *n_first {
+                    let hi = (lo + chunk).min(*n_first);
+                    let dep = enter(lo, hi, &mut stamp, &mut gen);
+                    first_ids.push(push_node(
+                        &mut nodes,
+                        &mut preds,
+                        DagNode::First { step: su, lo: lo as u32, hi: hi as u32 },
+                        dep,
+                    ));
+                    lo = hi;
+                }
+                if first_ids.is_empty() {
+                    first_ids = barrier_dep.clone();
+                }
+                let mid = push_node(&mut nodes, &mut preds, DagNode::Mid { step: su }, first_ids);
+                let mut lo = 0usize;
+                while lo < *n_second {
+                    let hi = (lo + chunk).min(*n_second);
+                    let id = push_node(
+                        &mut nodes,
+                        &mut preds,
+                        DagNode::Second { step: su, lo: lo as u32, hi: hi as u32 },
+                        vec![mid],
+                    );
+                    for r in lo..hi {
+                        producer[r] = id;
+                    }
+                    lo = hi;
+                }
+            }
+            DagStepKind::SpgemmSparse { out_rows, chunk } => {
+                producer.resize(*out_rows, u32::MAX);
+                let chunk = (*chunk).max(1);
+                let mut sym_ids = Vec::new();
+                let mut lo = 0usize;
+                while lo < *out_rows {
+                    let hi = (lo + chunk).min(*out_rows);
+                    let dep = enter(lo, hi, &mut stamp, &mut gen);
+                    sym_ids.push(push_node(
+                        &mut nodes,
+                        &mut preds,
+                        DagNode::Symbolic { step: su, lo: lo as u32, hi: hi as u32 },
+                        dep,
+                    ));
+                    lo = hi;
+                }
+                if sym_ids.is_empty() {
+                    sym_ids = barrier_dep.clone();
+                }
+                // Shell after every symbolic block ⇒ every flowing row
+                // any numeric block will read is already final, so
+                // numeric blocks need only the shell edge.
+                let shell =
+                    push_node(&mut nodes, &mut preds, DagNode::Shell { step: su }, sym_ids);
+                let mut lo = 0usize;
+                while lo < *out_rows {
+                    let hi = (lo + chunk).min(*out_rows);
+                    let id = push_node(
+                        &mut nodes,
+                        &mut preds,
+                        DagNode::Numeric { step: su, lo: lo as u32, hi: hi as u32 },
+                        vec![shell],
+                    );
+                    for r in lo..hi {
+                        producer[r] = id;
+                    }
+                    lo = hi;
+                }
+            }
+            DagStepKind::RowBlocks { out_rows, chunk } => {
+                producer.resize(*out_rows, u32::MAX);
+                let chunk = (*chunk).max(1);
+                let mut lo = 0usize;
+                while lo < *out_rows {
+                    let hi = (lo + chunk).min(*out_rows);
+                    let dep = enter(lo, hi, &mut stamp, &mut gen);
+                    let id = push_node(
+                        &mut nodes,
+                        &mut preds,
+                        DagNode::Rows { step: su, lo: lo as u32, hi: hi as u32 },
+                        dep,
+                    );
+                    for r in lo..hi {
+                        producer[r] = id;
+                    }
+                    lo = hi;
+                }
+            }
+        }
+        let mut sent_dep: Vec<u32> = (first_node..nodes.len() as u32).collect();
+        sent_dep.extend(prev_sentinel);
+        let sentinel =
+            push_node(&mut nodes, &mut preds, DagNode::Sentinel { step: su }, sent_dep);
+        debug_assert!(
+            producer.iter().all(|&p| p != u32::MAX),
+            "step {s}: some output row has no producing node"
+        );
+        prev_producer = producer;
+        prev2_sentinel = prev_sentinel;
+        prev_sentinel = Some(sentinel);
+    }
+
+    // Flatten predecessor lists into countdown counts + a dependents CSR.
+    let n = nodes.len();
+    let segment: Vec<u32> = nodes.iter().map(|nd| nd.step()).collect();
+    let mut dep_count = vec![0u32; n];
+    let mut out_deg = vec![0u32; n];
+    for (i, ps) in preds.iter().enumerate() {
+        debug_assert!(
+            ps.iter().all(|&p| segment[p as usize] <= segment[i]),
+            "dependence crosses segments backwards"
+        );
+        dep_count[i] = ps.len() as u32;
+        for &p in ps {
+            out_deg[p as usize] += 1;
+        }
+    }
+    let mut adj_ptr = vec![0u32; n + 1];
+    for i in 0..n {
+        adj_ptr[i + 1] = adj_ptr[i] + out_deg[i];
+    }
+    let mut adj = vec![0u32; adj_ptr[n] as usize];
+    let mut cur: Vec<u32> = adj_ptr[..n].to_vec();
+    for (i, ps) in preds.iter().enumerate() {
+        for &p in ps {
+            adj[cur[p as usize] as usize] = i as u32;
+            cur[p as usize] += 1;
+        }
+    }
+    ChainDag {
+        spec: crate::exec::pool::DagSpec {
+            dep_count,
+            adj_ptr,
+            adj,
+            segment,
+            n_segments: steps.len() as u32,
+        },
+        nodes,
+    }
+}
+
 /// Plans chains with one scheduler parameterization.
 pub struct ChainPlanner {
     pub params: SchedulerParams,
@@ -370,11 +789,26 @@ impl ChainPlanner {
         let t0 = Instant::now();
         let elem_bytes = self.params.elem_bytes;
         let mut steps: Vec<ChainStepPlan> = Vec::with_capacity(specs.len());
+        let mut boundaries: Vec<StepBoundary> = Vec::with_capacity(specs.len());
         let mut total_flops = 0usize;
         let (mut cur_r, mut cur_c) = (input.rows, input.cols);
         let mut cur_fmt = input.format;
         let mut cur_density = input.density();
         for (s, spec) in specs.iter().enumerate() {
+            boundaries.push(if s == 0 {
+                StepBoundary::Barrier
+            } else {
+                match spec {
+                    // A dense-B flow-C pair reads every flowing row per
+                    // first-op iteration — pipelining buys nothing.
+                    ChainStepSpec::Pair { op, flow: ChainFlow::C }
+                        if matches!(op.b, BSide::Dense { .. }) =>
+                    {
+                        StepBoundary::Barrier
+                    }
+                    _ => StepBoundary::Pipelined,
+                }
+            });
             let step = match spec {
                 ChainStepSpec::Pair { op, flow } => {
                     if cur_fmt != StepOutput::Dense {
@@ -483,6 +917,7 @@ impl ChainPlanner {
         };
         Ok(ChainPlan {
             steps,
+            boundaries,
             in_rows: input.rows,
             in_cols: input.cols,
             in_format: input.format,

@@ -19,8 +19,9 @@ pub mod schedule;
 pub mod split;
 
 pub use chain::{
-    decide_spgemm_output, ChainError, ChainFlow, ChainInputMeta, ChainPlan, ChainPlanner,
-    ChainStats, ChainStepPlan, ChainStepSpec, PlannedStep, StepOutput, StepOutputMode,
+    build_chain_dag, decide_spgemm_output, ChainDag, ChainError, ChainFlow, ChainInputMeta,
+    ChainPlan, ChainPlanner, ChainStats, ChainStepPlan, ChainStepSpec, DagNode, DagReads,
+    DagStepDesc, DagStepKind, PlannedStep, StepBoundary, StepOutput, StepOutputMode,
 };
 pub use cost::{estimate_spgemm, remote_penalty, SpgemmEstimate};
 pub use place::{decide_placement, Placement};

@@ -832,6 +832,271 @@ fn prop_topology_shard_isolation_bitwise() {
     });
 }
 
+/// Duplicate chain operands without deep copies (stationary sides are
+/// `Arc`'d) — lets one random case bind both a barriered and a
+/// pipelined executor over the identical matrices.
+fn clone_chain_ops<T>(ops: &[ChainStepOp<T>]) -> Vec<ChainStepOp<T>> {
+    ops.iter()
+        .map(|op| match op {
+            ChainStepOp::GemmFlowB { a, w } => {
+                ChainStepOp::GemmFlowB { a: Arc::clone(a), w: Arc::clone(w) }
+            }
+            ChainStepOp::GemmFlowC { a, b } => {
+                ChainStepOp::GemmFlowC { a: Arc::clone(a), b: Arc::clone(b) }
+            }
+            ChainStepOp::SpmmFlowC { a, b } => {
+                ChainStepOp::SpmmFlowC { a: Arc::clone(a), b: Arc::clone(b) }
+            }
+            ChainStepOp::SpgemmFlow { a, output } => {
+                ChainStepOp::SpgemmFlow { a: Arc::clone(a), output: *output }
+            }
+            ChainStepOp::FlowAMulB { b } => ChainStepOp::FlowAMulB { b: Arc::clone(b) },
+        })
+        .collect()
+}
+
+/// Random dense-flow chain of 2–4 steps mixing the three pair step
+/// kinds — at least two steps so the planner can emit `Pipelined`
+/// boundaries (a single step never pipelines).
+fn random_pipeline_ops<T: Scalar>(
+    rng: &mut tile_fusion::testing::XorShift64,
+    in_rows: usize,
+    in_cols: usize,
+) -> Vec<ChainStepOp<T>> {
+    let len = 2 + rng.next_range(3);
+    let mut ops: Vec<ChainStepOp<T>> = Vec::with_capacity(len);
+    let (mut cur_r, mut cur_c) = (in_rows, in_cols);
+    for _ in 0..len {
+        let out_rows = 8 + rng.next_range(48);
+        let op = match rng.next_range(3) {
+            0 => {
+                let a = Arc::new(Csr::<T>::with_random_values(
+                    gen::uniform_random(out_rows, cur_r, 1 + rng.next_range(4), rng.next_u64()),
+                    rng.next_u64(),
+                    -1.0,
+                    1.0,
+                ));
+                let new_c = 1 + rng.next_range(16);
+                let w = Arc::new(Dense::<T>::randn(cur_c, new_c, rng.next_u64()));
+                cur_c = new_c;
+                ChainStepOp::GemmFlowB { a, w }
+            }
+            1 => {
+                let k = 4 + rng.next_range(32);
+                let a = Arc::new(Csr::<T>::with_random_values(
+                    gen::uniform_random(out_rows, k, 1 + rng.next_range(4), rng.next_u64()),
+                    rng.next_u64(),
+                    -1.0,
+                    1.0,
+                ));
+                let b = Arc::new(Dense::<T>::randn(k, cur_r, rng.next_u64()));
+                ChainStepOp::GemmFlowC { a, b }
+            }
+            _ => {
+                let k = 4 + rng.next_range(32);
+                let a = Arc::new(Csr::<T>::with_random_values(
+                    gen::uniform_random(out_rows, k, 1 + rng.next_range(4), rng.next_u64()),
+                    rng.next_u64(),
+                    -1.0,
+                    1.0,
+                ));
+                let b = Arc::new(Csr::<T>::with_random_values(
+                    gen::uniform_random(k, cur_r, 1 + rng.next_range(4), rng.next_u64()),
+                    rng.next_u64(),
+                    -1.0,
+                    1.0,
+                ));
+                ChainStepOp::SpmmFlowC { a, b }
+            }
+        };
+        cur_r = out_rows;
+        ops.push(op);
+    }
+    ops
+}
+
+/// One barriered-vs-pipelined dense-flow case at a random thread count:
+/// the baseline runs step-at-a-time (`force_barriers` + `run`), the
+/// pipelined executor runs the cross-step DAG, and the outputs must be
+/// bitwise identical — every output row is produced by the identical
+/// kernel sequence, only earlier. Generic so the f32 grid asserts the
+/// same bit-level guarantee (no tolerance).
+fn check_pipelined_bitwise_case<T: Scalar>(rng: &mut tile_fusion::testing::XorShift64) {
+    let in_rows = 8 + rng.next_range(48);
+    let in_cols = 1 + rng.next_range(16);
+    let ops = random_pipeline_ops::<T>(rng, in_rows, in_cols);
+    let x = Dense::<T>::randn(in_rows, in_cols, rng.next_u64());
+    let mut params = random_params(rng);
+    params.elem_bytes = T::BYTES;
+    let pool = ThreadPool::new(1 + rng.next_range(4));
+
+    let mut barriered = ChainExec::plan_and_build(clone_chain_ops(&ops), in_rows, in_cols, params)
+        .expect("chain must bind");
+    barriered.force_barriers();
+    let (out_rows, out_cols) = barriered.out_dims();
+    let mut expect = Dense::zeros(out_rows, out_cols);
+    barriered.run(&pool, &x, &mut expect);
+
+    let mut pipelined =
+        ChainExec::plan_and_build(ops, in_rows, in_cols, params).expect("chain must bind");
+    let mut d = Dense::zeros(out_rows, out_cols);
+    // Twice: the ping-pong InterBufs and countdown state must reset
+    // between runs.
+    for run in 0..2 {
+        pipelined.run_pipelined(&pool, &x, &mut d);
+        assert_eq!(d.data, expect.data, "pipelined diverged from barriered on run {run}");
+    }
+}
+
+#[test]
+fn prop_pipelined_chain_bitwise_equals_barriered_f64() {
+    check_prop("pipelined-bitwise-f64", 15, check_pipelined_bitwise_case::<f64>);
+}
+
+#[test]
+fn prop_pipelined_chain_bitwise_equals_barriered_f32() {
+    check_prop("pipelined-bitwise-f32", 10, check_pipelined_bitwise_case::<f32>);
+}
+
+#[test]
+fn prop_pipelined_spgemm_chain_bitwise_equals_barriered() {
+    // Mixed-format chains: sparse input through 1–3 SpGEMM hops (last
+    // hop sweeps every output mode), the flow-A consumer, optionally a
+    // trailing pair step — pipelined must stay bitwise-equal to the
+    // barriered run including across the sparse→dense format switch.
+    check_prop("pipelined-bitwise-spgemm", 10, |rng| {
+        use tile_fusion::testing::XorShift64;
+
+        let n = 16 + rng.next_range(40);
+        let rhs = 1 + rng.next_range(12);
+        let rand_sq = |rng: &mut XorShift64| {
+            Csr::<f64>::with_random_values(
+                gen::uniform_random(n, n, 1 + rng.next_range(4), rng.next_u64()),
+                rng.next_u64(),
+                -1.0,
+                1.0,
+            )
+        };
+        let v0 = rand_sq(rng);
+        let hops = 1 + rng.next_range(3);
+        let mut ops: Vec<ChainStepOp<f64>> = Vec::new();
+        for h in 0..hops {
+            let output = if h + 1 < hops {
+                StepOutputMode::SparseCsr
+            } else {
+                [StepOutputMode::Auto, StepOutputMode::SparseCsr, StepOutputMode::Dense]
+                    [rng.next_range(3)]
+            };
+            ops.push(ChainStepOp::SpgemmFlow { a: Arc::new(rand_sq(rng)), output });
+        }
+        ops.push(ChainStepOp::FlowAMulB {
+            b: Arc::new(Dense::<f64>::randn(n, rhs, rng.next_u64())),
+        });
+        if rng.next_bool(0.5) {
+            let a = Arc::new(rand_sq(rng));
+            ops.push(ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: a });
+        }
+        let params = random_params(rng);
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+
+        let mut barriered =
+            ChainExec::plan_and_build_sparse(clone_chain_ops(&ops), n, n, v0.nnz(), params)
+                .expect("spgemm chain must bind");
+        barriered.force_barriers();
+        let (out_rows, out_cols) = barriered.out_dims();
+        let mut expect = Dense::zeros(out_rows, out_cols);
+        barriered.run_sparse(&pool, &v0, &mut expect);
+
+        let mut pipelined = ChainExec::plan_and_build_sparse(ops, n, n, v0.nnz(), params)
+            .expect("spgemm chain must bind");
+        let mut d = Dense::zeros(out_rows, out_cols);
+        for run in 0..2 {
+            pipelined.run_pipelined_io(&pool, ChainIn::Sparse(&v0), ChainOut::Dense(&mut d));
+            assert_eq!(d.data, expect.data, "pipelined spgemm chain diverged on run {run}");
+        }
+    });
+}
+
+#[test]
+fn prop_pipelined_sparse_output_chain_matches_barriered() {
+    // Chains ending sparse: the pipelined path must deliver the exact
+    // CSR (structure and values) of the barriered run.
+    check_prop("pipelined-bitwise-sparse-out", 8, |rng| {
+        use tile_fusion::scheduler::chain::StepOutputMode;
+        use tile_fusion::testing::XorShift64;
+
+        let n = 16 + rng.next_range(48);
+        let rand_sq = |rng: &mut XorShift64| {
+            Csr::<f64>::with_random_values(
+                gen::uniform_random(n, n, 1 + rng.next_range(4), rng.next_u64()),
+                rng.next_u64(),
+                -1.0,
+                1.0,
+            )
+        };
+        let v0 = rand_sq(rng);
+        let hops = 2 + rng.next_range(2);
+        let ops: Vec<ChainStepOp<f64>> = (0..hops)
+            .map(|_| ChainStepOp::SpgemmFlow {
+                a: Arc::new(rand_sq(rng)),
+                output: StepOutputMode::SparseCsr,
+            })
+            .collect();
+        let params = random_params(rng);
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+
+        let mut barriered =
+            ChainExec::plan_and_build_sparse(clone_chain_ops(&ops), n, n, v0.nnz(), params)
+                .expect("sparse-out chain must bind");
+        barriered.force_barriers();
+        let mut expect = Csr::<f64>::empty(0, 0);
+        barriered.run_io(&pool, ChainIn::Sparse(&v0), ChainOut::Sparse(&mut expect));
+
+        let mut pipelined = ChainExec::plan_and_build_sparse(ops, n, n, v0.nnz(), params)
+            .expect("sparse-out chain must bind");
+        let mut out = Csr::<f64>::empty(0, 0);
+        for run in 0..2 {
+            pipelined.run_pipelined_io(&pool, ChainIn::Sparse(&v0), ChainOut::Sparse(&mut out));
+            assert_eq!(out, expect, "pipelined sparse-out chain diverged on run {run}");
+            assert!(out.check_invariants());
+        }
+    });
+}
+
+#[test]
+fn prop_pipelined_chain_bitwise_under_simulated_topology() {
+    // The same bit-level guarantee on a NUMA-sharded pool: pipelined
+    // runs on the spanning lease and on a node-shard lease both match
+    // the barriered baseline exactly. (The pipeline-conformance CI job
+    // additionally runs the whole suite under TF_TOPOLOGY=2x4.)
+    check_prop("pipelined-topology-bitwise", 6, |rng| {
+        let pool = SharedPool::with_topology(4, Topology::simulated(2, 2));
+        let in_rows = 8 + rng.next_range(48);
+        let in_cols = 1 + rng.next_range(12);
+        let ops = random_pipeline_ops::<f64>(rng, in_rows, in_cols);
+        let x = Dense::<f64>::randn(in_rows, in_cols, rng.next_u64());
+        let mut params = random_params(rng);
+        params.elem_bytes = 8;
+
+        let mut barriered =
+            ChainExec::plan_and_build(clone_chain_ops(&ops), in_rows, in_cols, params)
+                .expect("chain must bind");
+        barriered.force_barriers();
+        let (out_rows, out_cols) = barriered.out_dims();
+        let mut expect = Dense::zeros(out_rows, out_cols);
+        barriered.run(&pool.lease(), &x, &mut expect);
+
+        let mut pipelined =
+            ChainExec::plan_and_build(ops, in_rows, in_cols, params).expect("chain must bind");
+        let mut d = Dense::zeros(out_rows, out_cols);
+        pipelined.run_pipelined(&pool.lease(), &x, &mut d);
+        assert_eq!(d.data, expect.data, "spanning-lease pipelined run diverged");
+        let shard = pool.lease_shard(rng.next_range(2));
+        pipelined.run_pipelined(&shard, &x, &mut d);
+        assert_eq!(d.data, expect.data, "node-shard pipelined run diverged");
+    });
+}
+
 #[test]
 fn prop_ell_roundtrip() {
     check_prop("ell-roundtrip", 20, |rng| {
