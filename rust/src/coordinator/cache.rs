@@ -32,7 +32,9 @@ impl ScheduleKey {
 
     /// The persistence key of a tuned pick for this schedule on a pool
     /// of `n_threads` workers over `n_nodes` memory nodes
-    /// ([`crate::tuning::TuneKey`]).
+    /// ([`crate::tuning::TuneKey`]). Stamped with the **active** kernel
+    /// backend: picks are timed on whatever backend this process
+    /// dispatches, so that is the only backend they are evidence for.
     pub fn tune_key(&self, n_threads: usize, n_nodes: usize) -> crate::tuning::TuneKey {
         crate::tuning::TuneKey {
             a_hash: self.a_hash,
@@ -42,12 +44,13 @@ impl ScheduleKey {
             elem_bytes: self.elem_bytes,
             n_threads,
             n_nodes,
+            backend: crate::kernels::backend::active().id(),
         }
     }
 
     /// Back-conversion from a persisted [`crate::tuning::TuneKey`]
-    /// (thread and node counts are checked by the caller against its
-    /// pool).
+    /// (thread count, node count and backend are checked by the caller
+    /// against its pool and dispatch).
     pub fn from_tune_key(k: &crate::tuning::TuneKey) -> Self {
         Self {
             a_hash: k.a_hash,
@@ -225,20 +228,22 @@ impl ScheduleCache {
     }
 
     /// Seed every pick in `table` that was timed on a pool of
-    /// `n_threads` workers over `n_nodes` memory nodes (differently
-    /// shaped pools are not evidence about this one — the remote
-    /// penalty shifts the candidate landscape); returns how many were
-    /// loaded — the load-on-start half of tuned-pick persistence,
-    /// shared by the server and the sync coordinator.
+    /// `n_threads` workers over `n_nodes` memory nodes **on the active
+    /// kernel backend** (differently shaped pools or a different vector
+    /// width are not evidence about this process — the remote penalty
+    /// and the compute term shift the candidate landscape); returns how
+    /// many were loaded — the load-on-start half of tuned-pick
+    /// persistence, shared by the server and the sync coordinator.
     pub fn seed_from_table(
         &mut self,
         table: &crate::tuning::TuneTable,
         n_threads: usize,
         n_nodes: usize,
     ) -> usize {
+        let backend = crate::kernels::backend::active().id();
         let mut n = 0usize;
         for (k, mode) in &table.entries {
-            if k.n_threads != n_threads || k.n_nodes != n_nodes {
+            if k.n_threads != n_threads || k.n_nodes != n_nodes || k.backend != backend {
                 continue;
             }
             self.seed_tuned(ScheduleKey::from_tune_key(k), *mode);
@@ -415,17 +420,18 @@ impl ShardedScheduleCache {
     }
 
     /// Route every matching pick in `table` to its owning partition
-    /// (see [`ScheduleCache::seed_from_table`]); returns how many were
-    /// loaded.
+    /// (see [`ScheduleCache::seed_from_table`] — same pool-shape and
+    /// backend gate); returns how many were loaded.
     pub fn seed_from_table(
         &self,
         table: &crate::tuning::TuneTable,
         n_threads: usize,
         n_nodes: usize,
     ) -> usize {
+        let backend = crate::kernels::backend::active().id();
         let mut n = 0usize;
         for (k, mode) in &table.entries {
-            if k.n_threads != n_threads || k.n_nodes != n_nodes {
+            if k.n_threads != n_threads || k.n_nodes != n_nodes || k.backend != backend {
                 continue;
             }
             let key = ScheduleKey::from_tune_key(k);
@@ -675,5 +681,34 @@ mod tests {
             part.get_or_build(op);
             assert_eq!(part.tuned_strip(op), Some(StripMode::Width(8 * (i + 1))));
         }
+    }
+
+    #[test]
+    fn tuned_picks_do_not_cross_backends() {
+        use crate::exec::StripMode;
+        use crate::kernels::backend::{self, BackendId};
+        let a = gen::banded(32, &[1]);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol: 8 };
+        let mut cache = ScheduleCache::new(SchedulerParams::default());
+        cache.get_or_build(&op);
+        cache.set_tuned_strip(&op, StripMode::Width(32));
+        // Exported picks are stamped with the active backend...
+        let table = cache.to_tune_table(4, 1);
+        let active = backend::active().id();
+        assert!(table.entries.keys().all(|k| k.backend == active));
+        // ...and a table written under a *different* backend seeds
+        // nothing here (cross-backend picks are perf evidence only for
+        // the vector width they were timed on).
+        let other = *BackendId::ALL.iter().find(|id| **id != active).unwrap();
+        let mut foreign = crate::tuning::TuneTable::default();
+        for (k, m) in &table.entries {
+            foreign.entries.insert(crate::tuning::TuneKey { backend: other, ..*k }, *m);
+        }
+        let mut fresh = ScheduleCache::new(SchedulerParams::default());
+        assert_eq!(fresh.seed_from_table(&foreign, 4, 1), 0, "foreign-backend picks rejected");
+        assert_eq!(fresh.seed_from_table(&table, 4, 1), 1, "same-backend picks load");
+        let sharded = ShardedScheduleCache::with_capacity(SchedulerParams::default(), 2, 8);
+        assert_eq!(sharded.seed_from_table(&foreign, 4, 1), 0);
+        assert_eq!(sharded.seed_from_table(&table, 4, 1), 1);
     }
 }

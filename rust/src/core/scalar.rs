@@ -6,6 +6,9 @@
 //! sweeps both. `atomic_add` backs the *atomic tiling* baseline (sparse
 //! tiling resolves cross-tile races on `D` with atomics).
 
+use crate::core::Dense;
+use crate::kernels::backend::Backend;
+use crate::sparse::Csr;
 use std::fmt::{Debug, Display};
 use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
@@ -49,6 +52,64 @@ pub trait Scalar:
     /// `ptr` must be valid, properly aligned, and only accessed atomically
     /// (or by this function) for the duration of the parallel region.
     unsafe fn atomic_add(ptr: *mut Self, v: Self);
+
+    // ---- Backend microkernel routing ---------------------------------
+    // The [`Backend`] trait is monomorphic per element type (so it stays
+    // object-safe); these hooks pair each `Scalar` with its methods,
+    // letting generic kernels dispatch through one `&dyn Backend`
+    // without knowing the element type. Bodies are one-line forwards —
+    // semantics live with [`crate::kernels::backend`].
+
+    /// Route [`crate::kernels::gemm_row`] to `bk`'s kernel for `Self`.
+    fn bk_gemm_row(bk: &dyn Backend, b_row: &[Self], c: &Dense<Self>, d1_row: &mut [Self]);
+
+    /// Route [`crate::kernels::gemm_row_ct_strip`] to `bk`'s kernel.
+    fn bk_gemm_row_ct_strip(
+        bk: &dyn Backend,
+        b_row: &[Self],
+        c_t: &Dense<Self>,
+        j0: usize,
+        out: &mut [Self],
+    );
+
+    /// Route [`crate::kernels::gemm_row_strip`] to `bk`'s kernel.
+    fn bk_gemm_row_strip(
+        bk: &dyn Backend,
+        b_row: &[Self],
+        panel: &[Self],
+        w: usize,
+        out: &mut [Self],
+    );
+
+    /// Route [`crate::kernels::pack_panel`] to `bk`'s kernel.
+    fn bk_pack_panel(bk: &dyn Backend, c: &Dense<Self>, j0: usize, w: usize, panel: &mut [Self]);
+
+    /// Route [`crate::kernels::spmm_row_strip`] to `bk`'s kernel.
+    ///
+    /// # Safety
+    /// As [`crate::kernels::spmm_row_strip`].
+    unsafe fn bk_spmm_row_strip(
+        bk: &dyn Backend,
+        a: &Csr<Self>,
+        j: usize,
+        d1: *const Self,
+        stride: usize,
+        i_base: usize,
+        out: &mut [Self],
+    );
+
+    /// Route the SpGEMM numeric merge to `bk`'s kernel; see
+    /// [`crate::kernels::backend::scalar::spgemm_merge`] for the
+    /// marks/touched/acc contract (marks are left set).
+    fn bk_spgemm_merge(
+        bk: &dyn Backend,
+        a_cols: &[u32],
+        a_vals: &[Self],
+        b: &Csr<Self>,
+        marks: &mut [u32],
+        touched: &mut [u32],
+        acc: &mut [Self],
+    ) -> usize;
 }
 
 impl Scalar for f32 {
@@ -98,6 +159,64 @@ impl Scalar for f32 {
             }
         }
     }
+
+    #[inline]
+    fn bk_gemm_row(bk: &dyn Backend, b_row: &[Self], c: &Dense<Self>, d1_row: &mut [Self]) {
+        bk.gemm_row_f32(b_row, c, d1_row);
+    }
+
+    #[inline]
+    fn bk_gemm_row_ct_strip(
+        bk: &dyn Backend,
+        b_row: &[Self],
+        c_t: &Dense<Self>,
+        j0: usize,
+        out: &mut [Self],
+    ) {
+        bk.gemm_row_ct_strip_f32(b_row, c_t, j0, out);
+    }
+
+    #[inline]
+    fn bk_gemm_row_strip(
+        bk: &dyn Backend,
+        b_row: &[Self],
+        panel: &[Self],
+        w: usize,
+        out: &mut [Self],
+    ) {
+        bk.gemm_row_strip_f32(b_row, panel, w, out);
+    }
+
+    #[inline]
+    fn bk_pack_panel(bk: &dyn Backend, c: &Dense<Self>, j0: usize, w: usize, panel: &mut [Self]) {
+        bk.pack_panel_f32(c, j0, w, panel);
+    }
+
+    #[inline]
+    unsafe fn bk_spmm_row_strip(
+        bk: &dyn Backend,
+        a: &Csr<Self>,
+        j: usize,
+        d1: *const Self,
+        stride: usize,
+        i_base: usize,
+        out: &mut [Self],
+    ) {
+        bk.spmm_row_strip_f32(a, j, d1, stride, i_base, out);
+    }
+
+    #[inline]
+    fn bk_spgemm_merge(
+        bk: &dyn Backend,
+        a_cols: &[u32],
+        a_vals: &[Self],
+        b: &Csr<Self>,
+        marks: &mut [u32],
+        touched: &mut [u32],
+        acc: &mut [Self],
+    ) -> usize {
+        bk.spgemm_merge_f32(a_cols, a_vals, b, marks, touched, acc)
+    }
 }
 
 impl Scalar for f64 {
@@ -146,6 +265,64 @@ impl Scalar for f64 {
                 Err(actual) => cur = actual,
             }
         }
+    }
+
+    #[inline]
+    fn bk_gemm_row(bk: &dyn Backend, b_row: &[Self], c: &Dense<Self>, d1_row: &mut [Self]) {
+        bk.gemm_row_f64(b_row, c, d1_row);
+    }
+
+    #[inline]
+    fn bk_gemm_row_ct_strip(
+        bk: &dyn Backend,
+        b_row: &[Self],
+        c_t: &Dense<Self>,
+        j0: usize,
+        out: &mut [Self],
+    ) {
+        bk.gemm_row_ct_strip_f64(b_row, c_t, j0, out);
+    }
+
+    #[inline]
+    fn bk_gemm_row_strip(
+        bk: &dyn Backend,
+        b_row: &[Self],
+        panel: &[Self],
+        w: usize,
+        out: &mut [Self],
+    ) {
+        bk.gemm_row_strip_f64(b_row, panel, w, out);
+    }
+
+    #[inline]
+    fn bk_pack_panel(bk: &dyn Backend, c: &Dense<Self>, j0: usize, w: usize, panel: &mut [Self]) {
+        bk.pack_panel_f64(c, j0, w, panel);
+    }
+
+    #[inline]
+    unsafe fn bk_spmm_row_strip(
+        bk: &dyn Backend,
+        a: &Csr<Self>,
+        j: usize,
+        d1: *const Self,
+        stride: usize,
+        i_base: usize,
+        out: &mut [Self],
+    ) {
+        bk.spmm_row_strip_f64(a, j, d1, stride, i_base, out);
+    }
+
+    #[inline]
+    fn bk_spgemm_merge(
+        bk: &dyn Backend,
+        a_cols: &[u32],
+        a_vals: &[Self],
+        b: &Csr<Self>,
+        marks: &mut [u32],
+        touched: &mut [u32],
+        acc: &mut [Self],
+    ) -> usize {
+        bk.spgemm_merge_f64(a_cols, a_vals, b, marks, touched, acc)
     }
 }
 

@@ -13,6 +13,7 @@ use crate::exec::{
     AtomicTiling, Fused, Overlapped, PairExec, PairOp, StripMode, TensorStyle, ThreadPool,
     Unfused,
 };
+use crate::kernels::{self, backend::Backend};
 use crate::profiling;
 use crate::scheduler::chain::{unfused_schedule, ChainPlanner};
 use crate::scheduler::{FusedSchedule, Scheduler, SchedulerParams};
@@ -409,6 +410,116 @@ pub fn time_spgemm_chain<T: Scalar>(
     }
 }
 
+/// Median time of a strip-partitioned dense GEMM (`out = B · C`) run
+/// entirely through one explicit backend's microkernels — the fig19
+/// gemm arm. Mirrors the executor's column-strip loop: pack the `C`
+/// panel once per strip, then stream every `B` row through
+/// [`crate::kernels::gemm_row_strip_with`]. FLOPs: `2 · B.rows ·
+/// B.cols · C.cols`.
+pub fn time_backend_gemm_strip<T: Scalar>(
+    bk: &dyn Backend,
+    b: &Dense<T>,
+    c: &Dense<T>,
+    w: usize,
+    reps: usize,
+) -> Duration {
+    let (n, ccol) = (b.rows, c.cols);
+    let w = w.max(1);
+    let mut out = Dense::<T>::zeros(n, ccol);
+    let mut panel = vec![T::ZERO; c.rows * w];
+    profiling::measure(1, reps, || {
+        let mut j0 = 0;
+        while j0 < ccol {
+            let wj = w.min(ccol - j0);
+            kernels::pack_panel_with(bk, c, j0, wj, &mut panel);
+            for i in 0..n {
+                let row = &mut out.row_mut(i)[j0..j0 + wj];
+                row.fill(T::ZERO);
+                kernels::gemm_row_strip_with(bk, b.row(i), &panel, wj, row);
+            }
+            j0 += wj;
+        }
+        std::hint::black_box(&out);
+    })
+}
+
+/// Median time of a strip-partitioned SpMM (`out = A · Ws`, `Ws` dense)
+/// through one explicit backend — the fig19 spmm arm. FLOPs:
+/// `2 · A.nnz · Ws.cols`.
+pub fn time_backend_spmm_strip<T: Scalar>(
+    bk: &dyn Backend,
+    a: &Csr<T>,
+    ws: &Dense<T>,
+    w: usize,
+    reps: usize,
+) -> Duration {
+    assert_eq!(ws.rows, a.cols(), "workspace rows must cover A's columns");
+    let stride = ws.cols;
+    let w = w.max(1);
+    let mut out = Dense::<T>::zeros(a.rows(), stride);
+    profiling::measure(1, reps, || {
+        let mut j0 = 0;
+        while j0 < stride {
+            let wj = w.min(stride - j0);
+            // SAFETY: `d1` points at column `j0` of row 0; row `k`'s
+            // strip read spans `k·stride + j0 .. + wj ≤ ws.data.len()`
+            // for every column index `k < a.cols() == ws.rows`.
+            let d1 = unsafe { ws.data.as_ptr().add(j0) };
+            for j in 0..a.rows() {
+                let row = &mut out.row_mut(j)[j0..j0 + wj];
+                unsafe { kernels::spmm_row_strip_with(bk, a, j, d1, stride, 0, row) };
+            }
+            j0 += wj;
+        }
+        std::hint::black_box(&out);
+    })
+}
+
+/// Median time of one fused chain step (`out = A · (B · C)`) with the
+/// strip-resident intermediate, all kernels routed through one explicit
+/// backend — the fig19 fused arm. Per strip: pack the `C` panel, GEMM
+/// every `B` row into the strip workspace, then gather every `A` row
+/// from it, so the intermediate never leaves the strip working set.
+/// FLOPs: `2 · B.rows · B.cols · C.cols + 2 · A.nnz · C.cols`.
+pub fn time_backend_fused_step<T: Scalar>(
+    bk: &dyn Backend,
+    a: &Csr<T>,
+    b: &Dense<T>,
+    c: &Dense<T>,
+    w: usize,
+    reps: usize,
+) -> Duration {
+    assert_eq!(a.cols(), b.rows, "A·(B·C) dims");
+    assert_eq!(b.cols, c.rows, "A·(B·C) dims");
+    let (n_mid, ccol) = (b.rows, c.cols);
+    let w = w.max(1);
+    let mut out = Dense::<T>::zeros(a.rows(), ccol);
+    let mut panel = vec![T::ZERO; c.rows * w];
+    let mut ws = vec![T::ZERO; n_mid * w];
+    profiling::measure(1, reps, || {
+        let mut j0 = 0;
+        while j0 < ccol {
+            let wj = w.min(ccol - j0);
+            kernels::pack_panel_with(bk, c, j0, wj, &mut panel);
+            for i in 0..n_mid {
+                let ws_row = &mut ws[i * wj..(i + 1) * wj];
+                ws_row.fill(T::ZERO);
+                kernels::gemm_row_strip_with(bk, b.row(i), &panel, wj, ws_row);
+            }
+            // SAFETY: the gather reads `k·wj .. + wj` of `ws` for
+            // `k < a.cols() == n_mid`, all fully written above and not
+            // mutated while borrowed.
+            let d1 = ws.as_ptr();
+            for j in 0..a.rows() {
+                let row = &mut out.row_mut(j)[j0..j0 + wj];
+                unsafe { kernels::spmm_row_strip_with(bk, a, j, d1, wj, 0, row) };
+            }
+            j0 += wj;
+        }
+        std::hint::black_box(&out);
+    })
+}
+
 /// Results directory (`bench_results/` at the repo root).
 pub fn results_dir() -> PathBuf {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
@@ -514,6 +625,23 @@ mod tests {
         ] {
             let t = time_spgemm_chain(strat, &a, 8, &pool, 1);
             assert!(t.as_nanos() > 0, "{}", strat.name());
+        }
+    }
+
+    #[test]
+    fn backend_kernel_timers_smoke_every_backend() {
+        let pat = crate::sparse::gen::erdos_renyi(48, 3, 5);
+        let a = Csr::<f32>::with_random_values(pat, 1, -1.0, 1.0);
+        let b = Dense::<f32>::randn(a.cols(), 6, 2);
+        let c = Dense::<f32>::randn(6, 40, 3);
+        let ws = Dense::<f32>::randn(a.cols(), 40, 4);
+        for bk in crate::kernels::backend::available() {
+            let t = time_backend_gemm_strip(bk, &b, &c, 32, 1);
+            assert!(t.as_nanos() > 0, "{} gemm", bk.id());
+            let t = time_backend_spmm_strip(bk, &a, &ws, 32, 1);
+            assert!(t.as_nanos() > 0, "{} spmm", bk.id());
+            let t = time_backend_fused_step(bk, &a, &b, &c, 32, 1);
+            assert!(t.as_nanos() > 0, "{} fused", bk.id());
         }
     }
 

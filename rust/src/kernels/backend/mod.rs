@@ -1,0 +1,390 @@
+//! Runtime-dispatched microkernel backends.
+//!
+//! Every flop in the runtime funnels through a small set of row
+//! microkernels (`gemm_row*`, `spmm_row_strip`, `pack_panel`, the
+//! SpGEMM merge). This module puts those entry points behind the
+//! [`Backend`] trait so the *same* executors run explicit-SIMD bodies
+//! where the CPU supports them — the paper's locality wins multiplied
+//! by deliberately vectorized per-tile compute — and so a future
+//! GPU/PJRT backend has a seam to plug into.
+//!
+//! ## Dispatch
+//!
+//! [`active`] resolves the process-wide backend exactly once:
+//!
+//! 1. `TF_BACKEND=scalar|simd128|simd256` forces a backend by name;
+//!    an unknown name or an ISA the host lacks falls back to step 2
+//!    (never an error — the variable is a tuning knob, not state);
+//! 2. otherwise runtime CPU-feature detection picks the widest
+//!    supported SIMD backend (`simd256` needs AVX; `simd128` is the
+//!    x86-64 SSE2 baseline; other architectures run `scalar`).
+//!
+//! ## The bitwise guarantee
+//!
+//! Backends are interchangeable **bitwise**, not just numerically: a
+//! SIMD backend maps the [`JB`](super::JB) output block onto vector
+//! lanes, so each output column's products accumulate in the same
+//! k-order with separate multiply and add (no FMA contraction) as the
+//! [`scalar`] reference. The conformance suite (`tests/backend_parity`)
+//! holds every compiled backend to `to_bits()` equality with the
+//! reference over the random kernel grid, and the CI backend-matrix job
+//! re-runs the executor suites under each forced `TF_BACKEND` value.
+//!
+//! ## Adding an ISA
+//!
+//! Implement [`Backend`] for the new unit (override only the kernels
+//! the ISA accelerates — defaults fall back to the scalar reference),
+//! add a [`BackendId`] variant with its `parse`/`as_str` token, gate
+//! availability in `by_id` on the runtime feature check, and extend the
+//! CI backend-matrix. The parity suite picks the new backend up from
+//! [`available`] automatically.
+
+pub mod scalar;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+use crate::core::Dense;
+use crate::sparse::Csr;
+use std::sync::OnceLock;
+
+/// Identity of a microkernel backend — carried by tuned-pick
+/// persistence keys ([`crate::tuning::TuneKey`]) so picks timed under
+/// one ISA never seed another.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BackendId {
+    /// Portable reference loops (also the non-x86 fallback).
+    Scalar,
+    /// 128-bit vectors: SSE2, the x86-64 baseline — always available
+    /// there.
+    Simd128,
+    /// 256-bit vectors: AVX, runtime-detected.
+    Simd256,
+}
+
+impl BackendId {
+    /// Every defined backend id, in preference order (widest last).
+    pub const ALL: [BackendId; 3] = [BackendId::Scalar, BackendId::Simd128, BackendId::Simd256];
+
+    /// The `TF_BACKEND` / sidecar token for this id.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendId::Scalar => "scalar",
+            BackendId::Simd128 => "simd128",
+            BackendId::Simd256 => "simd256",
+        }
+    }
+
+    /// Inverse of [`BackendId::as_str`]; `None` for unknown tokens.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scalar" => Some(BackendId::Scalar),
+            "simd128" => Some(BackendId::Simd128),
+            "simd256" => Some(BackendId::Simd256),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for BackendId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Microkernel entry points, monomorphic per element type so the trait
+/// stays object-safe (executors hold one `&'static dyn Backend`).
+/// Generic code routes through [`crate::core::Scalar`]'s `bk_*` hooks,
+/// which pair each element type with its methods here.
+///
+/// Semantics of every method are pinned — bitwise — by the [`scalar`]
+/// reference bodies the default implementations call; see the module
+/// docs for what an override may and may not change.
+pub trait Backend: Send + Sync {
+    /// Which backend this is (stable across processes; persisted).
+    fn id(&self) -> BackendId;
+
+    /// Vector register width in bytes (8 = scalar f64 register).
+    fn vector_bytes(&self) -> usize;
+
+    /// Relative per-element throughput for `elem_bytes`-wide elements —
+    /// roughly the SIMD lane count, 1.0 for scalar. Feeds the cost
+    /// model's compute term so tile splitting sees the real flop rate.
+    fn throughput(&self, elem_bytes: usize) -> f64 {
+        (self.vector_bytes() / elem_bytes.max(1)).max(1) as f64
+    }
+
+    /// Strip widths must be multiples of this (the output register
+    /// block); [`super::JB`] everywhere today, but a wider unit may
+    /// demand coarser strips.
+    fn strip_quantum(&self) -> usize {
+        super::JB
+    }
+
+    /// `d1_row += b_row · C` (accumulating); see [`scalar::gemm_row`].
+    fn gemm_row_f32(&self, b_row: &[f32], c: &Dense<f32>, d1_row: &mut [f32]) {
+        scalar::gemm_row(b_row, c, d1_row);
+    }
+
+    /// `f64` twin of [`Backend::gemm_row_f32`].
+    fn gemm_row_f64(&self, b_row: &[f64], c: &Dense<f64>, d1_row: &mut [f64]) {
+        scalar::gemm_row(b_row, c, d1_row);
+    }
+
+    /// Transpose-C window kernel; see [`scalar::gemm_row_ct_strip`].
+    /// Column-strided reads dominate here, so no backend vectorizes it
+    /// today — overrides must keep the block accumulation order.
+    fn gemm_row_ct_strip_f32(&self, b_row: &[f32], c_t: &Dense<f32>, j0: usize, out: &mut [f32]) {
+        scalar::gemm_row_ct_strip(b_row, c_t, j0, out);
+    }
+
+    /// `f64` twin of [`Backend::gemm_row_ct_strip_f32`].
+    fn gemm_row_ct_strip_f64(&self, b_row: &[f64], c_t: &Dense<f64>, j0: usize, out: &mut [f64]) {
+        scalar::gemm_row_ct_strip(b_row, c_t, j0, out);
+    }
+
+    /// Packed-panel strip kernel; see [`scalar::gemm_row_strip`].
+    fn gemm_row_strip_f32(&self, b_row: &[f32], panel: &[f32], w: usize, out: &mut [f32]) {
+        scalar::gemm_row_strip(b_row, panel, w, out);
+    }
+
+    /// `f64` twin of [`Backend::gemm_row_strip_f32`].
+    fn gemm_row_strip_f64(&self, b_row: &[f64], panel: &[f64], w: usize, out: &mut [f64]) {
+        scalar::gemm_row_strip(b_row, panel, w, out);
+    }
+
+    /// Panel packing (pure copy); see [`scalar::pack_panel`].
+    fn pack_panel_f32(&self, c: &Dense<f32>, j0: usize, w: usize, panel: &mut [f32]) {
+        scalar::pack_panel(c, j0, w, panel);
+    }
+
+    /// `f64` twin of [`Backend::pack_panel_f32`].
+    fn pack_panel_f64(&self, c: &Dense<f64>, j0: usize, w: usize, panel: &mut [f64]) {
+        scalar::pack_panel(c, j0, w, panel);
+    }
+
+    /// SpMM strip gather (overwrites `out`).
+    ///
+    /// # Safety
+    /// As [`scalar::spmm_row_strip`]: every nonzero column `k` of `A`'s
+    /// row `j` satisfies `k >= i_base` and `d1` is valid for reads of
+    /// `(k − i_base)·stride .. +out.len()` for each such `k`.
+    unsafe fn spmm_row_strip_f32(
+        &self,
+        a: &Csr<f32>,
+        j: usize,
+        d1: *const f32,
+        stride: usize,
+        i_base: usize,
+        out: &mut [f32],
+    ) {
+        scalar::spmm_row_strip(a, j, d1, stride, i_base, out);
+    }
+
+    /// `f64` twin of [`Backend::spmm_row_strip_f32`].
+    ///
+    /// # Safety
+    /// As [`Backend::spmm_row_strip_f32`].
+    unsafe fn spmm_row_strip_f64(
+        &self,
+        a: &Csr<f64>,
+        j: usize,
+        d1: *const f64,
+        stride: usize,
+        i_base: usize,
+        out: &mut [f64],
+    ) {
+        scalar::spmm_row_strip(a, j, d1, stride, i_base, out);
+    }
+
+    /// SpGEMM numeric merge inner loop; see [`scalar::spgemm_merge`]
+    /// for the marks/touched/acc contract (marks are left set). The
+    /// data-dependent scatter defeats lane mapping, so no backend
+    /// vectorizes it today.
+    fn spgemm_merge_f32(
+        &self,
+        a_cols: &[u32],
+        a_vals: &[f32],
+        b: &Csr<f32>,
+        marks: &mut [u32],
+        touched: &mut [u32],
+        acc: &mut [f32],
+    ) -> usize {
+        scalar::spgemm_merge(a_cols, a_vals, b, marks, touched, acc)
+    }
+
+    /// `f64` twin of [`Backend::spgemm_merge_f32`].
+    fn spgemm_merge_f64(
+        &self,
+        a_cols: &[u32],
+        a_vals: &[f64],
+        b: &Csr<f64>,
+        marks: &mut [u32],
+        touched: &mut [u32],
+        acc: &mut [f64],
+    ) -> usize {
+        scalar::spgemm_merge(a_cols, a_vals, b, marks, touched, acc)
+    }
+}
+
+/// The reference backend: every method is a trait default calling the
+/// [`scalar`] bodies.
+pub struct ScalarBackend;
+
+impl Backend for ScalarBackend {
+    fn id(&self) -> BackendId {
+        BackendId::Scalar
+    }
+
+    fn vector_bytes(&self) -> usize {
+        8
+    }
+
+    fn throughput(&self, _elem_bytes: usize) -> f64 {
+        1.0
+    }
+}
+
+static SCALAR: ScalarBackend = ScalarBackend;
+
+/// The backend for `id`, or `None` when it is not compiled in or the
+/// host CPU lacks its ISA.
+#[cfg(target_arch = "x86_64")]
+pub fn by_id(id: BackendId) -> Option<&'static dyn Backend> {
+    match id {
+        BackendId::Scalar => Some(&SCALAR),
+        BackendId::Simd128 => Some(&x86::SIMD128),
+        BackendId::Simd256 => {
+            if x86::avx_supported() {
+                Some(&x86::SIMD256)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// The backend for `id`, or `None` when it is not compiled in or the
+/// host CPU lacks its ISA.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn by_id(id: BackendId) -> Option<&'static dyn Backend> {
+    match id {
+        BackendId::Scalar => Some(&SCALAR),
+        _ => None,
+    }
+}
+
+/// Widest backend the host supports — the detection half of dispatch.
+#[cfg(target_arch = "x86_64")]
+fn detect_best() -> BackendId {
+    if x86::avx_supported() {
+        BackendId::Simd256
+    } else {
+        BackendId::Simd128
+    }
+}
+
+/// Widest backend the host supports — the detection half of dispatch.
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_best() -> BackendId {
+    BackendId::Scalar
+}
+
+/// Every backend the host can run right now, in [`BackendId::ALL`]
+/// order — what the parity suite sweeps and fig19 times.
+pub fn available() -> Vec<&'static dyn Backend> {
+    BackendId::ALL.iter().filter_map(|&id| by_id(id)).collect()
+}
+
+/// Resolve a `TF_BACKEND`-style request to a backend id: a known,
+/// host-supported token wins; anything else (including no request)
+/// falls back to detection. Pure — the property suite replays it —
+/// and total: it always returns a runnable id.
+pub fn resolve(request: Option<&str>) -> BackendId {
+    if let Some(token) = request.map(str::trim).filter(|s| !s.is_empty()) {
+        if let Some(id) = BackendId::parse(token) {
+            if by_id(id).is_some() {
+                return id;
+            }
+        }
+    }
+    detect_best()
+}
+
+/// The process-wide active backend, resolved once from `TF_BACKEND` +
+/// CPU detection on first use. Every public kernel wrapper in
+/// [`crate::kernels`] dispatches through this, so executors,
+/// scheduler, and tuner all agree on the backend within a process.
+pub fn active() -> &'static dyn Backend {
+    static ACTIVE: OnceLock<&'static dyn Backend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let id = resolve(std::env::var("TF_BACKEND").ok().as_deref());
+        by_id(id).expect("resolve() only returns runnable backend ids")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_tokens_round_trip() {
+        for id in BackendId::ALL {
+            assert_eq!(BackendId::parse(id.as_str()), Some(id));
+            assert_eq!(format!("{id}"), id.as_str());
+        }
+        assert_eq!(BackendId::parse("avx512"), None);
+        assert_eq!(BackendId::parse(""), None);
+    }
+
+    #[test]
+    fn scalar_backend_is_always_available() {
+        let ids: Vec<BackendId> = available().iter().map(|b| b.id()).collect();
+        assert!(ids.contains(&BackendId::Scalar));
+        // `available()` follows ALL order with no duplicates.
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(ids, sorted);
+        #[cfg(target_arch = "x86_64")]
+        assert!(ids.contains(&BackendId::Simd128), "SSE2 is the x86-64 baseline");
+    }
+
+    #[test]
+    fn resolve_prefers_request_and_falls_back() {
+        assert_eq!(resolve(Some("scalar")), BackendId::Scalar);
+        assert_eq!(resolve(Some(" scalar ")), BackendId::Scalar, "tokens are trimmed");
+        let fallback = resolve(None);
+        assert!(by_id(fallback).is_some(), "detected backend must be runnable");
+        assert_eq!(resolve(Some("definitely-not-a-backend")), fallback);
+        assert_eq!(resolve(Some("")), fallback);
+        // Requesting every defined id either honors it or falls back —
+        // never panics, never returns an unrunnable id.
+        for id in BackendId::ALL {
+            let got = resolve(Some(id.as_str()));
+            assert!(by_id(got).is_some());
+            if by_id(id).is_some() {
+                assert_eq!(got, id);
+            }
+        }
+    }
+
+    #[test]
+    fn throughput_orders_backends() {
+        let scalar = by_id(BackendId::Scalar).unwrap();
+        assert_eq!(scalar.throughput(4), 1.0);
+        assert_eq!(scalar.throughput(8), 1.0);
+        for bk in available() {
+            assert!(bk.throughput(4) >= bk.throughput(8), "narrower elements, more lanes");
+            assert!(bk.throughput(8) >= 1.0);
+            assert_eq!(bk.strip_quantum(), crate::kernels::JB);
+        }
+    }
+
+    #[test]
+    fn active_is_available_and_stable() {
+        let a = active();
+        assert!(by_id(a.id()).is_some());
+        // Dispatch resolves once: repeated calls return the same unit.
+        assert_eq!(active().id(), a.id());
+    }
+}

@@ -1,0 +1,284 @@
+//! Scalar reference microkernels — the semantics every backend must
+//! reproduce **bitwise**.
+//!
+//! These are the register-blocked loops the executors ran before the
+//! backend layer existed, moved here verbatim so (a) the [`super::Backend`]
+//! trait's default methods fall back to them, (b) the SIMD backends can
+//! reuse the shared remainder-tail helpers ([`axpy_tail`], [`dot_tail`],
+//! [`axpy_tail_ptr`]) for the `< JB` columns their vector loops cannot
+//! cover, and (c) the conformance suite has one canonical implementation
+//! to compare every other backend against.
+//!
+//! Bitwise contract: per output element, products are accumulated in
+//! k-order (nonzero order for sparse operands) with separate multiply
+//! and add — no FMA contraction — matching what rustc emits for these
+//! loops (Rust disables floating-point contraction). A SIMD backend
+//! keeps the contract by mapping distinct output columns onto vector
+//! lanes: lane-local accumulation order is then identical to the scalar
+//! loop's per-column order.
+
+use super::super::JB;
+use crate::core::{Dense, Scalar};
+use crate::sparse::Csr;
+
+/// Shared remainder tail: `out[x] += Σ coeff_k · src_k[x]` accumulated
+/// k-major — for each `(coeff, src)` pair in iteration order, one plain
+/// axpy pass over `out`. Every kernel tail (scalar and SIMD) funnels
+/// through this (or its pointer twin [`axpy_tail_ptr`]) so tails are
+/// bitwise-identical across backends by construction.
+#[inline]
+pub fn axpy_tail<'a, T: Scalar>(pairs: impl Iterator<Item = (T, &'a [T])>, out: &mut [T]) {
+    for (coeff, src) in pairs {
+        for (o, &s) in out.iter_mut().zip(src) {
+            *o += coeff * s;
+        }
+    }
+}
+
+/// Pointer-source twin of [`axpy_tail`] for callers whose source rows
+/// are raw-pointer views (the SpMM workspace gather).
+///
+/// # Safety
+/// Every yielded `src` pointer must be valid for `out.len()` reads of
+/// fully written elements that are not concurrently mutated.
+#[inline]
+pub unsafe fn axpy_tail_ptr<T: Scalar>(pairs: impl Iterator<Item = (T, *const T)>, out: &mut [T]) {
+    for (coeff, src) in pairs {
+        for (x, o) in out.iter_mut().enumerate() {
+            *o += coeff * *src.add(x);
+        }
+    }
+}
+
+/// Shared dot-product tail: `Σ a[k] · b[k]` with a single accumulator in
+/// k-order — the transpose-C kernels' remainder outputs.
+#[inline]
+pub fn dot_tail<T: Scalar>(a: &[T], b: &[T]) -> T {
+    let mut acc = T::ZERO;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// `d1_row += b_row · C` for one row (accumulating; caller zeroes).
+///
+/// Register-blocked: the output is processed in [`JB`]-wide chunks whose
+/// accumulators stay in registers across the *entire* reduction, so
+/// `d1_row` is written exactly once instead of once per `k` step.
+#[inline]
+pub fn gemm_row<T: Scalar>(b_row: &[T], c: &Dense<T>, d1_row: &mut [T]) {
+    let ccol = c.cols;
+    debug_assert_eq!(b_row.len(), c.rows);
+    debug_assert_eq!(d1_row.len(), ccol);
+    let mut j = 0;
+    while j + JB <= ccol {
+        let mut acc = [T::ZERO; JB];
+        for (k, &bk) in b_row.iter().enumerate() {
+            let ck = &c.row(k)[j..j + JB];
+            for x in 0..JB {
+                acc[x] += bk * ck[x];
+            }
+        }
+        let out = &mut d1_row[j..j + JB];
+        for x in 0..JB {
+            out[x] += acc[x];
+        }
+        j += JB;
+    }
+    if j < ccol {
+        axpy_tail(b_row.iter().enumerate().map(|(k, &bk)| (bk, &c.row(k)[j..])), &mut d1_row[j..]);
+    }
+}
+
+/// Window form of the transpose-C kernel: `out[x] += b_row · Cᵀ[:, j0+x]`
+/// with `C` stored `ccol × bcol`, outputs `j0..j0 + out.len()` only.
+/// [`JB`] partial dot products are held in registers per block so
+/// `b_row` streams once per block instead of once per output.
+#[inline]
+pub fn gemm_row_ct_strip<T: Scalar>(b_row: &[T], c_t: &Dense<T>, j0: usize, out: &mut [T]) {
+    debug_assert_eq!(b_row.len(), c_t.cols);
+    debug_assert!(j0 + out.len() <= c_t.rows);
+    let bcol = c_t.cols;
+    let w = out.len();
+    let mut j = 0;
+    while j + JB <= w {
+        let mut acc = [T::ZERO; JB];
+        let base = (j0 + j) * bcol;
+        for (k, &bk) in b_row.iter().enumerate() {
+            for x in 0..JB {
+                acc[x] += bk * c_t.data[base + x * bcol + k];
+            }
+        }
+        for x in 0..JB {
+            out[j + x] += acc[x];
+        }
+        j += JB;
+    }
+    // Remainder outputs (< JB): one shared-tail dot product each.
+    for (x, o) in out[j..].iter_mut().enumerate() {
+        *o += dot_tail(b_row, c_t.row(j0 + j + x));
+    }
+}
+
+/// Pack columns `j0..j0 + w` of row-major `c` into a contiguous
+/// `c.rows × w` panel (`panel[k·w + x] = c[k][j0 + x]`) — the
+/// BLIS-style B-panel buffer of column-strip execution. A pure copy, so
+/// every backend shares this body (`copy_from_slice` already lowers to
+/// the platform's widest moves).
+#[inline]
+pub fn pack_panel<T: Scalar>(c: &Dense<T>, j0: usize, w: usize, panel: &mut [T]) {
+    debug_assert!(j0 + w <= c.cols);
+    debug_assert!(panel.len() >= c.rows * w);
+    for k in 0..c.rows {
+        panel[k * w..(k + 1) * w].copy_from_slice(&c.row(k)[j0..j0 + w]);
+    }
+}
+
+/// Strip form of [`gemm_row`]: `out += b_row · panel`, where `panel` is
+/// the packed `b_row.len() × w` column window of `C` ([`pack_panel`]).
+/// Accumulating; caller zeroes.
+#[inline]
+pub fn gemm_row_strip<T: Scalar>(b_row: &[T], panel: &[T], w: usize, out: &mut [T]) {
+    debug_assert!(panel.len() >= b_row.len() * w);
+    debug_assert_eq!(out.len(), w);
+    let mut j = 0;
+    while j + JB <= w {
+        let mut acc = [T::ZERO; JB];
+        for (k, &bk) in b_row.iter().enumerate() {
+            let ck = &panel[k * w + j..k * w + j + JB];
+            for x in 0..JB {
+                acc[x] += bk * ck[x];
+            }
+        }
+        let o = &mut out[j..j + JB];
+        for x in 0..JB {
+            o[x] += acc[x];
+        }
+        j += JB;
+    }
+    if j < w {
+        axpy_tail(
+            b_row.iter().enumerate().map(|(k, &bk)| (bk, &panel[k * w + j..(k + 1) * w])),
+            &mut out[j..],
+        );
+    }
+}
+
+/// Strip gather: `out[x] = Σ_k a[j, k] · d1[(k − i_base)·stride + x]`
+/// (overwrites `out`), with [`JB`]-wide accumulators registered across
+/// the whole nonzero gather.
+///
+/// # Safety
+/// Every nonzero column `k` of `A`'s row `j` must satisfy `k >= i_base`,
+/// and `d1` must be valid for reads of
+/// `(k − i_base)·stride .. +out.len()` for each such `k`, with those
+/// elements fully written and no longer mutated.
+#[inline]
+pub unsafe fn spmm_row_strip<T: Scalar>(
+    a: &Csr<T>,
+    j: usize,
+    d1: *const T,
+    stride: usize,
+    i_base: usize,
+    out: &mut [T],
+) {
+    let w = out.len();
+    let (cols, vals) = a.row(j);
+    let mut x0 = 0;
+    while x0 + JB <= w {
+        let mut acc = [T::ZERO; JB];
+        for (&k, &v) in cols.iter().zip(vals) {
+            let src = std::slice::from_raw_parts(d1.add((k as usize - i_base) * stride + x0), JB);
+            for x in 0..JB {
+                acc[x] += v * src[x];
+            }
+        }
+        out[x0..x0 + JB].copy_from_slice(&acc);
+        x0 += JB;
+    }
+    if x0 < w {
+        for v in &mut out[x0..] {
+            *v = T::ZERO;
+        }
+        // `wrapping_add` keeps the (safe) closure free of unsafe ops;
+        // the pointers it forms are in-bounds per this function's
+        // contract, so dereferencing them in the tail helper is sound.
+        axpy_tail_ptr(
+            cols.iter()
+                .zip(vals)
+                .map(|(&k, &v)| (v, d1.wrapping_add((k as usize - i_base) * stride + x0))),
+            &mut out[x0..],
+        );
+    }
+}
+
+/// SpGEMM numeric merge inner loop: scatter-accumulate
+/// `Σ_k A[i,k] · B[k, :]` over `a_cols`/`a_vals` into the dense
+/// accumulator `acc`, recording first-touched columns in `touched`.
+/// Returns the touched count `n`; **`marks` is left set** for
+/// `touched[..n]` — the caller sorts/emits and restores marks, because
+/// what follows the merge differs per call site (plain emit, drop
+/// tolerance, count-only).
+#[inline]
+pub fn spgemm_merge<T: Scalar>(
+    a_cols: &[u32],
+    a_vals: &[T],
+    b: &Csr<T>,
+    marks: &mut [u32],
+    touched: &mut [u32],
+    acc: &mut [T],
+) -> usize {
+    debug_assert_eq!(a_cols.len(), a_vals.len());
+    let mut n = 0usize;
+    for (&k, &av) in a_cols.iter().zip(a_vals) {
+        let (bc, bv) = b.row(k as usize);
+        for (&c, &v) in bc.iter().zip(bv) {
+            let ci = c as usize;
+            if marks[ci] == 0 {
+                marks[ci] = 1;
+                touched[n] = c;
+                n += 1;
+                acc[ci] = av * v;
+            } else {
+                acc[ci] += av * v;
+            }
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_tail_is_k_major() {
+        // Two source rows: out must see row 0 fully before row 1.
+        let rows = [vec![1.0f64, 2.0], vec![10.0, 20.0]];
+        let mut out = vec![0.5, 0.5];
+        axpy_tail(rows.iter().enumerate().map(|(k, r)| ((k + 1) as f64, &r[..])), &mut out);
+        assert_eq!(out, vec![0.5 + 1.0 + 20.0, 0.5 + 2.0 + 40.0]);
+    }
+
+    #[test]
+    fn ptr_tail_matches_slice_tail() {
+        let rows = [vec![1.0f64, -2.0, 3.0], vec![0.25, 0.5, -0.75]];
+        let coeffs = [3.0f64, -7.0];
+        let mut a = vec![1.0f64; 3];
+        let mut b = a.clone();
+        axpy_tail(coeffs.iter().zip(&rows).map(|(&c, r)| (c, &r[..])), &mut a);
+        unsafe {
+            axpy_tail_ptr(coeffs.iter().zip(&rows).map(|(&c, r)| (c, r.as_ptr())), &mut b);
+        }
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn dot_tail_accumulates_in_order() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert_eq!(dot_tail(&a, &b), ((1.0f32 * 4.0) + 2.0 * 5.0) + 3.0 * 6.0);
+        assert_eq!(dot_tail(&a[..0], &b[..0]), 0.0);
+    }
+}

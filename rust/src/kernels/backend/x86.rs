@@ -1,0 +1,362 @@
+//! x86-64 explicit-SIMD backends: SSE2 (`simd128`, baseline) and AVX
+//! (`simd256`, runtime-detected).
+//!
+//! Each kernel maps the [`JB`]-wide output block onto vector lanes:
+//! `JB = 32` scalars is 8×4-lane f32 / 16×2-lane f64 vectors at 128
+//! bits, 4×8-lane f32 / 8×4-lane f64 vectors at 256 bits. Lanes are
+//! distinct output columns, so each column's products accumulate in the
+//! scalar reference's k-order; multiply and add stay separate
+//! instructions (no FMA — rustc compiles the scalar loops without
+//! contraction, and bitwise parity is the contract). Remainder columns
+//! (`< JB`) run the shared scalar tail helpers, identical across
+//! backends by construction.
+//!
+//! Only the panel/full-row GeMM kernels and the SpMM gather are
+//! overridden: `gemm_row_ct_strip` reads column-strided memory,
+//! `pack_panel` is a pure copy, and the SpGEMM merge is a
+//! data-dependent scatter — explicit vectors win nothing there (or
+//! would have to reorder accumulation), so those stay on the scalar
+//! reference via the trait defaults.
+
+use super::scalar;
+use super::{Backend, BackendId};
+use crate::core::Dense;
+use crate::kernels::JB;
+use crate::sparse::Csr;
+use core::arch::x86_64::*;
+
+/// Runtime gate for the 256-bit backend.
+pub(super) fn avx_supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx")
+}
+
+pub(super) static SIMD128: Simd128Backend = Simd128Backend;
+pub(super) static SIMD256: Simd256Backend = Simd256Backend;
+
+/// One body per (element type × vector width); the macro pins the
+/// shared structure — JB block of lane-mapped accumulators, scalar
+/// tail — so the eight instantiated kernels cannot drift apart.
+///
+/// Generated functions are `unsafe fn`: callers guarantee the ISA is
+/// available (`$attr` carries the `#[target_feature]` gate where the
+/// ISA is above baseline) and, for the SpMM gather, the raw-pointer
+/// contract of [`scalar::spmm_row_strip`].
+macro_rules! simd_kernels {
+    (
+        $gemm_row:ident, $gemm_row_strip:ident, $spmm_row_strip:ident,
+        $ty:ty, $lanes:expr,
+        $setzero:ident, $set1:ident, $loadu:ident, $storeu:ident, $add:ident, $mul:ident
+        $(, #[$attr:meta])?
+    ) => {
+        $(#[$attr])?
+        #[inline]
+        unsafe fn $gemm_row(b_row: &[$ty], c: &Dense<$ty>, d1_row: &mut [$ty]) {
+            let ccol = c.cols;
+            debug_assert_eq!(b_row.len(), c.rows);
+            debug_assert_eq!(d1_row.len(), ccol);
+            let mut j = 0;
+            while j + JB <= ccol {
+                let mut acc = [$setzero(); JB / $lanes];
+                for (k, &bk) in b_row.iter().enumerate() {
+                    let src = c.row(k)[j..].as_ptr();
+                    let bv = $set1(bk);
+                    for (x, a) in acc.iter_mut().enumerate() {
+                        *a = $add(*a, $mul(bv, $loadu(src.add($lanes * x))));
+                    }
+                }
+                let dst = d1_row[j..].as_mut_ptr();
+                for (x, a) in acc.iter().enumerate() {
+                    let p = dst.add($lanes * x);
+                    $storeu(p, $add($loadu(p), *a));
+                }
+                j += JB;
+            }
+            if j < ccol {
+                scalar::axpy_tail(
+                    b_row.iter().enumerate().map(|(k, &bk)| (bk, &c.row(k)[j..])),
+                    &mut d1_row[j..],
+                );
+            }
+        }
+
+        $(#[$attr])?
+        #[inline]
+        unsafe fn $gemm_row_strip(b_row: &[$ty], panel: &[$ty], w: usize, out: &mut [$ty]) {
+            debug_assert!(panel.len() >= b_row.len() * w);
+            debug_assert_eq!(out.len(), w);
+            let mut j = 0;
+            while j + JB <= w {
+                let mut acc = [$setzero(); JB / $lanes];
+                for (k, &bk) in b_row.iter().enumerate() {
+                    let src = panel[k * w + j..].as_ptr();
+                    let bv = $set1(bk);
+                    for (x, a) in acc.iter_mut().enumerate() {
+                        *a = $add(*a, $mul(bv, $loadu(src.add($lanes * x))));
+                    }
+                }
+                let dst = out[j..].as_mut_ptr();
+                for (x, a) in acc.iter().enumerate() {
+                    let p = dst.add($lanes * x);
+                    $storeu(p, $add($loadu(p), *a));
+                }
+                j += JB;
+            }
+            if j < w {
+                scalar::axpy_tail(
+                    b_row.iter().enumerate().map(|(k, &bk)| (bk, &panel[k * w + j..(k + 1) * w])),
+                    &mut out[j..],
+                );
+            }
+        }
+
+        $(#[$attr])?
+        #[inline]
+        unsafe fn $spmm_row_strip(
+            a: &Csr<$ty>,
+            row: usize,
+            d1: *const $ty,
+            stride: usize,
+            i_base: usize,
+            out: &mut [$ty],
+        ) {
+            let w = out.len();
+            let (cols, vals) = a.row(row);
+            let mut x0 = 0;
+            while x0 + JB <= w {
+                let mut acc = [$setzero(); JB / $lanes];
+                for (&k, &v) in cols.iter().zip(vals) {
+                    let src = d1.add((k as usize - i_base) * stride + x0);
+                    let av = $set1(v);
+                    for (x, ac) in acc.iter_mut().enumerate() {
+                        *ac = $add(*ac, $mul(av, $loadu(src.add($lanes * x))));
+                    }
+                }
+                let dst = out[x0..].as_mut_ptr();
+                for (x, ac) in acc.iter().enumerate() {
+                    $storeu(dst.add($lanes * x), *ac);
+                }
+                x0 += JB;
+            }
+            if x0 < w {
+                for o in &mut out[x0..] {
+                    *o = 0.0;
+                }
+                scalar::axpy_tail_ptr(
+                    cols.iter()
+                        .zip(vals)
+                        .map(|(&k, &v)| (v, d1.wrapping_add((k as usize - i_base) * stride + x0))),
+                    &mut out[x0..],
+                );
+            }
+        }
+    };
+}
+
+simd_kernels!(
+    gemm_row_f32_sse, gemm_row_strip_f32_sse, spmm_row_strip_f32_sse,
+    f32, 4,
+    _mm_setzero_ps, _mm_set1_ps, _mm_loadu_ps, _mm_storeu_ps, _mm_add_ps, _mm_mul_ps
+);
+
+simd_kernels!(
+    gemm_row_f64_sse, gemm_row_strip_f64_sse, spmm_row_strip_f64_sse,
+    f64, 2,
+    _mm_setzero_pd, _mm_set1_pd, _mm_loadu_pd, _mm_storeu_pd, _mm_add_pd, _mm_mul_pd
+);
+
+simd_kernels!(
+    gemm_row_f32_avx, gemm_row_strip_f32_avx, spmm_row_strip_f32_avx,
+    f32, 8,
+    _mm256_setzero_ps, _mm256_set1_ps, _mm256_loadu_ps, _mm256_storeu_ps, _mm256_add_ps,
+    _mm256_mul_ps,
+    #[target_feature(enable = "avx")]
+);
+
+simd_kernels!(
+    gemm_row_f64_avx, gemm_row_strip_f64_avx, spmm_row_strip_f64_avx,
+    f64, 4,
+    _mm256_setzero_pd, _mm256_set1_pd, _mm256_loadu_pd, _mm256_storeu_pd, _mm256_add_pd,
+    _mm256_mul_pd,
+    #[target_feature(enable = "avx")]
+);
+
+/// 128-bit backend: SSE2 is part of the x86-64 baseline, so the unsafe
+/// kernel calls need no runtime gate.
+pub struct Simd128Backend;
+
+impl Backend for Simd128Backend {
+    fn id(&self) -> BackendId {
+        BackendId::Simd128
+    }
+
+    fn vector_bytes(&self) -> usize {
+        16
+    }
+
+    fn gemm_row_f32(&self, b_row: &[f32], c: &Dense<f32>, d1_row: &mut [f32]) {
+        // SAFETY: SSE2 is unconditionally available on x86-64; slice
+        // bounds are checked inside the kernel.
+        unsafe { gemm_row_f32_sse(b_row, c, d1_row) }
+    }
+
+    fn gemm_row_f64(&self, b_row: &[f64], c: &Dense<f64>, d1_row: &mut [f64]) {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { gemm_row_f64_sse(b_row, c, d1_row) }
+    }
+
+    fn gemm_row_strip_f32(&self, b_row: &[f32], panel: &[f32], w: usize, out: &mut [f32]) {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { gemm_row_strip_f32_sse(b_row, panel, w, out) }
+    }
+
+    fn gemm_row_strip_f64(&self, b_row: &[f64], panel: &[f64], w: usize, out: &mut [f64]) {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { gemm_row_strip_f64_sse(b_row, panel, w, out) }
+    }
+
+    unsafe fn spmm_row_strip_f32(
+        &self,
+        a: &Csr<f32>,
+        j: usize,
+        d1: *const f32,
+        stride: usize,
+        i_base: usize,
+        out: &mut [f32],
+    ) {
+        spmm_row_strip_f32_sse(a, j, d1, stride, i_base, out)
+    }
+
+    unsafe fn spmm_row_strip_f64(
+        &self,
+        a: &Csr<f64>,
+        j: usize,
+        d1: *const f64,
+        stride: usize,
+        i_base: usize,
+        out: &mut [f64],
+    ) {
+        spmm_row_strip_f64_sse(a, j, d1, stride, i_base, out)
+    }
+}
+
+/// 256-bit backend. Only reachable through [`super::by_id`], which
+/// gates on [`avx_supported`] — that check is what makes the
+/// `target_feature` kernel calls below sound.
+pub struct Simd256Backend;
+
+impl Backend for Simd256Backend {
+    fn id(&self) -> BackendId {
+        BackendId::Simd256
+    }
+
+    fn vector_bytes(&self) -> usize {
+        32
+    }
+
+    fn gemm_row_f32(&self, b_row: &[f32], c: &Dense<f32>, d1_row: &mut [f32]) {
+        // SAFETY: `by_id` only hands this backend out when AVX is
+        // detected at runtime; slice bounds are checked in the kernel.
+        unsafe { gemm_row_f32_avx(b_row, c, d1_row) }
+    }
+
+    fn gemm_row_f64(&self, b_row: &[f64], c: &Dense<f64>, d1_row: &mut [f64]) {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { gemm_row_f64_avx(b_row, c, d1_row) }
+    }
+
+    fn gemm_row_strip_f32(&self, b_row: &[f32], panel: &[f32], w: usize, out: &mut [f32]) {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { gemm_row_strip_f32_avx(b_row, panel, w, out) }
+    }
+
+    fn gemm_row_strip_f64(&self, b_row: &[f64], panel: &[f64], w: usize, out: &mut [f64]) {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { gemm_row_strip_f64_avx(b_row, panel, w, out) }
+    }
+
+    unsafe fn spmm_row_strip_f32(
+        &self,
+        a: &Csr<f32>,
+        j: usize,
+        d1: *const f32,
+        stride: usize,
+        i_base: usize,
+        out: &mut [f32],
+    ) {
+        spmm_row_strip_f32_avx(a, j, d1, stride, i_base, out)
+    }
+
+    unsafe fn spmm_row_strip_f64(
+        &self,
+        a: &Csr<f64>,
+        j: usize,
+        d1: *const f64,
+        stride: usize,
+        i_base: usize,
+        out: &mut [f64],
+    ) {
+        spmm_row_strip_f64_avx(a, j, d1, stride, i_base, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    /// Bitwise gemm/spmm parity of one SIMD unit against the scalar
+    /// reference, over shapes hitting the block path and the tail.
+    fn check_unit(bk: &dyn Backend) {
+        for ccol in [1, JB - 1, JB, JB + 7, 2 * JB, 2 * JB + 5] {
+            let b = Dense::<f64>::randn(3, 13, 41 + ccol as u64);
+            let c = Dense::<f64>::randn(13, ccol, 43 + ccol as u64);
+            for i in 0..3 {
+                let mut want = vec![0.1f64; ccol];
+                let mut got = want.clone();
+                scalar::gemm_row(b.row(i), &c, &mut want);
+                bk.gemm_row_f64(b.row(i), &c, &mut got);
+                assert!(
+                    want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} gemm_row ccol={ccol}",
+                    bk.id()
+                );
+            }
+            let a = Csr::<f32>::with_random_values(
+                gen::rmat(32, 4, gen::RmatKind::Graph500, 9),
+                5,
+                -1.0,
+                1.0,
+            );
+            let d1 = Dense::<f32>::randn(32, ccol, 47 + ccol as u64);
+            for j in 0..32 {
+                let mut want = vec![9.0f32; ccol];
+                let mut got = want.clone();
+                // SAFETY: every column of `a` is < 32 = d1.rows and the
+                // full-width stride view covers ccol reads per row.
+                unsafe {
+                    scalar::spmm_row_strip(&a, j, d1.data.as_ptr(), ccol, 0, &mut want);
+                    bk.spmm_row_strip_f32(&a, j, d1.data.as_ptr(), ccol, 0, &mut got);
+                }
+                assert!(
+                    want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} spmm_row_strip ccol={ccol}",
+                    bk.id()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sse_matches_scalar_bitwise() {
+        check_unit(&SIMD128);
+    }
+
+    #[test]
+    fn avx_matches_scalar_bitwise_when_detected() {
+        if !avx_supported() {
+            eprintln!("skipping: host has no AVX");
+            return;
+        }
+        check_unit(&SIMD256);
+    }
+}

@@ -1,74 +1,38 @@
-//! Dense row-panel GeMM microkernel: `D1[i, :] = B[i, :] · C`.
+//! Dense row-panel GeMM entry points: `D1[i, :] = B[i, :] · C`.
 //!
-//! `C` is row-major `bcol × ccol`; the k-loop is unrolled 4-wide and the
-//! inner `ccol` loop is a contiguous axpy that LLVM auto-vectorizes
-//! (verified: the hot loop compiles to packed `mulp*/addp*`/FMA). This
-//! is the "highly optimized GeMM BLAS" role of line 4–7 in Listing 1 —
-//! shared verbatim by fused and unfused executors.
+//! Kernel bodies live in the runtime-dispatched backend layer
+//! ([`crate::kernels::backend`]); each wrapper here routes through the
+//! process-wide [`backend::active`] unit via the `Scalar::bk_*` hooks.
+//! Fused and unfused executors keep calling the *same* row kernels —
+//! the §3.2 property that makes measured differences attributable to
+//! scheduling/locality, not kernel quality — while the per-tile compute
+//! runs the widest ISA the host offers, bitwise-equal to the scalar
+//! reference. The `*_with` twins take an explicit backend so the parity
+//! suite and the fig19 bench can drive every compiled backend in one
+//! process.
 
-use super::JB;
+use super::backend::{self, Backend};
 use crate::core::{Dense, Scalar};
 
 /// `d1_row += b_row · C` for one row (accumulating; caller zeroes).
 ///
-/// Register-blocked: the output is processed in [`JB`]-wide chunks whose
-/// accumulators stay in vector registers across the *entire* reduction,
-/// so `d1_row` is written exactly once instead of `bcol/4` times (§Perf
-/// log #4 — ~1.5× over the previous 4-wide k-unroll at bcol=64).
+/// Register-blocked: the output is processed in
+/// [`JB`](crate::kernels::JB)-wide chunks whose accumulators stay in
+/// (vector) registers across the *entire* reduction, so `d1_row` is
+/// written exactly once; see [`backend::scalar::gemm_row`].
 #[inline]
 pub fn gemm_row<T: Scalar>(b_row: &[T], c: &Dense<T>, d1_row: &mut [T]) {
-    let ccol = c.cols;
-    debug_assert_eq!(b_row.len(), c.rows);
-    debug_assert_eq!(d1_row.len(), ccol);
-    let mut j = 0;
-    while j + JB <= ccol {
-        let mut acc = [T::ZERO; JB];
-        for (k, &bk) in b_row.iter().enumerate() {
-            let ck = &c.row(k)[j..j + JB];
-            for x in 0..JB {
-                acc[x] += bk * ck[x];
-            }
-        }
-        let out = &mut d1_row[j..j + JB];
-        for x in 0..JB {
-            out[x] += acc[x];
-        }
-        j += JB;
-    }
-    if j < ccol {
-        // Remainder columns: k-unrolled fallback.
-        let rem = ccol - j;
-        let mut k = 0;
-        while k + 4 <= b_row.len() {
-            let (b0, b1, b2, b3) = (b_row[k], b_row[k + 1], b_row[k + 2], b_row[k + 3]);
-            let c0 = &c.row(k)[j..];
-            let c1 = &c.row(k + 1)[j..];
-            let c2 = &c.row(k + 2)[j..];
-            let c3 = &c.row(k + 3)[j..];
-            for x in 0..rem {
-                d1_row[j + x] += b0 * c0[x] + b1 * c1[x] + b2 * c2[x] + b3 * c3[x];
-            }
-            k += 4;
-        }
-        while k < b_row.len() {
-            let bk = b_row[k];
-            let ck = &c.row(k)[j..];
-            for x in 0..rem {
-                d1_row[j + x] += bk * ck[x];
-            }
-            k += 1;
-        }
-    }
+    T::bk_gemm_row(backend::active(), b_row, c, d1_row);
+}
+
+/// [`gemm_row`] on an explicit backend.
+#[inline]
+pub fn gemm_row_with<T: Scalar>(bk: &dyn Backend, b_row: &[T], c: &Dense<T>, d1_row: &mut [T]) {
+    T::bk_gemm_row(bk, b_row, c, d1_row);
 }
 
 /// Transpose-C variant (§4.2.1): `d1_row[j] = b_row · Cᵀ[:, j] = b_row · C[j, :]`
 /// — a dot-product per output, with `C` stored `ccol × bcol`.
-///
-/// Register-blocked with the same [`JB`]-wide accumulator scheme as
-/// [`gemm_row`]: each block streams `b_row` **once** for `JB` outputs
-/// (instead of once per output) with all `JB` partial dot products held
-/// in registers across the reduction (§Perf log #6 — the former 2-wide
-/// dot re-read `b_row` `ccol` times).
 #[inline]
 pub fn gemm_row_ct<T: Scalar>(b_row: &[T], c_t: &Dense<T>, d1_row: &mut [T]) {
     debug_assert_eq!(d1_row.len(), c_t.rows);
@@ -78,43 +42,23 @@ pub fn gemm_row_ct<T: Scalar>(b_row: &[T], c_t: &Dense<T>, d1_row: &mut [T]) {
 /// Window form of [`gemm_row_ct`]: outputs `j0..j0 + out.len()` only
 /// (reading rows `j0..` of the stored `ccol × bcol` matrix). Strip
 /// execution calls this per column strip; `gemm_row_ct` is the
-/// full-width instance (`j0 = 0`).
+/// full-width instance (`j0 = 0`). See
+/// [`backend::scalar::gemm_row_ct_strip`].
 #[inline]
 pub fn gemm_row_ct_strip<T: Scalar>(b_row: &[T], c_t: &Dense<T>, j0: usize, out: &mut [T]) {
-    debug_assert_eq!(b_row.len(), c_t.cols);
-    debug_assert!(j0 + out.len() <= c_t.rows);
-    let bcol = c_t.cols;
-    let w = out.len();
-    let mut j = 0;
-    while j + JB <= w {
-        let mut acc = [T::ZERO; JB];
-        let base = (j0 + j) * bcol;
-        for (k, &bk) in b_row.iter().enumerate() {
-            for x in 0..JB {
-                acc[x] += bk * c_t.data[base + x * bcol + k];
-            }
-        }
-        for x in 0..JB {
-            out[j + x] += acc[x];
-        }
-        j += JB;
-    }
-    // Remainder outputs: 2-wide unrolled dot products (tails are < JB).
-    for (x, o) in out[j..].iter_mut().enumerate() {
-        let cj = c_t.row(j0 + j + x);
-        let mut acc0 = T::ZERO;
-        let mut acc1 = T::ZERO;
-        let mut k = 0;
-        while k + 2 <= b_row.len() {
-            acc0 += b_row[k] * cj[k];
-            acc1 += b_row[k + 1] * cj[k + 1];
-            k += 2;
-        }
-        if k < b_row.len() {
-            acc0 += b_row[k] * cj[k];
-        }
-        *o += acc0 + acc1;
-    }
+    T::bk_gemm_row_ct_strip(backend::active(), b_row, c_t, j0, out);
+}
+
+/// [`gemm_row_ct_strip`] on an explicit backend.
+#[inline]
+pub fn gemm_row_ct_strip_with<T: Scalar>(
+    bk: &dyn Backend,
+    b_row: &[T],
+    c_t: &Dense<T>,
+    j0: usize,
+    out: &mut [T],
+) {
+    T::bk_gemm_row_ct_strip(bk, b_row, c_t, j0, out);
 }
 
 /// Pack columns `j0..j0 + w` of row-major `c` into a contiguous
@@ -123,45 +67,39 @@ pub fn gemm_row_ct_strip<T: Scalar>(b_row: &[T], c_t: &Dense<T>, j0: usize, out:
 /// column-strip execution.
 #[inline]
 pub fn pack_panel<T: Scalar>(c: &Dense<T>, j0: usize, w: usize, panel: &mut [T]) {
-    debug_assert!(j0 + w <= c.cols);
-    debug_assert!(panel.len() >= c.rows * w);
-    for k in 0..c.rows {
-        panel[k * w..(k + 1) * w].copy_from_slice(&c.row(k)[j0..j0 + w]);
-    }
+    T::bk_pack_panel(backend::active(), c, j0, w, panel);
+}
+
+/// [`pack_panel`] on an explicit backend.
+#[inline]
+pub fn pack_panel_with<T: Scalar>(
+    bk: &dyn Backend,
+    c: &Dense<T>,
+    j0: usize,
+    w: usize,
+    panel: &mut [T],
+) {
+    T::bk_pack_panel(bk, c, j0, w, panel);
 }
 
 /// Strip form of [`gemm_row`]: `out += b_row · panel`, where `panel` is
 /// the packed `b_row.len() × w` column window of `C` ([`pack_panel`]).
-/// Accumulating; caller zeroes. Same [`JB`] register blocking as the
-/// full-width kernel.
+/// Accumulating; caller zeroes.
 #[inline]
 pub fn gemm_row_strip<T: Scalar>(b_row: &[T], panel: &[T], w: usize, out: &mut [T]) {
-    debug_assert!(panel.len() >= b_row.len() * w);
-    debug_assert_eq!(out.len(), w);
-    let mut j = 0;
-    while j + JB <= w {
-        let mut acc = [T::ZERO; JB];
-        for (k, &bk) in b_row.iter().enumerate() {
-            let ck = &panel[k * w + j..k * w + j + JB];
-            for x in 0..JB {
-                acc[x] += bk * ck[x];
-            }
-        }
-        let o = &mut out[j..j + JB];
-        for x in 0..JB {
-            o[x] += acc[x];
-        }
-        j += JB;
-    }
-    if j < w {
-        let rem = w - j;
-        for (k, &bk) in b_row.iter().enumerate() {
-            let ck = &panel[k * w + j..k * w + j + rem];
-            for x in 0..rem {
-                out[j + x] += bk * ck[x];
-            }
-        }
-    }
+    T::bk_gemm_row_strip(backend::active(), b_row, panel, w, out);
+}
+
+/// [`gemm_row_strip`] on an explicit backend.
+#[inline]
+pub fn gemm_row_strip_with<T: Scalar>(
+    bk: &dyn Backend,
+    b_row: &[T],
+    panel: &[T],
+    w: usize,
+    out: &mut [T],
+) {
+    T::bk_gemm_row_strip(bk, b_row, panel, w, out);
 }
 
 /// Panel form: rows `lo..hi` of `D1 = B · C`, writing through a raw
@@ -182,6 +120,7 @@ pub unsafe fn gemm_rows<T: Scalar>(b: &Dense<T>, c: &Dense<T>, d1: *mut T, lo: u
 
 #[cfg(test)]
 mod tests {
+    use super::super::JB;
     use super::*;
 
     fn naive(b: &Dense<f64>, c: &Dense<f64>) -> Dense<f64> {
@@ -293,5 +232,19 @@ mod tests {
                 assert!((got.get(i, j) as f64 - expect.get(i, j)).abs() < 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn with_variants_agree_with_active_dispatch() {
+        let bk = backend::active();
+        let b = Dense::<f64>::randn(2, 7, 21);
+        let c = Dense::<f64>::randn(7, JB + 3, 22);
+        let mut via_active = Dense::zeros(2, JB + 3);
+        let mut via_with = Dense::zeros(2, JB + 3);
+        for i in 0..2 {
+            gemm_row(b.row(i), &c, via_active.row_mut(i));
+            gemm_row_with(bk, b.row(i), &c, via_with.row_mut(i));
+        }
+        assert_eq!(via_active, via_with);
     }
 }

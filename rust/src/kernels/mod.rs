@@ -15,21 +15,36 @@
 //! producing and consuming operations. [`spgemm`] adds the two-phase
 //! row-merge kernels for sparse-output multiplication (SpGEMM chain
 //! steps whose intermediates stay sparse).
+//!
+//! Kernel *bodies* live in [`backend`]: a scalar reference plus
+//! explicit-SIMD implementations behind the runtime-dispatched
+//! [`backend::Backend`] trait, selected once per process by CPU
+//! detection (override with `TF_BACKEND=scalar|simd128|simd256`). All
+//! backends are bitwise-equal to the scalar reference, so executor
+//! results are independent of which one runs. The `*_with` entry points
+//! take an explicit backend for parity tests and benches.
 
+pub mod backend;
 pub mod gemm;
 pub mod spgemm;
 pub mod spmm;
 
-pub use gemm::{gemm_row, gemm_row_ct, gemm_row_ct_strip, gemm_row_strip, gemm_rows, pack_panel};
-pub use spgemm::{
-    spgemm, spgemm_keeps, spgemm_row_dense, spgemm_row_numeric, spgemm_row_numeric_tol,
-    spgemm_row_symbolic, spgemm_row_symbolic_tol,
+pub use gemm::{
+    gemm_row, gemm_row_ct, gemm_row_ct_strip, gemm_row_ct_strip_with, gemm_row_strip,
+    gemm_row_strip_with, gemm_row_with, gemm_rows, pack_panel, pack_panel_with,
 };
-pub use spmm::{spmm_row, spmm_row_ptr, spmm_row_strip, spmm_rows};
+pub use spgemm::{
+    spgemm, spgemm_keeps, spgemm_merge_with, spgemm_row_dense, spgemm_row_numeric,
+    spgemm_row_numeric_tol, spgemm_row_symbolic, spgemm_row_symbolic_tol,
+};
+pub use spmm::{spmm_row, spmm_row_ptr, spmm_row_strip, spmm_row_strip_with, spmm_rows};
 
 /// Output-register block width shared by every kernel: 32 scalars = 4
-/// AVX2 f64 / 8 SSE f32 vectors — small enough that a block of output
-/// accumulators lives in vector registers across an entire reduction.
-/// Column-strip widths are multiples of this so strip kernels never run
-/// on a sub-register-block tail except the final `ccol` remainder.
+/// AVX f32 / 8 AVX f64 / 8 SSE f32 / 16 SSE f64 vectors — small enough
+/// that a block of output accumulators lives in vector registers across
+/// an entire reduction. Column-strip widths are multiples of this so
+/// strip kernels never run on a sub-register-block tail except the final
+/// `ccol` remainder. Backends quantize strips via
+/// [`backend::Backend::strip_quantum`], which is `JB` for every current
+/// backend.
 pub const JB: usize = 32;

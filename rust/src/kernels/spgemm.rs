@@ -23,8 +23,28 @@
 //! own the (possibly concurrent) row decomposition
 //! ([`crate::exec::spgemm`] is the two-phase parallel driver).
 
+use super::backend::{self, Backend};
 use crate::core::Scalar;
 use crate::sparse::{Csr, Pattern};
+
+/// The numeric merge inner loop on an explicit backend: scatter-
+/// accumulate `Σ_k A[i,k] · B[k, :]` into `acc`, recording first-touched
+/// columns in `touched`. Returns the touched count `n`; **`marks` is
+/// left set** for `touched[..n]` — the caller sorts/emits and restores
+/// marks (the epilogues differ per call site). See
+/// [`backend::scalar::spgemm_merge`] for the reference body.
+#[inline]
+pub fn spgemm_merge_with<T: Scalar>(
+    bk: &dyn Backend,
+    a_cols: &[u32],
+    a_vals: &[T],
+    b: &Csr<T>,
+    marks: &mut [u32],
+    touched: &mut [u32],
+    acc: &mut [T],
+) -> usize {
+    T::bk_spgemm_merge(bk, a_cols, a_vals, b, marks, touched, acc)
+}
 
 /// Symbolic merge of one output row of `A · B`: the number of unique
 /// columns in `∪_k B.row(k)` over `a_cols` (the nonzero columns of
@@ -78,23 +98,8 @@ pub fn spgemm_row_numeric<T: Scalar>(
     out_cols: &mut [u32],
     out_vals: &mut [T],
 ) {
-    debug_assert_eq!(a_cols.len(), a_vals.len());
     debug_assert_eq!(out_cols.len(), out_vals.len());
-    let mut n = 0usize;
-    for (&k, &av) in a_cols.iter().zip(a_vals) {
-        let (bc, bv) = b.row(k as usize);
-        for (&c, &v) in bc.iter().zip(bv) {
-            let ci = c as usize;
-            if marks[ci] == 0 {
-                marks[ci] = 1;
-                touched[n] = c;
-                n += 1;
-                acc[ci] = av * v;
-            } else {
-                acc[ci] += av * v;
-            }
-        }
-    }
+    let n = T::bk_spgemm_merge(backend::active(), a_cols, a_vals, b, marks, touched, acc);
     debug_assert_eq!(n, out_cols.len(), "numeric row size must match the symbolic count");
     let t = &mut touched[..n];
     t.sort_unstable();
@@ -132,22 +137,7 @@ pub fn spgemm_row_symbolic_tol<T: Scalar>(
     acc: &mut [T],
     drop_tol: f64,
 ) -> usize {
-    debug_assert_eq!(a_cols.len(), a_vals.len());
-    let mut n = 0usize;
-    for (&k, &av) in a_cols.iter().zip(a_vals) {
-        let (bc, bv) = b.row(k as usize);
-        for (&c, &v) in bc.iter().zip(bv) {
-            let ci = c as usize;
-            if marks[ci] == 0 {
-                marks[ci] = 1;
-                touched[n] = c;
-                n += 1;
-                acc[ci] = av * v;
-            } else {
-                acc[ci] += av * v;
-            }
-        }
-    }
+    let n = T::bk_spgemm_merge(backend::active(), a_cols, a_vals, b, marks, touched, acc);
     let mut kept = 0usize;
     for &c in &touched[..n] {
         if spgemm_keeps(acc[c as usize], drop_tol) {
@@ -177,23 +167,8 @@ pub fn spgemm_row_numeric_tol<T: Scalar>(
     out_vals: &mut [T],
     drop_tol: f64,
 ) {
-    debug_assert_eq!(a_cols.len(), a_vals.len());
     debug_assert_eq!(out_cols.len(), out_vals.len());
-    let mut n = 0usize;
-    for (&k, &av) in a_cols.iter().zip(a_vals) {
-        let (bc, bv) = b.row(k as usize);
-        for (&c, &v) in bc.iter().zip(bv) {
-            let ci = c as usize;
-            if marks[ci] == 0 {
-                marks[ci] = 1;
-                touched[n] = c;
-                n += 1;
-                acc[ci] = av * v;
-            } else {
-                acc[ci] += av * v;
-            }
-        }
-    }
+    let n = T::bk_spgemm_merge(backend::active(), a_cols, a_vals, b, marks, touched, acc);
     let t = &mut touched[..n];
     t.sort_unstable();
     let mut x = 0usize;

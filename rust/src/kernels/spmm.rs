@@ -1,11 +1,12 @@
 //! CSR SpMM row kernel: `D[j, :] = Σ_k A[j, k] · D1[k, :]`.
 //!
 //! One row of the second operation (lines 8–11 of Listing 1 / 3). The
-//! inner `ccol` axpy is contiguous and auto-vectorized; the row gather
-//! over `A.i[j2]` is the irregular access that tile fusion turns into a
-//! cache hit by keeping the producing `D1` rows resident.
+//! inner `ccol` axpy is contiguous and vectorized (explicitly, via the
+//! dispatched backend); the row gather over `A.i[j2]` is the irregular
+//! access that tile fusion turns into a cache hit by keeping the
+//! producing `D1` rows resident.
 
-use super::JB;
+use super::backend::{self, Backend};
 use crate::core::{Dense, Scalar};
 use crate::sparse::Csr;
 
@@ -44,6 +45,9 @@ pub unsafe fn spmm_row_ptr<T: Scalar>(a: &Csr<T>, j: usize, d1: *const T, ccol: 
 ///   `stride = ` strip width, `i_base = tile.i_begin`, so workspace row
 ///   0 is the tile's first `D1` row).
 ///
+/// Dispatches to the active backend; see
+/// [`backend::scalar::spmm_row_strip`] for the reference body.
+///
 /// # Safety
 /// Every nonzero column `k` of `A`'s row `j` must satisfy
 /// `k >= i_base`, and `d1` must be valid for reads of
@@ -58,34 +62,24 @@ pub unsafe fn spmm_row_strip<T: Scalar>(
     i_base: usize,
     out: &mut [T],
 ) {
-    let w = out.len();
-    let (cols, vals) = a.row(j);
-    let mut x0 = 0;
-    while x0 + JB <= w {
-        let mut acc = [T::ZERO; JB];
-        for (&k, &v) in cols.iter().zip(vals) {
-            let src =
-                std::slice::from_raw_parts(d1.add((k as usize - i_base) * stride + x0), JB);
-            for x in 0..JB {
-                acc[x] += v * src[x];
-            }
-        }
-        out[x0..x0 + JB].copy_from_slice(&acc);
-        x0 += JB;
-    }
-    if x0 < w {
-        let rem = w - x0;
-        for v in &mut out[x0..] {
-            *v = T::ZERO;
-        }
-        for (&k, &v) in cols.iter().zip(vals) {
-            let src =
-                std::slice::from_raw_parts(d1.add((k as usize - i_base) * stride + x0), rem);
-            for x in 0..rem {
-                out[x0 + x] += v * src[x];
-            }
-        }
-    }
+    T::bk_spmm_row_strip(backend::active(), a, j, d1, stride, i_base, out);
+}
+
+/// [`spmm_row_strip`] on an explicit backend.
+///
+/// # Safety
+/// As [`spmm_row_strip`].
+#[inline]
+pub unsafe fn spmm_row_strip_with<T: Scalar>(
+    bk: &dyn Backend,
+    a: &Csr<T>,
+    j: usize,
+    d1: *const T,
+    stride: usize,
+    i_base: usize,
+    out: &mut [T],
+) {
+    T::bk_spmm_row_strip(bk, a, j, d1, stride, i_base, out);
 }
 
 /// Row-list form writing through a raw pointer to `D` (rows disjoint
@@ -110,6 +104,7 @@ pub unsafe fn spmm_rows<T: Scalar>(
 
 #[cfg(test)]
 mod tests {
+    use super::super::JB;
     use super::*;
     use crate::sparse::{gen, Pattern};
 

@@ -39,6 +39,11 @@
 //!                  the shared register-block width strips align to),
 //!                  plus [`kernels::spgemm`]: two-phase row-merge
 //!                  SpGEMM kernels for sparse-output multiplication.
+//!                  Kernel *bodies* live in [`kernels::backend`]: a
+//!                  scalar reference plus explicit-SIMD backends
+//!                  (SSE2/AVX), selected once per process by runtime
+//!                  CPU detection (`TF_BACKEND` overrides), all
+//!                  bitwise-interchangeable.
 //! - [`exec`]     — thread pool + the five pair executors (tile-fused,
 //!                  unfused, atomic tiling, overlapped tiling,
 //!                  tensor-compiler style) and [`exec::chain`]: the
@@ -65,7 +70,8 @@
 //!                  caches the winner alongside the schedule, and
 //!                  [`tuning::persist`] round-trips the tuned-pick
 //!                  table through a versioned sidecar file keyed by
-//!                  (pattern, shape, element width, thread count).
+//!                  (pattern, shape, element width, thread count,
+//!                  node count, kernel backend).
 //! - [`cachesim`] — set-associative LRU cache-hierarchy simulator (the
 //!                  PAPI substitute) for the AMT study.
 //! - [`simcore`]  — multicore execution model (potential gain, scaling).
@@ -117,6 +123,43 @@
 //! through the [`coordinator`] get this for free: the first execution
 //! of a (pattern, shape, precision) key autotunes the strip width and
 //! caches the pick alongside the schedule.
+//!
+//! ## Backends
+//!
+//! Every kernel above runs through a process-wide microkernel backend
+//! ([`kernels::backend`]): the scalar reference, `simd128` (SSE2, the
+//! x86-64 baseline) or `simd256` (AVX, runtime-detected). Nothing in
+//! the quickstart changes — dispatch resolves once, on first kernel
+//! use, to the widest ISA the host supports:
+//!
+//! ```no_run
+//! use tile_fusion::kernels::backend;
+//!
+//! // What will this process run? (Resolved once; logged by services.)
+//! println!("active backend: {}", backend::active().id());
+//! // What could it run? (The parity suite sweeps exactly this set.)
+//! for bk in backend::available() {
+//!     println!("  {} ({} B vectors)", bk.id(), bk.vector_bytes());
+//! }
+//! ```
+//!
+//! Semantics worth knowing:
+//!
+//! - **`TF_BACKEND=scalar|simd128|simd256`** forces a backend by name;
+//!   an unknown token or an ISA the host lacks falls back to detection
+//!   (never an error). The variable is read once per process.
+//! - **Backends are bitwise-interchangeable** — SIMD lanes map onto
+//!   distinct output columns of the [`kernels::JB`] register block, so
+//!   accumulation order per output is identical to the scalar loops
+//!   (no FMA contraction). Changing backends changes speed, never
+//!   results; `tests/backend_parity.rs` enforces this bit-for-bit.
+//! - **The scheduler sees the backend** — the Eq.-3 cost model adds a
+//!   backend-scaled compute term ([`scheduler::cost`]) and strip
+//!   candidates quantize to the backend's strip quantum, so tile and
+//!   strip decisions reflect the real flop rate. Tuned strip picks are
+//!   keyed by backend id and never seed across backends. (Relatedly,
+//!   `TF_REMOTE_PENALTY` overrides the multi-node remote-access
+//!   penalty weight — see [`scheduler::cost::remote_penalty_weight`].)
 //!
 //! ## Chains
 //!
@@ -344,8 +387,10 @@
 //! - **Tuned-pick persistence** — set `TF_TUNE_CACHE=<path>` (or call
 //!   `Server::{load_tuned, save_tuned}`) to round-trip the strip
 //!   autotuner's winners through a versioned sidecar keyed by
-//!   (pattern, shape, element width, thread count): a restarted
-//!   service replays known keys with zero timing runs.
+//!   (pattern, shape, element width, thread count, node count, kernel
+//!   backend): a restarted service replays known keys with zero timing
+//!   runs, and a pick tuned under one SIMD backend never seeds a
+//!   process running another.
 
 pub mod cachesim;
 pub mod coordinator;

@@ -15,10 +15,26 @@
 //!
 //! The returned unit is **bytes** so it compares directly against
 //! `cacheSize` (`L1 + L2 + L3/cores`, §4.1.1).
+//!
+//! Two optional refinements, both exactly zero-cost when disabled so the
+//! calibrated Eq.-3 values stay byte-exact:
+//!
+//! - **remote-access penalty** ([`CostModel::set_nodes`]): multi-node
+//!   runs scale element traffic by [`remote_penalty`], whose weight is
+//!   [`REMOTE_PENALTY_WEIGHT`] unless overridden via the
+//!   `TF_REMOTE_PENALTY` environment variable (a finite value in
+//!   `0.0..=8.0`, read once per process);
+//! - **compute term** ([`CostModel::set_backend`]): once the active
+//!   kernel backend is known, each element-unit of work also charges
+//!   [`COMPUTE_WEIGHT`] divided by the backend's per-element throughput,
+//!   so wider SIMD lowers the modelled cost of arithmetic relative to
+//!   traffic and the strip picker leans slightly wider.
 
 use super::FusionOp;
+use crate::kernels::backend::Backend;
 use crate::scheduler::schedule::Tile;
 use crate::sparse::Pattern;
+use std::sync::OnceLock;
 
 /// Reusable cost evaluator; the stamp array makes `uc` O(nnz in tile)
 /// across arbitrarily many queries without reallocation.
@@ -38,6 +54,9 @@ pub struct CostModel<'a> {
     /// Remote-access multiplier on the element traffic (1.0 = uniform
     /// memory); see [`CostModel::set_nodes`].
     node_penalty: f64,
+    /// Compute surcharge per byte of element traffic (0.0 = traffic-only
+    /// Eq. 3, the default); see [`CostModel::set_backend`].
+    flop_weight: f64,
 }
 
 const IDX_BYTES: usize = 4; // u32 column indices
@@ -49,14 +68,45 @@ const IDX_BYTES: usize = 4; // u32 column indices
 /// order of half again a local load on contemporary two-socket parts.
 pub const REMOTE_PENALTY_WEIGHT: f64 = 0.5;
 
+/// Weight of the backend-aware compute term: extra modelled bytes per
+/// byte of element traffic at scalar (one-element-per-step) throughput.
+/// A backend with `throughput` elements per step divides this, so on an
+/// 8-lane backend compute adds only 1/32 to the modelled cost while the
+/// scalar backend adds 1/4 — the strip picker then tolerates slightly
+/// wider strips on wide-SIMD hosts, where re-walking CSR structure per
+/// strip is relatively more expensive than the arithmetic.
+pub const COMPUTE_WEIGHT: f64 = 0.25;
+
+/// Validate a `TF_REMOTE_PENALTY` override string: a finite value in
+/// `0.0..=8.0` replaces [`REMOTE_PENALTY_WEIGHT`]; anything else
+/// (unset, unparsable, out of range) keeps the default. Pure so tests
+/// cover the policy without touching process environment.
+pub fn parse_remote_penalty_weight(raw: Option<&str>) -> f64 {
+    raw.and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|w| w.is_finite() && (0.0..=8.0).contains(w))
+        .unwrap_or(REMOTE_PENALTY_WEIGHT)
+}
+
+/// The effective remote-penalty weight: [`REMOTE_PENALTY_WEIGHT`] unless
+/// overridden via `TF_REMOTE_PENALTY` (read once per process), letting a
+/// deployment recalibrate to its interconnect without recompiling —
+/// `TF_REMOTE_PENALTY=0` disables the penalty entirely.
+pub fn remote_penalty_weight() -> f64 {
+    static WEIGHT: OnceLock<f64> = OnceLock::new();
+    *WEIGHT.get_or_init(|| {
+        parse_remote_penalty_weight(std::env::var("TF_REMOTE_PENALTY").ok().as_deref())
+    })
+}
+
 /// Expected element-traffic multiplier for an execution spanning
-/// `n_nodes` memory nodes: `1 + 0.5 · (1 − 1/n)`. Exactly 1.0 at one
-/// node, so single-node schedules are unchanged byte for byte.
+/// `n_nodes` memory nodes: `1 + weight · (1 − 1/n)` with `weight` from
+/// [`remote_penalty_weight`]. Exactly 1.0 at one node, so single-node
+/// schedules are unchanged byte for byte.
 pub fn remote_penalty(n_nodes: usize) -> f64 {
     if n_nodes <= 1 {
         1.0
     } else {
-        1.0 + REMOTE_PENALTY_WEIGHT * (1.0 - 1.0 / n_nodes as f64)
+        1.0 + remote_penalty_weight() * (1.0 - 1.0 / n_nodes as f64)
     }
 }
 
@@ -70,6 +120,7 @@ impl<'a> CostModel<'a> {
             epoch: 0,
             eval_width: None,
             node_penalty: 1.0,
+            flop_weight: 0.0,
         }
     }
 
@@ -90,6 +141,15 @@ impl<'a> CostModel<'a> {
         self.node_penalty = remote_penalty(n_nodes);
     }
 
+    /// Attach the kernel backend the schedule will execute on: element
+    /// traffic then also charges a compute term of
+    /// `COMPUTE_WEIGHT / throughput` per byte ([`COMPUTE_WEIGHT`]).
+    /// Never called → `flop_weight` stays 0.0 and costs remain the pure
+    /// Eq.-3 bytes, preserving the calibration exactly.
+    pub fn set_backend(&mut self, bk: &dyn Backend) {
+        self.flop_weight = COMPUTE_WEIGHT / bk.throughput(self.elem_bytes).max(1.0);
+    }
+
     /// Eq. 3 in bytes for one tile, at the current evaluation width.
     pub fn tile_cost(&mut self, tile: &Tile) -> usize {
         let w = self.eval_width.unwrap_or(self.op.ccol).min(self.op.ccol);
@@ -104,16 +164,20 @@ impl<'a> CostModel<'a> {
     }
 
     /// Combine [`CostModel::tile_cost_parts`] output into bytes at a
-    /// width, applying the remote-access penalty — the one place the
-    /// `cost(w) = penalty · elems · w · elem_bytes + idx` formula
-    /// lives, so the strip picker and the splitters always agree.
+    /// width, applying the remote-access penalty and the backend compute
+    /// term — the one place the
+    /// `cost(w) = (penalty + flop_weight) · elems · w · elem_bytes + idx`
+    /// formula lives, so the strip picker and the splitters always agree.
     pub fn cost_from_parts(&self, (elems, idx_bytes): (usize, usize), width: usize) -> usize {
         let elem_traffic = elems * width * self.elem_bytes;
-        let scaled = if self.node_penalty > 1.0 {
+        let mut scaled = if self.node_penalty > 1.0 {
             (elem_traffic as f64 * self.node_penalty).ceil() as usize
         } else {
             elem_traffic
         };
+        if self.flop_weight > 0.0 {
+            scaled += (elem_traffic as f64 * self.flop_weight).ceil() as usize;
+        }
         scaled + idx_bytes
     }
 
@@ -340,6 +404,45 @@ mod tests {
         // Back to one node restores the exact uniform cost.
         cm.set_nodes(1);
         assert_eq!(cm.tile_cost(&tile), 804);
+    }
+
+    #[test]
+    fn compute_term_is_opt_in_and_backend_scaled() {
+        use crate::kernels::backend::{self, BackendId};
+        let a = Pattern::eye(4);
+        let op = op_dense(&a, 8, 2);
+        let mut cm = CostModel::new(&op, 8);
+        let tile = Tile::new(0, 4, vec![0, 1, 2, 3]);
+        // Default: pure Eq.-3 bytes (see dense_b_cost_components).
+        assert_eq!(cm.tile_cost(&tile), 804);
+        // Scalar backend: throughput 1, so the element traffic (768
+        // bytes) charges an extra COMPUTE_WEIGHT · 768 = 192.
+        cm.set_backend(backend::by_id(BackendId::Scalar).unwrap());
+        assert_eq!(cm.tile_cost(&tile), 804 + 192);
+        // Wider backends divide the surcharge by their throughput.
+        for bk in backend::available() {
+            cm.set_backend(bk);
+            let surcharge = (768.0 * COMPUTE_WEIGHT / bk.throughput(8)).ceil() as usize;
+            assert_eq!(cm.tile_cost(&tile), 804 + surcharge, "{}", bk.id());
+            assert!(surcharge > 0, "compute term never free ({})", bk.id());
+        }
+        // Compute term stacks on top of the remote penalty, which still
+        // scales only the raw element traffic.
+        cm.set_backend(backend::by_id(BackendId::Scalar).unwrap());
+        cm.set_nodes(2);
+        assert_eq!(cm.tile_cost(&tile), (768.0f64 * 1.25).ceil() as usize + 192 + 36);
+    }
+
+    #[test]
+    fn remote_weight_parse_validates() {
+        assert_eq!(parse_remote_penalty_weight(None), REMOTE_PENALTY_WEIGHT);
+        assert_eq!(parse_remote_penalty_weight(Some("0.75")), 0.75);
+        assert_eq!(parse_remote_penalty_weight(Some(" 2 ")), 2.0);
+        assert_eq!(parse_remote_penalty_weight(Some("0")), 0.0);
+        assert_eq!(parse_remote_penalty_weight(Some("8")), 8.0);
+        for bad in ["", "x", "-0.1", "8.5", "NaN", "inf", "-inf", "1e999"] {
+            assert_eq!(parse_remote_penalty_weight(Some(bad)), REMOTE_PENALTY_WEIGHT, "{bad}");
+        }
     }
 
     #[test]

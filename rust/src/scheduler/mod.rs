@@ -23,7 +23,10 @@ pub use chain::{
     ChainPlan, ChainPlanner, ChainStats, ChainStepPlan, ChainStepSpec, DagNode, DagReads,
     DagStepDesc, DagStepKind, PlannedStep, StepBoundary, StepOutput, StepOutputMode,
 };
-pub use cost::{estimate_spgemm, remote_penalty, SpgemmEstimate};
+pub use cost::{
+    estimate_spgemm, parse_remote_penalty_weight, remote_penalty, remote_penalty_weight,
+    SpgemmEstimate,
+};
 pub use place::{decide_placement, Placement};
 pub use schedule::{FusedSchedule, ScheduleStats, Tile};
 
@@ -206,11 +209,17 @@ impl Scheduler {
         // the budget, before splitting: at GNN-scale ccol, splitting at
         // full width can only demote (a single first-op row already
         // overflows), while strip execution keeps those rows fused.
+        // Costs are backend-aware: the active kernel backend adds its
+        // compute term ([`cost::COMPUTE_WEIGHT`]) and quantizes strip
+        // candidates, so schedules — and tuned picks, which key on the
+        // backend id — follow the ISA the tiles will execute on.
+        let bk = crate::kernels::backend::active();
         let mut cm = cost::CostModel::new(op, p.elem_bytes);
         cm.set_nodes(p.n_nodes);
+        cm.set_backend(bk);
         let budget = p.cache_bytes;
         let strip = if allow_strips {
-            pick_strip_width(&mut cm, &cf.wf0, op.ccol, budget)
+            pick_strip_width(&mut cm, &cf.wf0, op.ccol, budget, bk.strip_quantum())
         } else {
             None
         };
@@ -300,12 +309,13 @@ impl Scheduler {
     }
 }
 
-/// Largest execution strip width (a multiple of [`crate::kernels::JB`])
+/// Largest execution strip width (a multiple of the active backend's
+/// strip `quantum`, [`crate::kernels::JB`] for every current backend)
 /// whose worst coarse-tile Eq.-3 cost fits `budget` — or `None` when
 /// full width already fits (no striping needed) or the dense width is
-/// at most one register block (nothing to strip). Falls back to one
-/// register block when even that overflows: narrower strips would
-/// defeat vectorization, and step-2 splitting picks up the rest.
+/// at most one quantum (nothing to strip). Falls back to one quantum
+/// when even that overflows: narrower strips would defeat
+/// vectorization, and step-2 splitting picks up the rest.
 ///
 /// Cost is affine in the width (`elems · w · elem_bytes + idx`), so one
 /// `tile_cost_parts` traversal per tile serves every candidate width.
@@ -314,28 +324,30 @@ fn pick_strip_width(
     coarse_wf0: &[Tile],
     ccol: usize,
     budget: usize,
+    quantum: usize,
 ) -> Option<usize> {
-    use crate::kernels::JB;
-    if ccol <= JB {
+    let q = quantum.max(1);
+    if ccol <= q {
         return None;
     }
     let parts: Vec<(usize, usize)> = coarse_wf0.iter().map(|t| cm.tile_cost_parts(t)).collect();
-    // `cost_from_parts` applies the remote-access penalty, so the strip
-    // picker and the splitters agree on multi-node costs.
+    // `cost_from_parts` applies the remote-access penalty and the
+    // backend compute term, so the strip picker and the splitters agree
+    // on the full cost.
     let cm = &*cm;
     let fits = |w: usize| parts.iter().all(|&pt| cm.cost_from_parts(pt, w) <= budget);
     if fits(ccol) {
         return None;
     }
-    // Widest JB multiple strictly below ccol, descending.
-    let mut w = (ccol - 1) / JB * JB;
-    while w > JB {
+    // Widest quantum multiple strictly below ccol, descending.
+    let mut w = (ccol - 1) / q * q;
+    while w > q {
         if fits(w) {
             return Some(w);
         }
-        w -= JB;
+        w -= q;
     }
-    Some(JB)
+    Some(q)
 }
 
 /// Eq. 2 over a wavefront-0 tile set.

@@ -33,14 +33,29 @@ use std::time::{Duration, Instant};
 /// `[Full]` — the model found the whole working set cache-resident, so
 /// there is nothing to time (and the tuner selects full width at small
 /// `ccol` by construction).
+///
+/// Candidates quantize to the *active backend's* strip quantum
+/// ([`crate::kernels::backend::Backend::strip_quantum`], `JB` today);
+/// [`strip_candidates_with`] is the pure core for an explicit quantum.
 pub fn strip_candidates(model_pick: Option<usize>, ccol: usize) -> Vec<StripMode> {
+    strip_candidates_with(model_pick, ccol, crate::kernels::backend::active().strip_quantum())
+}
+
+/// [`strip_candidates`] at an explicit strip quantum — pure, so the
+/// property suite can sweep quanta without touching backend dispatch.
+pub fn strip_candidates_with(
+    model_pick: Option<usize>,
+    ccol: usize,
+    quantum: usize,
+) -> Vec<StripMode> {
+    let q = quantum.max(1);
     let Some(w) = model_pick else {
         return vec![StripMode::Full];
     };
     let w = w.min(ccol);
     let mut out = vec![StripMode::Width(w)];
-    let half = w / 2 / JB * JB;
-    if half >= JB && half < w {
+    let half = w / 2 / q * q;
+    if half >= q && half < w {
         out.push(StripMode::Width(half));
     }
     let twice = 2 * w;

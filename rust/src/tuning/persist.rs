@@ -6,29 +6,39 @@
 //! service pays it again for every key it had already learned. The
 //! [`TuneTable`] is a versioned sidecar file of tuned picks, keyed by
 //! (pattern hash, operand shape, element width, **thread count**,
-//! **node count**): load-on-start seeds the schedule cache so known
-//! keys replay their winners with zero timing runs, best-effort
-//! write-on-shutdown saves what this process learned. Thread and node
-//! counts are part of the key because a pick timed on `p` workers over
-//! `n` memory nodes is not evidence about a differently shaped pool —
-//! a restarted service with a different pool retunes from scratch.
+//! **node count**, **kernel backend**): load-on-start seeds the
+//! schedule cache so known keys replay their winners with zero timing
+//! runs, best-effort write-on-shutdown saves what this process learned.
+//! Thread count, node count and backend are part of the key because a
+//! pick timed on `p` workers over `n` memory nodes with one ISA is not
+//! evidence about a differently shaped pool or a different vector width
+//! — a restarted service with a different shape retunes from scratch.
 //!
 //! The format is a line-oriented text table with a `tftune v<N>`
 //! header. Loading is best-effort by design: an unknown version yields
 //! an empty table (never an error — the file is a cache, not state),
-//! and malformed lines are skipped individually.
+//! and malformed lines are skipped individually. v1 files (no backend
+//! token) fall under the unknown-version rule: a sidecar written before
+//! the backend layer seeds nothing, rather than mislabelling scalar
+//! picks as evidence for a SIMD host.
 
 use crate::exec::StripMode;
+use crate::kernels::backend::BackendId;
 use std::collections::HashMap;
 use std::io;
 use std::path::Path;
 
 /// Sidecar format version; bump on any layout change so stale files
-/// degrade to a cold (empty) table instead of misreads.
-pub const TUNE_TABLE_VERSION: u32 = 1;
+/// degrade to a cold (empty) table instead of misreads. v2 added the
+/// backend token.
+pub const TUNE_TABLE_VERSION: u32 = 2;
 
 /// Everything a tuned pick's validity depends on.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+///
+/// Field order is the sidecar's sort order (`Ord` is derived), so
+/// rendered files group by pattern, then shape, then pool, then
+/// backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct TuneKey {
     /// `Pattern::structure_hash` of `A`.
     pub a_hash: u64,
@@ -48,6 +58,12 @@ pub struct TuneKey {
     /// thread count (perf-stale only — results are bitwise-identical
     /// at any width).
     pub n_nodes: usize,
+    /// Kernel backend the pick was timed on: strip-width economics
+    /// differ with vector width (wider SIMD shrinks the compute share,
+    /// shifting the best width), so a pick tuned under one backend
+    /// seeds nothing under another. Perf-stale only, like `n_nodes` —
+    /// backends are bitwise-equal.
+    pub backend: BackendId,
 }
 
 /// The tuned-pick table a sidecar file round-trips.
@@ -86,6 +102,7 @@ fn parse_line(line: &str) -> Option<(TuneKey, StripMode)> {
         elem_bytes: it.next()?.parse().ok()?,
         n_threads: it.next()?.parse().ok()?,
         n_nodes: it.next()?.parse().ok()?,
+        backend: BackendId::parse(it.next()?)?,
     };
     let mode = parse_mode(it.next()?)?;
     if it.next().is_some() {
@@ -126,13 +143,11 @@ impl TuneTable {
     /// Serialize to sidecar text (sorted, so writes are reproducible).
     pub fn render(&self) -> String {
         let mut entries: Vec<(&TuneKey, &StripMode)> = self.entries.iter().collect();
-        entries.sort_by_key(|(k, _)| {
-            (k.a_hash, k.b_key, k.b_sparse, k.ccol, k.elem_bytes, k.n_threads, k.n_nodes)
-        });
+        entries.sort_by_key(|(k, _)| **k);
         let mut out = format!("tftune v{TUNE_TABLE_VERSION}\n");
         for (k, m) in entries {
             out.push_str(&format!(
-                "{} {} {} {} {} {} {} {}\n",
+                "{} {} {} {} {} {} {} {} {}\n",
                 k.a_hash,
                 k.b_key,
                 u8::from(k.b_sparse),
@@ -140,6 +155,7 @@ impl TuneTable {
                 k.elem_bytes,
                 k.n_threads,
                 k.n_nodes,
+                k.backend.as_str(),
                 mode_str(*m)
             ));
         }
@@ -156,10 +172,10 @@ impl TuneTable {
 
     /// Merge-save: overlay this table's entries onto whatever the
     /// sidecar already holds (this table wins on key collisions), then
-    /// write the union. Keys carry the pool shape, so one sidecar can
-    /// hold picks for several (thread-count, node-count) shapes — a
-    /// differently shaped process's shutdown must not erase them.
-    /// Returns how many entries the written file holds.
+    /// write the union. Keys carry the pool shape and backend, so one
+    /// sidecar can hold picks for several (thread-count, node-count,
+    /// backend) shapes — a differently shaped process's shutdown must
+    /// not erase them. Returns how many entries the written file holds.
     pub fn save_merged(&self, path: &Path) -> io::Result<usize> {
         let mut merged = Self::load(path).unwrap_or_default();
         for (k, m) in &self.entries {
@@ -183,6 +199,7 @@ mod tests {
             elem_bytes: 8,
             n_threads: 4,
             n_nodes: 1,
+            backend: BackendId::Scalar,
         }
     }
 
@@ -202,13 +219,30 @@ mod tests {
     }
 
     #[test]
+    fn round_trips_every_backend() {
+        let mut t = TuneTable::default();
+        for (i, id) in BackendId::ALL.iter().enumerate() {
+            t.entries.insert(TuneKey { backend: *id, ..key(1) }, StripMode::Width(32 * (i + 1)));
+        }
+        let back = TuneTable::parse(&t.render());
+        assert_eq!(back.entries.len(), BackendId::ALL.len(), "one entry per backend");
+        for (i, id) in BackendId::ALL.iter().enumerate() {
+            let k = TuneKey { backend: *id, ..key(1) };
+            assert_eq!(back.entries[&k], StripMode::Width(32 * (i + 1)));
+        }
+    }
+
+    #[test]
     fn unknown_version_degrades_to_empty() {
         let mut t = TuneTable::default();
         t.entries.insert(key(1), StripMode::Width(32));
-        let text = t.render().replacen("tftune v1", "tftune v999", 1);
+        let text = t.render().replacen("tftune v2", "tftune v999", 1);
         assert!(TuneTable::parse(&text).entries.is_empty());
         assert!(TuneTable::parse("").entries.is_empty());
-        assert!(TuneTable::parse("garbage\n1 2 0 4 8 2 1 full\n").entries.is_empty());
+        assert!(TuneTable::parse("garbage\n1 2 0 4 8 2 1 scalar full\n").entries.is_empty());
+        // A v1 sidecar (pre-backend layout) must seed nothing: the
+        // cross-backend no-seed guarantee covers pre-versioned files.
+        assert!(TuneTable::parse("tftune v1\n1 2 0 4 8 2 1 full\n").entries.is_empty());
     }
 
     #[test]
@@ -217,12 +251,14 @@ mod tests {
             "tftune v{TUNE_TABLE_VERSION}\n\
              # comment\n\
              \n\
-             1 11 0 64 8 4 1 full\n\
+             1 11 0 64 8 4 1 scalar full\n\
              not a line\n\
-             2 12 1 64 8 4 2 48\n\
-             3 13 2 64 8 4 1 full\n\
-             4 14 0 64 8 4 1 full extra\n\
-             5 15 0 64 8 4 1 maybe\n"
+             2 12 1 64 8 4 2 simd256 48\n\
+             3 13 2 64 8 4 1 scalar full\n\
+             4 14 0 64 8 4 1 scalar full extra\n\
+             5 15 0 64 8 4 1 scalar maybe\n\
+             6 16 0 64 8 4 1 avx512 full\n\
+             7 17 0 64 8 4 1 full\n"
         );
         let t = TuneTable::parse(&text);
         assert_eq!(t.entries.len(), 2, "only the two well-formed lines survive");
@@ -234,7 +270,8 @@ mod tests {
                 ccol: 64,
                 elem_bytes: 8,
                 n_threads: 4,
-                n_nodes: 2
+                n_nodes: 2,
+                backend: BackendId::Simd256
             }],
             StripMode::Width(48)
         );
@@ -263,10 +300,15 @@ mod tests {
         let back = TuneTable::load(&path).unwrap();
         assert_eq!(back.entries[&ka], StripMode::Width(32));
         assert_eq!(back.entries[&kb], StripMode::Full);
-        // Collisions: the saving table wins.
+        // A different-backend process's shutdown must not erase either.
+        let kc = TuneKey { backend: BackendId::Simd128, ..ka };
         let mut tc = TuneTable::default();
-        tc.entries.insert(ka, StripMode::Full);
-        assert_eq!(tc.save_merged(&path).unwrap(), 2);
+        tc.entries.insert(kc, StripMode::Width(64));
+        assert_eq!(tc.save_merged(&path).unwrap(), 3, "backends coexist in one sidecar");
+        // Collisions: the saving table wins.
+        let mut td = TuneTable::default();
+        td.entries.insert(ka, StripMode::Full);
+        assert_eq!(td.save_merged(&path).unwrap(), 3);
         assert_eq!(TuneTable::load(&path).unwrap().entries[&ka], StripMode::Full);
         let _ = std::fs::remove_file(&path);
     }
