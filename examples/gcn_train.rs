@@ -12,7 +12,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 use tile_fusion::gnn::model::{accuracy, GcnMode};
-use tile_fusion::gnn::{Gcn, SyntheticGraph};
+use tile_fusion::gnn::{GatLayer, Gcn, SyntheticGraph};
 use tile_fusion::harness;
 use tile_fusion::prelude::*;
 
@@ -51,7 +51,7 @@ fn main() {
     );
 
     // --- unfused comparison run (identical math, identical seeds) ------
-    let mut baseline = Gcn::new(a, &[feat, hidden, classes], 3, GcnMode::Unfused);
+    let mut baseline = Gcn::new(Arc::clone(&a), &[feat, hidden, classes], 3, GcnMode::Unfused);
     let t1 = Instant::now();
     for _ in 0..epochs {
         baseline.train_step(&pool, &g.features, &g.labels, 1.0);
@@ -65,6 +65,28 @@ fn main() {
     );
     let (hits, misses) = model.cache_stats();
     println!("schedule cache: {misses} builds amortized over {hits} reuses");
+
+    // --- GAT-style attention forward: one fused chain per pass ---------
+    // [FlowAMulB(Wq), Attention(Â-pattern, K, V)] — scores stay in
+    // per-worker strips; the result must match the dense oracle bitwise.
+    let mut gat = GatLayer::new(Arc::clone(&a), feat, 32, classes, 11);
+    let expect = gat.forward_reference(&g.features);
+    let reps = 10usize;
+    let t2 = Instant::now();
+    let mut att = gat.forward(&pool, &g.features);
+    for _ in 1..reps {
+        att = gat.forward(&pool, &g.features);
+    }
+    let gat_time = t2.elapsed();
+    assert!(
+        att.data.iter().zip(&expect.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "fused attention chain must match the dense oracle bitwise"
+    );
+    println!(
+        "gat:     {reps} fused attention forwards in {:.2} s ({:.1} ms/pass), bitwise vs oracle",
+        gat_time.as_secs_f64(),
+        gat_time.as_secs_f64() * 1e3 / reps as f64
+    );
 
     // --- persist the loss curve ----------------------------------------
     let rows: Vec<String> =

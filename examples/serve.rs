@@ -77,13 +77,39 @@ struct Graph {
     b: Dense<f64>,
     w1: Dense<f64>,
     w2: Dense<f64>,
+    k: Dense<f64>,
+    v: Dense<f64>,
 }
 
 struct Counters {
     pairs: AtomicU64,
     chains: AtomicU64,
+    attns: AtomicU64,
     busy: AtomicU64,
     mismatches: AtomicU64,
+}
+
+/// Serial oracle for the attention chain — SDDMM, row softmax, then the
+/// weighted combine in edge order, matching the fused executor bitwise.
+fn attention_reference(
+    s: &Pattern,
+    q: &Dense<f64>,
+    k: &Dense<f64>,
+    v: &Dense<f64>,
+) -> Dense<f64> {
+    let mut p = tile_fusion::kernels::sddmm(s, q, k);
+    let mut out = Dense::<f64>::zeros(s.rows, v.cols);
+    for i in 0..s.rows {
+        let (lo, hi) = (s.indptr[i], s.indptr[i + 1]);
+        tile_fusion::kernels::softmax_row(&mut p.data[lo..hi]);
+        let (cols, vals) = p.row(i);
+        for (&c, &pv) in cols.iter().zip(vals) {
+            for (o, &x) in out.row_mut(i).iter_mut().zip(v.row(c as usize)) {
+                *o += pv * x;
+            }
+        }
+    }
+    out
 }
 
 fn main() {
@@ -112,18 +138,23 @@ fn main() {
             let b = Dense::<f64>::randn(a.cols(), BCOL, 200 + i as u64);
             let w1 = Dense::<f64>::randn(BCOL, HIDDEN, 300 + i as u64);
             let w2 = Dense::<f64>::randn(HIDDEN, CLASSES, 400 + i as u64);
+            let k = Dense::<f64>::randn(a.cols(), BCOL, 500 + i as u64);
+            let v = Dense::<f64>::randn(a.cols(), CLASSES, 600 + i as u64);
             srv.register_matrix(format!("g{i}"), a.clone());
             srv.register_dense(format!("b{i}"), b.clone());
             srv.register_dense(format!("w1_{i}"), w1.clone());
             srv.register_dense(format!("w2_{i}"), w2.clone());
+            srv.register_dense(format!("k{i}"), k.clone());
+            srv.register_dense(format!("v{i}"), v.clone());
             println!("registered {name:<8} {} nodes, {} nnz", a.rows(), a.nnz());
-            Graph { name: name.into(), a, b, w1, w2 }
+            Graph { name: name.into(), a, b, w1, w2, k, v }
         })
         .collect();
 
     let counters = Counters {
         pairs: AtomicU64::new(0),
         chains: AtomicU64::new(0),
+        attns: AtomicU64::new(0),
         busy: AtomicU64::new(0),
         mismatches: AtomicU64::new(0),
     };
@@ -218,6 +249,66 @@ fn main() {
                             }
                         }
                         counters.pairs.fetch_add(1, Ordering::Relaxed);
+                    } else if rng.next_bool(0.3) {
+                        // Sparse-attention forward as one bulk chain: the
+                        // flow input is Q, the registered K/V pair are the
+                        // step's stationary operands, and the n×n score
+                        // matrix never materializes server-side.
+                        let q = Dense::<f64>::randn(g.a.rows(), BCOL, rng.next_u64());
+                        let req = ChainRequest {
+                            steps: vec![ChainStepReq {
+                                a: format!("g{gi}"),
+                                operand: StepOperand::Attention(
+                                    format!("k{gi}"),
+                                    format!("v{gi}"),
+                                ),
+                                strategy: None,
+                            }],
+                            xs: vec![q.clone()],
+                            xs_sparse: Vec::new(),
+                            strategy: Strategy::TileFusion,
+                        };
+                        let ticket =
+                            match srv.submit_chain(tenant as u64, Priority::Bulk, req) {
+                                Ok(t) => t,
+                                Err(ServiceError::BusyQueue | ServiceError::BusyTenant) => {
+                                    counters.busy.fetch_add(1, Ordering::Relaxed);
+                                    std::thread::yield_now();
+                                    continue;
+                                }
+                                Err(e) => panic!("tenant {tenant}: admission failed: {e}"),
+                            };
+                        let reply = ticket
+                            .wait_timeout(TICKET_TIMEOUT)
+                            .unwrap_or_else(|_| {
+                                panic!("tenant {tenant}: attention ticket stranded (deadlock?)")
+                            })
+                            .unwrap_or_else(|e| {
+                                panic!("tenant {tenant}: attention rejected: {e}")
+                            });
+                        latencies_ms
+                            .lock()
+                            .unwrap()
+                            .push(t_req.elapsed().as_secs_f64() * 1e3);
+                        assert_eq!(reply.ds[0].rows, g.a.rows());
+                        assert_eq!(reply.ds[0].cols, CLASSES);
+                        if check {
+                            let expect = attention_reference(&g.a.pattern, &q, &g.k, &g.v);
+                            let bitwise = reply.ds[0]
+                                .data
+                                .iter()
+                                .zip(&expect.data)
+                                .all(|(x, y)| x.to_bits() == y.to_bits());
+                            if !bitwise {
+                                eprintln!(
+                                    "MISMATCH attention {} tenant {tenant} diff {}",
+                                    g.name,
+                                    reply.ds[0].max_abs_diff(&expect)
+                                );
+                                counters.mismatches.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        counters.attns.fetch_add(1, Ordering::Relaxed);
                     } else {
                         // 2-layer GCN forward as one bulk chain.
                         let x = Dense::<f64>::randn(g.a.rows(), BCOL, rng.next_u64());
@@ -280,9 +371,10 @@ fn main() {
 
     let pairs = counters.pairs.load(Ordering::Relaxed);
     let chains = counters.chains.load(Ordering::Relaxed);
+    let attns = counters.attns.load(Ordering::Relaxed);
     let busy = counters.busy.load(Ordering::Relaxed);
     let mismatches = counters.mismatches.load(Ordering::Relaxed);
-    let total = pairs + chains;
+    let total = pairs + chains + attns;
     let mut lat = latencies_ms.into_inner().unwrap();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |q: f64| {
@@ -301,7 +393,7 @@ fn main() {
         if args.soak_secs.is_some() { " (soak)" } else { "" }
     );
     println!(
-        "completed         : {total} requests in {wall:.2} s  ({:.1} req/s) — {pairs} pairs, {chains} chains",
+        "completed         : {total} requests in {wall:.2} s  ({:.1} req/s) — {pairs} pairs, {chains} chains, {attns} attention chains",
         total as f64 / wall
     );
     println!("latency p50/p90/p99: {:.2} / {:.2} / {:.2} ms", pct(0.5), pct(0.9), pct(0.99));
@@ -321,6 +413,10 @@ fn main() {
     println!(
         "schedule cache    : {} builds, {} hits, {} strip tunes",
         metrics.total_schedule_builds, metrics.schedule_cache_hits, metrics.strip_tunes
+    );
+    println!(
+        "attention         : {} SDDMM-kind steps bound, {} transpose-cache hits",
+        metrics.sddmm_steps, metrics.transpose_cache_hits
     );
 
     // Hard gates the CI soak keys on.

@@ -133,7 +133,7 @@ fn main() {
     let ops: Vec<ChainStepOp<f64>> = (0..pairs_per_call)
         .map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
         .collect();
-    let mut chain = ChainExec::plan_and_build(ops, n, rhs, params).expect("bind solver chain");
+    let mut chain = ChainBuilder::dense(n, rhs).steps(ops).build(params).expect("bind solver chain");
     let xc = Dense::<f64>::randn(n, rhs, 42);
     let mut yc = Dense::<f64>::zeros(n, rhs);
     chain.run(&pool, &xc, &mut yc); // yc = Â(Â(Â(Â xc)))
@@ -171,11 +171,10 @@ fn main() {
     // --- output-format decision (sparse at Laplacian densities).
     use tile_fusion::scheduler::chain::StepOutputMode;
     let xs = Arc::new(xc.clone());
-    let spgemm_ops = vec![
-        ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::Auto },
-        ChainStepOp::FlowAMulB { b: Arc::clone(&xs) },
-    ];
-    let mut spgemm_chain = ChainExec::plan_and_build_sparse(spgemm_ops, n, n, a.nnz(), params)
+    let mut spgemm_chain = ChainBuilder::sparse(n, n, a.nnz())
+        .step(ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::Auto })
+        .step(ChainStepOp::FlowAMulB { b: Arc::clone(&xs) })
+        .build(params)
         .expect("bind spgemm chain");
     let mut ys = Dense::<f64>::zeros(n, rhs);
     spgemm_chain.run_sparse(&pool, &a, &mut ys); // ys = (Â·Â)·xs

@@ -49,10 +49,10 @@ fn main() {
     let mut csv = Vec::new();
     for &depth in depths {
         let mut barriered =
-            ChainExec::plan_and_build(mk_ops(depth), n, rhs, params).expect("bind chain");
+            ChainBuilder::dense(n, rhs).steps(mk_ops(depth)).build(params).expect("bind chain");
         barriered.force_barriers();
         let mut pipelined =
-            ChainExec::plan_and_build(mk_ops(depth), n, rhs, params).expect("bind chain");
+            ChainBuilder::dense(n, rhs).steps(mk_ops(depth)).build(params).expect("bind chain");
         let overlap = pipelined.can_pipeline();
 
         // Bitwise equality first (any scale): both arms run the same

@@ -1,0 +1,149 @@
+//! Figure 20 (repo extension): fused sparse attention
+//! (SDDMM→row-softmax→SpMM as one `ChainExec` step, scores living in a
+//! per-worker cache-resident strip) vs the three-call unfused sequence
+//! (materialize the score CSR, softmax sweep, SpMM) over the same
+//! pattern — the locality argument of the paper applied to the
+//! attention trio instead of the multiplication pair.
+//!
+//! Expectation (acceptance): at full scale the fused step is at least
+//! 1.2× the three-call sequence (best case across the sweep — tiny
+//! head dims amortize the strip setup less). Both arms are asserted
+//! bitwise-identical first: the fused step runs the same kernels per
+//! output row, it just never lets the scores leave the strip.
+//!
+//! `--smoke` runs a tiny shape for CI bitrot checks (equality still
+//! asserted, no speedup assertion).
+
+use std::sync::Arc;
+use tile_fusion::exec::spgemm::run_sparse_times_dense;
+use tile_fusion::exec::run_sddmm;
+use tile_fusion::harness::{bench_params, print_table, write_csv, BenchEnv};
+use tile_fusion::kernels::softmax_row;
+use tile_fusion::prelude::*;
+use tile_fusion::profiling;
+use tile_fusion::sparse::gen::SuiteScale;
+
+/// Row-disjoint mutable access for the parallel softmax sweep.
+struct RowPtr<T>(*mut T);
+unsafe impl<T> Send for RowPtr<T> {}
+unsafe impl<T> Sync for RowPtr<T> {}
+
+/// The unfused three-call sequence: SDDMM into a materialized score
+/// CSR, a parallel row-softmax sweep over it, then the SpMM.
+fn unfused_attention(
+    pool: &ThreadPool,
+    s: &Pattern,
+    q: &Dense<f64>,
+    k: &Dense<f64>,
+    v: &Dense<f64>,
+    scores: &mut Csr<f64>,
+    out: &mut Dense<f64>,
+) {
+    run_sddmm(pool, s, q, k, scores);
+    let data = RowPtr(scores.data.as_mut_ptr());
+    let indptr = &scores.pattern.indptr;
+    pool.parallel_for_chunks(s.rows, 64, |r, _| {
+        for i in r {
+            let (lo, hi) = (indptr[i], indptr[i + 1]);
+            // SAFETY: rows own disjoint `data[lo..hi]` value ranges.
+            let row = unsafe { std::slice::from_raw_parts_mut(data.0.add(lo), hi - lo) };
+            softmax_row(row);
+        }
+    });
+    run_sparse_times_dense(pool, scores, v, out);
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let env = BenchEnv::from_env();
+    let (n, ds): (usize, &[usize]) = if smoke {
+        (256, &[16])
+    } else {
+        match env.scale {
+            SuiteScale::Small => (4096, &[32, 128]),
+            SuiteScale::Bench => (8192, &[32, 128]),
+        }
+    };
+    let pool = ThreadPool::new(env.threads);
+    let params = bench_params::<f64>(env.threads);
+
+    let mut table = Vec::new();
+    let mut csv = Vec::new();
+    let mut best = 0.0f64;
+
+    let patterns: Vec<(&str, Pattern)> = vec![
+        ("er-avg4", gen::erdos_renyi(n, 4, 7)),
+        ("er-avg16", gen::erdos_renyi(n, 16, 8)),
+        ("rmat-avg8", gen::rmat(n.next_power_of_two(), 8, RmatKind::Graph500, 9)),
+    ];
+    for (name, pat) in patterns {
+        let rows = pat.rows;
+        let s = Arc::new(Csr::<f64>::with_random_values(pat, 1, -1.0, 1.0));
+        for &d in ds {
+            let k = Arc::new(Dense::<f64>::randn(s.cols(), d, 2));
+            let v = Arc::new(Dense::<f64>::randn(s.cols(), d, 3));
+            let q = Dense::<f64>::randn(rows, d, 4);
+
+            let mut chain = ChainBuilder::dense(rows, d)
+                .step(ChainStepOp::Attention {
+                    s: Arc::clone(&s),
+                    k: Arc::clone(&k),
+                    v: Arc::clone(&v),
+                })
+                .build(params)
+                .expect("bind attention chain");
+            let mut fused_out = Dense::<f64>::zeros(rows, d);
+            let mut unfused_out = Dense::<f64>::zeros(rows, d);
+            let mut scores = Csr::<f64>::empty(0, 0);
+
+            // Bitwise equality first (any scale): same kernel sequence
+            // per output row, only the score residency differs.
+            chain.run(&pool, &q, &mut fused_out);
+            unfused_attention(&pool, &s.pattern, &q, &k, &v, &mut scores, &mut unfused_out);
+            assert!(
+                fused_out.data.iter().zip(&unfused_out.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "fused attention must be bitwise-equal to the unfused sequence ({name}, d={d})"
+            );
+
+            let t_fused = profiling::measure(1, env.reps, || chain.run(&pool, &q, &mut fused_out))
+                .as_secs_f64();
+            let t_unf = profiling::measure(1, env.reps, || {
+                unfused_attention(&pool, &s.pattern, &q, &k, &v, &mut scores, &mut unfused_out)
+            })
+            .as_secs_f64();
+            let speedup = t_unf / t_fused;
+            best = best.max(speedup);
+            // 2·nnz·d (SDDMM) + 2·nnz·d (SpMM); the softmax sweep is
+            // O(nnz) and left out of the FLOP count.
+            let flops = (4 * s.nnz() * d) as f64;
+            table.push(vec![
+                name.to_string(),
+                d.to_string(),
+                format!("{:.3}", t_unf * 1e3),
+                format!("{:.3}", t_fused * 1e3),
+                format!("{:.2}", flops / t_fused / 1e9),
+                format!("{speedup:.2}x"),
+            ]);
+            csv.push(format!("{name},{},{d},{t_unf:.6},{t_fused:.6}", s.nnz()));
+            assert!(t_fused > 0.0 && t_unf > 0.0, "both arms ran");
+        }
+    }
+
+    print_table(
+        &format!("Figure 20 — fused sparse attention vs three-call sequence (f64, n={n})"),
+        &["matrix", "d", "unfused ms", "fused ms", "fused GF/s", "speedup"],
+        &table,
+    );
+    write_csv("fig20_sddmm_attention", "matrix,nnz,d,t_unfused,t_fused", &csv);
+
+    if smoke {
+        println!("smoke OK: fused and unfused attention agree bitwise");
+    } else {
+        println!("best fused-over-unfused speedup: {best:.2}x");
+        assert!(
+            best >= 1.2,
+            "fused attention must reach ≥ 1.2x the unfused sequence somewhere \
+             in the sweep: best {best:.2}x"
+        );
+    }
+}

@@ -1,9 +1,13 @@
 //! Schedule cache: one inspection per (sparsity pattern, operand shape),
 //! bounded by an LRU capacity, with the autotuner's strip-width pick
-//! riding in the same entry as the schedule it tunes.
+//! riding in the same entry as the schedule it tunes. Transposed
+//! sampling patterns (`Sᵀ` for SDDMM/attention tenants) are cached here
+//! too, keyed by [`Pattern::structure_hash`] — structural work, like
+//! scheduling, is paid once per pattern, not once per request.
 
 use crate::exec::StripMode;
 use crate::scheduler::{FusedSchedule, FusionOp, Scheduler, SchedulerParams};
+use crate::sparse::Pattern;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, MutexGuard};
 
@@ -107,6 +111,11 @@ impl TuneCell {
     }
 }
 
+struct TransEntry {
+    pattern: Arc<Pattern>,
+    last_used: u64,
+}
+
 struct Entry {
     schedule: Arc<FusedSchedule>,
     /// The autotuner's strip pick for this (pattern, shape, precision)
@@ -129,12 +138,20 @@ pub struct ScheduleCache {
     /// rebuilt entry re-seeds) and are superseded by fresher in-process
     /// picks in [`ScheduleCache::tuned_snapshot`].
     seeds: HashMap<ScheduleKey, StripMode>,
+    /// Transposed patterns keyed by the source pattern's
+    /// `structure_hash` (own LRU pool, same capacity bound).
+    transposes: HashMap<u64, TransEntry>,
     capacity: usize,
     clock: u64,
     pub hits: u64,
     pub misses: u64,
     /// Entries dropped by the capacity bound (a Metrics counter).
     pub evictions: u64,
+    /// [`ScheduleCache::transpose_of`] lookups served from the cache.
+    pub transpose_hits: u64,
+    /// [`ScheduleCache::transpose_of`] lookups that ran the counting
+    /// sort.
+    pub transpose_misses: u64,
 }
 
 impl ScheduleCache {
@@ -150,11 +167,14 @@ impl ScheduleCache {
             params,
             map: HashMap::new(),
             seeds: HashMap::new(),
+            transposes: HashMap::new(),
             capacity: capacity.max(1),
             clock: 0,
             hits: 0,
             misses: 0,
             evictions: 0,
+            transpose_hits: 0,
+            transpose_misses: 0,
         }
     }
 
@@ -321,6 +341,36 @@ impl ScheduleCache {
         Some(Arc::clone(&entry.tune))
     }
 
+    /// The transpose of `p`, computed on first sight and served from
+    /// the cache afterwards (keyed by [`Pattern::structure_hash`], so
+    /// structurally identical patterns share one `Sᵀ` regardless of
+    /// allocation identity). Bounded by the cache capacity with LRU
+    /// eviction, like schedules.
+    pub fn transpose_of(&mut self, p: &Pattern) -> Arc<Pattern> {
+        let key = p.structure_hash();
+        self.clock += 1;
+        if let Some(e) = self.transposes.get_mut(&key) {
+            e.last_used = self.clock;
+            self.transpose_hits += 1;
+            return Arc::clone(&e.pattern);
+        }
+        self.transpose_misses += 1;
+        if self.transposes.len() >= self.capacity {
+            if let Some(lru) = self
+                .transposes
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            {
+                self.transposes.remove(&lru);
+            }
+        }
+        let t = Arc::new(crate::kernels::pattern_transpose(p));
+        self.transposes
+            .insert(key, TransEntry { pattern: Arc::clone(&t), last_used: self.clock });
+        t
+    }
+
     pub fn len(&self) -> usize {
         self.map.len()
     }
@@ -329,9 +379,11 @@ impl ScheduleCache {
         self.map.is_empty()
     }
 
-    /// Drop every cached schedule (e.g. after a repattern).
+    /// Drop every cached schedule and transposed pattern (e.g. after a
+    /// repattern).
     pub fn clear(&mut self) {
         self.map.clear();
+        self.transposes.clear();
     }
 }
 
@@ -417,6 +469,29 @@ impl ShardedScheduleCache {
     /// Total evictions across partitions.
     pub fn evictions(&self) -> u64 {
         self.parts.iter().map(|p| p.lock().unwrap().evictions).sum()
+    }
+
+    /// Lock the partition owning `pat`'s transpose entry (routed by
+    /// `structure_hash`, so repeated requests for one sampling pattern
+    /// always land on the same partition's cached `Sᵀ`).
+    pub fn lock_for_pattern(&self, pat: &Pattern) -> MutexGuard<'_, ScheduleCache> {
+        let idx = if self.parts.len() == 1 {
+            0
+        } else {
+            (pat.structure_hash() % self.parts.len() as u64) as usize
+        };
+        self.parts[idx].lock().unwrap()
+    }
+
+    /// Total (hits, misses) of the transpose cache across partitions.
+    pub fn transpose_stats(&self) -> (u64, u64) {
+        let mut out = (0u64, 0u64);
+        for p in &self.parts {
+            let c = p.lock().unwrap();
+            out.0 += c.transpose_hits;
+            out.1 += c.transpose_misses;
+        }
+        out
     }
 
     /// Route every matching pick in `table` to its owning partition
@@ -610,6 +685,36 @@ mod tests {
 
         // The slot is the entry's: a fresh lookup sees the same cell.
         assert!(Arc::ptr_eq(&cell_x, &cache.tune_cell(&op_x).unwrap()));
+    }
+
+    #[test]
+    fn transpose_cache_serves_structural_twins_and_bounds_itself() {
+        let mut cache = ScheduleCache::with_capacity(SchedulerParams::default(), 2);
+        let p1 = gen::uniform_random(24, 16, 3, 7);
+        let p2 = gen::uniform_random(24, 16, 3, 7); // identical structure, new alloc
+        let t1 = cache.transpose_of(&p1);
+        let t2 = cache.transpose_of(&p2);
+        assert!(Arc::ptr_eq(&t1, &t2), "structural twins share one transpose");
+        assert_eq!((cache.transpose_hits, cache.transpose_misses), (1, 1));
+        assert_eq!(*t1, p1.transpose());
+        // Distinct patterns evict LRU-style at the capacity bound; the
+        // evicted transpose is recomputed on return, not served stale.
+        let p3 = gen::banded(24, &[1]);
+        let p4 = gen::banded(24, &[1, 2]);
+        cache.transpose_of(&p3);
+        cache.transpose_of(&p4); // evicts p1's entry (capacity 2)
+        cache.transpose_of(&p1);
+        assert_eq!(cache.transpose_misses, 4);
+        cache.clear();
+        cache.transpose_of(&p1);
+        assert_eq!(cache.transpose_misses, 5, "clear() drops transposes too");
+
+        // Sharded routing: one pattern always lands on one partition.
+        let sharded = ShardedScheduleCache::with_capacity(SchedulerParams::default(), 4, 16);
+        let s1 = sharded.lock_for_pattern(&p1).transpose_of(&p1);
+        let s2 = sharded.lock_for_pattern(&p1).transpose_of(&p1);
+        assert!(Arc::ptr_eq(&s1, &s2));
+        assert_eq!(sharded.transpose_stats(), (1, 1));
     }
 
     #[test]

@@ -66,11 +66,12 @@ use super::service::{execute_pair_batch, Metrics, Strategy};
 use super::ticket::{ticket, ServiceError, Ticket, TicketTx};
 use crate::core::{Dense, Scalar};
 use crate::exec::chain::{
-    chain_specs, ChainExec, ChainIn, ChainOut, ChainStepOp, StepControl, StepStrategy,
+    chain_specs, ChainBuilder, ChainExec, ChainIn, ChainOut, ChainStepOp, StepControl,
+    StepStrategy,
 };
 use crate::exec::{Fused, PairExec, PairOp, PoolLease, SharedPool, StripMode, ThreadPool};
 use crate::scheduler::chain::{
-    unfused_schedule, ChainInputMeta, ChainPlanner, ChainStepSpec, StepOutput, StepOutputMode,
+    unfused_schedule, ChainInputMeta, ChainStepSpec, StepOutput, StepOutputMode,
 };
 use crate::scheduler::place::{decide_placement, Placement, DEFAULT_SPREAD_MIN_BYTES};
 use crate::scheduler::{FusedSchedule, SchedulerParams};
@@ -171,6 +172,14 @@ pub enum StepOperand {
     /// Registered dense `B` consumed as `out = (chain) · B` (the step's
     /// `a` is unused for this kind; leave it empty).
     FlowADense(String),
+    /// SDDMM step `out = S ⊙ ((chain) · Kᵀ)`: the step's `a` names the
+    /// registered **sampling matrix** `S`, this names the registered
+    /// stationary dense `K`.
+    SddmmQK(String),
+    /// Fused sparse attention
+    /// `out = softmax_row(S ⊙ ((chain) · Kᵀ)) · V`: `a` names `S`, the
+    /// pair names the registered stationary denses `(K, V)`.
+    Attention(String, String),
 }
 
 /// One step of a queued [`ChainRequest`].
@@ -1451,6 +1460,7 @@ impl<T: Scalar> Dispatcher<T> {
     ) -> Result<ChainExec<T>, ServiceError> {
         let mut ops = Vec::with_capacity(head.steps.len());
         let mut strategies = Vec::with_capacity(head.steps.len());
+        let mut sddmm_steps = 0u64;
         for (s, step) in head.steps.iter().enumerate() {
             // Registered operands bind by `Arc` — a cold server bind
             // never deep-copies a registered matrix or dense operand.
@@ -1474,7 +1484,27 @@ impl<T: Scalar> Dispatcher<T> {
                 StepOperand::FlowADense(name) => {
                     ChainStepOp::FlowAMulB { b: self.shared.dense(name)? }
                 }
+                StepOperand::SddmmQK(k) => ChainStepOp::SddmmQK {
+                    s: self.shared.matrix(&step.a)?,
+                    k: self.shared.dense(k)?,
+                },
+                StepOperand::Attention(k, v) => ChainStepOp::Attention {
+                    s: self.shared.matrix(&step.a)?,
+                    k: self.shared.dense(k)?,
+                    v: self.shared.dense(v)?,
+                },
             };
+            // SDDMM/attention binds warm the sampling pattern's
+            // transpose in its cache partition (backward passes and
+            // column-oriented consumers want `Sᵀ`; the counting sort is
+            // structural, so it is paid once per pattern server-wide).
+            match &op {
+                ChainStepOp::SddmmQK { s, .. } | ChainStepOp::Attention { s, .. } => {
+                    self.shared.cache.lock_for_pattern(&s.pattern).transpose_of(&s.pattern);
+                    sddmm_steps += 1;
+                }
+                _ => {}
+            }
             strategies.push(match step.strategy.unwrap_or(head.strategy) {
                 Strategy::TileFusion => StepStrategy::Fused,
                 Strategy::Unfused => StepStrategy::Unfused,
@@ -1487,6 +1517,13 @@ impl<T: Scalar> Dispatcher<T> {
             ops.push(op);
         }
 
+        if sddmm_steps > 0 {
+            let (th, _) = self.shared.cache.transpose_stats();
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.sddmm_steps += sddmm_steps;
+            m.transpose_cache_hits = th;
+        }
+
         let input_meta = if let Some(x) = head.xs_sparse.first() {
             ChainInputMeta::sparse(in_rows, in_cols, x.nnz())
         } else {
@@ -1497,32 +1534,36 @@ impl<T: Scalar> Dispatcher<T> {
         };
         let specs = chain_specs(&ops, in_rows, in_cols).map_err(reject)?;
         let mut step_scheds: Vec<Option<Arc<FusedSchedule>>> = vec![None; specs.len()];
-        let (plan, mut tuned) = {
+        let (mut exec, mut tuned) = {
             let n_cores = self.shared.params.n_cores;
             let mut trivial: HashMap<u64, Arc<FusedSchedule>> = HashMap::new();
             let (mut dh, mut dm) = (0u64, 0u64);
             let cache = &self.shared.cache;
-            let plan = ChainPlanner::new(self.shared.params)
-                .plan_with_input(input_meta, &specs, |s, op| match strategies[s] {
-                    StepStrategy::Fused => {
-                        // Lock only the key's cache partition, one step
-                        // at a time — planning never holds a cache-wide
-                        // lock across the whole chain any more.
-                        let mut part = cache.lock_for(op);
-                        let (h0, m0) = (part.hits, part.misses);
-                        let p = part.get_or_build(op);
-                        dh += part.hits - h0;
-                        dm += part.misses - m0;
-                        step_scheds[s] = Some(Arc::clone(&p));
-                        p
-                    }
-                    StepStrategy::Unfused => Arc::clone(
-                        trivial
-                            .entry(op.a.structure_hash())
-                            .or_insert_with(|| Arc::new(unfused_schedule(op.a, n_cores))),
-                    ),
-                })
-                .map_err(reject)?;
+            let exec = {
+                let scheds = &mut step_scheds;
+                ChainBuilder::new(input_meta)
+                    .steps(ops.iter().cloned())
+                    .build_with(self.shared.params, |s, op| match strategies[s] {
+                        StepStrategy::Fused => {
+                            // Lock only the key's cache partition, one
+                            // step at a time — planning never holds a
+                            // cache-wide lock across the whole chain.
+                            let mut part = cache.lock_for(op);
+                            let (h0, m0) = (part.hits, part.misses);
+                            let p = part.get_or_build(op);
+                            dh += part.hits - h0;
+                            dm += part.misses - m0;
+                            scheds[s] = Some(Arc::clone(&p));
+                            p
+                        }
+                        StepStrategy::Unfused => Arc::clone(
+                            trivial
+                                .entry(op.a.structure_hash())
+                                .or_insert_with(|| Arc::new(unfused_schedule(op.a, n_cores))),
+                        ),
+                    })
+                    .map_err(reject)?
+            };
             let tuned: Vec<Option<StripMode>> = specs
                 .iter()
                 .zip(&strategies)
@@ -1540,9 +1581,10 @@ impl<T: Scalar> Dispatcher<T> {
             m.schedule_cache_hits += dh;
             m.total_schedule_builds += dm;
             m.schedule_cache_evictions = ev;
-            (plan, tuned)
+            (exec, tuned)
         };
-        if plan.out_format() != StepOutput::Dense {
+        exec.set_strategies(&strategies);
+        if exec.out_format() != StepOutput::Dense {
             return Err(ServiceError::Rejected(
                 "chain must end in a dense output on the service path (force the last SpGEMM \
                  step's output to Dense or append a FlowADense step)"
@@ -1569,6 +1611,8 @@ impl<T: Scalar> Dispatcher<T> {
                     | ChainStepOp::SpmmFlowC { a, .. }
                     | ChainStepOp::SpgemmFlow { a, .. } => (a.rows(), fc),
                     ChainStepOp::FlowAMulB { b } => (fr, b.cols),
+                    ChainStepOp::SddmmQK { s, .. } => (s.rows(), s.cols()),
+                    ChainStepOp::Attention { s, v, .. } => (s.rows(), v.cols),
                 };
                 if tuned[s].is_some() {
                     continue;
@@ -1657,8 +1701,6 @@ impl<T: Scalar> Dispatcher<T> {
         }
         drop(specs);
 
-        let mut exec = ChainExec::new(ops, &plan).map_err(reject)?;
-        exec.set_strategies(&strategies);
         for (s, t) in tuned.iter().enumerate() {
             if let Some(mode) = t {
                 exec.set_strip(s, *mode);
@@ -1859,6 +1901,72 @@ mod tests {
             "{err}"
         );
         assert!(srv.chain_blocking(3, Priority::Bulk, mk()).is_ok());
+    }
+
+    #[test]
+    fn attention_chain_through_the_queue() {
+        let srv = server();
+        let s = Csr::<f64>::with_random_values(gen::erdos_renyi(64, 4, 3), 1, -1.0, 1.0);
+        srv.register_matrix("S", s.clone());
+        let (d, vc) = (8, 6);
+        let k = Dense::<f64>::randn(64, d, 4);
+        let v = Dense::<f64>::randn(64, vc, 5);
+        srv.register_dense("K", k.clone());
+        srv.register_dense("V", v.clone());
+        let q = Dense::<f64>::randn(64, d, 6);
+        let mut ws = crate::exec::StripWs::new();
+        let mut expect = Dense::zeros(64, vc);
+        crate::exec::run_attention(
+            &ThreadPool::new(1),
+            &s.pattern,
+            &k,
+            &v,
+            &q,
+            &mut ws,
+            &mut expect,
+        );
+        let mk = || ChainRequest {
+            steps: vec![ChainStepReq {
+                a: "S".into(),
+                operand: StepOperand::Attention("K".into(), "V".into()),
+                strategy: None,
+            }],
+            xs: vec![q.clone()],
+            xs_sparse: Vec::new(),
+            strategy: Strategy::TileFusion,
+        };
+        // Twice: the second ride reuses the warm bound executor.
+        for round in 0..2 {
+            let reply = srv.chain_blocking(5, Priority::Bulk, mk()).unwrap();
+            assert_eq!(reply.ds.len(), 1, "round {round}");
+            assert!(
+                reply.ds[0].data.iter().zip(&expect.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "round {round}: queued attention must stay bitwise-canonical"
+            );
+        }
+        // A chain ending in a bare SDDMM is sparse-out → rejected, and
+        // the server survives it.
+        let bad = ChainRequest {
+            steps: vec![ChainStepReq {
+                a: "S".into(),
+                operand: StepOperand::SddmmQK("K".into()),
+                strategy: None,
+            }],
+            xs: vec![q.clone()],
+            xs_sparse: Vec::new(),
+            strategy: Strategy::TileFusion,
+        };
+        let err = srv.chain_blocking(5, Priority::Bulk, bad).unwrap_err();
+        assert!(
+            matches!(err, ServiceError::Rejected(ref m) if m.contains("dense output")),
+            "{err}"
+        );
+        assert!(srv.chain_blocking(5, Priority::Bulk, mk()).is_ok());
+        let m = srv.shutdown();
+        // One bind per distinct key (warm reuse skips rebinding), each
+        // counting its SDDMM-kind steps and warming `Sᵀ` exactly once.
+        assert_eq!(m.sddmm_steps, 2, "attention bind + rejected sddmm bind");
+        assert_eq!(m.transpose_cache_hits, 1, "second bind reuses the cached transpose");
     }
 
     #[test]

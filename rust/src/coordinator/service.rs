@@ -5,14 +5,13 @@
 
 use super::cache::ScheduleCache;
 use crate::core::{Dense, Scalar};
-use crate::exec::chain::{chain_specs, ChainExec, ChainStepOp, StepStrategy};
+use crate::exec::chain::{chain_specs, ChainBuilder, ChainStepOp, StepStrategy};
 use crate::exec::{
     AtomicTiling, Fused, Overlapped, PairExec, PairOp, SharedPool, StripMode, TensorStyle,
     ThreadPool, Unfused,
 };
 use crate::scheduler::chain::{
-    unfused_schedule, ChainInputMeta, ChainPlanner, ChainStats, ChainStepSpec, StepOutput,
-    StepOutputMode,
+    unfused_schedule, ChainInputMeta, ChainStats, ChainStepSpec, StepOutput, StepOutputMode,
 };
 use crate::scheduler::{FusedSchedule, SchedulerParams};
 use crate::sparse::Csr;
@@ -72,7 +71,8 @@ pub struct Response<T> {
 }
 
 /// One step of a [`ChainRequest`]. Exactly one of `w` / `b_dense` /
-/// `b_sparse` / `spgemm` / `flow_a_dense` must be set:
+/// `b_sparse` / `spgemm` / `flow_a_dense` / `sddmm_k` / `attention_kv`
+/// must be set:
 ///
 /// - `w` — pair step, flowing `B` (GCN-style): `out = A ((chain) · w)`;
 /// - `b_dense` / `b_sparse` — pair step, flowing `C` (solver-style):
@@ -81,10 +81,16 @@ pub struct Response<T> {
 ///   given output-format override ([`StepOutputMode::Auto`] lets the
 ///   planner's cost estimate pick sparse vs dense materialization);
 /// - `flow_a_dense` — `out = (chain) · b` against a stationary dense
-///   operand (`a` is unused for this kind; leave it empty).
+///   operand (`a` is unused for this kind; leave it empty);
+/// - `sddmm_k` — SDDMM step `out = S ⊙ ((chain)·Kᵀ)`: `a` names the
+///   registered **sampling matrix** `S`, the flowing dense value is `Q`;
+/// - `attention_kv` — fused sparse attention
+///   `out = softmax_row(S ⊙ ((chain)·Kᵀ)) · V`: `a` names `S`, the
+///   tuple is `(K, V)`.
 #[derive(Default)]
 pub struct ChainStepRequest<T> {
-    /// Registered name of this step's sparse `A` (unused for
+    /// Registered name of this step's sparse `A` — or of the sampling
+    /// matrix `S` for `sddmm_k` / `attention_kv` steps (unused for
     /// `flow_a_dense` steps).
     pub a: String,
     /// Stationary weights (flowing `B`): `out = A ((chain) · w)`.
@@ -97,6 +103,10 @@ pub struct ChainStepRequest<T> {
     pub spgemm: Option<StepOutputMode>,
     /// Sparse- or dense-flow `out = (chain) · b` step.
     pub flow_a_dense: Option<Dense<T>>,
+    /// Stationary `K` of an SDDMM step (`a` = the sampling matrix `S`).
+    pub sddmm_k: Option<Dense<T>>,
+    /// Stationary `(K, V)` of a fused attention step (`a` = `S`).
+    pub attention_kv: Option<(Dense<T>, Dense<T>)>,
     /// Per-step strategy override (`None` ⇒ the request default; pair
     /// steps only — sparse-flow steps have one execution path).
     pub strategy: Option<Strategy>,
@@ -154,6 +164,13 @@ pub struct Metrics {
     pub chain_requests: u64,
     /// Chain steps executed across all chain requests and batch inputs.
     pub chain_steps: u64,
+    /// SDDMM / fused-attention steps bound across chain requests (each
+    /// runs once per batched input).
+    pub sddmm_steps: u64,
+    /// Transposed-pattern lookups served from the schedule cache
+    /// (mirrors `ScheduleCache::transpose_hits`; SDDMM/attention
+    /// tenants warm `Sᵀ` once per sampling pattern).
+    pub transpose_cache_hits: u64,
     /// Strip-width autotuner runs (first execution of a key whose model
     /// pick had alternatives worth timing).
     pub strip_tunes: u64,
@@ -383,34 +400,51 @@ impl<T: Scalar> Coordinator<T> {
         let mut ops = Vec::with_capacity(steps.len());
         let mut strategies = Vec::with_capacity(steps.len());
         for (s, step) in steps.into_iter().enumerate() {
-            let ChainStepRequest { a, w, b_dense, b_sparse, spgemm, flow_a_dense, strategy: st } =
-                step;
+            let ChainStepRequest {
+                a,
+                w,
+                b_dense,
+                b_sparse,
+                spgemm,
+                flow_a_dense,
+                sddmm_k,
+                attention_kv,
+                strategy: st,
+            } = step;
             let matrix = |name: &str, matrices: &HashMap<String, Arc<Csr<T>>>| {
                 matrices
                     .get(name)
                     .cloned()
                     .ok_or_else(|| anyhow!("unknown matrix {name:?}"))
             };
-            let op = match (w, b_dense, b_sparse, spgemm, flow_a_dense) {
-                (Some(w), None, None, None, None) => {
+            let op = match (w, b_dense, b_sparse, spgemm, flow_a_dense, sddmm_k, attention_kv) {
+                (Some(w), None, None, None, None, None, None) => {
                     ChainStepOp::GemmFlowB { a: matrix(&a, &self.matrices)?, w: Arc::new(w) }
                 }
-                (None, Some(b), None, None, None) => {
+                (None, Some(b), None, None, None, None, None) => {
                     ChainStepOp::GemmFlowC { a: matrix(&a, &self.matrices)?, b: Arc::new(b) }
                 }
-                (None, None, Some(name), None, None) => ChainStepOp::SpmmFlowC {
+                (None, None, Some(name), None, None, None, None) => ChainStepOp::SpmmFlowC {
                     a: matrix(&a, &self.matrices)?,
                     b: matrix(&name, &self.matrices)?,
                 },
-                (None, None, None, Some(mode), None) => {
+                (None, None, None, Some(mode), None, None, None) => {
                     ChainStepOp::SpgemmFlow { a: matrix(&a, &self.matrices)?, output: mode }
                 }
-                (None, None, None, None, Some(b)) => {
+                (None, None, None, None, Some(b), None, None) => {
                     ChainStepOp::FlowAMulB { b: Arc::new(b) }
                 }
+                (None, None, None, None, None, Some(k), None) => {
+                    ChainStepOp::SddmmQK { s: matrix(&a, &self.matrices)?, k: Arc::new(k) }
+                }
+                (None, None, None, None, None, None, Some((k, v))) => ChainStepOp::Attention {
+                    s: matrix(&a, &self.matrices)?,
+                    k: Arc::new(k),
+                    v: Arc::new(v),
+                },
                 _ => bail!(
                     "chain step {s}: exactly one of w / b_dense / b_sparse / spgemm / \
-                     flow_a_dense must be set"
+                     flow_a_dense / sddmm_k / attention_kv must be set"
                 ),
             };
             strategies.push(match st.unwrap_or(strategy) {
@@ -425,30 +459,45 @@ impl<T: Scalar> Coordinator<T> {
         }
 
         let t0 = Instant::now();
+        // SDDMM / attention steps: warm the transposed-pattern cache for
+        // the sampling matrix — backward passes and column-major
+        // consumers want `Sᵀ`, and structurally identical patterns pay
+        // the counting sort once, like their schedules are planned once.
+        for op in &ops {
+            match op {
+                ChainStepOp::SddmmQK { s, .. } | ChainStepOp::Attention { s, .. } => {
+                    self.metrics.sddmm_steps += 1;
+                    self.cache.transpose_of(&s.pattern);
+                }
+                _ => {}
+            }
+        }
         let (hits0, miss0) = (self.cache.hits, self.cache.misses);
         let input_meta = if sparse_input {
             ChainInputMeta::sparse(in_rows, in_cols, xs_sparse[0].nnz())
         } else {
             ChainInputMeta::dense(in_rows, in_cols)
         };
-        let specs = chain_specs(&ops, in_rows, in_cols)?;
-        let (plan, mut tuned, step_scheds) = {
-            // Only pair steps that will actually run fused pay Algorithm
-            // 1's inspection (through the shared cache); unfused pair
-            // steps get a trivial no-fusion schedule, deduplicated
-            // locally, that the executor's geometry checks accept but
-            // never consult. Sparse-flow steps never reach the hook —
-            // they have no pattern to inspect before run time.
-            let n_cores = self.cache.params().n_cores;
-            let mut trivial: HashMap<u64, Arc<crate::scheduler::FusedSchedule>> = HashMap::new();
-            let mut step_scheds: Vec<Option<Arc<FusedSchedule>>> = vec![None; specs.len()];
-            let plan = ChainPlanner::new(self.cache.params()).plan_with_input(
-                input_meta,
-                &specs,
+        // Plan and bind through the builder. Only pair steps that will
+        // actually run fused pay Algorithm 1's inspection (through the
+        // shared cache, via the `build_with` hook); unfused pair steps
+        // get a trivial no-fusion schedule, deduplicated locally, that
+        // the executor's geometry checks accept but never consult.
+        // Sparse-flow, SDDMM and attention steps never reach the hook —
+        // they have no pattern to inspect before run time.
+        let params = self.cache.params();
+        let n_cores = params.n_cores;
+        let mut trivial: HashMap<u64, Arc<crate::scheduler::FusedSchedule>> = HashMap::new();
+        let mut step_scheds: Vec<Option<Arc<FusedSchedule>>> = vec![None; ops.len()];
+        let mut exec = {
+            let cache = &mut self.cache;
+            let scheds = &mut step_scheds;
+            ChainBuilder::new(input_meta).steps(ops.iter().cloned()).build_with(
+                params,
                 |s, op| match strategies[s] {
                     StepStrategy::Fused => {
-                        let p = self.cache.get_or_build(op);
-                        step_scheds[s] = Some(Arc::clone(&p));
+                        let p = cache.get_or_build(op);
+                        scheds[s] = Some(Arc::clone(&p));
                         p
                     }
                     StepStrategy::Unfused => Arc::clone(
@@ -457,30 +506,31 @@ impl<T: Scalar> Coordinator<T> {
                             .or_insert_with(|| Arc::new(unfused_schedule(op.a, n_cores))),
                     ),
                 },
-            )?;
-            // Fused pair steps whose (pattern, shape) any earlier
-            // request — pair or chain — already autotuned replay the
-            // tuned strip pick for free.
-            let tuned: Vec<Option<StripMode>> = specs
-                .iter()
-                .zip(&strategies)
-                .map(|(spec, st)| match (spec, st) {
-                    (ChainStepSpec::Pair { op, .. }, StepStrategy::Fused) => {
-                        self.cache.tuned_strip(op)
-                    }
-                    _ => None,
-                })
-                .collect();
-            (plan, tuned, step_scheds)
+            )?
         };
         self.metrics.schedule_cache_hits += self.cache.hits - hits0;
         self.metrics.total_schedule_builds += self.cache.misses - miss0;
-        if plan.out_format() != StepOutput::Dense {
+        if exec.out_format() != StepOutput::Dense {
             bail!(
                 "chain must end in a dense output on the service path (force the last SpGEMM \
                  step's output to Dense or append a flow_a_dense step)"
             );
         }
+        exec.set_strategies(&strategies);
+        // Fused pair steps whose (pattern, shape) any earlier request —
+        // pair or chain — already autotuned replay the tuned strip pick
+        // for free.
+        let specs = chain_specs(&ops, in_rows, in_cols)?;
+        let mut tuned: Vec<Option<StripMode>> = specs
+            .iter()
+            .zip(&strategies)
+            .map(|(spec, st)| match (spec, st) {
+                (ChainStepSpec::Pair { op, .. }, StepStrategy::Fused) => {
+                    self.cache.tuned_strip(op)
+                }
+                _ => None,
+            })
+            .collect();
 
         // First sight of a key on the chain path runs the same strip
         // timing a pair request would. A step's flowing operand does not
@@ -500,6 +550,8 @@ impl<T: Scalar> Coordinator<T> {
                     | ChainStepOp::SpmmFlowC { a, .. }
                     | ChainStepOp::SpgemmFlow { a, .. } => (a.rows(), fc),
                     ChainStepOp::FlowAMulB { b } => (fr, b.cols),
+                    ChainStepOp::SddmmQK { s, .. } => (s.rows(), s.cols()),
+                    ChainStepOp::Attention { s, v, .. } => (s.rows(), v.cols),
                 };
                 if tuned[s].is_some() {
                     continue;
@@ -562,8 +614,6 @@ impl<T: Scalar> Coordinator<T> {
         }
         drop(specs);
 
-        let mut exec = ChainExec::new(ops, &plan)?;
-        exec.set_strategies(&strategies);
         for (s, t) in tuned.iter().enumerate() {
             if let Some(mode) = t {
                 exec.set_strip(s, *mode);
@@ -588,10 +638,11 @@ impl<T: Scalar> Coordinator<T> {
         let elapsed = t0.elapsed();
         self.metrics.requests += 1;
         self.metrics.chain_requests += 1;
-        self.metrics.chain_steps += (plan.len() * n_inputs) as u64;
+        self.metrics.chain_steps += (exec.n_steps() * n_inputs) as u64;
         self.metrics.total_exec += elapsed;
         self.metrics.schedule_cache_evictions = self.cache.evictions;
-        Ok(ChainResponse { ds, elapsed, stats: plan.stats.clone() })
+        self.metrics.transpose_cache_hits = self.cache.transpose_hits;
+        Ok(ChainResponse { ds, elapsed, stats: exec.stats().clone() })
     }
 
     /// Cache state (entries, hits, misses) for observability.
@@ -1093,6 +1144,88 @@ mod tests {
         };
         let err = coord.submit_chain(req).unwrap_err();
         assert!(err.to_string().contains("exactly one of xs"), "{err}");
+    }
+
+    #[test]
+    fn attention_chain_request_round_trip_and_transpose_warm() {
+        let mut coord = coord();
+        let s = Csr::<f64>::with_random_values(gen::erdos_renyi(64, 4, 3), 1, -1.0, 1.0);
+        coord.register_matrix("S", s.clone());
+        let (d, vc) = (8, 6);
+        let k = Dense::<f64>::randn(64, d, 4);
+        let v = Dense::<f64>::randn(64, vc, 5);
+        let q = Dense::<f64>::randn(64, d, 6);
+        // Oracle through the canonical fused driver (itself bitwise
+        // against the dense reference in exec::sddmm's tests).
+        let mut ws = crate::exec::StripWs::new();
+        let mut expect = Dense::zeros(64, vc);
+        crate::exec::run_attention(
+            &ThreadPool::new(1),
+            &s.pattern,
+            &k,
+            &v,
+            &q,
+            &mut ws,
+            &mut expect,
+        );
+        let mk = || ChainRequest {
+            steps: vec![ChainStepRequest {
+                a: "S".into(),
+                attention_kv: Some((k.clone(), v.clone())),
+                ..Default::default()
+            }],
+            xs: vec![q.clone()],
+            ..Default::default()
+        };
+        let resp = coord.submit_chain(mk()).unwrap();
+        assert_eq!(resp.ds.len(), 1);
+        assert!(
+            resp.ds[0].data.iter().zip(&expect.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "service attention output must be bitwise-canonical"
+        );
+        assert_eq!(coord.metrics().sddmm_steps, 1);
+        assert_eq!(coord.metrics().transpose_cache_hits, 0, "first sight runs the transpose");
+        // Repeat request: Sᵀ now comes from the cache.
+        coord.submit_chain(mk()).unwrap();
+        assert_eq!(coord.metrics().sddmm_steps, 2);
+        assert_eq!(coord.metrics().transpose_cache_hits, 1);
+        // Attention steps carry no fused pair schedule.
+        assert_eq!(coord.cache_stats().0, 0);
+
+        // SDDMM feeding a dense consumer ends dense and is accepted.
+        let xd = Dense::<f64>::randn(64, 5, 9);
+        let scores = crate::kernels::sddmm(&s.pattern, &q, &k);
+        let mut expect2 = Dense::zeros(64, 5);
+        crate::exec::spgemm::run_sparse_times_dense(
+            &ThreadPool::new(1),
+            &scores,
+            &xd,
+            &mut expect2,
+        );
+        let req = ChainRequest {
+            steps: vec![
+                ChainStepRequest { a: "S".into(), sddmm_k: Some(k.clone()), ..Default::default() },
+                ChainStepRequest { flow_a_dense: Some(xd.clone()), ..Default::default() },
+            ],
+            xs: vec![q.clone()],
+            ..Default::default()
+        };
+        let resp = coord.submit_chain(req).unwrap();
+        assert!(resp.ds[0].data.iter().zip(&expect2.data).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(coord.metrics().sddmm_steps, 3);
+
+        // A chain ending in a bare SDDMM is sparse-out → rejected here.
+        let req = ChainRequest {
+            steps: vec![ChainStepRequest {
+                a: "S".into(),
+                sddmm_k: Some(k.clone()),
+                ..Default::default()
+            }],
+            xs: vec![q.clone()],
+            ..Default::default()
+        };
+        let err = coord.submit_chain(req).unwrap_err();
+        assert!(err.to_string().contains("dense output"), "{err}");
     }
 
     #[test]

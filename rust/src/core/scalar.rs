@@ -110,6 +110,15 @@ pub trait Scalar:
         touched: &mut [u32],
         acc: &mut [Self],
     ) -> usize;
+
+    /// Route [`crate::kernels::sddmm_row`] to `bk`'s kernel.
+    fn bk_sddmm_row(bk: &dyn Backend, cols: &[u32], q_row: &[Self], k: &Dense<Self>, out: &mut [Self]);
+
+    /// Route [`crate::kernels::reduce_max`] to `bk`'s kernel.
+    fn bk_reduce_max(bk: &dyn Backend, row: &[Self]) -> Self;
+
+    /// Route [`crate::kernels::reduce_sum`] to `bk`'s kernel.
+    fn bk_reduce_sum(bk: &dyn Backend, row: &[Self]) -> Self;
 }
 
 impl Scalar for f32 {
@@ -217,6 +226,21 @@ impl Scalar for f32 {
     ) -> usize {
         bk.spgemm_merge_f32(a_cols, a_vals, b, marks, touched, acc)
     }
+
+    #[inline]
+    fn bk_sddmm_row(bk: &dyn Backend, cols: &[u32], q_row: &[Self], k: &Dense<Self>, out: &mut [Self]) {
+        bk.sddmm_row_f32(cols, q_row, k, out);
+    }
+
+    #[inline]
+    fn bk_reduce_max(bk: &dyn Backend, row: &[Self]) -> Self {
+        bk.reduce_max_f32(row)
+    }
+
+    #[inline]
+    fn bk_reduce_sum(bk: &dyn Backend, row: &[Self]) -> Self {
+        bk.reduce_sum_f32(row)
+    }
 }
 
 impl Scalar for f64 {
@@ -323,6 +347,21 @@ impl Scalar for f64 {
         acc: &mut [Self],
     ) -> usize {
         bk.spgemm_merge_f64(a_cols, a_vals, b, marks, touched, acc)
+    }
+
+    #[inline]
+    fn bk_sddmm_row(bk: &dyn Backend, cols: &[u32], q_row: &[Self], k: &Dense<Self>, out: &mut [Self]) {
+        bk.sddmm_row_f64(cols, q_row, k, out);
+    }
+
+    #[inline]
+    fn bk_reduce_max(bk: &dyn Backend, row: &[Self]) -> Self {
+        bk.reduce_max_f64(row)
+    }
+
+    #[inline]
+    fn bk_reduce_sum(bk: &dyn Backend, row: &[Self]) -> Self {
+        bk.reduce_sum_f64(row)
     }
 }
 

@@ -32,6 +32,27 @@
 //! after **dense-output** steps only — a sparse intermediate has no
 //! activation use case and its structure is owned by the executor.
 //!
+//! # Assembling chains
+//!
+//! [`ChainBuilder`] is the canonical way to assemble a chain: a fluent
+//! op-spec API (`ChainBuilder::dense(n, d).step(op).strip(..).build(..)`)
+//! that replaces the old constructor-plus-setter shuffle — per-step
+//! knobs (output format, strategy, strip mode, drop tolerance,
+//! boundary) attach to the step they modify at the point it is
+//! declared. The old [`ChainExec::plan_and_build`] /
+//! [`ChainExec::plan_and_build_sparse`] constructors remain as
+//! deprecated shims that delegate to the builder.
+//!
+//! # Attention steps
+//!
+//! [`ChainStepOp::SddmmQK`] scores `S ⊙ (Q·Kᵀ)` into a sparse
+//! intermediate on `S`'s pattern (no symbolic phase — the pattern is
+//! known at bind time), and [`ChainStepOp::Attention`] fuses
+//! SDDMM → row-softmax → SpMM into one dense-output step whose
+//! attention scores never leave a per-worker cache-resident strip
+//! ([`crate::exec::sddmm`]). Both read only flow row `i` per output
+//! row, so they pipeline like flow-`B` pairs.
+//!
 //! # Pipelined chains
 //!
 //! [`ChainExec::run_pipelined`] (and the `_io` / `_controlled_io`
@@ -51,6 +72,7 @@
 
 use super::fused::{fused_tile_full, fused_tile_strip, fused_tile_wf1, pack_panels_all, run_fused_striped};
 use super::pool::{run_dag_segment, DagRun, WorkerScratch};
+use super::sddmm::{attention_rows, run_attention, run_sddmm, sddmm_value_rows};
 use super::spgemm::{
     gemm_dense_rows, run_dense_times_dense, run_sparse_times_dense, run_spgemm, run_spgemm_dense,
     spgemm_dense_rows, spgemm_numeric_rows, spgemm_symbolic_rows, spmm_dense_rows, SpgemmWs,
@@ -60,9 +82,9 @@ use super::strip::{StripMode, StripWs};
 use super::unfused::{run_unfused_striped, unfused_first_rows, unfused_second_rows};
 use super::{Dense, PairOp, Scalar, ThreadPool};
 use crate::scheduler::chain::{
-    build_chain_dag, ChainDag, ChainError, ChainFlow, ChainInputMeta, ChainPlan, ChainStepPlan,
-    ChainStepSpec, DagNode, DagReads, DagStepDesc, DagStepKind, PlannedStep, StepBoundary,
-    StepOutput, StepOutputMode,
+    build_chain_dag, ChainDag, ChainError, ChainFlow, ChainInputMeta, ChainPlan, ChainStats,
+    ChainStepPlan, ChainStepSpec, DagNode, DagReads, DagStepDesc, DagStepKind, PlannedStep,
+    StepBoundary, StepOutput, StepOutputMode,
 };
 use crate::scheduler::{BSide, FusedSchedule, FusionOp, SchedulerParams};
 use crate::sparse::Csr;
@@ -92,6 +114,46 @@ pub enum ChainStepOp<T> {
     /// brings a sparse flow back to dense (CSR SpMM), or a plain GeMM
     /// when the flow was densified upstream.
     FlowAMulB { b: Arc<Dense<T>> },
+    /// SDDMM `out = S ⊙ ((chain)·Kᵀ)`: the flowing dense value is `Q`,
+    /// `k` shares its inner dimension, and `s` supplies the sampling
+    /// pattern (its **values are ignored** — Sputnik semantics). Output
+    /// is sparse on `s`'s pattern exactly.
+    SddmmQK { s: Arc<Csr<T>>, k: Arc<Dense<T>> },
+    /// Fused sparse attention
+    /// `out = softmax_row(S ⊙ ((chain)·Kᵀ)) · V`: one dense-output
+    /// step; the sparse score matrix never materializes
+    /// ([`crate::exec::sddmm::run_attention`]).
+    Attention { s: Arc<Csr<T>>, k: Arc<Dense<T>>, v: Arc<Dense<T>> },
+}
+
+// Manual impl: every field is an `Arc` or `Copy`, so cloning is cheap
+// and needs no `T: Clone` bound.
+impl<T> Clone for ChainStepOp<T> {
+    fn clone(&self) -> Self {
+        match self {
+            ChainStepOp::GemmFlowB { a, w } => {
+                ChainStepOp::GemmFlowB { a: Arc::clone(a), w: Arc::clone(w) }
+            }
+            ChainStepOp::GemmFlowC { a, b } => {
+                ChainStepOp::GemmFlowC { a: Arc::clone(a), b: Arc::clone(b) }
+            }
+            ChainStepOp::SpmmFlowC { a, b } => {
+                ChainStepOp::SpmmFlowC { a: Arc::clone(a), b: Arc::clone(b) }
+            }
+            ChainStepOp::SpgemmFlow { a, output } => {
+                ChainStepOp::SpgemmFlow { a: Arc::clone(a), output: *output }
+            }
+            ChainStepOp::FlowAMulB { b } => ChainStepOp::FlowAMulB { b: Arc::clone(b) },
+            ChainStepOp::SddmmQK { s, k } => {
+                ChainStepOp::SddmmQK { s: Arc::clone(s), k: Arc::clone(k) }
+            }
+            ChainStepOp::Attention { s, k, v } => ChainStepOp::Attention {
+                s: Arc::clone(s),
+                k: Arc::clone(k),
+                v: Arc::clone(v),
+            },
+        }
+    }
 }
 
 impl<T: Scalar> ChainStepOp<T> {
@@ -104,6 +166,8 @@ impl<T: Scalar> ChainStepOp<T> {
             }
             ChainStepOp::SpgemmFlow { .. } => PlannedStep::Spgemm,
             ChainStepOp::FlowAMulB { .. } => PlannedStep::FlowAMulB,
+            ChainStepOp::SddmmQK { .. } => PlannedStep::Sddmm,
+            ChainStepOp::Attention { .. } => PlannedStep::Attention,
         }
     }
 }
@@ -246,6 +310,42 @@ pub fn chain_specs<'a, T: Scalar>(
                 }
                 ChainStepSpec::FlowAMulB { bcol: b.cols }
             }
+            ChainStepOp::SddmmQK { s: sm, k } => {
+                if k.cols != cur_c {
+                    return Err(ChainError::new(format!(
+                        "step {s}: K has {} cols but the flowing Q has {cur_c} cols",
+                        k.cols
+                    )));
+                }
+                if k.rows != sm.cols() {
+                    return Err(ChainError::new(format!(
+                        "step {s}: K has {} rows but the sampling pattern has {} cols",
+                        k.rows,
+                        sm.cols()
+                    )));
+                }
+                ChainStepSpec::Sddmm { s: &sm.pattern }
+            }
+            ChainStepOp::Attention { s: sm, k, v } => {
+                if k.cols != cur_c {
+                    return Err(ChainError::new(format!(
+                        "step {s}: K has {} cols but the flowing Q has {cur_c} cols",
+                        k.cols
+                    )));
+                }
+                if k.rows != sm.cols() || v.rows != sm.cols() {
+                    return Err(ChainError::new(format!(
+                        "step {s}: K ({}x{}) / V ({}x{}) must have one row per sampling-pattern \
+                         column ({})",
+                        k.rows,
+                        k.cols,
+                        v.rows,
+                        v.cols,
+                        sm.cols()
+                    )));
+                }
+                ChainStepSpec::Attention { s: &sm.pattern, v_cols: v.cols }
+            }
         };
         cur_c = match &spec {
             ChainStepSpec::Pair { op, flow } => match flow {
@@ -254,10 +354,191 @@ pub fn chain_specs<'a, T: Scalar>(
             },
             ChainStepSpec::Spgemm { .. } => cur_c,
             ChainStepSpec::FlowAMulB { bcol } => *bcol,
+            ChainStepSpec::Sddmm { s } => s.cols,
+            ChainStepSpec::Attention { v_cols, .. } => *v_cols,
         };
         specs.push(spec);
     }
     Ok(specs)
+}
+
+/// Per-step record of a [`ChainBuilder`]: the operands plus every
+/// per-step knob, attached where the step is declared instead of
+/// scattered across post-bind setter calls.
+struct BuilderStep<T> {
+    op: ChainStepOp<T>,
+    output: StepOutputMode,
+    strategy: StepStrategy,
+    strip: StripMode,
+    drop_tol: f64,
+    boundary: Option<StepBoundary>,
+}
+
+/// Fluent chain assembly — the canonical way to build a [`ChainExec`].
+///
+/// ```ignore
+/// let mut chain = ChainBuilder::dense(n, d)
+///     .step(ChainStepOp::GemmFlowB { a, w })       // H' = A (H W)
+///     .strip(StripMode::Full)                      //   ... this step full-width
+///     .step(ChainStepOp::Attention { s, k, v })    // fused sparse attention
+///     .build(params)?;
+/// ```
+///
+/// [`ChainBuilder::step`] appends a step; the modifiers
+/// ([`output`](ChainBuilder::output), [`strategy`](ChainBuilder::strategy),
+/// [`strip`](ChainBuilder::strip), [`drop_tol`](ChainBuilder::drop_tol),
+/// [`boundary`](ChainBuilder::boundary)) apply to the **most recently
+/// added** step. [`build`](ChainBuilder::build) plans (with a private
+/// schedule-dedup map) and binds in one call;
+/// [`build_with`](ChainBuilder::build_with) fetches pair-step schedules
+/// through a caller hook instead — how the coordinator serves chains
+/// from its schedule cache. The element width of the passed
+/// [`SchedulerParams`] is forced to `T`'s.
+pub struct ChainBuilder<T> {
+    input: ChainInputMeta,
+    steps: Vec<BuilderStep<T>>,
+}
+
+impl<T: Scalar> ChainBuilder<T> {
+    /// Start a chain over an arbitrary flowing input.
+    pub fn new(input: ChainInputMeta) -> Self {
+        Self { input, steps: Vec::new() }
+    }
+
+    /// Start a chain whose flowing input is dense `rows × cols`.
+    pub fn dense(rows: usize, cols: usize) -> Self {
+        Self::new(ChainInputMeta::dense(rows, cols))
+    }
+
+    /// Start a chain whose flowing input is sparse `rows × cols` with
+    /// `nnz` representative nonzeros (seeds the planner's density
+    /// estimates).
+    pub fn sparse(rows: usize, cols: usize, nnz: usize) -> Self {
+        Self::new(ChainInputMeta::sparse(rows, cols, nnz))
+    }
+
+    /// Append a step. An [`ChainStepOp::SpgemmFlow`]'s embedded output
+    /// mode seeds the step's [`output`](ChainBuilder::output) knob.
+    pub fn step(mut self, op: ChainStepOp<T>) -> Self {
+        let output = match &op {
+            ChainStepOp::SpgemmFlow { output, .. } => *output,
+            _ => StepOutputMode::Auto,
+        };
+        self.steps.push(BuilderStep {
+            op,
+            output,
+            strategy: StepStrategy::Fused,
+            strip: StripMode::Auto,
+            drop_tol: 0.0,
+            boundary: None,
+        });
+        self
+    }
+
+    /// Append several steps at once (migration helper for `Vec`-built
+    /// chains; per-step knobs then stay at their defaults).
+    pub fn steps(mut self, ops: impl IntoIterator<Item = ChainStepOp<T>>) -> Self {
+        for op in ops {
+            self = self.step(op);
+        }
+        self
+    }
+
+    fn last(&mut self, knob: &str) -> &mut BuilderStep<T> {
+        self.steps.last_mut().unwrap_or_else(|| panic!("{knob}() before any step()"))
+    }
+
+    /// Override the last step's output-format decision (SpGEMM steps;
+    /// see [`StepOutputMode`]).
+    pub fn output(mut self, mode: StepOutputMode) -> Self {
+        let st = self.last("output");
+        st.output = mode;
+        if let ChainStepOp::SpgemmFlow { output, .. } = &mut st.op {
+            *output = mode;
+        }
+        self
+    }
+
+    /// Set the last step's executor strategy (pair steps).
+    pub fn strategy(mut self, strategy: StepStrategy) -> Self {
+        self.last("strategy").strategy = strategy;
+        self
+    }
+
+    /// Set the last step's column-strip mode (pair steps).
+    pub fn strip(mut self, strip: StripMode) -> Self {
+        self.last("strip").strip = strip;
+        self
+    }
+
+    /// Set the last step's numeric drop tolerance (sparse-output SpGEMM
+    /// steps; see [`ChainExec::set_drop_tol`]).
+    pub fn drop_tol(mut self, tol: f64) -> Self {
+        self.last("drop_tol").drop_tol = tol;
+        self
+    }
+
+    /// Override the last step's entry discipline (default: the
+    /// planner's per-step decision).
+    pub fn boundary(mut self, boundary: StepBoundary) -> Self {
+        self.last("boundary").boundary = Some(boundary);
+        self
+    }
+
+    /// Plan (building each distinct pair-step schedule exactly once)
+    /// and bind.
+    pub fn build(self, params: SchedulerParams) -> Result<ChainExec<T>, ChainError> {
+        self.build_inner(params, None)
+    }
+
+    /// [`ChainBuilder::build`], fetching each pair step's schedule
+    /// through `get(step_index, op)` — the hook long-running callers
+    /// use to serve chains from an existing schedule cache.
+    pub fn build_with(
+        self,
+        params: SchedulerParams,
+        mut get: impl FnMut(usize, &FusionOp) -> Arc<FusedSchedule>,
+    ) -> Result<ChainExec<T>, ChainError> {
+        self.build_inner(params, Some(&mut get))
+    }
+
+    fn build_inner(
+        self,
+        mut params: SchedulerParams,
+        get: Option<&mut dyn FnMut(usize, &FusionOp) -> Arc<FusedSchedule>>,
+    ) -> Result<ChainExec<T>, ChainError> {
+        params.elem_bytes = T::BYTES;
+        let input = self.input;
+        let mut ops = Vec::with_capacity(self.steps.len());
+        let mut knobs = Vec::with_capacity(self.steps.len());
+        for st in self.steps {
+            knobs.push((st.strategy, st.strip, st.drop_tol, st.boundary));
+            ops.push(st.op);
+        }
+        for (i, (_, _, _, boundary)) in knobs.iter().enumerate() {
+            if i == 0 && *boundary == Some(StepBoundary::Pipelined) {
+                return Err(ChainError::new("step 0 always enters behind a barrier"));
+            }
+        }
+        let planner = crate::scheduler::chain::ChainPlanner::new(params);
+        let plan = {
+            let specs = chain_specs(&ops, input.rows, input.cols)?;
+            match get {
+                Some(get) => planner.plan_with_input(input, &specs, get)?,
+                None => planner.plan_input(input, &specs)?,
+            }
+        };
+        let mut exec = ChainExec::new(ops, &plan)?;
+        for (i, (strategy, strip, drop_tol, boundary)) in knobs.into_iter().enumerate() {
+            exec.set_strategy(i, strategy);
+            exec.set_strip(i, strip);
+            exec.set_drop_tol(i, drop_tol);
+            if let Some(b) = boundary {
+                exec.set_boundary(i, b);
+            }
+        }
+        Ok(exec)
+    }
 }
 
 struct ChainStepExec<T> {
@@ -409,6 +690,9 @@ pub struct ChainExec<T> {
     out_rows: usize,
     out_cols: usize,
     out_format: StepOutput,
+    /// Plan statistics captured at bind time — callers assembling
+    /// through [`ChainBuilder`] never see the plan itself.
+    stats: ChainStats,
 }
 
 /// Pair-step geometry checks shared by every `ChainStepOp` with a
@@ -511,6 +795,47 @@ impl<T: Scalar> ChainExec<T> {
                         )));
                     }
                 }
+                ChainStepOp::SddmmQK { s: sm, k } => {
+                    if sm.rows() != sp.out_rows || sm.cols() != sp.out_cols {
+                        return Err(ChainError::new(format!(
+                            "step {s}: sampling pattern is {}x{} but the plan expects {}x{}",
+                            sm.rows(),
+                            sm.cols(),
+                            sp.out_rows,
+                            sp.out_cols
+                        )));
+                    }
+                    if k.rows != sm.cols() || k.cols != in_c {
+                        return Err(ChainError::new(format!(
+                            "step {s}: K is {}x{} but the plan expects {}x{in_c}",
+                            k.rows,
+                            k.cols,
+                            sm.cols()
+                        )));
+                    }
+                }
+                ChainStepOp::Attention { s: sm, k, v } => {
+                    if sm.rows() != sp.out_rows || v.cols != sp.out_cols {
+                        return Err(ChainError::new(format!(
+                            "step {s}: attention output is {}x{} but the plan expects {}x{}",
+                            sm.rows(),
+                            v.cols,
+                            sp.out_rows,
+                            sp.out_cols
+                        )));
+                    }
+                    if k.rows != sm.cols() || v.rows != sm.cols() || k.cols != in_c {
+                        return Err(ChainError::new(format!(
+                            "step {s}: K ({}x{}) / V ({}x{}) do not conform to the {}-col \
+                             sampling pattern and the {in_c}-wide flow",
+                            k.rows,
+                            k.cols,
+                            v.rows,
+                            v.cols,
+                            sm.cols()
+                        )));
+                    }
+                }
             }
             (in_r, in_c) = (sp.out_rows, sp.out_cols);
             steps.push(ChainStepExec {
@@ -561,43 +886,33 @@ impl<T: Scalar> ChainExec<T> {
             out_rows,
             out_cols,
             out_format: plan.out_format(),
+            stats: plan.stats.clone(),
         })
     }
 
     /// Plan (with a private dedup map) and bind in one call, for a
-    /// **dense** chain input. The element width of `params` is forced
-    /// to `T`'s.
+    /// **dense** chain input.
+    #[deprecated(note = "assemble chains with `ChainBuilder::dense(..).steps(..).build(..)`")]
     pub fn plan_and_build(
         ops: Vec<ChainStepOp<T>>,
         in_rows: usize,
         in_cols: usize,
-        mut params: SchedulerParams,
+        params: SchedulerParams,
     ) -> Result<Self, ChainError> {
-        params.elem_bytes = T::BYTES;
-        let plan = {
-            let specs = chain_specs(&ops, in_rows, in_cols)?;
-            crate::scheduler::chain::ChainPlanner::new(params).plan(in_rows, in_cols, &specs)?
-        };
-        Self::new(ops, &plan)
+        ChainBuilder::dense(in_rows, in_cols).steps(ops).build(params)
     }
 
-    /// [`ChainExec::plan_and_build`] for a **sparse** chain input (the
-    /// SpGEMM chains): `in_nnz` seeds the planner's density estimate —
-    /// pass a representative input's nonzero count.
+    /// `plan_and_build` for a **sparse** chain input (the SpGEMM
+    /// chains): `in_nnz` seeds the planner's density estimate.
+    #[deprecated(note = "assemble chains with `ChainBuilder::sparse(..).steps(..).build(..)`")]
     pub fn plan_and_build_sparse(
         ops: Vec<ChainStepOp<T>>,
         in_rows: usize,
         in_cols: usize,
         in_nnz: usize,
-        mut params: SchedulerParams,
+        params: SchedulerParams,
     ) -> Result<Self, ChainError> {
-        params.elem_bytes = T::BYTES;
-        let plan = {
-            let specs = chain_specs(&ops, in_rows, in_cols)?;
-            crate::scheduler::chain::ChainPlanner::new(params)
-                .plan_input(ChainInputMeta::sparse(in_rows, in_cols, in_nnz), &specs)?
-        };
-        Self::new(ops, &plan)
+        ChainBuilder::sparse(in_rows, in_cols, in_nnz).steps(ops).build(params)
     }
 
     pub fn n_steps(&self) -> usize {
@@ -638,6 +953,12 @@ impl<T: Scalar> ChainExec<T> {
     /// binding never deep-copies stationary operands).
     pub fn step_op(&self, step: usize) -> &ChainStepOp<T> {
         &self.steps[step].op
+    }
+
+    /// Plan statistics captured when this executor was bound (schedule
+    /// dedup counts, sparse-output step counts, …).
+    pub fn stats(&self) -> &ChainStats {
+        &self.stats
     }
 
     /// Override one step's executor strategy (pair steps; sparse-flow
@@ -718,15 +1039,16 @@ impl<T: Scalar> ChainExec<T> {
         self.steps[step].drop_tol = tol;
     }
 
-    /// Copy fresh weights into a [`ChainStepOp::GemmFlowB`] step (same
-    /// shape) — how a training loop updates parameters without rebinding
-    /// the chain. Copy-on-write through [`Arc::make_mut`]: a weight
-    /// `Arc` shared with a registry or another chain is cloned once on
-    /// first update, never mutated in place under a sharer. Panics if
-    /// the step has no stationary weights.
+    /// Copy fresh weights into a [`ChainStepOp::GemmFlowB`] or
+    /// [`ChainStepOp::FlowAMulB`] step (same shape) — how a training
+    /// loop updates parameters without rebinding the chain.
+    /// Copy-on-write through [`Arc::make_mut`]: a weight `Arc` shared
+    /// with a registry or another chain is cloned once on first update,
+    /// never mutated in place under a sharer. Panics if the step has no
+    /// stationary dense weights.
     pub fn set_weight(&mut self, step: usize, w: &Dense<T>) {
         match &mut self.steps[step].op {
-            ChainStepOp::GemmFlowB { w: slot, .. } => {
+            ChainStepOp::GemmFlowB { w: slot, .. } | ChainStepOp::FlowAMulB { b: slot } => {
                 assert_eq!(
                     (slot.rows, slot.cols),
                     (w.rows, w.cols),
@@ -734,7 +1056,34 @@ impl<T: Scalar> ChainExec<T> {
                 );
                 Arc::make_mut(slot).data.copy_from_slice(&w.data);
             }
-            _ => panic!("chain step {step} has no stationary weights (not GemmFlowB)"),
+            _ => panic!(
+                "chain step {step} has no stationary weights (not GemmFlowB/FlowAMulB)"
+            ),
+        }
+    }
+
+    /// Copy fresh `K`/`V` into a [`ChainStepOp::Attention`] step (same
+    /// shapes) — how a self-attention layer refreshes its projected
+    /// keys/values each forward without rebinding the chain.
+    /// Copy-on-write like [`ChainExec::set_weight`]. Panics if the step
+    /// is not an attention step.
+    pub fn set_attention_kv(&mut self, step: usize, k: &Dense<T>, v: &Dense<T>) {
+        match &mut self.steps[step].op {
+            ChainStepOp::Attention { k: ks, v: vs, .. } => {
+                assert_eq!(
+                    (ks.rows, ks.cols),
+                    (k.rows, k.cols),
+                    "K shape changed; rebuild the chain"
+                );
+                assert_eq!(
+                    (vs.rows, vs.cols),
+                    (v.rows, v.cols),
+                    "V shape changed; rebuild the chain"
+                );
+                Arc::make_mut(ks).data.copy_from_slice(&k.data);
+                Arc::make_mut(vs).data.copy_from_slice(&v.data);
+            }
+            _ => panic!("chain step {step} is not an attention step"),
         }
     }
 
@@ -1001,6 +1350,29 @@ impl<T: Scalar> ChainExec<T> {
                         None,
                         0,
                         0,
+                    ),
+                    ChainStepOp::SddmmQK { .. } => (
+                        // Pattern known at bind time: a shell clone
+                        // node, then numeric row blocks gated by their
+                        // own (identity) flow reads.
+                        DagStepKind::FixedPatternSparse {
+                            out_rows: step.out_rows,
+                            chunk: ROW_CHUNK,
+                        },
+                        DagReads::Identity,
+                        None,
+                        0,
+                        0,
+                    ),
+                    ChainStepOp::Attention { s: sm, .. } => (
+                        DagStepKind::RowBlocks { out_rows: step.out_rows, chunk: ROW_CHUNK },
+                        DagReads::Identity,
+                        None,
+                        0,
+                        // Attention rows score into the shared
+                        // per-worker strip scratch — size it to the
+                        // widest sampling-pattern row.
+                        (0..sm.rows()).map(|i| sm.pattern.row_nnz(i)).max().unwrap_or(0),
                     ),
                 };
                 descs.push(DagStepDesc { kind, reads, boundary });
@@ -1388,13 +1760,26 @@ fn exec_node<T: Scalar>(
             let s = step as usize;
             let ctx = &ctxs[s];
             unsafe {
-                let v = &*ctx.src_sparse;
-                // Sole owner while this node runs: every Symbolic node
-                // of the step is a dependency, every Numeric a
+                // Sole owner while this node runs: every node that
+                // precedes the shell is a dependency, every Numeric a
                 // dependent.
                 let out = &mut *ctx.dst_sparse;
-                let counts = std::slice::from_raw_parts(ctx.row_nnz as *const usize, ctx.out_rows);
-                out.reset_from_row_counts(ctx.out_rows, v.cols(), counts);
+                match &steps[s].op {
+                    ChainStepOp::SpgemmFlow { .. } => {
+                        let v = &*ctx.src_sparse;
+                        let counts =
+                            std::slice::from_raw_parts(ctx.row_nnz as *const usize, ctx.out_rows);
+                        out.reset_from_row_counts(ctx.out_rows, v.cols(), counts);
+                    }
+                    ChainStepOp::SddmmQK { s: sm, .. } => {
+                        // Fixed pattern: clone the sampling pattern on
+                        // first use, reuse the allocation thereafter.
+                        if out.pattern != sm.pattern {
+                            *out = Csr::from_pattern(sm.pattern.clone(), T::ZERO);
+                        }
+                    }
+                    _ => unreachable!("shell node on a non-sparse-output step"),
+                }
                 // Publish the (possibly reallocated) CSR arrays to the
                 // step's Numeric nodes without handing them `&mut`
                 // aliases of the whole Csr.
@@ -1406,31 +1791,35 @@ fn exec_node<T: Scalar>(
         DagNode::Numeric { step, lo, hi } => {
             let s = step as usize;
             let ctx = &ctxs[s];
-            let a = match &steps[s].op {
-                ChainStepOp::SpgemmFlow { a, .. } => a,
-                _ => unreachable!("numeric node on a non-SpGEMM step"),
-            };
-            unsafe {
-                let v = &*ctx.src_sparse;
-                let (marks, touched, acc) = sws.merge_slots(w);
-                let indptr = std::slice::from_raw_parts(
-                    ctx.sp_indptr.load(Ordering::Acquire) as *const usize,
-                    ctx.out_rows + 1,
-                );
-                let idx = ctx.sp_idx.load(Ordering::Acquire);
-                let val = ctx.sp_val.load(Ordering::Acquire);
-                spgemm_numeric_rows(
-                    a,
-                    v,
-                    lo as usize..hi as usize,
-                    marks,
-                    touched,
-                    acc,
-                    ctx.drop_tol,
-                    indptr,
-                    idx,
-                    val,
-                );
+            match &steps[s].op {
+                ChainStepOp::SpgemmFlow { a, .. } => unsafe {
+                    let v = &*ctx.src_sparse;
+                    let (marks, touched, acc) = sws.merge_slots(w);
+                    let indptr = std::slice::from_raw_parts(
+                        ctx.sp_indptr.load(Ordering::Acquire) as *const usize,
+                        ctx.out_rows + 1,
+                    );
+                    let idx = ctx.sp_idx.load(Ordering::Acquire);
+                    let val = ctx.sp_val.load(Ordering::Acquire);
+                    spgemm_numeric_rows(
+                        a,
+                        v,
+                        lo as usize..hi as usize,
+                        marks,
+                        touched,
+                        acc,
+                        ctx.drop_tol,
+                        indptr,
+                        idx,
+                        val,
+                    );
+                },
+                ChainStepOp::SddmmQK { s: sm, k } => unsafe {
+                    let q = &*ctx.src_dense;
+                    let val = ctx.sp_val.load(Ordering::Acquire);
+                    sddmm_value_rows(&sm.pattern, q, k, lo as usize..hi as usize, val);
+                },
+                _ => unreachable!("numeric node on a non-sparse-output step"),
             }
         }
         DagNode::Rows { step, lo, hi } => {
@@ -1449,6 +1838,10 @@ fn exec_node<T: Scalar>(
                             let v = &*ctx.src_dense;
                             gemm_dense_rows(v.data.as_ptr(), v.cols, b, r, ctx.dst_dense);
                         }
+                    }
+                    ChainStepOp::Attention { s: sm, k, v } => {
+                        let q = &*ctx.src_dense;
+                        attention_rows(&sm.pattern, k, v, q, r, ctx.dst_dense, scratch.get(w));
                     }
                     _ => unreachable!("row-block node on a pair step"),
                 }
@@ -1534,6 +1927,12 @@ fn run_step<T: Scalar>(
         (ChainStepOp::FlowAMulB { b }, ChainIn::Dense(v), ChainOut::Dense(out)) => {
             run_dense_times_dense(pool, v, b, out)
         }
+        (ChainStepOp::SddmmQK { s, k }, ChainIn::Dense(q), ChainOut::Sparse(out)) => {
+            run_sddmm(pool, &s.pattern, q, k, out)
+        }
+        (ChainStepOp::Attention { s, k, v }, ChainIn::Dense(q), ChainOut::Dense(out)) => {
+            run_attention(pool, &s.pattern, k, v, q, ws, out)
+        }
         _ => unreachable!("step kind / flow format mismatch survived bind validation"),
     }
 }
@@ -1581,7 +1980,7 @@ mod tests {
             let x = Dense::<f64>::randn(a.rows(), 8, 3);
             let expect = chain_reference(&ops, &x);
             let mut chain =
-                ChainExec::plan_and_build(ops, a.rows(), 8, params_small()).unwrap();
+                ChainBuilder::dense(a.rows(), 8).steps(ops).build(params_small()).unwrap();
             let pool = ThreadPool::new(3);
             let mut y = Dense::zeros(a.rows(), 8);
             chain.run(&pool, &x, &mut y);
@@ -1608,7 +2007,7 @@ mod tests {
             .collect();
         let x = Dense::<f64>::randn(128, widths[0], 4);
         let expect = chain_reference(&ops, &x);
-        let mut chain = ChainExec::plan_and_build(ops, 128, widths[0], params_small()).unwrap();
+        let mut chain = ChainBuilder::dense(128, widths[0]).steps(ops).build(params_small()).unwrap();
         let pool = ThreadPool::new(2);
         let mut y = Dense::zeros(128, *widths.last().unwrap());
         chain.run(&pool, &x, &mut y);
@@ -1642,7 +2041,7 @@ mod tests {
         ];
         let x = Dense::<f64>::randn(30, 6, 12);
         let expect = chain_reference(&ops, &x);
-        let mut chain = ChainExec::plan_and_build(ops, 30, 6, params_small()).unwrap();
+        let mut chain = ChainBuilder::dense(30, 6).steps(ops).build(params_small()).unwrap();
         chain.set_strategies(&[StepStrategy::Fused, StepStrategy::Unfused, StepStrategy::Fused]);
         let pool = ThreadPool::new(2);
         let mut y = Dense::zeros(30, 5);
@@ -1659,7 +2058,7 @@ mod tests {
             a: Arc::clone(&a),
             w: Arc::new(Dense::zeros(4, 3)),
         }];
-        let mut chain = ChainExec::plan_and_build(ops, 40, 4, params_small()).unwrap();
+        let mut chain = ChainBuilder::dense(40, 4).steps(ops).build(params_small()).unwrap();
         let pool = ThreadPool::new(2);
         let mut y = Dense::zeros(40, 3);
         for seed in 0..4 {
@@ -1684,7 +2083,7 @@ mod tests {
             ChainStepOp::GemmFlowC { a: Arc::clone(&a), b: Arc::clone(&b) },
             ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Arc::clone(&w) },
         ];
-        let chain = ChainExec::plan_and_build(ops, 20, 4, params_small()).unwrap();
+        let chain = ChainBuilder::dense(20, 4).steps(ops).build(params_small()).unwrap();
         match chain.step_op(0) {
             ChainStepOp::GemmFlowC { a: sa, b: sb } => {
                 assert!(Arc::ptr_eq(sa, &a), "A deep-copied on bind");
@@ -1708,13 +2107,10 @@ mod tests {
         let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(16, &[1]), 1, -1.0, 1.0));
         let w = Arc::new(Dense::<f64>::randn(4, 3, 5));
         let mk = || {
-            ChainExec::plan_and_build(
-                vec![ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Arc::clone(&w) }],
-                16,
-                4,
-                params_small(),
-            )
-            .unwrap()
+            ChainBuilder::dense(16, 4)
+                .step(ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Arc::clone(&w) })
+                .build(params_small())
+                .unwrap()
         };
         let mut c1 = mk();
         let c2 = mk();
@@ -1741,7 +2137,7 @@ mod tests {
             ChainStepOp::FlowAMulB { b: Arc::clone(&x) },
         ];
         let mut chain =
-            ChainExec::plan_and_build_sparse(ops, a.rows(), a.cols(), a.nnz(), params_small())
+            ChainBuilder::sparse(a.rows(), a.cols(), a.nnz()).steps(ops).build(params_small())
                 .unwrap();
         assert_eq!(chain.in_format(), StepOutput::SparseCsr);
         assert_eq!(chain.out_format(), StepOutput::Dense);
@@ -1768,7 +2164,7 @@ mod tests {
             ChainStepOp::SpmmFlowC { a: Arc::clone(&a2), b: Arc::clone(&a2) },
         ];
         let mut chain =
-            ChainExec::plan_and_build_sparse(ops, 40, 40, a.nnz(), params_small()).unwrap();
+            ChainBuilder::sparse(40, 40, a.nnz()).steps(ops).build(params_small()).unwrap();
         assert_eq!(chain.step_output(0), StepOutput::Dense);
         assert_eq!(chain.step_kind(0), PlannedStep::Spgemm);
         let pool = ThreadPool::new(2);
@@ -1789,7 +2185,7 @@ mod tests {
             ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::SparseCsr },
         ];
         let mut chain =
-            ChainExec::plan_and_build_sparse(ops, 32, 32, a.nnz(), params_small()).unwrap();
+            ChainBuilder::sparse(32, 32, a.nnz()).steps(ops).build(params_small()).unwrap();
         assert_eq!(chain.out_format(), StepOutput::SparseCsr);
         let pool = ThreadPool::new(2);
         let mut out = Csr::<f64>::empty(0, 0);
@@ -1809,7 +2205,7 @@ mod tests {
             ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
         ];
         let x = Dense::<f64>::randn(16, 4, 1);
-        let mut chain = ChainExec::plan_and_build(ops, 16, 4, params_small()).unwrap();
+        let mut chain = ChainBuilder::dense(16, 4).steps(ops).build(params_small()).unwrap();
         let pool = ThreadPool::new(1);
         let mut y = Dense::zeros(16, 4);
         let mut taps = Vec::new();
@@ -1835,7 +2231,7 @@ mod tests {
         ];
         let x = Dense::<f64>::randn(24, 4, 7);
         let expect = chain_reference(&ops, &x);
-        let mut chain = ChainExec::plan_and_build(ops, 24, 4, params_small()).unwrap();
+        let mut chain = ChainBuilder::dense(24, 4).steps(ops).build(params_small()).unwrap();
         let pool = ThreadPool::new(2);
         let mut y = Dense::zeros(24, 4);
 
@@ -1872,7 +2268,7 @@ mod tests {
         let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(10, &[1]), 1, -1.0, 1.0));
         // weights expect a 6-col flow but the input has 5 cols.
         let ops = vec![ChainStepOp::GemmFlowB { a, w: Arc::new(Dense::zeros(6, 3)) }];
-        let err = ChainExec::plan_and_build(ops, 10, 5, params_small()).unwrap_err();
+        let err = ChainBuilder::dense(10, 5).steps(ops).build(params_small()).unwrap_err();
         assert!(err.to_string().contains("flowing value"), "{err}");
     }
 
@@ -1884,13 +2280,13 @@ mod tests {
             a: Arc::clone(&a),
             output: StepOutputMode::Auto,
         }];
-        let err = ChainExec::plan_and_build(ops, 12, 12, params_small()).unwrap_err();
+        let err = ChainBuilder::dense(12, 12).steps(ops).build(params_small()).unwrap_err();
         assert!(err.to_string().contains("sparse flowing value"), "{err}");
 
         // A pair step planned against a sparse input must fail.
         let ops = vec![ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) }];
         let err =
-            ChainExec::plan_and_build_sparse(ops, 12, 12, a.nnz(), params_small()).unwrap_err();
+            ChainBuilder::sparse(12, 12, a.nnz()).steps(ops).build(params_small()).unwrap_err();
         assert!(err.to_string().contains("dense flowing value"), "{err}");
     }
 
@@ -1915,14 +2311,10 @@ mod tests {
             a: Arc::clone(&a),
             output: StepOutputMode::SparseCsr,
         }];
-        let mut chain = ChainExec::plan_and_build_sparse(
-            ops,
-            x.rows(),
-            x.cols(),
-            x.nnz(),
-            params_small(),
-        )
-        .expect("bind spgemm chain");
+        let mut chain = ChainBuilder::sparse(x.rows(), x.cols(), x.nnz())
+            .steps(ops)
+            .build(params_small())
+            .expect("bind spgemm chain");
         let pool = ThreadPool::new(3);
         for tol in [0.0, 0.05] {
             chain.set_drop_tol(0, tol);
@@ -1944,7 +2336,7 @@ mod tests {
                 .map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
                 .collect();
             let x = Dense::<f64>::randn(a.rows(), 8, 3);
-            let mut chain = ChainExec::plan_and_build(ops, a.rows(), 8, params_small()).unwrap();
+            let mut chain = ChainBuilder::dense(a.rows(), 8).steps(ops).build(params_small()).unwrap();
             assert_eq!(chain.boundary(0), StepBoundary::Barrier);
             for s in 1..len {
                 assert_eq!(chain.boundary(s), StepBoundary::Pipelined, "step {s}");
@@ -1982,7 +2374,7 @@ mod tests {
             })
             .collect();
         let x = Dense::<f64>::randn(128, widths[0], 4);
-        let mut chain = ChainExec::plan_and_build(ops, 128, widths[0], params_small()).unwrap();
+        let mut chain = ChainBuilder::dense(128, widths[0]).steps(ops).build(params_small()).unwrap();
         for s in 1..chain.n_steps() {
             assert_eq!(chain.boundary(s), StepBoundary::Pipelined, "step {s}");
         }
@@ -2024,7 +2416,7 @@ mod tests {
             ChainStepOp::GemmFlowB { a: Arc::clone(&a3), w },
         ];
         let x = Dense::<f64>::randn(30, 6, 12);
-        let mut chain = ChainExec::plan_and_build(ops, 30, 6, params_small()).unwrap();
+        let mut chain = ChainBuilder::dense(30, 6).steps(ops).build(params_small()).unwrap();
         assert_eq!(chain.boundary(1), StepBoundary::Barrier, "read-all step stays barriered");
         assert_eq!(chain.boundary(2), StepBoundary::Pipelined);
         chain.set_strategies(&[StepStrategy::Unfused, StepStrategy::Fused, StepStrategy::Fused]);
@@ -2047,7 +2439,7 @@ mod tests {
             ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::SparseCsr },
         ];
         let mut chain =
-            ChainExec::plan_and_build_sparse(ops, 48, 48, a.nnz(), params_small()).unwrap();
+            ChainBuilder::sparse(48, 48, a.nnz()).steps(ops).build(params_small()).unwrap();
         assert_eq!(chain.boundary(1), StepBoundary::Pipelined);
         for threads in [1usize, 3] {
             let pool = ThreadPool::new(threads);
@@ -2066,7 +2458,7 @@ mod tests {
             ChainStepOp::FlowAMulB { b: Arc::clone(&xd) },
         ];
         let mut chain =
-            ChainExec::plan_and_build_sparse(ops, 48, 48, a.nnz(), params_small()).unwrap();
+            ChainBuilder::sparse(48, 48, a.nnz()).steps(ops).build(params_small()).unwrap();
         let pool = ThreadPool::new(3);
         let mut expect = Dense::zeros(48, 8);
         chain.run_io(&pool, ChainIn::Sparse(&a), ChainOut::Dense(&mut expect));
@@ -2084,7 +2476,7 @@ mod tests {
             ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
         ];
         let x = Dense::<f64>::randn(24, 4, 7);
-        let mut chain = ChainExec::plan_and_build(ops, 24, 4, params_small()).unwrap();
+        let mut chain = ChainBuilder::dense(24, 4).steps(ops).build(params_small()).unwrap();
         let pool = ThreadPool::new(2);
         let mut expect = Dense::zeros(24, 4);
         chain.run(&pool, &x, &mut expect);
@@ -2125,7 +2517,7 @@ mod tests {
             ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
         ];
         let x = Dense::<f64>::randn(20, 4, 1);
-        let mut chain = ChainExec::plan_and_build(ops, 20, 4, params_small()).unwrap();
+        let mut chain = ChainBuilder::dense(20, 4).steps(ops).build(params_small()).unwrap();
         let pool = ThreadPool::new(2);
         let mut expect = Dense::zeros(20, 4);
         chain.run(&pool, &x, &mut expect);
@@ -2147,7 +2539,7 @@ mod tests {
 
         // A single-step chain can never pipeline.
         let one = vec![ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) }];
-        let single = ChainExec::plan_and_build(one, 20, 4, params_small()).unwrap();
+        let single = ChainBuilder::dense(20, 4).steps(one).build(params_small()).unwrap();
         assert!(!single.can_pipeline());
     }
 
@@ -2159,7 +2551,7 @@ mod tests {
             ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
             ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
         ];
-        let mut chain = ChainExec::plan_and_build(ops, 10, 4, params_small()).unwrap();
+        let mut chain = ChainBuilder::dense(10, 4).steps(ops).build(params_small()).unwrap();
         chain.set_boundary(0, StepBoundary::Pipelined);
     }
 
@@ -2198,5 +2590,212 @@ mod tests {
         let err = ChainExec::new(vec![ChainStepOp::SpmmFlowC { a, b: b_bad }], &plan)
             .unwrap_err();
         assert!(err.to_string().contains("stationary B is 9x9"), "{err}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_delegate_to_the_builder() {
+        // The old constructors are thin wrappers over ChainBuilder: a
+        // chain assembled either way must plan identically and produce
+        // bitwise-identical output.
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(24, &[1, 3]), 2, -1.0, 1.0));
+        let w = Arc::new(Dense::<f64>::randn(6, 4, 7));
+        let mk_ops = || {
+            vec![
+                ChainStepOp::GemmFlowB { a: Arc::clone(&a), w: Arc::clone(&w) },
+                ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
+            ]
+        };
+        let mut old = ChainExec::plan_and_build(mk_ops(), 24, 6, params_small()).unwrap();
+        let mut new = ChainBuilder::dense(24, 6).steps(mk_ops()).build(params_small()).unwrap();
+        assert_eq!(old.boundary(1), new.boundary(1));
+        let x = Dense::<f64>::randn(24, 6, 2);
+        let pool = ThreadPool::new(3);
+        let mut y_old = Dense::zeros(24, 4);
+        let mut y_new = Dense::zeros(24, 4);
+        old.run(&pool, &x, &mut y_old);
+        new.run(&pool, &x, &mut y_new);
+        assert_eq!(y_old.data, y_new.data);
+
+        // Sparse-input shim.
+        let mk_sp = || {
+            vec![ChainStepOp::SpgemmFlow {
+                a: Arc::clone(&a),
+                output: StepOutputMode::SparseCsr,
+            }]
+        };
+        let mut old =
+            ChainExec::plan_and_build_sparse(mk_sp(), 24, 24, a.nnz(), params_small()).unwrap();
+        let mut new =
+            ChainBuilder::sparse(24, 24, a.nnz()).steps(mk_sp()).build(params_small()).unwrap();
+        let mut s_old = Csr::<f64>::empty(0, 0);
+        let mut s_new = Csr::<f64>::empty(0, 0);
+        old.run_io(&pool, ChainIn::Sparse(&a), ChainOut::Sparse(&mut s_old));
+        new.run_io(&pool, ChainIn::Sparse(&a), ChainOut::Sparse(&mut s_new));
+        assert_eq!(s_old, s_new);
+    }
+
+    #[test]
+    fn builder_knobs_apply_to_the_declaring_step() {
+        // drop_tol declared at assembly equals the post-bind setter path.
+        let a = Arc::new(Csr::<f64>::with_random_values(
+            gen::erdos_renyi(32, 3, 7),
+            3,
+            -1.0,
+            1.0,
+        ));
+        let x =
+            Csr::<f64>::with_random_values(crate::sparse::gen::uniform_random(32, 20, 3, 11), 5, -1.0, 1.0);
+        let mut chain = ChainBuilder::sparse(x.rows(), x.cols(), x.nnz())
+            .step(ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::SparseCsr })
+            .drop_tol(0.05)
+            .build(params_small())
+            .unwrap();
+        let pool = ThreadPool::new(2);
+        let mut out = Csr::<f64>::empty(0, 0);
+        chain.run_io(&pool, ChainIn::Sparse(&x), ChainOut::Sparse(&mut out));
+        assert_eq!(out, spgemm(&a, &x, 0.05));
+
+        // An explicit Barrier boundary on a later step disables pipelining.
+        let ops = ChainBuilder::dense(32, 4)
+            .step(ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+            .step(ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+            .boundary(StepBoundary::Barrier)
+            .strategy(StepStrategy::Unfused)
+            .strip(StripMode::Full)
+            .build(params_small())
+            .unwrap();
+        assert_eq!(ops.boundary(1), StepBoundary::Barrier);
+        assert!(!ops.can_pipeline());
+    }
+
+    #[test]
+    fn builder_rejects_pipelined_entry_on_step_zero() {
+        let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(10, &[1]), 1, -1.0, 1.0));
+        let err = ChainBuilder::dense(10, 4)
+            .step(ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+            .boundary(StepBoundary::Pipelined)
+            .step(ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+            .build(params_small())
+            .unwrap_err();
+        assert!(err.to_string().contains("step 0 always enters behind a barrier"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "strip() before any step()")]
+    fn builder_modifier_before_any_step_panics() {
+        let _ = ChainBuilder::<f64>::dense(8, 4).strip(StripMode::Full);
+    }
+
+    #[test]
+    fn sddmm_chain_step_matches_the_kernel_bitwise() {
+        // One SddmmQK step: dense Q flows in, the sampled score matrix
+        // flows out on S's exact pattern, at every thread count.
+        let s = Arc::new(Csr::<f64>::with_random_values(gen::erdos_renyi(48, 4, 13), 1, -1.0, 1.0));
+        let d = 12;
+        let k = Arc::new(Dense::<f64>::randn(48, d, 3));
+        let q = Dense::<f64>::randn(48, d, 4);
+        let expect = crate::kernels::sddmm(&s.pattern, &q, &k);
+        let mut chain = ChainBuilder::dense(48, d)
+            .step(ChainStepOp::SddmmQK { s: Arc::clone(&s), k: Arc::clone(&k) })
+            .build(params_small())
+            .unwrap();
+        assert_eq!(chain.out_format(), StepOutput::SparseCsr);
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut out = Csr::<f64>::empty(0, 0);
+            chain.run_io(&pool, ChainIn::Dense(&q), ChainOut::Sparse(&mut out));
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn attention_chain_step_matches_the_driver_bitwise() {
+        // One fused Attention step == the standalone run_attention
+        // driver (itself bitwise vs the dense oracle), any thread count.
+        let s = Arc::new(Csr::<f64>::with_random_values(gen::erdos_renyi(40, 5, 19), 1, -1.0, 1.0));
+        let (d, vc) = (8, 6);
+        let k = Arc::new(Dense::<f64>::randn(40, d, 5));
+        let v = Arc::new(Dense::<f64>::randn(40, vc, 6));
+        let q = Dense::<f64>::randn(40, d, 7);
+        let pool1 = ThreadPool::new(1);
+        let mut ws = StripWs::new();
+        let mut expect = Dense::zeros(40, vc);
+        run_attention(&pool1, &s.pattern, &k, &v, &q, &mut ws, &mut expect);
+        let mut chain = ChainBuilder::dense(40, d)
+            .step(ChainStepOp::Attention {
+                s: Arc::clone(&s),
+                k: Arc::clone(&k),
+                v: Arc::clone(&v),
+            })
+            .build(params_small())
+            .unwrap();
+        for threads in [1usize, 2, 3] {
+            let pool = ThreadPool::new(threads);
+            let mut y = Dense::zeros(40, vc);
+            chain.run(&pool, &q, &mut y);
+            assert_eq!(y.data, expect.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pipelined_attention_chain_matches_barriered_bitwise() {
+        // GAT-style forward: Q = H W (pure GeMM), then fused
+        // SDDMM→softmax→SpMM. The attention step reads flow row i only,
+        // so the planner pipelines it; results must match the barriered
+        // run bit for bit.
+        let n = 64;
+        let (f, d, vc) = (10, 8, 6);
+        let s = Arc::new(Csr::<f64>::with_random_values(gen::erdos_renyi(n, 4, 23), 1, -1.0, 1.0));
+        let w = Arc::new(Dense::<f64>::randn(f, d, 8));
+        let k = Arc::new(Dense::<f64>::randn(n, d, 9));
+        let v = Arc::new(Dense::<f64>::randn(n, vc, 10));
+        let h = Dense::<f64>::randn(n, f, 11);
+        let mut chain = ChainBuilder::dense(n, f)
+            .step(ChainStepOp::FlowAMulB { b: Arc::clone(&w) })
+            .step(ChainStepOp::Attention {
+                s: Arc::clone(&s),
+                k: Arc::clone(&k),
+                v: Arc::clone(&v),
+            })
+            .build(params_small())
+            .unwrap();
+        assert_eq!(chain.boundary(1), StepBoundary::Pipelined);
+        for threads in [1usize, 3] {
+            let pool = ThreadPool::new(threads);
+            let mut expect = Dense::zeros(n, vc);
+            chain.run(&pool, &h, &mut expect);
+            let mut got = Dense::zeros(n, vc);
+            chain.run_pipelined(&pool, &h, &mut got);
+            assert_eq!(got.data, expect.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pipelined_sddmm_chain_matches_barriered_bitwise() {
+        // Dense projection then a sparse-output SDDMM tail: the SDDMM
+        // step's shell node re-shapes the output CSR while upstream row
+        // chunks are still draining (FixedPatternSparse DAG kind).
+        let n = 48;
+        let (f, d) = (9, 7);
+        let s = Arc::new(Csr::<f64>::with_random_values(gen::erdos_renyi(n, 3, 29), 1, -1.0, 1.0));
+        let w = Arc::new(Dense::<f64>::randn(f, d, 12));
+        let k = Arc::new(Dense::<f64>::randn(n, d, 13));
+        let h = Dense::<f64>::randn(n, f, 14);
+        let mut chain = ChainBuilder::dense(n, f)
+            .step(ChainStepOp::FlowAMulB { b: Arc::clone(&w) })
+            .step(ChainStepOp::SddmmQK { s: Arc::clone(&s), k: Arc::clone(&k) })
+            .build(params_small())
+            .unwrap();
+        assert_eq!(chain.boundary(1), StepBoundary::Pipelined);
+        for threads in [1usize, 3] {
+            let pool = ThreadPool::new(threads);
+            let mut expect = Csr::<f64>::empty(0, 0);
+            chain.run_io(&pool, ChainIn::Dense(&h), ChainOut::Sparse(&mut expect));
+            let mut got = Csr::<f64>::empty(0, 0);
+            chain.run_pipelined_io(&pool, ChainIn::Dense(&h), ChainOut::Sparse(&mut got));
+            assert_eq!(got, expect, "threads={threads}");
+            assert!(got.check_invariants());
+        }
     }
 }

@@ -29,19 +29,24 @@ pub mod fused;
 pub mod overlapped;
 pub mod pool;
 pub mod reference;
+pub mod sddmm;
 pub mod spgemm;
 pub mod strip;
 pub mod tensor_style;
 pub mod unfused;
 
 pub use atomic_tiling::AtomicTiling;
-pub use chain::{chain_specs, ChainExec, ChainIn, ChainOut, ChainStepOp, StepControl, StepStrategy};
+pub use chain::{
+    chain_specs, ChainBuilder, ChainExec, ChainIn, ChainOut, ChainStepOp, StepControl,
+    StepStrategy,
+};
 pub use fused::Fused;
 pub use overlapped::Overlapped;
 pub use pool::{
     run_dag_segment, DagRun, DagSpec, Lease, PoolLease, PoolShard, SharedPool, ThreadPool,
     WorkerScratch,
 };
+pub use sddmm::{run_attention, run_sddmm};
 pub use spgemm::{run_spgemm, run_spgemm_dense, SpgemmWs};
 pub use strip::{StripMode, StripWs};
 pub use tensor_style::TensorStyle;

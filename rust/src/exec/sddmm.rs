@@ -1,0 +1,218 @@
+//! Row-parallel SDDMM and fused sparse-attention executors.
+//!
+//! Two drivers behind the chain's attention-family steps:
+//!
+//! - [`run_sddmm`] — `out = S ⊙ (Q·Kᵀ)`: the output pattern **is** the
+//!   sampling pattern, known before any numeric work, so unlike SpGEMM
+//!   there is no symbolic phase — rows scatter straight into their
+//!   disjoint value slots.
+//! - [`run_attention`] — the fused SDDMM → row-softmax → SpMM of a
+//!   graph-attention forward. Each output row's attention scores live
+//!   in a per-worker scratch strip sized to the widest pattern row:
+//!   scored, normalized and consumed by the value combine while still
+//!   cache-resident, never materializing the `n × n` score matrix (nor
+//!   even its sparse form) in memory.
+//!
+//! Both are deterministic at any thread count: every output row is
+//! produced by exactly one worker running the serial kernel sequence,
+//! so results are bitwise-identical to the serial oracle (and across
+//! every backend, by the kernel layer's parity contract). The row-range
+//! functions are `pub(crate)` so `exec::chain`'s cross-step DAG can
+//! schedule the same bodies as pipelined row-block nodes.
+
+use super::pool::ThreadPool;
+use super::spgemm::ROW_CHUNK;
+use super::strip::StripWs;
+use super::SendPtr;
+use crate::core::{Dense, Scalar};
+use crate::kernels::backend::scalar::axpy_tail;
+use crate::kernels::{sddmm_row, softmax_row};
+use crate::sparse::{Csr, Pattern};
+
+/// SDDMM value rows `r`: `val[s.indptr[i]..][x] = Q[i, :] · K[cols[x], :]`
+/// for each sampled column of row `i`. Row slots are disjoint, so
+/// concurrent callers need no synchronization.
+///
+/// # Safety
+/// `val` points at a value buffer laid out by `s`'s `indptr` (at least
+/// `s.nnz()` elements); rows `r` have no concurrent writer. `Q` rows
+/// `r` and every `K` row named by `s`'s columns are final.
+pub(crate) unsafe fn sddmm_value_rows<T: Scalar>(
+    s: &Pattern,
+    q: &Dense<T>,
+    k: &Dense<T>,
+    r: std::ops::Range<usize>,
+    val: *mut T,
+) {
+    for i in r {
+        let (lo, hi) = (s.indptr[i], s.indptr[i + 1]);
+        let out = std::slice::from_raw_parts_mut(val.add(lo), hi - lo);
+        sddmm_row(&s.indices[lo..hi], q.row(i), k, out);
+    }
+}
+
+/// Fused attention rows `r`: score (`sddmm_row`), normalize
+/// (`softmax_row`) and combine (`Σ_x p[x] · V[cols[x], :]`) one row at
+/// a time through `scratch`, writing `out[i, :]` into a dense
+/// row-major buffer of `v.cols` columns.
+///
+/// The combine runs the shared k-major tail helper
+/// ([`axpy_tail`]), whose per-output accumulation order is exactly the
+/// SpMM row kernel's — so the fused result is bitwise-identical to an
+/// unfused SDDMM → softmax → SpMM sequence.
+///
+/// # Safety
+/// `d` points at an `s.rows() × v.cols` row-major buffer; rows `r`
+/// have no concurrent writer. `scratch` is this worker's exclusive
+/// scratch, at least as long as the widest pattern row in `r`. `Q`
+/// rows `r` and every `K`/`V` row named by `s`'s columns are final.
+pub(crate) unsafe fn attention_rows<T: Scalar>(
+    s: &Pattern,
+    k: &Dense<T>,
+    v: &Dense<T>,
+    q: &Dense<T>,
+    r: std::ops::Range<usize>,
+    d: *mut T,
+    scratch: &mut [T],
+) {
+    let ccol = v.cols;
+    for i in r {
+        let cols = s.row(i);
+        let scores = &mut scratch[..cols.len()];
+        sddmm_row(cols, q.row(i), k, scores);
+        softmax_row(scores);
+        let out = std::slice::from_raw_parts_mut(d.add(i * ccol), ccol);
+        out.iter_mut().for_each(|x| *x = T::ZERO);
+        axpy_tail(cols.iter().zip(scores.iter()).map(|(&c, &p)| (p, v.row(c as usize))), out);
+    }
+}
+
+/// `out = S ⊙ (Q·Kᵀ)` with CSR output on `S`'s pattern (`S`'s values
+/// are ignored — Sputnik semantics). Reuses `out`'s allocations when it
+/// already carries the pattern; otherwise reshapes it. Deterministic at
+/// any thread count.
+pub fn run_sddmm<T: Scalar>(
+    pool: &ThreadPool,
+    s: &Pattern,
+    q: &Dense<T>,
+    k: &Dense<T>,
+    out: &mut Csr<T>,
+) {
+    assert_eq!(q.rows, s.rows, "Q must have one row per pattern row");
+    assert_eq!(k.rows, s.cols, "K must have one row per pattern column");
+    assert_eq!(q.cols, k.cols, "Q and K must share the inner dimension");
+    if out.pattern != *s {
+        *out = Csr::from_pattern(s.clone(), T::ZERO);
+    }
+    let val = SendPtr(out.data.as_mut_ptr());
+    pool.parallel_for_chunks(s.rows, ROW_CHUNK, |r, _| unsafe {
+        sddmm_value_rows(s, q, k, r, val.get());
+    });
+    debug_assert!(out.check_invariants(), "SDDMM output violates CSR invariants");
+}
+
+/// Fused graph-attention forward `out = softmax_row(S ⊙ (Q·Kᵀ)) · V`
+/// over sampling pattern `s` (`Q` = the flowing features, `K`/`V`
+/// stationary). Scores stay in per-worker scratch; see the module docs.
+/// Deterministic at any thread count.
+pub fn run_attention<T: Scalar>(
+    pool: &ThreadPool,
+    s: &Pattern,
+    k: &Dense<T>,
+    v: &Dense<T>,
+    q: &Dense<T>,
+    ws: &mut StripWs<T>,
+    out: &mut Dense<T>,
+) {
+    assert_eq!(q.rows, s.rows, "Q must have one row per pattern row");
+    assert_eq!(k.rows, s.cols, "K must have one row per pattern column");
+    assert_eq!(q.cols, k.cols, "Q and K must share the inner dimension");
+    assert_eq!(v.rows, s.cols, "V must have one row per pattern column");
+    assert_eq!((out.rows, out.cols), (s.rows, v.cols), "output shape");
+    let max_nnz = (0..s.rows).map(|i| s.row_nnz(i)).max().unwrap_or(0);
+    let (_, scratch) = ws.prepare(pool, max_nnz, 0);
+    let d = SendPtr(out.data.as_mut_ptr());
+    pool.parallel_for_chunks(s.rows, ROW_CHUNK, |r, w| unsafe {
+        attention_rows(s, k, v, q, r, d.get(), scratch.get(w));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels;
+    use crate::sparse::gen;
+
+    /// Unfused oracle: serial SDDMM, canonical per-row softmax, then a
+    /// k-order SpMM row combine — the sequence the fused driver must
+    /// match bitwise.
+    fn attention_oracle(s: &Pattern, k: &Dense<f64>, v: &Dense<f64>, q: &Dense<f64>) -> Dense<f64> {
+        let mut p = kernels::sddmm(s, q, k);
+        for i in 0..s.rows {
+            let (lo, hi) = (s.indptr[i], s.indptr[i + 1]);
+            kernels::softmax_row(&mut p.data[lo..hi]);
+        }
+        let mut out = Dense::zeros(s.rows, v.cols);
+        for i in 0..s.rows {
+            let (cols, vals) = p.row(i);
+            for (&c, &pv) in cols.iter().zip(vals) {
+                for (o, &x) in out.row_mut(i).iter_mut().zip(v.row(c as usize)) {
+                    *o += pv * x;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parallel_sddmm_matches_serial_bitwise() {
+        let s = gen::rmat(128, 5, gen::RmatKind::Graph500, 21);
+        let q = Dense::<f64>::randn(128, 24, 1);
+        let k = Dense::<f64>::randn(128, 24, 2);
+        let expect = kernels::sddmm(&s, &q, &k);
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut out = Csr::<f64>::empty(0, 0);
+            run_sddmm(&pool, &s, &q, &k, &mut out);
+            assert_eq!(out, expect, "threads={threads}");
+            // Re-run reuses the shaped output in place.
+            run_sddmm(&pool, &s, &q, &k, &mut out);
+            assert_eq!(out, expect);
+        }
+    }
+
+    #[test]
+    fn fused_attention_matches_unfused_oracle_bitwise() {
+        let s = gen::rmat(64, 6, gen::RmatKind::Graph500, 33);
+        let q = Dense::<f64>::randn(64, 17, 4);
+        let k = Dense::<f64>::randn(64, 17, 5);
+        let v = Dense::<f64>::randn(64, 11, 6);
+        let expect = attention_oracle(&s, &k, &v, &q);
+        for threads in [1usize, 3, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut ws = StripWs::new();
+            let mut out = Dense::full(64, 11, 9.0); // driver must overwrite
+            run_attention(&pool, &s, &k, &v, &q, &mut ws, &mut out);
+            assert!(
+                out.data.iter().zip(&expect.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn attention_handles_empty_rows() {
+        // Rows with no sampled columns (isolated nodes) produce zero
+        // output rows, not NaN.
+        let s = Pattern::new(3, 3, vec![0, 2, 2, 3], vec![0, 2, 1]);
+        let q = Dense::<f64>::randn(3, 4, 7);
+        let k = Dense::<f64>::randn(3, 4, 8);
+        let v = Dense::<f64>::randn(3, 2, 9);
+        let pool = ThreadPool::new(2);
+        let mut ws = StripWs::new();
+        let mut out = Dense::full(3, 2, 5.0);
+        run_attention(&pool, &s, &k, &v, &q, &mut ws, &mut out);
+        assert_eq!(out.row(1), &[0.0, 0.0]);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -6,11 +6,18 @@
 //! SpMM — precisely the pair tile fusion accelerates. Backward is again
 //! SpMM/GeMM chains (`Âᵀ = Â` for the symmetric-normalized adjacency),
 //! so training exercises the fused executor on every step.
+//!
+//! [`GatLayer`] is the attention-family counterpart: a dot-product
+//! graph-attention forward (`softmax_row(S ⊙ (Q·Kᵀ)) · V` on the edge
+//! set) running as one fused chain — the SDDMM/attention steps'
+//! end-to-end workload.
 
 pub mod data;
 pub mod model;
 pub mod ops;
 
 pub use data::{planted_labels, SyntheticGraph};
-pub use model::{Gcn, GcnLayer, TrainStats};
-pub use ops::{matmul_at_b, matmul_a_bt, relu, relu_grad_mask, softmax_xent, spmm_parallel};
+pub use model::{GatLayer, Gcn, GcnLayer, TrainStats};
+pub use ops::{
+    matmul, matmul_a_bt, matmul_at_b, relu, relu_grad_mask, softmax_xent, spmm_parallel,
+};

@@ -5,9 +5,8 @@
 use super::ops;
 use crate::core::{Dense, Scalar};
 use crate::coordinator::ScheduleCache;
-use crate::exec::chain::{chain_specs, ChainExec, ChainStepOp};
+use crate::exec::chain::{ChainBuilder, ChainExec, ChainStepOp};
 use crate::exec::{PairExec, PairOp, ThreadPool, Unfused};
-use crate::scheduler::chain::ChainPlanner;
 use crate::sparse::Csr;
 use std::sync::Arc;
 
@@ -102,7 +101,7 @@ impl<T: Scalar> Gcn<T> {
     /// the first forward (the chain is pattern- and shape-bound).
     fn forward_chain(&mut self, pool: &ThreadPool, x: &Dense<T>) -> Dense<T> {
         if self.chain.is_none() {
-            let ops_vec: Vec<ChainStepOp<T>> = self
+            let steps: Vec<ChainStepOp<T>> = self
                 .layers
                 .iter()
                 .map(|l| ChainStepOp::GemmFlowB {
@@ -110,15 +109,14 @@ impl<T: Scalar> Gcn<T> {
                     w: Arc::new(Dense::zeros(l.w.rows, l.w.cols)),
                 })
                 .collect();
-            let plan = {
-                let specs = chain_specs(&ops_vec, x.rows, x.cols).expect("GCN chain dims");
-                let planner = ChainPlanner::new(self.cache.params());
-                let cache = &mut self.cache;
-                planner
-                    .plan_with(x.rows, x.cols, &specs, |_, op| cache.get_or_build(op))
-                    .expect("GCN chain plan")
-            };
-            self.chain = Some(ChainExec::new(ops_vec, &plan).expect("bind GCN chain"));
+            let params = self.cache.params();
+            let cache = &mut self.cache;
+            self.chain = Some(
+                ChainBuilder::dense(x.rows, x.cols)
+                    .steps(steps)
+                    .build_with(params, |_, op| cache.get_or_build(op))
+                    .expect("bind GCN chain"),
+            );
         }
         let chain = self.chain.as_mut().expect("chain just built");
         // Unconditional copy: `layer.w` is a public field callers mutate
@@ -217,6 +215,124 @@ impl<T: Scalar> Gcn<T> {
     }
 }
 
+/// Dot-product sparse attention over the graph edge set (a GAT-style
+/// layer): queries are projected from the flowing node features and
+/// attention scores exist only on edges of `s`, row-softmax-normalized:
+///
+/// `out = softmax_row(S ⊙ ((H·Wq)·Kᵀ)) · V`, with `K = H·Wk`,
+/// `V = H·Wv`.
+///
+/// The forward runs as **one** [`ChainExec`] of two steps —
+/// `[FlowAMulB(Wq), Attention(S, K, V)]`, assembled through
+/// [`ChainBuilder`]: the query projection enters the dense flow and the
+/// fused attention step scores, normalizes and combines each row while
+/// its scores sit in a per-worker strip (the `n × n` score matrix is
+/// never materialized, not even in sparse form). `K`/`V` are refreshed
+/// into the bound chain each forward
+/// ([`ChainExec::set_attention_kv`]), so plan and workspaces survive
+/// across epochs the way the GCN stack's chain does.
+pub struct GatLayer<T> {
+    /// Sampling pattern (the adjacency): scores live on its edges.
+    pub s: Arc<Csr<T>>,
+    pub wq: Dense<T>,
+    pub wk: Dense<T>,
+    pub wv: Dense<T>,
+    chain: Option<ChainExec<T>>,
+    k: Dense<T>,
+    v: Dense<T>,
+}
+
+impl<T: Scalar> GatLayer<T> {
+    /// `f_in → d` query/key width, `d_v` value (output) width.
+    pub fn new(s: Arc<Csr<T>>, f_in: usize, d: usize, d_v: usize, seed: u64) -> Self {
+        let glorot = |f_out: usize, seed: u64| {
+            let scale = (2.0 / (f_in + f_out) as f64).sqrt();
+            let mut w = Dense::<T>::randn(f_in, f_out, seed);
+            for v in &mut w.data {
+                *v = T::from_f64(v.to_f64() * scale);
+            }
+            w
+        };
+        Self {
+            s,
+            wq: glorot(d, seed),
+            wk: glorot(d, seed.wrapping_add(7919)),
+            wv: glorot(d_v, seed.wrapping_add(15838)),
+            chain: None,
+            k: Dense::zeros(0, 0),
+            v: Dense::zeros(0, 0),
+        }
+    }
+
+    /// Forward as one chain execution; bitwise-deterministic at any
+    /// thread count and under every kernel backend.
+    pub fn forward(&mut self, pool: &ThreadPool, h: &Dense<T>) -> Dense<T> {
+        let n = self.s.rows();
+        assert_eq!(h.rows, n, "one feature row per node");
+        if (self.k.rows, self.k.cols) != (n, self.wk.cols) {
+            self.k = Dense::zeros(n, self.wk.cols);
+        }
+        if (self.v.rows, self.v.cols) != (n, self.wv.cols) {
+            self.v = Dense::zeros(n, self.wv.cols);
+        }
+        ops::matmul(h, &self.wk, &mut self.k);
+        ops::matmul(h, &self.wv, &mut self.v);
+        if self.chain.is_none() {
+            let mut params = crate::scheduler::SchedulerParams::default();
+            params.elem_bytes = T::BYTES;
+            self.chain = Some(
+                ChainBuilder::dense(h.rows, h.cols)
+                    .step(ChainStepOp::FlowAMulB {
+                        b: Arc::new(Dense::zeros(self.wq.rows, self.wq.cols)),
+                    })
+                    .step(ChainStepOp::Attention {
+                        s: Arc::clone(&self.s),
+                        k: Arc::new(self.k.clone()),
+                        v: Arc::new(self.v.clone()),
+                    })
+                    .build(params)
+                    .expect("bind GAT chain"),
+            );
+        }
+        let chain = self.chain.as_mut().expect("chain just built");
+        chain.set_weight(0, &self.wq);
+        chain.set_attention_kv(1, &self.k, &self.v);
+        let (out_rows, out_cols) = chain.out_dims();
+        let mut out = Dense::zeros(out_rows, out_cols);
+        chain.run(pool, h, &mut out);
+        out
+    }
+
+    /// Unfused dense-oracle reference: serial projections, canonical
+    /// SDDMM / row-softmax kernels, edge-order value combine — the
+    /// sequence [`GatLayer::forward`] must match bitwise.
+    pub fn forward_reference(&self, h: &Dense<T>) -> Dense<T> {
+        let n = self.s.rows();
+        let mut q = Dense::zeros(n, self.wq.cols);
+        let mut k = Dense::zeros(n, self.wk.cols);
+        let mut v = Dense::zeros(n, self.wv.cols);
+        ops::matmul(h, &self.wq, &mut q);
+        ops::matmul(h, &self.wk, &mut k);
+        ops::matmul(h, &self.wv, &mut v);
+        let pat = &self.s.pattern;
+        let mut p = crate::kernels::sddmm(pat, &q, &k);
+        for i in 0..n {
+            let (lo, hi) = (pat.indptr[i], pat.indptr[i + 1]);
+            crate::kernels::softmax_row(&mut p.data[lo..hi]);
+        }
+        let mut out = Dense::zeros(n, v.cols);
+        for i in 0..n {
+            let (cols, vals) = p.row(i);
+            for (&c, &pv) in cols.iter().zip(vals) {
+                for (o, &x) in out.row_mut(i).iter_mut().zip(v.row(c as usize)) {
+                    *o += pv * x;
+                }
+            }
+        }
+        out
+    }
+}
+
 /// Fraction of rows whose argmax equals the label.
 pub fn accuracy<T: Scalar>(logits: &Dense<T>, labels: &[u32]) -> f64 {
     let mut correct = 0usize;
@@ -299,6 +415,32 @@ mod tests {
             last.loss
         );
         assert!(last.accuracy > first.accuracy - 0.05);
+    }
+
+    #[test]
+    fn gat_forward_is_one_chain_and_matches_the_oracle_bitwise() {
+        let g = SyntheticGraph::<f64>::rmat(128, 6, 8, 3, 17);
+        let a = Arc::new(g.a_hat.clone());
+        let mut layer = GatLayer::new(Arc::clone(&a), 8, 12, 5, 21);
+        let expect = layer.forward_reference(&g.features);
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let out = layer.forward(&pool, &g.features);
+            assert_eq!((out.rows, out.cols), (128, 5));
+            assert!(
+                out.data.iter().zip(&expect.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "threads={threads}: fused GAT forward must match the dense oracle bitwise"
+            );
+        }
+        // Updating a projection reuses the bound chain and tracks the
+        // fresh parameters (no rebind, still bitwise).
+        for w in &mut layer.wq.data {
+            *w *= 0.5;
+        }
+        let expect2 = layer.forward_reference(&g.features);
+        let pool = ThreadPool::new(2);
+        let out2 = layer.forward(&pool, &g.features);
+        assert!(out2.data.iter().zip(&expect2.data).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

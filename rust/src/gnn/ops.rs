@@ -24,6 +24,26 @@ pub fn relu_grad_mask<T: Scalar>(pre: &Dense<T>, grad: &mut Dense<T>) {
     }
 }
 
+/// `out = A · B` for row-major dense `A (n×f)`, `B (f×h)` → `n×h`.
+/// Per-output accumulation is k-ascending with separate mul and add —
+/// exactly the register-blocked GeMM row kernel's order, so results are
+/// bitwise-identical to the chain executor's dense-flow GeMM (the
+/// attention layer's reference path relies on this).
+pub fn matmul<T: Scalar>(a: &Dense<T>, b: &Dense<T>, out: &mut Dense<T>) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    out.fill_zero();
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let o = out.row_mut(i);
+        for (k, &av) in ar.iter().enumerate() {
+            for (x, &bv) in b.row(k).iter().enumerate() {
+                o[x] += av * bv;
+            }
+        }
+    }
+}
+
 /// `out = Aᵀ · B` for row-major dense `A (n×f)`, `B (n×h)` → `f×h`.
 /// Accumulates rank-1 updates row by row (cache-friendly for tall A/B).
 pub fn matmul_at_b<T: Scalar>(a: &Dense<T>, b: &Dense<T>, out: &mut Dense<T>) {
@@ -122,6 +142,23 @@ mod tests {
         let mut g = Dense::<f64>::full(2, 2, 1.0);
         relu_grad_mask(&pre, &mut g);
         assert_eq!(g.data, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Dense::<f64>::randn(6, 4, 7);
+        let b = Dense::<f64>::randn(4, 5, 8);
+        let mut out = Dense::zeros(6, 5);
+        matmul(&a, &b, &mut out);
+        for i in 0..6 {
+            for j in 0..5 {
+                let mut acc = 0.0;
+                for k in 0..4 {
+                    acc += a.get(i, k) * b.get(k, j);
+                }
+                assert!((out.get(i, j) - acc).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]

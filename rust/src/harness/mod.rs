@@ -8,7 +8,7 @@
 //! (`bench_results/*.csv` next to stdout markdown).
 
 use crate::core::{Dense, Scalar};
-use crate::exec::chain::{chain_specs, ChainExec, ChainStepOp, StepStrategy};
+use crate::exec::chain::{chain_specs, ChainBuilder, ChainExec, ChainStepOp, StepStrategy};
 use crate::exec::{
     AtomicTiling, Fused, Overlapped, PairExec, PairOp, StripMode, TensorStyle, ThreadPool,
     Unfused,
@@ -384,11 +384,10 @@ pub fn time_spgemm_chain<T: Scalar>(
             } else {
                 StepOutputMode::Dense
             };
-            let ops = vec![
-                ChainStepOp::SpgemmFlow { a: Arc::clone(a), output: mode },
-                ChainStepOp::FlowAMulB { b: Arc::clone(&x) },
-            ];
-            let mut ex = ChainExec::plan_and_build_sparse(ops, n, n, a.nnz(), params)
+            let mut ex = ChainBuilder::sparse(n, n, a.nnz())
+                .step(ChainStepOp::SpgemmFlow { a: Arc::clone(a), output: mode })
+                .step(ChainStepOp::FlowAMulB { b: Arc::clone(&x) })
+                .build(params)
                 .expect("bind spgemm chain");
             let mut d = Dense::zeros(n, rhs);
             profiling::measure(1, reps, || ex.run_sparse(pool, a, &mut d))

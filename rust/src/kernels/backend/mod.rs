@@ -196,6 +196,40 @@ pub trait Backend: Send + Sync {
         scalar::spmm_row_strip(a, j, d1, stride, i_base, out);
     }
 
+    /// SDDMM row: sampled dots `out[x] = q_row · K[cols[x], :]`
+    /// (overwrites `out`); see [`scalar::sddmm_row`].
+    fn sddmm_row_f32(&self, cols: &[u32], q_row: &[f32], k: &Dense<f32>, out: &mut [f32]) {
+        scalar::sddmm_row(cols, q_row, k, out);
+    }
+
+    /// `f64` twin of [`Backend::sddmm_row_f32`].
+    fn sddmm_row_f64(&self, cols: &[u32], q_row: &[f64], k: &Dense<f64>, out: &mut [f64]) {
+        scalar::sddmm_row(cols, q_row, k, out);
+    }
+
+    /// Row max with the strided-partial lane mapping of
+    /// [`scalar::reduce_max`] (`-∞` for an empty row) — the row-softmax
+    /// max. Overrides must spill into the same partial layout and reuse
+    /// the shared scalar fold.
+    fn reduce_max_f32(&self, row: &[f32]) -> f32 {
+        scalar::reduce_max(row)
+    }
+
+    /// `f64` twin of [`Backend::reduce_max_f32`].
+    fn reduce_max_f64(&self, row: &[f64]) -> f64 {
+        scalar::reduce_max(row)
+    }
+
+    /// Row sum (softmax denominator); see [`scalar::reduce_sum`].
+    fn reduce_sum_f32(&self, row: &[f32]) -> f32 {
+        scalar::reduce_sum(row)
+    }
+
+    /// `f64` twin of [`Backend::reduce_sum_f32`].
+    fn reduce_sum_f64(&self, row: &[f64]) -> f64 {
+        scalar::reduce_sum(row)
+    }
+
     /// SpGEMM numeric merge inner loop; see [`scalar::spgemm_merge`]
     /// for the marks/touched/acc contract (marks are left set). The
     /// data-dependent scatter defeats lane mapping, so no backend

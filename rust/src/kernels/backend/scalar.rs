@@ -213,6 +213,116 @@ pub unsafe fn spmm_row_strip<T: Scalar>(
     }
 }
 
+/// SDDMM row: `out[x] = q_row · K[cols[x], :]` for every nonzero column
+/// of one sampling-pattern row (overwrites `out`). [`JB`]-blocked over
+/// the row's nonzeros with one register accumulator per output, so each
+/// sampled dot product accumulates in k-order with a single accumulator
+/// — bitwise-identical to [`dot_tail`] per output, which is exactly
+/// what the remainder outputs run.
+#[inline]
+pub fn sddmm_row<T: Scalar>(cols: &[u32], q_row: &[T], k: &Dense<T>, out: &mut [T]) {
+    debug_assert_eq!(cols.len(), out.len());
+    let mut x0 = 0;
+    while x0 + JB <= cols.len() {
+        let rows: [&[T]; JB] = std::array::from_fn(|x| k.row(cols[x0 + x] as usize));
+        let mut acc = [T::ZERO; JB];
+        for (kk, &qv) in q_row.iter().enumerate() {
+            for x in 0..JB {
+                acc[x] += qv * rows[x][kk];
+            }
+        }
+        out[x0..x0 + JB].copy_from_slice(&acc);
+        x0 += JB;
+    }
+    for (x, o) in out[x0..].iter_mut().enumerate() {
+        *o = dot_tail(q_row, k.row(cols[x0 + x] as usize));
+    }
+}
+
+/// Shared tail + combine of the strided-partial max reduction: fold the
+/// `< JB` remainder elements into the partials, then collapse the [`JB`]
+/// partials with a fixed pairwise tree. Every backend funnels through
+/// this (the SIMD reductions store their lane accumulators into the same
+/// partial layout first), so reductions are bitwise-identical across
+/// backends by construction. Comparisons are strict-greater-replace —
+/// the exact semantic of the x86 `max` intrinsics for non-NaN inputs.
+#[inline]
+pub fn fold_max_partials<T: Scalar>(acc: &mut [T; JB], rest: &[T]) -> T {
+    for (a, &v) in acc.iter_mut().zip(rest) {
+        if v > *a {
+            *a = v;
+        }
+    }
+    let mut step = JB / 2;
+    while step > 0 {
+        for x in 0..step {
+            if acc[x + step] > acc[x] {
+                acc[x] = acc[x + step];
+            }
+        }
+        step /= 2;
+    }
+    acc[0]
+}
+
+/// Sum twin of [`fold_max_partials`]: same strided-partial layout, same
+/// fixed pairwise combine tree.
+#[inline]
+pub fn fold_sum_partials<T: Scalar>(acc: &mut [T; JB], rest: &[T]) -> T {
+    for (a, &v) in acc.iter_mut().zip(rest) {
+        *a += v;
+    }
+    let mut step = JB / 2;
+    while step > 0 {
+        for x in 0..step {
+            let t = acc[x + step];
+            acc[x] += t;
+        }
+        step /= 2;
+    }
+    acc[0]
+}
+
+/// Row max with [`JB`] strided partial accumulators (`acc[x]` sees
+/// elements `x, x + JB, x + 2·JB, …` in order) collapsed by
+/// [`fold_max_partials`] — the row-softmax max. The strided layout is
+/// the lane mapping: a SIMD backend holds the same partials in vector
+/// lanes and reuses the shared tail/combine, so the result is bitwise
+/// backend-independent. Returns `-∞` for an empty row.
+#[inline]
+pub fn reduce_max<T: Scalar>(row: &[T]) -> T {
+    let mut acc = [T::from_f64(f64::NEG_INFINITY); JB];
+    let mut j = 0;
+    while j + JB <= row.len() {
+        let blk = &row[j..j + JB];
+        for x in 0..JB {
+            if blk[x] > acc[x] {
+                acc[x] = blk[x];
+            }
+        }
+        j += JB;
+    }
+    fold_max_partials(&mut acc, &row[j..])
+}
+
+/// Row sum — the row-softmax denominator — with the same strided
+/// partials / fixed combine tree as [`reduce_max`]. Returns `0` for an
+/// empty row.
+#[inline]
+pub fn reduce_sum<T: Scalar>(row: &[T]) -> T {
+    let mut acc = [T::ZERO; JB];
+    let mut j = 0;
+    while j + JB <= row.len() {
+        let blk = &row[j..j + JB];
+        for x in 0..JB {
+            let t = blk[x];
+            acc[x] += t;
+        }
+        j += JB;
+    }
+    fold_sum_partials(&mut acc, &row[j..])
+}
+
 /// SpGEMM numeric merge inner loop: scatter-accumulate
 /// `Σ_k A[i,k] · B[k, :]` over `a_cols`/`a_vals` into the dense
 /// accumulator `acc`, recording first-touched columns in `touched`.

@@ -44,8 +44,10 @@ pub(super) static SIMD256: Simd256Backend = Simd256Backend;
 macro_rules! simd_kernels {
     (
         $gemm_row:ident, $gemm_row_strip:ident, $spmm_row_strip:ident,
+        $sddmm_row:ident, $reduce_max:ident, $reduce_sum:ident,
         $ty:ty, $lanes:expr,
-        $setzero:ident, $set1:ident, $loadu:ident, $storeu:ident, $add:ident, $mul:ident
+        $setzero:ident, $set1:ident, $loadu:ident, $storeu:ident, $add:ident, $mul:ident,
+        $maxv:ident
         $(, #[$attr:meta])?
     ) => {
         $(#[$attr])?
@@ -149,34 +151,119 @@ macro_rules! simd_kernels {
                 );
             }
         }
+
+        $(#[$attr])?
+        #[inline]
+        unsafe fn $sddmm_row(cols: &[u32], q_row: &[$ty], k: &Dense<$ty>, out: &mut [$ty]) {
+            debug_assert_eq!(cols.len(), out.len());
+            let mut x0 = 0;
+            while x0 + JB <= cols.len() {
+                // Lanes are distinct sampled outputs; each k step gathers
+                // one element per output row into a contiguous stage so
+                // the products still accumulate per-output in k-order.
+                let mut rp = [core::ptr::null::<$ty>(); JB];
+                for x in 0..JB {
+                    rp[x] = k.row(cols[x0 + x] as usize).as_ptr();
+                }
+                let mut acc = [$setzero(); JB / $lanes];
+                let mut stage = [0.0 as $ty; JB];
+                for (kk, &qv) in q_row.iter().enumerate() {
+                    for x in 0..JB {
+                        stage[x] = *rp[x].add(kk);
+                    }
+                    let qv_v = $set1(qv);
+                    for (x, a) in acc.iter_mut().enumerate() {
+                        *a = $add(*a, $mul(qv_v, $loadu(stage.as_ptr().add($lanes * x))));
+                    }
+                }
+                let dst = out[x0..].as_mut_ptr();
+                for (x, a) in acc.iter().enumerate() {
+                    $storeu(dst.add($lanes * x), *a);
+                }
+                x0 += JB;
+            }
+            for (x, o) in out[x0..].iter_mut().enumerate() {
+                *o = scalar::dot_tail(q_row, k.row(cols[x0 + x] as usize));
+            }
+        }
+
+        $(#[$attr])?
+        #[inline]
+        unsafe fn $reduce_max(row: &[$ty]) -> $ty {
+            // Vector lane v·$lanes+l holds the same strided partial as
+            // scalar `reduce_max`'s acc[v·$lanes+l]; the x86 max
+            // instruction is strict-greater-replace, matching the scalar
+            // comparison. Spill to the shared partial layout and reuse
+            // the scalar tail/combine for bitwise-identical results.
+            let ninf = <$ty>::NEG_INFINITY;
+            let mut accv = [$set1(ninf); JB / $lanes];
+            let mut j = 0;
+            while j + JB <= row.len() {
+                let src = row[j..].as_ptr();
+                for (x, a) in accv.iter_mut().enumerate() {
+                    *a = $maxv($loadu(src.add($lanes * x)), *a);
+                }
+                j += JB;
+            }
+            let mut acc = [ninf; JB];
+            for (x, a) in accv.iter().enumerate() {
+                $storeu(acc.as_mut_ptr().add($lanes * x), *a);
+            }
+            scalar::fold_max_partials(&mut acc, &row[j..])
+        }
+
+        $(#[$attr])?
+        #[inline]
+        unsafe fn $reduce_sum(row: &[$ty]) -> $ty {
+            let mut accv = [$setzero(); JB / $lanes];
+            let mut j = 0;
+            while j + JB <= row.len() {
+                let src = row[j..].as_ptr();
+                for (x, a) in accv.iter_mut().enumerate() {
+                    *a = $add(*a, $loadu(src.add($lanes * x)));
+                }
+                j += JB;
+            }
+            let mut acc = [0.0 as $ty; JB];
+            for (x, a) in accv.iter().enumerate() {
+                $storeu(acc.as_mut_ptr().add($lanes * x), *a);
+            }
+            scalar::fold_sum_partials(&mut acc, &row[j..])
+        }
     };
 }
 
 simd_kernels!(
     gemm_row_f32_sse, gemm_row_strip_f32_sse, spmm_row_strip_f32_sse,
+    sddmm_row_f32_sse, reduce_max_f32_sse, reduce_sum_f32_sse,
     f32, 4,
-    _mm_setzero_ps, _mm_set1_ps, _mm_loadu_ps, _mm_storeu_ps, _mm_add_ps, _mm_mul_ps
+    _mm_setzero_ps, _mm_set1_ps, _mm_loadu_ps, _mm_storeu_ps, _mm_add_ps, _mm_mul_ps,
+    _mm_max_ps
 );
 
 simd_kernels!(
     gemm_row_f64_sse, gemm_row_strip_f64_sse, spmm_row_strip_f64_sse,
+    sddmm_row_f64_sse, reduce_max_f64_sse, reduce_sum_f64_sse,
     f64, 2,
-    _mm_setzero_pd, _mm_set1_pd, _mm_loadu_pd, _mm_storeu_pd, _mm_add_pd, _mm_mul_pd
+    _mm_setzero_pd, _mm_set1_pd, _mm_loadu_pd, _mm_storeu_pd, _mm_add_pd, _mm_mul_pd,
+    _mm_max_pd
 );
 
 simd_kernels!(
     gemm_row_f32_avx, gemm_row_strip_f32_avx, spmm_row_strip_f32_avx,
+    sddmm_row_f32_avx, reduce_max_f32_avx, reduce_sum_f32_avx,
     f32, 8,
     _mm256_setzero_ps, _mm256_set1_ps, _mm256_loadu_ps, _mm256_storeu_ps, _mm256_add_ps,
-    _mm256_mul_ps,
+    _mm256_mul_ps, _mm256_max_ps,
     #[target_feature(enable = "avx")]
 );
 
 simd_kernels!(
     gemm_row_f64_avx, gemm_row_strip_f64_avx, spmm_row_strip_f64_avx,
+    sddmm_row_f64_avx, reduce_max_f64_avx, reduce_sum_f64_avx,
     f64, 4,
     _mm256_setzero_pd, _mm256_set1_pd, _mm256_loadu_pd, _mm256_storeu_pd, _mm256_add_pd,
-    _mm256_mul_pd,
+    _mm256_mul_pd, _mm256_max_pd,
     #[target_feature(enable = "avx")]
 );
 
@@ -236,6 +323,37 @@ impl Backend for Simd128Backend {
         out: &mut [f64],
     ) {
         spmm_row_strip_f64_sse(a, j, d1, stride, i_base, out)
+    }
+
+    fn sddmm_row_f32(&self, cols: &[u32], q_row: &[f32], k: &Dense<f32>, out: &mut [f32]) {
+        // SAFETY: as `gemm_row_f32`; column indices are validated by the
+        // CSR invariants of the sampling pattern.
+        unsafe { sddmm_row_f32_sse(cols, q_row, k, out) }
+    }
+
+    fn sddmm_row_f64(&self, cols: &[u32], q_row: &[f64], k: &Dense<f64>, out: &mut [f64]) {
+        // SAFETY: as `sddmm_row_f32`.
+        unsafe { sddmm_row_f64_sse(cols, q_row, k, out) }
+    }
+
+    fn reduce_max_f32(&self, row: &[f32]) -> f32 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_max_f32_sse(row) }
+    }
+
+    fn reduce_max_f64(&self, row: &[f64]) -> f64 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_max_f64_sse(row) }
+    }
+
+    fn reduce_sum_f32(&self, row: &[f32]) -> f32 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_sum_f32_sse(row) }
+    }
+
+    fn reduce_sum_f64(&self, row: &[f64]) -> f64 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_sum_f64_sse(row) }
     }
 }
 
@@ -297,6 +415,37 @@ impl Backend for Simd256Backend {
     ) {
         spmm_row_strip_f64_avx(a, j, d1, stride, i_base, out)
     }
+
+    fn sddmm_row_f32(&self, cols: &[u32], q_row: &[f32], k: &Dense<f32>, out: &mut [f32]) {
+        // SAFETY: `by_id` gates this backend on AVX detection; column
+        // indices are validated by the sampling pattern's invariants.
+        unsafe { sddmm_row_f32_avx(cols, q_row, k, out) }
+    }
+
+    fn sddmm_row_f64(&self, cols: &[u32], q_row: &[f64], k: &Dense<f64>, out: &mut [f64]) {
+        // SAFETY: as `sddmm_row_f32`.
+        unsafe { sddmm_row_f64_avx(cols, q_row, k, out) }
+    }
+
+    fn reduce_max_f32(&self, row: &[f32]) -> f32 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_max_f32_avx(row) }
+    }
+
+    fn reduce_max_f64(&self, row: &[f64]) -> f64 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_max_f64_avx(row) }
+    }
+
+    fn reduce_sum_f32(&self, row: &[f32]) -> f32 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_sum_f32_avx(row) }
+    }
+
+    fn reduce_sum_f64(&self, row: &[f64]) -> f64 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_sum_f64_avx(row) }
+    }
 }
 
 #[cfg(test)]
@@ -340,6 +489,50 @@ mod tests {
                 assert!(
                     want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
                     "{} spmm_row_strip ccol={ccol}",
+                    bk.id()
+                );
+            }
+            // SDDMM + row reductions: `ccol` doubles as the inner (d)
+            // dimension so both block and tail paths are exercised.
+            let s = gen::rmat(64, 3, gen::RmatKind::Graph500, 11 + ccol as u64);
+            let q = Dense::<f64>::randn(64, ccol, 53 + ccol as u64);
+            let kd = Dense::<f64>::randn(64, ccol, 59 + ccol as u64);
+            for i in 0..s.rows {
+                let nnz = s.row(i).len();
+                let mut want = vec![0.0f64; nnz];
+                let mut got = want.clone();
+                scalar::sddmm_row(s.row(i), q.row(i), &kd, &mut want);
+                bk.sddmm_row_f64(s.row(i), q.row(i), &kd, &mut got);
+                assert!(
+                    want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} sddmm_row d={ccol}",
+                    bk.id()
+                );
+                assert_eq!(
+                    scalar::reduce_max(&want).to_bits(),
+                    bk.reduce_max_f64(&want).to_bits(),
+                    "{} reduce_max n={nnz}",
+                    bk.id()
+                );
+                assert_eq!(
+                    scalar::reduce_sum(&want).to_bits(),
+                    bk.reduce_sum_f64(&want).to_bits(),
+                    "{} reduce_sum n={nnz}",
+                    bk.id()
+                );
+            }
+            let rowf: Vec<f32> = (0..2 * JB + 5).map(|x| (x as f32 * 0.37).sin()).collect();
+            for n in [0, 1, JB - 1, JB, JB + 7, 2 * JB + 5] {
+                assert_eq!(
+                    scalar::reduce_max(&rowf[..n]).to_bits(),
+                    bk.reduce_max_f32(&rowf[..n]).to_bits(),
+                    "{} reduce_max f32 n={n}",
+                    bk.id()
+                );
+                assert_eq!(
+                    scalar::reduce_sum(&rowf[..n]).to_bits(),
+                    bk.reduce_sum_f32(&rowf[..n]).to_bits(),
+                    "{} reduce_sum f32 n={n}",
                     bk.id()
                 );
             }

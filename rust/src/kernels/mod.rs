@@ -14,7 +14,10 @@
 //! rows are only one strip wide and stay cache-resident between the
 //! producing and consuming operations. [`spgemm`] adds the two-phase
 //! row-merge kernels for sparse-output multiplication (SpGEMM chain
-//! steps whose intermediates stay sparse).
+//! steps whose intermediates stay sparse); [`sddmm`] the sampled-dot
+//! row kernel plus the row-softmax reductions of sparse attention; and
+//! [`transpose`] the CSR transpose completing the SpMM/SDDMM/transpose
+//! trio of attention and autograd workloads.
 //!
 //! Kernel *bodies* live in [`backend`]: a scalar reference plus
 //! explicit-SIMD implementations behind the runtime-dispatched
@@ -26,18 +29,25 @@
 
 pub mod backend;
 pub mod gemm;
+pub mod sddmm;
 pub mod spgemm;
 pub mod spmm;
+pub mod transpose;
 
 pub use gemm::{
     gemm_row, gemm_row_ct, gemm_row_ct_strip, gemm_row_ct_strip_with, gemm_row_strip,
     gemm_row_strip_with, gemm_row_with, gemm_rows, pack_panel, pack_panel_with,
+};
+pub use sddmm::{
+    reduce_max, reduce_max_with, reduce_sum, reduce_sum_with, sddmm, sddmm_row, sddmm_row_with,
+    softmax_row, softmax_row_with,
 };
 pub use spgemm::{
     spgemm, spgemm_keeps, spgemm_merge_with, spgemm_row_dense, spgemm_row_numeric,
     spgemm_row_numeric_tol, spgemm_row_symbolic, spgemm_row_symbolic_tol,
 };
 pub use spmm::{spmm_row, spmm_row_ptr, spmm_row_strip, spmm_row_strip_with, spmm_rows};
+pub use transpose::{csr_transpose, pattern_transpose};
 
 /// Output-register block width shared by every kernel: 32 scalars = 4
 /// AVX f32 / 8 AVX f64 / 8 SSE f32 / 16 SSE f64 vectors — small enough

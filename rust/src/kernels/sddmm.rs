@@ -1,0 +1,189 @@
+//! SDDMM row kernels and the row-softmax used by sparse attention.
+//!
+//! SDDMM (sampled dense-dense matrix multiplication) computes
+//! `S ⊙ (Q·Kᵀ)`: for each structural nonzero `(i, j)` of the sampling
+//! pattern `S`, the dot product of `Q`'s row `i` with `K`'s row `j`.
+//! Only the pattern of `S` matters — its values are ignored (Sputnik
+//! semantics) — so the output shares `S`'s pattern exactly and needs no
+//! symbolic phase. SDDMM is the backward of SpMM and the score kernel
+//! of graph attention: a GAT forward is SDDMM → row-softmax → SpMM over
+//! one shared pattern, which `exec::chain` fuses into a single step.
+//!
+//! Kernel bodies live in the runtime-dispatched backend layer
+//! ([`crate::kernels::backend`]); wrappers here route through the
+//! process-wide [`backend::active`] unit via the `Scalar::bk_*` hooks,
+//! with `*_with` twins taking an explicit backend for the parity suite.
+//! Every backend is bitwise-equal to the scalar reference: each sampled
+//! dot accumulates with a single accumulator in k-order (exactly
+//! [`backend::scalar::dot_tail`]), and the softmax reductions use the
+//! shared strided-partial layout + fixed combine tree of
+//! [`backend::scalar::fold_max_partials`].
+
+use super::backend::{self, Backend};
+use crate::core::{Dense, Scalar};
+use crate::sparse::{Csr, Pattern};
+
+/// One SDDMM row: `out[x] = q_row · K[cols[x], :]` for each sampled
+/// column (overwrites `out`; `out.len() == cols.len()`).
+#[inline]
+pub fn sddmm_row<T: Scalar>(cols: &[u32], q_row: &[T], k: &Dense<T>, out: &mut [T]) {
+    T::bk_sddmm_row(backend::active(), cols, q_row, k, out);
+}
+
+/// [`sddmm_row`] on an explicit backend.
+#[inline]
+pub fn sddmm_row_with<T: Scalar>(
+    bk: &dyn Backend,
+    cols: &[u32],
+    q_row: &[T],
+    k: &Dense<T>,
+    out: &mut [T],
+) {
+    T::bk_sddmm_row(bk, cols, q_row, k, out);
+}
+
+/// Row max (strict-greater-replace, `-∞` for an empty row) — the
+/// numerically-stabilizing max of a softmax row.
+#[inline]
+pub fn reduce_max<T: Scalar>(row: &[T]) -> T {
+    T::bk_reduce_max(backend::active(), row)
+}
+
+/// [`reduce_max`] on an explicit backend.
+#[inline]
+pub fn reduce_max_with<T: Scalar>(bk: &dyn Backend, row: &[T]) -> T {
+    T::bk_reduce_max(bk, row)
+}
+
+/// Row sum (`0` for an empty row) — the softmax denominator.
+#[inline]
+pub fn reduce_sum<T: Scalar>(row: &[T]) -> T {
+    T::bk_reduce_sum(backend::active(), row)
+}
+
+/// [`reduce_sum`] on an explicit backend.
+#[inline]
+pub fn reduce_sum_with<T: Scalar>(bk: &dyn Backend, row: &[T]) -> T {
+    T::bk_reduce_sum(bk, row)
+}
+
+/// In-place numerically-stable softmax over one (score) row:
+/// `row[x] = exp(row[x] − max) / Σ exp(row[x] − max)`.
+///
+/// The max and sum reductions dispatch through the backend; the
+/// `exp` / divide sweeps are element-wise (one output per input, no
+/// reduction order to vary) and shared by every backend, so the whole
+/// transform is bitwise backend-independent. An empty row is a no-op.
+#[inline]
+pub fn softmax_row<T: Scalar>(row: &mut [T]) {
+    softmax_row_with(backend::active(), row);
+}
+
+/// [`softmax_row`] on an explicit backend.
+pub fn softmax_row_with<T: Scalar>(bk: &dyn Backend, row: &mut [T]) {
+    if row.is_empty() {
+        return;
+    }
+    let m = T::bk_reduce_max(bk, row);
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+    }
+    let s = T::bk_reduce_sum(bk, row);
+    for v in row.iter_mut() {
+        *v = *v / s;
+    }
+}
+
+/// Serial full-matrix SDDMM: `S ⊙ (Q·Kᵀ)` over pattern `s`, returning a
+/// CSR with `s`'s structure and the sampled dot products as values.
+/// Dimensions: `Q` is `s.rows × d`, `K` is `s.cols × d`. Executors run
+/// the row kernel directly over their own decompositions
+/// ([`crate::exec::sddmm`]); this is the building block for tests,
+/// oracles and small matrices.
+pub fn sddmm<T: Scalar>(s: &Pattern, q: &Dense<T>, k: &Dense<T>) -> Csr<T> {
+    assert_eq!(q.rows, s.rows, "Q must have one row per pattern row");
+    assert_eq!(k.rows, s.cols, "K must have one row per pattern column");
+    assert_eq!(q.cols, k.cols, "Q and K must share the inner dimension");
+    let mut out = Csr::from_pattern(s.clone(), T::ZERO);
+    for i in 0..s.rows {
+        let (lo, hi) = (s.indptr[i], s.indptr[i + 1]);
+        sddmm_row(&s.indices[lo..hi], q.row(i), k, &mut out.data[lo..hi]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::JB;
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn sddmm_matches_naive_sampled_dots() {
+        for d in [1, 7, JB, JB + 5] {
+            let s = gen::rmat(64, 4, gen::RmatKind::Graph500, 3 + d as u64);
+            let q = Dense::<f64>::randn(64, d, 10 + d as u64);
+            let k = Dense::<f64>::randn(64, d, 20 + d as u64);
+            let got = sddmm(&s, &q, &k);
+            assert_eq!(got.pattern, s);
+            for i in 0..s.rows {
+                let (cols, vals) = got.row(i);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let mut want = 0.0f64;
+                    for kk in 0..d {
+                        want += q.get(i, kk) * k.get(c as usize, kk);
+                    }
+                    assert!((v - want).abs() < 1e-10, "d={d} i={i} c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sddmm_ignores_sample_values_and_keeps_pattern() {
+        let s = gen::banded(20, &[0, 1, 3]);
+        let q = Dense::<f64>::randn(20, 5, 1);
+        let k = Dense::<f64>::randn(20, 5, 2);
+        let a = sddmm(&s, &q, &k);
+        assert!(a.check_invariants());
+        assert_eq!(a.pattern.structure_hash(), s.structure_hash());
+    }
+
+    #[test]
+    fn softmax_rows_are_distributions() {
+        for n in [1, 2, JB - 1, JB, 2 * JB + 3] {
+            let mut row: Vec<f64> = (0..n).map(|x| ((x * 37 % 11) as f64) - 5.0).collect();
+            softmax_row(&mut row);
+            assert!(row.iter().all(|&v| v > 0.0 && v <= 1.0));
+            let total: f64 = row.iter().sum();
+            assert!((total - 1.0).abs() < 1e-12, "n={n} total={total}");
+        }
+        // Empty rows (isolated graph nodes) are a no-op, not a NaN.
+        let mut empty: Vec<f64> = Vec::new();
+        softmax_row(&mut empty);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let base: Vec<f64> = (0..JB + 9).map(|x| (x as f64 * 0.61).cos() * 3.0).collect();
+        let mut a = base.clone();
+        let mut b: Vec<f64> = base.iter().map(|v| v + 1000.0).collect();
+        softmax_row(&mut a);
+        softmax_row(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reductions_handle_edges() {
+        assert_eq!(reduce_max::<f64>(&[]), f64::NEG_INFINITY);
+        assert_eq!(reduce_sum::<f64>(&[]), 0.0);
+        assert_eq!(reduce_max(&[-3.5f64]), -3.5);
+        let row: Vec<f64> = (0..2 * JB + 5).map(|x| -((x % 13) as f64)).collect();
+        assert_eq!(reduce_max(&row), 0.0);
+        let want: f64 = row.iter().sum::<f64>();
+        // The blocked sum reorders vs a serial sum — compare loosely.
+        assert!((reduce_sum(&row) - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,56 @@
+//! CSR transpose entry points.
+//!
+//! Graph-attention and SpMM-backward workloads constantly need `Sᵀ`
+//! alongside `S` (the Torch-Sputnik trio: `spmm` / `sddmm` /
+//! `csr_transpose`). The transpose is a counting sort over nonzeros —
+//! O(nnz + cols) — and purely structural work is *cacheable*: the
+//! coordinator keys transposed patterns by
+//! [`Pattern::structure_hash`] in its `ScheduleCache`
+//! (`transpose_of`), so a pattern served repeatedly is transposed once,
+//! like its schedules are planned once.
+//!
+//! Outputs preserve the CSR invariants by construction: the counting
+//! sort emits each output row's columns in increasing source-row order,
+//! so columns are sorted and unique whenever the input's are, and
+//! `Tᵀᵀ == T` bitwise (the property suite holds both).
+
+use crate::core::Scalar;
+use crate::sparse::{Csr, Pattern};
+
+/// Structural transpose: the pattern of `Sᵀ`.
+#[inline]
+pub fn pattern_transpose(p: &Pattern) -> Pattern {
+    p.transpose()
+}
+
+/// Numeric transpose: `Sᵀ` with values carried along.
+#[inline]
+pub fn csr_transpose<T: Scalar>(a: &Csr<T>) -> Csr<T> {
+    a.transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn double_transpose_is_identity_bitwise() {
+        let p = gen::rmat(64, 4, gen::RmatKind::Graph500, 77);
+        let a = Csr::<f64>::with_random_values(p.clone(), 9, -2.0, 2.0);
+        let tt = csr_transpose(&csr_transpose(&a));
+        assert_eq!(tt.pattern, a.pattern);
+        assert!(tt.data.iter().zip(&a.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_eq!(pattern_transpose(&pattern_transpose(&p)), p);
+    }
+
+    #[test]
+    fn transpose_keeps_invariants_on_rectangular_patterns() {
+        let p = gen::uniform_random(37, 21, 5, 13);
+        let t = pattern_transpose(&p);
+        assert_eq!((t.rows, t.cols), (21, 37));
+        assert_eq!(t.nnz(), p.nnz());
+        let tv = Csr::<f32>::from_pattern(t, 1.0);
+        assert!(tv.check_invariants());
+    }
+}

@@ -38,7 +38,11 @@
 //!                  each with a column-strip form ([`kernels::JB`] is
 //!                  the shared register-block width strips align to),
 //!                  plus [`kernels::spgemm`]: two-phase row-merge
-//!                  SpGEMM kernels for sparse-output multiplication.
+//!                  SpGEMM kernels for sparse-output multiplication,
+//!                  [`kernels::sddmm`]: sampled dense-dense rows
+//!                  (`S ⊙ Q·Kᵀ`) with backend-dispatched row-softmax
+//!                  reductions, and [`kernels::transpose`]: CSR/pattern
+//!                  transposition (sorted, deterministic).
 //!                  Kernel *bodies* live in [`kernels::backend`]: a
 //!                  scalar reference plus explicit-SIMD backends
 //!                  (SSE2/AVX), selected once per process by runtime
@@ -55,7 +59,11 @@
 //!                  strip-by-strip through per-thread workspaces
 //!                  ([`StripMode`](exec::StripMode) selects the width);
 //!                  [`exec::spgemm`] is the parallel row-merge SpGEMM
-//!                  driver behind sparse-intermediate chain steps.
+//!                  driver behind sparse-intermediate chain steps;
+//!                  [`exec::sddmm`] drives SDDMM and the fused
+//!                  SDDMM→softmax→SpMM attention step (scores in
+//!                  per-worker strips). Chains are described through
+//!                  the fluent [`ChainBuilder`](exec::ChainBuilder).
 //! - [`topology`] — sockets / NUMA nodes and their CPU lists: sysfs
 //!                  discovery, a deterministic single-node fallback,
 //!                  and the `TF_TOPOLOGY=NxM` simulation override. The
@@ -77,8 +85,9 @@
 //! - [`simcore`]  — multicore execution model (potential gain, scaling).
 //! - [`profiling`]— FLOP accounting, timers, statistics.
 //! - [`coordinator`] — service layer: LRU-bounded schedule cache keyed
-//!                  by sparsity pattern (tuned strip widths ride each
-//!                  entry behind per-key locks; the sharded server
+//!                  by sparsity pattern (tuned strip widths and the
+//!                  transposed patterns SDDMM/attention steps read ride
+//!                  each entry behind per-key locks; the sharded server
 //!                  partitions it by coalesce-key hash so shards never
 //!                  serialize on one cache-wide mutex), pair and whole-chain
 //!                  requests (`ChainRequest`), batching, metrics — plus
@@ -88,7 +97,9 @@
 //!                  same-key requests across tenants.
 //! - [`runtime`]  — PJRT/XLA loader for AOT artifacts (the JAX/Pallas GCN).
 //! - [`gnn`]      — GCN forward/backward; the forward runs the whole
-//!                  layer stack as one fused chain.
+//!                  layer stack as one fused chain. [`gnn::GatLayer`]
+//!                  is the graph-attention counterpart: projection +
+//!                  fused sparse attention as one two-step chain.
 //! - [`harness`]  — experiment drivers shared by `benches/`.
 //! - [`testing`]  — deterministic RNG + mini property-test harness with
 //!                  `TF_PROP_SEED` single-case replay.
@@ -164,8 +175,12 @@
 //! ## Chains
 //!
 //! Multi-layer GCNs and block solvers apply such pairs in sequence; the
-//! chain API plans and runs the whole sequence at once (schedules
-//! deduplicated by pattern, one pool, intermediates allocated once):
+//! fluent [`ChainBuilder`](exec::ChainBuilder) describes the whole
+//! sequence — input dims first, then one [`ChainStepOp`](exec::ChainStepOp)
+//! per step, per-step knobs as modifiers — and `build` plans and binds
+//! it at once (schedules deduplicated by pattern, one pool,
+//! intermediates allocated once). The old `plan_and_build*`
+//! constructors survive as deprecated shims over the builder.
 //!
 //! ```no_run
 //! use std::sync::Arc;
@@ -174,12 +189,11 @@
 //! let a = Arc::new(gen::gcn_normalize::<f64>(&gen::poisson2d(64, 64)));
 //! let rhs = 32;
 //! // X ← Â(ÂX) twice per call — two fused SpMM-SpMM steps.
-//! let ops = vec![
-//!     ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
-//!     ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
-//! ];
-//! let mut chain =
-//!     ChainExec::plan_and_build(ops, a.rows(), rhs, SchedulerParams::default()).unwrap();
+//! let mut chain = ChainBuilder::dense(a.rows(), rhs)
+//!     .step(ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+//!     .step(ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
+//!     .build(SchedulerParams::default())
+//!     .unwrap();
 //! let pool = ThreadPool::new(4);
 //! let x = Dense::<f64>::randn(a.rows(), rhs, 1);
 //! let mut y = Dense::zeros(a.rows(), rhs);
@@ -206,11 +220,10 @@
 //! use tile_fusion::prelude::*;
 //!
 //! let a = Arc::new(gen::gcn_normalize::<f64>(&gen::poisson2d(64, 64)));
-//! let ops: Vec<ChainStepOp<f64>> = (0..3)
-//!     .map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) })
-//!     .collect();
-//! let mut chain =
-//!     ChainExec::plan_and_build(ops, a.rows(), 32, SchedulerParams::default()).unwrap();
+//! let mut chain = ChainBuilder::dense(a.rows(), 32)
+//!     .steps((0..3).map(|_| ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) }))
+//!     .build(SchedulerParams::default())
+//!     .unwrap();
 //! let pool = ThreadPool::new(4);
 //! let x = Dense::<f64>::randn(a.rows(), 32, 1);
 //! let mut y = Dense::zeros(a.rows(), 32);
@@ -245,13 +258,11 @@
 //! let a = Arc::new(gen::gcn_normalize::<f64>(&gen::poisson2d(64, 64)));
 //! let x = Arc::new(Dense::<f64>::randn(a.rows(), 32, 1));
 //! // Â²X reassociated: S = Â·Â stays sparse, then S·X.
-//! let ops = vec![
-//!     ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::Auto },
-//!     ChainStepOp::FlowAMulB { b: Arc::clone(&x) },
-//! ];
-//! let mut chain = ChainExec::plan_and_build_sparse(
-//!     ops, a.rows(), a.cols(), a.nnz(), SchedulerParams::default(),
-//! ).unwrap();
+//! let mut chain = ChainBuilder::sparse(a.rows(), a.cols(), a.nnz())
+//!     .step(ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::Auto })
+//!     .step(ChainStepOp::FlowAMulB { b: Arc::clone(&x) })
+//!     .build(SchedulerParams::default())
+//!     .unwrap();
 //! let pool = ThreadPool::new(4);
 //! let mut y = Dense::zeros(a.rows(), 32);
 //! chain.run_sparse(&pool, &a, &mut y);
@@ -276,6 +287,57 @@
 //! through [`ChainExec::run_io`](exec::ChainExec::run_io) with a
 //! [`ChainOut::Sparse`](exec::ChainOut) destination; the service paths
 //! ([`coordinator`]) require a dense final output.
+//!
+//! ## Sparse attention
+//!
+//! Graph attention is the third consecutive-multiplication shape: an
+//! **SDDMM** `S ⊙ (Q·Kᵀ)` samples the dense score product at the graph
+//! pattern, a row softmax normalizes each neighborhood, and an SpMM
+//! aggregates `V`. Materializing the score CSR between three calls
+//! costs exactly the locality fusion buys back, so the chain runs the
+//! trio as **one step** ([`ChainStepOp::Attention`](exec::ChainStepOp)):
+//! each row's scores live in a per-worker scratch strip and never
+//! round-trip through memory.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use tile_fusion::prelude::*;
+//!
+//! let s = Arc::new(gen::gcn_normalize::<f64>(&gen::poisson2d(64, 64)));
+//! let (n, f, d) = (s.rows(), 64, 32);
+//! let w = Arc::new(Dense::<f64>::randn(f, d, 1)); // query projection
+//! let k = Arc::new(Dense::<f64>::randn(n, d, 2));
+//! let v = Arc::new(Dense::<f64>::randn(n, d, 3));
+//!
+//! // One GAT-style forward: Q = X·W, then softmax_row(S ⊙ Q·Kᵀ)·V.
+//! let mut chain = ChainBuilder::dense(n, f)
+//!     .step(ChainStepOp::FlowAMulB { b: Arc::clone(&w) })
+//!     .step(ChainStepOp::Attention {
+//!         s: Arc::clone(&s),
+//!         k: Arc::clone(&k),
+//!         v: Arc::clone(&v),
+//!     })
+//!     .build(SchedulerParams::default())
+//!     .unwrap();
+//! let pool = ThreadPool::new(4);
+//! let x = Dense::<f64>::randn(n, f, 4);
+//! let mut y = Dense::zeros(n, d);
+//! chain.run(&pool, &x, &mut y);
+//! ```
+//!
+//! The fused step is bitwise-equal to the unfused three-call sequence
+//! (and to the dense compute-then-sample oracle's sampled entries) at
+//! any thread count and under every `TF_BACKEND` — the softmax
+//! reductions map SIMD lanes onto the same no-FMA accumulation order
+//! as the multiply kernels. Need the raw scores instead? End the chain
+//! with [`ChainStepOp::SddmmQK`](exec::ChainStepOp) and collect through
+//! [`run_io`](exec::ChainExec::run_io) into a
+//! [`ChainOut::Sparse`](exec::ChainOut) destination.
+//! [`kernels::sddmm`] / [`kernels::csr_transpose`] are the standalone
+//! kernels; the coordinator's schedule cache hands attention steps
+//! cached transposed patterns (`Metrics::transpose_cache_hits`);
+//! [`gnn::GatLayer`] runs its whole forward this way; and
+//! `benches/fig20_sddmm_attention` measures the fused-over-unfused win.
 //!
 //! ## Serving
 //!
@@ -413,9 +475,9 @@ pub mod tuning;
 pub mod prelude {
     pub use crate::core::{Dense, Scalar};
     pub use crate::exec::{
-        chain_specs, AtomicTiling, CLayout, ChainExec, ChainIn, ChainOut, ChainStepOp, FirstOp,
-        Fused, Lease, Overlapped, PairExec, PairOp, PoolShard, SharedPool, SpgemmWs, StepControl,
-        StepStrategy, StripMode, TensorStyle, ThreadPool, Unfused,
+        chain_specs, AtomicTiling, CLayout, ChainBuilder, ChainExec, ChainIn, ChainOut,
+        ChainStepOp, FirstOp, Fused, Lease, Overlapped, PairExec, PairOp, PoolShard, SharedPool,
+        SpgemmWs, StepControl, StepStrategy, StripMode, TensorStyle, ThreadPool, Unfused,
     };
     pub use crate::scheduler::{
         BSide, ChainFlow, ChainInputMeta, ChainPlan, ChainPlanner, ChainStepSpec, FusedSchedule,

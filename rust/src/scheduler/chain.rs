@@ -29,11 +29,22 @@
 //! inspect — they execute as row-parallel merges
 //! ([`crate::exec::spgemm`]).
 //!
+//! ## Attention steps
+//!
+//! Sparse-attention forwards add two more step kinds whose sampling
+//! pattern — unlike an SpGEMM product — is known **at plan time**:
+//! [`ChainStepSpec::Sddmm`] (`out = S ⊙ (Q·Kᵀ)`, the flowing dense
+//! value as `Q`, output sparse on `S`'s pattern with no symbolic
+//! phase) and [`ChainStepSpec::Attention`] (the fused
+//! SDDMM → row-softmax → SpMM of a graph-attention layer, dense
+//! output). Both read only flow row `i` per output row, so they
+//! pipeline against the previous step's drain like flow-`B` pairs.
+//!
 //! Planning is value-free (patterns, shapes and density summaries
 //! only), like the rest of [`crate::scheduler`]; binding values and
 //! running the chain is [`crate::exec::chain`]'s job.
 
-use super::cost::{estimate_spgemm, SpgemmEstimate};
+use super::cost::{estimate_attention_flops, estimate_sddmm, estimate_spgemm, SpgemmEstimate};
 use super::{BSide, FusedSchedule, FusionOp, Scheduler, SchedulerParams};
 use crate::sparse::Pattern;
 use std::collections::HashMap;
@@ -138,6 +149,16 @@ pub enum ChainStepSpec<'a> {
     /// flowing `V` may be sparse (CSR SpMM) or dense (GeMM). Output is
     /// always dense.
     FlowAMulB { bcol: usize },
+    /// SDDMM `out = S ⊙ (Q·Kᵀ)`: the flowing dense value is `Q`, `K`
+    /// is a stationary dense operand sharing `Q`'s inner dimension, and
+    /// `s` is the sampling pattern. The output is sparse **on `s`'s
+    /// pattern exactly** — known at plan time, no symbolic phase.
+    Sddmm { s: &'a Pattern },
+    /// Fused sparse attention `out = softmax_row(S ⊙ (Q·Kᵀ)) · V`: the
+    /// flowing dense value is `Q`; stationary `K` and `V` (of `v_cols`
+    /// columns) bind at run time. Output is dense `s.rows × v_cols`;
+    /// the sparse score matrix never materializes.
+    Attention { s: &'a Pattern, v_cols: usize },
 }
 
 /// Chain validation / planning error (dimension non-conformance, flow
@@ -166,6 +187,8 @@ pub enum PlannedStep {
     Pair(ChainFlow),
     Spgemm,
     FlowAMulB,
+    Sddmm,
+    Attention,
 }
 
 /// One planned step: the (possibly shared) schedule plus output
@@ -385,7 +408,13 @@ pub enum DagStepKind<'a> {
     /// Sparse-output SpGEMM: symbolic blocks, serial shell, numeric
     /// blocks.
     SpgemmSparse { out_rows: usize, chunk: usize },
-    /// Row-parallel dense-output step (densified SpGEMM, `V·B`).
+    /// Sparse-output step whose pattern is **known at plan time**
+    /// (SDDMM): a serial shell that clones the sampling pattern, then
+    /// numeric blocks gated only by their own cross-step row reads —
+    /// no symbolic phase.
+    FixedPatternSparse { out_rows: usize, chunk: usize },
+    /// Row-parallel dense-output step (densified SpGEMM, `V·B`,
+    /// fused attention).
     RowBlocks { out_rows: usize, chunk: usize },
 }
 
@@ -641,6 +670,35 @@ pub fn build_chain_dag(steps: &[DagStepDesc<'_>]) -> ChainDag {
                     lo = hi;
                 }
             }
+            DagStepKind::FixedPatternSparse { out_rows, chunk } => {
+                producer.resize(*out_rows, u32::MAX);
+                let chunk = (*chunk).max(1);
+                // The shell clones a pattern known at plan time — it
+                // reads nothing from the flow, so barrier/WAR edges
+                // suffice; numeric blocks then carry their *own*
+                // cross-step row dependences (unlike SpGEMM, where the
+                // symbolic phase already drained the flow).
+                let mut shell_dep = barrier_dep.clone();
+                shell_dep.extend(war);
+                let shell =
+                    push_node(&mut nodes, &mut preds, DagNode::Shell { step: su }, shell_dep);
+                let mut lo = 0usize;
+                while lo < *out_rows {
+                    let hi = (lo + chunk).min(*out_rows);
+                    let mut dep = enter(lo, hi, &mut stamp, &mut gen);
+                    dep.push(shell);
+                    let id = push_node(
+                        &mut nodes,
+                        &mut preds,
+                        DagNode::Numeric { step: su, lo: lo as u32, hi: hi as u32 },
+                        dep,
+                    );
+                    for r in lo..hi {
+                        producer[r] = id;
+                    }
+                    lo = hi;
+                }
+            }
             DagStepKind::RowBlocks { out_rows, chunk } => {
                 producer.resize(*out_rows, u32::MAX);
                 let chunk = (*chunk).max(1);
@@ -882,6 +940,60 @@ impl ChainPlanner {
                         out_cols: *bcol,
                         d1_rows: 0,
                         flops: 2 * est_nnz * bcol,
+                        est_density: 1.0,
+                    }
+                }
+                ChainStepSpec::Sddmm { s: sp } => {
+                    if cur_fmt != StepOutput::Dense {
+                        return Err(ChainError::new(format!(
+                            "step {s}: SDDMM steps consume a dense flowing value (Q) but the \
+                             flow is sparse here"
+                        )));
+                    }
+                    if sp.rows != cur_r {
+                        return Err(ChainError::new(format!(
+                            "step {s}: sampling pattern has {} rows but the flowing Q has \
+                             {cur_r} rows",
+                            sp.rows
+                        )));
+                    }
+                    let est = estimate_sddmm(sp, cur_c);
+                    ChainStepPlan {
+                        schedule: None,
+                        kind: PlannedStep::Sddmm,
+                        // The output pattern is the sampling pattern
+                        // exactly — densifying attention scores defeats
+                        // the step, so there is no format decision.
+                        output: StepOutput::SparseCsr,
+                        out_rows: sp.rows,
+                        out_cols: sp.cols,
+                        d1_rows: 0,
+                        flops: est.flops,
+                        est_density: est.out_density,
+                    }
+                }
+                ChainStepSpec::Attention { s: sp, v_cols } => {
+                    if cur_fmt != StepOutput::Dense {
+                        return Err(ChainError::new(format!(
+                            "step {s}: attention steps consume a dense flowing value (Q) but \
+                             the flow is sparse here"
+                        )));
+                    }
+                    if sp.rows != cur_r {
+                        return Err(ChainError::new(format!(
+                            "step {s}: sampling pattern has {} rows but the flowing Q has \
+                             {cur_r} rows",
+                            sp.rows
+                        )));
+                    }
+                    ChainStepPlan {
+                        schedule: None,
+                        kind: PlannedStep::Attention,
+                        output: StepOutput::Dense,
+                        out_rows: sp.rows,
+                        out_cols: *v_cols,
+                        d1_rows: 0,
+                        flops: estimate_attention_flops(sp, cur_c, *v_cols),
                         est_density: 1.0,
                     }
                 }
@@ -1207,6 +1319,105 @@ mod tests {
             )
             .unwrap_err();
         assert!(err.to_string().contains("32 cols"), "{err}");
+    }
+
+    #[test]
+    fn attention_chain_plans_shapes_and_boundaries() {
+        // Projection (pair) then fused attention over the same graph:
+        // H·W flows into Q, attention ends dense n × v_cols.
+        let s = gen::erdos_renyi(96, 4, 11);
+        let specs = vec![
+            ChainStepSpec::Pair {
+                op: FusionOp { a: &s, b: BSide::Dense { bcol: 12 }, ccol: 16 },
+                flow: ChainFlow::B,
+            },
+            ChainStepSpec::Attention { s: &s, v_cols: 10 },
+        ];
+        let plan = ChainPlanner::new(params_small()).plan(96, 12, &specs).unwrap();
+        assert_eq!(plan.steps[1].kind, PlannedStep::Attention);
+        assert!(plan.steps[1].schedule.is_none());
+        assert_eq!(plan.out_dims(), (96, 10));
+        assert_eq!(plan.out_format(), StepOutput::Dense);
+        assert_eq!(
+            plan.boundaries,
+            vec![StepBoundary::Barrier, StepBoundary::Pipelined],
+            "attention reads only flow row i per output row — it pipelines"
+        );
+        assert_eq!(
+            plan.steps[1].flops,
+            estimate_attention_flops(&s, 16, 10),
+            "attention flops use the flowing inner dimension"
+        );
+    }
+
+    #[test]
+    fn sddmm_step_stays_sparse_on_the_sampling_pattern() {
+        let s = gen::erdos_renyi(64, 3, 17);
+        let specs = vec![ChainStepSpec::Sddmm { s: &s }];
+        let plan = ChainPlanner::new(params_small()).plan(64, 24, &specs).unwrap();
+        assert_eq!(plan.steps[0].kind, PlannedStep::Sddmm);
+        assert_eq!(plan.steps[0].output, StepOutput::SparseCsr);
+        assert_eq!(plan.out_dims(), (s.rows, s.cols));
+        assert_eq!(plan.steps[0].flops, 2 * s.nnz() * 24);
+        assert!((plan.steps[0].est_density - s.density()).abs() < 1e-12);
+        assert_eq!(plan.stats.sparse_outputs, 1);
+    }
+
+    #[test]
+    fn attention_steps_reject_bad_flows() {
+        let s = gen::banded(32, &[1]);
+        // Sparse flow into an SDDMM step (Q must be dense).
+        let err = ChainPlanner::new(params_small())
+            .plan_input(
+                ChainInputMeta::sparse(32, 32, s.nnz()),
+                &[ChainStepSpec::Sddmm { s: &s }],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("dense flowing value"), "{err}");
+        // Row-count mismatch between pattern and flowing Q.
+        let err = ChainPlanner::new(params_small())
+            .plan(16, 8, &[ChainStepSpec::Attention { s: &s, v_cols: 4 }])
+            .unwrap_err();
+        assert!(err.to_string().contains("32 rows"), "{err}");
+    }
+
+    #[test]
+    fn fixed_pattern_sparse_dag_has_shell_before_numerics() {
+        // Pair step 0, then a pipelined fixed-pattern sparse step: the
+        // shell precedes every numeric block, and each numeric block
+        // depends on its identity row producers (not the sentinel).
+        let steps = [
+            DagStepDesc {
+                kind: DagStepKind::Unfused { n_first: 16, n_second: 16, chunk: 4 },
+                reads: DagReads::All,
+                boundary: StepBoundary::Barrier,
+            },
+            DagStepDesc {
+                kind: DagStepKind::FixedPatternSparse { out_rows: 16, chunk: 4 },
+                reads: DagReads::Identity,
+                boundary: StepBoundary::Pipelined,
+            },
+        ];
+        let dag = build_chain_dag(&steps);
+        let shell = dag
+            .nodes
+            .iter()
+            .position(|n| matches!(n, DagNode::Shell { step: 1 }))
+            .expect("fixed-pattern step emits a shell node");
+        let numerics: Vec<usize> = dag
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n, DagNode::Numeric { step: 1, .. }))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(numerics.len(), 4, "16 rows / chunk 4");
+        assert!(numerics.iter().all(|&i| i > shell));
+        // Pipelined numerics carry > 1 predecessor (rows + shell),
+        // i.e. they do not simply hang off the previous sentinel.
+        for &i in &numerics {
+            assert!(dag.spec.dep_count[i] >= 2, "node {i} deps {}", dag.spec.dep_count[i]);
+        }
     }
 
     #[test]

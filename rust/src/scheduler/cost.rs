@@ -287,6 +287,29 @@ pub fn estimate_spgemm(a: &Pattern, v_cols: usize, v_density: f64) -> SpgemmEsti
     SpgemmEstimate { flops, out_density, out_nnz }
 }
 
+/// Estimate an SDDMM chain step `out = S ⊙ (Q·Kᵀ)` with inner
+/// dimension `d`. Unlike SpGEMM nothing here is probabilistic — the
+/// output pattern **is** the sampling pattern, so the density is exact
+/// and the flop count (`2 · nnz(S) · d`, one multiply-add per sampled
+/// dot element) is deterministic. Reuses [`SpgemmEstimate`] so the
+/// planner's output-format decision applies unchanged.
+pub fn estimate_sddmm(s: &Pattern, d: usize) -> SpgemmEstimate {
+    SpgemmEstimate {
+        flops: 2 * s.nnz() * d,
+        out_density: s.density(),
+        out_nnz: s.nnz(),
+    }
+}
+
+/// Flop estimate of a fused attention step
+/// `out = softmax_row(S ⊙ (Q·Kᵀ)) · V`: the SDDMM (`2·nnz·d`), the
+/// row-softmax sweeps (max, exp, sum, divide ≈ `5·nnz`), and the value
+/// combine (`2·nnz·v_cols`). The output is dense `S.rows × v_cols` so
+/// no format decision is involved.
+pub fn estimate_attention_flops(s: &Pattern, d: usize, v_cols: usize) -> usize {
+    2 * s.nnz() * d + 5 * s.nnz() + 2 * s.nnz() * v_cols
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -380,6 +403,23 @@ mod tests {
         let lo = estimate_spgemm(&a, 64, 1e-3).out_density;
         let hi = estimate_spgemm(&a, 64, 1e-1).out_density;
         assert!(lo < hi);
+    }
+
+    #[test]
+    fn sddmm_estimate_is_exact() {
+        let s = crate::sparse::gen::erdos_renyi(64, 4, 9);
+        let e = estimate_sddmm(&s, 16);
+        assert_eq!(e.flops, 2 * s.nnz() * 16);
+        assert_eq!(e.out_nnz, s.nnz());
+        assert!((e.out_density - s.density()).abs() < 1e-15);
+        // Attention adds the softmax sweeps and the value combine.
+        let f = estimate_attention_flops(&s, 16, 8);
+        assert_eq!(f, 2 * s.nnz() * 16 + 5 * s.nnz() + 2 * s.nnz() * 8);
+        assert!(f > e.flops);
+        // Empty pattern: zero everything.
+        let z = estimate_sddmm(&Pattern::empty(4, 4), 8);
+        assert_eq!((z.flops, z.out_nnz), (0, 0));
+        assert_eq!(estimate_attention_flops(&Pattern::empty(4, 4), 8, 8), 0);
     }
 
     #[test]

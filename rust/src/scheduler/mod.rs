@@ -24,8 +24,8 @@ pub use chain::{
     DagStepDesc, DagStepKind, PlannedStep, StepBoundary, StepOutput, StepOutputMode,
 };
 pub use cost::{
-    estimate_spgemm, parse_remote_penalty_weight, remote_penalty, remote_penalty_weight,
-    SpgemmEstimate,
+    estimate_attention_flops, estimate_sddmm, estimate_spgemm, parse_remote_penalty_weight,
+    remote_penalty, remote_penalty_weight, SpgemmEstimate,
 };
 pub use place::{decide_placement, Placement};
 pub use schedule::{FusedSchedule, ScheduleStats, Tile};

@@ -13,7 +13,8 @@ use tile_fusion::core::{Dense, Scalar};
 use tile_fusion::exec::StripMode;
 use tile_fusion::kernels::backend::{self, Backend, BackendId};
 use tile_fusion::kernels::{
-    gemm_row_ct_strip_with, gemm_row_strip_with, gemm_row_with, pack_panel_with, spgemm_merge_with,
+    gemm_row_ct_strip_with, gemm_row_strip_with, gemm_row_with, pack_panel_with,
+    reduce_max_with, reduce_sum_with, sddmm_row_with, softmax_row_with, spgemm_merge_with,
     spmm_row_strip_with, JB,
 };
 use tile_fusion::sparse::{gen, Csr};
@@ -159,6 +160,58 @@ fn kernel_parity_case<T: Scalar>(rng: &mut XorShift64, bits: fn(T) -> u64) {
         assert_eq!(touched[..n], want_touched[..want_n], "{}: touch order", bk.id());
         assert_eq!(marks, want_marks, "{}: marks left set identically", bk.id());
         assert_bits(&acc, &want_acc, bits, bk.id(), "spgemm_merge acc");
+    }
+
+    // --- sddmm_row: sampled `q · K[col]` dots over one pattern row. ---
+    let d = 1 + rng.next_range(40);
+    let sp = gen::uniform_random(
+        8 + rng.next_range(40),
+        8 + rng.next_range(40),
+        1 + rng.next_range(6),
+        rng.next_u64(),
+    );
+    let kd = Dense::<T>::randn(sp.cols, d, rng.next_u64());
+    let qd = Dense::<T>::randn(sp.rows, d, rng.next_u64());
+    let r = rng.next_range(sp.rows);
+    let cols = &sp.indices[sp.indptr[r]..sp.indptr[r + 1]];
+    // Out is overwritten, so prefill with garbage to pin that contract.
+    let dout0 = Dense::<T>::randn(1, cols.len(), rng.next_u64());
+    let mut want = dout0.data.clone();
+    sddmm_row_with(scalar, cols, qd.row(r), &kd, &mut want);
+    for bk in &others {
+        let mut got = dout0.data.clone();
+        sddmm_row_with(*bk, cols, qd.row(r), &kd, &mut got);
+        assert_bits(&got, &want, bits, bk.id(), "sddmm_row");
+    }
+
+    // --- softmax reductions (max, sum) + the full row transform; the
+    // width sweep includes the empty row (max = −∞, sum = 0). ---
+    let len = rng.next_range(4 * JB + 1);
+    let row0 = Dense::<T>::randn(1, len, rng.next_u64());
+    let want_max = reduce_max_with(scalar, &row0.data);
+    let want_sum = reduce_sum_with(scalar, &row0.data);
+    let mut want = row0.data.clone();
+    softmax_row_with(scalar, &mut want);
+    for bk in &others {
+        let got_max = reduce_max_with(*bk, &row0.data);
+        assert!(
+            bits(got_max) == bits(want_max),
+            "{}: reduce_max diverges: {} vs {}",
+            bk.id(),
+            got_max.to_f64(),
+            want_max.to_f64()
+        );
+        let got_sum = reduce_sum_with(*bk, &row0.data);
+        assert!(
+            bits(got_sum) == bits(want_sum),
+            "{}: reduce_sum diverges: {} vs {}",
+            bk.id(),
+            got_sum.to_f64(),
+            want_sum.to_f64()
+        );
+        let mut got = row0.data.clone();
+        softmax_row_with(*bk, &mut got);
+        assert_bits(&got, &want, bits, bk.id(), "softmax_row");
     }
 }
 

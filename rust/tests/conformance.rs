@@ -11,7 +11,7 @@ mod common;
 
 use common::{f32_tol, random_params, random_pattern};
 use std::sync::Arc;
-use tile_fusion::exec::chain::{ChainExec, ChainStepOp};
+use tile_fusion::exec::chain::ChainStepOp;
 use tile_fusion::exec::reference::reference;
 use tile_fusion::kernels::JB;
 use tile_fusion::prelude::*;
@@ -203,7 +203,9 @@ fn conformance_chain_strip_width_sweep() {
         params.elem_bytes = 8;
         let pool = ThreadPool::new(1 + rng.next_range(4));
         for mode in [StripMode::Width(JB), StripMode::Width(2 * JB), StripMode::Full] {
-            let mut chain = ChainExec::plan_and_build(mk_ops(), a.rows(), rhs, params)
+            let mut chain = ChainBuilder::dense(a.rows(), rhs)
+                .steps(mk_ops())
+                .build(params)
                 .expect("chain must bind");
             for s in 0..len {
                 chain.set_strip(s, mode);
@@ -312,7 +314,9 @@ fn conformance_chain_exec_vs_composed_reference() {
 
         let mut params = random_params(rng);
         params.elem_bytes = 8;
-        let mut chain = ChainExec::plan_and_build(ops, in_rows, in_cols, params)
+        let mut chain = ChainBuilder::dense(in_rows, in_cols)
+            .steps(ops)
+            .build(params)
             .expect("random chain must bind");
         chain.set_strategies(&strategies);
         let pool = ThreadPool::new(1 + rng.next_range(4));
@@ -399,7 +403,9 @@ fn check_spgemm_chain_case<T: Scalar>(rng: &mut XorShift64, tol: f64) {
     }
 
     let params = random_params(rng);
-    let mut chain = ChainExec::plan_and_build_sparse(ops, n, n, v0.nnz(), params)
+    let mut chain = ChainBuilder::sparse(n, n, v0.nnz())
+        .steps(ops)
+        .build(params)
         .expect("spgemm chain must bind");
     if pair_step {
         use tile_fusion::exec::chain::StepStrategy;
@@ -469,14 +475,10 @@ fn conformance_spgemm_sparse_final_output() {
         for a in &mats {
             expect = spgemm(a, &expect, 0.0);
         }
-        let mut chain = ChainExec::plan_and_build_sparse(
-            ops,
-            n,
-            n,
-            v0.nnz(),
-            random_params(rng),
-        )
-        .expect("sparse-out chain must bind");
+        let mut chain = ChainBuilder::sparse(n, n, v0.nnz())
+            .steps(ops)
+            .build(random_params(rng))
+            .expect("sparse-out chain must bind");
         let pool = ThreadPool::new(1 + rng.next_range(4));
         let mut out = Csr::<f64>::empty(0, 0);
         for run in 0..2 {
@@ -513,7 +515,7 @@ fn conformance_chain_exec_f32() {
         let mut params = random_params(rng);
         params.elem_bytes = 4;
         let mut chain =
-            ChainExec::plan_and_build(ops, a.rows(), rhs, params).expect("bind f32 chain");
+            ChainBuilder::dense(a.rows(), rhs).steps(ops).build(params).expect("bind f32 chain");
         let pool = ThreadPool::new(1 + rng.next_range(4));
         let mut d = Dense::zeros(a.rows(), rhs);
         chain.run(&pool, &x, &mut d);
@@ -522,6 +524,157 @@ fn conformance_chain_exec_f32() {
         let tol = 1e-5 * depth.sqrt().max(1.0);
         let diff = d.max_abs_diff(&expect);
         assert!(diff < tol, "f32 chain diverged: {diff:.3e} > {tol:.3e}");
+    });
+}
+
+/// Dense `Q·Kᵀ`-then-sample oracle for SDDMM: the full score matrix via
+/// the naive dense matmul, sampled at the pattern — no sparse code path
+/// shared with the system under test.
+fn sddmm_oracle<T: Scalar>(s: &Pattern, q: &Dense<T>, k: &Dense<T>) -> Csr<T> {
+    let scores = matmul(q, &k.transpose());
+    let mut out = Csr::from_pattern(s.clone(), T::ZERO);
+    for i in 0..s.rows {
+        for e in s.indptr[i]..s.indptr[i + 1] {
+            out.data[e] = scores.get(i, s.indices[e] as usize);
+        }
+    }
+    out
+}
+
+/// Serial attention oracle in the executor's exact edge order: SDDMM
+/// kernel, per-row softmax, weighted combine — bitwise-comparable.
+fn attention_oracle<T: Scalar>(
+    s: &Pattern,
+    q: &Dense<T>,
+    k: &Dense<T>,
+    v: &Dense<T>,
+) -> Dense<T> {
+    let mut p = tile_fusion::kernels::sddmm(s, q, k);
+    let mut out = Dense::<T>::zeros(s.rows, v.cols);
+    for i in 0..s.rows {
+        let (lo, hi) = (s.indptr[i], s.indptr[i + 1]);
+        tile_fusion::kernels::softmax_row(&mut p.data[lo..hi]);
+        let (cols, vals) = p.row(i);
+        for (&c, &pv) in cols.iter().zip(vals) {
+            for (o, &x) in out.row_mut(i).iter_mut().zip(v.row(c as usize)) {
+                *o += pv * x;
+            }
+        }
+    }
+    out
+}
+
+/// One SDDMM conformance case: the tiled kernel against the dense
+/// `Q·Kᵀ`-then-sample oracle, and a one-step `SddmmQK` chain (strip
+/// Auto and Full, random threads) against the kernel bitwise.
+fn check_sddmm_case<T: Scalar>(rng: &mut XorShift64, tol_scale: f64) {
+    let pat = random_pattern(rng);
+    let d = 1 + rng.next_range(24);
+    let q = Dense::<T>::randn(pat.rows, d, rng.next_u64());
+    let k = Dense::<T>::randn(pat.cols, d, rng.next_u64());
+    let tol = tol_scale * (1.0 + d as f64).sqrt();
+
+    let got = tile_fusion::kernels::sddmm(&pat, &q, &k);
+    let expect = sddmm_oracle(&pat, &q, &k);
+    assert_eq!(got.pattern, pat, "SDDMM must keep S's pattern exactly");
+    for (e, (gv, ev)) in got.data.iter().zip(&expect.data).enumerate() {
+        let diff = (gv.to_f64() - ev.to_f64()).abs();
+        assert!(diff < tol, "sddmm entry {e} diverged: {diff:.3e} > {tol:.3e}");
+    }
+
+    let s = Arc::new(got.clone());
+    for strip in [StripMode::Auto, StripMode::Full] {
+        let mut chain = ChainBuilder::dense(pat.rows, d)
+            .step(ChainStepOp::SddmmQK { s: Arc::clone(&s), k: Arc::new(k.clone()) })
+            .strip(strip)
+            .build(random_params(rng))
+            .expect("sddmm chain must bind");
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+        let mut out = Csr::<T>::empty(0, 0);
+        for run in 0..2 {
+            chain.run_io(&pool, ChainIn::Dense(&q), ChainOut::Sparse(&mut out));
+            assert_eq!(out, got, "chain SDDMM ({strip:?}, run {run}) must match the kernel");
+        }
+    }
+}
+
+#[test]
+fn conformance_sddmm_grid_f64() {
+    check_prop("conformance-sddmm-f64", 15, |rng| check_sddmm_case::<f64>(rng, 1e-12));
+}
+
+#[test]
+fn conformance_sddmm_grid_f32() {
+    check_prop("conformance-sddmm-f32", 10, |rng| check_sddmm_case::<f32>(rng, 1e-4));
+}
+
+#[test]
+fn conformance_attention_chain_bitwise_f64() {
+    // Fused SDDMM→softmax→SpMM as one chain step, bitwise against the
+    // serial kernel-composed oracle, at random thread counts and both
+    // strip policies — plus a drop-tol SpGEMM feeding the attention
+    // step through a densifying FlowAMulB, so every knob of the grid
+    // is reachable from a sparse chain input.
+    check_prop("conformance-attention-chain", 12, |rng| {
+        let pat = random_pattern(rng);
+        let n = pat.rows;
+        let d = 1 + rng.next_range(16);
+        let dv = 1 + rng.next_range(16);
+        let k = Arc::new(Dense::<f64>::randn(n, d, rng.next_u64()));
+        let v = Arc::new(Dense::<f64>::randn(n, dv, rng.next_u64()));
+        let s = Arc::new(Csr::<f64>::with_random_values(pat, rng.next_u64(), -1.0, 1.0));
+        let q = Dense::<f64>::randn(n, d, rng.next_u64());
+        let expect = attention_oracle(&s.pattern, &q, &k, &v);
+
+        for strip in [StripMode::Auto, StripMode::Full] {
+            let mut chain = ChainBuilder::dense(n, d)
+                .step(ChainStepOp::Attention {
+                    s: Arc::clone(&s),
+                    k: Arc::clone(&k),
+                    v: Arc::clone(&v),
+                })
+                .strip(strip)
+                .build(random_params(rng))
+                .expect("attention chain must bind");
+            let pool = ThreadPool::new(1 + rng.next_range(4));
+            let mut out = Dense::zeros(n, dv);
+            for run in 0..2 {
+                chain.run(&pool, &q, &mut out);
+                let bitwise =
+                    out.data.iter().zip(&expect.data).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(bitwise, "attention chain ({strip:?}, run {run}) not bitwise");
+            }
+        }
+
+        // Sparse input: SpGEMM (random drop-tol) → densify → attention.
+        use tile_fusion::scheduler::chain::StepOutputMode;
+        let tol = if rng.next_bool(0.5) { 0.0 } else { 0.05 };
+        let a = Arc::new(Csr::<f64>::with_random_values(
+            gen::uniform_random(n, n, 1 + rng.next_range(4), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        ));
+        let b = Arc::new(Dense::<f64>::randn(n, d, rng.next_u64()));
+        let mut chain = ChainBuilder::sparse(n, n, s.nnz())
+            .step(ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::SparseCsr })
+            .drop_tol(tol)
+            .step(ChainStepOp::FlowAMulB { b: Arc::clone(&b) })
+            .step(ChainStepOp::Attention { s: Arc::clone(&s), k: Arc::clone(&k), v: Arc::clone(&v) })
+            .build(random_params(rng))
+            .expect("spgemm→attention chain must bind");
+        let v1 = tile_fusion::kernels::spgemm(&a, &s, tol);
+        let mut q2 = Dense::<f64>::zeros(n, d);
+        for i in 0..n {
+            tile_fusion::kernels::spmm_row(&v1, i, &b, q2.row_mut(i));
+        }
+        let expect2 = attention_oracle(&s.pattern, &q2, &k, &v);
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+        let mut out = Dense::zeros(n, dv);
+        chain.run_sparse(&pool, &s, &mut out);
+        let bitwise =
+            out.data.iter().zip(&expect2.data).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(bitwise, "spgemm(drop_tol={tol})→attention chain not bitwise");
     });
 }
 

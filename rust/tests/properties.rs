@@ -836,23 +836,7 @@ fn prop_topology_shard_isolation_bitwise() {
 /// `Arc`'d) — lets one random case bind both a barriered and a
 /// pipelined executor over the identical matrices.
 fn clone_chain_ops<T>(ops: &[ChainStepOp<T>]) -> Vec<ChainStepOp<T>> {
-    ops.iter()
-        .map(|op| match op {
-            ChainStepOp::GemmFlowB { a, w } => {
-                ChainStepOp::GemmFlowB { a: Arc::clone(a), w: Arc::clone(w) }
-            }
-            ChainStepOp::GemmFlowC { a, b } => {
-                ChainStepOp::GemmFlowC { a: Arc::clone(a), b: Arc::clone(b) }
-            }
-            ChainStepOp::SpmmFlowC { a, b } => {
-                ChainStepOp::SpmmFlowC { a: Arc::clone(a), b: Arc::clone(b) }
-            }
-            ChainStepOp::SpgemmFlow { a, output } => {
-                ChainStepOp::SpgemmFlow { a: Arc::clone(a), output: *output }
-            }
-            ChainStepOp::FlowAMulB { b } => ChainStepOp::FlowAMulB { b: Arc::clone(b) },
-        })
-        .collect()
+    ops.to_vec()
 }
 
 /// Random dense-flow chain of 2–4 steps mixing the three pair step
@@ -930,15 +914,19 @@ fn check_pipelined_bitwise_case<T: Scalar>(rng: &mut tile_fusion::testing::XorSh
     params.elem_bytes = T::BYTES;
     let pool = ThreadPool::new(1 + rng.next_range(4));
 
-    let mut barriered = ChainExec::plan_and_build(clone_chain_ops(&ops), in_rows, in_cols, params)
+    let mut barriered = ChainBuilder::dense(in_rows, in_cols)
+        .steps(clone_chain_ops(&ops))
+        .build(params)
         .expect("chain must bind");
     barriered.force_barriers();
     let (out_rows, out_cols) = barriered.out_dims();
     let mut expect = Dense::zeros(out_rows, out_cols);
     barriered.run(&pool, &x, &mut expect);
 
-    let mut pipelined =
-        ChainExec::plan_and_build(ops, in_rows, in_cols, params).expect("chain must bind");
+    let mut pipelined = ChainBuilder::dense(in_rows, in_cols)
+        .steps(ops)
+        .build(params)
+        .expect("chain must bind");
     let mut d = Dense::zeros(out_rows, out_cols);
     // Twice: the ping-pong InterBufs and countdown state must reset
     // between runs.
@@ -999,15 +987,18 @@ fn prop_pipelined_spgemm_chain_bitwise_equals_barriered() {
         let params = random_params(rng);
         let pool = ThreadPool::new(1 + rng.next_range(4));
 
-        let mut barriered =
-            ChainExec::plan_and_build_sparse(clone_chain_ops(&ops), n, n, v0.nnz(), params)
-                .expect("spgemm chain must bind");
+        let mut barriered = ChainBuilder::sparse(n, n, v0.nnz())
+            .steps(clone_chain_ops(&ops))
+            .build(params)
+            .expect("spgemm chain must bind");
         barriered.force_barriers();
         let (out_rows, out_cols) = barriered.out_dims();
         let mut expect = Dense::zeros(out_rows, out_cols);
         barriered.run_sparse(&pool, &v0, &mut expect);
 
-        let mut pipelined = ChainExec::plan_and_build_sparse(ops, n, n, v0.nnz(), params)
+        let mut pipelined = ChainBuilder::sparse(n, n, v0.nnz())
+            .steps(ops)
+            .build(params)
             .expect("spgemm chain must bind");
         let mut d = Dense::zeros(out_rows, out_cols);
         for run in 0..2 {
@@ -1045,14 +1036,17 @@ fn prop_pipelined_sparse_output_chain_matches_barriered() {
         let params = random_params(rng);
         let pool = ThreadPool::new(1 + rng.next_range(4));
 
-        let mut barriered =
-            ChainExec::plan_and_build_sparse(clone_chain_ops(&ops), n, n, v0.nnz(), params)
-                .expect("sparse-out chain must bind");
+        let mut barriered = ChainBuilder::sparse(n, n, v0.nnz())
+            .steps(clone_chain_ops(&ops))
+            .build(params)
+            .expect("sparse-out chain must bind");
         barriered.force_barriers();
         let mut expect = Csr::<f64>::empty(0, 0);
         barriered.run_io(&pool, ChainIn::Sparse(&v0), ChainOut::Sparse(&mut expect));
 
-        let mut pipelined = ChainExec::plan_and_build_sparse(ops, n, n, v0.nnz(), params)
+        let mut pipelined = ChainBuilder::sparse(n, n, v0.nnz())
+            .steps(ops)
+            .build(params)
             .expect("sparse-out chain must bind");
         let mut out = Csr::<f64>::empty(0, 0);
         for run in 0..2 {
@@ -1078,22 +1072,152 @@ fn prop_pipelined_chain_bitwise_under_simulated_topology() {
         let mut params = random_params(rng);
         params.elem_bytes = 8;
 
-        let mut barriered =
-            ChainExec::plan_and_build(clone_chain_ops(&ops), in_rows, in_cols, params)
-                .expect("chain must bind");
+        let mut barriered = ChainBuilder::dense(in_rows, in_cols)
+            .steps(clone_chain_ops(&ops))
+            .build(params)
+            .expect("chain must bind");
         barriered.force_barriers();
         let (out_rows, out_cols) = barriered.out_dims();
         let mut expect = Dense::zeros(out_rows, out_cols);
         barriered.run(&pool.lease(), &x, &mut expect);
 
-        let mut pipelined =
-            ChainExec::plan_and_build(ops, in_rows, in_cols, params).expect("chain must bind");
+        let mut pipelined = ChainBuilder::dense(in_rows, in_cols)
+            .steps(ops)
+            .build(params)
+            .expect("chain must bind");
         let mut d = Dense::zeros(out_rows, out_cols);
         pipelined.run_pipelined(&pool.lease(), &x, &mut d);
         assert_eq!(d.data, expect.data, "spanning-lease pipelined run diverged");
         let shard = pool.lease_shard(rng.next_range(2));
         pipelined.run_pipelined(&shard, &x, &mut d);
         assert_eq!(d.data, expect.data, "node-shard pipelined run diverged");
+    });
+}
+
+#[test]
+fn prop_csr_transpose_round_trip_bitwise() {
+    // Tᵀᵀ == T bitwise (pattern and values), and the transpose keeps
+    // the CSR invariants (sorted, unique columns) on both square and
+    // rectangular inputs.
+    check_prop("csr-transpose-roundtrip", 20, |rng| {
+        use tile_fusion::kernels::{csr_transpose, pattern_transpose};
+        let pat = if rng.next_bool(0.5) {
+            random_pattern(rng)
+        } else {
+            gen::uniform_random(
+                8 + rng.next_range(120),
+                8 + rng.next_range(120),
+                1 + rng.next_range(6),
+                rng.next_u64(),
+            )
+        };
+        let a = Csr::<f64>::with_random_values(pat, rng.next_u64(), -2.0, 2.0);
+        let t = csr_transpose(&a);
+        assert_eq!((t.rows(), t.cols()), (a.cols(), a.rows()));
+        assert_eq!(t.nnz(), a.nnz());
+        assert!(t.check_invariants(), "transpose broke the CSR invariants");
+        // Entry-level: T[j][i] == A[i][j] for every stored entry.
+        for i in 0..a.rows() {
+            let (cols, vals) = a.row(i);
+            for (&c, &av) in cols.iter().zip(vals) {
+                let (tc, tv) = t.row(c as usize);
+                let e = tc.binary_search(&(i as u32)).expect("entry missing from transpose");
+                assert_eq!(tv[e].to_bits(), av.to_bits());
+            }
+        }
+        let tt = csr_transpose(&t);
+        assert_eq!(tt.pattern, a.pattern, "Tᵀᵀ pattern drifted");
+        assert!(
+            tt.data.iter().zip(&a.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "Tᵀᵀ values not bitwise-identical"
+        );
+        assert_eq!(pattern_transpose(&pattern_transpose(&a.pattern)), a.pattern);
+    });
+}
+
+#[test]
+fn prop_pipelined_attention_chain_bitwise_equals_barriered() {
+    // Attention-family chains through the cross-step DAG: a projection
+    // step feeding a fused attention step (optionally drained by a
+    // trailing pair step) must be bitwise-identical pipelined vs
+    // barriered, like every other step kind.
+    check_prop("pipelined-bitwise-attention", 10, |rng| {
+        let n = 16 + rng.next_range(64);
+        let f = 1 + rng.next_range(12);
+        let d = 1 + rng.next_range(12);
+        let dv = 1 + rng.next_range(12);
+        let s = Arc::new(Csr::<f64>::with_random_values(
+            gen::uniform_random(n, n, 1 + rng.next_range(4), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        ));
+        let w = Arc::new(Dense::<f64>::randn(f, d, rng.next_u64()));
+        let k = Arc::new(Dense::<f64>::randn(n, d, rng.next_u64()));
+        let v = Arc::new(Dense::<f64>::randn(n, dv, rng.next_u64()));
+        let mut ops: Vec<ChainStepOp<f64>> = vec![
+            ChainStepOp::FlowAMulB { b: Arc::clone(&w) },
+            ChainStepOp::Attention { s: Arc::clone(&s), k: Arc::clone(&k), v: Arc::clone(&v) },
+        ];
+        if rng.next_bool(0.5) {
+            // Trailing pair step so the attention output itself drains
+            // into a pipelined consumer.
+            let out_rows = 8 + rng.next_range(48);
+            let a2 = Arc::new(Csr::<f64>::with_random_values(
+                gen::uniform_random(out_rows, n, 1 + rng.next_range(4), rng.next_u64()),
+                rng.next_u64(),
+                -1.0,
+                1.0,
+            ));
+            ops.push(ChainStepOp::GemmFlowC {
+                a: a2,
+                b: Arc::new(Dense::<f64>::randn(n, n, rng.next_u64())),
+            });
+        }
+        let x = Dense::<f64>::randn(n, f, rng.next_u64());
+        let params = random_params(rng);
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+
+        let mut barriered = ChainBuilder::dense(n, f)
+            .steps(clone_chain_ops(&ops))
+            .build(params)
+            .expect("attention chain must bind");
+        barriered.force_barriers();
+        let (out_rows, out_cols) = barriered.out_dims();
+        let mut expect = Dense::zeros(out_rows, out_cols);
+        barriered.run(&pool, &x, &mut expect);
+
+        let mut pipelined = ChainBuilder::dense(n, f)
+            .steps(clone_chain_ops(&ops))
+            .build(params)
+            .expect("attention chain must bind");
+        let mut got = Dense::zeros(out_rows, out_cols);
+        for run in 0..2 {
+            pipelined.run_pipelined(&pool, &x, &mut got);
+            assert_eq!(got.data, expect.data, "pipelined attention chain diverged on run {run}");
+        }
+
+        // A chain *ending* in the sparse SDDMM output, same guarantee.
+        let sddmm_ops: Vec<ChainStepOp<f64>> = vec![
+            ChainStepOp::FlowAMulB { b: Arc::clone(&w) },
+            ChainStepOp::SddmmQK { s: Arc::clone(&s), k: Arc::clone(&k) },
+        ];
+        let mut barriered = ChainBuilder::dense(n, f)
+            .steps(clone_chain_ops(&sddmm_ops))
+            .build(params)
+            .expect("sddmm chain must bind");
+        barriered.force_barriers();
+        let mut expect = Csr::<f64>::empty(0, 0);
+        barriered.run_io(&pool, ChainIn::Dense(&x), ChainOut::Sparse(&mut expect));
+        let mut pipelined = ChainBuilder::dense(n, f)
+            .steps(sddmm_ops)
+            .build(params)
+            .expect("sddmm chain must bind");
+        let mut got = Csr::<f64>::empty(0, 0);
+        for run in 0..2 {
+            pipelined.run_pipelined_io(&pool, ChainIn::Dense(&x), ChainOut::Sparse(&mut got));
+            assert_eq!(got, expect, "pipelined sddmm-out chain diverged on run {run}");
+        }
     });
 }
 
