@@ -1,0 +1,133 @@
+//! Figure 21 (repo extension): one fused GCN training step — the
+//! forward as one `ChainExec` over the whole layer stack, the backward
+//! as per-layer chains over the cached explicit `Âᵀ` — vs the unfused
+//! library-call baseline (separate SpMM/GeMM per layer in both
+//! directions). The locality argument of the paper applied to training:
+//! the same consecutive multiplications, now twice per step.
+//!
+//! Both arms run identical math. Before any timing, the fused training
+//! chains are asserted **bitwise thread-invariant** (1 thread vs the
+//! bench pool) for GCN logits + per-layer gradients and for the GAT
+//! forward + attention-backward outputs — the determinism contract the
+//! training story rides on. Expectation (acceptance): at full scale
+//! the fused train step is ≥ 1.2× the unfused one somewhere in the
+//! hidden-width sweep.
+//!
+//! `--smoke` runs a tiny shape for CI bitrot checks (bitwise checks
+//! still asserted, no speedup assertion).
+
+use std::sync::Arc;
+use tile_fusion::gnn::model::GcnMode;
+use tile_fusion::gnn::{ops, GatLayer, Gcn, SyntheticGraph};
+use tile_fusion::harness::{print_table, write_csv, BenchEnv};
+use tile_fusion::prelude::*;
+use tile_fusion::profiling;
+use tile_fusion::sparse::gen::SuiteScale;
+
+fn assert_bitwise(a: &Dense<f64>, b: &Dense<f64>, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape mismatch");
+    assert!(
+        a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "{what} must be bitwise thread-invariant"
+    );
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let env = BenchEnv::from_env();
+    let (n, hiddens): (usize, &[usize]) = if smoke {
+        (256, &[16])
+    } else {
+        match env.scale {
+            SuiteScale::Small => (4096, &[16, 64, 128]),
+            SuiteScale::Bench => (8192, &[16, 64, 128]),
+        }
+    };
+    let (f_in, classes) = (32usize, 4usize);
+    let g = SyntheticGraph::<f64>::rmat(n, 8, f_in, classes, 21);
+    let a = Arc::new(g.a_hat.clone());
+    let pool = ThreadPool::new(env.threads);
+
+    // Bitwise thread-invariance of the training chains, before timing:
+    // identically-seeded models, 1-thread vs bench pool, forward AND
+    // backward compared bit for bit.
+    {
+        let pool1 = ThreadPool::new(1);
+        let widths = [f_in, hiddens[0], classes];
+        let mut m1 = Gcn::new(Arc::clone(&a), &widths, 11, GcnMode::Fused);
+        let mut mn = Gcn::new(Arc::clone(&a), &widths, 11, GcnMode::Fused);
+        let l1 = m1.forward(&pool1, &g.features);
+        let ln = mn.forward(&pool, &g.features);
+        assert_bitwise(&l1, &ln, "fused GCN logits");
+        let mut dl = Dense::zeros(l1.rows, l1.cols);
+        ops::softmax_xent(&l1, &g.labels, &mut dl);
+        let g1 = m1.backward(&pool1, &dl);
+        let gn = mn.backward(&pool, &dl);
+        for (li, (x, y)) in g1.iter().zip(&gn).enumerate() {
+            assert_bitwise(x, y, &format!("fused GCN layer-{li} weight gradient"));
+        }
+
+        let mut gat1 = GatLayer::new(Arc::clone(&a), f_in, 8, classes, 5);
+        let mut gatn = GatLayer::new(Arc::clone(&a), f_in, 8, classes, 5);
+        let o1 = gat1.forward(&pool1, &g.features);
+        let on = gatn.forward(&pool, &g.features);
+        assert_bitwise(&o1, &on, "fused GAT output");
+        let mut dg = Dense::zeros(o1.rows, o1.cols);
+        ops::softmax_xent(&o1, &g.labels, &mut dg);
+        let (q1, k1, v1, h1) = gat1.backward(&pool1, &dg);
+        let (qn, kn, vn, hn) = gatn.backward(&pool, &dg);
+        assert_bitwise(&q1, &qn, "GAT dWq");
+        assert_bitwise(&k1, &kn, "GAT dWk");
+        assert_bitwise(&v1, &vn, "GAT dWv");
+        assert_bitwise(&h1, &hn, "GAT dH");
+    }
+
+    let mut table = Vec::new();
+    let mut csv = Vec::new();
+    let mut best = 0.0f64;
+    for &hidden in hiddens {
+        let widths = [f_in, hidden, classes];
+        let mut fused = Gcn::new(Arc::clone(&a), &widths, 42, GcnMode::Fused);
+        let mut unfused = Gcn::new(Arc::clone(&a), &widths, 42, GcnMode::Unfused);
+        // Warm both arms (chain bind, schedule cache, scratch) off the
+        // clock; per-step work is weight-value-independent after that.
+        fused.train_step(&pool, &g.features, &g.labels, 0.05);
+        unfused.train_step(&pool, &g.features, &g.labels, 0.05);
+        let t_fused = profiling::measure(1, env.reps, || {
+            fused.train_step(&pool, &g.features, &g.labels, 0.05);
+        })
+        .as_secs_f64();
+        let t_unf = profiling::measure(1, env.reps, || {
+            unfused.train_step(&pool, &g.features, &g.labels, 0.05);
+        })
+        .as_secs_f64();
+        let speedup = t_unf / t_fused;
+        best = best.max(speedup);
+        table.push(vec![
+            hidden.to_string(),
+            format!("{:.3}", t_unf * 1e3),
+            format!("{:.3}", t_fused * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        csv.push(format!("{hidden},{t_unf:.6},{t_fused:.6}"));
+        assert!(t_fused > 0.0 && t_unf > 0.0, "both arms ran");
+    }
+
+    print_table(
+        &format!("Figure 21 — fused vs unfused GCN train step (f64, n={n}, f_in={f_in})"),
+        &["hidden", "unfused ms", "fused ms", "speedup"],
+        &table,
+    );
+    write_csv("fig21_train_fused", "hidden,t_unfused,t_fused", &csv);
+
+    if smoke {
+        println!("smoke OK: fused training chains are bitwise thread-invariant");
+    } else {
+        println!("best fused-over-unfused train-step speedup: {best:.2}x");
+        assert!(
+            best >= 1.2,
+            "fused train step must reach ≥ 1.2x the unfused baseline somewhere \
+             in the sweep: best {best:.2}x"
+        );
+    }
+}

@@ -11,6 +11,49 @@ use crate::sparse::Pattern;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, MutexGuard};
 
+/// Debug sentinel for the documented lock discipline (see the server's
+/// `Shared` doc): **cache partition → metrics**, one partition at a
+/// time, never the reverse. Guards register acquisitions in
+/// thread-local cells (lock guards never cross threads here), and the
+/// two illegal shapes — taking a partition while the metrics mutex is
+/// held, or stacking two partitions — trip a `debug_assert!`. Release
+/// builds keep only the cell bookkeeping (a few nanoseconds); the
+/// asserts compile away.
+pub(crate) mod lock_order {
+    use std::cell::Cell;
+
+    thread_local! {
+        static PARTITIONS_HELD: Cell<usize> = const { Cell::new(0) };
+        static METRICS_HELD: Cell<bool> = const { Cell::new(false) };
+    }
+
+    pub(crate) fn partition_acquiring() {
+        debug_assert!(
+            !METRICS_HELD.with(Cell::get),
+            "lock-order inversion: cache partition requested while the metrics \
+             mutex is held (documented order: partition → metrics)"
+        );
+        debug_assert_eq!(
+            PARTITIONS_HELD.with(Cell::get),
+            0,
+            "lock-order violation: two cache partitions held at once"
+        );
+        PARTITIONS_HELD.with(|p| p.set(p.get() + 1));
+    }
+
+    pub(crate) fn partition_released() {
+        PARTITIONS_HELD.with(|p| p.set(p.get().saturating_sub(1)));
+    }
+
+    pub(crate) fn metrics_acquired() {
+        METRICS_HELD.with(|m| m.set(true));
+    }
+
+    pub(crate) fn metrics_released() {
+        METRICS_HELD.with(|m| m.set(false));
+    }
+}
+
 /// Cache key: everything the schedule depends on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ScheduleKey {
@@ -113,6 +156,11 @@ impl TuneCell {
 
 struct TransEntry {
     pattern: Arc<Pattern>,
+    /// Edge permutation (`perm[t]` = source edge index of transposed
+    /// edge `t`) — filled lazily by the first
+    /// [`ScheduleCache::transpose_with_perm_of`] over this pattern;
+    /// plain [`ScheduleCache::transpose_of`] warming leaves it `None`.
+    perm: Option<Arc<Vec<u32>>>,
     last_used: u64,
 }
 
@@ -152,6 +200,11 @@ pub struct ScheduleCache {
     /// [`ScheduleCache::transpose_of`] lookups that ran the counting
     /// sort.
     pub transpose_misses: u64,
+    /// Cached transposes dropped — by the transpose pool's own LRU
+    /// bound, or because the last schedule entry over their pattern was
+    /// evicted (transpose lifetime follows the entries; a Metrics
+    /// counter).
+    pub transpose_evictions: u64,
 }
 
 impl ScheduleCache {
@@ -175,6 +228,7 @@ impl ScheduleCache {
             evictions: 0,
             transpose_hits: 0,
             transpose_misses: 0,
+            transpose_evictions: 0,
         }
     }
 
@@ -212,6 +266,18 @@ impl ScheduleCache {
             {
                 self.map.remove(&lru);
                 self.evictions += 1;
+                // Transpose lifetime follows the schedule entries: the
+                // cached `Sᵀ` exists to serve tenants of this pattern,
+                // so when the last entry over the pattern is evicted,
+                // the transpose goes with it — a re-inserted key then
+                // re-transposes exactly once (a counted miss) instead
+                // of either resurrecting a pool the LRU no longer
+                // accounts for or re-sorting behind a live sibling.
+                if !self.map.keys().any(|k| k.a_hash == lru.a_hash)
+                    && self.transposes.remove(&lru.a_hash).is_some()
+                {
+                    self.transpose_evictions += 1;
+                }
             }
         }
         let plan = Arc::new(Scheduler::new(params).schedule_op(op));
@@ -355,6 +421,54 @@ impl ScheduleCache {
             return Arc::clone(&e.pattern);
         }
         self.transpose_misses += 1;
+        self.evict_transpose_lru();
+        let t = Arc::new(crate::kernels::pattern_transpose(p));
+        self.transposes
+            .insert(key, TransEntry { pattern: Arc::clone(&t), perm: None, last_used: self.clock });
+        t
+    }
+
+    /// Like [`ScheduleCache::transpose_of`] but also returns the edge
+    /// permutation (`perm[t]` = source edge index of transposed edge
+    /// `t`) that backward attention steps need to walk `Sᵀ` while
+    /// indexing edge stashes laid out in `S` order. A pattern warmed by
+    /// the plain transpose keeps its `Sᵀ` Arc (pointer-stable for
+    /// schedule sharing) and gains the permutation on first demand —
+    /// counted as a miss, since the counting sort reruns.
+    pub fn transpose_with_perm_of(&mut self, p: &Pattern) -> (Arc<Pattern>, Arc<Vec<u32>>) {
+        let key = p.structure_hash();
+        self.clock += 1;
+        if let Some(e) = self.transposes.get_mut(&key) {
+            e.last_used = self.clock;
+            if let Some(perm) = &e.perm {
+                self.transpose_hits += 1;
+                return (Arc::clone(&e.pattern), Arc::clone(perm));
+            }
+        }
+        self.transpose_misses += 1;
+        let (t, perm) = crate::kernels::pattern_transpose_with_perm(p);
+        let perm = Arc::new(perm);
+        if let Some(e) = self.transposes.get_mut(&key) {
+            // Keep the existing Sᵀ Arc; only attach the permutation.
+            e.perm = Some(Arc::clone(&perm));
+            return (Arc::clone(&e.pattern), perm);
+        }
+        self.evict_transpose_lru();
+        let t = Arc::new(t);
+        self.transposes.insert(
+            key,
+            TransEntry {
+                pattern: Arc::clone(&t),
+                perm: Some(Arc::clone(&perm)),
+                last_used: self.clock,
+            },
+        );
+        (t, perm)
+    }
+
+    /// Drop the least-recently-used transpose if the pool is full
+    /// (counted in [`ScheduleCache::transpose_evictions`]).
+    fn evict_transpose_lru(&mut self) {
         if self.transposes.len() >= self.capacity {
             if let Some(lru) = self
                 .transposes
@@ -363,12 +477,9 @@ impl ScheduleCache {
                 .map(|(k, _)| *k)
             {
                 self.transposes.remove(&lru);
+                self.transpose_evictions += 1;
             }
         }
-        let t = Arc::new(crate::kernels::pattern_transpose(p));
-        self.transposes
-            .insert(key, TransEntry { pattern: Arc::clone(&t), last_used: self.clock });
-        t
     }
 
     pub fn len(&self) -> usize {
@@ -401,6 +512,34 @@ impl ScheduleCache {
 pub struct ShardedScheduleCache {
     params: SchedulerParams,
     parts: Vec<Mutex<ScheduleCache>>,
+}
+
+/// Guard over one cache partition. Registers with the [`lock_order`]
+/// sentinel on acquisition and release, so an inverted acquisition
+/// (partition under metrics, or a second partition) trips a debug
+/// assert instead of deadlocking in production. Derefs to the
+/// partition's [`ScheduleCache`].
+pub struct PartitionGuard<'a> {
+    inner: MutexGuard<'a, ScheduleCache>,
+}
+
+impl Drop for PartitionGuard<'_> {
+    fn drop(&mut self) {
+        lock_order::partition_released();
+    }
+}
+
+impl std::ops::Deref for PartitionGuard<'_> {
+    type Target = ScheduleCache;
+    fn deref(&self) -> &ScheduleCache {
+        &self.inner
+    }
+}
+
+impl std::ops::DerefMut for PartitionGuard<'_> {
+    fn deref_mut(&mut self) -> &mut ScheduleCache {
+        &mut self.inner
+    }
 }
 
 impl ShardedScheduleCache {
@@ -443,22 +582,31 @@ impl ShardedScheduleCache {
         (h.finish() % self.parts.len() as u64) as usize
     }
 
+    /// Lock partition `idx`, registering with the [`lock_order`]
+    /// sentinel before blocking — an inverted acquisition asserts in
+    /// debug builds rather than deadlocking in release.
+    fn lock_part(&self, idx: usize) -> PartitionGuard<'_> {
+        lock_order::partition_acquiring();
+        PartitionGuard { inner: self.parts[idx].lock().unwrap() }
+    }
+
     /// Lock the partition that owns `op`'s key. Callers hold exactly
     /// one partition at a time (never two — partition locks have no
     /// order between them) and follow the same discipline as the old
     /// cache-wide mutex: partition before metrics, partition before a
-    /// [`TuneCell`] slot.
-    pub fn lock_for(&self, op: &FusionOp) -> MutexGuard<'_, ScheduleCache> {
+    /// [`TuneCell`] slot. The discipline is checked by the
+    /// [`lock_order`] debug sentinel the returned guard registers with.
+    pub fn lock_for(&self, op: &FusionOp) -> PartitionGuard<'_> {
         let key = ScheduleKey::for_op(op, self.params.elem_bytes.max(1));
-        self.parts[self.index(&key)].lock().unwrap()
+        self.lock_part(self.index(&key))
     }
 
     /// Total (len, hits, misses) across partitions, locked one at a
     /// time.
     pub fn stats(&self) -> (usize, u64, u64) {
         let mut out = (0usize, 0u64, 0u64);
-        for p in &self.parts {
-            let c = p.lock().unwrap();
+        for i in 0..self.parts.len() {
+            let c = self.lock_part(i);
             out.0 += c.len();
             out.1 += c.hits;
             out.2 += c.misses;
@@ -468,30 +616,36 @@ impl ShardedScheduleCache {
 
     /// Total evictions across partitions.
     pub fn evictions(&self) -> u64 {
-        self.parts.iter().map(|p| p.lock().unwrap().evictions).sum()
+        (0..self.parts.len()).map(|i| self.lock_part(i).evictions).sum()
     }
 
     /// Lock the partition owning `pat`'s transpose entry (routed by
     /// `structure_hash`, so repeated requests for one sampling pattern
     /// always land on the same partition's cached `Sᵀ`).
-    pub fn lock_for_pattern(&self, pat: &Pattern) -> MutexGuard<'_, ScheduleCache> {
+    pub fn lock_for_pattern(&self, pat: &Pattern) -> PartitionGuard<'_> {
         let idx = if self.parts.len() == 1 {
             0
         } else {
             (pat.structure_hash() % self.parts.len() as u64) as usize
         };
-        self.parts[idx].lock().unwrap()
+        self.lock_part(idx)
     }
 
     /// Total (hits, misses) of the transpose cache across partitions.
     pub fn transpose_stats(&self) -> (u64, u64) {
         let mut out = (0u64, 0u64);
-        for p in &self.parts {
-            let c = p.lock().unwrap();
+        for i in 0..self.parts.len() {
+            let c = self.lock_part(i);
             out.0 += c.transpose_hits;
             out.1 += c.transpose_misses;
         }
         out
+    }
+
+    /// Total transposes dropped across partitions (own-LRU bound or
+    /// last-entry eviction).
+    pub fn transpose_evictions(&self) -> u64 {
+        (0..self.parts.len()).map(|i| self.lock_part(i).transpose_evictions).sum()
     }
 
     /// Route every matching pick in `table` to its owning partition
@@ -510,7 +664,7 @@ impl ShardedScheduleCache {
                 continue;
             }
             let key = ScheduleKey::from_tune_key(k);
-            self.parts[self.index(&key)].lock().unwrap().seed_tuned(key, *mode);
+            self.lock_part(self.index(&key)).seed_tuned(key, *mode);
             n += 1;
         }
         n
@@ -521,8 +675,8 @@ impl ShardedScheduleCache {
     /// conflicts).
     pub fn to_tune_table(&self, n_threads: usize, n_nodes: usize) -> crate::tuning::TuneTable {
         let mut table = crate::tuning::TuneTable::default();
-        for p in &self.parts {
-            for (k, m) in p.lock().unwrap().tuned_snapshot() {
+        for i in 0..self.parts.len() {
+            for (k, m) in self.lock_part(i).tuned_snapshot() {
                 table.entries.insert(k.tune_key(n_threads, n_nodes), m);
             }
         }
@@ -715,6 +869,123 @@ mod tests {
         let s2 = sharded.lock_for_pattern(&p1).transpose_of(&p1);
         assert!(Arc::ptr_eq(&s1, &s2));
         assert_eq!(sharded.transpose_stats(), (1, 1));
+    }
+
+    #[test]
+    fn transpose_lifetime_follows_the_schedule_entry() {
+        let a = gen::uniform_random(24, 16, 3, 7);
+        let b = gen::banded(24, &[1]);
+        let op_a = |ccol: usize| FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol };
+        let op_b = FusionOp { a: &b, b: BSide::Dense { bcol: 4 }, ccol: 4 };
+
+        // Capacity-1 cache: evicting the pattern's only schedule entry
+        // must take its cached Sᵀ down with it.
+        let mut cache = ScheduleCache::with_capacity(SchedulerParams::default(), 1);
+        cache.get_or_build(&op_a(4));
+        let t1 = cache.transpose_of(&a);
+        cache.get_or_build(&op_b);
+        assert_eq!(cache.transpose_evictions, 1, "eviction drops the entry's transpose");
+        // Eviction-then-rebind: the re-inserted key re-transposes once
+        // (a counted miss) instead of resurrecting the stale pool.
+        cache.get_or_build(&op_a(4));
+        let t2 = cache.transpose_of(&a);
+        assert_eq!((cache.transpose_hits, cache.transpose_misses), (0, 2));
+        assert!(!Arc::ptr_eq(&t1, &t2), "rebind recomputes, never resurrects");
+        assert_eq!(*t2, a.transpose());
+
+        // A surviving sibling entry over the same pattern keeps the
+        // transpose alive.
+        let mut cache = ScheduleCache::with_capacity(SchedulerParams::default(), 2);
+        cache.get_or_build(&op_a(4));
+        cache.get_or_build(&op_a(8));
+        let t1 = cache.transpose_of(&a);
+        cache.get_or_build(&op_b); // evicts op_a(4); op_a(8) survives
+        assert_eq!(cache.evictions, 1);
+        assert_eq!(cache.transpose_evictions, 0, "sibling entry keeps Sᵀ alive");
+        let t2 = cache.transpose_of(&a);
+        assert!(Arc::ptr_eq(&t1, &t2));
+    }
+
+    #[test]
+    fn transpose_perm_attaches_to_the_warmed_entry() {
+        let a = gen::uniform_random(24, 16, 3, 7);
+        let (t_ref, perm_ref) = crate::kernels::pattern_transpose_with_perm(&a);
+        let mut cache = ScheduleCache::with_capacity(SchedulerParams::default(), 4);
+
+        // Cold: one miss builds pattern + perm together.
+        let (t1, p1) = cache.transpose_with_perm_of(&a);
+        assert_eq!((cache.transpose_hits, cache.transpose_misses), (0, 1));
+        assert_eq!(*t1, t_ref);
+        assert_eq!(*p1, perm_ref);
+        // Warm: hit for both forms.
+        let (t2, p2) = cache.transpose_with_perm_of(&a);
+        assert!(Arc::ptr_eq(&t1, &t2) && Arc::ptr_eq(&p1, &p2));
+        let t3 = cache.transpose_of(&a);
+        assert!(Arc::ptr_eq(&t1, &t3));
+        assert_eq!((cache.transpose_hits, cache.transpose_misses), (2, 1));
+
+        // A pattern warmed by the plain transpose (no perm yet) keeps
+        // its Sᵀ Arc and gains the perm on first demand — counted as a
+        // miss, since the counting sort reruns.
+        let b = gen::banded(24, &[1, 3]);
+        let tb = cache.transpose_of(&b);
+        let (tb2, pb) = cache.transpose_with_perm_of(&b);
+        assert!(Arc::ptr_eq(&tb, &tb2), "perm attach keeps the pattern Arc");
+        assert_eq!(cache.transpose_misses, 3);
+        let (_, pb2) = cache.transpose_with_perm_of(&b);
+        assert!(Arc::ptr_eq(&pb, &pb2), "perm now cached");
+    }
+
+    // The lock-order sentinel is thread-local state; each #[test] runs
+    // on its own thread, so a tripped (panicking) guard never leaks
+    // into other tests.
+
+    #[test]
+    fn lock_order_guard_allows_the_documented_order() {
+        let a = gen::banded(16, &[1]);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol: 4 };
+        let sharded = ShardedScheduleCache::with_capacity(SchedulerParams::default(), 2, 8);
+        // partition → metrics (the documented order) is fine…
+        {
+            let mut part = sharded.lock_for(&op);
+            part.get_or_build(&op);
+            lock_order::metrics_acquired();
+            lock_order::metrics_released();
+        }
+        // …as are sequential partitions once the guard dropped, and a
+        // metrics hold with no partition in flight.
+        sharded.lock_for(&op).get_or_build(&op);
+        lock_order::metrics_acquired();
+        lock_order::metrics_released();
+        let _g = sharded.lock_for(&op);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "lock-order inversion"))]
+    fn lock_order_guard_trips_on_partition_under_metrics() {
+        if !cfg!(debug_assertions) {
+            return; // release builds keep only the bookkeeping
+        }
+        let a = gen::banded(16, &[1]);
+        let op = FusionOp { a: &a, b: BSide::Dense { bcol: 4 }, ccol: 4 };
+        let sharded = ShardedScheduleCache::with_capacity(SchedulerParams::default(), 2, 8);
+        lock_order::metrics_acquired(); // simulate a held metrics mutex
+        let _g = sharded.lock_for(&op); // inversion: partition under metrics
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "two cache partitions"))]
+    fn lock_order_guard_trips_on_stacked_partitions() {
+        if !cfg!(debug_assertions) {
+            return;
+        }
+        let a = gen::banded(16, &[1]);
+        let b = gen::banded(16, &[1, 2]);
+        let sharded = ShardedScheduleCache::with_capacity(SchedulerParams::default(), 4, 8);
+        // The sentinel asserts before blocking, so this cannot deadlock
+        // even when both patterns route to one partition.
+        let _g1 = sharded.lock_for_pattern(&a);
+        let _g2 = sharded.lock_for_pattern(&b); // second partition while one is held
     }
 
     #[test]

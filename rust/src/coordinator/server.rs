@@ -180,6 +180,18 @@ pub enum StepOperand {
     /// `out = softmax_row(S ⊙ ((chain) · Kᵀ)) · V`: `a` names `S`, the
     /// pair names the registered stationary denses `(K, V)`.
     Attention(String, String),
+    /// Backward SpMM step `out = A · (chain)` with a dense flow — `a`
+    /// conventionally names the **transposed** adjacency registered for
+    /// the backward pass (`Âᵀ dZ` in GCN training).
+    SpmmFlow,
+    /// Backward attention step: the flowing gradient `dO` enters, the
+    /// stacked `[dQ | dK | dV]` leaves. `a` names the sampling matrix
+    /// `S` whose values hold the **forward** attention weights; the
+    /// triple names the registered stationary denses `(K, V, Q)`. The
+    /// transposed pattern `Sᵀ` (with its edge permutation) comes from
+    /// the same cache the forward SDDMM/attention steps warm, so a
+    /// training loop pays the transpose once across both passes.
+    AttentionGrad(String, String, String),
 }
 
 /// One step of a queued [`ChainRequest`].
@@ -243,7 +255,10 @@ struct Shared<T> {
     /// (one partition per dispatcher shard) so dispatchers planning
     /// their own shards' keys take disjoint locks instead of one
     /// cache-wide mutex. Lock order: cache partition → metrics, cache
-    /// partition → [`TuneCell`] slot; never two partitions at once.
+    /// partition → [`TuneCell`] slot; never two partitions at once, and
+    /// metrics is a leaf — taken through [`Shared::metrics_guard`] with
+    /// no slot held. The discipline is machine-checked in debug builds
+    /// by the cache's `lock_order` sentinel.
     cache: ShardedScheduleCache,
     matrices: RwLock<HashMap<String, Arc<Csr<T>>>>,
     denses: RwLock<HashMap<String, Arc<Dense<T>>>>,
@@ -267,12 +282,46 @@ struct Shared<T> {
     queues: Vec<Arc<BoundedQueue<Job<T>>>>,
 }
 
+/// Metrics mutex guard that registers with the schedule cache's debug
+/// lock-order sentinel: while it lives, acquiring a cache partition
+/// trips a debug assert (the documented order is partition → metrics,
+/// never the reverse). Derefs to [`Metrics`].
+struct MetricsGuard<'a>(std::sync::MutexGuard<'a, Metrics>);
+
+impl Drop for MetricsGuard<'_> {
+    fn drop(&mut self) {
+        crate::coordinator::cache::lock_order::metrics_released();
+    }
+}
+
+impl std::ops::Deref for MetricsGuard<'_> {
+    type Target = Metrics;
+    fn deref(&self) -> &Metrics {
+        &self.0
+    }
+}
+
+impl std::ops::DerefMut for MetricsGuard<'_> {
+    fn deref_mut(&mut self) -> &mut Metrics {
+        &mut self.0
+    }
+}
+
 impl<T: Scalar> Shared<T> {
+    /// Lock the metrics mutex through the lock-order sentinel — every
+    /// metrics access in this module goes through here so the
+    /// partition → metrics discipline is machine-checked in debug
+    /// builds, not just documented.
+    fn metrics_guard(&self) -> MetricsGuard<'_> {
+        crate::coordinator::cache::lock_order::metrics_acquired();
+        MetricsGuard(self.metrics.lock().unwrap())
+    }
+
     fn admit(&self, tenant: u64) -> Result<(), ServiceError> {
         let mut inflight = self.inflight.lock().unwrap();
         let n = inflight.entry(tenant).or_insert(0);
         if *n >= self.cfg.tenant_inflight_cap {
-            self.metrics.lock().unwrap().rejected_tenant_cap += 1;
+            self.metrics_guard().rejected_tenant_cap += 1;
             return Err(ServiceError::BusyTenant);
         }
         *n += 1;
@@ -390,7 +439,7 @@ impl<T: Scalar> Server<T> {
             queues,
         });
         {
-            let mut m = shared.metrics.lock().unwrap();
+            let mut m = shared.metrics_guard();
             m.shard_dispatched = vec![0; n_shards];
             m.shard_stolen = vec![0; n_shards];
             m.shard_queue_depth = vec![0; n_shards];
@@ -434,7 +483,7 @@ impl<T: Scalar> Server<T> {
         let table = TuneTable::load(path)?;
         let (threads, nodes) = (self.shared.pool.n_threads(), self.shared.pool.n_nodes());
         let n = self.shared.cache.seed_from_table(&table, threads, nodes);
-        self.shared.metrics.lock().unwrap().tuned_loaded += n as u64;
+        self.shared.metrics_guard().tuned_loaded += n as u64;
         Ok(n)
     }
 
@@ -462,7 +511,7 @@ impl<T: Scalar> Server<T> {
     pub fn register_matrix(&self, name: impl Into<String>, a: Csr<T>) {
         self.shared.matrices.write().unwrap().insert(name.into(), Arc::new(a));
         self.shared.registry_gen.fetch_add(1, Ordering::SeqCst);
-        self.shared.metrics.lock().unwrap().matrices_registered += 1;
+        self.shared.metrics_guard().matrices_registered += 1;
     }
 
     /// Register (or replace) a named dense operand (pair `B`s, chain
@@ -470,7 +519,7 @@ impl<T: Scalar> Server<T> {
     pub fn register_dense(&self, name: impl Into<String>, b: Dense<T>) {
         self.shared.denses.write().unwrap().insert(name.into(), Arc::new(b));
         self.shared.registry_gen.fetch_add(1, Ordering::SeqCst);
-        self.shared.metrics.lock().unwrap().denses_registered += 1;
+        self.shared.metrics_guard().denses_registered += 1;
     }
 
     /// Non-blocking submission: a [`Ticket`] on admission,
@@ -589,7 +638,7 @@ impl<T: Scalar> Server<T> {
         };
         match pushed {
             Ok(()) => {
-                self.shared.metrics.lock().unwrap().queued += 1;
+                self.shared.metrics_guard().queued += 1;
                 Ok(tkt)
             }
             Err(e) => {
@@ -598,7 +647,7 @@ impl<T: Scalar> Server<T> {
                 // the admission verdict and undo the in-flight charge.
                 self.shared.release(tenant);
                 if e == ServiceError::BusyQueue {
-                    self.shared.metrics.lock().unwrap().rejected_queue_full += 1;
+                    self.shared.metrics_guard().rejected_queue_full += 1;
                 }
                 Err(e)
             }
@@ -607,7 +656,7 @@ impl<T: Scalar> Server<T> {
 
     /// Rolling metrics snapshot (includes the dispatcher's counters).
     pub fn metrics(&self) -> Metrics {
-        self.shared.metrics.lock().unwrap().clone()
+        self.shared.metrics_guard().clone()
     }
 
     /// Schedule-cache state (entries, hits, misses), summed over the
@@ -640,7 +689,7 @@ impl<T: Scalar> Server<T> {
             let _ = h.join();
         }
         self.persist_tuned_best_effort();
-        self.shared.metrics.lock().unwrap().clone()
+        self.shared.metrics_guard().clone()
     }
 }
 
@@ -827,7 +876,7 @@ impl<T: Scalar> Dispatcher<T> {
     /// bypass the per-tenant reservation its steal just made.
     fn dispatch(&mut self, pri: Priority, job: Job<T>, src: usize, stolen: bool) {
         {
-            let mut m = self.shared.metrics.lock().unwrap();
+            let mut m = self.shared.metrics_guard();
             if let Some(d) = m.shard_dispatched.get_mut(self.shard) {
                 *d += 1;
             }
@@ -883,7 +932,7 @@ impl<T: Scalar> Dispatcher<T> {
         let spread = decide_placement(flow_bytes, pool.n_nodes(), self.shared.cfg.spread_min_bytes)
             == Placement::Spread;
         if spread {
-            self.shared.metrics.lock().unwrap().remote_placements += 1;
+            self.shared.metrics_guard().remote_placements += 1;
             pool.lease()
         } else {
             pool.lease_shard(self.shard)
@@ -897,7 +946,7 @@ impl<T: Scalar> Dispatcher<T> {
         };
         tx.resolve(Err(ServiceError::Cancelled));
         self.shared.release(tenant);
-        self.shared.metrics.lock().unwrap().cancelled += 1;
+        self.shared.metrics_guard().cancelled += 1;
     }
 
     /// Pull every queued same-tier pair request sharing `head`'s
@@ -954,7 +1003,7 @@ impl<T: Scalar> Dispatcher<T> {
     fn reject_one(&self, tenant: u64, tx: TicketTx<ServeReply<T>>, err: ServiceError) {
         tx.resolve(Err(err));
         self.shared.release(tenant);
-        self.shared.metrics.lock().unwrap().requests += 1;
+        self.shared.metrics_guard().requests += 1;
     }
 
     /// Internal-consistency check of one pair request: a batch head's
@@ -1046,7 +1095,7 @@ impl<T: Scalar> Dispatcher<T> {
         });
         let service = t0.elapsed();
         {
-            let mut m = self.shared.metrics.lock().unwrap();
+            let mut m = self.shared.metrics_guard();
             m.batches += 1;
             m.requests += n_reqs as u64;
             m.coalesced_requests += n_reqs as u64 - 1;
@@ -1132,10 +1181,12 @@ impl<T: Scalar> Dispatcher<T> {
             // outside any partition guard (lock order: partition →
             // metrics, one partition at a time).
             let ev = self.shared.cache.evictions();
-            let mut m = self.shared.metrics.lock().unwrap();
+            let tev = self.shared.cache.transpose_evictions();
+            let mut m = self.shared.metrics_guard();
             m.schedule_cache_hits += dh;
             m.total_schedule_builds += dm;
             m.schedule_cache_evictions = ev;
+            m.transpose_cache_evictions = tev;
             Some((p, cell))
         } else {
             None
@@ -1159,6 +1210,7 @@ impl<T: Scalar> Dispatcher<T> {
         let (schedule, strip) = match &prep.plan {
             Some((p, cell)) => {
                 let mut newly_tuned = None;
+                let mut timed = false;
                 let strip = match cell.get() {
                     Some(tuned) => tuned,
                     None => {
@@ -1171,7 +1223,7 @@ impl<T: Scalar> Dispatcher<T> {
                                 let picked = if cands.len() == 1 {
                                     cands[0]
                                 } else {
-                                    self.shared.metrics.lock().unwrap().strip_tunes += 1;
+                                    timed = true;
                                     let mut ex = Fused::new(op, p);
                                     let mut scratch = Dense::zeros(op.n_second(), ccol);
                                     StripTuner::default().pick(&cands, |mode| {
@@ -1186,6 +1238,12 @@ impl<T: Scalar> Dispatcher<T> {
                         }
                     }
                 };
+                if timed {
+                    // Counted after the per-key slot dropped: metrics
+                    // is a leaf in the documented lock order, so no
+                    // other mutex may be held while it is taken.
+                    self.shared.metrics_guard().strip_tunes += 1;
+                }
                 if let Some(picked) = newly_tuned {
                     // Mirror the fresh pick into the cache's seed map
                     // (after the per-key slot is released — lock order
@@ -1248,7 +1306,7 @@ impl<T: Scalar> Dispatcher<T> {
         let outcome = self.execute_chains(pri, &reqs, stolen);
         let service = t0.elapsed();
         {
-            let mut m = self.shared.metrics.lock().unwrap();
+            let mut m = self.shared.metrics_guard();
             m.batches += 1;
             m.requests += n_reqs as u64;
             m.chain_requests += n_reqs as u64;
@@ -1274,7 +1332,7 @@ impl<T: Scalar> Dispatcher<T> {
             }
             Err(err) => {
                 if err == ServiceError::Cancelled {
-                    self.shared.metrics.lock().unwrap().cancelled += n_reqs as u64;
+                    self.shared.metrics_guard().cancelled += n_reqs as u64;
                 }
                 for tx in txs {
                     tx.resolve(Err(err.clone()));
@@ -1359,7 +1417,7 @@ impl<T: Scalar> Dispatcher<T> {
                         if pri == Priority::Bulk && step > 0 {
                             if stolen {
                                 if shared.queues[self.shard].latency_len() > 0 {
-                                    shared.metrics.lock().unwrap().stolen_chain_yields += 1;
+                                    shared.metrics_guard().stolen_chain_yields += 1;
                                     self.preempt_latency_pairs(&pool);
                                 }
                             } else {
@@ -1378,7 +1436,7 @@ impl<T: Scalar> Dispatcher<T> {
             outputs.push(ds);
         }
         if !cancelled {
-            self.shared.metrics.lock().unwrap().chain_steps += (chain_steps
+            self.shared.metrics_guard().chain_steps += (chain_steps
                 * reqs.iter().map(|r| r.xs.len() + r.xs_sparse.len()).sum::<usize>())
                 as u64;
             self.put_exec(key, exec);
@@ -1402,7 +1460,7 @@ impl<T: Scalar> Dispatcher<T> {
             let mut jobs = self.shared.queues[self.shard]
                 .drain_latency_matching(1, |j| matches!(&j.kind, JobKind::Pair(..)));
             let Some(job) = jobs.pop() else { break };
-            self.shared.metrics.lock().unwrap().preempted_pairs += 1;
+            self.shared.metrics_guard().preempted_pairs += 1;
             self.run_preempted_pair(pool, job);
         }
     }
@@ -1430,7 +1488,7 @@ impl<T: Scalar> Dispatcher<T> {
             .map(|prep| self.run_prepared(pool, &prep, std::slice::from_ref(&req)));
         let service = t0.elapsed();
         {
-            let mut m = self.shared.metrics.lock().unwrap();
+            let mut m = self.shared.metrics_guard();
             m.batches += 1;
             m.requests += 1;
             m.total_service += service;
@@ -1493,6 +1551,28 @@ impl<T: Scalar> Dispatcher<T> {
                     k: self.shared.dense(k)?,
                     v: self.shared.dense(v)?,
                 },
+                StepOperand::SpmmFlow => ChainStepOp::SpmmFlow {
+                    a: self.shared.matrix(&step.a)?,
+                },
+                StepOperand::AttentionGrad(k, v, q) => {
+                    let s = self.shared.matrix(&step.a)?;
+                    // `Sᵀ` + edge permutation from the same cache the
+                    // forward SDDMM/attention binds warm — a training
+                    // loop pays the counting sort once across passes.
+                    let (st, perm) = self
+                        .shared
+                        .cache
+                        .lock_for_pattern(&s.pattern)
+                        .transpose_with_perm_of(&s.pattern);
+                    ChainStepOp::AttentionGrad {
+                        s,
+                        k: self.shared.dense(k)?,
+                        v: self.shared.dense(v)?,
+                        q: self.shared.dense(q)?,
+                        st,
+                        perm,
+                    }
+                }
             };
             // SDDMM/attention binds warm the sampling pattern's
             // transpose in its cache partition (backward passes and
@@ -1503,6 +1583,9 @@ impl<T: Scalar> Dispatcher<T> {
                     self.shared.cache.lock_for_pattern(&s.pattern).transpose_of(&s.pattern);
                     sddmm_steps += 1;
                 }
+                // The backward bind already fetched `Sᵀ` (with its edge
+                // permutation) above; it only needs counting here.
+                ChainStepOp::AttentionGrad { .. } => sddmm_steps += 1,
                 _ => {}
             }
             strategies.push(match step.strategy.unwrap_or(head.strategy) {
@@ -1518,10 +1601,14 @@ impl<T: Scalar> Dispatcher<T> {
         }
 
         if sddmm_steps > 0 {
+            // Cache totals are summed before the metrics mutex is taken
+            // (lock order: cache partition → metrics).
             let (th, _) = self.shared.cache.transpose_stats();
-            let mut m = self.shared.metrics.lock().unwrap();
+            let tev = self.shared.cache.transpose_evictions();
+            let mut m = self.shared.metrics_guard();
             m.sddmm_steps += sddmm_steps;
             m.transpose_cache_hits = th;
+            m.transpose_cache_evictions = tev;
         }
 
         let input_meta = if let Some(x) = head.xs_sparse.first() {
@@ -1577,10 +1664,12 @@ impl<T: Scalar> Dispatcher<T> {
             // Evictions are totalled outside any partition guard (lock
             // order: cache partition → metrics).
             let ev = cache.evictions();
-            let mut m = self.shared.metrics.lock().unwrap();
+            let tev = cache.transpose_evictions();
+            let mut m = self.shared.metrics_guard();
             m.schedule_cache_hits += dh;
             m.total_schedule_builds += dm;
             m.schedule_cache_evictions = ev;
+            m.transpose_cache_evictions = tev;
             (exec, tuned)
         };
         exec.set_strategies(&strategies);
@@ -1609,10 +1698,12 @@ impl<T: Scalar> Dispatcher<T> {
                     ChainStepOp::GemmFlowB { a, w } => (a.rows(), w.cols),
                     ChainStepOp::GemmFlowC { a, .. }
                     | ChainStepOp::SpmmFlowC { a, .. }
-                    | ChainStepOp::SpgemmFlow { a, .. } => (a.rows(), fc),
+                    | ChainStepOp::SpgemmFlow { a, .. }
+                    | ChainStepOp::SpmmFlow { a } => (a.rows(), fc),
                     ChainStepOp::FlowAMulB { b } => (fr, b.cols),
                     ChainStepOp::SddmmQK { s, .. } => (s.rows(), s.cols()),
                     ChainStepOp::Attention { s, v, .. } => (s.rows(), v.cols),
+                    ChainStepOp::AttentionGrad { s, q, v, .. } => (s.rows(), 2 * q.cols + v.cols),
                 };
                 if tuned[s].is_some() {
                     continue;
@@ -1632,6 +1723,7 @@ impl<T: Scalar> Dispatcher<T> {
                 }
                 let cands = strip_candidates(sched.strip_width, op.ccol);
                 let mut newly = None;
+                let mut timed = false;
                 let picked = {
                     // Lock order matches the pair path (pool lease →
                     // slot); `bind_chain` runs before `execute_chains`
@@ -1646,7 +1738,7 @@ impl<T: Scalar> Dispatcher<T> {
                                 cands[0]
                             } else {
                                 let pool = pool.as_ref().expect("leased for timing");
-                                self.shared.metrics.lock().unwrap().strip_tunes += 1;
+                                timed = true;
                                 let (rows, cols) = flow_in;
                                 match &ops[s] {
                                     ChainStepOp::GemmFlowB { a, w } => {
@@ -1691,6 +1783,11 @@ impl<T: Scalar> Dispatcher<T> {
                         }
                     }
                 };
+                if timed {
+                    // Counted after the per-key slot dropped — metrics
+                    // is a leaf lock, taken with no other mutex held.
+                    self.shared.metrics_guard().strip_tunes += 1;
+                }
                 if let Some(p) = newly {
                     // Mirror after the slot guard dropped (lock order:
                     // cache partition → slot, never the reverse).
@@ -1967,6 +2064,101 @@ mod tests {
         // counting its SDDMM-kind steps and warming `Sᵀ` exactly once.
         assert_eq!(m.sddmm_steps, 2, "attention bind + rejected sddmm bind");
         assert_eq!(m.transpose_cache_hits, 1, "second bind reuses the cached transpose");
+    }
+
+    #[test]
+    fn backward_spmm_chain_through_the_queue() {
+        let srv = server();
+        let a = register_demo(&srv);
+        let at = a.transpose();
+        srv.register_matrix("AT", at.clone());
+        let f = 8;
+        let wt = Dense::<f64>::randn(f, 12, 31);
+        srv.register_dense("Wt", wt.clone());
+        let dz = Dense::<f64>::randn(a.rows(), f, 32);
+
+        // Reference: the same backward ops through a directly-built
+        // executor on one thread — the bitwise contract makes the
+        // queued replies comparable bit for bit.
+        let mut chain = ChainBuilder::dense(a.rows(), f)
+            .step(ChainStepOp::SpmmFlow { a: Arc::new(at) })
+            .step(ChainStepOp::FlowAMulB { b: Arc::new(wt) })
+            .build(SchedulerParams { ct_size: 64, ..Default::default() })
+            .unwrap();
+        let mut expect = Dense::zeros(a.rows(), 12);
+        chain.run(&ThreadPool::new(1), &dz, &mut expect);
+
+        let mk = || ChainRequest {
+            steps: vec![
+                ChainStepReq { a: "AT".into(), operand: StepOperand::SpmmFlow, strategy: None },
+                ChainStepReq {
+                    a: String::new(),
+                    operand: StepOperand::FlowADense("Wt".into()),
+                    strategy: None,
+                },
+            ],
+            xs: vec![dz.clone()],
+            xs_sparse: Vec::new(),
+            strategy: Strategy::TileFusion,
+        };
+        for round in 0..2 {
+            let reply = srv.chain_blocking(9, Priority::Bulk, mk()).unwrap();
+            assert!(
+                reply.ds[0].data.iter().zip(&expect.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "round {round}: queued backward SpMM chain must stay bitwise-canonical"
+            );
+        }
+    }
+
+    #[test]
+    fn attention_grad_chain_through_the_queue() {
+        let srv = server();
+        let s = Csr::<f64>::with_random_values(gen::erdos_renyi(64, 4, 3), 1, -1.0, 1.0);
+        srv.register_matrix("S", s.clone());
+        let (d, vc) = (8, 6);
+        let k = Dense::<f64>::randn(64, d, 4);
+        let v = Dense::<f64>::randn(64, vc, 5);
+        let q = Dense::<f64>::randn(64, d, 6);
+        srv.register_dense("K", k.clone());
+        srv.register_dense("V", v.clone());
+        srv.register_dense("Q", q.clone());
+        let dout = Dense::<f64>::randn(64, vc, 7);
+
+        let (st, perm) = crate::kernels::pattern_transpose_with_perm(&s.pattern);
+        let mut chain = ChainBuilder::dense(64, vc)
+            .step(ChainStepOp::AttentionGrad {
+                s: Arc::new(s.clone()),
+                k: Arc::new(k.clone()),
+                v: Arc::new(v.clone()),
+                q: Arc::new(q.clone()),
+                st: Arc::new(st),
+                perm: Arc::new(perm),
+            })
+            .build(SchedulerParams { ct_size: 64, ..Default::default() })
+            .unwrap();
+        let mut expect = Dense::zeros(64, 2 * d + vc);
+        chain.run(&ThreadPool::new(1), &dout, &mut expect);
+
+        let mk = || ChainRequest {
+            steps: vec![ChainStepReq {
+                a: "S".into(),
+                operand: StepOperand::AttentionGrad("K".into(), "V".into(), "Q".into()),
+                strategy: None,
+            }],
+            xs: vec![dout.clone()],
+            xs_sparse: Vec::new(),
+            strategy: Strategy::TileFusion,
+        };
+        for round in 0..2 {
+            let reply = srv.chain_blocking(5, Priority::Bulk, mk()).unwrap();
+            assert_eq!((reply.ds[0].rows, reply.ds[0].cols), (64, 2 * d + vc));
+            assert!(
+                reply.ds[0].data.iter().zip(&expect.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "round {round}: queued attention-backward must stay bitwise-canonical"
+            );
+        }
+        let m = srv.shutdown();
+        assert_eq!(m.sddmm_steps, 1, "one backward bind; warm reuse skips rebinding");
     }
 
     #[test]
@@ -2308,7 +2500,7 @@ mod tests {
             queues,
         });
         {
-            let mut m = shared.metrics.lock().unwrap();
+            let mut m = shared.metrics_guard();
             m.shard_dispatched = vec![0; n_shards];
             m.shard_stolen = vec![0; n_shards];
             m.shard_queue_depth = vec![0; n_shards];
@@ -2392,7 +2584,7 @@ mod tests {
         // `preempted_pairs` can only move at a drain point inside the
         // chain's execution, so together these prove the latency pair
         // was served mid-chain, not behind it.
-        let m = shared.metrics.lock().unwrap().clone();
+        let m = shared.metrics_guard().clone();
         assert!(m.stolen_chain_yields >= 1, "stolen chain must yield to the latency tier");
         assert_eq!(m.preempted_pairs, 1, "the waiting pair was served at a drain point");
         assert!(shared.queues[0].is_empty(), "latency tier drained");
@@ -2464,7 +2656,7 @@ mod tests {
             ),
         };
         d.dispatch(Priority::Bulk, job, 0, false);
-        let m = shared.metrics.lock().unwrap().clone();
+        let m = shared.metrics_guard().clone();
         assert_eq!(m.preempted_pairs, 1);
         assert_eq!(m.stolen_chain_yields, 0, "home chains don't count as stolen yields");
         assert!(pair_ticket.wait().unwrap().ds[0].max_abs_diff(&expect_pair) < 1e-10);

@@ -171,6 +171,10 @@ pub struct Metrics {
     /// (mirrors `ScheduleCache::transpose_hits`; SDDMM/attention
     /// tenants warm `Sᵀ` once per sampling pattern).
     pub transpose_cache_hits: u64,
+    /// Cached transposes dropped — by the transpose pool's own LRU
+    /// bound, or because the last schedule entry over their pattern was
+    /// evicted (mirrors `ScheduleCache::transpose_evictions`).
+    pub transpose_cache_evictions: u64,
     /// Strip-width autotuner runs (first execution of a key whose model
     /// pick had alternatives worth timing).
     pub strip_tunes: u64,
@@ -360,6 +364,7 @@ impl<T: Scalar> Coordinator<T> {
         self.metrics.requests += 1;
         self.metrics.total_exec += elapsed;
         self.metrics.schedule_cache_evictions = self.cache.evictions;
+        self.metrics.transpose_cache_evictions = self.cache.transpose_evictions;
         Ok(Response { ds, elapsed, strategy: req.strategy })
     }
 
@@ -642,6 +647,7 @@ impl<T: Scalar> Coordinator<T> {
         self.metrics.total_exec += elapsed;
         self.metrics.schedule_cache_evictions = self.cache.evictions;
         self.metrics.transpose_cache_hits = self.cache.transpose_hits;
+        self.metrics.transpose_cache_evictions = self.cache.transpose_evictions;
         Ok(ChainResponse { ds, elapsed, stats: exec.stats().clone() })
     }
 

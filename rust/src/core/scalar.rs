@@ -119,6 +119,9 @@ pub trait Scalar:
 
     /// Route [`crate::kernels::reduce_sum`] to `bk`'s kernel.
     fn bk_reduce_sum(bk: &dyn Backend, row: &[Self]) -> Self;
+
+    /// Route [`crate::kernels::reduce_dot`] to `bk`'s kernel.
+    fn bk_reduce_dot(bk: &dyn Backend, a: &[Self], b: &[Self]) -> Self;
 }
 
 impl Scalar for f32 {
@@ -241,6 +244,11 @@ impl Scalar for f32 {
     fn bk_reduce_sum(bk: &dyn Backend, row: &[Self]) -> Self {
         bk.reduce_sum_f32(row)
     }
+
+    #[inline]
+    fn bk_reduce_dot(bk: &dyn Backend, a: &[Self], b: &[Self]) -> Self {
+        bk.reduce_dot_f32(a, b)
+    }
 }
 
 impl Scalar for f64 {
@@ -362,6 +370,11 @@ impl Scalar for f64 {
     #[inline]
     fn bk_reduce_sum(bk: &dyn Backend, row: &[Self]) -> Self {
         bk.reduce_sum_f64(row)
+    }
+
+    #[inline]
+    fn bk_reduce_dot(bk: &dyn Backend, a: &[Self], b: &[Self]) -> Self {
+        bk.reduce_dot_f64(a, b)
     }
 }
 

@@ -26,7 +26,7 @@ use super::strip::StripWs;
 use super::SendPtr;
 use crate::core::{Dense, Scalar};
 use crate::kernels::backend::scalar::axpy_tail;
-use crate::kernels::{sddmm_row, softmax_row};
+use crate::kernels::{sddmm_row, softmax_jac_row, softmax_row};
 use crate::sparse::{Csr, Pattern};
 
 /// SDDMM value rows `r`: `val[s.indptr[i]..][x] = Q[i, :] · K[cols[x], :]`
@@ -85,6 +85,179 @@ pub(crate) unsafe fn attention_rows<T: Scalar>(
         out.iter_mut().for_each(|x| *x = T::ZERO);
         axpy_tail(cols.iter().zip(scores.iter()).map(|(&c, &p)| (p, v.row(c as usize))), out);
     }
+}
+
+/// Attention-backward phase A over rows `r` of `S`: recompute the
+/// softmax probabilities `p` (exactly the forward's `sddmm_row` →
+/// `softmax_row` sequence, so they match the forward bitwise), form the
+/// incoming per-edge gradient `dp[e] = dOut[i, :] · V[c, :]` (an SDDMM
+/// row over the *flowing* gradient), pull it back through the softmax
+/// jacobian ([`softmax_jac_row`]) into the pre-softmax score gradient
+/// `g`, and emit `dQ[i, :] = Σ_e g[e] · K[c_e, :]` into the first
+/// `q.cols` columns of the output row. `p` and `g` are stashed in their
+/// edge slots (`p_val`/`g_val`, laid out by `s.indptr`) for phase B —
+/// the transposed pass reads, never re-derives, them.
+///
+/// # Safety
+/// `dout` points at a row-major `s.rows × dout_cols` buffer whose rows
+/// `r` are final; `p_val`/`g_val` at `s.nnz()`-element buffers and `d`
+/// at an `s.rows × out_cols` row-major buffer, each with no concurrent
+/// writer on the slots of rows `r`. Every `K`/`V` row named by `s`'s
+/// columns and `Q` rows `r` are final.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn attention_grad_first_rows<T: Scalar>(
+    s: &Pattern,
+    k: &Dense<T>,
+    v: &Dense<T>,
+    q: &Dense<T>,
+    dout: *const T,
+    dout_cols: usize,
+    r: std::ops::Range<usize>,
+    p_val: *mut T,
+    g_val: *mut T,
+    d: *mut T,
+    out_cols: usize,
+) {
+    let d_qk = q.cols;
+    for i in r {
+        let (lo, hi) = (s.indptr[i], s.indptr[i + 1]);
+        let cols = &s.indices[lo..hi];
+        let p = std::slice::from_raw_parts_mut(p_val.add(lo), hi - lo);
+        sddmm_row(cols, q.row(i), k, p);
+        softmax_row(p);
+        let g = std::slice::from_raw_parts_mut(g_val.add(lo), hi - lo);
+        let dout_row = std::slice::from_raw_parts(dout.add(i * dout_cols), dout_cols);
+        sddmm_row(cols, dout_row, v, g);
+        softmax_jac_row(p, g);
+        let dq = std::slice::from_raw_parts_mut(d.add(i * out_cols), d_qk);
+        dq.iter_mut().for_each(|x| *x = T::ZERO);
+        axpy_tail(cols.iter().zip(g.iter()).map(|(&c, &gv)| (gv, k.row(c as usize))), dq);
+    }
+}
+
+/// Attention-backward phase B over rows `r` of `Sᵀ`: for output column
+/// `c` of the forward pattern, gather the incident edges through the
+/// transpose's edge permutation (`perm[t]` = the edge's index in `S`'s
+/// nonzero order, see
+/// [`crate::kernels::pattern_transpose_with_perm`]) and combine the
+/// phase-A stashes into `dK[c, :] = Σ_r g[e] · Q[r, :]` and
+/// `dV[c, :] = Σ_r p[e] · dOut[r, :]`, written into columns
+/// `d_qk..out_cols` of the output row.
+///
+/// # Safety
+/// `p_val`/`g_val` hold the phase-A stashes for **every** edge (all
+/// phase-A rows complete); `dout` rows named by `Sᵀ`'s columns are
+/// final; `d` as in [`attention_grad_first_rows`] with no concurrent
+/// writer on the `d_qk..out_cols` column slots of rows `r`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn attention_grad_second_rows<T: Scalar>(
+    st: &Pattern,
+    perm: &[u32],
+    q: &Dense<T>,
+    dout: *const T,
+    dout_cols: usize,
+    d_qk: usize,
+    r: std::ops::Range<usize>,
+    p_val: *const T,
+    g_val: *const T,
+    d: *mut T,
+    out_cols: usize,
+) {
+    let nnz = st.nnz();
+    let pv = std::slice::from_raw_parts(p_val, nnz);
+    let gv = std::slice::from_raw_parts(g_val, nnz);
+    let dall = std::slice::from_raw_parts(dout, st.cols * dout_cols);
+    for c in r {
+        let (lo, hi) = (st.indptr[c], st.indptr[c + 1]);
+        let rows = &st.indices[lo..hi];
+        let pm = &perm[lo..hi];
+        let tail = std::slice::from_raw_parts_mut(d.add(c * out_cols + d_qk), out_cols - d_qk);
+        tail.iter_mut().for_each(|x| *x = T::ZERO);
+        let (dk, dv) = tail.split_at_mut(d_qk);
+        axpy_tail(
+            rows.iter().zip(pm).map(|(&rr, &e)| (gv[e as usize], q.row(rr as usize))),
+            dk,
+        );
+        axpy_tail(
+            rows.iter()
+                .zip(pm)
+                .map(|(&rr, &e)| (pv[e as usize], &dall[rr as usize * dout_cols..][..dout_cols])),
+            dv,
+        );
+    }
+}
+
+/// Fused graph-attention backward: given the forward
+/// `Out = softmax_row(S ⊙ (Q·Kᵀ)) · V` and the incoming gradient
+/// `dOut`, writes `[dQ | dK | dV]` (stacked column blocks of widths
+/// `d`, `d`, `v.cols`) into `out`. Phase A runs over `S`'s rows
+/// (softmax recompute + jacobian + `dQ`), phase B over `Sᵀ`'s rows
+/// (`dK`/`dV` through the edge permutation); the per-edge stashes live
+/// in `edges` (reshaped to `2 × nnz`: probabilities then score
+/// gradients). Deterministic at any thread count and bitwise-identical
+/// to the serial composition of the same row kernels.
+#[allow(clippy::too_many_arguments)]
+pub fn run_attention_grad<T: Scalar>(
+    pool: &ThreadPool,
+    s: &Pattern,
+    st: &Pattern,
+    perm: &[u32],
+    k: &Dense<T>,
+    v: &Dense<T>,
+    q: &Dense<T>,
+    dout: &Dense<T>,
+    edges: &mut Dense<T>,
+    out: &mut Dense<T>,
+) {
+    assert_eq!(s.rows, s.cols, "attention backward needs a square pattern");
+    assert_eq!(q.rows, s.rows, "Q must have one row per pattern row");
+    assert_eq!(k.rows, s.cols, "K must have one row per pattern column");
+    assert_eq!(q.cols, k.cols, "Q and K must share the inner dimension");
+    assert_eq!(v.rows, s.cols, "V must have one row per pattern column");
+    assert_eq!((dout.rows, dout.cols), (s.rows, v.cols), "dOut shape");
+    assert_eq!((st.rows, st.cols), (s.cols, s.rows), "transpose shape");
+    assert_eq!(perm.len(), s.nnz(), "edge permutation length");
+    let d_qk = q.cols;
+    assert_eq!((out.rows, out.cols), (s.rows, 2 * d_qk + v.cols), "output shape");
+    if (edges.rows, edges.cols) != (2, s.nnz()) {
+        *edges = Dense::zeros(2, s.nnz());
+    }
+    let nnz = s.nnz();
+    let p_val = SendPtr(edges.data.as_mut_ptr());
+    let g_val = SendPtr(unsafe { edges.data.as_mut_ptr().add(nnz) });
+    let dout_ptr = dout.data.as_ptr() as usize;
+    let d = SendPtr(out.data.as_mut_ptr());
+    let (out_cols, dout_cols) = (out.cols, dout.cols);
+    pool.parallel_for_chunks(s.rows, ROW_CHUNK, |r, _| unsafe {
+        attention_grad_first_rows(
+            s,
+            k,
+            v,
+            q,
+            dout_ptr as *const T,
+            dout_cols,
+            r,
+            p_val.get(),
+            g_val.get(),
+            d.get(),
+            out_cols,
+        );
+    });
+    pool.parallel_for_chunks(st.rows, ROW_CHUNK, |r, _| unsafe {
+        attention_grad_second_rows(
+            st,
+            perm,
+            q,
+            dout_ptr as *const T,
+            dout_cols,
+            d_qk,
+            r,
+            p_val.get() as *const T,
+            g_val.get() as *const T,
+            d.get(),
+            out_cols,
+        );
+    });
 }
 
 /// `out = S ⊙ (Q·Kᵀ)` with CSR output on `S`'s pattern (`S`'s values
@@ -198,6 +371,142 @@ mod tests {
                 "threads={threads}"
             );
         }
+    }
+
+    /// Unfused backward oracle: serial SDDMM / softmax / jacobian
+    /// passes over the whole edge set, then per-edge accumulation in
+    /// edge order — the composition [`run_attention_grad`] must match
+    /// bitwise.
+    fn attention_grad_oracle(
+        s: &Pattern,
+        k: &Dense<f64>,
+        v: &Dense<f64>,
+        q: &Dense<f64>,
+        dout: &Dense<f64>,
+    ) -> Dense<f64> {
+        let d_qk = q.cols;
+        let mut p = kernels::sddmm(s, q, k);
+        for i in 0..s.rows {
+            let (lo, hi) = (s.indptr[i], s.indptr[i + 1]);
+            kernels::softmax_row(&mut p.data[lo..hi]);
+        }
+        let mut g = kernels::sddmm(s, dout, v);
+        for i in 0..s.rows {
+            let (lo, hi) = (s.indptr[i], s.indptr[i + 1]);
+            kernels::softmax_jac_row(&p.data[lo..hi], &mut g.data[lo..hi]);
+        }
+        let mut out = Dense::zeros(s.rows, 2 * d_qk + v.cols);
+        for i in 0..s.rows {
+            let (cols, gs) = g.row(i);
+            for (&c, &gv) in cols.iter().zip(gs) {
+                for (o, &x) in out.row_mut(i)[..d_qk].iter_mut().zip(k.row(c as usize)) {
+                    *o += gv * x;
+                }
+            }
+        }
+        let (st, perm) = kernels::pattern_transpose_with_perm(s);
+        for c in 0..st.rows {
+            let (lo, hi) = (st.indptr[c], st.indptr[c + 1]);
+            let orow = out.row_mut(c);
+            for (&rr, &e) in st.indices[lo..hi].iter().zip(&perm[lo..hi]) {
+                let (rr, e) = (rr as usize, e as usize);
+                for (o, &x) in orow[d_qk..2 * d_qk].iter_mut().zip(q.row(rr)) {
+                    *o += g.data[e] * x;
+                }
+                for (o, &x) in orow[2 * d_qk..].iter_mut().zip(dout.row(rr)) {
+                    *o += p.data[e] * x;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn attention_grad_matches_serial_composition_bitwise() {
+        let s = gen::rmat(64, 6, gen::RmatKind::Graph500, 41);
+        let q = Dense::<f64>::randn(64, 5, 11);
+        let k = Dense::<f64>::randn(64, 5, 12);
+        let v = Dense::<f64>::randn(64, 3, 13);
+        let dout = Dense::<f64>::randn(64, 3, 14);
+        let (st, perm) = kernels::pattern_transpose_with_perm(&s);
+        let expect = attention_grad_oracle(&s, &k, &v, &q, &dout);
+        for threads in [1usize, 3, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut edges = Dense::zeros(0, 0);
+            let mut out = Dense::full(64, 13, 7.0); // driver must overwrite
+            run_attention_grad(&pool, &s, &st, &perm, &k, &v, &q, &dout, &mut edges, &mut out);
+            assert!(
+                out.data.iter().zip(&expect.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "threads={threads}"
+            );
+            assert_eq!((edges.rows, edges.cols), (2, s.nnz()));
+        }
+    }
+
+    #[test]
+    fn attention_grad_matches_finite_differences() {
+        // loss = Σ_ij W[i,j]·Out[i,j] with dOut = W; central differences
+        // on the forward oracle against the analytic [dQ|dK|dV].
+        let s = gen::uniform_random(12, 12, 3, 55);
+        let d_qk = 3usize;
+        let q = Dense::<f64>::randn(12, d_qk, 21);
+        let k = Dense::<f64>::randn(12, d_qk, 22);
+        let v = Dense::<f64>::randn(12, 2, 23);
+        let w = Dense::<f64>::randn(12, 2, 24);
+        let (st, perm) = kernels::pattern_transpose_with_perm(&s);
+        let pool = ThreadPool::new(2);
+        let mut edges = Dense::zeros(0, 0);
+        let mut out = Dense::zeros(12, 2 * d_qk + 2);
+        run_attention_grad(&pool, &s, &st, &perm, &k, &v, &q, &w, &mut edges, &mut out);
+        let loss = |k: &Dense<f64>, v: &Dense<f64>, q: &Dense<f64>| -> f64 {
+            let o = attention_oracle(&s, k, v, q);
+            o.data.iter().zip(&w.data).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-6;
+        for (r, c) in [(0usize, 0usize), (3, 1), (7, 2), (11, 0)] {
+            // dQ
+            let (mut lo, mut hi) = (q.clone(), q.clone());
+            lo.set(r, c, q.get(r, c) - eps);
+            hi.set(r, c, q.get(r, c) + eps);
+            let num = (loss(&k, &v, &hi) - loss(&k, &v, &lo)) / (2.0 * eps);
+            let ana = out.get(r, c);
+            assert!((num - ana).abs() < 1e-4 * (1.0 + ana.abs()), "dQ[{r},{c}]: {num} vs {ana}");
+            // dK
+            let (mut lo, mut hi) = (k.clone(), k.clone());
+            lo.set(r, c, k.get(r, c) - eps);
+            hi.set(r, c, k.get(r, c) + eps);
+            let num = (loss(&hi, &v, &q) - loss(&lo, &v, &q)) / (2.0 * eps);
+            let ana = out.get(r, d_qk + c);
+            assert!((num - ana).abs() < 1e-4 * (1.0 + ana.abs()), "dK[{r},{c}]: {num} vs {ana}");
+        }
+        for (r, c) in [(0usize, 0usize), (5, 1), (11, 1)] {
+            // dV
+            let (mut lo, mut hi) = (v.clone(), v.clone());
+            lo.set(r, c, v.get(r, c) - eps);
+            hi.set(r, c, v.get(r, c) + eps);
+            let num = (loss(&k, &hi, &q) - loss(&k, &lo, &q)) / (2.0 * eps);
+            let ana = out.get(r, 2 * d_qk + c);
+            assert!((num - ana).abs() < 1e-4 * (1.0 + ana.abs()), "dV[{r},{c}]: {num} vs {ana}");
+        }
+    }
+
+    #[test]
+    fn attention_grad_handles_empty_rows_and_columns() {
+        // Node 1 has no out-edges (empty S row) and node 0 no in-edges
+        // (empty Sᵀ row): its dQ / their dK·dV blocks are exactly zero.
+        let s = Pattern::new(3, 3, vec![0, 2, 2, 3], vec![1, 2, 1]);
+        let q = Dense::<f64>::randn(3, 4, 7);
+        let k = Dense::<f64>::randn(3, 4, 8);
+        let v = Dense::<f64>::randn(3, 2, 9);
+        let dout = Dense::<f64>::randn(3, 2, 10);
+        let (st, perm) = kernels::pattern_transpose_with_perm(&s);
+        let pool = ThreadPool::new(2);
+        let mut edges = Dense::zeros(0, 0);
+        let mut out = Dense::full(3, 10, 5.0);
+        run_attention_grad(&pool, &s, &st, &perm, &k, &v, &q, &dout, &mut edges, &mut out);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+        assert!(out.row(1)[..4].iter().all(|&x| x == 0.0), "empty row ⇒ zero dQ");
+        assert!(out.row(0)[4..].iter().all(|&x| x == 0.0), "empty column ⇒ zero dK/dV");
     }
 
     #[test]

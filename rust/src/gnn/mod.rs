@@ -3,21 +3,28 @@
 //! either case happens") and the end-to-end validation workload.
 //!
 //! One layer computes `H' = σ(Â (H W))`: `H W` is the GeMM, `Â ·` the
-//! SpMM — precisely the pair tile fusion accelerates. Backward is again
-//! SpMM/GeMM chains (`Âᵀ = Â` for the symmetric-normalized adjacency),
-//! so training exercises the fused executor on every step.
+//! SpMM — precisely the pair tile fusion accelerates. Backward runs as
+//! chains too — `SpmmFlow(Âᵀ)` over the cached transposed pattern plus
+//! a `FlowAMulB(Wᵀ)` GeMM — so training exercises the fused executor on
+//! every step, forward and backward.
 //!
 //! [`GatLayer`] is the attention-family counterpart: a dot-product
 //! graph-attention forward (`softmax_row(S ⊙ (Q·Kᵀ)) · V` on the edge
-//! set) running as one fused chain — the SDDMM/attention steps'
-//! end-to-end workload.
+//! set) running as one fused chain, with a matching fused
+//! attention-backward chain ([`GatLayer::backward`]).
+//!
+//! [`train`] holds the optimizers ([`Optim`]: SGD and Adam) and the
+//! per-step drivers that tie loss, backward chains and the parameter
+//! update together.
 
 pub mod data;
 pub mod model;
 pub mod ops;
+pub mod train;
 
 pub use data::{planted_labels, SyntheticGraph};
 pub use model::{GatLayer, Gcn, GcnLayer, TrainStats};
 pub use ops::{
     matmul, matmul_a_bt, matmul_at_b, relu, relu_grad_mask, softmax_xent, spmm_parallel,
 };
+pub use train::{gat_train_step, Optim};

@@ -1,6 +1,8 @@
-//! Multi-layer GCN with manual backprop, forward via the chain-fused
-//! executor (one [`ChainExec`] over the whole layer stack), backward via
-//! fused-op building blocks.
+//! Multi-layer GCN with manual backprop, forward **and backward** via
+//! the chain-fused executor: the forward is one [`ChainExec`] over the
+//! whole layer stack, the backward is one chain per layer over the
+//! cached transposed pattern (`SpmmFlow(Âᵀ)` then `FlowAMulB(Wᵀ)`),
+//! with dense weight gradients contracted from per-step taps.
 
 use super::ops;
 use crate::core::{Dense, Scalar};
@@ -55,6 +57,18 @@ pub struct Gcn<T> {
     /// One chain executor over the whole layer stack (fused mode), built
     /// lazily on the first forward and reused every epoch.
     chain: Option<ChainExec<T>>,
+    /// Explicit `Âᵀ` shared by every backward chain. `Â` is symmetric
+    /// in structure but its stored values at `(i,j)` and `(j,i)` are
+    /// products assembled in different orders, so the backward contracts
+    /// over a real transpose — correct for any pattern, and bitwise
+    /// reproducible against a serial reference over the same `Âᵀ`.
+    at_hat: Option<Arc<Csr<T>>>,
+    /// One backward chain per layer (fused mode): `[SpmmFlow(Âᵀ)]` for
+    /// layer 0, `[SpmmFlow(Âᵀ), FlowAMulB(Wᵀ)]` above it. Built lazily
+    /// with `at_hat` on the first backward, reused every epoch.
+    bchains: Vec<ChainExec<T>>,
+    /// `Wᵀ` staging for the backward chains' stationary GeMM operand.
+    wt_scratch: Dense<T>,
     // backward scratch
     grad_z: Dense<T>,
     grad_h: Dense<T>,
@@ -78,6 +92,9 @@ impl<T: Scalar> Gcn<T> {
             mode,
             cache: ScheduleCache::new(params),
             chain: None,
+            at_hat: None,
+            bchains: Vec::new(),
+            wt_scratch: Dense::zeros(0, 0),
             grad_z: Dense::zeros(0, 0),
             grad_h: Dense::zeros(0, 0),
             grad_g: Dense::zeros(0, 0),
@@ -161,8 +178,78 @@ impl<T: Scalar> Gcn<T> {
     }
 
     /// Backward from `dlogits`; returns per-layer weight gradients.
-    /// Uses `Âᵀ = Â` (symmetric normalized adjacency).
     pub fn backward(&mut self, pool: &ThreadPool, dlogits: &Dense<T>) -> Vec<Dense<T>> {
+        match self.mode {
+            GcnMode::Fused => self.backward_chain(pool, dlogits),
+            GcnMode::Unfused => self.backward_unfused(pool, dlogits),
+        }
+    }
+
+    /// Fused backward: per layer one [`ChainExec`] over the shared
+    /// explicit transpose — `G = Âᵀ dZ` enters the dense flow, the tap
+    /// snapshots `G` for the `dW = Hᵀ G` contraction, and (above layer
+    /// 0) a `FlowAMulB(Wᵀ)` step carries `dH = G Wᵀ` out of the chain,
+    /// where the previous layer's ReLU mask is applied. `Wᵀ` is
+    /// restaged from the live weights each step, the same way the
+    /// forward chain restages `W`.
+    fn backward_chain(&mut self, pool: &ThreadPool, dlogits: &Dense<T>) -> Vec<Dense<T>> {
+        let n = self.a_hat.rows();
+        if self.bchains.is_empty() {
+            let at = Arc::new(self.a_hat.transpose());
+            let params = self.cache.params();
+            for (li, layer) in self.layers.iter().enumerate() {
+                let mut b = ChainBuilder::dense(n, layer.w.cols)
+                    .step(ChainStepOp::SpmmFlow { a: Arc::clone(&at) });
+                if li > 0 {
+                    b = b.step(ChainStepOp::FlowAMulB {
+                        b: Arc::new(Dense::zeros(layer.w.cols, layer.w.rows)),
+                    });
+                }
+                self.bchains.push(b.build(params).expect("bind GCN backward chain"));
+            }
+            self.at_hat = Some(at);
+        }
+        let mut grads: Vec<Dense<T>> =
+            self.layers.iter().map(|l| Dense::zeros(l.w.rows, l.w.cols)).collect();
+        self.grad_z = dlogits.clone();
+        for li in (0..self.layers.len()).rev() {
+            let layer = &self.layers[li];
+            if self.grad_g.rows != n || self.grad_g.cols != layer.w.cols {
+                self.grad_g = Dense::zeros(n, layer.w.cols);
+            }
+            if li > 0 {
+                ops::transpose_into(&layer.w, &mut self.wt_scratch);
+                let chain = &mut self.bchains[li];
+                chain.set_weight(1, &self.wt_scratch);
+                if self.grad_h.rows != n || self.grad_h.cols != layer.w.rows {
+                    self.grad_h = Dense::zeros(n, layer.w.rows);
+                }
+                let mut out = std::mem::take(&mut self.grad_h);
+                let grad_g = &mut self.grad_g;
+                chain.run_with(pool, &self.grad_z, &mut out, |s, g| {
+                    if s == 0 {
+                        grad_g.data.copy_from_slice(&g.data);
+                    }
+                });
+                ops::matmul_at_b(&layer.h_in, &self.grad_g, &mut grads[li]);
+                ops::relu_grad_mask(&self.layers[li - 1].z, &mut out);
+                self.grad_z = out;
+            } else {
+                let chain = &mut self.bchains[0];
+                let mut g_out = std::mem::take(&mut self.grad_g);
+                chain.run(pool, &self.grad_z, &mut g_out);
+                ops::matmul_at_b(&layer.h_in, &g_out, &mut grads[li]);
+                self.grad_g = g_out;
+            }
+        }
+        grads
+    }
+
+    /// Unfused baseline backward (identical math, library-call pattern).
+    /// Uses `Âᵀ = Â` (symmetric normalized adjacency), so its last bits
+    /// may differ from the fused path, which contracts over the explicit
+    /// transpose.
+    fn backward_unfused(&mut self, pool: &ThreadPool, dlogits: &Dense<T>) -> Vec<Dense<T>> {
         let mut grads: Vec<Dense<T>> = self.layers.iter().map(|l| Dense::zeros(l.w.rows, l.w.cols)).collect();
         self.grad_z = dlogits.clone();
         for li in (0..self.layers.len()).rev() {
@@ -240,6 +327,20 @@ pub struct GatLayer<T> {
     chain: Option<ChainExec<T>>,
     k: Dense<T>,
     v: Dense<T>,
+    /// Input features of the last forward (backprop contracts `Hᵀ d*`).
+    h_in: Dense<T>,
+    /// Query projection captured from the forward chain's step-0 tap —
+    /// bitwise the chain's own GeMM output, so the backward rescoring
+    /// reproduces the forward probabilities exactly.
+    q: Dense<T>,
+    /// Backward chain `[AttentionGrad(S, Sᵀ), FlowAMulB([Wq|Wk|Wv]ᵀ)]`,
+    /// built lazily on the first backward and reused every epoch.
+    bchain: Option<ChainExec<T>>,
+    /// Stacked `(2d + d_v) × f_in` stationary operand `[Wqᵀ; Wkᵀ; Wvᵀ]`
+    /// restaged from the live projections each backward.
+    wstack: Dense<T>,
+    /// Tap snapshot of the stacked `[dQ | dK | dV]` step output.
+    dqkv: Dense<T>,
 }
 
 impl<T: Scalar> GatLayer<T> {
@@ -261,6 +362,11 @@ impl<T: Scalar> GatLayer<T> {
             chain: None,
             k: Dense::zeros(0, 0),
             v: Dense::zeros(0, 0),
+            h_in: Dense::zeros(0, 0),
+            q: Dense::zeros(0, 0),
+            bchain: None,
+            wstack: Dense::zeros(0, 0),
+            dqkv: Dense::zeros(0, 0),
         }
     }
 
@@ -277,6 +383,10 @@ impl<T: Scalar> GatLayer<T> {
         }
         ops::matmul(h, &self.wk, &mut self.k);
         ops::matmul(h, &self.wv, &mut self.v);
+        if (self.q.rows, self.q.cols) != (n, self.wq.cols) {
+            self.q = Dense::zeros(n, self.wq.cols);
+        }
+        self.h_in = h.clone();
         if self.chain.is_none() {
             let mut params = crate::scheduler::SchedulerParams::default();
             params.elem_bytes = T::BYTES;
@@ -299,8 +409,94 @@ impl<T: Scalar> GatLayer<T> {
         chain.set_attention_kv(1, &self.k, &self.v);
         let (out_rows, out_cols) = chain.out_dims();
         let mut out = Dense::zeros(out_rows, out_cols);
-        chain.run(pool, h, &mut out);
+        let q = &mut self.q;
+        chain.run_with(pool, h, &mut out, |s, z| {
+            if s == 0 {
+                q.data.copy_from_slice(&z.data);
+            }
+        });
         out
+    }
+
+    /// Backward from `dout` (the forward output's gradient); returns
+    /// `(dWq, dWk, dWv, dH)`. One chain execution over the shared edge
+    /// pattern: the fused attention-backward step rescores each row from
+    /// the tapped `Q` and the refreshed `K`/`V` (per-worker strips, the
+    /// score matrix never materializes), scatters `dK`/`dV` through the
+    /// cached `Sᵀ` + edge permutation, and the stacked `[dQ | dK | dV]`
+    /// flows through `FlowAMulB([Wqᵀ; Wkᵀ; Wvᵀ])` to produce
+    /// `dH = dQ Wqᵀ + dK Wkᵀ + dV Wvᵀ` in one GeMM. Weight gradients
+    /// contract the tapped stack against the stashed input features.
+    pub fn backward(
+        &mut self,
+        pool: &ThreadPool,
+        dout: &Dense<T>,
+    ) -> (Dense<T>, Dense<T>, Dense<T>, Dense<T>) {
+        let n = self.s.rows();
+        let d = self.wq.cols;
+        let d_v = self.wv.cols;
+        let f = self.wq.rows;
+        assert_eq!((dout.rows, dout.cols), (n, d_v), "dOut must match the forward output");
+        assert_eq!(self.h_in.rows, n, "run forward before backward");
+        if self.bchain.is_none() {
+            let (st, perm) = crate::kernels::pattern_transpose_with_perm(&self.s.pattern);
+            let mut params = crate::scheduler::SchedulerParams::default();
+            params.elem_bytes = T::BYTES;
+            self.bchain = Some(
+                ChainBuilder::dense(n, d_v)
+                    .step(ChainStepOp::AttentionGrad {
+                        s: Arc::clone(&self.s),
+                        k: Arc::new(self.k.clone()),
+                        v: Arc::new(self.v.clone()),
+                        q: Arc::new(self.q.clone()),
+                        st: Arc::new(st),
+                        perm: Arc::new(perm),
+                    })
+                    .step(ChainStepOp::FlowAMulB {
+                        b: Arc::new(Dense::zeros(2 * d + d_v, f)),
+                    })
+                    .build(params)
+                    .expect("bind GAT backward chain"),
+            );
+        }
+        let chain = self.bchain.as_mut().expect("chain just built");
+        chain.set_attention_grad_qkv(0, &self.q, &self.k, &self.v);
+        if (self.wstack.rows, self.wstack.cols) != (2 * d + d_v, f) {
+            self.wstack = Dense::zeros(2 * d + d_v, f);
+        }
+        for c in 0..f {
+            for r in 0..d {
+                self.wstack.set(r, c, self.wq.get(c, r));
+                self.wstack.set(d + r, c, self.wk.get(c, r));
+            }
+            for r in 0..d_v {
+                self.wstack.set(2 * d + r, c, self.wv.get(c, r));
+            }
+        }
+        chain.set_weight(1, &self.wstack);
+        if (self.dqkv.rows, self.dqkv.cols) != (n, 2 * d + d_v) {
+            self.dqkv = Dense::zeros(n, 2 * d + d_v);
+        }
+        let mut dh = Dense::zeros(n, f);
+        let dqkv = &mut self.dqkv;
+        chain.run_with(pool, dout, &mut dh, |s, z| {
+            if s == 0 {
+                dqkv.data.copy_from_slice(&z.data);
+            }
+        });
+        let mut dq = Dense::zeros(n, d);
+        let mut dk = Dense::zeros(n, d);
+        let mut dv = Dense::zeros(n, d_v);
+        ops::col_block_into(&self.dqkv, 0, &mut dq);
+        ops::col_block_into(&self.dqkv, d, &mut dk);
+        ops::col_block_into(&self.dqkv, 2 * d, &mut dv);
+        let mut dwq = Dense::zeros(f, d);
+        let mut dwk = Dense::zeros(f, d);
+        let mut dwv = Dense::zeros(f, d_v);
+        ops::matmul_at_b(&self.h_in, &dq, &mut dwq);
+        ops::matmul_at_b(&self.h_in, &dk, &mut dwk);
+        ops::matmul_at_b(&self.h_in, &dv, &mut dwv);
+        (dwq, dwk, dwv, dh)
     }
 
     /// Unfused dense-oracle reference: serial projections, canonical
@@ -394,6 +590,146 @@ mod tests {
                 (num - ana).abs() < 1e-3 * (1.0 + ana.abs()),
                 "layer {li} w[{wi},{wj}]: numeric {num} vs analytic {ana}"
             );
+        }
+    }
+
+    /// Serial reference backward over the same explicit `Âᵀ` the fused
+    /// chains contract over — row-serial SpMM (`spmm_row`, the kernel
+    /// the chain's row driver calls) and the GeMM-order `ops::matmul`,
+    /// so every intermediate is bitwise comparable.
+    fn serial_backward_reference(
+        a: &Csr<f64>,
+        layers: &[GcnLayer<f64>],
+        dlogits: &Dense<f64>,
+    ) -> Vec<Dense<f64>> {
+        let at = a.transpose();
+        let n = a.rows();
+        let mut grads: Vec<Dense<f64>> =
+            layers.iter().map(|l| Dense::zeros(l.w.rows, l.w.cols)).collect();
+        let mut gz = dlogits.clone();
+        for li in (0..layers.len()).rev() {
+            let layer = &layers[li];
+            let mut gg = Dense::zeros(n, layer.w.cols);
+            for r in 0..n {
+                crate::kernels::spmm_row(&at, r, &gz, gg.row_mut(r));
+            }
+            ops::matmul_at_b(&layer.h_in, &gg, &mut grads[li]);
+            if li > 0 {
+                let mut wt = Dense::zeros(0, 0);
+                ops::transpose_into(&layer.w, &mut wt);
+                let mut gh = Dense::zeros(n, layer.w.rows);
+                ops::matmul(&gg, &wt, &mut gh);
+                ops::relu_grad_mask(&layers[li - 1].z, &mut gh);
+                gz = gh;
+            }
+        }
+        grads
+    }
+
+    #[test]
+    fn fused_backward_matches_serial_transpose_reference_bitwise() {
+        let g = SyntheticGraph::<f64>::rmat(96, 5, 6, 3, 29);
+        let a = Arc::new(g.a_hat.clone());
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut model = Gcn::new(Arc::clone(&a), &[6, 10, 3], 7, GcnMode::Fused);
+            let logits = model.forward(&pool, &g.features);
+            let mut dlogits = Dense::zeros(logits.rows, logits.cols);
+            ops::softmax_xent(&logits, &g.labels, &mut dlogits);
+            let grads = model.backward(&pool, &dlogits);
+            let expect = serial_backward_reference(&a, &model.layers, &dlogits);
+            for (li, (got, want)) in grads.iter().zip(&expect).enumerate() {
+                assert!(
+                    got.data.iter().zip(&want.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "threads={threads} layer {li}: fused backward must match the serial \
+                     transpose reference bitwise"
+                );
+            }
+            // Rerun through the warm chains: still bitwise.
+            let again = model.backward(&pool, &dlogits);
+            for (got, want) in again.iter().zip(&expect) {
+                assert!(got.data.iter().zip(&want.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+        }
+    }
+
+    #[test]
+    fn gat_gradients_match_finite_differences() {
+        let g = SyntheticGraph::<f64>::rmat(32, 4, 6, 3, 23);
+        let a = Arc::new(g.a_hat.clone());
+        let pool = ThreadPool::new(2);
+        let mut layer = GatLayer::new(Arc::clone(&a), 6, 4, 3, 31);
+        let mut h = g.features.clone();
+        let out = layer.forward(&pool, &h);
+        let mut dout = Dense::zeros(out.rows, out.cols);
+        let l0 = ops::softmax_xent(&out, &g.labels, &mut dout);
+        let (dwq, dwk, dwv, dh) = layer.backward(&pool, &dout);
+
+        let eps = 1e-6;
+        let mut loss_at = |layer: &mut GatLayer<f64>, h: &Dense<f64>| {
+            let out1 = layer.forward(&pool, h);
+            let mut scratch = Dense::zeros(out1.rows, out1.cols);
+            ops::softmax_xent(&out1, &g.labels, &mut scratch)
+        };
+        for (which, wi, wj) in
+            [(0usize, 0usize, 1usize), (0, 3, 2), (1, 2, 0), (1, 5, 3), (2, 1, 2), (2, 4, 0)]
+        {
+            let (w, ana) = match which {
+                0 => (&mut layer.wq, dwq.get(wi, wj)),
+                1 => (&mut layer.wk, dwk.get(wi, wj)),
+                _ => (&mut layer.wv, dwv.get(wi, wj)),
+            };
+            let orig = w.get(wi, wj);
+            w.set(wi, wj, orig + eps);
+            let l1 = loss_at(&mut layer, &h);
+            let num = (l1 - l0) / eps;
+            match which {
+                0 => layer.wq.set(wi, wj, orig),
+                1 => layer.wk.set(wi, wj, orig),
+                _ => layer.wv.set(wi, wj, orig),
+            }
+            assert!(
+                (num - ana).abs() < 1e-3 * (1.0 + ana.abs()),
+                "proj {which} w[{wi},{wj}]: numeric {num} vs analytic {ana}"
+            );
+        }
+        // Input-feature gradient.
+        for (i, j) in [(0usize, 0usize), (5, 3), (17, 5)] {
+            let orig = h.get(i, j);
+            h.set(i, j, orig + eps);
+            let l1 = loss_at(&mut layer, &h);
+            h.set(i, j, orig);
+            let num = (l1 - l0) / eps;
+            let ana = dh.get(i, j);
+            assert!(
+                (num - ana).abs() < 1e-3 * (1.0 + ana.abs()),
+                "dH[{i},{j}]: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn gat_backward_is_bitwise_stable_across_thread_counts() {
+        let g = SyntheticGraph::<f64>::rmat(64, 5, 6, 3, 41);
+        let a = Arc::new(g.a_hat.clone());
+        let mut expect: Option<(Dense<f64>, Dense<f64>, Dense<f64>, Dense<f64>)> = None;
+        for threads in [1usize, 3, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut layer = GatLayer::new(Arc::clone(&a), 6, 4, 3, 31);
+            let out = layer.forward(&pool, &g.features);
+            let mut dout = Dense::zeros(out.rows, out.cols);
+            ops::softmax_xent(&out, &g.labels, &mut dout);
+            let got = layer.backward(&pool, &dout);
+            if let Some(e) = &expect {
+                for (x, y) in [(&got.0, &e.0), (&got.1, &e.1), (&got.2, &e.2), (&got.3, &e.3)] {
+                    assert!(
+                        x.data.iter().zip(&y.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "threads={threads}: GAT backward must be thread-count invariant"
+                    );
+                }
+            } else {
+                expect = Some(got);
+            }
         }
     }
 

@@ -98,6 +98,31 @@ pub fn spmm_parallel<T: Scalar>(a: &Csr<T>, x: &Dense<T>, pool: &ThreadPool, out
     });
 }
 
+/// `out = aᵀ` (dense transpose), reshaping `out` as needed — backward
+/// chains consume stationary `Wᵀ` operands refreshed from the live
+/// weights each step.
+pub fn transpose_into<T: Scalar>(a: &Dense<T>, out: &mut Dense<T>) {
+    if (out.rows, out.cols) != (a.cols, a.rows) {
+        *out = Dense::zeros(a.cols, a.rows);
+    }
+    for i in 0..a.rows {
+        for (j, &x) in a.row(i).iter().enumerate() {
+            out.data[j * a.rows + i] = x;
+        }
+    }
+}
+
+/// Copy columns `lo..lo + out.cols` of `src` into `out` (same row
+/// count) — splits a stacked `[dQ | dK | dV]` gradient into its blocks.
+pub fn col_block_into<T: Scalar>(src: &Dense<T>, lo: usize, out: &mut Dense<T>) {
+    assert_eq!(src.rows, out.rows, "row counts must match");
+    assert!(lo + out.cols <= src.cols, "column block out of range");
+    for i in 0..src.rows {
+        let s = &src.row(i)[lo..lo + out.cols];
+        out.row_mut(i).copy_from_slice(s);
+    }
+}
+
 /// Softmax cross-entropy over rows of `logits` against integer labels.
 /// Returns mean loss and writes `dlogits = (softmax - onehot)/n`.
 pub fn softmax_xent<T: Scalar>(logits: &Dense<T>, labels: &[u32], dlogits: &mut Dense<T>) -> f64 {
@@ -142,6 +167,24 @@ mod tests {
         let mut g = Dense::<f64>::full(2, 2, 1.0);
         relu_grad_mask(&pre, &mut g);
         assert_eq!(g.data, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn transpose_and_col_block_round_trip() {
+        let a = Dense::<f64>::randn(5, 7, 3);
+        let mut t = Dense::zeros(0, 0);
+        transpose_into(&a, &mut t);
+        assert_eq!((t.rows, t.cols), (7, 5));
+        for i in 0..5 {
+            for j in 0..7 {
+                assert_eq!(t.get(j, i), a.get(i, j));
+            }
+        }
+        let mut block = Dense::zeros(5, 3);
+        col_block_into(&a, 2, &mut block);
+        for i in 0..5 {
+            assert_eq!(block.row(i), &a.row(i)[2..5]);
+        }
     }
 
     #[test]

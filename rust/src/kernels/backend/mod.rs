@@ -230,6 +230,19 @@ pub trait Backend: Send + Sync {
         scalar::reduce_sum(row)
     }
 
+    /// Row dot product `Σ a·b` with the strided-partial lane mapping of
+    /// [`scalar::reduce_dot`] — the softmax-jacobian inner product of
+    /// attention backward. Overrides must spill into the same partial
+    /// layout and reuse the shared scalar fold.
+    fn reduce_dot_f32(&self, a: &[f32], b: &[f32]) -> f32 {
+        scalar::reduce_dot(a, b)
+    }
+
+    /// `f64` twin of [`Backend::reduce_dot_f32`].
+    fn reduce_dot_f64(&self, a: &[f64], b: &[f64]) -> f64 {
+        scalar::reduce_dot(a, b)
+    }
+
     /// SpGEMM numeric merge inner loop; see [`scalar::spgemm_merge`]
     /// for the marks/touched/acc contract (marks are left set). The
     /// data-dependent scatter defeats lane mapping, so no backend

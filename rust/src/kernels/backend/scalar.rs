@@ -323,6 +323,32 @@ pub fn reduce_sum<T: Scalar>(row: &[T]) -> T {
     fold_sum_partials(&mut acc, &row[j..])
 }
 
+/// Row dot product `Σ a[x] · b[x]` with the strided partials / fixed
+/// combine tree of [`reduce_sum`] — the softmax-jacobian inner product
+/// `Σ p · dp` of attention backward. Separate multiply and add (no
+/// FMA); the `< JB` remainder stages its products into the partial
+/// layout before the shared fold, so every backend that spills lanes
+/// into the same layout matches bitwise. Returns `0` for empty inputs.
+#[inline]
+pub fn reduce_dot<T: Scalar>(a: &[T], b: &[T]) -> T {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [T::ZERO; JB];
+    let mut j = 0;
+    while j + JB <= a.len() {
+        let (ab, bb) = (&a[j..j + JB], &b[j..j + JB]);
+        for x in 0..JB {
+            acc[x] += ab[x] * bb[x];
+        }
+        j += JB;
+    }
+    let mut tail = [T::ZERO; JB];
+    let n = a.len() - j;
+    for x in 0..n {
+        tail[x] = a[j + x] * b[j + x];
+    }
+    fold_sum_partials(&mut acc, &tail[..n])
+}
+
 /// SpGEMM numeric merge inner loop: scatter-accumulate
 /// `Σ_k A[i,k] · B[k, :]` over `a_cols`/`a_vals` into the dense
 /// accumulator `acc`, recording first-touched columns in `touched`.

@@ -44,7 +44,7 @@ pub(super) static SIMD256: Simd256Backend = Simd256Backend;
 macro_rules! simd_kernels {
     (
         $gemm_row:ident, $gemm_row_strip:ident, $spmm_row_strip:ident,
-        $sddmm_row:ident, $reduce_max:ident, $reduce_sum:ident,
+        $sddmm_row:ident, $reduce_max:ident, $reduce_sum:ident, $reduce_dot:ident,
         $ty:ty, $lanes:expr,
         $setzero:ident, $set1:ident, $loadu:ident, $storeu:ident, $add:ident, $mul:ident,
         $maxv:ident
@@ -230,12 +230,39 @@ macro_rules! simd_kernels {
             }
             scalar::fold_sum_partials(&mut acc, &row[j..])
         }
+
+        $(#[$attr])?
+        #[inline]
+        unsafe fn $reduce_dot(a: &[$ty], b: &[$ty]) -> $ty {
+            debug_assert_eq!(a.len(), b.len());
+            let mut accv = [$setzero(); JB / $lanes];
+            let mut j = 0;
+            while j + JB <= a.len() {
+                let (ap, bp) = (a[j..].as_ptr(), b[j..].as_ptr());
+                for (x, ac) in accv.iter_mut().enumerate() {
+                    *ac = $add(*ac, $mul($loadu(ap.add($lanes * x)), $loadu(bp.add($lanes * x))));
+                }
+                j += JB;
+            }
+            let mut acc = [0.0 as $ty; JB];
+            for (x, ac) in accv.iter().enumerate() {
+                $storeu(acc.as_mut_ptr().add($lanes * x), *ac);
+            }
+            // The remainder stages its products into the partial layout
+            // exactly like the scalar reference before the shared fold.
+            let mut tail = [0.0 as $ty; JB];
+            let n = a.len() - j;
+            for x in 0..n {
+                tail[x] = a[j + x] * b[j + x];
+            }
+            scalar::fold_sum_partials(&mut acc, &tail[..n])
+        }
     };
 }
 
 simd_kernels!(
     gemm_row_f32_sse, gemm_row_strip_f32_sse, spmm_row_strip_f32_sse,
-    sddmm_row_f32_sse, reduce_max_f32_sse, reduce_sum_f32_sse,
+    sddmm_row_f32_sse, reduce_max_f32_sse, reduce_sum_f32_sse, reduce_dot_f32_sse,
     f32, 4,
     _mm_setzero_ps, _mm_set1_ps, _mm_loadu_ps, _mm_storeu_ps, _mm_add_ps, _mm_mul_ps,
     _mm_max_ps
@@ -243,7 +270,7 @@ simd_kernels!(
 
 simd_kernels!(
     gemm_row_f64_sse, gemm_row_strip_f64_sse, spmm_row_strip_f64_sse,
-    sddmm_row_f64_sse, reduce_max_f64_sse, reduce_sum_f64_sse,
+    sddmm_row_f64_sse, reduce_max_f64_sse, reduce_sum_f64_sse, reduce_dot_f64_sse,
     f64, 2,
     _mm_setzero_pd, _mm_set1_pd, _mm_loadu_pd, _mm_storeu_pd, _mm_add_pd, _mm_mul_pd,
     _mm_max_pd
@@ -251,7 +278,7 @@ simd_kernels!(
 
 simd_kernels!(
     gemm_row_f32_avx, gemm_row_strip_f32_avx, spmm_row_strip_f32_avx,
-    sddmm_row_f32_avx, reduce_max_f32_avx, reduce_sum_f32_avx,
+    sddmm_row_f32_avx, reduce_max_f32_avx, reduce_sum_f32_avx, reduce_dot_f32_avx,
     f32, 8,
     _mm256_setzero_ps, _mm256_set1_ps, _mm256_loadu_ps, _mm256_storeu_ps, _mm256_add_ps,
     _mm256_mul_ps, _mm256_max_ps,
@@ -260,7 +287,7 @@ simd_kernels!(
 
 simd_kernels!(
     gemm_row_f64_avx, gemm_row_strip_f64_avx, spmm_row_strip_f64_avx,
-    sddmm_row_f64_avx, reduce_max_f64_avx, reduce_sum_f64_avx,
+    sddmm_row_f64_avx, reduce_max_f64_avx, reduce_sum_f64_avx, reduce_dot_f64_avx,
     f64, 4,
     _mm256_setzero_pd, _mm256_set1_pd, _mm256_loadu_pd, _mm256_storeu_pd, _mm256_add_pd,
     _mm256_mul_pd, _mm256_max_pd,
@@ -355,6 +382,16 @@ impl Backend for Simd128Backend {
         // SAFETY: as `gemm_row_f32`.
         unsafe { reduce_sum_f64_sse(row) }
     }
+
+    fn reduce_dot_f32(&self, a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_dot_f32_sse(a, b) }
+    }
+
+    fn reduce_dot_f64(&self, a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_dot_f64_sse(a, b) }
+    }
 }
 
 /// 256-bit backend. Only reachable through [`super::by_id`], which
@@ -446,6 +483,16 @@ impl Backend for Simd256Backend {
         // SAFETY: as `gemm_row_f32`.
         unsafe { reduce_sum_f64_avx(row) }
     }
+
+    fn reduce_dot_f32(&self, a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_dot_f32_avx(a, b) }
+    }
+
+    fn reduce_dot_f64(&self, a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: as `gemm_row_f32`.
+        unsafe { reduce_dot_f64_avx(a, b) }
+    }
 }
 
 #[cfg(test)]
@@ -520,8 +567,15 @@ mod tests {
                     "{} reduce_sum n={nnz}",
                     bk.id()
                 );
+                assert_eq!(
+                    scalar::reduce_dot(&want, &got).to_bits(),
+                    bk.reduce_dot_f64(&want, &got).to_bits(),
+                    "{} reduce_dot n={nnz}",
+                    bk.id()
+                );
             }
             let rowf: Vec<f32> = (0..2 * JB + 5).map(|x| (x as f32 * 0.37).sin()).collect();
+            let rowg: Vec<f32> = (0..2 * JB + 5).map(|x| (x as f32 * 0.59).cos()).collect();
             for n in [0, 1, JB - 1, JB, JB + 7, 2 * JB + 5] {
                 assert_eq!(
                     scalar::reduce_max(&rowf[..n]).to_bits(),
@@ -533,6 +587,12 @@ mod tests {
                     scalar::reduce_sum(&rowf[..n]).to_bits(),
                     bk.reduce_sum_f32(&rowf[..n]).to_bits(),
                     "{} reduce_sum f32 n={n}",
+                    bk.id()
+                );
+                assert_eq!(
+                    scalar::reduce_dot(&rowf[..n], &rowg[..n]).to_bits(),
+                    bk.reduce_dot_f32(&rowf[..n], &rowg[..n]).to_bits(),
+                    "{} reduce_dot f32 n={n}",
                     bk.id()
                 );
             }

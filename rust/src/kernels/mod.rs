@@ -39,15 +39,16 @@ pub use gemm::{
     gemm_row_strip_with, gemm_row_with, gemm_rows, pack_panel, pack_panel_with,
 };
 pub use sddmm::{
-    reduce_max, reduce_max_with, reduce_sum, reduce_sum_with, sddmm, sddmm_row, sddmm_row_with,
-    softmax_row, softmax_row_with,
+    reduce_dot, reduce_dot_with, reduce_max, reduce_max_with, reduce_sum, reduce_sum_with, sddmm,
+    sddmm_row, sddmm_row_with, softmax_jac_row, softmax_jac_row_with, softmax_row,
+    softmax_row_with,
 };
 pub use spgemm::{
     spgemm, spgemm_keeps, spgemm_merge_with, spgemm_row_dense, spgemm_row_numeric,
     spgemm_row_numeric_tol, spgemm_row_symbolic, spgemm_row_symbolic_tol,
 };
 pub use spmm::{spmm_row, spmm_row_ptr, spmm_row_strip, spmm_row_strip_with, spmm_rows};
-pub use transpose::{csr_transpose, pattern_transpose};
+pub use transpose::{csr_transpose, pattern_transpose, pattern_transpose_with_perm};
 
 /// Output-register block width shared by every kernel: 32 scalars = 4
 /// AVX f32 / 8 AVX f64 / 8 SSE f32 / 16 SSE f64 vectors — small enough

@@ -67,6 +67,19 @@ pub fn reduce_sum_with<T: Scalar>(bk: &dyn Backend, row: &[T]) -> T {
     T::bk_reduce_sum(bk, row)
 }
 
+/// Row dot product `Σ a·b` (`0` for empty rows) — the softmax-jacobian
+/// inner product of attention backward.
+#[inline]
+pub fn reduce_dot<T: Scalar>(a: &[T], b: &[T]) -> T {
+    T::bk_reduce_dot(backend::active(), a, b)
+}
+
+/// [`reduce_dot`] on an explicit backend.
+#[inline]
+pub fn reduce_dot_with<T: Scalar>(bk: &dyn Backend, a: &[T], b: &[T]) -> T {
+    T::bk_reduce_dot(bk, a, b)
+}
+
 /// In-place numerically-stable softmax over one (score) row:
 /// `row[x] = exp(row[x] − max) / Σ exp(row[x] − max)`.
 ///
@@ -91,6 +104,36 @@ pub fn softmax_row_with<T: Scalar>(bk: &dyn Backend, row: &mut [T]) {
     let s = T::bk_reduce_sum(bk, row);
     for v in row.iter_mut() {
         *v = *v / s;
+    }
+}
+
+/// In-place softmax jacobian-vector product over one row: given the
+/// softmax outputs `p` and the incoming gradient `dp` (of the loss
+/// w.r.t. the softmax outputs), rewrites `dp` into the gradient w.r.t.
+/// the *pre*-softmax scores:
+///
+/// ```text
+///     dp[x] ← p[x] · (dp[x] − Σ_y p[y]·dp[y])
+/// ```
+///
+/// The inner product dispatches through the backend ([`reduce_dot`]);
+/// the rewrite sweep is element-wise and shared, so the whole transform
+/// is bitwise backend-independent — the backward mirror of
+/// [`softmax_row`]. Empty rows are a no-op.
+#[inline]
+pub fn softmax_jac_row<T: Scalar>(p: &[T], dp: &mut [T]) {
+    softmax_jac_row_with(backend::active(), p, dp);
+}
+
+/// [`softmax_jac_row`] on an explicit backend.
+pub fn softmax_jac_row_with<T: Scalar>(bk: &dyn Backend, p: &[T], dp: &mut [T]) {
+    debug_assert_eq!(p.len(), dp.len());
+    if p.is_empty() {
+        return;
+    }
+    let dot = T::bk_reduce_dot(bk, p, dp);
+    for (d, &pv) in dp.iter_mut().zip(p) {
+        *d = pv * (*d - dot);
     }
 }
 
@@ -176,6 +219,29 @@ mod tests {
     }
 
     #[test]
+    fn softmax_jac_matches_dense_jacobian() {
+        // dscores = P ⊙ (dP − (P·dP)) must equal J_softmax ᵀ·dP with
+        // J[x][y] = p[x]·(δ(x,y) − p[y]).
+        for n in [1, 3, JB, JB + 5] {
+            let mut p: Vec<f64> = (0..n).map(|x| ((x * 29 % 7) as f64) - 2.0).collect();
+            softmax_row(&mut p);
+            let dp: Vec<f64> = (0..n).map(|x| ((x as f64) * 0.83).sin()).collect();
+            let mut got = dp.clone();
+            softmax_jac_row(&p, &mut got);
+            for x in 0..n {
+                let mut want = 0.0;
+                for y in 0..n {
+                    let jac = p[x] * (((x == y) as u8 as f64) - p[y]);
+                    want += jac * dp[y];
+                }
+                assert!((got[x] - want).abs() < 1e-12, "n={n} x={x}");
+            }
+        }
+        // Empty rows (isolated nodes) are a no-op.
+        softmax_jac_row::<f64>(&[], &mut []);
+    }
+
+    #[test]
     fn reductions_handle_edges() {
         assert_eq!(reduce_max::<f64>(&[]), f64::NEG_INFINITY);
         assert_eq!(reduce_sum::<f64>(&[]), 0.0);
@@ -185,5 +251,9 @@ mod tests {
         let want: f64 = row.iter().sum::<f64>();
         // The blocked sum reorders vs a serial sum — compare loosely.
         assert!((reduce_sum(&row) - want).abs() < 1e-9);
+        assert_eq!(reduce_dot::<f64>(&[], &[]), 0.0);
+        let other: Vec<f64> = (0..row.len()).map(|x| ((x % 5) as f64) - 2.0).collect();
+        let want_dot: f64 = row.iter().zip(&other).map(|(a, b)| a * b).sum();
+        assert!((reduce_dot(&row, &other) - want_dot).abs() < 1e-9);
     }
 }

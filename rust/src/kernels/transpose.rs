@@ -29,6 +29,37 @@ pub fn csr_transpose<T: Scalar>(a: &Csr<T>) -> Csr<T> {
     a.transpose()
 }
 
+/// Structural transpose that also returns the edge permutation:
+/// `perm[t]` is the index (in `p`'s nonzero order) of the edge that
+/// became `Sᵀ`'s nonzero `t`. Attention backward scatters per-edge
+/// quantities computed in forward (row) order through this map while
+/// iterating `Sᵀ`'s rows, so the transposed pass reads — never
+/// re-derives — the stashed softmax outputs. The counting sort is the
+/// one [`pattern_transpose`] runs, with the source position carried
+/// along, so the pattern is identical to `p.transpose()`.
+pub fn pattern_transpose_with_perm(p: &Pattern) -> (Pattern, Vec<u32>) {
+    let mut counts = vec![0usize; p.cols + 1];
+    for &c in &p.indices {
+        counts[c as usize + 1] += 1;
+    }
+    for i in 0..p.cols {
+        counts[i + 1] += counts[i];
+    }
+    let indptr = counts.clone();
+    let mut cursor = counts;
+    let mut indices = vec![0u32; p.nnz()];
+    let mut perm = vec![0u32; p.nnz()];
+    for i in 0..p.rows {
+        for (k, &c) in p.row(i).iter().enumerate() {
+            let pos = cursor[c as usize];
+            indices[pos] = i as u32;
+            perm[pos] = (p.indptr[i] + k) as u32;
+            cursor[c as usize] += 1;
+        }
+    }
+    (Pattern::new(p.cols, p.rows, indptr, indices), perm)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -42,6 +73,28 @@ mod tests {
         assert_eq!(tt.pattern, a.pattern);
         assert!(tt.data.iter().zip(&a.data).all(|(x, y)| x.to_bits() == y.to_bits()));
         assert_eq!(pattern_transpose(&pattern_transpose(&p)), p);
+    }
+
+    #[test]
+    fn transpose_perm_maps_edges_back() {
+        let p = gen::uniform_random(41, 23, 4, 99);
+        let (t, perm) = pattern_transpose_with_perm(&p);
+        assert_eq!(t, pattern_transpose(&p));
+        assert_eq!(perm.len(), p.nnz());
+        // Edge t of Sᵀ is (c, r) exactly when edge perm[t] of S is (r, c).
+        for c in 0..t.rows {
+            for (k, &r) in t.row(c).iter().enumerate() {
+                let e = perm[t.indptr[c] + k] as usize;
+                let (r, c) = (r as usize, c);
+                assert!(p.indptr[r] <= e && e < p.indptr[r + 1], "edge {e} not in row {r}");
+                assert_eq!(p.indices[e] as usize, c);
+            }
+        }
+        // The permutation is a bijection over edges.
+        let mut seen = vec![false; p.nnz()];
+        for &e in &perm {
+            assert!(!std::mem::replace(&mut seen[e as usize], true));
+        }
     }
 
     #[test]

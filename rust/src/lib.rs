@@ -97,9 +97,15 @@
 //!                  same-key requests across tenants.
 //! - [`runtime`]  — PJRT/XLA loader for AOT artifacts (the JAX/Pallas GCN).
 //! - [`gnn`]      — GCN forward/backward; the forward runs the whole
-//!                  layer stack as one fused chain. [`gnn::GatLayer`]
-//!                  is the graph-attention counterpart: projection +
-//!                  fused sparse attention as one two-step chain.
+//!                  layer stack as one fused chain and the backward runs
+//!                  as chains too (`SpmmFlow` over the cached Âᵀ plus
+//!                  `FlowAMulB` GeMMs). [`gnn::GatLayer`] is the
+//!                  graph-attention counterpart: projection + fused
+//!                  sparse attention as one two-step chain forward, and
+//!                  a fused softmax-jacobian→SDDMM→SpMM
+//!                  (`ChainStepOp::AttentionGrad`) chain backward.
+//!                  [`gnn::train`] adds optimizers ([`gnn::Optim`]:
+//!                  SGD/Adam) and one-call train-step drivers.
 //! - [`harness`]  — experiment drivers shared by `benches/`.
 //! - [`testing`]  — deterministic RNG + mini property-test harness with
 //!                  `TF_PROP_SEED` single-case replay.
@@ -338,6 +344,57 @@
 //! cached transposed patterns (`Metrics::transpose_cache_hits`);
 //! [`gnn::GatLayer`] runs its whole forward this way; and
 //! `benches/fig20_sddmm_attention` measures the fused-over-unfused win.
+//!
+//! ## Training
+//!
+//! The backward pass is made of the same consecutive-multiplication
+//! shapes as the forward, so it runs as chains too. Two step kinds
+//! carry it: [`ChainStepOp::SpmmFlow`](exec::ChainStepOp) multiplies
+//! the flowing gradient by a sparse operand — the backward of an SpMM
+//! is an SpMM over the **cached transpose** `Âᵀ`, served by the same
+//! schedule/transpose cache the forward warms — and
+//! [`ChainStepOp::AttentionGrad`](exec::ChainStepOp) is the fused
+//! backward of the attention trio: per-row softmax jacobian, an SDDMM
+//! sampling `dS`, and transposed-SpMM accumulations into `dQ`/`dK`/`dV`,
+//! all inside one per-worker score strip (the transposed pattern and
+//! its edge permutation come from
+//! [`kernels::pattern_transpose_with_perm`], cached alongside the
+//! forward's `Sᵀ`). [`gnn::Gcn::backward`] and
+//! [`gnn::GatLayer::backward`] emit these chains; [`gnn::train`] ties
+//! forward, loss ([`gnn::softmax_xent`]), backward, and an optimizer
+//! ([`gnn::Optim`]: SGD or Adam) into one call:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use tile_fusion::gnn::model::GcnMode;
+//! use tile_fusion::gnn::{Gcn, Optim, SyntheticGraph};
+//! use tile_fusion::prelude::*;
+//!
+//! let g = SyntheticGraph::<f64>::rmat(1 << 10, 8, 16, 4, 7);
+//! let a = Arc::new(g.a_hat.clone());
+//! let pool = ThreadPool::new(4);
+//!
+//! // Two-layer GCN: every forward AND backward is a fused chain.
+//! let mut model = Gcn::new(Arc::clone(&a), &[16, 32, 4], 1, GcnMode::Fused);
+//! let mut opt = Optim::adam(0.02);
+//! for epoch in 0..20 {
+//!     let s = model.train_step_with(&pool, &g.features, &g.labels, &mut opt);
+//!     println!("epoch {epoch}: loss {:.4} acc {:.3}", s.loss, s.accuracy);
+//! }
+//! ```
+//!
+//! [`gnn::gat_train_step`] is the attention counterpart (with `d_v`
+//! equal to the class count the attention output doubles as logits).
+//! The determinism contract extends to training: backward chains are
+//! bitwise-identical to their serial references at any thread count and
+//! under every `TF_BACKEND`, pipelined or barriered
+//! (`tests/properties.rs` additionally gradient-checks both models by
+//! finite differences), and services reach the backward steps through
+//! [`coordinator::server::StepOperand::SpmmFlow`] /
+//! [`coordinator::server::StepOperand::AttentionGrad`], reusing warmed
+//! transposes across tenants. `examples/gcn_train.rs` trains both
+//! models end to end; `benches/fig21_train_fused` measures the fused
+//! train step against the unfused baseline.
 //!
 //! ## Serving
 //!

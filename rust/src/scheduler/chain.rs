@@ -40,11 +40,26 @@
 //! output). Both read only flow row `i` per output row, so they
 //! pipeline against the previous step's drain like flow-`B` pairs.
 //!
+//! ## Backward steps
+//!
+//! Training chains add the backward mirrors: [`ChainStepSpec::SpmmFlow`]
+//! (`out = A · V` with a **dense** flow — SpMM backward runs this over
+//! the cached transposed pattern, `G = Âᵀ·dZ`) and
+//! [`ChainStepSpec::AttentionGrad`] (the fused softmax-jacobian →
+//! SDDMM → SpMM of attention backward, emitting the stacked
+//! `[dQ | dK | dV]`). Both consume dense flows and pipeline against the
+//! previous step's drain; the attention backward's transposed pass runs
+//! after an intra-step barrier (every flow row is final once phase A
+//! drains), which is exactly the `Unfused` DAG shape.
+//!
 //! Planning is value-free (patterns, shapes and density summaries
 //! only), like the rest of [`crate::scheduler`]; binding values and
 //! running the chain is [`crate::exec::chain`]'s job.
 
-use super::cost::{estimate_attention_flops, estimate_sddmm, estimate_spgemm, SpgemmEstimate};
+use super::cost::{
+    estimate_attention_flops, estimate_attention_grad_flops, estimate_sddmm, estimate_spgemm,
+    estimate_spmm_flops, SpgemmEstimate,
+};
 use super::{BSide, FusedSchedule, FusionOp, Scheduler, SchedulerParams};
 use crate::sparse::Pattern;
 use std::collections::HashMap;
@@ -159,6 +174,20 @@ pub enum ChainStepSpec<'a> {
     /// columns) bind at run time. Output is dense `s.rows × v_cols`;
     /// the sparse score matrix never materializes.
     Attention { s: &'a Pattern, v_cols: usize },
+    /// Single SpMM `out = A · V` with a stationary sparse `A` and the
+    /// flowing value **dense** — the backward of a flow-`B` pair
+    /// (`G = Âᵀ·dZ` over the cached transposed pattern). Unlike
+    /// [`ChainStepSpec::Spgemm`] the flow stays dense end to end, so no
+    /// symbolic phase and no format decision; unlike a pair step there
+    /// is no fused first op, so no schedule either.
+    SpmmFlow { a: &'a Pattern },
+    /// Fused sparse-attention **backward**: the flowing dense value is
+    /// `dOut` (`v_cols` wide); stationary `Q`/`K`/`V` (query/key width
+    /// `d`) bind at run time, scores are recomputed and stashed per
+    /// edge, and the output is the dense `s.rows × (2·d + v_cols)`
+    /// stack `[dQ | dK | dV]`. Requires a square sampling pattern (the
+    /// transposed pass writes the same output rows).
+    AttentionGrad { s: &'a Pattern, d: usize, v_cols: usize },
 }
 
 /// Chain validation / planning error (dimension non-conformance, flow
@@ -189,6 +218,8 @@ pub enum PlannedStep {
     FlowAMulB,
     Sddmm,
     Attention,
+    SpmmFlow,
+    AttentionGrad,
 }
 
 /// One planned step: the (possibly shared) schedule plus output
@@ -997,6 +1028,67 @@ impl ChainPlanner {
                         est_density: 1.0,
                     }
                 }
+                ChainStepSpec::SpmmFlow { a } => {
+                    if cur_fmt != StepOutput::Dense {
+                        return Err(ChainError::new(format!(
+                            "step {s}: SpMM-flow steps consume a dense flowing value but the \
+                             flow is sparse here (use an SpGEMM step for sparse flows)"
+                        )));
+                    }
+                    if a.cols != cur_r {
+                        return Err(ChainError::new(format!(
+                            "step {s}: A has {} cols but the flowing value has {cur_r} rows",
+                            a.cols
+                        )));
+                    }
+                    ChainStepPlan {
+                        schedule: None,
+                        kind: PlannedStep::SpmmFlow,
+                        output: StepOutput::Dense,
+                        out_rows: a.rows,
+                        out_cols: cur_c,
+                        d1_rows: 0,
+                        flops: estimate_spmm_flops(a, cur_c),
+                        est_density: 1.0,
+                    }
+                }
+                ChainStepSpec::AttentionGrad { s: sp, d, v_cols } => {
+                    if cur_fmt != StepOutput::Dense {
+                        return Err(ChainError::new(format!(
+                            "step {s}: attention-backward steps consume a dense flowing value \
+                             (dOut) but the flow is sparse here"
+                        )));
+                    }
+                    if sp.rows != sp.cols {
+                        return Err(ChainError::new(format!(
+                            "step {s}: attention backward needs a square sampling pattern, got \
+                             {}x{}",
+                            sp.rows, sp.cols
+                        )));
+                    }
+                    if sp.rows != cur_r {
+                        return Err(ChainError::new(format!(
+                            "step {s}: sampling pattern has {} rows but the flowing dOut has \
+                             {cur_r} rows",
+                            sp.rows
+                        )));
+                    }
+                    if *v_cols != cur_c {
+                        return Err(ChainError::new(format!(
+                            "step {s}: flowing dOut has {cur_c} cols but V has {v_cols} cols"
+                        )));
+                    }
+                    ChainStepPlan {
+                        schedule: None,
+                        kind: PlannedStep::AttentionGrad,
+                        output: StepOutput::Dense,
+                        out_rows: sp.rows,
+                        out_cols: 2 * d + v_cols,
+                        d1_rows: 0,
+                        flops: estimate_attention_grad_flops(sp, *d, *v_cols),
+                        est_density: 1.0,
+                    }
+                }
             };
             total_flops += step.flops;
             cur_r = step.out_rows;
@@ -1379,6 +1471,63 @@ mod tests {
             .plan(16, 8, &[ChainStepSpec::Attention { s: &s, v_cols: 4 }])
             .unwrap_err();
         assert!(err.to_string().contains("32 rows"), "{err}");
+    }
+
+    #[test]
+    fn backward_chain_plans_shapes_and_boundaries() {
+        // GCN backward: SpMM over the transposed pattern, then `· Wᵀ`.
+        let at = gen::erdos_renyi(80, 3, 19);
+        let specs =
+            vec![ChainStepSpec::SpmmFlow { a: &at }, ChainStepSpec::FlowAMulB { bcol: 8 }];
+        let plan = ChainPlanner::new(params_small()).plan(80, 16, &specs).unwrap();
+        assert_eq!(plan.steps[0].kind, PlannedStep::SpmmFlow);
+        assert!(plan.steps[0].schedule.is_none());
+        assert_eq!(plan.steps[0].flops, estimate_spmm_flops(&at, 16));
+        assert_eq!(plan.out_dims(), (80, 8));
+        assert_eq!(plan.boundaries, vec![StepBoundary::Barrier, StepBoundary::Pipelined]);
+
+        // GAT backward: fused attention backward, then the stacked
+        // `[dQ|dK|dV]` against the stacked transposed projections.
+        let s = gen::erdos_renyi(64, 4, 23);
+        let specs = vec![
+            ChainStepSpec::AttentionGrad { s: &s, d: 6, v_cols: 5 },
+            ChainStepSpec::FlowAMulB { bcol: 12 },
+        ];
+        let plan = ChainPlanner::new(params_small()).plan(64, 5, &specs).unwrap();
+        assert_eq!(plan.steps[0].kind, PlannedStep::AttentionGrad);
+        assert_eq!((plan.steps[0].out_rows, plan.steps[0].out_cols), (64, 17));
+        assert_eq!(plan.steps[0].flops, estimate_attention_grad_flops(&s, 6, 5));
+        assert_eq!(plan.out_dims(), (64, 12));
+        assert_eq!(plan.boundaries, vec![StepBoundary::Barrier, StepBoundary::Pipelined]);
+    }
+
+    #[test]
+    fn backward_steps_reject_bad_flows() {
+        let s = gen::banded(32, &[1]);
+        // Sparse flow into an SpMM-flow step (the flow must be dense).
+        let err = ChainPlanner::new(params_small())
+            .plan_input(
+                ChainInputMeta::sparse(32, 32, s.nnz()),
+                &[ChainStepSpec::SpmmFlow { a: &s }],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("dense flowing value"), "{err}");
+        // SpMM-flow dimension mismatch.
+        let err = ChainPlanner::new(params_small())
+            .plan(16, 4, &[ChainStepSpec::SpmmFlow { a: &s }])
+            .unwrap_err();
+        assert!(err.to_string().contains("32 cols"), "{err}");
+        // Attention backward needs a square pattern.
+        let rect = gen::uniform_random(16, 24, 3, 5);
+        let err = ChainPlanner::new(params_small())
+            .plan(16, 4, &[ChainStepSpec::AttentionGrad { s: &rect, d: 3, v_cols: 4 }])
+            .unwrap_err();
+        assert!(err.to_string().contains("square"), "{err}");
+        // dOut width must equal v_cols.
+        let err = ChainPlanner::new(params_small())
+            .plan(32, 7, &[ChainStepSpec::AttentionGrad { s: &s, d: 3, v_cols: 4 }])
+            .unwrap_err();
+        assert!(err.to_string().contains("7 cols"), "{err}");
     }
 
     #[test]

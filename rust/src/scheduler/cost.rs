@@ -310,6 +310,25 @@ pub fn estimate_attention_flops(s: &Pattern, d: usize, v_cols: usize) -> usize {
     2 * s.nnz() * d + 5 * s.nnz() + 2 * s.nnz() * v_cols
 }
 
+/// Flop estimate of a single dense-flow SpMM step `out = A · V` (the
+/// SpMM-backward chain step): one multiply-add per (A-nonzero, dense
+/// column) pairing. Deterministic — `A`'s pattern is known at plan
+/// time and the flow is dense.
+pub fn estimate_spmm_flops(a: &Pattern, ccol: usize) -> usize {
+    2 * a.nnz() * ccol
+}
+
+/// Flop estimate of a fused attention-backward step emitting
+/// `[dQ | dK | dV]`: the softmax recompute (`2·nnz·d + 5·nnz`, exactly
+/// the forward's score pass), the per-edge incoming gradient SDDMM
+/// (`2·nnz·v_cols`), the softmax-jacobian sweep (`≈ 3·nnz`: the inner
+/// product plus the rewrite), and the three gather combines (`2·nnz·d`
+/// each for `dQ`/`dK`, `2·nnz·v_cols` for `dV`). Like
+/// [`estimate_attention_flops`] nothing is probabilistic.
+pub fn estimate_attention_grad_flops(s: &Pattern, d: usize, v_cols: usize) -> usize {
+    6 * s.nnz() * d + 4 * s.nnz() * v_cols + 8 * s.nnz()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,6 +439,20 @@ mod tests {
         let z = estimate_sddmm(&Pattern::empty(4, 4), 8);
         assert_eq!((z.flops, z.out_nnz), (0, 0));
         assert_eq!(estimate_attention_flops(&Pattern::empty(4, 4), 8, 8), 0);
+    }
+
+    #[test]
+    fn backward_estimates_are_exact() {
+        let s = crate::sparse::gen::erdos_renyi(64, 4, 9);
+        assert_eq!(estimate_spmm_flops(&s, 16), 2 * s.nnz() * 16);
+        assert_eq!(estimate_spmm_flops(&Pattern::empty(4, 4), 8), 0);
+        // The backward costs at least the forward: it replays the score
+        // pass and adds the jacobian and the transposed combines.
+        let fwd = estimate_attention_flops(&s, 16, 8);
+        let bwd = estimate_attention_grad_flops(&s, 16, 8);
+        assert_eq!(bwd, 6 * s.nnz() * 16 + 4 * s.nnz() * 8 + 8 * s.nnz());
+        assert!(bwd > fwd);
+        assert_eq!(estimate_attention_grad_flops(&Pattern::empty(4, 4), 8, 8), 0);
     }
 
     #[test]

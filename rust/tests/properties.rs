@@ -1233,3 +1233,234 @@ fn prop_ell_roundtrip() {
         assert!(ell.to_dense().max_abs_diff(&a.to_dense()) < 1e-6);
     });
 }
+
+/// Random GCN-shaped backward chain — `SpmmFlow(Âᵀ)` into
+/// `FlowAMulB(Wᵀ)` — pipelined vs. barriered at a random thread count.
+/// The backward steps ride the same cross-step DAG as forward pairs, so
+/// the bitwise contract must hold for them too.
+#[test]
+fn prop_backward_spmm_chain_pipelined_bitwise_equals_barriered() {
+    check_prop("backward-spmm-pipelined-bitwise", 12, |rng| {
+        let n = 24 + rng.next_range(72);
+        let f = 2 + rng.next_range(10);
+        let h = 2 + rng.next_range(8);
+        let at = Arc::new(Csr::<f64>::with_random_values(
+            gen::uniform_random(n, n, 1 + rng.next_range(4), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        ));
+        let wt = Arc::new(Dense::<f64>::randn(f, h, rng.next_u64()));
+        let ops: Vec<ChainStepOp<f64>> = vec![
+            ChainStepOp::SpmmFlow { a: Arc::clone(&at) },
+            ChainStepOp::FlowAMulB { b: Arc::clone(&wt) },
+        ];
+        let dz = Dense::<f64>::randn(n, f, rng.next_u64());
+        let mut params = random_params(rng);
+        params.elem_bytes = 8;
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+
+        let mut barriered = ChainBuilder::dense(n, f)
+            .steps(clone_chain_ops(&ops))
+            .build(params)
+            .expect("backward chain must bind");
+        barriered.force_barriers();
+        let (out_rows, out_cols) = barriered.out_dims();
+        let mut expect = Dense::zeros(out_rows, out_cols);
+        barriered.run(&pool, &dz, &mut expect);
+
+        let mut pipelined =
+            ChainBuilder::dense(n, f).steps(ops).build(params).expect("backward chain must bind");
+        let mut d = Dense::zeros(out_rows, out_cols);
+        for run in 0..2 {
+            pipelined.run_pipelined(&pool, &dz, &mut d);
+            assert_eq!(d.data, expect.data, "pipelined backward diverged on run {run}");
+        }
+    });
+}
+
+/// Random attention-backward chain — `AttentionGrad` (softmax-jacobian
+/// → SDDMM → SpMM over `Sᵀ`) into `FlowAMulB(Wstackᵀ)` — pipelined vs.
+/// barriered, bitwise, at a random thread count.
+#[test]
+fn prop_attention_grad_chain_pipelined_bitwise_equals_barriered() {
+    check_prop("attention-grad-pipelined-bitwise", 10, |rng| {
+        use tile_fusion::kernels::pattern_transpose_with_perm;
+        let n = 24 + rng.next_range(56);
+        let d = 2 + rng.next_range(6);
+        let vc = 1 + rng.next_range(6);
+        let f = 2 + rng.next_range(8);
+        let s = Arc::new(Csr::<f64>::with_random_values(
+            gen::erdos_renyi(n, 1 + rng.next_range(4), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        ));
+        let (st, perm) = pattern_transpose_with_perm(&s.pattern);
+        let ops: Vec<ChainStepOp<f64>> = vec![
+            ChainStepOp::AttentionGrad {
+                s: Arc::clone(&s),
+                k: Arc::new(Dense::randn(n, d, rng.next_u64())),
+                v: Arc::new(Dense::randn(n, vc, rng.next_u64())),
+                q: Arc::new(Dense::randn(n, d, rng.next_u64())),
+                st: Arc::new(st),
+                perm: Arc::new(perm),
+            },
+            ChainStepOp::FlowAMulB { b: Arc::new(Dense::randn(2 * d + vc, f, rng.next_u64())) },
+        ];
+        let dout = Dense::<f64>::randn(n, vc, rng.next_u64());
+        let mut params = random_params(rng);
+        params.elem_bytes = 8;
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+
+        let mut barriered = ChainBuilder::dense(n, vc)
+            .steps(clone_chain_ops(&ops))
+            .build(params)
+            .expect("attention-grad chain must bind");
+        barriered.force_barriers();
+        let (out_rows, out_cols) = barriered.out_dims();
+        let mut expect = Dense::zeros(out_rows, out_cols);
+        barriered.run(&pool, &dout, &mut expect);
+
+        let mut pipelined = ChainBuilder::dense(n, vc)
+            .steps(ops)
+            .build(params)
+            .expect("attention-grad chain must bind");
+        let mut got = Dense::zeros(out_rows, out_cols);
+        for run in 0..2 {
+            pipelined.run_pipelined(&pool, &dout, &mut got);
+            assert_eq!(got.data, expect.data, "pipelined attention-grad diverged on run {run}");
+        }
+    });
+}
+
+/// Finite-difference check of the fused GCN backward over random
+/// graphs, widths and thread counts (f64, loose tolerance). Probes with
+/// an unstable finite-difference estimate — a ReLU kink inside the
+/// probe step — are detected by comparing two step sizes and skipped;
+/// the analytic gradient is exact on either side of a kink, the
+/// one-sided difference is not.
+#[test]
+fn prop_gcn_backward_matches_finite_differences() {
+    check_prop("gcn-backward-fd", 5, |rng| {
+        use tile_fusion::gnn::model::GcnMode;
+        use tile_fusion::gnn::{ops, Gcn, SyntheticGraph};
+
+        let n = 24 + rng.next_range(48);
+        let f = 2 + rng.next_range(5);
+        let c = 2 + rng.next_range(3);
+        let hmid = 3 + rng.next_range(6);
+        let g = SyntheticGraph::<f64>::rmat(n, 4, f, c, rng.next_u64());
+        let a = Arc::new(g.a_hat.clone());
+        let pool = ThreadPool::new(1 + rng.next_range(3));
+        let mut model = Gcn::new(a, &[f, hmid, c], rng.next_u64(), GcnMode::Fused);
+
+        let logits = model.forward(&pool, &g.features);
+        let mut dlogits = Dense::zeros(logits.rows, logits.cols);
+        let l0 = ops::softmax_xent(&logits, &g.labels, &mut dlogits);
+        let grads = model.backward(&pool, &dlogits);
+
+        let eps = 1e-6;
+        for li in 0..grads.len() {
+            for _ in 0..2 {
+                let i = rng.next_range(model.layers[li].w.rows);
+                let j = rng.next_range(model.layers[li].w.cols);
+                let old = model.layers[li].w.get(i, j);
+                let mut loss_with = |model: &mut Gcn<f64>, w: f64| {
+                    model.layers[li].w.set(i, j, w);
+                    let lg = model.forward(&pool, &g.features);
+                    let mut scratch = Dense::zeros(lg.rows, lg.cols);
+                    ops::softmax_xent(&lg, &g.labels, &mut scratch)
+                };
+                let fd1 = (loss_with(&mut model, old + eps) - l0) / eps;
+                let fd2 = (loss_with(&mut model, old + eps / 4.0) - l0) / (eps / 4.0);
+                model.layers[li].w.set(i, j, old);
+                let ana = grads[li].get(i, j);
+                let tol = 1e-3 * (1.0 + ana.abs());
+                if (fd1 - fd2).abs() > tol / 2.0 {
+                    continue; // kink inside the probe step
+                }
+                assert!(
+                    (fd2 - ana).abs() <= tol,
+                    "layer {li} ({i},{j}): fd {fd2} vs analytic {ana}"
+                );
+            }
+        }
+    });
+}
+
+/// Finite-difference check of the fused GAT attention backward: random
+/// graphs and head shapes, probing all three projections and the
+/// feature gradient `dH`. The attention forward is smooth (softmax, no
+/// ReLU), so the probes assert directly.
+#[test]
+fn prop_gat_backward_matches_finite_differences() {
+    check_prop("gat-backward-fd", 5, |rng| {
+        use tile_fusion::gnn::{ops, GatLayer, SyntheticGraph};
+
+        let n = 24 + rng.next_range(40);
+        let f = 3 + rng.next_range(5);
+        let d = 2 + rng.next_range(4);
+        let c = 2 + rng.next_range(3); // d_v doubles as the class count
+        let g = SyntheticGraph::<f64>::rmat(n, 4, f, c, rng.next_u64());
+        let a = Arc::new(g.a_hat.clone());
+        let pool = ThreadPool::new(1 + rng.next_range(3));
+        let mut layer = GatLayer::new(a, f, d, c, rng.next_u64());
+
+        let logits = layer.forward(&pool, &g.features);
+        let mut dlogits = Dense::zeros(logits.rows, logits.cols);
+        let l0 = ops::softmax_xent(&logits, &g.labels, &mut dlogits);
+        let (dwq, dwk, dwv, dh) = layer.backward(&pool, &dlogits);
+
+        let eps = 1e-6;
+        let mut loss_at = |layer: &mut GatLayer<f64>, h: &Dense<f64>| {
+            let lg = layer.forward(&pool, h);
+            let mut scratch = Dense::zeros(lg.rows, lg.cols);
+            ops::softmax_xent(&lg, &g.labels, &mut scratch)
+        };
+        for which in 0..3usize {
+            let (wr, wc) = match which {
+                0 => (layer.wq.rows, layer.wq.cols),
+                1 => (layer.wk.rows, layer.wk.cols),
+                _ => (layer.wv.rows, layer.wv.cols),
+            };
+            let i = rng.next_range(wr);
+            let j = rng.next_range(wc);
+            let (old, ana) = match which {
+                0 => (layer.wq.get(i, j), dwq.get(i, j)),
+                1 => (layer.wk.get(i, j), dwk.get(i, j)),
+                _ => (layer.wv.get(i, j), dwv.get(i, j)),
+            };
+            match which {
+                0 => layer.wq.set(i, j, old + eps),
+                1 => layer.wk.set(i, j, old + eps),
+                _ => layer.wv.set(i, j, old + eps),
+            }
+            let lp = loss_at(&mut layer, &g.features);
+            match which {
+                0 => layer.wq.set(i, j, old),
+                1 => layer.wk.set(i, j, old),
+                _ => layer.wv.set(i, j, old),
+            }
+            let num = (lp - l0) / eps;
+            assert!(
+                (num - ana).abs() <= 1e-3 * (1.0 + ana.abs()),
+                "projection {which} ({i},{j}): fd {num} vs analytic {ana}"
+            );
+        }
+        // Feature gradient dH = dQ·Wqᵀ + dK·Wkᵀ + dV·Wvᵀ.
+        for _ in 0..2 {
+            let i = rng.next_range(n);
+            let j = rng.next_range(f);
+            let mut hp = g.features.clone();
+            hp.set(i, j, hp.get(i, j) + eps);
+            let lp = loss_at(&mut layer, &hp);
+            let num = (lp - l0) / eps;
+            let ana = dh.get(i, j);
+            assert!(
+                (num - ana).abs() <= 1e-3 * (1.0 + ana.abs()),
+                "dH ({i},{j}): fd {num} vs analytic {ana}"
+            );
+        }
+    });
+}
