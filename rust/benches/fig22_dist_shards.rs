@@ -1,0 +1,243 @@
+//! Figure 22 (repo extension): distributed-memory process shards.
+//!
+//! Two measurements on the in-process `dist` simulation (the same shard
+//! runtimes `TF_DIST=N` gives the coordinator, each behind the message
+//! layer with its own thread pool):
+//!
+//! 1. **Multi-shard vs single-shard throughput** on independent-tenant
+//!    load: closed-loop tenants each own a small whole-placement chain
+//!    homed round-robin across the shards. With one shard every run
+//!    serializes on that shard's lane lock; with four shards the same
+//!    total thread budget runs four lanes concurrently, and the fan-out
+//!    overhead a small chain pays on a wide pool disappears. Acceptance
+//!    (full scale): 4 shards ≥ 1.3× single-shard aggregate throughput
+//!    at the largest tenant count.
+//! 2. **Row-split panel traffic** for one large chain: the broadcast /
+//!    shift counts and transport bytes the 1.5D layout moves per shard
+//!    count, so the α-β crossover in
+//!    [`decide_exchange`](tile_fusion::scheduler::cost) is visible.
+//!
+//! `--smoke` runs tiny shapes for CI bitrot checks (seconds; asserts
+//! only that whole-placement and row-split runs agree bitwise with the
+//! single-process reference).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tile_fusion::harness::{bench_params, print_table, write_csv, BenchEnv};
+use tile_fusion::prelude::*;
+
+/// Independent tenant keys: each owns its own stationary matrix and its
+/// own bound chain, so nothing is shared across tenants but the shard
+/// runtimes themselves.
+const KEYS: usize = 8;
+
+fn matrices(n: usize) -> Vec<Arc<Csr<f32>>> {
+    (0..KEYS)
+        .map(|k| {
+            Arc::new(Csr::<f32>::with_random_values(
+                gen::banded(n, &[1, 2 + k]),
+                k as u64 + 1,
+                -1.0,
+                1.0,
+            ))
+        })
+        .collect()
+}
+
+/// The per-tenant workload: one GCN-style layer then a backward-style
+/// SpMM hop, all flowing dense panels.
+fn tenant_ops(a: &Arc<Csr<f32>>, w: &Arc<Dense<f32>>) -> Vec<ChainStepOp<f32>> {
+    vec![
+        ChainStepOp::GemmFlowB { a: Arc::clone(a), w: Arc::clone(w) },
+        ChainStepOp::SpmmFlow { a: Arc::clone(a) },
+    ]
+}
+
+/// Single-process reference for tenant `k`'s chain.
+fn local_reference(
+    a: &Arc<Csr<f32>>,
+    w: &Arc<Dense<f32>>,
+    x: &Dense<f32>,
+    params: SchedulerParams,
+    threads: usize,
+) -> Dense<f32> {
+    let mut exec = ChainBuilder::dense(x.rows, x.cols)
+        .steps(tenant_ops(a, w))
+        .build(params)
+        .unwrap();
+    let pool = ThreadPool::new(threads);
+    let mut y = Dense::zeros(x.rows, w.cols);
+    exec.run(&pool, x, &mut y);
+    y
+}
+
+/// Bind every tenant's chain whole, homed round-robin over the shards.
+fn bind_tenants(
+    driver: &DistDriver<f32>,
+    mats: &[Arc<Csr<f32>>],
+    w: &Arc<Dense<f32>>,
+    cin: usize,
+) -> Vec<DistChain> {
+    let n_steps = 2;
+    mats.iter()
+        .enumerate()
+        .map(|(k, a)| {
+            let chain = driver
+                .bind_with(
+                    ChainInputMeta::dense(a.rows(), cin),
+                    tenant_ops(a, w),
+                    vec![StepStrategy::Fused; n_steps],
+                    vec![0.0; n_steps],
+                    Some(k % driver.n_shards()),
+                )
+                .expect("bind tenant chain");
+            assert!(
+                matches!(chain.placement(), DistPlacement::Single(_)),
+                "tenant chains must bind whole (panels below the split threshold)"
+            );
+            chain
+        })
+        .collect()
+}
+
+/// Closed-loop tenants (tenant `t` owns key `t % KEYS`): total wall
+/// time for `tenants · per_tenant` runs. Binds are warmed outside the
+/// timed window, so the measurement isolates run concurrency across
+/// shard lanes, not planning.
+fn run_arm(
+    driver: &DistDriver<f32>,
+    chains: &[DistChain],
+    cin: usize,
+    tenants: usize,
+    per_tenant: usize,
+) -> Duration {
+    for (k, chain) in chains.iter().enumerate() {
+        let x = Dense::<f32>::randn(chain.in_dims().0, cin, 50 + k as u64);
+        let _ = driver.run(chain, ChainIn::Dense(&x));
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..tenants {
+            let (driver, chains) = (&driver, &chains);
+            scope.spawn(move || {
+                let chain = &chains[t % KEYS];
+                let x = Dense::<f32>::randn(chain.in_dims().0, cin, t as u64 + 1);
+                for _ in 0..per_tenant {
+                    let _ = driver.run(chain, ChainIn::Dense(&x));
+                }
+            });
+        }
+    });
+    t0.elapsed()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let env = BenchEnv::from_env();
+    let (n, cin, cout, per_tenant, tenant_counts): (usize, usize, usize, usize, &[usize]) =
+        if smoke {
+            (256, 8, 8, 2, &[2])
+        } else {
+            (4096, 32, 32, 8, &[4, 8, 16])
+        };
+    let params = bench_params::<f32>(env.threads);
+    let mats = matrices(n);
+    let w = Arc::new(Dense::<f32>::randn(cin, cout, 7));
+
+    // -- Measurement 1: shard-count scaling on independent tenants ----
+    let driver_for = |shards: usize| {
+        DistDriver::<f32>::new(DistConfig { params, ..DistConfig::new(shards) })
+    };
+    let single = driver_for(1);
+    let sharded = driver_for(4);
+    let chains_1 = bind_tenants(&single, &mats, &w, cin);
+    let chains_4 = bind_tenants(&sharded, &mats, &w, cin);
+
+    if smoke {
+        // Correctness only: whole-placement and row-split both bitwise
+        // against the single-process builder.
+        let x = Dense::<f32>::randn(n, cin, 99);
+        let expect = local_reference(&mats[0], &w, &x, params, env.threads);
+        let got = sharded.run(&chains_4[0], ChainIn::Dense(&x)).expect_dense();
+        assert!(
+            got.data.iter().zip(&expect.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "whole-placement run must match the single-process reference bitwise"
+        );
+        let sim = DistDriver::<f32>::new(DistConfig { params, ..DistConfig::simulation(3) });
+        let rs = sim
+            .bind(ChainInputMeta::dense(n, cin), tenant_ops(&mats[0], &w))
+            .expect("row-split bind");
+        assert_eq!(rs.placement(), DistPlacement::RowSplit);
+        let got = sim.run(&rs, ChainIn::Dense(&x)).expect_dense();
+        assert!(
+            got.data.iter().zip(&expect.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "row-split run must match the single-process reference bitwise"
+        );
+        sim.unbind(rs);
+        println!("OK");
+        return;
+    }
+
+    let mut table = Vec::new();
+    let mut csv = Vec::new();
+    let mut at_max = 0.0f64;
+    for &tenants in tenant_counts {
+        let t1 = run_arm(&single, &chains_1, cin, tenants, per_tenant);
+        let t4 = run_arm(&sharded, &chains_4, cin, tenants, per_tenant);
+        let reqs = (tenants * per_tenant) as f64;
+        let (rps_1, rps_4) = (reqs / t1.as_secs_f64(), reqs / t4.as_secs_f64());
+        at_max = rps_4 / rps_1;
+        table.push(vec![
+            tenants.to_string(),
+            format!("{rps_1:.0}"),
+            format!("{rps_4:.0}"),
+            format!("{at_max:.2}x"),
+        ]);
+        csv.push(format!(
+            "{tenants},{per_tenant},{:.6},{:.6},{at_max:.3}",
+            t1.as_secs_f64(),
+            t4.as_secs_f64()
+        ));
+    }
+    print_table(
+        &format!(
+            "Figure 22 — process-shard scaling on independent tenants (n={n}, {KEYS} keys, {} threads total)",
+            env.threads
+        ),
+        &["tenants", "1 shard req/s", "4 shards req/s", "4/1"],
+        &table,
+    );
+    write_csv("fig22_dist_shards", "tenants,per_tenant,t_1shard,t_4shards,ratio", &csv);
+
+    // -- Measurement 2: row-split panel traffic per shard count -------
+    let x = Dense::<f32>::randn(n, cin, 99);
+    let mut traffic = Vec::new();
+    for shards in [2usize, 3, 4] {
+        let sim = DistDriver::<f32>::new(DistConfig { params, ..DistConfig::simulation(shards) });
+        let chain = sim
+            .bind(ChainInputMeta::dense(n, cin), tenant_ops(&mats[0], &w))
+            .expect("row-split bind");
+        let _ = sim.run(&chain, ChainIn::Dense(&x));
+        let s = sim.stats();
+        traffic.push(vec![
+            shards.to_string(),
+            s.panels_broadcast.to_string(),
+            s.panels_shifted.to_string(),
+            s.transport_msgs.to_string(),
+            format!("{:.2}", s.transport_bytes as f64 / (1 << 20) as f64),
+        ]);
+        sim.unbind(chain);
+    }
+    print_table(
+        "Figure 22b — 1.5D panel traffic for one row-split chain",
+        &["shards", "broadcasts", "shifts", "msgs", "MiB moved"],
+        &traffic,
+    );
+
+    assert!(
+        at_max >= 1.3,
+        "4 process shards must reach 1.3x single-shard throughput at {} tenants (got {at_max:.2}x)",
+        tenant_counts.last().unwrap()
+    );
+    println!("OK");
+}

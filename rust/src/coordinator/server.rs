@@ -65,6 +65,7 @@ use super::queue::{BoundedQueue, PopWait, Priority, PushError};
 use super::service::{execute_pair_batch, Metrics, Strategy};
 use super::ticket::{ticket, ServiceError, Ticket, TicketTx};
 use crate::core::{Dense, Scalar};
+use crate::dist::{DistChain, DistConfig, DistDriver};
 use crate::exec::chain::{
     chain_specs, ChainBuilder, ChainExec, ChainIn, ChainOut, ChainStepOp, StepControl,
     StepStrategy,
@@ -120,6 +121,14 @@ pub struct ServerConfig {
     /// whole pool (`Lease::All`) instead of the dispatching shard's
     /// node ([`crate::scheduler::place::decide_placement`]).
     pub spread_min_bytes: usize,
+    /// Process shards for distributed chain execution: `0` (the
+    /// default) follows the `TF_DIST` override
+    /// ([`crate::topology::dist_shards`]), `1` disables the distributed
+    /// path, `N > 1` routes every chain request through an `N`-shard
+    /// in-process [`DistDriver`] simulation (outputs stay
+    /// bitwise-identical to local execution; pair requests stay on the
+    /// server's own pool).
+    pub dist_shards: usize,
 }
 
 impl Default for ServerConfig {
@@ -133,6 +142,7 @@ impl Default for ServerConfig {
             shards: 0,
             steal: true,
             spread_min_bytes: DEFAULT_SPREAD_MIN_BYTES,
+            dist_shards: 0,
         }
     }
 }
@@ -280,6 +290,10 @@ struct Shared<T> {
     /// One submission queue per dispatcher shard; requests hash to a
     /// home queue by coalesce key.
     queues: Vec<Arc<BoundedQueue<Job<T>>>>,
+    /// `Some` when chains execute distributed ([`ServerConfig::dist_shards`]
+    /// / `TF_DIST`): the process-shard driver every dispatcher routes
+    /// chain batches through. Pair requests stay on `pool`.
+    dist: Option<Arc<DistDriver<T>>>,
 }
 
 /// Metrics mutex guard that registers with the schedule cache's debug
@@ -424,6 +438,16 @@ impl<T: Scalar> Server<T> {
         };
         let queues: Vec<Arc<BoundedQueue<Job<T>>>> =
             (0..n_shards).map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity))).collect();
+        let dist_n = if cfg.dist_shards == 0 {
+            crate::topology::dist_shards()
+        } else {
+            cfg.dist_shards
+        };
+        let dist = (dist_n > 1).then(|| {
+            let mut dc = DistConfig::simulation(dist_n);
+            dc.params = params;
+            Arc::new(DistDriver::new(dc))
+        });
         let shared = Arc::new(Shared {
             pool,
             params,
@@ -437,6 +461,7 @@ impl<T: Scalar> Server<T> {
             metrics: Mutex::new(Metrics::default()),
             aborting: AtomicBool::new(false),
             queues,
+            dist,
         });
         {
             let mut m = shared.metrics_guard();
@@ -455,6 +480,7 @@ impl<T: Scalar> Server<T> {
                             shard,
                             seq: std::cell::Cell::new(0),
                             execs: Vec::new(),
+                            dist_chains: Vec::new(),
                         }
                         .run()
                     })
@@ -654,9 +680,14 @@ impl<T: Scalar> Server<T> {
         }
     }
 
-    /// Rolling metrics snapshot (includes the dispatcher's counters).
+    /// Rolling metrics snapshot (includes the dispatcher's counters,
+    /// and the dist driver's when one is running).
     pub fn metrics(&self) -> Metrics {
-        self.shared.metrics_guard().clone()
+        let mut m = self.shared.metrics_guard().clone();
+        if let Some(d) = &self.shared.dist {
+            m.dist = d.stats();
+        }
+        m
     }
 
     /// Schedule-cache state (entries, hits, misses), summed over the
@@ -689,7 +720,14 @@ impl<T: Scalar> Server<T> {
             let _ = h.join();
         }
         self.persist_tuned_best_effort();
-        self.shared.metrics_guard().clone()
+        let mut m = self.shared.metrics_guard().clone();
+        // Dispatchers are joined, so every scatter/gather has drained;
+        // snapshot the dist counters, then let the shard workers go.
+        if let Some(d) = &self.shared.dist {
+            m.dist = d.stats();
+            d.shutdown();
+        }
+        m
     }
 }
 
@@ -710,6 +748,12 @@ impl<T: Scalar> Drop for Server<T> {
         }
         if had_dispatchers {
             self.persist_tuned_best_effort();
+        }
+        // After the dispatcher joins there are no runs in flight; the
+        // driver's own shutdown drains its lanes regardless (see
+        // `DistDriver::shutdown`).
+        if let Some(d) = &self.shared.dist {
+            d.shutdown();
         }
     }
 }
@@ -784,6 +828,16 @@ struct Dispatcher<T: Scalar> {
     /// monotone per shard).
     seq: std::cell::Cell<u64>,
     execs: Vec<CachedExec<T>>,
+    /// Distributed chains kept bound across batches (the dist-path
+    /// sibling of `execs`); eviction unbinds on the driver.
+    dist_chains: Vec<CachedDistChain>,
+}
+
+/// A distributed chain bind kept warm across batches.
+struct CachedDistChain {
+    key: ChainKey,
+    chain: DistChain,
+    last_used: u64,
 }
 
 impl<T: Scalar> Dispatcher<T> {
@@ -1366,6 +1420,13 @@ impl<T: Scalar> Dispatcher<T> {
             in_nnz: chain_in_nnz(head),
             gen: self.shared.registry_gen.load(Ordering::SeqCst),
         };
+        // Distributed execution (`TF_DIST` / `ServerConfig::dist_shards`):
+        // the chain scatters to the process shards instead of leasing
+        // this server's pool, with identical ticket/coalescing/admission
+        // semantics and bitwise-identical outputs.
+        if let Some(dist) = self.shared.dist.clone() {
+            return self.execute_chains_dist(&dist, pri, reqs, stolen, key);
+        }
         // Resolution, planning, and binding need no workers — the pool
         // lease is taken only for the runs below.
         let mut exec = match self.take_exec(&key) {
@@ -1449,6 +1510,155 @@ impl<T: Scalar> Dispatcher<T> {
         }
     }
 
+    /// `execute_chains` over the process-shard driver: bind (or reuse)
+    /// a distributed chain for the batch key, run every batched input
+    /// through the driver, and preserve the local path's control
+    /// semantics — abort cancels at the next control point (the
+    /// driver's scatter points), and a bulk batch serves queued latency
+    /// pairs there on a briefly leased pool (the dist path holds no
+    /// pool lease of its own, so the lease cannot self-deadlock).
+    fn execute_chains_dist(
+        &mut self,
+        dist: &Arc<DistDriver<T>>,
+        pri: Priority,
+        reqs: &[ChainRequest<T>],
+        stolen: bool,
+        key: ChainKey,
+    ) -> Result<Vec<Vec<Dense<T>>>, ServiceError> {
+        let chain = match self.take_dist(&key) {
+            Some(c) => c,
+            None => self.bind_dist_chain(dist, &reqs[0], key.in_rows, key.in_cols)?,
+        };
+        let in_sparse = key.in_sparse;
+        let shared = Arc::clone(&self.shared);
+        let mut outputs: Vec<Vec<Dense<T>>> = Vec::with_capacity(reqs.len());
+        let mut cancelled = false;
+        let mut n_inputs = 0usize;
+        'all: for r in reqs {
+            let inputs: Vec<ChainIn<'_, T>> = if in_sparse {
+                r.xs_sparse.iter().map(ChainIn::Sparse).collect()
+            } else {
+                r.xs.iter().map(ChainIn::Dense).collect()
+            };
+            let mut ds = Vec::with_capacity(inputs.len());
+            for x in inputs {
+                let out = dist.run_controlled(&chain, x, |step| {
+                    if shared.aborting.load(Ordering::SeqCst) {
+                        return StepControl::Cancel;
+                    }
+                    if pri == Priority::Bulk
+                        && step > 0
+                        && shared.queues[self.shard].latency_len() > 0
+                    {
+                        if stolen {
+                            shared.metrics_guard().stolen_chain_yields += 1;
+                        }
+                        let pool = shared.pool.lease();
+                        self.preempt_latency_pairs(&pool);
+                    }
+                    StepControl::Continue
+                });
+                match out {
+                    // The dense-output contract was checked at bind.
+                    Some(p) => ds.push(p.expect_dense()),
+                    None => {
+                        cancelled = true;
+                        break 'all;
+                    }
+                }
+                n_inputs += 1;
+            }
+            outputs.push(ds);
+        }
+        {
+            let mut m = self.shared.metrics_guard();
+            m.dist_chain_requests += reqs.len() as u64;
+            if !cancelled {
+                m.chain_steps += (chain.n_steps() * n_inputs) as u64;
+            }
+        }
+        // Cancelled or not, the bind stays warm for the next batch.
+        self.put_dist(key, chain, dist);
+        if cancelled {
+            Err(ServiceError::Cancelled)
+        } else {
+            Ok(outputs)
+        }
+    }
+
+    /// Resolve operands and bind a chain on the process shards; the
+    /// dense-output service contract is checked against the global plan
+    /// the driver made.
+    fn bind_dist_chain(
+        &self,
+        dist: &DistDriver<T>,
+        head: &ChainRequest<T>,
+        in_rows: usize,
+        in_cols: usize,
+    ) -> Result<DistChain, ServiceError> {
+        let (ops, strategies) = self.resolve_chain_ops(head)?;
+        let input_meta = if let Some(x) = head.xs_sparse.first() {
+            ChainInputMeta::sparse(in_rows, in_cols, x.nnz())
+        } else {
+            ChainInputMeta::dense(in_rows, in_cols)
+        };
+        let n = ops.len();
+        let chain = dist
+            .bind_with(input_meta, ops, strategies, vec![0.0; n], Some(self.shard))
+            .map_err(|e| ServiceError::Rejected(e.to_string()))?;
+        if chain.out_format() != StepOutput::Dense {
+            dist.unbind(chain);
+            return Err(ServiceError::Rejected(
+                "chain must end in a dense output on the service path (force the last SpGEMM \
+                 step's output to Dense or append a FlowADense step)"
+                    .into(),
+            ));
+        }
+        Ok(chain)
+    }
+
+    fn take_dist(&mut self, key: &ChainKey) -> Option<DistChain> {
+        let idx = self.dist_chains.iter().position(|c| &c.key == key)?;
+        Some(self.dist_chains.swap_remove(idx).chain)
+    }
+
+    fn put_dist(&mut self, key: ChainKey, chain: DistChain, dist: &DistDriver<T>) {
+        let cap = self.shared.cfg.exec_cache_capacity;
+        if cap == 0 {
+            dist.unbind(chain);
+            return;
+        }
+        // Same stranded-generation purge as `put_exec`, plus the
+        // explicit driver unbind a dropped local executor doesn't need.
+        let gen = self.shared.registry_gen.load(Ordering::SeqCst);
+        let mut i = 0;
+        while i < self.dist_chains.len() {
+            if self.dist_chains[i].key.gen != gen {
+                let c = self.dist_chains.swap_remove(i);
+                dist.unbind(c.chain);
+            } else {
+                i += 1;
+            }
+        }
+        if key.gen != gen {
+            dist.unbind(chain);
+            return;
+        }
+        if self.dist_chains.len() >= cap {
+            if let Some(idx) = self
+                .dist_chains
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, c)| c.last_used)
+                .map(|(i, _)| i)
+            {
+                let c = self.dist_chains.swap_remove(idx);
+                dist.unbind(c.chain);
+            }
+        }
+        self.dist_chains.push(CachedDistChain { key, chain, last_used: self.seq.get() });
+    }
+
     /// Serve queued latency-tier pair jobs, one at a time, on the
     /// already-leased pool — called at a bulk chain's DAG drain points,
     /// where the pool is idle. Bounded per drain point (`max_coalesce`
@@ -1506,16 +1716,16 @@ impl<T: Scalar> Dispatcher<T> {
         self.shared.release(tenant);
     }
 
-    /// Resolve named operands and bind a fresh chain executor (plan
-    /// served from the shared schedule cache, unfused steps on trivial
-    /// schedules, tuned strips replayed where a pair request already
-    /// timed the key).
-    fn bind_chain(
+    /// Resolve a chain request's named operands into step ops and
+    /// per-step strategies — the shared front half of the local
+    /// ([`Dispatcher::bind_chain`]) and distributed
+    /// ([`Dispatcher::bind_dist_chain`]) bind paths. Warms the
+    /// transposed-pattern cache for SDDMM/attention sampling matrices
+    /// as a side effect.
+    fn resolve_chain_ops(
         &self,
         head: &ChainRequest<T>,
-        in_rows: usize,
-        in_cols: usize,
-    ) -> Result<ChainExec<T>, ServiceError> {
+    ) -> Result<(Vec<ChainStepOp<T>>, Vec<StepStrategy>), ServiceError> {
         let mut ops = Vec::with_capacity(head.steps.len());
         let mut strategies = Vec::with_capacity(head.steps.len());
         let mut sddmm_steps = 0u64;
@@ -1610,6 +1820,20 @@ impl<T: Scalar> Dispatcher<T> {
             m.transpose_cache_hits = th;
             m.transpose_cache_evictions = tev;
         }
+        Ok((ops, strategies))
+    }
+
+    /// Resolve named operands and bind a fresh chain executor (plan
+    /// served from the shared schedule cache, unfused steps on trivial
+    /// schedules, tuned strips replayed where a pair request already
+    /// timed the key).
+    fn bind_chain(
+        &self,
+        head: &ChainRequest<T>,
+        in_rows: usize,
+        in_cols: usize,
+    ) -> Result<ChainExec<T>, ServiceError> {
+        let (ops, strategies) = self.resolve_chain_ops(head)?;
 
         let input_meta = if let Some(x) = head.xs_sparse.first() {
             ChainInputMeta::sparse(in_rows, in_cols, x.nnz())
@@ -1945,6 +2169,65 @@ mod tests {
         let (_, hits2, misses2) = srv.cache_stats();
         assert_eq!((hits2, misses2), (hits1, misses1), "warm exec skips the cache");
         assert_eq!(srv.metrics().chain_requests, 2);
+    }
+
+    #[test]
+    fn dist_routed_chains_match_local_bitwise() {
+        // The same chain requests through a dist-routed server
+        // (`dist_shards = 3`) and a plain one must produce
+        // bitwise-identical outputs; the dist path reuses its warm
+        // chain bind across submissions and reports driver counters.
+        let params = SchedulerParams { ct_size: 64, ..Default::default() };
+        let mk_srv = |shards: usize| {
+            Server::<f64>::with_config(SharedPool::new(2), params, ServerConfig {
+                dist_shards: shards,
+                ..ServerConfig::default()
+            })
+        };
+        let plain = mk_srv(1);
+        let dist = mk_srv(3);
+        let a = Csr::<f64>::with_random_values(gen::poisson2d(16, 16), 1, -1.0, 1.0);
+        let w1 = Dense::<f64>::randn(8, 16, 1);
+        let w2 = Dense::<f64>::randn(16, 4, 2);
+        for s in [&plain, &dist] {
+            s.register_matrix("A", a.clone());
+            s.register_dense("w1", w1.clone());
+            s.register_dense("w2", w2.clone());
+        }
+        let x = Dense::<f64>::randn(256, 8, 3);
+        let step = |w: &str| ChainStepReq {
+            a: "A".into(),
+            operand: StepOperand::Weights(w.into()),
+            strategy: None,
+        };
+        let mk = || ChainRequest {
+            steps: vec![step("w1"), step("w2")],
+            xs: vec![x.clone()],
+            xs_sparse: Vec::new(),
+            strategy: Strategy::TileFusion,
+        };
+        let r_local = plain.chain_blocking(1, Priority::Bulk, mk()).unwrap();
+        let r_dist = dist.chain_blocking(1, Priority::Bulk, mk()).unwrap();
+        assert!(r_local.ds[0]
+            .data
+            .iter()
+            .zip(&r_dist.ds[0].data)
+            .all(|(p, q)| p.to_bits() == q.to_bits()));
+        // Second ride reuses the warm dist bind: no new chain bound.
+        let r2 = dist.chain_blocking(1, Priority::Bulk, mk()).unwrap();
+        assert!(r2.ds[0]
+            .data
+            .iter()
+            .zip(&r_dist.ds[0].data)
+            .all(|(p, q)| p.to_bits() == q.to_bits()));
+        assert_eq!(plain.metrics().dist_chain_requests, 0);
+        let m = dist.metrics();
+        assert_eq!(m.dist_chain_requests, 2);
+        assert_eq!(m.chain_requests, 2);
+        assert_eq!(m.dist.chains_bound, 1, "warm DistChain reused");
+        assert_eq!(m.dist.runs, 2);
+        let m = dist.shutdown();
+        assert_eq!(m.dist.chains_bound, 1);
     }
 
     #[test]
@@ -2498,6 +2781,7 @@ mod tests {
             metrics: Mutex::new(Metrics::default()),
             aborting: AtomicBool::new(false),
             queues,
+            dist: None,
         });
         {
             let mut m = shared.metrics_guard();
@@ -2525,6 +2809,7 @@ mod tests {
             shard: 0,
             seq: std::cell::Cell::new(0),
             execs: Vec::new(),
+            dist_chains: Vec::new(),
         };
 
         // A latency pair waits on the stealing shard's (shard 0's) own
@@ -2613,6 +2898,7 @@ mod tests {
             shard: 0,
             seq: std::cell::Cell::new(0),
             execs: Vec::new(),
+            dist_chains: Vec::new(),
         };
         let c = Dense::<f64>::randn(8, 4, 3);
         let expect_pair = reference(&PairOp::gemm_spmm(&a, &b), &c);

@@ -5,6 +5,7 @@
 
 use super::cache::ScheduleCache;
 use crate::core::{Dense, Scalar};
+use crate::dist::DistStats;
 use crate::exec::chain::{chain_specs, ChainBuilder, ChainStepOp, StepStrategy};
 use crate::exec::{
     AtomicTiling, Fused, Overlapped, PairExec, PairOp, SharedPool, StripMode, TensorStyle,
@@ -230,6 +231,19 @@ pub struct Metrics {
     /// run; the per-request share of a coalesced batch is its whole
     /// batch's service time).
     pub total_service: Duration,
+    /// Inline (unregistered) chain operands that deduplicated against a
+    /// byte-identical operand seen earlier — the request shares the
+    /// interned `Arc` instead of allocating a fresh copy, so coalescing
+    /// and executor caching treat the operands as the same stationary
+    /// data.
+    pub inline_coalesced: u64,
+    /// Chain requests routed through the process-shard driver
+    /// (`TF_DIST` / `ServerConfig::dist_shards`; also counted in
+    /// `chain_requests`).
+    pub dist_chain_requests: u64,
+    /// Distributed-driver counters (scatter/gather/shift activity);
+    /// all-zero unless the server runs with a dist driver.
+    pub dist: DistStats,
 }
 
 /// The coordinator service.
@@ -238,6 +252,41 @@ pub struct Coordinator<T> {
     cache: ScheduleCache,
     matrices: HashMap<String, Arc<Csr<T>>>,
     metrics: Metrics,
+    /// Content-hash intern pool for inline (unregistered) dense chain
+    /// operands — see [`Coordinator::intern_inline`].
+    inline_pool: Vec<(u64, Arc<Dense<T>>)>,
+}
+
+/// Distinct byte-identical inline dense operands remembered per
+/// coordinator (FIFO beyond this).
+const INLINE_POOL_CAP: usize = 32;
+
+/// FNV-1a over an inline operand's shape and exact value bits — the
+/// intern key. `to_f64` is exact for every [`Scalar`] width, so equal
+/// keys plus the [`inline_same`] verify mean bitwise-equal operands.
+fn inline_key<T: Scalar>(d: &Dense<T>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    mix(d.rows as u64);
+    mix(d.cols as u64);
+    for &v in &d.data {
+        mix(v.to_f64().to_bits());
+    }
+    h
+}
+
+/// Bitwise operand equality (hash-collision verify for the intern
+/// pool).
+fn inline_same<T: Scalar>(a: &Dense<T>, b: &Dense<T>) -> bool {
+    a.rows == b.rows
+        && a.cols == b.cols
+        && a.data.len() == b.data.len()
+        && a.data.iter().zip(&b.data).all(|(x, y)| x.to_f64().to_bits() == y.to_f64().to_bits())
 }
 
 impl<T: Scalar> Coordinator<T> {
@@ -257,6 +306,7 @@ impl<T: Scalar> Coordinator<T> {
             cache: ScheduleCache::new(params),
             matrices: HashMap::new(),
             metrics: Metrics::default(),
+            inline_pool: Vec::new(),
         }
     }
 
@@ -278,6 +328,29 @@ impl<T: Scalar> Coordinator<T> {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Intern an inline (unregistered) dense chain operand:
+    /// byte-identical operands submitted across requests share one
+    /// `Arc`, so executor caching and downstream dedup treat them as
+    /// the same stationary data without requiring tenants to register
+    /// every weight (`Metrics::inline_coalesced` counts the hits).
+    /// Cold misses just allocate, exactly as before; the pool drops its
+    /// oldest entry past [`INLINE_POOL_CAP`].
+    fn intern_inline(&mut self, d: Dense<T>) -> Arc<Dense<T>> {
+        let key = inline_key(&d);
+        if let Some((_, hit)) =
+            self.inline_pool.iter().find(|(k, p)| *k == key && inline_same(p, &d))
+        {
+            self.metrics.inline_coalesced += 1;
+            return Arc::clone(hit);
+        }
+        let arc = Arc::new(d);
+        if self.inline_pool.len() >= INLINE_POOL_CAP {
+            self.inline_pool.remove(0);
+        }
+        self.inline_pool.push((key, Arc::clone(&arc)));
+        arc
     }
 
     /// Execute one request (all batched `C`s through one schedule).
@@ -423,12 +496,14 @@ impl<T: Scalar> Coordinator<T> {
                     .ok_or_else(|| anyhow!("unknown matrix {name:?}"))
             };
             let op = match (w, b_dense, b_sparse, spgemm, flow_a_dense, sddmm_k, attention_kv) {
-                (Some(w), None, None, None, None, None, None) => {
-                    ChainStepOp::GemmFlowB { a: matrix(&a, &self.matrices)?, w: Arc::new(w) }
-                }
-                (None, Some(b), None, None, None, None, None) => {
-                    ChainStepOp::GemmFlowC { a: matrix(&a, &self.matrices)?, b: Arc::new(b) }
-                }
+                (Some(w), None, None, None, None, None, None) => ChainStepOp::GemmFlowB {
+                    a: matrix(&a, &self.matrices)?,
+                    w: self.intern_inline(w),
+                },
+                (None, Some(b), None, None, None, None, None) => ChainStepOp::GemmFlowC {
+                    a: matrix(&a, &self.matrices)?,
+                    b: self.intern_inline(b),
+                },
                 (None, None, Some(name), None, None, None, None) => ChainStepOp::SpmmFlowC {
                     a: matrix(&a, &self.matrices)?,
                     b: matrix(&name, &self.matrices)?,
@@ -437,15 +512,16 @@ impl<T: Scalar> Coordinator<T> {
                     ChainStepOp::SpgemmFlow { a: matrix(&a, &self.matrices)?, output: mode }
                 }
                 (None, None, None, None, Some(b), None, None) => {
-                    ChainStepOp::FlowAMulB { b: Arc::new(b) }
+                    ChainStepOp::FlowAMulB { b: self.intern_inline(b) }
                 }
-                (None, None, None, None, None, Some(k), None) => {
-                    ChainStepOp::SddmmQK { s: matrix(&a, &self.matrices)?, k: Arc::new(k) }
-                }
+                (None, None, None, None, None, Some(k), None) => ChainStepOp::SddmmQK {
+                    s: matrix(&a, &self.matrices)?,
+                    k: self.intern_inline(k),
+                },
                 (None, None, None, None, None, None, Some((k, v))) => ChainStepOp::Attention {
                     s: matrix(&a, &self.matrices)?,
-                    k: Arc::new(k),
-                    v: Arc::new(v),
+                    k: self.intern_inline(k),
+                    v: self.intern_inline(v),
                 },
                 _ => bail!(
                     "chain step {s}: exactly one of w / b_dense / b_sparse / spgemm / \
@@ -1232,6 +1308,49 @@ mod tests {
         };
         let err = coord.submit_chain(req).unwrap_err();
         assert!(err.to_string().contains("dense output"), "{err}");
+    }
+
+    #[test]
+    fn inline_operands_intern_by_content() {
+        let mut coord = coord();
+        register_demo(&mut coord);
+        let w = Dense::<f64>::randn(8, 4, 11);
+        let chain = |w: Dense<f64>| ChainRequest {
+            steps: vec![ChainStepRequest { a: "A".into(), w: Some(w), ..Default::default() }],
+            xs: vec![Dense::<f64>::randn(256, 8, 12)],
+            ..Default::default()
+        };
+        let r1 = coord.submit_chain(chain(w.clone())).unwrap();
+        assert_eq!(coord.metrics().inline_coalesced, 0, "first sighting is a cold miss");
+        // The same weight resubmitted byte-identically dedups against
+        // the interned Arc — and the result stays bitwise-identical.
+        let r2 = coord.submit_chain(chain(w.clone())).unwrap();
+        assert_eq!(coord.metrics().inline_coalesced, 1);
+        assert!(r1.ds[0].data.iter().zip(&r2.ds[0].data).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // A single flipped bit misses the intern (bitwise verify, not
+        // just the hash).
+        let mut w2 = w.clone();
+        w2.data[0] += 1e-9;
+        coord.submit_chain(chain(w2)).unwrap();
+        assert_eq!(coord.metrics().inline_coalesced, 1);
+        // Attention K/V intern independently: resubmitting the same
+        // (K, V) pair hits twice more.
+        let s = Csr::<f64>::with_random_values(gen::erdos_renyi(256, 4, 3), 1, -1.0, 1.0);
+        coord.register_matrix("S", s);
+        let (k, v) = (Dense::<f64>::randn(256, 4, 13), Dense::<f64>::randn(256, 6, 14));
+        let att = |k: Dense<f64>, v: Dense<f64>| ChainRequest {
+            steps: vec![ChainStepRequest {
+                a: "S".into(),
+                attention_kv: Some((k, v)),
+                ..Default::default()
+            }],
+            xs: vec![Dense::<f64>::randn(256, 4, 15)],
+            ..Default::default()
+        };
+        coord.submit_chain(att(k.clone(), v.clone())).unwrap();
+        assert_eq!(coord.metrics().inline_coalesced, 1);
+        coord.submit_chain(att(k, v)).unwrap();
+        assert_eq!(coord.metrics().inline_coalesced, 3);
     }
 
     #[test]

@@ -1,0 +1,910 @@
+//! The coordinator side of distributed execution: plan once, scatter
+//! chain binds to the process shards, move the flowing dense panel
+//! between steps, gather the final output.
+//!
+//! The layout is 1.5D ([`super::partition`]): the stationary sparse
+//! operand of each step lives row-sliced on its shard, the flowing
+//! panel is replicated. Between steps the panel moves either by
+//! **broadcast** — workers hand their row blocks back to the driver,
+//! which reassembles and re-scatters (a control point: cancellation and
+//! preemption hook in here) — or by **shift** — a worker-to-worker ring
+//! allgather with no driver involvement. The choice per boundary comes
+//! from [`decide_exchange`]'s alpha-beta model at bind time and is
+//! baked into the bind, so every run of a chain moves data the same
+//! way.
+//!
+//! **Bitwise determinism.** The driver plans the whole chain once with
+//! the global [`ChainPlanner`] and ships *decided* facts (output
+//! formats, shapes, the exchange pattern) in the bind — per-shard
+//! planning never re-decides anything that could diverge from the
+//! single-process plan. Blocks are gathered in shard index order and
+//! ring shifts receive from the fixed left neighbour, so reassembled
+//! panels are byte-identical at any shard count, thread count, or
+//! backend — the property grid in `tests/properties.rs` pins this
+//! against single-process [`ChainExec`](crate::exec::chain::ChainExec)
+//! output for every step kind.
+//!
+//! Small chains skip all of this: when every panel in the chain fits
+//! under [`DistConfig::split_min_bytes`], the chain binds **whole** on
+//! one shard (round-robin or caller-pinned) and runs there end to end —
+//! exactly single-process execution, which keeps independent small
+//! tenants from serializing on the full fan-out.
+
+use super::partition::{csr_slice_rows, uniform_ranges, weighted_ranges};
+use super::transport::{
+    ChainBindSpec, DistMsg, FlowHandling, LocalTransport, Panel, PanelMeta, StepBindSpec,
+    Transport,
+};
+use super::worker::{assemble, worker_main};
+use crate::core::Scalar;
+use crate::exec::chain::{chain_specs, ChainIn, ChainStepOp, StepControl, StepStrategy};
+use crate::scheduler::chain::{
+    unfused_schedule, ChainError, ChainInputMeta, ChainPlanner, ChainStepPlan, StepOutput,
+    StepOutputMode,
+};
+use crate::scheduler::cost::{decide_exchange, PanelExchange};
+use crate::scheduler::place::DEFAULT_SPREAD_MIN_BYTES;
+use crate::scheduler::SchedulerParams;
+use crate::sparse::Csr;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// Configuration of a [`DistDriver`].
+#[derive(Clone, Copy, Debug)]
+pub struct DistConfig {
+    /// Number of process shards (≥ 1).
+    pub shards: usize,
+    /// Threads per shard's pool; `0` divides [`SchedulerParams::n_cores`]
+    /// evenly (the simulation default — shards share the box).
+    pub threads_per_shard: usize,
+    /// Row-split a chain only when some panel in it reaches this size;
+    /// smaller chains bind whole on one shard. `0` row-splits
+    /// everything (the conformance-test setting).
+    pub split_min_bytes: usize,
+    /// Scheduler parameters for the global plan and every shard runtime.
+    pub params: SchedulerParams,
+}
+
+impl DistConfig {
+    pub fn new(shards: usize) -> Self {
+        Self {
+            shards: shards.max(1),
+            threads_per_shard: 0,
+            split_min_bytes: DEFAULT_SPREAD_MIN_BYTES,
+            params: SchedulerParams::default(),
+        }
+    }
+
+    /// Deterministic in-process simulation (`TF_DIST=N`): row-split
+    /// every chain so the distributed code path is always exercised.
+    pub fn simulation(shards: usize) -> Self {
+        Self { split_min_bytes: 0, ..Self::new(shards) }
+    }
+}
+
+/// Where a bound chain lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistPlacement {
+    /// Bound whole on one shard; runs there end to end.
+    Single(usize),
+    /// Every step row-sliced across all shards.
+    RowSplit,
+}
+
+/// Driver-side record of one step of a row-split chain.
+struct DriverStep {
+    /// Ascending partition of the step's output rows, one per shard.
+    ranges: Vec<Range<usize>>,
+    exchange_after: PanelExchange,
+    out_rows: usize,
+    out_cols: usize,
+    out_format: StepOutput,
+}
+
+/// A chain bound on the shards — the handle [`DistDriver::run`] takes.
+/// Dropping it without [`DistDriver::unbind`] leaks the shard-side
+/// state until driver shutdown (same contract as a leaked server bind).
+pub struct DistChain {
+    id: u64,
+    placement: DistPlacement,
+    n_steps: usize,
+    in_rows: usize,
+    in_cols: usize,
+    in_format: StepOutput,
+    /// Per-step facts for panel movement; empty for `Single`.
+    steps: Vec<DriverStep>,
+    out_rows: usize,
+    out_cols: usize,
+    out_format: StepOutput,
+}
+
+impl DistChain {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn placement(&self) -> DistPlacement {
+        self.placement
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    pub fn in_dims(&self) -> (usize, usize) {
+        (self.in_rows, self.in_cols)
+    }
+
+    pub fn in_format(&self) -> StepOutput {
+        self.in_format
+    }
+
+    pub fn out_dims(&self) -> (usize, usize) {
+        (self.out_rows, self.out_cols)
+    }
+
+    pub fn out_format(&self) -> StepOutput {
+        self.out_format
+    }
+}
+
+/// Counters of distributed activity since driver start.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DistStats {
+    pub chains_bound: u64,
+    pub row_split_binds: u64,
+    pub runs: u64,
+    pub row_split_runs: u64,
+    /// Runs abandoned by the control hook at a control point.
+    pub cancelled: u64,
+    /// Driver→worker panel scatters (chain inputs and re-broadcasts).
+    pub panels_broadcast: u64,
+    /// Worker-to-worker ring exchanges (counted once per boundary).
+    pub panels_shifted: u64,
+    /// Transport messages sent, all lanes.
+    pub transport_msgs: u64,
+    /// Transport payload bytes (panels and row blocks).
+    pub transport_bytes: u64,
+}
+
+/// The coordinator endpoint: owns the transport and the shard worker
+/// threads, binds chains, and drives runs.
+///
+/// Thread safety: `bind`/`run`/`unbind` take `&self` and may be called
+/// from many threads. Each operation holds its target shards' lane
+/// locks (always acquired in ascending shard order) for its whole
+/// scatter/gather conversation, so fan-outs never interleave on a lane
+/// — and [`DistDriver::shutdown`] acquires *all* lanes first, which
+/// drains every in-flight fan-out before the shutdown message hits any
+/// worker.
+pub struct DistDriver<T: Scalar> {
+    transport: Arc<LocalTransport<T>>,
+    /// One lock per shard, guarding that shard's driver-lane
+    /// conversation.
+    lanes: Vec<Mutex<()>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    shards: usize,
+    split_min_bytes: usize,
+    params: SchedulerParams,
+    next_chain: AtomicU64,
+    next_home: AtomicU64,
+    chains_bound: AtomicU64,
+    row_split_binds: AtomicU64,
+    runs: AtomicU64,
+    row_split_runs: AtomicU64,
+    cancelled: AtomicU64,
+    panels_broadcast: AtomicU64,
+    panels_shifted: AtomicU64,
+    down: AtomicBool,
+}
+
+/// Dense panel bytes for the exchange/placement models.
+fn panel_bytes<T: Scalar>(rows: usize, cols: usize, format: StepOutput, nnz: usize) -> usize {
+    match format {
+        StepOutput::Dense => rows * cols * T::BYTES,
+        StepOutput::SparseCsr => nnz * (T::BYTES + 4) + (rows + 1) * 8,
+    }
+}
+
+fn step_nnz_est(st: &ChainStepPlan) -> usize {
+    match st.output {
+        StepOutput::Dense => st.out_rows * st.out_cols,
+        StepOutput::SparseCsr => {
+            (st.est_density * (st.out_rows * st.out_cols) as f64).ceil() as usize
+        }
+    }
+}
+
+impl<T: Scalar> DistDriver<T> {
+    /// Spawn `cfg.shards` worker threads, each a full runtime instance,
+    /// wired through a fresh [`LocalTransport`].
+    pub fn new(cfg: DistConfig) -> Self {
+        let shards = cfg.shards.max(1);
+        let threads = if cfg.threads_per_shard == 0 {
+            (cfg.params.n_cores / shards).max(1)
+        } else {
+            cfg.threads_per_shard
+        };
+        let transport = Arc::new(LocalTransport::new(shards));
+        let workers = (0..shards)
+            .map(|shard| {
+                let t: Arc<dyn Transport<T>> = transport.clone();
+                let params = cfg.params;
+                std::thread::Builder::new()
+                    .name(format!("tf-dist-{shard}"))
+                    .spawn(move || worker_main::<T>(shard, threads, params, t))
+                    .expect("spawn dist shard worker")
+            })
+            .collect();
+        Self {
+            transport,
+            lanes: (0..shards).map(|_| Mutex::new(())).collect(),
+            workers: Mutex::new(workers),
+            shards,
+            split_min_bytes: cfg.split_min_bytes,
+            params: cfg.params,
+            next_chain: AtomicU64::new(0),
+            next_home: AtomicU64::new(0),
+            chains_bound: AtomicU64::new(0),
+            row_split_binds: AtomicU64::new(0),
+            runs: AtomicU64::new(0),
+            row_split_runs: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            panels_broadcast: AtomicU64::new(0),
+            panels_shifted: AtomicU64::new(0),
+            down: AtomicBool::new(false),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards
+    }
+
+    fn driver_id(&self) -> usize {
+        self.shards
+    }
+
+    /// Lock the named shards' lanes in ascending order (the global lock
+    /// order — every multi-lane holder uses it, so fan-outs can't
+    /// deadlock each other or shutdown).
+    fn lock_lanes(&self, shards: impl Iterator<Item = usize>) -> Vec<MutexGuard<'_, ()>> {
+        shards.map(|k| self.lanes[k].lock().expect("dist lane poisoned")).collect()
+    }
+
+    /// Bind a chain with default per-step knobs.
+    pub fn bind(
+        &self,
+        input: ChainInputMeta,
+        ops: Vec<ChainStepOp<T>>,
+    ) -> Result<DistChain, ChainError> {
+        let n = ops.len();
+        self.bind_with(input, ops, vec![StepStrategy::Fused; n], vec![0.0; n], None)
+    }
+
+    /// Bind a chain: plan globally, choose a placement, scatter the
+    /// per-shard bind specs, and collect the acknowledgements. `home`
+    /// pins a whole-chain placement to a shard (tenant affinity);
+    /// `None` round-robins. Strategies and drop tolerances are
+    /// per-step, as in
+    /// [`ChainBuilder`](crate::exec::chain::ChainBuilder).
+    pub fn bind_with(
+        &self,
+        input: ChainInputMeta,
+        ops: Vec<ChainStepOp<T>>,
+        strategies: Vec<StepStrategy>,
+        drop_tols: Vec<f64>,
+        home: Option<usize>,
+    ) -> Result<DistChain, ChainError> {
+        assert_eq!(ops.len(), strategies.len(), "one strategy per step");
+        assert_eq!(ops.len(), drop_tols.len(), "one drop tolerance per step");
+        assert!(!self.down.load(Ordering::SeqCst), "driver is shut down");
+        let specs = chain_specs(&ops, input.rows, input.cols)?;
+        let planner = ChainPlanner::new(self.params);
+        let nc = self.params.n_cores;
+        // Shapes/formats/density are all we need from the plan; the
+        // cheap unfused schedule avoids inspecting operand patterns.
+        let plan = planner.plan_with_input(input, &specs, |_, op| {
+            Arc::new(unfused_schedule(op.a, nc))
+        })?;
+
+        let mut max_panel = panel_bytes::<T>(input.rows, input.cols, input.format, input.nnz);
+        for st in &plan.steps {
+            let b = panel_bytes::<T>(st.out_rows, st.out_cols, st.output, step_nnz_est(st));
+            max_panel = max_panel.max(b);
+        }
+        let id = self.next_chain.fetch_add(1, Ordering::Relaxed);
+        let in_meta = PanelMeta {
+            rows: input.rows,
+            cols: input.cols,
+            format: input.format,
+            nnz_est: input.nnz,
+        };
+        let (out_rows, out_cols) = plan.out_dims();
+        let out_format = plan.out_format();
+        self.chains_bound.fetch_add(1, Ordering::Relaxed);
+
+        if self.shards <= 1 || max_panel < self.split_min_bytes {
+            // Whole-chain placement: single-process execution on one
+            // shard's runtime. SpGEMM output modes are still forced from
+            // the global plan — the shard's pool is smaller than the
+            // driver's params, and an `Auto` re-decision there could
+            // pick a different format than this bind advertises.
+            let ops: Vec<ChainStepOp<T>> = ops
+                .iter()
+                .zip(&plan.steps)
+                .map(|(op, st)| match op {
+                    ChainStepOp::SpgemmFlow { a, .. } => ChainStepOp::SpgemmFlow {
+                        a: Arc::clone(a),
+                        output: match st.output {
+                            StepOutput::Dense => StepOutputMode::Dense,
+                            StepOutput::SparseCsr => StepOutputMode::SparseCsr,
+                        },
+                    },
+                    _ => op.clone(),
+                })
+                .collect();
+            let k = home
+                .map(|h| h % self.shards)
+                .unwrap_or_else(|| {
+                    self.next_home.fetch_add(1, Ordering::Relaxed) as usize % self.shards
+                });
+            let spec = ChainBindSpec::Whole { ops, strategies, drop_tols, input: in_meta };
+            let _g = self.lock_lanes(std::iter::once(k));
+            self.transport.send(self.driver_id(), k, DistMsg::Bind {
+                chain: id,
+                spec: Box::new(spec),
+            });
+            match self.transport.recv(self.driver_id(), k) {
+                DistMsg::Bound { chain, err } => {
+                    debug_assert_eq!(chain, id);
+                    if let Some(e) = err {
+                        return Err(ChainError::new(format!("shard {k}: {e}")));
+                    }
+                }
+                _ => unreachable!("bind acknowledgement expected"),
+            }
+            return Ok(DistChain {
+                id,
+                placement: DistPlacement::Single(k),
+                n_steps: plan.steps.len(),
+                in_rows: input.rows,
+                in_cols: input.cols,
+                in_format: input.format,
+                steps: Vec::new(),
+                out_rows,
+                out_cols,
+                out_format,
+            });
+        }
+
+        // Row-split placement: slice every step for every shard.
+        self.row_split_binds.fetch_add(1, Ordering::Relaxed);
+        let n = self.shards;
+        let mut driver_steps = Vec::with_capacity(ops.len());
+        let mut shard_steps: Vec<Vec<StepBindSpec<T>>> =
+            (0..n).map(|_| Vec::with_capacity(ops.len())).collect();
+        for (s, (op, st)) in ops.iter().zip(&plan.steps).enumerate() {
+            let (ranges, flow) = split_ranges(op, st, n);
+            let last = s + 1 == ops.len();
+            let out_bytes =
+                panel_bytes::<T>(st.out_rows, st.out_cols, st.output, step_nnz_est(st));
+            // The final gather is always driver-bound; interior
+            // boundaries follow the alpha-beta model.
+            let exchange_after = if last {
+                PanelExchange::Broadcast
+            } else {
+                decide_exchange(out_bytes, n)
+            };
+            let forced = match st.output {
+                StepOutput::Dense => StepOutputMode::Dense,
+                StepOutput::SparseCsr => StepOutputMode::SparseCsr,
+            };
+            for (k, steps) in shard_steps.iter_mut().enumerate() {
+                steps.push(StepBindSpec {
+                    op: slice_op(op, ranges[k].clone(), forced),
+                    ranges: ranges.clone(),
+                    output: forced,
+                    out_rows: st.out_rows,
+                    out_cols: st.out_cols,
+                    out_format: st.output,
+                    out_nnz_est: step_nnz_est(st),
+                    strategy: strategies[s],
+                    drop_tol: drop_tols[s],
+                    flow,
+                    exchange_after,
+                });
+            }
+            driver_steps.push(DriverStep {
+                ranges,
+                exchange_after,
+                out_rows: st.out_rows,
+                out_cols: st.out_cols,
+                out_format: st.output,
+            });
+        }
+
+        let _g = self.lock_lanes(0..n);
+        for (k, steps) in shard_steps.into_iter().enumerate() {
+            let spec = ChainBindSpec::Split { steps, input: in_meta };
+            self.transport.send(self.driver_id(), k, DistMsg::Bind {
+                chain: id,
+                spec: Box::new(spec),
+            });
+        }
+        let mut first_err = None;
+        for k in 0..n {
+            match self.transport.recv(self.driver_id(), k) {
+                DistMsg::Bound { chain, err } => {
+                    debug_assert_eq!(chain, id);
+                    if let (Some(e), None) = (err, &first_err) {
+                        first_err = Some(format!("shard {k}: {e}"));
+                    }
+                }
+                _ => unreachable!("bind acknowledgement expected"),
+            }
+        }
+        if let Some(e) = first_err {
+            // Roll back the shards that did bind.
+            for k in 0..n {
+                self.transport.send(self.driver_id(), k, DistMsg::Unbind { chain: id });
+            }
+            return Err(ChainError::new(e));
+        }
+        Ok(DistChain {
+            id,
+            placement: DistPlacement::RowSplit,
+            n_steps: plan.steps.len(),
+            in_rows: input.rows,
+            in_cols: input.cols,
+            in_format: input.format,
+            steps: driver_steps,
+            out_rows,
+            out_cols,
+            out_format,
+        })
+    }
+
+    /// Run a bound chain to completion.
+    pub fn run(&self, chain: &DistChain, x: ChainIn<'_, T>) -> Panel<T> {
+        self.run_controlled(chain, x, |_| StepControl::Continue)
+            .expect("unconditional Continue cannot cancel")
+    }
+
+    /// Run with a cancellation hook, mirroring
+    /// [`ChainExec::run_controlled`](crate::exec::chain::ChainExec::run_controlled):
+    /// `ctrl(s)` fires before step `s` at every **control point** — the
+    /// initial scatter and each broadcast boundary (shift segments run
+    /// worker-side and cannot be interrupted; a whole-chain placement's
+    /// only control point is `ctrl(0)`). `Cancel` abandons the run with
+    /// no messages in flight and returns `None`.
+    pub fn run_controlled(
+        &self,
+        chain: &DistChain,
+        x: ChainIn<'_, T>,
+        mut ctrl: impl FnMut(usize) -> StepControl,
+    ) -> Option<Panel<T>> {
+        assert_eq!(x.dims(), (chain.in_rows, chain.in_cols), "chain input shape");
+        assert!(!self.down.load(Ordering::SeqCst), "driver is shut down");
+        self.runs.fetch_add(1, Ordering::Relaxed);
+        // The scatter copy — an owned panel, as a wire transport would
+        // ship it.
+        let panel = match x {
+            ChainIn::Dense(d) => {
+                assert_eq!(chain.in_format, StepOutput::Dense, "chain input format");
+                Panel::Dense(d.clone())
+            }
+            ChainIn::Sparse(c) => {
+                assert_eq!(chain.in_format, StepOutput::SparseCsr, "chain input format");
+                Panel::Sparse(c.clone())
+            }
+        };
+        match chain.placement {
+            DistPlacement::Single(k) => {
+                if ctrl(0) == StepControl::Cancel {
+                    self.cancelled.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                let _g = self.lock_lanes(std::iter::once(k));
+                self.panels_broadcast.fetch_add(1, Ordering::Relaxed);
+                self.transport.send(self.driver_id(), k, DistMsg::RunWhole {
+                    chain: chain.id,
+                    panel: Arc::new(panel),
+                });
+                match self.transport.recv(self.driver_id(), k) {
+                    DistMsg::Output { chain: c, panel } => {
+                        debug_assert_eq!(c, chain.id);
+                        Some(panel)
+                    }
+                    _ => unreachable!("whole-chain output expected"),
+                }
+            }
+            DistPlacement::RowSplit => self.run_split(chain, panel, &mut ctrl),
+        }
+    }
+
+    fn run_split(
+        &self,
+        chain: &DistChain,
+        input: Panel<T>,
+        ctrl: &mut dyn FnMut(usize) -> StepControl,
+    ) -> Option<Panel<T>> {
+        self.row_split_runs.fetch_add(1, Ordering::Relaxed);
+        if ctrl(0) == StepControl::Cancel {
+            self.cancelled.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let n = self.shards;
+        let n_steps = chain.steps.len();
+        let _g = self.lock_lanes(0..n);
+        let mut step = 0usize;
+        let mut panel = Arc::new(input);
+        loop {
+            self.panels_broadcast.fetch_add(1, Ordering::Relaxed);
+            for k in 0..n {
+                self.transport.send(self.driver_id(), k, DistMsg::Run {
+                    chain: chain.id,
+                    step,
+                    panel: Arc::clone(&panel),
+                });
+            }
+            // Workers run autonomously through shift boundaries and
+            // report at the first broadcast-or-final step.
+            let stop = (step..n_steps)
+                .find(|&s| {
+                    s + 1 == n_steps
+                        || chain.steps[s].exchange_after == PanelExchange::Broadcast
+                })
+                .expect("a final step always stops the segment");
+            self.panels_shifted.fetch_add((stop - step) as u64, Ordering::Relaxed);
+            // Gather in shard index order — the deterministic part of
+            // the reassembly.
+            let blocks: Vec<Panel<T>> = (0..n)
+                .map(|k| match self.transport.recv(self.driver_id(), k) {
+                    DistMsg::Block { chain: c, step: s, shard, panel } => {
+                        debug_assert_eq!((c, s, shard), (chain.id, stop, k), "gather order");
+                        panel
+                    }
+                    _ => unreachable!("row block expected at a gather point"),
+                })
+                .collect();
+            let st = &chain.steps[stop];
+            let full = assemble(
+                &st.ranges,
+                st.out_rows,
+                st.out_cols,
+                st.out_format,
+                blocks.into_iter(),
+            );
+            if stop + 1 == n_steps {
+                return Some(full);
+            }
+            if ctrl(stop + 1) == StepControl::Cancel {
+                self.cancelled.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            panel = Arc::new(full);
+            step = stop + 1;
+        }
+    }
+
+    /// Drop a chain's shard-side state.
+    pub fn unbind(&self, chain: DistChain) {
+        if self.down.load(Ordering::SeqCst) {
+            return; // workers are gone; their state went with them
+        }
+        match chain.placement {
+            DistPlacement::Single(k) => {
+                let _g = self.lock_lanes(std::iter::once(k));
+                self.transport.send(self.driver_id(), k, DistMsg::Unbind { chain: chain.id });
+            }
+            DistPlacement::RowSplit => {
+                let _g = self.lock_lanes(0..self.shards);
+                for k in 0..self.shards {
+                    self.transport.send(self.driver_id(), k, DistMsg::Unbind { chain: chain.id });
+                }
+            }
+        }
+    }
+
+    pub fn stats(&self) -> DistStats {
+        DistStats {
+            chains_bound: self.chains_bound.load(Ordering::Relaxed),
+            row_split_binds: self.row_split_binds.load(Ordering::Relaxed),
+            runs: self.runs.load(Ordering::Relaxed),
+            row_split_runs: self.row_split_runs.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            panels_broadcast: self.panels_broadcast.load(Ordering::Relaxed),
+            panels_shifted: self.panels_shifted.load(Ordering::Relaxed),
+            transport_msgs: self.transport.msg_count(),
+            transport_bytes: self.transport.byte_count(),
+        }
+    }
+
+    /// Stop the shard workers and join their threads. Idempotent.
+    ///
+    /// Order matters: every in-flight bind/run/unbind fan-out holds its
+    /// lane locks for the whole conversation, so acquiring **all**
+    /// lanes first drains them — without this, a shutdown racing a
+    /// scatter could interleave `Shutdown` between a fan-out's sends
+    /// and kill a worker that still owes (or is owed) messages,
+    /// poisoning the run and panicking the transport. The regression
+    /// test `shutdown_drains_inflight_runs` pins this.
+    pub fn shutdown(&self) {
+        if self.down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        {
+            let _g = self.lock_lanes(0..self.shards);
+            for k in 0..self.shards {
+                self.transport.send(self.driver_id(), k, DistMsg::Shutdown);
+            }
+        }
+        let workers = std::mem::take(&mut *self.workers.lock().expect("worker registry"));
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl<T: Scalar> Drop for DistDriver<T> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The output-row partition and flow handling of one step.
+fn split_ranges<T: Scalar>(
+    op: &ChainStepOp<T>,
+    st: &ChainStepPlan,
+    n: usize,
+) -> (Vec<Range<usize>>, FlowHandling) {
+    match op {
+        // Stationary sparse operand: weight the split by its rows, feed
+        // the full panel.
+        ChainStepOp::GemmFlowB { a, .. }
+        | ChainStepOp::GemmFlowC { a, .. }
+        | ChainStepOp::SpmmFlowC { a, .. }
+        | ChainStepOp::SpgemmFlow { a, .. }
+        | ChainStepOp::SpmmFlow { a } => (weighted_ranges(&a.pattern, n), FlowHandling::Full),
+        // Sampling pattern owns the output rows *and* the panel rows:
+        // weight by it, slice the panel.
+        ChainStepOp::SddmmQK { s, .. } | ChainStepOp::Attention { s, .. } => {
+            (weighted_ranges(&s.pattern, n), FlowHandling::SliceRows)
+        }
+        // No stationary pattern to weigh.
+        ChainStepOp::FlowAMulB { .. } => {
+            (uniform_ranges(st.out_rows, n), FlowHandling::SliceRows)
+        }
+        // Replicated compute; the ranges only split the contribution.
+        ChainStepOp::AttentionGrad { .. } => {
+            (uniform_ranges(st.out_rows, n), FlowHandling::Replicated)
+        }
+    }
+}
+
+/// One shard's operands: row-slice the stationary side where the kind
+/// allows; force the globally decided output mode so no shard re-decides
+/// `Auto` on its slice.
+fn slice_op<T: Scalar>(
+    op: &ChainStepOp<T>,
+    r: Range<usize>,
+    forced: StepOutputMode,
+) -> ChainStepOp<T> {
+    let slice = |m: &Arc<Csr<T>>| Arc::new(csr_slice_rows(m, r.clone()));
+    match op {
+        ChainStepOp::GemmFlowB { a, w } => {
+            ChainStepOp::GemmFlowB { a: slice(a), w: Arc::clone(w) }
+        }
+        ChainStepOp::GemmFlowC { a, b } => {
+            ChainStepOp::GemmFlowC { a: slice(a), b: Arc::clone(b) }
+        }
+        ChainStepOp::SpmmFlowC { a, b } => {
+            ChainStepOp::SpmmFlowC { a: slice(a), b: Arc::clone(b) }
+        }
+        ChainStepOp::SpgemmFlow { a, .. } => {
+            ChainStepOp::SpgemmFlow { a: slice(a), output: forced }
+        }
+        ChainStepOp::FlowAMulB { b } => ChainStepOp::FlowAMulB { b: Arc::clone(b) },
+        ChainStepOp::SddmmQK { s, k } => {
+            ChainStepOp::SddmmQK { s: slice(s), k: Arc::clone(k) }
+        }
+        ChainStepOp::Attention { s, k, v } => {
+            ChainStepOp::Attention { s: slice(s), k: Arc::clone(k), v: Arc::clone(v) }
+        }
+        ChainStepOp::SpmmFlow { a } => ChainStepOp::SpmmFlow { a: slice(a) },
+        // Replicated: ships whole.
+        ChainStepOp::AttentionGrad { .. } => op.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Dense;
+    use crate::exec::chain::ChainBuilder;
+    use crate::exec::ThreadPool;
+    use crate::sparse::gen;
+
+    fn params() -> SchedulerParams {
+        SchedulerParams { ct_size: 64, n_cores: 4, ..Default::default() }
+    }
+
+    fn demo_a(n: usize) -> Arc<Csr<f64>> {
+        Arc::new(Csr::<f64>::with_random_values(gen::erdos_renyi(n, 6, 3), 1, -1.0, 1.0))
+    }
+
+    /// Single-process reference output of a 2-step SpMM chain.
+    fn local_reference(a: &Arc<Csr<f64>>, x: &Dense<f64>) -> Dense<f64> {
+        let mut exec = ChainBuilder::dense(x.rows, x.cols)
+            .step(ChainStepOp::SpmmFlow { a: Arc::clone(a) })
+            .step(ChainStepOp::SpmmFlow { a: Arc::clone(a) })
+            .build(params())
+            .unwrap();
+        let pool = ThreadPool::new(3);
+        let mut y = Dense::zeros(x.rows, x.cols);
+        exec.run(&pool, x, &mut y);
+        y
+    }
+
+    #[test]
+    fn small_chain_binds_whole_and_matches_local() {
+        let a = demo_a(96);
+        let x = Dense::<f64>::randn(96, 8, 5);
+        let cfg = DistConfig { params: params(), ..DistConfig::new(2) };
+        let driver: DistDriver<f64> = DistDriver::new(cfg);
+        let chain = driver
+            .bind(ChainInputMeta::dense(96, 8), vec![
+                ChainStepOp::SpmmFlow { a: Arc::clone(&a) },
+                ChainStepOp::SpmmFlow { a: Arc::clone(&a) },
+            ])
+            .unwrap();
+        // Panels are far below the default split threshold.
+        assert!(matches!(chain.placement(), DistPlacement::Single(_)));
+        let y = driver.run(&chain, ChainIn::Dense(&x)).expect_dense();
+        let expect = local_reference(&a, &x);
+        assert!(y.data.iter().zip(&expect.data).all(|(p, q)| p.to_bits() == q.to_bits()));
+        let s = driver.stats();
+        assert_eq!((s.chains_bound, s.row_split_binds, s.runs, s.row_split_runs), (1, 0, 1, 0));
+        driver.unbind(chain);
+        driver.shutdown();
+    }
+
+    #[test]
+    fn home_pin_wraps_to_shard_count() {
+        let a = demo_a(64);
+        let driver: DistDriver<f64> =
+            DistDriver::new(DistConfig { params: params(), ..DistConfig::new(2) });
+        let chain = driver
+            .bind_with(
+                ChainInputMeta::dense(64, 4),
+                vec![ChainStepOp::SpmmFlow { a }],
+                vec![StepStrategy::Fused],
+                vec![0.0],
+                Some(5),
+            )
+            .unwrap();
+        assert_eq!(chain.placement(), DistPlacement::Single(1));
+        driver.unbind(chain);
+    }
+
+    #[test]
+    fn row_split_matches_local_bitwise() {
+        let a = demo_a(96);
+        let x = Dense::<f64>::randn(96, 8, 5);
+        let expect = local_reference(&a, &x);
+        for shards in 2..=4 {
+            let cfg = DistConfig { params: params(), ..DistConfig::simulation(shards) };
+            let driver: DistDriver<f64> = DistDriver::new(cfg);
+            let chain = driver
+                .bind(ChainInputMeta::dense(96, 8), vec![
+                    ChainStepOp::SpmmFlow { a: Arc::clone(&a) },
+                    ChainStepOp::SpmmFlow { a: Arc::clone(&a) },
+                ])
+                .unwrap();
+            assert_eq!(chain.placement(), DistPlacement::RowSplit);
+            let y = driver.run(&chain, ChainIn::Dense(&x)).expect_dense();
+            assert!(
+                y.data.iter().zip(&expect.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "shards={shards}"
+            );
+            let s = driver.stats();
+            assert_eq!((s.row_split_binds, s.row_split_runs), (1, 1));
+            // Interior boundaries each moved the panel exactly one way:
+            // scatters (1 initial + one per interior broadcast) plus
+            // ring shifts add up to one move per step.
+            assert_eq!(s.panels_shifted + s.panels_broadcast, chain.n_steps() as u64, "shards={shards}");
+            driver.unbind(chain);
+        }
+    }
+
+    #[test]
+    fn cancel_fires_at_control_points_only() {
+        let a = demo_a(96);
+        let x = Dense::<f64>::randn(96, 8, 5);
+        let cfg = DistConfig { params: params(), ..DistConfig::simulation(2) };
+        let driver: DistDriver<f64> = DistDriver::new(cfg);
+        let chain = driver
+            .bind(ChainInputMeta::dense(96, 8), vec![
+                ChainStepOp::SpmmFlow { a: Arc::clone(&a) },
+                ChainStepOp::SpmmFlow { a: Arc::clone(&a) },
+            ])
+            .unwrap();
+        let out = driver.run_controlled(&chain, ChainIn::Dense(&x), |_| StepControl::Cancel);
+        assert!(out.is_none());
+        assert_eq!(driver.stats().cancelled, 1);
+        // The driver and workers stay healthy after a cancel.
+        let y = driver.run(&chain, ChainIn::Dense(&x)).expect_dense();
+        let expect = local_reference(&a, &x);
+        assert!(y.data.iter().zip(&expect.data).all(|(p, q)| p.to_bits() == q.to_bits()));
+        driver.unbind(chain);
+    }
+
+    /// Regression: `shutdown` must drain in-flight scatter/gather
+    /// fan-outs before dropping the shard workers. A shutdown issued
+    /// while a run sits at a control point blocks on the run's lane
+    /// locks; the run then completes normally — bitwise-correct output,
+    /// no poisoned lanes, clean joins. (Without the all-lanes acquire in
+    /// `shutdown`, the `Shutdown` message could interleave into the
+    /// run's conversation and kill a worker that still owes row
+    /// blocks.)
+    #[test]
+    fn shutdown_drains_inflight_runs() {
+        let a = demo_a(96);
+        let x = Dense::<f64>::randn(96, 8, 5);
+        // 4 shards and a small panel: the alpha-beta model picks
+        // Broadcast for the interior boundaries, so `ctrl(1)` is a
+        // deterministic control point to park the run at.
+        let cfg = DistConfig { params: params(), ..DistConfig::simulation(4) };
+        let driver: DistDriver<f64> = DistDriver::new(cfg);
+        let chain = driver
+            .bind(ChainInputMeta::dense(96, 8), vec![
+                ChainStepOp::SpmmFlow { a: Arc::clone(&a) },
+                ChainStepOp::SpmmFlow { a: Arc::clone(&a) },
+                ChainStepOp::SpmmFlow { a: Arc::clone(&a) },
+            ])
+            .unwrap();
+        let expect3 = {
+            let mut exec = ChainBuilder::dense(96, 8)
+                .step(ChainStepOp::SpmmFlow { a: Arc::clone(&a) })
+                .step(ChainStepOp::SpmmFlow { a: Arc::clone(&a) })
+                .step(ChainStepOp::SpmmFlow { a: Arc::clone(&a) })
+                .build(params())
+                .unwrap();
+            let pool = ThreadPool::new(3);
+            let mut y = Dense::zeros(96, 8);
+            exec.run(&pool, &x, &mut y);
+            y
+        };
+        let (mid_tx, mid_rx) = std::sync::mpsc::channel::<()>();
+        let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+        let y = std::thread::scope(|scope| {
+            let (driver, chain, x) = (&driver, &chain, &x);
+            let runner = scope.spawn(move || {
+                let mut parked = false;
+                driver
+                    .run_controlled(chain, ChainIn::Dense(x), move |step| {
+                        if step >= 1 && !parked {
+                            parked = true;
+                            mid_tx.send(()).unwrap();
+                            go_rx.recv().unwrap();
+                        }
+                        StepControl::Continue
+                    })
+                    .expect("run completes despite concurrent shutdown")
+            });
+            mid_rx.recv().unwrap();
+            let shutter = scope.spawn(move || driver.shutdown());
+            // Give shutdown a moment to reach the lane locks, then
+            // release the run; shutdown must block there rather than
+            // kill the workers mid-conversation.
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            go_tx.send(()).unwrap();
+            shutter.join().unwrap();
+            runner.join().unwrap()
+        });
+        let y = y.expect_dense();
+        assert!(y.data.iter().zip(&expect3.data).all(|(p, q)| p.to_bits() == q.to_bits()));
+    }
+}

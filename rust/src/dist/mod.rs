@@ -1,0 +1,61 @@
+//! Distributed-memory execution: process shards behind a message layer.
+//!
+//! This subsystem generalizes the NUMA node shards of
+//! [`crate::topology`] to **process shards** that share no memory: each
+//! shard is a full runtime instance (thread pool + schedule cache)
+//! behind a [`Transport`], and a driver endpoint plans chains globally,
+//! scatters row-sliced binds, moves the flowing panel between steps,
+//! and gathers outputs. The layout is the 1.5D algorithm of the
+//! distributed-sparse-kernels literature: the stationary sparse operand
+//! is partitioned into contiguous weight-balanced row blocks
+//! ([`partition`]), the flowing dense panel is replicated — broadcast
+//! through the driver or ring-shifted worker-to-worker, whichever the
+//! alpha-beta model ([`crate::scheduler::cost::decide_exchange`]) says
+//! is cheaper for the panel size.
+//!
+//! Everything ships as owned values over named FIFO lanes
+//! ([`transport`]), so the in-process [`LocalTransport`] and a future
+//! TCP transport run the identical protocol — and because receive
+//! order is protocol-determined (gathers in shard index order, ring
+//! receives from the fixed left neighbour), sharded execution is
+//! **bitwise-equal** to single-process execution at any shard count,
+//! thread count, or backend.
+//!
+//! `TF_DIST=N` (see [`crate::topology::dist_shards`]) asks the
+//! coordinator server to route chains through an `N`-shard in-process
+//! simulation — the CI-friendly way to soak the distributed path.
+//!
+//! ```no_run
+//! use tile_fusion::dist::{DistConfig, DistDriver};
+//! use tile_fusion::exec::chain::{ChainIn, ChainStepOp};
+//! use tile_fusion::scheduler::chain::ChainInputMeta;
+//! use tile_fusion::sparse::{gen, Csr};
+//! use tile_fusion::core::Dense;
+//! use std::sync::Arc;
+//!
+//! let a = Arc::new(Csr::<f64>::with_random_values(
+//!     gen::erdos_renyi(1024, 8, 7), 1, -1.0, 1.0));
+//! let x = Dense::<f64>::randn(1024, 64, 2);
+//! let driver: DistDriver<f64> = DistDriver::new(DistConfig::simulation(4));
+//! let chain = driver
+//!     .bind(ChainInputMeta::dense(1024, 64), vec![
+//!         ChainStepOp::SpmmFlow { a: a.clone() },
+//!         ChainStepOp::SpmmFlow { a },
+//!     ])
+//!     .unwrap();
+//! let y = driver.run(&chain, ChainIn::Dense(&x)).expect_dense();
+//! driver.unbind(chain);
+//! # let _ = y;
+//! ```
+
+pub mod driver;
+pub mod partition;
+pub mod transport;
+pub mod worker;
+
+pub use driver::{DistChain, DistConfig, DistDriver, DistPlacement, DistStats};
+pub use partition::{
+    assemble_dense, concat_row_blocks, csr_slice_rows, dense_slice_rows, uniform_ranges,
+    weighted_ranges,
+};
+pub use transport::{FlowHandling, LocalTransport, Panel, Transport};

@@ -1,0 +1,249 @@
+//! Row-block partitioning of the stationary operand across process
+//! shards — the "1.5D" layout of *Distributed-Memory Sparse Kernels for
+//! Machine Learning*: the sparse operand is split into contiguous row
+//! blocks that stay put on their shard, the flowing dense panel is
+//! replicated (broadcast or ring-shifted between steps), and each shard
+//! produces exactly the output rows of its block.
+//!
+//! Partitioning is **weight-balanced**: each output row is charged its
+//! stationary nonzeros (plus a constant) and the split points equalize
+//! the prefix weight, so a heavy-tailed graph does not pile all its hubs
+//! onto one shard. For uniform-weight steps (no stationary pattern to
+//! charge) the split degenerates to [`split_rows`]' equal-rows layout,
+//! and `weighted_ranges` reuses it for the empty/degenerate cases so the
+//! two partitioners never disagree on boundaries.
+//!
+//! The slicing helpers ([`csr_slice_rows`], [`concat_row_blocks`],
+//! [`dense_slice_rows`], [`assemble_dense`]) are the data plane of that
+//! layout: slices are plain copies (a shard's block must be shippable to
+//! another process, so no borrowing), and because the ranges form an
+//! ascending partition of the row space, concatenating the blocks in
+//! shard order reassembles the full matrix exactly.
+
+use crate::core::{Dense, Scalar};
+use crate::scheduler::place::split_rows;
+use crate::sparse::{Csr, Pattern};
+use std::ops::Range;
+
+/// Per-row constant added to the nonzero weight: models the row loop /
+/// index traffic floor so all-empty regions still spread, and keeps the
+/// partition defined for patterns with empty rows.
+const ROW_WEIGHT_FLOOR: usize = 1;
+
+/// Split `0..pattern.rows` into `n_shards` contiguous ranges of
+/// near-equal weight, where row `i` weighs `row_nnz(i) + 1`. The ranges
+/// ascend, cover every row exactly once, and may be empty at the tail
+/// when there are more shards than weight to spread. Deterministic in
+/// (pattern, n_shards).
+pub fn weighted_ranges(pattern: &Pattern, n_shards: usize) -> Vec<Range<usize>> {
+    let rows = pattern.rows;
+    if n_shards <= 1 || rows == 0 {
+        return uniform_ranges(rows, n_shards);
+    }
+    let total = pattern.nnz() + rows * ROW_WEIGHT_FLOOR;
+    let weight_to = |r: usize| pattern.indptr[r] + r * ROW_WEIGHT_FLOOR;
+    let mut ranges = Vec::with_capacity(n_shards);
+    let mut lo = 0usize;
+    for k in 1..=n_shards {
+        let hi = if k == n_shards {
+            rows
+        } else {
+            // Smallest row boundary whose prefix weight reaches the
+            // k-th target; ranges stay ascending because targets do.
+            let target = (total * k).div_ceil(n_shards);
+            let mut r = lo;
+            while r < rows && weight_to(r) < target {
+                r += 1;
+            }
+            r
+        };
+        ranges.push(lo..hi);
+        lo = hi;
+    }
+    ranges
+}
+
+/// Equal-rows split for steps with no stationary pattern to weigh
+/// (`FlowAMulB`, the replicated attention backward): [`split_rows`]
+/// with no minimum, padded with empty tail ranges when the placement
+/// layer returns fewer than `n_shards` (it drops empties; shard-block
+/// bookkeeping wants exactly one range per shard).
+pub fn uniform_ranges(rows: usize, n_shards: usize) -> Vec<Range<usize>> {
+    let n = n_shards.max(1);
+    let mut ranges = split_rows(rows, n, 1);
+    while ranges.len() < n {
+        ranges.push(rows..rows);
+    }
+    ranges.truncate(n);
+    ranges
+}
+
+/// Copy rows `r` of a CSR matrix into an owned block (full column
+/// space, re-based `indptr`). The block of an ascending partition
+/// concatenates back losslessly via [`concat_row_blocks`].
+pub fn csr_slice_rows<T: Scalar>(m: &Csr<T>, r: Range<usize>) -> Csr<T> {
+    let base = m.pattern.indptr[r.start];
+    let end = m.pattern.indptr[r.end];
+    let indptr = m.pattern.indptr[r.clone()]
+        .iter()
+        .chain(std::iter::once(&m.pattern.indptr[r.end]))
+        .map(|&p| p - base)
+        .collect();
+    let indices = m.pattern.indices[base..end].to_vec();
+    let data = m.data[base..end].to_vec();
+    Csr::new(Pattern::new(r.len(), m.cols(), indptr, indices), data)
+}
+
+/// Reassemble row blocks (in ascending-partition order) into one CSR
+/// matrix. The inverse of mapping [`csr_slice_rows`] over the ranges of
+/// [`weighted_ranges`]: structure and values land bit-for-bit where the
+/// unsliced matrix holds them.
+pub fn concat_row_blocks<T: Scalar>(cols: usize, blocks: &[Csr<T>]) -> Csr<T> {
+    let rows: usize = blocks.iter().map(|b| b.rows()).sum();
+    let nnz: usize = blocks.iter().map(|b| b.nnz()).sum();
+    let mut indptr = Vec::with_capacity(rows + 1);
+    let mut indices = Vec::with_capacity(nnz);
+    let mut data = Vec::with_capacity(nnz);
+    indptr.push(0usize);
+    let mut base = 0usize;
+    for b in blocks {
+        debug_assert_eq!(b.cols(), cols, "row blocks share the column space");
+        indptr.extend(b.pattern.indptr[1..].iter().map(|&p| base + p));
+        indices.extend_from_slice(&b.pattern.indices);
+        data.extend_from_slice(&b.data);
+        base += b.nnz();
+    }
+    Csr::new(Pattern::new(rows, cols, indptr, indices), data)
+}
+
+/// Copy rows `r` of a dense matrix into an owned block.
+pub fn dense_slice_rows<T: Scalar>(m: &Dense<T>, r: Range<usize>) -> Dense<T> {
+    Dense {
+        rows: r.len(),
+        cols: m.cols,
+        data: m.data[r.start * m.cols..r.end * m.cols].to_vec(),
+    }
+}
+
+/// Write a dense row block into `dst` at `r` (the receive side of a
+/// panel exchange; `dst` is the pre-shaped full panel).
+pub fn dense_put_rows<T: Scalar>(dst: &mut Dense<T>, r: Range<usize>, block: &Dense<T>) {
+    debug_assert_eq!((block.rows, block.cols), (r.len(), dst.cols), "block shape");
+    dst.data[r.start * dst.cols..r.end * dst.cols].copy_from_slice(&block.data);
+}
+
+/// Reassemble dense row blocks (ascending-partition order) into one
+/// matrix.
+pub fn assemble_dense<T: Scalar>(cols: usize, blocks: &[Dense<T>]) -> Dense<T> {
+    let rows: usize = blocks.iter().map(|b| b.rows).sum();
+    let mut out = Dense { rows, cols, data: Vec::with_capacity(rows * cols) };
+    for b in blocks {
+        debug_assert_eq!(b.cols, cols, "row blocks share the column space");
+        out.data.extend_from_slice(&b.data);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::testing::rng::XorShift64;
+
+    fn total_weight(p: &Pattern) -> usize {
+        p.nnz() + p.rows * ROW_WEIGHT_FLOOR
+    }
+
+    #[test]
+    fn weighted_ranges_cover_and_balance() {
+        let mut rng = XorShift64::new(7);
+        for _ in 0..40 {
+            let n = 1 + rng.next_range(300);
+            let p = gen::erdos_renyi(n, 1 + rng.next_range(8), rng.next_u64());
+            for shards in 1..=5 {
+                let ranges = weighted_ranges(&p, shards);
+                assert_eq!(ranges.len(), shards);
+                // Ascending exact partition of the row space.
+                let mut at = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, at);
+                    at = r.end;
+                }
+                assert_eq!(at, p.rows);
+                // No shard exceeds the ideal share by more than one
+                // row's weight (the split is at row granularity).
+                let ideal = total_weight(&p).div_ceil(shards);
+                let max_row = (0..p.rows)
+                    .map(|i| p.row_nnz(i) + ROW_WEIGHT_FLOOR)
+                    .max()
+                    .unwrap_or(0);
+                for r in &ranges {
+                    let w = p.range_nnz(r.start, r.end) + r.len() * ROW_WEIGHT_FLOOR;
+                    assert!(
+                        w <= ideal + max_row,
+                        "shard weight {w} exceeds ideal {ideal} + max row {max_row}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_ranges_follow_the_mass() {
+        // All the weight in the first rows: later shards get empty or
+        // tiny tail ranges rather than splitting the heavy head evenly
+        // by row count.
+        let p = gen::banded(64, &[1, 2, 3]); // uniform band
+        let uniform = weighted_ranges(&p, 4);
+        let spread: Vec<usize> = uniform.iter().map(|r| r.len()).collect();
+        assert!(spread.iter().all(|&l| l >= 10), "uniform pattern splits evenly: {spread:?}");
+    }
+
+    #[test]
+    fn uniform_ranges_pad_to_shard_count() {
+        let r = uniform_ranges(3, 5);
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.iter().map(Range::len).sum::<usize>(), 3);
+        assert_eq!(r.last().unwrap().clone(), 3..3);
+        assert_eq!(uniform_ranges(0, 3), vec![0..0, 0..0, 0..0]);
+    }
+
+    #[test]
+    fn csr_slice_concat_roundtrip() {
+        let mut rng = XorShift64::new(42);
+        for _ in 0..25 {
+            let n = 1 + rng.next_range(200);
+            let p = gen::erdos_renyi(n, 1 + rng.next_range(6), rng.next_u64());
+            let m = Csr::<f64>::with_random_values(p, rng.next_u64(), -1.0, 1.0);
+            for shards in 1..=4 {
+                let ranges = weighted_ranges(&m.pattern, shards);
+                let blocks: Vec<Csr<f64>> =
+                    ranges.iter().map(|r| csr_slice_rows(&m, r.clone())).collect();
+                for b in &blocks {
+                    assert!(b.check_invariants());
+                }
+                let back = concat_row_blocks(m.cols(), &blocks);
+                assert_eq!(back.pattern.indptr, m.pattern.indptr);
+                assert_eq!(back.pattern.indices, m.pattern.indices);
+                assert_eq!(back.data, m.data);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_slice_assemble_roundtrip() {
+        let m = Dense::<f32>::randn(37, 5, 9);
+        for shards in 1..=4 {
+            let ranges = uniform_ranges(m.rows, shards);
+            let blocks: Vec<Dense<f32>> =
+                ranges.iter().map(|r| dense_slice_rows(&m, r.clone())).collect();
+            assert_eq!(assemble_dense(m.cols, &blocks), m);
+            // put_rows writes the same bytes block-wise.
+            let mut dst = Dense::zeros(m.rows, m.cols);
+            for (r, b) in ranges.iter().zip(&blocks) {
+                dense_put_rows(&mut dst, r.clone(), b);
+            }
+            assert_eq!(dst, m);
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! The message layer between the distributed driver and its process
+//! shards.
+//!
+//! Everything that crosses a shard boundary is an **owned value** in
+//! [`DistMsg`] — matrices, bind specs, row blocks — never a borrow, so
+//! the same protocol serializes onto a byte stream unchanged. The
+//! [`Transport`] trait is the seam: [`LocalTransport`] (this PR) backs
+//! it with in-process channels for deterministic, CI-friendly
+//! simulation (`TF_DIST=N`); a TCP transport (queued in ROADMAP.md)
+//! implements the same five methods over sockets plus a serializer for
+//! `DistMsg` — no driver or worker code changes.
+//!
+//! **Determinism contract.** Endpoints are `0..n_shards` for workers
+//! and `n_shards` for the driver. Every (from, to) pair is an ordered
+//! FIFO lane, and `recv(at, from)` names its sender — there is no
+//! wildcard receive, so message arrival order as *observed* by any
+//! endpoint is a pure function of the protocol, never of thread
+//! scheduling. That is what makes sharded runs bitwise-reproducible:
+//! the driver gathers blocks shard `0..n` in index order, and ring
+//! shifts receive from the fixed left neighbour.
+
+use crate::core::{Dense, Scalar};
+use crate::exec::chain::{ChainStepOp, StepStrategy};
+use crate::scheduler::chain::{StepOutput, StepOutputMode};
+use crate::scheduler::cost::PanelExchange;
+use crate::sparse::Csr;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// An owned flowing value (chain input, inter-step panel, row block, or
+/// final output) in either format.
+#[derive(Clone, Debug)]
+pub enum Panel<T> {
+    Dense(Dense<T>),
+    Sparse(Csr<T>),
+}
+
+impl<T: Scalar> Panel<T> {
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            Panel::Dense(d) => (d.rows, d.cols),
+            Panel::Sparse(c) => (c.rows(), c.cols()),
+        }
+    }
+
+    pub fn format(&self) -> StepOutput {
+        match self {
+            Panel::Dense(_) => StepOutput::Dense,
+            Panel::Sparse(_) => StepOutput::SparseCsr,
+        }
+    }
+
+    /// Approximate wire footprint — the payload term of the alpha-beta
+    /// exchange model and the `dist_bytes` metric.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Panel::Dense(d) => d.rows * d.cols * T::BYTES,
+            Panel::Sparse(c) => c.nnz() * (T::BYTES + 4) + (c.rows() + 1) * 8,
+        }
+    }
+
+    /// Unwrap a dense panel (panics on format mismatch — callers hold
+    /// the plan that fixed the format).
+    pub fn expect_dense(self) -> Dense<T> {
+        match self {
+            Panel::Dense(d) => d,
+            Panel::Sparse(_) => panic!("expected a dense panel"),
+        }
+    }
+
+    /// Unwrap a sparse panel.
+    pub fn expect_sparse(self) -> Csr<T> {
+        match self {
+            Panel::Sparse(c) => c,
+            Panel::Dense(_) => panic!("expected a sparse panel"),
+        }
+    }
+}
+
+/// How a split worker feeds the flowing panel into its step slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlowHandling {
+    /// The step's stationary operand was row-sliced; the full panel is
+    /// the step input (pair, SpGEMM, SpmmFlow steps).
+    Full,
+    /// The step's output rows are the panel's rows; the worker slices
+    /// its own row range out of the (replicated) panel before running
+    /// (`FlowAMulB`, `SddmmQK`, `Attention`).
+    SliceRows,
+    /// No slicing is bitwise-safe (the attention backward's transposed
+    /// pass reads every forward row's stash): the worker replicates the
+    /// whole step and contributes only its row range of the result.
+    Replicated,
+}
+
+/// One step of a row-split bind, as shipped to one worker: the operands
+/// (sliced to the worker's row range where the kind allows), the full
+/// partition (every shard's range — needed to reassemble panels), and
+/// the globally planned facts that per-shard planning must not re-derive
+/// (output format, shapes, exchange pattern).
+pub struct StepBindSpec<T> {
+    /// This worker's operands: stationary side row-sliced to its range
+    /// for `Full`-flow kinds, full for the rest.
+    pub op: ChainStepOp<T>,
+    /// Ascending partition of this step's output rows, one range per
+    /// shard (possibly empty).
+    pub ranges: Vec<Range<usize>>,
+    /// Forced output format from the **global** plan — per-shard `Auto`
+    /// re-decisions on sliced patterns could diverge from the
+    /// single-process decision, so `Auto` never crosses the wire.
+    pub output: StepOutputMode,
+    /// Full output shape/format of this step (before slicing).
+    pub out_rows: usize,
+    pub out_cols: usize,
+    pub out_format: StepOutput,
+    /// Planner nnz estimate for a sparse output (density seed for the
+    /// next step's bind; ignored for dense).
+    pub out_nnz_est: usize,
+    pub strategy: StepStrategy,
+    pub drop_tol: f64,
+    pub flow: FlowHandling,
+    /// How the panel moves to the next step (meaningless on the last
+    /// step). `Shift` segments run worker-to-worker without driver
+    /// involvement; `Broadcast` hands the reassembled panel back to the
+    /// driver (a control point).
+    pub exchange_after: PanelExchange,
+}
+
+/// Shape/format of a panel as carried in bind specs.
+#[derive(Clone, Copy, Debug)]
+pub struct PanelMeta {
+    pub rows: usize,
+    pub cols: usize,
+    pub format: StepOutput,
+    /// Representative nonzeros for a sparse panel (planner seed).
+    pub nnz_est: usize,
+}
+
+/// A bind request: either the whole chain on one shard (small panels —
+/// exactly single-process execution, trivially bitwise) or one
+/// row-split slice per shard.
+pub enum ChainBindSpec<T> {
+    /// Bind the full chain; `RunWhole` executes it end to end.
+    Whole {
+        ops: Vec<ChainStepOp<T>>,
+        strategies: Vec<StepStrategy>,
+        drop_tols: Vec<f64>,
+        input: PanelMeta,
+    },
+    /// Bind this worker's slice of every step.
+    Split { steps: Vec<StepBindSpec<T>>, input: PanelMeta },
+}
+
+/// The protocol. Worker endpoints receive only from the driver lane
+/// (`Bind`/`Run*`/`Unbind`/`Shutdown`) except inside a ring shift, where
+/// `Block` travels worker-to-worker on the neighbour lanes.
+pub enum DistMsg<T> {
+    /// driver → worker: bind a chain under the given id.
+    Bind { chain: u64, spec: Box<ChainBindSpec<T>> },
+    /// worker → driver: bind acknowledgement (`None` = bound).
+    Bound { chain: u64, err: Option<String> },
+    /// driver → worker: run the split chain from `step`, whose full
+    /// input panel is attached. The worker proceeds autonomously
+    /// through `Shift` boundaries and reports back at the next
+    /// `Broadcast` boundary or the final step.
+    Run { chain: u64, step: usize, panel: Arc<Panel<T>> },
+    /// One shard's row block of step `step`'s output: worker → driver
+    /// at broadcast/final boundaries, worker → worker inside a ring
+    /// shift (`shard` names the block's producer, not the sender — ring
+    /// relays forward other shards' blocks).
+    Block { chain: u64, step: usize, shard: usize, panel: Panel<T> },
+    /// driver → worker: run a whole-chain bind end to end.
+    RunWhole { chain: u64, panel: Arc<Panel<T>> },
+    /// worker → driver: a whole-chain run's output.
+    Output { chain: u64, panel: Panel<T> },
+    /// driver → worker: drop a bound chain's state.
+    Unbind { chain: u64 },
+    /// driver → worker: exit the worker loop.
+    Shutdown,
+}
+
+/// The message layer seam. `n_shards` workers hold endpoints
+/// `0..n_shards`; the driver holds endpoint `n_shards`. Each ordered
+/// (from, to) pair is an independent FIFO lane; `recv` blocks until the
+/// named sender's next message arrives. Implementations must deliver
+/// losslessly and in order per lane — nothing else is assumed.
+pub trait Transport<T: Scalar>: Send + Sync {
+    fn n_shards(&self) -> usize;
+    /// The driver's endpoint id.
+    fn driver_id(&self) -> usize {
+        self.n_shards()
+    }
+    fn send(&self, from: usize, to: usize, msg: DistMsg<T>);
+    fn recv(&self, at: usize, from: usize) -> DistMsg<T>;
+}
+
+/// In-process [`Transport`]: an (n+1)² matrix of unbounded mpsc
+/// channels. Unbounded is load-bearing — every ring-shift round sends
+/// before it receives, which a bounded lane could deadlock.
+///
+/// Message and byte counters feed the driver's dist metrics; they count
+/// traffic the TCP transport would put on the wire (panels and blocks),
+/// making the simulated layout a communication-volume model too.
+pub struct LocalTransport<T> {
+    n_shards: usize,
+    /// `lanes[from][to]`. Senders are mutex-wrapped for `&self` sends
+    /// from many threads; receivers for exclusive blocking recv. Both
+    /// locks are uncontended by protocol (one consumer per lane, and a
+    /// lane's sender is driven by one endpoint at a time).
+    #[allow(clippy::type_complexity)]
+    lanes: Vec<Vec<(Mutex<Sender<DistMsg<T>>>, Mutex<Receiver<DistMsg<T>>>)>>,
+    msgs: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl<T: Scalar> LocalTransport<T> {
+    pub fn new(n_shards: usize) -> Self {
+        let n = n_shards + 1; // + the driver endpoint
+        let lanes = (0..n)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        let (tx, rx) = channel();
+                        (Mutex::new(tx), Mutex::new(rx))
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { n_shards, lanes, msgs: AtomicU64::new(0), bytes: AtomicU64::new(0) }
+    }
+
+    /// Messages sent so far (all lanes).
+    pub fn msg_count(&self) -> u64 {
+        self.msgs.load(Ordering::Relaxed)
+    }
+
+    /// Approximate payload bytes sent so far (panels and blocks only —
+    /// the traffic a wire transport would move; control messages are
+    /// negligible).
+    pub fn byte_count(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn payload_bytes(msg: &DistMsg<T>) -> usize {
+        match msg {
+            DistMsg::Run { panel, .. } | DistMsg::RunWhole { panel, .. } => panel.bytes(),
+            DistMsg::Block { panel, .. } | DistMsg::Output { panel, .. } => panel.bytes(),
+            _ => 0,
+        }
+    }
+}
+
+impl<T: Scalar> Transport<T> for LocalTransport<T> {
+    fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    fn send(&self, from: usize, to: usize, msg: DistMsg<T>) {
+        self.msgs.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(Self::payload_bytes(&msg) as u64, Ordering::Relaxed);
+        let tx = self.lanes[from][to].0.lock().expect("transport sender poisoned");
+        tx.send(msg).expect("transport lane closed: receiver endpoint is gone");
+    }
+
+    fn recv(&self, at: usize, from: usize) -> DistMsg<T> {
+        let rx = self.lanes[from][at].1.lock().expect("transport receiver poisoned");
+        rx.recv().expect("transport lane closed: sender endpoint is gone")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_are_independent_ordered_fifos() {
+        let t: LocalTransport<f64> = LocalTransport::new(2);
+        assert_eq!(t.n_shards(), 2);
+        assert_eq!(t.driver_id(), 2);
+        // Interleave sends on two lanes into endpoint 0; per-lane order
+        // holds regardless of global interleaving.
+        t.send(2, 0, DistMsg::Unbind { chain: 1 });
+        t.send(1, 0, DistMsg::Unbind { chain: 10 });
+        t.send(2, 0, DistMsg::Unbind { chain: 2 });
+        t.send(1, 0, DistMsg::Unbind { chain: 20 });
+        for (from, expect) in [(2, vec![1, 2]), (1, vec![10, 20])] {
+            for e in expect {
+                match t.recv(0, from) {
+                    DistMsg::Unbind { chain } => assert_eq!(chain, e),
+                    _ => panic!("unexpected message"),
+                }
+            }
+        }
+        assert_eq!(t.msg_count(), 4);
+        assert_eq!(t.byte_count(), 0, "control messages carry no payload");
+    }
+
+    #[test]
+    fn payload_bytes_counted_for_panels() {
+        let t: LocalTransport<f32> = LocalTransport::new(1);
+        let p = Panel::Dense(Dense::<f32>::zeros(4, 8));
+        let bytes = p.bytes() as u64;
+        t.send(1, 0, DistMsg::Run { chain: 0, step: 0, panel: Arc::new(p) });
+        assert_eq!(t.byte_count(), bytes);
+        assert_eq!(bytes, 4 * 8 * 4);
+    }
+}

@@ -1,0 +1,457 @@
+//! One process shard: a full runtime instance — its own [`ThreadPool`],
+//! its own [`ScheduleCache`] — executing its row-block slice of each
+//! chain step.
+//!
+//! A worker is a plain message loop over the driver lane of its
+//! [`Transport`]: `Bind` plans and binds local [`ChainExec`]s (one-step
+//! executors over the sliced operands for row-split chains, one
+//! whole-chain executor for single-shard placements), `Run`/`RunWhole`
+//! execute, `Unbind` drops state, `Shutdown` exits. Between `Run`s the
+//! worker holds **no in-flight chain state** — each `Run` carries the
+//! step index and the full input panel, so cancellation is simply the
+//! driver not sending the next `Run`; a worker is never left waiting on
+//! a message that will not come.
+//!
+//! **Why row slices are bitwise-exact.** Every kernel in this crate
+//! computes each output row by the same serial per-row loop regardless
+//! of schedule, strip, thread count, or which tile issued it — that is
+//! the repo-wide determinism contract the conformance grids enforce.
+//! A worker therefore produces, for the rows it owns, byte-identical
+//! values to a single-process run: it feeds the identical full panel
+//! into the identical per-row kernels. The one exception is the fused
+//! attention backward, whose transposed pass reads per-edge stashes of
+//! *every* forward row — slicing it would need a stash exchange — so
+//! that step is **replicated**: each worker recomputes the full step
+//! (same public [`run_attention_grad`] entry point) and contributes
+//! only its row range, trading FLOPs for exactness.
+
+use super::partition::{csr_slice_rows, dense_put_rows, dense_slice_rows};
+use super::transport::{
+    ChainBindSpec, DistMsg, FlowHandling, Panel, PanelMeta, StepBindSpec, Transport,
+};
+use crate::coordinator::ScheduleCache;
+use crate::core::{Dense, Scalar};
+use crate::exec::chain::{ChainBuilder, ChainExec, ChainIn, ChainOut, ChainStepOp};
+use crate::exec::sddmm::run_attention_grad;
+use crate::exec::ThreadPool;
+use crate::scheduler::chain::{ChainInputMeta, StepOutput};
+use crate::scheduler::cost::PanelExchange;
+use crate::scheduler::SchedulerParams;
+use crate::sparse::Csr;
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Replicated attention-backward state: the full operands plus the
+/// full-height scratch the worker recomputes into on every run.
+struct GradStep<T> {
+    op: ChainStepOp<T>,
+    edges: Dense<T>,
+    scratch: Dense<T>,
+}
+
+/// One bound step of a row-split chain.
+struct SplitStep<T> {
+    /// One-step executor over the sliced operands; `None` when this
+    /// worker's range is empty (emits an empty block) or the step is
+    /// replicated (`grad` holds it instead).
+    exec: Option<ChainExec<T>>,
+    grad: Option<GradStep<T>>,
+    own: Range<usize>,
+    ranges: Vec<Range<usize>>,
+    flow: FlowHandling,
+    exchange_after: PanelExchange,
+    out_rows: usize,
+    out_cols: usize,
+    out_format: StepOutput,
+}
+
+enum BoundChain<T> {
+    Whole(Box<ChainExec<T>>),
+    Split(Vec<SplitStep<T>>),
+}
+
+/// The worker's runtime instance.
+struct Worker<T: Scalar> {
+    shard: usize,
+    pool: ThreadPool,
+    cache: ScheduleCache,
+    params: SchedulerParams,
+    bound: HashMap<u64, BoundChain<T>>,
+}
+
+/// Worker thread entry point: serve the driver lane until `Shutdown`.
+pub(crate) fn worker_main<T: Scalar>(
+    shard: usize,
+    threads: usize,
+    params: SchedulerParams,
+    transport: Arc<dyn Transport<T>>,
+) {
+    let mut params = params;
+    params.n_cores = threads.max(1);
+    let mut w: Worker<T> = Worker {
+        shard,
+        pool: ThreadPool::new(threads.max(1)),
+        cache: ScheduleCache::new(params),
+        params,
+        bound: HashMap::new(),
+    };
+    let driver = transport.driver_id();
+    loop {
+        match transport.recv(shard, driver) {
+            DistMsg::Bind { chain, spec } => {
+                let res = w.bind(*spec);
+                let err = match res {
+                    Ok(b) => {
+                        w.bound.insert(chain, b);
+                        None
+                    }
+                    Err(e) => Some(e),
+                };
+                transport.send(shard, driver, DistMsg::Bound { chain, err });
+            }
+            DistMsg::Run { chain, step, panel } => w.run_split(&*transport, chain, step, panel),
+            DistMsg::RunWhole { chain, panel } => {
+                let out = w.run_whole(chain, &panel);
+                transport.send(shard, driver, DistMsg::Output { chain, panel: out });
+            }
+            DistMsg::Unbind { chain } => {
+                w.bound.remove(&chain);
+            }
+            DistMsg::Shutdown => return,
+            DistMsg::Bound { .. } | DistMsg::Block { .. } | DistMsg::Output { .. } => {
+                unreachable!("driver-lane message kind")
+            }
+        }
+    }
+}
+
+fn input_meta(meta: &PanelMeta) -> ChainInputMeta {
+    ChainInputMeta { rows: meta.rows, cols: meta.cols, format: meta.format, nnz: meta.nnz_est }
+}
+
+impl<T: Scalar> Worker<T> {
+    fn bind(&mut self, spec: ChainBindSpec<T>) -> Result<BoundChain<T>, String> {
+        match spec {
+            ChainBindSpec::Whole { ops, strategies, drop_tols, input } => {
+                let mut b = ChainBuilder::new(input_meta(&input));
+                for ((op, st), dt) in ops.into_iter().zip(strategies).zip(drop_tols) {
+                    b = b.step(op).strategy(st).drop_tol(dt);
+                }
+                let cache = &mut self.cache;
+                b.build_with(self.params, |_, op| cache.get_or_build(op))
+                    .map(|e| BoundChain::Whole(Box::new(e)))
+                    .map_err(|e| e.to_string())
+            }
+            ChainBindSpec::Split { steps, input } => {
+                let mut bound = Vec::with_capacity(steps.len());
+                let mut in_meta = input;
+                for (s, st) in steps.into_iter().enumerate() {
+                    bound.push(self.bind_split_step(s, st, &mut in_meta)?);
+                }
+                Ok(BoundChain::Split(bound))
+            }
+        }
+    }
+
+    /// Bind one row-split step; `in_meta` is this step's full input
+    /// panel and is advanced to the step's full output on return.
+    fn bind_split_step(
+        &mut self,
+        s: usize,
+        spec: StepBindSpec<T>,
+        in_meta: &mut PanelMeta,
+    ) -> Result<SplitStep<T>, String> {
+        let own = spec
+            .ranges
+            .get(self.shard)
+            .cloned()
+            .ok_or_else(|| format!("step {s}: no range for shard {}", self.shard))?;
+        let out_meta = PanelMeta {
+            rows: spec.out_rows,
+            cols: spec.out_cols,
+            format: spec.out_format,
+            nnz_est: spec.out_nnz_est,
+        };
+        let step = if spec.flow == FlowHandling::Replicated {
+            // Replicated attention backward: full operands, full-height
+            // scratch, slice after computing.
+            let ChainStepOp::AttentionGrad { s: ref sm, .. } = spec.op else {
+                return Err(format!("step {s}: replicated flow on a non-AttentionGrad step"));
+            };
+            let nnz = sm.nnz();
+            SplitStep {
+                exec: None,
+                grad: Some(GradStep {
+                    op: spec.op,
+                    edges: Dense::zeros(2, nnz),
+                    scratch: Dense::zeros(spec.out_rows, spec.out_cols),
+                }),
+                own,
+                ranges: spec.ranges,
+                flow: spec.flow,
+                exchange_after: spec.exchange_after,
+                out_rows: spec.out_rows,
+                out_cols: spec.out_cols,
+                out_format: spec.out_format,
+            }
+        } else if own.is_empty() {
+            SplitStep {
+                exec: None,
+                grad: None,
+                own,
+                ranges: spec.ranges,
+                flow: spec.flow,
+                exchange_after: spec.exchange_after,
+                out_rows: spec.out_rows,
+                out_cols: spec.out_cols,
+                out_format: spec.out_format,
+            }
+        } else {
+            // The step input as this worker sees it: the full panel for
+            // stationary-sliced kinds, its own row slice otherwise.
+            let meta = match spec.flow {
+                FlowHandling::Full => input_meta(in_meta),
+                FlowHandling::SliceRows => ChainInputMeta {
+                    rows: own.len(),
+                    cols: in_meta.cols,
+                    format: in_meta.format,
+                    nnz: (in_meta.nnz_est * own.len()) / in_meta.rows.max(1),
+                },
+                FlowHandling::Replicated => unreachable!(),
+            };
+            let cache = &mut self.cache;
+            let exec = ChainBuilder::new(meta)
+                .step(spec.op)
+                .output(spec.output)
+                .strategy(spec.strategy)
+                .drop_tol(spec.drop_tol)
+                .build_with(self.params, |_, op| cache.get_or_build(op))
+                .map_err(|e| format!("step {s}: {e}"))?;
+            if exec.out_dims() != (own.len(), spec.out_cols) || exec.out_format() != spec.out_format
+            {
+                return Err(format!(
+                    "step {s}: sliced plan produced {:?}/{:?}, expected ({}, {})/{:?}",
+                    exec.out_dims(),
+                    exec.out_format(),
+                    own.len(),
+                    spec.out_cols,
+                    spec.out_format
+                ));
+            }
+            SplitStep {
+                exec: Some(exec),
+                grad: None,
+                own,
+                ranges: spec.ranges,
+                flow: spec.flow,
+                exchange_after: spec.exchange_after,
+                out_rows: spec.out_rows,
+                out_cols: spec.out_cols,
+                out_format: spec.out_format,
+            }
+        };
+        *in_meta = out_meta;
+        Ok(step)
+    }
+
+    fn run_whole(&mut self, chain: u64, panel: &Panel<T>) -> Panel<T> {
+        let Some(BoundChain::Whole(exec)) = self.bound.get_mut(&chain) else {
+            panic!("RunWhole for a chain not whole-bound on shard {}", self.shard)
+        };
+        let x = match panel {
+            Panel::Dense(d) => ChainIn::Dense(d),
+            Panel::Sparse(c) => ChainIn::Sparse(c),
+        };
+        match exec.out_format() {
+            StepOutput::Dense => {
+                let (r, c) = exec.out_dims();
+                let mut out = Dense::zeros(r, c);
+                exec.run_io(&self.pool, x, ChainOut::Dense(&mut out));
+                Panel::Dense(out)
+            }
+            StepOutput::SparseCsr => {
+                let (r, c) = exec.out_dims();
+                let mut out = Csr::empty(r, c);
+                exec.run_io(&self.pool, x, ChainOut::Sparse(&mut out));
+                Panel::Sparse(out)
+            }
+        }
+    }
+
+    /// Execute a row-split chain from `step`, proceeding autonomously
+    /// through `Shift` boundaries (ring allgather with the neighbour
+    /// shards) and returning to the message loop at the next
+    /// `Broadcast` boundary or after shipping the final block to the
+    /// driver.
+    fn run_split(
+        &mut self,
+        transport: &dyn Transport<T>,
+        chain: u64,
+        start: usize,
+        panel: Arc<Panel<T>>,
+    ) {
+        let driver = transport.driver_id();
+        let mut step = start;
+        let mut panel = panel;
+        loop {
+            let Some(BoundChain::Split(steps)) = self.bound.get_mut(&chain) else {
+                panic!("Run for a chain not split-bound on shard {}", self.shard)
+            };
+            let n_steps = steps.len();
+            let block = Self::exec_step(&self.pool, &mut steps[step], &panel);
+            let st = &steps[step];
+            let last = step + 1 == n_steps;
+            if last || st.exchange_after == PanelExchange::Broadcast {
+                transport.send(
+                    self.shard,
+                    driver,
+                    DistMsg::Block { chain, step, shard: self.shard, panel: block },
+                );
+                return;
+            }
+            let full = ring_allgather(
+                transport,
+                self.shard,
+                chain,
+                step,
+                &st.ranges,
+                st.out_rows,
+                st.out_cols,
+                st.out_format,
+                block,
+            );
+            panel = Arc::new(full);
+            step += 1;
+        }
+    }
+
+    /// One step's row block for this shard.
+    fn exec_step(pool: &ThreadPool, st: &mut SplitStep<T>, panel: &Panel<T>) -> Panel<T> {
+        if let Some(g) = &mut st.grad {
+            // Replicated attention backward: same public entry point as
+            // single-process execution, then keep only our rows.
+            let ChainStepOp::AttentionGrad { s, k, v, q, st: stp, perm } = &g.op else {
+                unreachable!("grad state holds an AttentionGrad op")
+            };
+            let Panel::Dense(dout) = panel else {
+                panic!("attention backward flows a dense dOut")
+            };
+            run_attention_grad(
+                pool,
+                &s.pattern,
+                stp,
+                perm,
+                k,
+                v,
+                q,
+                dout,
+                &mut g.edges,
+                &mut g.scratch,
+            );
+            return Panel::Dense(dense_slice_rows(&g.scratch, st.own.clone()));
+        }
+        let Some(exec) = &mut st.exec else {
+            // Empty range: a zero-row block of the step's output shape.
+            return match st.out_format {
+                StepOutput::Dense => {
+                    Panel::Dense(Dense { rows: 0, cols: st.out_cols, data: Vec::new() })
+                }
+                StepOutput::SparseCsr => Panel::Sparse(Csr::empty(0, st.out_cols)),
+            };
+        };
+        // Feed the panel: whole for stationary-sliced kinds, our row
+        // slice when the panel's rows are the output rows.
+        let sliced_dense;
+        let sliced_sparse;
+        let x = match (st.flow, panel) {
+            (FlowHandling::Full, Panel::Dense(d)) => ChainIn::Dense(d),
+            (FlowHandling::Full, Panel::Sparse(c)) => ChainIn::Sparse(c),
+            (FlowHandling::SliceRows, Panel::Dense(d)) => {
+                sliced_dense = dense_slice_rows(d, st.own.clone());
+                ChainIn::Dense(&sliced_dense)
+            }
+            (FlowHandling::SliceRows, Panel::Sparse(c)) => {
+                sliced_sparse = csr_slice_rows(c, st.own.clone());
+                ChainIn::Sparse(&sliced_sparse)
+            }
+            (FlowHandling::Replicated, _) => unreachable!("handled above"),
+        };
+        match st.out_format {
+            StepOutput::Dense => {
+                let mut out = Dense::zeros(st.own.len(), st.out_cols);
+                exec.run_io(pool, x, ChainOut::Dense(&mut out));
+                Panel::Dense(out)
+            }
+            StepOutput::SparseCsr => {
+                let mut out = Csr::empty(st.own.len(), st.out_cols);
+                exec.run_io(pool, x, ChainOut::Sparse(&mut out));
+                Panel::Sparse(out)
+            }
+        }
+    }
+}
+
+/// Ring allgather of one step's row blocks: `n − 1` rounds, each
+/// relaying one block to the right neighbour and receiving one from the
+/// left, then assembly in shard order. Receive order is fixed by the
+/// protocol (always the left lane, always the next-older block), so the
+/// assembled panel — and everything downstream — is schedule-independent.
+#[allow(clippy::too_many_arguments)]
+fn ring_allgather<T: Scalar>(
+    transport: &dyn Transport<T>,
+    me: usize,
+    chain: u64,
+    step: usize,
+    ranges: &[Range<usize>],
+    out_rows: usize,
+    out_cols: usize,
+    out_format: StepOutput,
+    own: Panel<T>,
+) -> Panel<T> {
+    let n = transport.n_shards();
+    let mut have: Vec<Option<Panel<T>>> = (0..n).map(|_| None).collect();
+    have[me] = Some(own);
+    if n > 1 {
+        let right = (me + 1) % n;
+        let left = (me + n - 1) % n;
+        for round in 1..n {
+            // Send the block received last round (round 1: our own).
+            let fwd = (me + n - (round - 1)) % n;
+            let p = have[fwd].as_ref().expect("ring relay invariant").clone();
+            transport.send(me, right, DistMsg::Block { chain, step, shard: fwd, panel: p });
+            match transport.recv(me, left) {
+                DistMsg::Block { chain: c, step: s, shard, panel } => {
+                    debug_assert_eq!((c, s), (chain, step), "ring message for another exchange");
+                    debug_assert_eq!(shard, (me + n - round) % n, "ring relay order");
+                    have[shard] = Some(panel);
+                }
+                _ => unreachable!("non-Block message on a ring lane"),
+            }
+        }
+    }
+    assemble(ranges, out_rows, out_cols, out_format, have.into_iter().map(|p| p.unwrap()))
+}
+
+/// Reassemble a full panel from per-shard row blocks in shard order.
+pub(crate) fn assemble<T: Scalar>(
+    ranges: &[Range<usize>],
+    out_rows: usize,
+    out_cols: usize,
+    out_format: StepOutput,
+    blocks: impl Iterator<Item = Panel<T>>,
+) -> Panel<T> {
+    match out_format {
+        StepOutput::Dense => {
+            let mut full = Dense::zeros(out_rows, out_cols);
+            for (r, b) in ranges.iter().zip(blocks) {
+                dense_put_rows(&mut full, r.clone(), &b.expect_dense());
+            }
+            Panel::Dense(full)
+        }
+        StepOutput::SparseCsr => {
+            let parts: Vec<Csr<T>> = blocks.map(|b| b.expect_sparse()).collect();
+            Panel::Sparse(super::partition::concat_row_blocks(out_cols, &parts))
+        }
+    }
+}

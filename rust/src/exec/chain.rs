@@ -39,9 +39,9 @@
 //! that replaces the old constructor-plus-setter shuffle — per-step
 //! knobs (output format, strategy, strip mode, drop tolerance,
 //! boundary) attach to the step they modify at the point it is
-//! declared. The old [`ChainExec::plan_and_build`] /
-//! [`ChainExec::plan_and_build_sparse`] constructors remain as
-//! deprecated shims that delegate to the builder.
+//! declared. (The pre-builder `plan_and_build` /
+//! `plan_and_build_sparse` constructors went through a deprecation
+//! cycle and are gone.)
 //!
 //! # Attention steps
 //!
@@ -1042,31 +1042,6 @@ impl<T: Scalar> ChainExec<T> {
             out_format: plan.out_format(),
             stats: plan.stats.clone(),
         })
-    }
-
-    /// Plan (with a private dedup map) and bind in one call, for a
-    /// **dense** chain input.
-    #[deprecated(note = "assemble chains with `ChainBuilder::dense(..).steps(..).build(..)`")]
-    pub fn plan_and_build(
-        ops: Vec<ChainStepOp<T>>,
-        in_rows: usize,
-        in_cols: usize,
-        params: SchedulerParams,
-    ) -> Result<Self, ChainError> {
-        ChainBuilder::dense(in_rows, in_cols).steps(ops).build(params)
-    }
-
-    /// `plan_and_build` for a **sparse** chain input (the SpGEMM
-    /// chains): `in_nnz` seeds the planner's density estimate.
-    #[deprecated(note = "assemble chains with `ChainBuilder::sparse(..).steps(..).build(..)`")]
-    pub fn plan_and_build_sparse(
-        ops: Vec<ChainStepOp<T>>,
-        in_rows: usize,
-        in_cols: usize,
-        in_nnz: usize,
-        params: SchedulerParams,
-    ) -> Result<Self, ChainError> {
-        ChainBuilder::sparse(in_rows, in_cols, in_nnz).steps(ops).build(params)
     }
 
     pub fn n_steps(&self) -> usize {
@@ -2857,11 +2832,10 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_delegate_to_the_builder() {
-        // The old constructors are thin wrappers over ChainBuilder: a
-        // chain assembled either way must plan identically and produce
-        // bitwise-identical output.
+    fn builder_assembly_styles_agree() {
+        // The bulk `steps(..)` API and the fluent per-step `step(..)`
+        // chaining are two spellings of one assembly: both must plan
+        // identically and produce bitwise-identical output.
         let a = Arc::new(Csr::<f64>::with_random_values(gen::banded(24, &[1, 3]), 2, -1.0, 1.0));
         let w = Arc::new(Dense::<f64>::randn(6, 4, 7));
         let mk_ops = || {
@@ -2870,33 +2844,36 @@ mod tests {
                 ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
             ]
         };
-        let mut old = ChainExec::plan_and_build(mk_ops(), 24, 6, params_small()).unwrap();
-        let mut new = ChainBuilder::dense(24, 6).steps(mk_ops()).build(params_small()).unwrap();
-        assert_eq!(old.boundary(1), new.boundary(1));
+        let mut bulk = ChainBuilder::dense(24, 6).steps(mk_ops()).build(params_small()).unwrap();
+        let [op0, op1] = <[_; 2]>::try_from(mk_ops()).ok().unwrap();
+        let mut fluent =
+            ChainBuilder::dense(24, 6).step(op0).step(op1).build(params_small()).unwrap();
+        assert_eq!(bulk.boundary(1), fluent.boundary(1));
         let x = Dense::<f64>::randn(24, 6, 2);
         let pool = ThreadPool::new(3);
-        let mut y_old = Dense::zeros(24, 4);
-        let mut y_new = Dense::zeros(24, 4);
-        old.run(&pool, &x, &mut y_old);
-        new.run(&pool, &x, &mut y_new);
-        assert_eq!(y_old.data, y_new.data);
+        let mut y_bulk = Dense::zeros(24, 4);
+        let mut y_fluent = Dense::zeros(24, 4);
+        bulk.run(&pool, &x, &mut y_bulk);
+        fluent.run(&pool, &x, &mut y_fluent);
+        assert_eq!(y_bulk.data, y_fluent.data);
 
-        // Sparse-input shim.
+        // Sparse-input chains likewise.
         let mk_sp = || {
             vec![ChainStepOp::SpgemmFlow {
                 a: Arc::clone(&a),
                 output: StepOutputMode::SparseCsr,
             }]
         };
-        let mut old =
-            ChainExec::plan_and_build_sparse(mk_sp(), 24, 24, a.nnz(), params_small()).unwrap();
-        let mut new =
+        let mut bulk =
             ChainBuilder::sparse(24, 24, a.nnz()).steps(mk_sp()).build(params_small()).unwrap();
-        let mut s_old = Csr::<f64>::empty(0, 0);
-        let mut s_new = Csr::<f64>::empty(0, 0);
-        old.run_io(&pool, ChainIn::Sparse(&a), ChainOut::Sparse(&mut s_old));
-        new.run_io(&pool, ChainIn::Sparse(&a), ChainOut::Sparse(&mut s_new));
-        assert_eq!(s_old, s_new);
+        let [sp0] = <[_; 1]>::try_from(mk_sp()).ok().unwrap();
+        let mut fluent =
+            ChainBuilder::sparse(24, 24, a.nnz()).step(sp0).build(params_small()).unwrap();
+        let mut s_bulk = Csr::<f64>::empty(0, 0);
+        let mut s_fluent = Csr::<f64>::empty(0, 0);
+        bulk.run_io(&pool, ChainIn::Sparse(&a), ChainOut::Sparse(&mut s_bulk));
+        fluent.run_io(&pool, ChainIn::Sparse(&a), ChainOut::Sparse(&mut s_fluent));
+        assert_eq!(s_bulk, s_fluent);
     }
 
     #[test]
@@ -3215,9 +3192,8 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn shim_plus_setters_covers_every_builder_knob() {
-        // The deprecated shims compose with the post-bind setters; for
+    fn setters_match_declared_builder_knobs() {
+        // The post-bind setters compose with a plain builder chain; for
         // every per-step knob the builder exposes (output, strategy,
         // strip, drop_tol, boundary) the two routes must agree in state
         // and bits.
@@ -3231,9 +3207,10 @@ mod tests {
                 output: StepOutputMode::SparseCsr,
             }]
         };
-        let mut old =
-            ChainExec::plan_and_build_sparse(mk_sp(), x.rows(), x.cols(), x.nnz(), params_small())
-                .unwrap();
+        let mut old = ChainBuilder::sparse(x.rows(), x.cols(), x.nnz())
+            .steps(mk_sp())
+            .build(params_small())
+            .unwrap();
         old.set_drop_tol(0, 0.05);
         let mut new = ChainBuilder::sparse(x.rows(), x.cols(), x.nnz())
             .step(ChainStepOp::SpgemmFlow { a: Arc::clone(&a), output: StepOutputMode::Auto })
@@ -3256,7 +3233,7 @@ mod tests {
                 ChainStepOp::SpmmFlowC { a: Arc::clone(&a), b: Arc::clone(&a) },
             ]
         };
-        let mut old = ChainExec::plan_and_build(mk_pair(), 32, 4, params_small()).unwrap();
+        let mut old = ChainBuilder::dense(32, 4).steps(mk_pair()).build(params_small()).unwrap();
         old.set_strategy(1, StepStrategy::Unfused);
         old.set_strip(1, StripMode::Full);
         old.set_boundary(1, StepBoundary::Barrier);

@@ -95,6 +95,17 @@
 //!                  bounded two-tier submission queue, tickets,
 //!                  admission control, and a dispatcher that coalesces
 //!                  same-key requests across tenants.
+//! - [`dist`]     — distributed-memory execution: weight-balanced row
+//!                  partitioning ([`dist::partition`]), a message-layer
+//!                  seam ([`dist::transport`] — in-process channels
+//!                  today, a socket transport drops in behind the same
+//!                  trait), one full shard runtime per process shard
+//!                  ([`dist::worker`]), and the coordinator-side
+//!                  [`DistDriver`](dist::DistDriver) that scatters
+//!                  binds, flows the dense panel broadcast-or-shift
+//!                  (1.5D), and gathers outputs deterministically.
+//!                  `TF_DIST=N` routes the server's chain path through
+//!                  `N` in-process shards.
 //! - [`runtime`]  — PJRT/XLA loader for AOT artifacts (the JAX/Pallas GCN).
 //! - [`gnn`]      — GCN forward/backward; the forward runs the whole
 //!                  layer stack as one fused chain and the backward runs
@@ -185,8 +196,7 @@
 //! sequence — input dims first, then one [`ChainStepOp`](exec::ChainStepOp)
 //! per step, per-step knobs as modifiers — and `build` plans and binds
 //! it at once (schedules deduplicated by pattern, one pool,
-//! intermediates allocated once). The old `plan_and_build*`
-//! constructors survive as deprecated shims over the builder.
+//! intermediates allocated once).
 //!
 //! ```no_run
 //! use std::sync::Arc;
@@ -510,11 +520,66 @@
 //!   backend): a restarted service replays known keys with zero timing
 //!   runs, and a pick tuned under one SIMD backend never seeds a
 //!   process running another.
+//!
+//! ## Distributed execution
+//!
+//! One box eventually runs out of memory bandwidth for the stationary
+//! operands. The [`dist`] subsystem generalizes the per-node dispatcher
+//! shards into **process shards behind a message layer**: each shard
+//! owns a contiguous, nnz-weight-balanced row block of every stationary
+//! CSR (so tile fusion keeps working unchanged inside each shard) and a
+//! full runtime — pool, schedule cache, tuner. The flowing dense panel
+//! moves between steps in the 1.5D style, **broadcast** or **ring
+//! shift** per boundary, decided by an α-β byte model
+//! ([`scheduler::cost::decide_exchange`]); the driver scatters binds,
+//! streams the panel, and gathers the output:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use tile_fusion::prelude::*;
+//!
+//! let a = Arc::new(gen::gcn_normalize::<f64>(&gen::poisson2d(64, 64)));
+//! // Four in-process shards (the TF_DIST simulation; a TCP transport
+//! // slots in behind dist::transport without touching this code).
+//! let driver: DistDriver<f64> = DistDriver::new(DistConfig::simulation(4));
+//! let chain = driver
+//!     .bind(ChainInputMeta::dense(a.rows(), 32), vec![
+//!         ChainStepOp::SpmmFlow { a: Arc::clone(&a) },
+//!         ChainStepOp::SpmmFlow { a: Arc::clone(&a) },
+//!     ])
+//!     .unwrap();
+//! let x = Dense::<f64>::randn(a.rows(), 32, 1);
+//! let y = driver.run(&chain, ChainIn::Dense(&x)).expect_dense();
+//! # let _ = y;
+//! ```
+//!
+//! Semantics worth knowing:
+//!
+//! - **Bitwise determinism across shard counts** — every output row is
+//!   produced by exactly one shard running the same kernel sequence as
+//!   the single-process executor, and the driver reassembles row
+//!   blocks in shard order, so results are bit-identical at any shard
+//!   count, thread count, and `TF_BACKEND`
+//!   (`tests/properties.rs::prop_dist_*` sweep this).
+//! - **Placement** — chains whose largest panel stays under
+//!   [`DistConfig::split_min_bytes`] bind **whole** on one shard
+//!   (round-robin, or pinned via `bind_with(..., home)`), so small
+//!   tenant chains scale by shard-level concurrency;
+//!   [`DistConfig::simulation`] row-splits everything so tests always
+//!   exercise the distributed path.
+//! - **Service integration** — `TF_DIST=N` (or
+//!   [`ServerConfig::dist_shards`](coordinator::ServerConfig)) routes
+//!   the server's chain requests through a shared driver; aborts and
+//!   latency-tier preemption fire at the driver's control points
+//!   (scatter + broadcast boundaries), and `Metrics::dist` carries the
+//!   panel/transport counters. `benches/fig22_dist_shards` measures
+//!   shard-count scaling on independent-tenant load.
 
 pub mod cachesim;
 pub mod coordinator;
 pub mod core;
 pub mod dag;
+pub mod dist;
 pub mod exec;
 pub mod gnn;
 pub mod harness;
@@ -531,6 +596,7 @@ pub mod tuning;
 /// Convenience re-exports for the common flows.
 pub mod prelude {
     pub use crate::core::{Dense, Scalar};
+    pub use crate::dist::{DistChain, DistConfig, DistDriver, DistPlacement, Panel};
     pub use crate::exec::{
         chain_specs, AtomicTiling, CLayout, ChainBuilder, ChainExec, ChainIn, ChainOut,
         ChainStepOp, FirstOp, Fused, Lease, Overlapped, PairExec, PairOp, PoolShard, SharedPool,

@@ -110,6 +110,68 @@ pub fn remote_penalty(n_nodes: usize) -> f64 {
     }
 }
 
+// ---- Distributed panel-exchange term --------------------------------
+//
+// The 1.5D distributed layout (dense panel replicated, sparse operand
+// stationary; `dist` module) must move the flowing dense panel between
+// chain steps. Two exchange patterns exist, alpha-beta modelled here so
+// the driver's choice is a pure function of (panel bytes, shard count):
+//
+// - **Broadcast**: every worker ships its row block to the driver, the
+//   driver reassembles and re-sends the full panel. A tree dissemination
+//   costs `ceil(log2 n) · (α + B·β)` — latency-light, but the full panel
+//   crosses the wire at every level.
+// - **Shift**: a ring allgather — `n − 1` rounds in which each worker
+//   relays one row block (`≈ B/n` bytes) to its right neighbour. The
+//   links run in parallel, so the time is `(n − 1) · (α + B/n · β)`:
+//   latency-heavy (the rounds chain), bandwidth-optimal.
+//
+// Broadcast additionally gives the driver a control point between the
+// steps it spans (preemption, cancellation), which is why ties go to it.
+
+/// How the flowing dense panel moves between two distributed chain
+/// steps (see the module comment above and [`decide_exchange`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PanelExchange {
+    /// Gather row blocks at the driver, reassemble, re-send the full
+    /// panel to every shard.
+    Broadcast,
+    /// Ring-allgather the row blocks worker-to-worker; the driver is
+    /// not involved until the next broadcast boundary or the final
+    /// gather.
+    Shift,
+}
+
+/// Per-message startup cost of the alpha-beta exchange model, expressed
+/// in equivalent payload bytes so both terms share a unit. 64 KiB is a
+/// round figure for a syscall + small-message round trip relative to
+/// streaming bandwidth; the crossover only steers message *pattern*
+/// (results are bitwise-identical either way), so precision is not
+/// load-bearing.
+pub const DIST_ALPHA_BYTES: f64 = 64.0 * 1024.0;
+
+/// Choose the panel-exchange pattern for a `panel_bytes` flowing panel
+/// across `n_shards` process shards. Pure in its arguments (and thus
+/// identical on every shard and on the driver — the decision is baked
+/// into the bind, never re-derived mid-run). Ties and the degenerate
+/// `n_shards <= 1` case go to [`PanelExchange::Broadcast`], keeping the
+/// driver's control points.
+pub fn decide_exchange(panel_bytes: usize, n_shards: usize) -> PanelExchange {
+    if n_shards <= 1 {
+        return PanelExchange::Broadcast;
+    }
+    let n = n_shards as f64;
+    let b = panel_bytes as f64;
+    let levels = (usize::BITS - (n_shards - 1).leading_zeros()) as f64; // ceil(log2 n)
+    let broadcast = levels * (DIST_ALPHA_BYTES + b);
+    let shift = (n - 1.0) * (DIST_ALPHA_BYTES + b / n);
+    if shift < broadcast {
+        PanelExchange::Shift
+    } else {
+        PanelExchange::Broadcast
+    }
+}
+
 impl<'a> CostModel<'a> {
     pub fn new(op: &'a FusionOp<'a>, elem_bytes: usize) -> Self {
         let stamp_len = op.a.cols.max(op.b_cols_dim());
@@ -516,6 +578,34 @@ mod tests {
         for bad in ["", "x", "-0.1", "8.5", "NaN", "inf", "-inf", "1e999"] {
             assert_eq!(parse_remote_penalty_weight(Some(bad)), REMOTE_PENALTY_WEIGHT, "{bad}");
         }
+    }
+
+    #[test]
+    fn exchange_decision_follows_alpha_beta_crossover() {
+        // Degenerate layouts keep the driver's control points.
+        assert_eq!(decide_exchange(0, 0), PanelExchange::Broadcast);
+        assert_eq!(decide_exchange(1 << 30, 1), PanelExchange::Broadcast);
+        // Tiny panels: startup cost dominates, the latency-light
+        // broadcast wins once the ring has more rounds than the tree
+        // has levels.
+        assert_eq!(decide_exchange(1024, 3), PanelExchange::Broadcast);
+        assert_eq!(decide_exchange(1024, 4), PanelExchange::Broadcast);
+        // Huge panels: bandwidth dominates, the ring moves 1/n of the
+        // panel per round and wins at every shard count.
+        for n in 2..=8 {
+            assert_eq!(decide_exchange(64 << 20, n), PanelExchange::Shift, "n={n}");
+        }
+        // Monotone in panel size at fixed n: once shift wins it keeps
+        // winning as the panel grows.
+        let mut shifted = false;
+        for log_b in 8..28 {
+            let e = decide_exchange(1usize << log_b, 4);
+            if shifted {
+                assert_eq!(e, PanelExchange::Shift, "b=2^{log_b}");
+            }
+            shifted |= e == PanelExchange::Shift;
+        }
+        assert!(shifted, "shift must win for some panel size");
     }
 
     #[test]

@@ -252,6 +252,33 @@ pub fn pinning_compiled() -> bool {
     cfg!(all(target_os = "linux", feature = "numa-pin"))
 }
 
+/// Upper bound on simulated process shards: `TF_DIST` values above this
+/// clamp down to it. Generous (real deployments shard per box, not per
+/// core), but bounds the worker threads a typo can spawn.
+pub const MAX_DIST_SHARDS: usize = 64;
+
+/// Parse a `TF_DIST`-style shard-count spec: an integer `>= 1`, clamped
+/// to [`MAX_DIST_SHARDS`]. Anything else (unset, empty, unparsable, `0`)
+/// means "no distributed layout" — 1 shard. Pure so tests cover the
+/// policy without touching the process environment.
+pub fn parse_dist_spec(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .map(|n| n.min(MAX_DIST_SHARDS))
+        .unwrap_or(1)
+}
+
+/// Process-shard count for distributed execution: the `TF_DIST`
+/// environment override (modeled on `TF_TOPOLOGY` — `TF_DIST=N` runs
+/// `N` in-process shards deterministically), read once per process.
+/// 1 means single-process execution; the server only builds a
+/// [`crate::dist::DistDriver`] when this exceeds 1.
+pub fn dist_shards() -> usize {
+    use std::sync::OnceLock;
+    static SHARDS: OnceLock<usize> = OnceLock::new();
+    *SHARDS.get_or_init(|| parse_dist_spec(std::env::var("TF_DIST").ok().as_deref()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,6 +304,17 @@ mod tests {
         assert_eq!(Topology::from_spec("8"), None);
         assert_eq!(Topology::from_spec("ax b"), None);
         assert_eq!(Topology::from_spec(""), None);
+    }
+
+    #[test]
+    fn dist_spec_parses_and_clamps() {
+        assert_eq!(parse_dist_spec(None), 1);
+        assert_eq!(parse_dist_spec(Some("1")), 1);
+        assert_eq!(parse_dist_spec(Some(" 4 ")), 4);
+        assert_eq!(parse_dist_spec(Some("999")), MAX_DIST_SHARDS);
+        for bad in ["", "0", "-2", "x", "2x4", "1.5"] {
+            assert_eq!(parse_dist_spec(Some(bad)), 1, "{bad}");
+        }
     }
 
     #[test]

@@ -726,3 +726,87 @@ fn conformance_topology_node_and_spanning_leases_bitwise() {
         }
     }
 }
+
+/// Distributed gather of a **sparse** final output: a chain ending in
+/// CSR format is reassembled at the driver by concatenating the shards'
+/// row blocks in shard index order — the result must equal the
+/// single-process CSR exactly (indptr, indices, and value bits), for a
+/// bare SDDMM tail and for an SpGEMM tail, at every shard count.
+#[test]
+fn conformance_dist_gather_of_sparse_final_output() {
+    check_prop("dist-sparse-gather", 5, |rng| {
+        use tile_fusion::dist::{DistConfig, DistDriver};
+        let n = 24 + rng.next_range(48);
+        let d = 2 + rng.next_range(6);
+        let s = Arc::new(Csr::<f64>::with_random_values(
+            gen::erdos_renyi(n, 1 + rng.next_range(4), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        ));
+        let k = Arc::new(Dense::<f64>::randn(n, d, rng.next_u64()));
+        let q = Dense::<f64>::randn(n, d, rng.next_u64());
+        let params = random_params(rng);
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+
+        // SDDMM tail: sparse scores on S's pattern.
+        let sddmm_ops =
+            vec![ChainStepOp::SddmmQK { s: Arc::clone(&s), k: Arc::clone(&k) }];
+        let mut local = ChainBuilder::dense(n, d)
+            .steps(sddmm_ops.clone())
+            .build(params)
+            .expect("sddmm chain must bind");
+        let mut expect = Csr::<f64>::empty(0, 0);
+        local.run_io(&pool, ChainIn::Dense(&q), ChainOut::Sparse(&mut expect));
+
+        // SpGEMM tail: sparse-input hop forced to CSR output.
+        let g = Arc::new(Csr::<f64>::with_random_values(
+            gen::uniform_random(n, n, 1 + rng.next_range(4), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        ));
+        let v0 = Csr::<f64>::with_random_values(
+            gen::uniform_random(n, n, 1 + rng.next_range(4), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        );
+        let spgemm_ops = vec![ChainStepOp::SpgemmFlow {
+            a: Arc::clone(&g),
+            output: StepOutputMode::SparseCsr,
+        }];
+        let mut local = ChainBuilder::sparse(n, n, v0.nnz())
+            .steps(spgemm_ops.clone())
+            .build(params)
+            .expect("spgemm chain must bind");
+        let mut expect_g = Csr::<f64>::empty(0, 0);
+        local.run_io(&pool, ChainIn::Sparse(&v0), ChainOut::Sparse(&mut expect_g));
+
+        for shards in 1..=4 {
+            let mut cfg = DistConfig::simulation(shards);
+            cfg.params = params;
+            let driver: DistDriver<f64> = DistDriver::new(cfg);
+
+            let chain = driver
+                .bind(ChainInputMeta::dense(n, d), sddmm_ops.clone())
+                .expect("dist sddmm bind");
+            assert_eq!(chain.out_format(), StepOutput::SparseCsr);
+            let got = driver.run(&chain, ChainIn::Dense(&q)).expect_sparse();
+            assert_eq!(got.pattern.indptr, expect.pattern.indptr, "shards={shards}");
+            assert_eq!(got.pattern.indices, expect.pattern.indices, "shards={shards}");
+            assert!(
+                got.data.iter().zip(&expect.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "sddmm value bits diverged (shards={shards})"
+            );
+            driver.unbind(chain);
+
+            let chain = driver
+                .bind(ChainInputMeta::sparse(n, n, v0.nnz()), spgemm_ops.clone())
+                .expect("dist spgemm bind");
+            let got = driver.run(&chain, ChainIn::Sparse(&v0)).expect_sparse();
+            assert_eq!(got, expect_g, "spgemm sparse gather diverged (shards={shards})");
+            driver.unbind(chain);
+        }
+    });
+}

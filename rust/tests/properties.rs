@@ -1464,3 +1464,223 @@ fn prop_gat_backward_matches_finite_differences() {
         }
     });
 }
+
+// ---- Distributed execution (dist::DistDriver) -----------------------
+//
+// The contract under test: sharded execution is **bitwise-equal** to
+// single-process execution — every output row is produced by exactly
+// one shard running the identical serial per-row kernels over the
+// identical full input panel, and reassembly (driver gathers in shard
+// index order, ring shifts from the fixed left neighbour) is
+// order-deterministic. The grid sweeps shard counts 1–4, random thread
+// counts per shard, and random schedules; under `TF_BACKEND` the same
+// assertions pin every SIMD backend.
+
+/// Run `ops` once single-process and once per shard count on a
+/// simulation driver; dense final outputs must match bit for bit.
+fn assert_dist_matches_local_dense(
+    ops: &[ChainStepOp<f64>],
+    in_rows: usize,
+    in_cols: usize,
+    x: &Dense<f64>,
+    params: SchedulerParams,
+    strategies: &[StepStrategy],
+    rng: &mut tile_fusion::testing::XorShift64,
+) {
+    let pool = ThreadPool::new(1 + rng.next_range(4));
+    let mut b = ChainBuilder::dense(in_rows, in_cols);
+    for (op, st) in clone_chain_ops(ops).into_iter().zip(strategies) {
+        b = b.step(op).strategy(*st);
+    }
+    let mut local = b.build(params).expect("local chain must bind");
+    let (out_rows, out_cols) = local.out_dims();
+    let mut expect = Dense::zeros(out_rows, out_cols);
+    local.run(&pool, x, &mut expect);
+
+    for shards in 1..=4 {
+        let mut cfg = DistConfig::simulation(shards);
+        cfg.params = params;
+        cfg.threads_per_shard = 1 + rng.next_range(3);
+        let driver: DistDriver<f64> = DistDriver::new(cfg);
+        let chain = driver
+            .bind_with(
+                ChainInputMeta::dense(in_rows, in_cols),
+                clone_chain_ops(ops),
+                strategies.to_vec(),
+                vec![0.0; ops.len()],
+                None,
+            )
+            .expect("dist bind");
+        // Twice: shard-side executors must reset between runs.
+        for run in 0..2 {
+            let y = driver.run(&chain, ChainIn::Dense(x)).expect_dense();
+            assert_eq!((y.rows, y.cols), (out_rows, out_cols));
+            assert!(
+                y.data.iter().zip(&expect.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "dist diverged from single-process (shards={shards}, run={run})"
+            );
+        }
+        driver.unbind(chain);
+    }
+}
+
+#[test]
+fn prop_dist_chain_bitwise_equals_single_process() {
+    check_prop("dist-chain-bitwise", 6, |rng| {
+        let in_rows = 8 + rng.next_range(48);
+        let in_cols = 1 + rng.next_range(16);
+        let ops = random_pipeline_ops::<f64>(rng, in_rows, in_cols);
+        let strategies: Vec<StepStrategy> = (0..ops.len())
+            .map(|_| if rng.next_bool(0.5) { StepStrategy::Fused } else { StepStrategy::Unfused })
+            .collect();
+        let x = Dense::<f64>::randn(in_rows, in_cols, rng.next_u64());
+        let mut params = random_params(rng);
+        params.elem_bytes = 8;
+        assert_dist_matches_local_dense(&ops, in_rows, in_cols, &x, params, &strategies, rng);
+    });
+}
+
+#[test]
+fn prop_dist_spgemm_chain_bitwise_equals_single_process() {
+    // Sparse-input chains through SpGEMM hops; final output either
+    // dense (FlowAMulB appended) or sparse — a gathered sparse output
+    // must match the single-process CSR exactly (indptr, indices, and
+    // value bits).
+    check_prop("dist-spgemm-bitwise", 6, |rng| {
+        use tile_fusion::testing::XorShift64;
+        let n = 16 + rng.next_range(40);
+        let rand_sq = |rng: &mut XorShift64| {
+            Csr::<f64>::with_random_values(
+                gen::uniform_random(n, n, 1 + rng.next_range(4), rng.next_u64()),
+                rng.next_u64(),
+                -1.0,
+                1.0,
+            )
+        };
+        let v0 = rand_sq(rng);
+        let hops = 1 + rng.next_range(2);
+        let mut ops: Vec<ChainStepOp<f64>> = Vec::new();
+        for h in 0..hops {
+            let output = if h + 1 < hops {
+                StepOutputMode::SparseCsr
+            } else {
+                [StepOutputMode::Auto, StepOutputMode::SparseCsr, StepOutputMode::Dense]
+                    [rng.next_range(3)]
+            };
+            ops.push(ChainStepOp::SpgemmFlow { a: Arc::new(rand_sq(rng)), output });
+        }
+        let dense_tail = rng.next_bool(0.5);
+        if dense_tail {
+            ops.push(ChainStepOp::FlowAMulB {
+                b: Arc::new(Dense::<f64>::randn(n, 1 + rng.next_range(12), rng.next_u64())),
+            });
+        }
+        let params = random_params(rng);
+        let pool = ThreadPool::new(1 + rng.next_range(4));
+
+        let mut local = ChainBuilder::sparse(n, n, v0.nnz())
+            .steps(clone_chain_ops(&ops))
+            .build(params)
+            .expect("spgemm chain must bind");
+        let (out_rows, out_cols) = local.out_dims();
+        let sparse_out = local.step_output(ops.len() - 1) == StepOutput::SparseCsr;
+        let mut expect_d = Dense::zeros(out_rows, out_cols);
+        let mut expect_s = Csr::<f64>::empty(0, 0);
+        if sparse_out {
+            local.run_io(&pool, ChainIn::Sparse(&v0), ChainOut::Sparse(&mut expect_s));
+        } else {
+            local.run_io(&pool, ChainIn::Sparse(&v0), ChainOut::Dense(&mut expect_d));
+        }
+
+        for shards in 1..=4 {
+            let mut cfg = DistConfig::simulation(shards);
+            cfg.params = params;
+            cfg.threads_per_shard = 1 + rng.next_range(3);
+            let driver: DistDriver<f64> = DistDriver::new(cfg);
+            let chain = driver
+                .bind(ChainInputMeta::sparse(n, n, v0.nnz()), clone_chain_ops(&ops))
+                .expect("dist bind");
+            assert_eq!(
+                chain.out_format(),
+                if sparse_out { StepOutput::SparseCsr } else { StepOutput::Dense },
+                "dist plan must advertise the single-process output format"
+            );
+            for run in 0..2 {
+                let out = driver.run(&chain, ChainIn::Sparse(&v0));
+                if sparse_out {
+                    let s = out.expect_sparse();
+                    assert_eq!(
+                        s, expect_s,
+                        "gathered sparse output diverged (shards={shards}, run={run})"
+                    );
+                } else {
+                    let d = out.expect_dense();
+                    assert!(
+                        d.data.iter().zip(&expect_d.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+                        "dist spgemm diverged (shards={shards}, run={run})"
+                    );
+                }
+            }
+            driver.unbind(chain);
+        }
+    });
+}
+
+#[test]
+fn prop_dist_attention_chains_bitwise_equal_single_process() {
+    // The attention family: fused forward (`Attention`), the
+    // SDDMM→flow-A scoring chain, and the fused backward
+    // (`AttentionGrad`, replicated compute with per-shard row
+    // contributions) — each sharded vs single-process, bitwise.
+    check_prop("dist-attention-bitwise", 5, |rng| {
+        use tile_fusion::kernels::pattern_transpose_with_perm;
+        let n = 24 + rng.next_range(48);
+        let d = 2 + rng.next_range(6);
+        let vc = 1 + rng.next_range(6);
+        let f = 2 + rng.next_range(8);
+        let s = Arc::new(Csr::<f64>::with_random_values(
+            gen::erdos_renyi(n, 1 + rng.next_range(4), rng.next_u64()),
+            rng.next_u64(),
+            -1.0,
+            1.0,
+        ));
+        let k = Arc::new(Dense::<f64>::randn(n, d, rng.next_u64()));
+        let v = Arc::new(Dense::<f64>::randn(n, vc, rng.next_u64()));
+        let q = Dense::<f64>::randn(n, d, rng.next_u64());
+        let mut params = random_params(rng);
+        params.elem_bytes = 8;
+
+        // Fused attention forward.
+        let fwd =
+            vec![ChainStepOp::Attention { s: Arc::clone(&s), k: Arc::clone(&k), v: Arc::clone(&v) }];
+        let st1 = vec![StepStrategy::Fused];
+        assert_dist_matches_local_dense(&fwd, n, d, &q, params, &st1, rng);
+
+        // SDDMM scores into a dense consumer.
+        let scored = vec![
+            ChainStepOp::SddmmQK { s: Arc::clone(&s), k: Arc::clone(&k) },
+            ChainStepOp::FlowAMulB { b: Arc::new(Dense::<f64>::randn(n, f, rng.next_u64())) },
+        ];
+        let st2 = vec![StepStrategy::Fused; 2];
+        assert_dist_matches_local_dense(&scored, n, d, &q, params, &st2, rng);
+
+        // Fused attention backward into a dense consumer.
+        let (stp, perm) = pattern_transpose_with_perm(&s.pattern);
+        let bwd = vec![
+            ChainStepOp::AttentionGrad {
+                s: Arc::clone(&s),
+                k: Arc::clone(&k),
+                v: Arc::clone(&v),
+                q: Arc::new(q.clone()),
+                st: Arc::new(stp),
+                perm: Arc::new(perm),
+            },
+            ChainStepOp::FlowAMulB {
+                b: Arc::new(Dense::<f64>::randn(2 * d + vc, f, rng.next_u64())),
+            },
+        ];
+        let st3 = vec![StepStrategy::Fused; 2];
+        let dout = Dense::<f64>::randn(n, vc, rng.next_u64());
+        assert_dist_matches_local_dense(&bwd, n, vc, &dout, params, &st3, rng);
+    });
+}
